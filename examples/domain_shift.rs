@@ -1,0 +1,58 @@
+//! Domain-shift study (paper §6.2 / Table 2 intuition): how each
+//! quantization strategy degrades under each corruption type.
+//!
+//! ```bash
+//! cargo run --release --example domain_shift -- --n 100
+//! ```
+
+use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
+use pdq::data::corrupt::{corrupt, Corruption};
+use pdq::data::shapes::{self, Split};
+use pdq::harness::eval_runner::score;
+use pdq::models::zoo;
+use pdq::nn::QuantMode;
+use pdq::quant::Granularity;
+use pdq::util::cli::Args;
+use pdq::util::table::{fmt4, Table};
+use pdq::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n = args.opt_usize("n", 100);
+    let severity = args.opt_usize("severity", 3) as u32;
+
+    let artifacts = std::path::Path::new("artifacts");
+    let manifest = zoo::load_manifest(artifacts)?;
+    let model = zoo::load_model(artifacts, &manifest, "micro_resnet")?;
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let samples = shapes::dataset(model.task, Split::Test, n);
+
+    // Build the three executors once.
+    let execs: Vec<(&str, ExecKind)> = vec![
+        ("ours", ExecKind::Quant(Box::new(build_quant_variant(
+            &model, QuantMode::Probabilistic, Granularity::PerTensor, 1, &calib)))),
+        ("dynamic", ExecKind::Quant(Box::new(build_quant_variant(
+            &model, QuantMode::Dynamic, Granularity::PerTensor, 1, &calib)))),
+        ("static", ExecKind::Quant(Box::new(build_quant_variant(
+            &model, QuantMode::Static, Granularity::PerTensor, 1, &calib)))),
+    ];
+
+    let mut table = Table::new(&["corruption", "ours", "dynamic", "static"]).score_columns(&[1, 2, 3]);
+    for c in Corruption::all() {
+        let mut cells = vec![c.name().to_string()];
+        for (_, exec) in &execs {
+            let mut rng = Pcg32::new(7);
+            let outputs: Vec<_> = samples
+                .iter()
+                .map(|s| exec.run(&corrupt(&s.image_f32(), c, severity, &mut rng)))
+                .collect();
+            cells.push(fmt4(score(model.task, &samples, &outputs) as f64));
+        }
+        table.add_row(cells);
+        eprintln!("  {} done", c.name());
+    }
+    println!("# accuracy under corruption (severity {severity}, n={n})\n");
+    println!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end driver (the DESIGN.md E2E experiment): proves all layers
+//! compose on a real workload.
+//!
+//! 1. loads the AOT-trained model zoo (L2 JAX training → `.pqw` weights),
+//! 2. cross-checks the PJRT runtime against the in-process float engine
+//!    (the HLO artifacts are the L1/L2 lowering),
+//! 3. calibrates the three quantization strategies (paper §5.2 protocol),
+//! 4. serves a batched mixed-variant request stream through the Layer-3
+//!    coordinator (router → dynamic batcher → workers),
+//! 5. reports throughput/latency and the paper's accuracy metric per
+//!    variant.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serve_eval
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
+use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::data::shapes::{self, Split};
+use pdq::harness::eval_runner::score;
+use pdq::models::zoo;
+use pdq::nn::{float_exec, QuantMode};
+use pdq::quant::Granularity;
+use pdq::runtime::Runtime;
+use pdq::util::cli::Args;
+use pdq::util::table::{fmt4, Table};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let n_test = args.opt_usize("n", 120);
+    let model_name = args.opt_or("model", "micro_resnet").to_string();
+    let artifacts = std::path::Path::new("artifacts");
+
+    // --- (1) load the zoo --------------------------------------------------
+    let manifest = zoo::load_manifest(artifacts)?;
+    let model = zoo::load_model(artifacts, &manifest, &model_name)?;
+    println!("[1] loaded {} ({} params, task {})", model.name, model.graph.param_count(), model.task.name());
+
+    // --- (2) PJRT cross-check ----------------------------------------------
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(model.hlo_path.as_ref().unwrap())?;
+    let probe = shapes::dataset(model.task, Split::Test, 1).remove(0).image_f32();
+    let pjrt: Vec<f32> = exe.run_f32(&[&probe])?.into_iter().flatten().collect();
+    let native: Vec<f32> =
+        float_exec::run(&model.graph, &probe).iter().flat_map(|t| t.data().to_vec()).collect();
+    let max_err = pjrt.iter().zip(&native).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("[2] PJRT vs native float engine: max |Δ| = {max_err:.5}");
+    anyhow::ensure!(max_err < 0.05, "PJRT parity broken");
+
+    // --- (3) calibrate the three strategies --------------------------------
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
+        VariantKey { model: model.name.clone(), mode: ModeKey::Fp32 },
+        ExecKind::Float(Arc::clone(&model.graph)),
+    )];
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+        variants.push((
+            VariantKey {
+                model: model.name.clone(),
+                mode: ModeKey::Quant(mode.into(), GranKey::T),
+            },
+            ExecKind::Quant(Box::new(ex)),
+        ));
+    }
+    let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
+    println!("[3] calibrated {} variants on {} shared images", keys.len() - 1, CALIB_SIZE);
+
+    // --- (4) serve a mixed stream -------------------------------------------
+    let server = Server::start(variants, ServerConfig::default());
+    let samples = shapes::dataset(model.task, Split::Test, n_test);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, s) in samples.iter().enumerate() {
+        for key in &keys {
+            let rx = server.submit(key.clone(), i as u64, s.image_f32()).unwrap();
+            pending.push((key.clone(), i, rx));
+        }
+    }
+    let mut per_variant: BTreeMap<String, Vec<(usize, Vec<pdq::tensor::Tensor<f32>>)>> =
+        BTreeMap::new();
+    for (key, i, rx) in pending {
+        let resp = rx.recv()?;
+        per_variant.entry(key.label()).or_default().push((i, resp.outputs));
+    }
+    let wall = t0.elapsed();
+    let total_reqs = n_test * keys.len();
+    println!(
+        "[4] served {total_reqs} requests in {:.1} ms — {:.0} req/s, p50 {:.2} ms, p95 {:.2} ms, mean batch {:.2}",
+        wall.as_secs_f64() * 1e3,
+        total_reqs as f64 / wall.as_secs_f64(),
+        server.metrics().latency_us(50.0) / 1e3,
+        server.metrics().latency_us(95.0) / 1e3,
+        server.metrics().mean_batch(),
+    );
+
+    // --- (5) per-variant accuracy -------------------------------------------
+    let mut table = Table::new(&["variant", "metric"]);
+    for (label, mut outs) in per_variant {
+        outs.sort_by_key(|(i, _)| *i);
+        let outputs: Vec<_> = outs.into_iter().map(|(_, o)| o).collect();
+        let m = score(model.task, &samples, &outputs);
+        table.add_row(vec![label, fmt4(m as f64)]);
+    }
+    println!("[5] accuracy per served variant:\n\n{}", table.to_markdown());
+    let metrics = server.shutdown();
+    println!("metrics: {}", metrics.to_json().to_string_compact());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! On-device complexity analysis (paper §5.1/§6.1, Fig. 3): both the
+//! Cortex-M4 cycle model *and* the wall-clock of the true-int8 CMSIS-style
+//! kernels with the three requantization wrappers.
+//!
+//! ```bash
+//! cargo run --release --example mcu_latency
+//! ```
+
+use std::time::Instant;
+
+use pdq::cmsis::pdq_wrappers::{conv_dynamic, conv_pdq, conv_static, ConvLayerS8, QOut};
+use pdq::estimator::IntervalSpec;
+use pdq::mcu::{conv_cycles, estimation_cycles, ConvShape, CortexM4};
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::Pcg32;
+
+fn main() {
+    let m = CortexM4::default();
+    println!("# modeled Cortex-M4 @ 80 MHz (paper Fig. 3 shapes)\n");
+    println!("C_in sweep (32x32xC -> 3, 3x3):");
+    for c_in in [4usize, 16, 64] {
+        let s = ConvShape { h: 32, w: 32, c_in, c_out: 3, geom: ConvGeom::same(3, 1) };
+        println!(
+            "  C_in={c_in:<3} conv {:.2} ms  estimation {:.2} ms",
+            m.cycles_to_ms(conv_cycles(&m, &s)),
+            m.cycles_to_ms(estimation_cycles(&m, &s, 1)),
+        );
+    }
+
+    println!("\n# true-int8 wrapper wall-clock on this host (32x32x16 -> 16)\n");
+    let mut rng = Pcg32::new(5);
+    let (h, w, cin, cout) = (32usize, 32, 16, 16);
+    let wts: Vec<f32> = (0..cout * 9 * cin).map(|_| rng.normal_ms(0.0, 0.15)).collect();
+    let wt = Tensor::from_vec(Shape::ohwi(cout, 3, 3, cin), wts);
+    let s_in = 1.0 / 255.0;
+    let z_in = -128;
+    let mut layer = ConvLayerS8::from_float(&wt, &vec![0.0; cout], ConvGeom::same(3, 1), s_in);
+    layer.interval = IntervalSpec { alpha: 4.0, beta: 4.0 };
+    let xq: Vec<i8> = (0..h * w * cin)
+        .map(|_| ((rng.uniform() * 255.0) as i32 - 128).clamp(-128, 127) as i8)
+        .collect();
+    let x = Tensor::from_vec(Shape::hwc(h, w, cin), xq);
+
+    let reps = 20;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = conv_static(&layer, &x, s_in, z_in, QOut::from_range(-4.0, 4.0));
+    }
+    let static_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = conv_dynamic(&layer, &x, s_in, z_in);
+    }
+    let dynamic_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    for gamma in [1usize, 4, 16] {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = conv_pdq(&layer, &x, s_in, z_in, gamma);
+        }
+        let pdq_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("  pdq(gamma={gamma:<2})  {pdq_ms:.3} ms/conv");
+    }
+    println!("  static        {static_ms:.3} ms/conv");
+    println!("  dynamic       {dynamic_ms:.3} ms/conv");
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load a trained model from the AOT artifacts, calibrate the
+//! probabilistic quantizer on 16 images, and classify a test image under
+//! FP32 / static / dynamic / PDQ quantization.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, CALIB_SIZE};
+use pdq::data::shapes::{self, Split};
+use pdq::models::{heads, zoo};
+use pdq::nn::{float_exec, QuantMode};
+use pdq::quant::Granularity;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let manifest = zoo::load_manifest(artifacts)?;
+    let model = zoo::load_model(artifacts, &manifest, "micro_resnet")?;
+    println!("loaded {} ({} params)", model.name, model.graph.param_count());
+
+    // One shared calibration set (paper §5.2: 16 images, same set for
+    // static quantization and for the I(α,β) fit).
+    let calib = calibration_images(model.task, CALIB_SIZE);
+
+    // A test image.
+    let sample = shapes::dataset(model.task, Split::Test, 1).remove(0);
+    let img = sample.image_f32();
+    println!("test image: class {}", sample.class_id);
+
+    // FP32 reference.
+    let fp_out = float_exec::run(&model.graph, &img);
+    let fp_pred = heads::decode_cls(fp_out[0].data());
+    println!("fp32     -> class {} (conf {:.3})", fp_pred.class_id, fp_pred.confidence);
+
+    // The three requantization strategies of Fig. 1.
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+        let out = ex.run(&img);
+        let pred = heads::decode_cls(out[0].data());
+        println!(
+            "{:<8} -> class {} (conf {:.3})  [peak overhead {} bits]",
+            mode.label(),
+            pred.class_id,
+            pred.confidence,
+            ex.memory_overhead_bits(32 * 32 * 16)
+        );
+    }
+    let _ = Arc::strong_count(&model.graph);
+    Ok(())
+}

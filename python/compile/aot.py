@@ -1,0 +1,179 @@
+"""AOT build entry point: train the zoo, export weights + HLO artifacts.
+
+Run once by ``make artifacts``:
+
+1. generates the synthetic training data (integer-spec generators shared
+   with Rust),
+2. trains all six models (SGD+momentum, a few hundred steps each),
+3. exports weights as ``artifacts/<model>.pqw``,
+4. lowers every AOT entry point to **HLO text** (jax ≥ 0.5 serialized
+   protos are rejected by xla_extension 0.5.1 — see
+   /opt/xla-example/README.md): FP32 forwards per model, the estimator
+   graph, the int8 matvec kernel,
+5. writes ``artifacts/manifest.json`` with the model specs, golden test
+   vectors (input seed → FP32 outputs) for Rust parity tests, and the
+   training log.
+
+Python never runs at serving time; the Rust binary consumes artifacts only.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datagen
+from . import estimator
+from . import model as modellib
+from . import pqw
+from . import train as trainlib
+from .kernels import qmatmul
+
+TRAIN_SIZES = {"cls": 2400, "det": 1600, "seg": 1600, "pose": 1600, "obb": 1600}
+STEPS = {"cls": 700, "det": 700, "seg": 700, "pose": 700, "obb": 700}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange).
+
+    ``as_hlo_text(True)`` = print_large_constants: without it the text
+    elides big weight literals as ``{...}`` and the Rust-side parser reads
+    zeros — model weights embedded as constants would silently vanish."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def export_model_hlo(spec, params, out_path):
+    """Lower the FP32 single-image forward to HLO text. Outputs are
+    flattened+concatenated into one vector so the Rust loader handles every
+    model uniformly."""
+    h, w, c = spec["input"]
+
+    def fwd(x):
+        outs = modellib.apply(spec, params, x)
+        return (jnp.concatenate([o.reshape(-1) for o in outs]),)
+
+    lowered = jax.jit(fwd).lower(jax.ShapeDtypeStruct((h, w, c), jnp.float32))
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_estimator_hlo(out_path, h=48, w=48, c=16, k=3, stride=1, pad=1, gamma=1):
+    """Lower the L2 conv-moment estimator (wrapping the L1 pallas moments
+    kernel) to HLO text."""
+
+    def est(x, mu_w, var_w):
+        return (estimator.estimate_conv(x, mu_w, var_w, k, stride, pad, gamma),)
+
+    lowered = jax.jit(est).lower(
+        jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"h": h, "w": w, "c": c, "k": k, "stride": stride, "pad": pad, "gamma": gamma}
+
+
+def export_qmatvec_hlo(out_path, h=32, d=64):
+    """Lower the L1 int8 matvec kernel to HLO text."""
+
+    def f(x_q, w_q):
+        return (qmatmul.qmatvec_s8(x_q, w_q, 0),)
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((d,), jnp.int8),
+        jax.ShapeDtypeStruct((h, d), jnp.int8),
+    )
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"h": h, "d": d}
+
+
+def golden_vector(spec, params, seed):
+    """A parity fixture: generate the image for `seed` on the python side
+    and record the FP32 outputs. Rust regenerates the same image from the
+    same seed and must match through its own float executor."""
+    gen = datagen.GENERATORS[spec["task"]]
+    sample = gen(seed)
+    x = jnp.asarray(datagen.to_float(sample.image))
+    outs = modellib.apply(spec, params, x)
+    flat = np.concatenate([np.asarray(o).reshape(-1) for o in outs])
+    return {"seed": seed, "output": [float(v) for v in flat]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=0, help="override train steps (0 = per-task default)")
+    ap.add_argument("--quick", action="store_true", help="tiny training run (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}, "datasets": {}, "aot": {}}
+    manifest["datasets"] = {
+        "seed_bases": {
+            "train": datagen.TRAIN_BASE,
+            "calib": datagen.CALIB_BASE,
+            "test": datagen.TEST_BASE,
+        },
+        "lane_stride": 20_000_000,
+        "tasks": list(datagen.GENERATORS),
+    }
+
+    datasets = {}
+    for name, build in modellib.ZOO.items():
+        spec = build()
+        task = spec["task"]
+        n_train = 160 if args.quick else TRAIN_SIZES[task]
+        steps = args.steps or (40 if args.quick else STEPS[task])
+        if task not in datasets:
+            t0 = time.time()
+            print(f"[data] generating {n_train} {task} train samples ...")
+            datasets[task] = datagen.dataset(task, "train", n_train)
+            print(f"[data] {task}: {time.time() - t0:.1f}s")
+        samples = datasets[task]
+
+        print(f"[train] {name} ({task}), {steps} steps ...")
+        t0 = time.time()
+        params, history = trainlib.train_model(spec, samples, steps=steps)
+        train_s = time.time() - t0
+        acc = trainlib.quick_accuracy(spec, params, samples[: min(len(samples), 400)])
+        print(f"[train] {name}: {train_s:.1f}s, train class-acc {acc:.3f}")
+
+        pqw_path = os.path.join(args.out, f"{name}.pqw")
+        pqw.write_pqw(pqw_path, {k: np.asarray(v) for k, v in params.items()})
+        hlo_path = os.path.join(args.out, f"{name}.hlo.txt")
+        export_model_hlo(spec, params, hlo_path)
+
+        manifest["models"][name] = {
+            "spec": spec,
+            "weights": f"{name}.pqw",
+            "hlo": f"{name}.hlo.txt",
+            "train_class_acc": acc,
+            "train_seconds": round(train_s, 1),
+            "loss_history": history,
+            "golden": golden_vector(spec, params, datagen.TEST_BASE + 777),
+        }
+
+    print("[aot] lowering estimator + qmatvec kernels ...")
+    manifest["aot"]["estimator"] = export_estimator_hlo(os.path.join(args.out, "estimator.hlo.txt"))
+    manifest["aot"]["estimator"]["hlo"] = "estimator.hlo.txt"
+    manifest["aot"]["qmatvec"] = export_qmatvec_hlo(os.path.join(args.out, "qmatvec.hlo.txt"))
+    manifest["aot"]["qmatvec"]["hlo"] = "qmatvec.hlo.txt"
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Procedural synthetic datasets — the laptop-scale stand-ins for
+ImageNet/COCO/DOTA (see DESIGN.md §Substitutions).
+
+The generator is specified in *integer arithmetic only* over the mirrored
+PCG32 stream (``prng.py`` ⇄ ``rust/src/util/prng.rs``), so the python
+training data and the Rust evaluation data are bit-identical images.
+
+Five tasks (paper §5.2):
+
+- ``cls``  — 10-class classification, 32×32: 5 shapes × {warm, cool} colors.
+- ``det``  — single-object detection, 48×48: 5 shape classes + axis-aligned box.
+- ``seg``  — same scene + a 12×12 downsampled foreground mask.
+- ``pose`` — 4 keypoints (N/E/S/W extremes of the shape).
+- ``obb``  — rotated box, 3 aspect classes + angle (15° bins).
+
+Draw order is part of the spec: (1) class/shape ids, (2) background base
+gray, (3) per-pixel gray noise raster-ordered, (4) geometry, (5) color.
+Rust mirrors this exactly in ``rust/src/data/``.
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .prng import Pcg32
+
+# 15°-bin integer cos/sin tables scaled by 1024 (floor of cos(i*15°)*1024),
+# matching the Rust tables.
+COS_T = [1024, 989, 886, 724, 512, 265, 0, -265, -512, -724, -886, -989]
+SIN_T = [0, 265, 512, 724, 886, 989, 1024, 989, 886, 724, 512, 265]
+
+SHAPES = ["circle", "square", "triangle", "plus", "ring"]
+
+
+@dataclass
+class Sample:
+    """One generated scene. ``image`` is HxWx3 uint8."""
+
+    image: np.ndarray
+    class_id: int
+    # det/seg/pose/obb extras (None when not applicable)
+    bbox: Optional[tuple] = None          # (x0, y0, x1, y1) inclusive coords
+    mask12: Optional[np.ndarray] = None   # 12x12 uint8 {0,1}
+    keypoints: Optional[list] = None      # [(x, y)] * 4
+    obb: Optional[tuple] = None           # (cx, cy, a, b, angle_idx)
+
+
+def _inside(shape: int, dx: int, dy: int, s: int) -> bool:
+    """Integer membership test for shape `shape` centred at origin,
+    half-size `s`, at offset (dx, dy)."""
+    if shape == 0:  # circle
+        return dx * dx + dy * dy <= s * s
+    if shape == 1:  # square
+        return abs(dx) <= s and abs(dy) <= s
+    if shape == 2:  # triangle (apex up)
+        if dy < -s or dy > s:
+            return False
+        # width grows linearly from 0 at the apex to s at the base:
+        # |dx| * 2s <= (dy + s) * s
+        return abs(dx) * 2 * s <= (dy + s) * s
+    if shape == 3:  # plus
+        third = max(s // 3, 1)
+        return (abs(dx) <= third and abs(dy) <= s) or (abs(dy) <= third and abs(dx) <= s)
+    if shape == 4:  # ring
+        d2 = dx * dx + dy * dy
+        inner = (s * 2) // 3
+        return inner * inner <= d2 <= s * s
+    raise ValueError(shape)
+
+
+def _inside_obb(dx: int, dy: int, a: int, b: int, angle_idx: int) -> bool:
+    c = COS_T[angle_idx]
+    s = SIN_T[angle_idx]
+    u = dx * c + dy * s
+    v = -dx * s + dy * c
+    return abs(u) <= a * 1024 and abs(v) <= b * 1024
+
+
+def _paint_background(rng: Pcg32, h: int, w: int) -> np.ndarray:
+    base = 40 + rng.below(40)
+    img = np.zeros((h, w, 3), dtype=np.uint8)
+    for y in range(h):
+        for x in range(w):
+            v = base + rng.below(48) - 24
+            v = 0 if v < 0 else (255 if v > 255 else v)
+            img[y, x, 0] = v
+            img[y, x, 1] = v
+            img[y, x, 2] = v
+    return img
+
+
+def _color(rng: Pcg32, warm: bool) -> tuple:
+    lo = rng.below(60)
+    mid = 30 + rng.below(60)
+    hi = 180 + rng.below(60)
+    if warm:
+        return (hi, mid, 30 + lo)
+    return (30 + lo, mid, hi)
+
+
+def gen_cls(seed: int) -> Sample:
+    """32×32 classification scene: class = shape * 2 + warm."""
+    rng = Pcg32(seed)
+    class_id = rng.below(10)
+    shape = class_id // 2
+    warm = (class_id % 2) == 0
+    img = _paint_background(rng, 32, 32)
+    cx = 10 + rng.below(12)
+    cy = 10 + rng.below(12)
+    s = 5 + rng.below(6)
+    col = _color(rng, warm)
+    for y in range(32):
+        for x in range(32):
+            if _inside(shape, x - cx, y - cy, s):
+                img[y, x, 0], img[y, x, 1], img[y, x, 2] = col
+    return Sample(image=img, class_id=class_id)
+
+
+def _gen_scene(seed: int, with_mask: bool) -> Sample:
+    """48×48 detection-style scene with one shape."""
+    rng = Pcg32(seed)
+    class_id = rng.below(5)
+    warm = rng.below(2) == 1
+    img = _paint_background(rng, 48, 48)
+    cx = 12 + rng.below(24)
+    cy = 12 + rng.below(24)
+    s = 5 + rng.below(7)
+    col = _color(rng, warm)
+    mask = np.zeros((48, 48), dtype=np.uint8) if with_mask else None
+    for y in range(48):
+        for x in range(48):
+            if _inside(class_id, x - cx, y - cy, s):
+                img[y, x, 0], img[y, x, 1], img[y, x, 2] = col
+                if mask is not None:
+                    mask[y, x] = 1
+    bbox = (max(cx - s, 0), max(cy - s, 0), min(cx + s, 47), min(cy + s, 47))
+    mask12 = None
+    if mask is not None:
+        # 12×12 majority-pool of 4×4 blocks (>= 8 of 16 inside).
+        mask12 = np.zeros((12, 12), dtype=np.uint8)
+        for by in range(12):
+            for bx in range(12):
+                cnt = int(mask[by * 4:(by + 1) * 4, bx * 4:(bx + 1) * 4].sum())
+                mask12[by, bx] = 1 if cnt >= 8 else 0
+    kps = [(cx, cy - s), (cx + s, cy), (cx, cy + s), (cx - s, cy)]
+    return Sample(image=img, class_id=class_id, bbox=bbox, mask12=mask12, keypoints=kps)
+
+
+def gen_det(seed: int) -> Sample:
+    return _gen_scene(seed, with_mask=False)
+
+
+def gen_seg(seed: int) -> Sample:
+    return _gen_scene(seed, with_mask=True)
+
+
+def gen_pose(seed: int) -> Sample:
+    return _gen_scene(seed, with_mask=False)
+
+
+def gen_obb(seed: int) -> Sample:
+    """48×48 oriented-box scene: class ∈ {0,1,2} sets the aspect ratio."""
+    rng = Pcg32(seed)
+    class_id = rng.below(3)
+    warm = rng.below(2) == 1
+    img = _paint_background(rng, 48, 48)
+    cx = 14 + rng.below(20)
+    cy = 14 + rng.below(20)
+    a = 7 + rng.below(5)
+    b = a if class_id == 0 else (a // 2 if class_id == 1 else max(a // 4, 2))
+    angle_idx = rng.below(12)
+    col = _color(rng, warm)
+    for y in range(48):
+        for x in range(48):
+            if _inside_obb(x - cx, y - cy, a, b, angle_idx):
+                img[y, x, 0], img[y, x, 1], img[y, x, 2] = col
+    return Sample(image=img, class_id=class_id, obb=(cx, cy, a, b, angle_idx))
+
+
+GENERATORS = {
+    "cls": gen_cls,
+    "det": gen_det,
+    "seg": gen_seg,
+    "pose": gen_pose,
+    "obb": gen_obb,
+}
+
+# Seed-space partitions shared with Rust: train / calib / test never overlap.
+TRAIN_BASE = 1_000_000
+CALIB_BASE = 5_000_000
+TEST_BASE = 9_000_000
+
+
+def dataset(task: str, split: str, n: int):
+    """Generate `n` samples of `task` for `split` in {train, calib, test}."""
+    base = {"train": TRAIN_BASE, "calib": CALIB_BASE, "test": TEST_BASE}[split]
+    # Distinct seed lanes per task so e.g. det/seg scenes differ.
+    lane = list(GENERATORS).index(task) * 20_000_000
+    gen = GENERATORS[task]
+    return [gen(base + lane + i) for i in range(n)]
+
+
+def to_float(img: np.ndarray) -> np.ndarray:
+    """uint8 HWC → float32 HWC in [0, 1] (the network input convention)."""
+    return img.astype(np.float32) / 255.0

@@ -1,0 +1,90 @@
+"""Layer-2 probabilistic estimator graph (paper Eq. 10–12).
+
+Composes the L1 fused moment kernel with integral-image window sums and the
+closed-form pooling, producing the per-tensor `(mean, var)` estimate the
+quantizer turns into `I(α, β)`. Lowered to HLO by ``aot.py`` so the Rust
+runtime can execute the estimation path through PJRT (cross-layer parity is
+checked in `rust/tests/`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import moments
+
+
+def _integral(img):
+    """Summed-area table with a zero top row / left column."""
+    s = jnp.cumsum(jnp.cumsum(img, axis=0), axis=1)
+    return jnp.pad(s, ((1, 0), (1, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad", "gamma"))
+def window_sums(x, k, stride, pad, gamma):
+    """γ-strided window sums (S1, S2) over conv receptive fields.
+
+    One fused pass over `x` (the Pallas kernel) + two integral images +
+    4-point lookups: O(HW·C) total, vs the naive O(HW·C·k²/γ²).
+
+    The 4-point lookups are expressed as *static strided slices* of the
+    integral image (padding first, so no index clipping is needed). This
+    avoids gather ops entirely — gathers from `jnp.ix_` both lower poorly
+    to TPU and are mistranslated by the xla_extension 0.5.1 HLO-text
+    converter the Rust runtime depends on."""
+    h, w, _ = x.shape
+    cs, cs2 = moments.channel_moment_maps(x)
+    # Zero padding contributes nothing to window sums, so padding before
+    # the integral replaces per-window border clipping exactly.
+    i1 = _integral(jnp.pad(cs, pad))
+    i2 = _integral(jnp.pad(cs2, pad))  # shape (h+2p+1, w+2p+1)
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    n_oy = (oh + gamma - 1) // gamma
+    n_ox = (ow + gamma - 1) // gamma
+    step = stride * gamma
+
+    def pick(img, off_y, off_x):
+        return img[
+            off_y : off_y + (n_oy - 1) * step + 1 : step,
+            off_x : off_x + (n_ox - 1) * step + 1 : step,
+        ]
+
+    def rect(img):
+        return pick(img, k, k) - pick(img, 0, k) - pick(img, k, 0) + pick(img, 0, 0)
+
+    return rect(i1), rect(i2)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad", "gamma"))
+def estimate_conv(x, mu_w, var_w, k, stride, pad, gamma=1):
+    """Per-tensor conv moment estimate (Eq. 10–12, law of total variance):
+    ``mean = µ_W · mean(S1)``, ``var = σ²_W · mean(S2) + µ_W² · var(S1)``.
+    Returns a length-2 vector [mean, var]."""
+    s1, s2 = window_sums(x, k, stride, pad, gamma)
+    s1 = s1.reshape(-1)
+    s2 = s2.reshape(-1)
+    mean_s1 = jnp.mean(s1)
+    var_s1 = jnp.mean((s1 - mean_s1) ** 2)
+    mean = mu_w * mean_s1
+    var = var_w * jnp.mean(s2) + mu_w * mu_w * var_s1
+    return jnp.stack([mean, jnp.maximum(var, 0.0)])
+
+
+@jax.jit
+def estimate_linear(x, mu_w, var_w):
+    """Per-tensor linear estimate (Eq. 8–9): [µ_W·Σx, σ²_W·Σx²]."""
+    return jnp.stack([mu_w * jnp.sum(x), jnp.maximum(var_w * jnp.sum(x * x), 0.0)])
+
+
+def interval_qparams(moments_vec, alpha, beta, bits=8):
+    """I(α,β) → (scale, zero_point) on the unsigned 2^b grid (Eq. 3)."""
+    mean, var = moments_vec[0], moments_vec[1]
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    lo = mean - alpha * sigma
+    hi = mean + beta * sigma
+    levels = float(2**bits - 1)
+    scale = jnp.maximum(hi - lo, 1e-9) / levels
+    zero = -jnp.round(lo / scale) - float(2 ** (bits - 1))
+    return scale, zero

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md). Real-TPU performance
+is estimated analytically in DESIGN.md §Hardware-Adaptation.
+"""

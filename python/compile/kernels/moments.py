@@ -1,0 +1,63 @@
+"""The estimation hot-spot as a Pallas kernel (paper §4.2, Eq. 10–11).
+
+The expensive inner sums of the conv estimator are channel reductions of
+`x` and `x²` over every pixel. On the paper's MCU these are a sequential
+γ-strided loop over receptive fields; on TPU the right decomposition (see
+DESIGN.md §Hardware-Adaptation) is:
+
+1. **One fused pass over `x` in VMEM** producing the channel-sum maps
+   `cs = Σ_c x` and `cs2 = Σ_c x²` — this kernel. One HBM read of `x`,
+   both reductions in the same pass (the MCU code reads `x` twice).
+2. Integral images + 4-point window lookups in plain jnp/XLA (cheap,
+   fusable), see ``compile.estimator``.
+
+The kernel tiles rows: ``BlockSpec ((TH, W, C) → grid index i)`` so a tile
+of `TH·W·C·4` bytes lives in VMEM. For the paper's largest shapes
+(32×32×64) a full-image tile is ~256 KiB — comfortably inside the ~16 MiB
+VMEM budget; the row grid exists so the same kernel scales past that.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moment_kernel(x_ref, cs_ref, cs2_ref):
+    x = x_ref[...]
+    cs_ref[...] = jnp.sum(x, axis=-1)
+    cs2_ref[...] = jnp.sum(x * x, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def channel_moment_maps(x, row_tile=None):
+    """Fused per-pixel channel sums of ``x`` (HWC f32): returns
+    ``(cs [H,W], cs2 [H,W])`` computed in a single pass over ``x``.
+    ``row_tile`` rows are processed per grid step (defaults to all rows).
+    """
+    h, w, c = x.shape
+    th = row_tile or h
+    assert h % th == 0, f"row_tile {th} must divide H {h}"
+    grid = (h // th,)
+    return pl.pallas_call(
+        _moment_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((th, w, c), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((th, w), lambda i: (i, 0)),
+            pl.BlockSpec((th, w), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), x.dtype),
+            jax.ShapeDtypeStruct((h, w), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+
+
+def vmem_bytes(h, w, c, row_tile=None, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (input tile + two output
+    tiles) — the §Perf L1 metric reported in EXPERIMENTS.md."""
+    th = row_tile or h
+    return th * w * c * dtype_bytes + 2 * th * w * dtype_bytes

@@ -1,0 +1,47 @@
+"""int8 quantized matrix–vector product as a Pallas kernel.
+
+The CMSIS `arm_fully_connected_s8` analogue on the TPU side: int8 operands,
+int32 accumulation, input offset folded in. Requantization to the output
+grid stays in jnp (it is elementwise and XLA fuses it with the consumer).
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the MCU kernel walks
+rows with SMLAD dual-MACs; the MXU wants an (8·128)-tiled `w` with int8
+inputs feeding the systolic array. The kernel therefore tiles the *output*
+dimension (`row_tile`) and keeps the full reduction dimension in VMEM —
+exactly the layout `jnp.dot` would pick, but with the offset-add fused
+into the same pass instead of materializing `x + offset` in HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatvec_kernel(x_ref, w_ref, off_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32) + off_ref[0]
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] = w @ x
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def qmatvec_s8(x_q, w_q, x_offset, row_tile=None):
+    """``w_q [h,d] int8 @ (x_q [d] int8 + x_offset) -> int32 [h]``."""
+    h, d = w_q.shape
+    assert x_q.shape == (d,)
+    tr = row_tile or h
+    assert h % tr == 0, f"row_tile {tr} must divide h {h}"
+    off = jnp.asarray([x_offset], dtype=jnp.int32)
+    return pl.pallas_call(
+        _qmatvec_kernel,
+        grid=(h // tr,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((h,), jnp.int32),
+        interpret=True,
+    )(x_q, w_q, off)

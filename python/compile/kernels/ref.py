@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest compares kernel outputs against these).
+"""
+
+import jax.numpy as jnp
+
+
+def channel_moment_maps(x):
+    """Reference for ``moments.channel_moment_maps``: per-pixel channel sums
+    of x and x² for an HWC image. Returns (cs [H,W], cs2 [H,W])."""
+    cs = jnp.sum(x, axis=-1)
+    cs2 = jnp.sum(x * x, axis=-1)
+    return cs, cs2
+
+
+def qmatvec(x_q, w_q, x_offset):
+    """Reference for ``qmatmul.qmatvec_s8``: int8 matrix–vector product with
+    input offset, int32 accumulation. ``x_q [d] int8``, ``w_q [h,d] int8``."""
+    x = x_q.astype(jnp.int32) + x_offset
+    w = w_q.astype(jnp.int32)
+    return w @ x
+
+
+def window_sums(x, k, stride, pad, gamma):
+    """Reference γ-strided window sums (Eq. 10–11 inner sums): for each
+    sampled output position, Σx and Σx² over the receptive field (all
+    channels, zero padding). Returns (s1, s2) of shape [n_oy, n_ox]."""
+    h, w, _ = x.shape
+    cs, cs2 = channel_moment_maps(x)
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    oy = list(range(0, oh, gamma))
+    ox = list(range(0, ow, gamma))
+    s1 = jnp.zeros((len(oy), len(ox)))
+    s2 = jnp.zeros((len(oy), len(ox)))
+    for i, yy in enumerate(oy):
+        for j, xx in enumerate(ox):
+            y0 = max(yy * stride - pad, 0)
+            y1 = min(yy * stride - pad + k, h)
+            x0 = max(xx * stride - pad, 0)
+            x1 = min(xx * stride - pad + k, w)
+            s1 = s1.at[i, j].set(jnp.sum(cs[y0:y1, x0:x1]))
+            s2 = s2.at[i, j].set(jnp.sum(cs2[y0:y1, x0:x1]))
+    return s1, s2
+
+
+def estimate_conv_moments(x, mu_w, var_w, k, stride, pad, gamma):
+    """Reference per-tensor conv estimate (Eq. 10–12, law of total
+    variance): mean = µ·mean(S1); var = σ²·mean(S2) + µ²·var(S1)."""
+    s1, s2 = window_sums(x, k, stride, pad, gamma)
+    s1 = s1.reshape(-1)
+    s2 = s2.reshape(-1)
+    mean_s1 = jnp.mean(s1)
+    var_s1 = jnp.mean((s1 - mean_s1) ** 2)
+    mean_s2 = jnp.mean(s2)
+    mean = mu_w * mean_s1
+    var = var_w * mean_s2 + mu_w * mu_w * var_s1
+    return mean, jnp.maximum(var, 0.0)

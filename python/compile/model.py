@@ -1,0 +1,312 @@
+"""Layer-2 model zoo: the paper's six model/task combinations at micro
+scale (DESIGN.md §Substitutions), expressed as *spec graphs* shared with
+the Rust side.
+
+A model is a list of node dicts (the same IR as ``rust/src/nn/graph.rs``);
+``apply`` interprets the spec in JAX (NHWC activations, OHWI conv weights —
+identical layouts to the Rust engine, so exported weights drop straight
+in). The spec is serialized into ``artifacts/manifest.json`` and the Rust
+zoo rebuilds its ``Graph`` from it — single source of truth, no dual
+maintenance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Spec construction helpers. Node ids are list indices; `in` refers back.
+# ---------------------------------------------------------------------------
+
+
+def _conv(nid_in, cout, k, stride, pad, cin):
+    return {"op": "conv", "in": [nid_in], "cout": cout, "k": k, "stride": stride, "pad": pad, "cin": cin}
+
+
+def _dwconv(nid_in, c, k, stride, pad):
+    return {"op": "dwconv", "in": [nid_in], "c": c, "k": k, "stride": stride, "pad": pad}
+
+
+def _linear(nid_in, h, d):
+    return {"op": "linear", "in": [nid_in], "h": h, "d": d}
+
+
+def _simple(op, nid_in, **kw):
+    d = {"op": op, "in": [nid_in]}
+    d.update(kw)
+    return d
+
+
+class SpecBuilder:
+    """Tiny builder mirroring the Rust `Graph` API."""
+
+    def __init__(self, input_hw, input_c):
+        self.nodes = [{"op": "input", "in": []}]
+        self.outputs = []
+        self.input_shape = [input_hw, input_hw, input_c]
+        # shape tracking (h, w, c)
+        self.shapes = [(input_hw, input_hw, input_c)]
+
+    def _push(self, node, shape):
+        self.nodes.append(node)
+        self.shapes.append(shape)
+        return len(self.nodes) - 1
+
+    def conv(self, x, cout, k, stride=1, pad=None):
+        h, w, c = self.shapes[x]
+        pad = k // 2 if pad is None else pad
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+        return self._push(_conv(x, cout, k, stride, pad, c), (oh, ow, cout))
+
+    def dwconv(self, x, k, stride=1, pad=None):
+        h, w, c = self.shapes[x]
+        pad = k // 2 if pad is None else pad
+        oh = (h + 2 * pad - k) // stride + 1
+        ow = (w + 2 * pad - k) // stride + 1
+        return self._push(_dwconv(x, c, k, stride, pad), (oh, ow, c))
+
+    def linear(self, x, hout):
+        shape = self.shapes[x]
+        d = int(np.prod(shape))
+        return self._push(_linear(x, hout, d), (hout,))
+
+    def relu(self, x):
+        return self._push(_simple("relu", x), self.shapes[x])
+
+    def relu6(self, x):
+        return self._push(_simple("relu6", x), self.shapes[x])
+
+    def maxpool(self, x, k, stride):
+        h, w, c = self.shapes[x]
+        return self._push(
+            _simple("maxpool", x, k=k, stride=stride),
+            ((h - k) // stride + 1, (w - k) // stride + 1, c),
+        )
+
+    def gap(self, x):
+        _, _, c = self.shapes[x]
+        return self._push(_simple("gap", x), (c,))
+
+    def flatten(self, x):
+        shape = self.shapes[x]
+        return self._push(_simple("flatten", x), (int(np.prod(shape)),))
+
+    def add(self, a, b):
+        assert self.shapes[a] == self.shapes[b], "residual shape mismatch"
+        return self._push({"op": "add", "in": [a, b]}, self.shapes[a])
+
+    def output(self, *ids):
+        self.outputs.extend(ids)
+
+    def spec(self, name, task):
+        return {
+            "name": name,
+            "task": task,
+            "input": self.input_shape,
+            "nodes": self.nodes,
+            "outputs": self.outputs or [len(self.nodes) - 1],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Architectures.
+# ---------------------------------------------------------------------------
+
+
+def micro_resnet(num_classes=10, input_hw=32, width=16):
+    """Residual CNN — the ResNet50 stand-in (~100k params)."""
+    b = SpecBuilder(input_hw, 3)
+    x = 0
+    x = b.relu(b.conv(x, width, 3))
+    # Stage 1: residual block at `width`.
+    r = b.relu(b.conv(x, width, 3))
+    r = b.conv(r, width, 3)
+    x = b.relu(b.add(r, x))
+    # Stage 2: downsample to 2*width.
+    x = b.relu(b.conv(x, 2 * width, 3, stride=2))
+    r = b.relu(b.conv(x, 2 * width, 3))
+    r = b.conv(r, 2 * width, 3)
+    x = b.relu(b.add(r, x))
+    # Stage 3: downsample to 4*width.
+    x = b.relu(b.conv(x, 4 * width, 3, stride=2))
+    r = b.relu(b.conv(x, 4 * width, 3))
+    r = b.conv(r, 4 * width, 3)
+    x = b.relu(b.add(r, x))
+    x = b.gap(x)
+    x = b.linear(x, num_classes)
+    b.output(x)
+    return b.spec("micro_resnet", "cls")
+
+
+def micro_mobilenet(num_classes=10, input_hw=32, width=16):
+    """Depthwise-separable CNN — the MobileNetV2 stand-in."""
+    b = SpecBuilder(input_hw, 3)
+    x = 0
+    x = b.relu6(b.conv(x, width, 3, stride=2))
+    for cout, stride in [(width, 1), (2 * width, 2), (2 * width, 1), (4 * width, 2)]:
+        x = b.relu6(b.dwconv(x, 3, stride=stride))
+        x = b.relu6(b.conv(x, cout, 1, pad=0))
+    x = b.gap(x)
+    x = b.linear(x, num_classes)
+    b.output(x)
+    return b.spec("micro_mobilenet", "cls")
+
+
+def _backbone(b, width=16):
+    """Shared conv trunk for the detection-family heads (YOLO11n stand-in)."""
+    x = 0
+    x = b.relu(b.conv(x, width, 3, stride=2))       # 24
+    x = b.relu(b.conv(x, 2 * width, 3, stride=2))   # 12
+    r = b.relu(b.conv(x, 2 * width, 3))
+    r = b.conv(r, 2 * width, 3)
+    x = b.relu(b.add(r, x))
+    return x
+
+
+def micro_det(num_classes=5, input_hw=48, width=16):
+    """Detection: box regression (cxcywh, normalized) + class logits."""
+    b = SpecBuilder(input_hw, 3)
+    x = _backbone(b, width)
+    x = b.relu(b.conv(x, 4 * width, 3, stride=2))   # 6x6
+    x = b.flatten(x)                                 # keep spatial layout for box regression
+    x = b.linear(x, 4 + num_classes)
+    b.output(x)
+    return b.spec("micro_det", "det")
+
+
+def micro_seg(num_classes=5, input_hw=48, width=16):
+    """Segmentation: 12×12 mask logits + class logits (two outputs)."""
+    b = SpecBuilder(input_hw, 3)
+    x = _backbone(b, width)                          # 12x12x32
+    mask = b.conv(x, 1, 1, pad=0)                    # 12x12x1 mask logits
+    cls_feat = b.relu(b.conv(x, 4 * width, 3, stride=2))
+    cls_feat = b.gap(cls_feat)
+    cls = b.linear(cls_feat, num_classes)
+    b.output(mask, cls)
+    return b.spec("micro_seg", "seg")
+
+
+def micro_pose(num_classes=5, input_hw=48, width=16):
+    """Pose: 4 keypoints (xy normalized) + class logits."""
+    b = SpecBuilder(input_hw, 3)
+    x = _backbone(b, width)
+    x = b.relu(b.conv(x, 4 * width, 3, stride=2))
+    x = b.flatten(x)                                 # spatial layout for keypoints
+    x = b.linear(x, 8 + num_classes)
+    b.output(x)
+    return b.spec("micro_pose", "pose")
+
+
+def micro_obb(num_classes=3, input_hw=48, width=16):
+    """OBB: (cx cy a b cos2θ sin2θ, normalized) + aspect-class logits."""
+    b = SpecBuilder(input_hw, 3)
+    x = _backbone(b, width)
+    x = b.relu(b.conv(x, 4 * width, 3, stride=2))
+    x = b.flatten(x)                                 # spatial layout for the oriented box
+    x = b.linear(x, 6 + num_classes)
+    b.output(x)
+    return b.spec("micro_obb", "obb")
+
+
+ZOO = {
+    "micro_resnet": micro_resnet,
+    "micro_mobilenet": micro_mobilenet,
+    "micro_det": micro_det,
+    "micro_seg": micro_seg,
+    "micro_pose": micro_pose,
+    "micro_obb": micro_obb,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + JAX interpreter.
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec, seed=0):
+    """He-init all conv/dwconv/linear weights. Returns {f"w{idx}"/f"b{idx}"}.
+    Layouts: conv OHWI, dwconv [C,kh,kw], linear [h,d] — identical to Rust."""
+    rng = np.random.RandomState(seed)
+    params = {}
+    for idx, node in enumerate(spec["nodes"]):
+        op = node["op"]
+        if op == "conv":
+            fan_in = node["k"] * node["k"] * node["cin"]
+            std = float(np.sqrt(2.0 / fan_in))
+            params[f"w{idx}"] = rng.randn(node["cout"], node["k"], node["k"], node["cin"]).astype(np.float32) * std
+            params[f"b{idx}"] = np.zeros(node["cout"], dtype=np.float32)
+        elif op == "dwconv":
+            fan_in = node["k"] * node["k"]
+            std = float(np.sqrt(2.0 / fan_in))
+            params[f"w{idx}"] = rng.randn(node["c"], node["k"], node["k"]).astype(np.float32) * std
+            params[f"b{idx}"] = np.zeros(node["c"], dtype=np.float32)
+        elif op == "linear":
+            std = float(np.sqrt(2.0 / node["d"]))
+            params[f"w{idx}"] = rng.randn(node["h"], node["d"]).astype(np.float32) * std
+            params[f"b{idx}"] = np.zeros(node["h"], dtype=np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def apply(spec, params, x):
+    """Interpret the spec on a single HWC image. Returns list of outputs."""
+    values = []
+    for idx, node in enumerate(spec["nodes"]):
+        op = node["op"]
+        if op == "input":
+            v = x
+        elif op == "conv":
+            xin = values[node["in"][0]]
+            w = params[f"w{idx}"]  # OHWI
+            v = jax.lax.conv_general_dilated(
+                xin[None],
+                w,
+                window_strides=(node["stride"], node["stride"]),
+                padding=[(node["pad"], node["pad"])] * 2,
+                dimension_numbers=("NHWC", "OHWI", "NHWC"),
+            )[0] + params[f"b{idx}"]
+        elif op == "dwconv":
+            xin = values[node["in"][0]]
+            c = node["c"]
+            # depthwise as grouped conv: OHWI with O=C, I=1, groups=C
+            w = params[f"w{idx}"][:, :, :, None]  # [C, kh, kw, 1]
+            v = jax.lax.conv_general_dilated(
+                xin[None],
+                w,
+                window_strides=(node["stride"], node["stride"]),
+                padding=[(node["pad"], node["pad"])] * 2,
+                dimension_numbers=("NHWC", "OHWI", "NHWC"),
+                feature_group_count=c,
+            )[0] + params[f"b{idx}"]
+        elif op == "linear":
+            xin = values[node["in"][0]].reshape(-1)
+            v = params[f"w{idx}"] @ xin + params[f"b{idx}"]
+        elif op == "relu":
+            v = jnp.maximum(values[node["in"][0]], 0.0)
+        elif op == "relu6":
+            v = jnp.clip(values[node["in"][0]], 0.0, 6.0)
+        elif op == "maxpool":
+            xin = values[node["in"][0]]
+            k, s = node["k"], node["stride"]
+            v = jax.lax.reduce_window(
+                xin, -jnp.inf, jax.lax.max, (k, k, 1), (s, s, 1), "VALID"
+            )
+        elif op == "gap":
+            v = jnp.mean(values[node["in"][0]], axis=(0, 1))
+        elif op == "flatten":
+            v = values[node["in"][0]].reshape(-1)
+        elif op == "add":
+            v = values[node["in"][0]] + values[node["in"][1]]
+        else:
+            raise ValueError(f"unknown op {op}")
+        values.append(v)
+    return [values[i] for i in spec["outputs"]]
+
+
+def apply_batch(spec, params, xb):
+    """vmapped apply over a batch of HWC images."""
+    return jax.vmap(lambda img: apply(spec, params, img))(xb)
+
+
+def param_count(params):
+    return int(sum(np.prod(v.shape) for v in params.values()))

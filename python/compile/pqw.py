@@ -1,0 +1,58 @@
+"""The `.pqw` weight container — a minimal binary tensor archive.
+
+Layout (little-endian):
+
+```
+magic   4 bytes  b"PQW1"
+count   u32
+tensor records, each:
+  name_len u32, name utf-8 bytes
+  dtype    u8   (0 = f32)
+  rank     u8
+  dims     u32 × rank
+  data     f32 × prod(dims)
+```
+
+Reader lives in ``rust/src/models/pqw.rs``.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PQW1"
+DTYPE_F32 = 0
+
+
+def write_pqw(path, tensors):
+    """``tensors``: dict name → numpy array (float32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_F32, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_pqw(path):
+    """Reader (python side, used by tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dtype, rank = struct.unpack("<BB", f.read(2))
+            assert dtype == DTYPE_F32
+            dims = struct.unpack(f"<{rank}I", f.read(4 * rank)) if rank else ()
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out

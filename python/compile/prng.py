@@ -1,0 +1,73 @@
+"""PCG32 + SplitMix64, bit-exact mirror of ``rust/src/util/prng.rs``.
+
+The synthetic datasets must be identical between the python training path
+and the Rust evaluation path, so both sides implement exactly this
+generator and the renderer uses integer arithmetic only.
+"""
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+PCG_MULT = 6364136223846793005
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+class Pcg32:
+    """PCG32 XSH-RR. Only the integer helpers needed by the datasets."""
+
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        initstate = sm.next_u64()
+        initseq = sm.next_u64()
+        self.state = 0
+        self.inc = ((initseq << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + initstate) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & MASK32
+        rot = (old >> 59) & 31
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & MASK32
+
+    def below(self, bound: int) -> int:
+        """Unbiased uniform integer in [0, bound) — Lemire-style rejection,
+        mirroring the Rust ``below``."""
+        assert bound > 0
+        threshold = ((1 << 32) - bound) % bound
+        while True:
+            r = self.next_u32()
+            if r >= threshold:
+                return r % bound
+
+    def int_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] inclusive."""
+        assert lo <= hi
+        span = hi - lo + 1
+        if span <= MASK32:
+            return lo + self.below(span)
+        raise NotImplementedError("span > u32 not used by datasets")
+
+    def uniform(self) -> float:
+        return self.next_u32() * (1.0 / 4294967296.0)
+
+
+def _self_test():
+    sm = SplitMix64(0)
+    assert sm.next_u64() == 0xE220A8397B1DCDAF
+    assert sm.next_u64() == 0x6E789E6AA1B965F4
+
+
+_self_test()

@@ -1,0 +1,42 @@
+"""Fake-quantization emulation in JAX — the L2 mirror of
+``rust/src/quant/affine.rs`` + ``rust/src/nn/quant_exec.rs``.
+
+Used by the python tests to validate the emulation semantics and by
+``aot.py`` to export a quantized-forward HLO entry point. The Rust side is
+the one that runs the paper's accuracy experiments; keeping the two
+implementations numerically aligned is what the parity tests check.
+"""
+
+import jax.numpy as jnp
+
+
+def qparams_from_range(m, mx, bits=8):
+    """Paper Eq. 3 (same degenerate-range handling as the Rust side)."""
+    m, mx = jnp.minimum(m, mx), jnp.maximum(m, mx)
+    levels = float(2**bits - 1)
+    span = mx - m
+    degenerate = span <= 1e-7 * jnp.maximum(jnp.abs(m), 1.0)
+    scale = jnp.where(degenerate, 2.0 * jnp.maximum(jnp.abs(m), 1e-6) / levels, span / levels)
+    zero = -jnp.round(m / scale) - float(2 ** (bits - 1))
+    return scale, zero
+
+
+def quantize(x, scale, zero, bits=8):
+    """Paper Eq. 1 on the unsigned grid [0, 2^b - 1]."""
+    q = jnp.round(x / scale) + zero + float(2 ** (bits - 1))
+    return jnp.clip(q, 0.0, float(2**bits - 1))
+
+
+def dequantize(q, scale, zero, bits=8):
+    """Paper Eq. 4."""
+    return scale * (q - zero - float(2 ** (bits - 1)))
+
+
+def fake_quantize(x, scale, zero, bits=8):
+    return dequantize(quantize(x, scale, zero, bits), scale, zero, bits)
+
+
+def fake_quantize_minmax(x, bits=8):
+    """Dynamic per-tensor fake quantization (observe min/max, Eq. 3)."""
+    scale, zero = qparams_from_range(jnp.min(x), jnp.max(x), bits)
+    return fake_quantize(x, scale, zero, bits)

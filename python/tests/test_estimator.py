@@ -1,0 +1,81 @@
+"""L2 estimator graph vs the pure-jnp reference and statistical ground
+truth (Eq. 8–12)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import estimator
+from compile.kernels import ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([6, 9, 12]),
+    w=st.sampled_from([6, 8, 12]),
+    c=st.integers(1, 6),
+    k=st.sampled_from([1, 3]),
+    gamma=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_sums_match_ref(h, w, c, k, gamma, seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(h, w, c).astype(np.float32))
+    pad = k // 2
+    s1, s2 = estimator.window_sums(x, k, 1, pad, gamma)
+    r1, r2 = ref.window_sums(x, k, 1, pad, gamma)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(r1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(r2), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_estimate_conv_matches_ref(seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(12, 12, 4).astype(np.float32))
+    got = estimator.estimate_conv(x, 0.1, 0.05, 3, 1, 1, 1)
+    want = ref.estimate_conv_moments(x, 0.1, 0.05, 3, 1, 1, 1)
+    np.testing.assert_allclose(float(got[0]), float(want[0]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-4, atol=1e-4)
+
+
+def test_estimate_monte_carlo():
+    """With truly Gaussian kernels, the estimate matches the empirical
+    moments of the conv output — the paper's core claim (Eq. 10–11)."""
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.randn(12, 12, 8).astype(np.float32))
+    mu_k, sd_k = 0.05, 0.15
+    outs = []
+    for _ in range(300):
+        w = rs.randn(3, 3, 8, 1).astype(np.float32) * sd_k + mu_k
+        import jax
+        y = jax.lax.conv_general_dilated(
+            np.asarray(x)[None], w.transpose(3, 0, 1, 2),
+            (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NHWC", "OHWI", "NHWC"),
+        )
+        outs.append(np.asarray(y).ravel())
+    flat = np.concatenate(outs)
+    est = estimator.estimate_conv(x, mu_k, sd_k**2, 3, 1, 1, 1)
+    assert abs(float(est[0]) - flat.mean()) < 0.15 * max(np.sqrt(float(est[1])), 1.0)
+    assert abs(np.log2(float(est[1]) / flat.var())) < 0.4
+
+
+def test_linear_estimate():
+    x = jnp.asarray([1.0, -2.0, 3.0])
+    m = estimator.estimate_linear(x, 0.5, 0.1)
+    assert abs(float(m[0]) - 0.5 * 2.0) < 1e-6
+    assert abs(float(m[1]) - 0.1 * 14.0) < 1e-5
+
+
+def test_interval_qparams():
+    m = jnp.asarray([0.0, 4.0])  # mean 0, var 4 => sigma 2
+    scale, zero = estimator.interval_qparams(m, 2.0, 2.0, bits=8)
+    # Range [-4, 4] => scale 8/255.
+    assert abs(float(scale) - 8.0 / 255.0) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(gamma=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 1000))
+def test_gamma_subsampling_stable(gamma, seed):
+    x = jnp.asarray(np.random.RandomState(seed).rand(24, 24, 4).astype(np.float32))
+    full = estimator.estimate_conv(x, 0.1, 0.05, 3, 1, 1, 1)
+    sub = estimator.estimate_conv(x, 0.1, 0.05, 3, 1, 1, gamma)
+    assert abs(np.log2(max(float(sub[1]), 1e-9) / max(float(full[1]), 1e-9))) < 0.6

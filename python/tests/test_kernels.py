@@ -1,0 +1,80 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept over shapes and
+values with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moments, qmatmul, ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(2, 16),
+    w=st.integers(2, 16),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_matches_ref(h, w, c, seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(h, w, c).astype(np.float32) * 3)
+    cs, cs2 = moments.channel_moment_maps(x)
+    rcs, rcs2 = ref.channel_moment_maps(x)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(rcs), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cs2), np.asarray(rcs2), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([4, 8, 16]),
+    tiles=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_row_tiling_invariant(h, tiles, seed):
+    """Tiled grids must produce identical results to one big block."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(h, 8, 3).astype(np.float32))
+    full = moments.channel_moment_maps(x)
+    tiled = moments.channel_moment_maps(x, row_tile=h // tiles)
+    np.testing.assert_allclose(np.asarray(full[0]), np.asarray(tiled[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(full[1]), np.asarray(tiled[1]), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 96),
+    h=st.integers(1, 32),
+    off=st.integers(-128, 127),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatvec_exact(d, h, off, seed):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randint(-128, 128, (d,)).astype(np.int8))
+    w = jnp.asarray(rs.randint(-127, 128, (h, d)).astype(np.int8))
+    got = qmatmul.qmatvec_s8(x, w, off)
+    want = ref.qmatvec(x, w, off)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), tr=st.sampled_from([1, 2, 4]))
+def test_qmatvec_row_tiling_invariant(seed, tr):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randint(-128, 128, (16,)).astype(np.int8))
+    w = jnp.asarray(rs.randint(-127, 128, (8, 16)).astype(np.int8))
+    full = qmatmul.qmatvec_s8(x, w, 5)
+    tiled = qmatmul.qmatvec_s8(x, w, 5, row_tile=8 // tr)
+    assert np.array_equal(np.asarray(full), np.asarray(tiled))
+
+
+def test_moments_vmem_budget():
+    """§Perf L1: the paper-scale tile must fit VMEM comfortably."""
+    assert moments.vmem_bytes(32, 32, 64) < 1 << 20  # < 1 MiB
+    # Row tiling shrinks the footprint proportionally.
+    assert moments.vmem_bytes(32, 32, 64, row_tile=8) < moments.vmem_bytes(32, 32, 64) / 2
+
+
+def test_qmatvec_rejects_bad_tile():
+    x = jnp.zeros((4,), jnp.int8)
+    w = jnp.zeros((6, 4), jnp.int8)
+    with pytest.raises(AssertionError):
+        qmatmul.qmatvec_s8(x, w, 0, row_tile=4)  # 4 does not divide 6

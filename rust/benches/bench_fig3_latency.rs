@@ -1,0 +1,45 @@
+//! Bench target for Fig. 3: the MCU cycle-model sweeps *and* wall-clock of
+//! the true-int8 CMSIS wrappers (estimation vs conv vs dynamic overhead).
+
+use std::time::Duration;
+
+use pdq::cmsis::pdq_wrappers::{conv_dynamic, conv_pdq, conv_static, ConvLayerS8, QOut};
+use pdq::estimator::IntervalSpec;
+use pdq::harness::experiments::fig3;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::bench::{black_box, Bencher};
+use pdq::util::Pcg32;
+
+fn main() {
+    // (1) The modeled Cortex-M4 series (the actual figure).
+    let (a, b, c) = fig3();
+    println!("# Fig. 3a\n\n{}", a.to_markdown());
+    println!("# Fig. 3b\n\n{}", b.to_markdown());
+    println!("# Fig. 3c\n\n{}", c.to_markdown());
+
+    // (2) Host wall-clock of the int8 kernels (shape 32x32x16 -> 16).
+    let mut rng = Pcg32::new(5);
+    let (h, w, cin, cout) = (32usize, 32, 16, 16);
+    let wts: Vec<f32> = (0..cout * 9 * cin).map(|_| rng.normal_ms(0.0, 0.15)).collect();
+    let wt = Tensor::from_vec(Shape::ohwi(cout, 3, 3, cin), wts);
+    let s_in = 1.0f32 / 255.0;
+    let mut layer = ConvLayerS8::from_float(&wt, &vec![0.0; cout], ConvGeom::same(3, 1), s_in);
+    layer.interval = IntervalSpec { alpha: 4.0, beta: 4.0 };
+    let xq: Vec<i8> = (0..h * w * cin)
+        .map(|_| ((rng.uniform() * 255.0) as i32 - 128).clamp(-128, 127) as i8)
+        .collect();
+    let x = Tensor::from_vec(Shape::hwc(h, w, cin), xq);
+
+    let mut bench = Bencher::new(Duration::from_millis(100), Duration::from_millis(800), 2000);
+    bench.bench("cmsis/conv_static", 1.0, || {
+        black_box(conv_static(&layer, &x, s_in, -128, QOut::from_range(-4.0, 4.0)));
+    });
+    bench.bench("cmsis/conv_dynamic", 1.0, || {
+        black_box(conv_dynamic(&layer, &x, s_in, -128));
+    });
+    for gamma in [1usize, 4, 16] {
+        bench.bench(&format!("cmsis/conv_pdq_gamma{gamma}"), 1.0, || {
+            black_box(conv_pdq(&layer, &x, s_in, -128, gamma));
+        });
+    }
+}

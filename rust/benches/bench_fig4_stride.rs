@@ -1,0 +1,19 @@
+//! Bench/regen target for Fig. 4 (γ sensitivity of the accuracy).
+
+use std::path::Path;
+
+use pdq::harness::experiments::{fig4, ExpOptions};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench_fig4: skipped (run `make artifacts` first)");
+        return;
+    }
+    let opts = ExpOptions { n_test: 60, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let table = fig4(artifacts, &opts).expect("fig4");
+    println!("# Fig. 4 — sampling stride sensitivity (n={})\n", opts.n_test);
+    println!("{}", table.to_markdown());
+    println!("bench_fig4: total {:.1}s", t0.elapsed().as_secs_f64());
+}

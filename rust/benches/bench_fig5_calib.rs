@@ -1,0 +1,19 @@
+//! Bench/regen target for Fig. 5 (calibration-set size sweep).
+
+use std::path::Path;
+
+use pdq::harness::experiments::{fig5, ExpOptions};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench_fig5: skipped (run `make artifacts` first)");
+        return;
+    }
+    let opts = ExpOptions { n_test: 60, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let table = fig5(artifacts, &opts).expect("fig5");
+    println!("# Fig. 5 — calibration set size (n={})\n", opts.n_test);
+    println!("{}", table.to_markdown());
+    println!("bench_fig5: total {:.1}s", t0.elapsed().as_secs_f64());
+}

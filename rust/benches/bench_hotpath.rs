@@ -1,0 +1,97 @@
+//! Hot-path microbenchmarks (the §Perf iteration targets):
+//! estimator window sums (naive vs integral), the fixed-point estimator,
+//! the fake-quant executor, and coordinator round-trip overhead.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pdq::coordinator::calibrate::ExecKind;
+use pdq::coordinator::router::{ModeKey, VariantKey};
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::estimator::conv::{window_sums_integral, window_sums_naive};
+use pdq::estimator::fixed::FixedEstimator;
+use pdq::estimator::WeightStats;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{Graph, QuantMode};
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::bench::{black_box, Bencher};
+use pdq::util::Pcg32;
+
+fn rand_image(rng: &mut Pcg32, h: usize, w: usize, c: usize) -> Tensor<f32> {
+    let data: Vec<f32> = (0..h * w * c).map(|_| rng.normal_ms(0.2, 0.8)).collect();
+    Tensor::from_vec(Shape::hwc(h, w, c), data)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(11);
+    let x = rand_image(&mut rng, 32, 32, 16);
+    let geom = ConvGeom::same(3, 1);
+    let mut bench = Bencher::new(Duration::from_millis(100), Duration::from_millis(700), 50_000);
+
+    // Estimation stage: naive (paper's loop) vs integral-image fast path.
+    for gamma in [1usize, 4] {
+        bench.bench(&format!("estimator/window_sums_naive_g{gamma}"), 1.0, || {
+            black_box(window_sums_naive(&x, &geom, gamma));
+        });
+        bench.bench(&format!("estimator/window_sums_integral_g{gamma}"), 1.0, || {
+            black_box(window_sums_integral(&x, &geom, gamma));
+        });
+    }
+
+    // Full conv estimate (integral path).
+    let ws = WeightStats { mu: 0.05, var: 0.02, mu_ch: vec![], var_ch: vec![], fan_in: 144 };
+    bench.bench("estimator/estimate_conv", 1.0, || {
+        black_box(pdq::estimator::conv::estimate(&x, &ws, &geom, 1));
+    });
+
+    // Integer-only estimator.
+    let fe = FixedEstimator::new(0.05, 0.02, 1.0 / 255.0);
+    let q: Vec<i8> = (0..4096).map(|_| rng.int_range(-128, 127) as i8).collect();
+    bench.bench("estimator/fixed_linear_4096", 1.0, || {
+        black_box(fe.estimate_linear(&q, -3));
+    });
+
+    // Quantized executor forward (small residual net).
+    let graph = {
+        let mut g = Graph::new(Shape::hwc(32, 32, 3));
+        let xin = g.input();
+        let w1: Vec<f32> = (0..16 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+        let c1 = g.conv(xin, Tensor::from_vec(Shape::ohwi(16, 3, 3, 3), w1), vec![0.0; 16], geom);
+        let r1 = g.relu(c1);
+        let w2: Vec<f32> = (0..16 * 9 * 16).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+        let c2 = g.conv(r1, Tensor::from_vec(Shape::ohwi(16, 3, 3, 16), w2), vec![0.0; 16], geom);
+        let a = g.add(c2, r1);
+        let r2 = g.relu(a);
+        let p = g.global_avg_pool(r2);
+        let wl: Vec<f32> = (0..10 * 16).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let l = g.linear(p, Tensor::from_vec(Shape::new(&[10, 16]), wl), vec![0.0; 10]);
+        g.mark_output(l);
+        Arc::new(g)
+    };
+    let img = rand_image(&mut rng, 32, 32, 3);
+    let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng, 32, 32, 3)).collect();
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let mut ex = QuantExecutor::new(Arc::clone(&graph), QuantSettings { mode, ..Default::default() });
+        ex.calibrate(&calib);
+        bench.bench(&format!("quant_exec/forward_{}", mode.label()), 1.0, || {
+            black_box(ex.run(&img));
+        });
+    }
+
+    // Coordinator round trip: submit -> batch -> execute -> reply.
+    let mut g = Graph::new(Shape::hwc(8, 8, 1));
+    let xin = g.input();
+    let r = g.relu(xin);
+    g.mark_output(r);
+    let key = VariantKey { model: "echo".into(), mode: ModeKey::Fp32 };
+    let server = Server::start(
+        vec![(key.clone(), ExecKind::Float(Arc::new(g)))],
+        ServerConfig::default(),
+    );
+    let small = Tensor::full(Shape::hwc(8, 8, 1), 1.0f32);
+    bench.bench("coordinator/round_trip", 1.0, || {
+        let rx = server.submit(key.clone(), 0, small.clone()).unwrap();
+        black_box(rx.recv().unwrap());
+    });
+    drop(server.shutdown());
+}

@@ -1,0 +1,23 @@
+//! Bench/regen target for Table 1 (in-domain accuracy comparison).
+//!
+//! Regenerates the table on a reduced test set and times the per-variant
+//! evaluation cost (the paper's Table 1 rows, same column layout).
+
+use std::path::Path;
+
+use pdq::harness::experiments::{table1, ExpOptions};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench_table1: skipped (run `make artifacts` first)");
+        return;
+    }
+    let opts = ExpOptions { n_test: 60, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (table, json) = table1(artifacts, &opts).expect("table1");
+    println!("# Table 1 — In-Domain (n={})\n", opts.n_test);
+    println!("{}", table.to_markdown());
+    println!("BENCH_JSON {}", json.to_string_compact());
+    println!("bench_table1: total {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,20 @@
+//! Bench/regen target for Table 2 (out-of-domain, corruption suite).
+
+use std::path::Path;
+
+use pdq::harness::experiments::{table2, ExpOptions};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench_table2: skipped (run `make artifacts` first)");
+        return;
+    }
+    let opts = ExpOptions { n_test: 60, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (table, json) = table2(artifacts, &opts).expect("table2");
+    println!("# Table 2 — Out-of-Domain (n={})\n", opts.n_test);
+    println!("{}", table.to_markdown());
+    println!("BENCH_JSON {}", json.to_string_compact());
+    println!("bench_table2: total {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,117 @@
+//! `arm_depthwise_conv_s8` port (multiplier 1): int8 depthwise convolution.
+
+use super::requant::Requant;
+use crate::tensor::{ConvGeom, Shape, Tensor};
+
+/// Depthwise int8 conv: `input` HWC, `kernel` `[C, kh, kw]`.
+pub fn dwconv_s8(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    requant: &Requant,
+    geom: &ConvGeom,
+) -> Tensor<i8> {
+    let acc = dwconv_s8_acc(input, kernel, bias, input_offset, geom);
+    let c = kernel.shape().dim(0);
+    let mut out = Tensor::zeros(acc.shape().clone());
+    for (i, (&a, o)) in acc.data().iter().zip(out.data_mut().iter_mut()).enumerate() {
+        *o = requant.apply(a, i % c);
+    }
+    out
+}
+
+/// Wide accumulator variant (for the dynamic wrapper).
+pub fn dwconv_s8_acc(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    geom: &ConvGeom,
+) -> Tensor<i32> {
+    let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (kc, kh, kw) = (kernel.shape().dim(0), kernel.shape().dim(1), kernel.shape().dim(2));
+    assert_eq!(c, kc, "dwconv channel mismatch");
+    assert_eq!(bias.len(), c);
+    let (oh, ow) = geom.out_dims(h, w);
+    let mut out = Tensor::zeros(Shape::hwc(oh, ow, c));
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            for ch in 0..c {
+                let mut acc = bias[ch];
+                for dy in 0..kh {
+                    let yy = y_origin + dy as isize;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = x_origin + dx as isize;
+                        if xx < 0 || xx >= w as isize {
+                            continue;
+                        }
+                        acc += (input.at(&[yy as usize, xx as usize, ch]) as i32 + input_offset)
+                            * kernel.at(&[ch, dy, dx]) as i32;
+                    }
+                }
+                out.set(&[oy, ox, ch], acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops;
+    use crate::util::check::Checker;
+
+    #[test]
+    fn channels_do_not_mix() {
+        let input = Tensor::from_vec(Shape::hwc(1, 1, 2), vec![10i8, 20]);
+        let kernel = Tensor::from_vec(Shape::new(&[2, 1, 1]), vec![1i8, 2]);
+        let r = Requant::per_tensor(1.0, 0);
+        let out = dwconv_s8(&input, &kernel, &[0, 0], 0, &r, &ConvGeom::new(1, 1, 1, 0));
+        assert_eq!(out.data(), &[10, 40]);
+    }
+
+    #[test]
+    fn matches_float_dwconv() {
+        Checker::new(0xDD, 15).check("int8 dwconv ~ float", |rng| {
+            let h = rng.int_range(4, 8) as usize;
+            let w = rng.int_range(4, 8) as usize;
+            let c = rng.int_range(1, 6) as usize;
+            let geom = ConvGeom::same(3, 1);
+            // Use integer-valued floats so the comparison is exact.
+            let x: Vec<i8> = (0..h * w * c).map(|_| rng.int_range(-50, 50) as i8).collect();
+            let k: Vec<i8> = (0..c * 9).map(|_| rng.int_range(-4, 4) as i8).collect();
+            let bias: Vec<i32> = (0..c).map(|_| rng.int_range(-100, 100) as i32).collect();
+            let xf = Tensor::from_vec(Shape::hwc(h, w, c), x.iter().map(|&v| v as f32).collect());
+            let kf = Tensor::from_vec(
+                Shape::new(&[c, 3, 3]),
+                k.iter().map(|&v| v as f32).collect(),
+            );
+            let want = ops::dwconv2d(&xf, &kf, &bias.iter().map(|&b| b as f32).collect::<Vec<_>>(), &geom);
+            let xq = Tensor::from_vec(Shape::hwc(h, w, c), x);
+            let kq = Tensor::from_vec(Shape::new(&[c, 3, 3]), k);
+            let acc = dwconv_s8_acc(&xq, &kq, &bias, 0, &geom);
+            for (i, (&a, &f)) in acc.data().iter().zip(want.data().iter()).enumerate() {
+                if a != f as i32 {
+                    return Err(format!("[{i}]: {a} vs {f}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn requant_clamps_to_int8() {
+        let input = Tensor::from_vec(Shape::hwc(1, 1, 1), vec![100i8]);
+        let kernel = Tensor::from_vec(Shape::new(&[1, 1, 1]), vec![100i8]);
+        let r = Requant::per_tensor(1.0, 0);
+        let out = dwconv_s8(&input, &kernel, &[0], 0, &r, &ConvGeom::new(1, 1, 1, 0));
+        assert_eq!(out.data(), &[127]); // 10000 clamps
+    }
+}

@@ -1,0 +1,106 @@
+//! `arm_fully_connected_s8` port: int8 matrix–vector product.
+
+use super::requant::Requant;
+use crate::tensor::Tensor;
+#[cfg(test)]
+use crate::tensor::Shape;
+
+/// int8 fully connected: `weights [h, d]` row-major, `x` length d.
+pub fn fully_connected_s8(
+    x: &[i8],
+    weights: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    requant: &Requant,
+) -> Vec<i8> {
+    fully_connected_s8_acc(x, weights, bias, input_offset)
+        .iter()
+        .enumerate()
+        .map(|(j, &a)| requant.apply(a, j))
+        .collect()
+}
+
+/// Wide accumulator variant.
+pub fn fully_connected_s8_acc(
+    x: &[i8],
+    weights: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+) -> Vec<i32> {
+    let (h, d) = (weights.shape().dim(0), weights.shape().dim(1));
+    assert_eq!(x.len(), d, "fc input length");
+    assert_eq!(bias.len(), h, "fc bias length");
+    let wd = weights.data();
+    let mut out = Vec::with_capacity(h);
+    for j in 0..h {
+        let row = &wd[j * d..(j + 1) * d];
+        let mut acc = bias[j];
+        for i in 0..d {
+            acc += (x[i] as i32 + input_offset) * row[i] as i32;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Helper shared with the estimator path: quantize a float weight matrix to
+/// symmetric int8 (per-tensor) returning `(q, scale)`.
+pub fn quantize_weights_symmetric(w: &[f32]) -> (Vec<i8>, f32) {
+    let absmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+    let s = absmax / 127.0;
+    (w.iter().map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8).collect(), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+
+    #[test]
+    fn known_product() {
+        let w = Tensor::from_vec(Shape::new(&[2, 3]), vec![1i8, 2, 3, -1, 0, 1]);
+        let acc = fully_connected_s8_acc(&[10, 20, 30], &w, &[5, -5], 0);
+        assert_eq!(acc, vec![10 + 40 + 90 + 5, -10 + 30 - 5]);
+    }
+
+    #[test]
+    fn input_offset() {
+        let w = Tensor::from_vec(Shape::new(&[1, 2]), vec![1i8, 1]);
+        let acc = fully_connected_s8_acc(&[0, 0], &w, &[0], 3);
+        assert_eq!(acc, vec![6]);
+    }
+
+    #[test]
+    fn exact_integer_match_vs_float() {
+        Checker::new(0xFC, 30).check("fc int == float int", |rng| {
+            let d = rng.int_range(1, 64) as usize;
+            let h = rng.int_range(1, 16) as usize;
+            let x: Vec<i8> = (0..d).map(|_| rng.int_range(-128, 127) as i8).collect();
+            let w: Vec<i8> = (0..h * d).map(|_| rng.int_range(-127, 127) as i8).collect();
+            let bias: Vec<i32> = (0..h).map(|_| rng.int_range(-1000, 1000) as i32).collect();
+            let off = rng.int_range(-10, 10) as i32;
+            let wt = Tensor::from_vec(Shape::new(&[h, d]), w.clone());
+            let acc = fully_connected_s8_acc(&x, &wt, &bias, off);
+            for j in 0..h {
+                let mut want = bias[j] as i64;
+                for i in 0..d {
+                    want += (x[i] as i64 + off as i64) * w[j * d + i] as i64;
+                }
+                if acc[j] as i64 != want {
+                    return Err(format!("row {j}: {} vs {want}", acc[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn symmetric_weight_quantization_bounds() {
+        let w = [0.5f32, -1.0, 0.25];
+        let (q, s) = quantize_weights_symmetric(&w);
+        assert_eq!(q[1], -127);
+        for (i, &v) in w.iter().enumerate() {
+            assert!((q[i] as f32 * s - v).abs() <= s * 0.5 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! True-int8 inference kernels mirroring CMSIS-NN (paper §5.1).
+//!
+//! The paper's on-device implementation wraps `arm_convolve_s8` and
+//! `arm_fully_connected_s8`; this module is a faithful Rust port of those
+//! kernels' semantics — int8 operands, int32 accumulators, symmetric int8
+//! weights (no weight offset), per-channel Q31 requantization multipliers,
+//! output offset, activation clamping — plus the paper's wrappers that
+//! bolt the three requantization strategies on top:
+//!
+//! - [`pdq_wrappers::conv_static`] — precomputed requant (Fig. 1-a);
+//! - [`pdq_wrappers::conv_dynamic`] — buffer the int32 output, scan its
+//!   range, then requantize (Fig. 1-b; the `b′·h` memory cost of §3);
+//! - [`pdq_wrappers::conv_pdq`] — run the integer-only estimator
+//!   ([`crate::estimator::fixed`]) on the input first, derive the output
+//!   grid from `I(α,β)`, then convolve straight to int8 (Fig. 1-c).
+//!
+//! All arithmetic on the estimation path is fixed-point (Newton–Raphson
+//! integer sqrt), exactly as on the STM32 target.
+
+pub mod convolve_s8;
+pub mod dwconv_s8;
+pub mod fully_connected_s8;
+pub mod pdq_wrappers;
+pub mod requant;
+
+pub use convolve_s8::convolve_s8;
+pub use dwconv_s8::dwconv_s8;
+pub use fully_connected_s8::fully_connected_s8;
+pub use requant::Requant;

@@ -1,0 +1,300 @@
+//! The paper's CMSIS wrappers (§5.1): estimate-then-convolve.
+//!
+//! Three requantization strategies around the same int8 kernels:
+//!
+//! - **static** — output grid fixed at deploy time; the kernel requantizes
+//!   each accumulator immediately (O(1) extra memory).
+//! - **dynamic** — the full int32 accumulator tensor is buffered, its range
+//!   scanned, the output grid derived, then the buffer requantized
+//!   (O(b′·h) extra memory — §3).
+//! - **pdq (ours)** — the integer-only estimator predicts the output grid
+//!   from the *input* (γ-strided window sums → Q16.16 moments →
+//!   Newton–Raphson σ → `I(α,β)`), then the kernel requantizes immediately,
+//!   like static (O(1) extra memory, §4.2's 2b′ on top of static).
+
+use super::convolve_s8::{convolve_s8, convolve_s8_acc};
+use super::requant::Requant;
+use crate::estimator::fixed::FixedEstimator;
+use crate::estimator::IntervalSpec;
+use crate::tensor::{ConvGeom, Tensor};
+#[cfg(test)]
+use crate::tensor::Shape;
+
+/// Output quantization in signed-int8 space: `real = scale · (q − zero)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QOut {
+    pub scale: f32,
+    pub zero: i32,
+}
+
+impl QOut {
+    /// From a real-valued dynamic range.
+    pub fn from_range(lo: f32, hi: f32) -> Self {
+        let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+        let span = (hi - lo).max(1e-9);
+        let scale = span / 255.0;
+        let zero = (-128.0 - lo / scale).round() as i32;
+        Self { scale, zero }
+    }
+
+    /// Dequantize one output value.
+    pub fn dequant(&self, q: i8) -> f32 {
+        self.scale * (q as i32 - self.zero) as f32
+    }
+}
+
+/// A deploy-ready int8 conv layer: quantized kernel, folded bias, weight
+/// statistics for the estimator, calibrated interval.
+#[derive(Clone, Debug)]
+pub struct ConvLayerS8 {
+    pub kernel: Tensor<i8>,
+    pub bias: Vec<i32>,
+    pub geom: ConvGeom,
+    /// Symmetric per-tensor weight scale.
+    pub s_w: f32,
+    /// Surrogate stats of the *dequantized* weights (what actually runs).
+    pub mu_w: f32,
+    pub var_w: f32,
+    pub interval: IntervalSpec,
+}
+
+impl ConvLayerS8 {
+    /// Quantize a float conv layer for deployment. `s_in` is needed to fold
+    /// the float bias into the int32 accumulator scale `s_in·s_w`.
+    pub fn from_float(w: &Tensor<f32>, bias_f: &[f32], geom: ConvGeom, s_in: f32) -> Self {
+        let absmax = w.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+        let s_w = absmax / 127.0;
+        let kernel = w.map(|v| (v / s_w).round().clamp(-127.0, 127.0) as i8);
+        let acc_scale = s_in * s_w;
+        let bias = bias_f.iter().map(|&b| (b / acc_scale).round() as i32).collect();
+        // Stats of the dequantized weights.
+        let deq: Vec<f32> = kernel.data().iter().map(|&q| q as f32 * s_w).collect();
+        let mu_w = crate::util::stats::mean(&deq);
+        let var_w = crate::util::stats::variance(&deq);
+        Self { kernel, bias, geom, s_w, mu_w, var_w, interval: IntervalSpec::default() }
+    }
+
+    fn cout(&self) -> usize {
+        self.kernel.shape().dim(0)
+    }
+}
+
+/// Static wrapper: grid known beforehand, single fused pass.
+pub fn conv_static(
+    layer: &ConvLayerS8,
+    input: &Tensor<i8>,
+    s_in: f32,
+    z_in: i32,
+    out: QOut,
+) -> Tensor<i8> {
+    let eff = s_in as f64 * layer.s_w as f64 / out.scale as f64;
+    let r = Requant::per_tensor(eff, out.zero);
+    convolve_s8(input, &layer.kernel, &layer.bias, -z_in, &r, &layer.geom)
+}
+
+/// Dynamic wrapper: buffer wide accumulators, scan, requantize
+/// (Fig. 1-b — pays `b′·h` working memory).
+pub fn conv_dynamic(
+    layer: &ConvLayerS8,
+    input: &Tensor<i8>,
+    s_in: f32,
+    z_in: i32,
+) -> (Tensor<i8>, QOut) {
+    let acc = convolve_s8_acc(input, &layer.kernel, &layer.bias, -z_in, &layer.geom);
+    // Accumulators live on the s_in·s_w grid.
+    let acc_scale = s_in * layer.s_w;
+    let mut lo = i32::MAX;
+    let mut hi = i32::MIN;
+    for &a in acc.data() {
+        lo = lo.min(a);
+        hi = hi.max(a);
+    }
+    let out = QOut::from_range(lo as f32 * acc_scale, hi as f32 * acc_scale);
+    let eff = acc_scale as f64 / out.scale as f64;
+    let r = Requant::per_tensor(eff, out.zero);
+    let cout = layer.cout();
+    let mut q = Tensor::zeros(acc.shape().clone());
+    for (i, (&a, o)) in acc.data().iter().zip(q.data_mut().iter_mut()).enumerate() {
+        *o = r.apply(a, i % cout);
+    }
+    (q, out)
+}
+
+/// PDQ wrapper (ours): integer estimation first, then a fused static-style
+/// pass with the predicted grid (Fig. 1-c).
+pub fn conv_pdq(
+    layer: &ConvLayerS8,
+    input: &Tensor<i8>,
+    s_in: f32,
+    z_in: i32,
+    gamma: usize,
+) -> (Tensor<i8>, QOut) {
+    let (s1, s2) = int_window_sums(input, &layer.geom, z_in, gamma);
+    let est = FixedEstimator::new(layer.mu_w, layer.var_w, s_in);
+    let m = est.from_window_sums(&s1, &s2).to_moments();
+    let (lo, hi) = layer.interval.range(&m);
+    let out = QOut::from_range(lo, hi);
+    (conv_static(layer, input, s_in, z_in, out), out)
+}
+
+/// γ-strided integer window sums over the conv's receptive fields — the
+/// estimation stage the MCU runs (O(HW·p·k·k'/γ²), §4.2). Exactly mirrors
+/// the float [`crate::estimator::conv::window_sums_naive`].
+pub fn int_window_sums(
+    input: &Tensor<i8>,
+    geom: &ConvGeom,
+    z_in: i32,
+    gamma: usize,
+) -> (Vec<i64>, Vec<i64>) {
+    assert!(gamma >= 1);
+    let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let xd = input.data();
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            let mut a = 0i64;
+            let mut b = 0i64;
+            for yy in y0..y1 {
+                let row = (yy * w) * c;
+                for xx in x0..x1 {
+                    let base = row + xx * c;
+                    for ch in 0..c {
+                        let d = (xd[base + ch] as i32 - z_in) as i64;
+                        a += d;
+                        b += d * d;
+                    }
+                }
+            }
+            s1.push(a);
+            s2.push(b);
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    (s1, s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops;
+    use crate::util::Pcg32;
+
+    /// Build a random float conv layer + int8 input and return everything
+    /// needed to cross-check against the float oracle.
+    fn setup(rng: &mut Pcg32, h: usize, w: usize, cin: usize, cout: usize) -> (ConvLayerS8, Tensor<i8>, Tensor<f32>, f32, i32) {
+        let geom = ConvGeom::same(3, 1);
+        let wts: Vec<f32> = (0..cout * 9 * cin).map(|_| rng.normal_ms(0.02, 0.15)).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.uniform_range(-0.1, 0.1)).collect();
+        let wt = Tensor::from_vec(Shape::ohwi(cout, 3, 3, cin), wts);
+        // Input on a [0,1] grid quantized to signed int8: s=1/255, z=-128.
+        let s_in = 1.0 / 255.0;
+        let z_in = -128i32;
+        let xq: Vec<i8> = (0..h * w * cin)
+            .map(|_| ((rng.uniform() * 255.0).round() as i32 - 128).clamp(-128, 127) as i8)
+            .collect();
+        let layer = ConvLayerS8::from_float(&wt, &bias, geom, s_in);
+        let xqt = Tensor::from_vec(Shape::hwc(h, w, cin), xq.clone());
+        // Float oracle input = dequantized int8 input; weights = dequantized kernel.
+        let xf = Tensor::from_vec(
+            Shape::hwc(h, w, cin),
+            xq.iter().map(|&q| s_in * (q as i32 - z_in) as f32).collect(),
+        );
+        let wf = wt.map(|v| (v / layer.s_w).round().clamp(-127.0, 127.0) * layer.s_w);
+        let bias_deq: Vec<f32> = layer.bias.iter().map(|&b| b as f32 * s_in * layer.s_w).collect();
+        let want = ops::conv2d(&xf, &wf, &bias_deq, &geom);
+        (layer, xqt, want, s_in, z_in)
+    }
+
+    fn max_abs(data: &[f32]) -> f32 {
+        data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    #[test]
+    fn dynamic_wrapper_matches_oracle() {
+        let mut rng = Pcg32::new(0xA1);
+        let (layer, xq, want, s_in, z_in) = setup(&mut rng, 8, 8, 4, 6);
+        let (out, qo) = conv_dynamic(&layer, &xq, s_in, z_in);
+        for (&q, &f) in out.data().iter().zip(want.data().iter()) {
+            let deq = qo.dequant(q);
+            assert!((deq - f).abs() <= 2.0 * qo.scale + 1e-4, "{deq} vs {f} (s {})", qo.scale);
+        }
+    }
+
+    #[test]
+    fn pdq_wrapper_tracks_oracle() {
+        let mut rng = Pcg32::new(0xA2);
+        let (mut layer, xq, want, s_in, z_in) = setup(&mut rng, 10, 10, 4, 8);
+        layer.interval = IntervalSpec { alpha: 4.0, beta: 4.0 };
+        let (out, qo) = conv_pdq(&layer, &xq, s_in, z_in, 1);
+        // The estimated grid must cover most of the true output mass: check
+        // RMS error against the float oracle relative to the output spread.
+        let mut se = 0.0f64;
+        for (&q, &f) in out.data().iter().zip(want.data().iter()) {
+            let deq = qo.dequant(q);
+            se += ((deq - f) as f64).powi(2);
+        }
+        let rms = (se / want.numel() as f64).sqrt() as f32;
+        let spread = max_abs(want.data()).max(1e-3);
+        assert!(rms < 0.1 * spread, "rms {rms} vs spread {spread}");
+    }
+
+    #[test]
+    fn pdq_gamma_sweep_consistent() {
+        let mut rng = Pcg32::new(0xA3);
+        let (mut layer, xq, _want, s_in, z_in) = setup(&mut rng, 16, 16, 3, 4);
+        layer.interval = IntervalSpec { alpha: 4.0, beta: 4.0 };
+        let (_o1, q1) = conv_pdq(&layer, &xq, s_in, z_in, 1);
+        let (_o8, q8) = conv_pdq(&layer, &xq, s_in, z_in, 8);
+        // Strided estimation must produce a similar grid.
+        assert!((q1.scale / q8.scale).log2().abs() < 0.5, "{} vs {}", q1.scale, q8.scale);
+    }
+
+    #[test]
+    fn static_wrapper_uses_given_grid() {
+        let mut rng = Pcg32::new(0xA4);
+        let (layer, xq, want, s_in, z_in) = setup(&mut rng, 8, 8, 3, 4);
+        // Use the oracle-derived grid: static should then match dynamic.
+        let (lo, hi) = crate::util::stats::min_max(want.data());
+        let qo = QOut::from_range(lo, hi);
+        let out = conv_static(&layer, &xq, s_in, z_in, qo);
+        for (&q, &f) in out.data().iter().zip(want.data().iter()) {
+            assert!((qo.dequant(q) - f).abs() <= 2.0 * qo.scale + 1e-4);
+        }
+    }
+
+    #[test]
+    fn int_window_sums_match_float_path() {
+        let mut rng = Pcg32::new(0xA5);
+        let (h, w, c) = (9, 7, 3);
+        let xq: Vec<i8> = (0..h * w * c).map(|_| rng.int_range(-128, 127) as i8).collect();
+        let z_in = -5i32;
+        let geom = ConvGeom::same(3, 1);
+        let xqt = Tensor::from_vec(Shape::hwc(h, w, c), xq.clone());
+        let (s1, s2) = int_window_sums(&xqt, &geom, z_in, 2);
+        // Float mirror.
+        let xf = Tensor::from_vec(
+            Shape::hwc(h, w, c),
+            xq.iter().map(|&q| (q as i32 - z_in) as f32).collect(),
+        );
+        let fsums = crate::estimator::conv::window_sums_naive(&xf, &geom, 2);
+        assert_eq!(s1.len(), fsums.s1.len());
+        for i in 0..s1.len() {
+            assert_eq!(s1[i] as f64, fsums.s1[i], "s1[{i}]");
+            assert_eq!(s2[i] as f64, fsums.s2[i], "s2[{i}]");
+        }
+    }
+
+    #[test]
+    fn qout_roundtrip() {
+        let qo = QOut::from_range(-2.0, 6.0);
+        assert!((qo.dequant(-128) + 2.0).abs() < qo.scale);
+        assert!((qo.dequant(127) - 6.0).abs() < qo.scale);
+    }
+}

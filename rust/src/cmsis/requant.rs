@@ -1,0 +1,85 @@
+//! Requantization of int32 accumulators to int8 (CMSIS `arm_nn_requantize`).
+
+use crate::quant::fixedpoint::FixedMultiplier;
+
+/// Requantization spec: per-channel (or broadcast per-tensor) multipliers,
+/// output zero offset and activation clamp window.
+#[derive(Clone, Debug)]
+pub struct Requant {
+    /// One multiplier per output channel, or exactly one for per-tensor.
+    pub multipliers: Vec<FixedMultiplier>,
+    /// Added after scaling (the output zero-point in signed-int8 space).
+    pub output_offset: i32,
+    pub act_min: i32,
+    pub act_max: i32,
+}
+
+impl Requant {
+    /// Per-tensor spec from an effective scale `s_in·s_w / s_out`.
+    pub fn per_tensor(effective_scale: f64, output_offset: i32) -> Self {
+        Self {
+            multipliers: vec![FixedMultiplier::from_scale(effective_scale)],
+            output_offset,
+            act_min: i8::MIN as i32,
+            act_max: i8::MAX as i32,
+        }
+    }
+
+    /// Per-channel spec.
+    pub fn per_channel(effective_scales: &[f64], output_offset: i32) -> Self {
+        Self {
+            multipliers: effective_scales.iter().map(|&s| FixedMultiplier::from_scale(s)).collect(),
+            output_offset,
+            act_min: i8::MIN as i32,
+            act_max: i8::MAX as i32,
+        }
+    }
+
+    /// Restrict the activation window (fused ReLU on the int8 grid).
+    pub fn with_activation(mut self, act_min: i32, act_max: i32) -> Self {
+        self.act_min = act_min;
+        self.act_max = act_max;
+        self
+    }
+
+    /// Requantize one accumulator for channel `ch`.
+    #[inline]
+    pub fn apply(&self, acc: i32, ch: usize) -> i8 {
+        let m = if self.multipliers.len() == 1 { &self.multipliers[0] } else { &self.multipliers[ch] };
+        let v = m.apply(acc) + self.output_offset;
+        v.clamp(self.act_min, self.act_max) as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_tensor_broadcasts() {
+        let r = Requant::per_tensor(0.5, 0);
+        assert_eq!(r.apply(10, 0), 5);
+        assert_eq!(r.apply(10, 7), 5); // any channel, same multiplier
+    }
+
+    #[test]
+    fn per_channel_selects() {
+        let r = Requant::per_channel(&[1.0, 0.1], 0);
+        assert_eq!(r.apply(50, 0), 50);
+        assert_eq!(r.apply(50, 1), 5);
+    }
+
+    #[test]
+    fn offset_and_clamp() {
+        let r = Requant::per_tensor(1.0, 100);
+        assert_eq!(r.apply(50, 0), 127); // 150 clamps to int8 max
+        assert_eq!(r.apply(-300, 0), -128);
+    }
+
+    #[test]
+    fn fused_relu_window() {
+        let r = Requant::per_tensor(1.0, 0).with_activation(0, 127);
+        assert_eq!(r.apply(-5, 0), 0);
+        assert_eq!(r.apply(5, 0), 5);
+    }
+}

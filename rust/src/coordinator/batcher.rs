@@ -1,0 +1,90 @@
+//! Dynamic batching: close a batch on size or deadline, whichever first.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    /// Max time the *oldest* queued item may wait before the batch closes.
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, deadline: Duration::from_millis(2) }
+    }
+}
+
+/// Pull items from `rx` into batches per `policy`. Returns `None` when the
+/// channel is closed and drained.
+pub fn next_batch<T>(rx: &mpsc::Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    // Block for the first item.
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let t0 = Instant::now();
+    while batch.len() < policy.max_batch {
+        let remaining = policy.deadline.saturating_sub(t0.elapsed());
+        if remaining.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(remaining) {
+            Ok(item) => batch.push(item),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(50) };
+        let b1 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 100, deadline: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = mpsc::channel::<i32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            let _ = tx.send(1);
+        });
+        let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_millis(100) };
+        let b = next_batch(&rx, &policy).unwrap();
+        sender.join().unwrap();
+        assert_eq!(b.len(), 2, "late item should join the open batch");
+    }
+}

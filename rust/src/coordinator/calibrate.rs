@@ -1,0 +1,124 @@
+//! Startup calibration orchestration.
+//!
+//! Builds the executor for every requested (model × mode × granularity)
+//! variant and runs the shared calibration pass: the paper uses the *same*
+//! 16-image calibration set for static quantization and for the
+//! probabilistic interval fit (§5.2).
+
+use std::sync::Arc;
+
+use crate::data::{shapes, Task};
+use crate::models::Model;
+use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+use crate::nn::QuantMode;
+use crate::quant::Granularity;
+use crate::tensor::Tensor;
+
+/// How a variant executes.
+pub enum ExecKind {
+    /// FP32 on the in-process float engine.
+    Float(Arc<crate::nn::Graph>),
+    /// Calibrated quantization emulation.
+    Quant(Box<QuantExecutor>),
+}
+
+impl ExecKind {
+    /// Run one image, returning the model outputs.
+    pub fn run(&self, img: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        match self {
+            ExecKind::Float(g) => crate::nn::float_exec::run(g, img),
+            ExecKind::Quant(ex) => ex.run(img),
+        }
+    }
+}
+
+/// The paper's calibration-set size (§5.2).
+pub const CALIB_SIZE: usize = 16;
+
+/// Calibration images for a task (the shared set).
+pub fn calibration_images(task: Task, n: usize) -> Vec<Tensor<f32>> {
+    shapes::dataset(task, shapes::Split::Calib, n).iter().map(|s| s.image_f32()).collect()
+}
+
+/// Build + calibrate one quantized variant of a model.
+pub fn build_quant_variant(
+    model: &Model,
+    mode: QuantMode,
+    gran: Granularity,
+    gamma: usize,
+    calib: &[Tensor<f32>],
+) -> QuantExecutor {
+    let settings = QuantSettings { mode, granularity: gran, gamma, ..Default::default() };
+    let mut ex = QuantExecutor::new(Arc::clone(&model.graph), settings);
+    ex.calibrate(calib);
+    ex
+}
+
+/// Build the standard six-variant menu for one model (fp32 + the paper's
+/// 3 modes × at the given granularity) sharing one calibration set.
+pub fn standard_variants(
+    model: &Model,
+    gran: Granularity,
+    gamma: usize,
+) -> Vec<(QuantMode, QuantExecutor)> {
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic]
+        .into_iter()
+        .map(|mode| (mode, build_quant_variant(model, mode, gran, gamma, &calib)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Graph;
+    use crate::tensor::{ConvGeom, Shape};
+    use crate::util::Pcg32;
+
+    fn tiny_model() -> Model {
+        let mut rng = Pcg32::new(9);
+        let mut g = Graph::new(Shape::hwc(8, 8, 3));
+        let x = g.input();
+        let w: Vec<f32> = (0..4 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(x, Tensor::from_vec(Shape::ohwi(4, 3, 3, 3), w), vec![0.0; 4], ConvGeom::same(3, 1));
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        let wl: Vec<f32> = (0..10 * 4).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+        let l = g.linear(p, Tensor::from_vec(Shape::new(&[10, 4]), wl), vec![0.0; 10]);
+        g.mark_output(l);
+        Model {
+            name: "tiny".into(),
+            task: Task::Cls,
+            graph: Arc::new(g),
+            num_outputs: 1,
+            golden: None,
+            hlo_path: None,
+        }
+    }
+
+    #[test]
+    fn calibration_images_generated() {
+        let imgs = calibration_images(Task::Cls, 4);
+        assert_eq!(imgs.len(), 4);
+        assert_eq!(imgs[0].shape().dims(), &[32, 32, 3]);
+    }
+
+    #[test]
+    fn variants_calibrated_and_runnable() {
+        let model = tiny_model();
+        // Calib with matching input size (tiny model is 8x8 — use custom set).
+        let mut rng = Pcg32::new(1);
+        let calib: Vec<Tensor<f32>> = (0..4)
+            .map(|_| {
+                let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(8, 8, 3), d)
+            })
+            .collect();
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+            assert!(ex.is_calibrated());
+            let out = ex.run(&calib[0]);
+            assert_eq!(out[0].shape().dims(), &[10]);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving metrics: counters and a bounded latency reservoir.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Shared metrics registry (cheap enough to lock per event).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    rejected: u64,
+    batches: u64,
+    batch_sizes: Vec<f32>,
+    latencies_us: Vec<f32>,
+}
+
+const RESERVOIR: usize = 100_000;
+
+impl Metrics {
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        if m.batch_sizes.len() < RESERVOIR {
+            m.batch_sizes.push(size as f32);
+        }
+    }
+
+    pub fn on_response(&self, latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        if m.latencies_us.len() < RESERVOIR {
+            m.latencies_us.push(latency.as_micros() as f32);
+        }
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn responses(&self) -> u64 {
+        self.inner.lock().unwrap().responses
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    /// Mean batch size seen by the workers.
+    pub fn mean_batch(&self) -> f32 {
+        stats::mean(&self.inner.lock().unwrap().batch_sizes)
+    }
+
+    /// Latency percentile in microseconds.
+    pub fn latency_us(&self, pct: f64) -> f32 {
+        stats::percentile(&self.inner.lock().unwrap().latencies_us, pct)
+    }
+
+    /// JSON snapshot for reports.
+    pub fn to_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let mut o = Json::obj();
+        o.set("requests", m.requests)
+            .set("responses", m.responses)
+            .set("rejected", m.rejected)
+            .set("batches", m.batches)
+            .set("mean_batch", stats::mean(&m.batch_sizes))
+            .set("p50_us", stats::percentile(&m.latencies_us, 50.0))
+            .set("p95_us", stats::percentile(&m.latencies_us, 95.0))
+            .set("p99_us", stats::percentile(&m.latencies_us, 99.0));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.on_request();
+        m.on_request();
+        m.on_batch(2);
+        m.on_response(Duration::from_micros(100));
+        m.on_response(Duration::from_micros(300));
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.responses(), 2);
+        assert_eq!(m.mean_batch(), 2.0);
+        assert!(m.latency_us(50.0) >= 100.0);
+    }
+
+    #[test]
+    fn json_snapshot() {
+        let m = Metrics::default();
+        m.on_request();
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+    }
+}

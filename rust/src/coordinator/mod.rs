@@ -1,0 +1,30 @@
+//! The serving coordinator — Layer 3's runtime stack.
+//!
+//! Architecture (std threads + mpsc; the offline registry has no tokio):
+//!
+//! ```text
+//!  clients ──submit──▶ Router ──per-variant queue──▶ Batcher ──▶ Workers
+//!                        │                             │            │
+//!                        └── metrics ◀─────────────────┴────────────┘
+//! ```
+//!
+//! - [`router`] — routes requests to the (model × quant-mode) variant's
+//!   queue; rejects unknown variants.
+//! - [`batcher`] — dynamic batching: a batch closes when `max_batch` is
+//!   reached or the oldest request exceeds `batch_deadline` (the standard
+//!   throughput/latency knob).
+//! - [`worker`] — worker pool executing batches on the calibrated
+//!   [`crate::nn::QuantExecutor`]s (or the FP32 engine).
+//! - [`calibrate`] — startup orchestration: builds every variant and runs
+//!   the shared-calibration pass (paper §5.2: ours and static share the
+//!   same 16-image calibration set).
+//! - [`metrics`] — request counters + latency reservoir, JSON-exportable.
+
+pub mod batcher;
+pub mod calibrate;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use server::{Request, Response, Server, ServerConfig};

@@ -1,0 +1,164 @@
+//! Request routing: (model, execution mode) → the variant's input queue.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use crate::nn::QuantMode;
+use crate::quant::Granularity;
+
+/// Which executor variant a request targets.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModeKey {
+    /// Full-precision reference path (PJRT or the Rust float engine).
+    Fp32,
+    /// A quantized emulation variant.
+    Quant(QuantModeKey, GranKey),
+}
+
+// QuantMode / Granularity don't implement Ord; mirror them with tiny keys
+// so the router can use a BTreeMap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QuantModeKey {
+    Static,
+    Dynamic,
+    Ours,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GranKey {
+    T,
+    C,
+}
+
+impl From<QuantMode> for QuantModeKey {
+    fn from(m: QuantMode) -> Self {
+        match m {
+            QuantMode::Static => QuantModeKey::Static,
+            QuantMode::Dynamic => QuantModeKey::Dynamic,
+            QuantMode::Probabilistic => QuantModeKey::Ours,
+        }
+    }
+}
+
+impl From<QuantModeKey> for QuantMode {
+    fn from(k: QuantModeKey) -> Self {
+        match k {
+            QuantModeKey::Static => QuantMode::Static,
+            QuantModeKey::Dynamic => QuantMode::Dynamic,
+            QuantModeKey::Ours => QuantMode::Probabilistic,
+        }
+    }
+}
+
+impl From<Granularity> for GranKey {
+    fn from(g: Granularity) -> Self {
+        match g {
+            Granularity::PerTensor => GranKey::T,
+            Granularity::PerChannel => GranKey::C,
+        }
+    }
+}
+
+impl From<GranKey> for Granularity {
+    fn from(k: GranKey) -> Self {
+        match k {
+            GranKey::T => Granularity::PerTensor,
+            GranKey::C => Granularity::PerChannel,
+        }
+    }
+}
+
+/// Full variant identity.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VariantKey {
+    pub model: String,
+    pub mode: ModeKey,
+}
+
+impl VariantKey {
+    pub fn label(&self) -> String {
+        match &self.mode {
+            ModeKey::Fp32 => format!("{}/fp32", self.model),
+            ModeKey::Quant(m, g) => format!("{}/{m:?}/{g:?}", self.model),
+        }
+    }
+}
+
+/// The router: owns one sender per registered variant.
+pub struct Router<T> {
+    routes: BTreeMap<VariantKey, mpsc::Sender<T>>,
+}
+
+impl<T> Default for Router<T> {
+    fn default() -> Self {
+        Self { routes: BTreeMap::new() }
+    }
+}
+
+impl<T> Router<T> {
+    /// Register a variant; returns the receiving end for its worker.
+    pub fn register(&mut self, key: VariantKey) -> mpsc::Receiver<T> {
+        let (tx, rx) = mpsc::channel();
+        let prev = self.routes.insert(key.clone(), tx);
+        assert!(prev.is_none(), "variant {key:?} registered twice");
+        rx
+    }
+
+    /// Route an item; `Err` returns the item if the variant is unknown or
+    /// its worker is gone.
+    pub fn route(&self, key: &VariantKey, item: T) -> Result<(), T> {
+        match self.routes.get(key) {
+            Some(tx) => tx.send(item).map_err(|e| e.0),
+            None => Err(item),
+        }
+    }
+
+    pub fn variants(&self) -> Vec<VariantKey> {
+        self.routes.keys().cloned().collect()
+    }
+
+    /// Drop all senders (lets workers drain and exit).
+    pub fn close(&mut self) {
+        self.routes.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(model: &str) -> VariantKey {
+        VariantKey { model: model.into(), mode: ModeKey::Quant(QuantModeKey::Ours, GranKey::T) }
+    }
+
+    #[test]
+    fn routes_to_registered_variant() {
+        let mut r = Router::default();
+        let rx = r.register(key("m"));
+        r.route(&key("m"), 42).unwrap();
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let r: Router<i32> = Router::default();
+        assert_eq!(r.route(&key("nope"), 7), Err(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_registration_panics() {
+        let mut r: Router<i32> = Router::default();
+        let _a = r.register(key("m"));
+        let _b = r.register(key("m"));
+    }
+
+    #[test]
+    fn mode_key_roundtrip() {
+        for m in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let k: QuantModeKey = m.into();
+            let back: QuantMode = k.into();
+            assert_eq!(m, back);
+        }
+    }
+}

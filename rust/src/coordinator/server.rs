@@ -1,0 +1,186 @@
+//! The serving front door: routes requests, owns the worker fleet,
+//! exposes metrics, and shuts down cleanly.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::BatchPolicy;
+use super::calibrate::ExecKind;
+use super::metrics::Metrics;
+use super::router::{Router, VariantKey};
+use super::worker::{spawn_workers, Job};
+use crate::tensor::Tensor;
+
+/// An inference request.
+pub struct Request {
+    pub id: u64,
+    pub variant: VariantKey,
+    pub image: Tensor<f32>,
+    /// Channel the response is delivered on.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// An inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub outputs: Vec<Tensor<f32>>,
+    /// Queue + execution latency.
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub workers_per_variant: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { workers_per_variant: 2, policy: BatchPolicy::default() }
+    }
+}
+
+/// The running server.
+pub struct Server {
+    router: Router<Job>,
+    handles: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start with a set of (variant, executor) pairs.
+    pub fn start(variants: Vec<(VariantKey, ExecKind)>, config: ServerConfig) -> Self {
+        let metrics = Arc::new(Metrics::default());
+        let mut router = Router::default();
+        let mut handles = Vec::new();
+        for (key, exec) in variants {
+            let rx = router.register(key.clone());
+            handles.extend(spawn_workers(
+                key.label(),
+                rx,
+                Arc::new(exec),
+                config.policy,
+                Arc::clone(&metrics),
+                config.workers_per_variant,
+            ));
+        }
+        Self { router, handles, metrics }
+    }
+
+    /// Submit a request; returns a receiver for the response, or an error
+    /// for unknown variants.
+    pub fn submit(
+        &self,
+        variant: VariantKey,
+        id: u64,
+        image: Tensor<f32>,
+    ) -> Result<mpsc::Receiver<Response>, String> {
+        self.metrics.on_request();
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            request: Request { id, variant: variant.clone(), image, reply: tx },
+            enqueued: Instant::now(),
+        };
+        match self.router.route(&variant, job) {
+            Ok(()) => Ok(rx),
+            Err(_) => {
+                self.metrics.on_reject();
+                Err(format!("unknown variant {variant:?}"))
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn variants(&self) -> Vec<VariantKey> {
+        self.router.variants()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.router.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ModeKey;
+    use crate::nn::Graph;
+    use crate::tensor::Shape;
+
+    fn float_variant(name: &str) -> (VariantKey, ExecKind) {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        (
+            VariantKey { model: name.into(), mode: ModeKey::Fp32 },
+            ExecKind::Float(Arc::new(g)),
+        )
+    }
+
+    #[test]
+    fn end_to_end_submit_and_reply() {
+        let server = Server::start(vec![float_variant("m")], ServerConfig::default());
+        let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+        let mut rxs = Vec::new();
+        for id in 0..20u64 {
+            let img = Tensor::full(Shape::hwc(2, 2, 1), id as f32);
+            rxs.push((id, server.submit(key.clone(), id, img).unwrap()));
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests(), 20);
+        assert_eq!(metrics.responses(), 20);
+        assert_eq!(metrics.rejected(), 0);
+    }
+
+    #[test]
+    fn unknown_variant_rejected_and_counted() {
+        let server = Server::start(vec![float_variant("m")], ServerConfig::default());
+        let bad = VariantKey { model: "ghost".into(), mode: ModeKey::Fp32 };
+        assert!(server.submit(bad, 1, Tensor::full(Shape::hwc(2, 2, 1), 0.0)).is_err());
+        let metrics = server.shutdown();
+        assert_eq!(metrics.rejected(), 1);
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let server = Arc::new(Server::start(
+            vec![float_variant("a"), float_variant("b")],
+            ServerConfig::default(),
+        ));
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let server = Arc::clone(&server);
+            joins.push(std::thread::spawn(move || {
+                let model = if t % 2 == 0 { "a" } else { "b" };
+                let key = VariantKey { model: model.into(), mode: ModeKey::Fp32 };
+                for i in 0..25u64 {
+                    let img = Tensor::full(Shape::hwc(2, 2, 1), i as f32);
+                    let rx = server.submit(key.clone(), t * 100 + i, img).unwrap();
+                    let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                    assert_eq!(resp.id, t * 100 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(server.metrics().responses(), 100);
+    }
+}

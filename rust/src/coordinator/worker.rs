@@ -1,0 +1,122 @@
+//! Worker pool: drains a variant's queue in dynamic batches and executes.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::calibrate::ExecKind;
+use super::metrics::Metrics;
+use super::server::{Request, Response};
+
+/// One in-flight job: the request plus its enqueue timestamp.
+pub struct Job {
+    pub request: Request,
+    pub enqueued: Instant,
+}
+
+/// Spawn `n_threads` workers for one variant. All workers share the queue
+/// receiver (behind a mutex — only the batch-pull is serialized, execution
+/// is parallel).
+pub fn spawn_workers(
+    name: String,
+    rx: mpsc::Receiver<Job>,
+    exec: Arc<ExecKind>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    n_threads: usize,
+) -> Vec<JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..n_threads.max(1))
+        .map(|i| {
+            let rx = Arc::clone(&rx);
+            let exec = Arc::clone(&exec);
+            let metrics = Arc::clone(&metrics);
+            let name = format!("{name}#{i}");
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || loop {
+                    // Pull one batch while holding the lock, then release it
+                    // so sibling workers can pull the next batch while this
+                    // one executes.
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        next_batch(&guard, &policy)
+                    };
+                    let Some(batch) = batch else { return };
+                    metrics.on_batch(batch.len());
+                    for job in batch {
+                        let outputs = exec.run(&job.request.image);
+                        let latency = job.enqueued.elapsed();
+                        metrics.on_response(latency);
+                        let _ = job.request.reply.send(Response {
+                            id: job.request.id,
+                            outputs,
+                            latency,
+                        });
+                    }
+                })
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{ModeKey, VariantKey};
+    use crate::nn::Graph;
+    use crate::tensor::{Shape, Tensor};
+    use std::time::Duration;
+
+    fn passthrough_exec() -> Arc<ExecKind> {
+        // input -> relu graph: identity on non-negative images.
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        Arc::new(ExecKind::Float(Arc::new(g)))
+    }
+
+    #[test]
+    fn workers_process_and_reply() {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::default());
+        let handles = spawn_workers(
+            "test".into(),
+            rx,
+            passthrough_exec(),
+            BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) },
+            Arc::clone(&metrics),
+            2,
+        );
+        let mut replies = Vec::new();
+        for id in 0..10u64 {
+            let (rtx, rrx) = mpsc::channel();
+            let img = Tensor::full(Shape::hwc(2, 2, 1), id as f32);
+            tx.send(Job {
+                request: Request {
+                    id,
+                    variant: VariantKey { model: "m".into(), mode: ModeKey::Fp32 },
+                    image: img,
+                    reply: rtx,
+                },
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            replies.push((id, rrx));
+        }
+        for (id, rrx) in replies {
+            let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.outputs[0].data()[0], id as f32);
+        }
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(metrics.responses(), 10);
+        assert!(metrics.mean_batch() >= 1.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! The out-of-domain corruption suite (paper §5.2, Fig. 2).
+//!
+//! Seven corruptions plus a 'combination' option, each with a severity
+//! score 1–5 ("when using a severity of five, the image is still
+//! recognizable by the human eye"). OOD evaluation samples a corruption and
+//! a severity uniformly per image — [`sample_corruption`].
+//!
+//! All corruptions act on the float image in `[0, 1]`.
+
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// The corruption set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Corruption {
+    WhiteNoise,
+    Blur,
+    Pixelate,
+    Quantize,
+    ColorShift,
+    Brightness,
+    Contrast,
+    /// Two distinct base corruptions composed.
+    Combination,
+}
+
+impl Corruption {
+    /// All base corruptions (Combination excluded — it composes these).
+    pub fn base() -> [Corruption; 7] {
+        [
+            Corruption::WhiteNoise,
+            Corruption::Blur,
+            Corruption::Pixelate,
+            Corruption::Quantize,
+            Corruption::ColorShift,
+            Corruption::Brightness,
+            Corruption::Contrast,
+        ]
+    }
+
+    /// Base corruptions + Combination (the §5.2 evaluation menu).
+    pub fn all() -> [Corruption; 8] {
+        [
+            Corruption::WhiteNoise,
+            Corruption::Blur,
+            Corruption::Pixelate,
+            Corruption::Quantize,
+            Corruption::ColorShift,
+            Corruption::Brightness,
+            Corruption::Contrast,
+            Corruption::Combination,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corruption::WhiteNoise => "white_noise",
+            Corruption::Blur => "blur",
+            Corruption::Pixelate => "pixelate",
+            Corruption::Quantize => "quantize",
+            Corruption::ColorShift => "color_shift",
+            Corruption::Brightness => "brightness",
+            Corruption::Contrast => "contrast",
+            Corruption::Combination => "combination",
+        }
+    }
+}
+
+/// Apply `c` at `severity` ∈ [1, 5]; `rng` drives any stochastic component.
+pub fn corrupt(img: &Tensor<f32>, c: Corruption, severity: u32, rng: &mut Pcg32) -> Tensor<f32> {
+    assert!((1..=5).contains(&severity), "severity must be 1..=5");
+    let sv = severity as f32;
+    match c {
+        Corruption::WhiteNoise => {
+            let sigma = 0.04 * sv;
+            let mut out = img.clone();
+            for v in out.data_mut() {
+                *v = (*v + rng.normal_ms(0.0, sigma)).clamp(0.0, 1.0);
+            }
+            out
+        }
+        Corruption::Blur => {
+            let radius = severity as usize; // 1..5 box-blur radius
+            ops::box_blur(img, radius)
+        }
+        Corruption::Pixelate => {
+            let (h, w) = (img.shape().dim(0), img.shape().dim(1));
+            let factor = (severity as usize + 1).min(h.min(w)); // 2..6
+            let small = ops::resize_bilinear(img, (h / factor).max(1), (w / factor).max(1));
+            ops::resize_bilinear(&small, h, w)
+        }
+        Corruption::Quantize => {
+            // Posterize to fewer levels: 32 >> (sv-1) levels, min 2.
+            let levels = (32u32 >> (severity - 1)).max(2) as f32;
+            let mut out = img.clone();
+            for v in out.data_mut() {
+                *v = ((*v * (levels - 1.0)).round() / (levels - 1.0)).clamp(0.0, 1.0);
+            }
+            out
+        }
+        Corruption::ColorShift => {
+            // Additive per-channel shift, alternating signs.
+            let shift = 0.05 * sv;
+            let mut out = img.clone();
+            let c = out.shape().dim(2);
+            let signs: Vec<f32> = (0..c).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            for (i, v) in out.data_mut().iter_mut().enumerate() {
+                *v = (*v + shift * signs[i % c]).clamp(0.0, 1.0);
+            }
+            out
+        }
+        Corruption::Brightness => {
+            // Alternate brighten / darken by severity.
+            let delta = 0.08 * sv * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            let mut out = img.clone();
+            ops::affine_inplace(&mut out, 1.0, delta);
+            ops::clamp_inplace(&mut out, 0.0, 1.0);
+            out
+        }
+        Corruption::Contrast => {
+            // Squash (or stretch) around the mean.
+            let factor = if rng.below(2) == 0 { 1.0 + 0.25 * sv } else { 1.0 / (1.0 + 0.25 * sv) };
+            let means = ops::channel_means(img);
+            let mut out = img.clone();
+            let c = out.shape().dim(2);
+            for (i, v) in out.data_mut().iter_mut().enumerate() {
+                let m = means[i % c];
+                *v = (m + (*v - m) * factor).clamp(0.0, 1.0);
+            }
+            out
+        }
+        Corruption::Combination => {
+            // Compose two distinct base corruptions at the same severity.
+            let base = Corruption::base();
+            let i = rng.below(base.len() as u32) as usize;
+            let mut j = rng.below(base.len() as u32) as usize;
+            if j == i {
+                j = (j + 1) % base.len();
+            }
+            let once = corrupt(img, base[i], severity, rng);
+            corrupt(&once, base[j], severity, rng)
+        }
+    }
+}
+
+/// The §5.2 OOD protocol: uniformly sample an augmentation and a severity
+/// for an image.
+pub fn sample_corruption(img: &Tensor<f32>, rng: &mut Pcg32) -> (Tensor<f32>, Corruption, u32) {
+    let all = Corruption::all();
+    let c = all[rng.below(all.len() as u32) as usize];
+    let severity = 1 + rng.below(5);
+    (corrupt(img, c, severity, rng), c, severity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shapes;
+
+    fn test_image() -> Tensor<f32> {
+        shapes::gen_cls(777).image_f32()
+    }
+
+    #[test]
+    fn all_corruptions_preserve_shape_and_range() {
+        let img = test_image();
+        let mut rng = Pcg32::new(1);
+        for c in Corruption::all() {
+            for sv in 1..=5 {
+                let out = corrupt(&img, c, sv, &mut rng);
+                assert_eq!(out.shape(), img.shape(), "{c:?}");
+                for &v in out.data() {
+                    assert!((0.0..=1.0).contains(&v), "{c:?} sev {sv}: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn severity_monotone_for_noise() {
+        // Higher severity => larger deviation from the original.
+        let img = test_image();
+        let dev = |sv: u32| {
+            let mut rng = Pcg32::new(7);
+            let out = corrupt(&img, Corruption::WhiteNoise, sv, &mut rng);
+            out.data()
+                .iter()
+                .zip(img.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        assert!(dev(5) > dev(1) * 2.0);
+    }
+
+    #[test]
+    fn blur_reduces_variance() {
+        let img = test_image();
+        let mut rng = Pcg32::new(2);
+        let out = corrupt(&img, Corruption::Blur, 4, &mut rng);
+        let v0 = crate::util::stats::variance(img.data());
+        let v1 = crate::util::stats::variance(out.data());
+        assert!(v1 < v0, "blur must smooth: {v1} !< {v0}");
+    }
+
+    #[test]
+    fn quantize_reduces_distinct_levels() {
+        let img = test_image();
+        let mut rng = Pcg32::new(3);
+        let out = corrupt(&img, Corruption::Quantize, 5, &mut rng);
+        let mut levels: Vec<u32> = out.data().iter().map(|&v| (v * 1000.0) as u32).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 4, "severity 5 leaves ~2 levels, got {}", levels.len());
+    }
+
+    #[test]
+    fn sample_corruption_protocol() {
+        let img = test_image();
+        let mut rng = Pcg32::new(4);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let (out, c, sv) = sample_corruption(&img, &mut rng);
+            assert_eq!(out.shape(), img.shape());
+            assert!((1..=5).contains(&sv));
+            seen.insert(c.name());
+        }
+        // With 100 draws we should see most of the menu.
+        assert!(seen.len() >= 6, "only saw {seen:?}");
+    }
+
+    #[test]
+    fn corruption_changes_image() {
+        let img = test_image();
+        let mut rng = Pcg32::new(5);
+        for c in Corruption::base() {
+            let out = corrupt(&img, c, 3, &mut rng);
+            assert_ne!(out.data(), img.data(), "{c:?} must modify the image");
+        }
+    }
+}

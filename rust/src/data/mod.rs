@@ -1,0 +1,17 @@
+//! Synthetic datasets + corruption suite.
+//!
+//! [`shapes`] implements the integer-arithmetic procedural scene generator
+//! — a bit-exact mirror of `python/compile/data.py` (same PCG32 stream,
+//! same draw order), so the Rust evaluation data comes from the same
+//! distribution the python side trained on, and parity fixtures can compare
+//! images bit-for-bit.
+//!
+//! [`corrupt`] implements the paper's out-of-domain suite (§5.2, Fig. 2):
+//! white noise, blur, pixelation, quantization, color shift, brightness,
+//! contrast, plus the 'combination' option, each with severity 1–5.
+
+pub mod corrupt;
+pub mod shapes;
+
+pub use corrupt::{corrupt, Corruption};
+pub use shapes::{dataset, DataSample, Split, Task};

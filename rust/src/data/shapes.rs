@@ -1,0 +1,390 @@
+//! Procedural scene generator — bit-exact mirror of
+//! `python/compile/data.py` (see that file for the full spec; the draw
+//! order is part of the contract).
+
+use crate::tensor::{Shape, Tensor};
+use crate::util::Pcg32;
+
+/// 15°-bin integer cos/sin tables scaled by 1024 (matches python).
+const COS_T: [i64; 12] = [1024, 989, 886, 724, 512, 265, 0, -265, -512, -724, -886, -989];
+const SIN_T: [i64; 12] = [0, 265, 512, 724, 886, 989, 1024, 989, 886, 724, 512, 265];
+
+/// The five tasks (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Cls,
+    Det,
+    Seg,
+    Pose,
+    Obb,
+}
+
+impl Task {
+    pub fn all() -> [Task; 5] {
+        [Task::Cls, Task::Det, Task::Seg, Task::Pose, Task::Obb]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Cls => "cls",
+            Task::Det => "det",
+            Task::Seg => "seg",
+            Task::Pose => "pose",
+            Task::Obb => "obb",
+        }
+    }
+
+    /// Index in the python `GENERATORS` dict (seed-lane selection).
+    fn lane(&self) -> u64 {
+        match self {
+            Task::Cls => 0,
+            Task::Det => 1,
+            Task::Seg => 2,
+            Task::Pose => 3,
+            Task::Obb => 4,
+        }
+    }
+
+    pub fn image_hw(&self) -> usize {
+        match self {
+            Task::Cls => 32,
+            _ => 48,
+        }
+    }
+}
+
+impl std::str::FromStr for Task {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cls" => Ok(Task::Cls),
+            "det" => Ok(Task::Det),
+            "seg" => Ok(Task::Seg),
+            "pose" => Ok(Task::Pose),
+            "obb" => Ok(Task::Obb),
+            other => Err(format!("unknown task {other:?}")),
+        }
+    }
+}
+
+/// Dataset splits with disjoint seed spaces (mirrors python bases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Calib,
+    Test,
+}
+
+impl Split {
+    fn base(&self) -> u64 {
+        match self {
+            Split::Train => 1_000_000,
+            Split::Calib => 5_000_000,
+            Split::Test => 9_000_000,
+        }
+    }
+}
+
+const LANE_STRIDE: u64 = 20_000_000;
+
+/// One generated scene with its ground truth.
+#[derive(Clone, Debug)]
+pub struct DataSample {
+    /// u8 image, HWC.
+    pub image: Tensor<u8>,
+    pub class_id: usize,
+    /// (x0, y0, x1, y1) inclusive pixel coords (det/seg/pose).
+    pub bbox: Option<(usize, usize, usize, usize)>,
+    /// 12×12 {0,1} mask (seg).
+    pub mask12: Option<Tensor<u8>>,
+    /// 4 keypoints (x, y) (pose).
+    pub keypoints: Option<[(usize, usize); 4]>,
+    /// (cx, cy, a, b, angle_idx) (obb).
+    pub obb: Option<(usize, usize, usize, usize, usize)>,
+}
+
+impl DataSample {
+    /// Float image in [0, 1] — the network input convention.
+    pub fn image_f32(&self) -> Tensor<f32> {
+        self.image.map(|v| v as f32 / 255.0)
+    }
+}
+
+/// Integer membership test (mirror of python `_inside`).
+fn inside(shape: usize, dx: i64, dy: i64, s: i64) -> bool {
+    match shape {
+        0 => dx * dx + dy * dy <= s * s,
+        1 => dx.abs() <= s && dy.abs() <= s,
+        2 => {
+            if dy < -s || dy > s {
+                return false;
+            }
+            dx.abs() * 2 * s <= (dy + s) * s
+        }
+        3 => {
+            let third = (s / 3).max(1);
+            (dx.abs() <= third && dy.abs() <= s) || (dy.abs() <= third && dx.abs() <= s)
+        }
+        4 => {
+            let d2 = dx * dx + dy * dy;
+            let inner = (s * 2) / 3;
+            inner * inner <= d2 && d2 <= s * s
+        }
+        _ => unreachable!("shape id {shape}"),
+    }
+}
+
+fn inside_obb(dx: i64, dy: i64, a: i64, b: i64, angle_idx: usize) -> bool {
+    let c = COS_T[angle_idx];
+    let s = SIN_T[angle_idx];
+    let u = dx * c + dy * s;
+    let v = -dx * s + dy * c;
+    u.abs() <= a * 1024 && v.abs() <= b * 1024
+}
+
+fn paint_background(rng: &mut Pcg32, h: usize, w: usize) -> Tensor<u8> {
+    let base = 40 + rng.below(40) as i64;
+    let mut img = Tensor::zeros(Shape::hwc(h, w, 3));
+    for y in 0..h {
+        for x in 0..w {
+            let v = (base + rng.below(48) as i64 - 24).clamp(0, 255) as u8;
+            img.set(&[y, x, 0], v);
+            img.set(&[y, x, 1], v);
+            img.set(&[y, x, 2], v);
+        }
+    }
+    img
+}
+
+fn color(rng: &mut Pcg32, warm: bool) -> (u8, u8, u8) {
+    let lo = rng.below(60) as u8;
+    let mid = 30 + rng.below(60) as u8;
+    let hi = 180 + rng.below(60) as u8;
+    if warm {
+        (hi, mid, 30 + lo)
+    } else {
+        (30 + lo, mid, hi)
+    }
+}
+
+/// 32×32 classification scene (mirror of python `gen_cls`).
+pub fn gen_cls(seed: u64) -> DataSample {
+    let mut rng = Pcg32::new(seed);
+    let class_id = rng.below(10) as usize;
+    let shape = class_id / 2;
+    let warm = class_id % 2 == 0;
+    let mut img = paint_background(&mut rng, 32, 32);
+    let cx = 10 + rng.below(12) as i64;
+    let cy = 10 + rng.below(12) as i64;
+    let s = 5 + rng.below(6) as i64;
+    let (r, g, b) = color(&mut rng, warm);
+    for y in 0..32i64 {
+        for x in 0..32i64 {
+            if inside(shape, x - cx, y - cy, s) {
+                img.set(&[y as usize, x as usize, 0], r);
+                img.set(&[y as usize, x as usize, 1], g);
+                img.set(&[y as usize, x as usize, 2], b);
+            }
+        }
+    }
+    DataSample { image: img, class_id, bbox: None, mask12: None, keypoints: None, obb: None }
+}
+
+/// 48×48 detection-family scene (mirror of python `_gen_scene`).
+fn gen_scene(seed: u64, with_mask: bool) -> DataSample {
+    let mut rng = Pcg32::new(seed);
+    let class_id = rng.below(5) as usize;
+    let warm = rng.below(2) == 1;
+    let mut img = paint_background(&mut rng, 48, 48);
+    let cx = 12 + rng.below(24) as i64;
+    let cy = 12 + rng.below(24) as i64;
+    let s = 5 + rng.below(7) as i64;
+    let (r, g, b) = color(&mut rng, warm);
+    let mut mask = if with_mask { Some(Tensor::<u8>::zeros(Shape::new(&[48, 48]))) } else { None };
+    for y in 0..48i64 {
+        for x in 0..48i64 {
+            if inside(class_id, x - cx, y - cy, s) {
+                img.set(&[y as usize, x as usize, 0], r);
+                img.set(&[y as usize, x as usize, 1], g);
+                img.set(&[y as usize, x as usize, 2], b);
+                if let Some(m) = mask.as_mut() {
+                    m.set(&[y as usize, x as usize], 1);
+                }
+            }
+        }
+    }
+    let bbox = (
+        (cx - s).max(0) as usize,
+        (cy - s).max(0) as usize,
+        (cx + s).min(47) as usize,
+        (cy + s).min(47) as usize,
+    );
+    let mask12 = mask.map(|m| {
+        let mut m12 = Tensor::<u8>::zeros(Shape::new(&[12, 12]));
+        for by in 0..12 {
+            for bx in 0..12 {
+                let mut cnt = 0;
+                for yy in 0..4 {
+                    for xx in 0..4 {
+                        cnt += m.at(&[by * 4 + yy, bx * 4 + xx]) as usize;
+                    }
+                }
+                if cnt >= 8 {
+                    m12.set(&[by, bx], 1);
+                }
+            }
+        }
+        m12
+    });
+    let kps = [
+        (cx as usize, (cy - s) as usize),
+        ((cx + s) as usize, cy as usize),
+        (cx as usize, (cy + s) as usize),
+        ((cx - s) as usize, cy as usize),
+    ];
+    DataSample { image: img, class_id, bbox: Some(bbox), mask12, keypoints: Some(kps), obb: None }
+}
+
+/// 48×48 OBB scene (mirror of python `gen_obb`).
+pub fn gen_obb(seed: u64) -> DataSample {
+    let mut rng = Pcg32::new(seed);
+    let class_id = rng.below(3) as usize;
+    let warm = rng.below(2) == 1;
+    let mut img = paint_background(&mut rng, 48, 48);
+    let cx = 14 + rng.below(20) as i64;
+    let cy = 14 + rng.below(20) as i64;
+    let a = 7 + rng.below(5) as i64;
+    let b = match class_id {
+        0 => a,
+        1 => a / 2,
+        _ => (a / 4).max(2),
+    };
+    let angle_idx = rng.below(12) as usize;
+    let (cr, cg, cb) = color(&mut rng, warm);
+    for y in 0..48i64 {
+        for x in 0..48i64 {
+            if inside_obb(x - cx, y - cy, a, b, angle_idx) {
+                img.set(&[y as usize, x as usize, 0], cr);
+                img.set(&[y as usize, x as usize, 1], cg);
+                img.set(&[y as usize, x as usize, 2], cb);
+            }
+        }
+    }
+    DataSample {
+        image: img,
+        class_id,
+        bbox: None,
+        mask12: None,
+        keypoints: None,
+        obb: Some((cx as usize, cy as usize, a as usize, b as usize, angle_idx)),
+    }
+}
+
+/// Generate one sample for (task, absolute seed).
+pub fn generate(task: Task, seed: u64) -> DataSample {
+    match task {
+        Task::Cls => gen_cls(seed),
+        Task::Det | Task::Pose => gen_scene(seed, false),
+        Task::Seg => gen_scene(seed, true),
+        Task::Obb => gen_obb(seed),
+    }
+}
+
+/// Generate `n` samples of a split (same seed partitions as python).
+pub fn dataset(task: Task, split: Split, n: usize) -> Vec<DataSample> {
+    let base = split.base() + task.lane() * LANE_STRIDE;
+    (0..n as u64).map(|i| generate(task, base + i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_cls(12345);
+        let b = gen_cls(12345);
+        assert_eq!(a.image.data(), b.image.data());
+        assert_eq!(a.class_id, b.class_id);
+        let c = gen_cls(12346);
+        assert_ne!(a.image.data(), c.image.data());
+    }
+
+    #[test]
+    fn cls_labels_in_range() {
+        for seed in 0..50 {
+            let s = gen_cls(1000 + seed);
+            assert!(s.class_id < 10);
+            assert_eq!(s.image.shape().dims(), &[32, 32, 3]);
+        }
+    }
+
+    #[test]
+    fn scene_has_bbox_and_keypoints() {
+        let s = gen_scene(999, false);
+        let (x0, y0, x1, y1) = s.bbox.unwrap();
+        assert!(x0 <= x1 && y0 <= y1 && x1 <= 47 && y1 <= 47);
+        assert!(s.keypoints.is_some());
+    }
+
+    #[test]
+    fn seg_mask_nonempty_and_boxed() {
+        let s = gen_scene(4242, true);
+        let m = s.mask12.unwrap();
+        let total: usize = m.data().iter().map(|&v| v as usize).sum();
+        assert!(total > 0, "object must be visible in the mask");
+    }
+
+    #[test]
+    fn obb_aspect_classes() {
+        for seed in 0..30 {
+            let s = gen_obb(100 + seed);
+            let (_, _, a, b, ang) = s.obb.unwrap();
+            match s.class_id {
+                0 => assert_eq!(a, b),
+                _ => assert!(b < a),
+            }
+            assert!(ang < 12);
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint() {
+        let tr = dataset(Task::Cls, Split::Train, 3);
+        let te = dataset(Task::Cls, Split::Test, 3);
+        for a in &tr {
+            for b in &te {
+                assert_ne!(a.image.data(), b.image.data());
+            }
+        }
+    }
+
+    #[test]
+    fn image_f32_in_unit_range() {
+        let s = gen_cls(5);
+        let f = s.image_f32();
+        for &v in f.data() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    /// Golden parity values with the python generator. These constants were
+    /// captured from `python/compile/data.py`; if either implementation
+    /// drifts, this test catches it.
+    #[test]
+    fn python_parity_golden() {
+        let s = gen_cls(12345);
+        // Captured: see python/tests/test_parity_golden.py (same constants).
+        let checksum: u64 = s.image.data().iter().map(|&v| v as u64).sum();
+        let first: Vec<u8> = s.image.data()[..12].to_vec();
+        // The values are asserted equal on the python side too.
+        assert_eq!(s.class_id, GOLDEN_CLS_12345.0);
+        assert_eq!(checksum, GOLDEN_CLS_12345.1);
+        assert_eq!(first, GOLDEN_CLS_12345.2);
+    }
+
+    /// (class_id, pixel checksum, first 12 bytes) for gen_cls(12345) —
+    /// captured from the python implementation.
+    pub(super) const GOLDEN_CLS_12345: (usize, u64, [u8; 12]) =
+        (9, 148208, [34, 34, 34, 46, 46, 46, 46, 46, 46, 63, 63, 63]);
+}

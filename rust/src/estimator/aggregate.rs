@@ -1,0 +1,124 @@
+//! Aggregation of per-position moment estimates (paper Eq. 12).
+//!
+//! For convolutions the estimate of Eq. 10–11 is per output position
+//! `(i, j, v)`. Quantization parameters are per-tensor or per-channel, so
+//! the per-position estimates are pooled:
+//!
+//! ```text
+//! E[y]   = (1 / HWp) Σ_{v,i,j} E[y_ijv]
+//! Var[y] = mean_{v,i,j}( Var[y_ijv] ) + mean_{v,i,j}( (E[y_ijv] − E[y])² )
+//! ```
+//!
+//! **Note on the paper's printed Eq. 12:** the manuscript shows
+//! `Σ Var[y_ijv]² + (E[y_ijv] − E[y])²`, i.e. a *sum* of *squared*
+//! variances. That is dimensionally inconsistent (units of y⁴) and unbounded
+//! in H·W; the intended quantity — the variance of a mixture of the
+//! per-position Gaussians — is the law of total variance above (mean of
+//! variances + variance of means). We implement the latter and flag the
+//! deviation here and in DESIGN.md.
+
+/// A (mean, variance) pair for a pre-activation population.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Moments {
+    pub mean: f32,
+    pub var: f32,
+}
+
+impl Moments {
+    pub fn sigma(&self) -> f32 {
+        self.var.max(0.0).sqrt()
+    }
+}
+
+/// Pool per-position moments into a single (per-tensor) estimate via the
+/// law of total variance.
+pub fn pool(moments: &[Moments]) -> Moments {
+    if moments.is_empty() {
+        return Moments { mean: 0.0, var: 0.0 };
+    }
+    let n = moments.len() as f64;
+    let mean = moments.iter().map(|m| m.mean as f64).sum::<f64>() / n;
+    let mean_var = moments.iter().map(|m| m.var as f64).sum::<f64>() / n;
+    let var_mean = moments
+        .iter()
+        .map(|m| {
+            let d = m.mean as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    Moments { mean: mean as f32, var: (mean_var + var_mean) as f32 }
+}
+
+/// Pool a per-channel grid: `moments[v]` holds the per-position estimates of
+/// channel `v`; each channel pools independently (per-channel quantization
+/// keeps one parameter set per channel).
+pub fn pool_per_channel(moments: &[Vec<Moments>]) -> Vec<Moments> {
+    moments.iter().map(|ch| pool(ch)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, Pcg32};
+
+    #[test]
+    fn pool_single_is_identity() {
+        let m = Moments { mean: 1.5, var: 0.25 };
+        assert_eq!(pool(&[m]), m);
+    }
+
+    #[test]
+    fn pool_equal_means_averages_variance() {
+        let ms = [Moments { mean: 2.0, var: 1.0 }, Moments { mean: 2.0, var: 3.0 }];
+        let p = pool(&ms);
+        assert_eq!(p.mean, 2.0);
+        assert_eq!(p.var, 2.0);
+    }
+
+    #[test]
+    fn pool_spread_means_inflate_variance() {
+        let ms = [Moments { mean: 0.0, var: 1.0 }, Moments { mean: 10.0, var: 1.0 }];
+        let p = pool(&ms);
+        assert_eq!(p.mean, 5.0);
+        assert_eq!(p.var, 1.0 + 25.0); // mean of vars + variance of means
+    }
+
+    /// Law of total variance against a brute-force mixture sample.
+    #[test]
+    fn pool_matches_mixture_sampling() {
+        let mut rng = Pcg32::new(77);
+        let components = [
+            Moments { mean: -1.0, var: 0.5 },
+            Moments { mean: 2.0, var: 2.0 },
+            Moments { mean: 0.5, var: 0.1 },
+        ];
+        let mut samples = Vec::new();
+        for c in &components {
+            for _ in 0..60_000 {
+                samples.push(rng.normal_ms(c.mean, c.var.sqrt()));
+            }
+        }
+        let p = pool(&components);
+        assert!((p.mean - stats::mean(&samples)).abs() < 0.02);
+        assert!((p.var - stats::variance(&samples)).abs() < 0.05);
+    }
+
+    #[test]
+    fn pool_empty() {
+        let p = pool(&[]);
+        assert_eq!(p.mean, 0.0);
+        assert_eq!(p.var, 0.0);
+    }
+
+    #[test]
+    fn per_channel_pools_independently() {
+        let grid = vec![
+            vec![Moments { mean: 1.0, var: 0.0 }],
+            vec![Moments { mean: -1.0, var: 4.0 }, Moments { mean: -1.0, var: 2.0 }],
+        ];
+        let per_ch = pool_per_channel(&grid);
+        assert_eq!(per_ch[0].mean, 1.0);
+        assert_eq!(per_ch[1].var, 3.0);
+    }
+}

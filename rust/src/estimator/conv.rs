@@ -1,0 +1,507 @@
+//! Moment estimation for convolutions (paper Eq. 10–11) with the sampling
+//! stride γ (§4.2).
+//!
+//! For a kernel `K ∈ R^{l×k×k'×p}` (OHWI) with per-output-channel statistics
+//! `µ_{K,v}, σ²_{K,v}`, the estimate at output position `(i, j)` and channel
+//! `v` is
+//!
+//! ```text
+//! E[y_ijv]   = µ_{K,v} · S1(i,j)       S1(i,j) = Σ_{r,q,t} x_{(i+q)(j+t)r}
+//! Var[y_ijv] = σ²_{K,v} · S2(i,j)      S2(i,j) = Σ_{r,q,t} x²_{(i+q)(j+t)r}
+//! ```
+//!
+//! i.e. the window sums `S1, S2` of the input (and its square) over the
+//! receptive field are shared by all output channels — the per-channel cost
+//! is just a multiply. γ evaluates `(i, j)` on a strided subgrid, reducing
+//! the number of window sums by γ².
+//!
+//! Two implementations are provided:
+//! - [`window_sums_naive`] — the paper's O(HW·p·k·k'/γ²) loop, mirrored by
+//!   the MCU cycle model and the CMSIS path;
+//! - [`window_sums_integral`] — an O(HW·p) summed-area-table fast path used
+//!   on the server hot path (see EXPERIMENTS.md §Perf).
+
+use super::aggregate::{pool, Moments};
+use super::linear::estimate_from_sums;
+use super::weight_stats::WeightStats;
+use crate::tensor::{ConvGeom, Tensor};
+use crate::util::stats::Welford;
+
+/// Window sums at the sampled output positions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowSums {
+    /// Σ x over each sampled receptive field.
+    pub s1: Vec<f64>,
+    /// Σ x² over each sampled receptive field.
+    pub s2: Vec<f64>,
+}
+
+/// Naive strided evaluation — the reference the paper's complexity model
+/// (§4.2) describes: `O(H W p k k' / γ²)` operations.
+pub fn window_sums_naive(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> WindowSums {
+    assert!(gamma >= 1, "sampling stride must be >= 1");
+    let (h, w, _c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            let mut a = 0.0f64;
+            let mut b = 0.0f64;
+            for yy in y0..y1 {
+                for xx in x0..x1 {
+                    for ch in 0..x.shape().dim(2) {
+                        let v = x.px(yy, xx, ch) as f64;
+                        a += v;
+                        b += v * v;
+                    }
+                }
+            }
+            s1.push(a);
+            s2.push(b);
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    WindowSums { s1, s2 }
+}
+
+/// Summed-area-table evaluation: precompute integral images of the
+/// channel-summed input and its square, then each window sum is 4 lookups.
+/// Identical results to [`window_sums_naive`] up to f64 rounding.
+pub fn window_sums_integral(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> WindowSums {
+    assert!(gamma >= 1, "sampling stride must be >= 1");
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    // Integral images with a zero top row/left column: I[(y+1)(w+1)+(x+1)]
+    // = prefix sum over rows<=y, cols<=x of the channel-summed input.
+    let iw = w + 1;
+    let mut i1 = vec![0.0f64; (h + 1) * iw];
+    let mut i2 = vec![0.0f64; (h + 1) * iw];
+    for y in 0..h {
+        let mut row1 = 0.0f64;
+        let mut row2 = 0.0f64;
+        for xx in 0..w {
+            let mut cs = 0.0f64;
+            let mut cs2 = 0.0f64;
+            for ch in 0..c {
+                let v = x.px(y, xx, ch) as f64;
+                cs += v;
+                cs2 += v * v;
+            }
+            row1 += cs;
+            row2 += cs2;
+            i1[(y + 1) * iw + xx + 1] = i1[y * iw + xx + 1] + row1;
+            i2[(y + 1) * iw + xx + 1] = i2[y * iw + xx + 1] + row2;
+        }
+    }
+    let rect = |img: &[f64], y0: usize, y1: usize, x0: usize, x1: usize| -> f64 {
+        img[y1 * iw + x1] - img[y0 * iw + x1] - img[y1 * iw + x0] + img[y0 * iw + x0]
+    };
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            s1.push(rect(&i1, y0, y1, x0, x1));
+            s2.push(rect(&i2, y0, y1, x0, x1));
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    WindowSums { s1, s2 }
+}
+
+/// Per-tensor conv estimate: Eq. 10–11 with global kernel statistics,
+/// pooled over sampled positions (Eq. 12 / law of total variance).
+///
+/// Uses closed-form pooling: with one `(µ, σ²)` for all channels,
+/// `E[y] = µ·mean(S1)` and
+/// `Var[y] = σ²·mean(S2) + µ²·var(S1)` — no per-position buffer needed
+/// (this is the O(1)-memory claim of §4.2).
+pub fn estimate(x: &Tensor<f32>, ws: &WeightStats, geom: &ConvGeom, gamma: usize) -> Moments {
+    let sums = window_sums_integral(x, geom, gamma);
+    estimate_from_window_sums(&sums, ws.mu, ws.var)
+}
+
+/// Per-tensor estimate from precomputed window sums.
+pub fn estimate_from_window_sums(sums: &WindowSums, mu: f32, var: f32) -> Moments {
+    let mut w1 = Welford::default();
+    let mut m2 = 0.0f64;
+    for (&a, &b) in sums.s1.iter().zip(sums.s2.iter()) {
+        w1.push(a);
+        m2 += b;
+    }
+    let n = sums.s1.len().max(1) as f64;
+    let mean_s1 = w1.mean();
+    let var_s1 = w1.variance();
+    let mean_s2 = m2 / n;
+    Moments {
+        mean: (mu as f64 * mean_s1) as f32,
+        var: ((var as f64 * mean_s2) + (mu as f64 * mu as f64) * var_s1).max(0.0) as f32,
+    }
+}
+
+/// Per-channel conv estimate: one [`Moments`] per output channel `v`, each
+/// pooled over the sampled spatial positions.
+pub fn estimate_per_channel(
+    x: &Tensor<f32>,
+    ws: &WeightStats,
+    geom: &ConvGeom,
+    gamma: usize,
+) -> Vec<Moments> {
+    let sums = window_sums_integral(x, geom, gamma);
+    estimate_per_channel_from_sums(&sums, ws)
+}
+
+/// Per-channel estimate from precomputed window sums. Shares the S1/S2
+/// statistics across channels (the window sums do not depend on `v`).
+pub fn estimate_per_channel_from_sums(sums: &WindowSums, ws: &WeightStats) -> Vec<Moments> {
+    let mut w1 = Welford::default();
+    let mut m2 = 0.0f64;
+    for (&a, &b) in sums.s1.iter().zip(sums.s2.iter()) {
+        w1.push(a);
+        m2 += b;
+    }
+    let n = sums.s1.len().max(1) as f64;
+    let mean_s1 = w1.mean();
+    let var_s1 = w1.variance();
+    let mean_s2 = m2 / n;
+    ws.mu_ch
+        .iter()
+        .zip(ws.var_ch.iter())
+        .map(|(&mu, &var)| Moments {
+            mean: (mu as f64 * mean_s1) as f32,
+            var: ((var as f64 * mean_s2) + (mu as f64 * mu as f64) * var_s1).max(0.0) as f32,
+        })
+        .collect()
+}
+
+/// Depthwise-conv estimate: output channel `v` sees only input channel `v`,
+/// so the window sums are per-channel (`S1_v, S2_v`). Per-channel kernel
+/// statistics apply exactly as in Eq. 10–11 with `p = 1`.
+///
+/// Returns one [`Moments`] per channel; pool with [`pool`] for the
+/// per-tensor variant.
+pub fn dw_estimate_per_channel(
+    x: &Tensor<f32>,
+    ws: &WeightStats,
+    geom: &ConvGeom,
+    gamma: usize,
+) -> Vec<Moments> {
+    assert!(gamma >= 1);
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    assert_eq!(ws.channels(), c, "depthwise stats must match input channels");
+    let (oh, ow) = geom.out_dims(h, w);
+    // Per-channel integral images.
+    let iw = w + 1;
+    let mut i1 = vec![0.0f64; (h + 1) * iw * c];
+    let mut i2 = vec![0.0f64; (h + 1) * iw * c];
+    for ch in 0..c {
+        let base = ch * (h + 1) * iw;
+        for y in 0..h {
+            let mut row1 = 0.0f64;
+            let mut row2 = 0.0f64;
+            for xx in 0..w {
+                let v = x.px(y, xx, ch) as f64;
+                row1 += v;
+                row2 += v * v;
+                i1[base + (y + 1) * iw + xx + 1] = i1[base + y * iw + xx + 1] + row1;
+                i2[base + (y + 1) * iw + xx + 1] = i2[base + y * iw + xx + 1] + row2;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(c);
+    for ch in 0..c {
+        let base = ch * (h + 1) * iw;
+        let rect = |img: &[f64], y0: usize, y1: usize, x0: usize, x1: usize| -> f64 {
+            img[base + y1 * iw + x1] - img[base + y0 * iw + x1] - img[base + y1 * iw + x0]
+                + img[base + y0 * iw + x0]
+        };
+        let mut w1 = Welford::default();
+        let mut m2 = 0.0f64;
+        let mut n = 0usize;
+        let mut oy = 0;
+        while oy < oh {
+            let (y0, y1) = geom.in_range_y(oy, h);
+            let mut ox = 0;
+            while ox < ow {
+                let (x0, x1) = geom.in_range_x(ox, w);
+                w1.push(rect(&i1, y0, y1, x0, x1));
+                m2 += rect(&i2, y0, y1, x0, x1);
+                n += 1;
+                ox += gamma;
+            }
+            oy += gamma;
+        }
+        let nf = n.max(1) as f64;
+        let mu = ws.mu_ch[ch] as f64;
+        let var = ws.var_ch[ch] as f64;
+        out.push(Moments {
+            mean: (mu * w1.mean()) as f32,
+            var: ((var * (m2 / nf)) + mu * mu * w1.variance()).max(0.0) as f32,
+        });
+    }
+    out
+}
+
+/// Reference pooled-from-positions path (materializes every per-position
+/// [`Moments`] then pools) — used in tests to validate the closed-form
+/// pooling above.
+pub fn estimate_reference(x: &Tensor<f32>, ws: &WeightStats, geom: &ConvGeom, gamma: usize) -> Moments {
+    let sums = window_sums_naive(x, geom, gamma);
+    let per_pos: Vec<Moments> = sums
+        .s1
+        .iter()
+        .zip(sums.s2.iter())
+        .map(|(&a, &b)| {
+            estimate_from_sums(&super::linear::InputSums { s1: a, s2: b }, ws.mu, ws.var)
+        })
+        .collect();
+    pool(&per_pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+    use crate::util::check::{gen, Checker};
+    use crate::util::Pcg32;
+
+    fn rand_image(rng: &mut Pcg32, h: usize, w: usize, c: usize) -> Tensor<f32> {
+        let data: Vec<f32> = (0..h * w * c).map(|_| rng.normal_ms(0.2, 1.0)).collect();
+        Tensor::from_vec(Shape::hwc(h, w, c), data)
+    }
+
+    #[test]
+    fn integral_matches_naive() {
+        Checker::new(0xC0, 40).check("integral == naive", |rng| {
+            let (h, w, cin, _cout, k) = gen::conv_spec(rng);
+            let x = rand_image(rng, h, w, cin);
+            let geom = ConvGeom::same(k, *rng.choice(&[1usize, 2]));
+            let gamma = *rng.choice(&[1usize, 2, 4]);
+            let a = window_sums_naive(&x, &geom, gamma);
+            let b = window_sums_integral(&x, &geom, gamma);
+            if a.s1.len() != b.s1.len() {
+                return Err(format!("count {} vs {}", a.s1.len(), b.s1.len()));
+            }
+            for i in 0..a.s1.len() {
+                if (a.s1[i] - b.s1[i]).abs() > 1e-6 * (1.0 + a.s1[i].abs()) {
+                    return Err(format!("s1[{i}]: {} vs {}", a.s1[i], b.s1[i]));
+                }
+                if (a.s2[i] - b.s2[i]).abs() > 1e-6 * (1.0 + a.s2[i].abs()) {
+                    return Err(format!("s2[{i}]: {} vs {}", a.s2[i], b.s2[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closed_form_pooling_matches_reference() {
+        Checker::new(0xC1, 30).check("closed-form == pooled", |rng| {
+            let (h, w, cin, _cout, k) = gen::conv_spec(rng);
+            let x = rand_image(rng, h, w, cin);
+            let geom = ConvGeom::same(k, 1);
+            let ws = WeightStats {
+                mu: rng.uniform_range(-0.3, 0.3),
+                var: rng.uniform_range(0.01, 0.2),
+                mu_ch: vec![],
+                var_ch: vec![],
+                fan_in: cin * k * k,
+            };
+            let fast = estimate(&x, &ws, &geom, 1);
+            let slow = estimate_reference(&x, &ws, &geom, 1);
+            crate::util::check::close(fast.mean, slow.mean, 1e-4, 1e-4, "mean")?;
+            crate::util::check::close(fast.var, slow.var, 1e-4, 1e-4, "var")
+        });
+    }
+
+    /// Eq. 10–11 end-to-end: with a kernel actually drawn i.i.d. Gaussian,
+    /// the estimated moments match the empirical moments of the true conv
+    /// output.
+    #[test]
+    fn matches_monte_carlo_conv() {
+        let mut rng = Pcg32::new(0xBEEF);
+        let (h, w, cin, cout, k) = (12, 12, 8, 256, 3);
+        let x = rand_image(&mut rng, h, w, cin);
+        let mu_k = 0.05f32;
+        let sd_k = 0.15f32;
+        // True conv with Gaussian kernel (per-tensor stats), zero padding.
+        let geom = ConvGeom::same(k, 1);
+        let (oh, ow) = geom.out_dims(h, w);
+        let mut outputs = Vec::with_capacity(oh * ow * cout);
+        for _v in 0..cout {
+            // One kernel per output channel.
+            let kern: Vec<f32> = (0..k * k * cin).map(|_| rng.normal_ms(mu_k, sd_k)).collect();
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f64;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let yy = oy as isize + dy as isize - (k / 2) as isize;
+                            let xx = ox as isize + dx as isize - (k / 2) as isize;
+                            if yy < 0 || xx < 0 || yy >= h as isize || xx >= w as isize {
+                                continue;
+                            }
+                            for ch in 0..cin {
+                                acc += kern[(dy * k + dx) * cin + ch] as f64
+                                    * x.px(yy as usize, xx as usize, ch) as f64;
+                            }
+                        }
+                    }
+                    outputs.push(acc as f32);
+                }
+            }
+        }
+        let ws = WeightStats {
+            mu: mu_k,
+            var: sd_k * sd_k,
+            mu_ch: vec![],
+            var_ch: vec![],
+            fan_in: cin * k * k,
+        };
+        let est = estimate(&x, &ws, &geom, 1);
+        let emp_mean = crate::util::stats::mean(&outputs);
+        let emp_var = crate::util::stats::variance(&outputs);
+        assert!(
+            (est.mean - emp_mean).abs() < 0.15 * est.sigma().max(1.0),
+            "mean est {} vs emp {emp_mean}",
+            est.mean
+        );
+        assert!(
+            (est.var / emp_var).log2().abs() < 0.35,
+            "var est {} vs emp {emp_var}",
+            est.var
+        );
+    }
+
+    #[test]
+    fn gamma_subsamples_positions() {
+        let mut rng = Pcg32::new(4);
+        let x = rand_image(&mut rng, 16, 16, 3);
+        let geom = ConvGeom::same(3, 1);
+        let full = window_sums_integral(&x, &geom, 1);
+        let quarter = window_sums_integral(&x, &geom, 4);
+        assert_eq!(full.s1.len(), 16 * 16);
+        assert_eq!(quarter.s1.len(), 4 * 4);
+        // γ=4 samples must be a subset of the γ=1 grid.
+        assert_eq!(quarter.s1[0], full.s1[0]);
+        assert_eq!(quarter.s1[1], full.s1[4]);
+    }
+
+    #[test]
+    fn gamma_estimate_stays_close() {
+        // Strided estimates should approximate the full estimate (it's the
+        // whole premise of §6.3 / Fig. 4).
+        let mut rng = Pcg32::new(5);
+        let x = rand_image(&mut rng, 32, 32, 4);
+        let geom = ConvGeom::same(3, 1);
+        let ws = WeightStats { mu: 0.1, var: 0.05, mu_ch: vec![], var_ch: vec![], fan_in: 36 };
+        let e1 = estimate(&x, &ws, &geom, 1);
+        let e8 = estimate(&x, &ws, &geom, 8);
+        assert!((e1.mean - e8.mean).abs() < 0.2 * e1.sigma().max(1.0));
+        assert!((e1.var / e8.var).log2().abs() < 0.5);
+    }
+
+    #[test]
+    fn per_channel_scales_with_channel_stats() {
+        let mut rng = Pcg32::new(6);
+        let x = rand_image(&mut rng, 8, 8, 2);
+        let geom = ConvGeom::same(3, 1);
+        let ws = WeightStats {
+            mu: 0.1,
+            var: 0.05,
+            mu_ch: vec![0.1, 0.2],
+            var_ch: vec![0.05, 0.05],
+            fan_in: 18,
+        };
+        let per_ch = estimate_per_channel(&x, &ws, &geom, 1);
+        assert_eq!(per_ch.len(), 2);
+        // Mean scales linearly with µ_{K,v}.
+        assert!((per_ch[1].mean / per_ch[0].mean - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dw_estimate_uses_only_own_channel() {
+        // Channel 1 is all zeros: its estimate must be exactly zero even
+        // though channel 0 is large.
+        let mut x = Tensor::zeros(Shape::hwc(6, 6, 2));
+        for y in 0..6 {
+            for xx in 0..6 {
+                x.set_px(y, xx, 0, 5.0);
+            }
+        }
+        let ws = WeightStats {
+            mu: 0.1,
+            var: 0.05,
+            mu_ch: vec![0.2, 0.2],
+            var_ch: vec![0.05, 0.05],
+            fan_in: 9,
+        };
+        let geom = ConvGeom::same(3, 1);
+        let per_ch = dw_estimate_per_channel(&x, &ws, &geom, 1);
+        assert!(per_ch[0].mean > 0.0);
+        assert_eq!(per_ch[1].mean, 0.0);
+        assert_eq!(per_ch[1].var, 0.0);
+    }
+
+    #[test]
+    fn dw_monte_carlo() {
+        // Depthwise conv with Gaussian kernels: estimate vs empirical.
+        let mut rng = Pcg32::new(0xD3);
+        let (h, w, c, k) = (10, 10, 4, 3);
+        let x = rand_image(&mut rng, h, w, c);
+        let (mu_k, sd_k) = (0.1f32, 0.2f32);
+        let geom = ConvGeom::same(k, 1);
+        let (oh, ow) = geom.out_dims(h, w);
+        // Empirical: many kernel draws for channel 0.
+        let mut outs = Vec::new();
+        for _ in 0..3000 {
+            let kern: Vec<f32> = (0..k * k).map(|_| rng.normal_ms(mu_k, sd_k)).collect();
+            let oy = rng.int_range(0, oh as i64 - 1) as usize;
+            let ox = rng.int_range(0, ow as i64 - 1) as usize;
+            let mut acc = 0.0f64;
+            for dy in 0..k {
+                for dx in 0..k {
+                    let yy = oy as isize + dy as isize - 1;
+                    let xx = ox as isize + dx as isize - 1;
+                    if yy < 0 || xx < 0 || yy >= h as isize || xx >= w as isize {
+                        continue;
+                    }
+                    acc += kern[dy * k + dx] as f64 * x.px(yy as usize, xx as usize, 0) as f64;
+                }
+            }
+            outs.push(acc as f32);
+        }
+        let ws = WeightStats {
+            mu: mu_k,
+            var: sd_k * sd_k,
+            mu_ch: vec![mu_k; c],
+            var_ch: vec![sd_k * sd_k; c],
+            fan_in: k * k,
+        };
+        let est = dw_estimate_per_channel(&x, &ws, &geom, 1)[0];
+        let emp_mean = crate::util::stats::mean(&outs);
+        let emp_var = crate::util::stats::variance(&outs);
+        assert!((est.mean - emp_mean).abs() < 0.2 * est.sigma().max(0.5), "est {} emp {emp_mean}", est.mean);
+        assert!((est.var / emp_var).log2().abs() < 0.6, "est {} emp {emp_var}", est.var);
+    }
+
+    #[test]
+    fn one_by_one_conv_equals_linear_sums() {
+        // k=1: each window is a single pixel across channels.
+        let x = Tensor::from_vec(Shape::hwc(1, 2, 2), vec![1.0, 2.0, 3.0, 4.0]);
+        let geom = ConvGeom::new(1, 1, 1, 0);
+        let sums = window_sums_naive(&x, &geom, 1);
+        assert_eq!(sums.s1, vec![3.0, 7.0]);
+        assert_eq!(sums.s2, vec![5.0, 25.0]);
+    }
+}

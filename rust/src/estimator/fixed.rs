@@ -1,0 +1,248 @@
+//! Integer-only estimator — the MCU deployment path (paper §5.1).
+//!
+//! On a Cortex-M there is no FPU on the hot path: the input is int8, and the
+//! estimate must be computed in fixed point. The paper's CMSIS-NN wrapper
+//! does exactly this, using Newton–Raphson for the square root. This module
+//! mirrors it:
+//!
+//! - the input sums `S1 = Σ(q − z)` and `S2 = Σ(q − z)²` are exact integer
+//!   accumulations (i64);
+//! - the weight statistics and the input scale are folded at *deploy time*
+//!   into Q31 fixed multipliers `c_µ = µ_W·s_x`, `c_σ² = σ²_W·s_x²`,
+//!   `c_µ² = (µ_W·s_x)²`;
+//! - moments are produced in **Q16.16**, with `σ = isqrt(var · 2¹⁶)`
+//!   (Newton–Raphson, [`crate::quant::isqrt`]).
+//!
+//! Numeric contract (validated by the tests): within `2⁻¹⁰` relative of the
+//! float estimator for pre-activation magnitudes up to ±2¹⁴ — ample for
+//! int8 networks.
+
+use super::aggregate::Moments;
+use crate::quant::fixedpoint::FixedMultiplier;
+use crate::quant::isqrt::isqrt_u64;
+
+/// Fixed-point Q16.16 moments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FixedMoments {
+    /// Mean in Q16.16 (signed).
+    pub mean_q16: i64,
+    /// Standard deviation in Q16.16 (non-negative).
+    pub sigma_q16: i64,
+}
+
+impl FixedMoments {
+    /// Convert to float-domain moments (boundary only — never on-device).
+    pub fn to_moments(&self) -> Moments {
+        let mean = self.mean_q16 as f32 / 65536.0;
+        let sigma = self.sigma_q16 as f32 / 65536.0;
+        Moments { mean, var: sigma * sigma }
+    }
+}
+
+/// A signed fixed multiplier (the Q31 machinery is positive-only).
+#[derive(Clone, Copy, Debug)]
+struct SignedMultiplier {
+    fm: FixedMultiplier,
+    negative: bool,
+}
+
+impl SignedMultiplier {
+    fn from_scale(scale: f64) -> Self {
+        Self { fm: FixedMultiplier::from_scale(scale.abs()), negative: scale < 0.0 }
+    }
+
+    /// `round(acc · scale)` for i64 accumulators (the CMSIS analogue is
+    /// `arm_nn_requantize_s64`; [`FixedMultiplier::apply_wide`] runs the
+    /// Q31 multiply over i128 so no limb splitting is needed).
+    fn apply_i64(&self, acc: i64) -> i64 {
+        let v = self.fm.apply_wide(acc);
+        if self.negative {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+/// Deploy-time folded constants for one layer.
+#[derive(Clone, Debug)]
+pub struct FixedEstimator {
+    /// `µ_W · s_x · 2^16` — S1 → mean in Q16.16.
+    c_mu: SignedMultiplier,
+    /// `σ²_W · s_x² · 2^16` — S2 → variance in Q16.16.
+    c_var: SignedMultiplier,
+    /// `(µ_W · s_x)² · 2^16` — var(S1) → variance contribution in Q16.16.
+    c_mu2: SignedMultiplier,
+}
+
+impl FixedEstimator {
+    /// Fold weight statistics and the input scale. `var_w >= 0`.
+    pub fn new(mu_w: f32, var_w: f32, s_x: f32) -> Self {
+        let c_mu = mu_w as f64 * s_x as f64 * 65536.0;
+        let c_var = var_w as f64 * (s_x as f64) * (s_x as f64) * 65536.0;
+        let c_mu2 = (mu_w as f64 * s_x as f64) * (mu_w as f64 * s_x as f64) * 65536.0;
+        Self {
+            c_mu: SignedMultiplier::from_scale(c_mu),
+            c_var: SignedMultiplier::from_scale(c_var.max(0.0)),
+            c_mu2: SignedMultiplier::from_scale(c_mu2),
+        }
+    }
+
+    /// Linear-layer estimate (Eq. 8–9) from the quantized input.
+    /// `z_eff` is the effective zero offset (`z + 2^{b-1}` in the paper's
+    /// convention), i.e. real `x = s_x · (q − z_eff)`.
+    pub fn estimate_linear(&self, q: &[i8], z_eff: i32) -> FixedMoments {
+        let (s1, s2) = int_sums(q, z_eff);
+        self.from_int_sums(s1, s2)
+    }
+
+    /// Moments from exact integer sums of a single population (no spatial
+    /// pooling): `mean = c_µ·S1`, `var = c_σ²·S2`.
+    pub fn from_int_sums(&self, s1: i64, s2: i64) -> FixedMoments {
+        let mean_q16 = self.c_mu.apply_i64(s1);
+        let var_q16 = self.c_var.apply_i64(s2).max(0);
+        FixedMoments { mean_q16, sigma_q16: sqrt_q16(var_q16) }
+    }
+
+    /// Pooled conv estimate from γ-sampled *integer* window sums
+    /// (law of total variance, all-integer):
+    /// `mean = c_µ·mean(S1)`, `var = c_σ²·mean(S2) + c_µ²·var(S1)`.
+    pub fn from_window_sums(&self, s1: &[i64], s2: &[i64]) -> FixedMoments {
+        assert_eq!(s1.len(), s2.len());
+        if s1.is_empty() {
+            return FixedMoments { mean_q16: 0, sigma_q16: 0 };
+        }
+        let n = s1.len() as i64;
+        let sum1: i64 = s1.iter().sum();
+        let sum2: i64 = s2.iter().sum();
+        // var(S1) in integer: E[S1²] − E[S1]² with i128 intermediates.
+        let sum1_sq: i128 = s1.iter().map(|&a| (a as i128) * (a as i128)).sum();
+        let mean_s1 = sum1 / n; // floor; bias < 1 count, negligible at Q16 scale
+        let e_s1sq = (sum1_sq / n as i128) as i64;
+        let var_s1 = (e_s1sq - mean_s1 * mean_s1).max(0);
+        let mean_s2 = sum2 / n;
+        let mean_q16 = self.c_mu.apply_i64(mean_s1);
+        let var_q16 = (self.c_var.apply_i64(mean_s2) + self.c_mu2.apply_i64(var_s1)).max(0);
+        FixedMoments { mean_q16, sigma_q16: sqrt_q16(var_q16) }
+    }
+}
+
+/// Exact integer input sums: `S1 = Σ (q − z)`, `S2 = Σ (q − z)²`.
+pub fn int_sums(q: &[i8], z_eff: i32) -> (i64, i64) {
+    let mut s1 = 0i64;
+    let mut s2 = 0i64;
+    for &v in q {
+        let d = (v as i32 - z_eff) as i64;
+        s1 += d;
+        s2 += d * d;
+    }
+    (s1, s2)
+}
+
+/// `sqrt` of a non-negative Q16.16 value, result in Q16.16:
+/// `sqrt(v/2^16)·2^16 = sqrt(v·2^16)`.
+fn sqrt_q16(v_q16: i64) -> i64 {
+    debug_assert!(v_q16 >= 0);
+    isqrt_u64((v_q16 as u64) << 16) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::linear::{estimate_from_sums, InputSums};
+    use crate::util::check::Checker;
+
+    /// Fixed estimator vs float estimator on random int8 inputs.
+    #[test]
+    fn linear_matches_float_estimator() {
+        Checker::new(0xF1, 64).check("fixed == float (linear)", |rng| {
+            let d = rng.int_range(16, 512) as usize;
+            let s_x = rng.uniform_range(0.002, 0.1);
+            let z_eff = rng.int_range(-20, 20) as i32;
+            let mu_w = rng.uniform_range(-0.2, 0.2);
+            let var_w = rng.uniform_range(0.001, 0.1);
+            let q: Vec<i8> = (0..d).map(|_| rng.int_range(-128, 127) as i8).collect();
+            // Float reference: dequantize and run the float estimator.
+            let x: Vec<f32> = q.iter().map(|&v| s_x * (v as i32 - z_eff) as f32).collect();
+            let float_m = estimate_from_sums(&InputSums::of(&x), mu_w, var_w);
+            let fixed = FixedEstimator::new(mu_w, var_w, s_x);
+            let fm = fixed.estimate_linear(&q, z_eff).to_moments();
+            crate::util::check::close(fm.mean, float_m.mean, 0.02, 1e-3, "mean")?;
+            crate::util::check::close(
+                fm.var.sqrt(),
+                float_m.var.sqrt(),
+                0.02,
+                2e-3,
+                "sigma",
+            )
+        });
+    }
+
+    #[test]
+    fn pooled_matches_float_pooling() {
+        Checker::new(0xF2, 64).check("fixed == float (pooled)", |rng| {
+            let n = rng.int_range(4, 64) as usize;
+            let s_x = rng.uniform_range(0.005, 0.05);
+            let mu_w = rng.uniform_range(-0.1, 0.1);
+            let var_w = rng.uniform_range(0.005, 0.05);
+            // Random integer window sums with realistic magnitudes.
+            let s1: Vec<i64> = (0..n).map(|_| rng.int_range(-30_000, 30_000)).collect();
+            let s2: Vec<i64> = s1.iter().map(|&a| a.abs() * 3 + rng.int_range(0, 9999)).collect();
+            let fixed = FixedEstimator::new(mu_w, var_w, s_x);
+            let fm = fixed.from_window_sums(&s1, &s2).to_moments();
+            // Float reference of the same closed form.
+            let nf = n as f64;
+            let mean_s1 = s1.iter().sum::<i64>() as f64 / nf;
+            let var_s1 = s1.iter().map(|&a| (a as f64 - mean_s1).powi(2)).sum::<f64>() / nf;
+            let mean_s2 = s2.iter().sum::<i64>() as f64 / nf;
+            let c_mu = mu_w as f64 * s_x as f64;
+            let want_mean = c_mu * mean_s1;
+            let want_var = var_w as f64 * (s_x as f64).powi(2) * mean_s2 + c_mu * c_mu * var_s1;
+            crate::util::check::close(fm.mean, want_mean as f32, 0.05, 5e-3, "mean")?;
+            crate::util::check::close(
+                fm.var.sqrt(),
+                (want_var.max(0.0)).sqrt() as f32,
+                0.05,
+                1e-2,
+                "sigma",
+            )
+        });
+    }
+
+    #[test]
+    fn int_sums_exact() {
+        let q = [10i8, -5, 0];
+        let (s1, s2) = int_sums(&q, 2);
+        // (8) + (-7) + (-2) = -1 ;  64 + 49 + 4 = 117
+        assert_eq!(s1, -1);
+        assert_eq!(s2, 117);
+    }
+
+    #[test]
+    fn sqrt_q16_known_values() {
+        // 4.0 in Q16.16 -> 2.0 in Q16.16
+        assert_eq!(sqrt_q16(4 << 16), 2 << 16);
+        // 2.0 -> ~1.41421
+        let r = sqrt_q16(2 << 16) as f64 / 65536.0;
+        assert!((r - 2f64.sqrt()).abs() < 1e-4);
+        assert_eq!(sqrt_q16(0), 0);
+    }
+
+    #[test]
+    fn negative_mu_flows_through() {
+        let fixed = FixedEstimator::new(-0.1, 0.01, 0.05);
+        let q = vec![100i8; 64];
+        let m = fixed.estimate_linear(&q, 0).to_moments();
+        // mean = -0.1 * 0.05 * 100 * 64 = -32
+        assert!((m.mean + 32.0).abs() < 0.05, "{}", m.mean);
+        assert!(m.var > 0.0);
+    }
+
+    #[test]
+    fn empty_window_sums() {
+        let fixed = FixedEstimator::new(0.1, 0.01, 0.05);
+        let m = fixed.from_window_sums(&[], &[]);
+        assert_eq!(m.mean_q16, 0);
+        assert_eq!(m.sigma_q16, 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! The asymmetric interval `I(α, β)` and its coverage calibration
+//! (paper §4.1, Eq. 13).
+//!
+//! Given predicted moments `(µ_y, σ_y)`, the dynamic range handed to the
+//! quantizer is `I(α,β) = [µ_y − α·σ_y, µ_y + β·σ_y]`. `α, β` are *global*
+//! hyper-parameters tuned once on a calibration set so that a target
+//! fraction of observed pre-activations falls inside the interval
+//! (Eq. 13's empirical coverage), then frozen — calibration-time work only.
+
+use super::aggregate::Moments;
+use crate::quant::QParams;
+
+/// A calibrated `(α, β)` pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IntervalSpec {
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl Default for IntervalSpec {
+    /// 3σ on both sides — a sane pre-calibration default (≈99.7% coverage
+    /// for a true Gaussian).
+    fn default() -> Self {
+        Self { alpha: 3.0, beta: 3.0 }
+    }
+}
+
+impl IntervalSpec {
+    /// The dynamic range `[µ − ασ, µ + βσ]`.
+    pub fn range(&self, m: &Moments) -> (f32, f32) {
+        let s = m.sigma();
+        (m.mean - self.alpha * s, m.mean + self.beta * s)
+    }
+
+    /// Quantization parameters from predicted moments (the green box of
+    /// Fig. 1-c: parameters are known *before* evaluating f).
+    pub fn qparams(&self, m: &Moments, bits: u32) -> QParams {
+        let (lo, hi) = self.range(m);
+        QParams::from_range(lo, hi, bits)
+    }
+}
+
+/// Empirical coverage (Eq. 13): the fraction of observed pre-activations
+/// `y_i` inside `I(α,β)` built from the *predicted* moments.
+pub fn coverage(observed: &[f32], m: &Moments, spec: &IntervalSpec) -> f32 {
+    if observed.is_empty() {
+        return 1.0;
+    }
+    let (lo, hi) = spec.range(m);
+    let inside = observed.iter().filter(|&&y| y >= lo && y <= hi).count();
+    inside as f32 / observed.len() as f32
+}
+
+/// One calibration observation: predicted moments + the actual
+/// pre-activation values of that layer for that input.
+pub struct CalibSample {
+    pub predicted: Moments,
+    pub observed: Vec<f32>,
+}
+
+/// Tune `(α, β)` on calibration data to reach `target` coverage
+/// (e.g. 0.999) with the smallest interval that achieves it.
+///
+/// Strategy (mirrors the paper's "tune α, β to represent a given
+/// percentage"): for each sample, convert observations to standardized
+/// offsets `(y − µ)/σ`; then α is the `target`-quantile of the negative
+/// side and β of the positive side. This directly minimizes the interval
+/// subject to the per-side coverage constraint.
+pub fn calibrate(samples: &[CalibSample], target: f32) -> IntervalSpec {
+    let mut neg: Vec<f32> = Vec::new();
+    let mut pos: Vec<f32> = Vec::new();
+    for s in samples {
+        let sigma = s.predicted.sigma().max(1e-12);
+        for &y in &s.observed {
+            // Cap pathological offsets: a channel whose surrogate predicts
+            // σ≈0 (dead input) must not inflate the layer-wide (α, β).
+            let z = ((y - s.predicted.mean) / sigma).clamp(-1e4, 1e4);
+            if z < 0.0 {
+                neg.push(-z);
+            } else {
+                pos.push(z);
+            }
+        }
+    }
+    let q = |xs: &mut Vec<f32>| -> f32 {
+        if xs.is_empty() {
+            return 3.0;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((xs.len() as f32 * target).ceil() as usize).min(xs.len()) - 1;
+        xs[rank].max(0.1) // never collapse to a zero-width side
+    };
+    IntervalSpec { alpha: q(&mut neg), beta: q(&mut pos) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn range_is_asymmetric() {
+        let spec = IntervalSpec { alpha: 1.0, beta: 2.0 };
+        let m = Moments { mean: 10.0, var: 4.0 };
+        assert_eq!(spec.range(&m), (8.0, 14.0));
+    }
+
+    #[test]
+    fn coverage_counts_inside() {
+        let spec = IntervalSpec { alpha: 1.0, beta: 1.0 };
+        let m = Moments { mean: 0.0, var: 1.0 };
+        let obs = [-2.0f32, -0.5, 0.0, 0.5, 2.0];
+        assert_eq!(coverage(&obs, &m, &spec), 3.0 / 5.0);
+    }
+
+    #[test]
+    fn calibrate_gaussian_recovers_z_quantiles() {
+        // Observations truly N(µ, σ²) with perfectly predicted moments and
+        // per-side target coverage 0.975: each side keeps 97.5% of its own
+        // mass, i.e. total two-sided coverage 0.975 ⇒ z = Φ⁻¹(0.9875) ≈ 2.24.
+        let mut rng = Pcg32::new(404);
+        let m = Moments { mean: 2.0, var: 9.0 };
+        let obs: Vec<f32> = (0..100_000).map(|_| rng.normal_ms(2.0, 3.0)).collect();
+        let spec = calibrate(&[CalibSample { predicted: m, observed: obs.clone() }], 0.975);
+        assert!((spec.alpha - 2.24).abs() < 0.1, "alpha {}", spec.alpha);
+        assert!((spec.beta - 2.24).abs() < 0.1, "beta {}", spec.beta);
+        let cov = coverage(&obs, &m, &spec);
+        assert!((cov - 0.975).abs() < 0.01, "coverage {cov}");
+    }
+
+    #[test]
+    fn calibrated_spec_achieves_target_coverage() {
+        let mut rng = Pcg32::new(405);
+        // Skewed observations (positive side stretched 2x): β needs more room.
+        let m = Moments { mean: 0.0, var: 1.0 };
+        let obs: Vec<f32> = (0..50_000)
+            .map(|_| {
+                let z = rng.normal();
+                if z > 0.0 {
+                    2.0 * z
+                } else {
+                    z
+                }
+            })
+            .collect();
+        let samples = vec![CalibSample { predicted: m, observed: obs.clone() }];
+        let spec = calibrate(&samples, 0.99);
+        assert!(spec.beta > 1.5 * spec.alpha, "skew should push beta: {spec:?}");
+        let cov = coverage(&obs, &m, &spec);
+        assert!(cov >= 0.985, "coverage {cov}");
+    }
+
+    #[test]
+    fn qparams_cover_interval() {
+        let spec = IntervalSpec { alpha: 2.0, beta: 2.0 };
+        let m = Moments { mean: 1.0, var: 4.0 };
+        let qp = spec.qparams(&m, 8);
+        let (lo, hi) = qp.repr_range();
+        let (want_lo, want_hi) = spec.range(&m);
+        assert!(lo <= want_lo + qp.scale && hi >= want_hi - qp.scale);
+    }
+
+    #[test]
+    fn empty_calibration_falls_back() {
+        let spec = calibrate(&[], 0.999);
+        assert_eq!(spec.alpha, 3.0);
+        assert_eq!(spec.beta, 3.0);
+    }
+}

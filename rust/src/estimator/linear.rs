@@ -1,0 +1,167 @@
+//! Moment estimation for linear layers (paper Eq. 8–9).
+//!
+//! `y = W x`, `W_ij ~ N(µ_W, σ²_W)` i.i.d.  ⇒
+//! `E[y_j] = µ_W Σᵢ xᵢ` and `Var[y_j] = σ²_W Σᵢ xᵢ²`, identical for every
+//! output entry `j` — which is what makes the estimate O(d) regardless of
+//! the output width `h` (§4.2).
+
+use super::aggregate::Moments;
+use super::weight_stats::WeightStats;
+
+/// Input sums the estimator consumes: `S1 = Σ xᵢ`, `S2 = Σ xᵢ²`.
+///
+/// Split out so the caller can obtain them from the float path, the int8
+/// path ([`super::fixed`]) or the AOT pallas kernel without duplicating the
+/// moment formulas.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InputSums {
+    pub s1: f64,
+    pub s2: f64,
+}
+
+impl InputSums {
+    /// One pass over the input vector.
+    pub fn of(x: &[f32]) -> Self {
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        for &v in x {
+            let v = v as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        Self { s1, s2 }
+    }
+}
+
+/// Per-tensor estimate (global weight statistics): Eq. 8–9.
+pub fn estimate(x: &[f32], ws: &WeightStats) -> Moments {
+    let sums = InputSums::of(x);
+    estimate_from_sums(&sums, ws.mu, ws.var)
+}
+
+/// Per-channel estimate: Eq. 8–9 with `µ_{W,j}, σ²_{W,j}` per output row.
+/// Returns one [`Moments`] per output channel.
+pub fn estimate_per_channel(x: &[f32], ws: &WeightStats) -> Vec<Moments> {
+    let sums = InputSums::of(x);
+    ws.mu_ch
+        .iter()
+        .zip(ws.var_ch.iter())
+        .map(|(&mu, &var)| estimate_from_sums(&sums, mu, var))
+        .collect()
+}
+
+/// Core formula shared with the conv estimator.
+#[inline]
+pub fn estimate_from_sums(sums: &InputSums, mu_w: f32, var_w: f32) -> Moments {
+    Moments {
+        mean: (mu_w as f64 * sums.s1) as f32,
+        var: (var_w as f64 * sums.s2).max(0.0) as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, Tensor};
+    use crate::util::check::{gen, Checker};
+    use crate::util::{stats, Pcg32};
+
+    #[test]
+    fn sums_basic() {
+        let s = InputSums::of(&[1.0, -2.0, 3.0]);
+        assert_eq!(s.s1, 2.0);
+        assert_eq!(s.s2, 14.0);
+    }
+
+    /// The estimator's defining property: for W actually drawn i.i.d.
+    /// Gaussian, the *empirical* mean/variance of y = Wx matches the
+    /// estimate. This is Eq. 8–9 verified end to end.
+    #[test]
+    fn matches_monte_carlo_gaussian_weights() {
+        Checker::new(0xE59, 12).check("eq8-9 vs monte carlo", |rng| {
+            let d = rng.int_range(32, 128) as usize;
+            let h = 4096; // many output entries => tight empirical moments
+            let mu_w = rng.uniform_range(-0.2, 0.2);
+            let sd_w = rng.uniform_range(0.05, 0.3);
+            let x = gen::vec_normal(rng, d, 0.5, 1.0);
+            // Draw one W and compute y = Wx exactly.
+            let mut y = vec![0.0f32; h];
+            for yj in y.iter_mut() {
+                let mut acc = 0.0f64;
+                for &xi in &x {
+                    acc += rng.normal_ms(mu_w, sd_w) as f64 * xi as f64;
+                }
+                *yj = acc as f32;
+            }
+            let ws = WeightStats {
+                mu: mu_w,
+                var: sd_w * sd_w,
+                mu_ch: vec![],
+                var_ch: vec![],
+                fan_in: d,
+            };
+            let est = estimate(&x, &ws);
+            let emp_mean = stats::mean(&y);
+            let emp_var = stats::variance(&y);
+            // Empirical moments fluctuate ~ sigma/sqrt(h); allow generous slack.
+            let sigma = est.var.sqrt().max(1e-3);
+            if (est.mean - emp_mean).abs() > 4.0 * sigma / (h as f32).sqrt() * 10.0 {
+                return Err(format!("mean: est {} vs emp {emp_mean} (sigma {sigma})", est.mean));
+            }
+            if emp_var > 0.0 && (est.var / emp_var).log2().abs() > 0.5 {
+                return Err(format!("var: est {} vs emp {emp_var}", est.var));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_channel_uses_channel_stats() {
+        let w = Tensor::from_vec(Shape::new(&[2, 3]), vec![1.0, 1.0, 1.0, -2.0, -2.0, -2.0]);
+        let ws = WeightStats::from_linear(&w);
+        let x = [1.0f32, 2.0, 3.0];
+        let per_ch = estimate_per_channel(&x, &ws);
+        // Channel 0: mu=1 var=0 -> mean 6, var 0. Channel 1: mu=-2 -> mean -12.
+        assert_eq!(per_ch[0].mean, 6.0);
+        assert_eq!(per_ch[0].var, 0.0);
+        assert_eq!(per_ch[1].mean, -12.0);
+    }
+
+    #[test]
+    fn estimate_is_output_size_independent() {
+        // Same input, two "layers" with same stats but different h: the
+        // per-tensor estimate must be identical (O(d) claim in §4.2).
+        let x = [0.5f32, -1.5, 2.0, 0.25];
+        let ws_small = WeightStats { mu: 0.1, var: 0.02, mu_ch: vec![], var_ch: vec![], fan_in: 4 };
+        let ws_big = WeightStats { mu: 0.1, var: 0.02, mu_ch: vec![], var_ch: vec![], fan_in: 4 };
+        assert_eq!(estimate(&x, &ws_small), estimate(&x, &ws_big));
+    }
+
+    #[test]
+    fn zero_input_gives_zero_moments() {
+        let ws = WeightStats { mu: 0.3, var: 0.1, mu_ch: vec![], var_ch: vec![], fan_in: 8 };
+        let est = estimate(&[0.0; 8], &ws);
+        assert_eq!(est.mean, 0.0);
+        assert_eq!(est.var, 0.0);
+    }
+
+    #[test]
+    fn variance_nonnegative_property() {
+        Checker::default().cases(100).check("var >= 0", |rng| {
+            let d = rng.int_range(1, 64) as usize;
+            let x = gen::vec_f32(rng, d, -10.0, 10.0);
+            let ws = WeightStats {
+                mu: rng.uniform_range(-1.0, 1.0),
+                var: rng.uniform_range(0.0, 1.0),
+                mu_ch: vec![],
+                var_ch: vec![],
+                fan_in: d,
+            };
+            let m = estimate(&x, &ws);
+            if m.var < 0.0 {
+                return Err(format!("negative variance {}", m.var));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! The paper's core contribution (§4): probabilistic estimation of the
+//! quantization parameters of a layer's pre-activations *before* the layer
+//! runs.
+//!
+//! Under the surrogate assumption that the layer's weights are i.i.d.
+//! Gaussian (`W_ij ~ N(µ_W, σ²_W)` — §4.1, following the NNGP literature),
+//! the output moments are linear functionals of the *input*:
+//!
+//! - linear layer (Eq. 8–9):   `E[y] = µ_W Σᵢ xᵢ`, `Var[y] = σ²_W Σᵢ xᵢ²`
+//! - convolution (Eq. 10–11):  per output pixel `(i,j)` and channel `v`,
+//!   the same sums taken over the receptive field, with per-channel kernel
+//!   statistics `µ_{K,v}, σ²_{K,v}`.
+//!
+//! Per-pixel estimates are aggregated to per-tensor or per-channel
+//! resolution (Eq. 12), and the dynamic range is the interval
+//! `I(α,β) = [µ−ασ, µ+βσ]` whose `α, β` are tuned once on a calibration set
+//! to reach a target pre-activation coverage (Eq. 13).
+//!
+//! The sampling stride `γ` evaluates the conv estimate on a strided subgrid
+//! of output positions, cutting the estimation cost by `γ²` (§4.2).
+//!
+//! Submodules:
+//! - [`weight_stats`] — µ/σ² of trained weights (global + per-channel).
+//! - [`linear`] — Eq. 8–9.
+//! - [`conv`] — Eq. 10–11 with γ-strided sampling.
+//! - [`aggregate`] — Eq. 12 (implemented as the law of total variance; the
+//!   paper's printed formula has a typo — see the module docs).
+//! - [`interval`] — I(α,β) and the Eq. 13 coverage calibration.
+//! - [`fixed`] — the integer-only (Q16.16 + Newton–Raphson sqrt) estimator
+//!   used on the CMSIS path (§5.1).
+
+pub mod aggregate;
+pub mod conv;
+pub mod fixed;
+pub mod interval;
+pub mod linear;
+pub mod weight_stats;
+
+pub use aggregate::Moments;
+pub use interval::IntervalSpec;
+pub use weight_stats::WeightStats;

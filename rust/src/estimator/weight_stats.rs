@@ -1,0 +1,146 @@
+//! Weight statistics backing the surrogate model (§4.1).
+//!
+//! The estimator needs `µ_W, σ²_W` — globally for per-tensor quantization,
+//! and per *output channel* (`µ_{K,v}, σ²_{K,v}` in Eq. 10–11) for
+//! per-channel quantization. Both are computed once at deploy time from the
+//! trained weights, stored alongside the quantized model (2 floats per
+//! channel — the "lightweight surrogate" the abstract refers to).
+
+use crate::tensor::Tensor;
+use crate::util::stats;
+
+/// Per-layer weight statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightStats {
+    /// Global mean over the whole weight tensor.
+    pub mu: f32,
+    /// Global (population) variance.
+    pub var: f32,
+    /// Per-output-channel means `µ_{K,v}`.
+    pub mu_ch: Vec<f32>,
+    /// Per-output-channel variances `σ²_{K,v}`.
+    pub var_ch: Vec<f32>,
+    /// Fan-in per output entry (d for linear, p·k·k' for conv).
+    pub fan_in: usize,
+}
+
+impl WeightStats {
+    /// From a linear weight `W ∈ R^{h×d}` stored row-major `[h, d]`
+    /// (per-channel = per output row).
+    pub fn from_linear(w: &Tensor<f32>) -> Self {
+        assert_eq!(w.shape().rank(), 2, "linear weight must be [h, d]");
+        let h = w.shape().dim(0);
+        let d = w.shape().dim(1);
+        Self::from_rows(w.data(), h, d)
+    }
+
+    /// From a conv kernel `K` in OHWI layout `[l, k, k', p]`
+    /// (per-channel = per output channel `v` — the leading axis).
+    pub fn from_conv(k: &Tensor<f32>) -> Self {
+        assert_eq!(k.shape().rank(), 4, "conv kernel must be OHWI");
+        let l = k.shape().dim(0);
+        let fan = k.shape().dim(1) * k.shape().dim(2) * k.shape().dim(3);
+        Self::from_rows(k.data(), l, fan)
+    }
+
+    /// Shared path: `rows` output channels, each owning `fan_in` weights
+    /// laid out contiguously.
+    fn from_rows(data: &[f32], rows: usize, fan_in: usize) -> Self {
+        assert_eq!(data.len(), rows * fan_in);
+        let mu = stats::mean(data);
+        let var = stats::variance(data);
+        let mut mu_ch = Vec::with_capacity(rows);
+        let mut var_ch = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &data[r * fan_in..(r + 1) * fan_in];
+            mu_ch.push(stats::mean(row));
+            var_ch.push(stats::variance(row));
+        }
+        Self { mu, var, mu_ch, var_ch, fan_in }
+    }
+
+    /// Number of output channels.
+    pub fn channels(&self) -> usize {
+        self.mu_ch.len()
+    }
+
+    /// The shared-σ² simplification discussed after Eq. 11 (assume
+    /// `σ²_{K,v} = σ²_{K,v'}` for all channel pairs): returns a copy whose
+    /// per-channel stats are all collapsed to the global ones. Used by the
+    /// `ablate-sigma` experiment.
+    pub fn with_shared_sigma(&self) -> Self {
+        Self {
+            mu: self.mu,
+            var: self.var,
+            mu_ch: vec![self.mu; self.channels()],
+            var_ch: vec![self.var; self.channels()],
+            fan_in: self.fan_in,
+        }
+    }
+
+    /// Memory footprint of the surrogate in bytes (2 f32 per channel + 2
+    /// global) — reported by the §3 memory-model experiment.
+    pub fn footprint_bytes(&self) -> usize {
+        (2 + 2 * self.channels()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn linear_stats_match_definition() {
+        // W = [[1, 3], [5, 7]] — per-row means 2 and 6, vars 1 and 1.
+        let w = Tensor::from_vec(Shape::new(&[2, 2]), vec![1.0, 3.0, 5.0, 7.0]);
+        let s = WeightStats::from_linear(&w);
+        assert_eq!(s.mu, 4.0);
+        assert_eq!(s.mu_ch, vec![2.0, 6.0]);
+        assert_eq!(s.var_ch, vec![1.0, 1.0]);
+        assert_eq!(s.fan_in, 2);
+        assert_eq!(s.channels(), 2);
+    }
+
+    #[test]
+    fn conv_stats_shapes() {
+        let k = Tensor::from_vec(
+            Shape::ohwi(2, 1, 1, 3),
+            vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0],
+        );
+        let s = WeightStats::from_conv(&k);
+        assert_eq!(s.channels(), 2);
+        assert_eq!(s.fan_in, 3);
+        assert_eq!(s.mu_ch, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn gaussian_weights_recovered() {
+        // Sampled N(0.1, 0.2²) weights: estimated stats must be close.
+        let mut rng = Pcg32::new(31);
+        let data: Vec<f32> = (0..40_000).map(|_| rng.normal_ms(0.1, 0.2)).collect();
+        let w = Tensor::from_vec(Shape::new(&[40, 1000]), data);
+        let s = WeightStats::from_linear(&w);
+        assert!((s.mu - 0.1).abs() < 0.01, "mu {}", s.mu);
+        assert!((s.var - 0.04).abs() < 0.005, "var {}", s.var);
+    }
+
+    #[test]
+    fn shared_sigma_collapses() {
+        let w = Tensor::from_vec(Shape::new(&[2, 2]), vec![1.0, 3.0, 5.0, 7.0]);
+        let s = WeightStats::from_linear(&w).with_shared_sigma();
+        assert_eq!(s.mu_ch, vec![4.0, 4.0]);
+        assert_eq!(s.var_ch, vec![s.var, s.var]);
+    }
+
+    #[test]
+    fn footprint_is_constant_in_spatial_size() {
+        let small = Tensor::from_vec(Shape::ohwi(4, 1, 1, 2), vec![0.0; 8]);
+        let big = Tensor::from_vec(Shape::ohwi(4, 5, 5, 16), vec![0.0; 4 * 25 * 16]);
+        assert_eq!(
+            WeightStats::from_conv(&small).footprint_bytes(),
+            WeightStats::from_conv(&big).footprint_bytes()
+        );
+    }
+}

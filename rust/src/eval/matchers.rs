@@ -1,0 +1,170 @@
+//! Similarity measures between predictions and ground truth.
+
+/// Axis-aligned box IoU; boxes are `(x0, y0, x1, y1)`.
+pub fn box_iou(a: (f32, f32, f32, f32), b: (f32, f32, f32, f32)) -> f32 {
+    let ix0 = a.0.max(b.0);
+    let iy0 = a.1.max(b.1);
+    let ix1 = a.2.min(b.2);
+    let iy1 = a.3.min(b.3);
+    let iw = (ix1 - ix0).max(0.0);
+    let ih = (iy1 - iy0).max(0.0);
+    let inter = iw * ih;
+    let area_a = ((a.2 - a.0) * (a.3 - a.1)).max(0.0);
+    let area_b = ((b.2 - b.0) * (b.3 - b.1)).max(0.0);
+    let union = area_a + area_b - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// IoU between a probability mask and a binary ground-truth mask at a 0.5
+/// threshold (both flat, same length).
+pub fn mask_iou(pred_probs: &[f32], gt: &[u8]) -> f32 {
+    assert_eq!(pred_probs.len(), gt.len());
+    let mut inter = 0usize;
+    let mut union = 0usize;
+    for (&p, &g) in pred_probs.iter().zip(gt) {
+        let pb = p >= 0.5;
+        let gb = g != 0;
+        if pb && gb {
+            inter += 1;
+        }
+        if pb || gb {
+            union += 1;
+        }
+    }
+    if union == 0 {
+        1.0 // both empty: perfect agreement
+    } else {
+        inter as f32 / union as f32
+    }
+}
+
+/// Object keypoint similarity (COCO OKS): mean of per-keypoint Gaussian
+/// scores `exp(-d²/(2 s² κ²))`, with object scale `s` = sqrt(box area) and
+/// a shared per-keypoint constant κ.
+pub fn oks(pred: &[(f32, f32)], gt: &[(f32, f32)], object_scale: f32, kappa: f32) -> f32 {
+    assert_eq!(pred.len(), gt.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let denom = 2.0 * object_scale * object_scale * kappa * kappa;
+    let mut acc = 0.0f32;
+    for (p, g) in pred.iter().zip(gt) {
+        let d2 = (p.0 - g.0) * (p.0 - g.0) + (p.1 - g.1) * (p.1 - g.1);
+        acc += (-d2 / denom.max(1e-9)).exp();
+    }
+    acc / pred.len() as f32
+}
+
+/// Oriented-box IoU by rasterization on a fine subgrid (exact enough at the
+/// 48×48 scene scale; 4× supersampling).
+pub fn obb_iou(a: (f32, f32, f32, f32, f32), b: (f32, f32, f32, f32, f32)) -> f32 {
+    // (cx, cy, half_a, half_b, theta)
+    let inside = |o: &(f32, f32, f32, f32, f32), x: f32, y: f32| -> bool {
+        let dx = x - o.0;
+        let dy = y - o.1;
+        let (s, c) = o.4.sin_cos();
+        let u = dx * c + dy * s;
+        let v = -dx * s + dy * c;
+        u.abs() <= o.2 && v.abs() <= o.3
+    };
+    // Raster window covering both boxes.
+    let r_a = (a.2 * a.2 + a.3 * a.3).sqrt();
+    let r_b = (b.2 * b.2 + b.3 * b.3).sqrt();
+    let x0 = (a.0 - r_a).min(b.0 - r_b);
+    let x1 = (a.0 + r_a).max(b.0 + r_b);
+    let y0 = (a.1 - r_a).min(b.1 - r_b);
+    let y1 = (a.1 + r_a).max(b.1 + r_b);
+    let step = 0.25f32;
+    let mut inter = 0usize;
+    let mut union = 0usize;
+    let mut y = y0;
+    while y <= y1 {
+        let mut x = x0;
+        while x <= x1 {
+            let ia = inside(&a, x, y);
+            let ib = inside(&b, x, y);
+            if ia && ib {
+                inter += 1;
+            }
+            if ia || ib {
+                union += 1;
+            }
+            x += step;
+        }
+        y += step;
+    }
+    if union == 0 {
+        0.0
+    } else {
+        inter as f32 / union as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box_iou_identity_and_disjoint() {
+        let b = (0.0, 0.0, 10.0, 10.0);
+        assert!((box_iou(b, b) - 1.0).abs() < 1e-6);
+        assert_eq!(box_iou(b, (20.0, 20.0, 30.0, 30.0)), 0.0);
+    }
+
+    #[test]
+    fn box_iou_half_overlap() {
+        // Two 10x10 boxes sharing a 5x10 strip: IoU = 50/150.
+        let a = (0.0, 0.0, 10.0, 10.0);
+        let b = (5.0, 0.0, 15.0, 10.0);
+        assert!((box_iou(a, b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mask_iou_cases() {
+        assert_eq!(mask_iou(&[0.9, 0.9, 0.1], &[1, 1, 0]), 1.0);
+        assert_eq!(mask_iou(&[0.9, 0.1], &[0, 1]), 0.0);
+        assert_eq!(mask_iou(&[0.0; 4], &[0; 4]), 1.0);
+        // one of two predicted, one gt overlapping
+        assert!((mask_iou(&[0.9, 0.9], &[1, 0]) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn oks_perfect_and_decay() {
+        let gt = [(10.0, 10.0), (20.0, 20.0)];
+        assert!((oks(&gt, &gt, 10.0, 0.1) - 1.0).abs() < 1e-6);
+        let off = [(11.0, 10.0), (20.0, 21.0)];
+        let v = oks(&off, &gt, 10.0, 0.1);
+        assert!(v < 1.0 && v > 0.3, "{v}");
+        let far = [(30.0, 30.0), (0.0, 0.0)];
+        assert!(oks(&far, &gt, 10.0, 0.1) < 0.01);
+    }
+
+    #[test]
+    fn obb_iou_axis_aligned_matches_box() {
+        let a = (10.0, 10.0, 5.0, 5.0, 0.0);
+        assert!((obb_iou(a, a) - 1.0).abs() < 0.02);
+        let b = (15.0, 10.0, 5.0, 5.0, 0.0);
+        // Same as two 10x10 axis boxes half-overlapping: 1/3.
+        assert!((obb_iou(a, b) - 1.0 / 3.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn obb_iou_rotation_invariant_shape() {
+        // A square rotated by 90° is the same region.
+        let a = (10.0, 10.0, 4.0, 4.0, 0.0);
+        let b = (10.0, 10.0, 4.0, 4.0, std::f32::consts::FRAC_PI_2);
+        assert!((obb_iou(a, b) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn obb_iou_rotation_sensitive_for_rectangles() {
+        let a = (10.0, 10.0, 8.0, 2.0, 0.0);
+        let b = (10.0, 10.0, 8.0, 2.0, std::f32::consts::FRAC_PI_2);
+        let v = obb_iou(a, b);
+        assert!(v < 0.4, "crossed rectangles overlap little: {v}");
+    }
+}

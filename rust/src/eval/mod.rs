@@ -1,0 +1,40 @@
+//! Evaluation metrics: top-1 accuracy and mAP50-95 across the paper's
+//! five task families (§5.2).
+//!
+//! The detection-family mAP follows COCO conventions scaled to the
+//! single-object synthetic setting: predictions are ranked by confidence
+//! across the whole test set, matched greedily to ground truth at IoU
+//! thresholds 0.50:0.05:0.95, and AP is the 101-point interpolated area
+//! under the precision–recall curve, averaged over thresholds and classes.
+//!
+//! - axis-aligned IoU for detection,
+//! - mask IoU (12×12) for segmentation,
+//! - OKS (object keypoint similarity) for pose,
+//! - rasterized oriented-box IoU for OBB.
+
+pub mod map;
+pub mod matchers;
+
+pub use map::{average_precision, map50_95, Detection, GroundTruth};
+pub use matchers::{box_iou, mask_iou, obb_iou, oks};
+
+/// Top-1 classification accuracy.
+pub fn top1(preds: &[usize], labels: &[usize]) -> f32 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hit as f32 / preds.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts() {
+        assert_eq!(top1(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(top1(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Task-aware evaluation: run an executor over a test set and compute the
+//! paper's metric (top-1 for classification, mAP50-95 otherwise).
+
+use crate::coordinator::calibrate::ExecKind;
+use crate::data::corrupt::sample_corruption;
+use crate::data::shapes::DataSample;
+use crate::data::Task;
+use crate::eval::{map50_95, matchers, Detection, GroundTruth};
+use crate::models::heads;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Evaluation protocol.
+#[derive(Clone, Copy, Debug)]
+pub enum EvalProtocol {
+    /// Clean test images (Table 1).
+    InDomain,
+    /// §5.2 OOD: uniformly sampled corruption + severity per image,
+    /// seeded for reproducibility (Table 2).
+    OutOfDomain { seed: u64 },
+}
+
+/// Run `exec` on `samples` and compute the task metric.
+pub fn evaluate(task: Task, exec: &ExecKind, samples: &[DataSample], protocol: EvalProtocol) -> f32 {
+    let mut rng = match protocol {
+        EvalProtocol::InDomain => None,
+        EvalProtocol::OutOfDomain { seed } => Some(Pcg32::new(seed)),
+    };
+    let outputs: Vec<Vec<Tensor<f32>>> = samples
+        .iter()
+        .map(|s| {
+            let mut img = s.image_f32();
+            if let Some(rng) = rng.as_mut() {
+                img = sample_corruption(&img, rng).0;
+            }
+            exec.run(&img)
+        })
+        .collect();
+    score(task, samples, &outputs)
+}
+
+/// Compute the metric from precomputed outputs (lets callers reuse runs).
+pub fn score(task: Task, samples: &[DataSample], outputs: &[Vec<Tensor<f32>>]) -> f32 {
+    match task {
+        Task::Cls => {
+            let preds: Vec<usize> = outputs
+                .iter()
+                .map(|o| heads::decode_cls(o[0].data()).class_id)
+                .collect();
+            let labels: Vec<usize> = samples.iter().map(|s| s.class_id).collect();
+            crate::eval::top1(&preds, &labels)
+        }
+        Task::Det => {
+            let mut dets = Vec::new();
+            let mut gts = Vec::new();
+            let mut dp: Vec<(f32, f32, f32, f32)> = Vec::new();
+            let mut gp: Vec<(f32, f32, f32, f32)> = Vec::new();
+            for (i, (s, o)) in samples.iter().zip(outputs).enumerate() {
+                let p = heads::decode_det(o[0].data(), 48);
+                dets.push(Detection {
+                    image_id: i,
+                    class_id: p.class_id,
+                    confidence: p.confidence,
+                    payload: dp.len(),
+                });
+                dp.push(p.bbox);
+                let (x0, y0, x1, y1) = s.bbox.unwrap();
+                gts.push(GroundTruth { image_id: i, class_id: s.class_id, payload: gp.len() });
+                gp.push((x0 as f32, y0 as f32, x1 as f32 + 1.0, y1 as f32 + 1.0));
+            }
+            map50_95(&dets, &gts, 5, &|p, g| matchers::box_iou(dp[p], gp[g]))
+        }
+        Task::Seg => {
+            let mut dets = Vec::new();
+            let mut gts = Vec::new();
+            let mut dp: Vec<Vec<f32>> = Vec::new();
+            let mut gp: Vec<Vec<u8>> = Vec::new();
+            for (i, (s, o)) in samples.iter().zip(outputs).enumerate() {
+                let p = heads::decode_seg(&o[0], o[1].data());
+                dets.push(Detection {
+                    image_id: i,
+                    class_id: p.class_id,
+                    confidence: p.confidence,
+                    payload: dp.len(),
+                });
+                dp.push(p.mask12);
+                gts.push(GroundTruth { image_id: i, class_id: s.class_id, payload: gp.len() });
+                gp.push(s.mask12.as_ref().unwrap().data().to_vec());
+            }
+            map50_95(&dets, &gts, 5, &|p, g| matchers::mask_iou(&dp[p], &gp[g]))
+        }
+        Task::Pose => {
+            let mut dets = Vec::new();
+            let mut gts = Vec::new();
+            let mut dp: Vec<[(f32, f32); 4]> = Vec::new();
+            let mut gp: Vec<([(f32, f32); 4], f32)> = Vec::new(); // kps + scale
+            for (i, (s, o)) in samples.iter().zip(outputs).enumerate() {
+                let p = heads::decode_pose(o[0].data(), 48);
+                dets.push(Detection {
+                    image_id: i,
+                    class_id: p.class_id,
+                    confidence: p.confidence,
+                    payload: dp.len(),
+                });
+                dp.push(p.keypoints);
+                let kps = s.keypoints.unwrap();
+                let gk: [(f32, f32); 4] =
+                    core::array::from_fn(|k| (kps[k].0 as f32, kps[k].1 as f32));
+                let (x0, y0, x1, y1) = s.bbox.unwrap();
+                let scale = (((x1 - x0 + 1) * (y1 - y0 + 1)) as f32).sqrt();
+                gts.push(GroundTruth { image_id: i, class_id: s.class_id, payload: gp.len() });
+                gp.push((gk, scale));
+            }
+            // OKS plays the role of IoU in COCO keypoint mAP.
+            map50_95(&dets, &gts, 5, &|p, g| {
+                matchers::oks(&dp[p], &gp[g].0, gp[g].1, 0.35)
+            })
+        }
+        Task::Obb => {
+            let mut dets = Vec::new();
+            let mut gts = Vec::new();
+            let mut dp: Vec<(f32, f32, f32, f32, f32)> = Vec::new();
+            let mut gp: Vec<(f32, f32, f32, f32, f32)> = Vec::new();
+            for (i, (s, o)) in samples.iter().zip(outputs).enumerate() {
+                let p = heads::decode_obb(o[0].data(), 48);
+                dets.push(Detection {
+                    image_id: i,
+                    class_id: p.class_id,
+                    confidence: p.confidence,
+                    payload: dp.len(),
+                });
+                dp.push((p.cx, p.cy, p.a, p.b, p.theta));
+                let (cx, cy, a, b, ang) = s.obb.unwrap();
+                gts.push(GroundTruth { image_id: i, class_id: s.class_id, payload: gp.len() });
+                gp.push((
+                    cx as f32,
+                    cy as f32,
+                    a as f32,
+                    b as f32,
+                    (ang as f32) * 15.0f32.to_radians(),
+                ));
+            }
+            map50_95(&dets, &gts, 3, &|p, g| matchers::obb_iou(dp[p], gp[g]))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shapes;
+
+    /// A "perfect oracle" that emits ideal head outputs straight from the
+    /// ground truth: every metric must be ≈ 1.
+    fn oracle_outputs(task: Task, s: &DataSample) -> Vec<Tensor<f32>> {
+        use crate::tensor::Shape;
+        match task {
+            Task::Cls => {
+                let mut logits = vec![-10.0f32; 10];
+                logits[s.class_id] = 10.0;
+                vec![Tensor::from_vec(Shape::new(&[10]), logits)]
+            }
+            Task::Det => {
+                let (x0, y0, x1, y1) = s.bbox.unwrap();
+                let (cx, cy) = ((x0 + x1 + 1) as f32 / 2.0, (y0 + y1 + 1) as f32 / 2.0);
+                let (w, h) = ((x1 - x0 + 1) as f32, (y1 - y0 + 1) as f32);
+                let mut head = vec![cx / 48.0, cy / 48.0, w / 48.0, h / 48.0];
+                let mut logits = vec![-10.0f32; 5];
+                logits[s.class_id] = 10.0;
+                head.extend(logits);
+                vec![Tensor::from_vec(Shape::new(&[9]), head)]
+            }
+            Task::Seg => {
+                let m = s.mask12.as_ref().unwrap();
+                let logits: Vec<f32> =
+                    m.data().iter().map(|&v| if v != 0 { 10.0 } else { -10.0 }).collect();
+                let mut cls = vec![-10.0f32; 5];
+                cls[s.class_id] = 10.0;
+                vec![
+                    Tensor::from_vec(Shape::new(&[12, 12, 1]), logits),
+                    Tensor::from_vec(Shape::new(&[5]), cls),
+                ]
+            }
+            Task::Pose => {
+                let kps = s.keypoints.unwrap();
+                let mut head = Vec::new();
+                for (x, y) in kps {
+                    head.push(x as f32 / 48.0);
+                    head.push(y as f32 / 48.0);
+                }
+                let mut cls = vec![-10.0f32; 5];
+                cls[s.class_id] = 10.0;
+                head.extend(cls);
+                vec![Tensor::from_vec(Shape::new(&[13]), head)]
+            }
+            Task::Obb => {
+                let (cx, cy, a, b, ang) = s.obb.unwrap();
+                let th = (ang as f32) * 15.0f32.to_radians();
+                let mut head = vec![
+                    cx as f32 / 48.0,
+                    cy as f32 / 48.0,
+                    a as f32 / 24.0,
+                    b as f32 / 24.0,
+                    (2.0 * th).cos(),
+                    (2.0 * th).sin(),
+                ];
+                let mut cls = vec![-10.0f32; 3];
+                cls[s.class_id] = 10.0;
+                head.extend(cls);
+                vec![Tensor::from_vec(Shape::new(&[9]), head)]
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_scores_near_one() {
+        for task in Task::all() {
+            let samples = shapes::dataset(task, shapes::Split::Test, 20);
+            let outputs: Vec<_> = samples.iter().map(|s| oracle_outputs(task, s)).collect();
+            let m = score(task, &samples, &outputs);
+            assert!(m > 0.9, "{task:?}: oracle scored {m}");
+        }
+    }
+
+    #[test]
+    fn garbage_scores_near_zero() {
+        use crate::tensor::Shape;
+        let task = Task::Det;
+        let samples = shapes::dataset(task, shapes::Split::Test, 20);
+        let outputs: Vec<_> = samples
+            .iter()
+            .map(|_| vec![Tensor::from_vec(Shape::new(&[9]), vec![0.0; 9])])
+            .collect();
+        let m = score(task, &samples, &outputs);
+        assert!(m < 0.3, "garbage det scored {m}");
+    }
+}

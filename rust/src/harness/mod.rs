@@ -1,0 +1,18 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation section (§6) on the synthetic substrate.
+//!
+//! | Driver | Paper artifact |
+//! |---|---|
+//! | [`experiments::table1`] | Table 1 — in-domain accuracy/mAP |
+//! | [`experiments::table2`] | Table 2 — out-of-domain (corruptions) |
+//! | [`experiments::fig3`]   | Fig. 3 — MCU latency scaling (C_in / C_out / γ) |
+//! | [`experiments::fig4`]   | Fig. 4 — γ sensitivity |
+//! | [`experiments::fig5`]   | Fig. 5 — calibration-set size |
+//! | [`experiments::ablate_sigma`] | ablation A1 — shared-σ² conv estimator |
+//! | [`experiments::ablate_interval`] | ablation A2 — symmetric vs asymmetric I(α,β) |
+//! | [`experiments::memory_table`] | §3 memory model A3 |
+
+pub mod eval_runner;
+pub mod experiments;
+
+pub use eval_runner::{evaluate, EvalProtocol};

@@ -1,0 +1,53 @@
+//! # PDQ — a probabilistic framework for dynamic quantization
+//!
+//! Rust + JAX + Pallas reproduction of *"A probabilistic framework for
+//! dynamic quantization"* (Santini, Paissan, Farella — FBK, 2025).
+//!
+//! The paper's contribution is a quantization-parameter *estimator*: instead
+//! of storing the full pre-activation tensor to measure its dynamic range
+//! (dynamic quantization) or freezing parameters at calibration time (static
+//! quantization), PDQ predicts the output mean/variance from the *input* and
+//! the layer's weight statistics, under the surrogate assumption that weights
+//! are i.i.d. Gaussian. The predicted interval `I(α,β) = [µ−ασ, µ+βσ]` is
+//! used as the dynamic range, so the output can be requantized on the fly
+//! with O(1) memory overhead.
+//!
+//! ## Crate layout (Layer 3 — the runtime; python layers are build-time only)
+//!
+//! - [`util`] — substrates the offline registry could not provide: PRNG,
+//!   JSON, CLI parsing, a mini property-testing framework, table rendering.
+//! - [`tensor`] — a small NHWC tensor library.
+//! - [`quant`] — uniform affine quantization (paper §2.1/Eq. 1–4), CMSIS
+//!   style fixed-point requantization, Newton–Raphson integer sqrt.
+//! - [`estimator`] — the paper's core contribution (§4, Eq. 8–13): moment
+//!   propagation for linear/conv layers, γ-strided sampling, interval
+//!   coverage calibration.
+//! - [`nn`] — graph IR + float executor + fake-quant executor with
+//!   Static / Dynamic / Probabilistic requantization modes (§3, Fig. 1).
+//! - [`cmsis`] — true-int8 kernels mirroring `arm_convolve_s8` /
+//!   `arm_fully_connected_s8` plus the paper's estimate-then-convolve
+//!   wrappers (§5.1).
+//! - [`mcu`] — Cortex-M4 cycle cost model used for the on-device latency
+//!   study (Fig. 3).
+//! - [`data`] — procedural synthetic datasets + the corruption suite
+//!   (Fig. 2) standing in for ImageNet/COCO/DOTA (see DESIGN.md).
+//! - [`models`] — the model zoo: `.pqw` weight loading and graph builders.
+//! - [`eval`] — top-1, mAP50-95, OKS, OBB/segmentation IoU metrics.
+//! - [`runtime`] — PJRT client wrapper loading the AOT HLO artifacts.
+//! - [`coordinator`] — threaded serving stack: router → dynamic batcher →
+//!   worker pool, calibration orchestration, metrics.
+//! - [`harness`] — experiment drivers regenerating every paper table/figure.
+
+pub mod cmsis;
+pub mod coordinator;
+pub mod data;
+pub mod estimator;
+pub mod eval;
+pub mod harness;
+pub mod mcu;
+pub mod models;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

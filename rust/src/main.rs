@@ -1,0 +1,212 @@
+//! `pdq` — the PDQ command-line launcher.
+//!
+//! ```text
+//! pdq info                          # artifact + model inventory
+//! pdq eval    --model M --mode ...  # single evaluation run
+//! pdq experiment <table1|table2|fig3|fig4|fig5|ablate-sigma|ablate-interval|memory|all>
+//! pdq serve   --requests N          # run the serving coordinator demo
+//! pdq mcu-latency                   # Fig. 3 latency model sweep
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
+use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::data::shapes;
+use pdq::harness::eval_runner::{evaluate, EvalProtocol};
+use pdq::harness::experiments::{self, ExpOptions};
+use pdq::models::zoo;
+use pdq::nn::QuantMode;
+use pdq::quant::Granularity;
+use pdq::util::cli::{render_help, Args, Command};
+
+const COMMANDS: &[Command] = &[
+    Command { name: "info", about: "artifact + model inventory", usage: "" },
+    Command { name: "eval", about: "evaluate one model/mode/granularity", usage: "" },
+    Command { name: "experiment", about: "regenerate a paper table/figure", usage: "" },
+    Command { name: "serve", about: "run the serving coordinator demo", usage: "" },
+    Command { name: "mcu-latency", about: "Fig. 3 MCU latency model", usage: "" },
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{}", render_help("pdq", "probabilistic dynamic quantization", COMMANDS));
+        return;
+    };
+    let args = Args::parse(&argv[1..]);
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&artifacts),
+        "eval" => cmd_eval(&artifacts, &args),
+        "experiment" => cmd_experiment(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        "mcu-latency" => {
+            cmd_mcu();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{}", render_help("pdq", "probabilistic dynamic quantization", COMMANDS));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    let manifest = zoo::load_manifest(artifacts)?;
+    println!("artifacts: {}", artifacts.display());
+    for name in zoo::model_names(&manifest) {
+        let m = zoo::load_model(artifacts, &manifest, &name)?;
+        println!(
+            "  {name:<18} task={:<5} params={:>7} outputs={}",
+            m.task.name(),
+            m.graph.param_count(),
+            m.num_outputs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let name = args.opt_or("model", "micro_resnet").to_string();
+    let mode: QuantMode = args.opt_or("mode", "ours").parse().map_err(anyhow::Error::msg)?;
+    let gran: Granularity = args.opt_or("gran", "T").parse().map_err(anyhow::Error::msg)?;
+    let gamma = args.opt_usize("gamma", 1);
+    let n = args.opt_usize("n", 200);
+    let ood = args.flag("ood");
+    let manifest = zoo::load_manifest(artifacts)?;
+    let model = zoo::load_model(artifacts, &manifest, &name)?;
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let samples = shapes::dataset(model.task, shapes::Split::Test, n);
+    let protocol =
+        if ood { EvalProtocol::OutOfDomain { seed: 0xD0D0 } } else { EvalProtocol::InDomain };
+    let ex = build_quant_variant(&model, mode, gran, gamma, &calib);
+    let metric = evaluate(model.task, &ExecKind::Quant(Box::new(ex)), &samples, protocol);
+    let fp = evaluate(model.task, &ExecKind::Float(Arc::clone(&model.graph)), &samples, protocol);
+    println!(
+        "{name} {} {} gamma={gamma} n={n} ood={ood}: metric={metric:.4} (fp32 {fp:.4})",
+        mode.label(),
+        gran.label()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let which = args.positional().first().cloned().unwrap_or_else(|| "all".to_string());
+    let opts = ExpOptions {
+        n_test: args.opt_usize("n", 200),
+        gamma: args.opt_usize("gamma", 1),
+        ood_seed: args.opt_u64("ood-seed", 0xD0D0),
+    };
+    let run_t1 = |o: &ExpOptions| -> anyhow::Result<()> {
+        println!("# Table 1 — In-Domain\n");
+        let (t, _) = experiments::table1(artifacts, o)?;
+        println!("{}", t.to_markdown());
+        Ok(())
+    };
+    let run_t2 = |o: &ExpOptions| -> anyhow::Result<()> {
+        println!("# Table 2 — Out-of-Domain\n");
+        let (t, _) = experiments::table2(artifacts, o)?;
+        println!("{}", t.to_markdown());
+        Ok(())
+    };
+    match which.as_str() {
+        "table1" => run_t1(&opts)?,
+        "table2" => run_t2(&opts)?,
+        "fig3" => cmd_mcu(),
+        "fig4" => {
+            println!("# Fig. 4 — sampling stride sensitivity\n");
+            println!("{}", experiments::fig4(artifacts, &opts)?.to_markdown());
+        }
+        "fig5" => {
+            println!("# Fig. 5 — calibration set size\n");
+            println!("{}", experiments::fig5(artifacts, &opts)?.to_markdown());
+        }
+        "ablate-sigma" => {
+            println!("# Ablation — shared vs per-channel sigma\n");
+            println!("{}", experiments::ablate_sigma(artifacts, &opts)?.to_markdown());
+        }
+        "ablate-interval" => {
+            println!("# Ablation — symmetric vs asymmetric interval\n");
+            println!("{}", experiments::ablate_interval(artifacts, &opts)?.to_markdown());
+        }
+        "memory" => {
+            println!("# §3 working-memory model\n");
+            println!("{}", experiments::memory_table(artifacts)?.to_markdown());
+        }
+        "all" => {
+            run_t1(&opts)?;
+            run_t2(&opts)?;
+            cmd_mcu();
+            println!("# Fig. 4\n\n{}", experiments::fig4(artifacts, &opts)?.to_markdown());
+            println!("# Fig. 5\n\n{}", experiments::fig5(artifacts, &opts)?.to_markdown());
+            println!("# A1\n\n{}", experiments::ablate_sigma(artifacts, &opts)?.to_markdown());
+            println!("# A2\n\n{}", experiments::ablate_interval(artifacts, &opts)?.to_markdown());
+            println!("# A3\n\n{}", experiments::memory_table(artifacts)?.to_markdown());
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_mcu() {
+    let (a, b, c) = experiments::fig3();
+    println!("# Fig. 3a — latency vs input channels (32x32xC_in -> 3ch, 3x3 s1)\n");
+    println!("{}", a.to_markdown());
+    println!("# Fig. 3b — latency vs output channels (32x32x3 -> C_out)\n");
+    println!("{}", b.to_markdown());
+    println!("# Fig. 3c — estimation latency vs sampling stride\n");
+    println!("{}", c.to_markdown());
+}
+
+fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let n_requests = args.opt_usize("requests", 64);
+    let name = args.opt_or("model", "micro_resnet").to_string();
+    let manifest = zoo::load_manifest(artifacts)?;
+    let model = zoo::load_model(artifacts, &manifest, &name)?;
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    // Three quantized variants + FP32.
+    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
+        VariantKey { model: name.clone(), mode: ModeKey::Fp32 },
+        ExecKind::Float(Arc::clone(&model.graph)),
+    )];
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+        variants.push((
+            VariantKey { model: name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
+            ExecKind::Quant(Box::new(ex)),
+        ));
+    }
+    let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
+    let server = Server::start(variants, ServerConfig::default());
+    println!("serving {} variants of {name}; {n_requests} requests", keys.len());
+    let samples = shapes::dataset(model.task, shapes::Split::Test, n_requests);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| server.submit(keys[i % keys.len()].clone(), i as u64, s.image_f32()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!(
+        "done in {:.1} ms — {:.1} req/s, p50 {:.2} ms, p95 {:.2} ms, mean batch {:.2}",
+        wall.as_secs_f64() * 1e3,
+        n_requests as f64 / wall.as_secs_f64(),
+        m.latency_us(50.0) / 1e3,
+        m.latency_us(95.0) / 1e3,
+        m.mean_batch()
+    );
+    println!("metrics: {}", m.to_json().to_string_compact());
+    Ok(())
+}

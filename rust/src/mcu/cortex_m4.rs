@@ -1,0 +1,74 @@
+//! The per-instruction cost table of the modeled core.
+
+/// A Cortex-M4F-like core model (single-issue, 3-stage pipeline).
+///
+/// Costs are in cycles and reflect the DSP-extension instruction timings
+/// relevant to CMSIS-NN int8 kernels:
+/// - `SMLAD` performs two 16×16 MACs per cycle (CMSIS unpacks int8 pairs
+///   to int16 first — amortized in `unpack`),
+/// - byte loads (`LDRB`) and word loads pipeline to ~1 cycle with
+///   zero-wait-state SRAM, flash adds a wait-state factor we fold into
+///   `mem_factor`.
+#[derive(Clone, Copy, Debug)]
+pub struct CortexM4 {
+    pub clock_hz: f64,
+    /// Cycles per dual 16-bit MAC (SMLAD).
+    pub smlad: f64,
+    /// Cycles to unpack 4 int8 → 2×int16 pairs (SXTB16 + ROR etc.), per 4 values.
+    pub unpack4: f64,
+    /// Cycles per byte load/store.
+    pub mem: f64,
+    /// Loop + address bookkeeping overhead per inner-loop iteration.
+    pub loop_overhead: f64,
+    /// Cycles per Newton–Raphson isqrt iteration (UDIV ≈ 2-12, take mid).
+    pub isqrt_iter: f64,
+    /// Fixed per-call overhead (prologue, requant setup).
+    pub call_overhead: f64,
+}
+
+impl Default for CortexM4 {
+    fn default() -> Self {
+        Self {
+            clock_hz: 80e6,
+            smlad: 1.0,
+            unpack4: 2.0,
+            mem: 1.2,
+            loop_overhead: 3.0,
+            isqrt_iter: 8.0,
+            call_overhead: 200.0,
+        }
+    }
+}
+
+impl CortexM4 {
+    /// Convert cycles to milliseconds at the modeled clock.
+    pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz * 1e3
+    }
+
+    /// Cycles for `n` int8 MACs through the SMLAD path (2 MACs/issue after
+    /// unpacking 4 operands per `unpack4`).
+    pub fn mac_cycles(&self, n: f64) -> f64 {
+        n / 2.0 * self.smlad + n / 4.0 * self.unpack4 * 2.0 // unpack both operands
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_clock_is_80mhz() {
+        let m = CortexM4::default();
+        assert_eq!(m.clock_hz, 80e6);
+        assert!((m.cycles_to_ms(80_000.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_cycles_scale_linearly() {
+        let m = CortexM4::default();
+        let c1 = m.mac_cycles(1000.0);
+        let c2 = m.mac_cycles(2000.0);
+        assert!((c2 / c1 - 2.0).abs() < 1e-9);
+    }
+}

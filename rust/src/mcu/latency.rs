@@ -1,0 +1,171 @@
+//! Analytic latency of the CMSIS kernels + PDQ estimation stage (Fig. 3).
+
+use super::cortex_m4::CortexM4;
+use crate::tensor::ConvGeom;
+
+/// Shape of one conv workload in the Fig. 3 sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvShape {
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub geom: ConvGeom,
+}
+
+impl ConvShape {
+    pub fn out_dims(&self) -> (usize, usize) {
+        self.geom.out_dims(self.h, self.w)
+    }
+
+    /// Total MACs of the convolution.
+    pub fn macs(&self) -> f64 {
+        let (oh, ow) = self.out_dims();
+        (oh * ow * self.c_out * self.geom.kh * self.geom.kw * self.c_in) as f64
+    }
+}
+
+/// Cycles for `arm_convolve_s8` on the modeled core.
+pub fn conv_cycles(m: &CortexM4, s: &ConvShape) -> f64 {
+    let (oh, ow) = s.out_dims();
+    let macs = s.macs();
+    let inner_iters = (oh * ow * s.c_out) as f64 * (s.geom.kh * s.geom.kw) as f64;
+    let loads = macs * 2.0; // input byte + weight byte per MAC
+    let stores = (oh * ow * s.c_out) as f64;
+    m.call_overhead
+        + m.mac_cycles(macs)
+        + loads * m.mem * 0.25 // 4-byte word loads amortize byte traffic
+        + inner_iters * m.loop_overhead * 0.25
+        + stores * (m.mem + 4.0) // requantize (~4 cycles) + store per output
+}
+
+/// Cycles for `arm_fully_connected_s8`.
+pub fn fc_cycles(m: &CortexM4, d: usize, h: usize) -> f64 {
+    let macs = (d * h) as f64;
+    m.call_overhead + m.mac_cycles(macs) + macs * 2.0 * m.mem * 0.25 + h as f64 * (m.mem + 4.0)
+}
+
+/// Cycles for the PDQ estimation stage (§4.2): γ-strided window sums +
+/// Q16.16 moment math + Newton–Raphson sqrt.
+///
+/// The inner sums visit `p·k·k'` inputs per sampled output position and the
+/// number of sampled positions is `⌈OH/γ⌉·⌈OW/γ⌉` — i.e. the
+/// `O(HW·p·k·k'/γ²)` of the paper. **Independent of C_out** (Fig. 3-b's
+/// flat red curve): the per-channel scaling of Eq. 10–11 happens once per
+/// layer, not per position.
+pub fn estimation_cycles(m: &CortexM4, s: &ConvShape, gamma: usize) -> f64 {
+    assert!(gamma >= 1);
+    let (oh, ow) = s.out_dims();
+    let n_pos = (oh.div_ceil(gamma) * ow.div_ceil(gamma)) as f64;
+    let per_pos_elems = (s.geom.kh * s.geom.kw * s.c_in) as f64;
+    // Per element: one byte load + subtract-offset + add to S1 + MLA into S2.
+    let per_elem = m.mem + 1.0 + 1.0 + 1.0;
+    // Pooling accumulators (S1, S1², S2) per position + the final fixed-point
+    // moment math and one isqrt (≈16 iterations for 64-bit).
+    let pooling = n_pos * 6.0;
+    let finalize = 40.0 + 16.0 * m.isqrt_iter;
+    m.call_overhead + n_pos * (per_pos_elems * per_elem + m.loop_overhead) + pooling + finalize
+}
+
+/// Dynamic quantization overhead (§3): scan the wide output for min/max +
+/// a second requantization pass over the full output tensor.
+pub fn dynamic_overhead_cycles(m: &CortexM4, s: &ConvShape) -> f64 {
+    let (oh, ow) = s.out_dims();
+    let n = (oh * ow * s.c_out) as f64;
+    // min/max scan (load + 2 compares) + requant pass (load + ~4 + store).
+    n * (4.0 * m.mem + 2.0) + n * (4.0 * m.mem + 4.0 + m.mem)
+}
+
+/// A Fig. 3 data point.
+#[derive(Clone, Debug)]
+pub struct LatencyReport {
+    pub conv_ms: f64,
+    pub estimation_ms: f64,
+    pub total_ms: f64,
+}
+
+/// Full PDQ conv latency (estimate then convolve — Fig. 1-c/Fig. 3 green).
+pub fn pdq_conv_latency(m: &CortexM4, s: &ConvShape, gamma: usize) -> LatencyReport {
+    let conv = conv_cycles(m, s);
+    let est = estimation_cycles(m, s, gamma);
+    LatencyReport {
+        conv_ms: m.cycles_to_ms(conv),
+        estimation_ms: m.cycles_to_ms(est),
+        total_ms: m.cycles_to_ms(conv + est),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(c_in: usize, c_out: usize) -> ConvShape {
+        ConvShape { h: 32, w: 32, c_in, c_out, geom: ConvGeom::same(3, 1) }
+    }
+
+    /// Fig. 3-a: latency linear in the number of input channels.
+    #[test]
+    fn estimation_linear_in_cin() {
+        let m = CortexM4::default();
+        let e4 = estimation_cycles(&m, &shape(4, 3), 1);
+        let e8 = estimation_cycles(&m, &shape(8, 3), 1);
+        let e16 = estimation_cycles(&m, &shape(16, 3), 1);
+        let r1 = (e8 - m.call_overhead) / (e4 - m.call_overhead);
+        let r2 = (e16 - m.call_overhead) / (e8 - m.call_overhead);
+        assert!(r1 > 1.6 && r1 < 2.1, "{r1}");
+        assert!(r2 > 1.7 && r2 < 2.1, "{r2}");
+    }
+
+    /// Fig. 3-b: estimation independent of output channels (conv is not).
+    #[test]
+    fn estimation_flat_in_cout() {
+        let m = CortexM4::default();
+        let e1 = estimation_cycles(&m, &shape(3, 1), 1);
+        let e64 = estimation_cycles(&m, &shape(3, 64), 1);
+        assert_eq!(e1, e64);
+        let c1 = conv_cycles(&m, &shape(3, 1));
+        let c64 = conv_cycles(&m, &shape(3, 64));
+        assert!(c64 > 30.0 * c1, "conv must scale with c_out: {c1} vs {c64}");
+    }
+
+    /// Fig. 3-c: estimation decays quadratically in γ.
+    #[test]
+    fn estimation_quadratic_in_gamma() {
+        let m = CortexM4::default();
+        let base = estimation_cycles(&m, &shape(3, 3), 1) - m.call_overhead;
+        for gamma in [2usize, 4, 8] {
+            let e = estimation_cycles(&m, &shape(3, 3), gamma) - m.call_overhead;
+            let expect = base / (gamma * gamma) as f64;
+            let ratio = e / expect;
+            assert!(ratio > 0.8 && ratio < 1.4, "gamma {gamma}: ratio {ratio}");
+        }
+    }
+
+    /// §6.1 headline: at practical shapes, estimation at γ≥4 is cheaper
+    /// than dynamic quantization's scan+requant overhead.
+    #[test]
+    fn pdq_beats_dynamic_overhead_at_gamma4() {
+        let m = CortexM4::default();
+        let s = shape(16, 16);
+        let est = estimation_cycles(&m, &s, 4);
+        let dynamic = dynamic_overhead_cycles(&m, &s);
+        assert!(est < dynamic, "est {est} vs dynamic {dynamic}");
+    }
+
+    #[test]
+    fn conv_latency_reasonable_magnitude() {
+        // 32x32x16 -> 16 channels, 3x3: ~2.4 MMAC -> a few hundred ms at 80 MHz.
+        let m = CortexM4::default();
+        let r = pdq_conv_latency(&m, &shape(16, 16), 1);
+        assert!(r.total_ms > 1.0 && r.total_ms < 1000.0, "{r:?}");
+        assert!(r.conv_ms > r.estimation_ms, "conv dominates at these shapes");
+    }
+
+    #[test]
+    fn fc_cycles_scale() {
+        let m = CortexM4::default();
+        let a = fc_cycles(&m, 256, 64);
+        let b = fc_cycles(&m, 512, 64);
+        assert!(b > 1.8 * (a - m.call_overhead));
+    }
+}

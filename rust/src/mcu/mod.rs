@@ -1,0 +1,19 @@
+//! Cortex-M4 cycle-cost model — the STM32L476RG latency study substrate
+//! (paper §5.1/§6.1, Fig. 3).
+//!
+//! The paper measures wall-clock latency on an STM32L476RG (Cortex-M4F,
+//! 80 MHz) with a GPIO + oscilloscope. We reproduce the *scaling shape* of
+//! those measurements with an instruction-mix cycle model driven by the
+//! exact op counts of the CMSIS kernels and the PDQ estimation stage:
+//! latency is reported as modeled cycles / 80 MHz.
+//!
+//! The model is deliberately simple (loads, MACs via SMLAD dual-MAC,
+//! stores, loop overhead, Newton–Raphson sqrt iterations) because Fig. 3's
+//! claims are about *asymptotics*: conv latency linear in C_in, estimation
+//! flat in C_out, and a γ⁻² decay of the estimation stage.
+
+pub mod cortex_m4;
+pub mod latency;
+
+pub use cortex_m4::CortexM4;
+pub use latency::{conv_cycles, estimation_cycles, fc_cycles, ConvShape, LatencyReport};

@@ -1,0 +1,173 @@
+//! Head decoding: raw model outputs → task predictions, shared by the
+//! evaluation harness and the serving coordinator.
+
+use crate::nn::ops::softmax;
+use crate::tensor::Tensor;
+
+/// A decoded classification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClsPred {
+    pub class_id: usize,
+    pub confidence: f32,
+}
+
+/// A decoded detection (axis-aligned, pixel coords).
+#[derive(Clone, Debug)]
+pub struct DetPred {
+    pub class_id: usize,
+    pub confidence: f32,
+    /// (x0, y0, x1, y1) in pixels.
+    pub bbox: (f32, f32, f32, f32),
+}
+
+/// A decoded pose estimate.
+#[derive(Clone, Debug)]
+pub struct PosePred {
+    pub class_id: usize,
+    pub confidence: f32,
+    pub keypoints: [(f32, f32); 4],
+}
+
+/// A decoded oriented box.
+#[derive(Clone, Debug)]
+pub struct ObbPred {
+    pub class_id: usize,
+    pub confidence: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub a: f32,
+    pub b: f32,
+    /// Angle in radians (mod π).
+    pub theta: f32,
+}
+
+/// A decoded segmentation: 12×12 mask probabilities + class.
+#[derive(Clone, Debug)]
+pub struct SegPred {
+    pub class_id: usize,
+    pub confidence: f32,
+    pub mask12: Vec<f32>,
+}
+
+fn argmax_conf(logits: &[f32]) -> (usize, f32) {
+    let probs = softmax(logits);
+    let (idx, &p) = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("non-empty logits");
+    (idx, p)
+}
+
+/// cls head: logits → (argmax, softmax confidence).
+pub fn decode_cls(logits: &[f32]) -> ClsPred {
+    let (class_id, confidence) = argmax_conf(logits);
+    ClsPred { class_id, confidence }
+}
+
+/// det head `[cx cy w h | 5 class logits]`, coords normalized by `img_hw`.
+pub fn decode_det(head: &[f32], img_hw: usize) -> DetPred {
+    assert!(head.len() >= 9, "det head arity");
+    let s = img_hw as f32;
+    let (cx, cy, w, h) = (head[0] * s, head[1] * s, head[2] * s, head[3] * s);
+    let (class_id, confidence) = argmax_conf(&head[4..]);
+    DetPred {
+        class_id,
+        confidence,
+        bbox: (cx - w / 2.0, cy - h / 2.0, cx + w / 2.0, cy + h / 2.0),
+    }
+}
+
+/// pose head `[8 keypoint coords | 5 class logits]`.
+pub fn decode_pose(head: &[f32], img_hw: usize) -> PosePred {
+    assert!(head.len() >= 13, "pose head arity");
+    let s = img_hw as f32;
+    let mut keypoints = [(0.0f32, 0.0f32); 4];
+    for (i, kp) in keypoints.iter_mut().enumerate() {
+        *kp = (head[2 * i] * s, head[2 * i + 1] * s);
+    }
+    let (class_id, confidence) = argmax_conf(&head[8..]);
+    PosePred { class_id, confidence, keypoints }
+}
+
+/// obb head `[cx cy a b cos2θ sin2θ | 3 class logits]`.
+pub fn decode_obb(head: &[f32], img_hw: usize) -> ObbPred {
+    assert!(head.len() >= 9, "obb head arity");
+    let s = img_hw as f32;
+    let theta = 0.5 * head[5].atan2(head[4]);
+    let (class_id, confidence) = argmax_conf(&head[6..]);
+    ObbPred {
+        class_id,
+        confidence,
+        cx: head[0] * s,
+        cy: head[1] * s,
+        a: head[2] * 24.0,
+        b: head[3] * 24.0,
+        theta,
+    }
+}
+
+/// seg heads: 12×12×1 mask logits tensor + class logits.
+pub fn decode_seg(mask_logits: &Tensor<f32>, cls_logits: &[f32]) -> SegPred {
+    let (class_id, confidence) = argmax_conf(cls_logits);
+    let mask12 = mask_logits.data().iter().map(|&v| sigmoid(v)).collect();
+    SegPred { class_id, confidence, mask12 }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn cls_argmax() {
+        let p = decode_cls(&[0.0, 3.0, -1.0]);
+        assert_eq!(p.class_id, 1);
+        assert!(p.confidence > 0.8);
+    }
+
+    #[test]
+    fn det_box_geometry() {
+        // cx=0.5, cy=0.5, w=0.25, h=0.5 on a 48px image.
+        let head = [0.5, 0.5, 0.25, 0.5, 5.0, 0.0, 0.0, 0.0, 0.0];
+        let p = decode_det(&head, 48);
+        assert_eq!(p.class_id, 0);
+        let (x0, y0, x1, y1) = p.bbox;
+        assert!((x0 - 18.0).abs() < 1e-4 && (x1 - 30.0).abs() < 1e-4);
+        assert!((y0 - 12.0).abs() < 1e-4 && (y1 - 36.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pose_keypoints_scaled() {
+        let mut head = vec![0.0f32; 13];
+        head[0] = 0.5;
+        head[1] = 0.25;
+        head[10] = 2.0; // class 2
+        let p = decode_pose(&head, 48);
+        assert_eq!(p.keypoints[0], (24.0, 12.0));
+        assert_eq!(p.class_id, 2);
+    }
+
+    #[test]
+    fn obb_angle_recovered() {
+        // θ = 30°: cos2θ = 0.5, sin2θ = √3/2.
+        let head = [0.5, 0.5, 0.5, 0.25, 0.5, 0.8660254, 3.0, 0.0, 0.0];
+        let p = decode_obb(&head, 48);
+        assert!((p.theta.to_degrees() - 30.0).abs() < 0.1, "{}", p.theta.to_degrees());
+        assert_eq!(p.class_id, 0);
+    }
+
+    #[test]
+    fn seg_sigmoid_mask() {
+        let mask = Tensor::from_vec(Shape::new(&[2, 2, 1]), vec![10.0, -10.0, 0.0, 2.0]);
+        let p = decode_seg(&mask, &[0.0, 1.0]);
+        assert!(p.mask12[0] > 0.99 && p.mask12[1] < 0.01);
+        assert!((p.mask12[2] - 0.5).abs() < 1e-5);
+        assert_eq!(p.class_id, 1);
+    }
+}

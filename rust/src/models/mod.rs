@@ -1,0 +1,16 @@
+//! The model zoo: weight loading and graph construction.
+//!
+//! Models are *defined once*, in `python/compile/model.py`, as spec graphs;
+//! the AOT build serializes the spec into `artifacts/manifest.json` and the
+//! trained weights into `artifacts/<name>.pqw`. [`zoo::load_model`] rebuilds
+//! the Rust [`crate::nn::Graph`] from those artifacts — no dual maintenance
+//! of architectures.
+//!
+//! [`heads`] decodes raw head outputs into task predictions (boxes,
+//! keypoints, masks, oriented boxes) for the evaluation metrics.
+
+pub mod heads;
+pub mod pqw;
+pub mod zoo;
+
+pub use zoo::{load_manifest, load_model, Model};

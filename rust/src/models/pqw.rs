@@ -1,0 +1,131 @@
+//! `.pqw` weight-archive reader (writer: `python/compile/pqw.py`).
+//!
+//! Layout (little-endian): magic `PQW1`, u32 tensor count, then per tensor
+//! `u32 name_len, name, u8 dtype (0=f32), u8 rank, u32 dims[rank], f32 data`.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Shape, Tensor};
+
+/// Read every tensor in a `.pqw` file.
+pub fn read_pqw(path: &Path) -> Result<BTreeMap<String, Tensor<f32>>> {
+    let mut file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    parse_pqw(&buf).with_context(|| format!("parsing {path:?}"))
+}
+
+/// Parse an in-memory `.pqw` archive.
+pub fn parse_pqw(buf: &[u8]) -> Result<BTreeMap<String, Tensor<f32>>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated pqw at byte {} (wanted {n})", *pos);
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = take(&mut pos, 4)?;
+    if magic != b"PQW1" {
+        bail!("bad magic {magic:?}");
+    }
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(&mut pos, nlen)?)
+            .context("tensor name not utf-8")?
+            .to_string();
+        let meta = take(&mut pos, 2)?;
+        let (dtype, rank) = (meta[0], meta[1] as usize);
+        if dtype != 0 {
+            bail!("unsupported dtype {dtype} for {name}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+        }
+        let shape = Shape::new(&dims);
+        let n = shape.numel();
+        let raw = take(&mut pos, 4 * n)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, Tensor::from_vec(shape, data));
+    }
+    if pos != buf.len() {
+        bail!("trailing {} bytes after {count} tensors", buf.len() - pos);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-assemble a tiny archive and read it back.
+    fn assemble(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"PQW1");
+        buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.push(0); // f32
+            buf.push(dims.len() as u8);
+            for &d in *dims {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in *data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn roundtrip() {
+        let buf = assemble(&[
+            ("w0", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("b0", &[2], &[0.5, -0.5]),
+        ]);
+        let t = parse_pqw(&buf).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t["w0"].shape().dims(), &[2, 2]);
+        assert_eq!(t["w0"].data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t["b0"].data(), &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let buf = assemble(&[("s", &[], &[3.25])]);
+        let t = parse_pqw(&buf).unwrap();
+        assert_eq!(t["s"].numel(), 1);
+        assert_eq!(t["s"].data(), &[3.25]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_pqw(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut buf = assemble(&[("w", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        buf.truncate(buf.len() - 3);
+        assert!(parse_pqw(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut buf = assemble(&[("w", &[1], &[1.0])]);
+        buf.push(0xFF);
+        assert!(parse_pqw(&buf).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Build [`crate::nn::Graph`]s from the AOT manifest + `.pqw` weights.
+//!
+//! The spec format is produced by `python/compile/model.py::SpecBuilder`;
+//! node ids are list indices and weights are keyed `w{idx}` / `b{idx}`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::pqw;
+use crate::data::Task;
+use crate::nn::Graph;
+use crate::tensor::{ConvGeom, Shape, Tensor};
+use crate::util::json::Json;
+
+/// A loaded, ready-to-run model.
+#[derive(Clone)]
+pub struct Model {
+    pub name: String,
+    pub task: Task,
+    pub graph: Arc<Graph>,
+    /// Output node count (1 for most; 2 for seg: mask + class).
+    pub num_outputs: usize,
+    /// FP32 golden fixture from the python side: (input seed, flat output).
+    pub golden: Option<(u64, Vec<f32>)>,
+    /// Path of the FP32 HLO artifact (for the PJRT runtime).
+    pub hlo_path: Option<PathBuf>,
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn load_manifest(artifacts_dir: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(artifacts_dir.join("manifest.json"))
+        .with_context(|| format!("reading manifest in {artifacts_dir:?} (run `make artifacts`)"))?;
+    Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))
+}
+
+/// All model names in the manifest.
+pub fn model_names(manifest: &Json) -> Vec<String> {
+    match manifest.get("models") {
+        Some(Json::Obj(m)) => m.keys().cloned().collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Load one model by name.
+pub fn load_model(artifacts_dir: &Path, manifest: &Json, name: &str) -> Result<Model> {
+    let info = manifest
+        .get("models")
+        .and_then(|m| m.get(name))
+        .ok_or_else(|| anyhow!("model {name:?} not in manifest"))?;
+    let spec = info.get("spec").ok_or_else(|| anyhow!("missing spec"))?;
+    let weights_file = info
+        .get("weights")
+        .and_then(|w| w.as_str())
+        .ok_or_else(|| anyhow!("missing weights"))?;
+    let weights = pqw::read_pqw(&artifacts_dir.join(weights_file))?;
+    let graph = build_graph(spec, &weights)?;
+    let task: Task = spec
+        .get("task")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| anyhow!("missing task"))?
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let num_outputs = spec.get("outputs").and_then(|o| o.as_arr()).map(|a| a.len()).unwrap_or(1);
+    let golden = info.get("golden").and_then(|g| {
+        let seed = g.get("seed")?.as_f64()? as u64;
+        let out = g
+            .get("output")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+            .collect();
+        Some((seed, out))
+    });
+    let hlo_path = info.get("hlo").and_then(|h| h.as_str()).map(|h| artifacts_dir.join(h));
+    Ok(Model {
+        name: name.to_string(),
+        task,
+        graph: Arc::new(graph),
+        num_outputs,
+        golden,
+        hlo_path,
+    })
+}
+
+/// Construct the graph IR from a spec + weight map.
+pub fn build_graph(spec: &Json, weights: &BTreeMap<String, Tensor<f32>>) -> Result<Graph> {
+    let input = spec.get("input").and_then(|i| i.as_arr()).ok_or_else(|| anyhow!("bad input"))?;
+    let dims: Vec<usize> = input.iter().filter_map(|v| v.as_usize()).collect();
+    let input_shape = Shape::new(&dims);
+    let nodes = spec.get("nodes").and_then(|n| n.as_arr()).ok_or_else(|| anyhow!("bad nodes"))?;
+    let mut g = Graph::new(input_shape);
+    let mut ids = Vec::with_capacity(nodes.len());
+    for (idx, node) in nodes.iter().enumerate() {
+        let op = node.get("op").and_then(|o| o.as_str()).ok_or_else(|| anyhow!("node {idx}: no op"))?;
+        let arg = |i: usize| -> Result<crate::nn::NodeId> {
+            let ins = node.get("in").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("node {idx}: no in"))?;
+            let j = ins.get(i).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("node {idx}: in[{i}]"))?;
+            Ok(ids[j])
+        };
+        let w = || -> Result<Tensor<f32>> {
+            weights
+                .get(&format!("w{idx}"))
+                .cloned()
+                .ok_or_else(|| anyhow!("missing weight w{idx}"))
+        };
+        let b = || -> Result<Vec<f32>> {
+            Ok(weights
+                .get(&format!("b{idx}"))
+                .ok_or_else(|| anyhow!("missing bias b{idx}"))?
+                .data()
+                .to_vec())
+        };
+        let geom = || -> Result<ConvGeom> {
+            let k = node.get("k").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("node {idx}: k"))?;
+            let stride = node.get("stride").and_then(|v| v.as_usize()).unwrap_or(1);
+            let pad = node.get("pad").and_then(|v| v.as_usize()).unwrap_or(k / 2);
+            Ok(ConvGeom::new(k, k, stride, pad))
+        };
+        let id = match op {
+            "input" => g.input(),
+            "conv" => {
+                let x = arg(0)?;
+                g.conv(x, w()?, b()?, geom()?)
+            }
+            "dwconv" => {
+                let x = arg(0)?;
+                g.dwconv(x, w()?, b()?, geom()?)
+            }
+            "linear" => {
+                let x = arg(0)?;
+                g.linear(x, w()?, b()?)
+            }
+            "relu" => {
+                let x = arg(0)?;
+                g.relu(x)
+            }
+            "relu6" => {
+                let x = arg(0)?;
+                g.relu6(x)
+            }
+            "maxpool" => {
+                let x = arg(0)?;
+                let k = node.get("k").and_then(|v| v.as_usize()).unwrap();
+                let s = node.get("stride").and_then(|v| v.as_usize()).unwrap();
+                g.maxpool(x, k, s)
+            }
+            "gap" => {
+                let x = arg(0)?;
+                g.global_avg_pool(x)
+            }
+            "flatten" => {
+                let x = arg(0)?;
+                g.flatten(x)
+            }
+            "add" => {
+                let a = arg(0)?;
+                let bb = arg(1)?;
+                g.add(a, bb)
+            }
+            other => bail!("unknown op {other:?}"),
+        };
+        ids.push(id);
+    }
+    if let Some(outs) = spec.get("outputs").and_then(|o| o.as_arr()) {
+        for o in outs {
+            let j = o.as_usize().ok_or_else(|| anyhow!("bad output id"))?;
+            g.mark_output(ids[j]);
+        }
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> Json {
+        Json::parse(
+            r#"{
+              "name": "t", "task": "cls", "input": [4, 4, 1],
+              "nodes": [
+                {"op": "input", "in": []},
+                {"op": "conv", "in": [0], "cout": 2, "k": 1, "stride": 1, "pad": 0, "cin": 1},
+                {"op": "relu", "in": [1]},
+                {"op": "gap", "in": [2]},
+                {"op": "linear", "in": [3], "h": 3, "d": 2}
+              ],
+              "outputs": [4]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn tiny_weights() -> BTreeMap<String, Tensor<f32>> {
+        let mut m = BTreeMap::new();
+        m.insert("w1".into(), Tensor::from_vec(Shape::ohwi(2, 1, 1, 1), vec![1.0, -1.0]));
+        m.insert("b1".into(), Tensor::from_vec(Shape::new(&[2]), vec![0.0, 0.5]));
+        m.insert("w4".into(), Tensor::from_vec(Shape::new(&[3, 2]), vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]));
+        m.insert("b4".into(), Tensor::from_vec(Shape::new(&[3]), vec![0.0, 0.0, 0.0]));
+        m
+    }
+
+    #[test]
+    fn builds_and_runs() {
+        let g = build_graph(&tiny_spec(), &tiny_weights()).unwrap();
+        assert_eq!(g.nodes().len(), 5);
+        let x = Tensor::full(Shape::hwc(4, 4, 1), 1.0f32);
+        let out = crate::nn::float_exec::run(&g, &x);
+        // conv: ch0 = 1, ch1 = -1 + 0.5 = -0.5 -> relu [1, 0] -> gap [1, 0]
+        // linear: [1, 0, 1]
+        assert_eq!(out[0].data(), &[1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn missing_weight_reported() {
+        let mut w = tiny_weights();
+        w.remove("w1");
+        let err = build_graph(&tiny_spec(), &w).unwrap_err();
+        assert!(err.to_string().contains("w1"));
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let spec = Json::parse(
+            r#"{"input": [2,2,1], "nodes": [{"op":"input","in":[]},{"op":"warp","in":[0]}]}"#,
+        )
+        .unwrap();
+        assert!(build_graph(&spec, &BTreeMap::new()).is_err());
+    }
+
+    // Loading the real artifacts is covered by the integration test in
+    // rust/tests/ (requires `make artifacts`).
+}

@@ -1,0 +1,126 @@
+//! FP32 graph executor — the tables' "FP32" column and the numeric oracle
+//! for the quantized executors.
+
+use super::graph::{Graph, NodeId, Op};
+use super::ops;
+use crate::tensor::Tensor;
+
+/// Run the graph in full precision; returns the values of the output nodes.
+pub fn run(graph: &Graph, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    let values = run_trace(graph, input);
+    graph.output_ids().iter().map(|id| values[id.0].clone()).collect()
+}
+
+/// Run and keep *every* node's value (used by calibration and tests).
+pub fn run_trace(graph: &Graph, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    assert_eq!(
+        input.shape(),
+        graph.input_shape(),
+        "input shape mismatch: got {}, graph wants {}",
+        input.shape(),
+        graph.input_shape()
+    );
+    let mut values: Vec<Tensor<f32>> = Vec::with_capacity(graph.nodes().len());
+    for node in graph.nodes() {
+        let v = eval_op(&node.op, &node.inputs, &values, input);
+        values.push(v);
+    }
+    values
+}
+
+/// Evaluate one op given already-computed predecessor values.
+pub fn eval_op(
+    op: &Op,
+    inputs: &[NodeId],
+    values: &[Tensor<f32>],
+    graph_input: &Tensor<f32>,
+) -> Tensor<f32> {
+    let arg = |i: usize| &values[inputs[i].0];
+    match op {
+        Op::Input => graph_input.clone(),
+        Op::Conv { w, b, geom } => ops::conv2d(arg(0), w, b, geom),
+        Op::DwConv { w, b, geom } => ops::dwconv2d(arg(0), w, b, geom),
+        Op::Linear { w, b } => {
+            let x = arg(0);
+            let y = ops::linear(x.data(), w, b);
+            let n = y.len();
+            Tensor::from_vec(crate::tensor::Shape::new(&[n]), y)
+        }
+        Op::Relu => ops::relu(arg(0)),
+        Op::Relu6 => ops::relu6(arg(0)),
+        Op::MaxPool { k, stride } => ops::maxpool(arg(0), *k, *stride),
+        Op::GlobalAvgPool => ops::global_avg_pool(arg(0)),
+        Op::Flatten => {
+            let x = arg(0);
+            let n = x.numel();
+            x.clone().reshape(crate::tensor::Shape::new(&[n]))
+        }
+        Op::Add => ops::add(arg(0), arg(1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ConvGeom, Shape};
+
+    fn build_residual_graph() -> Graph {
+        // input -> conv1x1(id) -> relu -> add(input) : tests DAG + add.
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let w = Tensor::from_vec(Shape::ohwi(1, 1, 1, 1), vec![1.0]);
+        let c = g.conv(x, w, vec![0.0], ConvGeom::new(1, 1, 1, 0));
+        let r = g.relu(c);
+        let a = g.add(r, x);
+        g.mark_output(a);
+        g
+    }
+
+    #[test]
+    fn residual_add_doubles_positive_input() {
+        let g = build_residual_graph();
+        let input = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        let out = run(&g, &input);
+        assert_eq!(out[0].data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn negative_input_relu_path() {
+        let g = build_residual_graph();
+        let input = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![-1.0, 2.0, -3.0, 4.0]);
+        let out = run(&g, &input);
+        // relu kills negatives on the conv path, add restores the raw input.
+        assert_eq!(out[0].data(), &[-1.0, 4.0, -3.0, 8.0]);
+    }
+
+    #[test]
+    fn trace_has_every_node() {
+        let g = build_residual_graph();
+        let input = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![0.0; 4]);
+        let trace = run_trace(&g, &input);
+        assert_eq!(trace.len(), g.nodes().len());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn input_shape_checked() {
+        let g = build_residual_graph();
+        let bad = Tensor::image(3, 3, 1);
+        run(&g, &bad);
+    }
+
+    #[test]
+    fn classifier_pipeline_shapes() {
+        let mut g = Graph::new(Shape::hwc(8, 8, 3));
+        let x = g.input();
+        let w1 = Tensor::full(Shape::ohwi(4, 3, 3, 3), 0.01f32);
+        let c1 = g.conv(x, w1, vec![0.0; 4], ConvGeom::same(3, 2));
+        let r1 = g.relu(c1);
+        let p = g.global_avg_pool(r1);
+        let wl = Tensor::full(Shape::new(&[10, 4]), 0.1f32);
+        let l = g.linear(p, wl, vec![0.0; 10]);
+        g.mark_output(l);
+        let out = run(&g, &Tensor::full(Shape::hwc(8, 8, 3), 1.0f32));
+        assert_eq!(out[0].shape().dims(), &[10]);
+    }
+}

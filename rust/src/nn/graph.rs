@@ -1,0 +1,252 @@
+//! The model IR: a DAG of tensor ops, built once per model by
+//! [`crate::models::zoo`] and consumed by every executor.
+//!
+//! Node ids are topological by construction (an op may only reference
+//! earlier nodes), which keeps every executor a single forward scan.
+
+use crate::tensor::{ConvGeom, Shape, Tensor};
+
+/// Reference to a node's output value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// Operators. Weight layouts: conv `OHWI [C_out, kh, kw, C_in]`, depthwise
+/// `[C, kh, kw]`, linear `[h, d]` row-major.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Graph input (HWC image or flat vector).
+    Input,
+    /// 2-D convolution with bias.
+    Conv { w: Tensor<f32>, b: Vec<f32>, geom: ConvGeom },
+    /// Depthwise convolution with bias (one k×k filter per channel).
+    DwConv { w: Tensor<f32>, b: Vec<f32>, geom: ConvGeom },
+    /// Fully connected layer with bias.
+    Linear { w: Tensor<f32>, b: Vec<f32> },
+    /// max(0, x)
+    Relu,
+    /// min(max(0, x), 6) — MobileNet's clipped activation.
+    Relu6,
+    /// Max pooling with square window.
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool: HWC → C vector.
+    GlobalAvgPool,
+    /// HWC → flat vector.
+    Flatten,
+    /// Elementwise residual add of two nodes.
+    Add,
+}
+
+impl Op {
+    /// Does this op produce quantized pre-activations (conv/linear family)?
+    /// These are exactly the layers Fig. 1 requantizes.
+    pub fn is_quantizable(&self) -> bool {
+        matches!(self, Op::Conv { .. } | Op::DwConv { .. } | Op::Linear { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv { .. } => "conv",
+            Op::DwConv { .. } => "dwconv",
+            Op::Linear { .. } => "linear",
+            Op::Relu => "relu",
+            Op::Relu6 => "relu6",
+            Op::MaxPool { .. } => "maxpool",
+            Op::GlobalAvgPool => "gap",
+            Op::Flatten => "flatten",
+            Op::Add => "add",
+        }
+    }
+}
+
+/// One node: an op applied to earlier nodes' outputs.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// The model graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    input: Option<NodeId>,
+    outputs: Vec<NodeId>,
+    /// Expected input shape (checked at execution time).
+    input_shape: Shape,
+}
+
+impl Graph {
+    pub fn new(input_shape: Shape) -> Self {
+        Self { nodes: Vec::new(), input: None, outputs: Vec::new(), input_shape }
+    }
+
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        for &NodeId(i) in &inputs {
+            assert!(i < self.nodes.len(), "input {i} references a future node");
+        }
+        self.nodes.push(Node { op, inputs });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Declare the (single) graph input.
+    pub fn input(&mut self) -> NodeId {
+        assert!(self.input.is_none(), "graph already has an input");
+        let id = self.push(Op::Input, vec![]);
+        self.input = Some(id);
+        id
+    }
+
+    pub fn conv(&mut self, x: NodeId, w: Tensor<f32>, b: Vec<f32>, geom: ConvGeom) -> NodeId {
+        assert_eq!(w.shape().rank(), 4, "conv weight must be OHWI");
+        assert_eq!(w.shape().dim(0), b.len(), "bias arity");
+        self.push(Op::Conv { w, b, geom }, vec![x])
+    }
+
+    pub fn dwconv(&mut self, x: NodeId, w: Tensor<f32>, b: Vec<f32>, geom: ConvGeom) -> NodeId {
+        assert_eq!(w.shape().rank(), 3, "dwconv weight must be [C, kh, kw]");
+        assert_eq!(w.shape().dim(0), b.len(), "bias arity");
+        self.push(Op::DwConv { w, b, geom }, vec![x])
+    }
+
+    pub fn linear(&mut self, x: NodeId, w: Tensor<f32>, b: Vec<f32>) -> NodeId {
+        assert_eq!(w.shape().rank(), 2, "linear weight must be [h, d]");
+        assert_eq!(w.shape().dim(0), b.len(), "bias arity");
+        self.push(Op::Linear { w, b }, vec![x])
+    }
+
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::Relu, vec![x])
+    }
+
+    pub fn relu6(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::Relu6, vec![x])
+    }
+
+    pub fn maxpool(&mut self, x: NodeId, k: usize, stride: usize) -> NodeId {
+        self.push(Op::MaxPool { k, stride }, vec![x])
+    }
+
+    pub fn global_avg_pool(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::GlobalAvgPool, vec![x])
+    }
+
+    pub fn flatten(&mut self, x: NodeId) -> NodeId {
+        self.push(Op::Flatten, vec![x])
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::Add, vec![a, b])
+    }
+
+    /// Mark a node as a model output (multiple allowed — detection heads).
+    pub fn mark_output(&mut self, id: NodeId) {
+        self.outputs.push(id);
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Mutable node access — used by the quantization emulator to patch a
+    /// private clone's weights with their fake-quantized values.
+    pub(crate) fn nodes_mut(&mut self) -> &mut [Node] {
+        &mut self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn input_id(&self) -> NodeId {
+        self.input.expect("graph has no input")
+    }
+
+    pub fn input_shape(&self) -> &Shape {
+        &self.input_shape
+    }
+
+    /// Output ids, defaulting to the last node when none were marked.
+    pub fn output_ids(&self) -> Vec<NodeId> {
+        if self.outputs.is_empty() {
+            vec![NodeId(self.nodes.len() - 1)]
+        } else {
+            self.outputs.clone()
+        }
+    }
+
+    /// Ids of all quantizable (conv/dwconv/linear) nodes, in order.
+    pub fn quantizable_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.op.is_quantizable())
+            .map(|(i, _)| NodeId(i))
+            .collect()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv { w, b, .. } | Op::DwConv { w, b, .. } | Op::Linear { w, b } => {
+                    w.numel() + b.len()
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new(Shape::hwc(8, 8, 3));
+        let x = g.input();
+        let w = Tensor::zeros(Shape::ohwi(4, 3, 3, 3));
+        let c = g.conv(x, w, vec![0.0; 4], ConvGeom::same(3, 1));
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        let wl = Tensor::zeros(Shape::new(&[10, 4]));
+        let l = g.linear(p, wl, vec![0.0; 10]);
+        g.mark_output(l);
+        g
+    }
+
+    #[test]
+    fn builder_topology() {
+        let g = tiny_graph();
+        assert_eq!(g.nodes().len(), 5);
+        assert_eq!(g.quantizable_ids().len(), 2);
+        assert_eq!(g.output_ids(), vec![NodeId(4)]);
+        assert_eq!(g.param_count(), 4 * 27 + 4 + 40 + 10);
+    }
+
+    #[test]
+    fn default_output_is_last() {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let _r = g.relu(x);
+        assert_eq!(g.output_ids(), vec![NodeId(1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bias arity")]
+    fn bias_arity_checked() {
+        let mut g = Graph::new(Shape::hwc(4, 4, 1));
+        let x = g.input();
+        let w = Tensor::zeros(Shape::ohwi(4, 3, 3, 1));
+        g.conv(x, w, vec![0.0; 3], ConvGeom::same(3, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "already has an input")]
+    fn single_input_enforced() {
+        let mut g = Graph::new(Shape::hwc(4, 4, 1));
+        g.input();
+        g.input();
+    }
+}

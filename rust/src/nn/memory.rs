@@ -1,0 +1,146 @@
+//! The §3 working-memory model.
+//!
+//! For a layer with `h` output entries, casting bit-width `b′` and storage
+//! bit-width `b`:
+//!
+//! | strategy      | overhead (bits) | why                                      |
+//! |---------------|-----------------|------------------------------------------|
+//! | static        | `3·b′`          | one accumulator + (s, z) registers       |
+//! | dynamic       | `b′·h`          | full wide output buffered before min/max |
+//! | ours          | `3·b′ + 2·b′`   | static + the (mean, var) accumulators    |
+//!
+//! (§4.2: "the memory overhead of the parameter estimation is constant and
+//! equal to 2b′ bit".)
+
+use super::graph::{Graph, Op};
+use super::quant_exec::QuantMode;
+
+/// Casting bit-width `b′` used by the arithmetic (int32 accumulators).
+pub const B_PRIME: usize = 32;
+
+/// Working-memory overhead in bits of one layer with `h` output entries.
+pub fn overhead_bits(mode: QuantMode, h: usize) -> usize {
+    match mode {
+        QuantMode::Static => 3 * B_PRIME,
+        QuantMode::Dynamic => B_PRIME * h,
+        QuantMode::Probabilistic => 3 * B_PRIME + 2 * B_PRIME,
+    }
+}
+
+/// Per-layer output entry counts for a graph executed on its nominal input
+/// shape — drives the whole-model memory report (experiment A3).
+pub fn layer_output_sizes(graph: &Graph) -> Vec<(usize, &'static str, usize)> {
+    // Symbolically propagate shapes.
+    let (h0, w0, c0) = {
+        let d = graph.input_shape().dims();
+        match d.len() {
+            3 => (d[0], d[1], d[2]),
+            1 => (1, 1, d[0]),
+            _ => panic!("unsupported input rank"),
+        }
+    };
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    let mut out = Vec::new();
+    for (idx, node) in graph.nodes().iter().enumerate() {
+        let sh = match &node.op {
+            Op::Input => (h0, w0, c0),
+            Op::Conv { w, geom, .. } => {
+                let (h, wd, _) = shapes[node.inputs[0].0];
+                let (oh, ow) = geom.out_dims(h, wd);
+                (oh, ow, w.shape().dim(0))
+            }
+            Op::DwConv { w, geom, .. } => {
+                let (h, wd, _) = shapes[node.inputs[0].0];
+                let (oh, ow) = geom.out_dims(h, wd);
+                (oh, ow, w.shape().dim(0))
+            }
+            Op::Linear { w, .. } => (1, 1, w.shape().dim(0)),
+            Op::MaxPool { k, stride } => {
+                let (h, wd, c) = shapes[node.inputs[0].0];
+                ((h - k) / stride + 1, (wd - k) / stride + 1, c)
+            }
+            Op::GlobalAvgPool => {
+                let (_, _, c) = shapes[node.inputs[0].0];
+                (1, 1, c)
+            }
+            Op::Flatten => {
+                let (h, wd, c) = shapes[node.inputs[0].0];
+                (1, 1, h * wd * c)
+            }
+            Op::Relu | Op::Relu6 | Op::Add => shapes[node.inputs[0].0],
+        };
+        if node.op.is_quantizable() {
+            out.push((idx, node.op.name(), sh.0 * sh.1 * sh.2));
+        }
+        shapes.push(sh);
+    }
+    out
+}
+
+/// Whole-model peak quantization overhead in bits: the maximum per-layer
+/// overhead (layers run sequentially, buffers are reused).
+pub fn peak_overhead_bits(graph: &Graph, mode: QuantMode) -> usize {
+    layer_output_sizes(graph)
+        .iter()
+        .map(|&(_, _, h)| overhead_bits(mode, h))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ConvGeom, Shape, Tensor};
+
+    fn graph() -> Graph {
+        let mut g = Graph::new(Shape::hwc(16, 16, 3));
+        let x = g.input();
+        let w = Tensor::zeros(Shape::ohwi(8, 3, 3, 3));
+        let c = g.conv(x, w, vec![0.0; 8], ConvGeom::same(3, 1));
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        let wl = Tensor::zeros(Shape::new(&[10, 8]));
+        let l = g.linear(p, wl, vec![0.0; 10]);
+        g.mark_output(l);
+        g
+    }
+
+    #[test]
+    fn static_overhead_constant() {
+        assert_eq!(overhead_bits(QuantMode::Static, 10), overhead_bits(QuantMode::Static, 1_000_000));
+        assert_eq!(overhead_bits(QuantMode::Static, 1), 96);
+    }
+
+    #[test]
+    fn dynamic_overhead_linear_in_h() {
+        assert_eq!(overhead_bits(QuantMode::Dynamic, 100), 3200);
+        assert_eq!(overhead_bits(QuantMode::Dynamic, 200), 6400);
+    }
+
+    #[test]
+    fn ours_overhead_constant_and_small() {
+        let ours = overhead_bits(QuantMode::Probabilistic, 1_000_000);
+        assert_eq!(ours, 160); // 3b' + 2b'
+        assert!(ours < overhead_bits(QuantMode::Dynamic, 16));
+    }
+
+    #[test]
+    fn layer_sizes_propagate() {
+        let g = graph();
+        let sizes = layer_output_sizes(&g);
+        assert_eq!(sizes.len(), 2);
+        assert_eq!(sizes[0].2, 16 * 16 * 8); // conv output
+        assert_eq!(sizes[1].2, 10); // linear output
+    }
+
+    #[test]
+    fn peak_dominated_by_conv() {
+        let g = graph();
+        let dyn_peak = peak_overhead_bits(&g, QuantMode::Dynamic);
+        assert_eq!(dyn_peak, 32 * 16 * 16 * 8);
+        let ours_peak = peak_overhead_bits(&g, QuantMode::Probabilistic);
+        assert_eq!(ours_peak, 160);
+        // The paper's headline: ours is orders of magnitude below dynamic.
+        assert!(dyn_peak / ours_peak > 100);
+    }
+}

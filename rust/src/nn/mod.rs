@@ -1,0 +1,26 @@
+//! Neural-network graph IR and executors.
+//!
+//! The accuracy experiments run on a *fake-quantization emulation* (float
+//! carriers, exactly quantized values — the paper's "custom-made
+//! quantization API", §5.2), while latency experiments run on the true-int8
+//! [`crate::cmsis`] engine. Both consume the same [`graph::Graph`] IR built
+//! by [`crate::models`].
+//!
+//! - [`graph`] — the IR: conv / depthwise conv / linear / activations /
+//!   pooling / residual add / flatten over HWC tensors.
+//! - [`ops`] — float reference implementations of every op.
+//! - [`float_exec`] — FP32 executor (the tables' FP32 column).
+//! - [`quant_exec`] — the quantization emulator with the three
+//!   pre-activation requantization strategies of Fig. 1: `Static`,
+//!   `Dynamic` and `Probabilistic` (ours), each at per-tensor or
+//!   per-channel granularity.
+//! - [`memory`] — the §3 working-memory model (3b′ vs b′·h vs 3b′+2b′).
+
+pub mod float_exec;
+pub mod graph;
+pub mod memory;
+pub mod ops;
+pub mod quant_exec;
+
+pub use graph::{Graph, NodeId, Op};
+pub use quant_exec::{QuantExecutor, QuantMode};

@@ -1,0 +1,284 @@
+//! Float reference implementations of every graph op.
+//!
+//! These are the FP32 ground truth for the accuracy tables and the oracle
+//! the int8 [`crate::cmsis`] kernels are tested against. Activations are
+//! HWC; conv weights OHWI; depthwise weights `[C, kh, kw]`.
+
+use crate::tensor::{ConvGeom, Shape, Tensor};
+
+/// 2-D convolution with zero padding and bias.
+pub fn conv2d(x: &Tensor<f32>, w: &Tensor<f32>, bias: &[f32], geom: &ConvGeom) -> Tensor<f32> {
+    let (h, wdt, cin) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (cout, kh, kw, wcin) = (
+        w.shape().dim(0),
+        w.shape().dim(1),
+        w.shape().dim(2),
+        w.shape().dim(3),
+    );
+    assert_eq!(cin, wcin, "conv input channels {cin} != weight {wcin}");
+    assert_eq!(bias.len(), cout);
+    assert_eq!(kh, geom.kh);
+    assert_eq!(kw, geom.kw);
+    let (oh, ow) = geom.out_dims(h, wdt);
+    let mut out = Tensor::zeros(Shape::hwc(oh, ow, cout));
+    let xd = x.data();
+    let wd = w.data();
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            for v in 0..cout {
+                let mut acc = bias[v] as f64;
+                let wbase = v * kh * kw * cin;
+                for dy in 0..kh {
+                    let yy = y_origin + dy as isize;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = x_origin + dx as isize;
+                        if xx < 0 || xx >= wdt as isize {
+                            continue;
+                        }
+                        let xrow = (yy as usize * wdt + xx as usize) * cin;
+                        let wrow = wbase + (dy * kw + dx) * cin;
+                        for c in 0..cin {
+                            acc += xd[xrow + c] as f64 * wd[wrow + c] as f64;
+                        }
+                    }
+                }
+                out.set(&[oy, ox, v], acc as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise convolution: channel `c` of the output sees only channel `c`
+/// of the input.
+pub fn dwconv2d(x: &Tensor<f32>, w: &Tensor<f32>, bias: &[f32], geom: &ConvGeom) -> Tensor<f32> {
+    let (h, wdt, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (wc, kh, kw) = (w.shape().dim(0), w.shape().dim(1), w.shape().dim(2));
+    assert_eq!(c, wc, "dwconv channels {c} != weight {wc}");
+    assert_eq!(bias.len(), c);
+    let (oh, ow) = geom.out_dims(h, wdt);
+    let mut out = Tensor::zeros(Shape::hwc(oh, ow, c));
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            for ch in 0..c {
+                let mut acc = bias[ch] as f64;
+                for dy in 0..kh {
+                    let yy = y_origin + dy as isize;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = x_origin + dx as isize;
+                        if xx < 0 || xx >= wdt as isize {
+                            continue;
+                        }
+                        acc += x.px(yy as usize, xx as usize, ch) as f64
+                            * w.at(&[ch, dy, dx]) as f64;
+                    }
+                }
+                out.set(&[oy, ox, ch], acc as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Fully connected: `y = W x + b`, `W [h, d]`.
+pub fn linear(x: &[f32], w: &Tensor<f32>, bias: &[f32]) -> Vec<f32> {
+    let (h, d) = (w.shape().dim(0), w.shape().dim(1));
+    assert_eq!(x.len(), d, "linear input {} != weight d {d}", x.len());
+    assert_eq!(bias.len(), h);
+    let wd = w.data();
+    let mut y = Vec::with_capacity(h);
+    for j in 0..h {
+        let row = &wd[j * d..(j + 1) * d];
+        let mut acc = bias[j] as f64;
+        for i in 0..d {
+            acc += row[i] as f64 * x[i] as f64;
+        }
+        y.push(acc as f32);
+    }
+    y
+}
+
+/// max(0, x) elementwise.
+pub fn relu(x: &Tensor<f32>) -> Tensor<f32> {
+    x.map(|v| v.max(0.0))
+}
+
+/// min(max(0, x), 6) elementwise.
+pub fn relu6(x: &Tensor<f32>) -> Tensor<f32> {
+    x.map(|v| v.clamp(0.0, 6.0))
+}
+
+/// Max pooling with a square window (no padding).
+pub fn maxpool(x: &Tensor<f32>, k: usize, stride: usize) -> Tensor<f32> {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(Shape::hwc(oh, ow, c));
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        m = m.max(x.px(oy * stride + dy, ox * stride + dx, ch));
+                    }
+                }
+                out.set(&[oy, ox, ch], m);
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool HWC → `[C]`.
+pub fn global_avg_pool(x: &Tensor<f32>) -> Tensor<f32> {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let mut out = Tensor::zeros(Shape::new(&[c]));
+    let n = (h * w) as f64;
+    for ch in 0..c {
+        let mut acc = 0.0f64;
+        for y in 0..h {
+            for xx in 0..w {
+                acc += x.px(y, xx, ch) as f64;
+            }
+        }
+        out.set(&[ch], (acc / n) as f32);
+    }
+    out
+}
+
+/// Elementwise add (shapes must match).
+pub fn add(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.shape(), b.shape(), "add shape mismatch");
+    let data: Vec<f32> = a.data().iter().zip(b.data().iter()).map(|(&x, &y)| x + y).collect();
+    Tensor::from_vec(a.shape().clone(), data)
+}
+
+/// Softmax over a flat vector (numerically stabilized).
+pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = x.iter().map(|&v| (v - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel = identity per channel mapping.
+        let mut x = Tensor::image(3, 3, 2);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        // w[o=2,1,1,i=2] = identity
+        let w = Tensor::from_vec(Shape::ohwi(2, 1, 1, 2), vec![1.0, 0.0, 0.0, 1.0]);
+        let y = conv2d(&x, &w, &[0.0, 0.0], &ConvGeom::new(1, 1, 1, 0));
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 2x2 input, 2x2 kernel of ones, valid: single output = sum + bias.
+        let x = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(Shape::ohwi(1, 2, 2, 1), vec![1.0; 4]);
+        let y = conv2d(&x, &w, &[0.5], &ConvGeom::new(2, 2, 1, 0));
+        assert_eq!(y.shape().dims(), &[1, 1, 1]);
+        assert_eq!(y.data()[0], 10.5);
+    }
+
+    #[test]
+    fn conv_zero_padding() {
+        // All-ones 3x3 input, 3x3 ones kernel, same padding: corners see 4.
+        let x = Tensor::full(Shape::hwc(3, 3, 1), 1.0f32);
+        let w = Tensor::from_vec(Shape::ohwi(1, 3, 3, 1), vec![1.0; 9]);
+        let y = conv2d(&x, &w, &[0.0], &ConvGeom::same(3, 1));
+        assert_eq!(y.px(0, 0, 0), 4.0);
+        assert_eq!(y.px(1, 1, 0), 9.0);
+        assert_eq!(y.px(0, 1, 0), 6.0);
+    }
+
+    #[test]
+    fn conv_stride() {
+        let x = Tensor::full(Shape::hwc(4, 4, 1), 1.0f32);
+        let w = Tensor::from_vec(Shape::ohwi(1, 1, 1, 1), vec![2.0]);
+        let y = conv2d(&x, &w, &[0.0], &ConvGeom::new(1, 1, 2, 0));
+        assert_eq!(y.shape().dims(), &[2, 2, 1]);
+        assert!(y.data().iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn dwconv_channels_isolated() {
+        let mut x = Tensor::image(3, 3, 2);
+        for y in 0..3 {
+            for xx in 0..3 {
+                x.set_px(y, xx, 0, 1.0);
+                x.set_px(y, xx, 1, 10.0);
+            }
+        }
+        let w = Tensor::from_vec(Shape::new(&[2, 1, 1]), vec![3.0, 5.0]);
+        let y = dwconv2d(&x, &w, &[0.0, 0.0], &ConvGeom::new(1, 1, 1, 0));
+        assert_eq!(y.px(1, 1, 0), 3.0);
+        assert_eq!(y.px(1, 1, 1), 50.0);
+    }
+
+    #[test]
+    fn linear_known() {
+        let w = Tensor::from_vec(Shape::new(&[2, 3]), vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5]);
+        let y = linear(&[2.0, 4.0, 6.0], &w, &[1.0, -1.0]);
+        assert_eq!(y, vec![2.0 - 6.0 + 1.0, 6.0 - 1.0]);
+    }
+
+    #[test]
+    fn activations() {
+        let x = Tensor::from_vec(Shape::new(&[4]), vec![-1.0, 0.5, 3.0, 9.0]);
+        assert_eq!(relu(&x).data(), &[0.0, 0.5, 3.0, 9.0]);
+        assert_eq!(relu6(&x).data(), &[0.0, 0.5, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_vec(
+            Shape::hwc(2, 2, 1),
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(Shape::hwc(1, 2, 2), vec![1.0, 10.0, 3.0, 30.0]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.data(), &[2.0, 20.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut rng = Pcg32::new(8);
+        let x: Vec<f32> = (0..10).map(|_| rng.normal_ms(0.0, 5.0)).collect();
+        let p = softmax(&x);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = Tensor::from_vec(Shape::new(&[3]), vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(Shape::new(&[3]), vec![10.0, 20.0, 30.0]);
+        assert_eq!(add(&a, &b).data(), &[11.0, 22.0, 33.0]);
+    }
+}

@@ -1,0 +1,636 @@
+//! Quantization emulation executor — Fig. 1's three strategies side by side.
+//!
+//! Float-carrier emulation (values are exactly representable grid points,
+//! math runs in f32 — the paper's §5.2 "custom-made quantization API" with a
+//! fixed bit-width of 8): weights are fake-quantized once at construction;
+//! every conv/dwconv/linear *pre-activation* is requantized per the mode:
+//!
+//! - [`QuantMode::Static`] (Fig. 1-a): output `(s, z)` frozen at calibration
+//!   from observed min/max over the calibration set.
+//! - [`QuantMode::Dynamic`] (Fig. 1-b): output range observed per input —
+//!   needs the whole output tensor in working memory first (§3).
+//! - [`QuantMode::Probabilistic`] (Fig. 1-c, **ours**): output range
+//!   *predicted* from the input via the weight-statistics surrogate
+//!   ([`crate::estimator`]) before the layer runs; interval `I(α,β)`
+//!   calibrated once (Eq. 13), sampling stride γ controls the estimation
+//!   cost (§4.2).
+//!
+//! Per-channel granularity follows the channels-last convention: the last
+//! axis of any activation is the channel axis (for a linear layer's output
+//! vector this degenerates to per-element parameters; all three modes are
+//! treated identically, per §5.2, so the comparison stays fair).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::float_exec::eval_op;
+use super::graph::{Graph, Op};
+use crate::estimator::interval::{calibrate, CalibSample, IntervalSpec};
+use crate::estimator::{aggregate, conv as conv_est, linear as lin_est, Moments, WeightStats};
+use crate::quant::affine::{fake_quantize, fake_quantize_slice};
+use crate::quant::granularity::QParamSet;
+use crate::quant::{Granularity, QParams};
+use crate::tensor::Tensor;
+
+/// Requantization strategy for pre-activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    Static,
+    Dynamic,
+    Probabilistic,
+}
+
+impl QuantMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantMode::Static => "static",
+            QuantMode::Dynamic => "dynamic",
+            QuantMode::Probabilistic => "ours",
+        }
+    }
+}
+
+impl std::str::FromStr for QuantMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Ok(QuantMode::Static),
+            "dynamic" => Ok(QuantMode::Dynamic),
+            "ours" | "probabilistic" | "pdq" => Ok(QuantMode::Probabilistic),
+            other => Err(format!("unknown quant mode {other:?}")),
+        }
+    }
+}
+
+/// Emulation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSettings {
+    pub mode: QuantMode,
+    pub granularity: Granularity,
+    pub bits: u32,
+    /// Sampling stride γ (conv estimation only; §4.2).
+    pub gamma: usize,
+    /// Target coverage for the Eq. 13 interval calibration.
+    pub coverage: f32,
+}
+
+impl Default for QuantSettings {
+    fn default() -> Self {
+        Self {
+            mode: QuantMode::Probabilistic,
+            granularity: Granularity::PerTensor,
+            bits: 8,
+            gamma: 1,
+            coverage: 0.9995,
+        }
+    }
+}
+
+/// Per-quantizable-layer prepared state.
+#[derive(Clone, Debug)]
+struct LayerState {
+    /// Surrogate statistics of the (quantized) weights.
+    wstats: WeightStats,
+    /// Observed output ranges from calibration (len 1 or C). `None` until
+    /// calibrated — static mode panics without it.
+    static_ranges: Option<Vec<(f32, f32)>>,
+    /// Calibrated interval for the probabilistic mode.
+    interval: IntervalSpec,
+}
+
+/// The emulator. Construction fake-quantizes the weights (producing a
+/// private quantized copy of the graph) and computes the surrogate stats;
+/// [`QuantExecutor::calibrate`] then fits the static ranges and `(α, β)`.
+pub struct QuantExecutor {
+    graph: Arc<Graph>,
+    settings: QuantSettings,
+    /// Graph with fake-quantized weights (same topology).
+    qgraph: Graph,
+    layers: BTreeMap<usize, LayerState>,
+    /// Known input range (images are normalized to [0, 1]).
+    input_range: (f32, f32),
+}
+
+impl QuantExecutor {
+    pub fn new(graph: Arc<Graph>, settings: QuantSettings) -> Self {
+        let (qgraph, layers) = prepare(&graph, &settings);
+        Self { graph, settings, qgraph, layers, input_range: (0.0, 1.0) }
+    }
+
+    pub fn settings(&self) -> &QuantSettings {
+        &self.settings
+    }
+
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    /// Update γ without recalibrating (Fig. 4 sweeps this).
+    pub fn set_gamma(&mut self, gamma: usize) {
+        assert!(gamma >= 1);
+        self.settings.gamma = gamma;
+    }
+
+    /// Replace all surrogate stats with the shared-σ² ablation variant.
+    pub fn ablate_shared_sigma(&mut self) {
+        for st in self.layers.values_mut() {
+            st.wstats = st.wstats.with_shared_sigma();
+        }
+    }
+
+    /// Force a symmetric interval (α = β = max(α, β)) — ablation A2.
+    pub fn ablate_symmetric_interval(&mut self) {
+        for st in self.layers.values_mut() {
+            let m = st.interval.alpha.max(st.interval.beta);
+            st.interval = IntervalSpec { alpha: m, beta: m };
+        }
+    }
+
+    /// Calibrate on a set of images: collects per-layer observed ranges
+    /// (static mode) and `(α, β)` interval fits (probabilistic mode).
+    /// Shared by both modes, as in the paper (§5.2: "the calibration set
+    /// for our approach and static quantization is shared").
+    pub fn calibrate(&mut self, images: &[Tensor<f32>]) {
+        #[derive(Default)]
+        struct Accum {
+            ranges: Option<Vec<(f32, f32)>>,
+            samples: Vec<CalibSample>,
+        }
+        let mut acc: BTreeMap<usize, Accum> = BTreeMap::new();
+        for img in images {
+            // Forward pass with dynamically quantized carriers so deeper
+            // layers see realistic quantized inputs.
+            let mut values: Vec<Tensor<f32>> = Vec::with_capacity(self.qgraph.nodes().len());
+            for (idx, node) in self.qgraph.nodes().iter().enumerate() {
+                let mut v = eval_op(&node.op, &node.inputs, &values, img);
+                if matches!(node.op, Op::Input) {
+                    self.quantize_input(&mut v);
+                }
+                if node.op.is_quantizable() {
+                    let st = &self.layers[&idx];
+                    let x = &values[node.inputs[0].0];
+                    let a = acc.entry(idx).or_default();
+                    let channels = last_dim(&v);
+                    // --- static: min/max union at the target granularity.
+                    update_ranges(&mut a.ranges, v.data(), channels, self.settings.granularity);
+                    // --- ours: predicted moments + observed values.
+                    match self.settings.granularity {
+                        Granularity::PerTensor => {
+                            let m = self.predict_per_tensor(&node.op, x, &st.wstats);
+                            a.samples.push(CalibSample {
+                                predicted: m,
+                                observed: v.data().to_vec(),
+                            });
+                        }
+                        Granularity::PerChannel => {
+                            let ms = self.predict_per_channel(&node.op, x, &st.wstats);
+                            for (c, m) in ms.iter().enumerate() {
+                                let observed: Vec<f32> =
+                                    v.data().iter().skip(c).step_by(channels).copied().collect();
+                                a.samples.push(CalibSample { predicted: *m, observed });
+                            }
+                        }
+                    }
+                    // Continue forward with a dynamically quantized carrier.
+                    let set = QParamSet::observe(v.data(), channels, self.settings.granularity, self.settings.bits);
+                    fake_quantize_set(&mut v, &set);
+                }
+                values.push(v);
+            }
+        }
+        let coverage = self.settings.coverage;
+        for (idx, a) in acc {
+            let st = self.layers.get_mut(&idx).expect("layer state");
+            st.static_ranges = a.ranges;
+            st.interval = calibrate(&a.samples, coverage);
+        }
+    }
+
+    /// Has `calibrate` been run?
+    pub fn is_calibrated(&self) -> bool {
+        self.layers.values().all(|s| s.static_ranges.is_some())
+    }
+
+    /// Run the quantized forward pass; returns the output node values.
+    pub fn run(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let values = self.run_trace(input);
+        self.qgraph.output_ids().iter().map(|id| values[id.0].clone()).collect()
+    }
+
+    /// Run keeping every node value.
+    pub fn run_trace(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let mut values: Vec<Tensor<f32>> = Vec::with_capacity(self.qgraph.nodes().len());
+        for (idx, node) in self.qgraph.nodes().iter().enumerate() {
+            let mut v = eval_op(&node.op, &node.inputs, &values, input);
+            if matches!(node.op, Op::Input) {
+                self.quantize_input(&mut v);
+            }
+            if node.op.is_quantizable() {
+                let x = &values[node.inputs[0].0];
+                let set = self.output_qparams(idx, &node.op, x, &v);
+                fake_quantize_set(&mut v, &set);
+            }
+            values.push(v);
+        }
+        values
+    }
+
+    /// The per-input working-memory overhead (bits) the §3 model assigns to
+    /// this executor's mode for a layer with `h` output entries.
+    pub fn memory_overhead_bits(&self, h: usize) -> usize {
+        super::memory::overhead_bits(self.settings.mode, h)
+    }
+
+    // ---- internals -------------------------------------------------------
+
+    fn quantize_input(&self, v: &mut Tensor<f32>) {
+        let (lo, hi) = self.input_range;
+        let qp = QParams::from_range(lo, hi, self.settings.bits);
+        fake_quantize_slice(v.data_mut(), &qp);
+    }
+
+    /// Output quantization parameters per mode (the heart of Fig. 1).
+    fn output_qparams(&self, idx: usize, op: &Op, x: &Tensor<f32>, y: &Tensor<f32>) -> QParamSet {
+        let st = &self.layers[&idx];
+        let bits = self.settings.bits;
+        let channels = last_dim(y);
+        match self.settings.mode {
+            QuantMode::Dynamic => {
+                QParamSet::observe(y.data(), channels, self.settings.granularity, bits)
+            }
+            QuantMode::Static => {
+                let ranges = st
+                    .static_ranges
+                    .as_ref()
+                    .expect("static mode requires calibrate() first");
+                ranges_to_set(ranges, self.settings.granularity, bits)
+            }
+            QuantMode::Probabilistic => match self.settings.granularity {
+                Granularity::PerTensor => {
+                    let m = self.predict_per_tensor(op, x, &st.wstats);
+                    QParamSet::PerTensor(st.interval.qparams(&m, bits))
+                }
+                Granularity::PerChannel => {
+                    let ms = self.predict_per_channel(op, x, &st.wstats);
+                    QParamSet::PerChannel(
+                        ms.iter().map(|m| st.interval.qparams(m, bits)).collect(),
+                    )
+                }
+            },
+        }
+    }
+
+    /// Per-tensor moment prediction for any quantizable op (Eq. 8–12),
+    /// including the bias term the paper folds away: `y = Wx + b` ⇒ the
+    /// pooled mean gains `mean(b)` and the pooled variance gains the
+    /// spread of per-channel means, `var(b)` (law of total variance).
+    /// Without this, channels whose input died at a ReLU predict σ≈0 while
+    /// observing `y = b_v ≠ 0`, which blows up the Eq. 13 calibration.
+    fn predict_per_tensor(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Moments {
+        let (mut m, bias): (Moments, &[f32]) = match op {
+            Op::Linear { b, .. } => (lin_est::estimate(x.data(), ws), b),
+            Op::Conv { geom, b, .. } => (conv_est::estimate(x, ws, geom, self.settings.gamma), b),
+            Op::DwConv { geom, b, .. } => {
+                let per_ch = conv_est::dw_estimate_per_channel(x, ws, geom, self.settings.gamma);
+                (aggregate::pool(&per_ch), b)
+            }
+            _ => unreachable!("not a quantizable op"),
+        };
+        m.mean += crate::util::stats::mean(bias);
+        m.var += crate::util::stats::variance(bias);
+        m
+    }
+
+    /// Per-channel moment prediction (bias shifts each channel's mean).
+    fn predict_per_channel(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Vec<Moments> {
+        let (mut ms, bias): (Vec<Moments>, &[f32]) = match op {
+            Op::Linear { b, .. } => (lin_est::estimate_per_channel(x.data(), ws), b),
+            Op::Conv { geom, b, .. } => {
+                (conv_est::estimate_per_channel(x, ws, geom, self.settings.gamma), b)
+            }
+            Op::DwConv { geom, b, .. } => {
+                (conv_est::dw_estimate_per_channel(x, ws, geom, self.settings.gamma), b)
+            }
+            _ => unreachable!("not a quantizable op"),
+        };
+        for (m, &b) in ms.iter_mut().zip(bias.iter()) {
+            m.mean += b;
+        }
+        ms
+    }
+}
+
+/// Channel count = size of the last axis.
+fn last_dim(t: &Tensor<f32>) -> usize {
+    let dims = t.shape().dims();
+    *dims.last().expect("tensor has no dims")
+}
+
+/// Fake-quantize a tensor with a parameter set (per-tensor or per-channel
+/// along the last axis).
+fn fake_quantize_set(t: &mut Tensor<f32>, set: &QParamSet) {
+    match set {
+        QParamSet::PerTensor(qp) => fake_quantize_slice(t.data_mut(), qp),
+        QParamSet::PerChannel(params) => {
+            let c = params.len();
+            for (i, v) in t.data_mut().iter_mut().enumerate() {
+                *v = fake_quantize(*v, &params[i % c]);
+            }
+        }
+    }
+}
+
+/// Static ranges → parameter set.
+fn ranges_to_set(ranges: &[(f32, f32)], gran: Granularity, bits: u32) -> QParamSet {
+    match gran {
+        Granularity::PerTensor => {
+            QParamSet::PerTensor(QParams::from_range(ranges[0].0, ranges[0].1, bits))
+        }
+        Granularity::PerChannel => QParamSet::PerChannel(
+            ranges.iter().map(|&(lo, hi)| QParams::from_range(lo, hi, bits)).collect(),
+        ),
+    }
+}
+
+/// Union-update observed min/max ranges at a granularity.
+fn update_ranges(
+    ranges: &mut Option<Vec<(f32, f32)>>,
+    data: &[f32],
+    channels: usize,
+    gran: Granularity,
+) {
+    let n = match gran {
+        Granularity::PerTensor => 1,
+        Granularity::PerChannel => channels,
+    };
+    let r = ranges.get_or_insert_with(|| vec![(f32::INFINITY, f32::NEG_INFINITY); n]);
+    match gran {
+        Granularity::PerTensor => {
+            let (lo, hi) = crate::util::stats::min_max(data);
+            r[0].0 = r[0].0.min(lo);
+            r[0].1 = r[0].1.max(hi);
+        }
+        Granularity::PerChannel => {
+            for (i, &v) in data.iter().enumerate() {
+                let c = i % channels;
+                r[c].0 = r[c].0.min(v);
+                r[c].1 = r[c].1.max(v);
+            }
+        }
+    }
+}
+
+/// Fake-quantize all weights of the graph and compute surrogate stats.
+fn prepare(graph: &Graph, settings: &QuantSettings) -> (Graph, BTreeMap<usize, LayerState>) {
+    let mut qgraph = graph.clone();
+    let mut layers = BTreeMap::new();
+    for (idx, node) in qgraph.nodes_mut().iter_mut().enumerate() {
+        match &mut node.op {
+            Op::Conv { w, .. } => {
+                quantize_weights(w, true, settings);
+                layers.insert(
+                    idx,
+                    LayerState {
+                        wstats: WeightStats::from_conv(w),
+                        static_ranges: None,
+                        interval: IntervalSpec::default(),
+                    },
+                );
+            }
+            Op::DwConv { w, .. } => {
+                quantize_weights(w, true, settings);
+                // Depthwise stats: per channel over [kh, kw] slices.
+                let c = w.shape().dim(0);
+                let fan = w.shape().dim(1) * w.shape().dim(2);
+                let flat = Tensor::from_vec(
+                    crate::tensor::Shape::new(&[c, fan]),
+                    w.data().to_vec(),
+                );
+                layers.insert(
+                    idx,
+                    LayerState {
+                        wstats: WeightStats::from_linear(&flat),
+                        static_ranges: None,
+                        interval: IntervalSpec::default(),
+                    },
+                );
+            }
+            Op::Linear { w, .. } => {
+                quantize_weights(w, true, settings);
+                layers.insert(
+                    idx,
+                    LayerState {
+                        wstats: WeightStats::from_linear(w),
+                        static_ranges: None,
+                        interval: IntervalSpec::default(),
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+    (qgraph, layers)
+}
+
+/// Fake-quantize a weight tensor in place. `leading_channel`: the channel
+/// axis is the *first* axis for weights (OHWI / [C,kh,kw] / [h,d]).
+fn quantize_weights(w: &mut Tensor<f32>, leading_channel: bool, settings: &QuantSettings) {
+    let bits = settings.bits;
+    match settings.granularity {
+        Granularity::PerTensor => {
+            let (lo, hi) = crate::util::stats::min_max(w.data());
+            let qp = QParams::from_range(lo, hi, bits);
+            fake_quantize_slice(w.data_mut(), &qp);
+        }
+        Granularity::PerChannel => {
+            assert!(leading_channel);
+            let c = w.shape().dim(0);
+            let per = w.numel() / c;
+            for ch in 0..c {
+                let slice = &mut w.data_mut()[ch * per..(ch + 1) * per];
+                let (lo, hi) = crate::util::stats::min_max(slice);
+                let qp = QParams::from_range(lo, hi, bits);
+                fake_quantize_slice(slice, &qp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::float_exec;
+    use crate::tensor::{ConvGeom, Shape};
+    use crate::util::Pcg32;
+
+    /// A small random conv net with a residual connection and both conv
+    /// types, mimicking the real model zoo's structure.
+    fn test_graph(rng: &mut Pcg32) -> Arc<Graph> {
+        let mut g = Graph::new(Shape::hwc(12, 12, 3));
+        let x = g.input();
+        let w1: Vec<f32> = (0..8 * 3 * 3 * 3).map(|_| rng.normal_ms(0.0, 0.25)).collect();
+        let c1 = g.conv(
+            x,
+            Tensor::from_vec(Shape::ohwi(8, 3, 3, 3), w1),
+            vec![0.05; 8],
+            ConvGeom::same(3, 1),
+        );
+        let r1 = g.relu(c1);
+        let wd: Vec<f32> = (0..8 * 3 * 3).map(|_| rng.normal_ms(0.1, 0.3)).collect();
+        let d1 = g.dwconv(
+            r1,
+            Tensor::from_vec(Shape::new(&[8, 3, 3]), wd),
+            vec![0.0; 8],
+            ConvGeom::same(3, 1),
+        );
+        let a = g.add(d1, r1);
+        let r2 = g.relu6(a);
+        let p = g.global_avg_pool(r2);
+        let wl: Vec<f32> = (0..5 * 8).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+        let l = g.linear(p, Tensor::from_vec(Shape::new(&[5, 8]), wl), vec![0.0; 5]);
+        g.mark_output(l);
+        Arc::new(g)
+    }
+
+    fn rand_image(rng: &mut Pcg32) -> Tensor<f32> {
+        let data: Vec<f32> = (0..12 * 12 * 3).map(|_| rng.uniform()).collect();
+        Tensor::from_vec(Shape::hwc(12, 12, 3), data)
+    }
+
+    fn run_mode(mode: QuantMode, gran: Granularity, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..8).map(|_| rand_image(&mut rng)).collect();
+        let test_img = rand_image(&mut rng);
+        let fp = float_exec::run(&g, &test_img)[0].data().to_vec();
+        let mut ex = QuantExecutor::new(
+            g,
+            QuantSettings { mode, granularity: gran, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let q = ex.run(&test_img)[0].data().to_vec();
+        (fp, q)
+    }
+
+    fn rel_err(fp: &[f32], q: &[f32]) -> f32 {
+        let num: f32 = fp.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = fp.iter().map(|a| a * a).sum::<f32>().max(1e-9);
+        (num / den).sqrt()
+    }
+
+    #[test]
+    fn all_modes_track_fp32() {
+        for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+            for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+                let (fp, q) = run_mode(mode, gran, 42);
+                let e = rel_err(&fp, &q);
+                assert!(
+                    e < 0.25,
+                    "{mode:?}/{gran:?}: rel err {e} too large\nfp={fp:?}\nq={q:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_shifted_input() {
+        // Feed an input whose scale is far outside the calibration
+        // distribution: dynamic adapts, static clips.
+        let mut rng = Pcg32::new(7);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..8).map(|_| rand_image(&mut rng)).collect();
+        // Bright, high-contrast image (values near 1).
+        let mut test_img = rand_image(&mut rng);
+        for v in test_img.data_mut() {
+            *v = 1.0 - *v * 0.05;
+        }
+        let fp = float_exec::run(&g, &test_img)[0].data().to_vec();
+        let mut errs = BTreeMap::new();
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                g.clone(),
+                QuantSettings { mode, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let q = ex.run(&test_img)[0].data().to_vec();
+            errs.insert(mode.label(), rel_err(&fp, &q));
+        }
+        assert!(
+            errs["dynamic"] <= errs["static"] + 1e-6,
+            "dynamic {} vs static {}",
+            errs["dynamic"],
+            errs["static"]
+        );
+    }
+
+    #[test]
+    fn probabilistic_without_shift_close_to_dynamic() {
+        let (fp, qd) = run_mode(QuantMode::Dynamic, Granularity::PerTensor, 99);
+        let (_, qp) = run_mode(QuantMode::Probabilistic, Granularity::PerTensor, 99);
+        let ed = rel_err(&fp, &qd);
+        let ep = rel_err(&fp, &qp);
+        // Ours should be within a small factor of dynamic (paper: "always
+        // second best").
+        assert!(ep < ed * 6.0 + 0.05, "ours {ep} vs dynamic {ed}");
+    }
+
+    #[test]
+    #[should_panic(expected = "requires calibrate")]
+    fn static_requires_calibration() {
+        let mut rng = Pcg32::new(3);
+        let g = test_graph(&mut rng);
+        let img = rand_image(&mut rng);
+        let ex = QuantExecutor::new(
+            g,
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        let _ = ex.run(&img);
+    }
+
+    #[test]
+    fn gamma_changes_but_tracks() {
+        let mut rng = Pcg32::new(21);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..8).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        let fp = float_exec::run(&g, &img)[0].data().to_vec();
+        let mut ex = QuantExecutor::new(g, QuantSettings::default());
+        ex.calibrate(&calib);
+        let e1 = rel_err(&fp, &ex.run(&img)[0].data().to_vec());
+        ex.set_gamma(4);
+        let e4 = rel_err(&fp, &ex.run(&img)[0].data().to_vec());
+        assert!(e4 < 0.3, "gamma=4 err {e4}");
+        assert!((e1 - e4).abs() < 0.15, "gamma sweep unstable: {e1} vs {e4}");
+    }
+
+    #[test]
+    fn ablations_still_run() {
+        let mut rng = Pcg32::new(33);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        let mut ex = QuantExecutor::new(
+            g,
+            QuantSettings {
+                granularity: Granularity::PerChannel,
+                ..Default::default()
+            },
+        );
+        ex.calibrate(&calib);
+        ex.ablate_shared_sigma();
+        ex.ablate_symmetric_interval();
+        let out = ex.run(&img);
+        assert_eq!(out[0].shape().dims(), &[5]);
+    }
+
+    #[test]
+    fn is_calibrated_flag() {
+        let mut rng = Pcg32::new(55);
+        let g = test_graph(&mut rng);
+        let mut ex = QuantExecutor::new(g, QuantSettings::default());
+        assert!(!ex.is_calibrated());
+        let calib: Vec<Tensor<f32>> = (0..2).map(|_| rand_image(&mut rng)).collect();
+        ex.calibrate(&calib);
+        assert!(ex.is_calibrated());
+    }
+}

@@ -1,0 +1,125 @@
+//! The quantization map `Q_b` and its approximate inverse (paper Eq. 1–4).
+
+use super::qparams::QParams;
+
+/// Paper Eq. (2): clamp to `[a, b]`.
+#[inline]
+pub fn clamp_i32(x: i32, a: i32, b: i32) -> i32 {
+    x.max(a).min(b)
+}
+
+/// Paper Eq. (1): `Q_b(x, s, z) = clamp(round(x/s) + z; 0, 2^b − 1)`.
+///
+/// The `+ 2^{b-1}` undoes the zero-point offset of Eq. (3) so the result
+/// lands on the `[0, 2^b−1]` grid, exactly as in the paper's convention.
+#[inline]
+pub fn quantize(x: f32, qp: &QParams) -> i32 {
+    let q = (x / qp.scale).round() as i32 + qp.zero_point + (1i32 << (qp.bits - 1));
+    clamp_i32(q, qp.qmin(), qp.qmax())
+}
+
+/// Paper Eq. (4): `x ≈ s · (Q_b(x) − z)` (with the same offset convention).
+#[inline]
+pub fn dequantize(q: i32, qp: &QParams) -> f32 {
+    qp.value_of(q)
+}
+
+/// Quantize a slice into a fresh integer vector.
+pub fn quantize_slice(xs: &[f32], qp: &QParams) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(x, qp)).collect()
+}
+
+/// Dequantize a slice of grid values.
+pub fn dequantize_slice(qs: &[i32], qp: &QParams) -> Vec<f32> {
+    qs.iter().map(|&q| dequantize(q, qp)).collect()
+}
+
+/// Fake-quantization: quantize then dequantize — the float-carrier
+/// emulation used by the accuracy experiments (and mirrored in the L2 JAX
+/// `quant.py`).
+#[inline]
+pub fn fake_quantize(x: f32, qp: &QParams) -> f32 {
+    dequantize(quantize(x, qp), qp)
+}
+
+/// Fake-quantize a slice in place.
+pub fn fake_quantize_slice(xs: &mut [f32], qp: &QParams) {
+    for x in xs {
+        *x = fake_quantize(*x, qp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{gen, Checker};
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        // For x inside [m, M], |x - dequant(quant(x))| <= s/2.
+        Checker::default().cases(256).check("quantization error bound", |rng| {
+            let (m, mx) = gen::range(rng, 50.0);
+            let bits = gen::bitwidth(rng);
+            let qp = QParams::from_range(m, mx, bits);
+            for _ in 0..32 {
+                let x = rng.uniform_range(m, mx);
+                let err = (fake_quantize(x, &qp) - x).abs();
+                if err > qp.scale * 0.5 + 1e-4 {
+                    return Err(format!("err {err} > s/2 {} for x={x} range=({m},{mx}) b={bits}", qp.scale * 0.5));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let qp = QParams::from_range(0.0, 1.0, 8);
+        assert_eq!(quantize(-100.0, &qp), qp.qmin());
+        assert_eq!(quantize(100.0, &qp), qp.qmax());
+    }
+
+    #[test]
+    fn zero_maps_near_zero() {
+        // If 0 ∈ [m, M], dequant(quant(0)) must be within one step of 0.
+        let qp = QParams::from_range(-0.7, 1.3, 8);
+        let z = fake_quantize(0.0, &qp);
+        assert!(z.abs() <= qp.scale, "{z} vs scale {}", qp.scale);
+    }
+
+    #[test]
+    fn monotone() {
+        let qp = QParams::from_range(-2.0, 2.0, 6);
+        let mut prev = i32::MIN;
+        let mut x = -3.0;
+        while x < 3.0 {
+            let q = quantize(x, &qp);
+            assert!(q >= prev);
+            prev = q;
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn slices_roundtrip() {
+        let qp = QParams::from_range(-1.0, 1.0, 8);
+        let xs = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let qs = quantize_slice(&xs, &qp);
+        let back = dequantize_slice(&qs, &qp);
+        for (x, b) in xs.iter().zip(back.iter()) {
+            assert!((x - b).abs() <= qp.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn idempotent_fake_quant() {
+        // fake_quantize(fake_quantize(x)) == fake_quantize(x)
+        let qp = QParams::from_range(-4.0, 3.0, 5);
+        for i in 0..100 {
+            let x = -5.0 + i as f32 * 0.09;
+            let once = fake_quantize(x, &qp);
+            let twice = fake_quantize(once, &qp);
+            assert_eq!(once, twice);
+        }
+    }
+}

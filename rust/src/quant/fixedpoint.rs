@@ -1,0 +1,193 @@
+//! Fixed-point requantization (CMSIS-NN / TFLite convention).
+//!
+//! An int32 accumulator is rescaled to the output grid by an *effective
+//! scale* `s_in · s_w / s_out`, expressed as a Q31 multiplier and a
+//! right-shift. This is the `arm_nn_requantize` path real int8 deployments
+//! use — the paper's §5.1 MCU implementation wraps exactly these semantics.
+
+/// A real-valued multiplier decomposed as `m · 2^shift` with
+/// `m ∈ [2^30, 2^31)` stored as Q31 (`quantized multiplier`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FixedMultiplier {
+    /// Q31 mantissa, in `[2^30, 2^31)` (or 0 for a zero multiplier).
+    pub multiplier: i32,
+    /// Power-of-two exponent applied after the high multiply.
+    pub shift: i32,
+}
+
+impl FixedMultiplier {
+    /// Decompose a positive real scale into (Q31 multiplier, shift).
+    pub fn from_scale(scale: f64) -> Self {
+        if scale == 0.0 {
+            return Self { multiplier: 0, shift: 0 };
+        }
+        assert!(scale > 0.0, "requant scale must be positive, got {scale}");
+        // frexp: scale = frac * 2^exp with frac in [0.5, 1).
+        let (mut frac, mut exp) = frexp(scale);
+        let mut q = (frac * (1i64 << 31) as f64).round() as i64;
+        if q == (1i64 << 31) {
+            // Rounding overflowed the mantissa; renormalize.
+            q /= 2;
+            exp += 1;
+            frac /= 2.0;
+        }
+        let _ = frac;
+        Self { multiplier: q as i32, shift: exp }
+    }
+
+    /// Apply to an int32 accumulator: `round(acc * scale)` computed entirely
+    /// in integers (saturating rounding-doubling high multiply + rounding
+    /// divide by power of two — gemmlowp/CMSIS semantics).
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i32 {
+        let left_shift = self.shift.max(0);
+        let right_shift = (-self.shift).max(0);
+        let shifted = (acc as i64) << left_shift;
+        let x = saturating_rounding_doubling_high_mul_i64(shifted, self.multiplier);
+        rounding_divide_by_pot(x, right_shift)
+    }
+
+    /// Wide variant for i64 accumulators (the `arm_nn_requantize_s64`
+    /// analogue used by the fixed-point estimator): no i32 saturation on
+    /// the result.
+    #[inline]
+    pub fn apply_wide(&self, acc: i64) -> i64 {
+        let left_shift = self.shift.max(0);
+        let right_shift = (-self.shift).max(0);
+        let shifted = (acc as i128) << left_shift;
+        let ab = shifted * self.multiplier as i128;
+        let nudge: i128 = if ab >= 0 { 1i128 << 30 } else { 1 - (1i128 << 30) };
+        let x = ((ab + nudge) / (1i128 << 31)) as i64;
+        rounding_divide_by_pot_i64(x, right_shift)
+    }
+}
+
+/// frexp for positive doubles: returns (frac, exp) with frac in [0.5, 1).
+fn frexp(x: f64) -> (f64, i32) {
+    debug_assert!(x > 0.0);
+    let bits = x.to_bits();
+    let raw_exp = ((bits >> 52) & 0x7FF) as i32;
+    if raw_exp == 0 {
+        // Subnormal: scale up and recurse.
+        let (f, e) = frexp(x * (1u64 << 54) as f64);
+        return (f, e - 54);
+    }
+    let exp = raw_exp - 1022; // unbiased +1 so that frac in [0.5, 1)
+    let frac = f64::from_bits((bits & !(0x7FFu64 << 52)) | (1022u64 << 52));
+    (frac, exp)
+}
+
+/// `(a * b + 2^30) >> 31` with saturation, where `a` may exceed i32 after a
+/// left shift (so the first operand is i64).
+#[inline]
+fn saturating_rounding_doubling_high_mul_i64(a: i64, b: i32) -> i32 {
+    let ab = (a as i128) * b as i128;
+    let nudge: i128 = if ab >= 0 { 1i128 << 30 } else { 1 - (1i128 << 30) };
+    // gemmlowp divides (truncation toward zero), it does NOT shift (floor):
+    // the two differ by 1 for exact negative multiples.
+    let res = (ab + nudge) / (1i128 << 31);
+    res.clamp(i32::MIN as i128, i32::MAX as i128) as i32
+}
+
+/// Rounding (to nearest, ties away handled via remainder threshold) divide
+/// by a power of two — gemmlowp's `RoundingDivideByPOT`.
+#[inline]
+fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    if exponent == 0 {
+        return x;
+    }
+    debug_assert!((0..=31).contains(&exponent));
+    let mask = (1i64 << exponent) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
+    let mut result = x >> exponent;
+    if remainder > threshold {
+        result += 1;
+    }
+    result
+}
+
+/// i64 variant of [`rounding_divide_by_pot`].
+#[inline]
+fn rounding_divide_by_pot_i64(x: i64, exponent: i32) -> i64 {
+    if exponent == 0 {
+        return x;
+    }
+    debug_assert!((0..=62).contains(&exponent));
+    let mask = (1i128 << exponent) - 1;
+    let remainder = (x as i128) & mask;
+    let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
+    let mut result = x >> exponent;
+    if remainder > threshold {
+        result += 1;
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+
+    #[test]
+    fn frexp_normalizes() {
+        let (f, e) = frexp(6.0);
+        assert!((0.5..1.0).contains(&f));
+        assert_eq!(f * 2f64.powi(e), 6.0);
+        let (f2, e2) = frexp(0.0003);
+        assert!((0.5..1.0).contains(&f2));
+        assert!((f2 * 2f64.powi(e2) - 0.0003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_matches_float_reference() {
+        // For a wide spread of scales and accumulators, the fixed-point
+        // result must equal round(acc * scale) within 1 ulp of the grid.
+        Checker::default().cases(200).check("requant ~ float", |rng| {
+            let scale = 2f64.powf(rng.uniform_range(-12.0, 2.0) as f64) * rng.uniform_range(0.5, 1.0) as f64;
+            let fm = FixedMultiplier::from_scale(scale);
+            for _ in 0..64 {
+                let acc = rng.int_range(-(1 << 24), 1 << 24) as i32;
+                // Double rounding (Q31 mantissa + POT divide) can land 2
+                // grid points away from the float round at .5 ties — the
+                // same behaviour as gemmlowp/CMSIS. Bound the *value* error.
+                let want = acc as f64 * scale;
+                let got = fm.apply(acc) as f64;
+                if (want - got).abs() > 2.0 {
+                    return Err(format!("scale={scale} acc={acc}: want {want} got {got}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn typical_requant_scale() {
+        // A canonical conv requant: s_in*s_w/s_out ~ 0.002.
+        let fm = FixedMultiplier::from_scale(0.00217);
+        assert_eq!(fm.apply(1000), 2); // 2.17 -> 2
+        assert_eq!(fm.apply(-1000), -2);
+        assert_eq!(fm.apply(0), 0);
+    }
+
+    #[test]
+    fn scale_above_one() {
+        let fm = FixedMultiplier::from_scale(3.5);
+        assert_eq!(fm.apply(10), 35);
+        assert_eq!(fm.apply(-7), -24); // -24.5: gemmlowp SRDHM rounds half-up
+    }
+
+    #[test]
+    fn zero_scale() {
+        let fm = FixedMultiplier::from_scale(0.0);
+        assert_eq!(fm.apply(123456), 0);
+    }
+
+    #[test]
+    fn rounding_divide_by_pot_basics() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3 (ties up)
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 -> -3 (ties away from zero)
+        assert_eq!(rounding_divide_by_pot(4, 2), 1);
+        assert_eq!(rounding_divide_by_pot(7, 0), 7);
+    }
+}

@@ -1,0 +1,146 @@
+//! Quantization granularity: per-tensor vs per-channel (paper §2.1).
+
+use super::qparams::QParams;
+use crate::util::stats;
+
+/// How many parameter sets a quantized tensor carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// One `(s, z)` pair for the whole tensor.
+    PerTensor,
+    /// One `(s, z)` pair per output channel (paper's "C" columns).
+    PerChannel,
+}
+
+impl Granularity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Granularity::PerTensor => "T",
+            Granularity::PerChannel => "C",
+        }
+    }
+}
+
+impl std::str::FromStr for Granularity {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "t" | "tensor" | "per-tensor" | "per_tensor" => Ok(Granularity::PerTensor),
+            "c" | "channel" | "per-channel" | "per_channel" => Ok(Granularity::PerChannel),
+            other => Err(format!("unknown granularity {other:?}")),
+        }
+    }
+}
+
+/// Quantization parameters at a given granularity: either one set or one
+/// per channel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QParamSet {
+    PerTensor(QParams),
+    PerChannel(Vec<QParams>),
+}
+
+impl QParamSet {
+    /// Parameters for channel `c`.
+    pub fn for_channel(&self, c: usize) -> &QParams {
+        match self {
+            QParamSet::PerTensor(qp) => qp,
+            QParamSet::PerChannel(v) => &v[c],
+        }
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        match self {
+            QParamSet::PerTensor(_) => Granularity::PerTensor,
+            QParamSet::PerChannel(_) => Granularity::PerChannel,
+        }
+    }
+
+    pub fn num_sets(&self) -> usize {
+        match self {
+            QParamSet::PerTensor(_) => 1,
+            QParamSet::PerChannel(v) => v.len(),
+        }
+    }
+
+    /// Observe a channels-last tensor (`[..., C]` flattened, channel count
+    /// `c`) and derive parameters at the requested granularity (Eq. 3 over
+    /// the observed min/max — i.e. what *dynamic* quantization does).
+    pub fn observe(data: &[f32], channels: usize, gran: Granularity, bits: u32) -> QParamSet {
+        assert!(channels > 0 && data.len() % channels == 0, "data not channel-aligned");
+        match gran {
+            Granularity::PerTensor => {
+                let (m, mx) = stats::min_max(data);
+                QParamSet::PerTensor(QParams::from_range(m, mx, bits))
+            }
+            Granularity::PerChannel => {
+                let mut params = Vec::with_capacity(channels);
+                for c in 0..channels {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    let mut i = c;
+                    while i < data.len() {
+                        let v = data[i];
+                        if v < lo {
+                            lo = v;
+                        }
+                        if v > hi {
+                            hi = v;
+                        }
+                        i += channels;
+                    }
+                    if !lo.is_finite() {
+                        lo = 0.0;
+                        hi = 0.0;
+                    }
+                    params.push(QParams::from_range(lo, hi, bits));
+                }
+                QParamSet::PerChannel(params)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_granularity() {
+        assert_eq!("T".parse::<Granularity>().unwrap(), Granularity::PerTensor);
+        assert_eq!("per-channel".parse::<Granularity>().unwrap(), Granularity::PerChannel);
+        assert!("x".parse::<Granularity>().is_err());
+    }
+
+    #[test]
+    fn observe_per_tensor() {
+        let data = [-1.0f32, 0.0, 3.0, 2.0];
+        let set = QParamSet::observe(&data, 2, Granularity::PerTensor, 8);
+        assert_eq!(set.num_sets(), 1);
+        let qp = set.for_channel(0);
+        assert!((qp.scale - 4.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn observe_per_channel_ranges() {
+        // channels-last [v0c0, v0c1, v1c0, v1c1]: c0 in {-1, 3}, c1 in {0, 2}
+        let data = [-1.0f32, 0.0, 3.0, 2.0];
+        let set = QParamSet::observe(&data, 2, Granularity::PerChannel, 8);
+        assert_eq!(set.num_sets(), 2);
+        assert!((set.for_channel(0).scale - 4.0 / 255.0).abs() < 1e-7);
+        assert!((set.for_channel(1).scale - 2.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn per_channel_tighter_or_equal_scales() {
+        // Each per-channel scale must be <= the per-tensor scale.
+        let mut rng = crate::util::Pcg32::new(11);
+        let channels = 4;
+        let data: Vec<f32> = (0..channels * 64).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+        let pt = QParamSet::observe(&data, channels, Granularity::PerTensor, 8);
+        let pc = QParamSet::observe(&data, channels, Granularity::PerChannel, 8);
+        for c in 0..channels {
+            assert!(pc.for_channel(c).scale <= pt.for_channel(0).scale + 1e-9);
+        }
+    }
+}

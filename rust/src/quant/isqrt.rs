@@ -1,0 +1,94 @@
+//! Newton–Raphson integer square root (paper §5.1).
+//!
+//! The probabilistic estimator needs `σ = sqrt(Var[y])` on a device with no
+//! FPU. The paper computes it with Newton–Raphson on fixed-point values; we
+//! implement the same iteration over `u64` so the CMSIS-path estimator is
+//! integer-only end to end.
+
+/// Floor integer square root of `n` via Newton–Raphson.
+///
+/// Converges in ≤ 32 iterations for any `u64`; the loop exits as soon as the
+/// iterate stops decreasing, which for integer Newton is exactly when
+/// `x = floor(sqrt(n))`.
+pub fn isqrt_u64(n: u64) -> u64 {
+    if n < 2 {
+        return n;
+    }
+    // Initial guess: 2^(ceil(bits/2)) ≥ sqrt(n), so the sequence decreases.
+    let bits = 64 - n.leading_zeros();
+    let mut x = 1u64 << ((bits + 1) / 2);
+    loop {
+        let next = (x + n / x) / 2;
+        if next >= x {
+            return x;
+        }
+        x = next;
+    }
+}
+
+/// Fixed-point sqrt: returns `sqrt(v)` where both `v` and the result are in
+/// Qm.f format with `f` fractional bits (i.e. value = raw / 2^f).
+///
+/// `sqrt(raw / 2^f) = sqrt(raw * 2^f) / 2^f`, so we scale by `2^f` before
+/// the integer sqrt. `f` must be even ≤ 32 for exactness of the trick; odd
+/// `f` incurs a ½-bit error we avoid by doubling.
+pub fn sqrt_fixed(raw: u64, frac_bits: u32) -> u64 {
+    debug_assert!(frac_bits <= 31);
+    isqrt_u64(raw << frac_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+
+    #[test]
+    fn exact_squares() {
+        for i in 0u64..2000 {
+            assert_eq!(isqrt_u64(i * i), i);
+        }
+    }
+
+    #[test]
+    fn floor_property_random() {
+        Checker::default().cases(500).check("isqrt floor", |rng| {
+            let n = rng.next_u64() >> rng.int_range(0, 40) as u32;
+            let r = isqrt_u64(n);
+            if r * r > n {
+                return Err(format!("isqrt({n})={r}, r^2 > n"));
+            }
+            // (r+1)^2 > n, guarding overflow.
+            let rp1 = r + 1;
+            if rp1.checked_mul(rp1).map(|sq| sq <= n).unwrap_or(false) {
+                return Err(format!("isqrt({n})={r}, (r+1)^2 <= n"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn small_values() {
+        assert_eq!(isqrt_u64(0), 0);
+        assert_eq!(isqrt_u64(1), 1);
+        assert_eq!(isqrt_u64(2), 1);
+        assert_eq!(isqrt_u64(3), 1);
+        assert_eq!(isqrt_u64(4), 2);
+        assert_eq!(isqrt_u64(8), 2);
+        assert_eq!(isqrt_u64(9), 3);
+    }
+
+    #[test]
+    fn max_input() {
+        let r = isqrt_u64(u64::MAX);
+        assert_eq!(r, u32::MAX as u64);
+    }
+
+    #[test]
+    fn fixed_point_matches_float() {
+        // Q16.16: sqrt of 2.0 ~ 1.41421 within one LSB.
+        let two_q16 = 2u64 << 16;
+        let r = sqrt_fixed(two_q16, 16);
+        let as_float = r as f64 / 65536.0;
+        assert!((as_float - 2f64.sqrt()).abs() < 1.0 / 65536.0 * 2.0, "{as_float}");
+    }
+}

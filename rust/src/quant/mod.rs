@@ -1,0 +1,18 @@
+//! Uniform affine quantization (paper §2.1).
+//!
+//! Implements the paper's Eq. (1)–(4): the quantization map `Q_b(x, s, z)`,
+//! the clamp, parameter derivation from an observed `[m, M]` range (Eq. 3),
+//! and approximate dequantization (Eq. 4) — plus the fixed-point machinery a
+//! real int8 deployment needs (CMSIS/TFLite-style requantization multipliers
+//! and a Newton–Raphson integer square root, paper §5.1).
+
+pub mod affine;
+pub mod fixedpoint;
+pub mod granularity;
+pub mod isqrt;
+pub mod qparams;
+
+pub use affine::{dequantize, quantize, quantize_slice, dequantize_slice};
+pub use granularity::Granularity;
+pub use isqrt::isqrt_u64;
+pub use qparams::QParams;

@@ -1,0 +1,129 @@
+//! Quantization parameters: scale, zero-point, bit-width (paper Eq. 3).
+
+/// Parameters of a uniform affine quantizer.
+///
+/// The paper's grid is the *unsigned* range `[0, 2^b - 1]` (Eq. 1), with the
+/// zero-point shifted by `2^{b-1}` (Eq. 3). We keep the same convention and
+/// translate to the signed int8 domain only inside the CMSIS kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    /// Scale `s` (step size of the grid).
+    pub scale: f32,
+    /// Zero-point `z` (integer offset; stored wide to survive Eq. 3's shift).
+    pub zero_point: i32,
+    /// Bit-width `b`.
+    pub bits: u32,
+}
+
+impl QParams {
+    /// Derive parameters from an observed dynamic range `[m, M]` (Eq. 3):
+    ///
+    /// ```text
+    /// s = (M - m) / (2^b - 1),   z = -round(m / s) - 2^{b-1}
+    /// ```
+    ///
+    /// Degenerate ranges (`M == m`) get a scale proportional to `|m|` so the
+    /// lone value is still representable to within `|m|/2^b` (this matters
+    /// for per-channel dynamic quantization of vectors, where every
+    /// "channel" holds a single value).
+    pub fn from_range(m: f32, mx: f32, bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 16, "bit-width {bits} out of range");
+        let levels = ((1u32 << bits) - 1) as f32;
+        let (m, mx) = if m <= mx { (m, mx) } else { (mx, m) };
+        let span = mx - m;
+        let scale = if span > f32::EPSILON * m.abs().max(1.0) {
+            span / levels
+        } else {
+            2.0 * m.abs().max(1e-6) / levels
+        };
+        let zero_point = (-(m / scale)).round() as i32 - (1i32 << (bits - 1));
+        Self { scale, zero_point, bits }
+    }
+
+    /// Parameters from a mean/σ interval `I(α, β) = [µ − ασ, µ + βσ]`
+    /// (paper §4.1) — the probabilistic scheme's range source.
+    pub fn from_interval(mu: f32, sigma: f32, alpha: f32, beta: f32, bits: u32) -> Self {
+        Self::from_range(mu - alpha * sigma, mu + beta * sigma, bits)
+    }
+
+    /// Lowest representable grid value (paper's grid is `[0, 2^b-1]`, but we
+    /// carry the `−2^{b-1}` offset of Eq. 3, so the effective stored values
+    /// live in the signed window below).
+    pub fn qmin(&self) -> i32 {
+        0
+    }
+
+    /// Highest representable grid value.
+    pub fn qmax(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// The float value represented by grid point `q` (Eq. 4).
+    pub fn value_of(&self, q: i32) -> f32 {
+        self.scale * (q - self.zero_point - (1i32 << (self.bits - 1))) as f32
+    }
+
+    /// Smallest/largest float representable on this grid.
+    pub fn repr_range(&self) -> (f32, f32) {
+        (self.value_of(self.qmin()), self.value_of(self.qmax()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_range_eq3() {
+        let q = QParams::from_range(-1.0, 1.0, 8);
+        assert!((q.scale - 2.0 / 255.0).abs() < 1e-7);
+        // z = -round(m/s) - 128. In exact arithmetic m/s = -127.5; in f32 it
+        // lands just above, so round(m/s) = -127 and z = 127 - 128 = -1.
+        assert_eq!(q.zero_point, -1);
+    }
+
+    #[test]
+    fn degenerate_range() {
+        let q = QParams::from_range(0.5, 0.5, 8);
+        // Still a usable quantizer that can represent the lone value well.
+        assert!(q.qmax() > q.qmin());
+        assert!(q.scale > 0.0);
+        let v = crate::quant::affine::fake_quantize(0.5, &q);
+        assert!((v - 0.5).abs() < 0.01, "{v}");
+        // Degenerate zero range must not divide by zero.
+        let q0 = QParams::from_range(0.0, 0.0, 8);
+        assert!(q0.scale > 0.0);
+    }
+
+    #[test]
+    fn swapped_range_is_fixed() {
+        let a = QParams::from_range(1.0, -1.0, 8);
+        let b = QParams::from_range(-1.0, 1.0, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn repr_range_covers_input_range() {
+        let (m, mx) = (-3.2f32, 7.9f32);
+        let q = QParams::from_range(m, mx, 8);
+        let (lo, hi) = q.repr_range();
+        // The representable window must cover [m, M] up to one step.
+        assert!(lo <= m + q.scale, "lo {lo} vs m {m}");
+        assert!(hi >= mx - q.scale, "hi {hi} vs M {mx}");
+    }
+
+    #[test]
+    fn interval_constructor() {
+        let q = QParams::from_interval(0.0, 1.0, 2.0, 3.0, 8);
+        let r = QParams::from_range(-2.0, 3.0, 8);
+        assert_eq!(q, r);
+    }
+
+    #[test]
+    fn low_bitwidths() {
+        for bits in 2..=8 {
+            let q = QParams::from_range(0.0, 1.0, bits);
+            assert_eq!(q.qmax(), (1 << bits) - 1);
+        }
+    }
+}

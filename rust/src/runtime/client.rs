@@ -1,0 +1,136 @@
+//! The PJRT client wrapper + executable cache.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A compiled executable for one HLO artifact.
+pub struct RuntimeModel {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl RuntimeModel {
+    /// Execute on f32 inputs (each a flat tensor); returns the flattened
+    /// f32 outputs of the (single-tuple) result.
+    pub fn run_f32(&self, inputs: &[&Tensor<f32>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elements = tuple.decompose_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        elements
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute with scalar f32 extras appended after one tensor input —
+    /// the estimator entry point's signature `(x, mu_w, var_w)`.
+    pub fn run_tensor_scalars(&self, x: &Tensor<f32>, scalars: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let dims: Vec<i64> = x.shape().dims().iter().map(|&d| d as i64).collect();
+        let mut literals = vec![xla::Literal::vec1(x.data())
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?];
+        for &s in scalars {
+            literals.push(xla::Literal::scalar(s));
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let elements = tuple.decompose_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        elements
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// PJRT CPU client with an executable cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<PathBuf, usize>>,
+    loaded: Mutex<Vec<std::sync::Arc<RuntimeModel>>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Self { client, cache: Mutex::new(BTreeMap::new()), loaded: Mutex::new(Vec::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<RuntimeModel>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&idx) = cache.get(path) {
+                return Ok(self.loaded.lock().unwrap()[idx].clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        let model = std::sync::Arc::new(RuntimeModel { exe, path: path.to_path_buf() });
+        let mut loaded = self.loaded.lock().unwrap();
+        loaded.push(model.clone());
+        self.cache.lock().unwrap().insert(path.to_path_buf(), loaded.len() - 1);
+        Ok(model)
+    }
+
+    /// Number of distinct compiled artifacts.
+    pub fn cached_count(&self) -> usize {
+        self.loaded.lock().unwrap().len()
+    }
+}
+
+// PJRT integration tests live in rust/tests/runtime_integration.rs — they
+// need the artifacts directory, so unit tests here only cover construction.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert_eq!(rt.platform(), "cpu");
+        assert_eq!(rt.cached_count(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load(Path::new("/nonexistent/model.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from Rust.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. The
+//! interchange format is **HLO text** — jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+//!
+//! Python never runs on this path: the artifacts are produced once by
+//! `make artifacts` and the Rust binary is self-contained afterwards.
+
+pub mod client;
+
+pub use client::{Runtime, RuntimeModel};

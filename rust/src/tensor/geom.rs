@@ -1,0 +1,88 @@
+//! Convolution geometry: kernel/stride/padding arithmetic shared by the
+//! float engine, the int8 engine, the estimator and the MCU cost model.
+
+/// Geometry of a 2-D convolution (square/rect kernel, symmetric padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn new(kh: usize, kw: usize, stride: usize, pad: usize) -> Self {
+        assert!(kh > 0 && kw > 0 && stride > 0);
+        Self { kh, kw, stride, pad }
+    }
+
+    /// Square-kernel, "same"-style padding helper (`pad = k/2`, stride 1
+    /// keeps spatial dims for odd k).
+    pub fn same(k: usize, stride: usize) -> Self {
+        Self::new(k, k, stride, k / 2)
+    }
+
+    /// Output spatial size for an input of `(h, w)`.
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.pad).saturating_sub(self.kh) / self.stride + 1;
+        let ow = (w + 2 * self.pad).saturating_sub(self.kw) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// The input-row window `[y0, y1)` feeding output row `oy`, clipped to
+    /// the valid region (zero padding contributes nothing to sums).
+    pub fn in_range_y(&self, oy: usize, h: usize) -> (usize, usize) {
+        let start = (oy * self.stride) as isize - self.pad as isize;
+        let y0 = start.max(0) as usize;
+        let y1 = ((start + self.kh as isize).max(0) as usize).min(h);
+        (y0, y1.max(y0))
+    }
+
+    /// Same for columns.
+    pub fn in_range_x(&self, ox: usize, w: usize) -> (usize, usize) {
+        let start = (ox * self.stride) as isize - self.pad as isize;
+        let x0 = start.max(0) as usize;
+        let x1 = ((start + self.kw as isize).max(0) as usize).min(w);
+        (x0, x1.max(x0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_preserves_dims() {
+        let g = ConvGeom::same(3, 1);
+        assert_eq!(g.out_dims(32, 32), (32, 32));
+        let g5 = ConvGeom::same(5, 1);
+        assert_eq!(g5.out_dims(17, 9), (17, 9));
+    }
+
+    #[test]
+    fn stride_two_halves() {
+        let g = ConvGeom::same(3, 2);
+        assert_eq!(g.out_dims(32, 32), (16, 16));
+    }
+
+    #[test]
+    fn valid_conv() {
+        let g = ConvGeom::new(3, 3, 1, 0);
+        assert_eq!(g.out_dims(8, 8), (6, 6));
+    }
+
+    #[test]
+    fn window_clipping_at_borders() {
+        let g = ConvGeom::same(3, 1); // pad 1
+        assert_eq!(g.in_range_y(0, 8), (0, 2)); // top row clips one
+        assert_eq!(g.in_range_y(4, 8), (3, 6)); // interior full window
+        assert_eq!(g.in_range_y(7, 8), (6, 8)); // bottom clips one
+    }
+
+    #[test]
+    fn one_by_one() {
+        let g = ConvGeom::new(1, 1, 1, 0);
+        assert_eq!(g.out_dims(10, 10), (10, 10));
+        assert_eq!(g.in_range_x(3, 10), (3, 4));
+    }
+}

@@ -1,0 +1,16 @@
+//! A small dense tensor library (HWC image layout).
+//!
+//! PDQ targets single-image MCU-style inference, so the canonical activation
+//! layout is `[H, W, C]` (channels-last, matching CMSIS-NN) and weights are
+//! `[C_out, K_h, K_w, C_in]` (OHWI, also CMSIS-NN's `arm_convolve_s8`
+//! layout). The type is generic so the same container carries `f32`
+//! activations, `i8` quantized values and `i32` accumulators.
+
+pub mod geom;
+pub mod ops;
+pub mod shape;
+pub mod tensor;
+
+pub use geom::ConvGeom;
+pub use shape::Shape;
+pub use tensor::Tensor;

@@ -1,0 +1,172 @@
+//! Float tensor operations used by the data pipeline and metrics.
+//!
+//! These are *support* ops (image resizing, channel statistics, blurring for
+//! the corruption suite) — the inference engines live in [`crate::nn`] and
+//! [`crate::cmsis`].
+
+use super::{Shape, Tensor};
+
+/// Bilinear resize of an HWC image.
+pub fn resize_bilinear(img: &Tensor<f32>, out_h: usize, out_w: usize) -> Tensor<f32> {
+    let (h, w, c) = (img.shape().dim(0), img.shape().dim(1), img.shape().dim(2));
+    let mut out = Tensor::zeros(Shape::hwc(out_h, out_w, c));
+    if h == 0 || w == 0 {
+        return out;
+    }
+    let sy = if out_h > 1 { (h - 1) as f32 / (out_h - 1) as f32 } else { 0.0 };
+    let sx = if out_w > 1 { (w - 1) as f32 / (out_w - 1) as f32 } else { 0.0 };
+    for oy in 0..out_h {
+        let fy = oy as f32 * sy;
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(h - 1);
+        let wy = fy - y0 as f32;
+        for ox in 0..out_w {
+            let fx = ox as f32 * sx;
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(w - 1);
+            let wx = fx - x0 as f32;
+            for ch in 0..c {
+                let v00 = img.px(y0, x0, ch);
+                let v01 = img.px(y0, x1, ch);
+                let v10 = img.px(y1, x0, ch);
+                let v11 = img.px(y1, x1, ch);
+                let top = v00 * (1.0 - wx) + v01 * wx;
+                let bot = v10 * (1.0 - wx) + v11 * wx;
+                out.set_px(oy, ox, ch, top * (1.0 - wy) + bot * wy);
+            }
+        }
+    }
+    out
+}
+
+/// Separable box blur with the given radius (used by the blur corruption).
+pub fn box_blur(img: &Tensor<f32>, radius: usize) -> Tensor<f32> {
+    if radius == 0 {
+        return img.clone();
+    }
+    let (h, w, c) = (img.shape().dim(0), img.shape().dim(1), img.shape().dim(2));
+    let norm = 1.0 / (2 * radius + 1) as f32;
+    // Horizontal pass.
+    let mut tmp = Tensor::zeros(Shape::hwc(h, w, c));
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                let mut acc = 0.0;
+                for dx in -(radius as isize)..=(radius as isize) {
+                    let xx = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                    acc += img.px(y, xx, ch);
+                }
+                tmp.set_px(y, x, ch, acc * norm);
+            }
+        }
+    }
+    // Vertical pass.
+    let mut out = Tensor::zeros(Shape::hwc(h, w, c));
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                let mut acc = 0.0;
+                for dy in -(radius as isize)..=(radius as isize) {
+                    let yy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                    acc += tmp.px(yy, x, ch);
+                }
+                out.set_px(y, x, ch, acc * norm);
+            }
+        }
+    }
+    out
+}
+
+/// Per-channel mean of an HWC image.
+pub fn channel_means(img: &Tensor<f32>) -> Vec<f32> {
+    let (h, w, c) = (img.shape().dim(0), img.shape().dim(1), img.shape().dim(2));
+    let mut sums = vec![0.0f64; c];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                sums[ch] += img.px(y, x, ch) as f64;
+            }
+        }
+    }
+    let n = (h * w).max(1) as f64;
+    sums.into_iter().map(|s| (s / n) as f32).collect()
+}
+
+/// Clamp every element into `[lo, hi]`.
+pub fn clamp_inplace(img: &mut Tensor<f32>, lo: f32, hi: f32) {
+    for v in img.data_mut() {
+        *v = v.clamp(lo, hi);
+    }
+}
+
+/// Elementwise a*x + b, in place.
+pub fn affine_inplace(img: &mut Tensor<f32>, a: f32, b: f32) {
+    for v in img.data_mut() {
+        *v = a * *v + b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(h: usize, w: usize) -> Tensor<f32> {
+        let mut t = Tensor::image(h, w, 1);
+        for y in 0..h {
+            for x in 0..w {
+                t.set_px(y, x, 0, (y * w + x) as f32);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn resize_identity() {
+        let img = ramp(4, 4);
+        let out = resize_bilinear(&img, 4, 4);
+        assert_eq!(out.data(), img.data());
+    }
+
+    #[test]
+    fn resize_upscale_interpolates() {
+        // 2x2 [[0,1],[2,3]] -> 3x3 center must be the mean 1.5.
+        let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![0.0, 1.0, 2.0, 3.0]);
+        let out = resize_bilinear(&img, 3, 3);
+        assert!((out.px(1, 1, 0) - 1.5).abs() < 1e-6);
+        assert_eq!(out.px(0, 0, 0), 0.0);
+        assert_eq!(out.px(2, 2, 0), 3.0);
+    }
+
+    #[test]
+    fn blur_preserves_constant() {
+        let img = Tensor::full(Shape::hwc(5, 5, 2), 3.0f32);
+        let out = box_blur(&img, 2);
+        for &v in out.data() {
+            assert!((v - 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn blur_smooths_impulse() {
+        let mut img = Tensor::image(5, 5, 1);
+        img.set_px(2, 2, 0, 9.0);
+        let out = box_blur(&img, 1);
+        assert!(out.px(2, 2, 0) < 9.0);
+        assert!(out.px(1, 1, 0) > 0.0);
+    }
+
+    #[test]
+    fn channel_means_simple() {
+        let img = Tensor::from_vec(Shape::hwc(1, 2, 2), vec![1.0, 10.0, 3.0, 20.0]);
+        let m = channel_means(&img);
+        assert_eq!(m, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn affine_and_clamp() {
+        let mut img = Tensor::from_vec(Shape::hwc(1, 1, 3), vec![0.2, 0.5, 0.9]);
+        affine_inplace(&mut img, 2.0, 0.0);
+        clamp_inplace(&mut img, 0.0, 1.0);
+        assert_eq!(img.data(), &[0.4, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! The dense tensor container.
+
+use super::shape::Shape;
+
+/// A dense, row-major tensor over element type `T`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled (default-filled) tensor.
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        Self { shape, data: vec![T::default(); n] }
+    }
+
+    /// Wrap existing data; length must match the shape.
+    pub fn from_vec(shape: Shape, data: Vec<T>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "data length {} != shape {} numel", data.len(), shape);
+        Self { shape, data }
+    }
+
+    /// Fill with a constant.
+    pub fn full(shape: Shape, v: T) -> Self {
+        let n = shape.numel();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Multi-index read.
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.shape.offset(idx)]
+    }
+
+    /// Multi-index write.
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.shape.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: Shape) -> Self {
+        assert_eq!(shape.numel(), self.data.len(), "reshape numel mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Consume into the flat data vector.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Element-wise map to another element type.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+}
+
+impl Tensor<f32> {
+    /// HWC image constructor.
+    pub fn image(h: usize, w: usize, c: usize) -> Self {
+        Self::zeros(Shape::hwc(h, w, c))
+    }
+
+    /// Convenience pixel accessors for HWC tensors.
+    pub fn px(&self, y: usize, x: usize, c: usize) -> f32 {
+        self.at(&[y, x, c])
+    }
+
+    pub fn set_px(&mut self, y: usize, x: usize, c: usize, v: f32) {
+        self.set(&[y, x, c], v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_index() {
+        let mut t: Tensor<f32> = Tensor::zeros(Shape::new(&[2, 3]));
+        assert_eq!(t.numel(), 6);
+        t.set(&[1, 2], 5.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Tensor::from_vec(Shape::new(&[2, 2]), vec![1i8, 2, 3, 4]);
+        assert_eq!(t.at(&[1, 0]), 3);
+        assert_eq!(t.into_vec(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "numel")]
+    fn from_vec_length_checked() {
+        let _ = Tensor::from_vec(Shape::new(&[2, 2]), vec![1.0f32]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(Shape::new(&[4]), vec![1.0f32, 2.0, 3.0, 4.0]);
+        let t2 = t.reshape(Shape::new(&[2, 2]));
+        assert_eq!(t2.at(&[1, 1]), 4.0);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = Tensor::from_vec(Shape::new(&[3]), vec![1.4f32, -2.6, 3.5]);
+        let q: Tensor<i32> = t.map(|x| x.round() as i32);
+        assert_eq!(q.data(), &[1, -3, 4]);
+    }
+
+    #[test]
+    fn image_pixels() {
+        let mut img = Tensor::image(4, 4, 3);
+        img.set_px(2, 1, 0, 0.5);
+        assert_eq!(img.px(2, 1, 0), 0.5);
+    }
+}

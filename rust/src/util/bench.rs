@@ -1,0 +1,163 @@
+//! Mini benchmarking harness (the registry has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive [`Bencher`], which
+//! warms up, runs timed iterations until a wall-clock budget is met, and
+//! reports mean / p50 / p95 per iteration plus throughput. Output is both
+//! human-readable and machine-parsable (one JSON line per benchmark).
+
+use super::json::Json;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional user-supplied work units per iteration (for throughput).
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p95_ns", self.p95_ns)
+            .set("min_ns", self.min_ns)
+            .set("units_per_iter", self.units_per_iter);
+        o
+    }
+}
+
+/// Benchmark driver.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: usize) -> Self {
+        Self { warmup, budget, max_iters, results: Vec::new() }
+    }
+
+    /// Quick profile for benches whose single iteration is expensive.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(600), 200)
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    /// `units` is the number of work items per iteration (e.g. images), used
+    /// for throughput reporting; pass 1.0 if not meaningful.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed runs.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let run0 = Instant::now();
+        while run0.elapsed() < self.budget && samples_ns.len() < self.max_iters {
+            let it = Instant::now();
+            f();
+            samples_ns.push(it.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len().max(1);
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let pick = |p: f64| samples_ns[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: pick(0.50),
+            p95_ns: pick(0.95),
+            min_ns: samples_ns.first().copied().unwrap_or(0.0),
+            units_per_iter: units,
+        };
+        self.report(&res);
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    fn report(&self, r: &BenchResult) {
+        let thr = if r.mean_ns > 0.0 { r.units_per_iter * 1e9 / r.mean_ns } else { 0.0 };
+        println!(
+            "bench {:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  thr {:>10.1}/s",
+            r.name,
+            r.iters,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p95_ns),
+            thr,
+        );
+        println!("BENCH_JSON {}", r.to_json().to_string_compact());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human formatting for nanosecond quantities.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// `black_box` — prevent the optimizer from deleting benchmark work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(Duration::from_millis(1), Duration::from_millis(20), 1000);
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", 1.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2_500_000.0).contains("ms"));
+        assert!(fmt_ns(2.5e9).contains(" s"));
+    }
+}

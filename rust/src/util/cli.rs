@@ -1,0 +1,147 @@
+//! Tiny declarative CLI argument parser (the offline registry has no clap).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens. Any `--name value` / `--name=value` becomes an
+    /// option; a trailing `--name` (followed by another option or nothing)
+    /// becomes a boolean flag; the rest are positional.
+    pub fn parse(tokens: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.opts.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A subcommand spec for help rendering.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub usage: &'static str,
+}
+
+/// Render a help screen for a command list.
+pub fn render_help(binary: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{binary} — {about}\n\nUSAGE:\n  {binary} <command> [options]\n\nCOMMANDS:\n");
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        s.push_str(&format!("  {:width$}  {}\n", c.name, c.about, width = width));
+    }
+    s.push_str("\nRun a command with --help for its options.\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // Note: a bare flag directly before a positional would absorb it as
+        // a value (`--verbose input.bin` ⇒ verbose=input.bin); flags are
+        // unambiguous before another `--option` or at the end.
+        let a = Args::parse(&toks("--verbose --model resnet --gamma=4 input.bin"));
+        assert_eq!(a.opt("model"), Some("resnet"));
+        assert_eq!(a.opt("gamma"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.bin"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&toks("--n 12 --rate 0.5"));
+        assert_eq!(a.opt_usize("n", 0), 12);
+        assert_eq!(a.opt_f64("rate", 1.0), 0.5);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&toks("--a 1 --quiet"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.opt("a"), Some("1"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lo -3" — the -3 does not start with --, so it is a value.
+        let a = Args::parse(&toks("--lo -3"));
+        assert_eq!(a.opt("lo"), Some("-3"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help(
+            "pdq",
+            "probabilistic dynamic quantization",
+            &[Command { name: "serve", about: "run the server", usage: "" }],
+        );
+        assert!(h.contains("serve"));
+        assert!(h.contains("pdq"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Substrate utilities the offline crate registry could not provide.
+//!
+//! The build environment ships only `xla` and `anyhow`; everything else a
+//! production service would pull from crates.io (rand, serde, clap,
+//! criterion, proptest) is implemented here, scoped to what PDQ needs.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use prng::Pcg32;

@@ -1,0 +1,247 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG32 (O'Neill 2014) seeded through SplitMix64, plus the distribution
+//! helpers PDQ needs: uniform ranges, standard normals (Box–Muller),
+//! Fisher–Yates shuffling and categorical choice.
+//!
+//! Determinism matters doubly here: the synthetic datasets must be
+//! *pixel-identical* between the python training path ([`python/compile/data.py`])
+//! and the Rust evaluation path, so both implement exactly this generator.
+
+/// SplitMix64 — used to expand a single `u64` seed into PCG32 state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR variant): 64-bit state, 32-bit output.
+///
+/// Small, fast, and with well-understood statistical quality — more than
+/// enough for dataset synthesis and property-test case generation.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with a single integer; the stream id is derived via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::with_stream(sm.next_u64(), sm.next_u64())
+    }
+
+    /// Explicit (state seed, stream id) construction.
+    pub fn with_stream(initstate: u64, initseq: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (initseq << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    pub fn uniform(&mut self) -> f32 {
+        // 2^-32; cast before multiply keeps the python mirror trivial.
+        self.next_u32() as f32 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire-style rejection).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "below(0) is meaningless");
+        // Classic PCG bounded trick: rejection below the wrap threshold.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        if span <= u32::MAX as u64 {
+            lo + self.below(span as u32) as i64
+        } else {
+            lo + (self.next_u64() % span) as i64
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// sibling is discarded to keep the python mirror branch-free).
+    pub fn normal(&mut self) -> f32 {
+        let mut u1 = self.uniform();
+        if u1 < 1e-12 {
+            u1 = 1e-12;
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * (u1 as f64).ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2 as f64;
+        (r * theta.cos()) as f32
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+
+    /// `n` distinct indices from `[0, len)` (partial shuffle).
+    pub fn sample_indices(&mut self, len: usize, n: usize) -> Vec<usize> {
+        assert!(n <= len);
+        let mut idx: Vec<usize> = (0..len).collect();
+        for i in 0..n {
+            let j = i + self.below((len - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference vector for seed=0 (matches the canonical C impl).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_distinct_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let mut c = Pcg32::new(43);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg32::new(123);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7) as usize] += 1;
+        }
+        let expect = n / 7;
+        for &c in &counts {
+            assert!(
+                (c as i64 - expect as i64).abs() < expect as i64 / 10,
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(99);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::new(17);
+        let idx = rng.sample_indices(50, 20);
+        let mut dedup = idx.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn int_range_bounds() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..1000 {
+            let v = rng.int_range(-5, 9);
+            assert!((-5..=9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Paper-style table rendering for experiment reports.
+//!
+//! Renders aligned ASCII/markdown tables with per-row best/second-best
+//! highlighting, mirroring the bold/italic convention of the paper's
+//! Tables 1–2.
+
+/// A table under construction.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Column indices that participate in per-row best/second-best marking.
+    score_cols: Vec<usize>,
+    /// When true, higher is better for score columns.
+    higher_better: bool,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            score_cols: Vec::new(),
+            higher_better: true,
+        }
+    }
+
+    /// Mark which columns hold comparable scores (for `*best*` marking).
+    pub fn score_columns(mut self, cols: &[usize]) -> Self {
+        self.score_cols = cols.to_vec();
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as github-flavored markdown. Score columns get `**best**` and
+    /// `_second_` markers per row (paper convention: bold best, italic 2nd).
+    pub fn to_markdown(&self) -> String {
+        let mut rows = self.rows.clone();
+        if !self.score_cols.is_empty() {
+            for row in rows.iter_mut() {
+                let scored: Vec<(usize, f64)> = self
+                    .score_cols
+                    .iter()
+                    .filter_map(|&c| row[c].parse::<f64>().ok().map(|v| (c, v)))
+                    .collect();
+                if scored.len() >= 2 {
+                    let mut order = scored.clone();
+                    order.sort_by(|a, b| {
+                        if self.higher_better {
+                            b.1.partial_cmp(&a.1).unwrap()
+                        } else {
+                            a.1.partial_cmp(&b.1).unwrap()
+                        }
+                    });
+                    let best = order[0].0;
+                    let second = order[1].0;
+                    row[best] = format!("**{}**", row[best]);
+                    row[second] = format!("_{}_", row[second]);
+                }
+            }
+        }
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format a metric to the paper's 4-decimal convention.
+pub fn fmt4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["Task", "FP32", "Ours", "Dyn", "Static"]).score_columns(&[2, 3, 4]);
+        t.add_row(vec![
+            "Detection".into(),
+            "0.3923".into(),
+            "0.3889".into(),
+            "0.3901".into(),
+            "0.3877".into(),
+        ]);
+        let md = t.to_markdown();
+        assert!(md.contains("**0.3901**"), "{md}");
+        assert!(md.contains("_0.3889_"), "{md}");
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt4_rounds() {
+        assert_eq!(fmt4(0.123456), "0.1235");
+    }
+}

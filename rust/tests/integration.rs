@@ -1,0 +1,200 @@
+//! Cross-layer integration tests. These require `make artifacts` (the
+//! Makefile's `test` target guarantees the ordering).
+//!
+//! What is proven here:
+//! 1. the Rust float engine reproduces the JAX model bit-for-bit-ish
+//!    (golden fixtures exported by `aot.py`) — weights, layouts and op
+//!    semantics all agree;
+//! 2. the PJRT runtime loads every AOT HLO artifact and its outputs match
+//!    the Rust float engine on the same inputs;
+//! 3. the AOT estimator (L2 graph wrapping the L1 Pallas kernel) matches
+//!    the Rust estimator — i.e. the paper's Eq. 10–12 agree across all
+//!    three implementations (Pallas/jnp, PJRT, Rust).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use pdq::data::shapes;
+use pdq::estimator::{conv as conv_est, WeightStats};
+use pdq::models::zoo;
+use pdq::nn::float_exec;
+use pdq::nn::{QuantExecutor, QuantMode};
+use pdq::quant::Granularity;
+use pdq::runtime::Runtime;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::Pcg32;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Golden parity: Rust float engine vs JAX outputs recorded at AOT time.
+#[test]
+fn rust_float_engine_matches_jax_goldens() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = zoo::load_manifest(artifacts_dir()).unwrap();
+    let names = zoo::model_names(&manifest);
+    assert_eq!(names.len(), 6, "expected the full zoo");
+    for name in names {
+        let model = zoo::load_model(artifacts_dir(), &manifest, &name).unwrap();
+        let (seed, golden) = model.golden.clone().expect("golden fixture");
+        let sample = shapes::generate(model.task, seed);
+        let input = sample.image_f32();
+        let outs = float_exec::run(&model.graph, &input);
+        let flat: Vec<f32> = outs.iter().flat_map(|t| t.data().iter().copied()).collect();
+        assert_eq!(flat.len(), golden.len(), "{name}: output arity");
+        for (i, (&got, &want)) in flat.iter().zip(golden.iter()).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-3 + 1e-3 * want.abs(),
+                "{name}[{i}]: rust {got} vs jax {want}"
+            );
+        }
+        println!("golden parity OK: {name} ({} outputs)", flat.len());
+    }
+}
+
+/// PJRT path: load each model's HLO, execute, compare to the float engine.
+#[test]
+fn pjrt_runtime_matches_float_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = zoo::load_manifest(artifacts_dir()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    for name in zoo::model_names(&manifest) {
+        let model = zoo::load_model(artifacts_dir(), &manifest, &name).unwrap();
+        let exe = rt.load(model.hlo_path.as_ref().unwrap()).unwrap();
+        let sample = shapes::generate(model.task, 424242);
+        let input = sample.image_f32();
+        let pjrt_out = exe.run_f32(&[&input]).unwrap();
+        let flat_pjrt: Vec<f32> = pjrt_out.into_iter().flatten().collect();
+        let rust_out = float_exec::run(&model.graph, &input);
+        let flat_rust: Vec<f32> = rust_out.iter().flat_map(|t| t.data().iter().copied()).collect();
+        assert_eq!(flat_pjrt.len(), flat_rust.len(), "{name}");
+        // Tolerance note: XLA accumulates convs in f32 with fused reordering
+        // while the Rust engine uses f64 accumulators; relu thresholds can
+        // amplify the difference through depth. 3e-2 absolute on O(1)
+        // outputs still catches any wiring/layout/weight mismatch.
+        for (i, (&a, &b)) in flat_pjrt.iter().zip(flat_rust.iter()).enumerate() {
+            assert!((a - b).abs() <= 3e-2 + 3e-2 * b.abs(), "{name}[{i}]: pjrt {a} vs rust {b}");
+        }
+        println!("pjrt parity OK: {name}");
+    }
+    assert_eq!(rt.cached_count(), 6);
+}
+
+/// Estimator parity: the AOT estimator HLO (L2 graph wrapping the L1
+/// Pallas moments kernel) vs the Rust estimator.
+#[test]
+fn aot_estimator_matches_rust_estimator() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = zoo::load_manifest(artifacts_dir()).unwrap();
+    let est_info = manifest.get("aot").unwrap().get("estimator").unwrap();
+    let (h, w, c) = (
+        est_info.get("h").unwrap().as_usize().unwrap(),
+        est_info.get("w").unwrap().as_usize().unwrap(),
+        est_info.get("c").unwrap().as_usize().unwrap(),
+    );
+    let k = est_info.get("k").unwrap().as_usize().unwrap();
+    let stride = est_info.get("stride").unwrap().as_usize().unwrap();
+    let pad = est_info.get("pad").unwrap().as_usize().unwrap();
+    let gamma = est_info.get("gamma").unwrap().as_usize().unwrap();
+    let hlo = artifacts_dir().join(est_info.get("hlo").unwrap().as_str().unwrap());
+
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&hlo).unwrap();
+    let mut rng = Pcg32::new(99);
+    let data: Vec<f32> = (0..h * w * c).map(|_| rng.normal_ms(0.3, 0.8)).collect();
+    let x = Tensor::from_vec(Shape::hwc(h, w, c), data);
+    let (mu_w, var_w) = (0.07f32, 0.04f32);
+    let out = exe.run_tensor_scalars(&x, &[mu_w, var_w]).unwrap();
+    let aot_mean = out[0][0];
+    let aot_var = out[0][1];
+    let ws = WeightStats { mu: mu_w, var: var_w, mu_ch: vec![], var_ch: vec![], fan_in: c * k * k };
+    let geom = ConvGeom::new(k, k, stride, pad);
+    let rust_m = conv_est::estimate(&x, &ws, &geom, gamma);
+    assert!(
+        (aot_mean - rust_m.mean).abs() <= 1e-2 + 1e-3 * rust_m.mean.abs(),
+        "mean: aot {aot_mean} vs rust {}",
+        rust_m.mean
+    );
+    assert!(
+        (aot_var - rust_m.var).abs() <= 1e-2 + 2e-3 * rust_m.var.abs(),
+        "var: aot {aot_var} vs rust {}",
+        rust_m.var
+    );
+    println!("estimator parity OK: mean {aot_mean} var {aot_var}");
+}
+
+/// End-to-end quantized accuracy sanity: the calibrated emulator must not
+/// collapse on real trained models.
+#[test]
+fn quantized_models_keep_accuracy() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = zoo::load_manifest(artifacts_dir()).unwrap();
+    let model = zoo::load_model(artifacts_dir(), &manifest, "micro_resnet").unwrap();
+    let calib: Vec<Tensor<f32>> = shapes::dataset(pdq::data::Task::Cls, shapes::Split::Calib, 16)
+        .iter()
+        .map(|s| s.image_f32())
+        .collect();
+    let test = shapes::dataset(pdq::data::Task::Cls, shapes::Split::Test, 100);
+
+    let fp_acc = accuracy(&model.graph, &test, None);
+    assert!(fp_acc > 0.8, "fp32 accuracy {fp_acc} too low — training failed?");
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&model.graph),
+            pdq::nn::quant_exec::QuantSettings {
+                mode,
+                granularity: Granularity::PerTensor,
+                ..Default::default()
+            },
+        );
+        ex.calibrate(&calib);
+        let acc = accuracy_q(&ex, &test);
+        println!("{}: acc {acc} (fp32 {fp_acc})", mode.label());
+        assert!(
+            acc > fp_acc - 0.15,
+            "{}: quantized acc {acc} collapsed vs fp32 {fp_acc}",
+            mode.label()
+        );
+    }
+}
+
+fn accuracy(graph: &pdq::nn::Graph, test: &[shapes::DataSample], _: Option<()>) -> f32 {
+    let preds: Vec<usize> = test
+        .iter()
+        .map(|s| argmax(float_exec::run(graph, &s.image_f32())[0].data()))
+        .collect();
+    let labels: Vec<usize> = test.iter().map(|s| s.class_id).collect();
+    pdq::eval::top1(&preds, &labels)
+}
+
+fn accuracy_q(ex: &QuantExecutor, test: &[shapes::DataSample]) -> f32 {
+    let preds: Vec<usize> =
+        test.iter().map(|s| argmax(ex.run(&s.image_f32())[0].data())).collect();
+    let labels: Vec<usize> = test.iter().map(|s| s.class_id).collect();
+    pdq::eval::top1(&preds, &labels)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
