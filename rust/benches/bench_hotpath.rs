@@ -1,6 +1,11 @@
-//! Hot-path microbenchmarks (the §Perf iteration targets):
-//! estimator window sums (naive vs integral), the fixed-point estimator,
-//! the fake-quant executor, and coordinator round-trip overhead.
+//! Hot-path microbenchmarks (the §Perf iteration targets): estimator
+//! window sums (naive vs integral), the full conv estimate (seed
+//! implementation vs arena fast path), the fixed-point estimator, the
+//! fake-quant executor (seed reference engine vs fused arena engine), and
+//! coordinator round-trip overhead.
+//!
+//! Emits a machine-readable report to `BENCH_hotpath.json` (see
+//! EXPERIMENTS.md §Perf) with the headline speedup ratios in `derived`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -8,9 +13,12 @@ use std::time::Duration;
 use pdq::coordinator::calibrate::ExecKind;
 use pdq::coordinator::router::{ModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
-use pdq::estimator::conv::{window_sums_integral, window_sums_naive};
+use pdq::estimator::conv::{
+    estimate_from_window_sums, window_sums_integral, window_sums_naive,
+    window_sums_integral_scratch, WindowSums,
+};
 use pdq::estimator::fixed::FixedEstimator;
-use pdq::estimator::WeightStats;
+use pdq::estimator::{EstimatorScratch, Moments, WeightStats};
 use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
 use pdq::nn::{Graph, QuantMode};
 use pdq::tensor::{ConvGeom, Shape, Tensor};
@@ -20,6 +28,58 @@ use pdq::util::Pcg32;
 fn rand_image(rng: &mut Pcg32, h: usize, w: usize, c: usize) -> Tensor<f32> {
     let data: Vec<f32> = (0..h * w * c).map(|_| rng.normal_ms(0.2, 0.8)).collect();
     Tensor::from_vec(Shape::hwc(h, w, c), data)
+}
+
+/// The seed's integral-image window sums, preserved verbatim as the perf
+/// baseline: per-pixel `px()` index arithmetic and fresh allocations per
+/// call (what `window_sums_integral` did before the arena/scratch rework).
+fn seed_window_sums_integral(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> WindowSums {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let iw = w + 1;
+    let mut i1 = vec![0.0f64; (h + 1) * iw];
+    let mut i2 = vec![0.0f64; (h + 1) * iw];
+    for y in 0..h {
+        let mut row1 = 0.0f64;
+        let mut row2 = 0.0f64;
+        for xx in 0..w {
+            let mut cs = 0.0f64;
+            let mut cs2 = 0.0f64;
+            for ch in 0..c {
+                let v = x.px(y, xx, ch) as f64;
+                cs += v;
+                cs2 += v * v;
+            }
+            row1 += cs;
+            row2 += cs2;
+            i1[(y + 1) * iw + xx + 1] = i1[y * iw + xx + 1] + row1;
+            i2[(y + 1) * iw + xx + 1] = i2[y * iw + xx + 1] + row2;
+        }
+    }
+    let rect = |img: &[f64], y0: usize, y1: usize, x0: usize, x1: usize| -> f64 {
+        img[y1 * iw + x1] - img[y0 * iw + x1] - img[y1 * iw + x0] + img[y0 * iw + x0]
+    };
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            s1.push(rect(&i1, y0, y1, x0, x1));
+            s2.push(rect(&i2, y0, y1, x0, x1));
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    WindowSums { s1, s2 }
+}
+
+/// The seed's `estimate`: seed window sums + closed-form pooling.
+fn seed_estimate(x: &Tensor<f32>, ws: &WeightStats, geom: &ConvGeom, gamma: usize) -> Moments {
+    let sums = seed_window_sums_integral(x, geom, gamma);
+    estimate_from_window_sums(&sums, ws.mu, ws.var)
 }
 
 fn main() {
@@ -38,10 +98,15 @@ fn main() {
         });
     }
 
-    // Full conv estimate (integral path).
+    // Full conv estimate: seed implementation vs arena-scratch fast path.
     let ws = WeightStats { mu: 0.05, var: 0.02, mu_ch: vec![], var_ch: vec![], fan_in: 144 };
+    bench.bench("estimator/estimate_conv_seed", 1.0, || {
+        black_box(seed_estimate(&x, &ws, &geom, 1));
+    });
+    let mut scratch = EstimatorScratch::default();
     bench.bench("estimator/estimate_conv", 1.0, || {
-        black_box(pdq::estimator::conv::estimate(&x, &ws, &geom, 1));
+        window_sums_integral_scratch(&x, &geom, 1, &mut scratch);
+        black_box(estimate_from_window_sums(&scratch.sums, ws.mu, ws.var));
     });
 
     // Integer-only estimator.
@@ -51,7 +116,9 @@ fn main() {
         black_box(fe.estimate_linear(&q, -3));
     });
 
-    // Quantized executor forward (small residual net).
+    // Quantized executor forward (small residual net): the fused arena
+    // engine vs the seed reference engine (fresh tensors, naive kernels,
+    // separate requantize pass).
     let graph = {
         let mut g = Graph::new(Shape::hwc(32, 32, 3));
         let xin = g.input();
@@ -73,8 +140,15 @@ fn main() {
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
         let mut ex = QuantExecutor::new(Arc::clone(&graph), QuantSettings { mode, ..Default::default() });
         ex.calibrate(&calib);
+        bench.bench(&format!("quant_exec/forward_{}_seed", mode.label()), 1.0, || {
+            black_box(ex.run_reference(&img));
+        });
         bench.bench(&format!("quant_exec/forward_{}", mode.label()), 1.0, || {
             black_box(ex.run(&img));
+        });
+        let mut arena = ex.make_arena();
+        bench.bench(&format!("quant_exec/forward_{}_worker_arena", mode.label()), 1.0, || {
+            black_box(ex.run_with_arena(&img, &mut arena));
         });
     }
 
@@ -94,4 +168,32 @@ fn main() {
         black_box(rx.recv().unwrap());
     });
     drop(server.shutdown());
+
+    // Headline ratios for the perf trajectory (EXPERIMENTS.md §Perf).
+    let mut derived: Vec<(&str, f64)> = Vec::new();
+    let pairs = [
+        ("speedup_forward_ours", "quant_exec/forward_ours_seed", "quant_exec/forward_ours"),
+        ("speedup_forward_static", "quant_exec/forward_static_seed", "quant_exec/forward_static"),
+        (
+            "speedup_forward_dynamic",
+            "quant_exec/forward_dynamic_seed",
+            "quant_exec/forward_dynamic",
+        ),
+        ("speedup_estimate_conv", "estimator/estimate_conv_seed", "estimator/estimate_conv"),
+        (
+            "speedup_window_sums_g1",
+            "estimator/window_sums_naive_g1",
+            "estimator/window_sums_integral_g1",
+        ),
+    ];
+    for (name, slow, fast) in pairs {
+        if let Some(s) = bench.speedup(slow, fast) {
+            println!("derived {name}: {s:.2}x");
+            derived.push((name, s));
+        }
+    }
+    match bench.save_json("BENCH_hotpath.json", &derived) {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -23,6 +23,18 @@ pub fn next_batch<T>(rx: &mpsc::Receiver<T>, policy: &BatchPolicy) -> Option<Vec
     // Block for the first item.
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
+    // Fast path under load: drain whatever is already queued without
+    // touching the clock or parking the thread — a hot queue fills the
+    // batch with `max_batch - 1` lock-free pops and zero timeout syscalls.
+    while batch.len() < policy.max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(_) => break,
+        }
+    }
+    if batch.len() >= policy.max_batch {
+        return Some(batch);
+    }
     let t0 = Instant::now();
     while batch.len() < policy.max_batch {
         let remaining = policy.deadline.saturating_sub(t0.elapsed());

@@ -30,6 +30,29 @@ impl ExecKind {
             ExecKind::Quant(ex) => ex.run(img),
         }
     }
+
+    /// A packed execution arena for this variant. Workers create one per
+    /// thread and feed it to [`ExecKind::run_with_arena`] so every batched
+    /// request reuses the same buffers.
+    pub fn make_arena(&self) -> crate::nn::ExecArena {
+        match self {
+            ExecKind::Float(g) => crate::nn::ExecArena::for_run(g),
+            ExecKind::Quant(ex) => ex.make_arena(),
+        }
+    }
+
+    /// Run one image through a caller-owned arena (allocation-free in
+    /// steady state).
+    pub fn run_with_arena(
+        &self,
+        img: &Tensor<f32>,
+        arena: &mut crate::nn::ExecArena,
+    ) -> Vec<Tensor<f32>> {
+        match self {
+            ExecKind::Float(g) => crate::nn::float_exec::run_with_arena(g, img, arena),
+            ExecKind::Quant(ex) => ex.run_with_arena(img, arena),
+        }
+    }
 }
 
 /// The paper's calibration-set size (§5.2).

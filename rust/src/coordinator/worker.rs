@@ -36,25 +36,31 @@ pub fn spawn_workers(
             let name = format!("{name}#{i}");
             std::thread::Builder::new()
                 .name(name)
-                .spawn(move || loop {
-                    // Pull one batch while holding the lock, then release it
-                    // so sibling workers can pull the next batch while this
-                    // one executes.
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        next_batch(&guard, &policy)
-                    };
-                    let Some(batch) = batch else { return };
-                    metrics.on_batch(batch.len());
-                    for job in batch {
-                        let outputs = exec.run(&job.request.image);
-                        let latency = job.enqueued.elapsed();
-                        metrics.on_response(latency);
-                        let _ = job.request.reply.send(Response {
-                            id: job.request.id,
-                            outputs,
-                            latency,
-                        });
+                .spawn(move || {
+                    // One arena per worker thread, reused across every batch
+                    // and request this worker ever executes: after the first
+                    // request the forward pass allocates nothing.
+                    let mut arena = exec.make_arena();
+                    loop {
+                        // Pull one batch while holding the lock, then release
+                        // it so sibling workers can pull the next batch while
+                        // this one executes.
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            next_batch(&guard, &policy)
+                        };
+                        let Some(batch) = batch else { return };
+                        metrics.on_batch(batch.len());
+                        for job in batch {
+                            let outputs = exec.run_with_arena(&job.request.image, &mut arena);
+                            let latency = job.enqueued.elapsed();
+                            metrics.on_response(latency);
+                            let _ = job.request.reply.send(Response {
+                                id: job.request.id,
+                                outputs,
+                                latency,
+                            });
+                        }
                     }
                 })
                 .expect("spawn worker")

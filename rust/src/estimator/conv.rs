@@ -28,7 +28,7 @@ use crate::tensor::{ConvGeom, Tensor};
 use crate::util::stats::Welford;
 
 /// Window sums at the sampled output positions.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WindowSums {
     /// Σ x over each sampled receptive field.
     pub s1: Vec<f64>,
@@ -36,11 +36,22 @@ pub struct WindowSums {
     pub s2: Vec<f64>,
 }
 
+/// Reusable scratch for the integral-image fast path: the integral images
+/// and the sampled window sums. Owned by [`crate::nn::memory::ExecArena`]
+/// on the serving path, so steady-state estimation allocates nothing.
+#[derive(Default)]
+pub struct EstimatorScratch {
+    i1: Vec<f64>,
+    i2: Vec<f64>,
+    /// Window sums of the most recent `window_sums_integral_scratch` call.
+    pub sums: WindowSums,
+}
+
 /// Naive strided evaluation — the reference the paper's complexity model
 /// (§4.2) describes: `O(H W p k k' / γ²)` operations.
 pub fn window_sums_naive(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> WindowSums {
     assert!(gamma >= 1, "sampling stride must be >= 1");
-    let (h, w, _c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
     let (oh, ow) = geom.out_dims(h, w);
     let mut s1 = Vec::new();
     let mut s2 = Vec::new();
@@ -54,7 +65,7 @@ pub fn window_sums_naive(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> Wind
             let mut b = 0.0f64;
             for yy in y0..y1 {
                 for xx in x0..x1 {
-                    for ch in 0..x.shape().dim(2) {
+                    for ch in 0..c {
                         let v = x.px(yy, xx, ch) as f64;
                         a += v;
                         b += v * v;
@@ -73,23 +84,47 @@ pub fn window_sums_naive(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> Wind
 /// Summed-area-table evaluation: precompute integral images of the
 /// channel-summed input and its square, then each window sum is 4 lookups.
 /// Identical results to [`window_sums_naive`] up to f64 rounding.
+///
+/// Allocates fresh buffers; the hot path uses
+/// [`window_sums_integral_scratch`] with arena-owned scratch instead.
 pub fn window_sums_integral(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> WindowSums {
+    let mut scratch = EstimatorScratch::default();
+    window_sums_integral_scratch(x, geom, gamma, &mut scratch);
+    scratch.sums
+}
+
+/// [`window_sums_integral`] writing into reusable scratch: zero heap
+/// allocation in steady state, and the inner loops walk the tensor's flat
+/// storage directly instead of going through per-pixel index arithmetic.
+/// Results land in `scratch.sums`.
+pub fn window_sums_integral_scratch(
+    x: &Tensor<f32>,
+    geom: &ConvGeom,
+    gamma: usize,
+    scratch: &mut EstimatorScratch,
+) {
     assert!(gamma >= 1, "sampling stride must be >= 1");
     let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
     let (oh, ow) = geom.out_dims(h, w);
     // Integral images with a zero top row/left column: I[(y+1)(w+1)+(x+1)]
     // = prefix sum over rows<=y, cols<=x of the channel-summed input.
     let iw = w + 1;
-    let mut i1 = vec![0.0f64; (h + 1) * iw];
-    let mut i2 = vec![0.0f64; (h + 1) * iw];
+    let i1 = &mut scratch.i1;
+    let i2 = &mut scratch.i2;
+    i1.clear();
+    i1.resize((h + 1) * iw, 0.0);
+    i2.clear();
+    i2.resize((h + 1) * iw, 0.0);
+    let xd = x.data();
     for y in 0..h {
         let mut row1 = 0.0f64;
         let mut row2 = 0.0f64;
+        let src = &xd[y * w * c..(y + 1) * w * c];
         for xx in 0..w {
             let mut cs = 0.0f64;
             let mut cs2 = 0.0f64;
-            for ch in 0..c {
-                let v = x.px(y, xx, ch) as f64;
+            for &v in &src[xx * c..(xx + 1) * c] {
+                let v = v as f64;
                 cs += v;
                 cs2 += v * v;
             }
@@ -102,21 +137,22 @@ pub fn window_sums_integral(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> W
     let rect = |img: &[f64], y0: usize, y1: usize, x0: usize, x1: usize| -> f64 {
         img[y1 * iw + x1] - img[y0 * iw + x1] - img[y1 * iw + x0] + img[y0 * iw + x0]
     };
-    let mut s1 = Vec::new();
-    let mut s2 = Vec::new();
+    let s1 = &mut scratch.sums.s1;
+    let s2 = &mut scratch.sums.s2;
+    s1.clear();
+    s2.clear();
     let mut oy = 0;
     while oy < oh {
         let (y0, y1) = geom.in_range_y(oy, h);
         let mut ox = 0;
         while ox < ow {
             let (x0, x1) = geom.in_range_x(ox, w);
-            s1.push(rect(&i1, y0, y1, x0, x1));
-            s2.push(rect(&i2, y0, y1, x0, x1));
+            s1.push(rect(i1, y0, y1, x0, x1));
+            s2.push(rect(i2, y0, y1, x0, x1));
             ox += gamma;
         }
         oy += gamma;
     }
-    WindowSums { s1, s2 }
 }
 
 /// Per-tensor conv estimate: Eq. 10–11 with global kernel statistics,
@@ -127,8 +163,20 @@ pub fn window_sums_integral(x: &Tensor<f32>, geom: &ConvGeom, gamma: usize) -> W
 /// `Var[y] = σ²·mean(S2) + µ²·var(S1)` — no per-position buffer needed
 /// (this is the O(1)-memory claim of §4.2).
 pub fn estimate(x: &Tensor<f32>, ws: &WeightStats, geom: &ConvGeom, gamma: usize) -> Moments {
-    let sums = window_sums_integral(x, geom, gamma);
-    estimate_from_window_sums(&sums, ws.mu, ws.var)
+    let mut scratch = EstimatorScratch::default();
+    estimate_scratch(x, ws, geom, gamma, &mut scratch)
+}
+
+/// [`estimate`] with arena-owned scratch (the serving hot path).
+pub fn estimate_scratch(
+    x: &Tensor<f32>,
+    ws: &WeightStats,
+    geom: &ConvGeom,
+    gamma: usize,
+    scratch: &mut EstimatorScratch,
+) -> Moments {
+    window_sums_integral_scratch(x, geom, gamma, scratch);
+    estimate_from_window_sums(&scratch.sums, ws.mu, ws.var)
 }
 
 /// Per-tensor estimate from precomputed window sums.
@@ -157,8 +205,20 @@ pub fn estimate_per_channel(
     geom: &ConvGeom,
     gamma: usize,
 ) -> Vec<Moments> {
-    let sums = window_sums_integral(x, geom, gamma);
-    estimate_per_channel_from_sums(&sums, ws)
+    let mut scratch = EstimatorScratch::default();
+    estimate_per_channel_scratch(x, ws, geom, gamma, &mut scratch)
+}
+
+/// [`estimate_per_channel`] with arena-owned scratch.
+pub fn estimate_per_channel_scratch(
+    x: &Tensor<f32>,
+    ws: &WeightStats,
+    geom: &ConvGeom,
+    gamma: usize,
+    scratch: &mut EstimatorScratch,
+) -> Vec<Moments> {
+    window_sums_integral_scratch(x, geom, gamma, scratch);
+    estimate_per_channel_from_sums(&scratch.sums, ws)
 }
 
 /// Per-channel estimate from precomputed window sums. Shares the S1/S2
@@ -196,21 +256,39 @@ pub fn dw_estimate_per_channel(
     geom: &ConvGeom,
     gamma: usize,
 ) -> Vec<Moments> {
+    let mut scratch = EstimatorScratch::default();
+    dw_estimate_per_channel_scratch(x, ws, geom, gamma, &mut scratch)
+}
+
+/// [`dw_estimate_per_channel`] with arena-owned scratch.
+pub fn dw_estimate_per_channel_scratch(
+    x: &Tensor<f32>,
+    ws: &WeightStats,
+    geom: &ConvGeom,
+    gamma: usize,
+    scratch: &mut EstimatorScratch,
+) -> Vec<Moments> {
     assert!(gamma >= 1);
     let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
     assert_eq!(ws.channels(), c, "depthwise stats must match input channels");
     let (oh, ow) = geom.out_dims(h, w);
     // Per-channel integral images.
     let iw = w + 1;
-    let mut i1 = vec![0.0f64; (h + 1) * iw * c];
-    let mut i2 = vec![0.0f64; (h + 1) * iw * c];
+    let i1 = &mut scratch.i1;
+    let i2 = &mut scratch.i2;
+    i1.clear();
+    i1.resize((h + 1) * iw * c, 0.0);
+    i2.clear();
+    i2.resize((h + 1) * iw * c, 0.0);
+    let xd = x.data();
     for ch in 0..c {
         let base = ch * (h + 1) * iw;
         for y in 0..h {
             let mut row1 = 0.0f64;
             let mut row2 = 0.0f64;
+            let src = &xd[y * w * c..(y + 1) * w * c];
             for xx in 0..w {
-                let v = x.px(y, xx, ch) as f64;
+                let v = src[xx * c + ch] as f64;
                 row1 += v;
                 row2 += v * v;
                 i1[base + (y + 1) * iw + xx + 1] = i1[base + y * iw + xx + 1] + row1;
@@ -234,8 +312,8 @@ pub fn dw_estimate_per_channel(
             let mut ox = 0;
             while ox < ow {
                 let (x0, x1) = geom.in_range_x(ox, w);
-                w1.push(rect(&i1, y0, y1, x0, x1));
-                m2 += rect(&i2, y0, y1, x0, x1);
+                w1.push(rect(i1, y0, y1, x0, x1));
+                m2 += rect(i2, y0, y1, x0, x1);
                 n += 1;
                 ox += gamma;
             }
@@ -322,6 +400,25 @@ mod tests {
             crate::util::check::close(fast.mean, slow.mean, 1e-4, 1e-4, "mean")?;
             crate::util::check::close(fast.var, slow.var, 1e-4, 1e-4, "var")
         });
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable() {
+        // The arena-owned scratch must retarget across differently-sized
+        // inputs with no stale-state bleed.
+        let mut rng = Pcg32::new(77);
+        let mut scratch = EstimatorScratch::default();
+        let geom = ConvGeom::same(3, 1);
+        let a = rand_image(&mut rng, 10, 9, 3);
+        let b = rand_image(&mut rng, 6, 7, 2);
+        let wa = window_sums_integral(&a, &geom, 1);
+        let wb = window_sums_integral(&b, &geom, 2);
+        window_sums_integral_scratch(&a, &geom, 1, &mut scratch);
+        assert_eq!(scratch.sums, wa);
+        window_sums_integral_scratch(&b, &geom, 2, &mut scratch);
+        assert_eq!(scratch.sums, wb);
+        window_sums_integral_scratch(&a, &geom, 1, &mut scratch);
+        assert_eq!(scratch.sums, wa);
     }
 
     /// Eq. 10–11 end-to-end: with a kernel actually drawn i.i.d. Gaussian,

@@ -37,5 +37,6 @@ pub mod linear;
 pub mod weight_stats;
 
 pub use aggregate::Moments;
+pub use conv::EstimatorScratch;
 pub use interval::IntervalSpec;
 pub use weight_stats::WeightStats;

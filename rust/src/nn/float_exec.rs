@@ -1,8 +1,20 @@
 //! FP32 graph executor — the tables' "FP32" column and the numeric oracle
 //! for the quantized executors.
+//!
+//! Two execution engines live here:
+//! - [`run`] / [`run_trace`] / [`eval_op`] — the reference engine: fresh
+//!   tensor per node, naive f64-accumulating kernels. Oracle only.
+//! - [`run_with_arena`] / [`eval_node_arena`] — the serving hot path:
+//!   liveness-planned buffers from a [`super::memory::ExecArena`], im2col +
+//!   register-blocked kernels, and an optional fused requantize epilogue
+//!   (used by the quantized executor). Zero heap allocation in steady
+//!   state.
 
 use super::graph::{Graph, NodeId, Op};
+use super::memory::ExecArena;
 use super::ops;
+use crate::quant::affine::fake_quantize;
+use crate::quant::granularity::QParamSet;
 use crate::tensor::Tensor;
 
 /// Run the graph in full precision; returns the values of the output nodes.
@@ -59,6 +71,120 @@ pub fn eval_op(
     }
 }
 
+/// Forward pass into a reusable arena: after the first (warming) call,
+/// repeated passes perform no heap allocation. Returns clones of the
+/// output node values; intermediate values live in the arena per its plan.
+pub fn run_with_arena(graph: &Graph, input: &Tensor<f32>, arena: &mut ExecArena) -> Vec<Tensor<f32>> {
+    assert_eq!(
+        input.shape(),
+        graph.input_shape(),
+        "input shape mismatch: got {}, graph wants {}",
+        input.shape(),
+        graph.input_shape()
+    );
+    assert_eq!(
+        arena.plan.shapes.len(),
+        graph.nodes().len(),
+        "arena plan does not match graph"
+    );
+    for idx in 0..graph.nodes().len() {
+        eval_node_arena(graph, idx, input, arena, None);
+    }
+    graph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect()
+}
+
+/// Evaluate node `idx` into its arena slot using the fast kernels.
+///
+/// For quantizable nodes, `epi` (when given) is applied to every output
+/// element *in the same sweep that writes it* — the fused
+/// estimate-requantize epilogue: by the time the kernel runs, the
+/// probabilistic/static quantization parameters are already known, so the
+/// separate full-tensor requantization pass of the reference engine
+/// disappears. Non-quantizable nodes ignore `epi`.
+pub(crate) fn eval_node_arena(
+    graph: &Graph,
+    idx: usize,
+    graph_input: &Tensor<f32>,
+    arena: &mut ExecArena,
+    epi: Option<&QParamSet>,
+) {
+    let node = &graph.nodes()[idx];
+    let out_slot = arena.plan.slots[idx];
+    let out_shape = arena.plan.shapes[idx].clone();
+    match &node.op {
+        Op::Input => {
+            let t = &mut arena.slots[out_slot];
+            t.resize_to(out_shape);
+            t.data_mut().copy_from_slice(graph_input.data());
+            return;
+        }
+        // In-place path: elementwise ops (and the no-op reshape) whose plan
+        // aliased them onto their dying input's slot.
+        Op::Relu | Op::Relu6 | Op::Flatten => {
+            let in_slot = arena.plan.slots[node.inputs[0].0];
+            if in_slot == out_slot {
+                let t = &mut arena.slots[out_slot];
+                match node.op {
+                    Op::Relu => ops::relu_slice(t.data_mut()),
+                    Op::Relu6 => ops::relu6_slice(t.data_mut()),
+                    _ => {}
+                }
+                t.resize_to(out_shape); // flatten: same numel, new shape
+                return;
+            }
+        }
+        _ => {}
+    }
+    // General path: detach the output buffer, compute, reattach. The
+    // borrows below split the arena by field (slots read, scratch written).
+    let mut out = arena.take_slot(out_slot);
+    out.resize_to(out_shape);
+    {
+        let (plan, slots, scratch) = (&arena.plan, &arena.slots, &mut arena.scratch);
+        let arg = |i: usize| &slots[plan.slots[node.inputs[i].0]];
+        match &node.op {
+            Op::Conv { w, b, geom } => match epi {
+                None => ops::conv2d_into(arg(0), w, b, geom, scratch, out.data_mut(), |v, _| v),
+                Some(set) => ops::conv2d_into(arg(0), w, b, geom, scratch, out.data_mut(), |v, ch| {
+                    fake_quantize(v, set.for_channel(ch))
+                }),
+            },
+            Op::DwConv { w, b, geom } => match epi {
+                None => ops::dwconv2d_into(arg(0), w, b, geom, scratch, out.data_mut(), |v, _| v),
+                Some(set) => {
+                    ops::dwconv2d_into(arg(0), w, b, geom, scratch, out.data_mut(), |v, ch| {
+                        fake_quantize(v, set.for_channel(ch))
+                    })
+                }
+            },
+            Op::Linear { w, b } => match epi {
+                None => ops::linear_into(arg(0).data(), w, b, out.data_mut(), |v, _| v),
+                Some(set) => ops::linear_into(arg(0).data(), w, b, out.data_mut(), |v, ch| {
+                    fake_quantize(v, set.for_channel(ch))
+                }),
+            },
+            Op::Relu => {
+                let x = arg(0);
+                for (o, &v) in out.data_mut().iter_mut().zip(x.data().iter()) {
+                    *o = v.max(0.0);
+                }
+            }
+            Op::Relu6 => {
+                let x = arg(0);
+                for (o, &v) in out.data_mut().iter_mut().zip(x.data().iter()) {
+                    *o = v.clamp(0.0, 6.0);
+                }
+            }
+            Op::MaxPool { k, stride } => ops::maxpool_into(arg(0), *k, *stride, out.data_mut()),
+            Op::GlobalAvgPool => ops::global_avg_pool_into(arg(0), out.data_mut()),
+            Op::Flatten => out.data_mut().copy_from_slice(arg(0).data()),
+            Op::Add => ops::add_into(arg(0).data(), arg(1).data(), out.data_mut()),
+            Op::Input => unreachable!("handled above"),
+        }
+    }
+    arena.slots[out_slot] = out;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +233,42 @@ mod tests {
         let g = build_residual_graph();
         let bad = Tensor::image(3, 3, 1);
         run(&g, &bad);
+    }
+
+    #[test]
+    fn arena_engine_matches_reference_engine() {
+        let g = build_residual_graph();
+        let input = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![-1.0, 2.0, -3.0, 4.0]);
+        let want = run(&g, &input);
+        let mut arena = crate::nn::memory::ExecArena::for_run(&g);
+        let got1 = run_with_arena(&g, &input, &mut arena);
+        // Second pass through the warmed arena must be bit-identical (no
+        // stale-buffer bleed).
+        let got2 = run_with_arena(&g, &input, &mut arena);
+        assert_eq!(got1[0].data(), want[0].data());
+        assert_eq!(got2[0].data(), want[0].data());
+    }
+
+    #[test]
+    fn arena_engine_full_pipeline_close() {
+        let mut g = Graph::new(Shape::hwc(8, 8, 3));
+        let x = g.input();
+        let w1 = Tensor::full(Shape::ohwi(4, 3, 3, 3), 0.01f32);
+        let c1 = g.conv(x, w1, vec![0.1; 4], ConvGeom::same(3, 2));
+        let r1 = g.relu(c1);
+        let m = g.maxpool(r1, 2, 2);
+        let p = g.global_avg_pool(m);
+        let wl = Tensor::full(Shape::new(&[10, 4]), 0.1f32);
+        let l = g.linear(p, wl, vec![0.0; 10]);
+        g.mark_output(l);
+        let img = Tensor::full(Shape::hwc(8, 8, 3), 1.0f32);
+        let want = run(&g, &img);
+        let mut arena = crate::nn::memory::ExecArena::for_run(&g);
+        let got = run_with_arena(&g, &img, &mut arena);
+        assert_eq!(got[0].shape().dims(), &[10]);
+        for (a, b) in got[0].data().iter().zip(want[0].data().iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The §3 working-memory model.
+//! The §3 working-memory model, and the executor memory planner built on
+//! top of it.
 //!
 //! For a layer with `h` output entries, casting bit-width `b′` and storage
 //! bit-width `b`:
@@ -11,9 +12,21 @@
 //!
 //! (§4.2: "the memory overhead of the parameter estimation is constant and
 //! equal to 2b′ bit".)
+//!
+//! The second half of this module turns the same shape propagation into an
+//! executable **buffer plan**: [`MemoryPlan`] assigns every node an arena
+//! slot using liveness analysis (a buffer is recycled once its last consumer
+//! has run; elementwise ops overwrite a dying input in place), and
+//! [`ExecArena`] owns the slot buffers plus the kernel/estimator scratch so
+//! repeated forward passes perform **zero heap allocation in steady state**
+//! (see EXPERIMENTS.md §Perf).
 
-use super::graph::{Graph, Op};
+use std::sync::Arc;
+
+use super::graph::{Graph, NodeId, Op};
 use super::quant_exec::QuantMode;
+use crate::estimator::conv::EstimatorScratch;
+use crate::tensor::{Shape, Tensor};
 
 /// Casting bit-width `b′` used by the arithmetic (int32 accumulators).
 pub const B_PRIME: usize = 32;
@@ -27,54 +40,47 @@ pub fn overhead_bits(mode: QuantMode, h: usize) -> usize {
     }
 }
 
+/// Symbolically propagate shapes: the output [`Shape`] of every node when
+/// the graph runs on its nominal input shape.
+pub fn infer_shapes(graph: &Graph) -> Vec<Shape> {
+    let mut shapes: Vec<Shape> = Vec::with_capacity(graph.nodes().len());
+    for node in graph.nodes() {
+        let arg = |i: usize| &shapes[node.inputs[i].0];
+        let sh = match &node.op {
+            Op::Input => graph.input_shape().clone(),
+            Op::Conv { w, geom, .. } | Op::DwConv { w, geom, .. } => {
+                let s = arg(0);
+                let (oh, ow) = geom.out_dims(s.dim(0), s.dim(1));
+                Shape::hwc(oh, ow, w.shape().dim(0))
+            }
+            Op::Linear { w, .. } => Shape::new(&[w.shape().dim(0)]),
+            Op::MaxPool { k, stride } => {
+                let s = arg(0);
+                Shape::hwc((s.dim(0) - k) / stride + 1, (s.dim(1) - k) / stride + 1, s.dim(2))
+            }
+            Op::GlobalAvgPool => {
+                let s = arg(0);
+                Shape::new(&[s.dim(s.rank() - 1)])
+            }
+            Op::Flatten => Shape::new(&[arg(0).numel()]),
+            Op::Relu | Op::Relu6 | Op::Add => arg(0).clone(),
+        };
+        shapes.push(sh);
+    }
+    shapes
+}
+
 /// Per-layer output entry counts for a graph executed on its nominal input
 /// shape — drives the whole-model memory report (experiment A3).
 pub fn layer_output_sizes(graph: &Graph) -> Vec<(usize, &'static str, usize)> {
-    // Symbolically propagate shapes.
-    let (h0, w0, c0) = {
-        let d = graph.input_shape().dims();
-        match d.len() {
-            3 => (d[0], d[1], d[2]),
-            1 => (1, 1, d[0]),
-            _ => panic!("unsupported input rank"),
-        }
-    };
-    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
-    let mut out = Vec::new();
-    for (idx, node) in graph.nodes().iter().enumerate() {
-        let sh = match &node.op {
-            Op::Input => (h0, w0, c0),
-            Op::Conv { w, geom, .. } => {
-                let (h, wd, _) = shapes[node.inputs[0].0];
-                let (oh, ow) = geom.out_dims(h, wd);
-                (oh, ow, w.shape().dim(0))
-            }
-            Op::DwConv { w, geom, .. } => {
-                let (h, wd, _) = shapes[node.inputs[0].0];
-                let (oh, ow) = geom.out_dims(h, wd);
-                (oh, ow, w.shape().dim(0))
-            }
-            Op::Linear { w, .. } => (1, 1, w.shape().dim(0)),
-            Op::MaxPool { k, stride } => {
-                let (h, wd, c) = shapes[node.inputs[0].0];
-                ((h - k) / stride + 1, (wd - k) / stride + 1, c)
-            }
-            Op::GlobalAvgPool => {
-                let (_, _, c) = shapes[node.inputs[0].0];
-                (1, 1, c)
-            }
-            Op::Flatten => {
-                let (h, wd, c) = shapes[node.inputs[0].0];
-                (1, 1, h * wd * c)
-            }
-            Op::Relu | Op::Relu6 | Op::Add => shapes[node.inputs[0].0],
-        };
-        if node.op.is_quantizable() {
-            out.push((idx, node.op.name(), sh.0 * sh.1 * sh.2));
-        }
-        shapes.push(sh);
-    }
-    out
+    let shapes = infer_shapes(graph);
+    graph
+        .nodes()
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.op.is_quantizable())
+        .map(|(i, n)| (i, n.op.name(), shapes[i].numel()))
+        .collect()
 }
 
 /// Whole-model peak quantization overhead in bits: the maximum per-layer
@@ -85,6 +91,151 @@ pub fn peak_overhead_bits(graph: &Graph, mode: QuantMode) -> usize {
         .map(|&(_, _, h)| overhead_bits(mode, h))
         .max()
         .unwrap_or(0)
+}
+
+/// A liveness-based buffer plan: every node is assigned an arena slot; two
+/// nodes share a slot only if their values are never live simultaneously.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    /// Output shape of every node.
+    pub shapes: Vec<Shape>,
+    /// Arena slot holding every node's output.
+    pub slots: Vec<usize>,
+    /// Number of distinct slots.
+    pub num_slots: usize,
+    /// Per-slot capacity in f32 elements (max numel over assigned nodes).
+    pub slot_elems: Vec<usize>,
+}
+
+impl MemoryPlan {
+    /// One slot per node — every value stays live. Used by `run_trace`
+    /// (calibration and tests need the full trace).
+    pub fn trace(graph: &Graph) -> Self {
+        let shapes = infer_shapes(graph);
+        let slots: Vec<usize> = (0..shapes.len()).collect();
+        let slot_elems: Vec<usize> = shapes.iter().map(|s| s.numel()).collect();
+        Self { num_slots: shapes.len(), shapes, slots, slot_elems }
+    }
+
+    /// Liveness-packed plan: a node's buffer is recycled after its last
+    /// consumer runs; `Relu`/`Relu6`/`Flatten` overwrite an input that dies
+    /// at them in place. Output nodes are pinned for the whole pass.
+    pub fn packed(graph: &Graph) -> Self {
+        let shapes = infer_shapes(graph);
+        let n = shapes.len();
+        let mut last_use = vec![0usize; n];
+        for (i, node) in graph.nodes().iter().enumerate() {
+            for &NodeId(j) in &node.inputs {
+                last_use[j] = last_use[j].max(i);
+            }
+        }
+        for NodeId(i) in graph.output_ids() {
+            last_use[i] = usize::MAX;
+        }
+        let mut slots = vec![0usize; n];
+        let mut free: Vec<usize> = Vec::new();
+        let mut num_slots = 0usize;
+        for (i, node) in graph.nodes().iter().enumerate() {
+            // Elementwise ops (and the no-op reshape) may steal the buffer
+            // of an input whose last use is this very node.
+            let mut in_place = None;
+            if matches!(node.op, Op::Relu | Op::Relu6 | Op::Flatten) {
+                if let Some(&NodeId(j)) = node.inputs.first() {
+                    if last_use[j] == i {
+                        in_place = Some(slots[j]);
+                    }
+                }
+            }
+            let slot = match in_place {
+                Some(s) => s,
+                None => match free.pop() {
+                    Some(s) => s,
+                    None => {
+                        num_slots += 1;
+                        num_slots - 1
+                    }
+                },
+            };
+            slots[i] = slot;
+            // Release the inputs that die here (guarding against duplicate
+            // inputs such as `add(x, x)` double-freeing a slot).
+            for &NodeId(j) in &node.inputs {
+                if last_use[j] == i {
+                    let s = slots[j];
+                    if s != slot && !free.contains(&s) {
+                        free.push(s);
+                    }
+                }
+            }
+            // A value nobody consumes (and that is not an output) is
+            // transient: recycle it immediately.
+            if last_use[i] <= i && !free.contains(&slot) {
+                free.push(slot);
+            }
+        }
+        let mut slot_elems = vec![0usize; num_slots];
+        for (i, &s) in slots.iter().enumerate() {
+            slot_elems[s] = slot_elems[s].max(shapes[i].numel());
+        }
+        Self { shapes, slots, num_slots, slot_elems }
+    }
+
+    /// Total arena footprint in f32 elements.
+    pub fn total_elems(&self) -> usize {
+        self.slot_elems.iter().sum()
+    }
+}
+
+/// Reusable execution workspace: slot buffers sized by a [`MemoryPlan`]
+/// plus the im2col and estimator scratch. After the first forward pass every
+/// buffer has reached its steady-state capacity and subsequent passes
+/// allocate nothing.
+pub struct ExecArena {
+    pub(crate) plan: Arc<MemoryPlan>,
+    /// One tensor per slot; `resize_to` retargets them without reallocating.
+    pub(crate) slots: Vec<Tensor<f32>>,
+    /// im2col patch matrix / transposed depthwise weights.
+    pub(crate) scratch: Vec<f32>,
+    /// Integral images + window sums for the probabilistic estimator.
+    pub(crate) est: EstimatorScratch,
+}
+
+impl ExecArena {
+    pub fn new(plan: Arc<MemoryPlan>) -> Self {
+        let slots = (0..plan.num_slots).map(|_| Tensor::empty()).collect();
+        Self { plan, slots, scratch: Vec::new(), est: EstimatorScratch::default() }
+    }
+
+    /// Arena for the packed (outputs-only) forward pass.
+    pub fn for_run(graph: &Graph) -> Self {
+        Self::new(Arc::new(MemoryPlan::packed(graph)))
+    }
+
+    /// Arena for the full-trace forward pass (every node value kept).
+    pub fn for_trace(graph: &Graph) -> Self {
+        Self::new(Arc::new(MemoryPlan::trace(graph)))
+    }
+
+    pub fn plan(&self) -> &MemoryPlan {
+        &self.plan
+    }
+
+    /// The value of node `idx` as of the last executed pass. Only
+    /// meaningful for nodes whose slot has not been recycled — always safe
+    /// for graph outputs (pinned) and for every node under a trace plan.
+    pub fn value(&self, idx: usize) -> &Tensor<f32> {
+        &self.slots[self.plan.slots[idx]]
+    }
+
+    /// Detach the slot tensor for writing (leaves an empty sentinel).
+    pub(crate) fn take_slot(&mut self, slot: usize) -> Tensor<f32> {
+        std::mem::replace(&mut self.slots[slot], Tensor::empty())
+    }
+
+    /// Current backing capacity in f32 elements (diagnostics).
+    pub fn capacity_elems(&self) -> usize {
+        self.slots.iter().map(|t| t.numel()).sum::<usize>() + self.scratch.len()
+    }
 }
 
 #[cfg(test)]
@@ -142,5 +293,56 @@ mod tests {
         assert_eq!(ours_peak, 160);
         // The paper's headline: ours is orders of magnitude below dynamic.
         assert!(dyn_peak / ours_peak > 100);
+    }
+
+    #[test]
+    fn infer_shapes_full_rank() {
+        let g = graph();
+        let shapes = infer_shapes(&g);
+        assert_eq!(shapes[0].dims(), &[16, 16, 3]); // input
+        assert_eq!(shapes[1].dims(), &[16, 16, 8]); // conv
+        assert_eq!(shapes[2].dims(), &[16, 16, 8]); // relu
+        assert_eq!(shapes[3].dims(), &[8]); // gap
+        assert_eq!(shapes[4].dims(), &[10]); // linear
+    }
+
+    #[test]
+    fn packed_plan_reuses_buffers() {
+        let g = graph();
+        let plan = MemoryPlan::packed(&g);
+        let trace = MemoryPlan::trace(&g);
+        // relu runs in place on the conv buffer.
+        assert_eq!(plan.slots[2], plan.slots[1]);
+        // Chain graph: input + one live intermediate is enough.
+        assert!(plan.num_slots <= 3, "chain graph needs few slots, got {}", plan.num_slots);
+        assert!(plan.total_elems() < trace.total_elems());
+        // The output's slot is never recycled by a later node (it is last).
+        assert_eq!(plan.shapes[4].numel(), 10);
+    }
+
+    #[test]
+    fn packed_plan_respects_residual_liveness() {
+        // input -> conv -> relu -> add(input): the input stays live across
+        // the conv/relu, so add's operands must sit in distinct slots.
+        let mut g = Graph::new(Shape::hwc(4, 4, 1));
+        let x = g.input();
+        let w = Tensor::from_vec(Shape::ohwi(1, 1, 1, 1), vec![1.0]);
+        let c = g.conv(x, w, vec![0.0], ConvGeom::new(1, 1, 1, 0));
+        let r = g.relu(c);
+        let a = g.add(r, x);
+        g.mark_output(a);
+        let plan = MemoryPlan::packed(&g);
+        assert_ne!(plan.slots[0], plan.slots[1], "input vs conv");
+        assert_eq!(plan.slots[2], plan.slots[1], "relu in place on conv");
+        assert_ne!(plan.slots[3], plan.slots[0], "add output vs live input");
+        assert_ne!(plan.slots[3], plan.slots[2], "add output vs live relu");
+    }
+
+    #[test]
+    fn arena_value_reads_outputs() {
+        let g = graph();
+        let arena = ExecArena::for_run(&g);
+        assert_eq!(arena.plan().num_slots, arena.slots.len());
+        assert_eq!(arena.capacity_elems(), 0, "cold arena owns no buffers yet");
     }
 }

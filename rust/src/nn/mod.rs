@@ -14,7 +14,9 @@
 //!   pre-activation requantization strategies of Fig. 1: `Static`,
 //!   `Dynamic` and `Probabilistic` (ours), each at per-tensor or
 //!   per-channel granularity.
-//! - [`memory`] — the §3 working-memory model (3b′ vs b′·h vs 3b′+2b′).
+//! - [`memory`] — the §3 working-memory model (3b′ vs b′·h vs 3b′+2b′),
+//!   plus the liveness-based buffer planner and [`memory::ExecArena`] that
+//!   make the serving hot path allocation-free in steady state.
 
 pub mod float_exec;
 pub mod graph;
@@ -23,4 +25,5 @@ pub mod ops;
 pub mod quant_exec;
 
 pub use graph::{Graph, NodeId, Op};
+pub use memory::{ExecArena, MemoryPlan};
 pub use quant_exec::{QuantExecutor, QuantMode};

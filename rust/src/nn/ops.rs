@@ -1,8 +1,21 @@
-//! Float reference implementations of every graph op.
+//! Float implementations of every graph op: naive reference loops and the
+//! arena-backed fast path.
 //!
-//! These are the FP32 ground truth for the accuracy tables and the oracle
-//! the int8 [`crate::cmsis`] kernels are tested against. Activations are
-//! HWC; conv weights OHWI; depthwise weights `[C, kh, kw]`.
+//! The top half holds the original scalar loops ([`conv2d`], [`dwconv2d`],
+//! [`linear`], …): f64 accumulation, per-pixel bounds checks. They are the
+//! FP32 ground truth for the accuracy tables, the oracle the int8
+//! [`crate::cmsis`] kernels are tested against, and the oracle the fast
+//! kernels below are property-tested against (`rust/tests/kernel_parity.rs`).
+//!
+//! The bottom half is the serving hot path (see EXPERIMENTS.md §Perf):
+//! [`im2col`] + the register-blocked [`gemm_bias_nt`] microkernel, writing
+//! into caller-owned buffers ([`conv2d_into`], [`dwconv2d_into`],
+//! [`linear_into`], …) with a fused per-element epilogue so requantization
+//! happens in the same sweep that writes the output. Scratch space is owned
+//! by [`crate::nn::memory::ExecArena`], so steady-state execution does not
+//! allocate.
+//!
+//! Activations are HWC; conv weights OHWI; depthwise weights `[C, kh, kw]`.
 
 use crate::tensor::{ConvGeom, Shape, Tensor};
 
@@ -172,6 +185,278 @@ pub fn softmax(x: &[f32]) -> Vec<f32> {
     exps.iter().map(|&e| e / z).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Fast path: im2col + register-blocked GEMM with fused epilogue.
+// ---------------------------------------------------------------------------
+
+/// Scatter each output pixel's receptive field into a contiguous row of
+/// `cols` (`[oh·ow, kh·kw·cin]` row-major). Zero padding becomes explicit
+/// zeros, so the GEMM below runs without bounds checks. Returns `(rows, k)`.
+pub fn im2col(x: &Tensor<f32>, geom: &ConvGeom, cols: &mut Vec<f32>) -> (usize, usize) {
+    let (h, w, cin) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let k = geom.kh * geom.kw * cin;
+    let m = oh * ow;
+    cols.clear();
+    cols.resize(m * k, 0.0);
+    let xd = x.data();
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            let row = (oy * ow + ox) * k;
+            for dy in 0..geom.kh {
+                let yy = y_origin + dy as isize;
+                if yy < 0 || yy >= h as isize {
+                    continue; // padded row: keep the zeros
+                }
+                // Clip kernel columns to the valid input range; the
+                // out-of-range prefix/suffix keeps its zeros.
+                let dx0 = (-x_origin).max(0) as usize;
+                let dx1 = ((w as isize - x_origin).min(geom.kw as isize)).max(0) as usize;
+                if dx1 <= dx0 {
+                    continue;
+                }
+                let src = (yy as usize * w + (x_origin + dx0 as isize) as usize) * cin;
+                let dst = row + (dy * geom.kw + dx0) * cin;
+                let len = (dx1 - dx0) * cin;
+                cols[dst..dst + len].copy_from_slice(&xd[src..src + len]);
+            }
+        }
+    }
+    (m, k)
+}
+
+/// `out[i·n + j] = epi(bias[j] + Σ_p a[i·k + p] · b[j·k + p], j)` — C = A·Bᵀ
+/// with a fused per-output-element epilogue. `b` row-major `[n, k]` is
+/// exactly the flattened OHWI conv weight (and `[h, d]` linear weight)
+/// layout, so no repacking is needed. 4×4 register-blocked microkernel,
+/// f32 accumulation.
+pub fn gemm_bias_nt<E: Fn(f32, usize) -> f32>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    epi: E,
+) {
+    assert_eq!(a.len(), m * k, "gemm: a is [m, k]");
+    assert_eq!(b.len(), n * k, "gemm: b is [n, k]");
+    assert_eq!(bias.len(), n, "gemm: bias is [n]");
+    assert_eq!(out.len(), m * n, "gemm: out is [m, n]");
+    const MR: usize = 4;
+    const NR: usize = 4;
+    let mut i = 0;
+    while i < m {
+        let ib = MR.min(m - i);
+        let mut j = 0;
+        while j < n {
+            let jb = NR.min(n - j);
+            let mut acc = [[0.0f32; NR]; MR];
+            for p in 0..k {
+                let mut bv = [0.0f32; NR];
+                for c in 0..jb {
+                    bv[c] = b[(j + c) * k + p];
+                }
+                for r in 0..ib {
+                    let av = a[(i + r) * k + p];
+                    for c in 0..NR {
+                        acc[r][c] += av * bv[c];
+                    }
+                }
+            }
+            for r in 0..ib {
+                for c in 0..jb {
+                    out[(i + r) * n + j + c] = epi(bias[j + c] + acc[r][c], j + c);
+                }
+            }
+            j += NR;
+        }
+        i += MR;
+    }
+}
+
+/// Fast 2-D convolution: [`im2col`] + [`gemm_bias_nt`]. The patch matrix
+/// lives in the caller's `cols` scratch (arena-owned on the serving path);
+/// `epi` is applied to every output element as it is written.
+pub fn conv2d_into<E: Fn(f32, usize) -> f32>(
+    x: &Tensor<f32>,
+    w: &Tensor<f32>,
+    bias: &[f32],
+    geom: &ConvGeom,
+    cols: &mut Vec<f32>,
+    out: &mut [f32],
+    epi: E,
+) {
+    let cout = w.shape().dim(0);
+    assert_eq!(
+        x.shape().dim(2),
+        w.shape().dim(3),
+        "conv input channels {} != weight {}",
+        x.shape().dim(2),
+        w.shape().dim(3)
+    );
+    assert_eq!(w.shape().dim(1), geom.kh);
+    assert_eq!(w.shape().dim(2), geom.kw);
+    assert_eq!(bias.len(), cout);
+    let (m, k) = im2col(x, geom, cols);
+    gemm_bias_nt(m, cout, k, cols, w.data(), bias, out, epi);
+}
+
+/// Fast depthwise convolution. The `[C, kh, kw]` weights are transposed
+/// once per call into `scratch` as `[kh·kw, C]`, making the inner loop a
+/// contiguous multiply-add across channels.
+pub fn dwconv2d_into<E: Fn(f32, usize) -> f32>(
+    x: &Tensor<f32>,
+    w: &Tensor<f32>,
+    bias: &[f32],
+    geom: &ConvGeom,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+    epi: E,
+) {
+    let (h, wdt, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let (wc, kh, kw) = (w.shape().dim(0), w.shape().dim(1), w.shape().dim(2));
+    assert_eq!(c, wc, "dwconv channels {c} != weight {wc}");
+    assert_eq!(bias.len(), c);
+    assert_eq!(kh, geom.kh);
+    assert_eq!(kw, geom.kw);
+    let (oh, ow) = geom.out_dims(h, wdt);
+    assert_eq!(out.len(), oh * ow * c);
+    let taps = kh * kw;
+    scratch.clear();
+    scratch.resize(taps * c, 0.0);
+    let wd = w.data();
+    for ch in 0..c {
+        for t in 0..taps {
+            scratch[t * c + ch] = wd[ch * taps + t];
+        }
+    }
+    let xd = x.data();
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        let (y0, y1) = geom.in_range_y(oy, h);
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            let (x0, x1) = geom.in_range_x(ox, wdt);
+            let obase = (oy * ow + ox) * c;
+            let opix = &mut out[obase..obase + c];
+            opix.copy_from_slice(bias);
+            for yy in y0..y1 {
+                let dy = (yy as isize - y_origin) as usize;
+                for xx in x0..x1 {
+                    let dx = (xx as isize - x_origin) as usize;
+                    let xpix = &xd[(yy * wdt + xx) * c..][..c];
+                    let wpix = &scratch[(dy * kw + dx) * c..][..c];
+                    for ch in 0..c {
+                        opix[ch] += xpix[ch] * wpix[ch];
+                    }
+                }
+            }
+            for (ch, v) in opix.iter_mut().enumerate() {
+                *v = epi(*v, ch);
+            }
+        }
+    }
+}
+
+/// Fast fully connected with compensated (Neumaier) f32 accumulation — the
+/// deepest single reduction in the graph keeps oracle-level accuracy
+/// without the reference implementation's per-element f64 casts.
+pub fn linear_into<E: Fn(f32, usize) -> f32>(
+    x: &[f32],
+    w: &Tensor<f32>,
+    bias: &[f32],
+    out: &mut [f32],
+    epi: E,
+) {
+    let (h, d) = (w.shape().dim(0), w.shape().dim(1));
+    assert_eq!(x.len(), d, "linear input {} != weight d {d}", x.len());
+    assert_eq!(bias.len(), h);
+    assert_eq!(out.len(), h);
+    let wd = w.data();
+    for j in 0..h {
+        let row = &wd[j * d..(j + 1) * d];
+        let mut sum = 0.0f32;
+        let mut comp = 0.0f32;
+        for (&wv, &xv) in row.iter().zip(x.iter()) {
+            let term = wv * xv;
+            let t = sum + term;
+            comp += if sum.abs() >= term.abs() { (sum - t) + term } else { (term - t) + sum };
+            sum = t;
+        }
+        out[j] = epi(bias[j] + (sum + comp), j);
+    }
+}
+
+/// In-place max(0, x).
+pub fn relu_slice(xs: &mut [f32]) {
+    for v in xs {
+        *v = v.max(0.0);
+    }
+}
+
+/// In-place min(max(0, x), 6).
+pub fn relu6_slice(xs: &mut [f32]) {
+    for v in xs {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+/// Elementwise add into a caller buffer.
+pub fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "add length mismatch");
+    assert_eq!(a.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// Max pooling into a caller buffer (square window, no padding).
+pub fn maxpool_into(x: &Tensor<f32>, k: usize, stride: usize, out: &mut [f32]) {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    assert_eq!(out.len(), oh * ow * c);
+    let xd = x.data();
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let opix = &mut out[(oy * ow + ox) * c..][..c];
+            opix.copy_from_slice(&xd[((oy * stride) * w + ox * stride) * c..][..c]);
+            for dy in 0..k {
+                for dx in 0..k {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let xpix = &xd[((oy * stride + dy) * w + ox * stride + dx) * c..][..c];
+                    for ch in 0..c {
+                        opix[ch] = opix[ch].max(xpix[ch]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool into a caller buffer (`[C]`).
+pub fn global_avg_pool_into(x: &Tensor<f32>, out: &mut [f32]) {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    assert_eq!(out.len(), c);
+    let xd = x.data();
+    let n = (h * w) as f64;
+    for ch in 0..c {
+        let mut acc = 0.0f64;
+        let mut i = ch;
+        while i < xd.len() {
+            acc += xd[i] as f64;
+            i += c;
+        }
+        out[ch] = (acc / n) as f32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,5 +565,121 @@ mod tests {
         let a = Tensor::from_vec(Shape::new(&[3]), vec![1.0, 2.0, 3.0]);
         let b = Tensor::from_vec(Shape::new(&[3]), vec![10.0, 20.0, 30.0]);
         assert_eq!(add(&a, &b).data(), &[11.0, 22.0, 33.0]);
+    }
+
+    // --- fast path ---------------------------------------------------------
+
+    fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal_ms(0.1, 0.6)).collect())
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        // a = [1 2; 3 4], b rows = [1 0], [0 1] (b = I) -> out = a + bias.
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0];
+        let mut out = [0.0f32; 4];
+        gemm_bias_nt(2, 2, 2, &a, &b, &[10.0, 20.0], &mut out, |v, _| v);
+        assert_eq!(out, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1() {
+        let mut rng = Pcg32::new(1);
+        let x = rand_tensor(&mut rng, Shape::hwc(3, 4, 2));
+        let mut cols = Vec::new();
+        let (m, k) = im2col(&x, &ConvGeom::new(1, 1, 1, 0), &mut cols);
+        assert_eq!((m, k), (12, 2));
+        assert_eq!(&cols, x.data());
+    }
+
+    #[test]
+    fn conv_into_matches_reference() {
+        let mut rng = Pcg32::new(2);
+        for &(stride, pad) in &[(1usize, 0usize), (1, 1), (2, 1)] {
+            let x = rand_tensor(&mut rng, Shape::hwc(7, 6, 3));
+            let w = rand_tensor(&mut rng, Shape::ohwi(5, 3, 3, 3));
+            let bias: Vec<f32> = (0..5).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+            let geom = ConvGeom::new(3, 3, stride, pad);
+            let want = conv2d(&x, &w, &bias, &geom);
+            let mut cols = Vec::new();
+            let mut out = vec![0.0f32; want.numel()];
+            conv2d_into(&x, &w, &bias, &geom, &mut cols, &mut out, |v, _| v);
+            for (i, (&a, &b)) in out.iter().zip(want.data().iter()).enumerate() {
+                assert!((a - b).abs() < 1e-4, "s{stride} p{pad} [{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_into_matches_reference() {
+        let mut rng = Pcg32::new(3);
+        let x = rand_tensor(&mut rng, Shape::hwc(6, 5, 4));
+        let w = rand_tensor(&mut rng, Shape::new(&[4, 3, 3]));
+        let bias: Vec<f32> = (0..4).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+        let geom = ConvGeom::same(3, 1);
+        let want = dwconv2d(&x, &w, &bias, &geom);
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0f32; want.numel()];
+        dwconv2d_into(&x, &w, &bias, &geom, &mut scratch, &mut out, |v, _| v);
+        for (i, (&a, &b)) in out.iter().zip(want.data().iter()).enumerate() {
+            assert!((a - b).abs() < 1e-5, "[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_into_matches_reference() {
+        let mut rng = Pcg32::new(4);
+        let w = rand_tensor(&mut rng, Shape::new(&[6, 33]));
+        let x: Vec<f32> = (0..33).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..6).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+        let want = linear(&x, &w, &bias);
+        let mut out = vec![0.0f32; 6];
+        linear_into(&x, &w, &bias, &mut out, |v, _| v);
+        for (i, (&a, &b)) in out.iter().zip(want.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-5, "[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn epilogue_is_fused_per_channel() {
+        // epi doubles channel 0 only: proves (value, channel) plumbing.
+        let x = Tensor::full(Shape::hwc(2, 2, 1), 1.0f32);
+        let w = Tensor::from_vec(Shape::ohwi(2, 1, 1, 1), vec![1.0, 3.0]);
+        let mut cols = Vec::new();
+        let mut out = vec![0.0f32; 8];
+        conv2d_into(
+            &x,
+            &w,
+            &[0.0, 0.0],
+            &ConvGeom::new(1, 1, 1, 0),
+            &mut cols,
+            &mut out,
+            |v, ch| if ch == 0 { v * 2.0 } else { v },
+        );
+        assert_eq!(out, vec![2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn into_helpers_match_reference() {
+        let mut rng = Pcg32::new(5);
+        let x = rand_tensor(&mut rng, Shape::hwc(6, 6, 3));
+        let mut mp = vec![0.0f32; maxpool(&x, 2, 2).numel()];
+        maxpool_into(&x, 2, 2, &mut mp);
+        assert_eq!(&mp, maxpool(&x, 2, 2).data());
+        let mut gp = vec![0.0f32; 3];
+        global_avg_pool_into(&x, &mut gp);
+        assert_eq!(&gp, global_avg_pool(&x).data());
+        let y = rand_tensor(&mut rng, Shape::hwc(6, 6, 3));
+        let mut s = vec![0.0f32; x.numel()];
+        add_into(x.data(), y.data(), &mut s);
+        assert_eq!(&s, add(&x, &y).data());
+        let mut r = x.data().to_vec();
+        relu_slice(&mut r);
+        assert_eq!(&r, relu(&x).data());
+        let mut r6 = x.data().to_vec();
+        relu6_slice(&mut r6);
+        assert_eq!(&r6, relu6(&x).data());
     }
 }

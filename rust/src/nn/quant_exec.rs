@@ -19,12 +19,21 @@
 //! axis of any activation is the channel axis (for a linear layer's output
 //! vector this degenerates to per-element parameters; all three modes are
 //! treated identically, per §5.2, so the comparison stays fair).
+//!
+//! Execution runs on the arena engine ([`crate::nn::memory`]): buffers come
+//! from a liveness-packed plan, kernels are im2col + blocked GEMM, and for
+//! the static/probabilistic modes requantization is **fused into the kernel
+//! epilogue** — the parameters are known before the layer runs, which is
+//! exactly the paper's point. The pre-arena engine survives as
+//! [`QuantExecutor::run_reference`] (oracle + benchmark baseline).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use super::float_exec::eval_op;
-use super::graph::{Graph, Op};
+use super::float_exec::{self, eval_op};
+use super::graph::{Graph, Node, Op};
+use super::memory::{ExecArena, MemoryPlan};
+use crate::estimator::conv::EstimatorScratch;
 use crate::estimator::interval::{calibrate, CalibSample, IntervalSpec};
 use crate::estimator::{aggregate, conv as conv_est, linear as lin_est, Moments, WeightStats};
 use crate::quant::affine::{fake_quantize, fake_quantize_slice};
@@ -94,6 +103,10 @@ struct LayerState {
     /// Observed output ranges from calibration (len 1 or C). `None` until
     /// calibrated — static mode panics without it.
     static_ranges: Option<Vec<(f32, f32)>>,
+    /// The frozen parameter set derived from `static_ranges` once at
+    /// calibration time, so the static-mode hot path borrows it instead of
+    /// rebuilding an O(C) set per layer per request.
+    static_set: Option<QParamSet>,
     /// Calibrated interval for the probabilistic mode.
     interval: IntervalSpec,
 }
@@ -109,12 +122,35 @@ pub struct QuantExecutor {
     layers: BTreeMap<usize, LayerState>,
     /// Known input range (images are normalized to [0, 1]).
     input_range: (f32, f32),
+    /// Liveness-packed buffer plan for `run` (shared with worker arenas).
+    plan: Arc<MemoryPlan>,
+    /// One-slot-per-node plan for `run_trace`.
+    trace_plan: Arc<MemoryPlan>,
+    /// Internal arenas so plain `run`/`run_trace` are allocation-free in
+    /// steady state (uncontended lock on the single-threaded paths; the
+    /// serving workers bypass these with [`QuantExecutor::run_with_arena`]).
+    arena: Mutex<ExecArena>,
+    trace_arena: Mutex<ExecArena>,
 }
 
 impl QuantExecutor {
     pub fn new(graph: Arc<Graph>, settings: QuantSettings) -> Self {
         let (qgraph, layers) = prepare(&graph, &settings);
-        Self { graph, settings, qgraph, layers, input_range: (0.0, 1.0) }
+        let plan = Arc::new(MemoryPlan::packed(&qgraph));
+        let trace_plan = Arc::new(MemoryPlan::trace(&qgraph));
+        let arena = Mutex::new(ExecArena::new(Arc::clone(&plan)));
+        let trace_arena = Mutex::new(ExecArena::new(Arc::clone(&trace_plan)));
+        Self {
+            graph,
+            settings,
+            qgraph,
+            layers,
+            input_range: (0.0, 1.0),
+            plan,
+            trace_plan,
+            arena,
+            trace_arena,
+        }
     }
 
     pub fn settings(&self) -> &QuantSettings {
@@ -199,8 +235,12 @@ impl QuantExecutor {
             }
         }
         let coverage = self.settings.coverage;
+        let (gran, bits) = (self.settings.granularity, self.settings.bits);
         for (idx, a) in acc {
             let st = self.layers.get_mut(&idx).expect("layer state");
+            // Freeze the static parameter set now: it is input-independent,
+            // so the hot path borrows it instead of rebuilding per request.
+            st.static_set = a.ranges.as_ref().map(|r| ranges_to_set(r, gran, bits));
             st.static_ranges = a.ranges;
             st.interval = calibrate(&a.samples, coverage);
         }
@@ -212,13 +252,46 @@ impl QuantExecutor {
     }
 
     /// Run the quantized forward pass; returns the output node values.
+    /// Executes on the packed internal arena: intermediate buffers are
+    /// recycled per the liveness plan and no heap allocation happens in
+    /// steady state.
     pub fn run(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
-        let values = self.run_trace(input);
+        let mut arena = self.arena.lock().unwrap();
+        self.forward_arena(input, &mut arena);
+        self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect()
+    }
+
+    /// Run keeping every node value (trace arena: one pinned slot per node).
+    pub fn run_trace(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let mut arena = self.trace_arena.lock().unwrap();
+        self.forward_arena(input, &mut arena);
+        (0..self.qgraph.nodes().len()).map(|i| arena.value(i).clone()).collect()
+    }
+
+    /// Run into a caller-owned arena — the serving path: each worker keeps
+    /// one arena and reuses it across every batched request, so parallel
+    /// workers never contend on the executor's internal arena lock.
+    pub fn run_with_arena(&self, input: &Tensor<f32>, arena: &mut ExecArena) -> Vec<Tensor<f32>> {
+        self.forward_arena(input, arena);
+        self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect()
+    }
+
+    /// A fresh packed arena compatible with [`QuantExecutor::run_with_arena`].
+    pub fn make_arena(&self) -> ExecArena {
+        ExecArena::new(Arc::clone(&self.plan))
+    }
+
+    /// The pre-arena executor: fresh tensor per node, naive f64 kernels,
+    /// and requantization as a separate full-tensor pass. Kept as the
+    /// numeric oracle for the fused path and as the `bench_hotpath`
+    /// before/after baseline.
+    pub fn run_reference(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let values = self.run_trace_reference(input);
         self.qgraph.output_ids().iter().map(|id| values[id.0].clone()).collect()
     }
 
-    /// Run keeping every node value.
-    pub fn run_trace(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    /// Reference-engine run keeping every node value.
+    pub fn run_trace_reference(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
         let mut values: Vec<Tensor<f32>> = Vec::with_capacity(self.qgraph.nodes().len());
         for (idx, node) in self.qgraph.nodes().iter().enumerate() {
             let mut v = eval_op(&node.op, &node.inputs, &values, input);
@@ -233,6 +306,89 @@ impl QuantExecutor {
             values.push(v);
         }
         values
+    }
+
+    /// The fused forward pass (the heart of this executor, Fig. 1 at
+    /// serving speed). For static and probabilistic modes the output
+    /// quantization parameters are known *before* the kernel runs — frozen
+    /// ranges, or Eq. 8–12 moments predicted from the input via the
+    /// arena's estimator scratch — so fake-quantization rides along as the
+    /// kernel's write epilogue. Dynamic mode needs the whole output first
+    /// (§3) and keeps its separate observe + requantize pass.
+    fn forward_arena(&self, input: &Tensor<f32>, arena: &mut ExecArena) {
+        assert_eq!(
+            input.shape(),
+            self.qgraph.input_shape(),
+            "input shape mismatch: got {}, graph wants {}",
+            input.shape(),
+            self.qgraph.input_shape()
+        );
+        assert_eq!(
+            arena.plan().shapes.len(),
+            self.qgraph.nodes().len(),
+            "arena plan does not match graph"
+        );
+        for (idx, node) in self.qgraph.nodes().iter().enumerate() {
+            if node.op.is_quantizable() {
+                // Only the probabilistic set is input-dependent and must be
+                // built per request; the static set was frozen at calibration.
+                let predicted = match self.settings.mode {
+                    QuantMode::Probabilistic => Some(self.predict_set(idx, node, arena)),
+                    _ => None,
+                };
+                let set: Option<&QParamSet> = match self.settings.mode {
+                    QuantMode::Dynamic => None,
+                    QuantMode::Static => Some(
+                        self.layers[&idx]
+                            .static_set
+                            .as_ref()
+                            .expect("static mode requires calibrate() first"),
+                    ),
+                    QuantMode::Probabilistic => predicted.as_ref(),
+                };
+                float_exec::eval_node_arena(&self.qgraph, idx, input, arena, set);
+                if self.settings.mode == QuantMode::Dynamic {
+                    let slot = arena.plan.slots[idx];
+                    let t = &mut arena.slots[slot];
+                    let channels = last_dim(t);
+                    let set = QParamSet::observe(
+                        t.data(),
+                        channels,
+                        self.settings.granularity,
+                        self.settings.bits,
+                    );
+                    fake_quantize_set(t, &set);
+                }
+            } else {
+                float_exec::eval_node_arena(&self.qgraph, idx, input, arena, None);
+                if matches!(node.op, Op::Input) {
+                    let slot = arena.plan.slots[idx];
+                    self.quantize_input(&mut arena.slots[slot]);
+                }
+            }
+        }
+    }
+
+    /// Predict the output quantization parameters of a quantizable node
+    /// from its *input* (green box of Fig. 1-c), using the arena's
+    /// estimator scratch so prediction allocates nothing tensor-sized.
+    fn predict_set(&self, idx: usize, node: &Node, arena: &mut ExecArena) -> QParamSet {
+        let st = &self.layers[&idx];
+        let bits = self.settings.bits;
+        let xslot = arena.plan.slots[node.inputs[0].0];
+        // Field-split the arena: read the input slot, write the scratch.
+        let (slots, est) = (&arena.slots, &mut arena.est);
+        let x = &slots[xslot];
+        match self.settings.granularity {
+            Granularity::PerTensor => {
+                let m = self.predict_per_tensor_scratch(&node.op, x, &st.wstats, est);
+                QParamSet::PerTensor(st.interval.qparams(&m, bits))
+            }
+            Granularity::PerChannel => {
+                let ms = self.predict_per_channel_scratch(&node.op, x, &st.wstats, est);
+                QParamSet::PerChannel(ms.iter().map(|m| st.interval.qparams(m, bits)).collect())
+            }
+        }
     }
 
     /// The per-input working-memory overhead (bits) the §3 model assigns to
@@ -280,18 +436,40 @@ impl QuantExecutor {
         }
     }
 
+    /// [`Self::predict_per_tensor_scratch`] with throwaway scratch — the
+    /// one-shot calibration path (the reference engine predicts through
+    /// exactly the same code as serving, so Eq. 13 calibration and
+    /// serving-time prediction can never drift apart).
+    fn predict_per_tensor(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Moments {
+        let mut est = EstimatorScratch::default();
+        self.predict_per_tensor_scratch(op, x, ws, &mut est)
+    }
+
+    /// [`Self::predict_per_channel_scratch`] with throwaway scratch.
+    fn predict_per_channel(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Vec<Moments> {
+        let mut est = EstimatorScratch::default();
+        self.predict_per_channel_scratch(op, x, ws, &mut est)
+    }
+
     /// Per-tensor moment prediction for any quantizable op (Eq. 8–12),
     /// including the bias term the paper folds away: `y = Wx + b` ⇒ the
     /// pooled mean gains `mean(b)` and the pooled variance gains the
     /// spread of per-channel means, `var(b)` (law of total variance).
     /// Without this, channels whose input died at a ReLU predict σ≈0 while
     /// observing `y = b_v ≠ 0`, which blows up the Eq. 13 calibration.
-    fn predict_per_tensor(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Moments {
+    fn predict_per_tensor_scratch(
+        &self,
+        op: &Op,
+        x: &Tensor<f32>,
+        ws: &WeightStats,
+        est: &mut EstimatorScratch,
+    ) -> Moments {
+        let gamma = self.settings.gamma;
         let (mut m, bias): (Moments, &[f32]) = match op {
             Op::Linear { b, .. } => (lin_est::estimate(x.data(), ws), b),
-            Op::Conv { geom, b, .. } => (conv_est::estimate(x, ws, geom, self.settings.gamma), b),
+            Op::Conv { geom, b, .. } => (conv_est::estimate_scratch(x, ws, geom, gamma, est), b),
             Op::DwConv { geom, b, .. } => {
-                let per_ch = conv_est::dw_estimate_per_channel(x, ws, geom, self.settings.gamma);
+                let per_ch = conv_est::dw_estimate_per_channel_scratch(x, ws, geom, gamma, est);
                 (aggregate::pool(&per_ch), b)
             }
             _ => unreachable!("not a quantizable op"),
@@ -302,14 +480,21 @@ impl QuantExecutor {
     }
 
     /// Per-channel moment prediction (bias shifts each channel's mean).
-    fn predict_per_channel(&self, op: &Op, x: &Tensor<f32>, ws: &WeightStats) -> Vec<Moments> {
+    fn predict_per_channel_scratch(
+        &self,
+        op: &Op,
+        x: &Tensor<f32>,
+        ws: &WeightStats,
+        est: &mut EstimatorScratch,
+    ) -> Vec<Moments> {
+        let gamma = self.settings.gamma;
         let (mut ms, bias): (Vec<Moments>, &[f32]) = match op {
             Op::Linear { b, .. } => (lin_est::estimate_per_channel(x.data(), ws), b),
             Op::Conv { geom, b, .. } => {
-                (conv_est::estimate_per_channel(x, ws, geom, self.settings.gamma), b)
+                (conv_est::estimate_per_channel_scratch(x, ws, geom, gamma, est), b)
             }
             Op::DwConv { geom, b, .. } => {
-                (conv_est::dw_estimate_per_channel(x, ws, geom, self.settings.gamma), b)
+                (conv_est::dw_estimate_per_channel_scratch(x, ws, geom, gamma, est), b)
             }
             _ => unreachable!("not a quantizable op"),
         };
@@ -393,6 +578,7 @@ fn prepare(graph: &Graph, settings: &QuantSettings) -> (Graph, BTreeMap<usize, L
                     LayerState {
                         wstats: WeightStats::from_conv(w),
                         static_ranges: None,
+                        static_set: None,
                         interval: IntervalSpec::default(),
                     },
                 );
@@ -411,6 +597,7 @@ fn prepare(graph: &Graph, settings: &QuantSettings) -> (Graph, BTreeMap<usize, L
                     LayerState {
                         wstats: WeightStats::from_linear(&flat),
                         static_ranges: None,
+                        static_set: None,
                         interval: IntervalSpec::default(),
                     },
                 );
@@ -422,6 +609,7 @@ fn prepare(graph: &Graph, settings: &QuantSettings) -> (Graph, BTreeMap<usize, L
                     LayerState {
                         wstats: WeightStats::from_linear(w),
                         static_ranges: None,
+                        static_set: None,
                         interval: IntervalSpec::default(),
                     },
                 );
@@ -621,6 +809,50 @@ mod tests {
         ex.ablate_symmetric_interval();
         let out = ex.run(&img);
         assert_eq!(out[0].shape().dims(), &[5]);
+    }
+
+    #[test]
+    fn arena_path_matches_reference_path() {
+        let mut rng = Pcg32::new(0xAB);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..8).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+            for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+                let mut ex = QuantExecutor::new(
+                    g.clone(),
+                    QuantSettings { mode, granularity: gran, ..Default::default() },
+                );
+                ex.calibrate(&calib);
+                let fast = ex.run(&img)[0].data().to_vec();
+                let slow = ex.run_reference(&img)[0].data().to_vec();
+                let e = rel_err(&slow, &fast);
+                assert!(
+                    e < 0.05,
+                    "{mode:?}/{gran:?}: fused vs reference rel err {e}\nfast={fast:?}\nslow={slow:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuse_has_no_stale_state() {
+        let mut rng = Pcg32::new(0xCD);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        let mut ex = QuantExecutor::new(g, QuantSettings::default());
+        ex.calibrate(&calib);
+        let t1: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+        let t2: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+        assert_eq!(t1, t2, "run_trace must be bit-identical across calls");
+        // Worker-style arena reused across *different* inputs.
+        let mut arena = ex.make_arena();
+        let img2 = rand_image(&mut rng);
+        let a = ex.run_with_arena(&img, &mut arena)[0].clone();
+        let _ = ex.run_with_arena(&img2, &mut arena);
+        let b = ex.run_with_arena(&img, &mut arena)[0].clone();
+        assert_eq!(a.data(), b.data(), "arena reuse leaked state between inputs");
     }
 
     #[test]

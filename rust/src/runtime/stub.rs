@@ -1,0 +1,63 @@
+//! API-compatible stand-in for [`super::client`] when the crate is built
+//! without the `pjrt` feature: construction fails cleanly instead of the
+//! whole crate failing to link against `xla_extension`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: pdq was built without the `pjrt` cargo feature \
+     (rebuild with `--features pjrt` on a machine with xla_extension)";
+
+/// Stub of the compiled-executable handle. Never constructible.
+pub struct RuntimeModel {
+    _priv: (),
+}
+
+impl RuntimeModel {
+    pub fn run_f32(&self, _inputs: &[&Tensor<f32>]) -> Result<Vec<Vec<f32>>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn run_tensor_scalars(&self, _x: &Tensor<f32>, _scalars: &[f32]) -> Result<Vec<Vec<f32>>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub of the PJRT CPU client: [`Runtime::cpu`] always errors.
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: &Path) -> Result<Arc<RuntimeModel>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_fails_without_feature() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

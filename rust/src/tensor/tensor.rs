@@ -71,6 +71,20 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
     }
+
+    /// An empty placeholder tensor (0 elements, no allocation) — the
+    /// executor arena's "taken" sentinel while a slot is being written.
+    pub fn empty() -> Self {
+        Self { shape: Shape::new(&[0]), data: Vec::new() }
+    }
+
+    /// Retarget this tensor to `shape`, reusing the existing allocation
+    /// when capacity allows (the arena's buffer-recycling primitive).
+    /// Grown elements are default-filled; callers overwrite the contents.
+    pub fn resize_to(&mut self, shape: Shape) {
+        self.data.resize(shape.numel(), T::default());
+        self.shape = shape;
+    }
 }
 
 impl Tensor<f32> {
@@ -127,6 +141,19 @@ mod tests {
         let t = Tensor::from_vec(Shape::new(&[3]), vec![1.4f32, -2.6, 3.5]);
         let q: Tensor<i32> = t.map(|x| x.round() as i32);
         assert_eq!(q.data(), &[1, -3, 4]);
+    }
+
+    #[test]
+    fn resize_to_retargets_shape() {
+        let mut t = Tensor::from_vec(Shape::new(&[4]), vec![1.0f32, 2.0, 3.0, 4.0]);
+        t.resize_to(Shape::new(&[2, 2]));
+        assert_eq!(t.shape().dims(), &[2, 2]);
+        assert_eq!(t.at(&[0, 1]), 2.0);
+        t.resize_to(Shape::new(&[6]));
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.data()[5], 0.0);
+        let e: Tensor<f32> = Tensor::empty();
+        assert_eq!(e.numel(), 0);
     }
 
     #[test]

@@ -116,6 +116,39 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Look up a collected result by name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Ratio of two collected results' mean times (`slow / fast`) — the
+    /// speedup headline a perf PR reports. `None` if either is missing.
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let s = self.result(slow)?.mean_ns;
+        let f = self.result(fast)?.mean_ns;
+        if f > 0.0 {
+            Some(s / f)
+        } else {
+            None
+        }
+    }
+
+    /// Write every collected result (plus caller-derived scalars such as
+    /// speedup ratios) as a machine-readable JSON report, so the perf
+    /// trajectory can be tracked across PRs (e.g. `BENCH_hotpath.json`).
+    pub fn save_json(&self, path: &str, derived: &[(&str, f64)]) -> std::io::Result<()> {
+        let mut root = Json::obj();
+        root.set("schema", "pdq-bench-v1");
+        let arr: Vec<Json> = self.results.iter().map(|r| r.to_json()).collect();
+        root.set("benchmarks", Json::Arr(arr));
+        let mut d = Json::obj();
+        for &(k, v) in derived {
+            d.set(k, v);
+        }
+        root.set("derived", d);
+        std::fs::write(path, root.to_string_pretty())
+    }
 }
 
 /// Human formatting for nanosecond quantities.
@@ -151,6 +184,30 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean_ns >= 0.0);
         assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn save_json_and_speedup() {
+        let mut b = Bencher::new(Duration::from_millis(1), Duration::from_millis(10), 200);
+        let mut acc = 0u64;
+        b.bench("fast", 1.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.bench("slow", 1.0, || {
+            for _ in 0..64 {
+                acc = black_box(acc.wrapping_add(1));
+            }
+        });
+        assert!(b.result("fast").is_some());
+        assert!(b.result("missing").is_none());
+        let s = b.speedup("slow", "fast").expect("both present");
+        assert!(s > 0.0);
+        let path = std::env::temp_dir().join("pdq_bench_test.json");
+        b.save_json(path.to_str().unwrap(), &[("speedup_slow_vs_fast", s)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("pdq-bench-v1"));
+        assert!(text.contains("speedup_slow_vs_fast"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

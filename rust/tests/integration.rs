@@ -25,7 +25,8 @@ use pdq::tensor::{ConvGeom, Shape, Tensor};
 use pdq::util::Pcg32;
 
 fn artifacts_dir() -> &'static Path {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+    // Box::leak (not PathBuf::leak) keeps the MSRV low.
+    Box::leak(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").into_boxed_path())
 }
 
 fn have_artifacts() -> bool {

@@ -1,0 +1,231 @@
+//! Kernel-parity property tests: the im2col/GEMM fast path and the arena
+//! executors must be numerically faithful to the seed's naive loops
+//! (`pdq::nn::ops::{conv2d, dwconv2d, linear}` — f64 accumulation), across
+//! randomized shapes, stride ∈ {1, 2}, pad ∈ {0, same}, and γ ∈ {1, 2, 4}.
+
+use std::sync::Arc;
+
+use pdq::estimator::conv as conv_est;
+use pdq::estimator::EstimatorScratch;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{float_exec, memory, ops, Graph, QuantMode};
+use pdq::quant::Granularity;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::check::{gen, Checker};
+use pdq::util::Pcg32;
+
+fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_ms(0.1, 0.7)).collect())
+}
+
+/// |a - b| within 1e-5 absolute + 1e-5 relative to the tensor's magnitude.
+fn assert_close(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let tol = 1e-5 + 1e-5 * scale;
+    for (i, (&a, &b)) in got.iter().zip(want.iter()).enumerate() {
+        if (a - b).abs() > tol {
+            return Err(format!("{what}[{i}]: {a} vs {b} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn conv_im2col_matches_naive_randomized() {
+    Checker::new(0xF00D, 60).check("conv2d_into == conv2d", |rng| {
+        let (h, w, cin, cout, k) = gen::conv_spec(rng);
+        let stride = *rng.choice(&[1usize, 2]);
+        let pad = *rng.choice(&[0usize, k / 2]);
+        let geom = ConvGeom::new(k, k, stride, pad);
+        let x = rand_tensor(rng, Shape::hwc(h, w, cin));
+        let wt = rand_tensor(rng, Shape::ohwi(cout, k, k, cin));
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let want = ops::conv2d(&x, &wt, &bias, &geom);
+        let mut cols = Vec::new();
+        let mut out = vec![0.0f32; want.numel()];
+        ops::conv2d_into(&x, &wt, &bias, &geom, &mut cols, &mut out, |v, _| v);
+        assert_close(&out, want.data(), &format!("conv h{h} w{w} cin{cin} cout{cout} k{k} s{stride} p{pad}"))
+    });
+}
+
+#[test]
+fn dwconv_matches_naive_randomized() {
+    Checker::new(0xF00E, 60).check("dwconv2d_into == dwconv2d", |rng| {
+        let (h, w, c, _, k) = gen::conv_spec(rng);
+        let stride = *rng.choice(&[1usize, 2]);
+        let pad = *rng.choice(&[0usize, k / 2]);
+        let geom = ConvGeom::new(k, k, stride, pad);
+        let x = rand_tensor(rng, Shape::hwc(h, w, c));
+        let wt = rand_tensor(rng, Shape::new(&[c, k, k]));
+        let bias: Vec<f32> = (0..c).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let want = ops::dwconv2d(&x, &wt, &bias, &geom);
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0f32; want.numel()];
+        ops::dwconv2d_into(&x, &wt, &bias, &geom, &mut scratch, &mut out, |v, _| v);
+        assert_close(&out, want.data(), &format!("dwconv h{h} w{w} c{c} k{k} s{stride} p{pad}"))
+    });
+}
+
+#[test]
+fn linear_matches_naive_randomized() {
+    Checker::new(0xF00F, 60).check("linear_into == linear", |rng| {
+        let d = rng.int_range(1, 256) as usize;
+        let hh = rng.int_range(1, 32) as usize;
+        let wt = rand_tensor(rng, Shape::new(&[hh, d]));
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..hh).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+        let want = ops::linear(&x, &wt, &bias);
+        let mut out = vec![0.0f32; hh];
+        ops::linear_into(&x, &wt, &bias, &mut out, |v, _| v);
+        assert_close(&out, &want, &format!("linear h{hh} d{d}"))
+    });
+}
+
+#[test]
+fn estimator_scratch_matches_naive_across_gamma() {
+    Checker::new(0xFA11, 40).check("integral scratch == naive", |rng| {
+        let (h, w, cin, _cout, k) = gen::conv_spec(rng);
+        let stride = *rng.choice(&[1usize, 2]);
+        let geom = ConvGeom::same(k, stride);
+        let gamma = *rng.choice(&[1usize, 2, 4]);
+        let x = rand_tensor(rng, Shape::hwc(h, w, cin));
+        let naive = conv_est::window_sums_naive(&x, &geom, gamma);
+        let mut scratch = EstimatorScratch::default();
+        conv_est::window_sums_integral_scratch(&x, &geom, gamma, &mut scratch);
+        if naive.s1.len() != scratch.sums.s1.len() {
+            return Err(format!("count {} vs {}", naive.s1.len(), scratch.sums.s1.len()));
+        }
+        for i in 0..naive.s1.len() {
+            let (a, b) = (naive.s1[i], scratch.sums.s1[i]);
+            if (a - b).abs() > 1e-6 * (1.0 + a.abs()) {
+                return Err(format!("s1[{i}]: {a} vs {b}"));
+            }
+            let (a, b) = (naive.s2[i], scratch.sums.s2[i]);
+            if (a - b).abs() > 1e-6 * (1.0 + a.abs()) {
+                return Err(format!("s2[{i}]: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn residual_net(rng: &mut Pcg32) -> Arc<Graph> {
+    let mut g = Graph::new(Shape::hwc(12, 12, 3));
+    let x = g.input();
+    let w1: Vec<f32> = (0..8 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.25)).collect();
+    let c1 = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(8, 3, 3, 3), w1),
+        vec![0.05; 8],
+        ConvGeom::same(3, 1),
+    );
+    let r1 = g.relu(c1);
+    let wd: Vec<f32> = (0..8 * 9).map(|_| rng.normal_ms(0.1, 0.3)).collect();
+    let d1 = g.dwconv(
+        r1,
+        Tensor::from_vec(Shape::new(&[8, 3, 3]), wd),
+        vec![0.0; 8],
+        ConvGeom::same(3, 1),
+    );
+    let a = g.add(d1, r1);
+    let r2 = g.relu6(a);
+    let p = g.global_avg_pool(r2);
+    let wl: Vec<f32> = (0..5 * 8).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+    let l = g.linear(p, Tensor::from_vec(Shape::new(&[5, 8]), wl), vec![0.0; 5]);
+    g.mark_output(l);
+    Arc::new(g)
+}
+
+fn rand_image(rng: &mut Pcg32) -> Tensor<f32> {
+    let data: Vec<f32> = (0..12 * 12 * 3).map(|_| rng.uniform()).collect();
+    Tensor::from_vec(Shape::hwc(12, 12, 3), data)
+}
+
+#[test]
+fn float_arena_matches_reference_engine() {
+    let mut rng = Pcg32::new(0xABCD);
+    let g = residual_net(&mut rng);
+    let img = rand_image(&mut rng);
+    let want = float_exec::run(&g, &img);
+    let mut arena = memory::ExecArena::for_run(&g);
+    let got = float_exec::run_with_arena(&g, &img, &mut arena);
+    assert_eq!(got.len(), want.len());
+    assert_close(got[0].data(), want[0].data(), "float arena").unwrap();
+}
+
+#[test]
+fn quant_run_trace_identical_across_consecutive_calls() {
+    // No stale-buffer bleed: two consecutive arena-based run_trace calls
+    // (and runs through a reused worker arena) must be bit-identical.
+    let mut rng = Pcg32::new(0x5EED);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    let other = rand_image(&mut rng);
+    for gamma in [1usize, 2, 4] {
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                Arc::clone(&g),
+                QuantSettings { mode, gamma, granularity: Granularity::PerTensor, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let t1: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+            let t2: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+            assert_eq!(t1, t2, "{mode:?} γ={gamma}: run_trace not reproducible");
+            let mut arena = ex.make_arena();
+            let a = ex.run_with_arena(&img, &mut arena)[0].clone();
+            let _ = ex.run_with_arena(&other, &mut arena);
+            let b = ex.run_with_arena(&img, &mut arena)[0].clone();
+            assert_eq!(a.data(), b.data(), "{mode:?} γ={gamma}: worker arena leaked state");
+        }
+    }
+}
+
+#[test]
+fn quant_fused_matches_reference_outputs() {
+    let mut rng = Pcg32::new(0xBEE);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                Arc::clone(&g),
+                QuantSettings { mode, granularity: gran, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let fast = ex.run(&img)[0].data().to_vec();
+            let slow = ex.run_reference(&img)[0].data().to_vec();
+            // Fused and reference engines quantize onto the same grids;
+            // differences are bounded by f32-vs-f64 accumulation noise
+            // around quantization-step boundaries.
+            let num: f32 = fast.iter().zip(&slow).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = slow.iter().map(|v| v * v).sum::<f32>().max(1e-9);
+            let rel = (num / den).sqrt();
+            assert!(
+                rel < 0.05,
+                "{mode:?}/{gran:?}: fused vs reference rel err {rel}\nfast={fast:?}\nslow={slow:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_plan_uses_fewer_buffers_than_trace() {
+    let mut rng = Pcg32::new(0x11);
+    let g = residual_net(&mut rng);
+    let packed = memory::MemoryPlan::packed(&g);
+    let trace = memory::MemoryPlan::trace(&g);
+    assert!(packed.num_slots < trace.num_slots);
+    assert!(packed.total_elems() < trace.total_elems());
+    // Every node got a valid slot and shape.
+    assert_eq!(packed.slots.len(), g.nodes().len());
+    for (&s, sh) in packed.slots.iter().zip(packed.shapes.iter()) {
+        assert!(s < packed.num_slots);
+        assert!(packed.slot_elems[s] >= sh.numel());
+    }
+}
