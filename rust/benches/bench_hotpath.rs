@@ -20,7 +20,8 @@ use pdq::estimator::conv::{
 use pdq::estimator::fixed::FixedEstimator;
 use pdq::estimator::{EstimatorScratch, Moments, WeightStats};
 use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
-use pdq::nn::{Graph, QuantMode};
+use pdq::nn::{Graph, Int8Executor, QuantMode};
+use pdq::quant::Granularity;
 use pdq::tensor::{ConvGeom, Shape, Tensor};
 use pdq::util::bench::{black_box, Bencher};
 use pdq::util::Pcg32;
@@ -150,6 +151,47 @@ fn main() {
         bench.bench(&format!("quant_exec/forward_{}_worker_arena", mode.label()), 1.0, || {
             black_box(ex.run_with_arena(&img, &mut arena));
         });
+    }
+
+    // True-int8 engine (§5.1 at serving speed): naive-cmsis baseline
+    // (scalar kernels, fresh tensors, separate requantize sweep) vs the
+    // fast int8 engine (im2col + blocked i8 GEMM, fused requant epilogue,
+    // arena buffers) vs the f32 fused engine — per requant mode. Reported
+    // separately in BENCH_int8.json.
+    let mut b8 = Bencher::new(Duration::from_millis(100), Duration::from_millis(700), 50_000);
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let mut ex = QuantExecutor::new(Arc::clone(&graph), QuantSettings { mode, ..Default::default() });
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).expect("int8 lowering");
+        b8.bench(&format!("int8/forward_{}_naive", mode.label()), 1.0, || {
+            black_box(int8.run_naive(&img));
+        });
+        let mut arena = int8.make_arena();
+        b8.bench(&format!("int8/forward_{}", mode.label()), 1.0, || {
+            black_box(int8.run_q_with_arena(&img, &mut arena));
+        });
+        b8.bench(&format!("int8/forward_{}_f32fast", mode.label()), 1.0, || {
+            black_box(ex.run(&img));
+        });
+    }
+    let mut derived8: Vec<(&str, f64)> = Vec::new();
+    let pairs8 = [
+        ("speedup_int8_naive_vs_fast_static", "int8/forward_static_naive", "int8/forward_static"),
+        ("speedup_int8_naive_vs_fast_dynamic", "int8/forward_dynamic_naive", "int8/forward_dynamic"),
+        ("speedup_int8_naive_vs_fast_ours", "int8/forward_ours_naive", "int8/forward_ours"),
+        ("speedup_f32fast_vs_int8_static", "int8/forward_static_f32fast", "int8/forward_static"),
+        ("speedup_f32fast_vs_int8_dynamic", "int8/forward_dynamic_f32fast", "int8/forward_dynamic"),
+        ("speedup_f32fast_vs_int8_ours", "int8/forward_ours_f32fast", "int8/forward_ours"),
+    ];
+    for (name, slow, fast) in pairs8 {
+        if let Some(s) = b8.speedup(slow, fast) {
+            println!("derived {name}: {s:.2}x");
+            derived8.push((name, s));
+        }
+    }
+    match b8.save_json("BENCH_int8.json", &derived8) {
+        Ok(()) => println!("wrote BENCH_int8.json"),
+        Err(e) => eprintln!("could not write BENCH_int8.json: {e}"),
     }
 
     // Coordinator round trip: submit -> batch -> execute -> reply.

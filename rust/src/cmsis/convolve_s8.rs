@@ -21,9 +21,7 @@ pub fn convolve_s8(
     let acc = convolve_s8_acc(input, kernel, bias, input_offset, geom);
     let cout = kernel.shape().dim(0);
     let mut out = Tensor::zeros(acc.shape().clone());
-    for (i, (&a, o)) in acc.data().iter().zip(out.data_mut().iter_mut()).enumerate() {
-        *o = requant.apply(a, i % cout);
-    }
+    requant.apply_slice(acc.data(), out.data_mut(), cout);
     out
 }
 

@@ -15,9 +15,7 @@ pub fn dwconv_s8(
     let acc = dwconv_s8_acc(input, kernel, bias, input_offset, geom);
     let c = kernel.shape().dim(0);
     let mut out = Tensor::zeros(acc.shape().clone());
-    for (i, (&a, o)) in acc.data().iter().zip(out.data_mut().iter_mut()).enumerate() {
-        *o = requant.apply(a, i % c);
-    }
+    requant.apply_slice(acc.data(), out.data_mut(), c);
     out
 }
 

@@ -1,0 +1,362 @@
+//! Fast int8 kernels: im2col + register-blocked i8×i8→i32 GEMM with the
+//! requantization fused into the accumulator sweep.
+//!
+//! These are the serving-speed counterparts of the naive scalar ports in
+//! [`super::convolve_s8`] / [`super::dwconv_s8`] /
+//! [`super::fully_connected_s8`], which stay untouched as the parity
+//! oracle. The contract is **bit-exactness**: integer accumulation is
+//! associative, so reordering the taps into a patch-matrix GEMM produces
+//! the same i32 accumulator the naive loop produces, and the same
+//! [`Requant`] epilogue then yields the same int8 output
+//! (`rust/tests/int8_parity.rs` checks exact equality).
+//!
+//! The epilogue is generic over the output element: static/PDQ requantize
+//! each accumulator to `i8` as it leaves the register block, so the i32
+//! tensor never exists (the paper's O(1)-memory property, enforced by
+//! construction); the dynamic wrapper instantiates the same kernels with an
+//! identity `i32` epilogue and pays the §3 `b′·h` buffer deliberately.
+
+use super::requant::Requant;
+use crate::tensor::{ConvGeom, Tensor};
+
+/// im2col for int8 inputs: every output pixel's receptive field becomes a
+/// contiguous `[kh·kw·cin]` row of `cols`, stored as `q + input_offset` in
+/// i32. Padded taps keep the value 0, so — exactly like the naive kernel's
+/// `continue` — padding contributes nothing to the accumulator. Returns
+/// `(rows, k)`.
+pub fn im2col_s8(
+    input: &Tensor<i8>,
+    geom: &ConvGeom,
+    input_offset: i32,
+    cols: &mut Vec<i32>,
+) -> (usize, usize) {
+    let (h, w, cin) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let k = geom.kh * geom.kw * cin;
+    let m = oh * ow;
+    cols.clear();
+    cols.resize(m * k, 0);
+    let xd = input.data();
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            let row = (oy * ow + ox) * k;
+            for dy in 0..geom.kh {
+                let yy = y_origin + dy as isize;
+                if yy < 0 || yy >= h as isize {
+                    continue; // padded row: keep the zeros
+                }
+                let dx0 = (-x_origin).max(0) as usize;
+                let dx1 = ((w as isize - x_origin).min(geom.kw as isize)).max(0) as usize;
+                if dx1 <= dx0 {
+                    continue;
+                }
+                let src = (yy as usize * w + (x_origin + dx0 as isize) as usize) * cin;
+                let dst = row + (dy * geom.kw + dx0) * cin;
+                let len = (dx1 - dx0) * cin;
+                for (d, &s) in cols[dst..dst + len].iter_mut().zip(xd[src..src + len].iter()) {
+                    *d = s as i32 + input_offset;
+                }
+            }
+        }
+    }
+    (m, k)
+}
+
+/// `out[i·n + j] = epi(bias[j] + Σ_p a[i·k + p] · b[j·k + p], j)` — C = A·Bᵀ
+/// with i32 accumulation and a fused per-element epilogue. `a` is the
+/// offset-shifted patch matrix, `b` row-major `[n, k]` is the flattened
+/// OHWI conv weight (or `[h, d]` linear weight) as-is. 4×8 register-blocked
+/// microkernel; the epilogue decides the output element type (`i8` for a
+/// fused requantize, `i32` for the dynamic wrapper's wide buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_s8_nt<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i32],
+    b: &[i8],
+    bias: &[i32],
+    out: &mut [T],
+    epi: E,
+) {
+    assert_eq!(a.len(), m * k, "gemm_s8: a is [m, k]");
+    assert_eq!(b.len(), n * k, "gemm_s8: b is [n, k]");
+    assert_eq!(bias.len(), n, "gemm_s8: bias is [n]");
+    assert_eq!(out.len(), m * n, "gemm_s8: out is [m, n]");
+    const MR: usize = 4;
+    const NR: usize = 8;
+    let mut i = 0;
+    while i < m {
+        let ib = MR.min(m - i);
+        let mut j = 0;
+        while j < n {
+            let jb = NR.min(n - j);
+            let mut acc = [[0i32; NR]; MR];
+            for p in 0..k {
+                let mut bv = [0i32; NR];
+                for c in 0..jb {
+                    bv[c] = b[(j + c) * k + p] as i32;
+                }
+                for r in 0..ib {
+                    let av = a[(i + r) * k + p];
+                    for (accv, &bvv) in acc[r].iter_mut().zip(bv.iter()) {
+                        *accv += av * bvv;
+                    }
+                }
+            }
+            for r in 0..ib {
+                for c in 0..jb {
+                    out[(i + r) * n + j + c] = epi(bias[j + c] + acc[r][c], j + c);
+                }
+            }
+            j += NR;
+        }
+        i += MR;
+    }
+}
+
+/// Fast int8 convolution: [`im2col_s8`] + [`gemm_s8_nt`]. `input` HWC,
+/// `kernel` OHWI, `out` length `oh·ow·cout`. `epi` maps each finished i32
+/// accumulator (bias included) and its output channel to the stored element.
+#[allow(clippy::too_many_arguments)]
+pub fn convolve_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    geom: &ConvGeom,
+    cols: &mut Vec<i32>,
+    out: &mut [T],
+    epi: E,
+) {
+    let (cout, kh, kw, kcin) =
+        (kernel.shape().dim(0), kernel.shape().dim(1), kernel.shape().dim(2), kernel.shape().dim(3));
+    assert_eq!(input.shape().dim(2), kcin, "conv channel mismatch");
+    assert_eq!((kh, kw), (geom.kh, geom.kw));
+    assert_eq!(bias.len(), cout);
+    let (m, k) = im2col_s8(input, geom, input_offset, cols);
+    assert_eq!(out.len(), m * cout, "conv output length");
+    gemm_s8_nt(m, cout, k, cols, kernel.data(), bias, out, epi);
+}
+
+/// Fast int8 depthwise convolution. The `[C, kh, kw]` weights are
+/// transposed once per call into `wt_scratch` as `[kh·kw, C]` so the inner
+/// loop is a contiguous multiply-add across channels; `acc_row` holds the
+/// C running accumulators of the current output pixel (O(C) scratch — the
+/// same order as the requant parameter vectors, never O(h)).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    geom: &ConvGeom,
+    wt_scratch: &mut Vec<i8>,
+    acc_row: &mut Vec<i32>,
+    out: &mut [T],
+    epi: E,
+) {
+    let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (kc, kh, kw) = (kernel.shape().dim(0), kernel.shape().dim(1), kernel.shape().dim(2));
+    assert_eq!(c, kc, "dwconv channel mismatch");
+    assert_eq!((kh, kw), (geom.kh, geom.kw));
+    assert_eq!(bias.len(), c);
+    let (oh, ow) = geom.out_dims(h, w);
+    assert_eq!(out.len(), oh * ow * c, "dwconv output length");
+    let taps = kh * kw;
+    wt_scratch.clear();
+    wt_scratch.resize(taps * c, 0);
+    let kd = kernel.data();
+    for ch in 0..c {
+        for t in 0..taps {
+            wt_scratch[t * c + ch] = kd[ch * taps + t];
+        }
+    }
+    acc_row.clear();
+    acc_row.resize(c, 0);
+    let xd = input.data();
+    for oy in 0..oh {
+        let y_origin = (oy * geom.stride) as isize - geom.pad as isize;
+        let (y0, y1) = geom.in_range_y(oy, h);
+        for ox in 0..ow {
+            let x_origin = (ox * geom.stride) as isize - geom.pad as isize;
+            let (x0, x1) = geom.in_range_x(ox, w);
+            acc_row.copy_from_slice(bias);
+            for yy in y0..y1 {
+                let dy = (yy as isize - y_origin) as usize;
+                for xx in x0..x1 {
+                    let dx = (xx as isize - x_origin) as usize;
+                    let xpix = &xd[(yy * w + xx) * c..][..c];
+                    let wpix = &wt_scratch[(dy * kw + dx) * c..][..c];
+                    for ((acc, &xv), &wv) in
+                        acc_row.iter_mut().zip(xpix.iter()).zip(wpix.iter())
+                    {
+                        *acc += (xv as i32 + input_offset) * wv as i32;
+                    }
+                }
+            }
+            let opix = &mut out[(oy * ow + ox) * c..][..c];
+            for (ch, (o, &acc)) in opix.iter_mut().zip(acc_row.iter()).enumerate() {
+                *o = epi(acc, ch);
+            }
+        }
+    }
+}
+
+/// Fast int8 fully connected: the per-element `(x + offset) · w` of the
+/// naive port distributes into `Σ x·w + offset · Σ w`, so the offset is
+/// applied once per row via the precomputed weight row sums (exact — pure
+/// integer distributivity). `w_row_sums[j] = Σ_i weights[j, i]`.
+pub fn fully_connected_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    x: &[i8],
+    weights: &Tensor<i8>,
+    bias: &[i32],
+    w_row_sums: &[i32],
+    input_offset: i32,
+    out: &mut [T],
+    epi: E,
+) {
+    let (h, d) = (weights.shape().dim(0), weights.shape().dim(1));
+    assert_eq!(x.len(), d, "fc input length");
+    assert_eq!(bias.len(), h, "fc bias length");
+    assert_eq!(w_row_sums.len(), h, "fc row-sum length");
+    assert_eq!(out.len(), h, "fc output length");
+    let wd = weights.data();
+    for j in 0..h {
+        let row = &wd[j * d..(j + 1) * d];
+        let mut acc = bias[j] + input_offset * w_row_sums[j];
+        for (&xv, &wv) in x.iter().zip(row.iter()) {
+            acc += xv as i32 * wv as i32;
+        }
+        out[j] = epi(acc, j);
+    }
+}
+
+/// Row sums of an `[h, d]` int8 weight matrix (deploy-time constant for
+/// [`fully_connected_s8_fast`]).
+pub fn weight_row_sums(weights: &Tensor<i8>) -> Vec<i32> {
+    let (h, d) = (weights.shape().dim(0), weights.shape().dim(1));
+    let wd = weights.data();
+    (0..h).map(|j| wd[j * d..(j + 1) * d].iter().map(|&v| v as i32).sum()).collect()
+}
+
+/// Convenience epilogue: requantize through `r` (the common i8 instantiation).
+#[inline]
+pub fn requant_epi(r: &Requant) -> impl Fn(i32, usize) -> i8 + '_ {
+    move |acc, ch| r.apply(acc, ch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cmsis::convolve_s8::convolve_s8_acc;
+    use crate::cmsis::dwconv_s8::dwconv_s8_acc;
+    use crate::cmsis::fully_connected_s8::fully_connected_s8_acc;
+    use crate::tensor::Shape;
+    use crate::util::check::Checker;
+
+    fn rand_i8(rng: &mut crate::util::Pcg32, n: usize, lo: i64, hi: i64) -> Vec<i8> {
+        (0..n).map(|_| rng.int_range(lo, hi) as i8).collect()
+    }
+
+    #[test]
+    fn conv_fast_acc_bit_exact_vs_naive() {
+        Checker::new(0x51D8, 40).check("convolve_s8_fast == convolve_s8_acc", |rng| {
+            let h = rng.int_range(3, 10) as usize;
+            let w = rng.int_range(3, 10) as usize;
+            let cin = rng.int_range(1, 6) as usize;
+            let cout = rng.int_range(1, 7) as usize;
+            let k = *rng.choice(&[1usize, 3]);
+            let stride = *rng.choice(&[1usize, 2]);
+            let pad = *rng.choice(&[0usize, k / 2]);
+            let geom = ConvGeom::new(k, k, stride, pad);
+            let x = Tensor::from_vec(Shape::hwc(h, w, cin), rand_i8(rng, h * w * cin, -128, 127));
+            let kt =
+                Tensor::from_vec(Shape::ohwi(cout, k, k, cin), rand_i8(rng, cout * k * k * cin, -127, 127));
+            let bias: Vec<i32> = (0..cout).map(|_| rng.int_range(-2000, 2000) as i32).collect();
+            let off = rng.int_range(-128, 128) as i32;
+            let want = convolve_s8_acc(&x, &kt, &bias, off, &geom);
+            let mut cols = Vec::new();
+            let mut got = vec![0i32; want.numel()];
+            convolve_s8_fast(&x, &kt, &bias, off, &geom, &mut cols, &mut got, |a, _| a);
+            if got != *want.data() {
+                return Err(format!("acc mismatch (h{h} w{w} cin{cin} cout{cout} k{k} s{stride} p{pad})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dwconv_fast_acc_bit_exact_vs_naive() {
+        Checker::new(0x51D9, 40).check("dwconv_s8_fast == dwconv_s8_acc", |rng| {
+            let h = rng.int_range(3, 10) as usize;
+            let w = rng.int_range(3, 10) as usize;
+            let c = rng.int_range(1, 8) as usize;
+            let k = *rng.choice(&[1usize, 3]);
+            let stride = *rng.choice(&[1usize, 2]);
+            let pad = *rng.choice(&[0usize, k / 2]);
+            let geom = ConvGeom::new(k, k, stride, pad);
+            let x = Tensor::from_vec(Shape::hwc(h, w, c), rand_i8(rng, h * w * c, -128, 127));
+            let kt = Tensor::from_vec(Shape::new(&[c, k, k]), rand_i8(rng, c * k * k, -127, 127));
+            let bias: Vec<i32> = (0..c).map(|_| rng.int_range(-2000, 2000) as i32).collect();
+            let off = rng.int_range(-128, 128) as i32;
+            let want = dwconv_s8_acc(&x, &kt, &bias, off, &geom);
+            let mut wt = Vec::new();
+            let mut acc_row = Vec::new();
+            let mut got = vec![0i32; want.numel()];
+            dwconv_s8_fast(&x, &kt, &bias, off, &geom, &mut wt, &mut acc_row, &mut got, |a, _| a);
+            if got != *want.data() {
+                return Err(format!("dw acc mismatch (h{h} w{w} c{c} k{k} s{stride} p{pad})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fc_fast_bit_exact_vs_naive() {
+        Checker::new(0x51DA, 60).check("fully_connected_s8_fast == naive", |rng| {
+            let d = rng.int_range(1, 128) as usize;
+            let hh = rng.int_range(1, 24) as usize;
+            let x = rand_i8(rng, d, -128, 127);
+            let wt = Tensor::from_vec(Shape::new(&[hh, d]), rand_i8(rng, hh * d, -127, 127));
+            let bias: Vec<i32> = (0..hh).map(|_| rng.int_range(-5000, 5000) as i32).collect();
+            let off = rng.int_range(-128, 128) as i32;
+            let want = fully_connected_s8_acc(&x, &wt, &bias, off);
+            let sums = weight_row_sums(&wt);
+            let mut got = vec![0i32; hh];
+            fully_connected_s8_fast(&x, &wt, &bias, &sums, off, &mut got, |a, _| a);
+            if got != want {
+                return Err(format!("fc mismatch (h{hh} d{d} off{off})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_requant_epilogue_matches_two_pass() {
+        // epi-fused i8 output == naive acc + separate requant sweep.
+        let mut rng = crate::util::Pcg32::new(0x51DB);
+        let geom = ConvGeom::same(3, 1);
+        let x = Tensor::from_vec(Shape::hwc(6, 5, 3), rand_i8(&mut rng, 90, -128, 127));
+        let kt = Tensor::from_vec(Shape::ohwi(4, 3, 3, 3), rand_i8(&mut rng, 108, -127, 127));
+        let bias = vec![100i32, -50, 0, 7];
+        let r = Requant::per_channel(&[0.02, 0.013, 0.4, 0.0021], -3);
+        let want = crate::cmsis::convolve_s8(&x, &kt, &bias, 5, &r, &geom);
+        let mut cols = Vec::new();
+        let mut got = vec![0i8; want.numel()];
+        convolve_s8_fast(&x, &kt, &bias, 5, &geom, &mut cols, &mut got, requant_epi(&r));
+        assert_eq!(&got, want.data());
+    }
+
+    #[test]
+    fn im2col_s8_identity_for_1x1() {
+        let x = Tensor::from_vec(Shape::hwc(2, 3, 2), vec![1i8, -2, 3, -4, 5, -6, 7, -8, 9, -10, 11, -12]);
+        let mut cols = Vec::new();
+        let (m, k) = im2col_s8(&x, &ConvGeom::new(1, 1, 1, 0), 10, &mut cols);
+        assert_eq!((m, k), (6, 2));
+        let want: Vec<i32> = x.data().iter().map(|&v| v as i32 + 10).collect();
+        assert_eq!(cols, want);
+    }
+}

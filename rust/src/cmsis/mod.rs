@@ -16,9 +16,15 @@
 //!
 //! All arithmetic on the estimation path is fixed-point (Newton–Raphson
 //! integer sqrt), exactly as on the STM32 target.
+//!
+//! [`fast`] holds the serving-speed versions of the same kernels — im2col +
+//! register-blocked i8×i8→i32 GEMM with the requantize fused into the
+//! accumulator sweep — used by [`crate::nn::int8_exec::Int8Executor`]. The
+//! scalar ports above are their bit-exact oracle.
 
 pub mod convolve_s8;
 pub mod dwconv_s8;
+pub mod fast;
 pub mod fully_connected_s8;
 pub mod pdq_wrappers;
 pub mod requant;

@@ -14,7 +14,7 @@
 
 use super::convolve_s8::{convolve_s8, convolve_s8_acc};
 use super::requant::Requant;
-use crate::estimator::fixed::FixedEstimator;
+use crate::estimator::fixed::{FixedEstimator, WindowStats};
 use crate::estimator::IntervalSpec;
 use crate::tensor::{ConvGeom, Tensor};
 #[cfg(test)]
@@ -114,9 +114,7 @@ pub fn conv_dynamic(
     let r = Requant::per_tensor(eff, out.zero);
     let cout = layer.cout();
     let mut q = Tensor::zeros(acc.shape().clone());
-    for (i, (&a, o)) in acc.data().iter().zip(q.data_mut().iter_mut()).enumerate() {
-        *o = r.apply(a, i % cout);
-    }
+    r.apply_slice(acc.data(), q.data_mut(), cout);
     (q, out)
 }
 
@@ -178,6 +176,90 @@ pub fn int_window_sums(
         oy += gamma;
     }
     (s1, s2)
+}
+
+/// Streaming variant of [`int_window_sums`]: folds every γ-sampled window's
+/// `(S1, S2)` straight into a [`WindowStats`] accumulator instead of
+/// materializing the per-window vectors — the estimation pass the int8
+/// executor runs, whose working memory is 4 integer registers (§4.2).
+pub fn conv_window_stats(
+    input: &Tensor<i8>,
+    geom: &ConvGeom,
+    z_in: i32,
+    gamma: usize,
+) -> WindowStats {
+    assert!(gamma >= 1);
+    let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let xd = input.data();
+    let mut st = WindowStats::default();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            let mut a = 0i64;
+            let mut b = 0i64;
+            for yy in y0..y1 {
+                let row = (yy * w) * c;
+                for xx in x0..x1 {
+                    let base = row + xx * c;
+                    for ch in 0..c {
+                        let d = (xd[base + ch] as i32 - z_in) as i64;
+                        a += d;
+                        b += d * d;
+                    }
+                }
+            }
+            st.push(a, b);
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    st
+}
+
+/// Depthwise analogue of [`conv_window_stats`]: each output entry `(i, j, v)`
+/// sees only channel `v` of its receptive field, so the sampled population
+/// is (position × channel) with channel-restricted window sums. Paired with
+/// the layer's *global* depthwise weight statistics this is the shared-σ²
+/// simplification of §4.1 applied to the integer path.
+pub fn dw_window_stats(
+    input: &Tensor<i8>,
+    geom: &ConvGeom,
+    z_in: i32,
+    gamma: usize,
+) -> WindowStats {
+    assert!(gamma >= 1);
+    let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
+    let (oh, ow) = geom.out_dims(h, w);
+    let xd = input.data();
+    let mut st = WindowStats::default();
+    let mut oy = 0;
+    while oy < oh {
+        let (y0, y1) = geom.in_range_y(oy, h);
+        let mut ox = 0;
+        while ox < ow {
+            let (x0, x1) = geom.in_range_x(ox, w);
+            for ch in 0..c {
+                let mut a = 0i64;
+                let mut b = 0i64;
+                for yy in y0..y1 {
+                    let row = (yy * w) * c;
+                    for xx in x0..x1 {
+                        let d = (xd[row + xx * c + ch] as i32 - z_in) as i64;
+                        a += d;
+                        b += d * d;
+                    }
+                }
+                st.push(a, b);
+            }
+            ox += gamma;
+        }
+        oy += gamma;
+    }
+    st
 }
 
 #[cfg(test)]
@@ -289,6 +371,37 @@ mod tests {
             assert_eq!(s1[i] as f64, fsums.s1[i], "s1[{i}]");
             assert_eq!(s2[i] as f64, fsums.s2[i], "s2[{i}]");
         }
+    }
+
+    #[test]
+    fn conv_window_stats_streams_int_window_sums() {
+        let mut rng = Pcg32::new(0xA6);
+        let (h, w, c) = (10, 8, 3);
+        let xq: Vec<i8> = (0..h * w * c).map(|_| rng.int_range(-128, 127) as i8).collect();
+        let xqt = Tensor::from_vec(Shape::hwc(h, w, c), xq);
+        let geom = ConvGeom::same(3, 2);
+        for gamma in [1usize, 2, 3] {
+            let (s1, s2) = int_window_sums(&xqt, &geom, -7, gamma);
+            let st = conv_window_stats(&xqt, &geom, -7, gamma);
+            assert_eq!(st.n as usize, s1.len(), "γ={gamma}");
+            assert_eq!(st.sum_s1, s1.iter().sum::<i64>(), "γ={gamma}");
+            assert_eq!(st.sum_s2, s2.iter().sum::<i64>(), "γ={gamma}");
+            assert_eq!(
+                st.sum_s1_sq,
+                s1.iter().map(|&a| (a as i128) * (a as i128)).sum::<i128>(),
+                "γ={gamma}"
+            );
+        }
+    }
+
+    #[test]
+    fn dw_window_stats_single_channel_degenerates_to_conv() {
+        let mut rng = Pcg32::new(0xA7);
+        let (h, w) = (9, 9);
+        let xq: Vec<i8> = (0..h * w).map(|_| rng.int_range(-128, 127) as i8).collect();
+        let xqt = Tensor::from_vec(Shape::hwc(h, w, 1), xq);
+        let geom = ConvGeom::same(3, 1);
+        assert_eq!(dw_window_stats(&xqt, &geom, 3, 2), conv_window_stats(&xqt, &geom, 3, 2));
     }
 
     #[test]

@@ -49,6 +49,29 @@ impl Requant {
         let v = m.apply(acc) + self.output_offset;
         v.clamp(self.act_min, self.act_max) as i8
     }
+
+    /// Requantize a whole channels-last accumulator tensor (`pixels ×
+    /// channels` row-major). Iterates pixel rows and channels directly, so
+    /// the per-element `i % channels` of the scalar loop disappears.
+    pub fn apply_slice(&self, acc: &[i32], out: &mut [i8], channels: usize) {
+        assert_eq!(acc.len(), out.len(), "requant: acc/out length mismatch");
+        assert!(channels > 0 && acc.len() % channels == 0, "requant: not channel-aligned");
+        if self.multipliers.len() == 1 {
+            let m = self.multipliers[0];
+            for (&a, o) in acc.iter().zip(out.iter_mut()) {
+                let v = m.apply(a) + self.output_offset;
+                *o = v.clamp(self.act_min, self.act_max) as i8;
+            }
+        } else {
+            assert_eq!(self.multipliers.len(), channels, "requant: channel arity");
+            for (arow, orow) in acc.chunks_exact(channels).zip(out.chunks_exact_mut(channels)) {
+                for ch in 0..channels {
+                    let v = self.multipliers[ch].apply(arow[ch]) + self.output_offset;
+                    orow[ch] = v.clamp(self.act_min, self.act_max) as i8;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +104,24 @@ mod tests {
         let r = Requant::per_tensor(1.0, 0).with_activation(0, 127);
         assert_eq!(r.apply(-5, 0), 0);
         assert_eq!(r.apply(5, 0), 5);
+    }
+
+    #[test]
+    fn apply_slice_matches_scalar() {
+        // 3 pixels × 2 channels, per-channel multipliers: the hoisted loop
+        // must agree element-for-element with the modulo-indexed scalar path.
+        let r = Requant::per_channel(&[1.0, 0.25], 3).with_activation(-100, 100);
+        let acc = [40i32, 40, -500, 8, 120, -8];
+        let mut out = [0i8; 6];
+        r.apply_slice(&acc, &mut out, 2);
+        for (i, (&a, &o)) in acc.iter().zip(out.iter()).enumerate() {
+            assert_eq!(o, r.apply(a, i % 2), "[{i}]");
+        }
+        let rt = Requant::per_tensor(0.5, -1);
+        let mut out_t = [0i8; 6];
+        rt.apply_slice(&acc, &mut out_t, 2);
+        for (i, (&a, &o)) in acc.iter().zip(out_t.iter()).enumerate() {
+            assert_eq!(o, rt.apply(a, i % 2), "[{i}]");
+        }
     }
 }

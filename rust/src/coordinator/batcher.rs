@@ -88,15 +88,23 @@ mod tests {
 
     #[test]
     fn late_arrivals_join_within_deadline() {
+        // Deterministic handshake instead of a sleep: the sender thread
+        // waits for an explicit go-signal fired right before the batch is
+        // collected, then sends the second item. With max_batch = 2 the
+        // batch closes the moment that item lands, so the assertion holds
+        // for every interleaving (item caught by the drain or by the timed
+        // wait) and the generous deadline is never actually waited out.
         let (tx, rx) = mpsc::channel();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
         tx.send(0).unwrap();
         let sender = thread::spawn(move || {
-            thread::sleep(Duration::from_millis(5));
-            let _ = tx.send(1);
+            go_rx.recv().unwrap();
+            tx.send(1).unwrap();
         });
-        let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_millis(100) };
+        let policy = BatchPolicy { max_batch: 2, deadline: Duration::from_secs(30) };
+        go_tx.send(()).unwrap();
         let b = next_batch(&rx, &policy).unwrap();
         sender.join().unwrap();
-        assert_eq!(b.len(), 2, "late item should join the open batch");
+        assert_eq!(b, vec![0, 1], "late item must join the open batch");
     }
 }

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use crate::data::{shapes, Task};
 use crate::models::Model;
 use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
-use crate::nn::QuantMode;
+use crate::nn::{Int8Executor, QuantMode};
 use crate::quant::Granularity;
 use crate::tensor::Tensor;
 
@@ -18,8 +18,17 @@ use crate::tensor::Tensor;
 pub enum ExecKind {
     /// FP32 on the in-process float engine.
     Float(Arc<crate::nn::Graph>),
-    /// Calibrated quantization emulation.
+    /// Calibrated quantization emulation (f32 carriers).
     Quant(Box<QuantExecutor>),
+    /// True-int8 engine lowered from a calibrated emulator; responses are
+    /// dequantized at the serving boundary.
+    Int8(Box<Int8Executor>),
+}
+
+/// A worker-owned execution workspace matching its variant's engine.
+pub enum ArenaKind {
+    F32(crate::nn::ExecArena),
+    Int8(crate::nn::Int8Arena),
 }
 
 impl ExecKind {
@@ -28,29 +37,32 @@ impl ExecKind {
         match self {
             ExecKind::Float(g) => crate::nn::float_exec::run(g, img),
             ExecKind::Quant(ex) => ex.run(img),
+            ExecKind::Int8(ex) => ex.run(img),
         }
     }
 
     /// A packed execution arena for this variant. Workers create one per
     /// thread and feed it to [`ExecKind::run_with_arena`] so every batched
     /// request reuses the same buffers.
-    pub fn make_arena(&self) -> crate::nn::ExecArena {
+    pub fn make_arena(&self) -> ArenaKind {
         match self {
-            ExecKind::Float(g) => crate::nn::ExecArena::for_run(g),
-            ExecKind::Quant(ex) => ex.make_arena(),
+            ExecKind::Float(g) => ArenaKind::F32(crate::nn::ExecArena::for_run(g)),
+            ExecKind::Quant(ex) => ArenaKind::F32(ex.make_arena()),
+            ExecKind::Int8(ex) => ArenaKind::Int8(ex.make_arena()),
         }
     }
 
     /// Run one image through a caller-owned arena (allocation-free in
-    /// steady state).
-    pub fn run_with_arena(
-        &self,
-        img: &Tensor<f32>,
-        arena: &mut crate::nn::ExecArena,
-    ) -> Vec<Tensor<f32>> {
-        match self {
-            ExecKind::Float(g) => crate::nn::float_exec::run_with_arena(g, img, arena),
-            ExecKind::Quant(ex) => ex.run_with_arena(img, arena),
+    /// steady state). The arena must come from this variant's
+    /// [`ExecKind::make_arena`].
+    pub fn run_with_arena(&self, img: &Tensor<f32>, arena: &mut ArenaKind) -> Vec<Tensor<f32>> {
+        match (self, arena) {
+            (ExecKind::Float(g), ArenaKind::F32(a)) => {
+                crate::nn::float_exec::run_with_arena(g, img, a)
+            }
+            (ExecKind::Quant(ex), ArenaKind::F32(a)) => ex.run_with_arena(img, a),
+            (ExecKind::Int8(ex), ArenaKind::Int8(a)) => ex.run_with_arena(img, a),
+            _ => panic!("arena kind does not match executor kind"),
         }
     }
 }
@@ -75,6 +87,21 @@ pub fn build_quant_variant(
     let mut ex = QuantExecutor::new(Arc::clone(&model.graph), settings);
     ex.calibrate(calib);
     ex
+}
+
+/// Build + calibrate one quantized variant, then lower it to the
+/// integer-native engine (per-tensor activations; `weight_gran` picks the
+/// weight-scale granularity). The f32 emulator is calibration scaffolding
+/// only — the returned executor serves pure int8.
+pub fn build_int8_variant(
+    model: &Model,
+    mode: QuantMode,
+    weight_gran: Granularity,
+    gamma: usize,
+    calib: &[Tensor<f32>],
+) -> Result<Int8Executor, String> {
+    let ex = build_quant_variant(model, mode, Granularity::PerTensor, gamma, calib);
+    Int8Executor::lower(&ex, weight_gran)
 }
 
 /// Build the standard six-variant menu for one model (fp32 + the paper's
@@ -142,6 +169,29 @@ mod tests {
             assert!(ex.is_calibrated());
             let out = ex.run(&calib[0]);
             assert_eq!(out[0].shape().dims(), &[10]);
+        }
+    }
+
+    #[test]
+    fn int8_variant_lowers_and_serves_f32_outputs() {
+        let model = tiny_model();
+        let mut rng = Pcg32::new(2);
+        let calib: Vec<Tensor<f32>> = (0..4)
+            .map(|_| {
+                let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(8, 8, 3), d)
+            })
+            .collect();
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let ex = build_int8_variant(&model, mode, Granularity::PerTensor, 1, &calib)
+                .expect("lowering succeeds");
+            let kind = ExecKind::Int8(Box::new(ex));
+            let out = kind.run(&calib[0]);
+            assert_eq!(out[0].shape().dims(), &[10]);
+            // The worker path: matching arena kind round-trips.
+            let mut arena = kind.make_arena();
+            let out2 = kind.run_with_arena(&calib[0], &mut arena);
+            assert_eq!(out[0].data(), out2[0].data());
         }
     }
 }

@@ -13,6 +13,9 @@ pub enum ModeKey {
     Fp32,
     /// A quantized emulation variant.
     Quant(QuantModeKey, GranKey),
+    /// A true-int8 variant (integer-native engine; per-tensor activations,
+    /// the [`GranKey`] names the *weight* scale granularity).
+    Int8(QuantModeKey, GranKey),
 }
 
 // QuantMode / Granularity don't implement Ord; mirror them with tiny keys
@@ -80,6 +83,7 @@ impl VariantKey {
         match &self.mode {
             ModeKey::Fp32 => format!("{}/fp32", self.model),
             ModeKey::Quant(m, g) => format!("{}/{m:?}/{g:?}", self.model),
+            ModeKey::Int8(m, g) => format!("{}/int8/{m:?}/{g:?}", self.model),
         }
     }
 }

@@ -159,6 +159,63 @@ mod tests {
     }
 
     #[test]
+    fn int8_variant_serves_end_to_end() {
+        use crate::coordinator::router::{GranKey, QuantModeKey};
+        use crate::nn::int8_exec::Int8Executor;
+        use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+        use crate::nn::QuantMode;
+        use crate::quant::Granularity;
+        use crate::tensor::ConvGeom;
+        use crate::util::Pcg32;
+
+        let mut rng = Pcg32::new(0x15E6);
+        let mut g = Graph::new(Shape::hwc(6, 6, 2));
+        let x = g.input();
+        let w: Vec<f32> = (0..4 * 9 * 2).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(
+            x,
+            crate::tensor::Tensor::from_vec(crate::tensor::Shape::ohwi(4, 3, 3, 2), w),
+            vec![0.0; 4],
+            ConvGeom::same(3, 1),
+        );
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        g.mark_output(p);
+        let graph = Arc::new(g);
+        let calib: Vec<Tensor<f32>> = (0..4)
+            .map(|_| {
+                let d: Vec<f32> = (0..6 * 6 * 2).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(6, 6, 2), d)
+            })
+            .collect();
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&graph),
+            QuantSettings { mode: QuantMode::Probabilistic, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+        let key = VariantKey {
+            model: "m8".into(),
+            mode: ModeKey::Int8(QuantModeKey::Ours, GranKey::T),
+        };
+        let server = Server::start(
+            vec![(key.clone(), ExecKind::Int8(Box::new(int8)))],
+            ServerConfig::default(),
+        );
+        let mut rxs = Vec::new();
+        for id in 0..8u64 {
+            rxs.push((id, server.submit(key.clone(), id, calib[id as usize % 4].clone()).unwrap()));
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.outputs[0].shape().dims(), &[4]);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.responses(), 8);
+    }
+
+    #[test]
     fn concurrent_submitters() {
         let server = Arc::new(Server::start(
             vec![float_variant("a"), float_variant("b")],

@@ -109,21 +109,53 @@ impl FixedEstimator {
     /// `mean = c_µ·mean(S1)`, `var = c_σ²·mean(S2) + c_µ²·var(S1)`.
     pub fn from_window_sums(&self, s1: &[i64], s2: &[i64]) -> FixedMoments {
         assert_eq!(s1.len(), s2.len());
-        if s1.is_empty() {
+        let mut st = WindowStats::default();
+        for (&a, &b) in s1.iter().zip(s2.iter()) {
+            st.push(a, b);
+        }
+        self.from_window_stats(&st)
+    }
+
+    /// [`Self::from_window_sums`] over *streamed* statistics — the four
+    /// running accumulators of [`WindowStats`] are all the state the
+    /// estimation pass keeps, which is the §4.2 O(1)-memory contract the
+    /// int8 executor enforces by construction (no `Vec<i64>` of per-window
+    /// sums is ever materialized on that path).
+    pub fn from_window_stats(&self, st: &WindowStats) -> FixedMoments {
+        if st.n == 0 {
             return FixedMoments { mean_q16: 0, sigma_q16: 0 };
         }
-        let n = s1.len() as i64;
-        let sum1: i64 = s1.iter().sum();
-        let sum2: i64 = s2.iter().sum();
-        // var(S1) in integer: E[S1²] − E[S1]² with i128 intermediates.
-        let sum1_sq: i128 = s1.iter().map(|&a| (a as i128) * (a as i128)).sum();
-        let mean_s1 = sum1 / n; // floor; bias < 1 count, negligible at Q16 scale
-        let e_s1sq = (sum1_sq / n as i128) as i64;
+        let n = st.n;
+        let mean_s1 = st.sum_s1 / n; // floor; bias < 1 count, negligible at Q16 scale
+        let e_s1sq = (st.sum_s1_sq / n as i128) as i64;
         let var_s1 = (e_s1sq - mean_s1 * mean_s1).max(0);
-        let mean_s2 = sum2 / n;
+        let mean_s2 = st.sum_s2 / n;
         let mean_q16 = self.c_mu.apply_i64(mean_s1);
         let var_q16 = (self.c_var.apply_i64(mean_s2) + self.c_mu2.apply_i64(var_s1)).max(0);
         FixedMoments { mean_q16, sigma_q16: sqrt_q16(var_q16) }
+    }
+}
+
+/// Streaming accumulator over per-window integer sums `(S1, S2)`: count,
+/// `ΣS1`, `ΣS2`, `ΣS1²` — enough for the pooled law-of-total-variance
+/// estimate without storing the windows (the paper's 2b′ constant-memory
+/// claim, extended to the pooled conv case).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowStats {
+    pub n: i64,
+    pub sum_s1: i64,
+    pub sum_s2: i64,
+    pub sum_s1_sq: i128,
+}
+
+impl WindowStats {
+    /// Fold in one window's `(S1, S2)`.
+    #[inline]
+    pub fn push(&mut self, s1: i64, s2: i64) {
+        self.n += 1;
+        self.sum_s1 += s1;
+        self.sum_s2 += s2;
+        self.sum_s1_sq += (s1 as i128) * (s1 as i128);
     }
 }
 
@@ -236,6 +268,19 @@ mod tests {
         // mean = -0.1 * 0.05 * 100 * 64 = -32
         assert!((m.mean + 32.0).abs() < 0.05, "{}", m.mean);
         assert!(m.var > 0.0);
+    }
+
+    #[test]
+    fn window_stats_streaming_matches_slices() {
+        let fixed = FixedEstimator::new(0.07, 0.02, 0.03);
+        let s1: Vec<i64> = (0..37i64).map(|i| (i - 18) * 1000).collect();
+        let s2: Vec<i64> = s1.iter().map(|&a| a.abs() * 2 + 17).collect();
+        let mut st = WindowStats::default();
+        for (&a, &b) in s1.iter().zip(s2.iter()) {
+            st.push(a, b);
+        }
+        assert_eq!(fixed.from_window_sums(&s1, &s2), fixed.from_window_stats(&st));
+        assert_eq!(st.n, 37);
     }
 
     #[test]

@@ -11,7 +11,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
+use pdq::coordinator::calibrate::{
+    build_int8_variant, build_quant_variant, calibration_images, ExecKind, CALIB_SIZE,
+};
 use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
 use pdq::data::shapes;
@@ -87,13 +89,22 @@ fn cmd_eval(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let samples = shapes::dataset(model.task, shapes::Split::Test, n);
     let protocol =
         if ood { EvalProtocol::OutOfDomain { seed: 0xD0D0 } } else { EvalProtocol::InDomain };
-    let ex = build_quant_variant(&model, mode, gran, gamma, &calib);
-    let metric = evaluate(model.task, &ExecKind::Quant(Box::new(ex)), &samples, protocol);
+    // --int8: evaluate on the integer-native engine (gran picks the weight
+    // scale granularity; activations are per-tensor by construction).
+    let kind = if args.flag("int8") {
+        let ex = build_int8_variant(&model, mode, gran, gamma, &calib)
+            .map_err(anyhow::Error::msg)?;
+        ExecKind::Int8(Box::new(ex))
+    } else {
+        ExecKind::Quant(Box::new(build_quant_variant(&model, mode, gran, gamma, &calib)))
+    };
+    let metric = evaluate(model.task, &kind, &samples, protocol);
     let fp = evaluate(model.task, &ExecKind::Float(Arc::clone(&model.graph)), &samples, protocol);
     println!(
-        "{name} {} {} gamma={gamma} n={n} ood={ood}: metric={metric:.4} (fp32 {fp:.4})",
+        "{name} {} {} gamma={gamma} n={n} ood={ood} int8={}: metric={metric:.4} (fp32 {fp:.4})",
         mode.label(),
-        gran.label()
+        gran.label(),
+        args.flag("int8"),
     );
     Ok(())
 }
@@ -182,6 +193,16 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         variants.push((
             VariantKey { model: name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
             ExecKind::Quant(Box::new(ex)),
+        ));
+    }
+    // True-int8 variants: the same three requant strategies lowered onto
+    // the integer-native engine (per-tensor weight scales).
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let ex = build_int8_variant(&model, mode, Granularity::PerTensor, 1, &calib)
+            .map_err(anyhow::Error::msg)?;
+        variants.push((
+            VariantKey { model: name.clone(), mode: ModeKey::Int8(mode.into(), GranKey::T) },
+            ExecKind::Int8(Box::new(ex)),
         ));
     }
     let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();

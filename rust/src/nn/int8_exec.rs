@@ -1,0 +1,1135 @@
+//! The integer-native graph executor — §5.1 at serving speed.
+//!
+//! [`Int8Executor::lower`] turns a **calibrated** [`QuantExecutor`] into a
+//! deploy-ready int8 program: weights are quantized once to symmetric int8
+//! (per-tensor or per-output-channel scales — the CMSIS convention keeps
+//! activations per-tensor), float biases are folded to i32 on the
+//! `s_in·s_w` accumulator grid, and the requantization parameters are
+//! precomputed per node as [`FixedMultiplier`]-backed [`Requant`] specs
+//! wherever the mode allows it (static: everything is frozen at lowering;
+//! dynamic/PDQ: the output grid is input-dependent, so the O(C) multiplier
+//! fold happens per request — which is exactly those modes' point).
+//!
+//! Execution runs on an [`Int8Arena`]: int8 activation slots from the same
+//! liveness-packed [`MemoryPlan`] the float engine uses, with the fast
+//! [`crate::cmsis::fast`] kernels requantizing **inside the accumulator
+//! sweep** for the static and PDQ modes — the i32 pre-activation tensor is
+//! never materialized, which is the paper's O(1)-memory property enforced
+//! by construction (`Int8Arena::wide_capacity_elems() == 0` after a
+//! static/PDQ pass). Dynamic mode deliberately pays the §3 `b′·h` wide
+//! buffer: kernel → full i32 output → min/max scan → requantize.
+//!
+//! PDQ's output grid comes from [`FixedEstimator`]: γ-strided integer
+//! window statistics streamed off the int8 input (4 integer accumulators —
+//! §4.2's constant estimation memory), Q16.16 moments, Newton–Raphson σ,
+//! then `I(α,β)` with the `(α, β)` calibrated on the source executor.
+//!
+//! The naive scalar ports ([`crate::cmsis::convolve_s8`] & friends) remain
+//! the oracle: [`Int8Executor::run_naive`] executes the same lowered
+//! program through them, one layer at a time with fresh allocations and a
+//! separate requantize sweep, and must agree with the fast engine **bit for
+//! bit** (`rust/tests/int8_parity.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use super::graph::{Graph, NodeId, Op};
+use super::memory::{Int8Arena, MemoryPlan};
+use super::quant_exec::{QuantExecutor, QuantMode};
+use crate::cmsis::fast;
+use crate::cmsis::pdq_wrappers::{conv_window_stats, dw_window_stats, QOut};
+use crate::cmsis::requant::Requant;
+use crate::estimator::fixed::{int_sums, FixedEstimator, WindowStats};
+use crate::estimator::IntervalSpec;
+use crate::quant::fixedpoint::FixedMultiplier;
+use crate::quant::{Granularity, QParams};
+use crate::tensor::{ConvGeom, Shape, Tensor};
+
+/// A lowered conv/dwconv/linear layer: int8 weights, folded biases,
+/// surrogate statistics and (for static mode) the frozen requant spec.
+#[derive(Clone, Debug)]
+pub struct Int8Layer {
+    /// Symmetric int8 weights (conv OHWI / dw `[C, kh, kw]` / linear `[h, d]`).
+    pub kernel: Tensor<i8>,
+    /// Weight scales: one entry (per-tensor) or one per output channel.
+    pub s_w: Vec<f32>,
+    /// Original float bias — refolded per request in dynamic/PDQ mode.
+    pub bias_f: Vec<f32>,
+    /// i32 bias on the frozen `s_in·s_w` grid (static mode only).
+    pub bias_q: Vec<i32>,
+    /// Per-row weight sums (linear only): folds the input offset exactly.
+    pub w_row_sums: Vec<i32>,
+    /// Surrogate stats of the dequantized weights (what actually runs).
+    pub mu_w: f32,
+    pub var_w: f32,
+    /// Bias moment correction (law of total variance over channels).
+    pub bias_mu: f32,
+    pub bias_var: f32,
+    /// Calibrated `(α, β)` interval for the PDQ grid.
+    pub interval: IntervalSpec,
+    /// Frozen output grid + requant spec (static mode only).
+    pub static_out: Option<QOut>,
+    pub static_requant: Option<Requant>,
+}
+
+/// Which naive weight layout a layer uses (drives deploy-time extras).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WeightLayout {
+    Conv,
+    Dw,
+    Linear,
+}
+
+/// Lowered ops. Same topology as the source [`Graph`].
+#[derive(Clone, Debug)]
+pub enum Int8Op {
+    Input,
+    Conv { l: Int8Layer, geom: ConvGeom },
+    DwConv { l: Int8Layer, geom: ConvGeom },
+    Linear { l: Int8Layer },
+    Relu,
+    Relu6,
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    Flatten,
+    Add,
+}
+
+/// One lowered node.
+#[derive(Clone, Debug)]
+pub struct Int8Node {
+    pub op: Int8Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// The integer-native executor (see module docs).
+pub struct Int8Executor {
+    nodes: Vec<Int8Node>,
+    input_shape: Shape,
+    output_ids: Vec<NodeId>,
+    mode: QuantMode,
+    gamma: usize,
+    input_q: QOut,
+    plan: Arc<MemoryPlan>,
+    /// Internal arena so plain [`Int8Executor::run`] is allocation-free in
+    /// steady state; serving workers bypass it via
+    /// [`Int8Executor::run_with_arena`].
+    arena: Mutex<Int8Arena>,
+}
+
+impl Int8Executor {
+    /// Lower a calibrated [`QuantExecutor`] into an int8 program.
+    ///
+    /// Requirements: `bits == 8`; per-tensor activation granularity (the
+    /// CMSIS kernels carry per-channel scales for *weights* only — pass
+    /// `weight_gran` for those); static and PDQ modes need `calibrate()`
+    /// to have run (frozen ranges / fitted `(α, β)`).
+    pub fn lower(ex: &QuantExecutor, weight_gran: Granularity) -> Result<Self, String> {
+        let settings = *ex.settings();
+        if settings.bits != 8 {
+            return Err(format!("int8 lowering requires bits = 8, got {}", settings.bits));
+        }
+        if settings.granularity != Granularity::PerTensor {
+            return Err(
+                "int8 lowering requires per-tensor activation grids (per-channel lives on the weights)"
+                    .into(),
+            );
+        }
+        let mode = settings.mode;
+        if mode != QuantMode::Dynamic && !ex.is_calibrated() {
+            return Err("calibrate() the QuantExecutor before lowering static/PDQ".into());
+        }
+        let graph: &Arc<Graph> = ex.graph();
+        let (ilo, ihi) = ex.input_range();
+        let input_q = qout(&QParams::from_range(ilo, ihi, 8));
+        let mut static_q: Vec<QOut> = Vec::with_capacity(graph.nodes().len());
+        let mut nodes = Vec::with_capacity(graph.nodes().len());
+        for (idx, node) in graph.nodes().iter().enumerate() {
+            let (op, sq) = match &node.op {
+                Op::Input => (Int8Op::Input, input_q),
+                Op::Conv { w, b, geom } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let (l, sq) =
+                        lower_layer(ex, idx, w, b, WeightLayout::Conv, weight_gran, mode, in_q)?;
+                    (Int8Op::Conv { l, geom: *geom }, sq)
+                }
+                Op::DwConv { w, b, geom } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let (l, sq) =
+                        lower_layer(ex, idx, w, b, WeightLayout::Dw, weight_gran, mode, in_q)?;
+                    (Int8Op::DwConv { l, geom: *geom }, sq)
+                }
+                Op::Linear { w, b } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let (l, sq) =
+                        lower_layer(ex, idx, w, b, WeightLayout::Linear, weight_gran, mode, in_q)?;
+                    (Int8Op::Linear { l }, sq)
+                }
+                Op::Relu => (Int8Op::Relu, static_q[node.inputs[0].0]),
+                Op::Relu6 => (Int8Op::Relu6, static_q[node.inputs[0].0]),
+                Op::MaxPool { k, stride } => {
+                    (Int8Op::MaxPool { k: *k, stride: *stride }, static_q[node.inputs[0].0])
+                }
+                Op::GlobalAvgPool => (Int8Op::GlobalAvgPool, static_q[node.inputs[0].0]),
+                Op::Flatten => (Int8Op::Flatten, static_q[node.inputs[0].0]),
+                Op::Add => {
+                    (Int8Op::Add, add_grid(static_q[node.inputs[0].0], static_q[node.inputs[1].0]))
+                }
+            };
+            static_q.push(sq);
+            nodes.push(Int8Node { op, inputs: node.inputs.clone() });
+        }
+        let plan = Arc::new(MemoryPlan::packed(graph));
+        let arena = Mutex::new(Int8Arena::new(Arc::clone(&plan)));
+        Ok(Self {
+            nodes,
+            input_shape: graph.input_shape().clone(),
+            output_ids: graph.output_ids(),
+            mode,
+            gamma: settings.gamma.max(1),
+            input_q,
+            plan,
+            arena,
+        })
+    }
+
+    pub fn mode(&self) -> QuantMode {
+        self.mode
+    }
+
+    pub fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// Update the PDQ sampling stride γ (no re-lowering needed).
+    pub fn set_gamma(&mut self, gamma: usize) {
+        assert!(gamma >= 1);
+        self.gamma = gamma;
+    }
+
+    pub fn nodes(&self) -> &[Int8Node] {
+        &self.nodes
+    }
+
+    pub fn plan(&self) -> &MemoryPlan {
+        &self.plan
+    }
+
+    /// A fresh arena compatible with [`Int8Executor::run_with_arena`].
+    pub fn make_arena(&self) -> Int8Arena {
+        Int8Arena::new(Arc::clone(&self.plan))
+    }
+
+    /// Run one image; dequantized f32 outputs (drop-in for the f32 engines).
+    pub fn run(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let mut arena = self.arena.lock().unwrap();
+        self.forward(input, &mut arena);
+        self.collect_dequant(&arena)
+    }
+
+    /// Run one image; raw int8 outputs with their grids.
+    pub fn run_q(&self, input: &Tensor<f32>) -> Vec<(Tensor<i8>, QOut)> {
+        let mut arena = self.arena.lock().unwrap();
+        self.forward(input, &mut arena);
+        self.collect_q(&arena)
+    }
+
+    /// Run into a caller-owned arena (the serving path: one arena per
+    /// worker thread, zero steady-state allocation).
+    pub fn run_with_arena(&self, input: &Tensor<f32>, arena: &mut Int8Arena) -> Vec<Tensor<f32>> {
+        self.forward(input, arena);
+        self.collect_dequant(arena)
+    }
+
+    /// [`Int8Executor::run_with_arena`] returning raw int8 outputs.
+    pub fn run_q_with_arena(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut Int8Arena,
+    ) -> Vec<(Tensor<i8>, QOut)> {
+        self.forward(input, arena);
+        self.collect_q(arena)
+    }
+
+    fn collect_dequant(&self, arena: &Int8Arena) -> Vec<Tensor<f32>> {
+        self.output_ids
+            .iter()
+            .map(|id| dequant_tensor(arena.value(id.0), arena.grid(id.0)))
+            .collect()
+    }
+
+    fn collect_q(&self, arena: &Int8Arena) -> Vec<(Tensor<i8>, QOut)> {
+        self.output_ids.iter().map(|id| (arena.value(id.0).clone(), arena.grid(id.0))).collect()
+    }
+
+    // ---- the fast arena engine -------------------------------------------
+
+    fn forward(&self, input: &Tensor<f32>, arena: &mut Int8Arena) {
+        assert_eq!(
+            input.shape(),
+            &self.input_shape,
+            "input shape mismatch: got {}, program wants {}",
+            input.shape(),
+            self.input_shape
+        );
+        assert_eq!(
+            arena.plan().shapes.len(),
+            self.nodes.len(),
+            "arena plan does not match program"
+        );
+        for idx in 0..self.nodes.len() {
+            self.eval_node(idx, input, arena);
+        }
+    }
+
+    fn eval_node(&self, idx: usize, input: &Tensor<f32>, arena: &mut Int8Arena) {
+        let node = &self.nodes[idx];
+        let out_slot = arena.plan.slots[idx];
+        let out_shape = arena.plan.shapes[idx].clone();
+        match &node.op {
+            Int8Op::Input => {
+                let t = &mut arena.slots[out_slot];
+                t.resize_to(out_shape);
+                quantize_into(self.input_q, input.data(), t.data_mut());
+                arena.node_q[idx] = self.input_q;
+            }
+            Int8Op::Relu => {
+                let in_id = node.inputs[0].0;
+                let q = arena.node_q[in_id];
+                let lo = q.zero.clamp(-128, 127) as i8;
+                let in_slot = arena.plan.slots[in_id];
+                if in_slot == out_slot {
+                    let t = &mut arena.slots[out_slot];
+                    t.resize_to(out_shape);
+                    for v in t.data_mut() {
+                        if *v < lo {
+                            *v = lo;
+                        }
+                    }
+                } else {
+                    let mut out = arena.take_slot(out_slot);
+                    out.resize_to(out_shape);
+                    let x = &arena.slots[in_slot];
+                    for (o, &v) in out.data_mut().iter_mut().zip(x.data().iter()) {
+                        *o = v.max(lo);
+                    }
+                    arena.slots[out_slot] = out;
+                }
+                arena.node_q[idx] = q;
+            }
+            Int8Op::Relu6 => {
+                let in_id = node.inputs[0].0;
+                let q = arena.node_q[in_id];
+                let (lo, hi) = relu6_bounds(q);
+                let in_slot = arena.plan.slots[in_id];
+                if in_slot == out_slot {
+                    let t = &mut arena.slots[out_slot];
+                    t.resize_to(out_shape);
+                    for v in t.data_mut() {
+                        *v = (*v).clamp(lo, hi);
+                    }
+                } else {
+                    let mut out = arena.take_slot(out_slot);
+                    out.resize_to(out_shape);
+                    let x = &arena.slots[in_slot];
+                    for (o, &v) in out.data_mut().iter_mut().zip(x.data().iter()) {
+                        *o = v.clamp(lo, hi);
+                    }
+                    arena.slots[out_slot] = out;
+                }
+                arena.node_q[idx] = q;
+            }
+            Int8Op::Flatten => {
+                let in_id = node.inputs[0].0;
+                let q = arena.node_q[in_id];
+                let in_slot = arena.plan.slots[in_id];
+                if in_slot == out_slot {
+                    arena.slots[out_slot].resize_to(out_shape);
+                } else {
+                    let mut out = arena.take_slot(out_slot);
+                    out.resize_to(out_shape);
+                    out.data_mut().copy_from_slice(arena.slots[in_slot].data());
+                    arena.slots[out_slot] = out;
+                }
+                arena.node_q[idx] = q;
+            }
+            Int8Op::MaxPool { k, stride } => {
+                let in_id = node.inputs[0].0;
+                let q = arena.node_q[in_id];
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                maxpool_s8_into(&arena.slots[arena.plan.slots[in_id]], *k, *stride, out.data_mut());
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = q;
+            }
+            Int8Op::GlobalAvgPool => {
+                let in_id = node.inputs[0].0;
+                let q = arena.node_q[in_id];
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                gap_s8_into(&arena.slots[arena.plan.slots[in_id]], out.data_mut());
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = q;
+            }
+            Int8Op::Add => {
+                let (a_id, b_id) = (node.inputs[0].0, node.inputs[1].0);
+                let (qa, qb) = (arena.node_q[a_id], arena.node_q[b_id]);
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                let qo = add_s8_into(
+                    arena.slots[arena.plan.slots[a_id]].data(),
+                    qa,
+                    arena.slots[arena.plan.slots[b_id]].data(),
+                    qb,
+                    out.data_mut(),
+                );
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = qo;
+            }
+            Int8Op::Conv { l, geom } => {
+                let in_id = node.inputs[0].0;
+                let in_q = arena.node_q[in_id];
+                let in_slot = arena.plan.slots[in_id];
+                let cout = l.bias_f.len();
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                let q_out = match self.mode {
+                    QuantMode::Static => {
+                        let rq = l.static_requant.as_ref().expect("static lowering");
+                        let x = &arena.slots[in_slot];
+                        fast::convolve_s8_fast(
+                            x,
+                            &l.kernel,
+                            &l.bias_q,
+                            -in_q.zero,
+                            geom,
+                            &mut arena.cols,
+                            out.data_mut(),
+                            fast::requant_epi(rq),
+                        );
+                        l.static_out.expect("static lowering")
+                    }
+                    QuantMode::Probabilistic => {
+                        let x = &arena.slots[in_slot];
+                        let st = conv_window_stats(x, geom, in_q.zero, self.gamma);
+                        let q_out = predict_grid(l, &st, in_q.scale);
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        fast::convolve_s8_fast(
+                            x,
+                            &l.kernel,
+                            &arena.bias_buf,
+                            -in_q.zero,
+                            geom,
+                            &mut arena.cols,
+                            out.data_mut(),
+                            fast::requant_epi(&arena.requant),
+                        );
+                        q_out
+                    }
+                    QuantMode::Dynamic => {
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        arena.wide.clear();
+                        arena.wide.resize(out.numel(), 0);
+                        {
+                            let x = &arena.slots[in_slot];
+                            fast::convolve_s8_fast(
+                                x,
+                                &l.kernel,
+                                &arena.bias_buf,
+                                -in_q.zero,
+                                geom,
+                                &mut arena.cols,
+                                &mut arena.wide,
+                                |a, _| a,
+                            );
+                        }
+                        let q_out =
+                            scan_grid(&arena.wide, in_q.scale, &l.s_w, &mut arena.acc_scale, cout);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        arena.requant.apply_slice(&arena.wide, out.data_mut(), cout);
+                        q_out
+                    }
+                };
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = q_out;
+            }
+            Int8Op::DwConv { l, geom } => {
+                let in_id = node.inputs[0].0;
+                let in_q = arena.node_q[in_id];
+                let in_slot = arena.plan.slots[in_id];
+                let c = l.bias_f.len();
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                let q_out = match self.mode {
+                    QuantMode::Static => {
+                        let rq = l.static_requant.as_ref().expect("static lowering");
+                        let x = &arena.slots[in_slot];
+                        fast::dwconv_s8_fast(
+                            x,
+                            &l.kernel,
+                            &l.bias_q,
+                            -in_q.zero,
+                            geom,
+                            &mut arena.dw_wt,
+                            &mut arena.acc_row,
+                            out.data_mut(),
+                            fast::requant_epi(rq),
+                        );
+                        l.static_out.expect("static lowering")
+                    }
+                    QuantMode::Probabilistic => {
+                        let x = &arena.slots[in_slot];
+                        let st = dw_window_stats(x, geom, in_q.zero, self.gamma);
+                        let q_out = predict_grid(l, &st, in_q.scale);
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        fast::dwconv_s8_fast(
+                            x,
+                            &l.kernel,
+                            &arena.bias_buf,
+                            -in_q.zero,
+                            geom,
+                            &mut arena.dw_wt,
+                            &mut arena.acc_row,
+                            out.data_mut(),
+                            fast::requant_epi(&arena.requant),
+                        );
+                        q_out
+                    }
+                    QuantMode::Dynamic => {
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        arena.wide.clear();
+                        arena.wide.resize(out.numel(), 0);
+                        {
+                            let x = &arena.slots[in_slot];
+                            fast::dwconv_s8_fast(
+                                x,
+                                &l.kernel,
+                                &arena.bias_buf,
+                                -in_q.zero,
+                                geom,
+                                &mut arena.dw_wt,
+                                &mut arena.acc_row,
+                                &mut arena.wide,
+                                |a, _| a,
+                            );
+                        }
+                        let q_out =
+                            scan_grid(&arena.wide, in_q.scale, &l.s_w, &mut arena.acc_scale, c);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        arena.requant.apply_slice(&arena.wide, out.data_mut(), c);
+                        q_out
+                    }
+                };
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = q_out;
+            }
+            Int8Op::Linear { l } => {
+                let in_id = node.inputs[0].0;
+                let in_q = arena.node_q[in_id];
+                let in_slot = arena.plan.slots[in_id];
+                let h = l.bias_f.len();
+                let mut out = arena.take_slot(out_slot);
+                out.resize_to(out_shape);
+                let q_out = match self.mode {
+                    QuantMode::Static => {
+                        let rq = l.static_requant.as_ref().expect("static lowering");
+                        let x = &arena.slots[in_slot];
+                        fast::fully_connected_s8_fast(
+                            x.data(),
+                            &l.kernel,
+                            &l.bias_q,
+                            &l.w_row_sums,
+                            -in_q.zero,
+                            out.data_mut(),
+                            fast::requant_epi(rq),
+                        );
+                        l.static_out.expect("static lowering")
+                    }
+                    QuantMode::Probabilistic => {
+                        let x = &arena.slots[in_slot];
+                        let (s1, s2) = int_sums(x.data(), in_q.zero);
+                        let mut st = WindowStats::default();
+                        st.push(s1, s2);
+                        let q_out = predict_grid(l, &st, in_q.scale);
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        fast::fully_connected_s8_fast(
+                            x.data(),
+                            &l.kernel,
+                            &arena.bias_buf,
+                            &l.w_row_sums,
+                            -in_q.zero,
+                            out.data_mut(),
+                            fast::requant_epi(&arena.requant),
+                        );
+                        q_out
+                    }
+                    QuantMode::Dynamic => {
+                        fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
+                        arena.wide.clear();
+                        arena.wide.resize(h, 0);
+                        {
+                            let x = &arena.slots[in_slot];
+                            fast::fully_connected_s8_fast(
+                                x.data(),
+                                &l.kernel,
+                                &arena.bias_buf,
+                                &l.w_row_sums,
+                                -in_q.zero,
+                                &mut arena.wide,
+                                |a, _| a,
+                            );
+                        }
+                        let q_out =
+                            scan_grid(&arena.wide, in_q.scale, &l.s_w, &mut arena.acc_scale, h);
+                        fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
+                        arena.requant.apply_slice(&arena.wide, out.data_mut(), h);
+                        q_out
+                    }
+                };
+                arena.slots[out_slot] = out;
+                arena.node_q[idx] = q_out;
+            }
+        }
+    }
+
+    // ---- the naive oracle engine -----------------------------------------
+
+    /// Execute the same lowered program through the naive scalar CMSIS
+    /// ports: one layer at a time, fresh tensor per node, i32 accumulator
+    /// tensor materialized, requantization as a separate sweep. This is the
+    /// pre-lowering status quo (the `bench_hotpath` "naive-cmsis" baseline)
+    /// and the bit-exact oracle for the fast engine.
+    pub fn run_naive(&self, input: &Tensor<f32>) -> Vec<(Tensor<i8>, QOut)> {
+        assert_eq!(input.shape(), &self.input_shape, "input shape mismatch");
+        let mut vals: Vec<Tensor<i8>> = Vec::with_capacity(self.nodes.len());
+        let mut grids: Vec<QOut> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let (t, q) = match &node.op {
+                Int8Op::Input => {
+                    let mut t = Tensor::zeros(self.input_shape.clone());
+                    quantize_into(self.input_q, input.data(), t.data_mut());
+                    (t, self.input_q)
+                }
+                Int8Op::Relu => {
+                    let x = &vals[node.inputs[0].0];
+                    let q = grids[node.inputs[0].0];
+                    let lo = q.zero.clamp(-128, 127) as i8;
+                    (x.map(|v| v.max(lo)), q)
+                }
+                Int8Op::Relu6 => {
+                    let x = &vals[node.inputs[0].0];
+                    let q = grids[node.inputs[0].0];
+                    let (lo, hi) = relu6_bounds(q);
+                    (x.map(|v| v.clamp(lo, hi)), q)
+                }
+                Int8Op::Flatten => {
+                    let x = &vals[node.inputs[0].0];
+                    let n = x.numel();
+                    (x.clone().reshape(Shape::new(&[n])), grids[node.inputs[0].0])
+                }
+                Int8Op::MaxPool { k, stride } => {
+                    let (k, stride) = (*k, *stride);
+                    let x = &vals[node.inputs[0].0];
+                    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+                    let (oh, ow) = ((h - k) / stride + 1, (w - k) / stride + 1);
+                    let mut t = Tensor::zeros(Shape::hwc(oh, ow, c));
+                    maxpool_s8_into(x, k, stride, t.data_mut());
+                    (t, grids[node.inputs[0].0])
+                }
+                Int8Op::GlobalAvgPool => {
+                    let x = &vals[node.inputs[0].0];
+                    let c = x.shape().dim(2);
+                    let mut t = Tensor::zeros(Shape::new(&[c]));
+                    gap_s8_into(x, t.data_mut());
+                    (t, grids[node.inputs[0].0])
+                }
+                Int8Op::Add => {
+                    let (a_id, b_id) = (node.inputs[0].0, node.inputs[1].0);
+                    let mut t = Tensor::zeros(vals[a_id].shape().clone());
+                    let qo = add_s8_into(
+                        vals[a_id].data(),
+                        grids[a_id],
+                        vals[b_id].data(),
+                        grids[b_id],
+                        t.data_mut(),
+                    );
+                    (t, qo)
+                }
+                Int8Op::Conv { l, geom } => {
+                    let x = &vals[node.inputs[0].0];
+                    let in_q = grids[node.inputs[0].0];
+                    self.naive_layer(l, in_q, |bias, rq| match rq {
+                        Some(rq) => {
+                            (crate::cmsis::convolve_s8(x, &l.kernel, bias, -in_q.zero, rq, geom), None)
+                        }
+                        None => {
+                            let acc = crate::cmsis::convolve_s8::convolve_s8_acc(
+                                x, &l.kernel, bias, -in_q.zero, geom,
+                            );
+                            (Tensor::zeros(acc.shape().clone()), Some(acc))
+                        }
+                    }, || conv_window_stats(x, geom, in_q.zero, self.gamma))
+                }
+                Int8Op::DwConv { l, geom } => {
+                    let x = &vals[node.inputs[0].0];
+                    let in_q = grids[node.inputs[0].0];
+                    self.naive_layer(l, in_q, |bias, rq| match rq {
+                        Some(rq) => {
+                            (crate::cmsis::dwconv_s8(x, &l.kernel, bias, -in_q.zero, rq, geom), None)
+                        }
+                        None => {
+                            let acc = crate::cmsis::dwconv_s8::dwconv_s8_acc(
+                                x, &l.kernel, bias, -in_q.zero, geom,
+                            );
+                            (Tensor::zeros(acc.shape().clone()), Some(acc))
+                        }
+                    }, || dw_window_stats(x, geom, in_q.zero, self.gamma))
+                }
+                Int8Op::Linear { l } => {
+                    let x = &vals[node.inputs[0].0];
+                    let in_q = grids[node.inputs[0].0];
+                    let h = l.bias_f.len();
+                    self.naive_layer(l, in_q, |bias, rq| match rq {
+                        Some(rq) => {
+                            let y = crate::cmsis::fully_connected_s8(
+                                x.data(), &l.kernel, bias, -in_q.zero, rq,
+                            );
+                            (Tensor::from_vec(Shape::new(&[h]), y), None)
+                        }
+                        None => {
+                            let acc = crate::cmsis::fully_connected_s8::fully_connected_s8_acc(
+                                x.data(), &l.kernel, bias, -in_q.zero,
+                            );
+                            (
+                                Tensor::zeros(Shape::new(&[h])),
+                                Some(Tensor::from_vec(Shape::new(&[h]), acc)),
+                            )
+                        }
+                    }, || {
+                        let (s1, s2) = int_sums(x.data(), in_q.zero);
+                        let mut st = WindowStats::default();
+                        st.push(s1, s2);
+                        st
+                    })
+                }
+            };
+            vals.push(t);
+            grids.push(q);
+        }
+        self.output_ids.iter().map(|id| (vals[id.0].clone(), grids[id.0])).collect()
+    }
+
+    /// Shared naive-engine mode logic for one quantizable layer. `kernel`
+    /// runs the naive op: with `Some(requant)` it returns the finished int8
+    /// tensor; with `None` it returns the materialized i32 accumulator
+    /// (dynamic mode's buffered pass). `stats` computes the PDQ window
+    /// statistics on demand.
+    fn naive_layer<K, S>(&self, l: &Int8Layer, in_q: QOut, kernel: K, stats: S) -> (Tensor<i8>, QOut)
+    where
+        K: Fn(&[i32], Option<&Requant>) -> (Tensor<i8>, Option<Tensor<i32>>),
+        S: Fn() -> WindowStats,
+    {
+        let channels = l.bias_f.len();
+        match self.mode {
+            QuantMode::Static => {
+                let rq = l.static_requant.as_ref().expect("static lowering");
+                let (t, _) = kernel(&l.bias_q, Some(rq));
+                (t, l.static_out.expect("static lowering"))
+            }
+            QuantMode::Probabilistic => {
+                let st = stats();
+                let q_out = predict_grid(l, &st, in_q.scale);
+                let mut bias = Vec::new();
+                fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut bias);
+                let rq = build_requant(in_q.scale, &l.s_w, q_out);
+                let (t, _) = kernel(&bias, Some(&rq));
+                (t, q_out)
+            }
+            QuantMode::Dynamic => {
+                let mut bias = Vec::new();
+                fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut bias);
+                let (mut t, acc) = kernel(&bias, None);
+                let acc = acc.expect("dynamic kernel returns the accumulator");
+                let mut acc_scale = Vec::new();
+                let q_out = scan_grid(acc.data(), in_q.scale, &l.s_w, &mut acc_scale, channels);
+                let rq = build_requant(in_q.scale, &l.s_w, q_out);
+                rq.apply_slice(acc.data(), t.data_mut(), channels);
+                (t, q_out)
+            }
+        }
+    }
+}
+
+// ---- shared lowering / arithmetic helpers ---------------------------------
+
+/// [`QParams`] (signed-space) → [`QOut`]: `real = scale · (q − zero)`.
+fn qout(qp: &QParams) -> QOut {
+    QOut { scale: qp.scale, zero: qp.zero_point }
+}
+
+/// Lower one quantizable layer.
+#[allow(clippy::too_many_arguments)]
+fn lower_layer(
+    ex: &QuantExecutor,
+    idx: usize,
+    w: &Tensor<f32>,
+    b: &[f32],
+    layout: WeightLayout,
+    weight_gran: Granularity,
+    mode: QuantMode,
+    in_q: QOut,
+) -> Result<(Int8Layer, QOut), String> {
+    let st = ex.layer_state(idx).ok_or_else(|| format!("node {idx}: no layer state"))?;
+    let channels = w.shape().dim(0);
+    let per = w.numel() / channels;
+    let (kernel, s_w) = match weight_gran {
+        Granularity::PerTensor => {
+            let absmax = w.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+            let s = absmax / 127.0;
+            (w.map(|v| (v / s).round().clamp(-127.0, 127.0) as i8), vec![s])
+        }
+        Granularity::PerChannel => {
+            let mut data = Vec::with_capacity(w.numel());
+            let mut scales = Vec::with_capacity(channels);
+            for ch in 0..channels {
+                let row = &w.data()[ch * per..(ch + 1) * per];
+                let absmax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+                let s = absmax / 127.0;
+                scales.push(s);
+                data.extend(row.iter().map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8));
+            }
+            (Tensor::from_vec(w.shape().clone(), data), scales)
+        }
+    };
+    // Surrogate stats of the *dequantized* weights — what actually runs.
+    let deq: Vec<f32> = kernel
+        .data()
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| q as f32 * s_w[if s_w.len() == 1 { 0 } else { i / per }])
+        .collect();
+    let mu_w = crate::util::stats::mean(&deq);
+    let var_w = crate::util::stats::variance(&deq);
+    let bias_mu = crate::util::stats::mean(b);
+    let bias_var = crate::util::stats::variance(b);
+    let w_row_sums =
+        if layout == WeightLayout::Linear { fast::weight_row_sums(&kernel) } else { Vec::new() };
+    let (static_out, static_requant, bias_q) = if mode == QuantMode::Static {
+        let ranges = st
+            .static_ranges
+            .as_ref()
+            .ok_or_else(|| format!("node {idx}: static ranges missing (calibrate first)"))?;
+        let (lo, hi) = ranges[0];
+        let q_out = qout(&QParams::from_range(lo, hi, 8));
+        let mut bq = Vec::new();
+        fold_bias(b, in_q.scale, &s_w, &mut bq);
+        let rq = build_requant(in_q.scale, &s_w, q_out);
+        (Some(q_out), Some(rq), bq)
+    } else {
+        (None, None, Vec::new())
+    };
+    let layer = Int8Layer {
+        kernel,
+        s_w,
+        bias_f: b.to_vec(),
+        bias_q,
+        w_row_sums,
+        mu_w,
+        var_w,
+        bias_mu,
+        bias_var,
+        interval: st.interval,
+        static_out,
+        static_requant,
+    };
+    let sq = static_out.unwrap_or(in_q);
+    Ok((layer, sq))
+}
+
+/// Fold a float bias onto the `s_in·s_w` i32 accumulator grid.
+fn fold_bias(bias_f: &[f32], s_in: f32, s_w: &[f32], buf: &mut Vec<i32>) {
+    buf.clear();
+    buf.extend(bias_f.iter().enumerate().map(|(v, &b)| {
+        let sw = s_w[if s_w.len() == 1 { 0 } else { v }];
+        (b as f64 / (s_in as f64 * sw as f64))
+            .round()
+            .clamp(i32::MIN as f64, i32::MAX as f64) as i32
+    }));
+}
+
+/// Requant spec for effective scales `s_in·s_w / s_out` onto `q_out`.
+fn build_requant(s_in: f32, s_w: &[f32], q_out: QOut) -> Requant {
+    if s_w.len() == 1 {
+        Requant::per_tensor(s_in as f64 * s_w[0] as f64 / q_out.scale as f64, q_out.zero)
+    } else {
+        let effs: Vec<f64> =
+            s_w.iter().map(|&sw| s_in as f64 * sw as f64 / q_out.scale as f64).collect();
+        Requant::per_channel(&effs, q_out.zero)
+    }
+}
+
+/// [`build_requant`] into a reusable spec (the arena's scratch): rewrites
+/// the multipliers in place, so the per-request requant of dynamic/PDQ mode
+/// allocates nothing once the vector has reached steady capacity. Produces
+/// exactly the same spec as [`build_requant`] (the naive engine keeps the
+/// allocating form — fresh allocations are its point).
+fn fill_requant(rq: &mut Requant, s_in: f32, s_w: &[f32], q_out: QOut) {
+    rq.multipliers.clear();
+    rq.multipliers.extend(
+        s_w.iter()
+            .map(|&sw| FixedMultiplier::from_scale(s_in as f64 * sw as f64 / q_out.scale as f64)),
+    );
+    rq.output_offset = q_out.zero;
+    rq.act_min = i8::MIN as i32;
+    rq.act_max = i8::MAX as i32;
+}
+
+/// PDQ output grid from streamed integer window statistics: fixed-point
+/// moments (Q16.16, integer sqrt), bias moment correction, then `I(α, β)`.
+fn predict_grid(l: &Int8Layer, st: &WindowStats, s_in: f32) -> QOut {
+    let est = FixedEstimator::new(l.mu_w, l.var_w, s_in);
+    let mut m = est.from_window_stats(st).to_moments();
+    m.mean += l.bias_mu;
+    m.var += l.bias_var;
+    let (lo, hi) = l.interval.range(&m);
+    qout(&QParams::from_range(lo, hi, 8))
+}
+
+/// Dynamic-mode range scan over the wide accumulator tensor (the §3 pass
+/// static/PDQ never run). Per-channel weight scales dequantize each channel
+/// column onto its own accumulator grid.
+fn scan_grid(
+    wide: &[i32],
+    s_in: f32,
+    s_w: &[f32],
+    acc_scale: &mut Vec<f32>,
+    channels: usize,
+) -> QOut {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    if s_w.len() == 1 {
+        let s = s_in * s_w[0];
+        for &a in wide {
+            let v = a as f32 * s;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    } else {
+        acc_scale.clear();
+        acc_scale.extend(s_w.iter().map(|&sw| s_in * sw));
+        for row in wide.chunks_exact(channels) {
+            for (&a, &s) in row.iter().zip(acc_scale.iter()) {
+                let v = a as f32 * s;
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    qout(&QParams::from_range(lo, hi, 8))
+}
+
+/// Quantize f32 values onto a signed-space grid.
+fn quantize_into(q: QOut, src: &[f32], dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    for (o, &v) in dst.iter_mut().zip(src.iter()) {
+        let qv = (v / q.scale).round() as i32 + q.zero;
+        *o = qv.clamp(-128, 127) as i8;
+    }
+}
+
+/// Dequantize an int8 tensor back to f32 (the serving boundary).
+pub fn dequant_tensor(t: &Tensor<i8>, q: QOut) -> Tensor<f32> {
+    t.map(|v| q.dequant(v))
+}
+
+/// int8 ReLU6 window on a grid: `[z, z + round(6/s)]` clamped to int8.
+/// Computed in i64 so extreme zero-points cannot overflow the addition.
+fn relu6_bounds(q: QOut) -> (i8, i8) {
+    let lo = q.zero.clamp(-128, 127);
+    let cap = (6.0f64 / q.scale as f64).round().min(512.0) as i64;
+    let hi = (q.zero as i64 + cap).clamp(lo as i64, 127) as i32;
+    (lo as i8, hi as i8)
+}
+
+/// int8 max pooling (square window, no padding) — max is grid-monotone, so
+/// the integer values pool directly.
+fn maxpool_s8_into(x: &Tensor<i8>, k: usize, stride: usize, out: &mut [i8]) {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    assert_eq!(out.len(), oh * ow * c);
+    let xd = x.data();
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let opix = &mut out[(oy * ow + ox) * c..][..c];
+            opix.copy_from_slice(&xd[((oy * stride) * w + ox * stride) * c..][..c]);
+            for dy in 0..k {
+                for dx in 0..k {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let xpix = &xd[((oy * stride + dy) * w + ox * stride + dx) * c..][..c];
+                    for ch in 0..c {
+                        opix[ch] = opix[ch].max(xpix[ch]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// int8 global average pool: i64 channel sums, round-to-nearest divide —
+/// the mean stays on the input grid.
+fn gap_s8_into(x: &Tensor<i8>, out: &mut [i8]) {
+    let (h, w, c) = (x.shape().dim(0), x.shape().dim(1), x.shape().dim(2));
+    assert_eq!(out.len(), c);
+    let xd = x.data();
+    let n = (h * w) as i64;
+    for (ch, o) in out.iter_mut().enumerate() {
+        let mut acc = 0i64;
+        let mut i = ch;
+        while i < xd.len() {
+            acc += xd[i] as i64;
+            i += c;
+        }
+        *o = rounded_div(acc, n).clamp(-128, 127) as i8;
+    }
+}
+
+/// Round-to-nearest integer division (ties away from zero), `b > 0`.
+fn rounded_div(a: i64, b: i64) -> i64 {
+    if a >= 0 {
+        (a + b / 2) / b
+    } else {
+        -((-a + b / 2) / b)
+    }
+}
+
+/// Residual add of two int8 tensors on (possibly) different grids. The
+/// output grid covers the exact representable-range sum of the operands, so
+/// no saturation beyond rounding can occur; each operand is rescaled with a
+/// Q31 fixed multiplier (`arm_elementwise_add_s8` semantics). Returns the
+/// output grid.
+fn add_s8_into(a: &[i8], qa: QOut, b: &[i8], qb: QOut, out: &mut [i8]) -> QOut {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    let qo = add_grid(qa, qb);
+    let ma = FixedMultiplier::from_scale(qa.scale as f64 / qo.scale as f64);
+    let mb = FixedMultiplier::from_scale(qb.scale as f64 / qo.scale as f64);
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        let v = ma.apply(x as i32 - qa.zero) + mb.apply(y as i32 - qb.zero) + qo.zero;
+        *o = v.clamp(-128, 127) as i8;
+    }
+    qo
+}
+
+/// Output grid of a residual add: the representable ranges summed.
+fn add_grid(qa: QOut, qb: QOut) -> QOut {
+    let lo = qa.scale * (-128 - qa.zero) as f32 + qb.scale * (-128 - qb.zero) as f32;
+    let hi = qa.scale * (127 - qa.zero) as f32 + qb.scale * (127 - qb.zero) as f32;
+    qout(&QParams::from_range(lo, hi, 8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant_exec::QuantSettings;
+    use crate::util::Pcg32;
+
+    fn tiny_graph(rng: &mut Pcg32) -> Arc<Graph> {
+        let mut g = Graph::new(Shape::hwc(8, 8, 3));
+        let x = g.input();
+        let w: Vec<f32> = (0..6 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(
+            x,
+            Tensor::from_vec(Shape::ohwi(6, 3, 3, 3), w),
+            vec![0.05; 6],
+            ConvGeom::same(3, 1),
+        );
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        let wl: Vec<f32> = (0..4 * 6).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+        let l = g.linear(p, Tensor::from_vec(Shape::new(&[4, 6]), wl), vec![0.0; 4]);
+        g.mark_output(l);
+        Arc::new(g)
+    }
+
+    fn rand_image(rng: &mut Pcg32) -> Tensor<f32> {
+        let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
+        Tensor::from_vec(Shape::hwc(8, 8, 3), d)
+    }
+
+    #[test]
+    fn lowers_and_runs_every_mode() {
+        let mut rng = Pcg32::new(0x18);
+        let g = tiny_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                Arc::clone(&g),
+                QuantSettings { mode, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+            assert_eq!(int8.mode(), mode);
+            let out = int8.run(&img);
+            assert_eq!(out[0].shape().dims(), &[4]);
+            let q = int8.run_q(&img);
+            assert_eq!(q[0].0.numel(), 4);
+            assert!(q[0].1.scale > 0.0);
+        }
+    }
+
+    #[test]
+    fn quantize_dequant_roundtrip_on_input_grid() {
+        let q = qout(&QParams::from_range(0.0, 1.0, 8));
+        let src = [0.0f32, 0.25, 0.5, 1.0];
+        let mut dst = [0i8; 4];
+        quantize_into(q, &src, &mut dst);
+        for (&s, &d) in src.iter().zip(dst.iter()) {
+            assert!((q.dequant(d) - s).abs() <= q.scale * 0.5 + 1e-6, "{s} -> {d}");
+        }
+    }
+
+    #[test]
+    fn add_grid_covers_operands() {
+        let qa = qout(&QParams::from_range(-1.0, 1.0, 8));
+        let qb = qout(&QParams::from_range(0.0, 4.0, 8));
+        let qo = add_grid(qa, qb);
+        // Representable window of the sum covers both extremes.
+        let lo = qo.dequant(-128);
+        let hi = qo.dequant(127);
+        assert!(lo <= -1.0 + 0.0 + qo.scale);
+        assert!(hi >= 1.0 + 4.0 - qo.scale);
+    }
+
+    #[test]
+    fn rounded_div_ties_away() {
+        assert_eq!(rounded_div(5, 2), 3);
+        assert_eq!(rounded_div(-5, 2), -3);
+        assert_eq!(rounded_div(4, 2), 2);
+        assert_eq!(rounded_div(-4, 2), -2);
+        assert_eq!(rounded_div(0, 7), 0);
+    }
+
+    #[test]
+    fn relu6_window_on_unit_grid() {
+        // scale = 6/255 ⇒ the window is the whole int8 range up to 6.0.
+        let q = qout(&QParams::from_range(0.0, 6.0, 8));
+        let (lo, hi) = relu6_bounds(q);
+        assert_eq!(lo, -128);
+        assert_eq!(hi, 127);
+        // A grid spanning [-3, 9]: 6.0 sits strictly inside.
+        let q2 = qout(&QParams::from_range(-3.0, 9.0, 8));
+        let (lo2, hi2) = relu6_bounds(q2);
+        assert!((q2.dequant(lo2)).abs() <= q2.scale);
+        assert!((q2.dequant(hi2) - 6.0).abs() <= q2.scale);
+    }
+}

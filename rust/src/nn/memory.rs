@@ -238,6 +238,103 @@ impl ExecArena {
     }
 }
 
+/// Reusable execution workspace for the true-int8 engine
+/// ([`crate::nn::int8_exec::Int8Executor`]): the same liveness-packed
+/// [`MemoryPlan`] drives byte-sized (`i8`) activation slots plus the
+/// kernel/estimator scratch. The wide `i32` buffer is the §3 `b′·h`
+/// requantization cost — it is touched **only** by the dynamic mode, so
+/// [`Int8Arena::wide_capacity_elems`] staying 0 after a static/PDQ pass is
+/// the executable proof of the paper's O(1)-memory claim.
+pub struct Int8Arena {
+    pub(crate) plan: Arc<MemoryPlan>,
+    /// One int8 tensor per slot.
+    pub(crate) slots: Vec<Tensor<i8>>,
+    /// Runtime quantization grid of every node's output (signed space).
+    pub(crate) node_q: Vec<crate::cmsis::pdq_wrappers::QOut>,
+    /// im2col patch matrix (offset-shifted, i32) — shared by all modes.
+    pub(crate) cols: Vec<i32>,
+    /// Transposed depthwise weights `[kh·kw, C]`.
+    pub(crate) dw_wt: Vec<i8>,
+    /// Per-pixel depthwise accumulator row (O(C)).
+    pub(crate) acc_row: Vec<i32>,
+    /// Runtime-folded int32 bias (O(C); dynamic/PDQ refold per request).
+    pub(crate) bias_buf: Vec<i32>,
+    /// Reusable requant spec for the input-dependent modes: dynamic/PDQ
+    /// rewrite the multipliers in place each request instead of allocating
+    /// a fresh `Requant` (the multiplier Vec reaches steady capacity after
+    /// the first pass, like `bias_buf`).
+    pub(crate) requant: crate::cmsis::requant::Requant,
+    /// Per-channel accumulator scales for the dynamic range scan (O(C)).
+    pub(crate) acc_scale: Vec<f32>,
+    /// The wide int32 output buffer — dynamic mode only (§3's `b′·h`).
+    pub(crate) wide: Vec<i32>,
+}
+
+impl Int8Arena {
+    pub fn new(plan: Arc<MemoryPlan>) -> Self {
+        let n = plan.shapes.len();
+        let slots = (0..plan.num_slots).map(|_| Tensor::empty()).collect();
+        Self {
+            plan,
+            slots,
+            node_q: vec![crate::cmsis::pdq_wrappers::QOut { scale: 1.0, zero: 0 }; n],
+            cols: Vec::new(),
+            dw_wt: Vec::new(),
+            acc_row: Vec::new(),
+            bias_buf: Vec::new(),
+            requant: crate::cmsis::requant::Requant {
+                multipliers: Vec::new(),
+                output_offset: 0,
+                act_min: i8::MIN as i32,
+                act_max: i8::MAX as i32,
+            },
+            acc_scale: Vec::new(),
+            wide: Vec::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &MemoryPlan {
+        &self.plan
+    }
+
+    /// The int8 value of node `idx` as of the last executed pass (same
+    /// caveats as [`ExecArena::value`]: safe for outputs and trace plans).
+    pub fn value(&self, idx: usize) -> &Tensor<i8> {
+        &self.slots[self.plan.slots[idx]]
+    }
+
+    /// The quantization grid node `idx`'s output lives on.
+    pub fn grid(&self, idx: usize) -> crate::cmsis::pdq_wrappers::QOut {
+        self.node_q[idx]
+    }
+
+    /// Detach the slot tensor for writing (leaves an empty sentinel).
+    pub(crate) fn take_slot(&mut self, slot: usize) -> Tensor<i8> {
+        std::mem::replace(&mut self.slots[slot], Tensor::empty())
+    }
+
+    /// Backing capacity of the wide i32 accumulator buffer. Static and PDQ
+    /// passes must leave this at 0 — checked by `rust/tests/int8_parity.rs`.
+    pub fn wide_capacity_elems(&self) -> usize {
+        self.wide.capacity()
+    }
+
+    /// Approximate retained footprint in bytes (diagnostics): live slot
+    /// elements (a shrinking `resize_to` may retain more than is counted
+    /// here — same convention as [`ExecArena::capacity_elems`]) plus the
+    /// scratch and wide buffers' capacities.
+    pub fn capacity_bytes(&self) -> usize {
+        self.slots.iter().map(|t| t.numel()).sum::<usize>()
+            + self.dw_wt.capacity()
+            + 8 * self.requant.multipliers.capacity()
+            + 4 * (self.cols.capacity()
+                + self.acc_row.capacity()
+                + self.bias_buf.capacity()
+                + self.acc_scale.capacity()
+                + self.wide.capacity())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,5 +441,15 @@ mod tests {
         let arena = ExecArena::for_run(&g);
         assert_eq!(arena.plan().num_slots, arena.slots.len());
         assert_eq!(arena.capacity_elems(), 0, "cold arena owns no buffers yet");
+    }
+
+    #[test]
+    fn int8_arena_cold_state() {
+        let g = graph();
+        let arena = Int8Arena::new(Arc::new(MemoryPlan::packed(&g)));
+        assert_eq!(arena.plan().num_slots, arena.slots.len());
+        assert_eq!(arena.node_q.len(), g.nodes().len());
+        assert_eq!(arena.wide_capacity_elems(), 0, "cold arena has no wide buffer");
+        assert_eq!(arena.capacity_bytes(), 0, "cold arena owns no buffers yet");
     }
 }

@@ -14,16 +14,24 @@
 //!   pre-activation requantization strategies of Fig. 1: `Static`,
 //!   `Dynamic` and `Probabilistic` (ours), each at per-tensor or
 //!   per-channel granularity.
+//! - [`int8_exec`] — the integer-native engine: a calibrated
+//!   [`quant_exec::QuantExecutor`] lowered to int8 weights + folded i32
+//!   biases + Q31 requant multipliers, executed through the fast
+//!   [`crate::cmsis::fast`] kernels with the requantize fused into the
+//!   accumulator sweep (static/PDQ never materialize the i32 tensor).
 //! - [`memory`] — the §3 working-memory model (3b′ vs b′·h vs 3b′+2b′),
-//!   plus the liveness-based buffer planner and [`memory::ExecArena`] that
-//!   make the serving hot path allocation-free in steady state.
+//!   plus the liveness-based buffer planner and [`memory::ExecArena`] /
+//!   [`memory::Int8Arena`] that make the serving hot paths allocation-free
+//!   in steady state.
 
 pub mod float_exec;
 pub mod graph;
+pub mod int8_exec;
 pub mod memory;
 pub mod ops;
 pub mod quant_exec;
 
 pub use graph::{Graph, NodeId, Op};
-pub use memory::{ExecArena, MemoryPlan};
+pub use int8_exec::Int8Executor;
+pub use memory::{ExecArena, Int8Arena, MemoryPlan};
 pub use quant_exec::{QuantExecutor, QuantMode};

@@ -95,20 +95,21 @@ impl Default for QuantSettings {
     }
 }
 
-/// Per-quantizable-layer prepared state.
+/// Per-quantizable-layer prepared state. `pub(crate)` so the int8 lowering
+/// ([`crate::nn::int8_exec`]) can read the calibration products.
 #[derive(Clone, Debug)]
-struct LayerState {
+pub(crate) struct LayerState {
     /// Surrogate statistics of the (quantized) weights.
-    wstats: WeightStats,
+    pub(crate) wstats: WeightStats,
     /// Observed output ranges from calibration (len 1 or C). `None` until
     /// calibrated — static mode panics without it.
-    static_ranges: Option<Vec<(f32, f32)>>,
+    pub(crate) static_ranges: Option<Vec<(f32, f32)>>,
     /// The frozen parameter set derived from `static_ranges` once at
     /// calibration time, so the static-mode hot path borrows it instead of
     /// rebuilding an O(C) set per layer per request.
-    static_set: Option<QParamSet>,
+    pub(crate) static_set: Option<QParamSet>,
     /// Calibrated interval for the probabilistic mode.
-    interval: IntervalSpec,
+    pub(crate) interval: IntervalSpec,
 }
 
 /// The emulator. Construction fake-quantizes the weights (producing a
@@ -249,6 +250,17 @@ impl QuantExecutor {
     /// Has `calibrate` been run?
     pub fn is_calibrated(&self) -> bool {
         self.layers.values().all(|s| s.static_ranges.is_some())
+    }
+
+    /// Calibrated state of the quantizable node `idx` (int8 lowering).
+    pub(crate) fn layer_state(&self, idx: usize) -> Option<&LayerState> {
+        self.layers.get(&idx)
+    }
+
+    /// The fixed input quantization range the executor assumes (images are
+    /// normalized to `[0, 1]`).
+    pub fn input_range(&self) -> (f32, f32) {
+        self.input_range
     }
 
     /// Run the quantized forward pass; returns the output node values.

@@ -23,15 +23,14 @@ impl FixedMultiplier {
         }
         assert!(scale > 0.0, "requant scale must be positive, got {scale}");
         // frexp: scale = frac * 2^exp with frac in [0.5, 1).
-        let (mut frac, mut exp) = frexp(scale);
+        let (frac, mut exp) = frexp(scale);
         let mut q = (frac * (1i64 << 31) as f64).round() as i64;
         if q == (1i64 << 31) {
             // Rounding overflowed the mantissa; renormalize.
             q /= 2;
             exp += 1;
-            frac /= 2.0;
         }
-        let _ = frac;
+        debug_assert!((1i64 << 30..1i64 << 31).contains(&q));
         Self { multiplier: q as i32, shift: exp }
     }
 
@@ -96,6 +95,12 @@ fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
     if exponent == 0 {
         return x;
     }
+    if exponent > 31 {
+        // Reachable for denormal scales (huge negative shift). For
+        // exponent ≥ 32, |x|/2^exponent ≤ 0.5 with equality only at the
+        // x = i32::MIN, exponent = 32 tie, which rounds away from zero.
+        return if exponent == 32 && x == i32::MIN { -1 } else { 0 };
+    }
     debug_assert!((0..=31).contains(&exponent));
     let mask = (1i64 << exponent) - 1;
     let remainder = (x as i64) & mask;
@@ -113,7 +118,13 @@ fn rounding_divide_by_pot_i64(x: i64, exponent: i32) -> i64 {
     if exponent == 0 {
         return x;
     }
-    debug_assert!((0..=62).contains(&exponent));
+    if exponent > 63 {
+        // For exponent ≥ 64, |x|/2^exponent ≤ 0.5 with equality only at
+        // the x = i64::MIN, exponent = 64 tie (rounds away from zero);
+        // exponent = 63 goes through the exact mask path below.
+        return if exponent == 64 && x == i64::MIN { -1 } else { 0 };
+    }
+    debug_assert!((0..=63).contains(&exponent));
     let mask = (1i128 << exponent) - 1;
     let remainder = (x as i128) & mask;
     let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
@@ -184,10 +195,83 @@ mod tests {
     }
 
     #[test]
+    fn mantissa_always_normalized() {
+        // Includes scales whose Q31 mantissa rounds up to exactly 2^31 —
+        // the renormalization path (e.g. the largest double below 1.0).
+        let scales = [
+            1.0 - f64::EPSILON,
+            2.0 * (1.0 - f64::EPSILON),
+            0.5 * (1.0 - f64::EPSILON),
+            0.99999999999,
+            1.0,
+            1e-3,
+            7.0,
+            0.00217,
+        ];
+        for &s in &scales {
+            let fm = FixedMultiplier::from_scale(s);
+            assert!(
+                fm.multiplier >= 1 << 30 && (fm.multiplier as i64) < 1i64 << 31,
+                "scale {s}: multiplier {} out of [2^30, 2^31)",
+                fm.multiplier
+            );
+            let recon = fm.multiplier as f64 * 2f64.powi(fm.shift - 31);
+            assert!(
+                (recon / s - 1.0).abs() < 1e-9,
+                "scale {s}: reconstructed {recon}"
+            );
+        }
+    }
+
+    #[test]
+    fn denormal_scale_decomposes_and_applies() {
+        // Subnormal double: frexp must renormalize, and apply() must not
+        // trip the POT-divide range checks — every accumulator rounds to 0.
+        let s = 1e-310f64;
+        assert!(s > 0.0 && s < f64::MIN_POSITIVE);
+        let fm = FixedMultiplier::from_scale(s);
+        assert!(fm.multiplier >= 1 << 30, "m {}", fm.multiplier);
+        assert!(fm.shift < -1000, "shift {}", fm.shift);
+        assert_eq!(fm.apply(i32::MAX), 0);
+        assert_eq!(fm.apply(i32::MIN), 0);
+        assert_eq!(fm.apply(1), 0);
+        assert_eq!(fm.apply_wide(i64::MAX), 0);
+        assert_eq!(fm.apply_wide(i64::MIN + 1), 0);
+    }
+
+    #[test]
+    fn scale_well_above_one_left_shifts() {
+        let fm = FixedMultiplier::from_scale(1024.0);
+        assert_eq!(fm.shift, 11); // 1024 = 0.5 · 2^11
+        assert_eq!(fm.apply(5), 5120);
+        assert_eq!(fm.apply(-5), -5120);
+        let fm3 = FixedMultiplier::from_scale(3.0);
+        assert_eq!(fm3.apply(100), 300);
+        assert_eq!(fm3.apply_wide(1_000_000_000_000), 3_000_000_000_000);
+    }
+
+    #[test]
     fn rounding_divide_by_pot_basics() {
         assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3 (ties up)
         assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 -> -3 (ties away from zero)
         assert_eq!(rounding_divide_by_pot(4, 2), 1);
         assert_eq!(rounding_divide_by_pot(7, 0), 7);
+    }
+
+    #[test]
+    fn pot_divide_deep_shift_boundaries() {
+        // exponent = 63 uses the exact mask path: 2^62/2^63 = 0.5 -> 1
+        // (ties away), just below -> 0, and the negative tie -> -1.
+        assert_eq!(rounding_divide_by_pot_i64(1i64 << 62, 63), 1);
+        assert_eq!(rounding_divide_by_pot_i64((1i64 << 62) - 1, 63), 0);
+        assert_eq!(rounding_divide_by_pot_i64(-(1i64 << 62), 63), -1);
+        // Beyond 63 everything collapses to 0 except the exact i64::MIN tie.
+        assert_eq!(rounding_divide_by_pot_i64(i64::MAX, 64), 0);
+        assert_eq!(rounding_divide_by_pot_i64(i64::MIN, 64), -1);
+        assert_eq!(rounding_divide_by_pot_i64(i64::MIN, 100), 0);
+        // i32 twin: the lone 32-bit tie, then nothing.
+        assert_eq!(rounding_divide_by_pot(i32::MIN, 32), -1);
+        assert_eq!(rounding_divide_by_pot(i32::MAX, 32), 0);
+        assert_eq!(rounding_divide_by_pot(i32::MIN, 40), 0);
     }
 }

@@ -1,0 +1,325 @@
+//! Int8-engine parity suite.
+//!
+//! Three layers of guarantees, strongest first:
+//!
+//! 1. **Kernel bit-exactness** — the fast int8 kernels
+//!    (`pdq::cmsis::fast`, im2col + blocked GEMM + fused requant epilogue)
+//!    must equal the naive scalar CMSIS ports *exactly* (integer equality)
+//!    across randomized shapes, stride ∈ {1, 2}, pad ∈ {0, same} and both
+//!    requant granularities.
+//! 2. **Engine bit-exactness** — `Int8Executor::run_q` (arena, fused) must
+//!    equal `Int8Executor::run_naive` (fresh tensors, scalar kernels,
+//!    separate requantize sweep) exactly — values *and* grids — across
+//!    modes × weight granularities × γ, including reused worker arenas.
+//! 3. **Numeric fidelity** — dequantized int8 outputs track the f32
+//!    emulator's `run_reference` (and fp32) within a bounded relative
+//!    error: the engines quantize weights differently (symmetric int8 vs
+//!    fake-quant), so equality is not expected, closeness is.
+//!
+//! Plus the §3 memory claim, enforced rather than asserted-by-docs: after a
+//! static or PDQ pass the arena has never allocated the wide i32 buffer.
+
+use std::sync::Arc;
+
+use pdq::cmsis::fast;
+use pdq::cmsis::{convolve_s8, dwconv_s8, fully_connected_s8, Requant};
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{float_exec, Graph, Int8Executor, QuantMode};
+use pdq::quant::Granularity;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::check::Checker;
+use pdq::util::Pcg32;
+
+fn rand_i8(rng: &mut Pcg32, n: usize, lo: i64, hi: i64) -> Vec<i8> {
+    (0..n).map(|_| rng.int_range(lo, hi) as i8).collect()
+}
+
+/// A random requant spec at either granularity, with a plausible offset.
+fn rand_requant(rng: &mut Pcg32, channels: usize) -> Requant {
+    let offset = rng.int_range(-20, 20) as i32;
+    if rng.uniform() < 0.5 {
+        Requant::per_tensor(2f64.powf(rng.uniform_range(-10.0, 0.0) as f64), offset)
+    } else {
+        let scales: Vec<f64> =
+            (0..channels).map(|_| 2f64.powf(rng.uniform_range(-10.0, 0.0) as f64)).collect();
+        Requant::per_channel(&scales, offset)
+    }
+}
+
+#[test]
+fn conv_fast_fused_exactly_matches_naive() {
+    Checker::new(0x1817, 60).check("fast conv == convolve_s8", |rng| {
+        let h = rng.int_range(3, 12) as usize;
+        let w = rng.int_range(3, 12) as usize;
+        let cin = rng.int_range(1, 7) as usize;
+        let cout = rng.int_range(1, 9) as usize;
+        let k = *rng.choice(&[1usize, 3, 5]);
+        let stride = *rng.choice(&[1usize, 2]);
+        let pad = *rng.choice(&[0usize, k / 2]);
+        let geom = ConvGeom::new(k, k, stride, pad);
+        let x = Tensor::from_vec(Shape::hwc(h, w, cin), rand_i8(rng, h * w * cin, -128, 127));
+        let kt = Tensor::from_vec(
+            Shape::ohwi(cout, k, k, cin),
+            rand_i8(rng, cout * k * k * cin, -127, 127),
+        );
+        let bias: Vec<i32> = (0..cout).map(|_| rng.int_range(-3000, 3000) as i32).collect();
+        let off = rng.int_range(-128, 128) as i32;
+        let rq = rand_requant(rng, cout);
+        let want = convolve_s8(&x, &kt, &bias, off, &rq, &geom);
+        let mut cols = Vec::new();
+        let mut got = vec![0i8; want.numel()];
+        fast::convolve_s8_fast(&x, &kt, &bias, off, &geom, &mut cols, &mut got, fast::requant_epi(&rq));
+        if got != *want.data() {
+            return Err(format!(
+                "conv mismatch h{h} w{w} cin{cin} cout{cout} k{k} s{stride} p{pad} off{off}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dwconv_fast_fused_exactly_matches_naive() {
+    Checker::new(0x1818, 60).check("fast dwconv == dwconv_s8", |rng| {
+        let h = rng.int_range(3, 12) as usize;
+        let w = rng.int_range(3, 12) as usize;
+        let c = rng.int_range(1, 9) as usize;
+        let k = *rng.choice(&[1usize, 3]);
+        let stride = *rng.choice(&[1usize, 2]);
+        let pad = *rng.choice(&[0usize, k / 2]);
+        let geom = ConvGeom::new(k, k, stride, pad);
+        let x = Tensor::from_vec(Shape::hwc(h, w, c), rand_i8(rng, h * w * c, -128, 127));
+        let kt = Tensor::from_vec(Shape::new(&[c, k, k]), rand_i8(rng, c * k * k, -127, 127));
+        let bias: Vec<i32> = (0..c).map(|_| rng.int_range(-3000, 3000) as i32).collect();
+        let off = rng.int_range(-128, 128) as i32;
+        let rq = rand_requant(rng, c);
+        let want = dwconv_s8(&x, &kt, &bias, off, &rq, &geom);
+        let mut wt = Vec::new();
+        let mut acc_row = Vec::new();
+        let mut got = vec![0i8; want.numel()];
+        fast::dwconv_s8_fast(&x, &kt, &bias, off, &geom, &mut wt, &mut acc_row, &mut got, fast::requant_epi(&rq));
+        if got != *want.data() {
+            return Err(format!("dwconv mismatch h{h} w{w} c{c} k{k} s{stride} p{pad} off{off}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fc_fast_fused_exactly_matches_naive() {
+    Checker::new(0x1819, 80).check("fast fc == fully_connected_s8", |rng| {
+        let d = rng.int_range(1, 200) as usize;
+        let h = rng.int_range(1, 32) as usize;
+        let x = rand_i8(rng, d, -128, 127);
+        let wt = Tensor::from_vec(Shape::new(&[h, d]), rand_i8(rng, h * d, -127, 127));
+        let bias: Vec<i32> = (0..h).map(|_| rng.int_range(-5000, 5000) as i32).collect();
+        let off = rng.int_range(-128, 128) as i32;
+        let rq = rand_requant(rng, h);
+        let want = fully_connected_s8(&x, &wt, &bias, off, &rq);
+        let sums = fast::weight_row_sums(&wt);
+        let mut got = vec![0i8; h];
+        fast::fully_connected_s8_fast(&x, &wt, &bias, &sums, off, &mut got, fast::requant_epi(&rq));
+        if got != want {
+            return Err(format!("fc mismatch h{h} d{d} off{off}"));
+        }
+        Ok(())
+    });
+}
+
+// ---- executor-level parity -------------------------------------------------
+
+/// A residual net exercising every lowered op: conv (strided + same),
+/// dwconv, residual add, relu/relu6, maxpool, gap, linear.
+fn residual_net(rng: &mut Pcg32) -> Arc<Graph> {
+    let mut g = Graph::new(Shape::hwc(16, 16, 3));
+    let x = g.input();
+    let w1: Vec<f32> = (0..8 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.25)).collect();
+    let c1 = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(8, 3, 3, 3), w1),
+        vec![0.05; 8],
+        ConvGeom::same(3, 1),
+    );
+    let r1 = g.relu(c1);
+    let wd: Vec<f32> = (0..8 * 9).map(|_| rng.normal_ms(0.1, 0.3)).collect();
+    let d1 = g.dwconv(
+        r1,
+        Tensor::from_vec(Shape::new(&[8, 3, 3]), wd),
+        vec![0.02; 8],
+        ConvGeom::same(3, 1),
+    );
+    let a = g.add(d1, r1);
+    let r2 = g.relu6(a);
+    let m = g.maxpool(r2, 2, 2);
+    let w2: Vec<f32> = (0..12 * 9 * 8).map(|_| rng.normal_ms(0.0, 0.15)).collect();
+    let c2 = g.conv(
+        m,
+        Tensor::from_vec(Shape::ohwi(12, 3, 3, 8), w2),
+        vec![-0.03; 12],
+        ConvGeom::same(3, 2),
+    );
+    let r3 = g.relu(c2);
+    let p = g.global_avg_pool(r3);
+    let wl: Vec<f32> = (0..5 * 12).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+    let l = g.linear(p, Tensor::from_vec(Shape::new(&[5, 12]), wl), vec![0.1; 5]);
+    g.mark_output(l);
+    Arc::new(g)
+}
+
+fn rand_image(rng: &mut Pcg32) -> Tensor<f32> {
+    let data: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.uniform()).collect();
+    Tensor::from_vec(Shape::hwc(16, 16, 3), data)
+}
+
+fn lowered(
+    g: &Arc<Graph>,
+    mode: QuantMode,
+    weight_gran: Granularity,
+    gamma: usize,
+    calib: &[Tensor<f32>],
+) -> (QuantExecutor, Int8Executor) {
+    let mut ex = QuantExecutor::new(
+        Arc::clone(g),
+        QuantSettings { mode, gamma, granularity: Granularity::PerTensor, ..Default::default() },
+    );
+    ex.calibrate(calib);
+    let int8 = Int8Executor::lower(&ex, weight_gran).expect("lowering succeeds");
+    (ex, int8)
+}
+
+#[test]
+fn fast_engine_bit_exact_vs_naive_engine() {
+    let mut rng = Pcg32::new(0x181A);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let imgs: Vec<Tensor<f32>> = (0..3).map(|_| rand_image(&mut rng)).collect();
+    for gamma in [1usize, 2, 4] {
+        for weight_gran in [Granularity::PerTensor, Granularity::PerChannel] {
+            for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+                let (_, int8) = lowered(&g, mode, weight_gran, gamma, &calib);
+                for (i, img) in imgs.iter().enumerate() {
+                    let naive = int8.run_naive(img);
+                    let fast = int8.run_q(img);
+                    assert_eq!(naive.len(), fast.len());
+                    for (j, ((tn, qn), (tf, qf))) in naive.iter().zip(fast.iter()).enumerate() {
+                        assert_eq!(
+                            qn, qf,
+                            "{mode:?}/{weight_gran:?} γ={gamma} img{i} out{j}: grid mismatch"
+                        );
+                        assert_eq!(
+                            tn.data(),
+                            tf.data(),
+                            "{mode:?}/{weight_gran:?} γ={gamma} img{i} out{j}: values differ"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn static_and_pdq_never_allocate_the_wide_buffer() {
+    let mut rng = Pcg32::new(0x181B);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    for mode in [QuantMode::Static, QuantMode::Probabilistic] {
+        let (_, int8) = lowered(&g, mode, Granularity::PerTensor, 1, &calib);
+        let mut arena = int8.make_arena();
+        let _ = int8.run_q_with_arena(&img, &mut arena);
+        let _ = int8.run_q_with_arena(&img, &mut arena);
+        assert_eq!(
+            arena.wide_capacity_elems(),
+            0,
+            "{mode:?}: the i32 accumulator tensor must never materialize (O(1) memory claim)"
+        );
+    }
+    // Dynamic, by the §3 argument, must pay it.
+    let (_, int8) = lowered(&g, QuantMode::Dynamic, Granularity::PerTensor, 1, &calib);
+    let mut arena = int8.make_arena();
+    let _ = int8.run_q_with_arena(&img, &mut arena);
+    assert!(
+        arena.wide_capacity_elems() > 0,
+        "dynamic mode buffers the wide output by definition"
+    );
+}
+
+#[test]
+fn worker_arena_reuse_is_deterministic() {
+    let mut rng = Pcg32::new(0x181C);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    let other = rand_image(&mut rng);
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let (_, int8) = lowered(&g, mode, Granularity::PerTensor, 1, &calib);
+        let mut arena = int8.make_arena();
+        let a = int8.run_q_with_arena(&img, &mut arena);
+        let _ = int8.run_q_with_arena(&other, &mut arena);
+        let b = int8.run_q_with_arena(&img, &mut arena);
+        assert_eq!(a[0].0.data(), b[0].0.data(), "{mode:?}: arena reuse leaked state");
+        assert_eq!(a[0].1, b[0].1, "{mode:?}: arena reuse changed the grid");
+        // The internal-arena path agrees with the worker path.
+        let c = int8.run_q(&img);
+        assert_eq!(a[0].0.data(), c[0].0.data(), "{mode:?}: run_q != run_q_with_arena");
+    }
+}
+
+#[test]
+fn int8_outputs_track_the_f32_emulator() {
+    let mut rng = Pcg32::new(0x181D);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..8).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    let fp = float_exec::run(&g, &img)[0].data().to_vec();
+    for weight_gran in [Granularity::PerTensor, Granularity::PerChannel] {
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let (ex, int8) = lowered(&g, mode, weight_gran, 1, &calib);
+            let reference = ex.run_reference(&img)[0].data().to_vec();
+            let deq = int8.run(&img)[0].data().to_vec();
+            let rel = |a: &[f32], b: &[f32]| -> f32 {
+                let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                let den: f32 = b.iter().map(|v| v * v).sum::<f32>().max(1e-9);
+                (num / den).sqrt()
+            };
+            let e_ref = rel(&deq, &reference);
+            let e_fp = rel(&deq, &fp);
+            assert!(
+                e_ref < 0.4,
+                "{mode:?}/{weight_gran:?}: int8 vs run_reference rel err {e_ref}\nint8={deq:?}\nref={reference:?}"
+            );
+            assert!(
+                e_fp < 0.4,
+                "{mode:?}/{weight_gran:?}: int8 vs fp32 rel err {e_fp}\nint8={deq:?}\nfp={fp:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lowering_rejects_unsupported_configs() {
+    let mut rng = Pcg32::new(0x181E);
+    let g = residual_net(&mut rng);
+    // Uncalibrated static/PDQ must not lower; dynamic lowers fine.
+    let ex = QuantExecutor::new(
+        Arc::clone(&g),
+        QuantSettings { mode: QuantMode::Static, ..Default::default() },
+    );
+    assert!(Int8Executor::lower(&ex, Granularity::PerTensor).is_err());
+    let exd = QuantExecutor::new(
+        Arc::clone(&g),
+        QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
+    );
+    assert!(Int8Executor::lower(&exd, Granularity::PerTensor).is_ok());
+    // Per-channel *activation* grids are out of scope for the CMSIS path.
+    let exc = QuantExecutor::new(
+        Arc::clone(&g),
+        QuantSettings {
+            mode: QuantMode::Dynamic,
+            granularity: Granularity::PerChannel,
+            ..Default::default()
+        },
+    );
+    assert!(Int8Executor::lower(&exc, Granularity::PerTensor).is_err());
+}
