@@ -1,0 +1,95 @@
+//! Network serving walkthrough: boot the HTTP front door on an ephemeral
+//! port, drive it over real sockets with the load generator, then drain
+//! gracefully — the full `pdq serve --listen` / `pdq loadgen` loop in one
+//! process, no artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example http_front_door
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pdq::coordinator::calibrate::{
+    build_int8_variant, build_quant_variant, calibration_images, demo_model, ExecKind, CALIB_SIZE,
+};
+use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::{Client, FrontDoor, FrontDoorConfig};
+use pdq::nn::QuantMode;
+use pdq::quant::Granularity;
+use pdq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let duration = Duration::from_secs_f64(args.opt_f64("duration-s", 2.0));
+    let concurrency = args.opt_usize("concurrency", 4);
+
+    // --- (1) calibrate a variant menu on the synthetic demo model ---------
+    let model = demo_model("demo");
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
+        VariantKey { model: model.name.clone(), mode: ModeKey::Fp32 },
+        ExecKind::Float(Arc::clone(&model.graph)),
+    )];
+    for mode in [QuantMode::Static, QuantMode::Probabilistic] {
+        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+        variants.push((
+            VariantKey { model: model.name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
+            ExecKind::Quant(Box::new(ex)),
+        ));
+    }
+    let int8 = build_int8_variant(&model, QuantMode::Probabilistic, Granularity::PerTensor, 1, &calib)
+        .map_err(anyhow::Error::msg)?;
+    variants.push((
+        VariantKey {
+            model: model.name.clone(),
+            mode: ModeKey::Int8(QuantMode::Probabilistic.into(), GranKey::T),
+        },
+        ExecKind::Int8(Box::new(int8)),
+    ));
+    println!("[1] calibrated {} variants of {}", variants.len(), model.name);
+
+    // --- (2) boot the coordinator + front door ----------------------------
+    let server = Arc::new(Server::start(
+        variants,
+        ServerConfig { max_queue_depth: 64, ..Default::default() },
+    ));
+    let front = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default())?;
+    let addr = front.local_addr().to_string();
+    println!("[2] front door listening on {}", front.url());
+
+    // --- (3) poke the observability endpoints -----------------------------
+    let mut client = Client::new(&addr);
+    let health = client.get("/healthz").map_err(anyhow::Error::msg)?;
+    println!("[3] /healthz -> {} {}", health.status, String::from_utf8_lossy(&health.body));
+
+    // --- (4) closed-loop load over real sockets ---------------------------
+    let report = loadgen::run(&LoadgenConfig {
+        target: addr,
+        mode: LoadMode::Closed,
+        concurrency,
+        duration,
+        ..Default::default()
+    })
+    .map_err(anyhow::Error::msg)?;
+    println!(
+        "[4] closed loop: {} ok / {} shed / {} dropped — {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        report.total.ok,
+        report.total.rejected,
+        report.total.dropped,
+        report.achieved_rps,
+        report.total.p50_us / 1e3,
+        report.total.p99_us / 1e3,
+    );
+    report.save("BENCH_serving.json")?;
+    println!("    report written to BENCH_serving.json");
+
+    // --- (5) graceful drain -----------------------------------------------
+    let metrics = front.shutdown();
+    println!("[5] drained. metrics: {}", metrics.to_json().to_string_compact());
+    anyhow::ensure!(report.total.dropped == 0, "dropped responses under load");
+    Ok(())
+}

@@ -87,6 +87,29 @@ mod tests {
     }
 
     #[test]
+    fn max_batch_one_never_waits_for_the_deadline() {
+        // With max_batch == 1 the batch is full the moment the first item
+        // lands: the drain loop and the timed wait must both be skipped,
+        // even under a pathological 30 s deadline.
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 1, deadline: Duration::from_secs(30) };
+        let t0 = Instant::now();
+        for want in 0..3 {
+            let b = next_batch(&rx, &policy).unwrap();
+            assert_eq!(b, vec![want], "strict FIFO, one item per batch");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "max_batch=1 must close immediately, not wait out the deadline"
+        );
+        drop(tx);
+        assert!(next_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
     fn late_arrivals_join_within_deadline() {
         // Deterministic handshake instead of a sleep: the sender thread
         // waits for an explicit go-signal fired right before the batch is

@@ -65,6 +65,15 @@ impl ExecKind {
             _ => panic!("arena kind does not match executor kind"),
         }
     }
+
+    /// The input shape this variant expects (the `/v1/variants` catalog).
+    pub fn input_shape(&self) -> &crate::tensor::Shape {
+        match self {
+            ExecKind::Float(g) => g.input_shape(),
+            ExecKind::Quant(ex) => ex.graph().input_shape(),
+            ExecKind::Int8(ex) => ex.input_shape(),
+        }
+    }
 }
 
 /// The paper's calibration-set size (§5.2).
@@ -102,6 +111,47 @@ pub fn build_int8_variant(
 ) -> Result<Int8Executor, String> {
     let ex = build_quant_variant(model, mode, Granularity::PerTensor, gamma, calib);
     Int8Executor::lower(&ex, weight_gran)
+}
+
+/// A small self-contained classification model with seeded random weights:
+/// conv(3→8, s2) → relu → conv(8→8, s2) → relu → gap → linear(8→10) on the
+/// Cls task's 32×32×3 images, so [`calibration_images`] and
+/// [`shapes::dataset`] feed it directly. No `artifacts/` needed — this is
+/// what `pdq serve --synthetic` and the CI serving smoke run on.
+pub fn demo_model(name: &str) -> Model {
+    use crate::tensor::{ConvGeom, Shape};
+    use crate::util::Pcg32;
+    let mut rng = Pcg32::new(0xDE30_0DE1);
+    let mut g = crate::nn::Graph::new(Shape::hwc(32, 32, 3));
+    let x = g.input();
+    let w1: Vec<f32> = (0..8 * 9 * 3).map(|_| rng.normal_ms(0.0, 0.25)).collect();
+    let c1 = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(8, 3, 3, 3), w1),
+        vec![0.0; 8],
+        ConvGeom::same(3, 2),
+    );
+    let r1 = g.relu(c1);
+    let w2: Vec<f32> = (0..8 * 9 * 8).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+    let c2 = g.conv(
+        r1,
+        Tensor::from_vec(Shape::ohwi(8, 3, 3, 8), w2),
+        vec![0.0; 8],
+        ConvGeom::same(3, 2),
+    );
+    let r2 = g.relu(c2);
+    let p = g.global_avg_pool(r2);
+    let wl: Vec<f32> = (0..10 * 8).map(|_| rng.normal_ms(0.0, 0.5)).collect();
+    let l = g.linear(p, Tensor::from_vec(Shape::new(&[10, 8]), wl), vec![0.0; 10]);
+    g.mark_output(l);
+    Model {
+        name: name.to_string(),
+        task: Task::Cls,
+        graph: Arc::new(g),
+        num_outputs: 1,
+        golden: None,
+        hlo_path: None,
+    }
 }
 
 /// Build the standard six-variant menu for one model (fp32 + the paper's

@@ -1,4 +1,13 @@
-//! Serving metrics: counters and a bounded latency reservoir.
+//! Serving metrics: counters, exact latency histogram, and unbiased
+//! latency/batch-size reservoirs. Exported as JSON and Prometheus text.
+//!
+//! The seed implementation *truncated* its reservoirs — after the first
+//! 100k events `latencies_us` stopped recording, so a long-run tail only
+//! ever reflected warm-up traffic. This version keeps a true uniform sample
+//! over the whole stream (Vitter's Algorithm R, driven by a deterministic
+//! seeded LCG so runs are reproducible and no rand dependency is needed)
+//! and, for the percentiles that must be *exact* regardless of sampling, a
+//! fixed log-bucketed histogram that Prometheus can scrape cumulatively.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -6,47 +15,128 @@ use std::time::Duration;
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// Default reservoir capacity per series.
+const RESERVOIR: usize = 100_000;
+
+/// Latency histogram upper bounds, microseconds (`+Inf` is implicit).
+pub const LATENCY_BUCKETS_US: [f32; 14] = [
+    50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5, 2e5, 5e5, 1e6,
+];
+
+/// Uniform-over-the-stream bounded sample (Vitter's Algorithm R).
+#[derive(Debug)]
+struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f32>,
+    lcg: u64,
+}
+
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Self {
+        Self { cap: cap.max(1), seen: 0, samples: Vec::new(), lcg: seed | 1 }
+    }
+
+    fn push(&mut self, v: f32) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            return;
+        }
+        // MMIX LCG; the low bits of an LCG are weak, use the high half.
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = (self.lcg >> 16) % self.seen;
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = v;
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    rejected_unknown: u64,
+    rejected_overload: u64,
+    rejected_draining: u64,
+    batches: u64,
+    batch_sizes: Reservoir,
+    latencies_us: Reservoir,
+    latency_sum_us: f64,
+    /// Exact cumulative counts; last slot is the +Inf overflow bucket.
+    latency_hist: [u64; LATENCY_BUCKETS_US.len() + 1],
+}
+
 /// Shared metrics registry (cheap enough to lock per event).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    requests: u64,
-    responses: u64,
-    rejected: u64,
-    batches: u64,
-    batch_sizes: Vec<f32>,
-    latencies_us: Vec<f32>,
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_reservoir_cap(RESERVOIR)
+    }
 }
 
-const RESERVOIR: usize = 100_000;
-
 impl Metrics {
+    /// Custom reservoir capacity (tests shrink it to exercise displacement
+    /// without pushing 100k events).
+    pub fn with_reservoir_cap(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                responses: 0,
+                rejected_unknown: 0,
+                rejected_overload: 0,
+                rejected_draining: 0,
+                batches: 0,
+                batch_sizes: Reservoir::new(cap, 0x5EED_BA7C),
+                latencies_us: Reservoir::new(cap, 0x5EED_1A7E),
+                latency_sum_us: 0.0,
+                latency_hist: [0; LATENCY_BUCKETS_US.len() + 1],
+            }),
+        }
+    }
+
     pub fn on_request(&self) {
         self.inner.lock().unwrap().requests += 1;
     }
 
+    /// A request for a variant the router doesn't know.
     pub fn on_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.inner.lock().unwrap().rejected_unknown += 1;
+    }
+
+    /// A request shed by admission control (the 429 path).
+    pub fn on_shed(&self) {
+        self.inner.lock().unwrap().rejected_overload += 1;
+    }
+
+    /// A request refused because the server is draining (the 503 path) —
+    /// kept apart from unknown-variant so shutdown under load doesn't show
+    /// up as a burst of `unknown_variant` rejections.
+    pub fn on_reject_draining(&self) {
+        self.inner.lock().unwrap().rejected_draining += 1;
     }
 
     pub fn on_batch(&self, size: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
-        if m.batch_sizes.len() < RESERVOIR {
-            m.batch_sizes.push(size as f32);
-        }
+        m.batch_sizes.push(size as f32);
     }
 
     pub fn on_response(&self, latency: Duration) {
+        let us = latency.as_micros() as f32;
         let mut m = self.inner.lock().unwrap();
         m.responses += 1;
-        if m.latencies_us.len() < RESERVOIR {
-            m.latencies_us.push(latency.as_micros() as f32);
-        }
+        m.latencies_us.push(us);
+        m.latency_sum_us += us as f64;
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&ub| us <= ub)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        m.latency_hist[idx] += 1;
     }
 
     pub fn requests(&self) -> u64 {
@@ -57,18 +147,50 @@ impl Metrics {
         self.inner.lock().unwrap().responses
     }
 
+    /// Total rejections: unknown-variant + overload-shed + draining.
     pub fn rejected(&self) -> u64 {
-        self.inner.lock().unwrap().rejected
+        let m = self.inner.lock().unwrap();
+        m.rejected_unknown + m.rejected_overload + m.rejected_draining
+    }
+
+    /// The overload-shed (429) share of [`Metrics::rejected`].
+    pub fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().rejected_overload
+    }
+
+    /// Total latency observations (not capped by the reservoir).
+    pub fn latency_seen(&self) -> u64 {
+        self.inner.lock().unwrap().latencies_us.seen
     }
 
     /// Mean batch size seen by the workers.
     pub fn mean_batch(&self) -> f32 {
-        stats::mean(&self.inner.lock().unwrap().batch_sizes)
+        stats::mean(&self.inner.lock().unwrap().batch_sizes.samples)
     }
 
-    /// Latency percentile in microseconds.
+    /// Latency percentile in microseconds (reservoir estimate). Clones and
+    /// sorts the reservoir — report-time use, not per-request hot paths.
     pub fn latency_us(&self, pct: f64) -> f32 {
-        stats::percentile(&self.inner.lock().unwrap().latencies_us, pct)
+        stats::percentile(&self.inner.lock().unwrap().latencies_us.samples, pct)
+    }
+
+    /// Cheap p50 estimate for per-request paths (the 429 `Retry-After`
+    /// hint): an O(buckets) walk of the exact histogram, returning the
+    /// upper bound of the bucket holding the median. 0 with no data.
+    pub fn latency_p50_hint_us(&self) -> f32 {
+        let m = self.inner.lock().unwrap();
+        if m.responses == 0 {
+            return 0.0;
+        }
+        let half = m.responses.div_ceil(2);
+        let mut cum = 0u64;
+        for (i, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
+            cum += m.latency_hist[i];
+            if cum >= half {
+                return ub;
+            }
+        }
+        LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1]
     }
 
     /// JSON snapshot for reports.
@@ -77,13 +199,71 @@ impl Metrics {
         let mut o = Json::obj();
         o.set("requests", m.requests)
             .set("responses", m.responses)
-            .set("rejected", m.rejected)
+            .set("rejected", m.rejected_unknown + m.rejected_overload + m.rejected_draining)
+            .set("rejected_unknown", m.rejected_unknown)
+            .set("rejected_overload", m.rejected_overload)
+            .set("rejected_draining", m.rejected_draining)
             .set("batches", m.batches)
-            .set("mean_batch", stats::mean(&m.batch_sizes))
-            .set("p50_us", stats::percentile(&m.latencies_us, 50.0))
-            .set("p95_us", stats::percentile(&m.latencies_us, 95.0))
-            .set("p99_us", stats::percentile(&m.latencies_us, 99.0));
+            .set("mean_batch", stats::mean(&m.batch_sizes.samples))
+            .set("latency_seen", m.latencies_us.seen)
+            .set("p50_us", stats::percentile(&m.latencies_us.samples, 50.0))
+            .set("p95_us", stats::percentile(&m.latencies_us.samples, 95.0))
+            .set("p99_us", stats::percentile(&m.latencies_us.samples, 99.0));
         o
+    }
+
+    /// Prometheus text exposition (the `/metrics?format=prometheus` body).
+    pub fn to_prometheus(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut s = String::with_capacity(2048);
+        let counter = |s: &mut String, name: &str, help: &str, v: u64| {
+            s.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(&mut s, "pdq_requests_total", "Requests submitted to the coordinator.", m.requests);
+        counter(&mut s, "pdq_responses_total", "Responses delivered by workers.", m.responses);
+        s.push_str("# HELP pdq_rejected_total Requests rejected before execution.\n");
+        s.push_str("# TYPE pdq_rejected_total counter\n");
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"unknown_variant\"}} {}\n",
+            m.rejected_unknown
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"overload\"}} {}\n",
+            m.rejected_overload
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"draining\"}} {}\n",
+            m.rejected_draining
+        ));
+        counter(&mut s, "pdq_batches_total", "Batches executed by workers.", m.batches);
+        s.push_str("# HELP pdq_batch_size_mean Mean executed batch size (reservoir).\n");
+        s.push_str("# TYPE pdq_batch_size_mean gauge\n");
+        s.push_str(&format!("pdq_batch_size_mean {}\n", stats::mean(&m.batch_sizes.samples)));
+        // Exact histogram, Prometheus cumulative convention.
+        s.push_str("# HELP pdq_request_latency_us Queue+execution latency in microseconds.\n");
+        s.push_str("# TYPE pdq_request_latency_us histogram\n");
+        let mut cum = 0u64;
+        for (i, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
+            cum += m.latency_hist[i];
+            s.push_str(&format!("pdq_request_latency_us_bucket{{le=\"{ub}\"}} {cum}\n"));
+        }
+        cum += m.latency_hist[LATENCY_BUCKETS_US.len()];
+        s.push_str(&format!("pdq_request_latency_us_bucket{{le=\"+Inf\"}} {cum}\n"));
+        s.push_str(&format!("pdq_request_latency_us_sum {}\n", m.latency_sum_us));
+        s.push_str(&format!("pdq_request_latency_us_count {}\n", m.responses));
+        // Reservoir-estimated quantiles (cheap to read, unbiased over the
+        // whole stream — unlike the seed's first-100k truncation).
+        s.push_str("# HELP pdq_request_latency_us_quantile Reservoir latency quantiles.\n");
+        s.push_str("# TYPE pdq_request_latency_us_quantile gauge\n");
+        for (q, pct) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+            s.push_str(&format!(
+                "pdq_request_latency_us_quantile{{q=\"{q}\"}} {}\n",
+                stats::percentile(&m.latencies_us.samples, pct)
+            ));
+        }
+        s
     }
 }
 
@@ -103,6 +283,10 @@ mod tests {
         assert_eq!(m.responses(), 2);
         assert_eq!(m.mean_batch(), 2.0);
         assert!(m.latency_us(50.0) >= 100.0);
+        // Histogram p50 hint: the median response (100µs) lands in the
+        // le=100 bucket, so the hint is that bucket's upper bound.
+        assert_eq!(m.latency_p50_hint_us(), 100.0);
+        assert_eq!(Metrics::default().latency_p50_hint_us(), 0.0);
     }
 
     #[test]
@@ -111,5 +295,80 @@ mod tests {
         m.on_request();
         let j = m.to_json();
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("rejected_overload").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn reject_reasons_sum_into_rejected() {
+        let m = Metrics::default();
+        m.on_reject();
+        m.on_shed();
+        m.on_shed();
+        assert_eq!(m.rejected(), 3);
+        assert_eq!(m.shed(), 2);
+        let j = m.to_json();
+        assert_eq!(j.get("rejected_unknown").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("rejected_overload").unwrap().as_usize(), Some(2));
+    }
+
+    /// The seed bug this PR fixes: after the reservoir fills, later events
+    /// must still be able to displace early ones, so long-run tails aren't
+    /// frozen at warm-up traffic.
+    #[test]
+    fn late_samples_displace_early_ones() {
+        let m = Metrics::with_reservoir_cap(64);
+        // Warm-up phase: fast responses.
+        for _ in 0..64 {
+            m.on_response(Duration::from_micros(10));
+        }
+        // Steady state turns slow: every later event is 100x the warm-up.
+        for _ in 0..64 * 40 {
+            m.on_response(Duration::from_micros(1000));
+        }
+        assert_eq!(m.latency_seen(), 64 + 64 * 40, "seen counts the whole stream");
+        // With ~97.6% of the stream at 1000µs, an unbiased sample has p50
+        // there; the seed's truncating reservoir would report 10µs forever.
+        assert_eq!(m.latency_us(50.0), 1000.0, "median must reflect late traffic");
+        // And the exact histogram agrees independently of sampling.
+        let prom = m.to_prometheus();
+        assert!(
+            prom.contains("pdq_request_latency_us_bucket{le=\"1000\"} 2624"),
+            "exact histogram counts every event:\n{prom}"
+        );
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_and_uniform_ish() {
+        let a = Metrics::with_reservoir_cap(32);
+        let b = Metrics::with_reservoir_cap(32);
+        for i in 0..10_000u64 {
+            a.on_response(Duration::from_micros(i));
+            b.on_response(Duration::from_micros(i));
+        }
+        // Seeded LCG ⇒ identical runs produce identical samples.
+        assert_eq!(a.latency_us(50.0), b.latency_us(50.0));
+        // Uniform over the stream ⇒ the median sits near the stream middle
+        // (loose 4-sigma-ish band for cap=32).
+        let p50 = a.latency_us(50.0);
+        assert!((1500.0..=8500.0).contains(&p50), "p50 {p50} not central");
+    }
+
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let m = Metrics::default();
+        m.on_request();
+        m.on_shed();
+        m.on_batch(3);
+        m.on_response(Duration::from_micros(150));
+        let prom = m.to_prometheus();
+        assert!(prom.contains("# TYPE pdq_requests_total counter"));
+        assert!(prom.contains("pdq_rejected_total{reason=\"overload\"} 1"));
+        assert!(prom.contains("# TYPE pdq_request_latency_us histogram"));
+        // 150µs lands in le="200"; cumulative convention carries it upward.
+        assert!(prom.contains("pdq_request_latency_us_bucket{le=\"50\"} 0"));
+        assert!(prom.contains("pdq_request_latency_us_bucket{le=\"200\"} 1"));
+        assert!(prom.contains("pdq_request_latency_us_bucket{le=\"+Inf\"} 1"));
+        assert!(prom.contains("pdq_request_latency_us_count 1"));
+        assert!(prom.ends_with('\n'));
     }
 }

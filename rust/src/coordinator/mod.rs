@@ -3,13 +3,15 @@
 //! Architecture (std threads + mpsc; the offline registry has no tokio):
 //!
 //! ```text
-//!  clients ──submit──▶ Router ──per-variant queue──▶ Batcher ──▶ Workers
-//!                        │                             │            │
-//!                        └── metrics ◀─────────────────┴────────────┘
+//!  clients ──submit────────▶ Router ──per-variant queue──▶ Batcher ──▶ Workers
+//!  sockets ──try_submit──▶ ↗   │                             │            │
+//!  (crate::net front door)     └── metrics ◀─────────────────┴────────────┘
 //! ```
 //!
 //! - [`router`] — routes requests to the (model × quant-mode) variant's
-//!   queue; rejects unknown variants.
+//!   queue; rejects unknown variants. Network-facing submissions go through
+//!   [`server::Server::try_submit`], which additionally bounds per-variant
+//!   in-flight depth via [`crate::net::admission`] (the 429 shed path).
 //! - [`batcher`] — dynamic batching: a batch closes when `max_batch` is
 //!   reached or the oldest request exceeds `batch_deadline` (the standard
 //!   throughput/latency knob).
@@ -27,4 +29,4 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use server::{Request, Response, Server, ServerConfig};
+pub use server::{Request, Response, Server, ServerConfig, SubmitError};

@@ -71,6 +71,69 @@ impl From<GranKey> for Granularity {
     }
 }
 
+impl QuantModeKey {
+    fn wire(&self) -> &'static str {
+        match self {
+            QuantModeKey::Static => "static",
+            QuantModeKey::Dynamic => "dynamic",
+            QuantModeKey::Ours => "ours",
+        }
+    }
+
+    fn parse_wire(s: &str) -> Result<Self, String> {
+        match s {
+            "static" => Ok(QuantModeKey::Static),
+            "dynamic" => Ok(QuantModeKey::Dynamic),
+            "ours" => Ok(QuantModeKey::Ours),
+            other => Err(format!("unknown quant mode {other:?}")),
+        }
+    }
+}
+
+impl GranKey {
+    fn wire(&self) -> &'static str {
+        match self {
+            GranKey::T => "t",
+            GranKey::C => "c",
+        }
+    }
+
+    fn parse_wire(s: &str) -> Result<Self, String> {
+        match s {
+            "t" => Ok(GranKey::T),
+            "c" => Ok(GranKey::C),
+            other => Err(format!("unknown granularity {other:?}")),
+        }
+    }
+}
+
+impl ModeKey {
+    /// Stable wire name for the HTTP protocol: `fp32`, `ours-t`,
+    /// `int8-static-c`, ... ([`ModeKey::parse_wire`] is the inverse; the
+    /// Debug-derived [`VariantKey::label`] stays display-only).
+    pub fn wire(&self) -> String {
+        match self {
+            ModeKey::Fp32 => "fp32".into(),
+            ModeKey::Quant(m, g) => format!("{}-{}", m.wire(), g.wire()),
+            ModeKey::Int8(m, g) => format!("int8-{}-{}", m.wire(), g.wire()),
+        }
+    }
+
+    pub fn parse_wire(s: &str) -> Result<ModeKey, String> {
+        if s == "fp32" {
+            return Ok(ModeKey::Fp32);
+        }
+        let parts: Vec<&str> = s.split('-').collect();
+        match parts.as_slice() {
+            [m, g] => Ok(ModeKey::Quant(QuantModeKey::parse_wire(m)?, GranKey::parse_wire(g)?)),
+            ["int8", m, g] => {
+                Ok(ModeKey::Int8(QuantModeKey::parse_wire(m)?, GranKey::parse_wire(g)?))
+            }
+            _ => Err(format!("unknown mode {s:?} (want fp32 | <mode>-<gran> | int8-<mode>-<gran>)")),
+        }
+    }
+}
+
 /// Full variant identity.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct VariantKey {
@@ -85,6 +148,20 @@ impl VariantKey {
             ModeKey::Quant(m, g) => format!("{}/{m:?}/{g:?}", self.model),
             ModeKey::Int8(m, g) => format!("{}/int8/{m:?}/{g:?}", self.model),
         }
+    }
+
+    /// `<model>|<mode-wire>` — the name clients put on the wire.
+    pub fn wire(&self) -> String {
+        format!("{}|{}", self.model, self.mode.wire())
+    }
+
+    pub fn parse_wire(s: &str) -> Result<VariantKey, String> {
+        let (model, mode) =
+            s.split_once('|').ok_or_else(|| format!("variant {s:?} missing '|' separator"))?;
+        if model.is_empty() {
+            return Err(format!("variant {s:?} has an empty model name"));
+        }
+        Ok(VariantKey { model: model.to_string(), mode: ModeKey::parse_wire(mode)? })
     }
 }
 
@@ -163,6 +240,33 @@ mod tests {
             let k: QuantModeKey = m.into();
             let back: QuantMode = k.into();
             assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn wire_names_roundtrip_every_mode() {
+        let mut modes = vec![ModeKey::Fp32];
+        for m in [QuantModeKey::Static, QuantModeKey::Dynamic, QuantModeKey::Ours] {
+            for g in [GranKey::T, GranKey::C] {
+                modes.push(ModeKey::Quant(m, g));
+                modes.push(ModeKey::Int8(m, g));
+            }
+        }
+        for mode in modes {
+            let v = VariantKey { model: "micro_resnet".into(), mode: mode.clone() };
+            let wire = v.wire();
+            assert_eq!(VariantKey::parse_wire(&wire).unwrap(), v, "roundtrip {wire}");
+        }
+        assert_eq!(
+            VariantKey::parse_wire("m|int8-ours-c").unwrap().mode,
+            ModeKey::Int8(QuantModeKey::Ours, GranKey::C)
+        );
+    }
+
+    #[test]
+    fn bad_wire_names_rejected() {
+        for bad in ["", "no-separator", "m|", "m|int9-ours-t", "m|ours", "m|ours-x", "|fp32"] {
+            assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
         }
     }
 }

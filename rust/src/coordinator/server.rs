@@ -1,8 +1,23 @@
-//! The serving front door: routes requests, owns the worker fleet,
-//! exposes metrics, and shuts down cleanly.
+//! The serving core: routes requests, owns the worker fleet, exposes
+//! metrics, bounds in-flight load, and shuts down cleanly.
+//!
+//! Two submission paths:
+//! - [`Server::submit`] — the legacy unbounded path (in-process demos,
+//!   experiment drivers).
+//! - [`Server::try_submit`] — the admitted path the network front door
+//!   uses: per-variant in-flight depth is bounded by
+//!   [`ServerConfig::max_queue_depth`]; past the limit the request is shed
+//!   ([`SubmitError::Overloaded`], counted in [`Metrics::shed`]) instead of
+//!   queued, so overload degrades into fast 429s rather than unbounded
+//!   latency.
+//!
+//! Drain ordering ([`Server::drain`]): close the router (no new
+//! submissions), let every worker pull its queue dry — each already-queued
+//! request is executed and its response sent — then join the workers. Every
+//! accepted request gets a response before the fleet exits.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -11,7 +26,8 @@ use super::calibrate::ExecKind;
 use super::metrics::Metrics;
 use super::router::{Router, VariantKey};
 use super::worker::{spawn_workers, Job};
-use crate::tensor::Tensor;
+use crate::net::admission::{Admission, AdmissionError, Permit};
+use crate::tensor::{Shape, Tensor};
 
 /// An inference request.
 pub struct Request {
@@ -36,19 +52,49 @@ pub struct Response {
 pub struct ServerConfig {
     pub workers_per_variant: usize,
     pub policy: BatchPolicy,
+    /// Per-variant in-flight bound for [`Server::try_submit`]; 0 = unbounded.
+    pub max_queue_depth: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers_per_variant: 2, policy: BatchPolicy::default() }
+        Self { workers_per_variant: 2, policy: BatchPolicy::default(), max_queue_depth: 0 }
+    }
+}
+
+/// Why [`Server::try_submit`] refused a request.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// No such variant registered.
+    UnknownVariant(String),
+    /// Admission control shed the request; `depth` is the in-flight limit
+    /// that was hit.
+    Overloaded { depth: usize },
+    /// The server is draining (or drained); no new work is accepted.
+    Draining,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownVariant(v) => write!(f, "unknown variant {v}"),
+            SubmitError::Overloaded { depth } => {
+                write!(f, "variant at its in-flight limit ({depth})")
+            }
+            SubmitError::Draining => write!(f, "server is draining"),
+        }
     }
 }
 
 /// The running server.
 pub struct Server {
-    router: Router<Job>,
-    handles: Vec<JoinHandle<()>>,
+    router: RwLock<Router<Job>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
+    admission: Admission<VariantKey>,
+    /// (variant, input shape) for every registered variant — the
+    /// `/v1/variants` catalog (executors themselves move into the workers).
+    catalog: Vec<(VariantKey, Shape)>,
 }
 
 impl Server {
@@ -57,7 +103,9 @@ impl Server {
         let metrics = Arc::new(Metrics::default());
         let mut router = Router::default();
         let mut handles = Vec::new();
+        let mut catalog = Vec::with_capacity(variants.len());
         for (key, exec) in variants {
+            catalog.push((key.clone(), exec.input_shape().clone()));
             let rx = router.register(key.clone());
             handles.extend(spawn_workers(
                 key.label(),
@@ -68,11 +116,19 @@ impl Server {
                 config.workers_per_variant,
             ));
         }
-        Self { router, handles, metrics }
+        let admission =
+            Admission::new(config.max_queue_depth, catalog.iter().map(|(k, _)| k.clone()));
+        Self {
+            router: RwLock::new(router),
+            handles: Mutex::new(handles),
+            metrics,
+            admission,
+            catalog,
+        }
     }
 
     /// Submit a request; returns a receiver for the response, or an error
-    /// for unknown variants.
+    /// for unknown variants. Unbounded: never shed, only counted.
     pub fn submit(
         &self,
         variant: VariantKey,
@@ -85,11 +141,54 @@ impl Server {
             request: Request { id, variant: variant.clone(), image, reply: tx },
             enqueued: Instant::now(),
         };
-        match self.router.route(&variant, job) {
+        match self.router.read().unwrap().route(&variant, job) {
             Ok(()) => Ok(rx),
+            // Same drain-vs-unknown split as `try_submit`: a registered
+            // variant whose route is gone means the router was closed.
+            Err(_) if self.catalog.iter().any(|(k, _)| *k == variant) => {
+                self.metrics.on_reject_draining();
+                Err("server is draining".to_string())
+            }
             Err(_) => {
                 self.metrics.on_reject();
                 Err(format!("unknown variant {variant:?}"))
+            }
+        }
+    }
+
+    /// Submit through admission control. The returned [`Permit`] holds the
+    /// variant's in-flight slot; keep it alive until the response has been
+    /// read from the receiver (dropping it early un-bounds the queue).
+    pub fn try_submit(
+        &self,
+        variant: VariantKey,
+        id: u64,
+        image: Tensor<f32>,
+    ) -> Result<(mpsc::Receiver<Response>, Permit), SubmitError> {
+        self.metrics.on_request();
+        let permit = match self.admission.try_acquire(&variant) {
+            Ok(p) => p,
+            Err(AdmissionError::UnknownKey) => {
+                self.metrics.on_reject();
+                return Err(SubmitError::UnknownVariant(variant.wire()));
+            }
+            Err(AdmissionError::Full { depth }) => {
+                self.metrics.on_shed();
+                return Err(SubmitError::Overloaded { depth });
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            request: Request { id, variant: variant.clone(), image, reply: tx },
+            enqueued: Instant::now(),
+        };
+        match self.router.read().unwrap().route(&variant, job) {
+            Ok(()) => Ok((rx, permit)),
+            // Admission knew the key but the route is gone ⇒ the router was
+            // closed for drain. The permit drops here, freeing the slot.
+            Err(_) => {
+                self.metrics.on_reject_draining();
+                Err(SubmitError::Draining)
             }
         }
     }
@@ -98,16 +197,43 @@ impl Server {
         &self.metrics
     }
 
-    pub fn variants(&self) -> Vec<VariantKey> {
-        self.router.variants()
+    pub fn metrics_arc(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
     }
 
-    /// Drain and stop all workers.
-    pub fn shutdown(mut self) -> Arc<Metrics> {
-        self.router.close();
-        for h in self.handles.drain(..) {
+    pub fn variants(&self) -> Vec<VariantKey> {
+        self.catalog.iter().map(|(k, _)| k.clone()).collect()
+    }
+
+    /// Registered (variant, input shape) pairs.
+    pub fn catalog(&self) -> &[(VariantKey, Shape)] {
+        &self.catalog
+    }
+
+    /// Per-variant in-flight depth snapshot (admitted, not yet answered).
+    pub fn admission_depths(&self) -> Vec<(VariantKey, usize)> {
+        self.admission.depths()
+    }
+
+    /// The configured in-flight limit (0 = unbounded).
+    pub fn max_queue_depth(&self) -> usize {
+        self.admission.limit()
+    }
+
+    /// Drain in place: stop accepting, execute everything queued, join the
+    /// workers. Idempotent; shared-reference so the network front door can
+    /// drain through its `Arc<Server>`.
+    pub fn drain(&self) {
+        self.router.write().unwrap().close();
+        let handles: Vec<JoinHandle<()>> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
+    }
+
+    /// Drain and consume (the pre-front-door API; kept for in-process users).
+    pub fn shutdown(self) -> Arc<Metrics> {
+        self.drain();
         self.metrics
     }
 }
@@ -130,10 +256,14 @@ mod tests {
         )
     }
 
+    fn fp32_key(name: &str) -> VariantKey {
+        VariantKey { model: name.into(), mode: ModeKey::Fp32 }
+    }
+
     #[test]
     fn end_to_end_submit_and_reply() {
         let server = Server::start(vec![float_variant("m")], ServerConfig::default());
-        let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+        let key = fp32_key("m");
         let mut rxs = Vec::new();
         for id in 0..20u64 {
             let img = Tensor::full(Shape::hwc(2, 2, 1), id as f32);
@@ -152,15 +282,118 @@ mod tests {
     #[test]
     fn unknown_variant_rejected_and_counted() {
         let server = Server::start(vec![float_variant("m")], ServerConfig::default());
-        let bad = VariantKey { model: "ghost".into(), mode: ModeKey::Fp32 };
+        let bad = fp32_key("ghost");
         assert!(server.submit(bad, 1, Tensor::full(Shape::hwc(2, 2, 1), 0.0)).is_err());
         let metrics = server.shutdown();
         assert_eq!(metrics.rejected(), 1);
     }
 
     #[test]
+    fn try_submit_unknown_variant_is_typed_error() {
+        let server = Server::start(vec![float_variant("m")], ServerConfig::default());
+        let bad = fp32_key("ghost");
+        match server.try_submit(bad, 1, Tensor::full(Shape::hwc(2, 2, 1), 0.0)) {
+            Err(SubmitError::UnknownVariant(v)) => assert_eq!(v, "ghost|fp32"),
+            other => panic!("want UnknownVariant, got {other:?}", other = other.err()),
+        }
+        assert_eq!(server.metrics().rejected(), 1);
+        assert_eq!(server.metrics().shed(), 0);
+        server.drain();
+    }
+
+    #[test]
+    fn depth_one_queue_sheds_deterministically() {
+        let server = Server::start(
+            vec![float_variant("m")],
+            ServerConfig { max_queue_depth: 1, ..Default::default() },
+        );
+        let key = fp32_key("m");
+        let img = || Tensor::full(Shape::hwc(2, 2, 1), 1.0);
+        // Hold the single slot: the permit stays alive even after the
+        // worker has answered, so the next submit MUST shed.
+        let (rx1, permit1) = server.try_submit(key.clone(), 1, img()).unwrap();
+        match server.try_submit(key.clone(), 2, img()) {
+            Err(SubmitError::Overloaded { depth }) => assert_eq!(depth, 1),
+            other => panic!("want Overloaded, got {other:?}", other = other.err()),
+        }
+        assert_eq!(server.metrics().shed(), 1);
+        assert_eq!(server.metrics().rejected(), 1, "sheds count into rejected()");
+        // Consume the response and free the slot: admission recovers.
+        rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        drop(permit1);
+        let (rx3, permit3) = server.try_submit(key.clone(), 3, img()).unwrap();
+        rx3.recv_timeout(Duration::from_secs(5)).unwrap();
+        drop(permit3);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.responses(), 2);
+        assert_eq!(metrics.shed(), 1);
+    }
+
+    /// Drain ordering: every request queued before `drain()` gets a
+    /// response before the workers join. `max_batch == 1` + one worker
+    /// maximizes the queued backlog at drain time.
+    #[test]
+    fn queued_requests_answered_before_workers_join() {
+        let server = Server::start(
+            vec![float_variant("m")],
+            ServerConfig {
+                workers_per_variant: 1,
+                policy: BatchPolicy { max_batch: 1, deadline: Duration::from_millis(1) },
+                max_queue_depth: 0,
+            },
+        );
+        let key = fp32_key("m");
+        let rxs: Vec<_> = (0..64u64)
+            .map(|id| server.submit(key.clone(), id, Tensor::full(Shape::hwc(2, 2, 1), 1.0)).unwrap())
+            .collect();
+        // Drain immediately — most of the 64 are still queued.
+        server.drain();
+        for (id, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|_| panic!("request {id} lost in drain"));
+            assert_eq!(resp.id, id as u64);
+        }
+        assert_eq!(server.metrics().responses(), 64);
+        // Idempotent: a second drain (and the consuming shutdown) are no-ops.
+        server.drain();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.responses(), 64);
+    }
+
+    #[test]
+    fn try_submit_after_drain_reports_draining() {
+        let server = Server::start(
+            vec![float_variant("m")],
+            ServerConfig { max_queue_depth: 4, ..Default::default() },
+        );
+        server.drain();
+        match server.try_submit(fp32_key("m"), 1, Tensor::full(Shape::hwc(2, 2, 1), 0.0)) {
+            Err(SubmitError::Draining) => {}
+            other => panic!("want Draining, got {other:?}", other = other.err()),
+        }
+        // The failed submit's permit was released on the error path.
+        assert!(server.admission_depths().iter().all(|(_, d)| *d == 0));
+    }
+
+    #[test]
+    fn catalog_reports_input_shapes() {
+        let server = Server::start(
+            vec![float_variant("a"), float_variant("b")],
+            ServerConfig::default(),
+        );
+        let cat = server.catalog();
+        assert_eq!(cat.len(), 2);
+        for (_, shape) in cat {
+            assert_eq!(shape.dims(), &[2, 2, 1]);
+        }
+        assert_eq!(server.variants().len(), 2);
+        server.drain();
+    }
+
+    #[test]
     fn int8_variant_serves_end_to_end() {
-        use crate::coordinator::router::{GranKey, QuantModeKey};
+        use crate::coordinator::router::{GranKey, ModeKey, QuantModeKey};
         use crate::nn::int8_exec::Int8Executor;
         use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
         use crate::nn::QuantMode;
@@ -226,7 +459,7 @@ mod tests {
             let server = Arc::clone(&server);
             joins.push(std::thread::spawn(move || {
                 let model = if t % 2 == 0 { "a" } else { "b" };
-                let key = VariantKey { model: model.into(), mode: ModeKey::Fp32 };
+                let key = fp32_key(model);
                 for i in 0..25u64 {
                     let img = Tensor::full(Shape::hwc(2, 2, 1), i as f32);
                     let rx = server.submit(key.clone(), t * 100 + i, img).unwrap();

@@ -36,6 +36,9 @@
 //! - [`runtime`] — PJRT client wrapper loading the AOT HLO artifacts.
 //! - [`coordinator`] — threaded serving stack: router → dynamic batcher →
 //!   worker pool, calibration orchestration, metrics.
+//! - [`net`] — the network front door: std-only HTTP/1.1 ingress over the
+//!   coordinator (admission control, graceful drain) plus the socket-level
+//!   load-generation harness.
 //! - [`harness`] — experiment drivers regenerating every paper table/figure.
 
 pub mod cmsis;
@@ -46,6 +49,7 @@ pub mod eval;
 pub mod harness;
 pub mod mcu;
 pub mod models;
+pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod runtime;

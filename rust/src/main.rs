@@ -4,31 +4,43 @@
 //! pdq info                          # artifact + model inventory
 //! pdq eval    --model M --mode ...  # single evaluation run
 //! pdq experiment <table1|table2|fig3|fig4|fig5|ablate-sigma|ablate-interval|memory|all>
-//! pdq serve   --requests N          # run the serving coordinator demo
+//! pdq serve   --requests N          # in-process serving coordinator demo
+//! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
+//!             [--synthetic] [--workers N] [--max-batch N] [--deadline-us N]
+//!             [--max-queue N] [--http-threads N]
+//! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
+//!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
+//!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
 //! pdq mcu-latency                   # Fig. 3 latency model sweep
 //! ```
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use pdq::coordinator::calibrate::{
-    build_int8_variant, build_quant_variant, calibration_images, ExecKind, CALIB_SIZE,
+    build_int8_variant, build_quant_variant, calibration_images, demo_model, ExecKind, CALIB_SIZE,
 };
+use pdq::coordinator::batcher::BatchPolicy;
 use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
 use pdq::data::shapes;
 use pdq::harness::eval_runner::{evaluate, EvalProtocol};
 use pdq::harness::experiments::{self, ExpOptions};
 use pdq::models::zoo;
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::{signal, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
 use pdq::util::cli::{render_help, Args, Command};
+use pdq::util::table::Table;
 
 const COMMANDS: &[Command] = &[
     Command { name: "info", about: "artifact + model inventory", usage: "" },
     Command { name: "eval", about: "evaluate one model/mode/granularity", usage: "" },
     Command { name: "experiment", about: "regenerate a paper table/figure", usage: "" },
-    Command { name: "serve", about: "run the serving coordinator demo", usage: "" },
+    Command { name: "serve", about: "serving demo, or HTTP front door with --listen", usage: "" },
+    Command { name: "loadgen", about: "drive a front door over sockets", usage: "" },
     Command { name: "mcu-latency", about: "Fig. 3 MCU latency model", usage: "" },
 ];
 
@@ -45,6 +57,7 @@ fn main() {
         "eval" => cmd_eval(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
+        "loadgen" => cmd_loadgen(&args),
         "mcu-latency" => {
             cmd_mcu();
             Ok(())
@@ -177,19 +190,19 @@ fn cmd_mcu() {
     println!("{}", c.to_markdown());
 }
 
-fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
-    let n_requests = args.opt_usize("requests", 64);
-    let name = args.opt_or("model", "micro_resnet").to_string();
-    let manifest = zoo::load_manifest(artifacts)?;
-    let model = zoo::load_model(artifacts, &manifest, &name)?;
+/// Build the serve menu: FP32 + the three quant-emulation variants + the
+/// three true-int8 variants, all sharing one calibration set.
+fn serve_variants(
+    model: &pdq::models::Model,
+) -> anyhow::Result<Vec<(VariantKey, ExecKind)>> {
+    let name = model.name.clone();
     let calib = calibration_images(model.task, CALIB_SIZE);
-    // Three quantized variants + FP32.
     let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
         VariantKey { model: name.clone(), mode: ModeKey::Fp32 },
         ExecKind::Float(Arc::clone(&model.graph)),
     )];
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+        let ex = build_quant_variant(model, mode, Granularity::PerTensor, 1, &calib);
         variants.push((
             VariantKey { model: name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
             ExecKind::Quant(Box::new(ex)),
@@ -198,17 +211,68 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     // True-int8 variants: the same three requant strategies lowered onto
     // the integer-native engine (per-tensor weight scales).
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_int8_variant(&model, mode, Granularity::PerTensor, 1, &calib)
+        let ex = build_int8_variant(model, mode, Granularity::PerTensor, 1, &calib)
             .map_err(anyhow::Error::msg)?;
         variants.push((
             VariantKey { model: name.clone(), mode: ModeKey::Int8(mode.into(), GranKey::T) },
             ExecKind::Int8(Box::new(ex)),
         ));
     }
+    Ok(variants)
+}
+
+fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let n_requests = args.opt_usize("requests", 64);
+    let name = args.opt_or("model", "micro_resnet").to_string();
+    // --synthetic: a small seeded-random model, no `make artifacts` needed
+    // (what CI's serving smoke and quick local runs use).
+    let model = if args.flag("synthetic") {
+        demo_model(&name)
+    } else {
+        let manifest = zoo::load_manifest(artifacts)?;
+        zoo::load_model(artifacts, &manifest, &name)?
+    };
+    let config = ServerConfig {
+        workers_per_variant: args.opt_usize("workers", 2),
+        policy: BatchPolicy {
+            max_batch: args.opt_usize("max-batch", 8).max(1),
+            deadline: Duration::from_micros(args.opt_u64("deadline-us", 2000)),
+        },
+        max_queue_depth: args.opt_usize("max-queue", 32),
+    };
+    let task = model.task;
+    let variants = serve_variants(&model)?;
     let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
-    let server = Server::start(variants, ServerConfig::default());
+    let server = Server::start(variants, config);
+
+    // --listen: boot the network front door and serve until SIGTERM/SIGINT.
+    if let Some(addr) = args.opt("listen") {
+        signal::install_term_handler();
+        let fd_cfg = FrontDoorConfig {
+            addr: addr.to_string(),
+            conn_threads: args.opt_usize("http-threads", 16),
+            ..Default::default()
+        };
+        let front = FrontDoor::start(Arc::new(server), fd_cfg)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        println!("pdq-serve: listening on {}", front.url());
+        println!(
+            "pdq-serve: {} variants of {name}, {} workers/variant, max queue depth {}",
+            keys.len(),
+            config.workers_per_variant,
+            config.max_queue_depth,
+        );
+        for k in &keys {
+            println!("pdq-serve:   variant {}", k.wire());
+        }
+        let m = front.wait(); // blocks until SIGTERM/SIGINT, then drains
+        println!("pdq-serve: drained. metrics: {}", m.to_json().to_string_compact());
+        return Ok(());
+    }
+
+    // In-process demo: a mixed request stream through `submit`.
     println!("serving {} variants of {name}; {n_requests} requests", keys.len());
-    let samples = shapes::dataset(model.task, shapes::Split::Test, n_requests);
+    let samples = shapes::dataset(task, shapes::Split::Test, n_requests);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = samples
         .iter()
@@ -229,5 +293,63 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         m.mean_batch()
     );
     println!("metrics: {}", m.to_json().to_string_compact());
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let target = args
+        .opt("target")
+        .ok_or_else(|| anyhow::anyhow!("--target HOST:PORT is required"))?
+        .to_string();
+    let rps = args.opt_f64("rps", 100.0);
+    let mode = match args.opt_or("mode", "closed") {
+        "open" => LoadMode::Open { rps },
+        "closed" => LoadMode::Closed,
+        other => anyhow::bail!("--mode {other:?} (want open|closed)"),
+    };
+    let variants: Vec<String> = args
+        .opt("variants")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+        .unwrap_or_default();
+    let cfg = LoadgenConfig {
+        target,
+        mode,
+        concurrency: args.opt_usize("concurrency", 4),
+        duration: Duration::from_secs_f64(args.opt_f64("duration-s", 5.0)),
+        variants,
+        seed: args.opt_u64("seed", 0x10AD),
+        backoff_cap: Duration::from_millis(args.opt_u64("backoff-ms", 50)),
+    };
+    let report = loadgen::run(&cfg).map_err(anyhow::Error::msg)?;
+    let mut table = Table::new(&[
+        "variant", "sent", "ok", "429", "err", "drop", "p50 ms", "p95 ms", "p99 ms",
+    ]);
+    for v in report.per_variant.iter().chain(std::iter::once(&report.total)) {
+        table.add_row(vec![
+            v.wire.clone(),
+            v.sent.to_string(),
+            v.ok.to_string(),
+            v.rejected.to_string(),
+            v.failed.to_string(),
+            v.dropped.to_string(),
+            format!("{:.2}", v.p50_us / 1e3),
+            format!("{:.2}", v.p95_us / 1e3),
+            format!("{:.2}", v.p99_us / 1e3),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "mode {} — {:.1} req/s achieved over {:.1}s (offered: {})",
+        report.mode,
+        report.achieved_rps,
+        report.duration_s,
+        report.offered_rps.map(|r| format!("{r:.1} rps")).unwrap_or_else(|| "closed loop".into()),
+    );
+    let out = args.opt_or("out", "BENCH_serving.json");
+    report.save(out)?;
+    println!("report written to {out}");
+    if args.flag("expect-zero-drops") && report.total.dropped > 0 {
+        anyhow::bail!("{} requests got no HTTP response", report.total.dropped);
+    }
     Ok(())
 }

@@ -1,0 +1,151 @@
+//! Per-variant admission control: a bounded in-flight gate.
+//!
+//! The coordinator's mpsc queues are unbounded, so under overload the server
+//! would buffer arbitrarily many requests and every latency percentile would
+//! grow without bound. `Admission` bounds the number of requests *admitted
+//! but not yet answered* per variant; past the limit the caller sheds load
+//! (the front door answers `429` with a `Retry-After` hint) instead of
+//! queueing. A [`Permit`] is RAII: dropping it — after the response was
+//! delivered, or on any early-exit path — frees the slot.
+//!
+//! The key set is fixed at construction (one slot counter per registered
+//! variant), so steady-state acquisition is a lock-free CAS on an atomic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Why admission was denied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    UnknownKey,
+    /// The variant is at its in-flight limit; `depth` is the limit that was
+    /// hit (callers turn this into a retry hint).
+    Full { depth: usize },
+}
+
+/// An admitted request's slot. Freed on drop.
+pub struct Permit {
+    slot: Arc<AtomicUsize>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.slot.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The gate. `limit == 0` means unbounded (depth is still tracked, so
+/// `/metrics` can report it).
+pub struct Admission<K: Ord> {
+    limit: usize,
+    slots: BTreeMap<K, Arc<AtomicUsize>>,
+}
+
+impl<K: Ord + Clone> Admission<K> {
+    pub fn new(limit: usize, keys: impl IntoIterator<Item = K>) -> Self {
+        let slots =
+            keys.into_iter().map(|k| (k, Arc::new(AtomicUsize::new(0)))).collect();
+        Self { limit, slots }
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Try to admit one request for `key`.
+    pub fn try_acquire(&self, key: &K) -> Result<Permit, AdmissionError> {
+        let slot = self.slots.get(key).ok_or(AdmissionError::UnknownKey)?;
+        if self.limit == 0 {
+            slot.fetch_add(1, Ordering::AcqRel);
+            return Ok(Permit { slot: Arc::clone(slot) });
+        }
+        let mut cur = slot.load(Ordering::Acquire);
+        loop {
+            if cur >= self.limit {
+                return Err(AdmissionError::Full { depth: self.limit });
+            }
+            match slot.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Ok(Permit { slot: Arc::clone(slot) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current in-flight depth for `key` (0 for unknown keys).
+    pub fn depth(&self, key: &K) -> usize {
+        self.slots.get(key).map(|s| s.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Snapshot of every (key, depth) pair — the `/metrics` gauge source.
+    pub fn depths(&self) -> Vec<(K, usize)> {
+        self.slots.iter().map(|(k, s)| (k.clone(), s.load(Ordering::Acquire))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_acquire_release() {
+        let a: Admission<String> = Admission::new(2, ["v".to_string()]);
+        let p1 = a.try_acquire(&"v".to_string()).unwrap();
+        let p2 = a.try_acquire(&"v".to_string()).unwrap();
+        assert_eq!(a.depth(&"v".to_string()), 2);
+        assert_eq!(
+            a.try_acquire(&"v".to_string()).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
+        drop(p1);
+        assert_eq!(a.depth(&"v".to_string()), 1);
+        let p3 = a.try_acquire(&"v".to_string()).unwrap();
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.depth(&"v".to_string()), 0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let a: Admission<String> = Admission::new(1, ["v".to_string()]);
+        assert_eq!(a.try_acquire(&"ghost".to_string()).unwrap_err(), AdmissionError::UnknownKey);
+        assert_eq!(a.depth(&"ghost".to_string()), 0);
+    }
+
+    #[test]
+    fn zero_limit_is_unbounded_but_counted() {
+        let a: Admission<u32> = Admission::new(0, [7u32]);
+        let permits: Vec<Permit> = (0..100).map(|_| a.try_acquire(&7).unwrap()).collect();
+        assert_eq!(a.depth(&7), 100);
+        drop(permits);
+        assert_eq!(a.depth(&7), 0);
+    }
+
+    #[test]
+    fn concurrent_acquire_never_exceeds_limit() {
+        let a: Arc<Admission<u8>> = Arc::new(Admission::new(4, [0u8]));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let a = Arc::clone(&a);
+            let peak = Arc::clone(&peak);
+            joins.push(std::thread::spawn(move || {
+                let mut admitted = 0usize;
+                for _ in 0..1000 {
+                    if let Ok(p) = a.try_acquire(&0) {
+                        admitted += 1;
+                        let d = a.depth(&0);
+                        peak.fetch_max(d, Ordering::SeqCst);
+                        assert!(d <= 4, "depth {d} exceeded limit");
+                        drop(p);
+                    }
+                }
+                admitted
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert!(total > 0, "at least some acquisitions must succeed");
+        assert_eq!(a.depth(&0), 0);
+        assert!(peak.load(Ordering::SeqCst) <= 4);
+    }
+}

@@ -1,0 +1,406 @@
+//! The HTTP front door: a `TcpListener` acceptor feeding a fixed connection
+//! pool, routing onto the coordinator.
+//!
+//! Endpoints:
+//! - `POST /v1/infer` — binary tensor body ([`crate::net::wire`]); admitted
+//!   through [`Server::try_submit`], shed with `429` + `Retry-After` when
+//!   the variant is at its in-flight limit.
+//! - `GET /v1/variants` — the served (variant, input shape) catalog.
+//! - `GET /healthz` — liveness (+ `"draining"` once shutdown began).
+//! - `GET /metrics` — JSON; `?format=prometheus` for text exposition.
+//!
+//! Graceful drain (SIGTERM via [`crate::net::signal`], or
+//! [`FrontDoor::shutdown`]): (1) the shutdown flag stops the accept loop
+//! and tells keep-alive handlers to close after their current request;
+//! (2) the connection pool joins, which drains every accepted connection —
+//! each in-flight request still receives its HTTP response; (3) only then
+//! does the coordinator drain, executing everything queued and joining the
+//! workers. Ordering guarantees every admitted request is answered before
+//! any worker exits.
+//!
+//! The accept loop uses a nonblocking listener polled at 5 ms: accepted
+//! sockets are handed off immediately under load, and the loop notices the
+//! shutdown flag without needing a self-connect wakeup.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{Server, SubmitError};
+use crate::net::http::{
+    HttpRequest, HttpResponse, ReadOutcome, RequestReader, DEFAULT_MAX_BODY_BYTES,
+};
+use crate::net::signal;
+use crate::net::threadpool::ThreadPool;
+use crate::net::wire;
+use crate::util::json::Json;
+
+/// Front-door configuration.
+#[derive(Clone, Debug)]
+pub struct FrontDoorConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Connection-handler pool size — the hard ceiling on concurrently
+    /// served HTTP requests (admission bounds per-variant depth beneath it).
+    pub conn_threads: usize,
+    pub max_body_bytes: usize,
+    /// How long a handler waits for the coordinator's reply before `504`.
+    pub response_timeout: Duration,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: 16,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            response_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Socket read-timeout tick; the granularity at which connection handlers
+/// poll the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(500);
+/// Keep-alive idle budget (ticks) before a silent connection is closed.
+const IDLE_TICKS_MAX: u32 = 20;
+/// Budget (ticks) for a peer to finish sending one request.
+const MID_TICKS_MAX: u32 = 20;
+
+struct Ctx {
+    server: Arc<Server>,
+    shutdown: AtomicBool,
+    started: Instant,
+    max_body: usize,
+    response_timeout: Duration,
+}
+
+/// The running front door.
+pub struct FrontDoor {
+    ctx: Arc<Ctx>,
+    local_addr: SocketAddr,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl FrontDoor {
+    /// Bind and start accepting on top of a running coordinator.
+    pub fn start(server: Arc<Server>, cfg: FrontDoorConfig) -> std::io::Result<FrontDoor> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let ctx = Arc::new(Ctx {
+            server,
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            max_body: cfg.max_body_bytes,
+            response_timeout: cfg.response_timeout,
+        });
+        let pool = ThreadPool::new("pdq-http", cfg.conn_threads);
+        let accept_ctx = Arc::clone(&ctx);
+        let accept_handle = std::thread::Builder::new()
+            .name("pdq-accept".into())
+            .spawn(move || accept_loop(listener, pool, accept_ctx))?;
+        Ok(FrontDoor { ctx, local_addr, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.local_addr)
+    }
+
+    /// Idempotent graceful drain (see module docs for the ordering).
+    fn begin_drain(&mut self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join(); // joins the connection pool too
+        }
+        self.ctx.server.drain();
+    }
+
+    /// Drain now and return the final metrics.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.begin_drain();
+        self.ctx.server.metrics_arc()
+    }
+
+    /// Block until shutdown is requested — SIGTERM/SIGINT (when
+    /// [`signal::install_term_handler`] was called) or a programmatic
+    /// [`signal::request_term`] — then drain and return the final metrics.
+    pub fn wait(mut self) -> Arc<Metrics> {
+        while !self.ctx.shutdown.load(Ordering::SeqCst) && !signal::term_requested() {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.begin_drain();
+        self.ctx.server.metrics_arc()
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        self.begin_drain();
+    }
+}
+
+fn accept_loop(listener: TcpListener, pool: ThreadPool, ctx: Arc<Ctx>) {
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_ctx = Arc::clone(&ctx);
+                if pool.execute(move || handle_connection(stream, conn_ctx)).is_err() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // Transient accept errors (EMFILE, ECONNABORTED): back off.
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Every accepted-but-unhandled connection still gets served.
+    pool.join();
+}
+
+fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
+    let _ = stream.set_nodelay(true);
+    // Some platforms let accepted sockets inherit the listener's
+    // O_NONBLOCK; force blocking so the read-timeout tick is the only
+    // WouldBlock source (a nonblocking read would spin the idle budget).
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_read_timeout(Some(READ_TICK)).is_err()
+    {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = RequestReader::new(read_half, ctx.max_body);
+    let mut out = stream;
+    let mut idle_ticks = 0u32;
+    let mut mid_ticks = 0u32;
+    loop {
+        match reader.read_request() {
+            Ok(ReadOutcome::Request(req)) => {
+                idle_ticks = 0;
+                mid_ticks = 0;
+                let close = req.wants_close() || ctx.shutdown.load(Ordering::SeqCst);
+                let resp = route_request(&req, &ctx)
+                    .header("Connection", if close { "close" } else { "keep-alive" });
+                if resp.write_to(&mut out).is_err() || close {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Eof) => return,
+            Ok(ReadOutcome::Timeout { idle: true }) => {
+                idle_ticks += 1;
+                if ctx.shutdown.load(Ordering::SeqCst) || idle_ticks > IDLE_TICKS_MAX {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Timeout { idle: false }) => {
+                // Peer is mid-request: keep reading (even during drain — an
+                // accepted request gets its response) up to the budget.
+                mid_ticks += 1;
+                if mid_ticks > MID_TICKS_MAX {
+                    let _ = HttpResponse::error(408, "timed out mid-request")
+                        .header("Connection", "close")
+                        .write_to(&mut out);
+                    return;
+                }
+            }
+            Err(e) => {
+                if let Some(status) = e.status() {
+                    let _ = HttpResponse::error(status, &e.to_string())
+                        .header("Connection", "close")
+                        .write_to(&mut out);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn route_request(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(ctx),
+        ("GET", "/metrics") => metrics(req, ctx),
+        ("GET", "/v1/variants") => variants(ctx),
+        ("POST", "/v1/infer") => infer(req, ctx),
+        ("GET", "/v1/infer") => HttpResponse::error(405, "use POST /v1/infer"),
+        _ => HttpResponse::error(404, &format!("no route {} {}", req.method, req.path)),
+    }
+}
+
+fn healthz(ctx: &Ctx) -> HttpResponse {
+    let draining = ctx.shutdown.load(Ordering::SeqCst);
+    let mut o = Json::obj();
+    o.set("status", if draining { "draining" } else { "ok" })
+        .set("uptime_s", ctx.started.elapsed().as_secs_f64())
+        .set("variants", ctx.server.catalog().len());
+    HttpResponse::json(200, &o)
+}
+
+fn metrics(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    if req.query_param("format") == Some("prometheus") {
+        let mut body = ctx.server.metrics().to_prometheus();
+        body.push_str("# HELP pdq_inflight Admitted requests not yet answered.\n");
+        body.push_str("# TYPE pdq_inflight gauge\n");
+        for (key, depth) in ctx.server.admission_depths() {
+            body.push_str(&format!("pdq_inflight{{variant=\"{}\"}} {depth}\n", key.wire()));
+        }
+        HttpResponse::text(200, "text/plain; version=0.0.4", body)
+    } else {
+        let mut o = ctx.server.metrics().to_json();
+        let mut inflight = Json::obj();
+        for (key, depth) in ctx.server.admission_depths() {
+            inflight.set(&key.wire(), depth);
+        }
+        o.set("in_flight", inflight).set("max_queue_depth", ctx.server.max_queue_depth());
+        HttpResponse::json(200, &o)
+    }
+}
+
+fn variants(ctx: &Ctx) -> HttpResponse {
+    let list: Vec<Json> = ctx
+        .server
+        .catalog()
+        .iter()
+        .map(|(key, shape)| {
+            let mut v = Json::obj();
+            v.set("variant", key.wire()).set("label", key.label()).set(
+                "input_shape",
+                Json::Arr(shape.dims().iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            v
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("variants", Json::Arr(list))
+        .set("max_queue_depth", ctx.server.max_queue_depth());
+    HttpResponse::json(200, &o)
+}
+
+fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    let wire_req = match wire::decode_infer_request(&req.body) {
+        Ok(r) => r,
+        Err(e) => return HttpResponse::error(400, &e),
+    };
+    // Validate the shape at the boundary: the executors assert on shape
+    // mismatch, and a panicking worker must never be reachable from the
+    // network.
+    if let Some((_, want)) =
+        ctx.server.catalog().iter().find(|(k, _)| *k == wire_req.variant)
+    {
+        if wire_req.image.shape() != want {
+            return HttpResponse::error(
+                400,
+                &format!("variant expects input shape {want}, got {}", wire_req.image.shape()),
+            );
+        }
+    }
+    match ctx.server.try_submit(wire_req.variant, wire_req.id, wire_req.image) {
+        Ok((rx, permit)) => match rx.recv_timeout(ctx.response_timeout) {
+            Ok(resp) => {
+                let body = wire::encode_infer_response(
+                    resp.id,
+                    resp.latency.as_micros() as u64,
+                    &resp.outputs,
+                );
+                drop(permit); // slot freed only once the response is in hand
+                HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
+            }
+            Err(_) => {
+                // The job is still queued/executing even though this client
+                // gave up. Freeing the slot now would re-admit new requests
+                // on top of the abandoned work, un-bounding the very depth
+                // admission bounds — so a reaper holds the permit until the
+                // worker actually finishes (or the channel dies at drain).
+                std::thread::spawn(move || {
+                    let _ = rx.recv();
+                    drop(permit);
+                });
+                HttpResponse::error(504, "execution timed out")
+            }
+        },
+        Err(SubmitError::UnknownVariant(v)) => {
+            HttpResponse::error(404, &format!("unknown variant {v:?}"))
+        }
+        Err(SubmitError::Overloaded { depth }) => {
+            // Retry hint: roughly one p50 latency per queued slot ahead.
+            // Histogram walk, not the reservoir sort — the shed path must
+            // stay cheap precisely when the server is saturated.
+            let p50_us = ctx.server.metrics().latency_p50_hint_us();
+            let est_ms =
+                if p50_us > 0.0 { (p50_us as f64 / 1000.0) * depth as f64 } else { 25.0 };
+            let ms = est_ms.clamp(1.0, 5000.0).ceil() as u64;
+            HttpResponse::error(429, "variant over its in-flight limit; retry later")
+                .header("Retry-After", &ms.div_ceil(1000).max(1).to_string())
+                .header("X-PDQ-Retry-After-Ms", &ms.to_string())
+        }
+        Err(SubmitError::Draining) => HttpResponse::error(503, "server is draining"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{ModeKey, VariantKey};
+    use crate::coordinator::ServerConfig;
+    use crate::coordinator::calibrate::ExecKind;
+    use crate::nn::Graph;
+    use crate::tensor::{Shape, Tensor};
+
+    fn tiny_server() -> Arc<Server> {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+        Arc::new(Server::start(
+            vec![(key, ExecKind::Float(Arc::new(g)))],
+            ServerConfig::default(),
+        ))
+    }
+
+    #[test]
+    fn boots_serves_basics_and_drains() {
+        let fd = FrontDoor::start(tiny_server(), FrontDoorConfig::default()).unwrap();
+        let addr = fd.local_addr().to_string();
+        let mut client = wire::Client::new(&addr);
+
+        let health = client.get("/healthz").unwrap();
+        assert_eq!(health.status, 200);
+        let j = Json::parse(std::str::from_utf8(&health.body).unwrap()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+
+        let vars = client.get("/v1/variants").unwrap();
+        let j = Json::parse(std::str::from_utf8(&vars.body).unwrap()).unwrap();
+        let list = j.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("variant").unwrap().as_str(), Some("m|fp32"));
+
+        let infer = {
+            let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+            let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, -2.0, 3.0, -4.0]);
+            client.post_infer(&key, 9, &img).unwrap()
+        };
+        match infer {
+            wire::InferOutcome::Ok(resp) => {
+                assert_eq!(resp.id, 9);
+                assert_eq!(resp.outputs[0].data(), &[1.0, 0.0, 3.0, 0.0], "relu output");
+            }
+            _ => panic!("infer must succeed"),
+        }
+
+        let missing = client.get("/no/such/route").unwrap();
+        assert_eq!(missing.status, 404);
+
+        let metrics = fd.shutdown();
+        assert_eq!(metrics.responses(), 1);
+    }
+}

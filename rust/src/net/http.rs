@@ -1,0 +1,595 @@
+//! Minimal HTTP/1.1 message framing (std-only; the offline registry has no
+//! hyper).
+//!
+//! Scope: exactly what the PDQ front door and load generator need —
+//! request-line + headers + `Content-Length` bodies, keep-alive, and
+//! resumable reads over sockets with a read timeout. Out of scope (rejected
+//! or ignored, never mis-parsed): chunked transfer encoding (`501`),
+//! `Expect: 100-continue` (header ignored; curl falls back after its 1s
+//! expect timeout), trailers, and HTTP/2.
+//!
+//! The parser is *incremental*: [`RequestReader`] accumulates raw bytes and
+//! yields [`ReadOutcome::Timeout`] when the underlying socket read times
+//! out, preserving everything read so far. That lets a connection handler
+//! poll a shutdown flag between requests without dropping a client that is
+//! mid-way through sending one.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Json;
+
+/// Hard cap on the request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Default cap on request bodies (tensors for the tiny zoo are ~12 KB;
+/// 16 MB leaves room for batched payloads without letting a client OOM us).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path component of the target, without the query string.
+    pub path: String,
+    /// Raw query string (after `?`), if any.
+    pub query: Option<String>,
+    pub version: String,
+    /// Header (name, value) pairs; names are lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == want).map(|(_, v)| v.as_str())
+    }
+
+    /// `key=value` lookup in the query string (no percent-decoding; the PDQ
+    /// endpoints only use bare tokens like `format=prometheus`).
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        let q = self.query.as_deref()?;
+        q.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+
+    /// Whether the connection should close after this exchange.
+    pub fn wants_close(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => v.eq_ignore_ascii_case("close"),
+            // HTTP/1.1 defaults to keep-alive; anything older closes.
+            None => self.version != "HTTP/1.1",
+        }
+    }
+}
+
+/// Parse / framing errors, each mapped to the status the server should
+/// answer with (`None` = the connection is unusable; just close it).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, header or length field → 400.
+    BadRequest(String),
+    /// Head or body over the configured limit → 413.
+    TooLarge(String),
+    /// Valid HTTP we deliberately don't speak (chunked bodies) → 501.
+    Unsupported(String),
+    /// Peer closed mid-message.
+    UnexpectedEof,
+    /// Transport error.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::BadRequest(_) => Some(400),
+            HttpError::TooLarge(_) => Some(413),
+            HttpError::Unsupported(_) => Some(501),
+            HttpError::UnexpectedEof | HttpError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::TooLarge(m) => write!(f, "too large: {m}"),
+            HttpError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            HttpError::UnexpectedEof => write!(f, "peer closed mid-message"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+/// What one `read_request` call produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(HttpRequest),
+    /// Clean EOF on a request boundary (keep-alive peer went away).
+    Eof,
+    /// The socket read timed out. `idle` is true when no bytes of the next
+    /// request have arrived yet — safe to close the connection or poll a
+    /// shutdown flag; false means the peer is mid-request and the caller
+    /// should call `read_request` again to resume.
+    Timeout { idle: bool },
+}
+
+/// Incremental request reader over any `Read` (a `TcpStream` with a read
+/// timeout in production; in-memory fakes in tests). All partial state
+/// lives in `buf`, so a timed-out read can be resumed loss-free.
+pub struct RequestReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+    max_body: usize,
+    /// How far `buf` has already been scanned for the head terminator
+    /// (re-scans restart 3 bytes back to catch a straddling `\r\n\r\n`),
+    /// so accumulation is O(n), not O(n²).
+    scanned: usize,
+    /// Cached head end once found — body accumulation never re-scans.
+    head_end: Option<usize>,
+}
+
+impl<R: Read> RequestReader<R> {
+    pub fn new(r: R, max_body: usize) -> Self {
+        Self { r, buf: Vec::with_capacity(4096), max_body, scanned: 0, head_end: None }
+    }
+
+    /// Read (or resume reading) one request.
+    pub fn read_request(&mut self) -> Result<ReadOutcome, HttpError> {
+        loop {
+            if self.head_end.is_none() {
+                let start = self.scanned.saturating_sub(3);
+                self.head_end = find_double_crlf(&self.buf[start..]).map(|i| start + i);
+                self.scanned = self.buf.len();
+            }
+            if let Some(head_len) = self.head_end {
+                if head_len > MAX_HEAD_BYTES {
+                    return Err(HttpError::TooLarge("request head exceeds 16 KiB".into()));
+                }
+                // Head is complete; re-parsing it on each resume is cheap
+                // (heads are ≤ 16 KB) and keeps the resume state small.
+                let (method, path, query, version, headers) = parse_head(&self.buf[..head_len])?;
+                if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+                    return Err(HttpError::Unsupported("chunked bodies not supported".into()));
+                }
+                let clen = content_length(&headers)?;
+                if clen > self.max_body {
+                    return Err(HttpError::TooLarge(format!(
+                        "body of {clen} bytes exceeds limit {}",
+                        self.max_body
+                    )));
+                }
+                if self.buf.len() >= head_len + clen {
+                    let body = self.buf[head_len..head_len + clen].to_vec();
+                    self.buf.drain(..head_len + clen);
+                    // Any leftover bytes belong to a pipelined next request;
+                    // rescanning them from 0 is cheap (they are ≤ one head).
+                    self.scanned = 0;
+                    self.head_end = None;
+                    return Ok(ReadOutcome::Request(HttpRequest {
+                        method,
+                        path,
+                        query,
+                        version,
+                        headers,
+                        body,
+                    }));
+                }
+            } else if self.buf.len() > MAX_HEAD_BYTES {
+                return Err(HttpError::TooLarge("request head exceeds 16 KiB".into()));
+            }
+            // Need more bytes.
+            match fill_once(&mut self.r, &mut self.buf)? {
+                Fill::Data => {}
+                Fill::Eof => {
+                    return if self.buf.is_empty() {
+                        Ok(ReadOutcome::Eof)
+                    } else {
+                        Err(HttpError::UnexpectedEof)
+                    }
+                }
+                Fill::Timeout => return Ok(ReadOutcome::Timeout { idle: self.buf.is_empty() }),
+            }
+        }
+    }
+}
+
+/// One read step, shared by the request and response readers so buffer /
+/// EOF / Interrupted handling lives in exactly one place.
+enum Fill {
+    Data,
+    Eof,
+    Timeout,
+}
+
+fn fill_once<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<Fill, HttpError> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match r.read(&mut chunk) {
+            Ok(0) => return Ok(Fill::Eof),
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                return Ok(Fill::Data);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(Fill::Timeout)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+/// Index just past the `\r\n\r\n` terminating the head, if present.
+fn find_double_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+type Head = (String, String, Option<String>, String, Vec<(String, String)>);
+
+fn parse_head(bytes: &[u8]) -> Result<Head, HttpError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| HttpError::BadRequest(format!("non-utf8 head: {e}")))?;
+    let mut lines = text.split("\r\n");
+    let request_line =
+        lines.next().ok_or_else(|| HttpError::BadRequest("empty head".into()))?;
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::BadRequest("missing method".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("missing request target".into()))?;
+    let version = parts
+        .next()
+        .filter(|v| v.starts_with("HTTP/"))
+        .ok_or_else(|| HttpError::BadRequest("missing HTTP version".into()))?
+        .to_string();
+    if parts.next().is_some() {
+        return Err(HttpError::BadRequest("malformed request line".into()));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    let headers = parse_header_fields(lines)?;
+    Ok((method, path, query, version, headers))
+}
+
+/// Header lines → lowercased (name, value) pairs; stops at the blank line.
+/// Shared by the request parser and the client-side response reader so
+/// framing fixes apply to both.
+fn parse_header_fields<'a>(
+    lines: impl Iterator<Item = &'a str>,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break; // blank line before the (already-excluded) body
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadRequest(format!("malformed header {line:?}")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    Ok(headers)
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
+    let mut found: Option<usize> = None;
+    for (k, v) in headers {
+        if k == "content-length" {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("bad content-length {v:?}")))?;
+            // RFC 9112 §6.3: conflicting lengths desync keep-alive framing
+            // (request smuggling); reject rather than let the first win.
+            if matches!(found, Some(prev) if prev != n) {
+                return Err(HttpError::BadRequest("conflicting content-length headers".into()));
+            }
+            found = Some(n);
+        }
+    }
+    Ok(found.unwrap_or(0))
+}
+
+/// An HTTP response under construction.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn new(status: u16) -> Self {
+        Self { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: u16, body: &Json) -> Self {
+        Self::bytes(status, "application/json", body.to_string_compact().into_bytes())
+    }
+
+    pub fn text(status: u16, content_type: &str, body: String) -> Self {
+        Self::bytes(status, content_type, body.into_bytes())
+    }
+
+    pub fn bytes(status: u16, content_type: &str, body: Vec<u8>) -> Self {
+        let mut r = Self::new(status);
+        r.headers.push(("Content-Type".into(), content_type.into()));
+        r.body = body;
+        r
+    }
+
+    /// A JSON `{"error": ...}` body.
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut o = Json::obj();
+        o.set("error", msg);
+        Self::json(status, &o)
+    }
+
+    /// Builder-style extra header.
+    pub fn header(mut self, name: &str, value: &str) -> Self {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Serialize to the wire; `Content-Length` is added automatically.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason(self.status));
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", self.body.len()));
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the statuses the front door emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// A parsed HTTP response (client side: the load generator and tests).
+#[derive(Clone, Debug)]
+pub struct HttpResponseParts {
+    pub status: u16,
+    /// Lowercased header names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponseParts {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == want).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Blocking read of one full response (status line + headers +
+/// `Content-Length` body). Client side only — no timeout resumption.
+pub fn read_response<R: Read>(r: &mut R, max_body: usize) -> Result<HttpResponseParts, HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    loop {
+        if let Some(head_len) = find_double_crlf(&buf) {
+            let text = std::str::from_utf8(&buf[..head_len])
+                .map_err(|e| HttpError::BadRequest(format!("non-utf8 head: {e}")))?;
+            let mut lines = text.split("\r\n");
+            let status_line =
+                lines.next().ok_or_else(|| HttpError::BadRequest("empty head".into()))?;
+            // "HTTP/1.1 200 OK"
+            let mut parts = status_line.splitn(3, ' ');
+            let _version = parts
+                .next()
+                .filter(|v| v.starts_with("HTTP/"))
+                .ok_or_else(|| HttpError::BadRequest("bad status line".into()))?;
+            let status: u16 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| HttpError::BadRequest("bad status code".into()))?;
+            let headers = parse_header_fields(lines)?;
+            let clen = content_length(&headers)?;
+            if clen > max_body {
+                return Err(HttpError::TooLarge(format!("response body {clen} bytes")));
+            }
+            while buf.len() < head_len + clen {
+                fill_blocking(r, &mut buf)?;
+            }
+            let body = buf[head_len..head_len + clen].to_vec();
+            return Ok(HttpResponseParts { status, headers, body });
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::TooLarge("response head exceeds 16 KiB".into()));
+        }
+        fill_blocking(r, &mut buf)?;
+    }
+}
+
+/// [`fill_once`] for the blocking client side: EOF mid-message and read
+/// timeouts are both hard errors.
+fn fill_blocking<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<(), HttpError> {
+    match fill_once(r, buf)? {
+        Fill::Data => Ok(()),
+        Fill::Eof => Err(HttpError::UnexpectedEof),
+        Fill::Timeout => Err(HttpError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "read timed out",
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn reader(bytes: &[u8]) -> RequestReader<Cursor<Vec<u8>>> {
+        RequestReader::new(Cursor::new(bytes.to_vec()), DEFAULT_MAX_BODY_BYTES)
+    }
+
+    #[test]
+    fn parses_get_request() {
+        let mut r = reader(b"GET /healthz?format=prometheus HTTP/1.1\r\nHost: x\r\n\r\n");
+        let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!("want request") };
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.query_param("format"), Some("prometheus"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close());
+        // Next read: clean EOF.
+        assert!(matches!(r.read_request().unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn parses_post_with_body_and_keepalive_pipeline() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdGET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = reader(raw);
+        let ReadOutcome::Request(a) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(a.method, "POST");
+        assert_eq!(a.body, b"abcd");
+        let ReadOutcome::Request(b) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(b.method, "GET");
+        assert!(b.wants_close());
+    }
+
+    /// A Read that alternates data chunks with WouldBlock, exercising the
+    /// resume path a socket read timeout takes.
+    struct Stutter {
+        chunks: Vec<Option<Vec<u8>>>, // None = WouldBlock
+        i: usize,
+    }
+    impl Read for Stutter {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.i >= self.chunks.len() {
+                return Ok(0);
+            }
+            let item = self.chunks[self.i].clone();
+            self.i += 1;
+            match item {
+                None => Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "timeout")),
+                Some(c) => {
+                    let n = c.len().min(out.len());
+                    out[..n].copy_from_slice(&c[..n]);
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_mid_request_resumes_without_losing_bytes() {
+        let s = Stutter {
+            chunks: vec![
+                None, // idle timeout before anything arrived
+                Some(b"POST /x HTTP/1.1\r\nContent-Le".to_vec()),
+                None, // timeout mid-head
+                Some(b"ngth: 3\r\n\r\nab".to_vec()),
+                None, // timeout mid-body
+                Some(b"c".to_vec()),
+            ],
+            i: 0,
+        };
+        let mut r = RequestReader::new(s, DEFAULT_MAX_BODY_BYTES);
+        assert!(matches!(r.read_request().unwrap(), ReadOutcome::Timeout { idle: true }));
+        assert!(matches!(r.read_request().unwrap(), ReadOutcome::Timeout { idle: false }));
+        assert!(matches!(r.read_request().unwrap(), ReadOutcome::Timeout { idle: false }));
+        let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(req.body, b"abc");
+    }
+
+    #[test]
+    fn rejects_bad_and_oversized_input() {
+        assert!(matches!(
+            reader(b"BROKEN\r\n\r\n").read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            reader(b"GET / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n").read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            reader(b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").read_request(),
+            Err(HttpError::Unsupported(_))
+        ));
+        // Conflicting Content-Length values are a smuggling vector: reject.
+        assert!(matches!(
+            reader(b"POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 5\r\n\r\nhello")
+                .read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        // Identical duplicates frame normally.
+        let mut dup = reader(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok");
+        let ReadOutcome::Request(req) = dup.read_request().unwrap() else { panic!() };
+        assert_eq!(req.body, b"ok");
+        let huge = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES + 1));
+        assert!(matches!(
+            reader(huge.as_bytes()).read_request(),
+            Err(HttpError::TooLarge(_))
+        ));
+        let mut small = RequestReader::new(
+            Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n".to_vec()),
+            10,
+        );
+        assert!(matches!(small.read_request(), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn truncated_request_is_unexpected_eof() {
+        let mut r = reader(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
+        assert!(matches!(r.read_request(), Err(HttpError::UnexpectedEof)));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut o = Json::obj();
+        o.set("status", "ok");
+        let resp = HttpResponse::json(200, &o).header("Retry-After", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: "));
+        let parts = read_response(&mut Cursor::new(wire), DEFAULT_MAX_BODY_BYTES).unwrap();
+        assert_eq!(parts.status, 200);
+        assert_eq!(parts.header("retry-after"), Some("1"));
+        assert_eq!(Json::parse(std::str::from_utf8(&parts.body).unwrap()).unwrap(), o);
+    }
+
+    #[test]
+    fn reason_phrases_cover_front_door_statuses() {
+        for s in [200u16, 400, 404, 405, 408, 413, 429, 500, 501, 503, 504] {
+            assert_ne!(reason(s), "Unknown", "status {s}");
+        }
+        assert_eq!(reason(999), "Unknown");
+    }
+}

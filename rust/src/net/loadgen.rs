@@ -1,0 +1,382 @@
+//! Socket-level load generation against the front door.
+//!
+//! Two disciplines:
+//! - **Closed loop** — `concurrency` workers, each issuing the next request
+//!   the moment the previous response arrives. Measures capacity: the
+//!   achieved throughput IS the service rate at that concurrency.
+//! - **Open loop** — requests fire on a fixed global schedule (`rps`),
+//!   partitioned round-robin across the workers, *regardless* of whether
+//!   earlier responses came back. Latency is measured from the request's
+//!   **scheduled** start, so queueing delay caused by a slow server counts
+//!   against it (the standard coordinated-omission correction; a worker
+//!   that falls behind its slice sends late and the lateness is in the
+//!   number). Measures behavior at a chosen offered load — this is where
+//!   429 shedding and tail latency under overload become visible.
+//!
+//! Targets are discovered from `GET /v1/variants`, inputs are seeded
+//! uniform noise per variant, and the report lands in `BENCH_serving.json`
+//! (schema `pdq-serving-v1`).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::VariantKey;
+use crate::net::wire::{Client, InferOutcome};
+use crate::tensor::{Shape, Tensor};
+use crate::util::json::Json;
+use crate::util::{stats, Pcg32};
+
+/// Traffic discipline.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    Open { rps: f64 },
+    Closed,
+}
+
+/// Load-run configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// `host:port` of a running front door.
+    pub target: String,
+    pub mode: LoadMode,
+    /// Worker threads (each with its own keep-alive connection).
+    pub concurrency: usize,
+    pub duration: Duration,
+    /// Variant wire names to drive; empty = every advertised variant.
+    pub variants: Vec<String>,
+    pub seed: u64,
+    /// Closed loop only: cap on honoring the server's 429 retry hint
+    /// (zero = hammer without backing off).
+    pub backoff_cap: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            target: "127.0.0.1:8429".into(),
+            mode: LoadMode::Closed,
+            concurrency: 4,
+            duration: Duration::from_secs(5),
+            variants: Vec::new(),
+            seed: 0x10AD,
+            backoff_cap: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One variant's aggregated numbers ("all" for the totals row).
+#[derive(Clone, Debug)]
+pub struct VariantReport {
+    pub wire: String,
+    pub sent: u64,
+    pub ok: u64,
+    /// 429 sheds.
+    pub rejected: u64,
+    /// Other non-200 HTTP responses.
+    pub failed: u64,
+    /// No HTTP response at all (transport errors) — the CI smoke asserts
+    /// this stays zero.
+    pub dropped: u64,
+    pub mean_us: f32,
+    pub p50_us: f32,
+    pub p95_us: f32,
+    pub p99_us: f32,
+}
+
+impl VariantReport {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("variant", self.wire.as_str())
+            .set("sent", self.sent)
+            .set("ok", self.ok)
+            .set("rejected", self.rejected)
+            .set("failed", self.failed)
+            .set("dropped", self.dropped)
+            .set("reject_rate", if self.sent > 0 { self.rejected as f64 / self.sent as f64 } else { 0.0 })
+            .set("mean_us", self.mean_us)
+            .set("p50_us", self.p50_us)
+            .set("p95_us", self.p95_us)
+            .set("p99_us", self.p99_us);
+        o
+    }
+}
+
+/// The full run report.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub mode: String,
+    pub offered_rps: Option<f64>,
+    pub concurrency: usize,
+    pub duration_s: f64,
+    pub achieved_rps: f64,
+    pub total: VariantReport,
+    pub per_variant: Vec<VariantReport>,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let mut cfg = Json::obj();
+        cfg.set("mode", self.mode.as_str())
+            .set("concurrency", self.concurrency)
+            .set("duration_s", self.duration_s);
+        if let Some(rps) = self.offered_rps {
+            cfg.set("offered_rps", rps);
+        }
+        let mut o = Json::obj();
+        o.set("schema", "pdq-serving-v1")
+            .set("config", cfg)
+            .set("achieved_rps", self.achieved_rps)
+            .set("aggregate", self.total.to_json())
+            .set(
+                "per_variant",
+                Json::Arr(self.per_variant.iter().map(|v| v.to_json()).collect()),
+            );
+        o
+    }
+
+    /// Write the JSON report (`BENCH_serving.json`).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
+struct TargetVariant {
+    key: VariantKey,
+    wire: String,
+    image: Tensor<f32>,
+}
+
+/// `GET /v1/variants` → the drive list, with one seeded-noise input tensor
+/// per variant.
+fn discover(cfg: &LoadgenConfig) -> Result<Vec<TargetVariant>, String> {
+    let mut client = Client::new(&cfg.target);
+    let parts = client.get("/v1/variants")?;
+    if parts.status != 200 {
+        return Err(format!("GET /v1/variants: http {}", parts.status));
+    }
+    let j = Json::parse(std::str::from_utf8(&parts.body).map_err(|e| e.to_string())?)?;
+    let mut out = Vec::new();
+    for (idx, v) in j
+        .get("variants")
+        .and_then(|v| v.as_arr())
+        .ok_or("catalog missing \"variants\"")?
+        .iter()
+        .enumerate()
+    {
+        let wire = v.get("variant").and_then(|s| s.as_str()).ok_or("entry missing name")?;
+        if !cfg.variants.is_empty() && !cfg.variants.iter().any(|w| w == wire) {
+            continue;
+        }
+        let dims: Vec<usize> = v
+            .get("input_shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("entry missing input_shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize().ok_or_else(|| format!("non-integer dim in input_shape of {wire}"))
+            })
+            .collect::<Result<_, _>>()?;
+        let shape = Shape::new(&dims);
+        let mut rng = Pcg32::new(cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9));
+        let data: Vec<f32> = (0..shape.numel()).map(|_| rng.uniform()).collect();
+        out.push(TargetVariant {
+            key: VariantKey::parse_wire(wire)?,
+            wire: wire.to_string(),
+            image: Tensor::from_vec(shape, data),
+        });
+    }
+    if out.is_empty() {
+        return Err(match cfg.variants.is_empty() {
+            true => "server advertises no variants".into(),
+            false => format!("none of {:?} advertised by the server", cfg.variants),
+        });
+    }
+    // Keep requested order deterministic for the round-robin mix.
+    Ok(out)
+}
+
+#[derive(Clone, Copy)]
+enum Outcome {
+    Ok,
+    Rejected,
+    Failed,
+    Dropped,
+}
+
+struct Rec {
+    variant: usize,
+    outcome: Outcome,
+    us: f32,
+}
+
+fn one_request(client: &mut Client, v: &TargetVariant, id: u64) -> (Outcome, Option<u64>) {
+    match client.post_infer(&v.key, id, &v.image) {
+        Ok(InferOutcome::Ok(_)) => (Outcome::Ok, None),
+        Ok(InferOutcome::Rejected { retry_after_ms }) => (Outcome::Rejected, Some(retry_after_ms)),
+        Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None),
+        Err(_) => (Outcome::Dropped, None),
+    }
+}
+
+/// Run the configured load against the target.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    let targets = discover(cfg)?;
+    let n_targets = targets.len();
+    let targets = std::sync::Arc::new(targets);
+    let t0 = Instant::now();
+    let t_end = t0 + cfg.duration;
+    let concurrency = cfg.concurrency.max(1);
+    let mut joins = Vec::with_capacity(concurrency);
+    for t in 0..concurrency {
+        let targets = std::sync::Arc::clone(&targets);
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || -> Vec<Rec> {
+            let mut client = Client::new(&cfg.target);
+            let mut recs: Vec<Rec> = Vec::new();
+            match cfg.mode {
+                LoadMode::Closed => {
+                    let mut seq = 0u64;
+                    while Instant::now() < t_end {
+                        let vi = (t + seq as usize) % targets.len();
+                        let id = t as u64 * 1_000_000_000 + seq;
+                        let sent_at = Instant::now();
+                        let (outcome, retry_ms) = one_request(&mut client, &targets[vi], id);
+                        recs.push(Rec {
+                            variant: vi,
+                            outcome,
+                            us: sent_at.elapsed().as_micros() as f32,
+                        });
+                        if let Some(ms) = retry_ms {
+                            let nap = Duration::from_millis(ms).min(cfg.backoff_cap);
+                            if !nap.is_zero() {
+                                std::thread::sleep(nap);
+                            }
+                        }
+                        seq += 1;
+                    }
+                }
+                LoadMode::Open { rps } => {
+                    let rps = rps.max(0.001);
+                    // Worker t owns schedule slots t, t+C, t+2C, ...
+                    let mut k = t as u64;
+                    loop {
+                        let sched = t0 + Duration::from_secs_f64(k as f64 / rps);
+                        if sched >= t_end {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        let vi = (k as usize) % targets.len();
+                        let (outcome, _) = one_request(&mut client, &targets[vi], k);
+                        // Latency from the *schedule*, not the send.
+                        recs.push(Rec {
+                            variant: vi,
+                            outcome,
+                            us: sched.elapsed().as_micros() as f32,
+                        });
+                        k += concurrency as u64;
+                    }
+                }
+            }
+            recs
+        }));
+    }
+    let mut all: Vec<Rec> = Vec::new();
+    for j in joins {
+        all.extend(j.join().map_err(|_| "load worker panicked".to_string())?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let aggregate = |wire: &str, recs: &[&Rec]| -> VariantReport {
+        let mut r = VariantReport {
+            wire: wire.to_string(),
+            sent: recs.len() as u64,
+            ok: 0,
+            rejected: 0,
+            failed: 0,
+            dropped: 0,
+            mean_us: 0.0,
+            p50_us: 0.0,
+            p95_us: 0.0,
+            p99_us: 0.0,
+        };
+        let mut ok_us: Vec<f32> = Vec::new();
+        for rec in recs {
+            match rec.outcome {
+                Outcome::Ok => {
+                    r.ok += 1;
+                    ok_us.push(rec.us);
+                }
+                Outcome::Rejected => r.rejected += 1,
+                Outcome::Failed => r.failed += 1,
+                Outcome::Dropped => r.dropped += 1,
+            }
+        }
+        r.mean_us = stats::mean(&ok_us);
+        r.p50_us = stats::percentile(&ok_us, 50.0);
+        r.p95_us = stats::percentile(&ok_us, 95.0);
+        r.p99_us = stats::percentile(&ok_us, 99.0);
+        r
+    };
+    let total = aggregate("all", &all.iter().collect::<Vec<_>>());
+    let per_variant = (0..n_targets)
+        .map(|vi| {
+            let recs: Vec<&Rec> = all.iter().filter(|r| r.variant == vi).collect();
+            aggregate(&targets[vi].wire, &recs)
+        })
+        .collect();
+    let (mode, offered_rps) = match cfg.mode {
+        LoadMode::Open { rps } => ("open".to_string(), Some(rps)),
+        LoadMode::Closed => ("closed".to_string(), None),
+    };
+    Ok(LoadReport {
+        mode,
+        offered_rps,
+        concurrency,
+        duration_s: wall_s,
+        achieved_rps: if wall_s > 0.0 { total.ok as f64 / wall_s } else { 0.0 },
+        total,
+        per_variant,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let v = VariantReport {
+            wire: "m|fp32".into(),
+            sent: 10,
+            ok: 8,
+            rejected: 2,
+            failed: 0,
+            dropped: 0,
+            mean_us: 100.0,
+            p50_us: 90.0,
+            p95_us: 200.0,
+            p99_us: 300.0,
+        };
+        let report = LoadReport {
+            mode: "open".into(),
+            offered_rps: Some(50.0),
+            concurrency: 4,
+            duration_s: 2.0,
+            achieved_rps: 4.0,
+            total: v.clone(),
+            per_variant: vec![v],
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-serving-v1"));
+        assert_eq!(j.get("config").unwrap().get("mode").unwrap().as_str(), Some("open"));
+        let agg = j.get("aggregate").unwrap();
+        assert_eq!(agg.get("rejected").unwrap().as_usize(), Some(2));
+        assert!((agg.get("reject_rate").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-9);
+        assert_eq!(j.get("per_variant").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    // Socket-level loadgen runs are covered by rust/tests/serving_http.rs
+    // (boots a real front door) and the CI smoke step.
+}

@@ -1,0 +1,36 @@
+//! The network serving front door — Layer 3's ingress.
+//!
+//! Everything here is std-only (the crate's no-new-deps policy): a
+//! hand-rolled HTTP/1.1 framing layer over `TcpListener`, a fixed
+//! connection pool, per-variant admission control, and a load-generation
+//! harness, composing with the in-process [`crate::coordinator`] stack:
+//!
+//! ```text
+//!  sockets ──▶ FrontDoor (accept + conn pool)
+//!                 │  POST /v1/infer (wire.rs binary tensor protocol)
+//!                 ▼
+//!          Server::try_submit ──▶ Admission (bounded in-flight, 429 shed)
+//!                 │ admitted
+//!                 ▼
+//!          Router ─▶ Batcher ─▶ Workers        GET /metrics | /healthz
+//! ```
+//!
+//! - [`http`] — incremental request parser + response writer (keep-alive,
+//!   read-timeout resumption; chunked encoding deliberately out of scope).
+//! - [`threadpool`] — fixed pool with drain-on-join semantics.
+//! - [`admission`] — the bounded in-flight gate and its RAII [`admission::Permit`].
+//! - [`wire`] — the `/v1/infer` binary tensor protocol + blocking client.
+//! - [`frontdoor`] — listener, routing, graceful drain (SIGTERM-aware).
+//! - [`signal`] — SIGTERM/SIGINT → shutdown flag, via libc `signal(2)`.
+//! - [`loadgen`] — open/closed-loop traffic generator → `BENCH_serving.json`.
+
+pub mod admission;
+pub mod frontdoor;
+pub mod http;
+pub mod loadgen;
+pub mod signal;
+pub mod threadpool;
+pub mod wire;
+
+pub use frontdoor::{FrontDoor, FrontDoorConfig};
+pub use wire::Client;

@@ -1,0 +1,132 @@
+//! A fixed-size thread pool with drain-on-join semantics.
+//!
+//! The front door hands each accepted connection to this pool. On
+//! [`ThreadPool::join`] the queue sender is dropped first, so workers finish
+//! every job already accepted (each queued connection still gets handled and
+//! each of its in-flight requests still gets a response) before the threads
+//! exit — the pool-level half of the graceful-drain guarantee.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers named `{name}#{i}`.
+    pub fn new(name: &str, n: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..n.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}#{i}"))
+                    .spawn(move || loop {
+                        // Lock only to pull; run the job unlocked so
+                        // siblings keep draining the queue.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            // A panicking job (bad request tripping an
+                            // assert somewhere) must not kill the worker:
+                            // a handful of poison requests would otherwise
+                            // strand the pool with no threads.
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
+                            Err(_) => return, // sender dropped and queue drained
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), handles }
+    }
+
+    /// Enqueue a job; `Err` after [`ThreadPool::join`] began.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) -> Result<(), ()> {
+        match &self.tx {
+            Some(tx) => tx.send(Box::new(job)).map_err(|_| ()),
+            None => Err(()),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Stop accepting, drain every queued job, join all workers.
+    pub fn join(mut self) {
+        self.tx = None; // close the queue
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Implicit join for the non-explicit-shutdown path (panic unwinds,
+        // early returns): same drain semantics.
+        self.tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_before_join() {
+        let pool = ThreadPool::new("t", 4);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let done = Arc::clone(&done);
+            pool.execute(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 100, "join must drain the queue");
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_workers() {
+        let pool = ThreadPool::new("t", 1);
+        pool.execute(|| panic!("poison job")).unwrap();
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 1, "worker must survive the panic");
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new("t", 0);
+        assert_eq!(pool.size(), 1);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,406 @@
+//! The `/v1/infer` wire protocol and a tiny blocking client.
+//!
+//! Body layout (both directions):
+//!
+//! ```text
+//! [u32 LE: preamble length] [preamble JSON] [raw f32 LE tensor data]
+//! ```
+//!
+//! Request preamble: `{"variant": "<model>|<mode>", "id": N, "shape": [...]}`
+//! with the raw data being the image tensor, row-major f32 little-endian.
+//! Response preamble: `{"id": N, "latency_us": N, "shapes": [[...], ...]}`
+//! with the raw data being every output tensor's f32 data concatenated in
+//! order. Raw LE f32 keeps the payload bit-exact end to end (the socket
+//! integration test asserts responses match direct execution bit for bit),
+//! which a decimal JSON float round-trip would not guarantee.
+//!
+//! Variant wire names come from
+//! [`crate::coordinator::router::VariantKey::wire`]: `"micro_resnet|fp32"`,
+//! `"micro_resnet|ours-t"`, `"micro_resnet|int8-ours-c"`, ...
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::router::VariantKey;
+use crate::net::http::{read_response, HttpResponseParts, DEFAULT_MAX_BODY_BYTES};
+use crate::tensor::{Shape, Tensor};
+use crate::util::json::Json;
+
+/// Content type for the binary infer bodies.
+pub const TENSOR_CONTENT_TYPE: &str = "application/x-pdq-tensor";
+
+/// Cap on decoded tensor element counts, aligned with the body-size limit
+/// (f32 = 4 bytes). Checked *before* any multiplication can overflow —
+/// `Shape::numel()` is an unchecked product, and a panic in the decoder
+/// would kill a connection-pool worker.
+pub const MAX_TENSOR_ELEMS: usize = DEFAULT_MAX_BODY_BYTES / 4;
+
+fn frame(preamble: &Json, raw: &[f32]) -> Vec<u8> {
+    let head = preamble.to_string_compact().into_bytes();
+    let mut out = Vec::with_capacity(4 + head.len() + raw.len() * 4);
+    out.extend_from_slice(&(head.len() as u32).to_le_bytes());
+    out.extend_from_slice(&head);
+    for &x in raw {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn unframe(body: &[u8]) -> Result<(Json, Vec<f32>), String> {
+    if body.len() < 4 {
+        return Err("body shorter than the 4-byte preamble length".into());
+    }
+    let head_len = u32::from_le_bytes([body[0], body[1], body[2], body[3]]) as usize;
+    let rest = &body[4..];
+    if rest.len() < head_len {
+        return Err(format!("preamble length {head_len} exceeds body ({} bytes)", rest.len()));
+    }
+    let preamble = Json::parse(
+        std::str::from_utf8(&rest[..head_len]).map_err(|e| format!("non-utf8 preamble: {e}"))?,
+    )?;
+    let raw = &rest[head_len..];
+    if raw.len() % 4 != 0 {
+        return Err(format!("tensor payload of {} bytes is not a multiple of 4", raw.len()));
+    }
+    let data: Vec<f32> =
+        raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    Ok((preamble, data))
+}
+
+fn shape_json(dims: &[usize]) -> Json {
+    Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect())
+}
+
+fn parse_shape(j: &Json) -> Result<Shape, String> {
+    let dims: Vec<usize> = j
+        .as_arr()
+        .ok_or("shape is not an array")?
+        .iter()
+        .map(|v| v.as_usize().ok_or("non-integer dim"))
+        .collect::<Result<_, _>>()?;
+    if dims.is_empty() {
+        return Err("empty shape".into());
+    }
+    // Overflow-checked element count with a hard cap: attacker-controlled
+    // dims must not reach `Shape::numel()`'s unchecked product.
+    let mut numel: usize = 1;
+    for &d in &dims {
+        if d == 0 {
+            return Err("zero-sized dim".into());
+        }
+        numel = numel
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| format!("shape {dims:?} exceeds {MAX_TENSOR_ELEMS} elements"))?;
+    }
+    Ok(Shape::new(&dims))
+}
+
+/// Encode a `/v1/infer` request body.
+pub fn encode_infer_request(variant: &VariantKey, id: u64, image: &Tensor<f32>) -> Vec<u8> {
+    let mut p = Json::obj();
+    p.set("variant", variant.wire())
+        .set("id", id)
+        .set("shape", shape_json(image.shape().dims()));
+    frame(&p, image.data())
+}
+
+/// A decoded `/v1/infer` request.
+pub struct InferRequestWire {
+    pub variant: VariantKey,
+    pub id: u64,
+    pub image: Tensor<f32>,
+}
+
+pub fn decode_infer_request(body: &[u8]) -> Result<InferRequestWire, String> {
+    let (p, data) = unframe(body)?;
+    let variant = VariantKey::parse_wire(
+        p.get("variant").and_then(|v| v.as_str()).ok_or("missing \"variant\"")?,
+    )?;
+    let id = p.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let shape = parse_shape(p.get("shape").ok_or("missing \"shape\"")?)?;
+    if shape.numel() != data.len() {
+        return Err(format!(
+            "shape {} wants {} elements, payload has {}",
+            shape,
+            shape.numel(),
+            data.len()
+        ));
+    }
+    Ok(InferRequestWire { variant, id, image: Tensor::from_vec(shape, data) })
+}
+
+/// Encode a `/v1/infer` response body.
+pub fn encode_infer_response(id: u64, latency_us: u64, outputs: &[Tensor<f32>]) -> Vec<u8> {
+    let mut p = Json::obj();
+    p.set("id", id).set("latency_us", latency_us).set(
+        "shapes",
+        Json::Arr(outputs.iter().map(|t| shape_json(t.shape().dims())).collect()),
+    );
+    let mut raw = Vec::new();
+    for t in outputs {
+        raw.extend_from_slice(t.data());
+    }
+    frame(&p, &raw)
+}
+
+/// A decoded `/v1/infer` response.
+pub struct InferResponseWire {
+    pub id: u64,
+    pub latency_us: u64,
+    pub outputs: Vec<Tensor<f32>>,
+}
+
+pub fn decode_infer_response(body: &[u8]) -> Result<InferResponseWire, String> {
+    let (p, data) = unframe(body)?;
+    let id = p.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let latency_us = p.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let shapes: Vec<Shape> = p
+        .get("shapes")
+        .and_then(|s| s.as_arr())
+        .ok_or("missing \"shapes\"")?
+        .iter()
+        .map(parse_shape)
+        .collect::<Result<_, _>>()?;
+    let total: usize = shapes.iter().map(|s| s.numel()).sum();
+    if total != data.len() {
+        return Err(format!("shapes want {total} elements, payload has {}", data.len()));
+    }
+    let mut outputs = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for s in shapes {
+        let n = s.numel();
+        outputs.push(Tensor::from_vec(s, data[off..off + n].to_vec()));
+        off += n;
+    }
+    Ok(InferResponseWire { id, latency_us, outputs })
+}
+
+/// Outcome of one client-side infer call that got an HTTP response.
+pub enum InferOutcome {
+    Ok(InferResponseWire),
+    /// Shed with 429; the server's retry hint in milliseconds.
+    Rejected { retry_after_ms: u64 },
+    /// Any other non-200 status.
+    Failed { status: u16, error: String },
+}
+
+/// A blocking keep-alive HTTP client (load generator, tests, examples).
+/// One reconnect retry per request: if the pooled connection died (server
+/// closed it on drain or idle timeout), we dial once more before giving up.
+pub struct Client {
+    addr: String,
+    stream: Option<TcpStream>,
+    timeout: Duration,
+    /// When the pooled connection last completed an exchange.
+    last_used: Option<std::time::Instant>,
+}
+
+/// Redial instead of reusing a connection idle longer than this. The front
+/// door silently closes keep-alive connections after ~10 s of idleness
+/// (`IDLE_TICKS_MAX` × `READ_TICK`); reusing an older connection for a POST
+/// would surface as a spurious transport error (POSTs are never blindly
+/// retried — see [`Client::request`]). Redialing before any bytes are sent
+/// is always safe.
+const MAX_CONN_IDLE: Duration = Duration::from_secs(5);
+
+impl Client {
+    pub fn new(addr: &str) -> Self {
+        Self::with_timeout(addr, Duration::from_secs(30))
+    }
+
+    pub fn with_timeout(addr: &str, timeout: Duration) -> Self {
+        Self { addr: addr.to_string(), stream: None, timeout, last_used: None }
+    }
+
+    fn connect(&mut self) -> std::io::Result<&mut TcpStream> {
+        if let Some(t) = self.last_used {
+            if self.stream.is_some() && t.elapsed() > MAX_CONN_IDLE {
+                self.stream = None;
+            }
+        }
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)?;
+            s.set_read_timeout(Some(self.timeout))?;
+            s.set_nodelay(true)?;
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().unwrap())
+    }
+
+    fn send_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<HttpResponseParts, String> {
+        let addr = self.addr.clone();
+        let stream = self.connect().map_err(|e| format!("connect {addr}: {e}"))?;
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+        if !body.is_empty() {
+            head.push_str(&format!("Content-Type: {content_type}\r\n"));
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+        let io = (|| {
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(body)?;
+            stream.flush()
+        })();
+        if let Err(e) = io {
+            self.stream = None;
+            return Err(format!("send: {e}"));
+        }
+        match read_response(self.stream.as_mut().unwrap(), DEFAULT_MAX_BODY_BYTES) {
+            Ok(parts) => {
+                let close = parts
+                    .header("connection")
+                    .map(|v| v.eq_ignore_ascii_case("close"))
+                    .unwrap_or(false);
+                if close {
+                    self.stream = None;
+                }
+                self.last_used = Some(std::time::Instant::now());
+                Ok(parts)
+            }
+            Err(e) => {
+                self.stream = None;
+                Err(format!("recv: {e}"))
+            }
+        }
+    }
+
+    /// One HTTP exchange, with a single reconnect retry when a *reused*
+    /// connection fails on an idempotent method. POSTs are never retried
+    /// automatically: a pooled connection can die after the server already
+    /// received and executed the request, and a blind resend would
+    /// double-submit the inference.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<HttpResponseParts, String> {
+        let had_pooled_conn = self.stream.is_some();
+        let idempotent = matches!(method, "GET" | "HEAD");
+        match self.send_once(method, path, content_type, body) {
+            Ok(p) => Ok(p),
+            Err(_) if had_pooled_conn && idempotent => {
+                self.send_once(method, path, content_type, body)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<HttpResponseParts, String> {
+        self.request("GET", path, "", &[])
+    }
+
+    /// POST one image to `/v1/infer`.
+    pub fn post_infer(
+        &mut self,
+        variant: &VariantKey,
+        id: u64,
+        image: &Tensor<f32>,
+    ) -> Result<InferOutcome, String> {
+        let body = encode_infer_request(variant, id, image);
+        let parts = self.request("POST", "/v1/infer", TENSOR_CONTENT_TYPE, &body)?;
+        match parts.status {
+            200 => Ok(InferOutcome::Ok(decode_infer_response(&parts.body)?)),
+            429 => {
+                let retry_after_ms = parts
+                    .header("x-pdq-retry-after-ms")
+                    .and_then(|v| v.parse().ok())
+                    .or_else(|| {
+                        parts.header("retry-after").and_then(|v| v.parse::<u64>().ok()).map(|s| s * 1000)
+                    })
+                    .unwrap_or(1);
+                Ok(InferOutcome::Rejected { retry_after_ms })
+            }
+            status => {
+                let error = Json::parse(std::str::from_utf8(&parts.body).unwrap_or(""))
+                    .ok()
+                    .and_then(|j| j.get("error").and_then(|e| e.as_str()).map(String::from))
+                    .unwrap_or_else(|| format!("http {status}"));
+                Ok(InferOutcome::Failed { status, error })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{GranKey, ModeKey, QuantModeKey};
+
+    fn key() -> VariantKey {
+        VariantKey { model: "m".into(), mode: ModeKey::Int8(QuantModeKey::Ours, GranKey::T) }
+    }
+
+    #[test]
+    fn infer_request_roundtrip_is_bit_exact() {
+        // Include values a decimal JSON float trip would mangle.
+        let data = vec![0.1f32, -0.2, 1.0 / 3.0, f32::MIN_POSITIVE, 1e30, -0.0];
+        let img = Tensor::from_vec(Shape::new(&[2, 3]), data.clone());
+        let body = encode_infer_request(&key(), 42, &img);
+        let back = decode_infer_request(&body).unwrap();
+        assert_eq!(back.variant, key());
+        assert_eq!(back.id, 42);
+        assert_eq!(back.image.shape().dims(), &[2, 3]);
+        let bits: Vec<u32> = back.image.data().iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want, "payload must be bit-identical");
+    }
+
+    #[test]
+    fn infer_response_roundtrip_multi_output() {
+        let a = Tensor::from_vec(Shape::new(&[4]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(Shape::new(&[2, 2]), vec![-1.0, -2.0, -3.0, -4.0]);
+        let body = encode_infer_response(7, 1234, &[a.clone(), b.clone()]);
+        let back = decode_infer_response(&body).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.latency_us, 1234);
+        assert_eq!(back.outputs.len(), 2);
+        assert_eq!(back.outputs[0], a);
+        assert_eq!(back.outputs[1], b);
+    }
+
+    #[test]
+    fn hostile_shapes_rejected_without_panic() {
+        let hostile = |dims: &[f64]| {
+            let mut p = Json::obj();
+            p.set("variant", key().wire()).set("id", 1u64).set(
+                "shape",
+                Json::Arr(dims.iter().map(|&d| Json::Num(d)).collect()),
+            );
+            let head = p.to_string_compact().into_bytes();
+            let mut body = Vec::new();
+            body.extend_from_slice(&(head.len() as u32).to_le_bytes());
+            body.extend_from_slice(&head);
+            body
+        };
+        // 2^33 × 2^33 would overflow usize in `Shape::numel` — must be a
+        // clean decode error, never a worker-killing panic.
+        assert!(decode_infer_request(&hostile(&[8.589934592e9, 8.589934592e9])).is_err());
+        // Valid arithmetic but over the element cap.
+        assert!(decode_infer_request(&hostile(&[4097.0, 4096.0])).is_err());
+        // Zero-sized and empty shapes.
+        assert!(decode_infer_request(&hostile(&[0.0, 4.0])).is_err());
+        assert!(decode_infer_request(&hostile(&[])).is_err());
+    }
+
+    #[test]
+    fn malformed_bodies_rejected() {
+        assert!(decode_infer_request(&[1, 0]).is_err(), "short body");
+        assert!(decode_infer_request(&[255, 255, 0, 0]).is_err(), "preamble overruns body");
+        // Valid preamble, but payload length disagrees with the shape.
+        let img = Tensor::from_vec(Shape::new(&[4]), vec![0.0; 4]);
+        let mut body = encode_infer_request(&key(), 1, &img);
+        body.truncate(body.len() - 4);
+        assert!(decode_infer_request(&body).is_err(), "shape/payload mismatch");
+        body.truncate(body.len() - 2);
+        assert!(decode_infer_request(&body).is_err(), "ragged f32 payload");
+    }
+}

@@ -206,6 +206,11 @@ impl Int8Executor {
         self.gamma = gamma;
     }
 
+    /// The input shape the program was lowered for.
+    pub fn input_shape(&self) -> &Shape {
+        &self.input_shape
+    }
+
     pub fn nodes(&self) -> &[Int8Node] {
         &self.nodes
     }
