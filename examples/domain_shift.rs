@@ -1,13 +1,15 @@
 //! Domain-shift study (paper §6.2 / Table 2 intuition): how each
-//! quantization strategy degrades under each corruption type.
+//! quantization strategy degrades under each corruption type. Each
+//! strategy is one `pdq::engine` variant; a single compiled session per
+//! strategy serves the whole sweep.
 //!
 //! ```bash
 //! cargo run --release --example domain_shift -- --n 100
 //! ```
 
-use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
 use pdq::data::corrupt::{corrupt, Corruption};
 use pdq::data::shapes::{self, Split};
+use pdq::engine::{calibration_images, EngineBuilder, Session, VariantSpec, CALIB_SIZE};
 use pdq::harness::eval_runner::score;
 use pdq::models::zoo;
 use pdq::nn::QuantMode;
@@ -28,24 +30,32 @@ fn main() -> anyhow::Result<()> {
     let calib = calibration_images(model.task, CALIB_SIZE);
     let samples = shapes::dataset(model.task, Split::Test, n);
 
-    // Build the three executors once.
-    let execs: Vec<(&str, ExecKind)> = vec![
-        ("ours", ExecKind::Quant(Box::new(build_quant_variant(
-            &model, QuantMode::Probabilistic, Granularity::PerTensor, 1, &calib)))),
-        ("dynamic", ExecKind::Quant(Box::new(build_quant_variant(
-            &model, QuantMode::Dynamic, Granularity::PerTensor, 1, &calib)))),
-        ("static", ExecKind::Quant(Box::new(build_quant_variant(
-            &model, QuantMode::Static, Granularity::PerTensor, 1, &calib)))),
-    ];
+    // Build the three engines once; compile one reusable session each.
+    let mut sessions: Vec<(&str, Box<dyn Session>)> = Vec::new();
+    for (label, mode) in [
+        ("ours", QuantMode::Probabilistic),
+        ("dynamic", QuantMode::Dynamic),
+        ("static", QuantMode::Static),
+    ] {
+        let engine = EngineBuilder::new(&model)
+            .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+            .calibration_images(&calib)
+            .build()?;
+        sessions.push((label, engine.compile()?));
+    }
 
     let mut table = Table::new(&["corruption", "ours", "dynamic", "static"]).score_columns(&[1, 2, 3]);
     for c in Corruption::all() {
         let mut cells = vec![c.name().to_string()];
-        for (_, exec) in &execs {
+        for (_, session) in sessions.iter_mut() {
             let mut rng = Pcg32::new(7);
             let outputs: Vec<_> = samples
                 .iter()
-                .map(|s| exec.run(&corrupt(&s.image_f32(), c, severity, &mut rng)))
+                .map(|s| {
+                    session
+                        .run(&corrupt(&s.image_f32(), c, severity, &mut rng))
+                        .expect("inference")
+                })
                 .collect();
             cells.push(fmt4(score(model.task, &samples, &outputs) as f64));
         }

@@ -18,10 +18,11 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
-use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
 use pdq::data::shapes::{self, Split};
+use pdq::engine::{
+    calibration_images, Engine, EngineBuilder, VariantKey, VariantSpec, CALIB_SIZE,
+};
 use pdq::harness::eval_runner::score;
 use pdq::models::zoo;
 use pdq::nn::{float_exec, QuantMode};
@@ -55,19 +56,15 @@ fn main() -> anyhow::Result<()> {
 
     // --- (3) calibrate the three strategies --------------------------------
     let calib = calibration_images(model.task, CALIB_SIZE);
-    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
-        VariantKey { model: model.name.clone(), mode: ModeKey::Fp32 },
-        ExecKind::Float(Arc::clone(&model.graph)),
-    )];
+    let mut variants: Vec<(VariantKey, Arc<dyn Engine>)> =
+        vec![EngineBuilder::new(&model).calibration_images(&calib).build_variant()?];
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
-        variants.push((
-            VariantKey {
-                model: model.name.clone(),
-                mode: ModeKey::Quant(mode.into(), GranKey::T),
-            },
-            ExecKind::Quant(Box::new(ex)),
-        ));
+        variants.push(
+            EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build_variant()?,
+        );
     }
     let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
     println!("[3] calibrated {} variants on {} shared images", keys.len() - 1, CALIB_SIZE);
@@ -87,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         BTreeMap::new();
     for (key, i, rx) in pending {
         let resp = rx.recv()?;
-        per_variant.entry(key.label()).or_default().push((i, resp.outputs));
+        per_variant.entry(key.label()).or_default().push((i, resp.result?));
     }
     let wall = t0.elapsed();
     let total_reqs = n_test * keys.len();

@@ -1,7 +1,8 @@
 //! Network serving walkthrough: boot the HTTP front door on an ephemeral
 //! port, drive it over real sockets with the load generator, then drain
 //! gracefully — the full `pdq serve --listen` / `pdq loadgen` loop in one
-//! process, no artifacts required.
+//! process, no artifacts required. The variant menu is built entirely
+//! through `pdq::engine::EngineBuilder`.
 //!
 //! ```bash
 //! cargo run --release --example http_front_door
@@ -10,11 +11,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use pdq::coordinator::calibrate::{
-    build_int8_variant, build_quant_variant, calibration_images, demo_model, ExecKind, CALIB_SIZE,
-};
-use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
+use pdq::coordinator::calibrate::demo_model;
 use pdq::coordinator::{Server, ServerConfig};
+use pdq::engine::{
+    calibration_images, Engine, EngineBuilder, VariantKey, VariantSpec, CALIB_SIZE,
+};
 use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
 use pdq::net::{Client, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
@@ -30,26 +31,25 @@ fn main() -> anyhow::Result<()> {
     // --- (1) calibrate a variant menu on the synthetic demo model ---------
     let model = demo_model("demo");
     let calib = calibration_images(model.task, CALIB_SIZE);
-    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
-        VariantKey { model: model.name.clone(), mode: ModeKey::Fp32 },
-        ExecKind::Float(Arc::clone(&model.graph)),
-    )];
+    let mut variants: Vec<(VariantKey, Arc<dyn Engine>)> =
+        vec![EngineBuilder::new(&model).calibration_images(&calib).build_variant()?];
     for mode in [QuantMode::Static, QuantMode::Probabilistic] {
-        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
-        variants.push((
-            VariantKey { model: model.name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
-            ExecKind::Quant(Box::new(ex)),
-        ));
+        variants.push(
+            EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build_variant()?,
+        );
     }
-    let int8 = build_int8_variant(&model, QuantMode::Probabilistic, Granularity::PerTensor, 1, &calib)
-        .map_err(anyhow::Error::msg)?;
-    variants.push((
-        VariantKey {
-            model: model.name.clone(),
-            mode: ModeKey::Int8(QuantMode::Probabilistic.into(), GranKey::T),
-        },
-        ExecKind::Int8(Box::new(int8)),
-    ));
+    variants.push(
+        EngineBuilder::new(&model)
+            .spec(VariantSpec::Int8 {
+                mode: QuantMode::Probabilistic,
+                weight_gran: Granularity::PerTensor,
+            })
+            .calibration_images(&calib)
+            .build_variant()?,
+    );
     println!("[1] calibrated {} variants of {}", variants.len(), model.name);
 
     // --- (2) boot the coordinator + front door ----------------------------

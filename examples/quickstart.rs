@@ -1,17 +1,18 @@
-//! Quickstart: load a trained model from the AOT artifacts, calibrate the
-//! probabilistic quantizer on 16 images, and classify a test image under
-//! FP32 / static / dynamic / PDQ quantization.
+//! Quickstart for the unified `pdq::engine` API: load a trained model from
+//! the AOT artifacts, build one engine per requantization strategy with
+//! `EngineBuilder` (calibration on the paper's shared 16-image set happens
+//! inside the builder), compile a `Session`, and classify a test image
+//! under FP32 / static / dynamic / PDQ quantization — all through the same
+//! `Engine` trait.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use std::sync::Arc;
-
-use pdq::coordinator::calibrate::{build_quant_variant, calibration_images, CALIB_SIZE};
 use pdq::data::shapes::{self, Split};
+use pdq::engine::{EngineBuilder, VariantSpec};
 use pdq::models::{heads, zoo};
-use pdq::nn::{float_exec, QuantMode};
+use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
 
 fn main() -> anyhow::Result<()> {
@@ -20,33 +21,28 @@ fn main() -> anyhow::Result<()> {
     let model = zoo::load_model(artifacts, &manifest, "micro_resnet")?;
     println!("loaded {} ({} params)", model.name, model.graph.param_count());
 
-    // One shared calibration set (paper §5.2: 16 images, same set for
-    // static quantization and for the I(α,β) fit).
-    let calib = calibration_images(model.task, CALIB_SIZE);
-
     // A test image.
     let sample = shapes::dataset(model.task, Split::Test, 1).remove(0);
     let img = sample.image_f32();
     println!("test image: class {}", sample.class_id);
 
-    // FP32 reference.
-    let fp_out = float_exec::run(&model.graph, &img);
-    let fp_pred = heads::decode_cls(fp_out[0].data());
-    println!("fp32     -> class {} (conf {:.3})", fp_pred.class_id, fp_pred.confidence);
-
-    // The three requantization strategies of Fig. 1.
+    // FP32 and the three requantization strategies of Fig. 1, all through
+    // the same Engine/Session abstraction: build → compile → run.
+    let mut specs = vec![VariantSpec::Fp32];
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
-        let out = ex.run(&img);
+        specs.push(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor });
+    }
+    for spec in specs {
+        let engine = EngineBuilder::new(&model).spec(spec).build()?;
+        let mut session = engine.compile()?;
+        let out = session.run(&img)?;
         let pred = heads::decode_cls(out[0].data());
         println!(
-            "{:<8} -> class {} (conf {:.3})  [peak overhead {} bits]",
-            mode.label(),
+            "{:<14} -> class {} (conf {:.3})",
+            engine.spec().label(),
             pred.class_id,
-            pred.confidence,
-            ex.memory_overhead_bits(32 * 32 * 16)
+            pred.confidence
         );
     }
-    let _ = Arc::strong_count(&model.graph);
     Ok(())
 }

@@ -10,9 +10,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use pdq::coordinator::calibrate::ExecKind;
-use pdq::coordinator::router::{ModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
+use pdq::engine::{FloatEngine, VariantKey, VariantSpec};
 use pdq::estimator::conv::{
     estimate_from_window_sums, window_sums_integral, window_sums_naive,
     window_sums_integral_scratch, WindowSums,
@@ -145,11 +144,11 @@ fn main() {
             black_box(ex.run_reference(&img));
         });
         bench.bench(&format!("quant_exec/forward_{}", mode.label()), 1.0, || {
-            black_box(ex.run(&img));
+            black_box(ex.run(&img).unwrap());
         });
         let mut arena = ex.make_arena();
         bench.bench(&format!("quant_exec/forward_{}_worker_arena", mode.label()), 1.0, || {
-            black_box(ex.run_with_arena(&img, &mut arena));
+            black_box(ex.run_with_arena(&img, &mut arena).unwrap());
         });
     }
 
@@ -168,10 +167,10 @@ fn main() {
         });
         let mut arena = int8.make_arena();
         b8.bench(&format!("int8/forward_{}", mode.label()), 1.0, || {
-            black_box(int8.run_q_with_arena(&img, &mut arena));
+            black_box(int8.run_q_with_arena(&img, &mut arena).unwrap());
         });
         b8.bench(&format!("int8/forward_{}_f32fast", mode.label()), 1.0, || {
-            black_box(ex.run(&img));
+            black_box(ex.run(&img).unwrap());
         });
     }
     let mut derived8: Vec<(&str, f64)> = Vec::new();
@@ -199,9 +198,9 @@ fn main() {
     let xin = g.input();
     let r = g.relu(xin);
     g.mark_output(r);
-    let key = VariantKey { model: "echo".into(), mode: ModeKey::Fp32 };
+    let key = VariantKey::new("echo", VariantSpec::Fp32);
     let server = Server::start(
-        vec![(key.clone(), ExecKind::Float(Arc::new(g)))],
+        vec![(key.clone(), Arc::new(FloatEngine::new(Arc::new(g))))],
         ServerConfig::default(),
     );
     let small = Tensor::full(Shape::hwc(8, 8, 1), 1.0f32);

@@ -1,123 +1,27 @@
 //! Startup calibration orchestration.
 //!
-//! Builds the executor for every requested (model × mode × granularity)
-//! variant and runs the shared calibration pass: the paper uses the *same*
-//! 16-image calibration set for static quantization and for the
-//! probabilistic interval fit (§5.2).
+//! Variant construction lives in [`crate::engine::EngineBuilder`] (the
+//! paper uses the *same* 16-image calibration set for static quantization
+//! and for the probabilistic interval fit, §5.2 — the builder defaults to
+//! exactly that). This module keeps the serving-side helpers: the shared
+//! calibration-set constants (re-exported from the engine) and the
+//! synthetic [`demo_model`] the CI smoke and `pdq serve --synthetic` run
+//! on.
 
 use std::sync::Arc;
 
-use crate::data::{shapes, Task};
+use crate::data::Task;
 use crate::models::Model;
-use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
-use crate::nn::{Int8Executor, QuantMode};
-use crate::quant::Granularity;
 use crate::tensor::Tensor;
 
-/// How a variant executes.
-pub enum ExecKind {
-    /// FP32 on the in-process float engine.
-    Float(Arc<crate::nn::Graph>),
-    /// Calibrated quantization emulation (f32 carriers).
-    Quant(Box<QuantExecutor>),
-    /// True-int8 engine lowered from a calibrated emulator; responses are
-    /// dequantized at the serving boundary.
-    Int8(Box<Int8Executor>),
-}
-
-/// A worker-owned execution workspace matching its variant's engine.
-pub enum ArenaKind {
-    F32(crate::nn::ExecArena),
-    Int8(crate::nn::Int8Arena),
-}
-
-impl ExecKind {
-    /// Run one image, returning the model outputs.
-    pub fn run(&self, img: &Tensor<f32>) -> Vec<Tensor<f32>> {
-        match self {
-            ExecKind::Float(g) => crate::nn::float_exec::run(g, img),
-            ExecKind::Quant(ex) => ex.run(img),
-            ExecKind::Int8(ex) => ex.run(img),
-        }
-    }
-
-    /// A packed execution arena for this variant. Workers create one per
-    /// thread and feed it to [`ExecKind::run_with_arena`] so every batched
-    /// request reuses the same buffers.
-    pub fn make_arena(&self) -> ArenaKind {
-        match self {
-            ExecKind::Float(g) => ArenaKind::F32(crate::nn::ExecArena::for_run(g)),
-            ExecKind::Quant(ex) => ArenaKind::F32(ex.make_arena()),
-            ExecKind::Int8(ex) => ArenaKind::Int8(ex.make_arena()),
-        }
-    }
-
-    /// Run one image through a caller-owned arena (allocation-free in
-    /// steady state). The arena must come from this variant's
-    /// [`ExecKind::make_arena`].
-    pub fn run_with_arena(&self, img: &Tensor<f32>, arena: &mut ArenaKind) -> Vec<Tensor<f32>> {
-        match (self, arena) {
-            (ExecKind::Float(g), ArenaKind::F32(a)) => {
-                crate::nn::float_exec::run_with_arena(g, img, a)
-            }
-            (ExecKind::Quant(ex), ArenaKind::F32(a)) => ex.run_with_arena(img, a),
-            (ExecKind::Int8(ex), ArenaKind::Int8(a)) => ex.run_with_arena(img, a),
-            _ => panic!("arena kind does not match executor kind"),
-        }
-    }
-
-    /// The input shape this variant expects (the `/v1/variants` catalog).
-    pub fn input_shape(&self) -> &crate::tensor::Shape {
-        match self {
-            ExecKind::Float(g) => g.input_shape(),
-            ExecKind::Quant(ex) => ex.graph().input_shape(),
-            ExecKind::Int8(ex) => ex.input_shape(),
-        }
-    }
-}
-
-/// The paper's calibration-set size (§5.2).
-pub const CALIB_SIZE: usize = 16;
-
-/// Calibration images for a task (the shared set).
-pub fn calibration_images(task: Task, n: usize) -> Vec<Tensor<f32>> {
-    shapes::dataset(task, shapes::Split::Calib, n).iter().map(|s| s.image_f32()).collect()
-}
-
-/// Build + calibrate one quantized variant of a model.
-pub fn build_quant_variant(
-    model: &Model,
-    mode: QuantMode,
-    gran: Granularity,
-    gamma: usize,
-    calib: &[Tensor<f32>],
-) -> QuantExecutor {
-    let settings = QuantSettings { mode, granularity: gran, gamma, ..Default::default() };
-    let mut ex = QuantExecutor::new(Arc::clone(&model.graph), settings);
-    ex.calibrate(calib);
-    ex
-}
-
-/// Build + calibrate one quantized variant, then lower it to the
-/// integer-native engine (per-tensor activations; `weight_gran` picks the
-/// weight-scale granularity). The f32 emulator is calibration scaffolding
-/// only — the returned executor serves pure int8.
-pub fn build_int8_variant(
-    model: &Model,
-    mode: QuantMode,
-    weight_gran: Granularity,
-    gamma: usize,
-    calib: &[Tensor<f32>],
-) -> Result<Int8Executor, String> {
-    let ex = build_quant_variant(model, mode, Granularity::PerTensor, gamma, calib);
-    Int8Executor::lower(&ex, weight_gran)
-}
+pub use crate::engine::{calibration_images, CALIB_SIZE};
 
 /// A small self-contained classification model with seeded random weights:
 /// conv(3→8, s2) → relu → conv(8→8, s2) → relu → gap → linear(8→10) on the
 /// Cls task's 32×32×3 images, so [`calibration_images`] and
-/// [`shapes::dataset`] feed it directly. No `artifacts/` needed — this is
-/// what `pdq serve --synthetic` and the CI serving smoke run on.
+/// [`crate::data::shapes::dataset`] feed it directly. No `artifacts/`
+/// needed — this is what `pdq serve --synthetic` and the CI serving smoke
+/// run on.
 pub fn demo_model(name: &str) -> Model {
     use crate::tensor::{ConvGeom, Shape};
     use crate::util::Pcg32;
@@ -154,24 +58,12 @@ pub fn demo_model(name: &str) -> Model {
     }
 }
 
-/// Build the standard six-variant menu for one model (fp32 + the paper's
-/// 3 modes × at the given granularity) sharing one calibration set.
-pub fn standard_variants(
-    model: &Model,
-    gran: Granularity,
-    gamma: usize,
-) -> Vec<(QuantMode, QuantExecutor)> {
-    let calib = calibration_images(model.task, CALIB_SIZE);
-    [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic]
-        .into_iter()
-        .map(|mode| (mode, build_quant_variant(model, mode, gran, gamma, &calib)))
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::Graph;
+    use crate::engine::{EngineBuilder, VariantSpec};
+    use crate::nn::{Graph, QuantMode};
+    use crate::quant::Granularity;
     use crate::tensor::{ConvGeom, Shape};
     use crate::util::Pcg32;
 
@@ -196,6 +88,16 @@ mod tests {
         }
     }
 
+    fn tiny_calib(seed: u64, n: usize) -> Vec<Tensor<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(8, 8, 3), d)
+            })
+            .collect()
+    }
+
     #[test]
     fn calibration_images_generated() {
         let imgs = calibration_images(Task::Cls, 4);
@@ -204,43 +106,39 @@ mod tests {
     }
 
     #[test]
-    fn variants_calibrated_and_runnable() {
+    fn built_variants_are_calibrated_and_runnable() {
         let model = tiny_model();
-        // Calib with matching input size (tiny model is 8x8 — use custom set).
-        let mut rng = Pcg32::new(1);
-        let calib: Vec<Tensor<f32>> = (0..4)
-            .map(|_| {
-                let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
-                Tensor::from_vec(Shape::hwc(8, 8, 3), d)
-            })
-            .collect();
+        // Calib with matching input size (tiny model is 8x8 — custom set).
+        let calib = tiny_calib(1, 4);
         for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-            let ex = build_quant_variant(&model, mode, Granularity::PerTensor, 1, &calib);
+            let ex = EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build_executor()
+                .expect("builds");
             assert!(ex.is_calibrated());
-            let out = ex.run(&calib[0]);
+            let out = ex.run(&calib[0]).expect("runs");
             assert_eq!(out[0].shape().dims(), &[10]);
         }
     }
 
     #[test]
-    fn int8_variant_lowers_and_serves_f32_outputs() {
+    fn int8_variant_builds_and_serves_f32_outputs() {
         let model = tiny_model();
-        let mut rng = Pcg32::new(2);
-        let calib: Vec<Tensor<f32>> = (0..4)
-            .map(|_| {
-                let d: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.uniform()).collect();
-                Tensor::from_vec(Shape::hwc(8, 8, 3), d)
-            })
-            .collect();
+        let calib = tiny_calib(2, 4);
         for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-            let ex = build_int8_variant(&model, mode, Granularity::PerTensor, 1, &calib)
+            let engine = EngineBuilder::new(&model)
+                .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build()
                 .expect("lowering succeeds");
-            let kind = ExecKind::Int8(Box::new(ex));
-            let out = kind.run(&calib[0]);
+            // The worker path: a compiled session owns the right arena by
+            // construction and round-trips deterministically.
+            let mut s1 = engine.compile().expect("session");
+            let mut s2 = engine.compile().expect("session");
+            let out = s1.run(&calib[0]).expect("runs");
             assert_eq!(out[0].shape().dims(), &[10]);
-            // The worker path: matching arena kind round-trips.
-            let mut arena = kind.make_arena();
-            let out2 = kind.run_with_arena(&calib[0], &mut arena);
+            let out2 = s2.run(&calib[0]).expect("runs");
             assert_eq!(out[0].data(), out2[0].data());
         }
     }

@@ -59,6 +59,9 @@ struct Inner {
     rejected_unknown: u64,
     rejected_overload: u64,
     rejected_draining: u64,
+    /// Responses answered with a typed engine error (compile or run
+    /// failure) — delivered, but not successful.
+    engine_errors: u64,
     batches: u64,
     batch_sizes: Reservoir,
     latencies_us: Reservoir,
@@ -90,6 +93,7 @@ impl Metrics {
                 rejected_unknown: 0,
                 rejected_overload: 0,
                 rejected_draining: 0,
+                engine_errors: 0,
                 batches: 0,
                 batch_sizes: Reservoir::new(cap, 0x5EED_BA7C),
                 latencies_us: Reservoir::new(cap, 0x5EED_1A7E),
@@ -118,6 +122,15 @@ impl Metrics {
     /// up as a burst of `unknown_variant` rejections.
     pub fn on_reject_draining(&self) {
         self.inner.lock().unwrap().rejected_draining += 1;
+    }
+
+    /// A job answered with a typed engine error ([`crate::engine::EngineError`])
+    /// instead of outputs. Counted *in addition to* `on_response` — the
+    /// reply was delivered, so it belongs in the latency accounting, but
+    /// operators must be able to see failures that the response counters
+    /// alone would hide.
+    pub fn on_engine_error(&self) {
+        self.inner.lock().unwrap().engine_errors += 1;
     }
 
     pub fn on_batch(&self, size: usize) {
@@ -156,6 +169,11 @@ impl Metrics {
     /// The overload-shed (429) share of [`Metrics::rejected`].
     pub fn shed(&self) -> u64 {
         self.inner.lock().unwrap().rejected_overload
+    }
+
+    /// Responses that carried a typed engine error instead of outputs.
+    pub fn engine_errors(&self) -> u64 {
+        self.inner.lock().unwrap().engine_errors
     }
 
     /// Total latency observations (not capped by the reservoir).
@@ -203,6 +221,7 @@ impl Metrics {
             .set("rejected_unknown", m.rejected_unknown)
             .set("rejected_overload", m.rejected_overload)
             .set("rejected_draining", m.rejected_draining)
+            .set("engine_errors", m.engine_errors)
             .set("batches", m.batches)
             .set("mean_batch", stats::mean(&m.batch_sizes.samples))
             .set("latency_seen", m.latencies_us.seen)
@@ -237,6 +256,12 @@ impl Metrics {
             "pdq_rejected_total{{reason=\"draining\"}} {}\n",
             m.rejected_draining
         ));
+        counter(
+            &mut s,
+            "pdq_engine_errors_total",
+            "Responses answered with a typed engine error.",
+            m.engine_errors,
+        );
         counter(&mut s, "pdq_batches_total", "Batches executed by workers.", m.batches);
         s.push_str("# HELP pdq_batch_size_mean Mean executed batch size (reservoir).\n");
         s.push_str("# TYPE pdq_batch_size_mean gauge\n");

@@ -15,11 +15,13 @@
 //! - [`batcher`] — dynamic batching: a batch closes when `max_batch` is
 //!   reached or the oldest request exceeds `batch_deadline` (the standard
 //!   throughput/latency knob).
-//! - [`worker`] — worker pool executing batches on the calibrated
-//!   [`crate::nn::QuantExecutor`]s (or the FP32 engine).
-//! - [`calibrate`] — startup orchestration: builds every variant and runs
-//!   the shared-calibration pass (paper §5.2: ours and static share the
-//!   same 16-image calibration set).
+//! - [`worker`] — worker pool executing batches on pooled
+//!   [`crate::engine::Session`]s (one [`crate::engine::SessionPool`] per
+//!   variant; any [`crate::engine::Engine`] implementation plugs in).
+//! - [`calibrate`] — serving-side calibration helpers + the synthetic
+//!   demo model; variant *construction* lives in
+//!   [`crate::engine::EngineBuilder`] (paper §5.2: ours and static share
+//!   the same 16-image calibration set).
 //! - [`metrics`] — request counters + latency reservoir, JSON-exportable.
 
 pub mod batcher;

@@ -1,169 +1,15 @@
-//! Request routing: (model, execution mode) → the variant's input queue.
+//! Request routing: [`VariantKey`] → the variant's input queue.
+//!
+//! Variant identity and wire naming live in [`VariantSpec`] /
+//! [`VariantKey`] over in [`crate::engine`] — the router only owns the
+//! key → queue map. (The pre-engine `ModeKey` /
+//! `QuantModeKey` / `GranKey` mirror enums are gone; [`VariantSpec`] is
+//! ordered and hashable by itself.)
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-use crate::nn::QuantMode;
-use crate::quant::Granularity;
-
-/// Which executor variant a request targets.
-#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum ModeKey {
-    /// Full-precision reference path (PJRT or the Rust float engine).
-    Fp32,
-    /// A quantized emulation variant.
-    Quant(QuantModeKey, GranKey),
-    /// A true-int8 variant (integer-native engine; per-tensor activations,
-    /// the [`GranKey`] names the *weight* scale granularity).
-    Int8(QuantModeKey, GranKey),
-}
-
-// QuantMode / Granularity don't implement Ord; mirror them with tiny keys
-// so the router can use a BTreeMap.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum QuantModeKey {
-    Static,
-    Dynamic,
-    Ours,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum GranKey {
-    T,
-    C,
-}
-
-impl From<QuantMode> for QuantModeKey {
-    fn from(m: QuantMode) -> Self {
-        match m {
-            QuantMode::Static => QuantModeKey::Static,
-            QuantMode::Dynamic => QuantModeKey::Dynamic,
-            QuantMode::Probabilistic => QuantModeKey::Ours,
-        }
-    }
-}
-
-impl From<QuantModeKey> for QuantMode {
-    fn from(k: QuantModeKey) -> Self {
-        match k {
-            QuantModeKey::Static => QuantMode::Static,
-            QuantModeKey::Dynamic => QuantMode::Dynamic,
-            QuantModeKey::Ours => QuantMode::Probabilistic,
-        }
-    }
-}
-
-impl From<Granularity> for GranKey {
-    fn from(g: Granularity) -> Self {
-        match g {
-            Granularity::PerTensor => GranKey::T,
-            Granularity::PerChannel => GranKey::C,
-        }
-    }
-}
-
-impl From<GranKey> for Granularity {
-    fn from(k: GranKey) -> Self {
-        match k {
-            GranKey::T => Granularity::PerTensor,
-            GranKey::C => Granularity::PerChannel,
-        }
-    }
-}
-
-impl QuantModeKey {
-    fn wire(&self) -> &'static str {
-        match self {
-            QuantModeKey::Static => "static",
-            QuantModeKey::Dynamic => "dynamic",
-            QuantModeKey::Ours => "ours",
-        }
-    }
-
-    fn parse_wire(s: &str) -> Result<Self, String> {
-        match s {
-            "static" => Ok(QuantModeKey::Static),
-            "dynamic" => Ok(QuantModeKey::Dynamic),
-            "ours" => Ok(QuantModeKey::Ours),
-            other => Err(format!("unknown quant mode {other:?}")),
-        }
-    }
-}
-
-impl GranKey {
-    fn wire(&self) -> &'static str {
-        match self {
-            GranKey::T => "t",
-            GranKey::C => "c",
-        }
-    }
-
-    fn parse_wire(s: &str) -> Result<Self, String> {
-        match s {
-            "t" => Ok(GranKey::T),
-            "c" => Ok(GranKey::C),
-            other => Err(format!("unknown granularity {other:?}")),
-        }
-    }
-}
-
-impl ModeKey {
-    /// Stable wire name for the HTTP protocol: `fp32`, `ours-t`,
-    /// `int8-static-c`, ... ([`ModeKey::parse_wire`] is the inverse; the
-    /// Debug-derived [`VariantKey::label`] stays display-only).
-    pub fn wire(&self) -> String {
-        match self {
-            ModeKey::Fp32 => "fp32".into(),
-            ModeKey::Quant(m, g) => format!("{}-{}", m.wire(), g.wire()),
-            ModeKey::Int8(m, g) => format!("int8-{}-{}", m.wire(), g.wire()),
-        }
-    }
-
-    pub fn parse_wire(s: &str) -> Result<ModeKey, String> {
-        if s == "fp32" {
-            return Ok(ModeKey::Fp32);
-        }
-        let parts: Vec<&str> = s.split('-').collect();
-        match parts.as_slice() {
-            [m, g] => Ok(ModeKey::Quant(QuantModeKey::parse_wire(m)?, GranKey::parse_wire(g)?)),
-            ["int8", m, g] => {
-                Ok(ModeKey::Int8(QuantModeKey::parse_wire(m)?, GranKey::parse_wire(g)?))
-            }
-            _ => Err(format!("unknown mode {s:?} (want fp32 | <mode>-<gran> | int8-<mode>-<gran>)")),
-        }
-    }
-}
-
-/// Full variant identity.
-#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct VariantKey {
-    pub model: String,
-    pub mode: ModeKey,
-}
-
-impl VariantKey {
-    pub fn label(&self) -> String {
-        match &self.mode {
-            ModeKey::Fp32 => format!("{}/fp32", self.model),
-            ModeKey::Quant(m, g) => format!("{}/{m:?}/{g:?}", self.model),
-            ModeKey::Int8(m, g) => format!("{}/int8/{m:?}/{g:?}", self.model),
-        }
-    }
-
-    /// `<model>|<mode-wire>` — the name clients put on the wire.
-    pub fn wire(&self) -> String {
-        format!("{}|{}", self.model, self.mode.wire())
-    }
-
-    pub fn parse_wire(s: &str) -> Result<VariantKey, String> {
-        let (model, mode) =
-            s.split_once('|').ok_or_else(|| format!("variant {s:?} missing '|' separator"))?;
-        if model.is_empty() {
-            return Err(format!("variant {s:?} has an empty model name"));
-        }
-        Ok(VariantKey { model: model.to_string(), mode: ModeKey::parse_wire(mode)? })
-    }
-}
+pub use crate::engine::{VariantKey, VariantSpec};
 
 /// The router: owns one sender per registered variant.
 pub struct Router<T> {
@@ -207,9 +53,17 @@ impl<T> Router<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::QuantMode;
+    use crate::quant::Granularity;
 
     fn key(model: &str) -> VariantKey {
-        VariantKey { model: model.into(), mode: ModeKey::Quant(QuantModeKey::Ours, GranKey::T) }
+        VariantKey::new(
+            model,
+            VariantSpec::FakeQuant {
+                mode: QuantMode::Probabilistic,
+                gran: Granularity::PerTensor,
+            },
+        )
     }
 
     #[test]
@@ -235,38 +89,17 @@ mod tests {
     }
 
     #[test]
-    fn mode_key_roundtrip() {
-        for m in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-            let k: QuantModeKey = m.into();
-            let back: QuantMode = k.into();
-            assert_eq!(m, back);
+    fn specs_order_routes_deterministically() {
+        // VariantSpec is Ord: every spec registers and lists stably.
+        let mut r: Router<i32> = Router::default();
+        let mut rxs = Vec::new();
+        for spec in VariantSpec::all() {
+            rxs.push(r.register(VariantKey::new("m", spec)));
         }
-    }
-
-    #[test]
-    fn wire_names_roundtrip_every_mode() {
-        let mut modes = vec![ModeKey::Fp32];
-        for m in [QuantModeKey::Static, QuantModeKey::Dynamic, QuantModeKey::Ours] {
-            for g in [GranKey::T, GranKey::C] {
-                modes.push(ModeKey::Quant(m, g));
-                modes.push(ModeKey::Int8(m, g));
-            }
-        }
-        for mode in modes {
-            let v = VariantKey { model: "micro_resnet".into(), mode: mode.clone() };
-            let wire = v.wire();
-            assert_eq!(VariantKey::parse_wire(&wire).unwrap(), v, "roundtrip {wire}");
-        }
-        assert_eq!(
-            VariantKey::parse_wire("m|int8-ours-c").unwrap().mode,
-            ModeKey::Int8(QuantModeKey::Ours, GranKey::C)
-        );
-    }
-
-    #[test]
-    fn bad_wire_names_rejected() {
-        for bad in ["", "no-separator", "m|", "m|int9-ours-t", "m|ours", "m|ours-x", "|fp32"] {
-            assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
+        assert_eq!(r.variants().len(), VariantSpec::all().len());
+        for (spec, rx) in VariantSpec::all().into_iter().zip(&rxs) {
+            r.route(&VariantKey::new("m", spec), 1).unwrap();
+            assert_eq!(rx.recv().unwrap(), 1);
         }
     }
 }

@@ -22,10 +22,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::BatchPolicy;
-use super::calibrate::ExecKind;
 use super::metrics::Metrics;
 use super::router::{Router, VariantKey};
 use super::worker::{spawn_workers, Job};
+use crate::engine::{Engine, EngineError, SessionPool};
 use crate::net::admission::{Admission, AdmissionError, Permit};
 use crate::tensor::{Shape, Tensor};
 
@@ -38,11 +38,15 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
 }
 
-/// An inference response.
+/// An inference response: the executed result (typed errors included —
+/// e.g. [`EngineError::ShapeMismatch`] for requests that bypassed the
+/// boundary validation) plus its latency.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub outputs: Vec<Tensor<f32>>,
+    /// Outputs on success; a typed engine error otherwise (the front door
+    /// maps `ShapeMismatch` to HTTP 400 and everything else to 500).
+    pub result: Result<Vec<Tensor<f32>>, EngineError>,
     /// Queue + execution latency.
     pub latency: Duration,
 }
@@ -98,19 +102,31 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start with a set of (variant, executor) pairs.
-    pub fn start(variants: Vec<(VariantKey, ExecKind)>, config: ServerConfig) -> Self {
+    /// Start with a set of (variant, engine) pairs — any [`Engine`]
+    /// implementation plugs in; each variant's workers share one
+    /// [`SessionPool`] over its engine.
+    pub fn start(variants: Vec<(VariantKey, Arc<dyn Engine>)>, config: ServerConfig) -> Self {
         let metrics = Arc::new(Metrics::default());
         let mut router = Router::default();
         let mut handles = Vec::new();
         let mut catalog = Vec::with_capacity(variants.len());
-        for (key, exec) in variants {
-            catalog.push((key.clone(), exec.input_shape().clone()));
+        for (key, engine) in variants {
+            // The key is what clients address; the engine is what runs. A
+            // disagreement would silently serve a different backend than
+            // the wire name advertises — refuse at registration, like the
+            // router refuses duplicate keys.
+            assert_eq!(
+                key.spec,
+                engine.spec(),
+                "variant {} registered with a mismatched engine",
+                key.wire()
+            );
+            catalog.push((key.clone(), engine.input_shape().clone()));
             let rx = router.register(key.clone());
             handles.extend(spawn_workers(
                 key.label(),
                 rx,
-                Arc::new(exec),
+                Arc::new(SessionPool::new(engine)),
                 config.policy,
                 Arc::clone(&metrics),
                 config.workers_per_variant,
@@ -241,23 +257,23 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::router::ModeKey;
+    use crate::engine::{FloatEngine, VariantSpec};
     use crate::nn::Graph;
     use crate::tensor::Shape;
 
-    fn float_variant(name: &str) -> (VariantKey, ExecKind) {
+    fn float_variant(name: &str) -> (VariantKey, Arc<dyn Engine>) {
         let mut g = Graph::new(Shape::hwc(2, 2, 1));
         let x = g.input();
         let r = g.relu(x);
         g.mark_output(r);
         (
-            VariantKey { model: name.into(), mode: ModeKey::Fp32 },
-            ExecKind::Float(Arc::new(g)),
+            VariantKey::new(name, VariantSpec::Fp32),
+            Arc::new(FloatEngine::new(Arc::new(g))),
         )
     }
 
     fn fp32_key(name: &str) -> VariantKey {
-        VariantKey { model: name.into(), mode: ModeKey::Fp32 }
+        VariantKey::new(name, VariantSpec::Fp32)
     }
 
     #[test]
@@ -377,6 +393,20 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "mismatched engine")]
+    fn mismatched_key_and_engine_refused_at_registration() {
+        let (_, engine) = float_variant("m");
+        let lying_key = VariantKey::new(
+            "m",
+            VariantSpec::FakeQuant {
+                mode: crate::nn::QuantMode::Probabilistic,
+                gran: crate::quant::Granularity::PerTensor,
+            },
+        );
+        let _ = Server::start(vec![(lying_key, engine)], ServerConfig::default());
+    }
+
+    #[test]
     fn catalog_reports_input_shapes() {
         let server = Server::start(
             vec![float_variant("a"), float_variant("b")],
@@ -393,7 +423,7 @@ mod tests {
 
     #[test]
     fn int8_variant_serves_end_to_end() {
-        use crate::coordinator::router::{GranKey, ModeKey, QuantModeKey};
+        use crate::engine::Int8Engine;
         use crate::nn::int8_exec::Int8Executor;
         use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
         use crate::nn::QuantMode;
@@ -427,12 +457,15 @@ mod tests {
         );
         ex.calibrate(&calib);
         let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
-        let key = VariantKey {
-            model: "m8".into(),
-            mode: ModeKey::Int8(QuantModeKey::Ours, GranKey::T),
-        };
+        let key = VariantKey::new(
+            "m8",
+            VariantSpec::Int8 {
+                mode: QuantMode::Probabilistic,
+                weight_gran: Granularity::PerTensor,
+            },
+        );
         let server = Server::start(
-            vec![(key.clone(), ExecKind::Int8(Box::new(int8)))],
+            vec![(key.clone(), Arc::new(Int8Engine::new(Arc::new(int8))))],
             ServerConfig::default(),
         );
         let mut rxs = Vec::new();
@@ -442,7 +475,8 @@ mod tests {
         for (id, rx) in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.id, id);
-            assert_eq!(resp.outputs[0].shape().dims(), &[4]);
+            let outputs = resp.result.expect("int8 run succeeds");
+            assert_eq!(outputs[0].shape().dims(), &[4]);
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.responses(), 8);

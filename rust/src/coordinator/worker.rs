@@ -1,4 +1,5 @@
-//! Worker pool: drains a variant's queue in dynamic batches and executes.
+//! Worker pool: drains a variant's queue in dynamic batches and executes
+//! on pooled [`crate::engine::Session`]s.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -6,9 +7,9 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::batcher::{next_batch, BatchPolicy};
-use super::calibrate::ExecKind;
 use super::metrics::Metrics;
 use super::server::{Request, Response};
+use crate::engine::SessionPool;
 
 /// One in-flight job: the request plus its enqueue timestamp.
 pub struct Job {
@@ -18,11 +19,14 @@ pub struct Job {
 
 /// Spawn `n_threads` workers for one variant. All workers share the queue
 /// receiver (behind a mutex — only the batch-pull is serialized, execution
-/// is parallel).
+/// is parallel) and the variant's [`SessionPool`]: a worker checks a
+/// session out per batch, so the pool never holds more sessions than the
+/// variant's peak concurrency, and each session's arena is reused warm
+/// across every batch it serves.
 pub fn spawn_workers(
     name: String,
     rx: mpsc::Receiver<Job>,
-    exec: Arc<ExecKind>,
+    pool: Arc<SessionPool>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     n_threads: usize,
@@ -31,16 +35,12 @@ pub fn spawn_workers(
     (0..n_threads.max(1))
         .map(|i| {
             let rx = Arc::clone(&rx);
-            let exec = Arc::clone(&exec);
+            let pool = Arc::clone(&pool);
             let metrics = Arc::clone(&metrics);
             let name = format!("{name}#{i}");
             std::thread::Builder::new()
                 .name(name)
                 .spawn(move || {
-                    // One arena per worker thread, reused across every batch
-                    // and request this worker ever executes: after the first
-                    // request the forward pass allocates nothing.
-                    let mut arena = exec.make_arena();
                     loop {
                         // Pull one batch while holding the lock, then release
                         // it so sibling workers can pull the next batch while
@@ -51,13 +51,34 @@ pub fn spawn_workers(
                         };
                         let Some(batch) = batch else { return };
                         metrics.on_batch(batch.len());
+                        let mut session = match pool.acquire() {
+                            Ok(s) => s,
+                            Err(e) => {
+                                // Compile failure (e.g. an uncalibrated
+                                // variant): answer, don't drop.
+                                for job in batch {
+                                    let latency = job.enqueued.elapsed();
+                                    metrics.on_response(latency);
+                                    metrics.on_engine_error();
+                                    let _ = job.request.reply.send(Response {
+                                        id: job.request.id,
+                                        result: Err(e.clone()),
+                                        latency,
+                                    });
+                                }
+                                continue;
+                            }
+                        };
                         for job in batch {
-                            let outputs = exec.run_with_arena(&job.request.image, &mut arena);
+                            let result = session.run(&job.request.image);
                             let latency = job.enqueued.elapsed();
                             metrics.on_response(latency);
+                            if result.is_err() {
+                                metrics.on_engine_error();
+                            }
                             let _ = job.request.reply.send(Response {
                                 id: job.request.id,
-                                outputs,
+                                result,
                                 latency,
                             });
                         }
@@ -71,28 +92,29 @@ pub fn spawn_workers(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::router::{ModeKey, VariantKey};
+    use crate::engine::{FloatEngine, VariantKey, VariantSpec};
     use crate::nn::Graph;
     use crate::tensor::{Shape, Tensor};
     use std::time::Duration;
 
-    fn passthrough_exec() -> Arc<ExecKind> {
+    fn passthrough_pool() -> Arc<SessionPool> {
         // input -> relu graph: identity on non-negative images.
         let mut g = Graph::new(Shape::hwc(2, 2, 1));
         let x = g.input();
         let r = g.relu(x);
         g.mark_output(r);
-        Arc::new(ExecKind::Float(Arc::new(g)))
+        Arc::new(SessionPool::new(Arc::new(FloatEngine::new(Arc::new(g)))))
     }
 
     #[test]
     fn workers_process_and_reply() {
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::default());
+        let pool = passthrough_pool();
         let handles = spawn_workers(
             "test".into(),
             rx,
-            passthrough_exec(),
+            Arc::clone(&pool),
             BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) },
             Arc::clone(&metrics),
             2,
@@ -104,7 +126,7 @@ mod tests {
             tx.send(Job {
                 request: Request {
                     id,
-                    variant: VariantKey { model: "m".into(), mode: ModeKey::Fp32 },
+                    variant: VariantKey::new("m", VariantSpec::Fp32),
                     image: img,
                     reply: rtx,
                 },
@@ -116,7 +138,8 @@ mod tests {
         for (id, rrx) in replies {
             let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.id, id);
-            assert_eq!(resp.outputs[0].data()[0], id as f32);
+            let outputs = resp.result.expect("worker run succeeds");
+            assert_eq!(outputs[0].data()[0], id as f32);
         }
         drop(tx);
         for h in handles {
@@ -124,5 +147,66 @@ mod tests {
         }
         assert_eq!(metrics.responses(), 10);
         assert!(metrics.mean_batch() >= 1.0);
+        // Sessions were pooled, not re-compiled per request: at most one
+        // per worker thread is left idle.
+        assert!(pool.idle() >= 1 && pool.idle() <= 2, "idle {}", pool.idle());
+    }
+
+    /// A worker must answer (not drop) jobs whose variant cannot compile a
+    /// session, and the error must be typed.
+    #[test]
+    fn uncompilable_variant_answers_with_typed_error() {
+        use crate::engine::{EngineError, QuantEngine};
+        use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+        use crate::nn::QuantMode;
+
+        // A graph with a quantizable layer (linear), so missing
+        // calibration is actually detectable.
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let f = g.flatten(x);
+        let l = g.linear(
+            f,
+            Tensor::from_vec(Shape::new(&[2, 4]), vec![0.1, -0.2, 0.3, -0.4, 0.5, 0.2, -0.1, 0.4]),
+            vec![0.0; 2],
+        );
+        g.mark_output(l);
+        // Static mode, never calibrated: compile() fails.
+        let ex = QuantExecutor::new(
+            Arc::new(g),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        let pool = Arc::new(SessionPool::new(Arc::new(QuantEngine::new(Arc::new(ex)))));
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::default());
+        let handles = spawn_workers(
+            "uncal".into(),
+            rx,
+            pool,
+            BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) },
+            Arc::clone(&metrics),
+            1,
+        );
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Job {
+            request: Request {
+                id: 7,
+                variant: VariantKey::new("m", VariantSpec::Fp32),
+                image: Tensor::full(Shape::hwc(2, 2, 1), 1.0),
+                reply: rtx,
+            },
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert!(matches!(resp.result, Err(EngineError::NotCalibrated(_))));
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // The failure is observable, not hidden inside responses().
+        assert_eq!(metrics.responses(), 1);
+        assert_eq!(metrics.engine_errors(), 1);
     }
 }

@@ -1,0 +1,265 @@
+//! The built-in [`Engine`] implementations: fp32, fake-quant emulation,
+//! and the true-int8 engine.
+//!
+//! Each backend pairs an immutable engine (weights, buffer plan,
+//! calibration products — shared by every worker via `Arc`) with a private
+//! session type that owns the backend-appropriate workspace (an
+//! [`ExecArena`] for the f32 engines, an [`Int8Arena`] for int8). Because
+//! only the engine can mint its session, a (executor, arena) mismatch —
+//! representable and runtime-checked in the old `ExecKind`/`ArenaKind`
+//! design — is now unrepresentable by construction.
+
+use std::sync::Arc;
+
+use super::{Engine, EngineError, Session, VariantSpec};
+use crate::nn::{float_exec, ExecArena, Graph, Int8Arena, Int8Executor, MemoryPlan};
+use crate::nn::{QuantExecutor, QuantMode};
+use crate::tensor::{Shape, Tensor};
+
+/// FP32 engine over the in-process float executor (the tables' FP32
+/// column, served at arena speed).
+pub struct FloatEngine {
+    graph: Arc<Graph>,
+    /// Liveness-packed buffer plan, computed once and shared by every
+    /// compiled session.
+    plan: Arc<MemoryPlan>,
+}
+
+impl FloatEngine {
+    /// Wrap a graph for serving.
+    pub fn new(graph: Arc<Graph>) -> FloatEngine {
+        let plan = Arc::new(MemoryPlan::packed(&graph));
+        FloatEngine { graph, plan }
+    }
+}
+
+impl Engine for FloatEngine {
+    fn spec(&self) -> VariantSpec {
+        VariantSpec::Fp32
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.graph.input_shape()
+    }
+
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError> {
+        Ok(Box::new(FloatSession {
+            graph: Arc::clone(&self.graph),
+            arena: ExecArena::new(Arc::clone(&self.plan)),
+        }))
+    }
+}
+
+struct FloatSession {
+    graph: Arc<Graph>,
+    arena: ExecArena,
+}
+
+impl Session for FloatSession {
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
+        if input.shape() != self.graph.input_shape() {
+            return Err(EngineError::ShapeMismatch {
+                expected: self.graph.input_shape().clone(),
+                got: input.shape().clone(),
+            });
+        }
+        Ok(float_exec::run_with_arena(&self.graph, input, &mut self.arena))
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.graph.input_shape()
+    }
+}
+
+/// Fake-quant emulation engine (Fig. 1's three requantization strategies
+/// on f32 carriers) over a calibrated [`QuantExecutor`].
+pub struct QuantEngine {
+    ex: Arc<QuantExecutor>,
+}
+
+impl QuantEngine {
+    /// Wrap an executor. Calibration is checked at [`Engine::compile`]
+    /// time, not here, so a still-to-be-calibrated executor can be staged.
+    pub fn new(ex: Arc<QuantExecutor>) -> QuantEngine {
+        QuantEngine { ex }
+    }
+
+    /// The underlying executor (ablation drivers, oracles).
+    pub fn executor(&self) -> &Arc<QuantExecutor> {
+        &self.ex
+    }
+}
+
+impl Engine for QuantEngine {
+    fn spec(&self) -> VariantSpec {
+        let s = self.ex.settings();
+        VariantSpec::FakeQuant { mode: s.mode, gran: s.granularity }
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.ex.graph().input_shape()
+    }
+
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError> {
+        // Static needs the frozen ranges, PDQ the fitted (α, β); only
+        // dynamic mode is calibration-free (§3).
+        if self.ex.settings().mode != QuantMode::Dynamic && !self.ex.is_calibrated() {
+            return Err(EngineError::NotCalibrated(format!(
+                "{} variant compiled before calibrate()",
+                self.ex.settings().mode.label()
+            )));
+        }
+        Ok(Box::new(QuantSession { arena: self.ex.make_arena(), ex: Arc::clone(&self.ex) }))
+    }
+}
+
+struct QuantSession {
+    ex: Arc<QuantExecutor>,
+    arena: ExecArena,
+}
+
+impl Session for QuantSession {
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.ex.run_with_arena(input, &mut self.arena)
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.ex.graph().input_shape()
+    }
+}
+
+/// True-int8 engine over a lowered [`Int8Executor`]; responses are
+/// dequantized to f32 at the session boundary (drop-in for the f32
+/// engines, bit-exact vs the scalar CMSIS oracle).
+pub struct Int8Engine {
+    ex: Arc<Int8Executor>,
+}
+
+impl Int8Engine {
+    /// Wrap a lowered program (lowering already guarantees calibration).
+    pub fn new(ex: Arc<Int8Executor>) -> Int8Engine {
+        Int8Engine { ex }
+    }
+
+    /// The underlying lowered program (oracles, benchmarks).
+    pub fn executor(&self) -> &Arc<Int8Executor> {
+        &self.ex
+    }
+}
+
+impl Engine for Int8Engine {
+    fn spec(&self) -> VariantSpec {
+        VariantSpec::Int8 { mode: self.ex.mode(), weight_gran: self.ex.weight_granularity() }
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.ex.input_shape()
+    }
+
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError> {
+        Ok(Box::new(Int8Session { arena: self.ex.make_arena(), ex: Arc::clone(&self.ex) }))
+    }
+}
+
+struct Int8Session {
+    ex: Arc<Int8Executor>,
+    arena: Int8Arena,
+}
+
+impl Session for Int8Session {
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.ex.run_with_arena(input, &mut self.arena)
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.ex.input_shape()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant_exec::QuantSettings;
+    use crate::tensor::{ConvGeom, Shape};
+    use crate::util::Pcg32;
+
+    fn tiny_graph() -> Arc<Graph> {
+        let mut rng = Pcg32::new(0xE6E6);
+        let mut g = Graph::new(Shape::hwc(6, 6, 2));
+        let x = g.input();
+        let w: Vec<f32> = (0..4 * 9 * 2).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(
+            x,
+            Tensor::from_vec(Shape::ohwi(4, 3, 3, 2), w),
+            vec![0.0; 4],
+            ConvGeom::same(3, 1),
+        );
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        g.mark_output(p);
+        Arc::new(g)
+    }
+
+    fn image(seed: u64) -> Tensor<f32> {
+        let mut rng = Pcg32::new(seed);
+        let d: Vec<f32> = (0..6 * 6 * 2).map(|_| rng.uniform()).collect();
+        Tensor::from_vec(Shape::hwc(6, 6, 2), d)
+    }
+
+    #[test]
+    fn float_engine_matches_arena_executor_bit_exactly() {
+        let g = tiny_graph();
+        let engine = FloatEngine::new(Arc::clone(&g));
+        assert_eq!(engine.spec(), VariantSpec::Fp32);
+        let mut session = engine.compile().unwrap();
+        let img = image(1);
+        let got = session.run(&img).unwrap();
+        // Compare against the exact path the session wraps (the arena
+        // engine); the naive-oracle parity bound lives in kernel_parity.
+        let mut arena = crate::nn::ExecArena::for_run(&g);
+        let want = float_exec::run_with_arena(&g, &img, &mut arena);
+        assert_eq!(got[0].data(), want[0].data());
+    }
+
+    #[test]
+    fn sessions_reject_bad_shapes_with_typed_error() {
+        let engine = FloatEngine::new(tiny_graph());
+        let mut session = engine.compile().unwrap();
+        let bad = Tensor::full(Shape::hwc(2, 2, 1), 0.0);
+        match session.run(&bad) {
+            Err(EngineError::ShapeMismatch { expected, got }) => {
+                assert_eq!(expected.dims(), &[6, 6, 2]);
+                assert_eq!(got.dims(), &[2, 2, 1]);
+            }
+            other => panic!("want ShapeMismatch, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn uncalibrated_static_compile_is_typed_error() {
+        let ex = QuantExecutor::new(
+            tiny_graph(),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        let engine = QuantEngine::new(Arc::new(ex));
+        assert!(matches!(engine.compile(), Err(EngineError::NotCalibrated(_))));
+        // Dynamic mode is calibration-free and must compile.
+        let exd = QuantExecutor::new(
+            tiny_graph(),
+            QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
+        );
+        assert!(QuantEngine::new(Arc::new(exd)).compile().is_ok());
+    }
+
+    #[test]
+    fn run_batch_defaults_to_per_item_runs() {
+        let engine = FloatEngine::new(tiny_graph());
+        let mut session = engine.compile().unwrap();
+        let imgs = [image(1), image(2), image(3)];
+        let batch = session.run_batch(&imgs).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (img, out) in imgs.iter().zip(&batch) {
+            assert_eq!(out[0].data(), session.run(img).unwrap()[0].data());
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! [`EngineBuilder`]: the one construction path for every variant.
+//!
+//! Subsumes what used to be scattered across `coordinator/calibrate.rs`
+//! (`build_quant_variant` / `build_int8_variant`) and `main.rs`
+//! (`serve_variants`): pick a model, a [`VariantSpec`], the knobs (γ,
+//! bits, coverage), and a calibration source, and get back a boxed
+//! [`Engine`] — with every unbuildable combination surfacing as a typed
+//! [`EngineError`] instead of a panic or an ad-hoc `String`.
+
+use std::sync::Arc;
+
+use super::backends::{FloatEngine, Int8Engine, QuantEngine};
+use super::{Engine, EngineError, VariantKey, VariantSpec};
+use crate::data::{shapes, Task};
+use crate::models::Model;
+use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+use crate::nn::{Int8Executor, QuantMode};
+use crate::quant::Granularity;
+use crate::tensor::Tensor;
+
+/// The paper's calibration-set size (§5.2): the *same* 16 images feed
+/// static quantization and the probabilistic interval fit.
+pub const CALIB_SIZE: usize = 16;
+
+/// Calibration images for a task (the shared set).
+pub fn calibration_images(task: Task, n: usize) -> Vec<Tensor<f32>> {
+    shapes::dataset(task, shapes::Split::Calib, n).iter().map(|s| s.image_f32()).collect()
+}
+
+/// Fluent builder for one model variant. All knobs default to the paper's
+/// settings; calibration images default to the model task's shared
+/// [`CALIB_SIZE`]-image set.
+pub struct EngineBuilder<'m> {
+    model: &'m Model,
+    spec: VariantSpec,
+    gamma: usize,
+    bits: u32,
+    coverage: f32,
+    calib: Option<Vec<Tensor<f32>>>,
+    calib_size: usize,
+}
+
+impl<'m> EngineBuilder<'m> {
+    /// Start building a variant of `model` (defaults to [`VariantSpec::Fp32`]).
+    pub fn new(model: &'m Model) -> EngineBuilder<'m> {
+        let d = QuantSettings::default();
+        EngineBuilder {
+            model,
+            spec: VariantSpec::Fp32,
+            gamma: 1,
+            bits: d.bits,
+            coverage: d.coverage,
+            calib: None,
+            calib_size: CALIB_SIZE,
+        }
+    }
+
+    /// Which execution strategy to build.
+    pub fn spec(mut self, spec: VariantSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Sampling stride γ for the probabilistic estimator (§4.2).
+    pub fn gamma(mut self, gamma: usize) -> Self {
+        self.gamma = gamma;
+        self
+    }
+
+    /// Quantization bit-width (fake-quant only; int8 lowering requires 8).
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    /// Target coverage for the Eq. 13 interval calibration.
+    pub fn coverage(mut self, coverage: f32) -> Self {
+        self.coverage = coverage;
+        self
+    }
+
+    /// Use this explicit calibration set instead of the task default.
+    pub fn calibration_images(mut self, images: &[Tensor<f32>]) -> Self {
+        self.calib = Some(images.to_vec());
+        self
+    }
+
+    /// Size of the auto-generated task calibration set (ignored when an
+    /// explicit set was supplied).
+    pub fn calibration_size(mut self, n: usize) -> Self {
+        self.calib_size = n;
+        self
+    }
+
+    /// The [`VariantKey`] this builder's engine will serve under.
+    pub fn key(&self) -> VariantKey {
+        VariantKey { model: self.model.name.clone(), spec: self.spec }
+    }
+
+    /// Take the calibration set out of the (consumed) builder — moves the
+    /// supplied images instead of cloning them per build.
+    fn take_calib(&mut self) -> Vec<Tensor<f32>> {
+        self.calib
+            .take()
+            .unwrap_or_else(|| calibration_images(self.model.task, self.calib_size))
+    }
+
+    fn validate(&self) -> Result<(), EngineError> {
+        if self.gamma == 0 {
+            return Err(EngineError::InvalidSpec("gamma must be >= 1".into()));
+        }
+        if !(2..=8).contains(&self.bits) {
+            return Err(EngineError::InvalidSpec(format!(
+                "bits must be in 2..=8, got {}",
+                self.bits
+            )));
+        }
+        Ok(())
+    }
+
+    /// Assemble emulator settings from the builder knobs.
+    fn quant_settings(&self, mode: QuantMode, gran: Granularity) -> QuantSettings {
+        QuantSettings {
+            mode,
+            granularity: gran,
+            bits: self.bits,
+            gamma: self.gamma,
+            coverage: self.coverage,
+        }
+    }
+
+    /// Build the calibrated fake-quant executor behind a
+    /// [`VariantSpec::FakeQuant`] spec — the escape hatch for drivers that
+    /// mutate the executor before serving (the A1/A2 ablations). Other
+    /// specs return [`EngineError::InvalidSpec`].
+    pub fn build_executor(mut self) -> Result<QuantExecutor, EngineError> {
+        self.validate()?;
+        let VariantSpec::FakeQuant { mode, gran } = self.spec else {
+            return Err(EngineError::InvalidSpec(format!(
+                "build_executor() needs a FakeQuant spec, got {:?}",
+                self.spec
+            )));
+        };
+        let settings = self.quant_settings(mode, gran);
+        let mut ex = QuantExecutor::new(Arc::clone(&self.model.graph), settings);
+        ex.calibrate(&self.take_calib());
+        Ok(ex)
+    }
+
+    /// Build the engine.
+    pub fn build(mut self) -> Result<Arc<dyn Engine>, EngineError> {
+        self.validate()?;
+        match self.spec {
+            VariantSpec::Fp32 => Ok(Arc::new(FloatEngine::new(Arc::clone(&self.model.graph)))),
+            VariantSpec::FakeQuant { .. } => {
+                let ex = self.build_executor()?;
+                Ok(Arc::new(QuantEngine::new(Arc::new(ex))))
+            }
+            VariantSpec::Int8 { mode, weight_gran } => {
+                // The f32 emulator is calibration scaffolding only: int8
+                // activations are per-tensor by construction (CMSIS).
+                let settings = self.quant_settings(mode, Granularity::PerTensor);
+                let mut ex = QuantExecutor::new(Arc::clone(&self.model.graph), settings);
+                ex.calibrate(&self.take_calib());
+                let int8 =
+                    Int8Executor::lower(&ex, weight_gran).map_err(EngineError::InvalidSpec)?;
+                Ok(Arc::new(Int8Engine::new(Arc::new(int8))))
+            }
+        }
+    }
+
+    /// Build the engine together with its serving [`VariantKey`].
+    pub fn build_variant(self) -> Result<(VariantKey, Arc<dyn Engine>), EngineError> {
+        let key = self.key();
+        Ok((key, self.build()?))
+    }
+}
+
+/// The standard serving menu for one model: fp32 plus the paper's three
+/// requantization modes, each as fake-quant emulation and as true int8
+/// (per-tensor grids), all sharing one calibration set — what `pdq serve`
+/// registers.
+pub fn standard_menu(model: &Model) -> Result<Vec<(VariantKey, Arc<dyn Engine>)>, EngineError> {
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let mut out = vec![EngineBuilder::new(model).calibration_images(&calib).build_variant()?];
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        out.push(
+            EngineBuilder::new(model)
+                .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build_variant()?,
+        );
+    }
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        out.push(
+            EngineBuilder::new(model)
+                .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor })
+                .calibration_images(&calib)
+                .build_variant()?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calibrate::demo_model;
+
+    #[test]
+    fn builder_rejects_bad_knobs() {
+        let model = demo_model("m");
+        assert!(matches!(
+            EngineBuilder::new(&model).gamma(0).build(),
+            Err(EngineError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant {
+                    mode: QuantMode::Static,
+                    gran: Granularity::PerTensor
+                })
+                .bits(1)
+                .build(),
+            Err(EngineError::InvalidSpec(_))
+        ));
+        // Int8 lowering refuses non-8-bit grids with a typed error.
+        assert!(matches!(
+            EngineBuilder::new(&model)
+                .spec(VariantSpec::Int8 {
+                    mode: QuantMode::Static,
+                    weight_gran: Granularity::PerTensor
+                })
+                .bits(4)
+                .build(),
+            Err(EngineError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            EngineBuilder::new(&model).build_executor(),
+            Err(EngineError::InvalidSpec(_)),
+        ));
+    }
+
+    #[test]
+    fn standard_menu_builds_all_seven_variants() {
+        let model = demo_model("demo");
+        let menu = standard_menu(&model).expect("menu builds");
+        assert_eq!(menu.len(), 7);
+        let wires: Vec<String> = menu.iter().map(|(k, _)| k.wire()).collect();
+        assert!(wires.contains(&"demo|fp32".to_string()));
+        assert!(wires.contains(&"demo|ours-t".to_string()));
+        assert!(wires.contains(&"demo|int8-ours-t".to_string()));
+        for (key, engine) in &menu {
+            assert_eq!(key.spec, engine.spec(), "key and engine must agree");
+            let mut session = engine.compile().expect("compiles");
+            let img = calibration_images(model.task, 1).remove(0);
+            let out = session.run(&img).expect("runs");
+            assert_eq!(out[0].shape().dims(), &[10]);
+        }
+    }
+
+    #[test]
+    fn builder_key_matches_built_engine_spec() {
+        let model = demo_model("m");
+        for spec in VariantSpec::all() {
+            let b = EngineBuilder::new(&model).spec(spec).calibration_size(4);
+            assert_eq!(b.key().spec, spec);
+        }
+    }
+}

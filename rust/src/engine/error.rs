@@ -1,0 +1,60 @@
+//! The typed error surface of the [`crate::engine`] API.
+//!
+//! Every failure a caller can provoke — bad input shapes, running an
+//! uncalibrated variant, asking for an unbuildable configuration — is a
+//! variant here instead of a `panic!` inside an executor. The serving
+//! boundary maps these onto HTTP statuses (`ShapeMismatch` → 400, the
+//! rest → 500), so a worker thread can never be killed by request data.
+
+use crate::tensor::Shape;
+
+/// Why an engine could not be built, compiled, or run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// The input tensor's shape does not match the compiled program's
+    /// input shape.
+    ShapeMismatch {
+        /// The shape the compiled program expects.
+        expected: Shape,
+        /// The shape the caller provided.
+        got: Shape,
+    },
+    /// The variant requires calibration products (frozen ranges, fitted
+    /// `(α, β)` intervals) that were never produced.
+    NotCalibrated(String),
+    /// The requested (mode, granularity, bits, γ) combination is not
+    /// representable on the chosen backend.
+    InvalidSpec(String),
+    /// The backend failed internally.
+    Backend(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::ShapeMismatch { expected, got } => {
+                write!(f, "input shape mismatch: got {got}, variant expects {expected}")
+            }
+            EngineError::NotCalibrated(what) => write!(f, "not calibrated: {what}"),
+            EngineError::InvalidSpec(why) => write!(f, "invalid variant spec: {why}"),
+            EngineError::Backend(why) => write!(f, "backend error: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_both_shapes() {
+        let e = EngineError::ShapeMismatch {
+            expected: Shape::hwc(8, 8, 2),
+            got: Shape::hwc(2, 2, 1),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("[8, 8, 2]") && msg.contains("[2, 2, 1]"), "{msg}");
+    }
+}

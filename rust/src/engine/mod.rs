@@ -1,0 +1,109 @@
+//! # `pdq::engine` — the crate's front-door execution API.
+//!
+//! The paper's pitch is that PDQ is a *drop-in requantization policy*: the
+//! same network, three parameter-selection strategies (§3, Fig. 1). This
+//! module makes that the shape of the API. One [`Engine`] abstraction
+//! serves every backend — fp32, fake-quant emulation, true int8, and
+//! whatever comes next (a PJRT runtime, other bit widths) — so callers
+//! never touch backend-specific executors, arenas, or the parallel enums
+//! that used to glue them together.
+//!
+//! ```text
+//!  EngineBuilder ──build()──▶ Arc<dyn Engine> ──compile()──▶ Box<dyn Session>
+//!   model + VariantSpec        immutable, shared             owns its arena,
+//!   + γ/bits/coverage          across workers                one per worker
+//!   + calibration set
+//! ```
+//!
+//! - [`VariantSpec`] / [`VariantKey`] — variant identity and the stable
+//!   `<model>|<mode>` wire naming.
+//! - [`EngineBuilder`] — the one construction path (model + spec + knobs +
+//!   calibration), plus [`standard_menu`] for the full serving menu.
+//! - [`Engine`] / [`Session`] — compile-then-run; a session owns its
+//!   backend-appropriate workspace, so executor/arena mismatches are
+//!   unrepresentable.
+//! - [`SessionPool`] — RAII per-worker session reuse.
+//! - [`EngineError`] — typed shape/calibration/spec/backend errors; no
+//!   panic is reachable from request data.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pdq::engine::{EngineBuilder, VariantSpec};
+//! use pdq::nn::QuantMode;
+//! use pdq::quant::Granularity;
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! # let model = pdq::coordinator::calibrate::demo_model("demo");
+//! # let image = pdq::engine::calibration_images(model.task, 1).remove(0);
+//! let engine = EngineBuilder::new(&model)
+//!     .spec(VariantSpec::FakeQuant {
+//!         mode: QuantMode::Probabilistic,
+//!         gran: Granularity::PerTensor,
+//!     })
+//!     .gamma(2)
+//!     .build()?;
+//! let mut session = engine.compile()?;
+//! let outputs = session.run(&image)?;
+//! # let _ = outputs;
+//! # Ok(())
+//! # }
+//! ```
+
+#![deny(missing_docs)]
+#![deny(clippy::all)]
+
+mod backends;
+mod builder;
+mod error;
+mod pool;
+mod spec;
+
+pub use backends::{FloatEngine, Int8Engine, QuantEngine};
+pub use builder::{calibration_images, standard_menu, EngineBuilder, CALIB_SIZE};
+pub use error::EngineError;
+pub use pool::{PooledSession, SessionPool};
+pub use spec::{VariantKey, VariantSpec};
+
+use crate::tensor::{Shape, Tensor};
+
+/// A compiled, servable model variant.
+///
+/// An engine is the immutable half of a backend — weights, buffer plans,
+/// calibration products — shared across worker threads behind an `Arc`.
+/// [`Engine::compile`] mints [`Session`]s that own the mutable per-worker
+/// state (arenas, scratch). New backends implement this trait instead of
+/// growing match arms in the coordinator.
+pub trait Engine: Send + Sync {
+    /// Which variant this engine executes.
+    fn spec(&self) -> VariantSpec;
+
+    /// The input shape every session of this engine expects.
+    fn input_shape(&self) -> &Shape;
+
+    /// Create a session owning its backend-appropriate workspace.
+    ///
+    /// Fails with [`EngineError::NotCalibrated`] when the variant's
+    /// calibration products are missing (e.g. a static-mode executor that
+    /// never saw `calibrate()`), so the failure surfaces where the session
+    /// is minted — at pool checkout in the serving path — as one typed
+    /// error per batch, never as a panic deep inside a request's kernels.
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError>;
+}
+
+/// A per-worker execution context: exclusive, reusable, allocation-free in
+/// steady state.
+pub trait Session: Send {
+    /// Run one input; returns the model's output tensors (f32 at the API
+    /// boundary for every backend — int8 engines dequantize on the way
+    /// out, keeping sessions drop-in interchangeable).
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError>;
+
+    /// Run a batch; the default executes [`Session::run`] per item on this
+    /// session's workspace. Backends with true batch kernels override it.
+    fn run_batch(&mut self, inputs: &[Tensor<f32>]) -> Result<Vec<Vec<Tensor<f32>>>, EngineError> {
+        inputs.iter().map(|input| self.run(input)).collect()
+    }
+
+    /// The input shape this session expects.
+    fn input_shape(&self) -> &Shape;
+}

@@ -1,0 +1,135 @@
+//! [`SessionPool`]: per-worker session reuse.
+//!
+//! Sessions own mutable workspaces (arenas, estimator scratch), so they
+//! cannot be shared — but compiling one per request would re-allocate the
+//! very buffers the arena design exists to amortize. The pool checks
+//! sessions out RAII-style: [`SessionPool::acquire`] pops an idle session
+//! (or compiles one lazily, so a pool serving `n` concurrent workers
+//! never holds more than `n` sessions), and dropping the
+//! [`PooledSession`] returns it warm for the next batch.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+use super::{Engine, EngineError, Session};
+
+/// A pool of reusable [`Session`]s for one engine.
+pub struct SessionPool {
+    engine: Arc<dyn Engine>,
+    free: Mutex<Vec<Box<dyn Session>>>,
+}
+
+impl SessionPool {
+    /// Create an empty pool over `engine` (sessions are compiled lazily).
+    pub fn new(engine: Arc<dyn Engine>) -> SessionPool {
+        SessionPool { engine, free: Mutex::new(Vec::new()) }
+    }
+
+    /// The pooled engine.
+    pub fn engine(&self) -> &Arc<dyn Engine> {
+        &self.engine
+    }
+
+    /// Check a session out, compiling a fresh one only when every pooled
+    /// session is in use.
+    pub fn acquire(&self) -> Result<PooledSession<'_>, EngineError> {
+        let cached = self.free.lock().unwrap().pop();
+        let session = match cached {
+            Some(s) => s,
+            None => self.engine.compile()?,
+        };
+        Ok(PooledSession { pool: self, session: Some(session) })
+    }
+
+    /// How many sessions are currently idle in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// A checked-out session; derefs to [`Session`] and returns itself to the
+/// pool on drop.
+pub struct PooledSession<'p> {
+    pool: &'p SessionPool,
+    session: Option<Box<dyn Session>>,
+}
+
+impl Deref for PooledSession<'_> {
+    type Target = dyn Session;
+
+    fn deref(&self) -> &Self::Target {
+        self.session.as_deref().expect("session present until drop")
+    }
+}
+
+impl DerefMut for PooledSession<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.session.as_deref_mut().expect("session present until drop")
+    }
+}
+
+impl Drop for PooledSession<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.session.take() {
+            self.pool.free.lock().unwrap().push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::nn::Graph;
+    use crate::tensor::{Shape, Tensor};
+    use std::sync::Arc;
+
+    fn pool() -> SessionPool {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        SessionPool::new(Arc::new(FloatEngine::new(Arc::new(g))))
+    }
+
+    #[test]
+    fn sessions_are_reused_not_multiplied() {
+        let pool = pool();
+        assert_eq!(pool.idle(), 0);
+        let img = Tensor::full(Shape::hwc(2, 2, 1), 1.0);
+        for _ in 0..5 {
+            let mut s = pool.acquire().unwrap();
+            let out = s.run(&img).unwrap();
+            assert_eq!(out[0].data(), &[1.0; 4]);
+        }
+        // Sequential checkouts reuse the single compiled session.
+        assert_eq!(pool.idle(), 1);
+        // Two concurrent checkouts force a second compile.
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = Arc::new(pool());
+        let mut joins = Vec::new();
+        for t in 0..4u32 {
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let img = Tensor::full(Shape::hwc(2, 2, 1), t as f32);
+                for _ in 0..8 {
+                    let mut s = pool.acquire().unwrap();
+                    let out = s.run(&img).unwrap();
+                    assert_eq!(out[0].data()[0], t as f32);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(pool.idle() >= 1 && pool.idle() <= 4);
+    }
+}

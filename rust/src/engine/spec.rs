@@ -1,0 +1,276 @@
+//! Variant identity: what a served model variant executes, and its stable
+//! wire name.
+//!
+//! [`VariantSpec`] is the single source of truth for "which execution
+//! strategy" — fp32, fake-quant emulation at a granularity, or true int8
+//! with a weight-scale granularity — replacing the parallel
+//! `ExecKind`/`ArenaKind`/`ModeKey` enums the coordinator used to keep in
+//! sync by hand. [`VariantKey`] pairs a spec with a model name and owns the
+//! `<model>|<mode>` naming clients put on the wire (`m|fp32`, `m|ours-t`,
+//! `m|int8-static-c`, ...). The wire grammar is unchanged from the
+//! pre-redesign `ModeKey`, so existing clients keep working.
+
+use crate::nn::QuantMode;
+use crate::quant::Granularity;
+
+/// Which execution strategy a variant uses. `Copy`, totally ordered, and
+/// hashable so it can key routers and catalogs directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum VariantSpec {
+    /// Full-precision reference path (the in-process float engine).
+    Fp32,
+    /// Calibrated quantization emulation (f32 carriers, §5.2's
+    /// "custom-made quantization API").
+    FakeQuant {
+        /// Pre-activation requantization strategy (Fig. 1).
+        mode: QuantMode,
+        /// Activation-grid granularity.
+        gran: Granularity,
+    },
+    /// True-int8 execution on the integer-native engine. Activations are
+    /// per-tensor by construction (the CMSIS convention); the granularity
+    /// here names the *weight* scales.
+    Int8 {
+        /// Pre-activation requantization strategy (Fig. 1).
+        mode: QuantMode,
+        /// Weight-scale granularity.
+        weight_gran: Granularity,
+    },
+}
+
+/// Strict wire token for a mode (`static` | `dynamic` | `ours`); the
+/// parser rejects the `FromStr` aliases so wire names stay canonical.
+fn parse_mode_wire(s: &str) -> Result<QuantMode, String> {
+    match s {
+        "static" => Ok(QuantMode::Static),
+        "dynamic" => Ok(QuantMode::Dynamic),
+        "ours" => Ok(QuantMode::Probabilistic),
+        other => Err(format!("unknown quant mode {other:?}")),
+    }
+}
+
+fn gran_wire(g: Granularity) -> &'static str {
+    match g {
+        Granularity::PerTensor => "t",
+        Granularity::PerChannel => "c",
+    }
+}
+
+fn parse_gran_wire(s: &str) -> Result<Granularity, String> {
+    match s {
+        "t" => Ok(Granularity::PerTensor),
+        "c" => Ok(Granularity::PerChannel),
+        other => Err(format!("unknown granularity {other:?}")),
+    }
+}
+
+impl VariantSpec {
+    /// Every representable spec: fp32 + {3 modes × 2 granularities} for
+    /// both the fake-quant and int8 backends (13 total). Menus and the
+    /// wire round-trip property test enumerate this.
+    pub fn all() -> Vec<VariantSpec> {
+        let mut out = vec![VariantSpec::Fp32];
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            for gran in [Granularity::PerTensor, Granularity::PerChannel] {
+                out.push(VariantSpec::FakeQuant { mode, gran });
+                out.push(VariantSpec::Int8 { mode, weight_gran: gran });
+            }
+        }
+        out
+    }
+
+    /// Stable wire name: `fp32`, `<mode>-<gran>`, `int8-<mode>-<gran>`
+    /// ([`VariantSpec::parse_wire`] is the exact inverse).
+    pub fn wire(&self) -> String {
+        match self {
+            VariantSpec::Fp32 => "fp32".into(),
+            VariantSpec::FakeQuant { mode, gran } => {
+                format!("{}-{}", mode.label(), gran_wire(*gran))
+            }
+            VariantSpec::Int8 { mode, weight_gran } => {
+                format!("int8-{}-{}", mode.label(), gran_wire(*weight_gran))
+            }
+        }
+    }
+
+    /// Parse a wire name produced by [`VariantSpec::wire`]; anything else
+    /// is a descriptive `Err`.
+    pub fn parse_wire(s: &str) -> Result<VariantSpec, String> {
+        if s == "fp32" {
+            return Ok(VariantSpec::Fp32);
+        }
+        let parts: Vec<&str> = s.split('-').collect();
+        match parts.as_slice() {
+            [m, g] => {
+                Ok(VariantSpec::FakeQuant { mode: parse_mode_wire(m)?, gran: parse_gran_wire(g)? })
+            }
+            ["int8", m, g] => Ok(VariantSpec::Int8 {
+                mode: parse_mode_wire(m)?,
+                weight_gran: parse_gran_wire(g)?,
+            }),
+            _ => Err(format!("unknown mode {s:?} (want fp32 | <mode>-<gran> | int8-<mode>-<gran>)")),
+        }
+    }
+
+    /// Human-readable label (display only — never parsed): `fp32`,
+    /// `ours/T`, `int8/static/C`, ...
+    pub fn label(&self) -> String {
+        match self {
+            VariantSpec::Fp32 => "fp32".into(),
+            VariantSpec::FakeQuant { mode, gran } => {
+                format!("{}/{}", mode.label(), gran.label())
+            }
+            VariantSpec::Int8 { mode, weight_gran } => {
+                format!("int8/{}/{}", mode.label(), weight_gran.label())
+            }
+        }
+    }
+}
+
+/// Full variant identity: a model name plus its [`VariantSpec`].
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VariantKey {
+    /// The served model's name (must not contain `'|'`).
+    pub model: String,
+    /// The execution strategy.
+    pub spec: VariantSpec,
+}
+
+impl VariantKey {
+    /// Build a key from a model name and a spec.
+    pub fn new(model: impl Into<String>, spec: VariantSpec) -> VariantKey {
+        VariantKey { model: model.into(), spec }
+    }
+
+    /// Display label: `<model>/<spec label>` (worker thread names, tables).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.model, self.spec.label())
+    }
+
+    /// `<model>|<spec wire>` — the name clients put on the wire.
+    pub fn wire(&self) -> String {
+        format!("{}|{}", self.model, self.spec.wire())
+    }
+
+    /// Parse a wire name produced by [`VariantKey::wire`].
+    pub fn parse_wire(s: &str) -> Result<VariantKey, String> {
+        let (model, mode) =
+            s.split_once('|').ok_or_else(|| format!("variant {s:?} missing '|' separator"))?;
+        if model.is_empty() {
+            return Err(format!("variant {s:?} has an empty model name"));
+        }
+        Ok(VariantKey { model: model.to_string(), spec: VariantSpec::parse_wire(mode)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+
+    #[test]
+    fn wire_roundtrips_every_representable_spec() {
+        let specs = VariantSpec::all();
+        assert_eq!(specs.len(), 13, "1 fp32 + 3 modes x 2 grans x 2 backends");
+        for spec in specs {
+            let key = VariantKey::new("micro_resnet", spec);
+            let wire = key.wire();
+            assert_eq!(VariantKey::parse_wire(&wire).unwrap(), key, "roundtrip {wire}");
+            assert_eq!(VariantSpec::parse_wire(&spec.wire()).unwrap(), spec);
+        }
+        // Spot-check the grammar is byte-stable (serving clients depend on it).
+        assert_eq!(VariantSpec::Fp32.wire(), "fp32");
+        assert_eq!(
+            VariantSpec::Int8 {
+                mode: QuantMode::Probabilistic,
+                weight_gran: Granularity::PerChannel
+            }
+            .wire(),
+            "int8-ours-c"
+        );
+        assert_eq!(
+            VariantKey::parse_wire("m|int8-ours-c").unwrap().spec,
+            VariantSpec::Int8 {
+                mode: QuantMode::Probabilistic,
+                weight_gran: Granularity::PerChannel
+            }
+        );
+    }
+
+    /// Property: for random model names over the serving charset and every
+    /// representable spec, `wire` and `parse_wire` are exact inverses.
+    #[test]
+    fn prop_wire_roundtrip_random_models() {
+        let charset: Vec<char> = "abcdefghijklmnopqrstuvwxyz0123456789_.-".chars().collect();
+        let specs = VariantSpec::all();
+        Checker::new(0x5EC5, 256).check("variant wire roundtrip", |rng| {
+            let len = rng.int_range(1, 24) as usize;
+            let model: String = (0..len).map(|_| *rng.choice(&charset)).collect();
+            let spec = *rng.choice(&specs);
+            let key = VariantKey { model, spec };
+            let wire = key.wire();
+            let back = VariantKey::parse_wire(&wire).map_err(|e| format!("{wire:?}: {e}"))?;
+            if back != key {
+                return Err(format!("{wire:?} parsed to {back:?}, want {key:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: corrupting any valid wire name in structural ways
+    /// (dropping the separator, emptying the model, mangling the mode
+    /// token, appending a segment) must produce a parse error, never a
+    /// silently different variant.
+    #[test]
+    fn prop_malformed_wires_rejected() {
+        let specs = VariantSpec::all();
+        Checker::new(0xBAD1, 256).check("malformed wire rejected", |rng| {
+            let spec = *rng.choice(&specs);
+            let key = VariantKey::new("m", spec);
+            let wire = key.wire();
+            let bad = match rng.int_range(0, 3) {
+                0 => wire.replace('|', ""),
+                1 => format!("|{}", spec.wire()),
+                2 => format!("m|x{}", spec.wire()),
+                _ => format!("{wire}-zz"),
+            };
+            match VariantKey::parse_wire(&bad) {
+                Err(_) => Ok(()),
+                Ok(k) => Err(format!("{bad:?} parsed to {k:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn malformed_wire_fixtures_rejected() {
+        for bad in [
+            "",
+            "no-separator",
+            "m|",
+            "m|int9-ours-t",
+            "m|ours",
+            "m|ours-x",
+            "|fp32",
+            "m|probabilistic-t", // FromStr alias, not a wire token
+            "m|OURS-T",          // wire names are case-sensitive
+            "m|int8-ours",
+            "m|int8--t",
+            "m|fp32-t",
+        ] {
+            assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn labels_are_human_readable() {
+        let k = VariantKey::new(
+            "m",
+            VariantSpec::FakeQuant {
+                mode: QuantMode::Probabilistic,
+                gran: Granularity::PerTensor,
+            },
+        );
+        assert_eq!(k.label(), "m/ours/T");
+        assert_eq!(VariantKey::new("m", VariantSpec::Fp32).label(), "m/fp32");
+    }
+}

@@ -1,10 +1,10 @@
 //! Task-aware evaluation: run an executor over a test set and compute the
 //! paper's metric (top-1 for classification, mAP50-95 otherwise).
 
-use crate::coordinator::calibrate::ExecKind;
 use crate::data::corrupt::sample_corruption;
 use crate::data::shapes::DataSample;
 use crate::data::Task;
+use crate::engine::Engine;
 use crate::eval::{map50_95, matchers, Detection, GroundTruth};
 use crate::models::heads;
 use crate::tensor::Tensor;
@@ -20,8 +20,15 @@ pub enum EvalProtocol {
     OutOfDomain { seed: u64 },
 }
 
-/// Run `exec` on `samples` and compute the task metric.
-pub fn evaluate(task: Task, exec: &ExecKind, samples: &[DataSample], protocol: EvalProtocol) -> f32 {
+/// Run one compiled session of `engine` over `samples` and compute the
+/// task metric (any [`Engine`] implementation plugs in).
+pub fn evaluate(
+    task: Task,
+    engine: &dyn Engine,
+    samples: &[DataSample],
+    protocol: EvalProtocol,
+) -> f32 {
+    let mut session = engine.compile().expect("engine compiles for evaluation");
     let mut rng = match protocol {
         EvalProtocol::InDomain => None,
         EvalProtocol::OutOfDomain { seed } => Some(Pcg32::new(seed)),
@@ -33,7 +40,7 @@ pub fn evaluate(task: Task, exec: &ExecKind, samples: &[DataSample], protocol: E
             if let Some(rng) = rng.as_mut() {
                 img = sample_corruption(&img, rng).0;
             }
-            exec.run(&img)
+            session.run(&img).expect("evaluation run")
         })
         .collect();
     score(task, samples, &outputs)

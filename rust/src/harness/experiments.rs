@@ -7,8 +7,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::eval_runner::{evaluate, EvalProtocol};
-use crate::coordinator::calibrate::{build_quant_variant, calibration_images, ExecKind, CALIB_SIZE};
 use crate::data::shapes;
+use crate::engine::{
+    calibration_images, EngineBuilder, FloatEngine, QuantEngine, VariantSpec, CALIB_SIZE,
+};
 use crate::mcu::{conv_cycles, estimation_cycles, CortexM4, ConvShape};
 use crate::models::{zoo, Model};
 use crate::nn::{memory, QuantMode};
@@ -58,13 +60,17 @@ fn table_row(model: &Model, opts: &ExpOptions, protocol: EvalProtocol) -> Vec<f3
     let samples = shapes::dataset(model.task, shapes::Split::Test, opts.n_test);
     let calib = calibration_images(model.task, CALIB_SIZE);
     let mut row = Vec::with_capacity(7);
-    let fp = ExecKind::Float(Arc::clone(&model.graph));
+    let fp = FloatEngine::new(Arc::clone(&model.graph));
     row.push(evaluate(model.task, &fp, &samples, protocol));
     for mode in [QuantMode::Probabilistic, QuantMode::Dynamic, QuantMode::Static] {
         for gran in [Granularity::PerTensor, Granularity::PerChannel] {
-            let ex = build_quant_variant(model, mode, gran, opts.gamma, &calib);
-            let kind = ExecKind::Quant(Box::new(ex));
-            row.push(evaluate(model.task, &kind, &samples, protocol));
+            let engine = EngineBuilder::new(model)
+                .spec(VariantSpec::FakeQuant { mode, gran })
+                .gamma(opts.gamma)
+                .calibration_images(&calib)
+                .build()
+                .expect("variant builds");
+            row.push(evaluate(model.task, engine.as_ref(), &samples, protocol));
         }
     }
     row
@@ -159,8 +165,12 @@ pub fn fig4(artifacts: &Path, opts: &ExpOptions) -> Result<Table> {
         let mut cells = vec![gamma.to_string()];
         for protocol in [EvalProtocol::InDomain, EvalProtocol::OutOfDomain { seed: opts.ood_seed }] {
             for gran in [Granularity::PerTensor, Granularity::PerChannel] {
-                let ex = build_quant_variant(&model, QuantMode::Probabilistic, gran, gamma, &calib);
-                let acc = evaluate(model.task, &ExecKind::Quant(Box::new(ex)), &samples, protocol);
+                let engine = EngineBuilder::new(&model)
+                    .spec(VariantSpec::FakeQuant { mode: QuantMode::Probabilistic, gran })
+                    .gamma(gamma)
+                    .calibration_images(&calib)
+                    .build()?;
+                let acc = evaluate(model.task, engine.as_ref(), &samples, protocol);
                 cells.push(fmt4(acc as f64));
             }
         }
@@ -190,10 +200,17 @@ pub fn fig5(artifacts: &Path, opts: &ExpOptions) -> Result<Table> {
                     .take(size)
                     .map(|s| s.image_f32())
                     .collect();
-                let ex = build_quant_variant(&model, QuantMode::Probabilistic, gran, 4, &imgs);
+                let engine = EngineBuilder::new(&model)
+                    .spec(VariantSpec::FakeQuant {
+                        mode: QuantMode::Probabilistic,
+                        gran,
+                    })
+                    .gamma(4)
+                    .calibration_images(&imgs)
+                    .build()?;
                 accs.push(evaluate(
                     model.task,
-                    &ExecKind::Quant(Box::new(ex)),
+                    engine.as_ref(),
                     &samples,
                     EvalProtocol::InDomain,
                 ));
@@ -224,11 +241,18 @@ pub fn ablate_sigma(artifacts: &Path, opts: &ExpOptions) -> Result<Table> {
     for (label, shared) in [("per-channel sigma", false), ("shared sigma", true)] {
         let mut cells = vec![label.to_string()];
         for gran in [Granularity::PerTensor, Granularity::PerChannel] {
-            let mut ex = build_quant_variant(&model, QuantMode::Probabilistic, gran, opts.gamma, &calib);
+            // The ablation mutates the executor before serving, so build
+            // it through the builder's escape hatch and wrap it after.
+            let mut ex = EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant { mode: QuantMode::Probabilistic, gran })
+                .gamma(opts.gamma)
+                .calibration_images(&calib)
+                .build_executor()?;
             if shared {
                 ex.ablate_shared_sigma();
             }
-            let acc = evaluate(model.task, &ExecKind::Quant(Box::new(ex)), &samples, EvalProtocol::InDomain);
+            let engine = QuantEngine::new(Arc::new(ex));
+            let acc = evaluate(model.task, &engine, &samples, EvalProtocol::InDomain);
             cells.push(fmt4(acc as f64));
         }
         table.add_row(cells);
@@ -246,11 +270,16 @@ pub fn ablate_interval(artifacts: &Path, opts: &ExpOptions) -> Result<Table> {
     for (label, symmetric) in [("asymmetric (paper)", false), ("symmetric", true)] {
         let mut cells = vec![label.to_string()];
         for gran in [Granularity::PerTensor, Granularity::PerChannel] {
-            let mut ex = build_quant_variant(&model, QuantMode::Probabilistic, gran, opts.gamma, &calib);
+            let mut ex = EngineBuilder::new(&model)
+                .spec(VariantSpec::FakeQuant { mode: QuantMode::Probabilistic, gran })
+                .gamma(opts.gamma)
+                .calibration_images(&calib)
+                .build_executor()?;
             if symmetric {
                 ex.ablate_symmetric_interval();
             }
-            let acc = evaluate(model.task, &ExecKind::Quant(Box::new(ex)), &samples, EvalProtocol::InDomain);
+            let engine = QuantEngine::new(Arc::new(ex));
+            let acc = evaluate(model.task, &engine, &samples, EvalProtocol::InDomain);
             cells.push(fmt4(acc as f64));
         }
         table.add_row(cells);

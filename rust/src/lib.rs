@@ -22,6 +22,11 @@
 //! - [`estimator`] — the paper's core contribution (§4, Eq. 8–13): moment
 //!   propagation for linear/conv layers, γ-strided sampling, interval
 //!   coverage calibration.
+//! - [`engine`] — **the crate's front-door API**: one `Engine`/`Session`
+//!   abstraction over fp32, fake-quant, and int8 execution, with an
+//!   `EngineBuilder` construction path, stable `VariantSpec` wire naming,
+//!   a `SessionPool` for per-worker reuse, and typed `EngineError`s.
+//!   Prefer it over driving the executors below directly.
 //! - [`nn`] — graph IR + float executor + fake-quant executor with
 //!   Static / Dynamic / Probabilistic requantization modes (§3, Fig. 1).
 //! - [`cmsis`] — true-int8 kernels mirroring `arm_convolve_s8` /
@@ -44,6 +49,7 @@
 pub mod cmsis;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod estimator;
 pub mod eval;
 pub mod harness;

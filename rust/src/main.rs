@@ -1,8 +1,15 @@
 //! `pdq` — the PDQ command-line launcher.
 //!
+//! Every subcommand that executes a model goes through the unified
+//! [`pdq::engine`] API: `eval` builds one variant with an
+//! `EngineBuilder`, `serve` registers the `standard_menu` (fp32 + the
+//! paper's three requantization modes as fake-quant *and* true int8) on
+//! the coordinator, and the experiment drivers evaluate `Engine`s.
+//!
 //! ```text
 //! pdq info                          # artifact + model inventory
-//! pdq eval    --model M --mode ...  # single evaluation run
+//! pdq eval    --model M --mode ...  # single evaluation run (EngineBuilder)
+//!             [--gran T|C] [--gamma N] [--n N] [--ood] [--int8]
 //! pdq experiment <table1|table2|fig3|fig4|fig5|ablate-sigma|ablate-interval|memory|all>
 //! pdq serve   --requests N          # in-process serving coordinator demo
 //! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
@@ -18,13 +25,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use pdq::coordinator::calibrate::{
-    build_int8_variant, build_quant_variant, calibration_images, demo_model, ExecKind, CALIB_SIZE,
-};
 use pdq::coordinator::batcher::BatchPolicy;
-use pdq::coordinator::router::{GranKey, ModeKey, VariantKey};
+use pdq::coordinator::calibrate::demo_model;
 use pdq::coordinator::{Server, ServerConfig};
 use pdq::data::shapes;
+use pdq::engine::{standard_menu, EngineBuilder, FloatEngine, VariantKey, VariantSpec};
 use pdq::harness::eval_runner::{evaluate, EvalProtocol};
 use pdq::harness::experiments::{self, ExpOptions};
 use pdq::models::zoo;
@@ -98,21 +103,20 @@ fn cmd_eval(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let ood = args.flag("ood");
     let manifest = zoo::load_manifest(artifacts)?;
     let model = zoo::load_model(artifacts, &manifest, &name)?;
-    let calib = calibration_images(model.task, CALIB_SIZE);
     let samples = shapes::dataset(model.task, shapes::Split::Test, n);
     let protocol =
         if ood { EvalProtocol::OutOfDomain { seed: 0xD0D0 } } else { EvalProtocol::InDomain };
     // --int8: evaluate on the integer-native engine (gran picks the weight
     // scale granularity; activations are per-tensor by construction).
-    let kind = if args.flag("int8") {
-        let ex = build_int8_variant(&model, mode, gran, gamma, &calib)
-            .map_err(anyhow::Error::msg)?;
-        ExecKind::Int8(Box::new(ex))
+    let spec = if args.flag("int8") {
+        VariantSpec::Int8 { mode, weight_gran: gran }
     } else {
-        ExecKind::Quant(Box::new(build_quant_variant(&model, mode, gran, gamma, &calib)))
+        VariantSpec::FakeQuant { mode, gran }
     };
-    let metric = evaluate(model.task, &kind, &samples, protocol);
-    let fp = evaluate(model.task, &ExecKind::Float(Arc::clone(&model.graph)), &samples, protocol);
+    let engine = EngineBuilder::new(&model).spec(spec).gamma(gamma).build()?;
+    let metric = evaluate(model.task, engine.as_ref(), &samples, protocol);
+    let fp_engine = FloatEngine::new(Arc::clone(&model.graph));
+    let fp = evaluate(model.task, &fp_engine, &samples, protocol);
     println!(
         "{name} {} {} gamma={gamma} n={n} ood={ood} int8={}: metric={metric:.4} (fp32 {fp:.4})",
         mode.label(),
@@ -190,37 +194,6 @@ fn cmd_mcu() {
     println!("{}", c.to_markdown());
 }
 
-/// Build the serve menu: FP32 + the three quant-emulation variants + the
-/// three true-int8 variants, all sharing one calibration set.
-fn serve_variants(
-    model: &pdq::models::Model,
-) -> anyhow::Result<Vec<(VariantKey, ExecKind)>> {
-    let name = model.name.clone();
-    let calib = calibration_images(model.task, CALIB_SIZE);
-    let mut variants: Vec<(VariantKey, ExecKind)> = vec![(
-        VariantKey { model: name.clone(), mode: ModeKey::Fp32 },
-        ExecKind::Float(Arc::clone(&model.graph)),
-    )];
-    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_quant_variant(model, mode, Granularity::PerTensor, 1, &calib);
-        variants.push((
-            VariantKey { model: name.clone(), mode: ModeKey::Quant(mode.into(), GranKey::T) },
-            ExecKind::Quant(Box::new(ex)),
-        ));
-    }
-    // True-int8 variants: the same three requant strategies lowered onto
-    // the integer-native engine (per-tensor weight scales).
-    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        let ex = build_int8_variant(model, mode, Granularity::PerTensor, 1, &calib)
-            .map_err(anyhow::Error::msg)?;
-        variants.push((
-            VariantKey { model: name.clone(), mode: ModeKey::Int8(mode.into(), GranKey::T) },
-            ExecKind::Int8(Box::new(ex)),
-        ));
-    }
-    Ok(variants)
-}
-
 fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let n_requests = args.opt_usize("requests", 64);
     let name = args.opt_or("model", "micro_resnet").to_string();
@@ -241,7 +214,9 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         max_queue_depth: args.opt_usize("max-queue", 32),
     };
     let task = model.task;
-    let variants = serve_variants(&model)?;
+    // The standard menu: fp32 + the three quant-emulation variants + the
+    // three true-int8 variants, all sharing one calibration set.
+    let variants = standard_menu(&model)?;
     let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
     let server = Server::start(variants, config);
 

@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{Server, SubmitError};
+use crate::engine::EngineError;
 use crate::net::http::{
     HttpRequest, HttpResponse, ReadOutcome, RequestReader, DEFAULT_MAX_BODY_BYTES,
 };
@@ -290,9 +291,10 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
         Ok(r) => r,
         Err(e) => return HttpResponse::error(400, &e),
     };
-    // Validate the shape at the boundary: the executors assert on shape
-    // mismatch, and a panicking worker must never be reachable from the
-    // network.
+    // Validate the shape at the boundary so a bad request is refused
+    // before it costs a queue slot. (Defense in depth only: if this check
+    // is bypassed, the engine returns a typed ShapeMismatch below rather
+    // than panicking a worker.)
     if let Some((_, want)) =
         ctx.server.catalog().iter().find(|(k, _)| *k == wire_req.variant)
     {
@@ -306,13 +308,27 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
     match ctx.server.try_submit(wire_req.variant, wire_req.id, wire_req.image) {
         Ok((rx, permit)) => match rx.recv_timeout(ctx.response_timeout) {
             Ok(resp) => {
-                let body = wire::encode_infer_response(
-                    resp.id,
-                    resp.latency.as_micros() as u64,
-                    &resp.outputs,
-                );
+                let status = match resp.result {
+                    Ok(outputs) => {
+                        let body = wire::encode_infer_response(
+                            resp.id,
+                            resp.latency.as_micros() as u64,
+                            &outputs,
+                        );
+                        HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
+                    }
+                    // The library's typed errors map onto the protocol: a
+                    // shape mismatch is the *caller's* fault (400), every
+                    // other engine failure is ours (500). Workers never
+                    // panic on request data, so these are the only shapes
+                    // an executed request can come back in.
+                    Err(e @ EngineError::ShapeMismatch { .. }) => {
+                        HttpResponse::error(400, &e.to_string())
+                    }
+                    Err(e) => HttpResponse::error(500, &e.to_string()),
+                };
                 drop(permit); // slot freed only once the response is in hand
-                HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
+                status
             }
             Err(_) => {
                 // The job is still queued/executing even though this client
@@ -349,9 +365,8 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::router::{ModeKey, VariantKey};
     use crate::coordinator::ServerConfig;
-    use crate::coordinator::calibrate::ExecKind;
+    use crate::engine::{FloatEngine, VariantKey, VariantSpec};
     use crate::nn::Graph;
     use crate::tensor::{Shape, Tensor};
 
@@ -360,9 +375,9 @@ mod tests {
         let x = g.input();
         let r = g.relu(x);
         g.mark_output(r);
-        let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+        let key = VariantKey::new("m", VariantSpec::Fp32);
         Arc::new(Server::start(
-            vec![(key, ExecKind::Float(Arc::new(g)))],
+            vec![(key, Arc::new(FloatEngine::new(Arc::new(g))))],
             ServerConfig::default(),
         ))
     }
@@ -385,7 +400,7 @@ mod tests {
         assert_eq!(list[0].get("variant").unwrap().as_str(), Some("m|fp32"));
 
         let infer = {
-            let key = VariantKey { model: "m".into(), mode: ModeKey::Fp32 };
+            let key = VariantKey::new("m", VariantSpec::Fp32);
             let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, -2.0, 3.0, -4.0]);
             client.post_infer(&key, 9, &img).unwrap()
         };

@@ -19,7 +19,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::router::VariantKey;
+use crate::engine::VariantKey;
 use crate::net::wire::{Client, InferOutcome};
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;

@@ -14,15 +14,15 @@
 //! integration test asserts responses match direct execution bit for bit),
 //! which a decimal JSON float round-trip would not guarantee.
 //!
-//! Variant wire names come from
-//! [`crate::coordinator::router::VariantKey::wire`]: `"micro_resnet|fp32"`,
-//! `"micro_resnet|ours-t"`, `"micro_resnet|int8-ours-c"`, ...
+//! Variant wire names come from [`crate::engine::VariantKey::wire`]:
+//! `"micro_resnet|fp32"`, `"micro_resnet|ours-t"`,
+//! `"micro_resnet|int8-ours-c"`, ...
 
 use std::io::Write;
 use std::net::TcpStream;
 use std::time::Duration;
 
-use crate::coordinator::router::VariantKey;
+use crate::engine::VariantKey;
 use crate::net::http::{read_response, HttpResponseParts, DEFAULT_MAX_BODY_BYTES};
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
@@ -333,10 +333,18 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::router::{GranKey, ModeKey, QuantModeKey};
+    use crate::engine::VariantSpec;
+    use crate::nn::QuantMode;
+    use crate::quant::Granularity;
 
     fn key() -> VariantKey {
-        VariantKey { model: "m".into(), mode: ModeKey::Int8(QuantModeKey::Ours, GranKey::T) }
+        VariantKey::new(
+            "m",
+            VariantSpec::Int8 {
+                mode: QuantMode::Probabilistic,
+                weight_gran: Granularity::PerTensor,
+            },
+        )
     }
 
     #[test]

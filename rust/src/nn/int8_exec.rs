@@ -35,6 +35,7 @@ use std::sync::{Arc, Mutex};
 use super::graph::{Graph, NodeId, Op};
 use super::memory::{Int8Arena, MemoryPlan};
 use super::quant_exec::{QuantExecutor, QuantMode};
+use crate::engine::EngineError;
 use crate::cmsis::fast;
 use crate::cmsis::pdq_wrappers::{conv_window_stats, dw_window_stats, QOut};
 use crate::cmsis::requant::Requant;
@@ -108,6 +109,9 @@ pub struct Int8Executor {
     output_ids: Vec<NodeId>,
     mode: QuantMode,
     gamma: usize,
+    /// Weight-scale granularity the program was lowered with (identity
+    /// for [`crate::engine::VariantSpec::Int8`]).
+    weight_gran: Granularity,
     input_q: QOut,
     plan: Arc<MemoryPlan>,
     /// Internal arena so plain [`Int8Executor::run`] is allocation-free in
@@ -186,6 +190,7 @@ impl Int8Executor {
             output_ids: graph.output_ids(),
             mode,
             gamma: settings.gamma.max(1),
+            weight_gran,
             input_q,
             plan,
             arena,
@@ -194,6 +199,11 @@ impl Int8Executor {
 
     pub fn mode(&self) -> QuantMode {
         self.mode
+    }
+
+    /// The weight-scale granularity the program was lowered with.
+    pub fn weight_granularity(&self) -> Granularity {
+        self.weight_gran
     }
 
     pub fn gamma(&self) -> usize {
@@ -224,25 +234,31 @@ impl Int8Executor {
         Int8Arena::new(Arc::clone(&self.plan))
     }
 
-    /// Run one image; dequantized f32 outputs (drop-in for the f32 engines).
-    pub fn run(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    /// Run one image; dequantized f32 outputs (drop-in for the f32
+    /// engines). Input-shape problems surface as a typed
+    /// [`EngineError::ShapeMismatch`], never a panic.
+    pub fn run(&self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
         let mut arena = self.arena.lock().unwrap();
-        self.forward(input, &mut arena);
-        self.collect_dequant(&arena)
+        self.forward(input, &mut arena)?;
+        Ok(self.collect_dequant(&arena))
     }
 
     /// Run one image; raw int8 outputs with their grids.
-    pub fn run_q(&self, input: &Tensor<f32>) -> Vec<(Tensor<i8>, QOut)> {
+    pub fn run_q(&self, input: &Tensor<f32>) -> Result<Vec<(Tensor<i8>, QOut)>, EngineError> {
         let mut arena = self.arena.lock().unwrap();
-        self.forward(input, &mut arena);
-        self.collect_q(&arena)
+        self.forward(input, &mut arena)?;
+        Ok(self.collect_q(&arena))
     }
 
     /// Run into a caller-owned arena (the serving path: one arena per
     /// worker thread, zero steady-state allocation).
-    pub fn run_with_arena(&self, input: &Tensor<f32>, arena: &mut Int8Arena) -> Vec<Tensor<f32>> {
-        self.forward(input, arena);
-        self.collect_dequant(arena)
+    pub fn run_with_arena(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut Int8Arena,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.forward(input, arena)?;
+        Ok(self.collect_dequant(arena))
     }
 
     /// [`Int8Executor::run_with_arena`] returning raw int8 outputs.
@@ -250,9 +266,9 @@ impl Int8Executor {
         &self,
         input: &Tensor<f32>,
         arena: &mut Int8Arena,
-    ) -> Vec<(Tensor<i8>, QOut)> {
-        self.forward(input, arena);
-        self.collect_q(arena)
+    ) -> Result<Vec<(Tensor<i8>, QOut)>, EngineError> {
+        self.forward(input, arena)?;
+        Ok(self.collect_q(arena))
     }
 
     fn collect_dequant(&self, arena: &Int8Arena) -> Vec<Tensor<f32>> {
@@ -268,14 +284,13 @@ impl Int8Executor {
 
     // ---- the fast arena engine -------------------------------------------
 
-    fn forward(&self, input: &Tensor<f32>, arena: &mut Int8Arena) {
-        assert_eq!(
-            input.shape(),
-            &self.input_shape,
-            "input shape mismatch: got {}, program wants {}",
-            input.shape(),
-            self.input_shape
-        );
+    fn forward(&self, input: &Tensor<f32>, arena: &mut Int8Arena) -> Result<(), EngineError> {
+        if input.shape() != &self.input_shape {
+            return Err(EngineError::ShapeMismatch {
+                expected: self.input_shape.clone(),
+                got: input.shape().clone(),
+            });
+        }
         assert_eq!(
             arena.plan().shapes.len(),
             self.nodes.len(),
@@ -284,6 +299,7 @@ impl Int8Executor {
         for idx in 0..self.nodes.len() {
             self.eval_node(idx, input, arena);
         }
+        Ok(())
     }
 
     fn eval_node(&self, idx: usize, input: &Tensor<f32>, arena: &mut Int8Arena) {
@@ -1084,11 +1100,18 @@ mod tests {
             ex.calibrate(&calib);
             let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
             assert_eq!(int8.mode(), mode);
-            let out = int8.run(&img);
+            assert_eq!(int8.weight_granularity(), Granularity::PerTensor);
+            let out = int8.run(&img).unwrap();
             assert_eq!(out[0].shape().dims(), &[4]);
-            let q = int8.run_q(&img);
+            let q = int8.run_q(&img).unwrap();
             assert_eq!(q[0].0.numel(), 4);
             assert!(q[0].1.scale > 0.0);
+            // Bad input shapes are a typed error, not a worker-killing panic.
+            let bad = Tensor::full(Shape::hwc(2, 2, 1), 0.0);
+            assert!(matches!(
+                int8.run(&bad),
+                Err(EngineError::ShapeMismatch { .. })
+            ));
         }
     }
 

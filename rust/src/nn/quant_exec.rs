@@ -33,6 +33,7 @@ use std::sync::{Arc, Mutex};
 use super::float_exec::{self, eval_op};
 use super::graph::{Graph, Node, Op};
 use super::memory::{ExecArena, MemoryPlan};
+use crate::engine::EngineError;
 use crate::estimator::conv::EstimatorScratch;
 use crate::estimator::interval::{calibrate, CalibSample, IntervalSpec};
 use crate::estimator::{aggregate, conv as conv_est, linear as lin_est, Moments, WeightStats};
@@ -41,8 +42,9 @@ use crate::quant::granularity::QParamSet;
 use crate::quant::{Granularity, QParams};
 use crate::tensor::Tensor;
 
-/// Requantization strategy for pre-activations.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Requantization strategy for pre-activations. (Totally ordered so
+/// [`crate::engine::VariantSpec`] can key routers and catalogs directly.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum QuantMode {
     Static,
     Dynamic,
@@ -266,26 +268,31 @@ impl QuantExecutor {
     /// Run the quantized forward pass; returns the output node values.
     /// Executes on the packed internal arena: intermediate buffers are
     /// recycled per the liveness plan and no heap allocation happens in
-    /// steady state.
-    pub fn run(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    /// steady state. Input-shape and missing-calibration problems surface
+    /// as typed [`EngineError`]s, never panics.
+    pub fn run(&self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
         let mut arena = self.arena.lock().unwrap();
-        self.forward_arena(input, &mut arena);
-        self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect()
+        self.forward_arena(input, &mut arena)?;
+        Ok(self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect())
     }
 
     /// Run keeping every node value (trace arena: one pinned slot per node).
-    pub fn run_trace(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+    pub fn run_trace(&self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
         let mut arena = self.trace_arena.lock().unwrap();
-        self.forward_arena(input, &mut arena);
-        (0..self.qgraph.nodes().len()).map(|i| arena.value(i).clone()).collect()
+        self.forward_arena(input, &mut arena)?;
+        Ok((0..self.qgraph.nodes().len()).map(|i| arena.value(i).clone()).collect())
     }
 
     /// Run into a caller-owned arena — the serving path: each worker keeps
     /// one arena and reuses it across every batched request, so parallel
     /// workers never contend on the executor's internal arena lock.
-    pub fn run_with_arena(&self, input: &Tensor<f32>, arena: &mut ExecArena) -> Vec<Tensor<f32>> {
-        self.forward_arena(input, arena);
-        self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect()
+    pub fn run_with_arena(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut ExecArena,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.forward_arena(input, arena)?;
+        Ok(self.qgraph.output_ids().iter().map(|id| arena.value(id.0).clone()).collect())
     }
 
     /// A fresh packed arena compatible with [`QuantExecutor::run_with_arena`].
@@ -327,14 +334,22 @@ impl QuantExecutor {
     /// arena's estimator scratch — so fake-quantization rides along as the
     /// kernel's write epilogue. Dynamic mode needs the whole output first
     /// (§3) and keeps its separate observe + requantize pass.
-    fn forward_arena(&self, input: &Tensor<f32>, arena: &mut ExecArena) {
-        assert_eq!(
-            input.shape(),
-            self.qgraph.input_shape(),
-            "input shape mismatch: got {}, graph wants {}",
-            input.shape(),
-            self.qgraph.input_shape()
-        );
+    fn forward_arena(&self, input: &Tensor<f32>, arena: &mut ExecArena) -> Result<(), EngineError> {
+        if input.shape() != self.qgraph.input_shape() {
+            return Err(EngineError::ShapeMismatch {
+                expected: self.qgraph.input_shape().clone(),
+                got: input.shape().clone(),
+            });
+        }
+        // Static needs the frozen ranges, probabilistic the fitted (α, β):
+        // running either uncalibrated would quantize onto default grids
+        // and silently return garbage. Only dynamic is calibration-free.
+        if self.settings.mode != QuantMode::Dynamic && !self.is_calibrated() {
+            return Err(EngineError::NotCalibrated(format!(
+                "{} mode requires calibrate() before running",
+                self.settings.mode.label()
+            )));
+        }
         assert_eq!(
             arena.plan().shapes.len(),
             self.qgraph.nodes().len(),
@@ -350,12 +365,13 @@ impl QuantExecutor {
                 };
                 let set: Option<&QParamSet> = match self.settings.mode {
                     QuantMode::Dynamic => None,
-                    QuantMode::Static => Some(
-                        self.layers[&idx]
-                            .static_set
-                            .as_ref()
-                            .expect("static mode requires calibrate() first"),
-                    ),
+                    QuantMode::Static => {
+                        Some(self.layers[&idx].static_set.as_ref().ok_or_else(|| {
+                            EngineError::NotCalibrated(
+                                "static mode requires calibrate() before running".into(),
+                            )
+                        })?)
+                    }
                     QuantMode::Probabilistic => predicted.as_ref(),
                 };
                 float_exec::eval_node_arena(&self.qgraph, idx, input, arena, set);
@@ -379,6 +395,7 @@ impl QuantExecutor {
                 }
             }
         }
+        Ok(())
     }
 
     /// Predict the output quantization parameters of a quantizable node
@@ -708,7 +725,7 @@ mod tests {
             QuantSettings { mode, granularity: gran, ..Default::default() },
         );
         ex.calibrate(&calib);
-        let q = ex.run(&test_img)[0].data().to_vec();
+        let q = ex.run(&test_img).unwrap()[0].data().to_vec();
         (fp, q)
     }
 
@@ -752,7 +769,7 @@ mod tests {
                 QuantSettings { mode, ..Default::default() },
             );
             ex.calibrate(&calib);
-            let q = ex.run(&test_img)[0].data().to_vec();
+            let q = ex.run(&test_img).unwrap()[0].data().to_vec();
             errs.insert(mode.label(), rel_err(&fp, &q));
         }
         assert!(
@@ -775,8 +792,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "requires calibrate")]
-    fn static_requires_calibration() {
+    fn static_requires_calibration_typed_error() {
         let mut rng = Pcg32::new(3);
         let g = test_graph(&mut rng);
         let img = rand_image(&mut rng);
@@ -784,7 +800,41 @@ mod tests {
             g,
             QuantSettings { mode: QuantMode::Static, ..Default::default() },
         );
-        let _ = ex.run(&img);
+        assert!(matches!(ex.run(&img), Err(EngineError::NotCalibrated(_))));
+        // Probabilistic needs the fitted I(α, β) just the same — running
+        // uncalibrated must be a typed error, not silent default grids.
+        let g2 = test_graph(&mut rng);
+        let exp = QuantExecutor::new(
+            g2,
+            QuantSettings { mode: QuantMode::Probabilistic, ..Default::default() },
+        );
+        assert!(matches!(exp.run(&img), Err(EngineError::NotCalibrated(_))));
+        // Dynamic mode is calibration-free by design (§3) and must run.
+        let g3 = test_graph(&mut rng);
+        let exd = QuantExecutor::new(
+            g3,
+            QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
+        );
+        assert!(exd.run(&img).is_ok());
+    }
+
+    #[test]
+    fn bad_input_shape_is_typed_error_not_panic() {
+        let mut rng = Pcg32::new(4);
+        let g = test_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..2).map(|_| rand_image(&mut rng)).collect();
+        let mut ex = QuantExecutor::new(g, QuantSettings::default());
+        ex.calibrate(&calib);
+        let bad = Tensor::full(Shape::hwc(2, 2, 1), 0.0);
+        match ex.run(&bad) {
+            Err(EngineError::ShapeMismatch { expected, got }) => {
+                assert_eq!(expected.dims(), &[12, 12, 3]);
+                assert_eq!(got.dims(), &[2, 2, 1]);
+            }
+            other => panic!("want ShapeMismatch, got {:?}", other.err()),
+        }
+        let mut arena = ex.make_arena();
+        assert!(ex.run_with_arena(&bad, &mut arena).is_err());
     }
 
     #[test]
@@ -796,9 +846,9 @@ mod tests {
         let fp = float_exec::run(&g, &img)[0].data().to_vec();
         let mut ex = QuantExecutor::new(g, QuantSettings::default());
         ex.calibrate(&calib);
-        let e1 = rel_err(&fp, &ex.run(&img)[0].data().to_vec());
+        let e1 = rel_err(&fp, &ex.run(&img).unwrap()[0].data().to_vec());
         ex.set_gamma(4);
-        let e4 = rel_err(&fp, &ex.run(&img)[0].data().to_vec());
+        let e4 = rel_err(&fp, &ex.run(&img).unwrap()[0].data().to_vec());
         assert!(e4 < 0.3, "gamma=4 err {e4}");
         assert!((e1 - e4).abs() < 0.15, "gamma sweep unstable: {e1} vs {e4}");
     }
@@ -819,7 +869,7 @@ mod tests {
         ex.calibrate(&calib);
         ex.ablate_shared_sigma();
         ex.ablate_symmetric_interval();
-        let out = ex.run(&img);
+        let out = ex.run(&img).unwrap();
         assert_eq!(out[0].shape().dims(), &[5]);
     }
 
@@ -836,7 +886,7 @@ mod tests {
                     QuantSettings { mode, granularity: gran, ..Default::default() },
                 );
                 ex.calibrate(&calib);
-                let fast = ex.run(&img)[0].data().to_vec();
+                let fast = ex.run(&img).unwrap()[0].data().to_vec();
                 let slow = ex.run_reference(&img)[0].data().to_vec();
                 let e = rel_err(&slow, &fast);
                 assert!(
@@ -855,15 +905,17 @@ mod tests {
         let img = rand_image(&mut rng);
         let mut ex = QuantExecutor::new(g, QuantSettings::default());
         ex.calibrate(&calib);
-        let t1: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
-        let t2: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+        let t1: Vec<Vec<f32>> =
+            ex.run_trace(&img).unwrap().iter().map(|t| t.data().to_vec()).collect();
+        let t2: Vec<Vec<f32>> =
+            ex.run_trace(&img).unwrap().iter().map(|t| t.data().to_vec()).collect();
         assert_eq!(t1, t2, "run_trace must be bit-identical across calls");
         // Worker-style arena reused across *different* inputs.
         let mut arena = ex.make_arena();
         let img2 = rand_image(&mut rng);
-        let a = ex.run_with_arena(&img, &mut arena)[0].clone();
-        let _ = ex.run_with_arena(&img2, &mut arena);
-        let b = ex.run_with_arena(&img, &mut arena)[0].clone();
+        let a = ex.run_with_arena(&img, &mut arena).unwrap()[0].clone();
+        let _ = ex.run_with_arena(&img2, &mut arena).unwrap();
+        let b = ex.run_with_arena(&img, &mut arena).unwrap()[0].clone();
         assert_eq!(a.data(), b.data(), "arena reuse leaked state between inputs");
     }
 

@@ -3,8 +3,9 @@
 use super::qparams::QParams;
 use crate::util::stats;
 
-/// How many parameter sets a quantized tensor carries.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// How many parameter sets a quantized tensor carries. (Totally ordered
+/// so [`crate::engine::VariantSpec`] can key routers and catalogs.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Granularity {
     /// One `(s, z)` pair for the whole tensor.
     PerTensor,

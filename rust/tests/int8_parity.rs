@@ -199,7 +199,7 @@ fn fast_engine_bit_exact_vs_naive_engine() {
                 let (_, int8) = lowered(&g, mode, weight_gran, gamma, &calib);
                 for (i, img) in imgs.iter().enumerate() {
                     let naive = int8.run_naive(img);
-                    let fast = int8.run_q(img);
+                    let fast = int8.run_q(img).expect("run_q");
                     assert_eq!(naive.len(), fast.len());
                     for (j, ((tn, qn), (tf, qf))) in naive.iter().zip(fast.iter()).enumerate() {
                         assert_eq!(
@@ -227,8 +227,8 @@ fn static_and_pdq_never_allocate_the_wide_buffer() {
     for mode in [QuantMode::Static, QuantMode::Probabilistic] {
         let (_, int8) = lowered(&g, mode, Granularity::PerTensor, 1, &calib);
         let mut arena = int8.make_arena();
-        let _ = int8.run_q_with_arena(&img, &mut arena);
-        let _ = int8.run_q_with_arena(&img, &mut arena);
+        int8.run_q_with_arena(&img, &mut arena).expect("run");
+        int8.run_q_with_arena(&img, &mut arena).expect("run");
         assert_eq!(
             arena.wide_capacity_elems(),
             0,
@@ -238,7 +238,7 @@ fn static_and_pdq_never_allocate_the_wide_buffer() {
     // Dynamic, by the §3 argument, must pay it.
     let (_, int8) = lowered(&g, QuantMode::Dynamic, Granularity::PerTensor, 1, &calib);
     let mut arena = int8.make_arena();
-    let _ = int8.run_q_with_arena(&img, &mut arena);
+    int8.run_q_with_arena(&img, &mut arena).expect("run");
     assert!(
         arena.wide_capacity_elems() > 0,
         "dynamic mode buffers the wide output by definition"
@@ -255,13 +255,13 @@ fn worker_arena_reuse_is_deterministic() {
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
         let (_, int8) = lowered(&g, mode, Granularity::PerTensor, 1, &calib);
         let mut arena = int8.make_arena();
-        let a = int8.run_q_with_arena(&img, &mut arena);
-        let _ = int8.run_q_with_arena(&other, &mut arena);
-        let b = int8.run_q_with_arena(&img, &mut arena);
+        let a = int8.run_q_with_arena(&img, &mut arena).expect("run");
+        let _ = int8.run_q_with_arena(&other, &mut arena).expect("run");
+        let b = int8.run_q_with_arena(&img, &mut arena).expect("run");
         assert_eq!(a[0].0.data(), b[0].0.data(), "{mode:?}: arena reuse leaked state");
         assert_eq!(a[0].1, b[0].1, "{mode:?}: arena reuse changed the grid");
         // The internal-arena path agrees with the worker path.
-        let c = int8.run_q(&img);
+        let c = int8.run_q(&img).expect("run_q");
         assert_eq!(a[0].0.data(), c[0].0.data(), "{mode:?}: run_q != run_q_with_arena");
     }
 }
@@ -277,7 +277,7 @@ fn int8_outputs_track_the_f32_emulator() {
         for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
             let (ex, int8) = lowered(&g, mode, weight_gran, 1, &calib);
             let reference = ex.run_reference(&img)[0].data().to_vec();
-            let deq = int8.run(&img)[0].data().to_vec();
+            let deq = int8.run(&img).expect("run")[0].data().to_vec();
             let rel = |a: &[f32], b: &[f32]| -> f32 {
                 let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
                 let den: f32 = b.iter().map(|v| v * v).sum::<f32>().max(1e-9);

@@ -187,7 +187,7 @@ fn accuracy(graph: &pdq::nn::Graph, test: &[shapes::DataSample], _: Option<()>) 
 
 fn accuracy_q(ex: &QuantExecutor, test: &[shapes::DataSample]) -> f32 {
     let preds: Vec<usize> =
-        test.iter().map(|s| argmax(ex.run(&s.image_f32())[0].data())).collect();
+        test.iter().map(|s| argmax(ex.run(&s.image_f32()).unwrap()[0].data())).collect();
     let labels: Vec<usize> = test.iter().map(|s| s.class_id).collect();
     pdq::eval::top1(&preds, &labels)
 }

@@ -173,13 +173,15 @@ fn quant_run_trace_identical_across_consecutive_calls() {
                 QuantSettings { mode, gamma, granularity: Granularity::PerTensor, ..Default::default() },
             );
             ex.calibrate(&calib);
-            let t1: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
-            let t2: Vec<Vec<f32>> = ex.run_trace(&img).iter().map(|t| t.data().to_vec()).collect();
+            let t1: Vec<Vec<f32>> =
+                ex.run_trace(&img).unwrap().iter().map(|t| t.data().to_vec()).collect();
+            let t2: Vec<Vec<f32>> =
+                ex.run_trace(&img).unwrap().iter().map(|t| t.data().to_vec()).collect();
             assert_eq!(t1, t2, "{mode:?} γ={gamma}: run_trace not reproducible");
             let mut arena = ex.make_arena();
-            let a = ex.run_with_arena(&img, &mut arena)[0].clone();
-            let _ = ex.run_with_arena(&other, &mut arena);
-            let b = ex.run_with_arena(&img, &mut arena)[0].clone();
+            let a = ex.run_with_arena(&img, &mut arena).unwrap()[0].clone();
+            let _ = ex.run_with_arena(&other, &mut arena).unwrap();
+            let b = ex.run_with_arena(&img, &mut arena).unwrap()[0].clone();
             assert_eq!(a.data(), b.data(), "{mode:?} γ={gamma}: worker arena leaked state");
         }
     }
@@ -198,7 +200,7 @@ fn quant_fused_matches_reference_outputs() {
                 QuantSettings { mode, granularity: gran, ..Default::default() },
             );
             ex.calibrate(&calib);
-            let fast = ex.run(&img)[0].data().to_vec();
+            let fast = ex.run(&img).unwrap()[0].data().to_vec();
             let slow = ex.run_reference(&img)[0].data().to_vec();
             // Fused and reference engines quantize onto the same grids;
             // differences are bounded by f32-vs-f64 accumulation noise

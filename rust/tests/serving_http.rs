@@ -3,8 +3,8 @@
 //!
 //! What is proven here:
 //! 1. requests over real TCP come back **bit-identical** to direct
-//!    `ExecKind` execution, concurrently, across fp32 / quant-emulation /
-//!    true-int8 variants;
+//!    `pdq::engine` session execution, concurrently, across fp32 /
+//!    quant-emulation / true-int8 variants;
 //! 2. a depth-1 admission queue sheds deterministically with 429 +
 //!    `Retry-After`, the sheds land in `Metrics::rejected`, and the server
 //!    still drains cleanly afterwards;
@@ -17,9 +17,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use pdq::coordinator::batcher::BatchPolicy;
-use pdq::coordinator::calibrate::ExecKind;
-use pdq::coordinator::router::{GranKey, ModeKey, QuantModeKey, VariantKey};
 use pdq::coordinator::{Server, ServerConfig};
+use pdq::engine::{Engine, Int8Engine, QuantEngine, VariantKey, VariantSpec};
 use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
 use pdq::net::wire::{Client, InferOutcome};
 use pdq::net::{FrontDoor, FrontDoorConfig};
@@ -63,52 +62,50 @@ fn calib_images() -> Vec<Tensor<f32>> {
 }
 
 /// Deterministic build, so constructing it twice (one copy moves into the
-/// server, one stays local as the oracle) yields bit-identical executors.
-fn build_variant(mode: &ModeKey) -> (VariantKey, ExecKind) {
-    let key = VariantKey { model: "t".into(), mode: mode.clone() };
+/// server, one stays local as the oracle) yields bit-identical engines.
+fn build_variant(spec: &VariantSpec) -> (VariantKey, Arc<dyn Engine>) {
+    let key = VariantKey::new("t", *spec);
     let graph = test_graph();
-    let exec = match mode {
-        ModeKey::Fp32 => ExecKind::Float(graph),
-        ModeKey::Quant(m, g) => {
+    let engine: Arc<dyn Engine> = match *spec {
+        VariantSpec::Fp32 => Arc::new(pdq::engine::FloatEngine::new(graph)),
+        VariantSpec::FakeQuant { mode, gran } => {
             let mut ex = QuantExecutor::new(
                 graph,
-                QuantSettings {
-                    mode: QuantMode::from(*m),
-                    granularity: Granularity::from(*g),
-                    ..Default::default()
-                },
+                QuantSettings { mode, granularity: gran, ..Default::default() },
             );
             ex.calibrate(&calib_images());
-            ExecKind::Quant(Box::new(ex))
+            Arc::new(QuantEngine::new(Arc::new(ex)))
         }
-        ModeKey::Int8(m, g) => {
+        VariantSpec::Int8 { mode, weight_gran } => {
             let mut ex = QuantExecutor::new(
                 graph,
-                QuantSettings {
-                    mode: QuantMode::from(*m),
-                    granularity: Granularity::PerTensor,
-                    ..Default::default()
-                },
+                QuantSettings { mode, granularity: Granularity::PerTensor, ..Default::default() },
             );
             ex.calibrate(&calib_images());
-            ExecKind::Int8(Box::new(
-                Int8Executor::lower(&ex, Granularity::from(*g)).expect("lowering"),
-            ))
+            Arc::new(Int8Engine::new(Arc::new(
+                Int8Executor::lower(&ex, weight_gran).expect("lowering"),
+            )))
         }
     };
-    (key, exec)
+    (key, engine)
 }
 
-fn test_modes() -> Vec<ModeKey> {
+fn test_modes() -> Vec<VariantSpec> {
     vec![
-        ModeKey::Fp32,
-        ModeKey::Quant(QuantModeKey::Ours, GranKey::T),
-        ModeKey::Int8(QuantModeKey::Ours, GranKey::T),
+        VariantSpec::Fp32,
+        VariantSpec::FakeQuant {
+            mode: QuantMode::Probabilistic,
+            gran: Granularity::PerTensor,
+        },
+        VariantSpec::Int8 {
+            mode: QuantMode::Probabilistic,
+            weight_gran: Granularity::PerTensor,
+        },
     ]
 }
 
 fn start_front_door(config: ServerConfig) -> (FrontDoor, String) {
-    let variants: Vec<(VariantKey, ExecKind)> =
+    let variants: Vec<(VariantKey, Arc<dyn Engine>)> =
         test_modes().iter().map(build_variant).collect();
     let server = Arc::new(Server::start(variants, config));
     let fd = FrontDoor::start(server, FrontDoorConfig::default()).expect("bind ephemeral port");
@@ -132,9 +129,9 @@ fn socket_infer_bit_identical_to_direct_execution() {
         let images = images.clone();
         joins.push(std::thread::spawn(move || {
             // Local oracle copy of the same variant, executed exactly the
-            // way the workers do (arena path).
+            // way the workers do (a compiled engine session).
             let (key, oracle) = build_variant(&mode);
-            let mut arena = oracle.make_arena();
+            let mut session = oracle.compile().expect("oracle session");
             let mut client = Client::new(&addr);
             for (i, img) in images.iter().enumerate() {
                 let id = (t * 100 + i) as u64;
@@ -144,7 +141,7 @@ fn socket_infer_bit_identical_to_direct_execution() {
                     InferOutcome::Failed { status, error } => panic!("http {status}: {error}"),
                 };
                 assert_eq!(got.id, id);
-                let want = oracle.run_with_arena(img, &mut arena);
+                let want = session.run(img).expect("oracle run");
                 assert_eq!(got.outputs.len(), want.len());
                 for (g, w) in got.outputs.iter().zip(&want) {
                     assert_eq!(g.shape(), w.shape());
@@ -165,7 +162,7 @@ fn socket_infer_bit_identical_to_direct_execution() {
 /// retry hint, counted in `Metrics::rejected`, and a clean drain after.
 #[test]
 fn depth_one_overload_sheds_with_429_then_drains_clean() {
-    let variants: Vec<(VariantKey, ExecKind)> =
+    let variants: Vec<(VariantKey, Arc<dyn Engine>)> =
         test_modes().iter().map(build_variant).collect();
     let server = Arc::new(Server::start(
         variants,
@@ -173,7 +170,7 @@ fn depth_one_overload_sheds_with_429_then_drains_clean() {
     ));
     let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
     let addr = fd.local_addr().to_string();
-    let key = VariantKey { model: "t".into(), mode: ModeKey::Fp32 };
+    let key = VariantKey::new("t", VariantSpec::Fp32);
     let img = calib_images().remove(0);
 
     // Occupy the single slot from in-process: the permit is held, so every
@@ -227,7 +224,7 @@ fn depth_one_overload_sheds_with_429_then_drains_clean() {
 /// shutdown time are all answered before the workers join.
 #[test]
 fn drain_answers_every_queued_request() {
-    let variants: Vec<(VariantKey, ExecKind)> =
+    let variants: Vec<(VariantKey, Arc<dyn Engine>)> =
         test_modes().iter().map(build_variant).collect();
     let server = Arc::new(Server::start(
         variants,
@@ -238,7 +235,7 @@ fn drain_answers_every_queued_request() {
         },
     ));
     let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
-    let key = VariantKey { model: "t".into(), mode: ModeKey::Fp32 };
+    let key = VariantKey::new("t", VariantSpec::Fp32);
     let img = calib_images().remove(0);
     // Build a backlog through the coordinator directly (the front door's
     // conn pool would serialize HTTP submissions), then drain while queued.
@@ -281,7 +278,7 @@ fn observability_endpoints_serve_json_and_prometheus() {
     }
 
     // One inference so latency metrics are non-empty.
-    let key = VariantKey { model: "t".into(), mode: ModeKey::Fp32 };
+    let key = VariantKey::new("t", VariantSpec::Fp32);
     let img = calib_images().remove(0);
     assert!(matches!(client.post_infer(&key, 1, &img).unwrap(), InferOutcome::Ok(_)));
 
@@ -307,7 +304,7 @@ fn observability_endpoints_serve_json_and_prometheus() {
     let garbage = client.request("POST", "/v1/infer", "application/json", b"not a tensor").unwrap();
     assert_eq!(garbage.status, 400);
     let ghost = pdq::net::wire::encode_infer_request(
-        &VariantKey { model: "ghost".into(), mode: ModeKey::Fp32 },
+        &VariantKey::new("ghost", VariantSpec::Fp32),
         1,
         &img,
     );
