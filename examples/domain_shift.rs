@@ -6,12 +6,16 @@
 //! ```bash
 //! cargo run --release --example domain_shift -- --n 100
 //! ```
+//!
+//! Runs on the AOT-trained `micro_resnet` when `artifacts/` is present and
+//! falls back to the seeded synthetic demo model otherwise, so the sweep is
+//! always runnable (CI included).
 
+use pdq::coordinator::calibrate::load_or_demo;
 use pdq::data::corrupt::{corrupt, Corruption};
 use pdq::data::shapes::{self, Split};
 use pdq::engine::{calibration_images, EngineBuilder, Session, VariantSpec, CALIB_SIZE};
 use pdq::harness::eval_runner::score;
-use pdq::models::zoo;
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
 use pdq::util::cli::Args;
@@ -24,9 +28,7 @@ fn main() -> anyhow::Result<()> {
     let n = args.opt_usize("n", 100);
     let severity = args.opt_usize("severity", 3) as u32;
 
-    let artifacts = std::path::Path::new("artifacts");
-    let manifest = zoo::load_manifest(artifacts)?;
-    let model = zoo::load_model(artifacts, &manifest, "micro_resnet")?;
+    let model = load_or_demo(std::path::Path::new("artifacts"), "micro_resnet");
     let calib = calibration_images(model.task, CALIB_SIZE);
     let samples = shapes::dataset(model.task, Split::Test, n);
 

@@ -24,7 +24,6 @@ use pdq::engine::{
     calibration_images, Engine, EngineBuilder, VariantKey, VariantSpec, CALIB_SIZE,
 };
 use pdq::harness::eval_runner::score;
-use pdq::models::zoo;
 use pdq::nn::{float_exec, QuantMode};
 use pdq::quant::Granularity;
 use pdq::runtime::Runtime;
@@ -38,21 +37,24 @@ fn main() -> anyhow::Result<()> {
     let model_name = args.opt_or("model", "micro_resnet").to_string();
     let artifacts = std::path::Path::new("artifacts");
 
-    // --- (1) load the zoo --------------------------------------------------
-    let manifest = zoo::load_manifest(artifacts)?;
-    let model = zoo::load_model(artifacts, &manifest, &model_name)?;
+    // --- (1) load the zoo (synthetic fallback without `make artifacts`) ----
+    let model = pdq::coordinator::calibrate::load_or_demo(artifacts, &model_name);
     println!("[1] loaded {} ({} params, task {})", model.name, model.graph.param_count(), model.task.name());
 
-    // --- (2) PJRT cross-check ----------------------------------------------
-    let rt = Runtime::cpu()?;
-    let exe = rt.load(model.hlo_path.as_ref().unwrap())?;
-    let probe = shapes::dataset(model.task, Split::Test, 1).remove(0).image_f32();
-    let pjrt: Vec<f32> = exe.run_f32(&[&probe])?.into_iter().flatten().collect();
-    let native: Vec<f32> =
-        float_exec::run(&model.graph, &probe).iter().flat_map(|t| t.data().to_vec()).collect();
-    let max_err = pjrt.iter().zip(&native).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
-    println!("[2] PJRT vs native float engine: max |Δ| = {max_err:.5}");
-    anyhow::ensure!(max_err < 0.05, "PJRT parity broken");
+    // --- (2) PJRT cross-check (only when an HLO artifact exists) -----------
+    if let Some(hlo_path) = model.hlo_path.as_ref() {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(hlo_path)?;
+        let probe = shapes::dataset(model.task, Split::Test, 1).remove(0).image_f32();
+        let pjrt: Vec<f32> = exe.run_f32(&[&probe])?.into_iter().flatten().collect();
+        let native: Vec<f32> =
+            float_exec::run(&model.graph, &probe).iter().flat_map(|t| t.data().to_vec()).collect();
+        let max_err = pjrt.iter().zip(&native).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        println!("[2] PJRT vs native float engine: max |Δ| = {max_err:.5}");
+        anyhow::ensure!(max_err < 0.05, "PJRT parity broken");
+    } else {
+        println!("[2] PJRT cross-check skipped (no HLO artifact for this model)");
+    }
 
     // --- (3) calibrate the three strategies --------------------------------
     let calib = calibration_images(model.task, CALIB_SIZE);

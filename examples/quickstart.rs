@@ -6,19 +6,21 @@
 //! `Engine` trait.
 //!
 //! ```bash
+//! cargo run --release --example quickstart            # synthetic fallback
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use pdq::coordinator::calibrate::load_or_demo;
 use pdq::data::shapes::{self, Split};
 use pdq::engine::{EngineBuilder, VariantSpec};
-use pdq::models::{heads, zoo};
+use pdq::models::heads;
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::Path::new("artifacts");
-    let manifest = zoo::load_manifest(artifacts)?;
-    let model = zoo::load_model(artifacts, &manifest, "micro_resnet")?;
+    // No `make artifacts`? load_or_demo falls back to the seeded synthetic
+    // demo model so the example (and CI) always runs.
+    let model = load_or_demo(std::path::Path::new("artifacts"), "micro_resnet");
     println!("loaded {} ({} params)", model.name, model.graph.param_count());
 
     // A test image.

@@ -1,0 +1,201 @@
+//! Drift scoring: how far the live pre-activation statistics have moved
+//! from a calibration-time reference, with hysteresis.
+//!
+//! Both sides are [`Accumulator`] windows (reference: the shared
+//! calibration set run through a tapped session at registration; live: the
+//! observer's current window). Per node the comparison runs on
+//! [`NodeFeatures`] — *real-unit* window aggregates, so the score is
+//! invariant to the int8 grids in force when either window was collected
+//! (grids change at every recalibration epoch; real units don't):
+//!
+//! ```text
+//! score(v) = |µ₁ˡ − µ₁ʳ| / σʳ  +  |ln(σˡ/σʳ)|  +  w_clip · max(0, clipˡ − clipʳ)
+//! ```
+//!
+//! with `µ₁ = scale·mean(S1)` and `σ = sqrt(scale²·mean(S2))` (the RMS
+//! window energy). The aggregate is the max over nodes — a single saturated
+//! layer is enough to poison a static grid, so averaging would hide exactly
+//! the failures that matter. [`DriftDetector`] adds hysteresis: drifted at
+//! `score ≥ threshold`, calm again only at `score ≤ exit_ratio·threshold`,
+//! so a score oscillating around the threshold cannot flap the trigger.
+
+use super::observer::{Accumulator, NodeFeatures};
+
+/// Drift-scoring knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Aggregate score at which the detector enters the drifted state.
+    pub threshold: f32,
+    /// The drifted state exits at `threshold · exit_ratio` (hysteresis).
+    pub exit_ratio: f32,
+    /// Weight of the clip-rate excess term.
+    pub clip_weight: f32,
+    /// Live windows with fewer sampled requests score 0 (noise guard).
+    pub min_requests: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self { threshold: 1.0, exit_ratio: 0.5, clip_weight: 4.0, min_requests: 8 }
+    }
+}
+
+/// One node's drift score.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeDrift {
+    /// Graph node id.
+    pub node: usize,
+    /// The combined mean/scale/clip score.
+    pub score: f32,
+    /// The clip-rate excess component alone (live − reference, floored
+    /// at 0) — the γ-coverage regression, useful on its own in dashboards.
+    pub clip_excess: f32,
+}
+
+/// A full drift comparison of one live window against the reference.
+#[derive(Clone, Debug, Default)]
+pub struct DriftReport {
+    /// Per-node scores (nodes present in both windows).
+    pub per_node: Vec<NodeDrift>,
+    /// `max` over the per-node scores (0 when the live window is below
+    /// [`DriftConfig::min_requests`]).
+    pub aggregate: f32,
+    /// Largest per-node live clip rate.
+    pub max_clip_rate: f32,
+    /// Sampled requests in the live window.
+    pub requests: u64,
+}
+
+fn node_score(reference: &NodeFeatures, live: &NodeFeatures, clip_weight: f32) -> (f32, f32) {
+    let sig_r = reference.mean_s2.max(0.0).sqrt().max(1e-9);
+    let sig_l = live.mean_s2.max(0.0).sqrt().max(1e-9);
+    let d_mean = (live.mean_s1 - reference.mean_s1).abs() / sig_r;
+    let d_scale = (sig_l / sig_r).ln().abs();
+    let clip_excess = (live.clip_rate - reference.clip_rate).max(0.0);
+    ((d_mean + d_scale + clip_weight as f64 * clip_excess) as f32, clip_excess as f32)
+}
+
+/// Score a live window against the reference window.
+pub fn drift_report(reference: &Accumulator, live: &Accumulator, cfg: &DriftConfig) -> DriftReport {
+    let rf = reference.features();
+    let mut per_node = Vec::new();
+    let mut aggregate = 0f32;
+    for (node, lacc) in &live.nodes {
+        let Some(r) = rf.get(node) else { continue };
+        let (score, clip_excess) = node_score(r, &lacc.features(), cfg.clip_weight);
+        aggregate = aggregate.max(score);
+        per_node.push(NodeDrift { node: *node, score, clip_excess });
+    }
+    if live.requests < cfg.min_requests {
+        aggregate = 0.0;
+    }
+    DriftReport {
+        per_node,
+        aggregate,
+        max_clip_rate: live.max_clip_rate() as f32,
+        requests: live.requests,
+    }
+}
+
+/// Hysteresis wrapper over the aggregate score (see module docs).
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    drifted: bool,
+}
+
+impl DriftDetector {
+    /// A detector in the calm state.
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        DriftDetector { cfg, drifted: false }
+    }
+
+    /// Fold in a report; returns the (possibly new) drifted state.
+    pub fn update(&mut self, report: &DriftReport) -> bool {
+        if self.drifted {
+            if report.aggregate <= self.cfg.threshold * self.cfg.exit_ratio {
+                self.drifted = false;
+            }
+        } else if report.aggregate >= self.cfg.threshold {
+            self.drifted = true;
+        }
+        self.drifted
+    }
+
+    /// Current state.
+    pub fn is_drifted(&self) -> bool {
+        self.drifted
+    }
+
+    /// Back to calm (after a recalibration resets the reference).
+    pub fn reset(&mut self) {
+        self.drifted = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::RunTap;
+    use crate::tensor::{Shape, Tensor};
+
+    fn window_of(value: f32, n: u64) -> Accumulator {
+        let mut acc = Accumulator::default();
+        let img = Tensor::full(Shape::hwc(4, 4, 1), value);
+        let mut tap = RunTap::new(1);
+        for _ in 0..n {
+            tap.clear();
+            tap.observe_input_grid(&img);
+            acc.absorb(&tap);
+        }
+        acc
+    }
+
+    #[test]
+    fn identical_windows_score_zero() {
+        let cfg = DriftConfig { min_requests: 1, ..Default::default() };
+        let r = window_of(0.5, 8);
+        let l = window_of(0.5, 8);
+        let rep = drift_report(&r, &l, &cfg);
+        assert_eq!(rep.per_node.len(), 1);
+        assert!(rep.aggregate < 1e-6, "{}", rep.aggregate);
+    }
+
+    #[test]
+    fn shifted_window_scores_high_and_min_requests_guards() {
+        let cfg = DriftConfig { min_requests: 4, ..Default::default() };
+        let r = window_of(0.3, 8);
+        let l = window_of(0.9, 8);
+        let rep = drift_report(&r, &l, &cfg);
+        assert!(rep.aggregate > 0.5, "shift must register: {}", rep.aggregate);
+        // The same shift with too few live requests is suppressed.
+        let tiny = window_of(0.9, 2);
+        assert_eq!(drift_report(&r, &tiny, &cfg).aggregate, 0.0);
+    }
+
+    #[test]
+    fn clip_excess_feeds_the_score() {
+        let cfg = DriftConfig { min_requests: 1, clip_weight: 4.0, ..Default::default() };
+        // 1.0 saturates the [0, 1] input grid on every pixel; 0.5 never.
+        let r = window_of(0.5, 4);
+        let l = window_of(1.0, 4);
+        let rep = drift_report(&r, &l, &cfg);
+        assert!(rep.per_node[0].clip_excess > 0.9);
+        assert!(rep.max_clip_rate > 0.9);
+        assert!(rep.aggregate >= cfg.clip_weight * 0.9);
+    }
+
+    #[test]
+    fn detector_hysteresis() {
+        let cfg = DriftConfig { threshold: 1.0, exit_ratio: 0.5, ..Default::default() };
+        let mut d = DriftDetector::new(cfg);
+        let rep = |agg: f32| DriftReport { aggregate: agg, ..Default::default() };
+        assert!(!d.update(&rep(0.9)), "below threshold stays calm");
+        assert!(d.update(&rep(1.1)), "crossing enters drifted");
+        assert!(d.update(&rep(0.7)), "inside the hysteresis band stays drifted");
+        assert!(!d.update(&rep(0.4)), "below exit leaves drifted");
+        d.update(&rep(2.0));
+        d.reset();
+        assert!(!d.is_drifted());
+    }
+}

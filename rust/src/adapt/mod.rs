@@ -1,0 +1,506 @@
+//! # `pdq::adapt` — online adaptation: live drift monitoring and
+//! zero-downtime recalibration.
+//!
+//! The serving stack calibrates once, offline, on the shared 16-image set
+//! (§5.2). Under the corruption shifts of [`crate::data::corrupt`] those
+//! frozen grids silently go stale — static variants clip, accuracy decays,
+//! and nothing in the metrics says why. This module closes the loop the
+//! paper's probabilistic estimator opens: **observe** live traffic with the
+//! same integer window statistics the §4.2 estimator streams, **detect**
+//! drift against a calibration-time reference, **shadow-recalibrate** in
+//! the background, and **swap** the rebuilt grids into serving sessions
+//! atomically — no dropped request, no second process.
+//!
+//! ```text
+//!        sampled requests (1-in-N)
+//!  Session ──RunTap──▶ Observer ──window──▶ drift::report ──▶ policy
+//!     ▲                   │ reservoir                           │ fire
+//!     │ compile           ▼                                     ▼
+//!  SessionPool ◀─epoch─ EngineCell ◀──publish── recalib::shadow_recalibrate
+//! ```
+//!
+//! - [`observer`] — the sampled per-node statistics tap (mergeable integer
+//!   `S1`/`S2` accumulators + clip counters) and the transparent
+//!   [`ObservedEngine`] wrapper sessions run under.
+//! - [`drift`] — real-unit drift scores per node and in aggregate, with
+//!   hysteresis.
+//! - [`recalib`] — shadow rebuild backends: the O(C) integer grid refold
+//!   for int8-static ([`crate::nn::Int8Executor::refit_static_grids`]) and
+//!   the reservoir-driven full recalibration for fake-quant static.
+//! - [`policy`] — manual / periodic / drift-triggered firing with a
+//!   cooldown.
+//! - [`AdaptManager`] — one tick loop over every registered variant; the
+//!   coordinator runs it on a background thread and the front door exposes
+//!   it as `GET /v1/drift` + `POST /v1/recalibrate`.
+
+pub mod drift;
+pub mod observer;
+pub mod policy;
+pub mod recalib;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, EngineCell, EngineError, RunTap, VariantKey, VariantSpec};
+use crate::engine::{Int8Engine, QuantEngine};
+use crate::engine::{calibration_images, EngineBuilder, CALIB_SIZE};
+use crate::models::Model;
+use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+use crate::nn::{Int8Executor, QuantMode};
+use crate::quant::Granularity;
+use crate::tensor::Tensor;
+
+pub use drift::{DriftConfig, DriftDetector, DriftReport, NodeDrift};
+pub use observer::{Accumulator, NodeAccum, NodeFeatures, ObservedEngine, Observer, ObserverConfig};
+pub use policy::{PolicyConfig, PolicyState, RecalPolicy};
+pub use recalib::{
+    shadow_recalibrate, RebuildFn, RecalBackend, MIN_REBUILD_IMAGES, MIN_REFOLD_REQUESTS,
+};
+
+/// All adaptation knobs in one place.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptConfig {
+    /// Sampling + tap-γ + reservoir knobs.
+    pub observer: ObserverConfig,
+    /// Drift scoring and hysteresis.
+    pub drift: DriftConfig,
+    /// When recalibration fires.
+    pub policy: PolicyConfig,
+    /// Cadence of the background tick loop (coordinator's recal worker).
+    pub poll_interval: Duration,
+}
+
+impl AdaptConfig {
+    /// Defaults: sample 1-in-4, tap γ=4, drift-triggered with threshold 1.0
+    /// and a 5 s cooldown, 200 ms polls.
+    pub fn standard() -> AdaptConfig {
+        AdaptConfig {
+            observer: ObserverConfig::default(),
+            drift: DriftConfig::default(),
+            policy: PolicyConfig::default(),
+            poll_interval: Duration::from_millis(200),
+        }
+    }
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+/// One variant's adaptation state.
+struct VariantAdapt {
+    key: VariantKey,
+    cell: Arc<EngineCell>,
+    observer: Arc<Observer>,
+    backend: RecalBackend,
+    reference: Mutex<Accumulator>,
+    detector: Mutex<DriftDetector>,
+    policy_state: Mutex<PolicyState>,
+    last_report: Mutex<DriftReport>,
+    /// Largest aggregate drift any tick has observed (never reset — the
+    /// "did this deployment ever drift" flag dashboards and the CI smoke
+    /// read, robust to the score dropping after a recalibration rebases
+    /// the reference).
+    peak_drift: Mutex<f32>,
+    /// Serializes recalibrations of this variant: the background tick and
+    /// a manual `POST /v1/recalibrate` may race, and without this one
+    /// window's statistics could be split across two refits (with the
+    /// loser rebasing the reference onto a near-empty window).
+    recal_serial: Mutex<()>,
+    recals: AtomicU64,
+}
+
+/// Externally visible snapshot of one variant's adaptation state
+/// (the `GET /v1/drift` payload).
+#[derive(Clone, Debug)]
+pub struct VariantStatus {
+    /// The variant.
+    pub key: VariantKey,
+    /// Current engine generation (0 = the boot-time engine).
+    pub epoch: u64,
+    /// Latest aggregate drift score.
+    pub drift: f32,
+    /// Largest aggregate drift ever observed by a tick.
+    pub peak_drift: f32,
+    /// Latest hysteresis state.
+    pub drifted: bool,
+    /// Latest per-node drift scores.
+    pub per_node: Vec<NodeDrift>,
+    /// Largest per-node clip rate in the live window.
+    pub max_clip_rate: f32,
+    /// Completed shadow recalibrations.
+    pub recalibrations: u64,
+    /// Sampled requests in the current live window.
+    pub window_requests: u64,
+    /// Total requests seen (sampled or not).
+    pub requests_seen: u64,
+    /// Live-image reservoir fill.
+    pub reservoir: usize,
+    /// Recalibration backend label (`none` / `int8-refold` / `rebuild`).
+    pub backend: &'static str,
+}
+
+/// Outcome of one recalibration attempt.
+#[derive(Clone, Debug)]
+pub struct RecalOutcome {
+    /// The variant.
+    pub key: VariantKey,
+    /// Whether a new engine was published.
+    pub fired: bool,
+    /// The epoch after the attempt.
+    pub epoch: u64,
+    /// Backend label on success; the refusal reason otherwise.
+    pub detail: String,
+}
+
+/// The per-server adaptation coordinator (see module docs).
+pub struct AdaptManager {
+    cfg: AdaptConfig,
+    variants: Vec<VariantAdapt>,
+}
+
+impl AdaptManager {
+    /// An empty manager.
+    pub fn new(cfg: AdaptConfig) -> AdaptManager {
+        AdaptManager { cfg, variants: Vec::new() }
+    }
+
+    /// The knobs the manager runs with.
+    pub fn config(&self) -> &AdaptConfig {
+        &self.cfg
+    }
+
+    /// Register a variant for adaptation. Wraps `engine` in an
+    /// [`ObservedEngine`] inside a fresh [`EngineCell`] (what the serving
+    /// workers pool sessions from) and captures the drift *reference* by
+    /// running `reference_inputs` — normally the variant's own calibration
+    /// set — through a tapped session of the raw engine.
+    pub fn register(
+        &mut self,
+        key: VariantKey,
+        engine: Arc<dyn Engine>,
+        backend: RecalBackend,
+        reference_inputs: &[Tensor<f32>],
+    ) -> Result<Arc<EngineCell>, EngineError> {
+        let observer = Arc::new(Observer::new(self.cfg.observer));
+        let mut reference = Accumulator::default();
+        {
+            let mut session = engine.compile()?;
+            let mut tap = RunTap::new(self.cfg.observer.tap_gamma);
+            for img in reference_inputs {
+                session.run_tapped(img, &mut tap)?;
+                reference.absorb(&tap);
+            }
+        }
+        let cell = Arc::new(EngineCell::new(Arc::new(ObservedEngine::new(
+            engine,
+            Arc::clone(&observer),
+        ))));
+        self.variants.push(VariantAdapt {
+            key,
+            cell: Arc::clone(&cell),
+            observer,
+            backend,
+            reference: Mutex::new(reference),
+            detector: Mutex::new(DriftDetector::new(self.cfg.drift)),
+            policy_state: Mutex::new(PolicyState::new()),
+            last_report: Mutex::new(DriftReport::default()),
+            peak_drift: Mutex::new(0.0),
+            recal_serial: Mutex::new(()),
+            recals: AtomicU64::new(0),
+        });
+        Ok(cell)
+    }
+
+    /// Compute fresh drift reports without advancing any state — no
+    /// detector update, no policy decision, no window rotation. For tests
+    /// and ad-hoc inspection; the background loop uses [`AdaptManager::tick`].
+    pub fn probe(&self) -> Vec<(VariantKey, DriftReport)> {
+        self.variants
+            .iter()
+            .map(|v| {
+                let snapshot = v.observer.snapshot();
+                let report =
+                    drift::drift_report(&v.reference.lock().unwrap(), &snapshot, &self.cfg.drift);
+                (v.key.clone(), report)
+            })
+            .collect()
+    }
+
+    /// One poll of the background loop: refresh every variant's drift
+    /// report and hysteresis state, then fire the policy where due.
+    /// Returns the recalibrations attempted this tick.
+    pub fn tick(&self) -> Vec<RecalOutcome> {
+        let now = Instant::now();
+        let mut outcomes = Vec::new();
+        for v in &self.variants {
+            let snapshot = v.observer.snapshot();
+            let report = drift::drift_report(&v.reference.lock().unwrap(), &snapshot, &self.cfg.drift);
+            let drifted = v.detector.lock().unwrap().update(&report);
+            {
+                let mut peak = v.peak_drift.lock().unwrap();
+                if report.aggregate > *peak {
+                    *peak = report.aggregate;
+                }
+            }
+            *v.last_report.lock().unwrap() = report;
+            let fire = v.backend.supported()
+                && self.cfg.policy.should_fire(&v.policy_state.lock().unwrap(), drifted, now);
+            if fire {
+                outcomes.push(self.recalibrate(v, now, true));
+            } else if snapshot.requests >= self.cfg.observer.window_cap {
+                // Bound window staleness: a live window nobody consumed is
+                // rotated out (reservoir too, so a later rebuild calibrates
+                // on recent traffic) so the next report reflects recent
+                // traffic, not a lifetime average.
+                let _ = v.observer.take_window();
+                v.observer.reset_reservoir();
+            }
+        }
+        outcomes
+    }
+
+    /// Recalibrate one variant now: consume the live window, build the
+    /// replacement engine, publish it, and rebase the drift reference onto
+    /// the window that drove the rebuild (the new "normal").
+    ///
+    /// Serialized per variant; with `enforce_cooldown` (the background
+    /// tick's path) the cooldown is re-checked *under* the serialization
+    /// lock, so a tick racing a manual trigger cannot double-fire.
+    fn recalibrate(&self, v: &VariantAdapt, now: Instant, enforce_cooldown: bool) -> RecalOutcome {
+        let _serial = v.recal_serial.lock().unwrap();
+        if enforce_cooldown {
+            let cooled = v
+                .policy_state
+                .lock()
+                .unwrap()
+                .last_recal()
+                .map_or(true, |t| now.saturating_duration_since(t) >= self.cfg.policy.cooldown);
+            if !cooled {
+                return RecalOutcome {
+                    key: v.key.clone(),
+                    fired: false,
+                    epoch: v.cell.epoch(),
+                    detail: "within the recalibration cooldown".into(),
+                };
+            }
+        }
+        let window = v.observer.take_window();
+        // Cloning the image reservoir is only worth it for the backend
+        // that actually calibrates from images.
+        let reservoir = match &v.backend {
+            RecalBackend::Rebuild(_) => v.observer.reservoir_images(),
+            _ => Vec::new(),
+        };
+        match shadow_recalibrate(&v.backend, &window, &reservoir) {
+            Ok(inner) => {
+                let epoch = v
+                    .cell
+                    .publish(Arc::new(ObservedEngine::new(inner, Arc::clone(&v.observer))));
+                *v.reference.lock().unwrap() = window;
+                v.detector.lock().unwrap().reset();
+                v.policy_state.lock().unwrap().mark(now);
+                // The new epoch starts a new "normal": live images sampled
+                // before the swap describe the old grids' regime.
+                v.observer.reset_reservoir();
+                v.recals.fetch_add(1, Ordering::SeqCst);
+                RecalOutcome {
+                    key: v.key.clone(),
+                    fired: true,
+                    epoch,
+                    detail: v.backend.label().to_string(),
+                }
+            }
+            Err(reason) => {
+                // A refused rebuild must not lose the window it consumed.
+                v.observer.merge_back(window);
+                RecalOutcome { key: v.key.clone(), fired: false, epoch: v.cell.epoch(), detail: reason }
+            }
+        }
+    }
+
+    /// Manual trigger (the `POST /v1/recalibrate` path): recalibrate every
+    /// variant with a backend, or only `filter` when given. Bypasses the
+    /// drift policy and its cooldown (operator intent wins) but still
+    /// records the cooldown clock and serializes against the background
+    /// worker.
+    pub fn recalibrate_now(&self, filter: Option<&VariantKey>) -> Vec<RecalOutcome> {
+        let now = Instant::now();
+        self.variants
+            .iter()
+            .filter(|v| filter.map_or(true, |k| v.key == *k))
+            .map(|v| {
+                if v.backend.supported() {
+                    self.recalibrate(v, now, false)
+                } else {
+                    RecalOutcome {
+                        key: v.key.clone(),
+                        fired: false,
+                        epoch: v.cell.epoch(),
+                        detail: "variant has no recalibration backend".into(),
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Current adaptation state of every registered variant.
+    pub fn status(&self) -> Vec<VariantStatus> {
+        self.variants
+            .iter()
+            .map(|v| {
+                let report = v.last_report.lock().unwrap().clone();
+                VariantStatus {
+                    key: v.key.clone(),
+                    epoch: v.cell.epoch(),
+                    drift: report.aggregate,
+                    peak_drift: *v.peak_drift.lock().unwrap(),
+                    drifted: v.detector.lock().unwrap().is_drifted(),
+                    per_node: report.per_node,
+                    max_clip_rate: report.max_clip_rate,
+                    recalibrations: v.recals.load(Ordering::SeqCst),
+                    window_requests: report.requests,
+                    requests_seen: v.observer.requests_seen(),
+                    reservoir: v.observer.reservoir_len(),
+                    backend: v.backend.label(),
+                }
+            })
+            .collect()
+    }
+
+    /// The registered variants.
+    pub fn keys(&self) -> Vec<VariantKey> {
+        self.variants.iter().map(|v| v.key.clone()).collect()
+    }
+}
+
+/// Build the standard 7-variant serving menu with adaptation wired in:
+/// the same variants (and wire names) as
+/// [`crate::engine::standard_menu`], each registered on `manager` with
+/// its natural recalibration backend — int8-static gets the O(C) integer
+/// refold, fake-quant static the reservoir rebuild, and the
+/// self-adapting modes (dynamic, PDQ) plus fp32 get drift observation
+/// only. Returns the `(key, cell)` pairs
+/// [`crate::coordinator::Server::start_adaptive`] consumes.
+pub fn adaptive_standard_menu(
+    model: &Model,
+    manager: &mut AdaptManager,
+) -> Result<Vec<(VariantKey, Arc<EngineCell>)>, EngineError> {
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let mut out = Vec::new();
+    // fp32: observation only.
+    let (key, engine) =
+        EngineBuilder::new(model).calibration_images(&calib).build_variant()?;
+    out.push((key.clone(), manager.register(key, engine, RecalBackend::None, &calib)?));
+    // Fake-quant emulation variants.
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let (key, engine) = EngineBuilder::new(model)
+            .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
+            .calibration_images(&calib)
+            .build_variant()?;
+        let backend = if mode == QuantMode::Static {
+            let graph = Arc::clone(&model.graph);
+            let settings = QuantSettings {
+                mode: QuantMode::Static,
+                granularity: Granularity::PerTensor,
+                ..Default::default()
+            };
+            RecalBackend::Rebuild(Box::new(move |images| {
+                let mut ex = QuantExecutor::new(Arc::clone(&graph), settings);
+                ex.calibrate(images);
+                Ok(Arc::new(QuantEngine::new(Arc::new(ex))) as Arc<dyn Engine>)
+            }))
+        } else {
+            RecalBackend::None
+        };
+        out.push((key.clone(), manager.register(key, engine, backend, &calib)?));
+    }
+    // True-int8 variants, built through the executor so the static one can
+    // keep its lowered program for the refold backend.
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let settings = QuantSettings {
+            mode,
+            granularity: Granularity::PerTensor,
+            ..Default::default()
+        };
+        let mut qex = QuantExecutor::new(Arc::clone(&model.graph), settings);
+        qex.calibrate(&calib);
+        let int8 = Arc::new(
+            Int8Executor::lower(&qex, Granularity::PerTensor).map_err(EngineError::InvalidSpec)?,
+        );
+        let engine: Arc<dyn Engine> = Arc::new(Int8Engine::new(Arc::clone(&int8)));
+        let backend = if mode == QuantMode::Static {
+            RecalBackend::Int8Refold(Mutex::new(int8))
+        } else {
+            RecalBackend::None
+        };
+        let key = VariantKey::new(
+            model.name.clone(),
+            VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor },
+        );
+        out.push((key.clone(), manager.register(key, engine, backend, &calib)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calibrate::demo_model;
+
+    #[test]
+    fn adaptive_menu_mirrors_standard_menu_wires() {
+        let model = demo_model("demo");
+        let mut manager = AdaptManager::new(AdaptConfig::standard());
+        let cells = adaptive_standard_menu(&model, &mut manager).expect("menu builds");
+        assert_eq!(cells.len(), 7);
+        let wires: Vec<String> = cells.iter().map(|(k, _)| k.wire()).collect();
+        for want in ["demo|fp32", "demo|static-t", "demo|ours-t", "demo|int8-static-t", "demo|int8-ours-t"]
+        {
+            assert!(wires.contains(&want.to_string()), "missing {want} in {wires:?}");
+        }
+        // Exactly the two static variants are recalibratable.
+        let recalibratable: Vec<String> = manager
+            .status()
+            .iter()
+            .filter(|s| s.backend != "none")
+            .map(|s| s.key.wire())
+            .collect();
+        assert_eq!(recalibratable.len(), 2, "{recalibratable:?}");
+        assert!(recalibratable.contains(&"demo|static-t".to_string()));
+        assert!(recalibratable.contains(&"demo|int8-static-t".to_string()));
+        // Every cell serves and matches its key's spec.
+        for (key, cell) in &cells {
+            let (epoch, engine) = cell.current();
+            assert_eq!(epoch, 0);
+            assert_eq!(engine.spec(), key.spec);
+            let img = calibration_images(model.task, 1).remove(0);
+            let out = engine.compile().unwrap().run(&img).unwrap();
+            assert_eq!(out[0].shape().dims(), &[10]);
+        }
+    }
+
+    #[test]
+    fn manual_recalibrate_without_stats_refuses_politely() {
+        let model = demo_model("demo");
+        let mut manager = AdaptManager::new(AdaptConfig::standard());
+        let cells = adaptive_standard_menu(&model, &mut manager).unwrap();
+        let int8_static = cells
+            .iter()
+            .find(|(k, _)| k.wire() == "demo|int8-static-t")
+            .map(|(k, _)| k.clone())
+            .unwrap();
+        let outcomes = manager.recalibrate_now(Some(&int8_static));
+        assert_eq!(outcomes.len(), 1);
+        assert!(!outcomes[0].fired, "no live stats yet: {}", outcomes[0].detail);
+        assert_eq!(outcomes[0].epoch, 0);
+        // fp32 has no backend at all.
+        let fp32 = cells[0].0.clone();
+        let outcomes = manager.recalibrate_now(Some(&fp32));
+        assert!(!outcomes[0].fired);
+        assert!(outcomes[0].detail.contains("no recalibration backend"));
+    }
+}

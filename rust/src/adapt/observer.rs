@@ -1,0 +1,457 @@
+//! The sampled, per-node streaming statistics tap ([`Observer`]) and the
+//! engine adapter that feeds it ([`ObservedEngine`]).
+//!
+//! Sessions report one [`RunTap`] per *sampled* request (1-in-`sample_every`
+//! — unsampled requests pay a single atomic increment, which is the
+//! "near-zero hot-path cost" contract). The observer folds taps into a
+//! mergeable [`Accumulator`]: per node, the integer `S1`/`S2` window sums of
+//! [`WindowStats`] plus a clip counter (values on the grid extremes — the
+//! paper's γ-coverage knob made observable). A bounded uniform reservoir of
+//! sampled input images (Vitter's Algorithm R, seeded) rides along as the
+//! live calibration set for full-rebuild recalibration backends.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{Engine, EngineError, RunTap, Session};
+use crate::engine::VariantSpec;
+use crate::estimator::fixed::WindowStats;
+use crate::tensor::{Shape, Tensor};
+
+/// Observation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ObserverConfig {
+    /// Tap every Nth request (1 = every request). Unsampled requests cost
+    /// one atomic increment.
+    pub sample_every: u32,
+    /// γ stride for the tap's window statistics (independent of the
+    /// serving estimator's γ, so observation can be cheaper).
+    pub tap_gamma: usize,
+    /// Capacity of the live-input reservoir (the paper's shared
+    /// calibration-set size by default).
+    pub reservoir_cap: usize,
+    /// Rotate (reset) the live window once it holds this many sampled
+    /// requests without a recalibration consuming it — bounds staleness so
+    /// the drift score tracks *recent* traffic instead of a lifetime
+    /// average ([`crate::adapt::AdaptManager::tick`] enforces it).
+    pub window_cap: u64,
+}
+
+impl Default for ObserverConfig {
+    fn default() -> Self {
+        Self {
+            sample_every: 4,
+            tap_gamma: 4,
+            reservoir_cap: crate::engine::CALIB_SIZE,
+            window_cap: 512,
+        }
+    }
+}
+
+/// One node's merged statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeAccum {
+    /// Grid scale the integer sums were accumulated on (stable within an
+    /// epoch; used to convert sums to real units).
+    pub scale: f32,
+    /// Pooled window accumulators across every sampled request.
+    pub window: WindowStats,
+    /// Output values observed on the grid extremes.
+    pub clipped: u64,
+    /// Total output values inspected.
+    pub total: u64,
+}
+
+impl NodeAccum {
+    /// Fold another accumulator of the same node into this one.
+    pub fn merge(&mut self, other: &NodeAccum) {
+        if self.total == 0 && self.window.n == 0 {
+            self.scale = other.scale;
+        }
+        self.window.n += other.window.n;
+        self.window.sum_s1 += other.window.sum_s1;
+        self.window.sum_s2 += other.window.sum_s2;
+        self.window.sum_s1_sq += other.window.sum_s1_sq;
+        self.clipped += other.clipped;
+        self.total += other.total;
+    }
+
+    /// Fraction of observed output values on the grid extremes.
+    pub fn clip_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.total as f64
+        }
+    }
+
+    /// Grid-independent real-unit features for drift comparison.
+    pub fn features(&self) -> NodeFeatures {
+        let n = self.window.n.max(1) as f64;
+        NodeFeatures {
+            mean_s1: self.scale as f64 * self.window.sum_s1 as f64 / n,
+            mean_s2: (self.scale as f64).powi(2) * self.window.sum_s2 as f64 / n,
+            clip_rate: self.clip_rate(),
+        }
+    }
+}
+
+/// Real-unit summary of one node's window: mean window sum, mean window
+/// energy, and the clip rate. Comparable across recalibration epochs
+/// (grids change, real units don't).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFeatures {
+    /// `scale · mean(S1)` — the mean window sum in real units.
+    pub mean_s1: f64,
+    /// `scale² · mean(S2)` — the mean window energy in real units.
+    pub mean_s2: f64,
+    /// Fraction of output values on the grid extremes.
+    pub clip_rate: f64,
+}
+
+/// A mergeable window of per-node statistics over some span of sampled
+/// requests.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    /// Sampled requests folded into this window.
+    pub requests: u64,
+    /// Per-node statistics, keyed by graph node id.
+    pub nodes: BTreeMap<usize, NodeAccum>,
+}
+
+impl Accumulator {
+    /// Fold one run's tap into the window.
+    pub fn absorb(&mut self, tap: &RunTap) {
+        self.requests += 1;
+        for nt in &tap.nodes {
+            let e = self.nodes.entry(nt.node).or_default();
+            e.merge(&NodeAccum {
+                scale: nt.scale,
+                window: nt.window,
+                clipped: nt.clipped,
+                total: nt.total,
+            });
+        }
+    }
+
+    /// Fold a whole other window into this one.
+    pub fn merge(&mut self, other: &Accumulator) {
+        self.requests += other.requests;
+        for (node, acc) in &other.nodes {
+            self.nodes.entry(*node).or_default().merge(acc);
+        }
+    }
+
+    /// Real-unit features per node.
+    pub fn features(&self) -> BTreeMap<usize, NodeFeatures> {
+        self.nodes.iter().map(|(n, a)| (*n, a.features())).collect()
+    }
+
+    /// The raw pooled window statistics per node (what
+    /// [`crate::nn::Int8Executor::refit_static_grids`] consumes).
+    pub fn window_stats(&self) -> BTreeMap<usize, WindowStats> {
+        self.nodes.iter().map(|(n, a)| (*n, a.window)).collect()
+    }
+
+    /// The largest per-node clip rate in the window.
+    pub fn max_clip_rate(&self) -> f64 {
+        self.nodes.values().map(|a| a.clip_rate()).fold(0.0, f64::max)
+    }
+
+    /// Whether any statistics were collected.
+    pub fn is_empty(&self) -> bool {
+        self.requests == 0
+    }
+}
+
+/// Bounded uniform sample of live inputs (Algorithm R, seeded LCG — same
+/// scheme as the metrics reservoirs, so runs are reproducible).
+struct ImageReservoir {
+    cap: usize,
+    seen: u64,
+    images: Vec<Tensor<f32>>,
+    lcg: u64,
+}
+
+impl ImageReservoir {
+    fn offer(&mut self, img: &Tensor<f32>) {
+        if self.cap == 0 {
+            return;
+        }
+        self.seen += 1;
+        if self.images.len() < self.cap {
+            self.images.push(img.clone());
+            return;
+        }
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = (self.lcg >> 16) % self.seen;
+        if (j as usize) < self.cap {
+            self.images[j as usize] = img.clone();
+        }
+    }
+}
+
+/// The per-variant streaming statistics tap (see module docs).
+pub struct Observer {
+    cfg: ObserverConfig,
+    seen: AtomicU64,
+    accum: Mutex<Accumulator>,
+    reservoir: Mutex<ImageReservoir>,
+}
+
+impl Observer {
+    /// A fresh observer.
+    pub fn new(cfg: ObserverConfig) -> Observer {
+        Observer {
+            cfg,
+            seen: AtomicU64::new(0),
+            accum: Mutex::new(Accumulator::default()),
+            reservoir: Mutex::new(ImageReservoir {
+                cap: cfg.reservoir_cap,
+                seen: 0,
+                images: Vec::new(),
+                lcg: 0x0B5E_12E5 | 1,
+            }),
+        }
+    }
+
+    /// The observation knobs.
+    pub fn config(&self) -> &ObserverConfig {
+        &self.cfg
+    }
+
+    /// Sampling decision for the next request (one atomic increment).
+    pub fn should_sample(&self) -> bool {
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        self.cfg.sample_every <= 1 || n % self.cfg.sample_every as u64 == 0
+    }
+
+    /// Requests seen (sampled or not).
+    pub fn requests_seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Fold a sampled run's tap into the live window.
+    pub fn absorb(&self, tap: &RunTap) {
+        self.accum.lock().unwrap().absorb(tap);
+    }
+
+    /// Offer a sampled input to the live-image reservoir.
+    pub fn offer_image(&self, img: &Tensor<f32>) {
+        self.reservoir.lock().unwrap().offer(img);
+    }
+
+    /// A copy of the current live window.
+    pub fn snapshot(&self) -> Accumulator {
+        self.accum.lock().unwrap().clone()
+    }
+
+    /// Take the live window, leaving an empty one (the recalibration
+    /// hand-off point).
+    pub fn take_window(&self) -> Accumulator {
+        std::mem::take(&mut *self.accum.lock().unwrap())
+    }
+
+    /// Return a previously taken window (a recalibration that failed must
+    /// not lose the statistics it consumed).
+    pub fn merge_back(&self, window: Accumulator) {
+        self.accum.lock().unwrap().merge(&window);
+    }
+
+    /// The current live-image reservoir (uniform over the sampled inputs
+    /// offered since the last [`Observer::reset_reservoir`]).
+    pub fn reservoir_images(&self) -> Vec<Tensor<f32>> {
+        self.reservoir.lock().unwrap().images.clone()
+    }
+
+    /// Reservoir fill, without cloning any images (status endpoints poll
+    /// this on every scrape).
+    pub fn reservoir_len(&self) -> usize {
+        self.reservoir.lock().unwrap().images.len()
+    }
+
+    /// Empty the reservoir so it re-fills from current traffic. Called
+    /// alongside window rotation and after a successful recalibration —
+    /// a lifetime-uniform sample would hand a later rebuild mostly
+    /// pre-drift images, exactly the staleness the window rotation exists
+    /// to bound.
+    pub fn reset_reservoir(&self) {
+        let mut r = self.reservoir.lock().unwrap();
+        r.images.clear();
+        r.seen = 0;
+    }
+}
+
+/// An [`Engine`] adapter that taps sampled requests into an [`Observer`].
+///
+/// Wrapping is transparent: spec, input shape, and — critically — the
+/// outputs of every run are identical to the inner engine's
+/// ([`Session::run_tapped`]'s contract). This is what
+/// [`crate::adapt::AdaptManager`] publishes into a
+/// [`crate::engine::EngineCell`], so serving workers observe traffic
+/// without knowing adaptation exists.
+pub struct ObservedEngine {
+    inner: Arc<dyn Engine>,
+    observer: Arc<Observer>,
+}
+
+impl ObservedEngine {
+    /// Wrap `inner`, reporting sampled runs to `observer`.
+    pub fn new(inner: Arc<dyn Engine>, observer: Arc<Observer>) -> ObservedEngine {
+        ObservedEngine { inner, observer }
+    }
+
+    /// The wrapped engine.
+    pub fn inner(&self) -> &Arc<dyn Engine> {
+        &self.inner
+    }
+}
+
+impl Engine for ObservedEngine {
+    fn spec(&self) -> VariantSpec {
+        self.inner.spec()
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.inner.input_shape()
+    }
+
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError> {
+        Ok(Box::new(ObservedSession {
+            tap: RunTap::new(self.observer.config().tap_gamma),
+            inner: self.inner.compile()?,
+            observer: Arc::clone(&self.observer),
+        }))
+    }
+}
+
+struct ObservedSession {
+    inner: Box<dyn Session>,
+    observer: Arc<Observer>,
+    tap: RunTap,
+}
+
+impl Session for ObservedSession {
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
+        if self.observer.should_sample() {
+            let outputs = self.inner.run_tapped(input, &mut self.tap)?;
+            self.observer.absorb(&self.tap);
+            self.observer.offer_image(input);
+            Ok(outputs)
+        } else {
+            self.inner.run(input)
+        }
+    }
+
+    fn run_tapped(
+        &mut self,
+        input: &Tensor<f32>,
+        tap: &mut RunTap,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.inner.run_tapped(input, tap)
+    }
+
+    fn input_shape(&self) -> &Shape {
+        self.inner.input_shape()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::nn::Graph;
+
+    fn relu_engine() -> Arc<dyn Engine> {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        Arc::new(FloatEngine::new(Arc::new(g)))
+    }
+
+    #[test]
+    fn accumulator_merges_node_stats() {
+        let mut tap = RunTap::new(1);
+        let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![0.0, 0.5, 1.0, 0.25]);
+        tap.observe_input_grid(&img);
+        let mut a = Accumulator::default();
+        a.absorb(&tap);
+        a.absorb(&tap);
+        assert_eq!(a.requests, 2);
+        let node0 = &a.nodes[&0];
+        assert_eq!(node0.window.n, 2);
+        assert_eq!(node0.total, 8);
+        assert_eq!(node0.clipped, 4);
+        // merge() == absorbing the same taps into one window.
+        let mut b = Accumulator::default();
+        b.absorb(&tap);
+        let mut c = Accumulator::default();
+        c.absorb(&tap);
+        b.merge(&c);
+        assert_eq!(b.nodes[&0].window.sum_s1, node0.window.sum_s1);
+        assert_eq!(b.max_clip_rate(), node0.clip_rate());
+    }
+
+    #[test]
+    fn sampling_rate_is_one_in_n() {
+        let obs = Observer::new(ObserverConfig { sample_every: 4, ..Default::default() });
+        let sampled = (0..100).filter(|_| obs.should_sample()).count();
+        assert_eq!(sampled, 25);
+        let every = Observer::new(ObserverConfig { sample_every: 1, ..Default::default() });
+        assert_eq!((0..10).filter(|_| every.should_sample()).count(), 10);
+    }
+
+    #[test]
+    fn take_window_resets_and_merge_back_restores() {
+        let obs = Observer::new(ObserverConfig { sample_every: 1, ..Default::default() });
+        let mut tap = RunTap::new(1);
+        tap.observe_input_grid(&Tensor::full(Shape::hwc(2, 2, 1), 0.5));
+        obs.absorb(&tap);
+        let w = obs.take_window();
+        assert_eq!(w.requests, 1);
+        assert!(obs.snapshot().is_empty());
+        obs.merge_back(w);
+        assert_eq!(obs.snapshot().requests, 1);
+    }
+
+    #[test]
+    fn reservoir_bounds_and_fills() {
+        let obs = Observer::new(ObserverConfig {
+            sample_every: 1,
+            reservoir_cap: 4,
+            ..Default::default()
+        });
+        for i in 0..32 {
+            obs.offer_image(&Tensor::full(Shape::hwc(2, 2, 1), i as f32));
+        }
+        let imgs = obs.reservoir_images();
+        assert_eq!(imgs.len(), 4);
+        // Uniform over the stream: not frozen at the first four offers.
+        assert!(imgs.iter().any(|t| t.data()[0] >= 4.0), "reservoir never displaced");
+    }
+
+    #[test]
+    fn observed_engine_is_transparent_and_counts() {
+        let observer = Arc::new(Observer::new(ObserverConfig {
+            sample_every: 2,
+            ..Default::default()
+        }));
+        let inner = relu_engine();
+        let wrapped = ObservedEngine::new(Arc::clone(&inner), Arc::clone(&observer));
+        assert_eq!(wrapped.spec(), inner.spec());
+        let mut plain = inner.compile().unwrap();
+        let mut obs_session = wrapped.compile().unwrap();
+        let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, -2.0, 3.0, -4.0]);
+        for _ in 0..8 {
+            let a = obs_session.run(&img).unwrap();
+            let b = plain.run(&img).unwrap();
+            assert_eq!(a[0].data(), b[0].data(), "observation must not perturb outputs");
+        }
+        assert_eq!(observer.requests_seen(), 8);
+        // 1-in-2 sampling tapped 4 of the 8 runs.
+        assert_eq!(observer.snapshot().requests, 4);
+        assert_eq!(observer.reservoir_images().len(), 4);
+    }
+}

@@ -1,0 +1,139 @@
+//! Recalibration policies: when the background worker may fire a shadow
+//! recalibration.
+//!
+//! Three policies, all rate-limited by a shared cooldown (at most one
+//! recalibration per cooldown window per variant, no matter how long the
+//! drift signal stays high — grid swaps are cheap but not free, and a
+//! flapping trigger would churn the session pools):
+//!
+//! - [`RecalPolicy::Manual`] — never fires on its own; only the
+//!   `POST /v1/recalibrate` endpoint (or a direct
+//!   [`crate::adapt::AdaptManager::recalibrate_now`] call) triggers.
+//! - [`RecalPolicy::Periodic`] — fires every `every`, drift or not
+//!   (the belt-and-braces production default for long-lived deployments).
+//! - [`RecalPolicy::DriftTriggered`] — fires while the variant's
+//!   [`super::drift::DriftDetector`] is in the drifted state.
+
+use std::time::{Duration, Instant};
+
+/// When to fire (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecalPolicy {
+    /// Only explicit triggers.
+    Manual,
+    /// Every so often, unconditionally.
+    Periodic(Duration),
+    /// While the drift detector reports drifted.
+    DriftTriggered,
+}
+
+/// A policy plus its cooldown.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyConfig {
+    /// The firing rule.
+    pub policy: RecalPolicy,
+    /// Minimum spacing between recalibrations of one variant (applies to
+    /// every policy; manual triggers bypass it deliberately).
+    pub cooldown: Duration,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self { policy: RecalPolicy::DriftTriggered, cooldown: Duration::from_secs(5) }
+    }
+}
+
+/// Per-variant policy clock.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyState {
+    created: Instant,
+    last_recal: Option<Instant>,
+}
+
+impl PolicyState {
+    /// A fresh clock starting now.
+    pub fn new() -> PolicyState {
+        PolicyState { created: Instant::now(), last_recal: None }
+    }
+
+    /// Record a recalibration (manual or automatic) at `now`.
+    pub fn mark(&mut self, now: Instant) {
+        self.last_recal = Some(now);
+    }
+
+    /// When the variant last recalibrated.
+    pub fn last_recal(&self) -> Option<Instant> {
+        self.last_recal
+    }
+}
+
+impl Default for PolicyState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PolicyConfig {
+    /// Should the background worker fire now? `drifted` is the variant's
+    /// current hysteresis state.
+    pub fn should_fire(&self, state: &PolicyState, drifted: bool, now: Instant) -> bool {
+        let cooled = state
+            .last_recal
+            .map_or(true, |t| now.duration_since(t) >= self.cooldown);
+        if !cooled {
+            return false;
+        }
+        match self.policy {
+            RecalPolicy::Manual => false,
+            RecalPolicy::Periodic(every) => {
+                let since = state.last_recal.unwrap_or(state.created);
+                now.duration_since(since) >= every
+            }
+            RecalPolicy::DriftTriggered => drifted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_triggered_respects_cooldown() {
+        let cfg = PolicyConfig {
+            policy: RecalPolicy::DriftTriggered,
+            cooldown: Duration::from_secs(10),
+        };
+        let mut st = PolicyState::new();
+        let t0 = Instant::now();
+        assert!(cfg.should_fire(&st, true, t0), "drifted + never fired => fire");
+        assert!(!cfg.should_fire(&st, false, t0), "calm => no fire");
+        st.mark(t0);
+        // Sustained drift inside the cooldown window: exactly one firing.
+        assert!(!cfg.should_fire(&st, true, t0 + Duration::from_secs(5)));
+        assert!(cfg.should_fire(&st, true, t0 + Duration::from_secs(10)));
+    }
+
+    #[test]
+    fn periodic_fires_on_schedule() {
+        let cfg = PolicyConfig {
+            policy: RecalPolicy::Periodic(Duration::from_secs(30)),
+            cooldown: Duration::from_secs(5),
+        };
+        let st = PolicyState::new();
+        let born = st.created;
+        assert!(!cfg.should_fire(&st, false, born + Duration::from_secs(10)));
+        assert!(cfg.should_fire(&st, false, born + Duration::from_secs(30)));
+        let mut st2 = st;
+        st2.mark(born + Duration::from_secs(30));
+        assert!(!cfg.should_fire(&st2, true, born + Duration::from_secs(45)));
+        assert!(cfg.should_fire(&st2, true, born + Duration::from_secs(61)));
+    }
+
+    #[test]
+    fn manual_never_self_fires() {
+        let cfg = PolicyConfig { policy: RecalPolicy::Manual, cooldown: Duration::ZERO };
+        let st = PolicyState::new();
+        assert!(!cfg.should_fire(&st, true, Instant::now()));
+    }
+}

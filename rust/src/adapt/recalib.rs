@@ -1,0 +1,196 @@
+//! Shadow recalibration: build a replacement engine from live statistics,
+//! off the hot path.
+//!
+//! Two backends, chosen per variant at registration:
+//!
+//! - [`RecalBackend::Int8Refold`] — the paper-native fast path for
+//!   int8-static variants: the pooled live window sums drive the layer
+//!   estimators (Eq. 8–12 + the calibrated `I(α, β)`) to fresh frozen
+//!   grids, and the bias/requant constants are refolded on the existing
+//!   `s_in·s_w` accumulator grid
+//!   ([`Int8Executor::refit_static_grids`]) — O(C) arithmetic per node,
+//!   integer statistics in, no dequantization, no stored images.
+//! - [`RecalBackend::Rebuild`] — the general path: re-run the variant's
+//!   full calibration (`calibrate()`, Eq. 13 interval refit included) on
+//!   the observer's live-image reservoir. Used for the fake-quant static
+//!   variant, where calibration works on f32 observations.
+//!
+//! Variants whose grids already track the input per request — dynamic and
+//! PDQ — get [`RecalBackend::None`]: drift is still *observed* for them
+//! (that contrast is the paper's §5.2 story), but there is nothing frozen
+//! to repair.
+//!
+//! The built engine is published through
+//! [`crate::engine::EngineCell::publish`] by the manager; this module only
+//! constructs it.
+
+use std::sync::{Arc, Mutex};
+
+use super::observer::Accumulator;
+use crate::engine::{Engine, EngineError, Int8Engine};
+use crate::nn::Int8Executor;
+use crate::tensor::Tensor;
+
+/// A full-rebuild recalibration: live calibration images in, fresh engine
+/// out. The closure owns whatever it needs (typically an `Arc<Graph>` and
+/// the variant's `QuantSettings`).
+pub type RebuildFn =
+    Box<dyn Fn(&[Tensor<f32>]) -> Result<Arc<dyn Engine>, EngineError> + Send + Sync>;
+
+/// Fewest reservoir images a [`RecalBackend::Rebuild`] will calibrate on.
+pub const MIN_REBUILD_IMAGES: usize = 4;
+
+/// Fewest sampled requests an [`RecalBackend::Int8Refold`] window must
+/// hold — grids fitted to one or two requests' statistics would be worse
+/// than the stale grids they replace.
+pub const MIN_REFOLD_REQUESTS: u64 = 4;
+
+/// How a variant recalibrates (see module docs).
+pub enum RecalBackend {
+    /// Nothing frozen to repair (fp32, dynamic, PDQ).
+    None,
+    /// Stats-driven O(C) grid refold for int8-static; holds the variant's
+    /// *current* lowered program so successive refolds chain.
+    Int8Refold(Mutex<Arc<Int8Executor>>),
+    /// Full recalibration from the live-image reservoir.
+    Rebuild(RebuildFn),
+}
+
+impl RecalBackend {
+    /// Whether this backend can produce a replacement engine.
+    pub fn supported(&self) -> bool {
+        !matches!(self, RecalBackend::None)
+    }
+
+    /// Stable label for status endpoints and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecalBackend::None => "none",
+            RecalBackend::Int8Refold(_) => "int8-refold",
+            RecalBackend::Rebuild(_) => "rebuild",
+        }
+    }
+}
+
+/// Build a replacement engine from a live window and/or image reservoir.
+/// Purely constructive — the caller publishes (or discards) the result.
+pub fn shadow_recalibrate(
+    backend: &RecalBackend,
+    window: &Accumulator,
+    reservoir: &[Tensor<f32>],
+) -> Result<Arc<dyn Engine>, String> {
+    match backend {
+        RecalBackend::None => Err("variant has no recalibration backend".into()),
+        RecalBackend::Int8Refold(current) => {
+            if window.requests < MIN_REFOLD_REQUESTS {
+                return Err(format!(
+                    "live window holds {} sampled requests, need >= {MIN_REFOLD_REQUESTS}",
+                    window.requests
+                ));
+            }
+            let stats = window.window_stats();
+            if stats.values().all(|s| s.n == 0) {
+                return Err("no live window statistics accumulated yet".into());
+            }
+            let old = Arc::clone(&current.lock().unwrap());
+            let refit = Arc::new(old.refit_static_grids(&stats)?);
+            *current.lock().unwrap() = Arc::clone(&refit);
+            Ok(Arc::new(Int8Engine::new(refit)))
+        }
+        RecalBackend::Rebuild(build) => {
+            if reservoir.len() < MIN_REBUILD_IMAGES {
+                return Err(format!(
+                    "live reservoir holds {} images, need >= {MIN_REBUILD_IMAGES}",
+                    reservoir.len()
+                ));
+            }
+            build(reservoir).map_err(|e| e.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{QuantEngine, RunTap};
+    use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+    use crate::nn::{Graph, QuantMode};
+    use crate::quant::Granularity;
+    use crate::tensor::{ConvGeom, Shape};
+    use crate::util::Pcg32;
+
+    fn graph_and_calib() -> (Arc<Graph>, Vec<Tensor<f32>>) {
+        let mut rng = Pcg32::new(0xADA7);
+        let mut g = Graph::new(Shape::hwc(8, 8, 2));
+        let x = g.input();
+        let w: Vec<f32> = (0..4 * 9 * 2).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(
+            x,
+            Tensor::from_vec(Shape::ohwi(4, 3, 3, 2), w),
+            vec![0.0; 4],
+            ConvGeom::same(3, 1),
+        );
+        let r = g.relu(c);
+        let p = g.global_avg_pool(r);
+        g.mark_output(p);
+        let graph = Arc::new(g);
+        let calib: Vec<Tensor<f32>> = (0..6)
+            .map(|_| {
+                let d: Vec<f32> = (0..8 * 8 * 2).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(8, 8, 2), d)
+            })
+            .collect();
+        (graph, calib)
+    }
+
+    #[test]
+    fn none_backend_refuses() {
+        let w = Accumulator::default();
+        assert!(shadow_recalibrate(&RecalBackend::None, &w, &[]).is_err());
+        assert!(!RecalBackend::None.supported());
+    }
+
+    #[test]
+    fn int8_refold_needs_stats_then_chains() {
+        let (graph, calib) = graph_and_calib();
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&graph),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let int8 = Arc::new(Int8Executor::lower(&ex, Granularity::PerTensor).unwrap());
+        let backend = RecalBackend::Int8Refold(Mutex::new(Arc::clone(&int8)));
+        assert_eq!(backend.label(), "int8-refold");
+        // Empty window: typed refusal.
+        assert!(shadow_recalibrate(&backend, &Accumulator::default(), &[]).is_err());
+        // A tapped window makes it fire, and the stored program advances.
+        let mut arena = int8.make_arena();
+        let mut tap = RunTap::new(1);
+        let mut window = Accumulator::default();
+        for img in &calib {
+            int8.run_tapped_with_arena(img, &mut arena, &mut tap).unwrap();
+            window.absorb(&tap);
+        }
+        let engine = shadow_recalibrate(&backend, &window, &[]).unwrap();
+        assert_eq!(engine.spec(), Int8Engine::new(Arc::clone(&int8)).spec());
+        if let RecalBackend::Int8Refold(cur) = &backend {
+            assert!(!Arc::ptr_eq(&cur.lock().unwrap(), &int8), "refold must chain");
+        }
+    }
+
+    #[test]
+    fn rebuild_enforces_reservoir_floor() {
+        let (graph, calib) = graph_and_calib();
+        let settings = QuantSettings { mode: QuantMode::Static, ..Default::default() };
+        let g2 = Arc::clone(&graph);
+        let backend = RecalBackend::Rebuild(Box::new(move |imgs| {
+            let mut ex = QuantExecutor::new(Arc::clone(&g2), settings);
+            ex.calibrate(imgs);
+            Ok(Arc::new(QuantEngine::new(Arc::new(ex))) as Arc<dyn Engine>)
+        }));
+        let w = Accumulator::default();
+        assert!(shadow_recalibrate(&backend, &w, &calib[..2]).is_err(), "floor enforced");
+        let engine = shadow_recalibrate(&backend, &w, &calib).unwrap();
+        assert!(engine.compile().is_ok(), "rebuilt engine is calibrated");
+    }
+}

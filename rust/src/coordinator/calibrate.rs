@@ -11,10 +11,24 @@
 use std::sync::Arc;
 
 use crate::data::Task;
-use crate::models::Model;
+use crate::models::{zoo, Model};
 use crate::tensor::Tensor;
 
 pub use crate::engine::{calibration_images, CALIB_SIZE};
+
+/// Load `name` from the AOT artifacts, falling back to the synthetic
+/// [`demo_model`] when `artifacts/` (or the model) is missing — the shared
+/// "always runnable" path every example uses, so no example hard-requires
+/// `make artifacts`.
+pub fn load_or_demo(artifacts: &std::path::Path, name: &str) -> Model {
+    match zoo::load_manifest(artifacts).and_then(|m| zoo::load_model(artifacts, &m, name)) {
+        Ok(model) => model,
+        Err(_) => {
+            eprintln!("artifacts/ not found — using the synthetic demo model");
+            demo_model(name)
+        }
+    }
+}
 
 /// A small self-contained classification model with seeded random weights:
 /// conv(3→8, s2) → relu → conv(8→8, s2) → relu → gap → linear(8→10) on the

@@ -9,6 +9,7 @@
 //! and, for the percentiles that must be *exact* regardless of sampling, a
 //! fixed log-bucketed histogram that Prometheus can scrape cumulatively.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -17,6 +18,9 @@ use crate::util::stats;
 
 /// Default reservoir capacity per series.
 const RESERVOIR: usize = 100_000;
+
+/// Per-variant latency reservoir capacity (smaller: one per variant).
+const VARIANT_RESERVOIR: usize = 8_192;
 
 /// Latency histogram upper bounds, microseconds (`+Inf` is implicit).
 pub const LATENCY_BUCKETS_US: [f32; 14] = [
@@ -52,6 +56,34 @@ impl Reservoir {
     }
 }
 
+/// Per-variant request/response/latency breakdown (keyed by the variant's
+/// stable wire name) — the prerequisite for attributing drift and error
+/// bursts to a specific served variant.
+#[derive(Debug)]
+struct VariantCounters {
+    requests: u64,
+    responses: u64,
+    engine_errors: u64,
+    latency_sum_us: f64,
+    latencies_us: Reservoir,
+}
+
+impl VariantCounters {
+    fn new(wire: &str) -> Self {
+        // Deterministic per-variant reservoir seed from the wire name.
+        let seed = wire.bytes().fold(0xCBF2_9CE4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01B3)
+        });
+        Self {
+            requests: 0,
+            responses: 0,
+            engine_errors: 0,
+            latency_sum_us: 0.0,
+            latencies_us: Reservoir::new(VARIANT_RESERVOIR, seed),
+        }
+    }
+}
+
 #[derive(Debug)]
 struct Inner {
     requests: u64,
@@ -68,6 +100,10 @@ struct Inner {
     latency_sum_us: f64,
     /// Exact cumulative counts; last slot is the +Inf overflow bucket.
     latency_hist: [u64; LATENCY_BUCKETS_US.len() + 1],
+    /// Per-variant breakdown; only wires registered via
+    /// [`Metrics::register_variant`] are tracked, so unknown-variant spam
+    /// cannot grow this map unboundedly.
+    variants: BTreeMap<String, VariantCounters>,
 }
 
 /// Shared metrics registry (cheap enough to lock per event).
@@ -99,12 +135,82 @@ impl Metrics {
                 latencies_us: Reservoir::new(cap, 0x5EED_1A7E),
                 latency_sum_us: 0.0,
                 latency_hist: [0; LATENCY_BUCKETS_US.len() + 1],
+                variants: BTreeMap::new(),
             }),
         }
     }
 
     pub fn on_request(&self) {
         self.inner.lock().unwrap().requests += 1;
+    }
+
+    /// Start tracking a variant's breakdown (the server registers every
+    /// catalog entry at startup; unregistered wires are ignored by the
+    /// `*_for` recorders).
+    pub fn register_variant(&self, wire: &str) {
+        self.inner
+            .lock()
+            .unwrap()
+            .variants
+            .entry(wire.to_string())
+            .or_insert_with(|| VariantCounters::new(wire));
+    }
+
+    /// [`Metrics::on_request`] plus the variant's own counter.
+    pub fn on_request_for(&self, wire: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        if let Some(v) = m.variants.get_mut(wire) {
+            v.requests += 1;
+        }
+    }
+
+    /// [`Metrics::on_response`] plus the variant's own latency series.
+    pub fn on_response_for(&self, wire: &str, latency: Duration) {
+        let us = latency.as_micros() as f32;
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        m.latencies_us.push(us);
+        m.latency_sum_us += us as f64;
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&ub| us <= ub)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        m.latency_hist[idx] += 1;
+        if let Some(v) = m.variants.get_mut(wire) {
+            v.responses += 1;
+            v.latencies_us.push(us);
+            v.latency_sum_us += us as f64;
+        }
+    }
+
+    /// [`Metrics::on_engine_error`] plus the variant's own counter.
+    pub fn on_engine_error_for(&self, wire: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.engine_errors += 1;
+        if let Some(v) = m.variants.get_mut(wire) {
+            v.engine_errors += 1;
+        }
+    }
+
+    /// A variant's request count (0 for unregistered wires).
+    pub fn variant_requests(&self, wire: &str) -> u64 {
+        self.inner.lock().unwrap().variants.get(wire).map_or(0, |v| v.requests)
+    }
+
+    /// A variant's response count (0 for unregistered wires).
+    pub fn variant_responses(&self, wire: &str) -> u64 {
+        self.inner.lock().unwrap().variants.get(wire).map_or(0, |v| v.responses)
+    }
+
+    /// A variant's latency percentile in microseconds (reservoir estimate).
+    pub fn variant_latency_us(&self, wire: &str, pct: f64) -> f32 {
+        self.inner
+            .lock()
+            .unwrap()
+            .variants
+            .get(wire)
+            .map_or(0.0, |v| stats::percentile(&v.latencies_us.samples, pct))
     }
 
     /// A request for a variant the router doesn't know.
@@ -228,6 +334,22 @@ impl Metrics {
             .set("p50_us", stats::percentile(&m.latencies_us.samples, 50.0))
             .set("p95_us", stats::percentile(&m.latencies_us.samples, 95.0))
             .set("p99_us", stats::percentile(&m.latencies_us.samples, 99.0));
+        let mut variants = Json::obj();
+        for (wire, v) in &m.variants {
+            let mut vo = Json::obj();
+            vo.set("requests", v.requests)
+                .set("responses", v.responses)
+                .set("engine_errors", v.engine_errors)
+                .set(
+                    "mean_us",
+                    if v.responses > 0 { v.latency_sum_us / v.responses as f64 } else { 0.0 },
+                )
+                .set("p50_us", stats::percentile(&v.latencies_us.samples, 50.0))
+                .set("p95_us", stats::percentile(&v.latencies_us.samples, 95.0))
+                .set("p99_us", stats::percentile(&v.latencies_us.samples, 99.0));
+            variants.set(wire, vo);
+        }
+        o.set("variants", variants);
         o
     }
 
@@ -287,6 +409,47 @@ impl Metrics {
                 "pdq_request_latency_us_quantile{{q=\"{q}\"}} {}\n",
                 stats::percentile(&m.latencies_us.samples, pct)
             ));
+        }
+        // Per-variant breakdown (requests/responses/errors + quantiles).
+        if !m.variants.is_empty() {
+            s.push_str("# HELP pdq_variant_requests_total Requests submitted, per variant.\n");
+            s.push_str("# TYPE pdq_variant_requests_total counter\n");
+            for (wire, v) in &m.variants {
+                s.push_str(&format!(
+                    "pdq_variant_requests_total{{variant=\"{wire}\"}} {}\n",
+                    v.requests
+                ));
+            }
+            s.push_str("# HELP pdq_variant_responses_total Responses delivered, per variant.\n");
+            s.push_str("# TYPE pdq_variant_responses_total counter\n");
+            for (wire, v) in &m.variants {
+                s.push_str(&format!(
+                    "pdq_variant_responses_total{{variant=\"{wire}\"}} {}\n",
+                    v.responses
+                ));
+            }
+            s.push_str(
+                "# HELP pdq_variant_engine_errors_total Typed engine errors, per variant.\n",
+            );
+            s.push_str("# TYPE pdq_variant_engine_errors_total counter\n");
+            for (wire, v) in &m.variants {
+                s.push_str(&format!(
+                    "pdq_variant_engine_errors_total{{variant=\"{wire}\"}} {}\n",
+                    v.engine_errors
+                ));
+            }
+            s.push_str(
+                "# HELP pdq_variant_latency_us_quantile Reservoir latency quantiles, per variant.\n",
+            );
+            s.push_str("# TYPE pdq_variant_latency_us_quantile gauge\n");
+            for (wire, v) in &m.variants {
+                for (q, pct) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                    s.push_str(&format!(
+                        "pdq_variant_latency_us_quantile{{variant=\"{wire}\",q=\"{q}\"}} {}\n",
+                        stats::percentile(&v.latencies_us.samples, pct)
+                    ));
+                }
+            }
         }
         s
     }
@@ -376,6 +539,39 @@ mod tests {
         // (loose 4-sigma-ish band for cap=32).
         let p50 = a.latency_us(50.0);
         assert!((1500.0..=8500.0).contains(&p50), "p50 {p50} not central");
+    }
+
+    #[test]
+    fn per_variant_breakdown_tracks_registered_wires_only() {
+        let m = Metrics::default();
+        m.register_variant("m|fp32");
+        m.register_variant("m|int8-ours-t");
+        m.on_request_for("m|fp32");
+        m.on_request_for("m|fp32");
+        m.on_request_for("ghost|fp32"); // unregistered: global only
+        m.on_response_for("m|fp32", Duration::from_micros(120));
+        m.on_response_for("m|int8-ours-t", Duration::from_micros(800));
+        m.on_engine_error_for("m|int8-ours-t");
+        // Globals are supersets of the breakdown.
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.responses(), 2);
+        assert_eq!(m.engine_errors(), 1);
+        // Breakdown keyed by wire.
+        assert_eq!(m.variant_requests("m|fp32"), 2);
+        assert_eq!(m.variant_responses("m|fp32"), 1);
+        assert_eq!(m.variant_responses("m|int8-ours-t"), 1);
+        assert_eq!(m.variant_requests("ghost|fp32"), 0, "unregistered wires not tracked");
+        assert!(m.variant_latency_us("m|int8-ours-t", 50.0) >= 800.0);
+        // JSON carries the breakdown.
+        let j = m.to_json();
+        let v = j.get("variants").unwrap().get("m|fp32").unwrap();
+        assert_eq!(v.get("requests").unwrap().as_usize(), Some(2));
+        // Prometheus exposes labeled series.
+        let prom = m.to_prometheus();
+        assert!(prom.contains("pdq_variant_requests_total{variant=\"m|fp32\"} 2"));
+        assert!(prom.contains("pdq_variant_responses_total{variant=\"m|int8-ours-t\"} 1"));
+        assert!(prom.contains("pdq_variant_engine_errors_total{variant=\"m|int8-ours-t\"} 1"));
+        assert!(prom.contains("pdq_variant_latency_us_quantile{variant=\"m|fp32\",q=\"0.5\"}"));
     }
 
     #[test]

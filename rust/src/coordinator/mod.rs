@@ -22,7 +22,14 @@
 //!   demo model; variant *construction* lives in
 //!   [`crate::engine::EngineBuilder`] (paper §5.2: ours and static share
 //!   the same 16-image calibration set).
-//! - [`metrics`] — request counters + latency reservoir, JSON-exportable.
+//! - [`metrics`] — request counters + latency reservoir (global and
+//!   per-variant, keyed by wire name), JSON- and Prometheus-exportable.
+//!
+//! With [`server::Server::start_adaptive`] the coordinator also owns the
+//! online-adaptation recal worker: a background thread ticking
+//! [`crate::adapt::AdaptManager`], whose engine swaps the per-variant
+//! [`crate::engine::SessionPool`]s honor at checkout (drain stops it
+//! first, so no grid swap can land mid-shutdown).
 
 pub mod batcher;
 pub mod calibrate;

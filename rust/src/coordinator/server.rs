@@ -16,6 +16,7 @@
 //! request is executed and its response sent — then join the workers. Every
 //! accepted request gets a response before the fleet exits.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -25,7 +26,8 @@ use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::router::{Router, VariantKey};
 use super::worker::{spawn_workers, Job};
-use crate::engine::{Engine, EngineError, SessionPool};
+use crate::adapt::AdaptManager;
+use crate::engine::{Engine, EngineCell, EngineError, SessionPool};
 use crate::net::admission::{Admission, AdmissionError, Permit};
 use crate::tensor::{Shape, Tensor};
 
@@ -99,34 +101,68 @@ pub struct Server {
     /// (variant, input shape) for every registered variant — the
     /// `/v1/variants` catalog (executors themselves move into the workers).
     catalog: Vec<(VariantKey, Shape)>,
+    /// Online-adaptation state, when started via [`Server::start_adaptive`].
+    adapt: Option<Arc<AdaptManager>>,
+    adapt_stop: Arc<AtomicBool>,
+    adapt_handle: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Server {
     /// Start with a set of (variant, engine) pairs — any [`Engine`]
     /// implementation plugs in; each variant's workers share one
-    /// [`SessionPool`] over its engine.
+    /// [`SessionPool`] over its engine. No adaptation: each engine is
+    /// wrapped in a private [`EngineCell`] that never publishes, so this
+    /// path is behaviorally identical to the pre-adaptation server.
     pub fn start(variants: Vec<(VariantKey, Arc<dyn Engine>)>, config: ServerConfig) -> Self {
+        let cells = variants
+            .into_iter()
+            .map(|(key, engine)| (key, Arc::new(EngineCell::new(engine))))
+            .collect();
+        Self::start_cells(cells, config, None)
+    }
+
+    /// Start with live-swappable engine cells plus the adaptation manager
+    /// that drives them (see [`crate::adapt`]): the coordinator owns the
+    /// background recal worker, ticking `manager` every
+    /// `manager.config().poll_interval` until drain.
+    pub fn start_adaptive(
+        variants: Vec<(VariantKey, Arc<EngineCell>)>,
+        config: ServerConfig,
+        manager: Arc<AdaptManager>,
+    ) -> Self {
+        Self::start_cells(variants, config, Some(manager))
+    }
+
+    fn start_cells(
+        variants: Vec<(VariantKey, Arc<EngineCell>)>,
+        config: ServerConfig,
+        adapt: Option<Arc<AdaptManager>>,
+    ) -> Self {
         let metrics = Arc::new(Metrics::default());
         let mut router = Router::default();
         let mut handles = Vec::new();
         let mut catalog = Vec::with_capacity(variants.len());
-        for (key, engine) in variants {
+        for (key, cell) in variants {
             // The key is what clients address; the engine is what runs. A
             // disagreement would silently serve a different backend than
             // the wire name advertises — refuse at registration, like the
-            // router refuses duplicate keys.
+            // router refuses duplicate keys. (EngineCell::publish preserves
+            // the spec, so the check holds across every later epoch too.)
+            let engine = cell.current().1;
             assert_eq!(
                 key.spec,
                 engine.spec(),
                 "variant {} registered with a mismatched engine",
                 key.wire()
             );
+            metrics.register_variant(&key.wire());
             catalog.push((key.clone(), engine.input_shape().clone()));
             let rx = router.register(key.clone());
             handles.extend(spawn_workers(
                 key.label(),
+                key.wire(),
                 rx,
-                Arc::new(SessionPool::new(engine)),
+                Arc::new(SessionPool::over(cell)),
                 config.policy,
                 Arc::clone(&metrics),
                 config.workers_per_variant,
@@ -134,13 +170,43 @@ impl Server {
         }
         let admission =
             Admission::new(config.max_queue_depth, catalog.iter().map(|(k, _)| k.clone()));
+        let adapt_stop = Arc::new(AtomicBool::new(false));
+        let adapt_handle = adapt.as_ref().map(|manager| {
+            let manager = Arc::clone(manager);
+            let stop = Arc::clone(&adapt_stop);
+            std::thread::Builder::new()
+                .name("pdq-adapt".into())
+                .spawn(move || {
+                    let poll = manager.config().poll_interval.max(Duration::from_millis(10));
+                    while !stop.load(Ordering::SeqCst) {
+                        manager.tick();
+                        // Sleep in short slices so drain is prompt.
+                        let mut slept = Duration::ZERO;
+                        while slept < poll && !stop.load(Ordering::SeqCst) {
+                            let chunk = (poll - slept).min(Duration::from_millis(50));
+                            std::thread::sleep(chunk);
+                            slept += chunk;
+                        }
+                    }
+                })
+                .expect("spawn adapt worker")
+        });
         Self {
             router: RwLock::new(router),
             handles: Mutex::new(handles),
             metrics,
             admission,
             catalog,
+            adapt,
+            adapt_stop,
+            adapt_handle: Mutex::new(adapt_handle),
         }
+    }
+
+    /// The adaptation manager, when this server was started adaptively
+    /// (the front door's `/v1/drift` + `/v1/recalibrate` source).
+    pub fn adapt(&self) -> Option<&Arc<AdaptManager>> {
+        self.adapt.as_ref()
     }
 
     /// Submit a request; returns a receiver for the response, or an error
@@ -151,7 +217,7 @@ impl Server {
         id: u64,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Response>, String> {
-        self.metrics.on_request();
+        self.metrics.on_request_for(&variant.wire());
         let (tx, rx) = mpsc::channel();
         let job = Job {
             request: Request { id, variant: variant.clone(), image, reply: tx },
@@ -181,7 +247,7 @@ impl Server {
         id: u64,
         image: Tensor<f32>,
     ) -> Result<(mpsc::Receiver<Response>, Permit), SubmitError> {
-        self.metrics.on_request();
+        self.metrics.on_request_for(&variant.wire());
         let permit = match self.admission.try_acquire(&variant) {
             Ok(p) => p,
             Err(AdmissionError::UnknownKey) => {
@@ -236,10 +302,15 @@ impl Server {
         self.admission.limit()
     }
 
-    /// Drain in place: stop accepting, execute everything queued, join the
-    /// workers. Idempotent; shared-reference so the network front door can
-    /// drain through its `Arc<Server>`.
+    /// Drain in place: stop the adaptation worker (no grid swaps mid-drain),
+    /// stop accepting, execute everything queued, join the workers.
+    /// Idempotent; shared-reference so the network front door can drain
+    /// through its `Arc<Server>`.
     pub fn drain(&self) {
+        self.adapt_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.adapt_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
         self.router.write().unwrap().close();
         let handles: Vec<JoinHandle<()>> = self.handles.lock().unwrap().drain(..).collect();
         for h in handles {
@@ -293,6 +364,10 @@ mod tests {
         assert_eq!(metrics.requests(), 20);
         assert_eq!(metrics.responses(), 20);
         assert_eq!(metrics.rejected(), 0);
+        // Per-variant breakdown (satellite of the adaptation PR): the wire
+        // name keys requests and responses.
+        assert_eq!(metrics.variant_requests("m|fp32"), 20);
+        assert_eq!(metrics.variant_responses("m|fp32"), 20);
     }
 
     #[test]

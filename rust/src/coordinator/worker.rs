@@ -25,6 +25,7 @@ pub struct Job {
 /// across every batch it serves.
 pub fn spawn_workers(
     name: String,
+    wire: String,
     rx: mpsc::Receiver<Job>,
     pool: Arc<SessionPool>,
     policy: BatchPolicy,
@@ -37,6 +38,7 @@ pub fn spawn_workers(
             let rx = Arc::clone(&rx);
             let pool = Arc::clone(&pool);
             let metrics = Arc::clone(&metrics);
+            let wire = wire.clone();
             let name = format!("{name}#{i}");
             std::thread::Builder::new()
                 .name(name)
@@ -58,8 +60,8 @@ pub fn spawn_workers(
                                 // variant): answer, don't drop.
                                 for job in batch {
                                     let latency = job.enqueued.elapsed();
-                                    metrics.on_response(latency);
-                                    metrics.on_engine_error();
+                                    metrics.on_response_for(&wire, latency);
+                                    metrics.on_engine_error_for(&wire);
                                     let _ = job.request.reply.send(Response {
                                         id: job.request.id,
                                         result: Err(e.clone()),
@@ -72,9 +74,9 @@ pub fn spawn_workers(
                         for job in batch {
                             let result = session.run(&job.request.image);
                             let latency = job.enqueued.elapsed();
-                            metrics.on_response(latency);
+                            metrics.on_response_for(&wire, latency);
                             if result.is_err() {
-                                metrics.on_engine_error();
+                                metrics.on_engine_error_for(&wire);
                             }
                             let _ = job.request.reply.send(Response {
                                 id: job.request.id,
@@ -111,8 +113,10 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::default());
         let pool = passthrough_pool();
+        metrics.register_variant("m|fp32");
         let handles = spawn_workers(
             "test".into(),
+            "m|fp32".into(),
             rx,
             Arc::clone(&pool),
             BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) },
@@ -146,6 +150,7 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(metrics.responses(), 10);
+        assert_eq!(metrics.variant_responses("m|fp32"), 10, "breakdown follows the wire");
         assert!(metrics.mean_batch() >= 1.0);
         // Sessions were pooled, not re-compiled per request: at most one
         // per worker thread is left idle.
@@ -181,6 +186,7 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let handles = spawn_workers(
             "uncal".into(),
+            "m|fp32".into(),
             rx,
             pool,
             BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) },

@@ -65,6 +65,24 @@ impl Corruption {
             Corruption::Combination => "combination",
         }
     }
+
+    /// Inverse of [`Corruption::name`] (the `pdq loadgen --shift` parser).
+    pub fn from_name(s: &str) -> Result<Corruption, String> {
+        Corruption::all()
+            .into_iter()
+            .find(|c| c.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Corruption::all().iter().map(|c| c.name()).collect();
+                format!("unknown corruption {s:?} (one of {})", names.join(", "))
+            })
+    }
+}
+
+impl std::str::FromStr for Corruption {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Corruption::from_name(s)
+    }
 }
 
 /// Apply `c` at `severity` ∈ [1, 5]; `rng` drives any stochastic component.
@@ -236,6 +254,90 @@ mod tests {
         for c in Corruption::base() {
             let out = corrupt(&img, c, 3, &mut rng);
             assert_ne!(out.data(), img.data(), "{c:?} must modify the image");
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in Corruption::all() {
+            assert_eq!(Corruption::from_name(c.name()).unwrap(), c);
+            assert_eq!(c.name().parse::<Corruption>().unwrap(), c);
+        }
+        assert!(Corruption::from_name("fog").is_err());
+    }
+
+    /// Same seed ⇒ bit-identical corrupted image, for every corruption and
+    /// severity (the reproducibility contract `pdq loadgen --shift` and the
+    /// OOD evaluation protocol rely on).
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let img = test_image();
+        for c in Corruption::all() {
+            for sv in 1..=5 {
+                let mut rng_a = Pcg32::new(0xDE7E_0000 + sv as u64);
+                let mut rng_b = Pcg32::new(0xDE7E_0000 + sv as u64);
+                let a = corrupt(&img, c, sv, &mut rng_a);
+                let b = corrupt(&img, c, sv, &mut rng_b);
+                let bits_a: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+                let bits_b: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits_a, bits_b, "{c:?} sev {sv} not deterministic");
+            }
+        }
+    }
+
+    /// Distortion energy `Σ(corrupted − clean)²` grows with severity for
+    /// every base corruption: strictly from 1 to 5, and never collapsing
+    /// step to step (loose monotonicity — blur/pixelate resampling can
+    /// plateau between adjacent severities).
+    #[test]
+    fn severity_monotone_distortion_energy() {
+        let img = test_image();
+        for c in Corruption::base() {
+            let energy = |sv: u32| -> f64 {
+                // Same seed per severity: stochastic components (noise
+                // draws, brightness sign) stay aligned across the sweep.
+                let mut rng = Pcg32::new(0x5E7E);
+                let out = corrupt(&img, c, sv, &mut rng);
+                out.data()
+                    .iter()
+                    .zip(img.data())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum()
+            };
+            let e: Vec<f64> = (1..=5).map(energy).collect();
+            assert!(
+                e[4] > e[0] * 1.5,
+                "{c:?}: energy must grow 1→5, got {e:?}"
+            );
+            for w in e.windows(2) {
+                assert!(w[1] >= w[0] * 0.8, "{c:?}: energy collapsed within the sweep: {e:?}");
+            }
+        }
+    }
+
+    /// `Combination` composes exactly two *distinct* base corruptions at
+    /// the same severity: replaying its RNG draws and applying the two
+    /// bases by hand reproduces the output bit for bit.
+    #[test]
+    fn combination_composes_two_distinct_bases() {
+        let img = test_image();
+        for seed in [1u64, 7, 42, 1337] {
+            let mut rng = Pcg32::new(seed);
+            let mut replay = rng.clone();
+            let out = corrupt(&img, Corruption::Combination, 3, &mut rng);
+            // Replay the selection exactly as `corrupt` draws it.
+            let base = Corruption::base();
+            let i = replay.below(base.len() as u32) as usize;
+            let mut j = replay.below(base.len() as u32) as usize;
+            if j == i {
+                j = (j + 1) % base.len();
+            }
+            assert_ne!(i, j, "combination must pick two distinct corruptions");
+            let once = corrupt(&img, base[i], 3, &mut replay);
+            let manual = corrupt(&once, base[j], 3, &mut replay);
+            let bits_out: Vec<u32> = out.data().iter().map(|v| v.to_bits()).collect();
+            let bits_manual: Vec<u32> = manual.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_out, bits_manual, "seed {seed}: composition mismatch");
         }
     }
 }

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use super::{Engine, EngineError, Session, VariantSpec};
+use super::{Engine, EngineError, RunTap, Session, VariantSpec};
 use crate::nn::{float_exec, ExecArena, Graph, Int8Arena, Int8Executor, MemoryPlan};
 use crate::nn::{QuantExecutor, QuantMode};
 use crate::tensor::{Shape, Tensor};
@@ -169,6 +169,17 @@ struct Int8Session {
 impl Session for Int8Session {
     fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
         self.ex.run_with_arena(input, &mut self.arena)
+    }
+
+    /// The deep integer tap: per-layer γ-strided window statistics plus
+    /// output clip counters, collected inside the same forward pass (the
+    /// kernels are untouched, so outputs stay bit-identical to `run`).
+    fn run_tapped(
+        &mut self,
+        input: &Tensor<f32>,
+        tap: &mut RunTap,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.ex.run_tapped_with_arena(input, &mut self.arena, tap)
     }
 
     fn input_shape(&self) -> &Shape {

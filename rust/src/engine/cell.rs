@@ -1,0 +1,117 @@
+//! [`EngineCell`]: the atomic epoch swap behind zero-downtime
+//! recalibration.
+//!
+//! A cell holds the *current* engine of a served variant behind an
+//! `RwLock<Arc<dyn Engine>>` plus a monotonically increasing generation
+//! counter. Publishing a replacement engine (a shadow-recalibrated build,
+//! [`crate::adapt::recalib`]) swaps the `Arc` and bumps the epoch in one
+//! critical section, so readers always observe a consistent
+//! `(epoch, engine)` pair:
+//!
+//! - **in-flight batches finish on the old grids** — a compiled session
+//!   keeps its own `Arc`s into the old engine's weights and requant specs,
+//!   so nothing it reads can change mid-request;
+//! - **new checkouts see the new grids** — [`super::SessionPool::acquire`]
+//!   reads the cell first and discards pooled sessions whose epoch is
+//!   stale, compiling from the freshly published engine instead.
+//!
+//! The swap preserves the variant's identity: publishing an engine with a
+//! different [`super::VariantSpec`] is a registration bug and panics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::Engine;
+
+/// The swappable engine slot of one served variant (see module docs).
+pub struct EngineCell {
+    engine: RwLock<Arc<dyn Engine>>,
+    epoch: AtomicU64,
+}
+
+impl EngineCell {
+    /// Wrap an engine as epoch 0.
+    pub fn new(engine: Arc<dyn Engine>) -> EngineCell {
+        EngineCell { engine: RwLock::new(engine), epoch: AtomicU64::new(0) }
+    }
+
+    /// The current `(epoch, engine)` pair, read consistently.
+    pub fn current(&self) -> (u64, Arc<dyn Engine>) {
+        let guard = self.engine.read().unwrap();
+        (self.epoch.load(Ordering::Acquire), Arc::clone(&guard))
+    }
+
+    /// The current generation counter (0 until the first publish).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Atomically publish a replacement engine; returns the new epoch.
+    ///
+    /// Panics if the replacement serves a different [`super::VariantSpec`]
+    /// than the current engine — an epoch swap recalibrates a variant, it
+    /// never changes what the variant *is*.
+    pub fn publish(&self, next: Arc<dyn Engine>) -> u64 {
+        let mut guard = self.engine.write().unwrap();
+        assert_eq!(
+            guard.spec(),
+            next.spec(),
+            "epoch swap must preserve the variant spec"
+        );
+        *guard = next;
+        // Bumped inside the write critical section so `current()` can never
+        // pair the new engine with the old epoch or vice versa.
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FloatEngine;
+    use crate::nn::Graph;
+    use crate::tensor::Shape;
+
+    fn engine() -> Arc<dyn Engine> {
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        Arc::new(FloatEngine::new(Arc::new(g)))
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_swaps_engine() {
+        let cell = EngineCell::new(engine());
+        assert_eq!(cell.epoch(), 0);
+        let (e0, first) = cell.current();
+        assert_eq!(e0, 0);
+        let second = engine();
+        assert_eq!(cell.publish(Arc::clone(&second)), 1);
+        let (e1, current) = cell.current();
+        assert_eq!(e1, 1);
+        assert!(Arc::ptr_eq(&current, &second));
+        assert!(!Arc::ptr_eq(&current, &first));
+        // The displaced engine is still alive for in-flight holders.
+        assert_eq!(first.spec(), current.spec());
+    }
+
+    #[test]
+    #[should_panic(expected = "preserve the variant spec")]
+    fn publish_refuses_spec_changes() {
+        use crate::engine::QuantEngine;
+        use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+        use crate::nn::QuantMode;
+
+        let cell = EngineCell::new(engine());
+        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+        let x = g.input();
+        let r = g.relu(x);
+        g.mark_output(r);
+        let ex = QuantExecutor::new(
+            Arc::new(g),
+            QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
+        );
+        cell.publish(Arc::new(QuantEngine::new(Arc::new(ex))));
+    }
+}

@@ -54,15 +54,19 @@
 
 mod backends;
 mod builder;
+mod cell;
 mod error;
 mod pool;
 mod spec;
+mod tap;
 
 pub use backends::{FloatEngine, Int8Engine, QuantEngine};
 pub use builder::{calibration_images, standard_menu, EngineBuilder, CALIB_SIZE};
+pub use cell::EngineCell;
 pub use error::EngineError;
 pub use pool::{PooledSession, SessionPool};
 pub use spec::{VariantKey, VariantSpec};
+pub use tap::{NodeTap, RunTap};
 
 use crate::tensor::{Shape, Tensor};
 
@@ -102,6 +106,26 @@ pub trait Session: Send {
     /// session's workspace. Backends with true batch kernels override it.
     fn run_batch(&mut self, inputs: &[Tensor<f32>]) -> Result<Vec<Vec<Tensor<f32>>>, EngineError> {
         inputs.iter().map(|input| self.run(input)).collect()
+    }
+
+    /// The opt-in observation hook: run one input while filling `tap` with
+    /// this run's statistics ([`crate::adapt`] drives it on sampled
+    /// requests). The outputs MUST be bit-identical to [`Session::run`] on
+    /// the same input — observation reads, it never perturbs.
+    ///
+    /// The default implementation runs normally and records only the
+    /// session-boundary statistics ([`RunTap::observe_input_grid`]);
+    /// backends with deeper integer taps (the int8 engine) override it with
+    /// per-layer window statistics and clip counters.
+    fn run_tapped(
+        &mut self,
+        input: &Tensor<f32>,
+        tap: &mut RunTap,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        tap.clear();
+        let outputs = self.run(input)?;
+        tap.observe_input_grid(input);
+        Ok(outputs)
     }
 
     /// The input shape this session expects.

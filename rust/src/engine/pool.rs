@@ -1,4 +1,4 @@
-//! [`SessionPool`]: per-worker session reuse.
+//! [`SessionPool`]: per-worker session reuse, epoch-aware.
 //!
 //! Sessions own mutable workspaces (arenas, estimator scratch), so they
 //! cannot be shared — but compiling one per request would re-allocate the
@@ -7,41 +7,74 @@
 //! (or compiles one lazily, so a pool serving `n` concurrent workers
 //! never holds more than `n` sessions), and dropping the
 //! [`PooledSession`] returns it warm for the next batch.
+//!
+//! The pool draws its engine from an [`EngineCell`], so a live
+//! recalibration ([`crate::adapt`]) is honored at checkout: `acquire`
+//! reads the cell's current `(epoch, engine)` pair, drops any pooled
+//! session compiled under an older epoch, and compiles fresh sessions
+//! from the newly published engine — while sessions already checked out
+//! keep executing on the old engine's grids until they are returned. A
+//! pool built with [`SessionPool::new`] wraps a private cell that never
+//! publishes, which is the zero-overhead static-serving path.
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Mutex};
 
-use super::{Engine, EngineError, Session};
+use super::{Engine, EngineCell, EngineError, Session};
 
-/// A pool of reusable [`Session`]s for one engine.
+/// A pool of reusable [`Session`]s for one engine cell.
 pub struct SessionPool {
-    engine: Arc<dyn Engine>,
-    free: Mutex<Vec<Box<dyn Session>>>,
+    cell: Arc<EngineCell>,
+    free: Mutex<Vec<(u64, Box<dyn Session>)>>,
 }
 
 impl SessionPool {
-    /// Create an empty pool over `engine` (sessions are compiled lazily).
+    /// Create an empty pool over a fixed `engine` (sessions are compiled
+    /// lazily; the engine never changes — the pre-adaptation behavior).
     pub fn new(engine: Arc<dyn Engine>) -> SessionPool {
-        SessionPool { engine, free: Mutex::new(Vec::new()) }
+        SessionPool::over(Arc::new(EngineCell::new(engine)))
     }
 
-    /// The pooled engine.
-    pub fn engine(&self) -> &Arc<dyn Engine> {
-        &self.engine
+    /// Create an empty pool over a shared [`EngineCell`] whose engine may
+    /// be swapped by a recalibration worker.
+    pub fn over(cell: Arc<EngineCell>) -> SessionPool {
+        SessionPool { cell, free: Mutex::new(Vec::new()) }
+    }
+
+    /// The currently published engine.
+    pub fn engine(&self) -> Arc<dyn Engine> {
+        self.cell.current().1
+    }
+
+    /// The cell the pool draws from.
+    pub fn cell(&self) -> &Arc<EngineCell> {
+        &self.cell
+    }
+
+    /// The epoch the next checkout will serve under.
+    pub fn epoch(&self) -> u64 {
+        self.cell.epoch()
     }
 
     /// Check a session out, compiling a fresh one only when every pooled
-    /// session is in use.
+    /// session of the *current epoch* is in use. Sessions pooled under an
+    /// older epoch are discarded here — this is the swap point where new
+    /// checkouts start seeing freshly recalibrated grids.
     pub fn acquire(&self) -> Result<PooledSession<'_>, EngineError> {
-        let cached = self.free.lock().unwrap().pop();
-        let session = match cached {
-            Some(s) => s,
-            None => self.engine.compile()?,
+        let (epoch, engine) = self.cell.current();
+        let cached = {
+            let mut free = self.free.lock().unwrap();
+            free.retain(|(e, _)| *e == epoch);
+            free.pop()
         };
-        Ok(PooledSession { pool: self, session: Some(session) })
+        let session = match cached {
+            Some((_, s)) => s,
+            None => engine.compile()?,
+        };
+        Ok(PooledSession { pool: self, epoch, session: Some(session) })
     }
 
-    /// How many sessions are currently idle in the pool.
+    /// How many sessions are currently idle in the pool (any epoch).
     pub fn idle(&self) -> usize {
         self.free.lock().unwrap().len()
     }
@@ -51,7 +84,15 @@ impl SessionPool {
 /// pool on drop.
 pub struct PooledSession<'p> {
     pool: &'p SessionPool,
+    epoch: u64,
     session: Option<Box<dyn Session>>,
+}
+
+impl PooledSession<'_> {
+    /// Which engine epoch this session was compiled under.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
 }
 
 impl Deref for PooledSession<'_> {
@@ -71,7 +112,9 @@ impl DerefMut for PooledSession<'_> {
 impl Drop for PooledSession<'_> {
     fn drop(&mut self) {
         if let Some(s) = self.session.take() {
-            self.pool.free.lock().unwrap().push(s);
+            // Stale returns are tolerated here and swept at the next
+            // acquire, so drop stays cheap and lock-ordering trivial.
+            self.pool.free.lock().unwrap().push((self.epoch, s));
         }
     }
 }
@@ -84,12 +127,16 @@ mod tests {
     use crate::tensor::{Shape, Tensor};
     use std::sync::Arc;
 
-    fn pool() -> SessionPool {
-        let mut g = Graph::new(Shape::hwc(2, 2, 1));
+    fn relu_engine(shape: Shape) -> Arc<dyn Engine> {
+        let mut g = Graph::new(shape);
         let x = g.input();
         let r = g.relu(x);
         g.mark_output(r);
-        SessionPool::new(Arc::new(FloatEngine::new(Arc::new(g))))
+        Arc::new(FloatEngine::new(Arc::new(g)))
+    }
+
+    fn pool() -> SessionPool {
+        SessionPool::new(relu_engine(Shape::hwc(2, 2, 1)))
     }
 
     #[test]
@@ -131,5 +178,36 @@ mod tests {
             j.join().unwrap();
         }
         assert!(pool.idle() >= 1 && pool.idle() <= 4);
+    }
+
+    /// The epoch-swap contract: an in-flight checkout finishes on the old
+    /// engine; the next checkout compiles from the published one; stale
+    /// pooled sessions are discarded, not reused.
+    #[test]
+    fn checkout_honors_the_epoch() {
+        let cell = Arc::new(EngineCell::new(relu_engine(Shape::hwc(2, 2, 1))));
+        let pool = SessionPool::over(Arc::clone(&cell));
+        let img = Tensor::full(Shape::hwc(2, 2, 1), 2.0);
+
+        // Warm one session under epoch 0 and keep it checked out.
+        let mut held = pool.acquire().unwrap();
+        assert_eq!(held.epoch(), 0);
+        // Pool another epoch-0 session.
+        drop(pool.acquire().unwrap());
+        assert_eq!(pool.idle(), 1);
+
+        cell.publish(relu_engine(Shape::hwc(2, 2, 1)));
+
+        // The held (in-flight) session still runs — old grids finish out.
+        assert_eq!(held.run(&img).unwrap()[0].data(), &[2.0; 4]);
+        drop(held);
+        assert_eq!(pool.idle(), 2, "stale sessions returned, not yet swept");
+
+        // New checkout: stale sessions swept, fresh session at epoch 1.
+        let s = pool.acquire().unwrap();
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(pool.epoch(), 1);
+        drop(s);
+        assert_eq!(pool.idle(), 1, "only the epoch-1 session remains pooled");
     }
 }

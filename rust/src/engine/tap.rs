@@ -1,0 +1,123 @@
+//! The per-run observation tap: what a [`super::Session`] reports about one
+//! request when observation is enabled.
+//!
+//! The tap is the engine-side half of the online-adaptation loop
+//! ([`crate::adapt`] owns the accumulation, drift scoring, and
+//! recalibration). A session fills a [`RunTap`] with *integer* statistics —
+//! the same mergeable `S1 = Σ(q − z)` / `S2 = Σ(q − z)²` window accumulators
+//! the paper's §4.2 estimator streams ([`WindowStats`]) — plus a clip
+//! counter per tapped node (how many produced values sit on the grid's
+//! extreme codes, i.e. the γ-coverage knob made observable). Integer
+//! accumulation keeps the hot-path cost of a tapped run at one extra
+//! strided pass per layer, and sampled observation amortizes even that to
+//! near zero.
+
+use crate::estimator::fixed::WindowStats;
+use crate::quant::QParams;
+use crate::tensor::Tensor;
+
+/// One tapped node's statistics for a single run.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeTap {
+    /// Graph node id the statistics belong to (node 0 is the input).
+    pub node: usize,
+    /// Scale of the int8 grid the integer sums were accumulated on —
+    /// needed to convert the sums to real units at snapshot time (grids
+    /// may change across recalibration epochs; real units stay comparable).
+    pub scale: f32,
+    /// γ-strided window accumulators of the node's *input* (`S1`/`S2`
+    /// sums — the paper's constant-memory estimation state).
+    pub window: WindowStats,
+    /// Output values observed at the grid's extreme codes (saturation).
+    pub clipped: u64,
+    /// Total output values inspected for the clip counter.
+    pub total: u64,
+}
+
+/// A per-request collection buffer for node taps, reused across runs.
+#[derive(Clone, Debug)]
+pub struct RunTap {
+    /// Sampling stride γ for the window statistics of conv-like nodes
+    /// (tapping uses its own stride so observation can be cheaper than the
+    /// serving estimator's γ).
+    pub gamma: usize,
+    /// The taps collected during the current run.
+    pub nodes: Vec<NodeTap>,
+}
+
+impl RunTap {
+    /// An empty tap with the given observation stride (`gamma >= 1`).
+    pub fn new(gamma: usize) -> RunTap {
+        assert!(gamma >= 1, "tap gamma must be >= 1");
+        RunTap { gamma, nodes: Vec::new() }
+    }
+
+    /// Drop the previous run's entries (capacity is retained).
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+    }
+
+    /// Record one node's statistics.
+    pub fn push(&mut self, node: usize, scale: f32, window: WindowStats, clipped: u64, total: u64) {
+        self.nodes.push(NodeTap { node, scale, window, clipped, total });
+    }
+
+    /// The fallback boundary tap every backend supports: quantize the f32
+    /// input onto the executor's fixed `[0, 1]` image grid (the same grid
+    /// the int8 engine's input node uses) and record its integer sums plus
+    /// the fraction of pixels on the grid extremes, as node 0. Backends
+    /// with deeper integer taps (the int8 engine) record per-layer entries
+    /// instead.
+    pub fn observe_input_grid(&mut self, input: &Tensor<f32>) {
+        let qp = QParams::from_range(0.0, 1.0, 8);
+        let zero = qp.zero_point;
+        let mut s1 = 0i64;
+        let mut s2 = 0i64;
+        let mut clipped = 0u64;
+        for &v in input.data() {
+            let q = ((v / qp.scale).round() as i32 + zero).clamp(-128, 127);
+            if q == -128 || q == 127 {
+                clipped += 1;
+            }
+            let d = (q - zero) as i64;
+            s1 += d;
+            s2 += d * d;
+        }
+        let mut st = WindowStats::default();
+        st.push(s1, s2);
+        self.push(0, qp.scale, st, clipped, input.numel() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn boundary_tap_records_node_zero() {
+        let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![0.0, 0.5, 1.0, 0.25]);
+        let mut tap = RunTap::new(1);
+        tap.observe_input_grid(&img);
+        assert_eq!(tap.nodes.len(), 1);
+        let nt = &tap.nodes[0];
+        assert_eq!(nt.node, 0);
+        assert_eq!(nt.total, 4);
+        // 0.0 and 1.0 sit on the grid extremes of the [0, 1] image grid.
+        assert_eq!(nt.clipped, 2);
+        assert_eq!(nt.window.n, 1);
+        // Mean in real units recovers the pixel mean to within a grid step.
+        let mean = nt.scale as f64 * nt.window.sum_s1 as f64 / 4.0;
+        assert!((mean - 0.4375).abs() < 2.0 * nt.scale as f64, "{mean}");
+    }
+
+    #[test]
+    fn clear_retains_gamma() {
+        let img = Tensor::full(Shape::hwc(2, 2, 1), 0.5);
+        let mut tap = RunTap::new(3);
+        tap.observe_input_grid(&img);
+        tap.clear();
+        assert!(tap.nodes.is_empty());
+        assert_eq!(tap.gamma, 3);
+    }
+}

@@ -39,6 +39,9 @@
 //! - [`models`] — the model zoo: `.pqw` weight loading and graph builders.
 //! - [`eval`] — top-1, mAP50-95, OKS, OBB/segmentation IoU metrics.
 //! - [`runtime`] — PJRT client wrapper loading the AOT HLO artifacts.
+//! - [`adapt`] — online adaptation: sampled per-node drift observation on
+//!   live traffic, background shadow recalibration, and atomic epoch swaps
+//!   of serving grids (zero-downtime).
 //! - [`coordinator`] — threaded serving stack: router → dynamic batcher →
 //!   worker pool, calibration orchestration, metrics.
 //! - [`net`] — the network front door: std-only HTTP/1.1 ingress over the
@@ -46,6 +49,7 @@
 //!   load-generation harness.
 //! - [`harness`] — experiment drivers regenerating every paper table/figure.
 
+pub mod adapt;
 pub mod cmsis;
 pub mod coordinator;
 pub mod data;

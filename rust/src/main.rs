@@ -15,9 +15,14 @@
 //! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
 //!             [--synthetic] [--workers N] [--max-batch N] [--deadline-us N]
 //!             [--max-queue N] [--http-threads N]
+//!             [--adapt] [--drift-threshold X] [--recal-cooldown-s N]
+//!             [--sample-every N]    # online adaptation: drift monitor +
+//!                                   # shadow recalibration; adds
+//!                                   # GET /v1/drift, POST /v1/recalibrate
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
 //!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
+//!             [--shift corruption:severity@t]  # mid-run distribution shift
 //! pdq mcu-latency                   # Fig. 3 latency model sweep
 //! ```
 
@@ -25,6 +30,10 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use pdq::adapt::{
+    adaptive_standard_menu, AdaptConfig, AdaptManager, DriftConfig, ObserverConfig, PolicyConfig,
+    RecalPolicy,
+};
 use pdq::coordinator::batcher::BatchPolicy;
 use pdq::coordinator::calibrate::demo_model;
 use pdq::coordinator::{Server, ServerConfig};
@@ -33,7 +42,7 @@ use pdq::engine::{standard_menu, EngineBuilder, FloatEngine, VariantKey, Variant
 use pdq::harness::eval_runner::{evaluate, EvalProtocol};
 use pdq::harness::experiments::{self, ExpOptions};
 use pdq::models::zoo;
-use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig, ShiftSpec};
 use pdq::net::{signal, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
@@ -215,10 +224,41 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     };
     let task = model.task;
     // The standard menu: fp32 + the three quant-emulation variants + the
-    // three true-int8 variants, all sharing one calibration set.
-    let variants = standard_menu(&model)?;
-    let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
-    let server = Server::start(variants, config);
+    // three true-int8 variants, all sharing one calibration set. With
+    // --adapt the same menu is built with observation taps and
+    // recalibration backends wired in (pdq::adapt).
+    let adapt_on = args.flag("adapt");
+    let (server, keys) = if adapt_on {
+        let adapt_cfg = AdaptConfig {
+            observer: ObserverConfig {
+                sample_every: args.opt_usize("sample-every", 4).max(1) as u32,
+                ..Default::default()
+            },
+            drift: DriftConfig {
+                threshold: args.opt_f64("drift-threshold", 1.0) as f32,
+                ..Default::default()
+            },
+            policy: PolicyConfig {
+                policy: RecalPolicy::DriftTriggered,
+                cooldown: Duration::from_secs(args.opt_u64("recal-cooldown-s", 5)),
+            },
+            ..Default::default()
+        };
+        let mut manager = AdaptManager::new(adapt_cfg);
+        let cells = adaptive_standard_menu(&model, &mut manager)?;
+        let keys: Vec<VariantKey> = cells.iter().map(|(k, _)| k.clone()).collect();
+        println!(
+            "pdq-serve: adaptation on (drift threshold {}, cooldown {}s, sampling 1-in-{})",
+            adapt_cfg.drift.threshold,
+            adapt_cfg.policy.cooldown.as_secs(),
+            adapt_cfg.observer.sample_every,
+        );
+        (Server::start_adaptive(cells, config, Arc::new(manager)), keys)
+    } else {
+        let variants = standard_menu(&model)?;
+        let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
+        (Server::start(variants, config), keys)
+    };
 
     // --listen: boot the network front door and serve until SIGTERM/SIGINT.
     if let Some(addr) = args.opt("listen") {
@@ -286,6 +326,10 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         .opt("variants")
         .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
         .unwrap_or_default();
+    let shift = match args.opt("shift") {
+        Some(s) => Some(ShiftSpec::parse(s).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
     let cfg = LoadgenConfig {
         target,
         mode,
@@ -294,6 +338,7 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         variants,
         seed: args.opt_u64("seed", 0x10AD),
         backoff_cap: Duration::from_millis(args.opt_u64("backoff-ms", 50)),
+        shift,
     };
     let report = loadgen::run(&cfg).map_err(anyhow::Error::msg)?;
     let mut table = Table::new(&[
@@ -320,6 +365,9 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         report.duration_s,
         report.offered_rps.map(|r| format!("{r:.1} rps")).unwrap_or_else(|| "closed loop".into()),
     );
+    if let Some(s) = &report.shift {
+        println!("mid-run shift injected: {s}");
+    }
     let out = args.opt_or("out", "BENCH_serving.json");
     report.save(out)?;
     println!("report written to {out}");

@@ -6,8 +6,14 @@
 //!   through [`Server::try_submit`], shed with `429` + `Retry-After` when
 //!   the variant is at its in-flight limit.
 //! - `GET /v1/variants` — the served (variant, input shape) catalog.
+//! - `GET /v1/drift` — per-variant drift/epoch/recalibration status
+//!   (404 unless the server was started with adaptation, `--adapt`).
+//! - `POST /v1/recalibrate[?variant=<wire>]` — manual shadow
+//!   recalibration trigger (404 without adaptation).
 //! - `GET /healthz` — liveness (+ `"draining"` once shutdown began).
-//! - `GET /metrics` — JSON; `?format=prometheus` for text exposition.
+//! - `GET /metrics` — JSON; `?format=prometheus` for text exposition
+//!   (includes per-variant breakdowns and, with adaptation, drift/epoch/
+//!   recalibration gauges).
 //!
 //! Graceful drain (SIGTERM via [`crate::net::signal`], or
 //! [`FrontDoor::shutdown`]): (1) the shutdown flag stops the accept loop
@@ -231,10 +237,88 @@ fn route_request(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
         ("GET", "/healthz") => healthz(ctx),
         ("GET", "/metrics") => metrics(req, ctx),
         ("GET", "/v1/variants") => variants(ctx),
+        ("GET", "/v1/drift") => drift(ctx),
+        ("POST", "/v1/recalibrate") => recalibrate(req, ctx),
         ("POST", "/v1/infer") => infer(req, ctx),
         ("GET", "/v1/infer") => HttpResponse::error(405, "use POST /v1/infer"),
+        ("GET", "/v1/recalibrate") => {
+            HttpResponse::error(405, "use POST /v1/recalibrate")
+        }
         _ => HttpResponse::error(404, &format!("no route {} {}", req.method, req.path)),
     }
+}
+
+fn drift(ctx: &Ctx) -> HttpResponse {
+    let Some(manager) = ctx.server.adapt() else {
+        return HttpResponse::error(404, "adaptation disabled (start the server with --adapt)");
+    };
+    let list: Vec<Json> = manager
+        .status()
+        .iter()
+        .map(|s| {
+            let mut v = Json::obj();
+            let per_node: Vec<Json> = s
+                .per_node
+                .iter()
+                .map(|n| {
+                    let mut o = Json::obj();
+                    o.set("node", n.node)
+                        .set("score", n.score as f64)
+                        .set("clip_excess", n.clip_excess as f64);
+                    o
+                })
+                .collect();
+            v.set("variant", s.key.wire())
+                .set("epoch", s.epoch)
+                .set("drift", s.drift as f64)
+                .set("peak_drift", s.peak_drift as f64)
+                .set("drifted", s.drifted)
+                .set("max_clip_rate", s.max_clip_rate as f64)
+                .set("recalibrations", s.recalibrations)
+                .set("window_requests", s.window_requests)
+                .set("requests_seen", s.requests_seen)
+                .set("reservoir", s.reservoir)
+                .set("backend", s.backend)
+                .set("per_node", Json::Arr(per_node));
+            v
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("variants", Json::Arr(list))
+        .set("threshold", manager.config().drift.threshold as f64)
+        .set("cooldown_s", manager.config().policy.cooldown.as_secs_f64());
+    HttpResponse::json(200, &o)
+}
+
+fn recalibrate(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    let Some(manager) = ctx.server.adapt() else {
+        return HttpResponse::error(404, "adaptation disabled (start the server with --adapt)");
+    };
+    let filter = match req.query_param("variant") {
+        None => None,
+        Some(wire) => match crate::engine::VariantKey::parse_wire(wire) {
+            Ok(key) => Some(key),
+            Err(e) => return HttpResponse::error(400, &e),
+        },
+    };
+    let outcomes = manager.recalibrate_now(filter.as_ref());
+    if filter.is_some() && outcomes.is_empty() {
+        return HttpResponse::error(404, "variant not registered for adaptation");
+    }
+    let list: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            let mut v = Json::obj();
+            v.set("variant", o.key.wire())
+                .set("fired", o.fired)
+                .set("epoch", o.epoch)
+                .set("detail", o.detail.as_str());
+            v
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("outcomes", Json::Arr(list));
+    HttpResponse::json(200, &o)
 }
 
 fn healthz(ctx: &Ctx) -> HttpResponse {
@@ -253,6 +337,47 @@ fn metrics(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
         body.push_str("# TYPE pdq_inflight gauge\n");
         for (key, depth) in ctx.server.admission_depths() {
             body.push_str(&format!("pdq_inflight{{variant=\"{}\"}} {depth}\n", key.wire()));
+        }
+        if let Some(manager) = ctx.server.adapt() {
+            let status = manager.status();
+            body.push_str("# HELP pdq_drift_score Aggregate drift vs the calibration reference.\n");
+            body.push_str("# TYPE pdq_drift_score gauge\n");
+            for s in &status {
+                body.push_str(&format!(
+                    "pdq_drift_score{{variant=\"{}\"}} {}\n",
+                    s.key.wire(),
+                    s.drift
+                ));
+            }
+            body.push_str("# HELP pdq_drift_clip_rate Max per-node live clip rate.\n");
+            body.push_str("# TYPE pdq_drift_clip_rate gauge\n");
+            for s in &status {
+                body.push_str(&format!(
+                    "pdq_drift_clip_rate{{variant=\"{}\"}} {}\n",
+                    s.key.wire(),
+                    s.max_clip_rate
+                ));
+            }
+            body.push_str("# HELP pdq_engine_epoch Current engine generation (swaps bump it).\n");
+            body.push_str("# TYPE pdq_engine_epoch gauge\n");
+            for s in &status {
+                body.push_str(&format!(
+                    "pdq_engine_epoch{{variant=\"{}\"}} {}\n",
+                    s.key.wire(),
+                    s.epoch
+                ));
+            }
+            body.push_str(
+                "# HELP pdq_recalibrations_total Completed shadow recalibrations.\n",
+            );
+            body.push_str("# TYPE pdq_recalibrations_total counter\n");
+            for s in &status {
+                body.push_str(&format!(
+                    "pdq_recalibrations_total{{variant=\"{}\"}} {}\n",
+                    s.key.wire(),
+                    s.recalibrations
+                ));
+            }
         }
         HttpResponse::text(200, "text/plain; version=0.0.4", body)
     } else {
@@ -414,6 +539,13 @@ mod tests {
 
         let missing = client.get("/no/such/route").unwrap();
         assert_eq!(missing.status, 404);
+
+        // Adaptation endpoints 404 on a server started without --adapt
+        // (the adaptive paths are covered in rust/tests/adapt_loop.rs).
+        let drift = client.get("/v1/drift").unwrap();
+        assert_eq!(drift.status, 404);
+        let recal = client.request("POST", "/v1/recalibrate", "", &[]).unwrap();
+        assert_eq!(recal.status, 404);
 
         let metrics = fd.shutdown();
         assert_eq!(metrics.responses(), 1);

@@ -16,14 +16,63 @@
 //! Targets are discovered from `GET /v1/variants`, inputs are seeded
 //! uniform noise per variant, and the report lands in `BENCH_serving.json`
 //! (schema `pdq-serving-v1`).
+//!
+//! **Mid-run distribution shift** ([`ShiftSpec`], `--shift
+//! corruption:severity@t`): from `t` seconds into the run every worker
+//! switches to a corrupted copy of its input (built once, seeded — see
+//! [`crate::data::corrupt`]). This is the closed-loop driver for the
+//! online-adaptation demo: clean warm-up traffic, then a §5.2 corruption
+//! shift the server's drift monitor should catch and recalibrate away.
 
 use std::time::{Duration, Instant};
 
+use crate::data::corrupt::{corrupt, Corruption};
 use crate::engine::VariantKey;
 use crate::net::wire::{Client, InferOutcome};
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
 use crate::util::{stats, Pcg32};
+
+/// A mid-run input-distribution shift: apply `corruption` at `severity`
+/// to every request sent `at` or later after run start.
+#[derive(Clone, Copy, Debug)]
+pub struct ShiftSpec {
+    /// Which §5.2 corruption to inject.
+    pub corruption: Corruption,
+    /// Severity 1–5.
+    pub severity: u32,
+    /// When the shift begins, relative to run start.
+    pub at: Duration,
+}
+
+impl ShiftSpec {
+    /// Parse the CLI grammar `corruption:severity@seconds`
+    /// (e.g. `contrast:5@2`, `white_noise:3@1.5`).
+    pub fn parse(s: &str) -> Result<ShiftSpec, String> {
+        let (lhs, t) = s
+            .split_once('@')
+            .ok_or_else(|| format!("shift {s:?}: want corruption:severity@seconds"))?;
+        let (name, sev) = lhs
+            .split_once(':')
+            .ok_or_else(|| format!("shift {s:?}: want corruption:severity@seconds"))?;
+        let corruption = Corruption::from_name(name)?;
+        let severity: u32 =
+            sev.parse().map_err(|_| format!("shift severity {sev:?} is not an integer"))?;
+        if !(1..=5).contains(&severity) {
+            return Err(format!("shift severity must be 1..=5, got {severity}"));
+        }
+        let secs: f64 = t.parse().map_err(|_| format!("shift time {t:?} is not a number"))?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!("shift time must be a finite number >= 0, got {t:?}"));
+        }
+        Ok(ShiftSpec { corruption, severity, at: Duration::from_secs_f64(secs) })
+    }
+
+    /// The CLI form back (`contrast:5@2`).
+    pub fn display(&self) -> String {
+        format!("{}:{}@{}", self.corruption.name(), self.severity, self.at.as_secs_f64())
+    }
+}
 
 /// Traffic discipline.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +96,8 @@ pub struct LoadgenConfig {
     /// Closed loop only: cap on honoring the server's 429 retry hint
     /// (zero = hammer without backing off).
     pub backoff_cap: Duration,
+    /// Optional mid-run input-distribution shift.
+    pub shift: Option<ShiftSpec>,
 }
 
 impl Default for LoadgenConfig {
@@ -59,6 +110,7 @@ impl Default for LoadgenConfig {
             variants: Vec::new(),
             seed: 0x10AD,
             backoff_cap: Duration::from_millis(50),
+            shift: None,
         }
     }
 }
@@ -108,6 +160,8 @@ pub struct LoadReport {
     pub concurrency: usize,
     pub duration_s: f64,
     pub achieved_rps: f64,
+    /// The injected mid-run shift, in CLI form (`contrast:5@2`), if any.
+    pub shift: Option<String>,
     pub total: VariantReport,
     pub per_variant: Vec<VariantReport>,
 }
@@ -120,6 +174,9 @@ impl LoadReport {
             .set("duration_s", self.duration_s);
         if let Some(rps) = self.offered_rps {
             cfg.set("offered_rps", rps);
+        }
+        if let Some(shift) = &self.shift {
+            cfg.set("shift", shift.as_str());
         }
         let mut o = Json::obj();
         o.set("schema", "pdq-serving-v1")
@@ -143,6 +200,8 @@ struct TargetVariant {
     key: VariantKey,
     wire: String,
     image: Tensor<f32>,
+    /// Corrupted copy of `image`, sent once the shift is active.
+    shifted: Option<Tensor<f32>>,
 }
 
 /// `GET /v1/variants` → the drive list, with one seeded-noise input tensor
@@ -178,10 +237,18 @@ fn discover(cfg: &LoadgenConfig) -> Result<Vec<TargetVariant>, String> {
         let shape = Shape::new(&dims);
         let mut rng = Pcg32::new(cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9));
         let data: Vec<f32> = (0..shape.numel()).map(|_| rng.uniform()).collect();
+        let image = Tensor::from_vec(shape, data);
+        // The shifted copy is corrupted once, deterministically, so every
+        // post-shift request is identical (the drift is in the switch).
+        let shifted = cfg.shift.map(|s| {
+            let mut crng = Pcg32::new(cfg.seed ^ 0x5417_F7ED ^ idx as u64);
+            corrupt(&image, s.corruption, s.severity, &mut crng)
+        });
         out.push(TargetVariant {
             key: VariantKey::parse_wire(wire)?,
             wire: wire.to_string(),
-            image: Tensor::from_vec(shape, data),
+            image,
+            shifted,
         });
     }
     if out.is_empty() {
@@ -208,8 +275,17 @@ struct Rec {
     us: f32,
 }
 
-fn one_request(client: &mut Client, v: &TargetVariant, id: u64) -> (Outcome, Option<u64>) {
-    match client.post_infer(&v.key, id, &v.image) {
+fn one_request(
+    client: &mut Client,
+    v: &TargetVariant,
+    id: u64,
+    shifted: bool,
+) -> (Outcome, Option<u64>) {
+    let image = match (&v.shifted, shifted) {
+        (Some(img), true) => img,
+        _ => &v.image,
+    };
+    match client.post_infer(&v.key, id, image) {
         Ok(InferOutcome::Ok(_)) => (Outcome::Ok, None),
         Ok(InferOutcome::Rejected { retry_after_ms }) => (Outcome::Rejected, Some(retry_after_ms)),
         Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None),
@@ -232,6 +308,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         joins.push(std::thread::spawn(move || -> Vec<Rec> {
             let mut client = Client::new(&cfg.target);
             let mut recs: Vec<Rec> = Vec::new();
+            let shift_at = cfg.shift.map(|s| t0 + s.at);
             match cfg.mode {
                 LoadMode::Closed => {
                     let mut seq = 0u64;
@@ -239,7 +316,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                         let vi = (t + seq as usize) % targets.len();
                         let id = t as u64 * 1_000_000_000 + seq;
                         let sent_at = Instant::now();
-                        let (outcome, retry_ms) = one_request(&mut client, &targets[vi], id);
+                        let shifted = shift_at.map_or(false, |at| sent_at >= at);
+                        let (outcome, retry_ms) =
+                            one_request(&mut client, &targets[vi], id, shifted);
                         recs.push(Rec {
                             variant: vi,
                             outcome,
@@ -268,7 +347,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                             std::thread::sleep(sched - now);
                         }
                         let vi = (k as usize) % targets.len();
-                        let (outcome, _) = one_request(&mut client, &targets[vi], k);
+                        let shifted = shift_at.map_or(false, |at| Instant::now() >= at);
+                        let (outcome, _) = one_request(&mut client, &targets[vi], k, shifted);
                         // Latency from the *schedule*, not the send.
                         recs.push(Rec {
                             variant: vi,
@@ -336,6 +416,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         concurrency,
         duration_s: wall_s,
         achieved_rps: if wall_s > 0.0 { total.ok as f64 / wall_s } else { 0.0 },
+        shift: cfg.shift.map(|s| s.display()),
         total,
         per_variant,
     })
@@ -365,18 +446,46 @@ mod tests {
             concurrency: 4,
             duration_s: 2.0,
             achieved_rps: 4.0,
+            shift: Some("contrast:5@2".into()),
             total: v.clone(),
             per_variant: vec![v],
         };
         let j = report.to_json();
         assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-serving-v1"));
         assert_eq!(j.get("config").unwrap().get("mode").unwrap().as_str(), Some("open"));
+        assert_eq!(
+            j.get("config").unwrap().get("shift").unwrap().as_str(),
+            Some("contrast:5@2")
+        );
         let agg = j.get("aggregate").unwrap();
         assert_eq!(agg.get("rejected").unwrap().as_usize(), Some(2));
         assert!((agg.get("reject_rate").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-9);
         assert_eq!(j.get("per_variant").unwrap().as_arr().unwrap().len(), 1);
     }
 
-    // Socket-level loadgen runs are covered by rust/tests/serving_http.rs
-    // (boots a real front door) and the CI smoke step.
+    #[test]
+    fn shift_spec_grammar() {
+        let s = ShiftSpec::parse("contrast:5@2").unwrap();
+        assert_eq!(s.corruption, Corruption::Contrast);
+        assert_eq!(s.severity, 5);
+        assert_eq!(s.at, Duration::from_secs(2));
+        assert_eq!(s.display(), "contrast:5@2");
+        let f = ShiftSpec::parse("white_noise:3@1.5").unwrap();
+        assert_eq!(f.at, Duration::from_secs_f64(1.5));
+        for bad in [
+            "contrast",
+            "contrast@2",
+            "contrast:9@2",
+            "contrast:0@2",
+            "fog:3@2",
+            "contrast:5@-1",
+            "contrast:5@nan",
+        ] {
+            assert!(ShiftSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    // Socket-level loadgen runs (including --shift against an adaptive
+    // server) are covered by rust/tests/serving_http.rs /
+    // rust/tests/adapt_loop.rs and the CI smoke steps.
 }

@@ -32,10 +32,12 @@
 
 use std::sync::{Arc, Mutex};
 
+use std::collections::BTreeMap;
+
 use super::graph::{Graph, NodeId, Op};
 use super::memory::{Int8Arena, MemoryPlan};
 use super::quant_exec::{QuantExecutor, QuantMode};
-use crate::engine::EngineError;
+use crate::engine::{EngineError, RunTap};
 use crate::cmsis::fast;
 use crate::cmsis::pdq_wrappers::{conv_window_stats, dw_window_stats, QOut};
 use crate::cmsis::requant::Requant;
@@ -271,6 +273,123 @@ impl Int8Executor {
         Ok(self.collect_q(arena))
     }
 
+    /// [`Int8Executor::run_with_arena`] with the observation tap armed:
+    /// every quantizable node records its input's γ-strided integer window
+    /// statistics (`tap.gamma`) and its output's clip count, plus the input
+    /// node's sums, into `tap`. The kernels are untouched — outputs are
+    /// bit-identical to the untapped run (the adaptation loop's invariant).
+    pub fn run_tapped_with_arena(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut Int8Arena,
+        tap: &mut RunTap,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        tap.clear();
+        self.forward_inner(input, arena, Some(tap))?;
+        Ok(self.collect_dequant(arena))
+    }
+
+    /// Rebuild this *static-mode* program's output grids from live pooled
+    /// window statistics — the shadow-recalibration fast path
+    /// ([`crate::adapt::recalib`]).
+    ///
+    /// `live` maps quantizable node ids to accumulated [`WindowStats`] of
+    /// that node's input (as collected by [`Int8Executor::run_tapped_with_arena`]
+    /// over many requests). For each such node the paper's own estimator
+    /// predicts fresh pre-activation moments from the pooled sums
+    /// (`predict_grid`: Eq. 8–12 + the calibrated `I(α, β)`), yielding a new
+    /// frozen output grid; the bias fold and Q31 requant spec are then
+    /// refolded against the (possibly changed) upstream grid — O(C)
+    /// arithmetic per node on the existing `s_in·s_w` accumulator grid, no
+    /// weight requantization, no float calibration pass, fully
+    /// dequantization-free. Nodes absent from `live` keep their old output
+    /// grid but still have bias/requant refolded against their new input
+    /// grid, so the returned program is always internally consistent.
+    pub fn refit_static_grids(
+        &self,
+        live: &BTreeMap<usize, WindowStats>,
+    ) -> Result<Int8Executor, String> {
+        if self.mode != QuantMode::Static {
+            return Err(format!(
+                "refit_static_grids applies to static mode only (this program is {})",
+                self.mode.label()
+            ));
+        }
+        // Old and new grid chains, reconstructed exactly as lowering does.
+        let mut old_q: Vec<QOut> = Vec::with_capacity(self.nodes.len());
+        let mut new_q: Vec<QOut> = Vec::with_capacity(self.nodes.len());
+        let mut nodes: Vec<Int8Node> = Vec::with_capacity(self.nodes.len());
+        for (idx, node) in self.nodes.iter().enumerate() {
+            let (op, oq, nq) = match &node.op {
+                Int8Op::Input => (Int8Op::Input, self.input_q, self.input_q),
+                Int8Op::Conv { l, geom } => {
+                    let (nl, oq, nq) = self.refit_layer(idx, l, node.inputs[0].0, &old_q, &new_q, live);
+                    (Int8Op::Conv { l: nl, geom: *geom }, oq, nq)
+                }
+                Int8Op::DwConv { l, geom } => {
+                    let (nl, oq, nq) = self.refit_layer(idx, l, node.inputs[0].0, &old_q, &new_q, live);
+                    (Int8Op::DwConv { l: nl, geom: *geom }, oq, nq)
+                }
+                Int8Op::Linear { l } => {
+                    let (nl, oq, nq) = self.refit_layer(idx, l, node.inputs[0].0, &old_q, &new_q, live);
+                    (Int8Op::Linear { l: nl }, oq, nq)
+                }
+                Int8Op::Add => {
+                    let (a, b) = (node.inputs[0].0, node.inputs[1].0);
+                    (Int8Op::Add, add_grid(old_q[a], old_q[b]), add_grid(new_q[a], new_q[b]))
+                }
+                // Grid-transparent ops propagate their input's grid.
+                other => {
+                    let in_id = node.inputs[0].0;
+                    (other.clone(), old_q[in_id], new_q[in_id])
+                }
+            };
+            old_q.push(oq);
+            new_q.push(nq);
+            nodes.push(Int8Node { op, inputs: node.inputs.clone() });
+        }
+        Ok(Int8Executor {
+            nodes,
+            input_shape: self.input_shape.clone(),
+            output_ids: self.output_ids.clone(),
+            mode: self.mode,
+            gamma: self.gamma,
+            weight_gran: self.weight_gran,
+            input_q: self.input_q,
+            plan: Arc::clone(&self.plan),
+            arena: Mutex::new(Int8Arena::new(Arc::clone(&self.plan))),
+        })
+    }
+
+    /// One layer of [`Int8Executor::refit_static_grids`]: predict the new
+    /// frozen output grid from pooled live stats (old input grid — the one
+    /// the stats were collected on), then refold bias + requant against the
+    /// new input grid. Returns (new layer, old output grid, new output grid).
+    fn refit_layer(
+        &self,
+        idx: usize,
+        l: &Int8Layer,
+        in_id: usize,
+        old_q: &[QOut],
+        new_q: &[QOut],
+        live: &BTreeMap<usize, WindowStats>,
+    ) -> (Int8Layer, QOut, QOut) {
+        let old_in = old_q[in_id];
+        let new_in = new_q[in_id];
+        let old_out = l.static_out.expect("static lowering");
+        let new_out = match live.get(&idx) {
+            Some(st) if st.n > 0 => predict_grid(l, st, old_in.scale),
+            _ => old_out,
+        };
+        let mut nl = l.clone();
+        nl.static_out = Some(new_out);
+        let mut bias_q = std::mem::take(&mut nl.bias_q);
+        fold_bias(&nl.bias_f, new_in.scale, &nl.s_w, &mut bias_q);
+        nl.bias_q = bias_q;
+        nl.static_requant = Some(build_requant(new_in.scale, &nl.s_w, new_out));
+        (nl, old_out, new_out)
+    }
+
     fn collect_dequant(&self, arena: &Int8Arena) -> Vec<Tensor<f32>> {
         self.output_ids
             .iter()
@@ -285,6 +404,15 @@ impl Int8Executor {
     // ---- the fast arena engine -------------------------------------------
 
     fn forward(&self, input: &Tensor<f32>, arena: &mut Int8Arena) -> Result<(), EngineError> {
+        self.forward_inner(input, arena, None)
+    }
+
+    fn forward_inner(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut Int8Arena,
+        mut tap: Option<&mut RunTap>,
+    ) -> Result<(), EngineError> {
         if input.shape() != &self.input_shape {
             return Err(EngineError::ShapeMismatch {
                 expected: self.input_shape.clone(),
@@ -297,12 +425,12 @@ impl Int8Executor {
             "arena plan does not match program"
         );
         for idx in 0..self.nodes.len() {
-            self.eval_node(idx, input, arena);
+            self.eval_node(idx, input, arena, tap.as_deref_mut());
         }
         Ok(())
     }
 
-    fn eval_node(&self, idx: usize, input: &Tensor<f32>, arena: &mut Int8Arena) {
+    fn eval_node(&self, idx: usize, input: &Tensor<f32>, arena: &mut Int8Arena, tap: Option<&mut RunTap>) {
         let node = &self.nodes[idx];
         let out_slot = arena.plan.slots[idx];
         let out_shape = arena.plan.shapes[idx].clone();
@@ -312,6 +440,13 @@ impl Int8Executor {
                 t.resize_to(out_shape);
                 quantize_into(self.input_q, input.data(), t.data_mut());
                 arena.node_q[idx] = self.input_q;
+                if let Some(tap) = tap {
+                    let data = arena.slots[out_slot].data();
+                    let (s1, s2) = int_sums(data, self.input_q.zero);
+                    let mut st = WindowStats::default();
+                    st.push(s1, s2);
+                    tap.push(idx, self.input_q.scale, st, clip_count_s8(data), data.len() as u64);
+                }
             }
             Int8Op::Relu => {
                 let in_id = node.inputs[0].0;
@@ -411,6 +546,11 @@ impl Int8Executor {
                 let in_q = arena.node_q[in_id];
                 let in_slot = arena.plan.slots[in_id];
                 let cout = l.bias_f.len();
+                // Observation reads the input before the kernel (the slot
+                // may be recycled afterwards) with the tap's own γ stride.
+                let tap_window = tap
+                    .as_ref()
+                    .map(|t| conv_window_stats(&arena.slots[in_slot], geom, in_q.zero, t.gamma));
                 let mut out = arena.take_slot(out_slot);
                 out.resize_to(out_shape);
                 let q_out = match self.mode {
@@ -471,6 +611,10 @@ impl Int8Executor {
                         q_out
                     }
                 };
+                if let Some(tap) = tap {
+                    let clipped = clip_count_s8(out.data());
+                    tap.push(idx, in_q.scale, tap_window.unwrap_or_default(), clipped, out.numel() as u64);
+                }
                 arena.slots[out_slot] = out;
                 arena.node_q[idx] = q_out;
             }
@@ -479,6 +623,9 @@ impl Int8Executor {
                 let in_q = arena.node_q[in_id];
                 let in_slot = arena.plan.slots[in_id];
                 let c = l.bias_f.len();
+                let tap_window = tap
+                    .as_ref()
+                    .map(|t| dw_window_stats(&arena.slots[in_slot], geom, in_q.zero, t.gamma));
                 let mut out = arena.take_slot(out_slot);
                 out.resize_to(out_shape);
                 let q_out = match self.mode {
@@ -542,6 +689,10 @@ impl Int8Executor {
                         q_out
                     }
                 };
+                if let Some(tap) = tap {
+                    let clipped = clip_count_s8(out.data());
+                    tap.push(idx, in_q.scale, tap_window.unwrap_or_default(), clipped, out.numel() as u64);
+                }
                 arena.slots[out_slot] = out;
                 arena.node_q[idx] = q_out;
             }
@@ -550,6 +701,12 @@ impl Int8Executor {
                 let in_q = arena.node_q[in_id];
                 let in_slot = arena.plan.slots[in_id];
                 let h = l.bias_f.len();
+                let tap_window = tap.as_ref().map(|_| {
+                    let (s1, s2) = int_sums(arena.slots[in_slot].data(), in_q.zero);
+                    let mut st = WindowStats::default();
+                    st.push(s1, s2);
+                    st
+                });
                 let mut out = arena.take_slot(out_slot);
                 out.resize_to(out_shape);
                 let q_out = match self.mode {
@@ -609,6 +766,10 @@ impl Int8Executor {
                         q_out
                     }
                 };
+                if let Some(tap) = tap {
+                    let clipped = clip_count_s8(out.data());
+                    tap.push(idx, in_q.scale, tap_window.unwrap_or_default(), clipped, out.numel() as u64);
+                }
                 arena.slots[out_slot] = out;
                 arena.node_q[idx] = q_out;
             }
@@ -969,6 +1130,12 @@ pub fn dequant_tensor(t: &Tensor<i8>, q: QOut) -> Tensor<f32> {
     t.map(|v| q.dequant(v))
 }
 
+/// Values sitting on the int8 grid extremes — the observable saturation
+/// counter the adaptation tap records per quantizable node.
+fn clip_count_s8(data: &[i8]) -> u64 {
+    data.iter().filter(|&&v| v == i8::MIN || v == i8::MAX).count() as u64
+}
+
 /// int8 ReLU6 window on a grid: `[z, z + round(6/s)]` clamped to int8.
 /// Computed in i64 so extreme zero-points cannot overflow the addition.
 fn relu6_bounds(q: QOut) -> (i8, i8) {
@@ -1113,6 +1280,109 @@ mod tests {
                 Err(EngineError::ShapeMismatch { .. })
             ));
         }
+    }
+
+    #[test]
+    fn tapped_run_is_bit_identical_and_records_nodes() {
+        let mut rng = Pcg32::new(0x7A9);
+        let g = tiny_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                Arc::clone(&g),
+                QuantSettings { mode, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+            let plain = int8.run(&img).unwrap();
+            let mut arena = int8.make_arena();
+            let mut tap = crate::engine::RunTap::new(2);
+            let tapped = int8.run_tapped_with_arena(&img, &mut arena, &mut tap).unwrap();
+            assert_eq!(plain[0].data(), tapped[0].data(), "{mode:?}: tap perturbed the run");
+            // Input + conv + linear tapped (relu/gap are grid-transparent).
+            assert_eq!(tap.nodes.len(), 3, "{mode:?}");
+            assert_eq!(tap.nodes[0].node, 0);
+            for nt in &tap.nodes {
+                assert!(nt.total > 0);
+                assert!(nt.window.n > 0, "{mode:?}: node {} has no windows", nt.node);
+                assert!(nt.scale > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn refit_with_no_stats_is_bit_identical() {
+        let mut rng = Pcg32::new(0x5EF1);
+        let g = tiny_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+        let refit = int8.refit_static_grids(&BTreeMap::new()).unwrap();
+        // Empty live stats: every grid survives, the bias/requant refold is
+        // a no-op, and outputs stay bit-identical.
+        let a = int8.run_q(&img).unwrap();
+        let b = refit.run_q(&img).unwrap();
+        assert_eq!(a[0].0.data(), b[0].0.data());
+        assert_eq!(a[0].1, b[0].1);
+    }
+
+    #[test]
+    fn refit_moves_grids_with_live_stats() {
+        let mut rng = Pcg32::new(0x5EF2);
+        let g = tiny_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+        // Collect live stats from brightened inputs via the tap.
+        let mut arena = int8.make_arena();
+        let mut tap = crate::engine::RunTap::new(1);
+        let mut live: BTreeMap<usize, WindowStats> = BTreeMap::new();
+        for _ in 0..4 {
+            let mut img = rand_image(&mut rng);
+            for v in img.data_mut() {
+                *v = (*v * 0.3 + 0.7).clamp(0.0, 1.0);
+            }
+            int8.run_tapped_with_arena(&img, &mut arena, &mut tap).unwrap();
+            for nt in &tap.nodes {
+                let e = live.entry(nt.node).or_default();
+                e.n += nt.window.n;
+                e.sum_s1 += nt.window.sum_s1;
+                e.sum_s2 += nt.window.sum_s2;
+                e.sum_s1_sq += nt.window.sum_s1_sq;
+            }
+        }
+        let refit = int8.refit_static_grids(&live).unwrap();
+        // At least one quantizable node's frozen grid moved.
+        let moved = int8
+            .nodes()
+            .iter()
+            .zip(refit.nodes().iter())
+            .any(|(a, b)| match (&a.op, &b.op) {
+                (Int8Op::Conv { l: la, .. }, Int8Op::Conv { l: lb, .. })
+                | (Int8Op::Linear { l: la }, Int8Op::Linear { l: lb }) => {
+                    la.static_out != lb.static_out
+                }
+                _ => false,
+            });
+        assert!(moved, "live stats from a shifted stream must move some grid");
+        // Refit on a non-static program is a typed error.
+        let mut exd = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
+        );
+        exd.calibrate(&calib);
+        let dyn8 = Int8Executor::lower(&exd, Granularity::PerTensor).unwrap();
+        assert!(dyn8.refit_static_grids(&live).is_err());
     }
 
     #[test]

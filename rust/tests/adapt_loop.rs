@@ -1,0 +1,361 @@
+//! The online-adaptation loop end to end (`pdq::adapt`): under a
+//! mid-stream corruption shift the drift score crosses the threshold, a
+//! shadow recalibration fires exactly once per cooldown window, the grid
+//! swap is atomic (in-flight sessions finish on the old grids; responses
+//! are bit-exact within an epoch), post-swap accuracy on the shifted
+//! stream strictly improves over the frozen baseline, and with adaptation
+//! off the hot path is bit-identical to the plain engine path.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use pdq::adapt::{
+    AdaptConfig, AdaptManager, DriftConfig, ObserverConfig, PolicyConfig, RecalBackend,
+    RecalPolicy,
+};
+use pdq::coordinator::calibrate::demo_model;
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::data::shapes::{self, Split};
+use pdq::engine::{
+    calibration_images, Engine, FloatEngine, Int8Engine, SessionPool, VariantKey, VariantSpec,
+    CALIB_SIZE,
+};
+use pdq::models::Model;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{Int8Executor, QuantMode};
+use pdq::quant::Granularity;
+use pdq::tensor::Tensor;
+
+/// A strong, deterministic §5.2-style shift: compress the image into a
+/// bright band, far outside the calibration distribution.
+fn shift_image(img: &Tensor<f32>) -> Tensor<f32> {
+    let mut out = img.clone();
+    for v in out.data_mut() {
+        *v = (0.25 * *v + 0.70).clamp(0.0, 1.0);
+    }
+    out
+}
+
+/// Calibrated int8-static program + engine for the demo model.
+fn int8_static(model: &Model, calib: &[Tensor<f32>]) -> (Arc<Int8Executor>, Arc<dyn Engine>) {
+    let settings = QuantSettings {
+        mode: QuantMode::Static,
+        granularity: Granularity::PerTensor,
+        ..Default::default()
+    };
+    let mut qex = QuantExecutor::new(Arc::clone(&model.graph), settings);
+    qex.calibrate(calib);
+    let ex = Arc::new(Int8Executor::lower(&qex, Granularity::PerTensor).expect("lowering"));
+    let engine: Arc<dyn Engine> = Arc::new(Int8Engine::new(Arc::clone(&ex)));
+    (ex, engine)
+}
+
+fn int8_static_key(model: &str) -> VariantKey {
+    VariantKey::new(
+        model,
+        VariantSpec::Int8 { mode: QuantMode::Static, weight_gran: Granularity::PerTensor },
+    )
+}
+
+/// Σ relative error of the first output vs the fp32 reference, over a set.
+fn total_rel_err(engine: &dyn Engine, fp32: &[Vec<f32>], images: &[Tensor<f32>]) -> f64 {
+    let mut session = engine.compile().expect("compiles");
+    let mut total = 0.0f64;
+    for (img, want) in images.iter().zip(fp32) {
+        let got = session.run(img).expect("runs");
+        let num: f64 = got[0]
+            .data()
+            .iter()
+            .zip(want)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = want.iter().map(|&b| (b as f64).powi(2)).sum::<f64>().max(1e-9);
+        total += (num / den).sqrt();
+    }
+    total
+}
+
+#[test]
+fn drift_rises_recal_fires_once_and_accuracy_improves() {
+    let model = demo_model("m");
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let (ex, frozen) = int8_static(&model, &calib);
+    let key = int8_static_key("m");
+
+    let n = 32usize;
+    let clean: Vec<Tensor<f32>> = shapes::dataset(model.task, Split::Test, n)
+        .iter()
+        .map(|s| s.image_f32())
+        .collect();
+    let shifted: Vec<Tensor<f32>> = clean.iter().map(shift_image).collect();
+
+    let cfg = AdaptConfig {
+        observer: ObserverConfig {
+            sample_every: 1,
+            tap_gamma: 2,
+            window_cap: n as u64,
+            ..Default::default()
+        },
+        drift: DriftConfig { threshold: 0.5, min_requests: 8, ..Default::default() },
+        policy: PolicyConfig {
+            policy: RecalPolicy::DriftTriggered,
+            // One cooldown window spans the whole test: sustained drift
+            // must produce exactly one recalibration.
+            cooldown: Duration::from_secs(3600),
+        },
+        ..Default::default()
+    };
+    let mut manager = AdaptManager::new(cfg);
+    let cell = manager
+        .register(
+            key.clone(),
+            Arc::clone(&frozen),
+            RecalBackend::Int8Refold(Mutex::new(Arc::clone(&ex))),
+            &clean,
+        )
+        .expect("register");
+    let pool = SessionPool::over(Arc::clone(&cell));
+
+    // --- clean phase: no drift, no recalibration ---------------------------
+    for img in &clean {
+        pool.acquire().unwrap().run(img).unwrap();
+    }
+    let probe = manager.probe();
+    assert!(
+        probe[0].1.aggregate < 0.5,
+        "clean traffic vs clean reference must stay calm, got {}",
+        probe[0].1.aggregate
+    );
+    assert!(manager.tick().is_empty(), "no recalibration on clean traffic");
+
+    // --- the shift lands: drift crosses the threshold ----------------------
+    for img in &shifted {
+        pool.acquire().unwrap().run(img).unwrap();
+    }
+    let probe = manager.probe();
+    assert!(
+        probe[0].1.aggregate >= 0.5,
+        "shifted traffic must cross the drift threshold, got {}",
+        probe[0].1.aggregate
+    );
+
+    // --- exactly one recalibration per cooldown window ---------------------
+    let outcomes = manager.tick();
+    assert_eq!(outcomes.len(), 1, "the drifted variant fires");
+    assert!(outcomes[0].fired, "{}", outcomes[0].detail);
+    assert_eq!(outcomes[0].detail, "int8-refold");
+    assert_eq!(outcomes[0].epoch, 1);
+    // Sustained drift, repeated ticks: the cooldown holds it to one.
+    for _ in 0..3 {
+        for img in &shifted {
+            pool.acquire().unwrap().run(img).unwrap();
+        }
+        assert!(manager.tick().is_empty(), "cooldown must suppress repeat fires");
+    }
+    let status = manager.status().remove(0);
+    assert_eq!(status.recalibrations, 1);
+    assert_eq!(status.epoch, 1);
+    assert!(status.peak_drift >= 0.5);
+
+    // --- post-swap accuracy strictly improves on the shifted stream --------
+    let fp32_engine = FloatEngine::new(Arc::clone(&model.graph));
+    let mut fp32 = fp32_engine.compile().unwrap();
+    let reference: Vec<Vec<f32>> =
+        shifted.iter().map(|img| fp32.run(img).unwrap()[0].data().to_vec()).collect();
+    let adapted = cell.current().1;
+    let err_frozen = total_rel_err(frozen.as_ref(), &reference, &shifted);
+    let err_adapted = total_rel_err(adapted.as_ref(), &reference, &shifted);
+    assert!(
+        err_adapted < err_frozen,
+        "refolded grids must beat the frozen calibration on shifted data: \
+         adapted {err_adapted:.4} vs frozen {err_frozen:.4}"
+    );
+}
+
+#[test]
+fn epoch_swap_is_atomic_and_bit_exact_within_epoch() {
+    let model = demo_model("m");
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let (ex, engine) = int8_static(&model, &calib);
+    let key = int8_static_key("m");
+    let cfg = AdaptConfig {
+        observer: ObserverConfig { sample_every: 1, ..Default::default() },
+        drift: DriftConfig { min_requests: 1, ..Default::default() },
+        policy: PolicyConfig { policy: RecalPolicy::Manual, cooldown: Duration::ZERO },
+        ..Default::default()
+    };
+    let mut manager = AdaptManager::new(cfg);
+    let cell = manager
+        .register(
+            key,
+            Arc::clone(&engine),
+            RecalBackend::Int8Refold(Mutex::new(Arc::clone(&ex))),
+            &calib,
+        )
+        .expect("register");
+    let pool = SessionPool::over(Arc::clone(&cell));
+    let img = shift_image(&calib[0]);
+
+    // Epoch 0: repeated runs are bit-exact.
+    let before_a = pool.acquire().unwrap().run(&img).unwrap()[0].data().to_vec();
+    let before_b = pool.acquire().unwrap().run(&img).unwrap()[0].data().to_vec();
+    assert_eq!(before_a, before_b, "bit-exact within epoch 0");
+
+    // Feed shifted stats so a manual refold has a window to work from,
+    // then hold an in-flight session across the swap.
+    for _ in 0..8 {
+        pool.acquire().unwrap().run(&img).unwrap();
+    }
+    let mut held = pool.acquire().unwrap();
+    assert_eq!(held.epoch(), 0);
+    let outcomes = manager.recalibrate_now(None);
+    assert!(outcomes[0].fired, "{}", outcomes[0].detail);
+    assert_eq!(outcomes[0].epoch, 1);
+
+    // The held session still executes the OLD grids, bit-for-bit.
+    let during = held.run(&img).unwrap()[0].data().to_vec();
+    assert_eq!(during, before_a, "in-flight work finishes on the old epoch");
+    drop(held);
+
+    // New checkouts see the new grids: bit-exact within epoch 1, and the
+    // grids actually moved (the shifted stats changed the frozen ranges).
+    let s = pool.acquire().unwrap();
+    assert_eq!(s.epoch(), 1);
+    drop(s);
+    let after_a = pool.acquire().unwrap().run(&img).unwrap()[0].data().to_vec();
+    let after_b = pool.acquire().unwrap().run(&img).unwrap()[0].data().to_vec();
+    assert_eq!(after_a, after_b, "bit-exact within epoch 1");
+    assert_ne!(after_a, before_a, "the swap must change the served grids");
+}
+
+/// With adaptation off (`Server::start`), the serving hot path is
+/// bit-identical to compiling and running the engine directly — no
+/// observer, no sampling, no epoch machinery in the way.
+#[test]
+fn adapt_off_is_bit_identical_to_plain_engine() {
+    let model = demo_model("m");
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let (_, engine) = int8_static(&model, &calib);
+    let key = int8_static_key("m");
+    let server = Server::start(
+        vec![(key.clone(), Arc::clone(&engine))],
+        ServerConfig::default(),
+    );
+    assert!(server.adapt().is_none(), "plain start has no adaptation");
+    let mut direct = engine.compile().unwrap();
+    let images: Vec<Tensor<f32>> = calib.iter().take(6).cloned().collect();
+    for (i, img) in images.iter().enumerate() {
+        let rx = server.submit(key.clone(), i as u64, img.clone()).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let served = resp.result.expect("serves");
+        let want = direct.run(img).unwrap();
+        assert_eq!(
+            served[0].data(),
+            want[0].data(),
+            "request {i}: served output must be bit-identical to the plain engine"
+        );
+    }
+    server.drain();
+}
+
+/// The serving integration: an adaptive coordinator behind the HTTP front
+/// door — `/v1/drift` reports status, `POST /v1/recalibrate` fires the
+/// int8 refold, and the Prometheus exposition carries the gauges.
+#[test]
+fn http_drift_and_recalibrate_endpoints() {
+    use pdq::net::{wire, FrontDoor, FrontDoorConfig};
+    use pdq::util::json::Json;
+
+    let model = demo_model("m");
+    let calib = calibration_images(model.task, CALIB_SIZE);
+    let (ex, engine) = int8_static(&model, &calib);
+    let key = int8_static_key("m");
+    let cfg = AdaptConfig {
+        observer: ObserverConfig { sample_every: 1, ..Default::default() },
+        // Manual policy: the background worker observes but never fires on
+        // its own, so the endpoint's effect is deterministic.
+        policy: PolicyConfig { policy: RecalPolicy::Manual, cooldown: Duration::ZERO },
+        poll_interval: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let mut manager = AdaptManager::new(cfg);
+    let cell = manager
+        .register(
+            key.clone(),
+            engine,
+            RecalBackend::Int8Refold(Mutex::new(Arc::clone(&ex))),
+            &calib,
+        )
+        .expect("register");
+    let server = Arc::new(Server::start_adaptive(
+        vec![(key.clone(), cell)],
+        ServerConfig::default(),
+        Arc::new(manager),
+    ));
+    let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
+    let addr = fd.local_addr().to_string();
+    let mut client = wire::Client::new(&addr);
+
+    // Baseline status.
+    let resp = client.get("/v1/drift").unwrap();
+    assert_eq!(resp.status, 200);
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let variants = j.get("variants").unwrap().as_arr().unwrap();
+    assert_eq!(variants.len(), 1);
+    assert_eq!(variants[0].get("variant").unwrap().as_str(), Some("m|int8-static-t"));
+    assert_eq!(variants[0].get("epoch").unwrap().as_usize(), Some(0));
+    assert_eq!(variants[0].get("backend").unwrap().as_str(), Some("int8-refold"));
+
+    // Drive shifted traffic over the socket so a live window accumulates.
+    let img = shift_image(&calib[0]);
+    for i in 0..10u64 {
+        match client.post_infer(&key, i, &img).unwrap() {
+            wire::InferOutcome::Ok(_) => {}
+            other => panic!(
+                "infer must succeed, got {}",
+                match other {
+                    wire::InferOutcome::Rejected { .. } => "rejected",
+                    wire::InferOutcome::Failed { .. } => "failed",
+                    wire::InferOutcome::Ok(_) => unreachable!(),
+                }
+            ),
+        }
+    }
+
+    // Manual recalibration through the endpoint.
+    let resp = client
+        .request("POST", "/v1/recalibrate?variant=m|int8-static-t", "", &[])
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let outcomes = j.get("outcomes").unwrap().as_arr().unwrap();
+    assert_eq!(outcomes.len(), 1);
+    assert_eq!(outcomes[0].get("fired").unwrap().as_bool(), Some(true));
+    assert_eq!(outcomes[0].get("epoch").unwrap().as_usize(), Some(1));
+
+    // Status reflects the swap; Prometheus carries the gauges.
+    let resp = client.get("/v1/drift").unwrap();
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let v = &j.get("variants").unwrap().as_arr().unwrap()[0];
+    assert_eq!(v.get("epoch").unwrap().as_usize(), Some(1));
+    assert_eq!(v.get("recalibrations").unwrap().as_usize(), Some(1));
+    let prom = client.get("/metrics?format=prometheus").unwrap();
+    let body = String::from_utf8_lossy(&prom.body).to_string();
+    assert!(body.contains("pdq_drift_score{variant=\"m|int8-static-t\"}"), "{body}");
+    assert!(body.contains("pdq_recalibrations_total{variant=\"m|int8-static-t\"} 1"), "{body}");
+    assert!(body.contains("pdq_engine_epoch{variant=\"m|int8-static-t\"} 1"), "{body}");
+    // Unknown filter is a 404; serving still works post-swap.
+    let resp = client
+        .request("POST", "/v1/recalibrate?variant=ghost|fp32", "", &[])
+        .unwrap();
+    assert_eq!(resp.status, 404);
+    match client.post_infer(&key, 99, &img).unwrap() {
+        wire::InferOutcome::Ok(r) => assert_eq!(r.id, 99),
+        _ => panic!("post-swap inference must succeed"),
+    }
+
+    let metrics = fd.shutdown();
+    assert!(metrics.responses() >= 11);
+    // Per-variant breakdown followed the adaptive traffic too.
+    assert!(metrics.variant_responses("m|int8-static-t") >= 11);
+}
