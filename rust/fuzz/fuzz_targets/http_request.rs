@@ -1,0 +1,10 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_http_request_parsing`:
+//! whole-buffer vs. stuttered split reads must parse identically and
+//! never panic. Seed corpus: any bytes; the target is total.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_http_request(data);
+});

@@ -1,0 +1,11 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_json_documents`: the JSON
+//! parser must never panic (including deep-nesting stack overflow, which
+//! libfuzzer catches as a crash) and compact serialization must be a
+//! fixed point under reparsing.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_json(data);
+});

@@ -1,0 +1,10 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_variant_key_wire_parsing`:
+//! `VariantKey::parse_wire` must never panic, and every accepted key must
+//! round-trip through `wire()` to an equal key.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_variant_wire(data);
+});

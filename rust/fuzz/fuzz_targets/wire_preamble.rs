@@ -1,0 +1,10 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_wire_preamble_decoding`:
+//! decode must never panic, and anything that decodes must survive an
+//! encode → decode round trip unchanged.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_wire_preamble(data);
+});

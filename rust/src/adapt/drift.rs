@@ -19,7 +19,13 @@
 //! `score ≥ threshold`, calm again only at `score ≤ exit_ratio·threshold`,
 //! so a score oscillating around the threshold cannot flap the trigger.
 
+//! [`TwoWindowEstimator`] layers a rolling fast/slow window pair on top:
+//! a lifetime accumulator dilutes a sudden shift under hours of calm
+//! history, while a short rolling window reacts within a handful of
+//! requests yet still carries enough mass for a stable score.
+
 use super::observer::{Accumulator, NodeFeatures};
+use crate::engine::RunTap;
 
 /// Drift-scoring knobs.
 #[derive(Clone, Copy, Debug)]
@@ -133,10 +139,108 @@ impl DriftDetector {
     }
 }
 
+/// Window sizes (in sampled requests) for [`TwoWindowEstimator`].
+#[derive(Clone, Copy, Debug)]
+pub struct TwoWindowConfig {
+    /// Rolling cap of the fast window — reacts within ~one cap of
+    /// requests after a shift.
+    pub fast_cap: u64,
+    /// Rolling cap of the slow window — smooths sampling noise and
+    /// catches slow creep the fast window normalizes away.
+    pub slow_cap: u64,
+}
+
+impl Default for TwoWindowConfig {
+    fn default() -> Self {
+        Self { fast_cap: 64, slow_cap: 512 }
+    }
+}
+
+/// One rolling window as a current/previous accumulator pair: when the
+/// current half reaches the cap it rotates into `prev`, so the visible
+/// union always spans between `cap` and `2·cap` requests and no tap is
+/// ever older than two rotations — a cheap bounded-memory approximation
+/// of a true sliding window.
+#[derive(Clone, Debug, Default)]
+struct Rolling {
+    cur: Accumulator,
+    prev: Accumulator,
+}
+
+impl Rolling {
+    fn absorb(&mut self, tap: &RunTap, cap: u64) {
+        self.cur.absorb(tap);
+        if self.cur.requests >= cap.max(1) {
+            self.prev = std::mem::take(&mut self.cur);
+        }
+    }
+
+    /// The union of both halves — what gets scored.
+    fn view(&self) -> Accumulator {
+        let mut v = self.prev.clone();
+        v.merge(&self.cur);
+        v
+    }
+}
+
+/// Drift reports from both windows of a [`TwoWindowEstimator`].
+#[derive(Clone, Debug, Default)]
+pub struct TwoWindowReport {
+    pub fast: DriftReport,
+    pub slow: DriftReport,
+}
+
+impl TwoWindowReport {
+    /// The more alarmed of the two windows — feed this to a
+    /// [`DriftDetector`] so a sudden shift (fast) and slow creep (slow)
+    /// both trigger, while hysteresis still sees one coherent series.
+    pub fn combined(&self) -> &DriftReport {
+        if self.fast.aggregate >= self.slow.aggregate {
+            &self.fast
+        } else {
+            &self.slow
+        }
+    }
+}
+
+/// Rolling fast/slow drift estimator (see module docs).
+#[derive(Clone, Debug)]
+pub struct TwoWindowEstimator {
+    cfg: TwoWindowConfig,
+    fast: Rolling,
+    slow: Rolling,
+}
+
+impl TwoWindowEstimator {
+    pub fn new(cfg: TwoWindowConfig) -> Self {
+        Self { cfg, fast: Rolling::default(), slow: Rolling::default() }
+    }
+
+    /// Fold one sampled run into both windows.
+    pub fn absorb(&mut self, tap: &RunTap) {
+        self.fast.absorb(tap, self.cfg.fast_cap);
+        self.slow.absorb(tap, self.cfg.slow_cap);
+    }
+
+    /// Score both windows against the calibration reference.
+    pub fn report(&self, reference: &Accumulator, cfg: &DriftConfig) -> TwoWindowReport {
+        TwoWindowReport {
+            fast: drift_report(reference, &self.fast.view(), cfg),
+            slow: drift_report(reference, &self.slow.view(), cfg),
+        }
+    }
+
+    /// Drop all history (after a recalibration resets the reference —
+    /// pre-recalibration taps would otherwise keep scoring as drift).
+    pub fn reset(&mut self) {
+        self.fast = Rolling::default();
+        self.slow = Rolling::default();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::RunTap;
     use crate::tensor::{Shape, Tensor};
 
     fn window_of(value: f32, n: u64) -> Accumulator {
@@ -183,6 +287,100 @@ mod tests {
         assert!(rep.per_node[0].clip_excess > 0.9);
         assert!(rep.max_clip_rate > 0.9);
         assert!(rep.aggregate >= cfg.clip_weight * 0.9);
+    }
+
+    fn tap_of(value: f32) -> RunTap {
+        let img = Tensor::full(Shape::hwc(4, 4, 1), value);
+        let mut tap = RunTap::new(1);
+        tap.observe_input_grid(&img);
+        tap
+    }
+
+    #[test]
+    fn two_window_detects_faster_than_lifetime_window() {
+        let dcfg = DriftConfig::default();
+        let reference = window_of(0.3, 16);
+        let mut est =
+            TwoWindowEstimator::new(TwoWindowConfig { fast_cap: 16, slow_cap: 512 });
+        // A lifetime accumulator absorbing the same stream — the single
+        // ever-growing window the estimator exists to replace.
+        let mut lifetime = Accumulator::default();
+
+        for _ in 0..64 {
+            let t = tap_of(0.3);
+            est.absorb(&t);
+            lifetime.absorb(&t);
+        }
+        assert!(
+            est.report(&reference, &dcfg).combined().aggregate < dcfg.threshold,
+            "calm traffic must not alarm"
+        );
+
+        // Input distribution shifts. The fast window must cross the
+        // threshold within ~a window of shifted requests, while 64 calm
+        // requests still dilute the lifetime window below it.
+        let mut crossed_at = None;
+        for k in 1..=12u32 {
+            let t = tap_of(0.9);
+            est.absorb(&t);
+            lifetime.absorb(&t);
+            if est.report(&reference, &dcfg).fast.aggregate >= dcfg.threshold {
+                crossed_at = Some(k);
+                break;
+            }
+        }
+        let k = crossed_at.expect("fast window must alarm within 12 shifted requests");
+        let lifetime_score = drift_report(&reference, &lifetime, &dcfg).aggregate;
+        assert!(
+            lifetime_score < dcfg.threshold,
+            "lifetime window already alarmed at {lifetime_score} after {k} shifted \
+             requests — the rolling window buys nothing"
+        );
+    }
+
+    #[test]
+    fn two_window_hysteresis_interaction() {
+        // The combined (max) series through a DriftDetector must produce
+        // exactly one drifted→calm transition as a shift passes through
+        // both rolling windows — rotations shed old mass in steps, and
+        // hysteresis has to absorb those steps without flapping.
+        let dcfg = DriftConfig::default();
+        let reference = window_of(0.3, 16);
+        let mut est =
+            TwoWindowEstimator::new(TwoWindowConfig { fast_cap: 16, slow_cap: 64 });
+        let mut det = DriftDetector::new(dcfg);
+
+        let mut step = |est: &mut TwoWindowEstimator, det: &mut DriftDetector, v: f32| {
+            est.absorb(&tap_of(v));
+            det.update(est.report(&reference, &dcfg).combined())
+        };
+
+        for _ in 0..32 {
+            assert!(!step(&mut est, &mut det, 0.3), "calm stream must stay calm");
+        }
+        let mut entered = false;
+        for _ in 0..16 {
+            if step(&mut est, &mut det, 0.9) {
+                entered = true;
+                break;
+            }
+        }
+        assert!(entered, "shift must trip the detector within one fast window");
+
+        // Distribution recovers: the detector must exit exactly once and
+        // stay calm while the stale mass rotates out of the slow window.
+        let mut exits = 0;
+        let mut prev = true;
+        for _ in 0..96 {
+            let now = step(&mut est, &mut det, 0.3);
+            if prev && !now {
+                exits += 1;
+            }
+            assert!(!(now && !prev), "detector re-entered drifted on calm traffic");
+            prev = now;
+        }
+        assert_eq!(exits, 1, "exactly one drifted→calm transition");
+        assert!(!det.is_drifted());
     }
 
     #[test]

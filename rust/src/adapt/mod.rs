@@ -51,7 +51,10 @@ use crate::nn::{Int8Executor, QuantMode};
 use crate::quant::Granularity;
 use crate::tensor::Tensor;
 
-pub use drift::{DriftConfig, DriftDetector, DriftReport, NodeDrift};
+pub use drift::{
+    DriftConfig, DriftDetector, DriftReport, NodeDrift, TwoWindowConfig, TwoWindowEstimator,
+    TwoWindowReport,
+};
 pub use observer::{Accumulator, NodeAccum, NodeFeatures, ObservedEngine, Observer, ObserverConfig};
 pub use policy::{PolicyConfig, PolicyState, RecalPolicy};
 pub use recalib::{

@@ -91,6 +91,15 @@ struct Inner {
     rejected_unknown: u64,
     rejected_overload: u64,
     rejected_draining: u64,
+    /// Malformed-input rejections, recorded by the front door before a
+    /// request ever reaches routing: unparseable heads (400/501),
+    /// size-cap violations (413), bad chunked framing (400, separate so a
+    /// chunked-specific regression is visible), and connections turned
+    /// away at the max-connection cap (503).
+    rejected_parse_error: u64,
+    rejected_oversized: u64,
+    rejected_bad_chunk: u64,
+    rejected_conn_cap: u64,
     /// Responses answered with a typed engine error (compile or run
     /// failure) — delivered, but not successful.
     engine_errors: u64,
@@ -129,6 +138,10 @@ impl Metrics {
                 rejected_unknown: 0,
                 rejected_overload: 0,
                 rejected_draining: 0,
+                rejected_parse_error: 0,
+                rejected_oversized: 0,
+                rejected_bad_chunk: 0,
+                rejected_conn_cap: 0,
                 engine_errors: 0,
                 batches: 0,
                 batch_sizes: Reservoir::new(cap, 0x5EED_BA7C),
@@ -230,6 +243,39 @@ impl Metrics {
         self.inner.lock().unwrap().rejected_draining += 1;
     }
 
+    /// A connection whose bytes failed to parse as HTTP (400) or used a
+    /// transfer coding this server doesn't speak (501).
+    pub fn on_parse_error(&self) {
+        self.inner.lock().unwrap().rejected_parse_error += 1;
+    }
+
+    /// A request over a size cap: head bytes, header count, or a declared
+    /// or chunk-decoded body over the limit (the 413 path).
+    pub fn on_oversized(&self) {
+        self.inner.lock().unwrap().rejected_oversized += 1;
+    }
+
+    /// A chunked body with malformed framing (bad size line, missing
+    /// CRLF, oversized trailers) — separate from plain parse errors so a
+    /// chunked-decode regression is visible on its own.
+    pub fn on_bad_chunk(&self) {
+        self.inner.lock().unwrap().rejected_bad_chunk += 1;
+    }
+
+    /// A connection turned away at the front door's max-connection cap
+    /// (503 + `Retry-After` before any bytes are parsed).
+    pub fn on_connection_cap(&self) {
+        self.inner.lock().unwrap().rejected_conn_cap += 1;
+    }
+
+    /// Total malformed-input rejections (parse errors + size caps + bad
+    /// chunked framing + connection-cap turn-aways). Chaos tests assert
+    /// this stays zero: injected faults mangle timing, never bytes.
+    pub fn malformed(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.rejected_parse_error + m.rejected_oversized + m.rejected_bad_chunk + m.rejected_conn_cap
+    }
+
     /// A job answered with a typed engine error ([`crate::engine::EngineError`])
     /// instead of outputs. Counted *in addition to* `on_response` — the
     /// reply was delivered, so it belongs in the latency accounting, but
@@ -266,10 +312,17 @@ impl Metrics {
         self.inner.lock().unwrap().responses
     }
 
-    /// Total rejections: unknown-variant + overload-shed + draining.
+    /// Total rejections: unknown-variant + overload-shed + draining +
+    /// every malformed-input reason.
     pub fn rejected(&self) -> u64 {
         let m = self.inner.lock().unwrap();
-        m.rejected_unknown + m.rejected_overload + m.rejected_draining
+        m.rejected_unknown
+            + m.rejected_overload
+            + m.rejected_draining
+            + m.rejected_parse_error
+            + m.rejected_oversized
+            + m.rejected_bad_chunk
+            + m.rejected_conn_cap
     }
 
     /// The overload-shed (429) share of [`Metrics::rejected`].
@@ -321,12 +374,23 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         let m = self.inner.lock().unwrap();
         let mut o = Json::obj();
+        let rejected = m.rejected_unknown
+            + m.rejected_overload
+            + m.rejected_draining
+            + m.rejected_parse_error
+            + m.rejected_oversized
+            + m.rejected_bad_chunk
+            + m.rejected_conn_cap;
         o.set("requests", m.requests)
             .set("responses", m.responses)
-            .set("rejected", m.rejected_unknown + m.rejected_overload + m.rejected_draining)
+            .set("rejected", rejected)
             .set("rejected_unknown", m.rejected_unknown)
             .set("rejected_overload", m.rejected_overload)
             .set("rejected_draining", m.rejected_draining)
+            .set("rejected_parse_error", m.rejected_parse_error)
+            .set("rejected_oversized", m.rejected_oversized)
+            .set("rejected_bad_chunk", m.rejected_bad_chunk)
+            .set("rejected_connection_cap", m.rejected_conn_cap)
             .set("engine_errors", m.engine_errors)
             .set("batches", m.batches)
             .set("mean_batch", stats::mean(&m.batch_sizes.samples))
@@ -377,6 +441,22 @@ impl Metrics {
         s.push_str(&format!(
             "pdq_rejected_total{{reason=\"draining\"}} {}\n",
             m.rejected_draining
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"parse_error\"}} {}\n",
+            m.rejected_parse_error
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"oversized\"}} {}\n",
+            m.rejected_oversized
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"bad_chunk\"}} {}\n",
+            m.rejected_bad_chunk
+        ));
+        s.push_str(&format!(
+            "pdq_rejected_total{{reason=\"connection_cap\"}} {}\n",
+            m.rejected_conn_cap
         ));
         counter(
             &mut s,
@@ -497,6 +577,29 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("rejected_unknown").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("rejected_overload").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn malformed_input_reasons_in_json_and_prometheus() {
+        let m = Metrics::default();
+        m.on_parse_error();
+        m.on_parse_error();
+        m.on_oversized();
+        m.on_bad_chunk();
+        m.on_connection_cap();
+        assert_eq!(m.malformed(), 5);
+        assert_eq!(m.rejected(), 5, "malformed reasons count as rejections");
+        let j = m.to_json();
+        assert_eq!(j.get("rejected_parse_error").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("rejected_oversized").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("rejected_bad_chunk").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("rejected_connection_cap").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(5));
+        let prom = m.to_prometheus();
+        assert!(prom.contains("pdq_rejected_total{reason=\"parse_error\"} 2"));
+        assert!(prom.contains("pdq_rejected_total{reason=\"oversized\"} 1"));
+        assert!(prom.contains("pdq_rejected_total{reason=\"bad_chunk\"} 1"));
+        assert!(prom.contains("pdq_rejected_total{reason=\"connection_cap\"} 1"));
     }
 
     /// The seed bug this PR fixes: after the reservoir fills, later events

@@ -136,6 +136,21 @@ pub struct VariantKey {
     pub spec: VariantSpec,
 }
 
+/// Cap on wire model names. Wire names arrive from untrusted clients (the
+/// `/v1/infer` preamble, query params); without a cap a hostile client can
+/// make the server allocate and echo megabyte "model names" into catalogs,
+/// metrics labels and error bodies.
+pub const MAX_MODEL_NAME_BYTES: usize = 64;
+
+/// Charset for wire model names: ASCII alphanumerics plus `_` `.` `-`.
+/// Matches every model the repo serves and keeps names safe to embed in
+/// Prometheus labels, JSON and log lines without escaping.
+fn valid_model_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= MAX_MODEL_NAME_BYTES
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'_' | b'.' | b'-'))
+}
+
 impl VariantKey {
     /// Build a key from a model name and a spec.
     pub fn new(model: impl Into<String>, spec: VariantSpec) -> VariantKey {
@@ -152,12 +167,18 @@ impl VariantKey {
         format!("{}|{}", self.model, self.spec.wire())
     }
 
-    /// Parse a wire name produced by [`VariantKey::wire`].
+    /// Parse a wire name produced by [`VariantKey::wire`]. Model names are
+    /// validated (length- and charset-capped) because this is the entry
+    /// point for untrusted client bytes; [`VariantKey::new`] stays
+    /// unvalidated for programmer-side construction.
     pub fn parse_wire(s: &str) -> Result<VariantKey, String> {
         let (model, mode) =
             s.split_once('|').ok_or_else(|| format!("variant {s:?} missing '|' separator"))?;
-        if model.is_empty() {
-            return Err(format!("variant {s:?} has an empty model name"));
+        if !valid_model_name(model) {
+            return Err(format!(
+                "bad model name (want 1..={MAX_MODEL_NAME_BYTES} bytes of [A-Za-z0-9_.-], got {} bytes)",
+                model.len()
+            ));
         }
         Ok(VariantKey { model: model.to_string(), spec: VariantSpec::parse_wire(mode)? })
     }
@@ -257,6 +278,22 @@ mod tests {
             "m|int8--t",
             "m|fp32-t",
         ] {
+            assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn hostile_model_names_rejected() {
+        // Unbounded model names would be allocated and echoed into
+        // catalogs, metrics labels and error bodies.
+        let huge = format!("{}|fp32", "a".repeat(1024 * 1024));
+        assert!(VariantKey::parse_wire(&huge).is_err());
+        let just_over = format!("{}|fp32", "a".repeat(MAX_MODEL_NAME_BYTES + 1));
+        assert!(VariantKey::parse_wire(&just_over).is_err());
+        let at_cap = format!("{}|fp32", "a".repeat(MAX_MODEL_NAME_BYTES));
+        assert!(VariantKey::parse_wire(&at_cap).is_ok());
+        // Charset: no spaces, control bytes, quotes, or non-ASCII.
+        for bad in ["a b|fp32", "a\"b|fp32", "a\nb|fp32", "café|fp32", "a{}|fp32"] {
             assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
         }
     }

@@ -48,6 +48,9 @@
 //!   coordinator (admission control, graceful drain) plus the socket-level
 //!   load-generation harness.
 //! - [`harness`] — experiment drivers regenerating every paper table/figure.
+//! - [`testing`] — deterministic fuzzing harness (seeded mutators,
+//!   grammar-aware generators, differential int8 targets) shared by the
+//!   in-tree fuzz smoke tests and the out-of-tree `fuzz/` cargo-fuzz tree.
 
 pub mod adapt;
 pub mod cmsis;
@@ -64,4 +67,5 @@ pub mod nn;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod testing;
 pub mod util;

@@ -14,7 +14,7 @@
 //! pdq serve   --requests N          # in-process serving coordinator demo
 //! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
 //!             [--synthetic] [--workers N] [--max-batch N] [--deadline-us N]
-//!             [--max-queue N] [--http-threads N]
+//!             [--max-queue N] [--http-threads N] [--max-conns N]
 //!             [--adapt] [--drift-threshold X] [--recal-cooldown-s N]
 //!             [--sample-every N]    # online adaptation: drift monitor +
 //!                                   # shadow recalibration; adds
@@ -22,7 +22,12 @@
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
 //!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
+//!             [--expect-zero-failed]
 //!             [--shift corruption:severity@t]  # mid-run distribution shift
+//! pdq chaos-proxy --target HOST:PORT  # fault-injecting TCP proxy (chaos smoke)
+//!             [--listen HOST:PORT] [--seed N] [--max-chunk N]
+//!             [--would-block-every N] [--latency-us N] [--latency-every N]
+//!             [--disconnect-every N]
 //! pdq mcu-latency                   # Fig. 3 latency model sweep
 //! ```
 
@@ -42,6 +47,7 @@ use pdq::engine::{standard_menu, EngineBuilder, FloatEngine, VariantKey, Variant
 use pdq::harness::eval_runner::{evaluate, EvalProtocol};
 use pdq::harness::experiments::{self, ExpOptions};
 use pdq::models::zoo;
+use pdq::net::chaos::{ChaosConfig, ChaosListener};
 use pdq::net::loadgen::{self, LoadMode, LoadgenConfig, ShiftSpec};
 use pdq::net::{signal, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
@@ -55,6 +61,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "experiment", about: "regenerate a paper table/figure", usage: "" },
     Command { name: "serve", about: "serving demo, or HTTP front door with --listen", usage: "" },
     Command { name: "loadgen", about: "drive a front door over sockets", usage: "" },
+    Command { name: "chaos-proxy", about: "fault-injecting TCP proxy for chaos tests", usage: "" },
     Command { name: "mcu-latency", about: "Fig. 3 MCU latency model", usage: "" },
 ];
 
@@ -72,6 +79,7 @@ fn main() {
         "experiment" => cmd_experiment(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
         "loadgen" => cmd_loadgen(&args),
+        "chaos-proxy" => cmd_chaos_proxy(&args),
         "mcu-latency" => {
             cmd_mcu();
             Ok(())
@@ -266,6 +274,7 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         let fd_cfg = FrontDoorConfig {
             addr: addr.to_string(),
             conn_threads: args.opt_usize("http-threads", 16),
+            max_connections: args.opt_usize("max-conns", 256),
             ..Default::default()
         };
         let front = FrontDoor::start(Arc::new(server), fd_cfg)
@@ -374,5 +383,42 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     if args.flag("expect-zero-drops") && report.total.dropped > 0 {
         anyhow::bail!("{} requests got no HTTP response", report.total.dropped);
     }
+    // --expect-zero-failed: the chaos smoke's assertion — timing-level fault
+    // injection must never turn into transport/protocol errors.
+    if args.flag("expect-zero-failed") && report.total.failed > 0 {
+        anyhow::bail!("{} requests failed at the transport/protocol level", report.total.failed);
+    }
+    Ok(())
+}
+
+/// `pdq chaos-proxy --target HOST:PORT` — run [`pdq::net::chaos`]'s
+/// fault-injecting proxy as a standalone process until SIGTERM/SIGINT.
+/// CI's chaos smoke points `pdq loadgen` at this, in front of `pdq serve`.
+fn cmd_chaos_proxy(args: &Args) -> anyhow::Result<()> {
+    let target = args
+        .opt("target")
+        .ok_or_else(|| anyhow::anyhow!("--target HOST:PORT is required"))?
+        .to_string();
+    let listen = args.opt_or("listen", "127.0.0.1:0").to_string();
+    let cfg = ChaosConfig {
+        seed: args.opt_u64("seed", 0xC4A0_5EED),
+        max_chunk: args.opt_usize("max-chunk", 7).max(1),
+        would_block_every: args.opt_usize("would-block-every", 5) as u32,
+        latency: Duration::from_micros(args.opt_u64("latency-us", 0)),
+        latency_every: args.opt_usize("latency-every", 0) as u32,
+        disconnect_after: None,
+        disconnect_every: args.opt_usize("disconnect-every", 0) as u32,
+    };
+    signal::install_term_handler();
+    let proxy = ChaosListener::start(&listen, &target, cfg)
+        .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+    println!("pdq-chaos-proxy: listening on {} -> {target}", proxy.url());
+    println!("pdq-chaos-proxy: {cfg:?}");
+    while !signal::term_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let n = proxy.connections();
+    proxy.shutdown();
+    println!("pdq-chaos-proxy: drained. {n} connections tormented.");
     Ok(())
 }

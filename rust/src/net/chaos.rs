@@ -1,0 +1,423 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Two layers, both seeded and fully reproducible:
+//!
+//! - [`ChaosStream`] wraps any `Read + Write` and injects *transport*
+//!   faults: short reads/writes capped at a random chunk size, spurious
+//!   `WouldBlock` ticks on the read side (what a socket read timeout looks
+//!   like), optional latency, and a forced mid-stream disconnect after a
+//!   byte budget. Used in-process around [`super::http::RequestReader`]
+//!   in tests.
+//! - [`ChaosListener`] is a std-only TCP proxy: it accepts connections and
+//!   pumps bytes to a target address through the same fault model, with a
+//!   per-connection seed derived from the base seed and the connection
+//!   index. The CI chaos smoke puts it in front of `pdq serve`.
+//!
+//! The invariant both layers guarantee: **bytes are never corrupted,
+//! reordered or duplicated** — faults are timing- and connection-level
+//! only. Whatever traffic survives must therefore parse cleanly, which is
+//! exactly what the chaos tests assert (zero malformed-input rejections on
+//! the server, zero protocol errors in the load generator).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::prng::Pcg32;
+
+/// Fault-injection knobs. All randomness is drawn from a [`Pcg32`] seeded
+/// with `seed`, so a failing configuration replays exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    /// Cap on bytes moved per read/write; each op moves a uniform
+    /// 1..=`max_chunk` bytes. 1 is the pathological byte-at-a-time peer.
+    pub max_chunk: usize,
+    /// Inject a read-side `WouldBlock` roughly once per this many ops
+    /// (0 = never). Write-side blocking is not injected: blocking-socket
+    /// writers treat `WouldBlock` as fatal, and real kernels don't surface
+    /// it on blocking writes either.
+    pub would_block_every: u32,
+    /// Sleep `latency` on roughly 1-in-`latency_every` ops (0 = never).
+    pub latency: Duration,
+    pub latency_every: u32,
+    /// Kill the stream after this many forwarded bytes: reads return EOF,
+    /// writes return `BrokenPipe` (None = never). For [`ChaosListener`]
+    /// this is chosen per connection via `disconnect_every`.
+    pub disconnect_after: Option<u64>,
+    /// Proxy only: roughly 1-in-N accepted connections get a random
+    /// mid-stream disconnect budget (0 = no forced disconnects).
+    pub disconnect_every: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xC4A0_5EED,
+            max_chunk: 7,
+            would_block_every: 5,
+            latency: Duration::ZERO,
+            latency_every: 0,
+            disconnect_after: None,
+            disconnect_every: 0,
+        }
+    }
+}
+
+/// A `Read + Write` wrapper applying the [`ChaosConfig`] fault model.
+pub struct ChaosStream<S> {
+    inner: S,
+    cfg: ChaosConfig,
+    rng: Pcg32,
+    /// Bytes moved in either direction (drives `disconnect_after`).
+    moved: u64,
+}
+
+impl<S> ChaosStream<S> {
+    pub fn new(inner: S, cfg: ChaosConfig) -> Self {
+        let rng = Pcg32::new(cfg.seed);
+        Self { inner, cfg, rng, moved: 0 }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    fn disconnected(&self) -> bool {
+        matches!(self.cfg.disconnect_after, Some(limit) if self.moved >= limit)
+    }
+
+    fn maybe_sleep(&mut self) {
+        if self.cfg.latency_every > 0 && self.rng.below(self.cfg.latency_every) == 0 {
+            std::thread::sleep(self.cfg.latency);
+        }
+    }
+
+    fn chunk_cap(&mut self, want: usize) -> usize {
+        let cap = 1 + self.rng.below(self.cfg.max_chunk.max(1) as u32) as usize;
+        cap.min(want).max(1)
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        self.maybe_sleep();
+        if self.disconnected() {
+            return Ok(0); // peer-went-away EOF
+        }
+        if self.cfg.would_block_every > 0 && self.rng.below(self.cfg.would_block_every) == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WouldBlock,
+                "injected read timeout",
+            ));
+        }
+        let cap = self.chunk_cap(out.len());
+        let n = self.inner.read(&mut out[..cap])?;
+        self.moved += n as u64;
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        self.maybe_sleep();
+        if self.disconnected() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "injected disconnect",
+            ));
+        }
+        let cap = self.chunk_cap(buf.len());
+        let n = self.inner.write(&buf[..cap])?;
+        self.moved += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A fault-injecting TCP front: listens, dials the target per accepted
+/// connection, and pumps bytes both ways through the [`ChaosConfig`]
+/// model. Each connection gets its own derived seed, so a run is
+/// reproducible end to end from the base seed.
+pub struct ChaosListener {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl ChaosListener {
+    /// Bind `listen_addr` (e.g. `127.0.0.1:0`) and start proxying to
+    /// `target` (a `host:port`).
+    pub fn start(listen_addr: &str, target: &str, cfg: ChaosConfig) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(listen_addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let target = target.to_string();
+        let accept_handle = {
+            let shutdown = Arc::clone(&shutdown);
+            let accepted = Arc::clone(&accepted);
+            std::thread::Builder::new()
+                .name("chaos-accept".into())
+                .spawn(move || accept_loop(listener, &target, cfg, &shutdown, &accepted))
+                .expect("spawn chaos accept thread")
+        };
+        Ok(Self { local_addr, shutdown, accepted, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.local_addr)
+    }
+
+    /// Connections accepted so far.
+    pub fn connections(&self) -> u64 {
+        self.accepted.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, sever all pumps, and join every proxy thread.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosListener {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    target: &str,
+    cfg: ChaosConfig,
+    shutdown: &Arc<AtomicBool>,
+    accepted: &AtomicU64,
+) {
+    let mut pumps: Vec<JoinHandle<()>> = Vec::new();
+    let mut seeder = Pcg32::new(cfg.seed);
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _)) => {
+                let conn_id = accepted.fetch_add(1, Ordering::SeqCst);
+                let server = match TcpStream::connect(target) {
+                    Ok(s) => s,
+                    Err(_) => continue, // target gone; drop the client
+                };
+                // Per-connection fault plan, all derived from the base
+                // seed + connection index so runs replay exactly.
+                let mut conn_cfg = cfg;
+                conn_cfg.seed =
+                    cfg.seed ^ (conn_id.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                conn_cfg.disconnect_after =
+                    if cfg.disconnect_every > 0 && seeder.below(cfg.disconnect_every) == 0 {
+                        Some(64 + seeder.below(8192) as u64)
+                    } else {
+                        None
+                    };
+                // Two pumps per connection; each side gets a distinct rng
+                // stream (xor of direction tag) but shares the fault plan.
+                let mut up_cfg = conn_cfg;
+                up_cfg.seed ^= 0x5E1F_0000_0000_0001;
+                let mut down_cfg = conn_cfg;
+                down_cfg.seed ^= 0x5E1F_0000_0000_0002;
+                // The response direction carries ~the same payload volume;
+                // give it double the budget so a killed connection usually
+                // dies mid-request OR mid-response, not always at the same
+                // phase.
+                down_cfg.disconnect_after = conn_cfg.disconnect_after.map(|b| b * 2);
+                let (c2, s2) = match (client.try_clone(), server.try_clone()) {
+                    (Ok(c), Ok(s)) => (c, s),
+                    _ => continue,
+                };
+                pumps.push(spawn_pump("chaos-up", client, server, up_cfg, shutdown));
+                pumps.push(spawn_pump("chaos-down", s2, c2, down_cfg, shutdown));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Severing both socket halves unblocks the pumps' reads; then join.
+    for h in pumps {
+        let _ = h.join();
+    }
+}
+
+/// One direction of a proxied connection: read from `from` through the
+/// fault model, write everything read to `to`. Exits on EOF, transport
+/// error, the injected disconnect budget, or proxy shutdown (polled on
+/// every read tick, so shutdown never hangs on an idle keep-alive peer).
+fn spawn_pump(
+    name: &str,
+    from: TcpStream,
+    to: TcpStream,
+    cfg: ChaosConfig,
+    shutdown: &Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    let _ = from.set_read_timeout(Some(Duration::from_millis(50)));
+    let shutdown = Arc::clone(shutdown);
+    std::thread::Builder::new()
+        .name(name.into())
+        .spawn(move || {
+            let mut chaos = ChaosStream::new(from, cfg);
+            let mut to = to;
+            let mut buf = [0u8; 4096];
+            loop {
+                if shutdown.load(Ordering::SeqCst) {
+                    let _ = chaos.into_inner().shutdown(Shutdown::Both);
+                    let _ = to.shutdown(Shutdown::Both);
+                    return;
+                }
+                match chaos.read(&mut buf) {
+                    Ok(0) => {
+                        if chaos.disconnected() {
+                            // Forced kill: sever both directions hard.
+                            let _ = chaos.into_inner().shutdown(Shutdown::Both);
+                            let _ = to.shutdown(Shutdown::Both);
+                        } else {
+                            // Clean EOF: half-close so the reverse pump
+                            // can still deliver an in-flight response.
+                            let _ = to.shutdown(Shutdown::Write);
+                        }
+                        return;
+                    }
+                    Ok(n) => {
+                        if to.write_all(&buf[..n]).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        let _ = to.shutdown(Shutdown::Both);
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn chaos pump thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::http::{ReadOutcome, RequestReader, DEFAULT_MAX_BODY_BYTES};
+    use std::io::Cursor;
+
+    fn read_all_chaos(data: &[u8], cfg: ChaosConfig) -> Vec<u8> {
+        let mut s = ChaosStream::new(Cursor::new(data.to_vec()), cfg);
+        let mut out = Vec::new();
+        let mut buf = [0u8; 64];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) => return out,
+                Ok(n) => out.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_survive_chaos_unmodified() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 31 % 251) as u8).collect();
+        let cfg = ChaosConfig { seed: 7, max_chunk: 3, would_block_every: 3, ..Default::default() };
+        assert_eq!(read_all_chaos(&data, cfg), data, "chaos must never corrupt bytes");
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = ChaosConfig { seed: 42, ..Default::default() };
+        let mut a = ChaosStream::new(Cursor::new(vec![0u8; 256]), cfg);
+        let mut b = ChaosStream::new(Cursor::new(vec![0u8; 256]), cfg);
+        let mut buf = [0u8; 64];
+        for _ in 0..64 {
+            let ra = a.read(&mut buf).map_err(|e| e.kind());
+            let rb = b.read(&mut buf).map_err(|e| e.kind());
+            assert_eq!(ra.is_err(), rb.is_err());
+            if let (Ok(na), Ok(nb)) = (ra, rb) {
+                assert_eq!(na, nb, "chunk schedule must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn request_parses_identically_under_chaos() {
+        let raw =
+            b"POST /v1/infer HTTP/1.1\r\nContent-Length: 11\r\n\r\nhello world".to_vec();
+        let plain = {
+            let mut r = RequestReader::new(Cursor::new(raw.clone()), DEFAULT_MAX_BODY_BYTES);
+            let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!() };
+            req
+        };
+        for seed in 0..32u64 {
+            let cfg = ChaosConfig {
+                seed,
+                max_chunk: 2,
+                would_block_every: 2,
+                ..Default::default()
+            };
+            let chaos = ChaosStream::new(Cursor::new(raw.clone()), cfg);
+            let mut r = RequestReader::new(chaos, DEFAULT_MAX_BODY_BYTES);
+            let req = loop {
+                match r.read_request().unwrap() {
+                    ReadOutcome::Request(req) => break req,
+                    ReadOutcome::Timeout { .. } => {}
+                    ReadOutcome::Eof => panic!("premature EOF (seed {seed})"),
+                }
+            };
+            assert_eq!(req.method, plain.method, "seed {seed}");
+            assert_eq!(req.body, plain.body, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn disconnect_budget_cuts_the_stream() {
+        let cfg = ChaosConfig {
+            seed: 3,
+            max_chunk: 8,
+            would_block_every: 0,
+            disconnect_after: Some(10),
+            ..Default::default()
+        };
+        let out = read_all_chaos(&[1u8; 1000], cfg);
+        assert!(out.len() >= 10 && out.len() < 20, "got {} bytes", out.len());
+        // Writes after the budget fail loudly rather than silently vanish.
+        let mut s = ChaosStream::new(Cursor::new(Vec::new()), cfg);
+        s.moved = 10;
+        assert_eq!(
+            s.write(b"x").unwrap_err().kind(),
+            std::io::ErrorKind::BrokenPipe
+        );
+    }
+}

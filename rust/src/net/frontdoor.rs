@@ -27,9 +27,17 @@
 //! The accept loop uses a nonblocking listener polled at 5 ms: accepted
 //! sockets are handed off immediately under load, and the loop notices the
 //! shutdown flag without needing a self-connect wakeup.
+//!
+//! Hostile-client defenses (slowloris and friends): a max-connection cap
+//! answered with `503` + `Retry-After` before any parsing happens, and
+//! per-connection deadlines split by request *stage* — a peer trickling
+//! header bytes gets [`HEAD_TICKS_MAX`] ticks, one mid-body gets
+//! [`BODY_TICKS_MAX`], and an idle keep-alive connection
+//! [`IDLE_TICKS_MAX`]. Malformed input is answered, counted in the
+//! metrics reject-reason breakdown, and the connection closed.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,7 +46,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{Server, SubmitError};
 use crate::engine::EngineError;
 use crate::net::http::{
-    HttpRequest, HttpResponse, ReadOutcome, RequestReader, DEFAULT_MAX_BODY_BYTES,
+    HttpError, HttpRequest, HttpResponse, ReadOutcome, RequestReader, Stage,
+    DEFAULT_MAX_BODY_BYTES,
 };
 use crate::net::signal;
 use crate::net::threadpool::ThreadPool;
@@ -56,6 +65,10 @@ pub struct FrontDoorConfig {
     pub max_body_bytes: usize,
     /// How long a handler waits for the coordinator's reply before `504`.
     pub response_timeout: Duration,
+    /// Cap on concurrently accepted connections (handled + queued for the
+    /// pool). Excess connections get an immediate `503` + `Retry-After`
+    /// so a connection flood cannot queue unboundedly. 0 = unlimited.
+    pub max_connections: usize,
 }
 
 impl Default for FrontDoorConfig {
@@ -65,6 +78,7 @@ impl Default for FrontDoorConfig {
             conn_threads: 16,
             max_body_bytes: DEFAULT_MAX_BODY_BYTES,
             response_timeout: Duration::from_secs(30),
+            max_connections: 256,
         }
     }
 }
@@ -74,8 +88,13 @@ impl Default for FrontDoorConfig {
 const READ_TICK: Duration = Duration::from_millis(500);
 /// Keep-alive idle budget (ticks) before a silent connection is closed.
 const IDLE_TICKS_MAX: u32 = 20;
-/// Budget (ticks) for a peer to finish sending one request.
-const MID_TICKS_MAX: u32 = 20;
+/// Budget (ticks) for a peer to deliver a request *head*. Heads are tiny;
+/// only a slowloris client needs more than 5 s of ticks, so this is the
+/// short leash.
+const HEAD_TICKS_MAX: u32 = 10;
+/// Budget (ticks) for a peer to finish a request *body* once the head is
+/// in — longer, because honest clients upload multi-MB tensor bodies.
+const BODY_TICKS_MAX: u32 = 20;
 
 struct Ctx {
     server: Arc<Server>,
@@ -83,6 +102,19 @@ struct Ctx {
     started: Instant,
     max_body: usize,
     response_timeout: Duration,
+    /// Live connection count (accepted, not yet closed).
+    conns: AtomicUsize,
+    max_conns: usize,
+}
+
+/// RAII decrement of [`Ctx::conns`] — however a handler exits (clean
+/// close, parse error, panic unwinding through the pool), the slot frees.
+struct ConnGuard(Arc<Ctx>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// The running front door.
@@ -104,6 +136,8 @@ impl FrontDoor {
             started: Instant::now(),
             max_body: cfg.max_body_bytes,
             response_timeout: cfg.response_timeout,
+            conns: AtomicUsize::new(0),
+            max_conns: cfg.max_connections,
         });
         let pool = ThreadPool::new("pdq-http", cfg.conn_threads);
         let accept_ctx = Arc::clone(&ctx);
@@ -158,8 +192,28 @@ fn accept_loop(listener: TcpListener, pool: ThreadPool, ctx: Arc<Ctx>) {
     while !ctx.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                let prev = ctx.conns.fetch_add(1, Ordering::SeqCst);
+                if ctx.max_conns > 0 && prev >= ctx.max_conns {
+                    // Flood defense: answer at the door without parsing a
+                    // byte, so a connection storm can't queue unboundedly
+                    // behind the worker pool.
+                    ctx.conns.fetch_sub(1, Ordering::SeqCst);
+                    ctx.server.metrics().on_connection_cap();
+                    let mut s = stream;
+                    let _ = s.set_nonblocking(false);
+                    let _ = HttpResponse::error(503, "connection limit reached")
+                        .header("Retry-After", "1")
+                        .header("Connection", "close")
+                        .write_to(&mut s);
+                    continue;
+                }
+                let guard = ConnGuard(Arc::clone(&ctx));
                 let conn_ctx = Arc::clone(&ctx);
-                if pool.execute(move || handle_connection(stream, conn_ctx)).is_err() {
+                let job = move || {
+                    let _guard = guard;
+                    handle_connection(stream, conn_ctx);
+                };
+                if pool.execute(job).is_err() {
                     break;
                 }
             }
@@ -189,12 +243,14 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
     let mut reader = RequestReader::new(read_half, ctx.max_body);
     let mut out = stream;
     let mut idle_ticks = 0u32;
-    let mut mid_ticks = 0u32;
+    let mut head_ticks = 0u32;
+    let mut body_ticks = 0u32;
     loop {
         match reader.read_request() {
             Ok(ReadOutcome::Request(req)) => {
                 idle_ticks = 0;
-                mid_ticks = 0;
+                head_ticks = 0;
+                body_ticks = 0;
                 let close = req.wants_close() || ctx.shutdown.load(Ordering::SeqCst);
                 let resp = route_request(&req, &ctx)
                     .header("Connection", if close { "close" } else { "keep-alive" });
@@ -211,9 +267,20 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
             }
             Ok(ReadOutcome::Timeout { idle: false }) => {
                 // Peer is mid-request: keep reading (even during drain — an
-                // accepted request gets its response) up to the budget.
-                mid_ticks += 1;
-                if mid_ticks > MID_TICKS_MAX {
+                // accepted request gets its response) up to a stage-scoped
+                // budget. Trickling header bytes (slowloris) gets the short
+                // head leash; an in-flight body upload gets the longer one.
+                let over = match reader.stage() {
+                    Stage::Body => {
+                        body_ticks += 1;
+                        body_ticks > BODY_TICKS_MAX
+                    }
+                    _ => {
+                        head_ticks += 1;
+                        head_ticks > HEAD_TICKS_MAX
+                    }
+                };
+                if over {
                     let _ = HttpResponse::error(408, "timed out mid-request")
                         .header("Connection", "close")
                         .write_to(&mut out);
@@ -221,6 +288,15 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
                 }
             }
             Err(e) => {
+                match &e {
+                    HttpError::BadChunk(_) => ctx.server.metrics().on_bad_chunk(),
+                    HttpError::BadRequest(_) | HttpError::Unsupported(_) => {
+                        ctx.server.metrics().on_parse_error()
+                    }
+                    HttpError::TooLarge(_) => ctx.server.metrics().on_oversized(),
+                    // Abrupt hangups aren't malformed input.
+                    HttpError::UnexpectedEof | HttpError::Io(_) => {}
+                }
                 if let Some(status) = e.status() {
                     let _ = HttpResponse::error(status, &e.to_string())
                         .header("Connection", "close")
@@ -549,5 +625,37 @@ mod tests {
 
         let metrics = fd.shutdown();
         assert_eq!(metrics.responses(), 1);
+    }
+
+    #[test]
+    fn connection_cap_answers_503_at_the_door() {
+        use std::io::Read as _;
+
+        let cfg = FrontDoorConfig { max_connections: 1, ..FrontDoorConfig::default() };
+        let fd = FrontDoor::start(tiny_server(), cfg).unwrap();
+        let addr = fd.local_addr().to_string();
+
+        // First connection: a completed request proves it is accepted and
+        // counted; keep-alive keeps the slot occupied.
+        let mut holder = wire::Client::new(&addr);
+        assert_eq!(holder.get("/healthz").unwrap().status, 200);
+
+        // Second connection is over the cap: rejected before any bytes are
+        // read from it, with a Retry-After hint, then closed.
+        let mut over = std::net::TcpStream::connect(&addr).unwrap();
+        over.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut raw = String::new();
+        over.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 503 "), "got: {raw}");
+        assert!(raw.to_ascii_lowercase().contains("retry-after: 1"), "got: {raw}");
+
+        // The held connection still works: the cap rejects newcomers, it
+        // does not disturb established connections.
+        assert_eq!(holder.get("/healthz").unwrap().status, 200);
+
+        drop(holder);
+        let metrics = fd.shutdown();
+        assert_eq!(metrics.rejected(), 1);
+        assert_eq!(metrics.malformed(), 1, "connection_cap counts as malformed-input reject");
     }
 }

@@ -2,11 +2,18 @@
 //! hyper).
 //!
 //! Scope: exactly what the PDQ front door and load generator need —
-//! request-line + headers + `Content-Length` bodies, keep-alive, and
-//! resumable reads over sockets with a read timeout. Out of scope (rejected
-//! or ignored, never mis-parsed): chunked transfer encoding (`501`),
-//! `Expect: 100-continue` (header ignored; curl falls back after its 1s
-//! expect timeout), trailers, and HTTP/2.
+//! request-line + headers + `Content-Length` *and* chunked bodies,
+//! keep-alive, and resumable reads over sockets with a read timeout. Out of
+//! scope (rejected or ignored, never mis-parsed): transfer codings other
+//! than `chunked` (`501`), `Expect: 100-continue` (header ignored; curl
+//! falls back after its 1s expect timeout), trailer *fields* (the trailer
+//! section is consumed and discarded, capped), and HTTP/2.
+//!
+//! Every limit here is a hostile-input defense: head size, header count,
+//! chunk-size-line length, trailer bytes, and decoded body size are all
+//! capped, and ambiguous framing (`Transfer-Encoding` next to
+//! `Content-Length`, conflicting lengths, `+`-prefixed digits, whitespace
+//! in header names) is rejected outright as request smuggling.
 //!
 //! The parser is *incremental*: [`RequestReader`] accumulates raw bytes and
 //! yields [`ReadOutcome::Timeout`] when the underlying socket read times
@@ -24,6 +31,18 @@ pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Default cap on request bodies (tensors for the tiny zoo are ~12 KB;
 /// 16 MB leaves room for batched payloads without letting a client OOM us).
 pub const DEFAULT_MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Hard cap on the number of header fields in one message. Heads are
+/// already byte-capped, but thousands of 1-byte headers cost an allocation
+/// each — bound the count too.
+pub const MAX_HEADERS: usize = 128;
+
+/// Cap on one chunk-size line (hex digits + optional chunk extension).
+/// 8 hex digits address 4 GiB; 256 bytes is generosity, not need.
+const MAX_CHUNK_LINE_BYTES: usize = 256;
+
+/// Cap on the (discarded) trailer section of a chunked body.
+const MAX_TRAILER_BYTES: usize = 16 * 1024;
 
 /// A parsed HTTP request.
 #[derive(Clone, Debug)]
@@ -59,7 +78,9 @@ impl HttpRequest {
     /// Whether the connection should close after this exchange.
     pub fn wants_close(&self) -> bool {
         match self.header("connection") {
-            Some(v) => v.eq_ignore_ascii_case("close"),
+            // `Connection` is a comma-separated option list; "close" may
+            // ride along with other tokens ("keep-alive, close").
+            Some(v) => v.split(',').any(|t| t.trim().eq_ignore_ascii_case("close")),
             // HTTP/1.1 defaults to keep-alive; anything older closes.
             None => self.version != "HTTP/1.1",
         }
@@ -72,9 +93,13 @@ impl HttpRequest {
 pub enum HttpError {
     /// Malformed request line, header or length field → 400.
     BadRequest(String),
+    /// Malformed chunked-body framing (bad size line, missing CRLF,
+    /// oversized trailers) → 400, but counted separately in metrics.
+    BadChunk(String),
     /// Head or body over the configured limit → 413.
     TooLarge(String),
-    /// Valid HTTP we deliberately don't speak (chunked bodies) → 501.
+    /// Valid HTTP we deliberately don't speak (non-chunked transfer
+    /// codings) → 501.
     Unsupported(String),
     /// Peer closed mid-message.
     UnexpectedEof,
@@ -85,7 +110,7 @@ pub enum HttpError {
 impl HttpError {
     pub fn status(&self) -> Option<u16> {
         match self {
-            HttpError::BadRequest(_) => Some(400),
+            HttpError::BadRequest(_) | HttpError::BadChunk(_) => Some(400),
             HttpError::TooLarge(_) => Some(413),
             HttpError::Unsupported(_) => Some(501),
             HttpError::UnexpectedEof | HttpError::Io(_) => None,
@@ -97,6 +122,7 @@ impl std::fmt::Display for HttpError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::BadChunk(m) => write!(f, "bad chunked body: {m}"),
             HttpError::TooLarge(m) => write!(f, "too large: {m}"),
             HttpError::Unsupported(m) => write!(f, "unsupported: {m}"),
             HttpError::UnexpectedEof => write!(f, "peer closed mid-message"),
@@ -118,9 +144,24 @@ pub enum ReadOutcome {
     Timeout { idle: bool },
 }
 
+/// Where a [`RequestReader`] currently is within a request. Connection
+/// handlers use this to apply *separate* head and body deadlines — a
+/// slowloris client trickling header bytes gets a much shorter leash than
+/// a slow-but-honest client uploading a large tensor body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// No bytes of the next request have arrived.
+    Idle,
+    /// Some head bytes arrived; the `\r\n\r\n` terminator has not.
+    Head,
+    /// The head is complete; body bytes are still being accumulated.
+    Body,
+}
+
 /// Incremental request reader over any `Read` (a `TcpStream` with a read
 /// timeout in production; in-memory fakes in tests). All partial state
-/// lives in `buf`, so a timed-out read can be resumed loss-free.
+/// lives in `buf` (plus the chunked-body decoder cursor), so a timed-out
+/// read can be resumed loss-free.
 pub struct RequestReader<R: Read> {
     r: R,
     buf: Vec<u8>,
@@ -131,11 +172,33 @@ pub struct RequestReader<R: Read> {
     scanned: usize,
     /// Cached head end once found — body accumulation never re-scans.
     head_end: Option<usize>,
+    /// In-progress chunked-body decode; `buf` is append-only while this is
+    /// `Some`, so the decoder's cursor into `buf[head_len..]` stays valid
+    /// across resumed reads.
+    chunked: Option<ChunkDecoder>,
 }
 
 impl<R: Read> RequestReader<R> {
     pub fn new(r: R, max_body: usize) -> Self {
-        Self { r, buf: Vec::with_capacity(4096), max_body, scanned: 0, head_end: None }
+        Self {
+            r,
+            buf: Vec::with_capacity(4096),
+            max_body,
+            scanned: 0,
+            head_end: None,
+            chunked: None,
+        }
+    }
+
+    /// Which part of the current request the reader is waiting on.
+    pub fn stage(&self) -> Stage {
+        if self.head_end.is_some() {
+            Stage::Body
+        } else if self.buf.is_empty() {
+            Stage::Idle
+        } else {
+            Stage::Head
+        }
     }
 
     /// Read (or resume reading) one request.
@@ -153,31 +216,56 @@ impl<R: Read> RequestReader<R> {
                 // Head is complete; re-parsing it on each resume is cheap
                 // (heads are ≤ 16 KB) and keeps the resume state small.
                 let (method, path, query, version, headers) = parse_head(&self.buf[..head_len])?;
-                if headers.iter().any(|(k, _)| k == "transfer-encoding") {
-                    return Err(HttpError::Unsupported("chunked bodies not supported".into()));
-                }
-                let clen = content_length(&headers)?;
-                if clen > self.max_body {
-                    return Err(HttpError::TooLarge(format!(
-                        "body of {clen} bytes exceeds limit {}",
-                        self.max_body
-                    )));
-                }
-                if self.buf.len() >= head_len + clen {
-                    let body = self.buf[head_len..head_len + clen].to_vec();
-                    self.buf.drain(..head_len + clen);
-                    // Any leftover bytes belong to a pipelined next request;
-                    // rescanning them from 0 is cheap (they are ≤ one head).
-                    self.scanned = 0;
-                    self.head_end = None;
-                    return Ok(ReadOutcome::Request(HttpRequest {
-                        method,
-                        path,
-                        query,
-                        version,
-                        headers,
-                        body,
-                    }));
+                if transfer_encoding_is_chunked(&headers)? {
+                    // RFC 9112 §6.3: a message carrying both framings is
+                    // the classic smuggling desync — reject, don't pick one.
+                    if headers.iter().any(|(k, _)| k == "content-length") {
+                        return Err(HttpError::BadRequest(
+                            "transfer-encoding alongside content-length".into(),
+                        ));
+                    }
+                    let max_body = self.max_body;
+                    let dec = self.chunked.get_or_insert_with(|| ChunkDecoder::new(max_body));
+                    if dec.feed(&self.buf[head_len..])? {
+                        let dec = self.chunked.take().expect("decoder just fed");
+                        self.buf.drain(..head_len + dec.consumed);
+                        self.scanned = 0;
+                        self.head_end = None;
+                        return Ok(ReadOutcome::Request(HttpRequest {
+                            method,
+                            path,
+                            query,
+                            version,
+                            headers,
+                            body: dec.body,
+                        }));
+                    }
+                    // Chunk framing incomplete — fall through to fill.
+                } else {
+                    let clen = content_length(&headers)?;
+                    if clen > self.max_body {
+                        return Err(HttpError::TooLarge(format!(
+                            "body of {clen} bytes exceeds limit {}",
+                            self.max_body
+                        )));
+                    }
+                    if self.buf.len() >= head_len + clen {
+                        let body = self.buf[head_len..head_len + clen].to_vec();
+                        self.buf.drain(..head_len + clen);
+                        // Any leftover bytes belong to a pipelined next
+                        // request; rescanning them from 0 is cheap (they
+                        // are ≤ one head).
+                        self.scanned = 0;
+                        self.head_end = None;
+                        return Ok(ReadOutcome::Request(HttpRequest {
+                            method,
+                            path,
+                            query,
+                            version,
+                            headers,
+                            body,
+                        }));
+                    }
                 }
             } else if self.buf.len() > MAX_HEAD_BYTES {
                 return Err(HttpError::TooLarge("request head exceeds 16 KiB".into()));
@@ -196,6 +284,160 @@ impl<R: Read> RequestReader<R> {
             }
         }
     }
+}
+
+/// `Transfer-Encoding` handling: absent → `Content-Length` framing;
+/// exactly `chunked` → chunked framing; anything else (gzip, coding
+/// chains, repeated headers) is valid HTTP this server doesn't speak.
+fn transfer_encoding_is_chunked(headers: &[(String, String)]) -> Result<bool, HttpError> {
+    let mut te = headers.iter().filter(|(k, _)| k == "transfer-encoding");
+    let Some((_, v)) = te.next() else { return Ok(false) };
+    if te.next().is_some() {
+        return Err(HttpError::BadRequest("repeated transfer-encoding header".into()));
+    }
+    if v.eq_ignore_ascii_case("chunked") {
+        Ok(true)
+    } else {
+        Err(HttpError::Unsupported(format!("transfer-encoding {v:?}")))
+    }
+}
+
+/// Incremental chunked-body decoder (RFC 9112 §7.1). `feed` is called with
+/// the full raw slice after the head every time new bytes arrive; the
+/// `consumed` cursor makes each call O(new bytes). Chunk extensions
+/// (after `;`) are ignored; the trailer section is consumed, discarded and
+/// byte-capped.
+struct ChunkDecoder {
+    state: ChunkState,
+    /// Decoded body bytes.
+    body: Vec<u8>,
+    /// Raw bytes consumed, as an offset past the head.
+    consumed: usize,
+    trailer_bytes: usize,
+    max_body: usize,
+}
+
+#[derive(Clone, Copy)]
+enum ChunkState {
+    /// Accumulating a `size[;ext]\r\n` line.
+    Size,
+    /// Copying chunk data.
+    Data { remaining: usize },
+    /// Expecting the `\r\n` that terminates a data chunk.
+    DataEnd,
+    /// Consuming (and discarding) trailer lines until the blank one.
+    Trailers,
+}
+
+impl ChunkDecoder {
+    fn new(max_body: usize) -> Self {
+        Self { state: ChunkState::Size, body: Vec::new(), consumed: 0, trailer_bytes: 0, max_body }
+    }
+
+    /// Advance over `raw` (everything after the head). Returns `Ok(true)`
+    /// once the terminating chunk and trailer section are fully consumed.
+    fn feed(&mut self, raw: &[u8]) -> Result<bool, HttpError> {
+        loop {
+            let rest = &raw[self.consumed..];
+            match self.state {
+                ChunkState::Size => match find_crlf(rest) {
+                    None => {
+                        if rest.len() > MAX_CHUNK_LINE_BYTES {
+                            return Err(HttpError::BadChunk("chunk size line too long".into()));
+                        }
+                        return Ok(false);
+                    }
+                    Some(i) => {
+                        if i > MAX_CHUNK_LINE_BYTES {
+                            return Err(HttpError::BadChunk("chunk size line too long".into()));
+                        }
+                        let size = parse_chunk_size(&rest[..i])?;
+                        self.consumed += i + 2;
+                        if size == 0 {
+                            self.state = ChunkState::Trailers;
+                        } else if self.body.len() + size > self.max_body {
+                            return Err(HttpError::TooLarge(format!(
+                                "chunked body exceeds limit {}",
+                                self.max_body
+                            )));
+                        } else {
+                            self.state = ChunkState::Data { remaining: size };
+                        }
+                    }
+                },
+                ChunkState::Data { remaining } => {
+                    let take = remaining.min(rest.len());
+                    self.body.extend_from_slice(&rest[..take]);
+                    self.consumed += take;
+                    if take == remaining {
+                        self.state = ChunkState::DataEnd;
+                    } else {
+                        self.state = ChunkState::Data { remaining: remaining - take };
+                        return Ok(false);
+                    }
+                }
+                ChunkState::DataEnd => {
+                    if rest.len() < 2 {
+                        return Ok(false);
+                    }
+                    if &rest[..2] != b"\r\n" {
+                        return Err(HttpError::BadChunk(
+                            "chunk data not CRLF-terminated".into(),
+                        ));
+                    }
+                    self.consumed += 2;
+                    self.state = ChunkState::Size;
+                }
+                ChunkState::Trailers => match find_crlf(rest) {
+                    None => {
+                        if rest.len() + self.trailer_bytes > MAX_TRAILER_BYTES {
+                            return Err(HttpError::BadChunk("trailer section too large".into()));
+                        }
+                        return Ok(false);
+                    }
+                    Some(i) => {
+                        self.trailer_bytes += i + 2;
+                        if self.trailer_bytes > MAX_TRAILER_BYTES {
+                            return Err(HttpError::BadChunk("trailer section too large".into()));
+                        }
+                        self.consumed += i + 2;
+                        if i == 0 {
+                            return Ok(true);
+                        }
+                    }
+                },
+            }
+        }
+    }
+}
+
+/// Parse one chunk-size line (`1a` or `1a;name=value`): pure hex digits,
+/// overflow-checked. Hostile sizes like `ffffffffffffffff1` must fail the
+/// arithmetic, not wrap into a small allocation.
+fn parse_chunk_size(line: &[u8]) -> Result<usize, HttpError> {
+    let size_part = match line.iter().position(|&b| b == b';') {
+        Some(i) => &line[..i],
+        None => line,
+    };
+    if size_part.is_empty() || !size_part.iter().all(|b| b.is_ascii_hexdigit()) {
+        return Err(HttpError::BadChunk(format!(
+            "bad chunk size {:?}",
+            String::from_utf8_lossy(line)
+        )));
+    }
+    let mut size: usize = 0;
+    for &b in size_part {
+        size = size
+            .checked_mul(16)
+            .and_then(|s| s.checked_add((b as char).to_digit(16).unwrap() as usize))
+            .ok_or_else(|| HttpError::BadChunk("chunk size overflows".into()))?;
+    }
+    Ok(size)
+}
+
+/// Index of the first `\r\n` in `buf`, if any.
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
 }
 
 /// One read step, shared by the request and response readers so buffer /
@@ -278,10 +520,20 @@ fn parse_header_fields<'a>(
         if line.is_empty() {
             break; // blank line before the (already-excluded) body
         }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::TooLarge(format!("more than {MAX_HEADERS} headers")));
+        }
         let (k, v) = line
             .split_once(':')
             .ok_or_else(|| HttpError::BadRequest(format!("malformed header {line:?}")))?;
-        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        // RFC 9112 §5.1: whitespace between the field name and ':' MUST be
+        // rejected — trimming it ("Content-Length : 5") is a smuggling
+        // vector against intermediaries that parse more strictly. Field
+        // names are tokens, so any embedded whitespace is malformed.
+        if k.is_empty() || k.bytes().any(|b| b.is_ascii_whitespace()) {
+            return Err(HttpError::BadRequest(format!("malformed header name {k:?}")));
+        }
+        headers.push((k.to_ascii_lowercase(), v.trim().to_string()));
     }
     Ok(headers)
 }
@@ -290,6 +542,12 @@ fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
     let mut found: Option<usize> = None;
     for (k, v) in headers {
         if k == "content-length" {
+            // RFC 9112 §6.2: the value is 1*DIGIT. `usize::from_str`
+            // accepts a leading '+' ("+5"), which lenient/strict parser
+            // pairs can disagree on — validate digits ourselves.
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(HttpError::BadRequest(format!("bad content-length {v:?}")));
+            }
             let n = v
                 .parse::<usize>()
                 .map_err(|_| HttpError::BadRequest(format!("bad content-length {v:?}")))?;
@@ -417,6 +675,11 @@ pub fn read_response<R: Read>(r: &mut R, max_body: usize) -> Result<HttpResponse
                 .and_then(|s| s.parse().ok())
                 .ok_or_else(|| HttpError::BadRequest("bad status code".into()))?;
             let headers = parse_header_fields(lines)?;
+            // PDQ servers always frame responses with Content-Length; a
+            // chunked response means we're talking to something else.
+            if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+                return Err(HttpError::Unsupported("chunked response bodies".into()));
+            }
             let clen = content_length(&headers)?;
             if clen > max_body {
                 return Err(HttpError::TooLarge(format!("response body {clen} bytes")));
@@ -537,8 +800,9 @@ mod tests {
             reader(b"GET / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n").read_request(),
             Err(HttpError::BadRequest(_))
         ));
+        // Chunked is now decoded; other transfer codings stay 501.
         assert!(matches!(
-            reader(b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").read_request(),
+            reader(b"GET / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n").read_request(),
             Err(HttpError::Unsupported(_))
         ));
         // Conflicting Content-Length values are a smuggling vector: reject.
@@ -567,6 +831,172 @@ mod tests {
     fn truncated_request_is_unexpected_eof() {
         let mut r = reader(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
         assert!(matches!(r.read_request(), Err(HttpError::UnexpectedEof)));
+    }
+
+    #[test]
+    fn rejects_smuggling_shaped_heads() {
+        // '+'-prefixed Content-Length parses under usize::from_str but is
+        // not 1*DIGIT; strict/lenient parser pairs desync on it.
+        assert!(matches!(
+            reader(b"POST / HTTP/1.1\r\nContent-Length: +5\r\n\r\nhello").read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        // Whitespace before the colon must not be trimmed into validity.
+        assert!(matches!(
+            reader(b"POST / HTTP/1.1\r\nContent-Length : 5\r\n\r\nhello").read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        // Both framings present: the classic request-smuggling desync.
+        assert!(matches!(
+            reader(
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 5\r\n\r\n0\r\n\r\n"
+            )
+            .read_request(),
+            Err(HttpError::BadRequest(_))
+        ));
+        // Header-count bomb: many tiny headers within the byte cap.
+        let mut bomb = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            bomb.push_str(&format!("h{i}: x\r\n"));
+        }
+        bomb.push_str("\r\n");
+        assert!(matches!(
+            reader(bomb.as_bytes()).read_request(),
+            Err(HttpError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn chunked_body_decodes_and_preserves_pipelining() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nabcd\r\n3;ext=ignored\r\nefg\r\n0\r\nX-Trailer: dropped\r\n\r\n\
+                    GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = reader(raw);
+        let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcdefg");
+        // The pipelined follow-up after the trailer section still parses.
+        let ReadOutcome::Request(next) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(next.method, "GET");
+        assert!(next.wants_close());
+    }
+
+    #[test]
+    fn chunked_body_equals_content_length_twin() {
+        let body = b"the quick brown fox";
+        let cl = format!(
+            "POST /v1/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            std::str::from_utf8(body).unwrap()
+        );
+        let chunked = format!(
+            "POST /v1/infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+             3\r\nthe\r\n{:x}\r\n{}\r\n0\r\n\r\n",
+            body.len() - 3,
+            std::str::from_utf8(&body[3..]).unwrap()
+        );
+        let ReadOutcome::Request(a) = reader(cl.as_bytes()).read_request().unwrap() else {
+            panic!()
+        };
+        let ReadOutcome::Request(b) = reader(chunked.as_bytes()).read_request().unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.body, b.body);
+        assert_eq!(a.body, body);
+    }
+
+    #[test]
+    fn chunked_resumes_across_timeouts() {
+        // Frames split at the nastiest boundaries: mid-size-line, mid-data,
+        // mid-trailer. The decoder cursor must survive every resume.
+        let s = Stutter {
+            chunks: vec![
+                Some(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec()),
+                None,
+                Some(b"4\r".to_vec()),
+                None,
+                Some(b"\nab".to_vec()),
+                None,
+                Some(b"cd\r\n0\r\n".to_vec()),
+                None,
+                Some(b"\r\n".to_vec()),
+            ],
+            i: 0,
+        };
+        let mut r = RequestReader::new(s, DEFAULT_MAX_BODY_BYTES);
+        let req = loop {
+            match r.read_request().unwrap() {
+                ReadOutcome::Request(req) => break req,
+                ReadOutcome::Timeout { .. } => continue,
+                ReadOutcome::Eof => panic!("premature EOF"),
+            }
+        };
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn chunked_hostile_framing_rejected() {
+        let head = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        // Non-hex size line.
+        assert!(matches!(
+            reader(format!("{head}zz\r\nabcd\r\n0\r\n\r\n").as_bytes()).read_request(),
+            Err(HttpError::BadChunk(_))
+        ));
+        // Size overflows usize: must fail checked arithmetic, not wrap.
+        assert!(matches!(
+            reader(format!("{head}ffffffffffffffff1\r\n").as_bytes()).read_request(),
+            Err(HttpError::BadChunk(_))
+        ));
+        // Chunk data not CRLF-terminated.
+        assert!(matches!(
+            reader(format!("{head}3\r\nabcXX0\r\n\r\n").as_bytes()).read_request(),
+            Err(HttpError::BadChunk(_))
+        ));
+        // Size line padded past the line cap.
+        let long = format!("{head}1{}\r\na\r\n0\r\n\r\n", ";e".repeat(300));
+        assert!(matches!(
+            reader(long.as_bytes()).read_request(),
+            Err(HttpError::BadChunk(_))
+        ));
+        // Decoded body over the configured cap → 413, before buffering it.
+        let mut small = RequestReader::new(
+            Cursor::new(format!("{head}ff\r\n").into_bytes()),
+            10,
+        );
+        assert!(matches!(small.read_request(), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn connection_close_in_option_list() {
+        let mut r = reader(b"GET / HTTP/1.1\r\nConnection: keep-alive, Close\r\n\r\n");
+        let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!() };
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn stage_tracks_head_and_body_progress() {
+        let s = Stutter {
+            chunks: vec![
+                None,
+                Some(b"POST / HTTP/1.1\r\nContent-".to_vec()),
+                None,
+                Some(b"Length: 3\r\n\r\n".to_vec()),
+                None,
+                Some(b"abc".to_vec()),
+            ],
+            i: 0,
+        };
+        let mut r = RequestReader::new(s, DEFAULT_MAX_BODY_BYTES);
+        assert_eq!(r.stage(), Stage::Idle);
+        r.read_request().unwrap(); // idle timeout
+        assert_eq!(r.stage(), Stage::Idle);
+        r.read_request().unwrap(); // timeout mid-head
+        assert_eq!(r.stage(), Stage::Head);
+        r.read_request().unwrap(); // timeout with head done, body pending
+        assert_eq!(r.stage(), Stage::Body);
+        let ReadOutcome::Request(req) = r.read_request().unwrap() else { panic!() };
+        assert_eq!(req.body, b"abc");
+        assert_eq!(r.stage(), Stage::Idle);
     }
 
     #[test]

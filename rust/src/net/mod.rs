@@ -16,15 +16,22 @@
 //! ```
 //!
 //! - [`http`] — incremental request parser + response writer (keep-alive,
-//!   read-timeout resumption; chunked encoding deliberately out of scope).
+//!   read-timeout resumption, chunked transfer-encoding decode with hard
+//!   limits; other transfer codings answer 501).
 //! - [`threadpool`] — fixed pool with drain-on-join semantics.
 //! - [`admission`] — the bounded in-flight gate and its RAII [`admission::Permit`].
-//! - [`wire`] — the `/v1/infer` binary tensor protocol + blocking client.
-//! - [`frontdoor`] — listener, routing, graceful drain (SIGTERM-aware).
+//! - [`wire`] — the `/v1/infer` binary tensor protocol + blocking client
+//!   with deadline-budgeted, jittered retries.
+//! - [`frontdoor`] — listener, routing, graceful drain (SIGTERM-aware),
+//!   slowloris deadlines and a max-connection cap.
 //! - [`signal`] — SIGTERM/SIGINT → shutdown flag, via libc `signal(2)`.
 //! - [`loadgen`] — open/closed-loop traffic generator → `BENCH_serving.json`.
+//! - [`chaos`] — deterministic fault-injecting stream/listener (short
+//!   reads, `WouldBlock` ticks, latency, mid-stream disconnects) for
+//!   robustness tests; never corrupts bytes.
 
 pub mod admission;
+pub mod chaos;
 pub mod frontdoor;
 pub mod http;
 pub mod loadgen;

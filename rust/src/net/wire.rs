@@ -20,12 +20,13 @@
 
 use std::io::Write;
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::engine::VariantKey;
 use crate::net::http::{read_response, HttpResponseParts, DEFAULT_MAX_BODY_BYTES};
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
+use crate::util::prng::Pcg32;
 
 /// Content type for the binary infer bodies.
 pub const TENSOR_CONTENT_TYPE: &str = "application/x-pdq-tensor";
@@ -186,13 +187,74 @@ pub enum InferOutcome {
     Failed { status: u16, error: String },
 }
 
+/// How hard the client fights transient failures before surfacing them.
+///
+/// Retries are governed by a per-request *deadline budget*, not an attempt
+/// count: each retry sleeps a capped exponential backoff with seeded
+/// jitter, and the loop stops as soon as the budget would be exceeded.
+/// A zero budget disables retries entirely (one attempt, fail fast).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total wall-clock budget for one logical request, attempts + sleeps.
+    pub budget: Duration,
+    /// First backoff sleep; doubles per attempt up to `max_backoff`.
+    pub base_backoff: Duration,
+    /// Ceiling on a single backoff sleep (before jitter).
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(3),
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// One attempt, no retries, no sleeps.
+    pub fn none() -> Self {
+        Self { budget: Duration::ZERO, ..Self::default() }
+    }
+}
+
+/// Why one attempt failed — decides whether a retry is safe.
+enum SendFailure {
+    /// Dialing failed: no bytes reached the server, always safe to retry.
+    Connect(String),
+    /// The exchange died after bytes were sent. Only safe to retry for
+    /// idempotent methods — the server may have executed the request.
+    Exchange(String),
+}
+
+impl SendFailure {
+    fn into_msg(self) -> String {
+        match self {
+            SendFailure::Connect(m) | SendFailure::Exchange(m) => m,
+        }
+    }
+}
+
 /// A blocking keep-alive HTTP client (load generator, tests, examples).
-/// One reconnect retry per request: if the pooled connection died (server
-/// closed it on drain or idle timeout), we dial once more before giving up.
+///
+/// Transient-failure handling: connect failures and dead pooled
+/// connections on idempotent methods are retried under a
+/// [`RetryPolicy`] deadline budget with capped exponential backoff and
+/// deterministic (address-seeded) jitter. POST bodies are never blindly
+/// resent after bytes hit the wire — see [`Client::request`] — but
+/// [`Client::post_infer_retrying`] safely retries the *rejections* the
+/// server explicitly marks retryable (429 shed / 503 drain).
 pub struct Client {
     addr: String,
     stream: Option<TcpStream>,
     timeout: Duration,
+    retry: RetryPolicy,
+    /// Jitter source. Seeded from the address so two clients hammering
+    /// the same server still decorrelate, yet a given test run is
+    /// reproducible.
+    rng: Pcg32,
     /// When the pooled connection last completed an exchange.
     last_used: Option<std::time::Instant>,
 }
@@ -211,7 +273,33 @@ impl Client {
     }
 
     pub fn with_timeout(addr: &str, timeout: Duration) -> Self {
-        Self { addr: addr.to_string(), stream: None, timeout, last_used: None }
+        // FNV-1a over the address: a stable, spread-out jitter seed.
+        let seed = addr.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+        });
+        Self {
+            addr: addr.to_string(),
+            stream: None,
+            timeout,
+            retry: RetryPolicy::default(),
+            rng: Pcg32::new(seed),
+            last_used: None,
+        }
+    }
+
+    /// Replace the retry policy (builder-style).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Backoff for the given attempt number (0-based): capped exponential
+    /// with multiplicative jitter in [0.5, 1.0] so a fleet of retrying
+    /// clients doesn't re-dogpile the server in lockstep.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let base = self.retry.base_backoff.as_secs_f64() * 2f64.powi(attempt.min(16) as i32);
+        let capped = base.min(self.retry.max_backoff.as_secs_f64());
+        Duration::from_secs_f64(capped * (0.5 + 0.5 * self.rng.uniform() as f64))
     }
 
     fn connect(&mut self) -> std::io::Result<&mut TcpStream> {
@@ -235,9 +323,12 @@ impl Client {
         path: &str,
         content_type: &str,
         body: &[u8],
-    ) -> Result<HttpResponseParts, String> {
+    ) -> Result<HttpResponseParts, SendFailure> {
         let addr = self.addr.clone();
-        let stream = self.connect().map_err(|e| format!("connect {addr}: {e}"))?;
+        let stream = match self.connect() {
+            Ok(s) => s,
+            Err(e) => return Err(SendFailure::Connect(format!("connect {addr}: {e}"))),
+        };
         let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
         if !body.is_empty() {
             head.push_str(&format!("Content-Type: {content_type}\r\n"));
@@ -250,7 +341,7 @@ impl Client {
         })();
         if let Err(e) = io {
             self.stream = None;
-            return Err(format!("send: {e}"));
+            return Err(SendFailure::Exchange(format!("send: {e}")));
         }
         match read_response(self.stream.as_mut().unwrap(), DEFAULT_MAX_BODY_BYTES) {
             Ok(parts) => {
@@ -266,16 +357,18 @@ impl Client {
             }
             Err(e) => {
                 self.stream = None;
-                Err(format!("recv: {e}"))
+                Err(SendFailure::Exchange(format!("recv: {e}")))
             }
         }
     }
 
-    /// One HTTP exchange, with a single reconnect retry when a *reused*
-    /// connection fails on an idempotent method. POSTs are never retried
-    /// automatically: a pooled connection can die after the server already
-    /// received and executed the request, and a blind resend would
-    /// double-submit the inference.
+    /// One HTTP exchange, retried under the [`RetryPolicy`] deadline
+    /// budget. Connect failures (no bytes sent yet) are retried for any
+    /// method; exchange failures only for idempotent methods (GET/HEAD).
+    /// POST bodies are never blindly resent after bytes hit the wire: a
+    /// pooled connection can die after the server already received and
+    /// executed the request, and a resend would double-submit the
+    /// inference.
     pub fn request(
         &mut self,
         method: &str,
@@ -283,14 +376,22 @@ impl Client {
         content_type: &str,
         body: &[u8],
     ) -> Result<HttpResponseParts, String> {
-        let had_pooled_conn = self.stream.is_some();
+        let deadline = Instant::now() + self.retry.budget;
         let idempotent = matches!(method, "GET" | "HEAD");
-        match self.send_once(method, path, content_type, body) {
-            Ok(p) => Ok(p),
-            Err(_) if had_pooled_conn && idempotent => {
-                self.send_once(method, path, content_type, body)
+        let mut attempt = 0u32;
+        loop {
+            match self.send_once(method, path, content_type, body) {
+                Ok(p) => return Ok(p),
+                Err(f) => {
+                    let retryable = matches!(f, SendFailure::Connect(_)) || idempotent;
+                    let sleep = self.backoff(attempt);
+                    if !retryable || Instant::now() + sleep > deadline {
+                        return Err(f.into_msg());
+                    }
+                    std::thread::sleep(sleep);
+                    attempt += 1;
+                }
             }
-            Err(e) => Err(e),
         }
     }
 
@@ -326,6 +427,40 @@ impl Client {
                     .unwrap_or_else(|| format!("http {status}"));
                 Ok(InferOutcome::Failed { status, error })
             }
+        }
+    }
+
+    /// [`Client::post_infer`], additionally retrying the rejections the
+    /// server explicitly marks retryable — 429 overload sheds (sleeping
+    /// at least the server's own retry hint) and 503 drain/connection-cap
+    /// answers — within the [`RetryPolicy`] budget. Transport-level POST
+    /// failures still fail fast (see [`Client::request`]); this only
+    /// loops on *answered* requests, which can never double-submit. When
+    /// the budget runs out, the final outcome is returned as-is so the
+    /// caller still sees what the server last said.
+    pub fn post_infer_retrying(
+        &mut self,
+        variant: &VariantKey,
+        id: u64,
+        image: &Tensor<f32>,
+    ) -> Result<InferOutcome, String> {
+        let deadline = Instant::now() + self.retry.budget;
+        let mut attempt = 0u32;
+        loop {
+            let outcome = self.post_infer(variant, id, image)?;
+            let hint = match &outcome {
+                InferOutcome::Rejected { retry_after_ms } => {
+                    Duration::from_millis(*retry_after_ms)
+                }
+                InferOutcome::Failed { status: 503, .. } => Duration::ZERO,
+                _ => return Ok(outcome),
+            };
+            let sleep = self.backoff(attempt).max(hint);
+            if Instant::now() + sleep > deadline {
+                return Ok(outcome);
+            }
+            std::thread::sleep(sleep);
+            attempt += 1;
         }
     }
 }
@@ -397,6 +532,67 @@ mod tests {
         // Zero-sized and empty shapes.
         assert!(decode_infer_request(&hostile(&[0.0, 4.0])).is_err());
         assert!(decode_infer_request(&hostile(&[])).is_err());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_jittered() {
+        let mut a = Client::new("127.0.0.1:1");
+        let mut b = Client::new("127.0.0.1:1");
+        let sa: Vec<Duration> = (0..10).map(|i| a.backoff(i)).collect();
+        let sb: Vec<Duration> = (0..10).map(|i| b.backoff(i)).collect();
+        assert_eq!(sa, sb, "same address seeds the same jitter schedule");
+
+        let p = RetryPolicy::default();
+        for (i, d) in sa.iter().enumerate() {
+            let ideal = (p.base_backoff.as_secs_f64() * 2f64.powi(i as i32))
+                .min(p.max_backoff.as_secs_f64());
+            let got = d.as_secs_f64();
+            assert!(
+                got >= 0.5 * ideal - 1e-9 && got <= ideal + 1e-9,
+                "attempt {i}: {got}s outside [{}, {ideal}]",
+                0.5 * ideal
+            );
+        }
+
+        let mut c = Client::new("127.0.0.1:2");
+        let sc: Vec<Duration> = (0..10).map(|i| c.backoff(i)).collect();
+        assert_ne!(sa, sc, "different address, different jitter phase");
+    }
+
+    #[test]
+    fn zero_budget_fails_fast_on_dead_server() {
+        // Bind-then-drop yields a loopback port with no listener.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut c = Client::new(&dead).with_retry(RetryPolicy::none());
+        let t0 = Instant::now();
+        assert!(c.get("/healthz").is_err());
+        assert!(t0.elapsed() < Duration::from_secs(2), "no retry loop on a zero budget");
+    }
+
+    #[test]
+    fn connect_failures_retry_within_budget_even_for_post() {
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let policy = RetryPolicy {
+            budget: Duration::from_millis(150),
+            base_backoff: Duration::from_millis(30),
+            max_backoff: Duration::from_millis(60),
+        };
+        let mut c = Client::new(&dead).with_retry(policy);
+        let t0 = Instant::now();
+        // Connect-phase failures never put bytes on the wire, so even a
+        // POST is safe to redial until the budget runs out.
+        assert!(c.request("POST", "/v1/infer", TENSOR_CONTENT_TYPE, b"x").is_err());
+        assert!(
+            t0.elapsed() >= Duration::from_millis(15),
+            "expected at least one backoff sleep, got {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! A std-only deterministic fuzzing harness for the hostile-input
+//! surfaces of the serving stack.
+//!
+//! Three layers:
+//!
+//! - **Byte mutators + grammar-aware generators** — each generator emits
+//!   a plausible-but-twisted input (an HTTP request with a corrupted
+//!   framing header, a wire body with attacker-shaped dims, a deeply
+//!   nested JSON document), and [`run_bytes`] layers 0–3 random byte
+//!   mutations on top before handing it to a target. Valid-ish inputs
+//!   penetrate far deeper than pure byte noise.
+//! - **Targets** — one per parser: [`target_http_request`],
+//!   [`target_wire_preamble`], [`target_variant_wire`], [`target_json`],
+//!   [`target_shape`]. A target panics on any violated invariant; merely
+//!   returning an error is the *correct* response to hostile input.
+//!   Where possible the target is differential: the HTTP target parses
+//!   every input twice — one whole read vs. randomly stuttered reads
+//!   with `WouldBlock` injections — and asserts identical outcomes, so
+//!   resumption bugs surface without a reference implementation.
+//! - **Structure-aware differential targets** — [`diff_int8_kernels`]
+//!   and [`diff_int8_graphs`] drive random kernels/graphs through the
+//!   fast int8 path and its scalar CMSIS oracle and assert bit-exact
+//!   agreement, extending `rust/tests/int8_parity.rs` with open-ended
+//!   seeded search.
+//!
+//! Everything is seeded [`Pcg32`]: a failure reproduces from
+//! `(seed, case index)` alone, and CI can run a fixed budget as a plain
+//! `cargo test` with no external fuzzing engine. The same targets are
+//! wrapped by the `fuzz/` cargo-fuzz tree for coverage-guided runs on
+//! machines that have libFuzzer. Every crash or mis-parse found here
+//! gets a named replay in `rust/tests/fuzz_regressions.rs`.
+
+use std::io::Read;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::cmsis::{convolve_s8, dwconv_s8, fast, fully_connected_s8, Requant};
+use crate::engine::{VariantKey, VariantSpec};
+use crate::net::http::{ReadOutcome, RequestReader};
+use crate::net::wire;
+use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
+use crate::nn::{Graph, Int8Executor, QuantMode};
+use crate::quant::Granularity;
+use crate::tensor::{ConvGeom, Shape, Tensor};
+use crate::util::json::Json;
+use crate::util::Pcg32;
+
+// ---- driver ----------------------------------------------------------------
+
+/// FNV-1a — a cheap stable hash for deriving per-input seeds.
+fn fnv64(data: &[u8]) -> u64 {
+    data.iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Apply one random byte-level mutation in place.
+pub fn mutate(rng: &mut Pcg32, data: &mut Vec<u8>) {
+    if data.is_empty() {
+        data.push(rng.next_u32() as u8);
+        return;
+    }
+    let i = rng.below(data.len() as u32) as usize;
+    match rng.below(6) {
+        // Bit flip.
+        0 => data[i] ^= 1 << rng.below(8),
+        // Overwrite with an interesting byte (framing chars, extremes).
+        1 => data[i] = *rng.choice(&[0u8, 0xFF, b'\r', b'\n', b' ', b':', b'0', b'9', 0x80]),
+        // Insert a small random run.
+        2 => {
+            let run: Vec<u8> = (0..1 + rng.below(4)).map(|_| rng.next_u32() as u8).collect();
+            data.splice(i..i, run);
+        }
+        // Delete a short range.
+        3 => {
+            let end = (i + 1 + rng.below(8) as usize).min(data.len());
+            data.drain(i..end);
+        }
+        // Duplicate a short range (repeated headers, doubled chunks).
+        4 => {
+            let end = (i + 1 + rng.below(16) as usize).min(data.len());
+            let dup: Vec<u8> = data[i..end].to_vec();
+            data.splice(end..end, dup);
+        }
+        // Truncate (simulates a peer hanging up mid-message).
+        _ => data.truncate(i),
+    }
+}
+
+/// Run `iters` seeded cases: generate, mutate 0–3 times, feed the target.
+/// A panicking case is re-raised after printing the seed, case index and a
+/// hex dump, so any failure is reproducible and can be checked into
+/// `fuzz_regressions.rs` verbatim.
+pub fn run_bytes(
+    seed: u64,
+    iters: u32,
+    gen: impl Fn(&mut Pcg32) -> Vec<u8>,
+    target: impl Fn(&[u8]),
+) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..iters {
+        let mut data = gen(&mut rng);
+        for _ in 0..rng.below(4) {
+            mutate(&mut rng, &mut data);
+        }
+        if let Err(e) = catch_unwind(AssertUnwindSafe(|| target(&data))) {
+            let hex: String = data.iter().map(|b| format!("{b:02x}")).collect();
+            eprintln!("fuzz case failed: seed={seed:#x} case={case} input[{}]={hex}", data.len());
+            resume_unwind(e);
+        }
+    }
+}
+
+// ---- generators ------------------------------------------------------------
+
+/// Frame `body` as chunked transfer-encoding: 1–3 chunks, occasional
+/// extensions and trailers — the shapes `ChunkDecoder` must accept.
+fn chunk_frame(rng: &mut Pcg32, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let take = (1 + rng.below(rest.len() as u32) as usize).min(rest.len());
+        if rng.below(4) == 0 {
+            out.extend_from_slice(format!("{take:x};ext={}\r\n", rng.below(100)).as_bytes());
+        } else {
+            out.extend_from_slice(format!("{take:x}\r\n").as_bytes());
+        }
+        out.extend_from_slice(&rest[..take]);
+        out.extend_from_slice(b"\r\n");
+        rest = &rest[take..];
+    }
+    out.extend_from_slice(b"0\r\n");
+    if rng.below(3) == 0 {
+        out.extend_from_slice(b"X-Trailer: ignored\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// A plausible-to-hostile HTTP/1.1 request: real and junk methods, paths
+/// and versions, framing headers that are correct, smuggling-shaped, or
+/// absent, and bodies that are raw, chunk-framed, or dangling.
+pub fn gen_http_request(rng: &mut Pcg32) -> Vec<u8> {
+    const METHODS: &[&str] = &["GET", "POST", "HEAD", "DELETE", "BR%OKEN", "get", ""];
+    const PATHS: &[&str] = &[
+        "/healthz",
+        "/v1/infer",
+        "/metrics?format=prometheus",
+        "/../../etc/passwd",
+        "/%zz%%",
+        "*",
+        "/v1/infer?variant=m|fp32&x=1",
+    ];
+    const VERSIONS: &[&str] = &["HTTP/1.1", "HTTP/1.0", "HTTP/9.9", "HTP/1.1", ""];
+
+    let body: Vec<u8> = (0..rng.below(48)).map(|_| rng.next_u32() as u8).collect();
+    let mut head =
+        format!("{} {} {}\r\n", rng.choice(METHODS), rng.choice(PATHS), rng.choice(VERSIONS));
+
+    // Exactly one framing decision, drawn from correct and hostile shapes.
+    let mut wire_body = body.clone();
+    match rng.below(7) {
+        0 => head.push_str(&format!("Content-Length: {}\r\n", body.len())),
+        1 => head.push_str(&format!("Content-Length: +{}\r\n", body.len())),
+        2 => head.push_str(&format!("Content-Length : {}\r\n", body.len())),
+        3 => {
+            head.push_str("Transfer-Encoding: chunked\r\n");
+            wire_body = chunk_frame(rng, &body);
+        }
+        4 => {
+            // The classic smuggling pair: both framings at once.
+            head.push_str("Transfer-Encoding: chunked\r\n");
+            head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+            wire_body = chunk_frame(rng, &body);
+        }
+        5 => head.push_str("Transfer-Encoding: gzip\r\n"),
+        // No framing header: the body bytes dangle as pipelined garbage.
+        _ => {}
+    }
+
+    for _ in 0..rng.below(5) {
+        match rng.below(5) {
+            0 => head.push_str("Connection: close\r\n"),
+            1 => head.push_str("Connection: keep-alive, close\r\n"),
+            2 => head.push_str(&format!("X-Junk-{}: {}\r\n", rng.below(10), rng.next_u32())),
+            3 => head.push_str(": empty-name\r\n"),
+            _ => head.push_str("Host: fuzz.example\r\n"),
+        }
+    }
+    // Occasional header bomb to probe the MAX_HEADERS cap.
+    if rng.below(64) == 0 {
+        for i in 0..200 {
+            head.push_str(&format!("X-Bomb-{i}: x\r\n"));
+        }
+    }
+    head.push_str("\r\n");
+
+    let mut out = head.into_bytes();
+    out.extend_from_slice(&wire_body);
+    out
+}
+
+/// A valid `/v1/infer` wire body over a random small tensor and variant —
+/// the mutation layer corrupts it from a realistic starting point.
+pub fn gen_wire_body(rng: &mut Pcg32) -> Vec<u8> {
+    let dims: Vec<usize> =
+        (0..1 + rng.below(3) as usize).map(|_| 1 + rng.below(5) as usize).collect();
+    let shape = Shape::new(&dims);
+    let data: Vec<f32> = (0..shape.numel()).map(|_| rng.uniform_range(-4.0, 4.0)).collect();
+    let img = Tensor::from_vec(shape, data);
+    let spec = match rng.below(3) {
+        0 => VariantSpec::Fp32,
+        1 => VariantSpec::FakeQuant {
+            mode: QuantMode::Probabilistic,
+            gran: Granularity::PerTensor,
+        },
+        _ => VariantSpec::Int8 { mode: QuantMode::Dynamic, weight_gran: Granularity::PerChannel },
+    };
+    wire::encode_infer_request(&VariantKey::new("fuzz-model", spec), rng.next_u64(), &img)
+}
+
+/// Variant wire strings: well-formed, truncated, and hostile.
+pub fn gen_variant_wire(rng: &mut Pcg32) -> Vec<u8> {
+    const POOL: &[&str] = &[
+        "m|fp32",
+        "micro_resnet|int8-ours-c",
+        "m",
+        "|",
+        "m|",
+        "|fp32",
+        "m|fp32|extra",
+        "café|fp32",
+        "a b|fp32",
+        "m|FP32",
+    ];
+    let mut s = rng.choice(POOL).to_string();
+    if rng.below(8) == 0 {
+        s = "m".repeat(1 + rng.below(200) as usize) + "|fp32";
+    }
+    s.into_bytes()
+}
+
+/// Random JSON documents, hostile by construction: deep nesting, escape
+/// abuse, huge and tiny numbers, truncated structures (via mutation).
+pub fn gen_json(rng: &mut Pcg32) -> Vec<u8> {
+    if rng.below(16) == 0 {
+        // Pure nesting bomb probing the parser's depth cap.
+        return b"[".repeat(1 + rng.below(200) as usize);
+    }
+    fn node(rng: &mut Pcg32, depth: u32) -> String {
+        match if depth >= 3 { rng.below(4) } else { rng.below(6) } {
+            0 => format!("{}", rng.uniform_range(-1e6, 1e6)),
+            1 => "null".into(),
+            2 => "true".into(),
+            3 => (*rng.choice(&[
+                "\"plain\"",
+                "\"esc\\n\\t\\\"q\\\"\"",
+                "\"\\u0041\\u00e9\"",
+                "\"\\ud800\"",
+                "\"\\u12\"",
+                "1e308",
+                "-1e-308",
+            ]))
+            .to_string(),
+            4 => {
+                let items: Vec<String> =
+                    (0..rng.below(4)).map(|_| node(rng, depth + 1)).collect();
+                format!("[{}]", items.join(","))
+            }
+            _ => {
+                let items: Vec<String> = (0..rng.below(4))
+                    .map(|i| format!("\"k{i}\":{}", node(rng, depth + 1)))
+                    .collect();
+                format!("{{{}}}", items.join(","))
+            }
+        }
+    }
+    node(rng, 0).into_bytes()
+}
+
+/// Raw bytes reinterpreted as f64 shape dims by [`target_shape`]: half
+/// random bit patterns, half crafted overflow/edge values.
+pub fn gen_shape_dims(rng: &mut Pcg32) -> Vec<u8> {
+    let mut out = Vec::new();
+    for _ in 0..1 + rng.below(5) {
+        let v: f64 = if rng.below(2) == 0 {
+            f64::from_bits(rng.next_u64())
+        } else {
+            *rng.choice(&[
+                8.589934592e9, // 2^33: squared overflows usize
+                1e308,
+                -1.0,
+                0.0,
+                0.5,
+                3.0,
+                9.007199254740992e15,
+            ])
+        };
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+// ---- byte-level targets ----------------------------------------------------
+
+/// In-memory reader: whole-slice, or randomly stuttered with `WouldBlock`
+/// injections — the same failure surface [`crate::net::chaos`] creates on
+/// real sockets, without the sockets.
+struct SliceReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    /// `Some` = stutter reads (1–7 bytes) and inject `WouldBlock`.
+    rng: Option<Pcg32>,
+}
+
+impl Read for SliceReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() || out.is_empty() {
+            return Ok(0);
+        }
+        let mut want = out.len();
+        if let Some(rng) = &mut self.rng {
+            if rng.below(3) == 0 {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            want = want.min(1 + rng.below(7) as usize);
+        }
+        let n = want.min(self.data.len() - self.pos);
+        out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Parse everything a reader yields; normalize to comparable strings.
+fn drive_http(r: SliceReader<'_>, max_body: usize) -> (Vec<String>, String) {
+    let mut reader = RequestReader::new(r, max_body);
+    let mut reqs = Vec::new();
+    loop {
+        match reader.read_request() {
+            Ok(ReadOutcome::Request(q)) => reqs.push(format!(
+                "{} {} {:?} {} {:?} {:?}",
+                q.method, q.path, q.query, q.version, q.headers, q.body
+            )),
+            Ok(ReadOutcome::Eof) => return (reqs, "eof".into()),
+            Ok(ReadOutcome::Timeout { .. }) => {}
+            Err(e) => return (reqs, format!("err: {e}")),
+        }
+    }
+}
+
+/// HTTP request parsing must (a) never panic and (b) produce *identical*
+/// requests and terminal state whether the bytes arrive in one read or in
+/// stuttered fragments with `WouldBlock`s between them — the resumption
+/// invariant every read-timeout tick in the front door depends on.
+pub fn target_http_request(data: &[u8]) {
+    const MAX_BODY: usize = 4096;
+    let whole = drive_http(SliceReader { data, pos: 0, rng: None }, MAX_BODY);
+    let split = drive_http(
+        SliceReader { data, pos: 0, rng: Some(Pcg32::new(fnv64(data))) },
+        MAX_BODY,
+    );
+    assert_eq!(whole, split, "split reads changed the parse");
+}
+
+/// Wire bodies must decode without panicking, and anything that decodes
+/// must survive an encode → decode round trip bit-exactly.
+pub fn target_wire_preamble(data: &[u8]) {
+    if let Ok(req) = wire::decode_infer_request(data) {
+        let re = wire::encode_infer_request(&req.variant, req.id, &req.image);
+        let back = wire::decode_infer_request(&re).expect("re-encoded request must decode");
+        assert_eq!(back.variant, req.variant, "variant drifted through re-encode");
+        assert_eq!(back.id, req.id, "id drifted through re-encode");
+        assert_eq!(back.image.shape().dims(), req.image.shape().dims());
+        let a: Vec<u32> = back.image.data().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = req.image.data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "payload bits drifted through re-encode");
+    }
+    // The response decoder shares unframe/parse_shape; it must not panic
+    // on request-shaped (or any) bytes either.
+    let _ = wire::decode_infer_response(data);
+}
+
+/// Variant keys that parse must re-serialize to a wire string that parses
+/// back to the same key.
+pub fn target_variant_wire(data: &[u8]) {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    if let Ok(key) = VariantKey::parse_wire(s) {
+        let w = key.wire();
+        let back = VariantKey::parse_wire(&w).expect("canonical wire form must parse");
+        assert_eq!(back, key, "variant key drifted through wire round trip");
+    }
+}
+
+/// JSON documents that parse must serialize to a stable fixed point:
+/// `serialize(parse(serialize(x))) == serialize(x)`.
+pub fn target_json(data: &[u8]) {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    if let Ok(doc) = Json::parse(s) {
+        let s1 = doc.to_string_compact();
+        let doc2 = Json::parse(&s1).expect("serialized JSON must reparse");
+        assert_eq!(s1, doc2.to_string_compact(), "serialization is not a fixed point");
+    }
+}
+
+/// Attacker-controlled shape dims (raw f64 bit patterns and crafted
+/// overflow values) must never panic the wire decoder — `parse_shape`'s
+/// checked arithmetic is the only thing between these dims and
+/// `Shape::numel`'s unchecked product.
+pub fn target_shape(data: &[u8]) {
+    let dims: Vec<String> = data
+        .chunks_exact(8)
+        .map(|c| {
+            let v = f64::from_bits(u64::from_le_bytes(c.try_into().unwrap()));
+            format!("{v}")
+        })
+        .collect();
+    let head = format!("{{\"variant\":\"m|fp32\",\"id\":1,\"shape\":[{}]}}", dims.join(","));
+    let mut body = Vec::with_capacity(4 + head.len() + 16);
+    body.extend_from_slice(&(head.len() as u32).to_le_bytes());
+    body.extend_from_slice(head.as_bytes());
+    // A little payload so small valid shapes exercise the length check.
+    body.extend_from_slice(&[0u8; 16]);
+    let _ = wire::decode_infer_request(&body);
+}
+
+// ---- structure-aware int8 differential targets -----------------------------
+
+fn rand_i8(rng: &mut Pcg32, n: usize, lo: i64, hi: i64) -> Vec<i8> {
+    (0..n).map(|_| rng.int_range(lo, hi) as i8).collect()
+}
+
+fn rand_requant(rng: &mut Pcg32, channels: usize) -> Requant {
+    let offset = rng.int_range(-20, 20) as i32;
+    if rng.uniform() < 0.5 {
+        Requant::per_tensor(2f64.powf(rng.uniform_range(-10.0, 0.0) as f64), offset)
+    } else {
+        let scales: Vec<f64> =
+            (0..channels).map(|_| 2f64.powf(rng.uniform_range(-10.0, 0.0) as f64)).collect();
+        Requant::per_channel(&scales, offset)
+    }
+}
+
+/// Random small kernels through the fast int8 path vs the scalar CMSIS
+/// oracles — bit-exact or panic. Weighted toward fully-connected (the
+/// cheapest) so a given budget covers more cases.
+pub fn diff_int8_kernels(seed: u64, iters: u32) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..iters {
+        match rng.below(4) {
+            0 => {
+                let h = rng.int_range(3, 7) as usize;
+                let w = rng.int_range(3, 7) as usize;
+                let cin = rng.int_range(1, 4) as usize;
+                let cout = rng.int_range(1, 5) as usize;
+                let k = *rng.choice(&[1usize, 3]);
+                let stride = *rng.choice(&[1usize, 2]);
+                let pad = *rng.choice(&[0usize, k / 2]);
+                let geom = ConvGeom::new(k, k, stride, pad);
+                let x = Tensor::from_vec(
+                    Shape::hwc(h, w, cin),
+                    rand_i8(&mut rng, h * w * cin, -128, 127),
+                );
+                let kt = Tensor::from_vec(
+                    Shape::ohwi(cout, k, k, cin),
+                    rand_i8(&mut rng, cout * k * k * cin, -127, 127),
+                );
+                let bias: Vec<i32> =
+                    (0..cout).map(|_| rng.int_range(-3000, 3000) as i32).collect();
+                let off = rng.int_range(-128, 128) as i32;
+                let rq = rand_requant(&mut rng, cout);
+                let want = convolve_s8(&x, &kt, &bias, off, &rq, &geom);
+                let mut cols = Vec::new();
+                let mut got = vec![0i8; want.numel()];
+                fast::convolve_s8_fast(
+                    &x,
+                    &kt,
+                    &bias,
+                    off,
+                    &geom,
+                    &mut cols,
+                    &mut got,
+                    fast::requant_epi(&rq),
+                );
+                assert_eq!(
+                    got,
+                    *want.data(),
+                    "conv diverged: seed={seed:#x} case={case} h{h} w{w} cin{cin} cout{cout} k{k} s{stride} p{pad}"
+                );
+            }
+            1 => {
+                let h = rng.int_range(3, 7) as usize;
+                let w = rng.int_range(3, 7) as usize;
+                let c = rng.int_range(1, 5) as usize;
+                let k = *rng.choice(&[1usize, 3]);
+                let stride = *rng.choice(&[1usize, 2]);
+                let pad = *rng.choice(&[0usize, k / 2]);
+                let geom = ConvGeom::new(k, k, stride, pad);
+                let x =
+                    Tensor::from_vec(Shape::hwc(h, w, c), rand_i8(&mut rng, h * w * c, -128, 127));
+                let kt = Tensor::from_vec(
+                    Shape::new(&[c, k, k]),
+                    rand_i8(&mut rng, c * k * k, -127, 127),
+                );
+                let bias: Vec<i32> = (0..c).map(|_| rng.int_range(-3000, 3000) as i32).collect();
+                let off = rng.int_range(-128, 128) as i32;
+                let rq = rand_requant(&mut rng, c);
+                let want = dwconv_s8(&x, &kt, &bias, off, &rq, &geom);
+                let mut wt = Vec::new();
+                let mut acc_row = Vec::new();
+                let mut got = vec![0i8; want.numel()];
+                fast::dwconv_s8_fast(
+                    &x,
+                    &kt,
+                    &bias,
+                    off,
+                    &geom,
+                    &mut wt,
+                    &mut acc_row,
+                    &mut got,
+                    fast::requant_epi(&rq),
+                );
+                assert_eq!(
+                    got,
+                    *want.data(),
+                    "dwconv diverged: seed={seed:#x} case={case} h{h} w{w} c{c} k{k} s{stride} p{pad}"
+                );
+            }
+            _ => {
+                let d = rng.int_range(1, 64) as usize;
+                let h = rng.int_range(1, 16) as usize;
+                let x = rand_i8(&mut rng, d, -128, 127);
+                let wt = Tensor::from_vec(Shape::new(&[h, d]), rand_i8(&mut rng, h * d, -127, 127));
+                let bias: Vec<i32> = (0..h).map(|_| rng.int_range(-5000, 5000) as i32).collect();
+                let off = rng.int_range(-128, 128) as i32;
+                let rq = rand_requant(&mut rng, h);
+                let want = fully_connected_s8(&x, &wt, &bias, off, &rq);
+                let sums = fast::weight_row_sums(&wt);
+                let mut got = vec![0i8; h];
+                fast::fully_connected_s8_fast(&x, &wt, &bias, &sums, off, &mut got, fast::requant_epi(&rq));
+                assert_eq!(got, want, "fc diverged: seed={seed:#x} case={case} h{h} d{d}");
+            }
+        }
+    }
+}
+
+/// Random small *graphs* through `Int8Executor::run_q` (arena, fused fast
+/// kernels) vs `run_naive` (fresh tensors, scalar kernels) — values and
+/// grids bit-exact, across random modes and granularities. Each case
+/// builds, calibrates and lowers a graph, so keep `iters` small.
+pub fn diff_int8_graphs(seed: u64, iters: u32) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..iters {
+        let mut g = Graph::new(Shape::hwc(6, 6, 2));
+        let x = g.input();
+        let cout = 1 + rng.below(3) as usize;
+        let stride = 1 + rng.below(2) as usize;
+        let w: Vec<f32> = (0..cout * 9 * 2).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        let c = g.conv(
+            x,
+            Tensor::from_vec(Shape::ohwi(cout, 3, 3, 2), w),
+            vec![0.01; cout],
+            ConvGeom::same(3, stride),
+        );
+        let mut r = g.relu(c);
+        if rng.below(2) == 0 {
+            let wd: Vec<f32> = (0..cout * 9).map(|_| rng.normal_ms(0.05, 0.25)).collect();
+            let d = g.dwconv(
+                r,
+                Tensor::from_vec(Shape::new(&[cout, 3, 3]), wd),
+                vec![0.0; cout],
+                ConvGeom::same(3, 1),
+            );
+            r = g.relu6(d);
+        }
+        let p = g.global_avg_pool(r);
+        let wl: Vec<f32> = (0..3 * cout).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+        let l = g.linear(p, Tensor::from_vec(Shape::new(&[3, cout]), wl), vec![0.05; 3]);
+        g.mark_output(l);
+        let g = Arc::new(g);
+
+        let calib: Vec<Tensor<f32>> = (0..4)
+            .map(|_| {
+                let data: Vec<f32> = (0..6 * 6 * 2).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(6, 6, 2), data)
+            })
+            .collect();
+        let mode =
+            *rng.choice(&[QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic]);
+        let weight_gran = *rng.choice(&[Granularity::PerTensor, Granularity::PerChannel]);
+        let gamma = *rng.choice(&[1usize, 2]);
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings {
+                mode,
+                gamma,
+                granularity: Granularity::PerTensor,
+                ..Default::default()
+            },
+        );
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, weight_gran).expect("lowering succeeds");
+
+        for i in 0..2 {
+            let data: Vec<f32> = (0..6 * 6 * 2).map(|_| rng.uniform()).collect();
+            let img = Tensor::from_vec(Shape::hwc(6, 6, 2), data);
+            let naive = int8.run_naive(&img);
+            let fast_out = int8.run_q(&img).expect("run_q");
+            assert_eq!(naive.len(), fast_out.len());
+            for (j, ((tn, qn), (tf, qf))) in naive.iter().zip(fast_out.iter()).enumerate() {
+                assert_eq!(
+                    qn, qf,
+                    "graph diverged (grid): seed={seed:#x} case={case} {mode:?}/{weight_gran:?} γ={gamma} img{i} out{j}"
+                );
+                assert_eq!(
+                    tn.data(),
+                    tf.data(),
+                    "graph diverged (values): seed={seed:#x} case={case} {mode:?}/{weight_gran:?} γ={gamma} img{i} out{j}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tiny in-module smoke: the full seeded budgets run in
+    // rust/tests/fuzz_smoke.rs; these only prove the harness plumbing
+    // (generate → mutate → target) is sound.
+    #[test]
+    fn harness_smoke() {
+        run_bytes(0xF022_0001, 150, gen_http_request, target_http_request);
+        run_bytes(0xF022_0002, 150, gen_wire_body, target_wire_preamble);
+        run_bytes(0xF022_0003, 150, gen_variant_wire, target_variant_wire);
+        run_bytes(0xF022_0004, 150, gen_json, target_json);
+        run_bytes(0xF022_0005, 150, gen_shape_dims, target_shape);
+    }
+
+    #[test]
+    fn mutate_never_panics_and_changes_input() {
+        let mut rng = Pcg32::new(0xF022_0006);
+        let mut changed = 0;
+        for _ in 0..500 {
+            let mut data: Vec<u8> = (0..rng.below(32)).map(|_| rng.next_u32() as u8).collect();
+            let before = data.clone();
+            mutate(&mut rng, &mut data);
+            if data != before {
+                changed += 1;
+            }
+        }
+        assert!(changed > 400, "mutations almost always alter the input: {changed}");
+    }
+
+    #[test]
+    fn int8_differential_smoke() {
+        diff_int8_kernels(0xF022_0007, 50);
+        diff_int8_graphs(0xF022_0008, 1);
+    }
+}

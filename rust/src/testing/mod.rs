@@ -1,0 +1,8 @@
+//! Test infrastructure compiled into the library so it is reachable from
+//! integration tests (`rust/tests/fuzz_smoke.rs`), the out-of-tree
+//! `fuzz/` cargo-fuzz targets, and ad-hoc debugging binaries alike.
+//!
+//! Nothing here runs in production paths; it costs binary size only when
+//! actually linked.
+
+pub mod fuzz;

@@ -150,7 +150,7 @@ impl Json {
     /// Parse a JSON document. Returns an error with byte position context.
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, pos: 0 };
+        let mut p = Parser { b: bytes, pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -186,9 +186,17 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting cap for the recursive-descent parser. The parser recurses per
+/// `[`/`{`, so without a cap a hostile document of a few hundred KB of
+/// `[[[[…` overflows the thread stack — and a stack overflow aborts the
+/// whole process (it is not a panic; `catch_unwind` cannot contain it).
+/// 64 levels is far beyond anything PDQ's own documents nest.
+const MAX_PARSE_DEPTH: usize = 64;
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -214,6 +222,16 @@ impl<'a> Parser<'a> {
                 self.peek().map(|b| b as char)
             ))
         }
+    }
+
+    /// Bump the nesting depth on entering a container; errors abort the
+    /// whole parse, so only successful exits need the matching decrement.
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(format!("nesting deeper than {MAX_PARSE_DEPTH} at byte {}", self.pos));
+        }
+        Ok(())
     }
 
     fn value(&mut self) -> Result<Json, String> {
@@ -290,13 +308,21 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.b.len() {
-                                return Err("truncated \\u escape".into());
+                            // Validate the 4 hex digits byte-wise before
+                            // decoding: slicing 4 raw bytes and trusting
+                            // `from_utf8` would panic when the window cuts
+                            // a multi-byte UTF-8 char in half (`"\u12é"`),
+                            // and `from_str_radix` accepts a leading '+'.
+                            let hex = self
+                                .b
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or("truncated \\u escape")?;
+                            if !hex.iter().all(|b| b.is_ascii_hexdigit()) {
+                                return Err(format!("bad \\u escape at byte {}", self.pos));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.pos + 1..self.pos + 5]).unwrap();
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|e| format!("bad \\u escape: {e}"))?;
+                            let cp = hex.iter().fold(0u32, |acc, &b| {
+                                acc * 16 + (b as char).to_digit(16).unwrap()
+                            });
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.pos += 4;
                         }
@@ -318,10 +344,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -333,6 +361,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 other => return Err(format!("expected ',' or ']', found {other:?}")),
@@ -342,10 +371,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -362,6 +393,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 other => return Err(format!("expected ',' or '}}', found {other:?}")),
@@ -479,5 +511,35 @@ mod tests {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::obj());
         assert_eq!(Json::Arr(vec![]).to_string_pretty(), "[]");
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_fatal() {
+        // An uncapped parser stack-overflows (aborting the process) here.
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        let hostile_obj = r#"{"a":"#.repeat(1_000) + "1";
+        assert!(Json::parse(&hostile_obj).is_err());
+        // Depth just inside the cap still parses.
+        let deep = "[".repeat(MAX_PARSE_DEPTH) + &"]".repeat(MAX_PARSE_DEPTH);
+        assert!(Json::parse(&deep).is_ok());
+        // Depth is per-document, not cumulative across siblings.
+        let wide = "[[1],[2],[3]]";
+        assert!(Json::parse(wide).is_ok());
+    }
+
+    #[test]
+    fn unicode_escape_hostile_bytes() {
+        // Multi-byte UTF-8 char inside the 4-digit window: must error,
+        // not panic.
+        assert!(Json::parse("\"\\u12é\"").is_err());
+        assert!(Json::parse("\"\\u123é\"").is_err());
+        // from_str_radix would accept "+123"; JSON requires hex digits.
+        assert!(Json::parse("\"\\u+123\"").is_err());
+        // Truncated escape at end of input.
+        assert!(Json::parse("\"\\u12").is_err());
+        // Valid escapes still decode (surrogate halves become U+FFFD).
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse("\"\\ud800\"").unwrap(), Json::Str("\u{fffd}".into()));
     }
 }

@@ -1,0 +1,204 @@
+//! Chaos serving integration: the full front door driven through
+//! fault-injected connections.
+//!
+//! The invariant under test: [`pdq::net::chaos`] mangles *timing and
+//! connection lifetime*, never bytes — so whatever it does, the server
+//! must never mis-parse a request (`metrics.malformed() == 0`), never
+//! leak an admission permit (all depths 0 after drain), and always drain
+//! cleanly. A timing-only chaos run (short reads, `WouldBlock` ticks,
+//! latency) must additionally complete with **zero failed requests**;
+//! a disconnect-storm run may fail individual requests but must leave
+//! the server healthy.
+//!
+//! Plus the protocol-gap acceptance test: a chunked-encoded `/v1/infer`
+//! request must round-trip bit-identically to its Content-Length twin.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pdq::coordinator::server::Server;
+use pdq::coordinator::ServerConfig;
+use pdq::engine::{FloatEngine, VariantKey, VariantSpec};
+use pdq::net::chaos::{ChaosConfig, ChaosListener};
+use pdq::net::http::read_response;
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::wire;
+use pdq::net::{FrontDoor, FrontDoorConfig};
+use pdq::nn::Graph;
+use pdq::tensor::{Shape, Tensor};
+
+fn tiny_server() -> Arc<Server> {
+    let mut g = Graph::new(Shape::hwc(2, 2, 1));
+    let x = g.input();
+    let r = g.relu(x);
+    g.mark_output(r);
+    let key = VariantKey::new("m", VariantSpec::Fp32);
+    Arc::new(Server::start(
+        vec![(key, Arc::new(FloatEngine::new(Arc::new(g))))],
+        ServerConfig::default(),
+    ))
+}
+
+fn start_stack() -> (Arc<Server>, FrontDoor) {
+    let server = tiny_server();
+    let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
+    (server, fd)
+}
+
+/// Timing-only chaos (no disconnects): a closed-loop load run through the
+/// proxy must complete with zero failures, zero mis-parses, zero leaked
+/// permits, and a clean drain.
+#[test]
+fn loadgen_survives_timing_chaos_with_zero_failures() {
+    let (server, fd) = start_stack();
+    let proxy = ChaosListener::start(
+        "127.0.0.1:0",
+        &fd.local_addr().to_string(),
+        ChaosConfig {
+            seed: 0xC4A0_0001,
+            max_chunk: 5,
+            would_block_every: 3,
+            latency: Duration::from_micros(200),
+            latency_every: 7,
+            disconnect_every: 0, // timing faults only
+            ..ChaosConfig::default()
+        },
+    )
+    .unwrap();
+
+    let report = loadgen::run(&LoadgenConfig {
+        target: proxy.local_addr().to_string(),
+        mode: LoadMode::Closed,
+        concurrency: 3,
+        duration: Duration::from_secs(2),
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+
+    assert!(report.total.ok > 0, "chaos must not stop all traffic");
+    assert_eq!(
+        report.total.failed, 0,
+        "timing-only chaos must never fail a request: {:?}",
+        report.total
+    );
+    assert!(proxy.connections() > 0, "traffic must actually flow through the proxy");
+    proxy.shutdown();
+
+    // Depth check only after the drain: shutdown() joins the connection
+    // pool, so no handler can still be holding a permit.
+    let metrics = fd.shutdown();
+    for (key, depth) in server.admission_depths() {
+        assert_eq!(depth, 0, "leaked admission permit on {}", key.wire());
+    }
+    assert_eq!(metrics.malformed(), 0, "chaos mangles timing, never bytes — no parse errors");
+}
+
+/// Disconnect storm: individual requests may fail, but the server must
+/// stay healthy, never mis-parse, and never leak a permit.
+#[test]
+fn disconnect_storm_leaves_server_healthy() {
+    let (server, fd) = start_stack();
+    let proxy = ChaosListener::start(
+        "127.0.0.1:0",
+        &fd.local_addr().to_string(),
+        ChaosConfig {
+            seed: 0xC4A0_0002,
+            max_chunk: 4,
+            would_block_every: 4,
+            disconnect_every: 2, // every other connection gets a kill budget
+            ..ChaosConfig::default()
+        },
+    )
+    .unwrap();
+
+    let key = VariantKey::new("m", VariantSpec::Fp32);
+    let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, -2.0, 3.0, -4.0]);
+    let mut ok = 0u32;
+    for i in 0..24u64 {
+        // Fresh client per iteration: maximizes the number of chaos
+        // connections (each draws its own disconnect budget).
+        let mut client = wire::Client::new(&proxy.local_addr().to_string());
+        if let Ok(wire::InferOutcome::Ok(resp)) = client.post_infer(&key, i, &img) {
+            assert_eq!(resp.id, i, "response crossed requests");
+            assert_eq!(resp.outputs[0].data(), &[1.0, 0.0, 3.0, 0.0], "payload corrupted");
+            ok += 1;
+        }
+    }
+    proxy.shutdown();
+    assert!(ok > 0, "some requests must survive the storm");
+
+    // Direct (unproxied) traffic still works: the storm hurt only its own
+    // connections.
+    let mut direct = wire::Client::new(&fd.local_addr().to_string());
+    assert_eq!(direct.get("/healthz").unwrap().status, 200);
+    drop(direct);
+
+    // Depth check only after the drain (a handler mid-request when its
+    // client vanished may legitimately hold its permit a moment longer).
+    let metrics = fd.shutdown();
+    for (key, depth) in server.admission_depths() {
+        assert_eq!(depth, 0, "disconnects leaked an admission permit on {}", key.wire());
+    }
+    assert_eq!(metrics.malformed(), 0, "disconnects must never look like malformed input");
+}
+
+/// One raw HTTP exchange; returns the decoded infer response.
+fn raw_infer(addr: &str, head: &str, body: &[u8]) -> wire::InferResponseWire {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+    let parts = read_response(&mut s, 64 * 1024 * 1024).unwrap();
+    assert_eq!(parts.status, 200, "infer must succeed: {:?}", String::from_utf8_lossy(&parts.body));
+    wire::decode_infer_response(&parts.body).unwrap()
+}
+
+/// The ISSUE acceptance test: a chunked-encoded `/v1/infer` request must
+/// produce a bit-identical inference result to its Content-Length twin.
+#[test]
+fn chunked_infer_matches_content_length_twin() {
+    let (_server, fd) = start_stack();
+    let addr = fd.local_addr().to_string();
+    let key = VariantKey::new("m", VariantSpec::Fp32);
+    let img = Tensor::from_vec(
+        Shape::hwc(2, 2, 1),
+        vec![0.1, -1.0 / 3.0, f32::MIN_POSITIVE, 1e30],
+    );
+    let body = wire::encode_infer_request(&key, 7, &img);
+
+    let cl_head = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        wire::TENSOR_CONTENT_TYPE,
+        body.len()
+    );
+    let a = raw_infer(&addr, &cl_head, &body);
+
+    // The same body, chunk-framed in small pieces with an extension and a
+    // trailer — everything a real chunked encoder is allowed to emit.
+    let mut chunked = Vec::new();
+    for piece in body.chunks(5) {
+        chunked.extend_from_slice(format!("{:x};why=not\r\n", piece.len()).as_bytes());
+        chunked.extend_from_slice(piece);
+        chunked.extend_from_slice(b"\r\n");
+    }
+    chunked.extend_from_slice(b"0\r\nX-Trailer: ignored\r\n\r\n");
+    let te_head = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        wire::TENSOR_CONTENT_TYPE
+    );
+    let b = raw_infer(&addr, &te_head, &chunked);
+
+    assert_eq!(a.id, 7);
+    assert_eq!(b.id, 7);
+    assert_eq!(a.outputs.len(), b.outputs.len());
+    for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+        assert_eq!(ta.shape().dims(), tb.shape().dims());
+        let bits_a: Vec<u32> = ta.data().iter().map(|x| x.to_bits()).collect();
+        let bits_b: Vec<u32> = tb.data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "chunked and content-length twins must match bit for bit");
+    }
+    fd.shutdown();
+}

@@ -1,0 +1,169 @@
+//! Fuzz-found regression corpus.
+//!
+//! Every case here is a real crash, panic-path, or mis-parse found while
+//! developing the `pdq::testing::fuzz` harness against the pre-hardening
+//! parsers, replayed as a named test against the fixed code. The rule:
+//! a fuzz finding is not "fixed" until its exact input lives here — the
+//! corpus is the proof the same bug cannot come back silently.
+//!
+//! Each test documents the original failure mode in a comment.
+
+use std::io::Cursor;
+
+use pdq::engine::VariantKey;
+use pdq::net::http::{HttpError, ReadOutcome, RequestReader};
+use pdq::net::wire;
+use pdq::util::json::Json;
+
+/// Parse one request from a byte slice with a small body cap.
+fn parse(bytes: &[u8]) -> Result<ReadOutcome, HttpError> {
+    RequestReader::new(Cursor::new(bytes.to_vec()), 4096).read_request()
+}
+
+fn expect_reject(bytes: &[u8], why: &str) {
+    match parse(bytes) {
+        Err(_) => {}
+        Ok(o) => panic!("{why}: expected a parse error, got {o:?}"),
+    }
+}
+
+// ---- util/json.rs ----------------------------------------------------------
+
+#[test]
+fn json_deep_nesting_stack_overflow() {
+    // Original failure: the recursive-descent parser had no depth cap, so
+    // `[[[[...` recursed once per byte and overflowed the stack — a
+    // process abort that catch_unwind cannot contain, killing the whole
+    // connection-pool worker's process. Now rejected at MAX_PARSE_DEPTH.
+    assert!(Json::parse(&"[".repeat(100_000)).is_err());
+    let objs = "{\"a\":".repeat(50_000) + "1";
+    assert!(Json::parse(&objs).is_err());
+}
+
+#[test]
+fn json_unicode_escape_splits_utf8() {
+    // Original failure: `\uXXXX` grabbed the next 4 *bytes* and fed them
+    // to from_utf8().unwrap(); a multi-byte UTF-8 char inside the window
+    // (here `é` = 0xC3 0xA9) split the char boundary and panicked.
+    assert!(Json::parse("\"\\u12é\"").is_err());
+    assert!(Json::parse("\"\\u123é\"").is_err());
+    // Truncated escape at end of input: read past the buffer.
+    assert!(Json::parse("\"\\u12").is_err());
+}
+
+#[test]
+fn json_plus_prefixed_u_escape() {
+    // Original failure: the escape used from_str_radix, which accepts a
+    // leading '+', so `\u+123` parsed as if it were a valid escape —
+    // a mis-parse (two different inputs, same document). Hex-digit-only
+    // validation rejects it.
+    assert!(Json::parse("\"\\u+123\"").is_err());
+    // The well-formed neighbors still work.
+    assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+}
+
+// ---- net/http.rs -----------------------------------------------------------
+
+#[test]
+fn content_length_plus_sign() {
+    // Original failure: `"+5".parse::<usize>()` succeeds in Rust, so
+    // `Content-Length: +5` was accepted — a framing mis-parse two proxies
+    // can disagree on (request smuggling primitive). Digits-only now.
+    expect_reject(b"POST / HTTP/1.1\r\nContent-Length: +5\r\n\r\nhello", "plus-signed length");
+    expect_reject(b"POST / HTTP/1.1\r\nContent-Length: 0x5\r\n\r\nhello", "hex length");
+}
+
+#[test]
+fn header_name_trailing_space() {
+    // Original failure: header names were trimmed, so `Content-Length : 5`
+    // matched `content-length` here while standards-following peers treat
+    // it as an unknown header — classic smuggling split. Now rejected.
+    expect_reject(b"POST / HTTP/1.1\r\nContent-Length : 5\r\n\r\nhello", "spaced header name");
+}
+
+#[test]
+fn too_many_headers() {
+    // Original failure: no header-count cap — a few MB of tiny headers
+    // ate a pool worker's memory and time. MAX_HEADERS now bounds it.
+    let mut req = String::from("GET / HTTP/1.1\r\n");
+    for i in 0..200 {
+        req.push_str(&format!("X-Bomb-{i}: x\r\n"));
+    }
+    req.push_str("\r\n");
+    match parse(req.as_bytes()) {
+        Err(HttpError::TooLarge(_)) => {}
+        other => panic!("header bomb must be TooLarge, got {other:?}"),
+    }
+}
+
+#[test]
+fn te_and_cl_smuggling() {
+    // Transfer-Encoding alongside Content-Length is the canonical
+    // request-smuggling vector (RFC 9112 §6.3); must die, not pick one.
+    expect_reject(
+        b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 3\r\n\r\n3\r\nabc\r\n0\r\n\r\n",
+        "TE+CL",
+    );
+}
+
+#[test]
+fn chunk_size_overflow() {
+    // Original failure class: a chunk-size line like `ffffffffffffffff1`
+    // overflows usize if parsed unchecked. checked_mul/checked_add turn
+    // it into BadChunk.
+    let req = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffffffffffff1\r\nx";
+    match parse(req) {
+        Err(HttpError::BadChunk(_)) => {}
+        other => panic!("overflowing chunk size must be BadChunk, got {other:?}"),
+    }
+}
+
+#[test]
+fn chunked_total_over_cap() {
+    // Chunked framing carries no up-front length, so the body cap must be
+    // enforced on the *running decoded total*, before buffering the data.
+    let mut req = String::from("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+    // 2 × 4096-byte chunks against a 4096 cap.
+    for _ in 0..2 {
+        req.push_str("1000\r\n");
+        req.push_str(&"x".repeat(0x1000));
+        req.push_str("\r\n");
+    }
+    req.push_str("0\r\n\r\n");
+    match parse(req.as_bytes()) {
+        Err(HttpError::TooLarge(_)) => {}
+        other => panic!("oversized chunked body must be TooLarge, got {other:?}"),
+    }
+}
+
+// ---- engine/spec.rs + net/wire.rs ------------------------------------------
+
+#[test]
+fn variant_model_name_unbounded() {
+    // Original failure: parse_wire accepted arbitrary-length, arbitrary-
+    // byte model names; a 1 MB name became a key in the serving catalog
+    // lookup and echoed into logs/metrics labels. Now capped and
+    // charset-restricted.
+    let huge = "m".repeat(1 << 20) + "|fp32";
+    assert!(VariantKey::parse_wire(&huge).is_err());
+    assert!(VariantKey::parse_wire("a b|fp32").is_err());
+    assert!(VariantKey::parse_wire("a\"b|fp32").is_err());
+    // The longest legal name still parses.
+    let max = "m".repeat(64) + "|fp32";
+    assert!(VariantKey::parse_wire(&max).is_ok());
+}
+
+#[test]
+fn wire_preamble_huge_number() {
+    // Original failure class: attacker-chosen dims reach Shape::numel's
+    // unchecked product — 2^33 × 2^33 overflows usize and panics the
+    // worker. parse_shape's checked arithmetic turns it into an error.
+    let head = r#"{"variant":"m|fp32","id":1,"shape":[8589934592,8589934592]}"#;
+    let mut body = Vec::new();
+    body.extend_from_slice(&(head.len() as u32).to_le_bytes());
+    body.extend_from_slice(head.as_bytes());
+    assert!(wire::decode_infer_request(&body).is_err());
+    assert!(wire::decode_infer_response(&body).is_err());
+    // A preamble length claiming more bytes than the body holds.
+    assert!(wire::decode_infer_request(&[0xFF, 0xFF, 0xFF, 0x7F, b'{']).is_err());
+}

@@ -1,0 +1,50 @@
+//! Bounded fuzz smoke — the CI face of `pdq::testing::fuzz`.
+//!
+//! Fixed seeds, fixed iteration budgets, plain `cargo test`: every
+//! byte-level target gets ≥10k seeded cases and the int8 differential
+//! targets get a kernel budget of the same size plus a handful of full
+//! graph lowerings. Any panic or mis-parse fails the suite; the harness
+//! prints `(seed, case, hex input)` so a failure can be replayed and
+//! checked into `fuzz_regressions.rs` as a named case.
+//!
+//! Budgets are sized for release-mode CI (`cargo test --release`); in
+//! debug they still finish, just slower.
+
+use pdq::testing::fuzz;
+
+const ITERS: u32 = 10_000;
+
+#[test]
+fn fuzz_http_request_parsing() {
+    fuzz::run_bytes(0x5EED_0001, ITERS, fuzz::gen_http_request, fuzz::target_http_request);
+}
+
+#[test]
+fn fuzz_wire_preamble_decoding() {
+    fuzz::run_bytes(0x5EED_0002, ITERS, fuzz::gen_wire_body, fuzz::target_wire_preamble);
+}
+
+#[test]
+fn fuzz_variant_key_wire_parsing() {
+    fuzz::run_bytes(0x5EED_0003, ITERS, fuzz::gen_variant_wire, fuzz::target_variant_wire);
+}
+
+#[test]
+fn fuzz_json_documents() {
+    fuzz::run_bytes(0x5EED_0004, ITERS, fuzz::gen_json, fuzz::target_json);
+}
+
+#[test]
+fn fuzz_boundary_shapes() {
+    fuzz::run_bytes(0x5EED_0005, ITERS, fuzz::gen_shape_dims, fuzz::target_shape);
+}
+
+#[test]
+fn fuzz_int8_kernels_differential() {
+    fuzz::diff_int8_kernels(0x5EED_0006, ITERS);
+}
+
+#[test]
+fn fuzz_int8_graphs_differential() {
+    fuzz::diff_int8_graphs(0x5EED_0007, 8);
+}
