@@ -236,12 +236,23 @@ impl AdaptManager {
     /// One poll of the background loop: refresh every variant's drift
     /// report and hysteresis state, then fire the policy where due.
     /// Returns the recalibrations attempted this tick.
+    ///
+    /// The detector input is the two-window estimator's more-alarmed
+    /// report by default (fast window catches steps, slow window catches
+    /// creep); disabling [`ObserverConfig::two_window`] falls back to the
+    /// single lifetime-window comparison for A/B runs.
     pub fn tick(&self) -> Vec<RecalOutcome> {
         let now = Instant::now();
         let mut outcomes = Vec::new();
         for v in &self.variants {
             let snapshot = v.observer.snapshot();
-            let report = drift::drift_report(&v.reference.lock().unwrap(), &snapshot, &self.cfg.drift);
+            let report = {
+                let reference = v.reference.lock().unwrap();
+                match v.observer.two_window_report(&reference, &self.cfg.drift) {
+                    Some(tw) => tw.combined().clone(),
+                    None => drift::drift_report(&reference, &snapshot, &self.cfg.drift),
+                }
+            };
             let drifted = v.detector.lock().unwrap().update(&report);
             {
                 let mut peak = v.peak_drift.lock().unwrap();
@@ -307,8 +318,10 @@ impl AdaptManager {
                 v.detector.lock().unwrap().reset();
                 v.policy_state.lock().unwrap().mark(now);
                 // The new epoch starts a new "normal": live images sampled
-                // before the swap describe the old grids' regime.
+                // before the swap describe the old grids' regime, and so do
+                // the rolling drift windows.
                 v.observer.reset_reservoir();
+                v.observer.reset_two_window();
                 v.recals.fetch_add(1, Ordering::SeqCst);
                 RecalOutcome {
                     key: v.key.clone(),
@@ -380,13 +393,15 @@ impl AdaptManager {
     }
 }
 
-/// Build the standard 7-variant serving menu with adaptation wired in:
-/// the same variants (and wire names) as
-/// [`crate::engine::standard_menu`], each registered on `manager` with
-/// its natural recalibration backend — int8-static gets the O(C) integer
-/// refold, fake-quant static the reservoir rebuild, and the
-/// self-adapting modes (dynamic, PDQ) plus fp32 get drift observation
-/// only. Returns the `(key, cell)` pairs
+/// Build the standard serving menu with adaptation wired in: the same
+/// variants (and wire names) as [`crate::engine::standard_menu`] —
+/// including the nested 4/2-bit brownout rungs of every int8 variant —
+/// each registered on `manager` with its natural recalibration backend.
+/// int8-static (8-bit) gets the O(C) integer refold, fake-quant static
+/// the reservoir rebuild, and the self-adapting modes (dynamic, PDQ),
+/// fp32, and the truncation rungs get drift observation only (rungs are
+/// re-derived from the base program when it refolds, not refit in
+/// place). Returns the `(key, cell)` pairs
 /// [`crate::coordinator::Server::start_adaptive`] consumes.
 pub fn adaptive_standard_menu(
     model: &Model,
@@ -435,6 +450,12 @@ pub fn adaptive_standard_menu(
             Int8Executor::lower(&qex, Granularity::PerTensor).map_err(EngineError::InvalidSpec)?,
         );
         let engine: Arc<dyn Engine> = Arc::new(Int8Engine::new(Arc::clone(&int8)));
+        // Derive the brownout rungs before the base program moves into the
+        // refold backend.
+        let mut rungs = Vec::new();
+        for bits in [4u32, 2] {
+            rungs.push((bits, Arc::new(int8.rung(bits).map_err(EngineError::InvalidSpec)?)));
+        }
         let backend = if mode == QuantMode::Static {
             RecalBackend::Int8Refold(Mutex::new(int8))
         } else {
@@ -442,9 +463,17 @@ pub fn adaptive_standard_menu(
         };
         let key = VariantKey::new(
             model.name.clone(),
-            VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor },
+            VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor, bits: 8 },
         );
         out.push((key.clone(), manager.register(key, engine, backend, &calib)?));
+        for (bits, rung) in rungs {
+            let engine: Arc<dyn Engine> = Arc::new(Int8Engine::new(rung));
+            let key = VariantKey::new(
+                model.name.clone(),
+                VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor, bits },
+            );
+            out.push((key.clone(), manager.register(key, engine, RecalBackend::None, &calib)?));
+        }
     }
     Ok(out)
 }
@@ -459,10 +488,18 @@ mod tests {
         let model = demo_model("demo");
         let mut manager = AdaptManager::new(AdaptConfig::standard());
         let cells = adaptive_standard_menu(&model, &mut manager).expect("menu builds");
-        assert_eq!(cells.len(), 7);
+        assert_eq!(cells.len(), 13);
         let wires: Vec<String> = cells.iter().map(|(k, _)| k.wire()).collect();
-        for want in ["demo|fp32", "demo|static-t", "demo|ours-t", "demo|int8-static-t", "demo|int8-ours-t"]
-        {
+        for want in [
+            "demo|fp32",
+            "demo|static-t",
+            "demo|ours-t",
+            "demo|int8-static-t",
+            "demo|int8-ours-t",
+            "demo|int8-static-t@4",
+            "demo|int8-static-t@2",
+            "demo|int8-ours-t@4",
+        ] {
             assert!(wires.contains(&want.to_string()), "missing {want} in {wires:?}");
         }
         // Exactly the two static variants are recalibratable.

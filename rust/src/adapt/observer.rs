@@ -17,7 +17,10 @@ use std::sync::{Arc, Mutex};
 use crate::engine::{Engine, EngineError, RunTap, Session};
 use crate::engine::VariantSpec;
 use crate::estimator::fixed::WindowStats;
+use crate::nn::LiveNodeStats;
 use crate::tensor::{Shape, Tensor};
+
+use super::drift::{DriftConfig, TwoWindowConfig, TwoWindowEstimator, TwoWindowReport};
 
 /// Observation knobs.
 #[derive(Clone, Copy, Debug)]
@@ -36,6 +39,10 @@ pub struct ObserverConfig {
     /// the drift score tracks *recent* traffic instead of a lifetime
     /// average ([`crate::adapt::AdaptManager::tick`] enforces it).
     pub window_cap: u64,
+    /// Two-window drift estimation (fast + slow rolling windows; the
+    /// default detector input). `None` falls back to the single-window
+    /// snapshot-vs-reference comparison, kept for A/B comparison.
+    pub two_window: Option<TwoWindowConfig>,
 }
 
 impl Default for ObserverConfig {
@@ -45,6 +52,7 @@ impl Default for ObserverConfig {
             tap_gamma: 4,
             reservoir_cap: crate::engine::CALIB_SIZE,
             window_cap: 512,
+            two_window: Some(TwoWindowConfig::default()),
         }
     }
 }
@@ -148,10 +156,21 @@ impl Accumulator {
         self.nodes.iter().map(|(n, a)| (*n, a.features())).collect()
     }
 
-    /// The raw pooled window statistics per node (what
-    /// [`crate::nn::Int8Executor::refit_static_grids`] consumes).
+    /// The raw pooled window statistics per node.
     pub fn window_stats(&self) -> BTreeMap<usize, WindowStats> {
         self.nodes.iter().map(|(n, a)| (*n, a.window)).collect()
+    }
+
+    /// Pooled window statistics *plus* observed clip rates per node (what
+    /// [`crate::nn::Int8Executor::refit_static_grids`] consumes: the clip
+    /// rate drives the Eq. 13 interval refit, the window drives the grid).
+    pub fn live_stats(&self) -> BTreeMap<usize, LiveNodeStats> {
+        self.nodes
+            .iter()
+            .map(|(n, a)| {
+                (*n, LiveNodeStats { window: a.window, clip_rate: a.clip_rate() as f32 })
+            })
+            .collect()
     }
 
     /// The largest per-node clip rate in the window.
@@ -198,6 +217,7 @@ pub struct Observer {
     seen: AtomicU64,
     accum: Mutex<Accumulator>,
     reservoir: Mutex<ImageReservoir>,
+    two_window: Option<Mutex<TwoWindowEstimator>>,
 }
 
 impl Observer {
@@ -213,6 +233,7 @@ impl Observer {
                 images: Vec::new(),
                 lcg: 0x0B5E_12E5 | 1,
             }),
+            two_window: cfg.two_window.map(|tw| Mutex::new(TwoWindowEstimator::new(tw))),
         }
     }
 
@@ -232,9 +253,33 @@ impl Observer {
         self.seen.load(Ordering::Relaxed)
     }
 
-    /// Fold a sampled run's tap into the live window.
+    /// Fold a sampled run's tap into the live window (and, when enabled,
+    /// into the fast/slow rolling windows of the two-window estimator).
     pub fn absorb(&self, tap: &RunTap) {
         self.accum.lock().unwrap().absorb(tap);
+        if let Some(tw) = &self.two_window {
+            tw.lock().unwrap().absorb(tap);
+        }
+    }
+
+    /// Fast/slow drift report from the two-window estimator, scored
+    /// against `reference`. `None` when the estimator is disabled
+    /// ([`ObserverConfig::two_window`] is `None`) — callers then fall
+    /// back to the single-window snapshot comparison.
+    pub fn two_window_report(
+        &self,
+        reference: &Accumulator,
+        cfg: &DriftConfig,
+    ) -> Option<TwoWindowReport> {
+        self.two_window.as_ref().map(|tw| tw.lock().unwrap().report(reference, cfg))
+    }
+
+    /// Clear both rolling windows (after a successful recalibration the
+    /// old windows describe the *previous* grids). No-op when disabled.
+    pub fn reset_two_window(&self) {
+        if let Some(tw) = &self.two_window {
+            tw.lock().unwrap().reset();
+        }
     }
 
     /// Offer a sampled input to the live-image reservoir.
@@ -430,6 +475,50 @@ mod tests {
         assert_eq!(imgs.len(), 4);
         // Uniform over the stream: not frozen at the first four offers.
         assert!(imgs.iter().any(|t| t.data()[0] >= 4.0), "reservoir never displaced");
+    }
+
+    #[test]
+    fn two_window_estimator_rides_absorb_and_is_optional() {
+        let obs = Observer::new(ObserverConfig { sample_every: 1, ..Default::default() });
+        let mut tap = RunTap::new(1);
+        tap.observe_input_grid(&Tensor::from_vec(
+            Shape::hwc(2, 2, 1),
+            vec![0.0, 0.5, 1.0, 0.25],
+        ));
+        let mut reference = Accumulator::default();
+        for _ in 0..16 {
+            reference.absorb(&tap);
+        }
+        for _ in 0..16 {
+            obs.absorb(&tap);
+        }
+        let cfg = DriftConfig::default();
+        let rep = obs.two_window_report(&reference, &cfg).expect("two-window on by default");
+        // Live traffic identical to the reference: neither window alarms.
+        assert!(rep.fast.aggregate < cfg.threshold);
+        assert!(rep.slow.aggregate < cfg.threshold);
+        assert!(rep.combined().requests > 0, "rolling windows absorbed the taps");
+        obs.reset_two_window();
+        let after = obs.two_window_report(&reference, &cfg).unwrap();
+        assert_eq!(after.fast.requests, 0, "reset must empty the rolling windows");
+
+        let off = Observer::new(ObserverConfig { two_window: None, ..Default::default() });
+        assert!(off.two_window_report(&reference, &cfg).is_none());
+    }
+
+    #[test]
+    fn live_stats_carry_clip_rates() {
+        let mut tap = RunTap::new(1);
+        tap.observe_input_grid(&Tensor::from_vec(
+            Shape::hwc(2, 2, 1),
+            vec![0.0, 0.5, 1.0, 0.25],
+        ));
+        let mut a = Accumulator::default();
+        a.absorb(&tap);
+        let live = a.live_stats();
+        let node0 = &live[&0];
+        assert_eq!(node0.window.n, a.nodes[&0].window.n);
+        assert!((node0.clip_rate as f64 - a.nodes[&0].clip_rate()).abs() < 1e-6);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //!
 //! - [`RecalBackend::Int8Refold`] — the paper-native fast path for
 //!   int8-static variants: the pooled live window sums drive the layer
-//!   estimators (Eq. 8–12 + the calibrated `I(α, β)`) to fresh frozen
-//!   grids, and the bias/requant constants are refolded on the existing
+//!   estimators (Eq. 8–12), the observed clip rates refit the `I(α, β)`
+//!   interval (Eq. 13) so recalibrated grids don't reuse stale calibration
+//!   intervals, and the bias/requant constants are refolded on the existing
 //!   `s_in·s_w` accumulator grid
 //!   ([`Int8Executor::refit_static_grids`]) — O(C) arithmetic per node,
 //!   integer statistics in, no dequantization, no stored images.
@@ -88,8 +89,8 @@ pub fn shadow_recalibrate(
                     window.requests
                 ));
             }
-            let stats = window.window_stats();
-            if stats.values().all(|s| s.n == 0) {
+            let stats = window.live_stats();
+            if stats.values().all(|s| s.window.n == 0) {
                 return Err("no live window statistics accumulated yet".into());
             }
             let old = Arc::clone(&current.lock().unwrap());

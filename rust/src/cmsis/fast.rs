@@ -15,6 +15,16 @@
 //! tensor never exists (the paper's O(1)-memory property, enforced by
 //! construction); the dynamic wrapper instantiates the same kernels with an
 //! identity `i32` epilogue and pays the §3 `b′·h` buffer deliberately.
+//!
+//! **Nested bit-width rungs.** Every kernel also comes in a `_shifted`
+//! variant taking a `weight_shift`: the weight is truncated to `8 - shift`
+//! bits at load time via an arithmetic right shift (DQT-style nested
+//! integer arithmetic — the 4/2-bit programs live inside the stored 8-bit
+//! weights, no second weight copy). Sign extension commutes with the
+//! arithmetic shift, so `(w as i32) >> s == ((w >> s) as i32)` and the
+//! fast inline-shift path is bit-exact against a naive kernel fed a
+//! materialized `w >> s` tensor. The plain entry points delegate with
+//! shift 0, which the optimizer folds away — the 8-bit path is unchanged.
 
 use super::requant::Requant;
 use crate::tensor::{ConvGeom, Tensor};
@@ -81,10 +91,30 @@ pub fn gemm_s8_nt<T: Copy + Default, E: Fn(i32, usize) -> T>(
     out: &mut [T],
     epi: E,
 ) {
+    gemm_s8_nt_shifted(m, n, k, a, b, bias, 0, out, epi)
+}
+
+/// [`gemm_s8_nt`] with the weight truncated to a nested rung at load time:
+/// every `b` element is arithmetically shifted right by `weight_shift`
+/// before the multiply, so the accumulator lives on the
+/// `s_in · s_w · 2^weight_shift` grid.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_s8_nt_shifted<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i32],
+    b: &[i8],
+    bias: &[i32],
+    weight_shift: u32,
+    out: &mut [T],
+    epi: E,
+) {
     assert_eq!(a.len(), m * k, "gemm_s8: a is [m, k]");
     assert_eq!(b.len(), n * k, "gemm_s8: b is [n, k]");
     assert_eq!(bias.len(), n, "gemm_s8: bias is [n]");
     assert_eq!(out.len(), m * n, "gemm_s8: out is [m, n]");
+    assert!(weight_shift < 8, "gemm_s8: shift must leave at least one weight bit");
     const MR: usize = 4;
     const NR: usize = 8;
     let mut i = 0;
@@ -97,7 +127,7 @@ pub fn gemm_s8_nt<T: Copy + Default, E: Fn(i32, usize) -> T>(
             for p in 0..k {
                 let mut bv = [0i32; NR];
                 for c in 0..jb {
-                    bv[c] = b[(j + c) * k + p] as i32;
+                    bv[c] = (b[(j + c) * k + p] as i32) >> weight_shift;
                 }
                 for r in 0..ib {
                     let av = a[(i + r) * k + p];
@@ -131,6 +161,24 @@ pub fn convolve_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
     out: &mut [T],
     epi: E,
 ) {
+    convolve_s8_fast_shifted(input, kernel, bias, input_offset, 0, geom, cols, out, epi)
+}
+
+/// [`convolve_s8_fast`] on a nested rung: the stored 8-bit weights are
+/// truncated by `weight_shift` inside the GEMM load — no shifted weight
+/// tensor is ever materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn convolve_s8_fast_shifted<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    weight_shift: u32,
+    geom: &ConvGeom,
+    cols: &mut Vec<i32>,
+    out: &mut [T],
+    epi: E,
+) {
     let (cout, kh, kw, kcin) =
         (kernel.shape().dim(0), kernel.shape().dim(1), kernel.shape().dim(2), kernel.shape().dim(3));
     assert_eq!(input.shape().dim(2), kcin, "conv channel mismatch");
@@ -138,7 +186,7 @@ pub fn convolve_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
     assert_eq!(bias.len(), cout);
     let (m, k) = im2col_s8(input, geom, input_offset, cols);
     assert_eq!(out.len(), m * cout, "conv output length");
-    gemm_s8_nt(m, cout, k, cols, kernel.data(), bias, out, epi);
+    gemm_s8_nt_shifted(m, cout, k, cols, kernel.data(), bias, weight_shift, out, epi);
 }
 
 /// Fast int8 depthwise convolution. The `[C, kh, kw]` weights are
@@ -158,11 +206,31 @@ pub fn dwconv_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
     out: &mut [T],
     epi: E,
 ) {
+    dwconv_s8_fast_shifted(input, kernel, bias, input_offset, 0, geom, wt_scratch, acc_row, out, epi)
+}
+
+/// [`dwconv_s8_fast`] on a nested rung: the truncation rides the per-call
+/// `[kh·kw, C]` transpose (an i8 arithmetic shift is closed over i8), so
+/// the inner pixel loop is untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_s8_fast_shifted<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    input: &Tensor<i8>,
+    kernel: &Tensor<i8>,
+    bias: &[i32],
+    input_offset: i32,
+    weight_shift: u32,
+    geom: &ConvGeom,
+    wt_scratch: &mut Vec<i8>,
+    acc_row: &mut Vec<i32>,
+    out: &mut [T],
+    epi: E,
+) {
     let (h, w, c) = (input.shape().dim(0), input.shape().dim(1), input.shape().dim(2));
     let (kc, kh, kw) = (kernel.shape().dim(0), kernel.shape().dim(1), kernel.shape().dim(2));
     assert_eq!(c, kc, "dwconv channel mismatch");
     assert_eq!((kh, kw), (geom.kh, geom.kw));
     assert_eq!(bias.len(), c);
+    assert!(weight_shift < 8, "dwconv: shift must leave at least one weight bit");
     let (oh, ow) = geom.out_dims(h, w);
     assert_eq!(out.len(), oh * ow * c, "dwconv output length");
     let taps = kh * kw;
@@ -171,7 +239,7 @@ pub fn dwconv_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
     let kd = kernel.data();
     for ch in 0..c {
         for t in 0..taps {
-            wt_scratch[t * c + ch] = kd[ch * taps + t];
+            wt_scratch[t * c + ch] = kd[ch * taps + t] >> weight_shift;
         }
     }
     acc_row.clear();
@@ -218,17 +286,36 @@ pub fn fully_connected_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
     out: &mut [T],
     epi: E,
 ) {
+    fully_connected_s8_fast_shifted(x, weights, bias, w_row_sums, input_offset, 0, out, epi)
+}
+
+/// [`fully_connected_s8_fast`] on a nested rung. `w_row_sums` must be the
+/// row sums of the **truncated** weights (`Σ_i (w[j,i] >> s)` — see
+/// [`weight_row_sums_shifted`]): truncation does not distribute over the
+/// sum, so each rung carries its own deploy-time row-sum vector.
+#[allow(clippy::too_many_arguments)]
+pub fn fully_connected_s8_fast_shifted<T: Copy + Default, E: Fn(i32, usize) -> T>(
+    x: &[i8],
+    weights: &Tensor<i8>,
+    bias: &[i32],
+    w_row_sums: &[i32],
+    input_offset: i32,
+    weight_shift: u32,
+    out: &mut [T],
+    epi: E,
+) {
     let (h, d) = (weights.shape().dim(0), weights.shape().dim(1));
     assert_eq!(x.len(), d, "fc input length");
     assert_eq!(bias.len(), h, "fc bias length");
     assert_eq!(w_row_sums.len(), h, "fc row-sum length");
     assert_eq!(out.len(), h, "fc output length");
+    assert!(weight_shift < 8, "fc: shift must leave at least one weight bit");
     let wd = weights.data();
     for j in 0..h {
         let row = &wd[j * d..(j + 1) * d];
         let mut acc = bias[j] + input_offset * w_row_sums[j];
         for (&xv, &wv) in x.iter().zip(row.iter()) {
-            acc += xv as i32 * wv as i32;
+            acc += xv as i32 * ((wv as i32) >> weight_shift);
         }
         out[j] = epi(acc, j);
     }
@@ -237,9 +324,17 @@ pub fn fully_connected_s8_fast<T: Copy + Default, E: Fn(i32, usize) -> T>(
 /// Row sums of an `[h, d]` int8 weight matrix (deploy-time constant for
 /// [`fully_connected_s8_fast`]).
 pub fn weight_row_sums(weights: &Tensor<i8>) -> Vec<i32> {
+    weight_row_sums_shifted(weights, 0)
+}
+
+/// Row sums of the rung-truncated weights, `Σ_i (w[j,i] >> s)` — the
+/// deploy-time constant for [`fully_connected_s8_fast_shifted`].
+pub fn weight_row_sums_shifted(weights: &Tensor<i8>, weight_shift: u32) -> Vec<i32> {
     let (h, d) = (weights.shape().dim(0), weights.shape().dim(1));
     let wd = weights.data();
-    (0..h).map(|j| wd[j * d..(j + 1) * d].iter().map(|&v| v as i32).sum()).collect()
+    (0..h)
+        .map(|j| wd[j * d..(j + 1) * d].iter().map(|&v| (v as i32) >> weight_shift).sum())
+        .collect()
 }
 
 /// Convenience epilogue: requantize through `r` (the common i8 instantiation).
@@ -348,6 +443,69 @@ mod tests {
         let mut got = vec![0i8; want.numel()];
         convolve_s8_fast(&x, &kt, &bias, 5, &geom, &mut cols, &mut got, requant_epi(&r));
         assert_eq!(&got, want.data());
+    }
+
+    #[test]
+    fn shifted_kernels_bit_exact_vs_naive_on_truncated_weights() {
+        // Inline `(w as i32) >> s` in the fast path must equal the naive
+        // kernels fed a materialized `w >> s` i8 tensor, for every rung.
+        Checker::new(0x51DC, 30).check("shifted fast == naive(w >> s)", |rng| {
+            let shift = *rng.choice(&[4u32, 6]);
+            let h = rng.int_range(3, 8) as usize;
+            let w = rng.int_range(3, 8) as usize;
+            let cin = rng.int_range(1, 5) as usize;
+            let cout = rng.int_range(1, 6) as usize;
+            let geom = ConvGeom::same(3, 1);
+            let x = Tensor::from_vec(Shape::hwc(h, w, cin), rand_i8(rng, h * w * cin, -128, 127));
+            let kt = Tensor::from_vec(
+                Shape::ohwi(cout, 3, 3, cin),
+                rand_i8(rng, cout * 9 * cin, -127, 127),
+            );
+            let bias: Vec<i32> = (0..cout).map(|_| rng.int_range(-2000, 2000) as i32).collect();
+            let off = rng.int_range(-128, 128) as i32;
+            let kt_trunc = Tensor::from_vec(
+                kt.shape().clone(),
+                kt.data().iter().map(|&v| v >> shift).collect(),
+            );
+            let want = convolve_s8_acc(&x, &kt_trunc, &bias, off, &geom);
+            let mut cols = Vec::new();
+            let mut got = vec![0i32; want.numel()];
+            convolve_s8_fast_shifted(&x, &kt, &bias, off, shift, &geom, &mut cols, &mut got, |a, _| a);
+            if got != *want.data() {
+                return Err(format!("conv rung mismatch (shift {shift})"));
+            }
+            // Depthwise on the same rung.
+            let c = cin;
+            let kd = Tensor::from_vec(Shape::new(&[c, 3, 3]), rand_i8(rng, c * 9, -127, 127));
+            let kd_trunc =
+                Tensor::from_vec(kd.shape().clone(), kd.data().iter().map(|&v| v >> shift).collect());
+            let dbias: Vec<i32> = (0..c).map(|_| rng.int_range(-2000, 2000) as i32).collect();
+            let dwant = dwconv_s8_acc(&x, &kd_trunc, &dbias, off, &geom);
+            let (mut wt, mut acc_row) = (Vec::new(), Vec::new());
+            let mut dgot = vec![0i32; dwant.numel()];
+            dwconv_s8_fast_shifted(
+                &x, &kd, &dbias, off, shift, &geom, &mut wt, &mut acc_row, &mut dgot, |a, _| a,
+            );
+            if dgot != *dwant.data() {
+                return Err(format!("dwconv rung mismatch (shift {shift})"));
+            }
+            // Fully connected: per-rung row sums, naive fed truncated weights.
+            let d = rng.int_range(1, 64) as usize;
+            let hh = rng.int_range(1, 12) as usize;
+            let fx = rand_i8(rng, d, -128, 127);
+            let fw = Tensor::from_vec(Shape::new(&[hh, d]), rand_i8(rng, hh * d, -127, 127));
+            let fw_trunc =
+                Tensor::from_vec(fw.shape().clone(), fw.data().iter().map(|&v| v >> shift).collect());
+            let fbias: Vec<i32> = (0..hh).map(|_| rng.int_range(-5000, 5000) as i32).collect();
+            let fwant = fully_connected_s8_acc(&fx, &fw_trunc, &fbias, off);
+            let sums = weight_row_sums_shifted(&fw, shift);
+            let mut fgot = vec![0i32; hh];
+            fully_connected_s8_fast_shifted(&fx, &fw, &fbias, &sums, off, shift, &mut fgot, |a, _| a);
+            if fgot != fwant {
+                return Err(format!("fc rung mismatch (shift {shift})"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

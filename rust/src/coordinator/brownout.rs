@@ -1,0 +1,272 @@
+//! Precision brownout: adaptive bit-width serving as graceful degradation
+//! under overload.
+//!
+//! The paper's probabilistic grids quantify how much precision an input
+//! needs; the nested 8/4/2-bit rungs of [`crate::nn::Int8Executor::rung`]
+//! make precision a *runtime* axis. This module is the control half: a
+//! load signal (queue depth plus the p99 from the exact latency histogram)
+//! drives a hysteresis state machine
+//! `Normal → Degrade4 → Degrade2 → Shed`, and the server's brownout
+//! submission path walks the rung ladder instead of falling off the 429
+//! cliff — a request is only shed once every rung at or below the state's
+//! cap is saturated (or the terminal `Shed` state was reached).
+//!
+//! Escalation is instant (overload hurts now); de-escalation is slow — a
+//! state must have been held for [`BrownoutConfig::min_dwell`] *and* the
+//! load must have fallen below `enter · exit_ratio` before stepping down
+//! one rung. Both together are the anti-flapping contract: a load
+//! oscillating around an entry threshold holds the degraded state instead
+//! of toggling precision every request.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The brownout ladder's states, in escalation order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutState {
+    /// Serve at the requested precision.
+    Normal,
+    /// Cap int8 variants at the 4-bit rung.
+    Degrade4,
+    /// Cap int8 variants at the 2-bit rung.
+    Degrade2,
+    /// Ladder exhausted: shed (429 + `Retry-After`).
+    Shed,
+}
+
+impl BrownoutState {
+    /// Gauge encoding for `pdq_brownout_state` (0..=3).
+    pub fn gauge(self) -> u32 {
+        match self {
+            BrownoutState::Normal => 0,
+            BrownoutState::Degrade4 => 1,
+            BrownoutState::Degrade2 => 2,
+            BrownoutState::Shed => 3,
+        }
+    }
+
+    /// Largest rung bit-width this state serves int8 variants at
+    /// (`None` = shedding, nothing is served).
+    pub fn bits_cap(self) -> Option<u32> {
+        match self {
+            BrownoutState::Normal => Some(8),
+            BrownoutState::Degrade4 => Some(4),
+            BrownoutState::Degrade2 => Some(2),
+            BrownoutState::Shed => None,
+        }
+    }
+
+    fn from_level(level: usize) -> BrownoutState {
+        match level {
+            0 => BrownoutState::Normal,
+            1 => BrownoutState::Degrade4,
+            2 => BrownoutState::Degrade2,
+            _ => BrownoutState::Shed,
+        }
+    }
+}
+
+/// Brownout knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutConfig {
+    /// Load at which each degraded state is entered:
+    /// `enter[0] → Degrade4`, `enter[1] → Degrade2`, `enter[2] → Shed`.
+    /// The queue-depth term of the load signal saturates at 1.0, so with
+    /// the default thresholds `Shed` is only reachable when the p99 term
+    /// blows well past the SLO — queue pressure alone degrades precision,
+    /// it never sheds.
+    pub enter: [f32; 3],
+    /// A state exits (one step down) at `enter · exit_ratio` — the
+    /// hysteresis band.
+    pub exit_ratio: f32,
+    /// Minimum time in a state before de-escalating (escalation is
+    /// always instant).
+    pub min_dwell: Duration,
+    /// p99 latency SLO in microseconds; the latency term of the load
+    /// signal is `p99 / slo`. 0 disables the latency term.
+    pub slo_p99_us: f32,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        Self {
+            enter: [0.60, 0.85, 1.50],
+            exit_ratio: 0.5,
+            min_dwell: Duration::from_millis(250),
+            slo_p99_us: 50_000.0,
+        }
+    }
+}
+
+/// The hysteresis state machine (see module docs). Interior-mutable so the
+/// server can observe through a shared reference on every submission.
+pub struct BrownoutController {
+    cfg: BrownoutConfig,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    /// 0 = Normal .. 3 = Shed.
+    level: usize,
+    /// When the current level was entered.
+    since: Instant,
+}
+
+impl BrownoutController {
+    /// A controller starting in [`BrownoutState::Normal`].
+    pub fn new(cfg: BrownoutConfig) -> BrownoutController {
+        BrownoutController { cfg, inner: Mutex::new(Inner { level: 0, since: Instant::now() }) }
+    }
+
+    /// The knobs this controller runs with.
+    pub fn config(&self) -> &BrownoutConfig {
+        &self.cfg
+    }
+
+    /// The combined load signal: `max(depth / limit, p99 / slo)`, each
+    /// term skipped when its denominator is 0 (unbounded admission / SLO
+    /// disabled).
+    pub fn load(&self, depth: usize, limit: usize, p99_us: f32) -> f32 {
+        let mut load = 0.0f32;
+        if limit > 0 {
+            load = load.max(depth as f32 / limit as f32);
+        }
+        if self.cfg.slo_p99_us > 0.0 {
+            load = load.max(p99_us / self.cfg.slo_p99_us);
+        }
+        load
+    }
+
+    /// The current state, without observing anything.
+    pub fn state(&self) -> BrownoutState {
+        BrownoutState::from_level(self.inner.lock().unwrap().level)
+    }
+
+    /// Feed one load observation at `now` and return the (possibly
+    /// updated) state. `now` is a parameter, not `Instant::now()`, so the
+    /// dwell/hysteresis behavior is deterministic under test.
+    pub fn observe(&self, load: f32, now: Instant) -> BrownoutState {
+        let mut inner = self.inner.lock().unwrap();
+        // Escalate instantly to the highest threshold the load crosses.
+        let target = self.cfg.enter.iter().take_while(|&&t| load >= t).count();
+        if target > inner.level {
+            inner.level = target;
+            inner.since = now;
+            return BrownoutState::from_level(inner.level);
+        }
+        // De-escalate one step at a time, only after the dwell and only
+        // once the load has left the hysteresis band below the current
+        // level's entry threshold.
+        if inner.level > 0
+            && now.saturating_duration_since(inner.since) >= self.cfg.min_dwell
+            && load < self.cfg.enter[inner.level - 1] * self.cfg.exit_ratio
+        {
+            inner.level -= 1;
+            inner.since = now;
+        }
+        BrownoutState::from_level(inner.level)
+    }
+
+    /// Pin the state (deterministic tests; also the operator escape hatch).
+    pub fn force_state(&self, state: BrownoutState, now: Instant) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.level = state.gauge() as usize;
+        inner.since = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> BrownoutController {
+        BrownoutController::new(BrownoutConfig::default())
+    }
+
+    #[test]
+    fn escalates_instantly_and_in_order() {
+        let c = ctl();
+        let t0 = Instant::now();
+        assert_eq!(c.state(), BrownoutState::Normal);
+        assert_eq!(c.observe(0.3, t0), BrownoutState::Normal);
+        assert_eq!(c.observe(0.65, t0), BrownoutState::Degrade4);
+        assert_eq!(c.observe(0.9, t0), BrownoutState::Degrade2);
+        // A load spike jumps straight to the matching level.
+        let c2 = ctl();
+        assert_eq!(c2.observe(2.0, t0), BrownoutState::Shed);
+    }
+
+    #[test]
+    fn deescalation_needs_dwell_and_hysteresis_gap() {
+        let c = ctl();
+        let t0 = Instant::now();
+        assert_eq!(c.observe(0.7, t0), BrownoutState::Degrade4);
+        // Load drops below the entry threshold but stays inside the
+        // hysteresis band: no exit, ever.
+        let after_dwell = t0 + Duration::from_millis(300);
+        assert_eq!(c.observe(0.45, after_dwell), BrownoutState::Degrade4);
+        // Below the band but before the dwell: still no exit.
+        assert_eq!(c.observe(0.1, t0 + Duration::from_millis(100)), BrownoutState::Degrade4);
+        // Below the band and past the dwell: one step down.
+        assert_eq!(c.observe(0.1, after_dwell), BrownoutState::Normal);
+    }
+
+    #[test]
+    fn no_flapping_at_the_boundary() {
+        // Load oscillating around the Degrade4 entry threshold: the state
+        // escalates once and then holds — zero exits, zero re-entries.
+        let c = ctl();
+        let t0 = Instant::now();
+        let mut transitions = 0;
+        let mut last = c.state();
+        for i in 0..200 {
+            let load = if i % 2 == 0 { 0.62 } else { 0.58 };
+            let s = c.observe(load, t0 + Duration::from_millis(10 * i as u64));
+            if s != last {
+                transitions += 1;
+                last = s;
+            }
+        }
+        assert_eq!(last, BrownoutState::Degrade4);
+        assert_eq!(transitions, 1, "boundary oscillation must not flap");
+    }
+
+    #[test]
+    fn steps_down_one_level_at_a_time() {
+        let c = ctl();
+        let t0 = Instant::now();
+        assert_eq!(c.observe(2.0, t0), BrownoutState::Shed);
+        let t1 = t0 + Duration::from_millis(300);
+        assert_eq!(c.observe(0.0, t1), BrownoutState::Degrade2);
+        // Immediately after stepping down the dwell restarts.
+        assert_eq!(c.observe(0.0, t1 + Duration::from_millis(10)), BrownoutState::Degrade2);
+        let t2 = t1 + Duration::from_millis(300);
+        assert_eq!(c.observe(0.0, t2), BrownoutState::Degrade4);
+        assert_eq!(c.observe(0.0, t2 + Duration::from_millis(300)), BrownoutState::Normal);
+    }
+
+    #[test]
+    fn load_signal_combines_depth_and_p99() {
+        let c = ctl();
+        assert_eq!(c.load(0, 0, 0.0), 0.0);
+        // Depth term: fraction of the admission limit.
+        assert!((c.load(3, 4, 0.0) - 0.75).abs() < 1e-6);
+        // p99 term: fraction of the SLO (default 50ms).
+        assert!((c.load(0, 4, 100_000.0) - 2.0).abs() < 1e-6);
+        // Max of both, and a zero limit disables the depth term.
+        assert!((c.load(4, 4, 25_000.0) - 1.0).abs() < 1e-6);
+        assert!((c.load(1_000, 0, 0.0) - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn force_state_pins_and_caps_match() {
+        let c = ctl();
+        c.force_state(BrownoutState::Degrade2, Instant::now());
+        assert_eq!(c.state(), BrownoutState::Degrade2);
+        assert_eq!(BrownoutState::Normal.bits_cap(), Some(8));
+        assert_eq!(BrownoutState::Degrade4.bits_cap(), Some(4));
+        assert_eq!(BrownoutState::Degrade2.bits_cap(), Some(2));
+        assert_eq!(BrownoutState::Shed.bits_cap(), None);
+        assert_eq!(BrownoutState::Shed.gauge(), 3);
+    }
+}

@@ -142,7 +142,7 @@ mod tests {
         let calib = tiny_calib(2, 4);
         for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
             let engine = EngineBuilder::new(&model)
-                .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor })
+                .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor, bits: 8 })
                 .calibration_images(&calib)
                 .build()
                 .expect("lowering succeeds");

@@ -113,6 +113,12 @@ struct Inner {
     /// [`Metrics::register_variant`] are tracked, so unknown-variant spam
     /// cannot grow this map unboundedly.
     variants: BTreeMap<String, VariantCounters>,
+    /// Responses served per effective precision (32 = fp32, 8/4/2 = the
+    /// int8 truncation rungs) — the brownout ladder's observable output.
+    precision_served: BTreeMap<u32, u64>,
+    /// Current brownout rung as a gauge: 0 Normal, 1 Degrade4, 2 Degrade2,
+    /// 3 Shed. Stays 0 when brownout is disabled.
+    brownout_state: u32,
 }
 
 /// Shared metrics registry (cheap enough to lock per event).
@@ -149,6 +155,8 @@ impl Metrics {
                 latency_sum_us: 0.0,
                 latency_hist: [0; LATENCY_BUCKETS_US.len() + 1],
                 variants: BTreeMap::new(),
+                precision_served: BTreeMap::new(),
+                brownout_state: 0,
             }),
         }
     }
@@ -204,6 +212,28 @@ impl Metrics {
         if let Some(v) = m.variants.get_mut(wire) {
             v.engine_errors += 1;
         }
+    }
+
+    /// A response served at an effective precision (the brownout ladder's
+    /// outcome; 32 for fp32, 8/4/2 for the int8 rungs).
+    pub fn on_precision_served(&self, bits: u32) {
+        *self.inner.lock().unwrap().precision_served.entry(bits).or_insert(0) += 1;
+    }
+
+    /// Responses served at a precision (0 if never seen).
+    pub fn precision_served(&self, bits: u32) -> u64 {
+        self.inner.lock().unwrap().precision_served.get(&bits).copied().unwrap_or(0)
+    }
+
+    /// Publish the brownout controller's current rung (0 Normal,
+    /// 1 Degrade4, 2 Degrade2, 3 Shed).
+    pub fn set_brownout_state(&self, state: u32) {
+        self.inner.lock().unwrap().brownout_state = state;
+    }
+
+    /// The last published brownout rung.
+    pub fn brownout_state(&self) -> u32 {
+        self.inner.lock().unwrap().brownout_state
     }
 
     /// A variant's request count (0 for unregistered wires).
@@ -355,15 +385,23 @@ impl Metrics {
     /// hint): an O(buckets) walk of the exact histogram, returning the
     /// upper bound of the bucket holding the median. 0 with no data.
     pub fn latency_p50_hint_us(&self) -> f32 {
+        self.latency_quantile_hint_us(0.5)
+    }
+
+    /// Cheap quantile estimate from the exact histogram, same contract as
+    /// [`Metrics::latency_p50_hint_us`] but for any `q` in (0, 1] — the
+    /// brownout load signal reads p99 from here every request, which a
+    /// reservoir sort would make unreasonably expensive.
+    pub fn latency_quantile_hint_us(&self, q: f64) -> f32 {
         let m = self.inner.lock().unwrap();
         if m.responses == 0 {
             return 0.0;
         }
-        let half = m.responses.div_ceil(2);
+        let rank = ((m.responses as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
         let mut cum = 0u64;
         for (i, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
             cum += m.latency_hist[i];
-            if cum >= half {
+            if cum >= rank {
                 return ub;
             }
         }
@@ -414,6 +452,11 @@ impl Metrics {
             variants.set(wire, vo);
         }
         o.set("variants", variants);
+        let mut served = Json::obj();
+        for (bits, n) in &m.precision_served {
+            served.set(&bits.to_string(), *n);
+        }
+        o.set("precision_served", served).set("brownout_state", m.brownout_state as u64);
         o
     }
 
@@ -490,6 +533,15 @@ impl Metrics {
                 stats::percentile(&m.latencies_us.samples, pct)
             ));
         }
+        // Brownout observability: precision histogram + state gauge.
+        s.push_str("# HELP pdq_precision_served_total Responses served per effective precision.\n");
+        s.push_str("# TYPE pdq_precision_served_total counter\n");
+        for (bits, n) in &m.precision_served {
+            s.push_str(&format!("pdq_precision_served_total{{bits=\"{bits}\"}} {n}\n"));
+        }
+        s.push_str("# HELP pdq_brownout_state Brownout rung: 0 normal, 1 degrade4, 2 degrade2, 3 shed.\n");
+        s.push_str("# TYPE pdq_brownout_state gauge\n");
+        s.push_str(&format!("pdq_brownout_state {}\n", m.brownout_state));
         // Per-variant breakdown (requests/responses/errors + quantiles).
         if !m.variants.is_empty() {
             s.push_str("# HELP pdq_variant_requests_total Requests submitted, per variant.\n");
@@ -675,6 +727,45 @@ mod tests {
         assert!(prom.contains("pdq_variant_responses_total{variant=\"m|int8-ours-t\"} 1"));
         assert!(prom.contains("pdq_variant_engine_errors_total{variant=\"m|int8-ours-t\"} 1"));
         assert!(prom.contains("pdq_variant_latency_us_quantile{variant=\"m|fp32\",q=\"0.5\"}"));
+    }
+
+    #[test]
+    fn precision_counters_and_brownout_gauge() {
+        let m = Metrics::default();
+        assert_eq!(m.brownout_state(), 0);
+        assert_eq!(m.precision_served(8), 0);
+        m.on_precision_served(8);
+        m.on_precision_served(4);
+        m.on_precision_served(4);
+        m.set_brownout_state(1);
+        assert_eq!(m.precision_served(8), 1);
+        assert_eq!(m.precision_served(4), 2);
+        assert_eq!(m.precision_served(2), 0);
+        assert_eq!(m.brownout_state(), 1);
+        let j = m.to_json();
+        let served = j.get("precision_served").unwrap();
+        assert_eq!(served.get("4").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("brownout_state").unwrap().as_usize(), Some(1));
+        let prom = m.to_prometheus();
+        assert!(prom.contains("pdq_precision_served_total{bits=\"8\"} 1"));
+        assert!(prom.contains("pdq_precision_served_total{bits=\"4\"} 2"));
+        assert!(prom.contains("pdq_brownout_state 1"));
+    }
+
+    #[test]
+    fn quantile_hint_walks_the_exact_histogram() {
+        let m = Metrics::default();
+        // 90 fast responses, 10 slow: p50 in le=100, p99 in le=5000.
+        for _ in 0..90 {
+            m.on_response(Duration::from_micros(80));
+        }
+        for _ in 0..10 {
+            m.on_response(Duration::from_micros(4000));
+        }
+        assert_eq!(m.latency_p50_hint_us(), 100.0);
+        assert_eq!(m.latency_quantile_hint_us(0.5), 100.0);
+        assert_eq!(m.latency_quantile_hint_us(0.99), 5e3);
+        assert_eq!(Metrics::default().latency_quantile_hint_us(0.99), 0.0);
     }
 
     #[test]

@@ -24,6 +24,10 @@
 //!   the same 16-image calibration set).
 //! - [`metrics`] — request counters + latency reservoir (global and
 //!   per-variant, keyed by wire name), JSON- and Prometheus-exportable.
+//! - [`brownout`] — the precision-brownout state machine: under overload
+//!   [`server::Server::try_submit_graceful`] walks each int8 variant's
+//!   nested 8/4/2-bit rung ladder (degrade precision, keep answering)
+//!   and only sheds once the ladder is exhausted.
 //!
 //! With [`server::Server::start_adaptive`] the coordinator also owns the
 //! online-adaptation recal worker: a background thread ticking
@@ -32,10 +36,12 @@
 //! first, so no grid swap can land mid-shutdown).
 
 pub mod batcher;
+pub mod brownout;
 pub mod calibrate;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod worker;
 
+pub use brownout::{BrownoutConfig, BrownoutController, BrownoutState};
 pub use server::{Request, Response, Server, ServerConfig, SubmitError};

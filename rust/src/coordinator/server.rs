@@ -23,6 +23,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::BatchPolicy;
+use super::brownout::{BrownoutConfig, BrownoutController, BrownoutState};
 use super::metrics::Metrics;
 use super::router::{Router, VariantKey};
 use super::worker::{spawn_workers, Job};
@@ -60,11 +61,20 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Per-variant in-flight bound for [`Server::try_submit`]; 0 = unbounded.
     pub max_queue_depth: usize,
+    /// Precision-brownout controller knobs; `None` (the default) disables
+    /// brownout entirely — [`Server::try_submit_graceful`] then behaves
+    /// exactly like [`Server::try_submit`].
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers_per_variant: 2, policy: BatchPolicy::default(), max_queue_depth: 0 }
+        Self {
+            workers_per_variant: 2,
+            policy: BatchPolicy::default(),
+            max_queue_depth: 0,
+            brownout: None,
+        }
     }
 }
 
@@ -105,6 +115,10 @@ pub struct Server {
     adapt: Option<Arc<AdaptManager>>,
     adapt_stop: Arc<AtomicBool>,
     adapt_handle: Mutex<Option<JoinHandle<()>>>,
+    /// Precision-brownout state machine ([`ServerConfig::brownout`]).
+    brownout: Option<BrownoutController>,
+    /// Worker threads per variant (the front door's drain-rate estimate).
+    workers_per_variant: usize,
 }
 
 impl Server {
@@ -200,6 +214,8 @@ impl Server {
             adapt,
             adapt_stop,
             adapt_handle: Mutex::new(adapt_handle),
+            brownout: config.brownout.map(BrownoutController::new),
+            workers_per_variant: config.workers_per_variant.max(1),
         }
     }
 
@@ -273,6 +289,111 @@ impl Server {
                 Err(SubmitError::Draining)
             }
         }
+    }
+
+    /// Brownout-aware submission: the network front door's path when
+    /// serving with `--brownout`. Returns the receiver, the permit, and
+    /// the precision (bits) actually served.
+    ///
+    /// With brownout disabled this is exactly [`Server::try_submit`] (plus
+    /// the requested spec's bits). With it enabled, every submission feeds
+    /// one load observation (requested variant's queue depth + global p99)
+    /// to the [`BrownoutController`], then walks the rung ladder: every
+    /// registered rung of the requested int8 variant at or below the
+    /// state's bit cap, in descending precision order. The request is shed
+    /// (`Overloaded`) only when the ladder is exhausted — every candidate
+    /// rung at its in-flight limit — or the controller reached `Shed`.
+    /// Requests are counted under the wire that actually served them;
+    /// non-int8 variants have no rungs and only gain the `Shed` gate.
+    pub fn try_submit_graceful(
+        &self,
+        variant: VariantKey,
+        id: u64,
+        image: Tensor<f32>,
+    ) -> Result<(mpsc::Receiver<Response>, Permit, u32), SubmitError> {
+        let Some(ctl) = &self.brownout else {
+            let bits = variant.spec.precision_bits();
+            return self.try_submit(variant, id, image).map(|(rx, p)| (rx, p, bits));
+        };
+        if !self.catalog.iter().any(|(k, _)| *k == variant) {
+            self.metrics.on_request_for(&variant.wire());
+            self.metrics.on_reject();
+            return Err(SubmitError::UnknownVariant(variant.wire()));
+        }
+        let depth = self.admission.depth(&variant);
+        let p99 = self.metrics.latency_quantile_hint_us(0.99);
+        let load = ctl.load(depth, self.admission.limit(), p99);
+        let state = ctl.observe(load, Instant::now());
+        self.metrics.set_brownout_state(state.gauge());
+        if state == BrownoutState::Shed {
+            self.metrics.on_request_for(&variant.wire());
+            self.metrics.on_shed();
+            return Err(SubmitError::Overloaded { depth: self.admission.limit() });
+        }
+        // The ladder: registered rungs of this variant at or below the
+        // state's cap, most precise first. Non-int8 variants (no rungs)
+        // degrade by not degrading — their single candidate is themselves.
+        let cap = state.bits_cap().unwrap_or(8);
+        let mut candidates = Vec::new();
+        if variant.spec.at_bits(8).is_some() {
+            let req_bits = variant.spec.precision_bits();
+            for bits in [8u32, 4, 2] {
+                if bits > req_bits || bits > cap {
+                    continue;
+                }
+                let key = VariantKey::new(
+                    variant.model.clone(),
+                    variant.spec.at_bits(bits).expect("int8 spec has rungs"),
+                );
+                if self.catalog.iter().any(|(k, _)| *k == key) {
+                    candidates.push(key);
+                }
+            }
+        }
+        if candidates.is_empty() {
+            candidates.push(variant.clone());
+        }
+        for key in candidates {
+            match self.admission.try_acquire(&key) {
+                Ok(permit) => {
+                    self.metrics.on_request_for(&key.wire());
+                    let (tx, rx) = mpsc::channel();
+                    let job = Job {
+                        request: Request { id, variant: key.clone(), image, reply: tx },
+                        enqueued: Instant::now(),
+                    };
+                    return match self.router.read().unwrap().route(&key, job) {
+                        Ok(()) => {
+                            let bits = key.spec.precision_bits();
+                            self.metrics.on_precision_served(bits);
+                            Ok((rx, permit, bits))
+                        }
+                        Err(_) => {
+                            self.metrics.on_reject_draining();
+                            Err(SubmitError::Draining)
+                        }
+                    };
+                }
+                // This rung is saturated (or unregistered under a raced
+                // catalog change): walk down to the next one.
+                Err(AdmissionError::UnknownKey) | Err(AdmissionError::Full { .. }) => continue,
+            }
+        }
+        // Ladder exhausted: now — and only now — the 429 cliff.
+        self.metrics.on_request_for(&variant.wire());
+        self.metrics.on_shed();
+        Err(SubmitError::Overloaded { depth: self.admission.limit() })
+    }
+
+    /// The brownout controller, when [`ServerConfig::brownout`] enabled it.
+    pub fn brownout(&self) -> Option<&BrownoutController> {
+        self.brownout.as_ref()
+    }
+
+    /// Worker threads per variant — the drain-rate denominator for the
+    /// front door's load-proportional `Retry-After`.
+    pub fn workers_per_variant(&self) -> usize {
+        self.workers_per_variant
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -431,6 +552,7 @@ mod tests {
                 workers_per_variant: 1,
                 policy: BatchPolicy { max_batch: 1, deadline: Duration::from_millis(1) },
                 max_queue_depth: 0,
+                brownout: None,
             },
         );
         let key = fp32_key("m");
@@ -537,6 +659,7 @@ mod tests {
             VariantSpec::Int8 {
                 mode: QuantMode::Probabilistic,
                 weight_gran: Granularity::PerTensor,
+                bits: 8,
             },
         );
         let server = Server::start(
@@ -555,6 +678,70 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.responses(), 8);
+    }
+
+    #[test]
+    fn graceful_submit_without_brownout_matches_try_submit() {
+        let server = Server::start(
+            vec![float_variant("m")],
+            ServerConfig { max_queue_depth: 1, ..Default::default() },
+        );
+        let key = fp32_key("m");
+        let (rx, permit, bits) = server
+            .try_submit_graceful(key.clone(), 1, Tensor::full(Shape::hwc(2, 2, 1), 0.5))
+            .unwrap();
+        assert_eq!(bits, 32, "fp32 serves at full precision");
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        drop(permit);
+        assert!(server.brownout().is_none());
+        assert_eq!(server.metrics().brownout_state(), 0);
+        // Disabled brownout records no precision counters (zero overhead).
+        assert_eq!(server.metrics().precision_served(32), 0);
+        server.drain();
+    }
+
+    #[test]
+    fn brownout_sheds_on_exhausted_ladder_and_in_shed_state() {
+        let server = Server::start(
+            vec![float_variant("m")],
+            ServerConfig {
+                max_queue_depth: 1,
+                brownout: Some(BrownoutConfig {
+                    // Deterministic: no de-escalation mid-test.
+                    min_dwell: Duration::from_secs(3600),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        );
+        let key = fp32_key("m");
+        let img = || Tensor::full(Shape::hwc(2, 2, 1), 1.0);
+        let (rx, permit, bits) = server.try_submit_graceful(key.clone(), 1, img()).unwrap();
+        assert_eq!(bits, 32);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(server.metrics().precision_served(32), 1);
+        // Slot still held: fp32 has no cheaper rung, so the one-candidate
+        // ladder is exhausted and the request sheds.
+        match server.try_submit_graceful(key.clone(), 2, img()) {
+            Err(SubmitError::Overloaded { .. }) => {}
+            other => panic!("want Overloaded, got {other:?}", other = other.err()),
+        }
+        assert_eq!(server.metrics().shed(), 1);
+        drop(permit);
+        // Forced Shed state refuses even with a free slot.
+        server.brownout().unwrap().force_state(BrownoutState::Shed, Instant::now());
+        match server.try_submit_graceful(key.clone(), 3, img()) {
+            Err(SubmitError::Overloaded { .. }) => {}
+            other => panic!("want Overloaded, got {other:?}", other = other.err()),
+        }
+        assert_eq!(server.metrics().brownout_state(), 3);
+        assert_eq!(server.metrics().shed(), 2);
+        // Unknown variants stay typed errors, not ladder walks.
+        match server.try_submit_graceful(fp32_key("ghost"), 4, img()) {
+            Err(SubmitError::UnknownVariant(_)) => {}
+            other => panic!("want UnknownVariant, got {other:?}", other = other.err()),
+        }
+        server.drain();
     }
 
     #[test]

@@ -149,7 +149,11 @@ impl Int8Engine {
 
 impl Engine for Int8Engine {
     fn spec(&self) -> VariantSpec {
-        VariantSpec::Int8 { mode: self.ex.mode(), weight_gran: self.ex.weight_granularity() }
+        VariantSpec::Int8 {
+            mode: self.ex.mode(),
+            weight_gran: self.ex.weight_granularity(),
+            bits: self.ex.bits(),
+        }
     }
 
     fn input_shape(&self) -> &Shape {

@@ -156,7 +156,7 @@ impl<'m> EngineBuilder<'m> {
                 let ex = self.build_executor()?;
                 Ok(Arc::new(QuantEngine::new(Arc::new(ex))))
             }
-            VariantSpec::Int8 { mode, weight_gran } => {
+            VariantSpec::Int8 { mode, weight_gran, bits } => {
                 // The f32 emulator is calibration scaffolding only: int8
                 // activations are per-tensor by construction (CMSIS).
                 let settings = self.quant_settings(mode, Granularity::PerTensor);
@@ -164,6 +164,13 @@ impl<'m> EngineBuilder<'m> {
                 ex.calibrate(&self.take_calib());
                 let int8 =
                     Int8Executor::lower(&ex, weight_gran).map_err(EngineError::InvalidSpec)?;
+                // The truncation rungs derive from the full 8-bit program
+                // (the spec's `bits`, not the fake-quant emulator knob).
+                let int8 = if bits == 8 {
+                    int8
+                } else {
+                    int8.rung(bits).map_err(EngineError::InvalidSpec)?
+                };
                 Ok(Arc::new(Int8Engine::new(Arc::new(int8))))
             }
         }
@@ -178,8 +185,9 @@ impl<'m> EngineBuilder<'m> {
 
 /// The standard serving menu for one model: fp32 plus the paper's three
 /// requantization modes, each as fake-quant emulation and as true int8
-/// (per-tensor grids), all sharing one calibration set — what `pdq serve`
-/// registers.
+/// (per-tensor grids, all three truncation rungs so the brownout ladder
+/// has somewhere to step), all sharing one calibration set — what
+/// `pdq serve` registers.
 pub fn standard_menu(model: &Model) -> Result<Vec<(VariantKey, Arc<dyn Engine>)>, EngineError> {
     let calib = calibration_images(model.task, CALIB_SIZE);
     let mut out = vec![EngineBuilder::new(model).calibration_images(&calib).build_variant()?];
@@ -192,12 +200,14 @@ pub fn standard_menu(model: &Model) -> Result<Vec<(VariantKey, Arc<dyn Engine>)>
         );
     }
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        out.push(
-            EngineBuilder::new(model)
-                .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor })
-                .calibration_images(&calib)
-                .build_variant()?,
-        );
+        for bits in [8u32, 4, 2] {
+            out.push(
+                EngineBuilder::new(model)
+                    .spec(VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor, bits })
+                    .calibration_images(&calib)
+                    .build_variant()?,
+            );
+        }
     }
     Ok(out)
 }
@@ -224,12 +234,15 @@ mod tests {
                 .build(),
             Err(EngineError::InvalidSpec(_))
         ));
-        // Int8 lowering refuses non-8-bit grids with a typed error.
+        // Int8 lowering refuses non-8-bit *grids* with a typed error: the
+        // builder's `.bits()` knob is the fake-quant emulator width, not
+        // the rung (that lives on the spec).
         assert!(matches!(
             EngineBuilder::new(&model)
                 .spec(VariantSpec::Int8 {
                     mode: QuantMode::Static,
-                    weight_gran: Granularity::PerTensor
+                    weight_gran: Granularity::PerTensor,
+                    bits: 8
                 })
                 .bits(4)
                 .build(),
@@ -242,14 +255,16 @@ mod tests {
     }
 
     #[test]
-    fn standard_menu_builds_all_seven_variants() {
+    fn standard_menu_builds_all_thirteen_variants() {
         let model = demo_model("demo");
         let menu = standard_menu(&model).expect("menu builds");
-        assert_eq!(menu.len(), 7);
+        assert_eq!(menu.len(), 13);
         let wires: Vec<String> = menu.iter().map(|(k, _)| k.wire()).collect();
         assert!(wires.contains(&"demo|fp32".to_string()));
         assert!(wires.contains(&"demo|ours-t".to_string()));
         assert!(wires.contains(&"demo|int8-ours-t".to_string()));
+        assert!(wires.contains(&"demo|int8-static-t@4".to_string()));
+        assert!(wires.contains(&"demo|int8-ours-t@2".to_string()));
         for (key, engine) in &menu {
             assert_eq!(key.spec, engine.spec(), "key and engine must agree");
             let mut session = engine.compile().expect("compiles");

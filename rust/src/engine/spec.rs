@@ -8,7 +8,10 @@
 //! sync by hand. [`VariantKey`] pairs a spec with a model name and owns the
 //! `<model>|<mode>` naming clients put on the wire (`m|fp32`, `m|ours-t`,
 //! `m|int8-static-c`, ...). The wire grammar is unchanged from the
-//! pre-redesign `ModeKey`, so existing clients keep working.
+//! pre-redesign `ModeKey`, so existing clients keep working; int8 variants
+//! additionally carry a nested truncation rung (`bits` ∈ {8, 4, 2}) with
+//! the 8-bit rung spelled exactly as before and the degraded rungs
+//! suffixed `@4` / `@2` (`m|int8-static-c@4`).
 
 use crate::nn::QuantMode;
 use crate::quant::Granularity;
@@ -35,6 +38,10 @@ pub enum VariantSpec {
         mode: QuantMode,
         /// Weight-scale granularity.
         weight_gran: Granularity,
+        /// Effective weight bit-width of the nested truncation rung
+        /// (8 = the full program, 4/2 = the brownout degradation rungs
+        /// derived from the same weight copy).
+        bits: u32,
     },
 }
 
@@ -66,20 +73,25 @@ fn parse_gran_wire(s: &str) -> Result<Granularity, String> {
 
 impl VariantSpec {
     /// Every representable spec: fp32 + {3 modes × 2 granularities} for
-    /// both the fake-quant and int8 backends (13 total). Menus and the
-    /// wire round-trip property test enumerate this.
+    /// the fake-quant backend, and {3 modes × 2 granularities × 3 rungs}
+    /// for the int8 backend (25 total). Menus and the wire round-trip
+    /// property test enumerate this.
     pub fn all() -> Vec<VariantSpec> {
         let mut out = vec![VariantSpec::Fp32];
         for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
             for gran in [Granularity::PerTensor, Granularity::PerChannel] {
                 out.push(VariantSpec::FakeQuant { mode, gran });
-                out.push(VariantSpec::Int8 { mode, weight_gran: gran });
+                for bits in [8u32, 4, 2] {
+                    out.push(VariantSpec::Int8 { mode, weight_gran: gran, bits });
+                }
             }
         }
         out
     }
 
     /// Stable wire name: `fp32`, `<mode>-<gran>`, `int8-<mode>-<gran>`
+    /// (8-bit — spelled exactly as before rungs existed), or
+    /// `int8-<mode>-<gran>@<bits>` for the 4/2-bit rungs
     /// ([`VariantSpec::parse_wire`] is the exact inverse).
     pub fn wire(&self) -> String {
         match self {
@@ -87,42 +99,88 @@ impl VariantSpec {
             VariantSpec::FakeQuant { mode, gran } => {
                 format!("{}-{}", mode.label(), gran_wire(*gran))
             }
-            VariantSpec::Int8 { mode, weight_gran } => {
+            VariantSpec::Int8 { mode, weight_gran, bits: 8 } => {
                 format!("int8-{}-{}", mode.label(), gran_wire(*weight_gran))
+            }
+            VariantSpec::Int8 { mode, weight_gran, bits } => {
+                format!("int8-{}-{}@{}", mode.label(), gran_wire(*weight_gran), bits)
             }
         }
     }
 
     /// Parse a wire name produced by [`VariantSpec::wire`]; anything else
-    /// is a descriptive `Err`.
+    /// is a descriptive `Err`. `@8` is rejected (the canonical 8-bit
+    /// spelling has no suffix), as is `@` on any non-int8 variant.
     pub fn parse_wire(s: &str) -> Result<VariantSpec, String> {
         if s == "fp32" {
             return Ok(VariantSpec::Fp32);
         }
-        let parts: Vec<&str> = s.split('-').collect();
+        let (base, bits) = match s.split_once('@') {
+            Some((head, b)) => match b {
+                "4" => (head, 4u32),
+                "2" => (head, 2),
+                other => {
+                    return Err(format!(
+                        "unknown rung @{other:?} (want @4 | @2; the 8-bit rung has no suffix)"
+                    ))
+                }
+            },
+            None => (s, 8),
+        };
+        let parts: Vec<&str> = base.split('-').collect();
         match parts.as_slice() {
-            [m, g] => {
+            [m, g] if bits == 8 => {
                 Ok(VariantSpec::FakeQuant { mode: parse_mode_wire(m)?, gran: parse_gran_wire(g)? })
             }
             ["int8", m, g] => Ok(VariantSpec::Int8 {
                 mode: parse_mode_wire(m)?,
                 weight_gran: parse_gran_wire(g)?,
+                bits,
             }),
-            _ => Err(format!("unknown mode {s:?} (want fp32 | <mode>-<gran> | int8-<mode>-<gran>)")),
+            _ => Err(format!(
+                "unknown mode {s:?} (want fp32 | <mode>-<gran> | int8-<mode>-<gran>[@4|@2])"
+            )),
         }
     }
 
     /// Human-readable label (display only — never parsed): `fp32`,
-    /// `ours/T`, `int8/static/C`, ...
+    /// `ours/T`, `int8/static/C`, `int8/static/C@4`, ...
     pub fn label(&self) -> String {
         match self {
             VariantSpec::Fp32 => "fp32".into(),
             VariantSpec::FakeQuant { mode, gran } => {
                 format!("{}/{}", mode.label(), gran.label())
             }
-            VariantSpec::Int8 { mode, weight_gran } => {
+            VariantSpec::Int8 { mode, weight_gran, bits: 8 } => {
                 format!("int8/{}/{}", mode.label(), weight_gran.label())
             }
+            VariantSpec::Int8 { mode, weight_gran, bits } => {
+                format!("int8/{}/{}@{}", mode.label(), weight_gran.label(), bits)
+            }
+        }
+    }
+
+    /// Effective precision this variant serves at, for the response
+    /// preamble and the `pdq_precision_served_total{bits}` metric: 32 for
+    /// fp32, 8 for fake-quant emulation (f32 carriers of exactly-quantized
+    /// 8-bit values), and the rung width for int8.
+    pub fn precision_bits(&self) -> u32 {
+        match self {
+            VariantSpec::Fp32 => 32,
+            VariantSpec::FakeQuant { .. } => 8,
+            VariantSpec::Int8 { bits, .. } => *bits,
+        }
+    }
+
+    /// The same variant at a different truncation rung, when that makes
+    /// sense: int8 specs swap their `bits`, everything else has no rungs
+    /// (`None`). The brownout ladder walks this.
+    pub fn at_bits(&self, bits: u32) -> Option<VariantSpec> {
+        match self {
+            VariantSpec::Int8 { mode, weight_gran, .. } => {
+                Some(VariantSpec::Int8 { mode: *mode, weight_gran: *weight_gran, bits })
+            }
+            _ => None,
         }
     }
 }
@@ -192,19 +250,21 @@ mod tests {
     #[test]
     fn wire_roundtrips_every_representable_spec() {
         let specs = VariantSpec::all();
-        assert_eq!(specs.len(), 13, "1 fp32 + 3 modes x 2 grans x 2 backends");
+        assert_eq!(specs.len(), 25, "1 fp32 + 3x2 fake-quant + 3x2x3 int8 rungs");
         for spec in specs {
             let key = VariantKey::new("micro_resnet", spec);
             let wire = key.wire();
             assert_eq!(VariantKey::parse_wire(&wire).unwrap(), key, "roundtrip {wire}");
             assert_eq!(VariantSpec::parse_wire(&spec.wire()).unwrap(), spec);
         }
-        // Spot-check the grammar is byte-stable (serving clients depend on it).
+        // Spot-check the grammar is byte-stable (serving clients depend on
+        // it): the 8-bit rung keeps the exact pre-rung spelling.
         assert_eq!(VariantSpec::Fp32.wire(), "fp32");
         assert_eq!(
             VariantSpec::Int8 {
                 mode: QuantMode::Probabilistic,
-                weight_gran: Granularity::PerChannel
+                weight_gran: Granularity::PerChannel,
+                bits: 8
             }
             .wire(),
             "int8-ours-c"
@@ -213,9 +273,48 @@ mod tests {
             VariantKey::parse_wire("m|int8-ours-c").unwrap().spec,
             VariantSpec::Int8 {
                 mode: QuantMode::Probabilistic,
-                weight_gran: Granularity::PerChannel
+                weight_gran: Granularity::PerChannel,
+                bits: 8
             }
         );
+        assert_eq!(
+            VariantSpec::Int8 {
+                mode: QuantMode::Static,
+                weight_gran: Granularity::PerChannel,
+                bits: 4
+            }
+            .wire(),
+            "int8-static-c@4"
+        );
+        assert_eq!(
+            VariantKey::parse_wire("m|int8-static-t@2").unwrap().spec,
+            VariantSpec::Int8 {
+                mode: QuantMode::Static,
+                weight_gran: Granularity::PerTensor,
+                bits: 2
+            }
+        );
+    }
+
+    #[test]
+    fn precision_bits_and_rung_swaps() {
+        assert_eq!(VariantSpec::Fp32.precision_bits(), 32);
+        let fq = VariantSpec::FakeQuant {
+            mode: QuantMode::Probabilistic,
+            gran: Granularity::PerTensor,
+        };
+        assert_eq!(fq.precision_bits(), 8);
+        assert!(fq.at_bits(4).is_none(), "only int8 has rungs");
+        assert!(VariantSpec::Fp32.at_bits(4).is_none());
+        let base = VariantSpec::Int8 {
+            mode: QuantMode::Static,
+            weight_gran: Granularity::PerTensor,
+            bits: 8,
+        };
+        let r4 = base.at_bits(4).unwrap();
+        assert_eq!(r4.precision_bits(), 4);
+        assert_eq!(r4.wire(), "int8-static-t@4");
+        assert_eq!(r4.at_bits(8), Some(base), "rung swap is reversible");
     }
 
     /// Property: for random model names over the serving charset and every
@@ -277,6 +376,13 @@ mod tests {
             "m|int8-ours",
             "m|int8--t",
             "m|fp32-t",
+            "m|int8-ours-t@8", // canonical 8-bit spelling has no suffix
+            "m|int8-ours-t@3",
+            "m|int8-ours-t@0",
+            "m|int8-ours-t@",
+            "m|int8-ours-t@44",
+            "m|ours-t@4",  // rungs are an int8 notion
+            "m|fp32@4",
         ] {
             assert!(VariantKey::parse_wire(bad).is_err(), "{bad:?} must not parse");
         }

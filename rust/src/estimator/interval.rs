@@ -38,6 +38,100 @@ impl IntervalSpec {
         let (lo, hi) = self.range(m);
         QParams::from_range(lo, hi, bits)
     }
+
+    /// The two-sided miss rate this spec *intends* under its own Gaussian
+    /// working assumption: `P(|Z| outside) = (1 − Φ(α)) + (1 − Φ(β))`. This
+    /// is the Eq. 13 coverage target implied by the calibrated `(α, β)` —
+    /// the calibration set itself is long gone at refit time.
+    pub fn implied_miss(&self) -> f32 {
+        (1.0 - normal_cdf(self.alpha)) + (1.0 - normal_cdf(self.beta))
+    }
+
+    /// Online Eq. 13 refit from an observed clip rate (the adaptation
+    /// loop's integer refold path, where no float calibration set exists).
+    ///
+    /// The live stream's observed saturation `observed_clip` is compared
+    /// against [`IntervalSpec::implied_miss`]; both sides are rescaled by
+    /// the ratio of normal quantiles `Φ⁻¹(1 − miss_target/2) /
+    /// Φ⁻¹(1 − miss_observed/2)`, so a stream that clips more than the
+    /// calibrated interval intended widens `(α, β)` toward its original
+    /// coverage target and an over-wide interval tightens back. The step is
+    /// clamped to `[0.75, 2.0]` per refit (bounded moves keep the
+    /// recalibration loop hysteresis-friendly) and the multipliers keep the
+    /// 0.1 floor of [`calibrate`].
+    pub fn refit_from_clip(&self, observed_clip: f32) -> IntervalSpec {
+        let miss_t = (self.implied_miss() as f64).clamp(1e-6, 0.8);
+        let miss_o = (observed_clip as f64).clamp(1e-6, 0.8);
+        let factor =
+            (probit(1.0 - miss_t / 2.0) / probit(1.0 - miss_o / 2.0)).clamp(0.75, 2.0) as f32;
+        IntervalSpec {
+            alpha: (self.alpha * factor).max(0.1),
+            beta: (self.beta * factor).max(0.1),
+        }
+    }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf polynomial
+/// (|err| < 1.5e-7 — far below what a clip-rate refit can resolve).
+fn normal_cdf(z: f32) -> f32 {
+    let x = z as f64 / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-x * x).exp();
+    let erf = if x < 0.0 { -erf } else { erf };
+    (0.5 * (1.0 + erf)) as f32
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation,
+/// |rel err| < 1.15e-9 on (0, 1)).
+fn probit(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
 }
 
 /// Empirical coverage (Eq. 13): the fraction of observed pre-activations
@@ -165,5 +259,42 @@ mod tests {
         let spec = calibrate(&[], 0.999);
         assert_eq!(spec.alpha, 3.0);
         assert_eq!(spec.beta, 3.0);
+    }
+
+    #[test]
+    fn normal_helpers_hit_textbook_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-4);
+        assert!((probit(0.5)).abs() < 1e-9);
+        // Roundtrip on both approximation branches.
+        for p in [0.001, 0.01, 0.1, 0.5, 0.9, 0.99, 0.999] {
+            let z = probit(p);
+            assert!((normal_cdf(z as f32) as f64 - p).abs() < 1e-3, "p={p} z={z}");
+        }
+    }
+
+    #[test]
+    fn refit_from_clip_widens_on_overclipping_and_tightens_back() {
+        let spec = IntervalSpec { alpha: 2.0, beta: 2.0 };
+        let intended = spec.implied_miss();
+        // Clipping ten times more than intended ⇒ widen, bounded by 2x.
+        let widened = spec.refit_from_clip(intended * 10.0);
+        assert!(widened.alpha > spec.alpha, "{widened:?}");
+        assert!(widened.alpha <= spec.alpha * 2.0 + 1e-6);
+        assert_eq!(widened.alpha, widened.beta, "symmetric spec stays symmetric");
+        // Clipping at exactly the intended rate ⇒ fixed point.
+        let same = spec.refit_from_clip(intended);
+        assert!((same.alpha - spec.alpha).abs() < 1e-3, "{same:?}");
+        // Barely clipping at all ⇒ tighten, bounded by 0.75x.
+        let tightened = spec.refit_from_clip(intended * 0.01);
+        assert!(tightened.alpha < spec.alpha, "{tightened:?}");
+        assert!(tightened.alpha >= spec.alpha * 0.75 - 1e-6);
+        // Repeated refits can never collapse a side below the 0.1 floor.
+        let mut s = IntervalSpec { alpha: 0.2, beta: 0.2 };
+        for _ in 0..16 {
+            s = s.refit_from_clip(0.0);
+        }
+        assert!(s.alpha >= 0.1 && s.beta >= 0.1, "{s:?}");
     }
 }

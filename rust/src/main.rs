@@ -19,11 +19,21 @@
 //!             [--sample-every N]    # online adaptation: drift monitor +
 //!                                   # shadow recalibration; adds
 //!                                   # GET /v1/drift, POST /v1/recalibrate
+//!             [--brownout] [--slo-p99-ms N]  # precision brownout: under
+//!                                   # overload degrade int8 variants down
+//!                                   # the 8/4/2-bit rung ladder before
+//!                                   # ever shedding (429 only after the
+//!                                   # ladder is exhausted)
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
 //!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
 //!             [--expect-zero-failed]
 //!             [--shift corruption:severity@t]  # mid-run distribution shift
+//!             [--sweep] [--base-rps N] [--multipliers 1,2,4,...]
+//!             [--step-secs N] [--accuracy-n N]  # overload sweep: step the
+//!                                   # offered RPS 1x..10x of baseline and
+//!                                   # record the degradation curve
+//!                                   # -> BENCH_degrade.json
 //! pdq chaos-proxy --target HOST:PORT  # fault-injecting TCP proxy (chaos smoke)
 //!             [--listen HOST:PORT] [--seed N] [--max-chunk N]
 //!             [--would-block-every N] [--latency-us N] [--latency-every N]
@@ -41,14 +51,14 @@ use pdq::adapt::{
 };
 use pdq::coordinator::batcher::BatchPolicy;
 use pdq::coordinator::calibrate::demo_model;
-use pdq::coordinator::{Server, ServerConfig};
+use pdq::coordinator::{BrownoutConfig, Server, ServerConfig};
 use pdq::data::shapes;
 use pdq::engine::{standard_menu, EngineBuilder, FloatEngine, VariantKey, VariantSpec};
 use pdq::harness::eval_runner::{evaluate, EvalProtocol};
 use pdq::harness::experiments::{self, ExpOptions};
 use pdq::models::zoo;
 use pdq::net::chaos::{ChaosConfig, ChaosListener};
-use pdq::net::loadgen::{self, LoadMode, LoadgenConfig, ShiftSpec};
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig, ShiftSpec, SweepConfig};
 use pdq::net::{signal, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
@@ -126,7 +136,7 @@ fn cmd_eval(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     // --int8: evaluate on the integer-native engine (gran picks the weight
     // scale granularity; activations are per-tensor by construction).
     let spec = if args.flag("int8") {
-        VariantSpec::Int8 { mode, weight_gran: gran }
+        VariantSpec::Int8 { mode, weight_gran: gran, bits: 8 }
     } else {
         VariantSpec::FakeQuant { mode, gran }
     };
@@ -222,6 +232,12 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         let manifest = zoo::load_manifest(artifacts)?;
         zoo::load_model(artifacts, &manifest, &name)?
     };
+    // --brownout: precision degradation under overload (int8 variants walk
+    // their 8/4/2-bit rung ladder before any request is shed).
+    let brownout = args.flag("brownout").then(|| BrownoutConfig {
+        slo_p99_us: args.opt_f64("slo-p99-ms", 50.0) as f32 * 1000.0,
+        ..Default::default()
+    });
     let config = ServerConfig {
         workers_per_variant: args.opt_usize("workers", 2),
         policy: BatchPolicy {
@@ -229,6 +245,7 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
             deadline: Duration::from_micros(args.opt_u64("deadline-us", 2000)),
         },
         max_queue_depth: args.opt_usize("max-queue", 32),
+        brownout,
     };
     let task = model.task;
     // The standard menu: fp32 + the three quant-emulation variants + the
@@ -286,6 +303,13 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
             config.workers_per_variant,
             config.max_queue_depth,
         );
+        if let Some(b) = &config.brownout {
+            println!(
+                "pdq-serve: precision brownout on (p99 SLO {:.0} ms, enter {:?})",
+                b.slo_p99_us / 1000.0,
+                b.enter,
+            );
+        }
         for k in &keys {
             println!("pdq-serve:   variant {}", k.wire());
         }
@@ -349,6 +373,79 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         backoff_cap: Duration::from_millis(args.opt_u64("backoff-ms", 50)),
         shift,
     };
+    // --sweep: overload sweep -> BENCH_degrade.json. Ignores --mode/--rps;
+    // each step runs open-loop at a multiple of the (measured or given)
+    // baseline, and a preliminary unloaded pass records per-rung fidelity.
+    if args.flag("sweep") {
+        let multipliers: Vec<f64> = match args.opt("multipliers") {
+            Some(m) => m
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--multipliers: {s:?} is not a number"))
+                })
+                .collect::<Result<_, _>>()?,
+            None => vec![1.0, 2.0, 4.0, 6.0, 8.0, 10.0],
+        };
+        let sweep = SweepConfig {
+            base: cfg,
+            base_rps: args.opt_f64("base-rps", 0.0),
+            multipliers,
+            step_duration: Duration::from_secs_f64(args.opt_f64("step-secs", 2.0)),
+            accuracy_images: args.opt_usize("accuracy-n", 16),
+        };
+        let report = loadgen::run_sweep(&sweep).map_err(anyhow::Error::msg)?;
+        let mut table = Table::new(&[
+            "x", "offered rps", "achieved", "ok", "429", "err", "shed %", "p99 ms", "bits",
+        ]);
+        for s in &report.steps {
+            let shed = if s.total.sent > 0 {
+                100.0 * s.total.rejected as f64 / s.total.sent as f64
+            } else {
+                0.0
+            };
+            let bits = s
+                .total
+                .served_bits
+                .iter()
+                .map(|(b, n)| format!("{b}:{n}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            table.add_row(vec![
+                format!("{:.0}", s.multiplier),
+                format!("{:.1}", s.offered_rps),
+                format!("{:.1}", s.achieved_rps),
+                s.total.ok.to_string(),
+                s.total.rejected.to_string(),
+                s.total.failed.to_string(),
+                format!("{shed:.1}"),
+                format!("{:.2}", s.total.p99_us / 1e3),
+                bits,
+            ]);
+        }
+        println!("{}", table.to_markdown());
+        let mut rungs = Table::new(&["variant", "bits", "top-1 vs fp32", "mean us"]);
+        for r in &report.rungs {
+            rungs.add_row(vec![
+                r.wire.clone(),
+                r.bits.to_string(),
+                format!("{:.3}", r.top1_agreement_fp32),
+                format!("{:.0}", r.mean_server_us),
+            ]);
+        }
+        println!("{}", rungs.to_markdown());
+        let out = args.opt_or("out", "BENCH_degrade.json");
+        report.save(out)?;
+        println!("degradation report written to {out}");
+        if args.flag("expect-zero-failed") {
+            let bad: u64 = report.steps.iter().map(|s| s.total.failed + s.total.dropped).sum();
+            if bad > 0 {
+                anyhow::bail!("{bad} requests failed/dropped during the sweep");
+            }
+        }
+        return Ok(());
+    }
     let report = loadgen::run(&cfg).map_err(anyhow::Error::msg)?;
     let mut table = Table::new(&[
         "variant", "sent", "ok", "429", "err", "drop", "p50 ms", "p95 ms", "p99 ms",

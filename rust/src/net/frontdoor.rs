@@ -3,8 +3,13 @@
 //!
 //! Endpoints:
 //! - `POST /v1/infer` — binary tensor body ([`crate::net::wire`]); admitted
-//!   through [`Server::try_submit`], shed with `429` + `Retry-After` when
-//!   the variant is at its in-flight limit.
+//!   through [`Server::try_submit_graceful`], which under precision
+//!   brownout (`--brownout`) walks the int8 variant's 8/4/2-bit rung
+//!   ladder before ever shedding. The served precision rides back in the
+//!   response preamble (`"bits"`) and the `X-PDQ-Bits` header. Only once
+//!   the ladder is exhausted (or brownout is off and the variant is at its
+//!   in-flight limit) is the request shed with `429` + a load-proportional
+//!   `Retry-After` (queue depth ÷ drain rate).
 //! - `GET /v1/variants` — the served (variant, input shape) catalog.
 //! - `GET /v1/drift` — per-variant drift/epoch/recalibration status
 //!   (404 unless the server was started with adaptation, `--adapt`).
@@ -487,6 +492,20 @@ fn variants(ctx: &Ctx) -> HttpResponse {
     HttpResponse::json(200, &o)
 }
 
+/// Load-proportional `Retry-After` in milliseconds: the estimated time for
+/// `workers` parallel workers to drain the `depth` requests queued ahead
+/// at `latency_us` apiece (the p50 histogram hint), clamped to
+/// [1 ms, 5 s]. A cold server with no latency signal yet answers a flat
+/// 25 ms so early rejections still spread retries out.
+fn retry_after_ms(depth: usize, latency_us: f64, workers: usize) -> u64 {
+    let est_ms = if latency_us > 0.0 {
+        (latency_us / 1000.0) * depth as f64 / workers.max(1) as f64
+    } else {
+        25.0
+    };
+    est_ms.clamp(1.0, 5000.0).ceil() as u64
+}
+
 fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
     let wire_req = match wire::decode_infer_request(&req.body) {
         Ok(r) => r,
@@ -506,17 +525,19 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
             );
         }
     }
-    match ctx.server.try_submit(wire_req.variant, wire_req.id, wire_req.image) {
-        Ok((rx, permit)) => match rx.recv_timeout(ctx.response_timeout) {
+    match ctx.server.try_submit_graceful(wire_req.variant, wire_req.id, wire_req.image) {
+        Ok((rx, permit, bits)) => match rx.recv_timeout(ctx.response_timeout) {
             Ok(resp) => {
                 let status = match resp.result {
                     Ok(outputs) => {
                         let body = wire::encode_infer_response(
                             resp.id,
                             resp.latency.as_micros() as u64,
+                            bits,
                             &outputs,
                         );
                         HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
+                            .header("X-PDQ-Bits", &bits.to_string())
                     }
                     // The library's typed errors map onto the protocol: a
                     // shape mismatch is the *caller's* fault (400), every
@@ -548,13 +569,12 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
             HttpResponse::error(404, &format!("unknown variant {v:?}"))
         }
         Err(SubmitError::Overloaded { depth }) => {
-            // Retry hint: roughly one p50 latency per queued slot ahead.
-            // Histogram walk, not the reservoir sort — the shed path must
-            // stay cheap precisely when the server is saturated.
+            // Load-proportional retry hint: time to drain the queue ahead,
+            // depth × p50 ÷ workers. Histogram walk, not the reservoir
+            // sort — the shed path must stay cheap precisely when the
+            // server is saturated.
             let p50_us = ctx.server.metrics().latency_p50_hint_us();
-            let est_ms =
-                if p50_us > 0.0 { (p50_us as f64 / 1000.0) * depth as f64 } else { 25.0 };
-            let ms = est_ms.clamp(1.0, 5000.0).ceil() as u64;
+            let ms = retry_after_ms(depth, p50_us as f64, ctx.server.workers_per_variant());
             HttpResponse::error(429, "variant over its in-flight limit; retry later")
                 .header("Retry-After", &ms.div_ceil(1000).max(1).to_string())
                 .header("X-PDQ-Retry-After-Ms", &ms.to_string())
@@ -625,6 +645,21 @@ mod tests {
 
         let metrics = fd.shutdown();
         assert_eq!(metrics.responses(), 1);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth_and_drain_rate() {
+        // 8 queued × 10 ms each through 2 workers → 40 ms to drain.
+        assert_eq!(retry_after_ms(8, 10_000.0, 2), 40);
+        // Twice the backlog, twice the hint; twice the workers, half.
+        assert_eq!(retry_after_ms(16, 10_000.0, 2), 80);
+        assert_eq!(retry_after_ms(8, 10_000.0, 4), 20);
+        // Cold server (no latency signal): flat 25 ms fallback.
+        assert_eq!(retry_after_ms(8, 0.0, 2), 25);
+        // Clamped to [1 ms, 5 s]; a zero worker count cannot divide by 0.
+        assert_eq!(retry_after_ms(1, 100.0, 4), 1);
+        assert_eq!(retry_after_ms(10_000, 100_000.0, 1), 5000);
+        assert_eq!(retry_after_ms(4, 10_000.0, 0), 40);
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! uniform noise per variant, and the report lands in `BENCH_serving.json`
 //! (schema `pdq-serving-v1`).
 //!
+//! **Overload sweep** ([`run_sweep`], `--sweep`): steps the offered
+//! open-loop RPS from 1× to 10× of a measured (or given) baseline and
+//! records, per step, the shed rate, latency tail, and the served-bits
+//! histogram decoded from the response preambles — the degradation curve
+//! of a precision-brownout server. A preliminary unloaded pass measures
+//! each quantized variant's top-1 agreement against its model's fp32
+//! variant over the wire. The report lands in `BENCH_degrade.json`
+//! (schema `pdq-degrade-v1`).
+//!
 //! **Mid-run distribution shift** ([`ShiftSpec`], `--shift
 //! corruption:severity@t`): from `t` seconds into the run every worker
 //! switches to a corrupted copy of its input (built once, seeded — see
@@ -132,6 +141,9 @@ pub struct VariantReport {
     pub p50_us: f32,
     pub p95_us: f32,
     pub p99_us: f32,
+    /// OK responses by served precision (the `"bits"` response preamble
+    /// field); key 0 collects responses from servers that predate it.
+    pub served_bits: std::collections::BTreeMap<u32, u64>,
 }
 
 impl VariantReport {
@@ -148,6 +160,11 @@ impl VariantReport {
             .set("p50_us", self.p50_us)
             .set("p95_us", self.p95_us)
             .set("p99_us", self.p99_us);
+        let mut bits = Json::obj();
+        for (b, n) in &self.served_bits {
+            bits.set(&b.to_string(), *n);
+        }
+        o.set("served_bits", bits);
         o
     }
 }
@@ -273,6 +290,8 @@ struct Rec {
     variant: usize,
     outcome: Outcome,
     us: f32,
+    /// Served precision of an OK response (0 otherwise / legacy server).
+    bits: u32,
 }
 
 fn one_request(
@@ -280,16 +299,18 @@ fn one_request(
     v: &TargetVariant,
     id: u64,
     shifted: bool,
-) -> (Outcome, Option<u64>) {
+) -> (Outcome, Option<u64>, u32) {
     let image = match (&v.shifted, shifted) {
         (Some(img), true) => img,
         _ => &v.image,
     };
     match client.post_infer(&v.key, id, image) {
-        Ok(InferOutcome::Ok(_)) => (Outcome::Ok, None),
-        Ok(InferOutcome::Rejected { retry_after_ms }) => (Outcome::Rejected, Some(retry_after_ms)),
-        Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None),
-        Err(_) => (Outcome::Dropped, None),
+        Ok(InferOutcome::Ok(resp)) => (Outcome::Ok, None, resp.bits),
+        Ok(InferOutcome::Rejected { retry_after_ms }) => {
+            (Outcome::Rejected, Some(retry_after_ms), 0)
+        }
+        Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None, 0),
+        Err(_) => (Outcome::Dropped, None, 0),
     }
 }
 
@@ -317,12 +338,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                         let id = t as u64 * 1_000_000_000 + seq;
                         let sent_at = Instant::now();
                         let shifted = shift_at.map_or(false, |at| sent_at >= at);
-                        let (outcome, retry_ms) =
+                        let (outcome, retry_ms, bits) =
                             one_request(&mut client, &targets[vi], id, shifted);
                         recs.push(Rec {
                             variant: vi,
                             outcome,
                             us: sent_at.elapsed().as_micros() as f32,
+                            bits,
                         });
                         if let Some(ms) = retry_ms {
                             let nap = Duration::from_millis(ms).min(cfg.backoff_cap);
@@ -348,12 +370,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                         }
                         let vi = (k as usize) % targets.len();
                         let shifted = shift_at.map_or(false, |at| Instant::now() >= at);
-                        let (outcome, _) = one_request(&mut client, &targets[vi], k, shifted);
+                        let (outcome, _, bits) =
+                            one_request(&mut client, &targets[vi], k, shifted);
                         // Latency from the *schedule*, not the send.
                         recs.push(Rec {
                             variant: vi,
                             outcome,
                             us: sched.elapsed().as_micros() as f32,
+                            bits,
                         });
                         k += concurrency as u64;
                     }
@@ -380,6 +404,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
             p50_us: 0.0,
             p95_us: 0.0,
             p99_us: 0.0,
+            served_bits: std::collections::BTreeMap::new(),
         };
         let mut ok_us: Vec<f32> = Vec::new();
         for rec in recs {
@@ -387,6 +412,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                 Outcome::Ok => {
                     r.ok += 1;
                     ok_us.push(rec.us);
+                    *r.served_bits.entry(rec.bits).or_insert(0) += 1;
                 }
                 Outcome::Rejected => r.rejected += 1,
                 Outcome::Failed => r.failed += 1,
@@ -422,6 +448,231 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
     })
 }
 
+/// Overload-sweep configuration (`pdq loadgen --sweep`).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Target / concurrency / variant filter / seed; `mode` and
+    /// `duration` are overridden per step.
+    pub base: LoadgenConfig,
+    /// The 1× baseline in requests per second; 0 = measure it first with
+    /// a closed-loop capacity probe of one `step_duration`.
+    pub base_rps: f64,
+    /// Offered-load multipliers, one sweep step each.
+    pub multipliers: Vec<f64>,
+    /// Wall-clock length of each step (and of the capacity probe).
+    pub step_duration: Duration,
+    /// Images per variant for the unloaded rung-accuracy pass.
+    pub accuracy_images: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            base: LoadgenConfig::default(),
+            base_rps: 0.0,
+            multipliers: vec![1.0, 2.0, 4.0, 6.0, 8.0, 10.0],
+            step_duration: Duration::from_secs(2),
+            accuracy_images: 16,
+        }
+    }
+}
+
+/// One step of the overload sweep.
+#[derive(Clone, Debug)]
+pub struct SweepStep {
+    pub multiplier: f64,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    /// The step's aggregate traffic row (includes the served-bits
+    /// histogram — the degradation signature).
+    pub total: VariantReport,
+}
+
+/// One quantized variant's unloaded fidelity row.
+#[derive(Clone, Debug)]
+pub struct RungReport {
+    pub wire: String,
+    /// Effective precision (8/4/2 int8 rungs; fake-quant reports 8).
+    pub bits: u32,
+    /// Fraction of eval images whose top-1 class matches the model's fp32
+    /// variant, measured over the wire.
+    pub top1_agreement_fp32: f32,
+    /// Mean server-side latency over the eval images (the response
+    /// preamble's `latency_us`).
+    pub mean_server_us: f32,
+}
+
+/// The degradation-curve report (`BENCH_degrade.json`,
+/// schema `pdq-degrade-v1`).
+#[derive(Clone, Debug)]
+pub struct DegradeReport {
+    pub base_rps: f64,
+    pub concurrency: usize,
+    pub step_duration_s: f64,
+    pub steps: Vec<SweepStep>,
+    pub rungs: Vec<RungReport>,
+}
+
+impl DegradeReport {
+    pub fn to_json(&self) -> Json {
+        let mut cfg = Json::obj();
+        cfg.set("base_rps", self.base_rps)
+            .set("concurrency", self.concurrency)
+            .set("step_duration_s", self.step_duration_s);
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let shed = if s.total.sent > 0 {
+                    s.total.rejected as f64 / s.total.sent as f64
+                } else {
+                    0.0
+                };
+                let mut o = Json::obj();
+                o.set("multiplier", s.multiplier)
+                    .set("offered_rps", s.offered_rps)
+                    .set("achieved_rps", s.achieved_rps)
+                    .set("shed_rate", shed)
+                    .set("traffic", s.total.to_json());
+                o
+            })
+            .collect();
+        let rungs: Vec<Json> = self
+            .rungs
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("variant", r.wire.as_str())
+                    .set("bits", r.bits as u64)
+                    .set("top1_agreement_fp32", r.top1_agreement_fp32)
+                    .set("mean_server_us", r.mean_server_us);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("schema", "pdq-degrade-v1")
+            .set("config", cfg)
+            .set("steps", Json::Arr(steps))
+            .set("rungs", Json::Arr(rungs));
+        o
+    }
+
+    /// Write the JSON report (`BENCH_degrade.json`).
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
+fn top1(outputs: &[Tensor<f32>]) -> usize {
+    let Some(first) = outputs.first() else { return 0 };
+    let data = first.data();
+    let mut best = 0;
+    for (i, &x) in data.iter().enumerate() {
+        if x > data[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Unloaded fidelity pass: every quantized variant's top-1 agreement vs
+/// its model's fp32 variant, over the wire, on seeded-noise eval images
+/// (the same images per model, so the comparison is paired). Variants of
+/// models without an fp32 reference are skipped. Ignores the config's
+/// variant filter — the rung rows are only meaningful against the full
+/// catalog.
+fn rung_accuracy(cfg: &LoadgenConfig, images: usize) -> Result<Vec<RungReport>, String> {
+    let all = LoadgenConfig { variants: Vec::new(), ..cfg.clone() };
+    let targets = discover(&all)?;
+    let mut client = Client::new(&cfg.target);
+    let mut preds: Vec<(Vec<usize>, f32)> = Vec::with_capacity(targets.len());
+    for v in &targets {
+        let mut tops = Vec::with_capacity(images);
+        let mut lat_sum = 0.0f64;
+        for i in 0..images {
+            let mut rng = Pcg32::new(cfg.seed ^ 0xACC0_0000 ^ i as u64);
+            let shape = v.image.shape().clone();
+            let data: Vec<f32> = (0..shape.numel()).map(|_| rng.uniform()).collect();
+            let img = Tensor::from_vec(shape, data);
+            match client.post_infer_retrying(&v.key, i as u64, &img) {
+                Ok(InferOutcome::Ok(resp)) => {
+                    lat_sum += resp.latency_us as f64;
+                    tops.push(top1(&resp.outputs));
+                }
+                Ok(_) => {
+                    return Err(format!(
+                        "accuracy pass: {} refused a request on an unloaded server",
+                        v.wire
+                    ))
+                }
+                Err(e) => return Err(format!("accuracy pass: {}: {e}", v.wire)),
+            }
+        }
+        let mean = if images > 0 { (lat_sum / images as f64) as f32 } else { 0.0 };
+        preds.push((tops, mean));
+    }
+    let mut rows = Vec::new();
+    for (i, v) in targets.iter().enumerate() {
+        let bits = v.key.spec.precision_bits();
+        if bits >= 32 {
+            continue;
+        }
+        let Some(refi) = targets
+            .iter()
+            .position(|t| t.key.model == v.key.model && t.key.spec.precision_bits() >= 32)
+        else {
+            continue;
+        };
+        let matches = preds[i].0.iter().zip(&preds[refi].0).filter(|(a, b)| a == b).count();
+        rows.push(RungReport {
+            wire: v.wire.clone(),
+            bits,
+            top1_agreement_fp32: if images > 0 { matches as f32 / images as f32 } else { 0.0 },
+            mean_server_us: preds[i].1,
+        });
+    }
+    Ok(rows)
+}
+
+/// Run the full overload sweep: rung-fidelity pass, capacity probe (when
+/// no baseline was given), then one open-loop step per multiplier.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<DegradeReport, String> {
+    let rungs = rung_accuracy(&cfg.base, cfg.accuracy_images)?;
+    let base_rps = if cfg.base_rps > 0.0 {
+        cfg.base_rps
+    } else {
+        let probe = LoadgenConfig {
+            mode: LoadMode::Closed,
+            duration: cfg.step_duration,
+            ..cfg.base.clone()
+        };
+        run(&probe)?.achieved_rps.max(1.0)
+    };
+    let mut steps = Vec::with_capacity(cfg.multipliers.len());
+    for &mult in &cfg.multipliers {
+        let rps = base_rps * mult;
+        let step = LoadgenConfig {
+            mode: LoadMode::Open { rps },
+            duration: cfg.step_duration,
+            ..cfg.base.clone()
+        };
+        let rep = run(&step)?;
+        steps.push(SweepStep {
+            multiplier: mult,
+            offered_rps: rps,
+            achieved_rps: rep.achieved_rps,
+            total: rep.total,
+        });
+    }
+    Ok(DegradeReport {
+        base_rps,
+        concurrency: cfg.base.concurrency.max(1),
+        step_duration_s: cfg.step_duration.as_secs_f64(),
+        steps,
+        rungs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +690,7 @@ mod tests {
             p50_us: 90.0,
             p95_us: 200.0,
             p99_us: 300.0,
+            served_bits: [(8u32, 6u64), (4, 2)].into_iter().collect(),
         };
         let report = LoadReport {
             mode: "open".into(),
@@ -460,7 +712,57 @@ mod tests {
         let agg = j.get("aggregate").unwrap();
         assert_eq!(agg.get("rejected").unwrap().as_usize(), Some(2));
         assert!((agg.get("reject_rate").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-9);
+        assert_eq!(agg.get("served_bits").unwrap().get("8").unwrap().as_usize(), Some(6));
+        assert_eq!(agg.get("served_bits").unwrap().get("4").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("per_variant").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn degrade_report_json_shape() {
+        let total = VariantReport {
+            wire: "all".into(),
+            sent: 100,
+            ok: 70,
+            rejected: 30,
+            failed: 0,
+            dropped: 0,
+            mean_us: 500.0,
+            p50_us: 400.0,
+            p95_us: 900.0,
+            p99_us: 1200.0,
+            served_bits: [(8u32, 40u64), (4, 30)].into_iter().collect(),
+        };
+        let report = DegradeReport {
+            base_rps: 50.0,
+            concurrency: 4,
+            step_duration_s: 2.0,
+            steps: vec![SweepStep {
+                multiplier: 4.0,
+                offered_rps: 200.0,
+                achieved_rps: 140.0,
+                total,
+            }],
+            rungs: vec![RungReport {
+                wire: "m|int8-static-t@4".into(),
+                bits: 4,
+                top1_agreement_fp32: 0.875,
+                mean_server_us: 420.0,
+            }],
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-degrade-v1"));
+        assert_eq!(j.get("config").unwrap().get("base_rps").unwrap().as_f64(), Some(50.0));
+        let steps = j.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 1);
+        assert!((steps[0].get("shed_rate").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-9);
+        let hist = steps[0].get("traffic").unwrap().get("served_bits").unwrap();
+        assert_eq!(hist.get("4").unwrap().as_usize(), Some(30));
+        let rungs = j.get("rungs").unwrap().as_arr().unwrap();
+        assert_eq!(rungs[0].get("bits").unwrap().as_usize(), Some(4));
+        assert!(
+            (rungs[0].get("top1_agreement_fp32").unwrap().as_f64().unwrap() - 0.875).abs()
+                < 1e-6
+        );
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!
 //! Request preamble: `{"variant": "<model>|<mode>", "id": N, "shape": [...]}`
 //! with the raw data being the image tensor, row-major f32 little-endian.
-//! Response preamble: `{"id": N, "latency_us": N, "shapes": [[...], ...]}`
+//! Response preamble:
+//! `{"id": N, "latency_us": N, "bits": N, "shapes": [[...], ...]}` — `bits`
+//! is the precision the request was actually *served* at (32 fp32, 8/4/2
+//! int8 rungs; under precision brownout a degraded request reports the
+//! rung it landed on, so clients can observe degradation per-response) —
 //! with the raw data being every output tensor's f32 data concatenated in
 //! order. Raw LE f32 keeps the payload bit-exact end to end (the socket
 //! integration test asserts responses match direct execution bit for bit),
@@ -132,10 +136,20 @@ pub fn decode_infer_request(body: &[u8]) -> Result<InferRequestWire, String> {
     Ok(InferRequestWire { variant, id, image: Tensor::from_vec(shape, data) })
 }
 
-/// Encode a `/v1/infer` response body.
-pub fn encode_infer_response(id: u64, latency_us: u64, outputs: &[Tensor<f32>]) -> Vec<u8> {
+/// Encode a `/v1/infer` response body. `bits` is the served precision
+/// (32 / 8 / 4 / 2); pass 0 to omit the field (pre-brownout encoders did).
+pub fn encode_infer_response(
+    id: u64,
+    latency_us: u64,
+    bits: u32,
+    outputs: &[Tensor<f32>],
+) -> Vec<u8> {
     let mut p = Json::obj();
-    p.set("id", id).set("latency_us", latency_us).set(
+    p.set("id", id).set("latency_us", latency_us);
+    if bits > 0 {
+        p.set("bits", bits as u64);
+    }
+    p.set(
         "shapes",
         Json::Arr(outputs.iter().map(|t| shape_json(t.shape().dims())).collect()),
     );
@@ -150,6 +164,9 @@ pub fn encode_infer_response(id: u64, latency_us: u64, outputs: &[Tensor<f32>]) 
 pub struct InferResponseWire {
     pub id: u64,
     pub latency_us: u64,
+    /// Served precision in bits (32 / 8 / 4 / 2); 0 when the server
+    /// predates the brownout protocol and omitted the field.
+    pub bits: u32,
     pub outputs: Vec<Tensor<f32>>,
 }
 
@@ -157,6 +174,7 @@ pub fn decode_infer_response(body: &[u8]) -> Result<InferResponseWire, String> {
     let (p, data) = unframe(body)?;
     let id = p.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
     let latency_us = p.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let bits = p.get("bits").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
     let shapes: Vec<Shape> = p
         .get("shapes")
         .and_then(|s| s.as_arr())
@@ -175,7 +193,7 @@ pub fn decode_infer_response(body: &[u8]) -> Result<InferResponseWire, String> {
         outputs.push(Tensor::from_vec(s, data[off..off + n].to_vec()));
         off += n;
     }
-    Ok(InferResponseWire { id, latency_us, outputs })
+    Ok(InferResponseWire { id, latency_us, bits, outputs })
 }
 
 /// Outcome of one client-side infer call that got an HTTP response.
@@ -478,6 +496,7 @@ mod tests {
             VariantSpec::Int8 {
                 mode: QuantMode::Probabilistic,
                 weight_gran: Granularity::PerTensor,
+                bits: 8,
             },
         )
     }
@@ -501,13 +520,17 @@ mod tests {
     fn infer_response_roundtrip_multi_output() {
         let a = Tensor::from_vec(Shape::new(&[4]), vec![1.0, 2.0, 3.0, 4.0]);
         let b = Tensor::from_vec(Shape::new(&[2, 2]), vec![-1.0, -2.0, -3.0, -4.0]);
-        let body = encode_infer_response(7, 1234, &[a.clone(), b.clone()]);
+        let body = encode_infer_response(7, 1234, 4, &[a.clone(), b.clone()]);
         let back = decode_infer_response(&body).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.latency_us, 1234);
+        assert_eq!(back.bits, 4, "served precision rides the preamble");
         assert_eq!(back.outputs.len(), 2);
         assert_eq!(back.outputs[0], a);
         assert_eq!(back.outputs[1], b);
+        // Legacy encoders (bits 0) omit the field; decode stays tolerant.
+        let legacy = encode_infer_response(7, 1234, 0, &[a.clone()]);
+        assert_eq!(decode_infer_response(&legacy).unwrap().bits, 0);
     }
 
     #[test]

@@ -29,6 +29,19 @@
 //! program through them, one layer at a time with fresh allocations and a
 //! separate requantize sweep, and must agree with the fast engine **bit for
 //! bit** (`rust/tests/int8_parity.rs`).
+//!
+//! **Nested bit-width rungs.** [`Int8Executor::rung`] derives a 4- or 2-bit
+//! program from a lowered 8-bit one without touching the weights (DQT-style
+//! nested integer arithmetic, AdaBits-style one-artifact ladders): rung `b`
+//! runs on the truncated weights `w >> (8−b)`, applied inline at the kernel
+//! weight load, so the accumulator lives on the `s_in · s_w · 2^(8−b)` grid
+//! and every deploy-time constant (bias fold, Q31 requant, FC row sums,
+//! surrogate weight moments) is recomputed per rung while the int8 weight
+//! tensor itself is shared behind an [`Arc`] — one weight copy serves the
+//! whole precision ladder. Activations stay 8-bit on every rung. The naive
+//! oracle materializes `w >> s` and runs the untouched scalar ports, so
+//! rung parity is still exact-equality testable, and rung 8 delegates with
+//! shift 0 — bit-identical to the pre-ladder program.
 
 use std::sync::{Arc, Mutex};
 
@@ -51,8 +64,9 @@ use crate::tensor::{ConvGeom, Shape, Tensor};
 /// surrogate statistics and (for static mode) the frozen requant spec.
 #[derive(Clone, Debug)]
 pub struct Int8Layer {
-    /// Symmetric int8 weights (conv OHWI / dw `[C, kh, kw]` / linear `[h, d]`).
-    pub kernel: Tensor<i8>,
+    /// Symmetric int8 weights (conv OHWI / dw `[C, kh, kw]` / linear `[h, d]`),
+    /// shared across every bit-width rung derived from this program.
+    pub kernel: Arc<Tensor<i8>>,
     /// Weight scales: one entry (per-tensor) or one per output channel.
     pub s_w: Vec<f32>,
     /// Original float bias — refolded per request in dynamic/PDQ mode.
@@ -104,12 +118,27 @@ pub struct Int8Node {
     pub inputs: Vec<NodeId>,
 }
 
+/// Live per-node statistics fed back from the serving observer: the pooled
+/// activation window plus the observed output clip rate, which
+/// [`Int8Executor::refit_static_grids`] uses to refit the Eq. 13 `(α, β)`
+/// interval alongside the grid itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LiveNodeStats {
+    /// Pooled γ-strided integer window moments of the node's input.
+    pub window: WindowStats,
+    /// Fraction of the node's outputs that saturated the int8 range.
+    pub clip_rate: f32,
+}
+
 /// The integer-native executor (see module docs).
 pub struct Int8Executor {
     nodes: Vec<Int8Node>,
     input_shape: Shape,
     output_ids: Vec<NodeId>,
     mode: QuantMode,
+    /// Effective weight bit-width of this rung (8 for the base program;
+    /// 4/2 for programs derived via [`Int8Executor::rung`]).
+    bits: u32,
     gamma: usize,
     /// Weight-scale granularity the program was lowered with (identity
     /// for [`crate::engine::VariantSpec::Int8`]).
@@ -191,6 +220,7 @@ impl Int8Executor {
             input_shape: graph.input_shape().clone(),
             output_ids: graph.output_ids(),
             mode,
+            bits: 8,
             gamma: settings.gamma.max(1),
             weight_gran,
             input_q,
@@ -199,8 +229,89 @@ impl Int8Executor {
         })
     }
 
+    /// Derive a nested lower-precision rung (`bits` ∈ {8, 4, 2}) from this
+    /// 8-bit program. The int8 weight tensors are shared (`Arc` clones — no
+    /// second weight copy); rung `b` truncates them by `8 − b` bits inline
+    /// at the kernel weight load. Per rung, this recomputes the deploy-time
+    /// constants on the widened `s_in · s_w · 2^(8−b)` accumulator grid:
+    /// weight scales, surrogate weight moments (from the dequantized
+    /// truncated weights — what actually runs), FC row sums, and for static
+    /// mode the folded bias + Q31 requant spec. The frozen *output* grids
+    /// are kept from the 8-bit program — truncation perturbs values within
+    /// the same real-unit range, so the ladder shares one output
+    /// quantization chain and rung 8 is bit-identical to `self`.
+    pub fn rung(&self, bits: u32) -> Result<Int8Executor, String> {
+        if self.bits != 8 {
+            return Err(format!(
+                "rungs derive from the 8-bit base program (this one is already {}-bit)",
+                self.bits
+            ));
+        }
+        if !matches!(bits, 2 | 4 | 8) {
+            return Err(format!("unsupported rung bit-width {bits} (expected 8, 4 or 2)"));
+        }
+        let shift = 8 - bits;
+        // Mirror lowering's grid-chain walk so each static layer refolds its
+        // bias/requant against the same input grid the base program uses.
+        let mut static_q: Vec<QOut> = Vec::with_capacity(self.nodes.len());
+        let mut nodes: Vec<Int8Node> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let (op, sq) = match &node.op {
+                Int8Op::Input => (Int8Op::Input, self.input_q),
+                Int8Op::Conv { l, geom } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let nl = rung_layer(l, shift, false, self.mode, in_q);
+                    let sq = nl.static_out.unwrap_or(in_q);
+                    (Int8Op::Conv { l: nl, geom: *geom }, sq)
+                }
+                Int8Op::DwConv { l, geom } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let nl = rung_layer(l, shift, false, self.mode, in_q);
+                    let sq = nl.static_out.unwrap_or(in_q);
+                    (Int8Op::DwConv { l: nl, geom: *geom }, sq)
+                }
+                Int8Op::Linear { l } => {
+                    let in_q = static_q[node.inputs[0].0];
+                    let nl = rung_layer(l, shift, true, self.mode, in_q);
+                    let sq = nl.static_out.unwrap_or(in_q);
+                    (Int8Op::Linear { l: nl }, sq)
+                }
+                Int8Op::Add => {
+                    (Int8Op::Add, add_grid(static_q[node.inputs[0].0], static_q[node.inputs[1].0]))
+                }
+                other => (other.clone(), static_q[node.inputs[0].0]),
+            };
+            static_q.push(sq);
+            nodes.push(Int8Node { op, inputs: node.inputs.clone() });
+        }
+        Ok(Int8Executor {
+            nodes,
+            input_shape: self.input_shape.clone(),
+            output_ids: self.output_ids.clone(),
+            mode: self.mode,
+            bits,
+            gamma: self.gamma,
+            weight_gran: self.weight_gran,
+            input_q: self.input_q,
+            plan: Arc::clone(&self.plan),
+            arena: Mutex::new(Int8Arena::new(Arc::clone(&self.plan))),
+        })
+    }
+
     pub fn mode(&self) -> QuantMode {
         self.mode
+    }
+
+    /// Effective weight bit-width of this rung (8 unless derived via
+    /// [`Int8Executor::rung`]).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Arithmetic right shift the fast kernels apply to each weight load on
+    /// this rung (`8 − bits`; 0 for the base program).
+    fn weight_shift(&self) -> u32 {
+        8 - self.bits
     }
 
     /// The weight-scale granularity the program was lowered with.
@@ -293,21 +404,26 @@ impl Int8Executor {
     /// window statistics — the shadow-recalibration fast path
     /// ([`crate::adapt::recalib`]).
     ///
-    /// `live` maps quantizable node ids to accumulated [`WindowStats`] of
-    /// that node's input (as collected by [`Int8Executor::run_tapped_with_arena`]
-    /// over many requests). For each such node the paper's own estimator
-    /// predicts fresh pre-activation moments from the pooled sums
-    /// (`predict_grid`: Eq. 8–12 + the calibrated `I(α, β)`), yielding a new
-    /// frozen output grid; the bias fold and Q31 requant spec are then
-    /// refolded against the (possibly changed) upstream grid — O(C)
-    /// arithmetic per node on the existing `s_in·s_w` accumulator grid, no
-    /// weight requantization, no float calibration pass, fully
-    /// dequantization-free. Nodes absent from `live` keep their old output
-    /// grid but still have bias/requant refolded against their new input
-    /// grid, so the returned program is always internally consistent.
+    /// `live` maps quantizable node ids to [`LiveNodeStats`] — pooled
+    /// [`WindowStats`] of that node's input plus its observed output clip
+    /// rate (as collected by [`Int8Executor::run_tapped_with_arena`] over
+    /// many requests). For each such node the Eq. 13 `(α, β)` interval is
+    /// first refit against the observed clip rate
+    /// ([`IntervalSpec::refit_from_clip`] — a stale calibration interval
+    /// that now over- or under-clips is re-centred on its own coverage
+    /// target), then the paper's estimator predicts fresh pre-activation
+    /// moments from the pooled sums (`predict_grid`: Eq. 8–12 + the refit
+    /// `I(α, β)`), yielding a new frozen output grid; the bias fold and Q31
+    /// requant spec are then refolded against the (possibly changed)
+    /// upstream grid — O(C) arithmetic per node on the existing `s_in·s_w`
+    /// accumulator grid, no weight requantization, no float calibration
+    /// pass, fully dequantization-free. Nodes absent from `live` keep their
+    /// old output grid but still have bias/requant refolded against their
+    /// new input grid, so the returned program is always internally
+    /// consistent.
     pub fn refit_static_grids(
         &self,
-        live: &BTreeMap<usize, WindowStats>,
+        live: &BTreeMap<usize, LiveNodeStats>,
     ) -> Result<Int8Executor, String> {
         if self.mode != QuantMode::Static {
             return Err(format!(
@@ -353,6 +469,7 @@ impl Int8Executor {
             input_shape: self.input_shape.clone(),
             output_ids: self.output_ids.clone(),
             mode: self.mode,
+            bits: self.bits,
             gamma: self.gamma,
             weight_gran: self.weight_gran,
             input_q: self.input_q,
@@ -361,10 +478,11 @@ impl Int8Executor {
         })
     }
 
-    /// One layer of [`Int8Executor::refit_static_grids`]: predict the new
-    /// frozen output grid from pooled live stats (old input grid — the one
-    /// the stats were collected on), then refold bias + requant against the
-    /// new input grid. Returns (new layer, old output grid, new output grid).
+    /// One layer of [`Int8Executor::refit_static_grids`]: refit the Eq. 13
+    /// interval from the observed clip rate, predict the new frozen output
+    /// grid from pooled live stats (old input grid — the one the stats were
+    /// collected on), then refold bias + requant against the new input
+    /// grid. Returns (new layer, old output grid, new output grid).
     fn refit_layer(
         &self,
         idx: usize,
@@ -372,16 +490,19 @@ impl Int8Executor {
         in_id: usize,
         old_q: &[QOut],
         new_q: &[QOut],
-        live: &BTreeMap<usize, WindowStats>,
+        live: &BTreeMap<usize, LiveNodeStats>,
     ) -> (Int8Layer, QOut, QOut) {
         let old_in = old_q[in_id];
         let new_in = new_q[in_id];
         let old_out = l.static_out.expect("static lowering");
+        let mut nl = l.clone();
         let new_out = match live.get(&idx) {
-            Some(st) if st.n > 0 => predict_grid(l, st, old_in.scale),
+            Some(ls) if ls.window.n > 0 => {
+                nl.interval = l.interval.refit_from_clip(ls.clip_rate);
+                predict_grid(&nl, &ls.window, old_in.scale)
+            }
             _ => old_out,
         };
-        let mut nl = l.clone();
         nl.static_out = Some(new_out);
         let mut bias_q = std::mem::take(&mut nl.bias_q);
         fold_bias(&nl.bias_f, new_in.scale, &nl.s_w, &mut bias_q);
@@ -557,11 +678,12 @@ impl Int8Executor {
                     QuantMode::Static => {
                         let rq = l.static_requant.as_ref().expect("static lowering");
                         let x = &arena.slots[in_slot];
-                        fast::convolve_s8_fast(
+                        fast::convolve_s8_fast_shifted(
                             x,
                             &l.kernel,
                             &l.bias_q,
                             -in_q.zero,
+                            self.weight_shift(),
                             geom,
                             &mut arena.cols,
                             out.data_mut(),
@@ -575,11 +697,12 @@ impl Int8Executor {
                         let q_out = predict_grid(l, &st, in_q.scale);
                         fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
                         fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
-                        fast::convolve_s8_fast(
+                        fast::convolve_s8_fast_shifted(
                             x,
                             &l.kernel,
                             &arena.bias_buf,
                             -in_q.zero,
+                            self.weight_shift(),
                             geom,
                             &mut arena.cols,
                             out.data_mut(),
@@ -593,11 +716,12 @@ impl Int8Executor {
                         arena.wide.resize(out.numel(), 0);
                         {
                             let x = &arena.slots[in_slot];
-                            fast::convolve_s8_fast(
+                            fast::convolve_s8_fast_shifted(
                                 x,
                                 &l.kernel,
                                 &arena.bias_buf,
                                 -in_q.zero,
+                                self.weight_shift(),
                                 geom,
                                 &mut arena.cols,
                                 &mut arena.wide,
@@ -632,11 +756,12 @@ impl Int8Executor {
                     QuantMode::Static => {
                         let rq = l.static_requant.as_ref().expect("static lowering");
                         let x = &arena.slots[in_slot];
-                        fast::dwconv_s8_fast(
+                        fast::dwconv_s8_fast_shifted(
                             x,
                             &l.kernel,
                             &l.bias_q,
                             -in_q.zero,
+                            self.weight_shift(),
                             geom,
                             &mut arena.dw_wt,
                             &mut arena.acc_row,
@@ -651,11 +776,12 @@ impl Int8Executor {
                         let q_out = predict_grid(l, &st, in_q.scale);
                         fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
                         fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
-                        fast::dwconv_s8_fast(
+                        fast::dwconv_s8_fast_shifted(
                             x,
                             &l.kernel,
                             &arena.bias_buf,
                             -in_q.zero,
+                            self.weight_shift(),
                             geom,
                             &mut arena.dw_wt,
                             &mut arena.acc_row,
@@ -670,11 +796,12 @@ impl Int8Executor {
                         arena.wide.resize(out.numel(), 0);
                         {
                             let x = &arena.slots[in_slot];
-                            fast::dwconv_s8_fast(
+                            fast::dwconv_s8_fast_shifted(
                                 x,
                                 &l.kernel,
                                 &arena.bias_buf,
                                 -in_q.zero,
+                                self.weight_shift(),
                                 geom,
                                 &mut arena.dw_wt,
                                 &mut arena.acc_row,
@@ -713,12 +840,13 @@ impl Int8Executor {
                     QuantMode::Static => {
                         let rq = l.static_requant.as_ref().expect("static lowering");
                         let x = &arena.slots[in_slot];
-                        fast::fully_connected_s8_fast(
+                        fast::fully_connected_s8_fast_shifted(
                             x.data(),
                             &l.kernel,
                             &l.bias_q,
                             &l.w_row_sums,
                             -in_q.zero,
+                            self.weight_shift(),
                             out.data_mut(),
                             fast::requant_epi(rq),
                         );
@@ -732,12 +860,13 @@ impl Int8Executor {
                         let q_out = predict_grid(l, &st, in_q.scale);
                         fold_bias(&l.bias_f, in_q.scale, &l.s_w, &mut arena.bias_buf);
                         fill_requant(&mut arena.requant, in_q.scale, &l.s_w, q_out);
-                        fast::fully_connected_s8_fast(
+                        fast::fully_connected_s8_fast_shifted(
                             x.data(),
                             &l.kernel,
                             &arena.bias_buf,
                             &l.w_row_sums,
                             -in_q.zero,
+                            self.weight_shift(),
                             out.data_mut(),
                             fast::requant_epi(&arena.requant),
                         );
@@ -749,12 +878,13 @@ impl Int8Executor {
                         arena.wide.resize(h, 0);
                         {
                             let x = &arena.slots[in_slot];
-                            fast::fully_connected_s8_fast(
+                            fast::fully_connected_s8_fast_shifted(
                                 x.data(),
                                 &l.kernel,
                                 &arena.bias_buf,
                                 &l.w_row_sums,
                                 -in_q.zero,
+                                self.weight_shift(),
                                 &mut arena.wide,
                                 |a, _| a,
                             );
@@ -842,13 +972,14 @@ impl Int8Executor {
                 Int8Op::Conv { l, geom } => {
                     let x = &vals[node.inputs[0].0];
                     let in_q = grids[node.inputs[0].0];
+                    let kq = self.naive_rung_kernel(&l.kernel);
                     self.naive_layer(l, in_q, |bias, rq| match rq {
                         Some(rq) => {
-                            (crate::cmsis::convolve_s8(x, &l.kernel, bias, -in_q.zero, rq, geom), None)
+                            (crate::cmsis::convolve_s8(x, &kq, bias, -in_q.zero, rq, geom), None)
                         }
                         None => {
                             let acc = crate::cmsis::convolve_s8::convolve_s8_acc(
-                                x, &l.kernel, bias, -in_q.zero, geom,
+                                x, &kq, bias, -in_q.zero, geom,
                             );
                             (Tensor::zeros(acc.shape().clone()), Some(acc))
                         }
@@ -857,13 +988,14 @@ impl Int8Executor {
                 Int8Op::DwConv { l, geom } => {
                     let x = &vals[node.inputs[0].0];
                     let in_q = grids[node.inputs[0].0];
+                    let kq = self.naive_rung_kernel(&l.kernel);
                     self.naive_layer(l, in_q, |bias, rq| match rq {
                         Some(rq) => {
-                            (crate::cmsis::dwconv_s8(x, &l.kernel, bias, -in_q.zero, rq, geom), None)
+                            (crate::cmsis::dwconv_s8(x, &kq, bias, -in_q.zero, rq, geom), None)
                         }
                         None => {
                             let acc = crate::cmsis::dwconv_s8::dwconv_s8_acc(
-                                x, &l.kernel, bias, -in_q.zero, geom,
+                                x, &kq, bias, -in_q.zero, geom,
                             );
                             (Tensor::zeros(acc.shape().clone()), Some(acc))
                         }
@@ -873,16 +1005,17 @@ impl Int8Executor {
                     let x = &vals[node.inputs[0].0];
                     let in_q = grids[node.inputs[0].0];
                     let h = l.bias_f.len();
+                    let kq = self.naive_rung_kernel(&l.kernel);
                     self.naive_layer(l, in_q, |bias, rq| match rq {
                         Some(rq) => {
                             let y = crate::cmsis::fully_connected_s8(
-                                x.data(), &l.kernel, bias, -in_q.zero, rq,
+                                x.data(), &kq, bias, -in_q.zero, rq,
                             );
                             (Tensor::from_vec(Shape::new(&[h]), y), None)
                         }
                         None => {
                             let acc = crate::cmsis::fully_connected_s8::fully_connected_s8_acc(
-                                x.data(), &l.kernel, bias, -in_q.zero,
+                                x.data(), &kq, bias, -in_q.zero,
                             );
                             (
                                 Tensor::zeros(Shape::new(&[h])),
@@ -941,6 +1074,15 @@ impl Int8Executor {
                 (t, q_out)
             }
         }
+    }
+
+    /// The weight tensor the naive oracle runs on: the shared int8 weights,
+    /// materialized as `w >> shift` on derived rungs. The fresh allocation
+    /// is the oracle's point — the fast engine applies the same shift
+    /// inline at the weight load and never materializes this tensor.
+    fn naive_rung_kernel(&self, kernel: &Tensor<i8>) -> Tensor<i8> {
+        let shift = self.weight_shift();
+        kernel.map(|v| v >> shift)
     }
 }
 
@@ -1013,7 +1155,7 @@ fn lower_layer(
         (None, None, Vec::new())
     };
     let layer = Int8Layer {
-        kernel,
+        kernel: Arc::new(kernel),
         s_w,
         bias_f: b.to_vec(),
         bias_q,
@@ -1028,6 +1170,55 @@ fn lower_layer(
     };
     let sq = static_out.unwrap_or(in_q);
     Ok((layer, sq))
+}
+
+/// Re-derive one layer for a nested rung: the weight tensor is shared
+/// (`Arc` clone) and truncated at load time by the kernels, so only the
+/// deploy-time constants move — weight scales pick up the `2^shift`
+/// truncation factor (the accumulator's unit), surrogate moments are
+/// recomputed from the dequantized truncated weights, FC row sums from the
+/// truncated integers, and static mode refolds bias + Q31 requant onto the
+/// widened accumulator grid while keeping the 8-bit program's frozen output
+/// grid. At `shift == 0` every value is reproduced bit-for-bit.
+fn rung_layer(l: &Int8Layer, shift: u32, is_linear: bool, mode: QuantMode, in_q: QOut) -> Int8Layer {
+    let mult = (1u32 << shift) as f32;
+    let s_w: Vec<f32> = l.s_w.iter().map(|&s| s * mult).collect();
+    let channels = l.bias_f.len();
+    let per = l.kernel.numel() / channels;
+    let deq: Vec<f32> = l
+        .kernel
+        .data()
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| (q >> shift) as f32 * s_w[if s_w.len() == 1 { 0 } else { i / per }])
+        .collect();
+    let mu_w = crate::util::stats::mean(&deq);
+    let var_w = crate::util::stats::variance(&deq);
+    let w_row_sums =
+        if is_linear { fast::weight_row_sums_shifted(&l.kernel, shift) } else { Vec::new() };
+    let (static_out, static_requant, bias_q) = if mode == QuantMode::Static {
+        let q_out = l.static_out.expect("static lowering");
+        let mut bq = Vec::new();
+        fold_bias(&l.bias_f, in_q.scale, &s_w, &mut bq);
+        let rq = build_requant(in_q.scale, &s_w, q_out);
+        (Some(q_out), Some(rq), bq)
+    } else {
+        (None, None, Vec::new())
+    };
+    Int8Layer {
+        kernel: Arc::clone(&l.kernel),
+        s_w,
+        bias_f: l.bias_f.clone(),
+        bias_q,
+        w_row_sums,
+        mu_w,
+        var_w,
+        bias_mu: l.bias_mu,
+        bias_var: l.bias_var,
+        interval: l.interval,
+        static_out,
+        static_requant,
+    }
 }
 
 /// Fold a float bias onto the `s_in·s_w` i32 accumulator grid.
@@ -1346,7 +1537,7 @@ mod tests {
         // Collect live stats from brightened inputs via the tap.
         let mut arena = int8.make_arena();
         let mut tap = crate::engine::RunTap::new(1);
-        let mut live: BTreeMap<usize, WindowStats> = BTreeMap::new();
+        let mut live: BTreeMap<usize, LiveNodeStats> = BTreeMap::new();
         for _ in 0..4 {
             let mut img = rand_image(&mut rng);
             for v in img.data_mut() {
@@ -1355,10 +1546,13 @@ mod tests {
             int8.run_tapped_with_arena(&img, &mut arena, &mut tap).unwrap();
             for nt in &tap.nodes {
                 let e = live.entry(nt.node).or_default();
-                e.n += nt.window.n;
-                e.sum_s1 += nt.window.sum_s1;
-                e.sum_s2 += nt.window.sum_s2;
-                e.sum_s1_sq += nt.window.sum_s1_sq;
+                e.window.n += nt.window.n;
+                e.window.sum_s1 += nt.window.sum_s1;
+                e.window.sum_s2 += nt.window.sum_s2;
+                e.window.sum_s1_sq += nt.window.sum_s1_sq;
+                if nt.total > 0 {
+                    e.clip_rate = nt.clipped as f32 / nt.total as f32;
+                }
             }
         }
         let refit = int8.refit_static_grids(&live).unwrap();
@@ -1383,6 +1577,57 @@ mod tests {
         exd.calibrate(&calib);
         let dyn8 = Int8Executor::lower(&exd, Granularity::PerTensor).unwrap();
         assert!(dyn8.refit_static_grids(&live).is_err());
+    }
+
+    #[test]
+    fn rung8_is_bit_identical_and_lower_rungs_run() {
+        let mut rng = Pcg32::new(0xB175);
+        let g = tiny_graph(&mut rng);
+        let calib: Vec<Tensor<f32>> = (0..4).map(|_| rand_image(&mut rng)).collect();
+        let img = rand_image(&mut rng);
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let mut ex = QuantExecutor::new(
+                Arc::clone(&g),
+                QuantSettings { mode, ..Default::default() },
+            );
+            ex.calibrate(&calib);
+            let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+            assert_eq!(int8.bits(), 8);
+            // Rung 8 reproduces the base program bit for bit.
+            let r8 = int8.rung(8).unwrap();
+            let a = int8.run_q(&img).unwrap();
+            let b = r8.run_q(&img).unwrap();
+            assert_eq!(a[0].0.data(), b[0].0.data(), "{mode:?}: rung 8 diverged");
+            assert_eq!(a[0].1, b[0].1, "{mode:?}: rung 8 grid diverged");
+            // Lower rungs share the weights and still produce sane output.
+            for bits in [4u32, 2] {
+                let r = int8.rung(bits).unwrap();
+                assert_eq!(r.bits(), bits);
+                let q = r.run_q(&img).unwrap();
+                assert_eq!(q[0].0.numel(), 4, "{mode:?}@{bits}");
+                assert!(q[0].1.scale > 0.0, "{mode:?}@{bits}");
+                // Fast engine vs the naive oracle on the truncated weights.
+                let naive = r.run_naive(&img);
+                assert_eq!(q[0].0.data(), naive[0].0.data(), "{mode:?}@{bits}: rung parity");
+                // Rungs never allocate the wide buffer in static/PDQ mode.
+                if mode != QuantMode::Dynamic {
+                    let mut arena = r.make_arena();
+                    r.run_with_arena(&img, &mut arena).unwrap();
+                    assert_eq!(arena.wide_capacity_elems(), 0, "{mode:?}@{bits}");
+                }
+            }
+        }
+        // Rung-of-rung and junk widths are typed errors.
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings { mode: QuantMode::Static, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let int8 = Int8Executor::lower(&ex, Granularity::PerTensor).unwrap();
+        let r4 = int8.rung(4).unwrap();
+        assert!(r4.rung(2).is_err(), "rungs derive from the 8-bit base only");
+        assert!(int8.rung(3).is_err());
+        assert!(int8.rung(0).is_err());
     }
 
     #[test]

@@ -32,6 +32,6 @@ pub mod ops;
 pub mod quant_exec;
 
 pub use graph::{Graph, NodeId, Op};
-pub use int8_exec::Int8Executor;
+pub use int8_exec::{Int8Executor, LiveNodeStats};
 pub use memory::{ExecArena, Int8Arena, MemoryPlan};
 pub use quant_exec::{QuantExecutor, QuantMode};

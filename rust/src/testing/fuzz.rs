@@ -213,7 +213,7 @@ pub fn gen_wire_body(rng: &mut Pcg32) -> Vec<u8> {
             mode: QuantMode::Probabilistic,
             gran: Granularity::PerTensor,
         },
-        _ => VariantSpec::Int8 { mode: QuantMode::Dynamic, weight_gran: Granularity::PerChannel },
+        _ => VariantSpec::Int8 { mode: QuantMode::Dynamic, weight_gran: Granularity::PerChannel, bits: 8 },
     };
     wire::encode_infer_request(&VariantKey::new("fuzz-model", spec), rng.next_u64(), &img)
 }

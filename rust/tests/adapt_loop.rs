@@ -53,7 +53,7 @@ fn int8_static(model: &Model, calib: &[Tensor<f32>]) -> (Arc<Int8Executor>, Arc<
 fn int8_static_key(model: &str) -> VariantKey {
     VariantKey::new(
         model,
-        VariantSpec::Int8 { mode: QuantMode::Static, weight_gran: Granularity::PerTensor },
+        VariantSpec::Int8 { mode: QuantMode::Static, weight_gran: Granularity::PerTensor, bits: 8 },
     )
 }
 

@@ -1,0 +1,191 @@
+//! Precision-brownout end-to-end: overload plus connection chaos against
+//! a front door serving a full 8/4/2-bit rung ladder.
+//!
+//! The acceptance invariant from the brownout issue: under sustained
+//! closed-loop overload (8 clients against 1 worker and a depth-1 queue,
+//! through a timing-chaos proxy), the run must complete with **zero
+//! failed and zero dropped requests** — every request is either answered
+//! (possibly at a degraded rung) or shed with a clean 429 after the
+//! ladder is exhausted — and the degraded rungs must actually have
+//! served traffic (`precision_served{4|2} > 0`, corroborated client-side
+//! by the `bits` response field).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pdq::coordinator::brownout::BrownoutState;
+use pdq::coordinator::{BrownoutConfig, Server, ServerConfig};
+use pdq::engine::{Engine, FloatEngine, Int8Engine, VariantKey, VariantSpec};
+use pdq::net::chaos::{ChaosConfig, ChaosListener};
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::wire::{Client, InferOutcome};
+use pdq::net::{FrontDoor, FrontDoorConfig};
+use pdq::nn::int8_exec::Int8Executor;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{Graph, QuantMode};
+use pdq::quant::Granularity;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::Pcg32;
+
+const HW: usize = 6;
+const CIN: usize = 2;
+
+/// conv(2→3, 3x3) → relu → gap, input 6×6×2; weights seeded.
+fn brownout_graph() -> Arc<Graph> {
+    let mut rng = Pcg32::new(0xB10_0B17);
+    let mut g = Graph::new(Shape::hwc(HW, HW, CIN));
+    let x = g.input();
+    let w: Vec<f32> = (0..3 * 9 * CIN).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+    let c = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(3, 3, 3, CIN), w),
+        vec![0.02, -0.03, 0.05],
+        ConvGeom::same(3, 1),
+    );
+    let r = g.relu(c);
+    let p = g.global_avg_pool(r);
+    g.mark_output(p);
+    Arc::new(g)
+}
+
+/// fp32 + the full int8 rung ladder (8, 4, 2 bits) for model `"t"`.
+fn ladder_variants() -> Vec<(VariantKey, Arc<dyn Engine>)> {
+    let graph = brownout_graph();
+    let mut rng = Pcg32::new(0xB10_CA11);
+    let calib: Vec<Tensor<f32>> = (0..8)
+        .map(|_| {
+            let d: Vec<f32> = (0..HW * HW * CIN).map(|_| rng.uniform()).collect();
+            Tensor::from_vec(Shape::hwc(HW, HW, CIN), d)
+        })
+        .collect();
+    let mode = QuantMode::Probabilistic;
+    let gran = Granularity::PerTensor;
+    let mut ex = QuantExecutor::new(
+        Arc::clone(&graph),
+        QuantSettings { mode, granularity: gran, ..Default::default() },
+    );
+    ex.calibrate(&calib);
+    let base = Int8Executor::lower(&ex, gran).expect("lowering");
+    let spec = |bits| VariantSpec::Int8 { mode, weight_gran: gran, bits };
+    let mut variants: Vec<(VariantKey, Arc<dyn Engine>)> =
+        vec![(VariantKey::new("t", VariantSpec::Fp32), Arc::new(FloatEngine::new(graph)))];
+    for bits in [8u32, 4, 2] {
+        let rung = base.rung(bits).expect("rung derivation");
+        variants.push((
+            VariantKey::new("t", spec(bits)),
+            Arc::new(Int8Engine::new(Arc::new(rung))),
+        ));
+    }
+    variants
+}
+
+/// Overload (8 closed-loop clients vs 1 worker, depth-1 queue) through a
+/// timing-only chaos proxy: zero failed, zero dropped, degraded rungs
+/// actually served, clean drain with no leaked permits.
+#[test]
+fn overload_with_chaos_degrades_instead_of_failing() {
+    let server = Arc::new(Server::start(
+        ladder_variants(),
+        ServerConfig {
+            workers_per_variant: 1,
+            max_queue_depth: 1,
+            // Dwell of an hour: escalation stays instant (dwell only gates
+            // de-escalation), so once overload bites, the state is pinned
+            // for the whole test — no timing-dependent flapping.
+            brownout: Some(BrownoutConfig {
+                min_dwell: Duration::from_secs(3600),
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    ));
+    let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
+    let proxy = ChaosListener::start(
+        "127.0.0.1:0",
+        &fd.local_addr().to_string(),
+        ChaosConfig {
+            seed: 0xB10_0003,
+            max_chunk: 7,
+            would_block_every: 5,
+            latency: Duration::from_micros(150),
+            latency_every: 6,
+            disconnect_every: 0, // timing faults only: failures would be ours
+            ..ChaosConfig::default()
+        },
+    )
+    .unwrap();
+
+    let report = loadgen::run(&LoadgenConfig {
+        target: proxy.local_addr().to_string(),
+        mode: LoadMode::Closed,
+        concurrency: 8, // 8× the single worker: sustained overload
+        duration: Duration::from_secs(2),
+        variants: vec!["t|int8-ours-t".into()],
+        seed: 0xB10_10AD,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+
+    assert!(report.total.ok > 0, "overload must not stop all traffic: {:?}", report.total);
+    assert_eq!(
+        report.total.failed, 0,
+        "brownout must degrade, never fail, before ladder exhaustion: {:?}",
+        report.total
+    );
+    assert_eq!(report.total.dropped, 0, "no transport-level losses: {:?}", report.total);
+
+    // The ladder actually degraded: server-side counters and the
+    // client-visible `bits` response field agree that 4- or 2-bit rungs
+    // served real traffic.
+    let m = server.metrics();
+    let degraded_served = m.precision_served(4) + m.precision_served(2);
+    assert!(
+        degraded_served > 0,
+        "8 clients vs 1 worker must push the controller past Normal \
+         (served: 8→{} 4→{} 2→{})",
+        m.precision_served(8),
+        m.precision_served(4),
+        m.precision_served(2)
+    );
+    let client_degraded: u64 = report
+        .total
+        .served_bits
+        .iter()
+        .filter(|(bits, _)| **bits == 4 || **bits == 2)
+        .map(|(_, n)| **n)
+        .sum();
+    assert!(
+        client_degraded > 0,
+        "degraded responses must carry their bits on the wire: {:?}",
+        report.total.served_bits
+    );
+
+    // Forced Degrade2: the very next request must be served at exactly
+    // 2 bits and say so in the response preamble.
+    server.brownout().expect("brownout enabled").force_state(BrownoutState::Degrade2, Instant::now());
+    let mut rng = Pcg32::new(0xB10_0D1E);
+    let d: Vec<f32> = (0..HW * HW * CIN).map(|_| rng.uniform()).collect();
+    let img = Tensor::from_vec(Shape::hwc(HW, HW, CIN), d);
+    let key = VariantKey::parse_wire("t|int8-ours-t").unwrap();
+    let mut direct = Client::new(&fd.local_addr().to_string());
+    match direct.post_infer(&key, 424_242, &img).unwrap() {
+        InferOutcome::Ok(resp) => {
+            assert_eq!(resp.id, 424_242);
+            assert_eq!(resp.bits, 2, "Degrade2 must serve the 2-bit rung");
+        }
+        InferOutcome::Rejected { retry_after_ms } => {
+            panic!("unloaded post-run request was shed (retry hint {retry_after_ms} ms)")
+        }
+        InferOutcome::Failed { status, error } => {
+            panic!("unloaded post-run request failed: http {status}: {error}")
+        }
+    }
+    drop(direct);
+
+    proxy.shutdown();
+    let metrics = fd.shutdown();
+    for (key, depth) in server.admission_depths() {
+        assert_eq!(depth, 0, "leaked admission permit on {}", key.wire());
+    }
+    assert_eq!(metrics.malformed(), 0, "chaos mangles timing, never bytes");
+}

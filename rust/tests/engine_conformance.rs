@@ -111,7 +111,7 @@ fn conformance_engines() -> Vec<(String, Arc<dyn Engine>)> {
                 Arc::new(QuantEngine::new(Arc::new(quant_executor(mode, gran)))),
             ));
         }
-        let spec = VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor };
+        let spec = VariantSpec::Int8 { mode, weight_gran: Granularity::PerTensor, bits: 8 };
         out.push((
             spec.wire(),
             Arc::new(Int8Engine::new(Arc::new(int8_executor(mode, Granularity::PerTensor)))),
@@ -276,7 +276,7 @@ fn builder_is_bit_identical_to_manual_construction() {
     for spec in [
         VariantSpec::Fp32,
         VariantSpec::FakeQuant { mode: QuantMode::Probabilistic, gran: Granularity::PerChannel },
-        VariantSpec::Int8 { mode: QuantMode::Static, weight_gran: Granularity::PerChannel },
+        VariantSpec::Int8 { mode: QuantMode::Static, weight_gran: Granularity::PerChannel, bits: 8 },
     ] {
         let built = EngineBuilder::new(&model)
             .spec(spec)
@@ -289,7 +289,7 @@ fn builder_is_bit_identical_to_manual_construction() {
             VariantSpec::FakeQuant { mode, gran } => {
                 Arc::new(QuantEngine::new(Arc::new(quant_executor(mode, gran))))
             }
-            VariantSpec::Int8 { mode, weight_gran } => {
+            VariantSpec::Int8 { mode, weight_gran, bits: _ } => {
                 Arc::new(Int8Engine::new(Arc::new(int8_executor(mode, weight_gran))))
             }
         };

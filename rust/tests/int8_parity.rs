@@ -219,6 +219,94 @@ fn fast_engine_bit_exact_vs_naive_engine() {
 }
 
 #[test]
+fn rung_engines_bit_exact_vs_scalar_oracle() {
+    let mut rng = Pcg32::new(0x181F);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let imgs: Vec<Tensor<f32>> = (0..3).map(|_| rand_image(&mut rng)).collect();
+    for weight_gran in [Granularity::PerTensor, Granularity::PerChannel] {
+        for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+            let (_, int8) = lowered(&g, mode, weight_gran, 1, &calib);
+            for bits in [4u32, 2] {
+                let rung = int8.rung(bits).expect("rung derivation");
+                assert_eq!(rung.bits(), bits);
+                for (i, img) in imgs.iter().enumerate() {
+                    // The oracle materializes the truncated weights and runs
+                    // the naive scalar kernels; the fast engine applies the
+                    // same shift inline at the weight load. Integer equality
+                    // across values AND grids, like the 8-bit suite above.
+                    let naive = rung.run_naive(img);
+                    let fast = rung.run_q(img).expect("run_q");
+                    assert_eq!(naive.len(), fast.len());
+                    for (j, ((tn, qn), (tf, qf))) in naive.iter().zip(fast.iter()).enumerate() {
+                        assert_eq!(
+                            qn, qf,
+                            "{mode:?}/{weight_gran:?} b{bits} img{i} out{j}: grid mismatch"
+                        );
+                        assert_eq!(
+                            tn.data(),
+                            tf.data(),
+                            "{mode:?}/{weight_gran:?} b{bits} img{i} out{j}: values differ"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rung8_is_bit_identical_to_the_base_program() {
+    let mut rng = Pcg32::new(0x1820);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let imgs: Vec<Tensor<f32>> = (0..3).map(|_| rand_image(&mut rng)).collect();
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        let (_, int8) = lowered(&g, mode, Granularity::PerChannel, 1, &calib);
+        let r8 = int8.rung(8).expect("rung 8");
+        for (i, img) in imgs.iter().enumerate() {
+            let base = int8.run_q(img).expect("base run");
+            let rung = r8.run_q(img).expect("rung run");
+            for (j, ((tb, qb), (tr, qr))) in base.iter().zip(rung.iter()).enumerate() {
+                assert_eq!(qb, qr, "{mode:?} img{i} out{j}: rung(8) changed the grid");
+                assert_eq!(
+                    tb.data(),
+                    tr.data(),
+                    "{mode:?} img{i} out{j}: rung(8) must be bit-identical"
+                );
+            }
+        }
+    }
+    // Rungs only derive from the 8-bit base, and only at 8/4/2.
+    let (_, int8) = lowered(&g, QuantMode::Static, Granularity::PerTensor, 1, &calib);
+    let r4 = int8.rung(4).expect("rung 4");
+    assert!(r4.rung(2).is_err(), "re-deriving from a derived rung must refuse");
+    assert!(int8.rung(3).is_err(), "bit-width 3 is not on the ladder");
+    assert!(int8.rung(0).is_err(), "bit-width 0 is not on the ladder");
+}
+
+#[test]
+fn rungs_preserve_the_static_memory_claim() {
+    let mut rng = Pcg32::new(0x1821);
+    let g = residual_net(&mut rng);
+    let calib: Vec<Tensor<f32>> = (0..6).map(|_| rand_image(&mut rng)).collect();
+    let img = rand_image(&mut rng);
+    for mode in [QuantMode::Static, QuantMode::Probabilistic] {
+        for bits in [4u32, 2] {
+            let (_, int8) = lowered(&g, mode, Granularity::PerTensor, 1, &calib);
+            let rung = int8.rung(bits).expect("rung");
+            let mut arena = rung.make_arena();
+            rung.run_q_with_arena(&img, &mut arena).expect("run");
+            assert_eq!(
+                arena.wide_capacity_elems(),
+                0,
+                "{mode:?} b{bits}: degraded rungs must keep the O(1) memory claim"
+            );
+        }
+    }
+}
+
+#[test]
 fn static_and_pdq_never_allocate_the_wide_buffer() {
     let mut rng = Pcg32::new(0x181B);
     let g = residual_net(&mut rng);

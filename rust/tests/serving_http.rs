@@ -76,7 +76,7 @@ fn build_variant(spec: &VariantSpec) -> (VariantKey, Arc<dyn Engine>) {
             ex.calibrate(&calib_images());
             Arc::new(QuantEngine::new(Arc::new(ex)))
         }
-        VariantSpec::Int8 { mode, weight_gran } => {
+        VariantSpec::Int8 { mode, weight_gran, bits: _ } => {
             let mut ex = QuantExecutor::new(
                 graph,
                 QuantSettings { mode, granularity: Granularity::PerTensor, ..Default::default() },
@@ -100,6 +100,7 @@ fn test_modes() -> Vec<VariantSpec> {
         VariantSpec::Int8 {
             mode: QuantMode::Probabilistic,
             weight_gran: Granularity::PerTensor,
+            bits: 8,
         },
     ]
 }
@@ -232,6 +233,7 @@ fn drain_answers_every_queued_request() {
             workers_per_variant: 1,
             policy: BatchPolicy { max_batch: 1, deadline: Duration::from_millis(1) },
             max_queue_depth: 0,
+            ..Default::default()
         },
     ));
     let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
