@@ -45,6 +45,16 @@ impl BrownoutState {
         }
     }
 
+    /// Stable lowercase label (structured log events).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BrownoutState::Normal => "normal",
+            BrownoutState::Degrade4 => "degrade4",
+            BrownoutState::Degrade2 => "degrade2",
+            BrownoutState::Shed => "shed",
+        }
+    }
+
     /// Largest rung bit-width this state serves int8 variants at
     /// (`None` = shedding, nothing is served).
     pub fn bits_cap(self) -> Option<u32> {

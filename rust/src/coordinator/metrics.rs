@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::obs::trace::Stage;
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -26,6 +27,37 @@ const VARIANT_RESERVOIR: usize = 8_192;
 pub const LATENCY_BUCKETS_US: [f32; 14] = [
     50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5, 2e5, 5e5, 1e6,
 ];
+
+/// Number of pipeline stages tracked by the per-stage histograms
+/// (mirrors [`Stage::ALL`]; pinned by a test).
+const N_STAGES: usize = 8;
+
+/// One histogram slot per bucket plus the implicit +Inf overflow.
+type Hist = [u64; LATENCY_BUCKETS_US.len() + 1];
+
+/// Bucket index for a microsecond observation.
+fn bucket_idx(us: f32) -> usize {
+    LATENCY_BUCKETS_US.iter().position(|&ub| us <= ub).unwrap_or(LATENCY_BUCKETS_US.len())
+}
+
+/// O(buckets) quantile walk over an exact histogram: the upper bound of
+/// the bucket holding the rank-`q` observation; 0 with no data. The same
+/// deterministic estimate [`Metrics::latency_quantile_hint_us`] feeds the
+/// brownout controller with.
+fn hist_quantile(hist: &Hist, count: u64, q: f64) -> f32 {
+    if count == 0 {
+        return 0.0;
+    }
+    let rank = ((count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
+        cum += hist[i];
+        if cum >= rank {
+            return ub;
+        }
+    }
+    LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1]
+}
 
 /// Uniform-over-the-stream bounded sample (Vitter's Algorithm R).
 #[derive(Debug)]
@@ -119,6 +151,13 @@ struct Inner {
     /// Current brownout rung as a gauge: 0 Normal, 1 Degrade4, 2 Degrade2,
     /// 3 Shed. Stays 0 when brownout is disabled.
     brownout_state: u32,
+    /// Per-stage latency histograms, indexed by [`Stage::index`]. Queue
+    /// and execute are fed on every response (the split the combined
+    /// request histogram hides); the front-door stages on every request;
+    /// requantize only on traced int8 runs.
+    stage_hist: [Hist; N_STAGES],
+    stage_sum_us: [f64; N_STAGES],
+    stage_count: [u64; N_STAGES],
 }
 
 /// Shared metrics registry (cheap enough to lock per event).
@@ -157,8 +196,59 @@ impl Metrics {
                 variants: BTreeMap::new(),
                 precision_served: BTreeMap::new(),
                 brownout_state: 0,
+                stage_hist: [[0; LATENCY_BUCKETS_US.len() + 1]; N_STAGES],
+                stage_sum_us: [0.0; N_STAGES],
+                stage_count: [0; N_STAGES],
             }),
         }
+    }
+
+    /// Record one pipeline stage's latency (µs) into its exact histogram.
+    pub fn on_stage_us(&self, stage: Stage, us: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let i = stage.index();
+        m.stage_hist[i][bucket_idx(us as f32)] += 1;
+        m.stage_sum_us[i] += us;
+        m.stage_count[i] += 1;
+    }
+
+    /// The queue/execute split, recorded together under one lock on every
+    /// worker response: `queue` is enqueued→dequeued, `execute` is
+    /// dequeued→done. The combined `pdq_request_latency_us` histogram
+    /// cannot distinguish a deep queue from slow kernels; this can.
+    pub fn on_queue_execute(&self, queue: Duration, execute: Duration) {
+        let (q_us, e_us) = (queue.as_micros() as f64, execute.as_micros() as f64);
+        let mut m = self.inner.lock().unwrap();
+        for (stage, us) in [(Stage::Queue, q_us), (Stage::Execute, e_us)] {
+            let i = stage.index();
+            m.stage_hist[i][bucket_idx(us as f32)] += 1;
+            m.stage_sum_us[i] += us;
+            m.stage_count[i] += 1;
+        }
+    }
+
+    /// Observations recorded for a stage.
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        self.inner.lock().unwrap().stage_count[stage.index()]
+    }
+
+    /// Mean latency of a stage in µs (0 with no data).
+    pub fn stage_mean_us(&self, stage: Stage) -> f64 {
+        let m = self.inner.lock().unwrap();
+        let i = stage.index();
+        if m.stage_count[i] == 0 {
+            0.0
+        } else {
+            m.stage_sum_us[i] / m.stage_count[i] as f64
+        }
+    }
+
+    /// Deterministic quantile hint for one stage from its exact histogram
+    /// (same contract as [`Metrics::latency_quantile_hint_us`]).
+    pub fn stage_quantile_hint_us(&self, stage: Stage, q: f64) -> f32 {
+        let m = self.inner.lock().unwrap();
+        let i = stage.index();
+        hist_quantile(&m.stage_hist[i], m.stage_count[i], q)
     }
 
     pub fn on_request(&self) {
@@ -392,20 +482,12 @@ impl Metrics {
     /// [`Metrics::latency_p50_hint_us`] but for any `q` in (0, 1] — the
     /// brownout load signal reads p99 from here every request, which a
     /// reservoir sort would make unreasonably expensive.
+    /// Being histogram-exact (not reservoir-sampled) makes the signal
+    /// deterministic under test and consistent with the cumulative
+    /// `pdq_request_latency_us` buckets `/metrics` exports.
     pub fn latency_quantile_hint_us(&self, q: f64) -> f32 {
         let m = self.inner.lock().unwrap();
-        if m.responses == 0 {
-            return 0.0;
-        }
-        let rank = ((m.responses as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
-        let mut cum = 0u64;
-        for (i, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
-            cum += m.latency_hist[i];
-            if cum >= rank {
-                return ub;
-            }
-        }
-        LATENCY_BUCKETS_US[LATENCY_BUCKETS_US.len() - 1]
+        hist_quantile(&m.latency_hist, m.responses, q)
     }
 
     /// JSON snapshot for reports.
@@ -457,6 +539,24 @@ impl Metrics {
             served.set(&bits.to_string(), *n);
         }
         o.set("precision_served", served).set("brownout_state", m.brownout_state as u64);
+        // Per-stage latency attribution (only stages that recorded data).
+        let mut stages = Json::obj();
+        for stage in Stage::ALL {
+            let i = stage.index();
+            if m.stage_count[i] == 0 {
+                continue;
+            }
+            let mut so = Json::obj();
+            so.set("count", m.stage_count[i])
+                .set("mean_us", m.stage_sum_us[i] / m.stage_count[i] as f64)
+                .set("p50_us", hist_quantile(&m.stage_hist[i], m.stage_count[i], 0.5))
+                .set("p99_us", hist_quantile(&m.stage_hist[i], m.stage_count[i], 0.99));
+            stages.set(stage.as_str(), so);
+        }
+        o.set("stages", stages);
+        // The exact-histogram p99 the brownout controller consumes —
+        // exported so operators can see the controller's actual signal.
+        o.set("p99_hist_us", hist_quantile(&m.latency_hist, m.responses, 0.99));
         o
     }
 
@@ -542,6 +642,39 @@ impl Metrics {
         s.push_str("# HELP pdq_brownout_state Brownout rung: 0 normal, 1 degrade4, 2 degrade2, 3 shed.\n");
         s.push_str("# TYPE pdq_brownout_state gauge\n");
         s.push_str(&format!("pdq_brownout_state {}\n", m.brownout_state));
+        // Per-stage latency histograms (exact, cumulative convention).
+        if m.stage_count.iter().any(|&c| c > 0) {
+            s.push_str(
+                "# HELP pdq_stage_latency_us Per-pipeline-stage latency in microseconds.\n",
+            );
+            s.push_str("# TYPE pdq_stage_latency_us histogram\n");
+            for stage in Stage::ALL {
+                let i = stage.index();
+                if m.stage_count[i] == 0 {
+                    continue;
+                }
+                let name = stage.as_str();
+                let mut cum = 0u64;
+                for (b, &ub) in LATENCY_BUCKETS_US.iter().enumerate() {
+                    cum += m.stage_hist[i][b];
+                    s.push_str(&format!(
+                        "pdq_stage_latency_us_bucket{{stage=\"{name}\",le=\"{ub}\"}} {cum}\n"
+                    ));
+                }
+                cum += m.stage_hist[i][LATENCY_BUCKETS_US.len()];
+                s.push_str(&format!(
+                    "pdq_stage_latency_us_bucket{{stage=\"{name}\",le=\"+Inf\"}} {cum}\n"
+                ));
+                s.push_str(&format!(
+                    "pdq_stage_latency_us_sum{{stage=\"{name}\"}} {}\n",
+                    m.stage_sum_us[i]
+                ));
+                s.push_str(&format!(
+                    "pdq_stage_latency_us_count{{stage=\"{name}\"}} {}\n",
+                    m.stage_count[i]
+                ));
+            }
+        }
         // Per-variant breakdown (requests/responses/errors + quantiles).
         if !m.variants.is_empty() {
             s.push_str("# HELP pdq_variant_requests_total Requests submitted, per variant.\n");
@@ -766,6 +899,81 @@ mod tests {
         assert_eq!(m.latency_quantile_hint_us(0.5), 100.0);
         assert_eq!(m.latency_quantile_hint_us(0.99), 5e3);
         assert_eq!(Metrics::default().latency_quantile_hint_us(0.99), 0.0);
+    }
+
+    /// `N_STAGES` must track the stage enum — a ninth stage added to
+    /// [`Stage::ALL`] without growing the histograms would index out of
+    /// bounds at runtime; catch it at test time instead.
+    #[test]
+    fn stage_array_matches_stage_enum() {
+        assert_eq!(N_STAGES, Stage::ALL.len());
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            assert_eq!(stage.index(), i, "Stage::index must be the ALL position");
+        }
+    }
+
+    #[test]
+    fn queue_execute_split_records_both_stages() {
+        let m = Metrics::default();
+        assert_eq!(m.stage_count(Stage::Queue), 0);
+        m.on_queue_execute(Duration::from_micros(400), Duration::from_micros(80));
+        m.on_queue_execute(Duration::from_micros(600), Duration::from_micros(120));
+        assert_eq!(m.stage_count(Stage::Queue), 2);
+        assert_eq!(m.stage_count(Stage::Execute), 2);
+        assert_eq!(m.stage_count(Stage::Batch), 0, "only the fed stages record");
+        assert_eq!(m.stage_mean_us(Stage::Queue), 500.0);
+        assert_eq!(m.stage_mean_us(Stage::Execute), 100.0);
+        // Exact-histogram hints: 400µs/600µs both land in le=500/le=1000.
+        assert_eq!(m.stage_quantile_hint_us(Stage::Queue, 0.5), 500.0);
+        assert_eq!(m.stage_quantile_hint_us(Stage::Execute, 0.99), 200.0);
+        assert_eq!(m.stage_quantile_hint_us(Stage::Requantize, 0.99), 0.0);
+    }
+
+    #[test]
+    fn stages_exported_in_json_and_prometheus() {
+        let m = Metrics::default();
+        m.on_stage_us(Stage::Parse, 30.0);
+        m.on_stage_us(Stage::Parse, 70.0);
+        m.on_queue_execute(Duration::from_micros(150), Duration::from_micros(90));
+        let j = m.to_json();
+        let stages = j.get("stages").unwrap();
+        let parse = stages.get("parse").unwrap();
+        assert_eq!(parse.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(parse.get("mean_us").unwrap().as_f64(), Some(50.0));
+        assert!(stages.get("queue").is_some());
+        assert!(stages.get("execute").is_some());
+        assert!(stages.get("accept").is_none(), "silent stages stay out of the snapshot");
+        let prom = m.to_prometheus();
+        assert!(prom.contains("# TYPE pdq_stage_latency_us histogram"));
+        // 30µs and 70µs: cumulative counts 1 at le=50, 2 at le=100.
+        assert!(prom.contains("pdq_stage_latency_us_bucket{stage=\"parse\",le=\"50\"} 1"));
+        assert!(prom.contains("pdq_stage_latency_us_bucket{stage=\"parse\",le=\"100\"} 2"));
+        assert!(prom.contains("pdq_stage_latency_us_bucket{stage=\"parse\",le=\"+Inf\"} 2"));
+        assert!(prom.contains("pdq_stage_latency_us_sum{stage=\"parse\"} 100"));
+        assert!(prom.contains("pdq_stage_latency_us_count{stage=\"parse\"} 2"));
+        assert!(prom.contains("pdq_stage_latency_us_count{stage=\"queue\"} 1"));
+        assert!(!prom.contains("stage=\"serialize\""), "silent stages stay out of /metrics");
+        // No stage data at all ⇒ the family is absent entirely.
+        assert!(!Metrics::default().to_prometheus().contains("pdq_stage_latency_us"));
+    }
+
+    /// The brownout controller's p99 comes from the exact log-bucketed
+    /// histogram, never the sampled reservoir: with a reservoir squeezed to
+    /// one slot the hint must still see every observation.
+    #[test]
+    fn brownout_p99_signal_is_histogram_exact_not_reservoir_sampled() {
+        let m = Metrics::with_reservoir_cap(1);
+        for _ in 0..99 {
+            m.on_response(Duration::from_micros(80));
+        }
+        m.on_response(Duration::from_micros(40_000));
+        // rank = ceil(100 * 0.99) = 99 ⇒ still the fast bucket…
+        assert_eq!(m.latency_quantile_hint_us(0.99), 100.0);
+        // …and one more slow response pushes rank 100 into le=50000,
+        // deterministically, regardless of what the 1-slot reservoir holds.
+        m.on_response(Duration::from_micros(40_000));
+        assert_eq!(m.latency_quantile_hint_us(0.99), 5e4);
+        assert_eq!(m.to_json().get("p99_hist_us").unwrap().as_f64(), Some(5e4 as f64));
     }
 
     #[test]

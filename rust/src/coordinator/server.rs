@@ -30,7 +30,10 @@ use super::worker::{spawn_workers, Job};
 use crate::adapt::AdaptManager;
 use crate::engine::{Engine, EngineCell, EngineError, SessionPool};
 use crate::net::admission::{Admission, AdmissionError, Permit};
+use crate::obs::log as olog;
+use crate::obs::TraceHandle;
 use crate::tensor::{Shape, Tensor};
+use crate::util::json::Json;
 
 /// An inference request.
 pub struct Request {
@@ -39,6 +42,10 @@ pub struct Request {
     pub image: Tensor<f32>,
     /// Channel the response is delivered on.
     pub reply: mpsc::Sender<Response>,
+    /// Flight-recorder handle when the front door armed tracing for this
+    /// request. `None` — the common case — is one pointer-sized slot; the
+    /// untraced hot path allocates nothing for it.
+    pub trace: Option<TraceHandle>,
 }
 
 /// An inference response: the executed result (typed errors included —
@@ -193,7 +200,15 @@ impl Server {
                 .spawn(move || {
                     let poll = manager.config().poll_interval.max(Duration::from_millis(10));
                     while !stop.load(Ordering::SeqCst) {
-                        manager.tick();
+                        for oc in manager.tick() {
+                            if oc.fired {
+                                let mut f = Json::obj();
+                                f.set("variant", oc.key.wire())
+                                    .set("epoch", oc.epoch)
+                                    .set("detail", oc.detail);
+                                olog::event(olog::Level::Info, "recalibrate", f);
+                            }
+                        }
                         // Sleep in short slices so drain is prompt.
                         let mut slept = Duration::ZERO;
                         while slept < poll && !stop.load(Ordering::SeqCst) {
@@ -236,7 +251,7 @@ impl Server {
         self.metrics.on_request_for(&variant.wire());
         let (tx, rx) = mpsc::channel();
         let job = Job {
-            request: Request { id, variant: variant.clone(), image, reply: tx },
+            request: Request { id, variant: variant.clone(), image, reply: tx, trace: None },
             enqueued: Instant::now(),
         };
         match self.router.read().unwrap().route(&variant, job) {
@@ -263,6 +278,16 @@ impl Server {
         id: u64,
         image: Tensor<f32>,
     ) -> Result<(mpsc::Receiver<Response>, Permit), SubmitError> {
+        self.try_submit_inner(variant, id, image, None)
+    }
+
+    fn try_submit_inner(
+        &self,
+        variant: VariantKey,
+        id: u64,
+        image: Tensor<f32>,
+        trace: Option<TraceHandle>,
+    ) -> Result<(mpsc::Receiver<Response>, Permit), SubmitError> {
         self.metrics.on_request_for(&variant.wire());
         let permit = match self.admission.try_acquire(&variant) {
             Ok(p) => p,
@@ -277,7 +302,7 @@ impl Server {
         };
         let (tx, rx) = mpsc::channel();
         let job = Job {
-            request: Request { id, variant: variant.clone(), image, reply: tx },
+            request: Request { id, variant: variant.clone(), image, reply: tx, trace },
             enqueued: Instant::now(),
         };
         match self.router.read().unwrap().route(&variant, job) {
@@ -311,9 +336,22 @@ impl Server {
         id: u64,
         image: Tensor<f32>,
     ) -> Result<(mpsc::Receiver<Response>, Permit, u32), SubmitError> {
+        self.try_submit_traced(variant, id, image, None)
+    }
+
+    /// [`Server::try_submit_graceful`] with an optional flight-recorder
+    /// handle attached to the job, so the workers can stamp queue /
+    /// execute / requantize spans onto the request's trace.
+    pub fn try_submit_traced(
+        &self,
+        variant: VariantKey,
+        id: u64,
+        image: Tensor<f32>,
+        trace: Option<TraceHandle>,
+    ) -> Result<(mpsc::Receiver<Response>, Permit, u32), SubmitError> {
         let Some(ctl) = &self.brownout else {
             let bits = variant.spec.precision_bits();
-            return self.try_submit(variant, id, image).map(|(rx, p)| (rx, p, bits));
+            return self.try_submit_inner(variant, id, image, trace).map(|(rx, p)| (rx, p, bits));
         };
         if !self.catalog.iter().any(|(k, _)| *k == variant) {
             self.metrics.on_request_for(&variant.wire());
@@ -321,10 +359,26 @@ impl Server {
             return Err(SubmitError::UnknownVariant(variant.wire()));
         }
         let depth = self.admission.depth(&variant);
+        // The load signal's p99 term comes from the exact log-bucketed
+        // histogram ([`Metrics::latency_quantile_hint_us`]), never the
+        // sampled reservoir: deterministic under test, O(buckets) per
+        // request, and consistent with the cumulative buckets `/metrics`
+        // exports.
         let p99 = self.metrics.latency_quantile_hint_us(0.99);
         let load = ctl.load(depth, self.admission.limit(), p99);
+        let prev = ctl.state();
         let state = ctl.observe(load, Instant::now());
         self.metrics.set_brownout_state(state.gauge());
+        if state != prev {
+            let mut f = Json::obj();
+            f.set("from", prev.as_str())
+                .set("to", state.as_str())
+                .set("load", load)
+                .set("p99_us", p99)
+                .set("depth", depth as u64);
+            let lvl = if state > prev { olog::Level::Warn } else { olog::Level::Info };
+            olog::event(lvl, "brownout", f);
+        }
         if state == BrownoutState::Shed {
             self.metrics.on_request_for(&variant.wire());
             self.metrics.on_shed();
@@ -359,7 +413,7 @@ impl Server {
                     self.metrics.on_request_for(&key.wire());
                     let (tx, rx) = mpsc::channel();
                     let job = Job {
-                        request: Request { id, variant: key.clone(), image, reply: tx },
+                        request: Request { id, variant: key.clone(), image, reply: tx, trace },
                         enqueued: Instant::now(),
                     };
                     return match self.router.read().unwrap().route(&key, job) {

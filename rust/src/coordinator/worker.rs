@@ -4,12 +4,13 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
 use super::server::{Request, Response};
-use crate::engine::SessionPool;
+use crate::engine::{KernelTrace, SessionPool};
+use crate::obs::trace::{Stage, TraceOutcome};
 
 /// One in-flight job: the request plus its enqueue timestamp.
 pub struct Job {
@@ -52,6 +53,10 @@ pub fn spawn_workers(
                             next_batch(&guard, &policy)
                         };
                         let Some(batch) = batch else { return };
+                        // The instant this batch closed: the boundary
+                        // between a job's queue span (enqueued → here) and
+                        // its batch span (here → its own run start).
+                        let batch_ready = Instant::now();
                         metrics.on_batch(batch.len());
                         let mut session = match pool.acquire() {
                             Ok(s) => s,
@@ -62,6 +67,10 @@ pub fn spawn_workers(
                                     let latency = job.enqueued.elapsed();
                                     metrics.on_response_for(&wire, latency);
                                     metrics.on_engine_error_for(&wire);
+                                    if let Some(trace) = &job.request.trace {
+                                        trace.span(Stage::Queue, job.enqueued, batch_ready);
+                                        trace.set_outcome(TraceOutcome::Error);
+                                    }
                                     let _ = job.request.reply.send(Response {
                                         id: job.request.id,
                                         result: Err(e.clone()),
@@ -72,11 +81,70 @@ pub fn spawn_workers(
                             }
                         };
                         for job in batch {
-                            let result = session.run(&job.request.image);
-                            let latency = job.enqueued.elapsed();
+                            let run_start = Instant::now();
+                            // Traced jobs take the bit-identical traced
+                            // path (per-node kernel timing); everyone else
+                            // runs the unchanged hot path.
+                            let mut ktrace = None;
+                            let result = match &job.request.trace {
+                                Some(_) => {
+                                    let mut kt = KernelTrace::new();
+                                    let r = session.run_traced(&job.request.image, &mut kt);
+                                    ktrace = Some(kt);
+                                    r
+                                }
+                                None => session.run(&job.request.image),
+                            };
+                            let done = Instant::now();
+                            let latency = done.saturating_duration_since(job.enqueued);
                             metrics.on_response_for(&wire, latency);
+                            // The split the combined latency hides: time
+                            // waiting for a worker vs. time on the kernels
+                            // (batch wait folds into the execute side).
+                            metrics.on_queue_execute(
+                                batch_ready.saturating_duration_since(job.enqueued),
+                                done.saturating_duration_since(run_start),
+                            );
                             if result.is_err() {
                                 metrics.on_engine_error_for(&wire);
+                            }
+                            if let Some(trace) = &job.request.trace {
+                                trace.span(Stage::Queue, job.enqueued, batch_ready);
+                                trace.span(Stage::Batch, batch_ready, run_start);
+                                let run_us = done
+                                    .saturating_duration_since(run_start)
+                                    .as_secs_f64()
+                                    * 1e6;
+                                // Carve the dequant/requant tail (measured
+                                // inside the engine) off the run window so
+                                // execute + requantize tile it exactly.
+                                let requant_us = ktrace
+                                    .as_ref()
+                                    .map_or(0.0, |kt| kt.requant_us.min(run_us));
+                                trace.span_us(
+                                    Stage::Execute,
+                                    run_start,
+                                    run_us - requant_us,
+                                );
+                                if let Some(kt) = &ktrace {
+                                    if requant_us > 0.0 {
+                                        metrics.on_stage_us(Stage::Requantize, requant_us);
+                                        trace.span_us(
+                                            Stage::Requantize,
+                                            run_start
+                                                + Duration::from_secs_f64(
+                                                    (run_us - requant_us) / 1e6,
+                                                ),
+                                            requant_us,
+                                        );
+                                    }
+                                    if !kt.spans.is_empty() {
+                                        trace.set_kernel_spans(&kt.spans);
+                                    }
+                                }
+                                if result.is_err() {
+                                    trace.set_outcome(TraceOutcome::Error);
+                                }
                             }
                             let _ = job.request.reply.send(Response {
                                 id: job.request.id,
@@ -133,6 +201,7 @@ mod tests {
                     variant: VariantKey::new("m", VariantSpec::Fp32),
                     image: img,
                     reply: rtx,
+                    trace: None,
                 },
                 enqueued: Instant::now(),
             })
@@ -151,10 +220,67 @@ mod tests {
         }
         assert_eq!(metrics.responses(), 10);
         assert_eq!(metrics.variant_responses("m|fp32"), 10, "breakdown follows the wire");
+        // Satellite of the flight-recorder PR: queue and execute latency
+        // are recorded separately on every response, traced or not.
+        assert_eq!(metrics.stage_count(Stage::Queue), 10);
+        assert_eq!(metrics.stage_count(Stage::Execute), 10);
         assert!(metrics.mean_batch() >= 1.0);
         // Sessions were pooled, not re-compiled per request: at most one
         // per worker thread is left idle.
         assert!(pool.idle() >= 1 && pool.idle() <= 2, "idle {}", pool.idle());
+    }
+
+    /// A traced job leaves queue/batch/execute spans on its handle, in
+    /// pipeline order and non-overlapping; untraced stage metrics agree.
+    #[test]
+    fn traced_jobs_record_queue_batch_execute_spans() {
+        use crate::obs::trace::{TraceHandle, TraceId};
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::default());
+        metrics.register_variant("m|fp32");
+        let handles = spawn_workers(
+            "tr".into(),
+            "m|fp32".into(),
+            rx,
+            passthrough_pool(),
+            BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) },
+            Arc::clone(&metrics),
+            1,
+        );
+        let h = TraceHandle::new(TraceId::mint(), Instant::now());
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Job {
+            request: Request {
+                id: 1,
+                variant: VariantKey::new("m", VariantSpec::Fp32),
+                image: Tensor::full(Shape::hwc(2, 2, 1), 1.0),
+                reply: rtx,
+                trace: Some(h.clone()),
+            },
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        drop(tx);
+        for hh in handles {
+            hh.join().unwrap();
+        }
+        let tr = h.finish(Instant::now());
+        let stages: Vec<Stage> = tr.spans.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, vec![Stage::Queue, Stage::Batch, Stage::Execute]);
+        for w in tr.spans.windows(2) {
+            assert!(
+                w[0].end_us <= w[1].start_us + 1.0,
+                "spans overlap: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(tr.outcome, TraceOutcome::Ok);
+        assert!(tr.kernel.is_empty(), "float sessions emit no kernel spans");
+        assert_eq!(metrics.stage_count(Stage::Queue), 1);
+        assert_eq!(metrics.stage_count(Stage::Execute), 1);
+        assert_eq!(metrics.stage_count(Stage::Requantize), 0);
     }
 
     /// A worker must answer (not drop) jobs whose variant cannot compile a
@@ -200,6 +326,7 @@ mod tests {
                 variant: VariantKey::new("m", VariantSpec::Fp32),
                 image: Tensor::full(Shape::hwc(2, 2, 1), 1.0),
                 reply: rtx,
+                trace: None,
             },
             enqueued: Instant::now(),
         })

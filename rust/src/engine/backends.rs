@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use super::{Engine, EngineError, RunTap, Session, VariantSpec};
+use super::{Engine, EngineError, KernelTrace, RunTap, Session, VariantSpec};
 use crate::nn::{float_exec, ExecArena, Graph, Int8Arena, Int8Executor, MemoryPlan};
 use crate::nn::{QuantExecutor, QuantMode};
 use crate::tensor::{Shape, Tensor};
@@ -186,6 +186,17 @@ impl Session for Int8Session {
         self.ex.run_tapped_with_arena(input, &mut self.arena, tap)
     }
 
+    /// The deep timing trace: one kernel span per lowered node plus the
+    /// dequantize tail, collected around the same `eval_node` calls the
+    /// untraced path makes (outputs stay bit-identical to `run`).
+    fn run_traced(
+        &mut self,
+        input: &Tensor<f32>,
+        ktrace: &mut KernelTrace,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        self.ex.run_traced_with_arena(input, &mut self.arena, ktrace)
+    }
+
     fn input_shape(&self) -> &Shape {
         self.ex.input_shape()
     }
@@ -264,6 +275,40 @@ mod tests {
             QuantSettings { mode: QuantMode::Dynamic, ..Default::default() },
         );
         assert!(QuantEngine::new(Arc::new(exd)).compile().is_ok());
+    }
+
+    #[test]
+    fn run_traced_is_bit_identical_and_times_nodes() {
+        // Int8 backend: per-node kernel spans, outputs bit-exact vs run().
+        let g = tiny_graph();
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&g),
+            QuantSettings { mode: QuantMode::Probabilistic, ..Default::default() },
+        );
+        ex.calibrate(&[image(7), image(8)]);
+        let int8 =
+            Int8Executor::lower(&ex, crate::quant::Granularity::PerChannel).unwrap();
+        let engine = Int8Engine::new(Arc::new(int8));
+        let mut session = engine.compile().unwrap();
+        let img = image(9);
+        let want: Vec<u32> = session.run(&img).unwrap()[0].data().iter().map(|x| x.to_bits()).collect();
+        let mut kt = KernelTrace::new();
+        let got: Vec<u32> =
+            session.run_traced(&img, &mut kt).unwrap()[0].data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(want, got, "traced run must not perturb outputs");
+        assert_eq!(kt.spans.len(), 4, "one span per lowered node");
+        assert_eq!(kt.spans[0].op, "input");
+        assert!(kt.spans.iter().all(|s| s.us >= 0.0));
+
+        // Default (float) backend: contract holds, buffer stays empty.
+        let fe = FloatEngine::new(g);
+        let mut fs = fe.compile().unwrap();
+        let want: Vec<u32> = fs.run(&img).unwrap()[0].data().iter().map(|x| x.to_bits()).collect();
+        kt.push(0, "stale", 1.0);
+        let got: Vec<u32> =
+            fs.run_traced(&img, &mut kt).unwrap()[0].data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(want, got);
+        assert!(kt.spans.is_empty(), "default impl clears the buffer");
     }
 
     #[test]

@@ -66,7 +66,7 @@ pub use cell::EngineCell;
 pub use error::EngineError;
 pub use pool::{PooledSession, SessionPool};
 pub use spec::{VariantKey, VariantSpec};
-pub use tap::{NodeTap, RunTap};
+pub use tap::{KernelSpan, KernelTrace, NodeTap, RunTap};
 
 use crate::tensor::{Shape, Tensor};
 
@@ -126,6 +126,25 @@ pub trait Session: Send {
         let outputs = self.run(input)?;
         tap.observe_input_grid(input);
         Ok(outputs)
+    }
+
+    /// The opt-in *timing* hook: run one input while filling `ktrace` with
+    /// per-node kernel spans (the flight recorder drives it on traced
+    /// requests). Like [`Session::run_tapped`], the outputs MUST be
+    /// bit-identical to [`Session::run`] on the same input — tracing
+    /// observes the clock, it never perturbs the arithmetic.
+    ///
+    /// The default implementation runs normally and records nothing beyond
+    /// clearing the buffer — backends without per-node visibility still
+    /// satisfy the contract. The int8 engine overrides it to time each
+    /// lowered node plus the output requantize tail.
+    fn run_traced(
+        &mut self,
+        input: &Tensor<f32>,
+        ktrace: &mut KernelTrace,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        ktrace.clear();
+        self.run(input)
     }
 
     /// The input shape this session expects.

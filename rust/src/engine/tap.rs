@@ -89,10 +89,79 @@ impl RunTap {
     }
 }
 
+/// One node's wall-clock kernel timing for a single traced run.
+///
+/// The timing sibling of [`NodeTap`]: where the adaptation tap reports
+/// *statistics* (integer sums, clip counts), the kernel span reports
+/// *where the microseconds went* — one entry per lowered node, in
+/// execution order.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSpan {
+    /// Graph node id the span belongs to (node 0 is the input).
+    pub node: usize,
+    /// Short operator name (`conv`, `dwconv`, `linear`, `relu`, ...).
+    pub op: &'static str,
+    /// Wall-clock duration of the node's kernel, in microseconds.
+    pub us: f64,
+}
+
+/// A per-request collection buffer for kernel spans, reused across runs.
+///
+/// Mirrors [`RunTap`]'s arming discipline: the serving path only
+/// constructs one when request tracing is armed, so the disarmed hot
+/// path carries no cost at all, and a traced run evaluates nodes through
+/// the exact same kernels as an untraced one — outputs are bit-identical
+/// by construction (the adaptation invariant, extended to timing).
+#[derive(Clone, Debug, Default)]
+pub struct KernelTrace {
+    /// Per-node kernel spans in execution order.
+    pub spans: Vec<KernelSpan>,
+    /// Microseconds spent requantizing/dequantizing outputs back to f32
+    /// after the last node (0 for backends with no requantize step).
+    pub requant_us: f64,
+}
+
+impl KernelTrace {
+    /// An empty kernel trace.
+    pub fn new() -> KernelTrace {
+        KernelTrace::default()
+    }
+
+    /// Drop the previous run's entries (capacity is retained).
+    pub fn clear(&mut self) {
+        self.spans.clear();
+        self.requant_us = 0.0;
+    }
+
+    /// Record one node's kernel timing.
+    pub fn push(&mut self, node: usize, op: &'static str, us: f64) {
+        self.spans.push(KernelSpan { node, op, us });
+    }
+
+    /// Total microseconds across all recorded kernel spans (excluding
+    /// the requantize tail).
+    pub fn kernel_us(&self) -> f64 {
+        self.spans.iter().map(|s| s.us).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::Shape;
+
+    #[test]
+    fn kernel_trace_accumulates_and_clears() {
+        let mut kt = KernelTrace::new();
+        kt.push(0, "input", 1.5);
+        kt.push(1, "conv", 20.0);
+        kt.requant_us = 3.0;
+        assert_eq!(kt.spans.len(), 2);
+        assert!((kt.kernel_us() - 21.5).abs() < 1e-9);
+        kt.clear();
+        assert!(kt.spans.is_empty());
+        assert_eq!(kt.requant_us, 0.0);
+    }
 
     #[test]
     fn boundary_tap_records_node_zero() {

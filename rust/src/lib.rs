@@ -47,6 +47,10 @@
 //! - [`net`] — the network front door: std-only HTTP/1.1 ingress over the
 //!   coordinator (admission control, graceful drain) plus the socket-level
 //!   load-generation harness.
+//! - [`obs`] — the flight recorder: end-to-end request tracing with
+//!   per-stage and per-node kernel spans, a ring buffer of recent +
+//!   anomalous traces behind `GET /v1/traces`, structured rate-limited
+//!   event logging, and `pdq perf-report` commit-to-commit bench deltas.
 //! - [`harness`] — experiment drivers regenerating every paper table/figure.
 //! - [`testing`] — deterministic fuzzing harness (seeded mutators,
 //!   grammar-aware generators, differential int8 targets) shared by the
@@ -64,6 +68,7 @@ pub mod mcu;
 pub mod models;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

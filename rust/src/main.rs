@@ -24,6 +24,10 @@
 //!                                   # the 8/4/2-bit rung ladder before
 //!                                   # ever shedding (429 only after the
 //!                                   # ladder is exhausted)
+//!             [--trace]             # flight recorder: per-request stage
+//!                                   # tracing, X-PDQ-Trace echo, and
+//!                                   # GET /v1/traces
+//!             [--log-json]          # structured JSON log events on stderr
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
 //!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
@@ -39,6 +43,12 @@
 //!             [--would-block-every N] [--latency-us N] [--latency-every N]
 //!             [--disconnect-every N]
 //! pdq mcu-latency                   # Fig. 3 latency model sweep
+//! pdq perf-report BASE.json CUR.json [...]  # commit-to-commit perf diff
+//!             [--threshold 0.10] [--out PERF_REPORT.md] [--no-fail]
+//!                                   # pairs BENCH_*.json artifacts by
+//!                                   # schema family, writes a markdown
+//!                                   # delta table, exits nonzero on
+//!                                   # regression (CI gate)
 //! ```
 
 use std::path::PathBuf;
@@ -61,6 +71,7 @@ use pdq::net::chaos::{ChaosConfig, ChaosListener};
 use pdq::net::loadgen::{self, LoadMode, LoadgenConfig, ShiftSpec, SweepConfig};
 use pdq::net::{signal, FrontDoor, FrontDoorConfig};
 use pdq::nn::QuantMode;
+use pdq::obs::report;
 use pdq::quant::Granularity;
 use pdq::util::cli::{render_help, Args, Command};
 use pdq::util::table::Table;
@@ -73,6 +84,11 @@ const COMMANDS: &[Command] = &[
     Command { name: "loadgen", about: "drive a front door over sockets", usage: "" },
     Command { name: "chaos-proxy", about: "fault-injecting TCP proxy for chaos tests", usage: "" },
     Command { name: "mcu-latency", about: "Fig. 3 MCU latency model", usage: "" },
+    Command {
+        name: "perf-report",
+        about: "diff BENCH_*.json artifacts across commits",
+        usage: "",
+    },
 ];
 
 fn main() {
@@ -90,6 +106,7 @@ fn main() {
         "serve" => cmd_serve(&artifacts, &args),
         "loadgen" => cmd_loadgen(&args),
         "chaos-proxy" => cmd_chaos_proxy(&args),
+        "perf-report" => cmd_perf_report(&args),
         "mcu-latency" => {
             cmd_mcu();
             Ok(())
@@ -288,15 +305,23 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     // --listen: boot the network front door and serve until SIGTERM/SIGINT.
     if let Some(addr) = args.opt("listen") {
         signal::install_term_handler();
+        // --log-json flips the structured event stream (brownout
+        // transitions, recalibrations, ...) from text to JSON lines.
+        pdq::obs::log::init(args.flag("log-json"), pdq::obs::log::Level::Info);
+        let trace = args.flag("trace");
         let fd_cfg = FrontDoorConfig {
             addr: addr.to_string(),
             conn_threads: args.opt_usize("http-threads", 16),
             max_connections: args.opt_usize("max-conns", 256),
+            trace,
             ..Default::default()
         };
         let front = FrontDoor::start(Arc::new(server), fd_cfg)
             .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
         println!("pdq-serve: listening on {}", front.url());
+        if trace {
+            println!("pdq-serve: flight recorder armed (GET /v1/traces, X-PDQ-Trace echo)");
+        }
         println!(
             "pdq-serve: {} variants of {name}, {} workers/variant, max queue depth {}",
             keys.len(),
@@ -484,6 +509,35 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     // injection must never turn into transport/protocol errors.
     if args.flag("expect-zero-failed") && report.total.failed > 0 {
         anyhow::bail!("{} requests failed at the transport/protocol level", report.total.failed);
+    }
+    Ok(())
+}
+
+/// `pdq perf-report BASE.json CUR.json [MORE.json ...]` — pair benchmark
+/// artifacts by schema family (oldest = baseline, newest = current per
+/// family), print + write the per-metric delta table, and exit nonzero
+/// when any metric regressed past the threshold. The CI perf gate.
+fn cmd_perf_report(args: &Args) -> anyhow::Result<()> {
+    let files = args.positional();
+    if files.len() < 2 {
+        anyhow::bail!("need at least two BENCH_*.json files (baseline then current)");
+    }
+    let threshold = args.opt_f64("threshold", 0.10);
+    if !(0.0..=10.0).contains(&threshold) {
+        anyhow::bail!("--threshold must be in 0..=10, got {threshold}");
+    }
+    let rep = report::perf_report_files(files, threshold).map_err(anyhow::Error::msg)?;
+    let md = rep.to_markdown();
+    print!("{md}");
+    let out = args.opt_or("out", "PERF_REPORT.md");
+    std::fs::write(out, &md)?;
+    println!("perf report written to {out}");
+    if rep.regressed() && !args.flag("no-fail") {
+        anyhow::bail!(
+            "{} metric(s) regressed past the {:.0}% threshold",
+            rep.regressions.len(),
+            threshold * 100.0,
+        );
     }
     Ok(())
 }

@@ -17,8 +17,16 @@
 //!   recalibration trigger (404 without adaptation).
 //! - `GET /healthz` — liveness (+ `"draining"` once shutdown began).
 //! - `GET /metrics` — JSON; `?format=prometheus` for text exposition
-//!   (includes per-variant breakdowns and, with adaptation, drift/epoch/
-//!   recalibration gauges).
+//!   (includes per-variant breakdowns, per-stage latency histograms and,
+//!   with adaptation, drift/epoch/recalibration gauges).
+//! - `GET /v1/traces[?id=<hex>]` — the flight recorder's ring of recent +
+//!   anomalous request traces (404 unless serving with `--trace`). With
+//!   tracing armed every `/v1/infer` request carries a trace ID — accepted
+//!   from the `X-PDQ-Trace` header or the wire preamble's `"trace"` field,
+//!   else minted — echoed back in both, with per-stage spans
+//!   (`accept → … → serialize`) and, on int8 variants, per-node kernel
+//!   spans. Disarmed (the default), responses are byte-identical to
+//!   pre-tracing builds and the hot path allocates nothing for tracing.
 //!
 //! Graceful drain (SIGTERM via [`crate::net::signal`], or
 //! [`FrontDoor::shutdown`]): (1) the shutdown flag stops the accept loop
@@ -57,6 +65,8 @@ use crate::net::http::{
 use crate::net::signal;
 use crate::net::threadpool::ThreadPool;
 use crate::net::wire;
+use crate::obs::trace::Stage as TraceStage;
+use crate::obs::{FlightRecorder, TraceHandle, TraceId, TraceOutcome};
 use crate::util::json::Json;
 
 /// Front-door configuration.
@@ -74,6 +84,11 @@ pub struct FrontDoorConfig {
     /// pool). Excess connections get an immediate `503` + `Retry-After`
     /// so a connection flood cannot queue unboundedly. 0 = unlimited.
     pub max_connections: usize,
+    /// Arm the flight recorder (`--trace`): every `/v1/infer` request gets
+    /// a trace ID, per-stage spans, and a `GET /v1/traces` entry. Off by
+    /// default — disarmed serving is byte-identical on the wire and
+    /// allocation-free on the hot path.
+    pub trace: bool,
 }
 
 impl Default for FrontDoorConfig {
@@ -84,6 +99,7 @@ impl Default for FrontDoorConfig {
             max_body_bytes: DEFAULT_MAX_BODY_BYTES,
             response_timeout: Duration::from_secs(30),
             max_connections: 256,
+            trace: false,
         }
     }
 }
@@ -110,6 +126,9 @@ struct Ctx {
     /// Live connection count (accepted, not yet closed).
     conns: AtomicUsize,
     max_conns: usize,
+    /// Flight-recorder arming ([`FrontDoorConfig::trace`]).
+    trace: bool,
+    recorder: Arc<FlightRecorder>,
 }
 
 /// RAII decrement of [`Ctx::conns`] — however a handler exits (clean
@@ -143,6 +162,8 @@ impl FrontDoor {
             response_timeout: cfg.response_timeout,
             conns: AtomicUsize::new(0),
             max_conns: cfg.max_connections,
+            trace: cfg.trace,
+            recorder: Arc::new(FlightRecorder::default()),
         });
         let pool = ThreadPool::new("pdq-http", cfg.conn_threads);
         let accept_ctx = Arc::clone(&ctx);
@@ -158,6 +179,12 @@ impl FrontDoor {
 
     pub fn url(&self) -> String {
         format!("http://{}", self.local_addr)
+    }
+
+    /// The flight recorder backing `GET /v1/traces` (empty unless
+    /// [`FrontDoorConfig::trace`] armed it).
+    pub fn recorder(&self) -> Arc<FlightRecorder> {
+        Arc::clone(&self.ctx.recorder)
     }
 
     /// Idempotent graceful drain (see module docs for the ordering).
@@ -250,14 +277,22 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
     let mut idle_ticks = 0u32;
     let mut head_ticks = 0u32;
     let mut body_ticks = 0u32;
+    // The accept window: from the start of the first read call that saw
+    // request bytes (mid-request ticks pin it) to the request being fully
+    // read. Idle keep-alive ticks never count — they reset nothing but
+    // contribute no window — though a request arriving mid-tick can carry
+    // up to one READ_TICK of pre-byte slack.
+    let mut accept_start: Option<Instant> = None;
     loop {
+        let tick_start = Instant::now();
         match reader.read_request() {
             Ok(ReadOutcome::Request(req)) => {
                 idle_ticks = 0;
                 head_ticks = 0;
                 body_ticks = 0;
+                let accepted = (accept_start.take().unwrap_or(tick_start), Instant::now());
                 let close = req.wants_close() || ctx.shutdown.load(Ordering::SeqCst);
-                let resp = route_request(&req, &ctx)
+                let resp = route_request(&req, &ctx, accepted)
                     .header("Connection", if close { "close" } else { "keep-alive" });
                 if resp.write_to(&mut out).is_err() || close {
                     return;
@@ -271,6 +306,7 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
                 }
             }
             Ok(ReadOutcome::Timeout { idle: false }) => {
+                accept_start.get_or_insert(tick_start);
                 // Peer is mid-request: keep reading (even during drain — an
                 // accepted request gets its response) up to a stage-scoped
                 // budget. Trickling header bytes (slowloris) gets the short
@@ -313,14 +349,19 @@ fn handle_connection(stream: TcpStream, ctx: Arc<Ctx>) {
     }
 }
 
-fn route_request(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+fn route_request(
+    req: &HttpRequest,
+    ctx: &Ctx,
+    accepted: (Instant, Instant),
+) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(ctx),
         ("GET", "/metrics") => metrics(req, ctx),
         ("GET", "/v1/variants") => variants(ctx),
         ("GET", "/v1/drift") => drift(ctx),
+        ("GET", "/v1/traces") => traces(req, ctx),
         ("POST", "/v1/recalibrate") => recalibrate(req, ctx),
-        ("POST", "/v1/infer") => infer(req, ctx),
+        ("POST", "/v1/infer") => infer(req, ctx, accepted),
         ("GET", "/v1/infer") => HttpResponse::error(405, "use POST /v1/infer"),
         ("GET", "/v1/recalibrate") => {
             HttpResponse::error(405, "use POST /v1/recalibrate")
@@ -400,6 +441,13 @@ fn recalibrate(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
     let mut o = Json::obj();
     o.set("outcomes", Json::Arr(list));
     HttpResponse::json(200, &o)
+}
+
+fn traces(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    if !ctx.trace {
+        return HttpResponse::error(404, "tracing disabled (start the server with --trace)");
+    }
+    HttpResponse::json(200, &ctx.recorder.to_json(req.query_param("id")))
 }
 
 fn healthz(ctx: &Ctx) -> HttpResponse {
@@ -506,11 +554,46 @@ fn retry_after_ms(depth: usize, latency_us: f64, workers: usize) -> u64 {
     est_ms.clamp(1.0, 5000.0).ceil() as u64
 }
 
-fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+/// The traced request's ID: `X-PDQ-Trace` header first, then the wire
+/// preamble's `"trace"` field, else freshly minted.
+fn trace_id_for(req: &HttpRequest, wire_trace: Option<TraceId>) -> TraceId {
+    req.header("x-pdq-trace")
+        .and_then(TraceId::parse)
+        .or(wire_trace)
+        .unwrap_or_else(TraceId::mint)
+}
+
+fn infer(req: &HttpRequest, ctx: &Ctx, accepted: (Instant, Instant)) -> HttpResponse {
+    let mx = ctx.server.metrics();
+    let us = |a: Instant, b: Instant| b.saturating_duration_since(a).as_secs_f64() * 1e6;
+    mx.on_stage_us(TraceStage::Accept, us(accepted.0, accepted.1));
+    let t_parse0 = accepted.1;
     let wire_req = match wire::decode_infer_request(&req.body) {
         Ok(r) => r,
-        Err(e) => return HttpResponse::error(400, &e),
+        Err(e) => {
+            // Malformed bodies still leave an anomalous trace when armed —
+            // hostile traffic is exactly what an operator wants on record.
+            if ctx.trace {
+                let h = TraceHandle::new(trace_id_for(req, None), accepted.0);
+                h.span(TraceStage::Accept, accepted.0, accepted.1);
+                h.set_outcome(TraceOutcome::Error);
+                ctx.recorder.commit(h.finish(Instant::now()), 0.0);
+            }
+            return HttpResponse::error(400, &e);
+        }
     };
+    let t_parse1 = Instant::now();
+    mx.on_stage_us(TraceStage::Parse, us(t_parse0, t_parse1));
+    let handle = if ctx.trace {
+        let h = TraceHandle::new(trace_id_for(req, wire_req.trace), accepted.0);
+        h.span(TraceStage::Accept, accepted.0, accepted.1);
+        h.span(TraceStage::Parse, t_parse0, t_parse1);
+        h.set_request(&wire_req.variant.wire(), wire_req.id);
+        Some(h)
+    } else {
+        None
+    };
+    let native_bits = wire_req.variant.spec.precision_bits();
     // Validate the shape at the boundary so a bad request is refused
     // before it costs a queue slot. (Defense in depth only: if this check
     // is bypassed, the engine returns a typed ShapeMismatch below rather
@@ -519,25 +602,54 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
         ctx.server.catalog().iter().find(|(k, _)| *k == wire_req.variant)
     {
         if wire_req.image.shape() != want {
-            return HttpResponse::error(
+            let resp = HttpResponse::error(
                 400,
                 &format!("variant expects input shape {want}, got {}", wire_req.image.shape()),
             );
+            return finish_trace(ctx, handle, TraceOutcome::Error, resp);
         }
     }
-    match ctx.server.try_submit_graceful(wire_req.variant, wire_req.id, wire_req.image) {
+    let t_admit0 = Instant::now();
+    let submitted = ctx.server.try_submit_traced(
+        wire_req.variant,
+        wire_req.id,
+        wire_req.image,
+        handle.clone(),
+    );
+    let t_admit1 = Instant::now();
+    mx.on_stage_us(TraceStage::Admit, us(t_admit0, t_admit1));
+    if let Some(h) = &handle {
+        h.span(TraceStage::Admit, t_admit0, t_admit1);
+    }
+    let (outcome, resp) = match submitted {
         Ok((rx, permit, bits)) => match rx.recv_timeout(ctx.response_timeout) {
             Ok(resp) => {
-                let status = match resp.result {
+                let (outcome, status) = match resp.result {
                     Ok(outputs) => {
+                        let t_ser0 = Instant::now();
                         let body = wire::encode_infer_response(
                             resp.id,
                             resp.latency.as_micros() as u64,
                             bits,
+                            handle.as_ref().map(|h| h.id()),
                             &outputs,
                         );
-                        HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
-                            .header("X-PDQ-Bits", &bits.to_string())
+                        let t_ser1 = Instant::now();
+                        mx.on_stage_us(TraceStage::Serialize, us(t_ser0, t_ser1));
+                        if let Some(h) = &handle {
+                            h.span(TraceStage::Serialize, t_ser0, t_ser1);
+                            h.set_bits(bits);
+                        }
+                        let outcome = if bits < native_bits {
+                            TraceOutcome::Degraded
+                        } else {
+                            TraceOutcome::Ok
+                        };
+                        (
+                            outcome,
+                            HttpResponse::bytes(200, wire::TENSOR_CONTENT_TYPE, body)
+                                .header("X-PDQ-Bits", &bits.to_string()),
+                        )
                     }
                     // The library's typed errors map onto the protocol: a
                     // shape mismatch is the *caller's* fault (400), every
@@ -545,12 +657,12 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
                     // panic on request data, so these are the only shapes
                     // an executed request can come back in.
                     Err(e @ EngineError::ShapeMismatch { .. }) => {
-                        HttpResponse::error(400, &e.to_string())
+                        (TraceOutcome::Error, HttpResponse::error(400, &e.to_string()))
                     }
-                    Err(e) => HttpResponse::error(500, &e.to_string()),
+                    Err(e) => (TraceOutcome::Error, HttpResponse::error(500, &e.to_string())),
                 };
                 drop(permit); // slot freed only once the response is in hand
-                status
+                (outcome, status)
             }
             Err(_) => {
                 // The job is still queued/executing even though this client
@@ -562,12 +674,13 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
                     let _ = rx.recv();
                     drop(permit);
                 });
-                HttpResponse::error(504, "execution timed out")
+                (TraceOutcome::Timeout, HttpResponse::error(504, "execution timed out"))
             }
         },
-        Err(SubmitError::UnknownVariant(v)) => {
-            HttpResponse::error(404, &format!("unknown variant {v:?}"))
-        }
+        Err(SubmitError::UnknownVariant(v)) => (
+            TraceOutcome::Error,
+            HttpResponse::error(404, &format!("unknown variant {v:?}")),
+        ),
         Err(SubmitError::Overloaded { depth }) => {
             // Load-proportional retry hint: time to drain the queue ahead,
             // depth × p50 ÷ workers. Histogram walk, not the reservoir
@@ -575,12 +688,36 @@ fn infer(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
             // server is saturated.
             let p50_us = ctx.server.metrics().latency_p50_hint_us();
             let ms = retry_after_ms(depth, p50_us as f64, ctx.server.workers_per_variant());
-            HttpResponse::error(429, "variant over its in-flight limit; retry later")
-                .header("Retry-After", &ms.div_ceil(1000).max(1).to_string())
-                .header("X-PDQ-Retry-After-Ms", &ms.to_string())
+            (
+                TraceOutcome::Shed,
+                HttpResponse::error(429, "variant over its in-flight limit; retry later")
+                    .header("Retry-After", &ms.div_ceil(1000).max(1).to_string())
+                    .header("X-PDQ-Retry-After-Ms", &ms.to_string()),
+            )
         }
-        Err(SubmitError::Draining) => HttpResponse::error(503, "server is draining"),
-    }
+        Err(SubmitError::Draining) => {
+            (TraceOutcome::Shed, HttpResponse::error(503, "server is draining"))
+        }
+    };
+    finish_trace(ctx, handle, outcome, resp)
+}
+
+/// Seal a request's trace — stamp the outcome, echo `X-PDQ-Trace`, and
+/// commit to the flight recorder (anomaly-flagged against the live
+/// histogram p99). No-op when tracing is disarmed.
+fn finish_trace(
+    ctx: &Ctx,
+    handle: Option<TraceHandle>,
+    outcome: TraceOutcome,
+    resp: HttpResponse,
+) -> HttpResponse {
+    let Some(h) = handle else { return resp };
+    h.set_outcome(outcome);
+    let trace = h.finish(Instant::now());
+    let id = trace.id.to_string();
+    let p99 = ctx.server.metrics().latency_quantile_hint_us(0.99) as f64;
+    ctx.recorder.commit(trace, p99);
+    resp.header("X-PDQ-Trace", &id)
 }
 
 #[cfg(test)]

@@ -15,7 +15,11 @@
 //!
 //! Targets are discovered from `GET /v1/variants`, inputs are seeded
 //! uniform noise per variant, and the report lands in `BENCH_serving.json`
-//! (schema `pdq-serving-v1`).
+//! (schema `pdq-serving-v2`; every `v1` field is kept). `v2` adds the
+//! flight-recorder tie-in: per-variant counts of trace-carrying responses
+//! plus a small sample of server trace IDs (resolvable against
+//! `GET /v1/traces?id=` while the server is still up), and a snapshot of
+//! the server's per-stage latency attribution from `GET /metrics`.
 //!
 //! **Overload sweep** ([`run_sweep`], `--sweep`): steps the offered
 //! open-loop RPS from 1× to 10× of a measured (or given) baseline and
@@ -38,6 +42,7 @@ use std::time::{Duration, Instant};
 use crate::data::corrupt::{corrupt, Corruption};
 use crate::engine::VariantKey;
 use crate::net::wire::{Client, InferOutcome};
+use crate::obs::TraceId;
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
 use crate::util::{stats, Pcg32};
@@ -144,7 +149,16 @@ pub struct VariantReport {
     /// OK responses by served precision (the `"bits"` response preamble
     /// field); key 0 collects responses from servers that predate it.
     pub served_bits: std::collections::BTreeMap<u32, u64>,
+    /// OK responses whose preamble carried a server-echoed trace ID
+    /// (zero unless the server ran with `--trace`).
+    pub traced: u64,
+    /// Sample of those trace IDs (first [`TRACE_ID_SAMPLE`] seen) — enough
+    /// to pull full span breakdowns from `GET /v1/traces?id=` afterwards.
+    pub trace_ids: Vec<String>,
 }
+
+/// Per-variant cap on sampled trace IDs in the report.
+pub const TRACE_ID_SAMPLE: usize = 8;
 
 impl VariantReport {
     fn to_json(&self) -> Json {
@@ -164,7 +178,12 @@ impl VariantReport {
         for (b, n) in &self.served_bits {
             bits.set(&b.to_string(), *n);
         }
-        o.set("served_bits", bits);
+        o.set("served_bits", bits)
+            .set("traced", self.traced)
+            .set(
+                "trace_ids",
+                Json::Arr(self.trace_ids.iter().map(|t| Json::Str(t.clone())).collect()),
+            );
         o
     }
 }
@@ -181,6 +200,10 @@ pub struct LoadReport {
     pub shift: Option<String>,
     pub total: VariantReport,
     pub per_variant: Vec<VariantReport>,
+    /// Snapshot of the server's per-stage latency attribution (the
+    /// `"stages"` object of `GET /metrics`), taken right after the run.
+    /// `None` when the fetch failed or the server predates stage metrics.
+    pub stages: Option<Json>,
 }
 
 impl LoadReport {
@@ -196,7 +219,7 @@ impl LoadReport {
             cfg.set("shift", shift.as_str());
         }
         let mut o = Json::obj();
-        o.set("schema", "pdq-serving-v1")
+        o.set("schema", "pdq-serving-v2")
             .set("config", cfg)
             .set("achieved_rps", self.achieved_rps)
             .set("aggregate", self.total.to_json())
@@ -204,6 +227,9 @@ impl LoadReport {
                 "per_variant",
                 Json::Arr(self.per_variant.iter().map(|v| v.to_json()).collect()),
             );
+        if let Some(stages) = &self.stages {
+            o.set("stages", stages.clone());
+        }
         o
     }
 
@@ -292,6 +318,8 @@ struct Rec {
     us: f32,
     /// Served precision of an OK response (0 otherwise / legacy server).
     bits: u32,
+    /// Server-echoed trace ID of an OK response, when tracing was armed.
+    trace: Option<TraceId>,
 }
 
 fn one_request(
@@ -299,19 +327,31 @@ fn one_request(
     v: &TargetVariant,
     id: u64,
     shifted: bool,
-) -> (Outcome, Option<u64>, u32) {
+) -> (Outcome, Option<u64>, u32, Option<TraceId>) {
     let image = match (&v.shifted, shifted) {
         (Some(img), true) => img,
         _ => &v.image,
     };
     match client.post_infer(&v.key, id, image) {
-        Ok(InferOutcome::Ok(resp)) => (Outcome::Ok, None, resp.bits),
+        Ok(InferOutcome::Ok(resp)) => (Outcome::Ok, None, resp.bits, resp.trace),
         Ok(InferOutcome::Rejected { retry_after_ms }) => {
-            (Outcome::Rejected, Some(retry_after_ms), 0)
+            (Outcome::Rejected, Some(retry_after_ms), 0, None)
         }
-        Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None, 0),
-        Err(_) => (Outcome::Dropped, None, 0),
+        Ok(InferOutcome::Failed { .. }) => (Outcome::Failed, None, 0, None),
+        Err(_) => (Outcome::Dropped, None, 0, None),
     }
+}
+
+/// Best-effort snapshot of the server's stage-latency attribution (the
+/// JSON `/metrics` endpoint's `"stages"` object).
+fn fetch_stages(cfg: &LoadgenConfig) -> Option<Json> {
+    let mut client = Client::new(&cfg.target);
+    let parts = client.get("/metrics").ok()?;
+    if parts.status != 200 {
+        return None;
+    }
+    let j = Json::parse(std::str::from_utf8(&parts.body).ok()?).ok()?;
+    j.get("stages").cloned()
 }
 
 /// Run the configured load against the target.
@@ -338,13 +378,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                         let id = t as u64 * 1_000_000_000 + seq;
                         let sent_at = Instant::now();
                         let shifted = shift_at.map_or(false, |at| sent_at >= at);
-                        let (outcome, retry_ms, bits) =
+                        let (outcome, retry_ms, bits, trace) =
                             one_request(&mut client, &targets[vi], id, shifted);
                         recs.push(Rec {
                             variant: vi,
                             outcome,
                             us: sent_at.elapsed().as_micros() as f32,
                             bits,
+                            trace,
                         });
                         if let Some(ms) = retry_ms {
                             let nap = Duration::from_millis(ms).min(cfg.backoff_cap);
@@ -370,7 +411,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                         }
                         let vi = (k as usize) % targets.len();
                         let shifted = shift_at.map_or(false, |at| Instant::now() >= at);
-                        let (outcome, _, bits) =
+                        let (outcome, _, bits, trace) =
                             one_request(&mut client, &targets[vi], k, shifted);
                         // Latency from the *schedule*, not the send.
                         recs.push(Rec {
@@ -378,6 +419,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                             outcome,
                             us: sched.elapsed().as_micros() as f32,
                             bits,
+                            trace,
                         });
                         k += concurrency as u64;
                     }
@@ -405,6 +447,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
             p95_us: 0.0,
             p99_us: 0.0,
             served_bits: std::collections::BTreeMap::new(),
+            traced: 0,
+            trace_ids: Vec::new(),
         };
         let mut ok_us: Vec<f32> = Vec::new();
         for rec in recs {
@@ -413,6 +457,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
                     r.ok += 1;
                     ok_us.push(rec.us);
                     *r.served_bits.entry(rec.bits).or_insert(0) += 1;
+                    if let Some(t) = rec.trace {
+                        r.traced += 1;
+                        if r.trace_ids.len() < TRACE_ID_SAMPLE {
+                            r.trace_ids.push(t.to_string());
+                        }
+                    }
                 }
                 Outcome::Rejected => r.rejected += 1,
                 Outcome::Failed => r.failed += 1,
@@ -445,6 +495,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         shift: cfg.shift.map(|s| s.display()),
         total,
         per_variant,
+        stages: fetch_stages(cfg),
     })
 }
 
@@ -691,7 +742,11 @@ mod tests {
             p95_us: 200.0,
             p99_us: 300.0,
             served_bits: [(8u32, 6u64), (4, 2)].into_iter().collect(),
+            traced: 6,
+            trace_ids: vec!["00000000deadbeef".into()],
         };
+        let mut stages = Json::obj();
+        stages.set("queue", 12.0).set("execute", 340.0);
         let report = LoadReport {
             mode: "open".into(),
             offered_rps: Some(50.0),
@@ -701,9 +756,10 @@ mod tests {
             shift: Some("contrast:5@2".into()),
             total: v.clone(),
             per_variant: vec![v],
+            stages: Some(stages),
         };
         let j = report.to_json();
-        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-serving-v1"));
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-serving-v2"));
         assert_eq!(j.get("config").unwrap().get("mode").unwrap().as_str(), Some("open"));
         assert_eq!(
             j.get("config").unwrap().get("shift").unwrap().as_str(),
@@ -715,6 +771,13 @@ mod tests {
         assert_eq!(agg.get("served_bits").unwrap().get("8").unwrap().as_usize(), Some(6));
         assert_eq!(agg.get("served_bits").unwrap().get("4").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("per_variant").unwrap().as_arr().unwrap().len(), 1);
+        // v2 additions: flight-recorder tie-in + server stage snapshot.
+        assert_eq!(agg.get("traced").unwrap().as_usize(), Some(6));
+        assert_eq!(
+            agg.get("trace_ids").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("00000000deadbeef")
+        );
+        assert_eq!(j.get("stages").unwrap().get("execute").unwrap().as_f64(), Some(340.0));
     }
 
     #[test]
@@ -731,6 +794,8 @@ mod tests {
             p95_us: 900.0,
             p99_us: 1200.0,
             served_bits: [(8u32, 40u64), (4, 30)].into_iter().collect(),
+            traced: 0,
+            trace_ids: Vec::new(),
         };
         let report = DegradeReport {
             base_rps: 50.0,

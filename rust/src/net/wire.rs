@@ -8,13 +8,18 @@
 //!
 //! Request preamble: `{"variant": "<model>|<mode>", "id": N, "shape": [...]}`
 //! with the raw data being the image tensor, row-major f32 little-endian.
+//! An optional `"trace"` field (1–16 hex digits) carries a client-chosen
+//! flight-recorder trace ID — the wire-level twin of the `X-PDQ-Trace`
+//! header; invalid values are ignored (the server mints instead).
 //! Response preamble:
 //! `{"id": N, "latency_us": N, "bits": N, "shapes": [[...], ...]}` — `bits`
 //! is the precision the request was actually *served* at (32 fp32, 8/4/2
 //! int8 rungs; under precision brownout a degraded request reports the
 //! rung it landed on, so clients can observe degradation per-response) —
 //! with the raw data being every output tensor's f32 data concatenated in
-//! order. Raw LE f32 keeps the payload bit-exact end to end (the socket
+//! order. When tracing is armed the response preamble echoes the request's
+//! `"trace"` ID (also sent as the `X-PDQ-Trace` header); disarmed servers
+//! omit the field, keeping the body bit-identical to pre-tracing builds. Raw LE f32 keeps the payload bit-exact end to end (the socket
 //! integration test asserts responses match direct execution bit for bit),
 //! which a decimal JSON float round-trip would not guarantee.
 //!
@@ -28,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::VariantKey;
 use crate::net::http::{read_response, HttpResponseParts, DEFAULT_MAX_BODY_BYTES};
+use crate::obs::TraceId;
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
@@ -104,10 +110,24 @@ fn parse_shape(j: &Json) -> Result<Shape, String> {
 
 /// Encode a `/v1/infer` request body.
 pub fn encode_infer_request(variant: &VariantKey, id: u64, image: &Tensor<f32>) -> Vec<u8> {
+    encode_infer_request_traced(variant, id, image, None)
+}
+
+/// [`encode_infer_request`] with a client-chosen trace ID in the preamble
+/// (the wire-level twin of the `X-PDQ-Trace` header).
+pub fn encode_infer_request_traced(
+    variant: &VariantKey,
+    id: u64,
+    image: &Tensor<f32>,
+    trace: Option<TraceId>,
+) -> Vec<u8> {
     let mut p = Json::obj();
     p.set("variant", variant.wire())
         .set("id", id)
         .set("shape", shape_json(image.shape().dims()));
+    if let Some(t) = trace {
+        p.set("trace", t.to_string());
+    }
     frame(&p, image.data())
 }
 
@@ -116,6 +136,10 @@ pub struct InferRequestWire {
     pub variant: VariantKey,
     pub id: u64,
     pub image: Tensor<f32>,
+    /// Client-supplied trace ID from the preamble's optional `"trace"`
+    /// field. Absent or unparseable values decode as `None` — a malformed
+    /// trace ID must never fail an otherwise-valid request.
+    pub trace: Option<TraceId>,
 }
 
 pub fn decode_infer_request(body: &[u8]) -> Result<InferRequestWire, String> {
@@ -124,6 +148,7 @@ pub fn decode_infer_request(body: &[u8]) -> Result<InferRequestWire, String> {
         p.get("variant").and_then(|v| v.as_str()).ok_or("missing \"variant\"")?,
     )?;
     let id = p.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let trace = p.get("trace").and_then(|v| v.as_str()).and_then(TraceId::parse);
     let shape = parse_shape(p.get("shape").ok_or("missing \"shape\"")?)?;
     if shape.numel() != data.len() {
         return Err(format!(
@@ -133,21 +158,28 @@ pub fn decode_infer_request(body: &[u8]) -> Result<InferRequestWire, String> {
             data.len()
         ));
     }
-    Ok(InferRequestWire { variant, id, image: Tensor::from_vec(shape, data) })
+    Ok(InferRequestWire { variant, id, image: Tensor::from_vec(shape, data), trace })
 }
 
 /// Encode a `/v1/infer` response body. `bits` is the served precision
 /// (32 / 8 / 4 / 2); pass 0 to omit the field (pre-brownout encoders did).
+/// `trace` echoes the request's flight-recorder ID when tracing is armed;
+/// `None` omits the field, leaving the body byte-identical to pre-tracing
+/// encoders.
 pub fn encode_infer_response(
     id: u64,
     latency_us: u64,
     bits: u32,
+    trace: Option<TraceId>,
     outputs: &[Tensor<f32>],
 ) -> Vec<u8> {
     let mut p = Json::obj();
     p.set("id", id).set("latency_us", latency_us);
     if bits > 0 {
         p.set("bits", bits as u64);
+    }
+    if let Some(t) = trace {
+        p.set("trace", t.to_string());
     }
     p.set(
         "shapes",
@@ -167,6 +199,9 @@ pub struct InferResponseWire {
     /// Served precision in bits (32 / 8 / 4 / 2); 0 when the server
     /// predates the brownout protocol and omitted the field.
     pub bits: u32,
+    /// The server-echoed trace ID; `None` when tracing was disarmed (or
+    /// the server predates the flight recorder).
+    pub trace: Option<TraceId>,
     pub outputs: Vec<Tensor<f32>>,
 }
 
@@ -175,6 +210,7 @@ pub fn decode_infer_response(body: &[u8]) -> Result<InferResponseWire, String> {
     let id = p.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
     let latency_us = p.get("latency_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
     let bits = p.get("bits").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
+    let trace = p.get("trace").and_then(|v| v.as_str()).and_then(TraceId::parse);
     let shapes: Vec<Shape> = p
         .get("shapes")
         .and_then(|s| s.as_arr())
@@ -193,7 +229,7 @@ pub fn decode_infer_response(body: &[u8]) -> Result<InferResponseWire, String> {
         outputs.push(Tensor::from_vec(s, data[off..off + n].to_vec()));
         off += n;
     }
-    Ok(InferResponseWire { id, latency_us, bits, outputs })
+    Ok(InferResponseWire { id, latency_us, bits, trace, outputs })
 }
 
 /// Outcome of one client-side infer call that got an HTTP response.
@@ -520,17 +556,46 @@ mod tests {
     fn infer_response_roundtrip_multi_output() {
         let a = Tensor::from_vec(Shape::new(&[4]), vec![1.0, 2.0, 3.0, 4.0]);
         let b = Tensor::from_vec(Shape::new(&[2, 2]), vec![-1.0, -2.0, -3.0, -4.0]);
-        let body = encode_infer_response(7, 1234, 4, &[a.clone(), b.clone()]);
+        let body = encode_infer_response(7, 1234, 4, None, &[a.clone(), b.clone()]);
         let back = decode_infer_response(&body).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.latency_us, 1234);
         assert_eq!(back.bits, 4, "served precision rides the preamble");
+        assert_eq!(back.trace, None, "disarmed tracing omits the field");
         assert_eq!(back.outputs.len(), 2);
         assert_eq!(back.outputs[0], a);
         assert_eq!(back.outputs[1], b);
         // Legacy encoders (bits 0) omit the field; decode stays tolerant.
-        let legacy = encode_infer_response(7, 1234, 0, &[a.clone()]);
+        let legacy = encode_infer_response(7, 1234, 0, None, &[a.clone()]);
         assert_eq!(decode_infer_response(&legacy).unwrap().bits, 0);
+    }
+
+    #[test]
+    fn trace_id_rides_both_preambles() {
+        let id = TraceId::parse("cafef00d").unwrap();
+        let img = Tensor::from_vec(Shape::new(&[4]), vec![1.0, 2.0, 3.0, 4.0]);
+        // Request: traced encode decodes to the same ID; plain encode to None.
+        let req = encode_infer_request_traced(&key(), 5, &img, Some(id));
+        assert_eq!(decode_infer_request(&req).unwrap().trace, Some(id));
+        let plain = encode_infer_request(&key(), 5, &img);
+        assert_eq!(decode_infer_request(&plain).unwrap().trace, None);
+        // A malformed trace field is ignored, not fatal.
+        let mut p = Json::obj();
+        p.set("variant", key().wire())
+            .set("id", 5u64)
+            .set("shape", shape_json(&[4]))
+            .set("trace", "not-hex!");
+        let body = frame(&p, img.data());
+        let back = decode_infer_request(&body).unwrap();
+        assert_eq!(back.trace, None);
+        assert_eq!(back.id, 5);
+        // Response echo.
+        let resp = encode_infer_response(5, 10, 8, Some(id), &[img.clone()]);
+        assert_eq!(decode_infer_response(&resp).unwrap().trace, Some(id));
+        // Armed vs disarmed bodies differ ONLY in the preamble field.
+        let disarmed = encode_infer_response(5, 10, 8, None, &[img]);
+        assert_ne!(resp, disarmed);
+        assert_eq!(decode_infer_response(&disarmed).unwrap().trace, None);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use std::collections::BTreeMap;
 use super::graph::{Graph, NodeId, Op};
 use super::memory::{Int8Arena, MemoryPlan};
 use super::quant_exec::{QuantExecutor, QuantMode};
-use crate::engine::{EngineError, RunTap};
+use crate::engine::{EngineError, KernelTrace, RunTap};
 use crate::cmsis::fast;
 use crate::cmsis::pdq_wrappers::{conv_window_stats, dw_window_stats, QOut};
 use crate::cmsis::requant::Requant;
@@ -109,6 +109,24 @@ pub enum Int8Op {
     GlobalAvgPool,
     Flatten,
     Add,
+}
+
+impl Int8Op {
+    /// Short operator name for kernel spans and debug output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Int8Op::Input => "input",
+            Int8Op::Conv { .. } => "conv",
+            Int8Op::DwConv { .. } => "dwconv",
+            Int8Op::Linear { .. } => "linear",
+            Int8Op::Relu => "relu",
+            Int8Op::Relu6 => "relu6",
+            Int8Op::MaxPool { .. } => "maxpool",
+            Int8Op::GlobalAvgPool => "gap",
+            Int8Op::Flatten => "flatten",
+            Int8Op::Add => "add",
+        }
+    }
 }
 
 /// One lowered node.
@@ -398,6 +416,42 @@ impl Int8Executor {
         tap.clear();
         self.forward_inner(input, arena, Some(tap))?;
         Ok(self.collect_dequant(arena))
+    }
+
+    /// [`Int8Executor::run_with_arena`] with kernel tracing armed: every
+    /// lowered node's wall-clock duration lands in `ktrace` (plus the
+    /// output requantize/dequantize tail as `requant_us`). The nodes are
+    /// evaluated through the exact same `eval_node` loop as the untraced
+    /// path with the observation tap disarmed, so outputs are
+    /// bit-identical to [`Int8Executor::run_with_arena`] — tracing reads
+    /// the clock, never the arithmetic.
+    pub fn run_traced_with_arena(
+        &self,
+        input: &Tensor<f32>,
+        arena: &mut Int8Arena,
+        ktrace: &mut KernelTrace,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        ktrace.clear();
+        if input.shape() != &self.input_shape {
+            return Err(EngineError::ShapeMismatch {
+                expected: self.input_shape.clone(),
+                got: input.shape().clone(),
+            });
+        }
+        assert_eq!(
+            arena.plan().shapes.len(),
+            self.nodes.len(),
+            "arena plan does not match program"
+        );
+        for idx in 0..self.nodes.len() {
+            let t0 = std::time::Instant::now();
+            self.eval_node(idx, input, arena, None);
+            ktrace.push(idx, self.nodes[idx].op.name(), t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let t0 = std::time::Instant::now();
+        let outputs = self.collect_dequant(arena);
+        ktrace.requant_us = t0.elapsed().as_secs_f64() * 1e6;
+        Ok(outputs)
     }
 
     /// Rebuild this *static-mode* program's output grids from live pooled

@@ -1,0 +1,172 @@
+//! Structured, leveled, rate-limited event logging for serving decisions.
+//!
+//! The serving stack makes per-request control decisions (brownout rung
+//! changes, recalibration swaps, shed storms) that belong in an operator
+//! log, not just in counters. This module gives them one narrow door:
+//!
+//! ```text
+//! let mut f = Json::obj();
+//! f.set("from", "normal").set("to", "degrade4").set("load", 0.91);
+//! obs::log::event(Level::Warn, "brownout", f);
+//! ```
+//!
+//! - **Leveled** — `Debug < Info < Warn < Error`; a process-wide minimum
+//!   gates emission (default `Info`).
+//! - **Rate-limited** — per event kind, a fixed budget per one-second
+//!   window; excess events are counted and surfaced as a `suppressed`
+//!   field on the next emitted event of that kind, so a brownout flap
+//!   can't melt stderr while still being visible in aggregate.
+//! - **Two formats** — human text (default) or one JSON object per line
+//!   (`--log-json`), both to stderr so stdout stays parseable (the CLI
+//!   prints reports there).
+//!
+//! Configuration is process-global and set once ([`init`]); when nobody
+//! calls [`init`] the defaults apply, so library tests can emit events
+//! without ceremony.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Event severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Development chatter; off by default.
+    Debug,
+    /// Normal control-plane decisions (recalibration applied).
+    Info,
+    /// Degraded-service decisions (brownout escalation, shed).
+    Warn,
+    /// Failures (engine errors, recalibration rejected).
+    Error,
+}
+
+impl Level {
+    /// Stable lowercase label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// Max events per kind per one-second window before suppression.
+const RATE_MAX_PER_SEC: u32 = 10;
+
+struct Limiter {
+    window_start: Instant,
+    emitted: u32,
+    suppressed: u64,
+}
+
+struct Logger {
+    json: bool,
+    min: Level,
+    limiters: Mutex<HashMap<String, Limiter>>,
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+fn logger() -> &'static Logger {
+    LOGGER.get_or_init(|| Logger { json: false, min: Level::Info, limiters: Mutex::new(HashMap::new()) })
+}
+
+/// Configure the process-global logger. First call wins (subsequent calls
+/// are no-ops — the logger may already have emitted); returns whether this
+/// call took effect.
+pub fn init(json: bool, min: Level) -> bool {
+    LOGGER.set(Logger { json, min, limiters: Mutex::new(HashMap::new()) }).is_ok()
+}
+
+/// Emit one structured event. `fields` must be a JSON object (it is
+/// extended with `ts_us`, `level`, `event` and — after suppression — a
+/// `suppressed` count). Events below the configured minimum level, and
+/// events past the per-kind rate budget, are dropped (the latter counted).
+pub fn event(level: Level, kind: &str, fields: Json) {
+    let lg = logger();
+    if level < lg.min {
+        return;
+    }
+    // Rate limit per kind on a coarse one-second window.
+    let suppressed = {
+        let mut map = lg.limiters.lock().unwrap();
+        let lim = map.entry(kind.to_string()).or_insert_with(|| Limiter {
+            window_start: Instant::now(),
+            emitted: 0,
+            suppressed: 0,
+        });
+        if lim.window_start.elapsed().as_secs() >= 1 {
+            lim.window_start = Instant::now();
+            lim.emitted = 0;
+        }
+        if lim.emitted >= RATE_MAX_PER_SEC {
+            lim.suppressed += 1;
+            return;
+        }
+        lim.emitted += 1;
+        std::mem::take(&mut lim.suppressed)
+    };
+    let ts_us = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    let mut obj = match fields {
+        Json::Obj(_) => fields,
+        other => {
+            let mut o = Json::obj();
+            o.set("value", other);
+            o
+        }
+    };
+    obj.set("ts_us", ts_us).set("level", level.as_str()).set("event", kind);
+    if suppressed > 0 {
+        obj.set("suppressed", suppressed);
+    }
+    if lg.json {
+        eprintln!("{}", obj.to_string_compact());
+    } else {
+        let mut line = format!("[{}] {kind}", level.as_str());
+        if let Json::Obj(m) = &obj {
+            for (k, v) in m {
+                if k == "ts_us" || k == "level" || k == "event" {
+                    continue;
+                }
+                match v {
+                    Json::Str(s) => line.push_str(&format!(" {k}={s}")),
+                    other => line.push_str(&format!(" {k}={}", other.to_string_compact())),
+                }
+            }
+        }
+        eprintln!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn event_accepts_objects_and_non_objects() {
+        // Smoke: must not panic whatever the field payload is. Output goes
+        // to stderr; the rate limiter must also tolerate hammering.
+        let mut f = Json::obj();
+        f.set("from", "normal").set("to", "degrade4").set("load", 0.9);
+        event(Level::Warn, "brownout-test", f);
+        for _ in 0..50 {
+            event(Level::Info, "flood-test", Json::Num(1.0));
+        }
+        event(Level::Debug, "below-min-test", Json::obj());
+    }
+}

@@ -1,0 +1,32 @@
+//! # `pdq::obs` — the flight recorder: tracing, logging, perf reports.
+//!
+//! The serving stack makes per-request decisions the operator cannot see
+//! from counters alone: brownout picks a precision rung, admission sheds,
+//! the adaptation loop swaps engine epochs. This layer makes each request
+//! auditable end to end and each commit comparable to the last:
+//!
+//! - [`trace`] — trace IDs (minted at the front door or accepted from
+//!   `X-PDQ-Trace` / the wire preamble and echoed back), per-stage spans
+//!   (`accept → parse → admit → queue → batch → execute → requantize →
+//!   serialize`) carried through [`crate::coordinator::Request`], and
+//!   per-node kernel spans from the int8 engine
+//!   ([`crate::engine::Session::run_traced`] — bit-identical to the
+//!   untraced path, zero cost when disarmed).
+//! - [`recorder`] — the lock-cheap ring-buffer [`FlightRecorder`]: the
+//!   last N traces plus every anomalous one (shed, degraded rung, engine
+//!   error, timeout, p99 outlier), served at `GET /v1/traces[?id=]`.
+//! - [`log`] — leveled, rate-limited structured events (brownout
+//!   transitions, recalibration decisions); human text or `--log-json`.
+//! - [`report`] — `pdq perf-report`: per-metric deltas across
+//!   `BENCH_*.json` artifacts with regression thresholds, rendered to
+//!   `PERF_REPORT.md`, nonzero exit on regression.
+//!
+//! Everything is std-only, like the rest of the crate.
+
+pub mod log;
+pub mod recorder;
+pub mod report;
+pub mod trace;
+
+pub use recorder::FlightRecorder;
+pub use trace::{Span, Stage, Trace, TraceHandle, TraceId, TraceOutcome};

@@ -1,0 +1,191 @@
+//! The flight recorder: a lock-cheap ring buffer of completed traces.
+//!
+//! Two bounded rings under one mutex (one short critical section per
+//! completed request — clone-in, push, maybe pop):
+//!
+//! - **recent** — the last N traces, whatever they were; the "what is the
+//!   server doing right now" window.
+//! - **anomalous** — every trace that ended badly (shed, degraded rung,
+//!   engine error, timeout) or slower than the p99 hint at commit time.
+//!   Kept in its own ring so a flood of healthy traffic can never evict
+//!   the interesting traces — the property the eviction test pins.
+//!
+//! Traces are stored behind `Arc` so a trace living in both rings costs
+//! one allocation, and snapshots clone pointers, not spans.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::trace::{Trace, TraceOutcome};
+use crate::util::json::Json;
+
+/// Default capacity of the recent-traces ring.
+pub const DEFAULT_RECENT_CAP: usize = 256;
+/// Default capacity of the anomalous-traces ring.
+pub const DEFAULT_ANOMALY_CAP: usize = 64;
+
+struct Inner {
+    recent: VecDeque<Arc<Trace>>,
+    anomalous: VecDeque<Arc<Trace>>,
+    committed: u64,
+    anomalies: u64,
+}
+
+/// The ring-buffer flight recorder behind `GET /v1/traces`.
+pub struct FlightRecorder {
+    recent_cap: usize,
+    anomaly_cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_RECENT_CAP, DEFAULT_ANOMALY_CAP)
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder holding up to `recent_cap` recent traces plus up to
+    /// `anomaly_cap` anomalous ones (both ≥ 1).
+    pub fn new(recent_cap: usize, anomaly_cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            recent_cap: recent_cap.max(1),
+            anomaly_cap: anomaly_cap.max(1),
+            inner: Mutex::new(Inner {
+                recent: VecDeque::new(),
+                anomalous: VecDeque::new(),
+                committed: 0,
+                anomalies: 0,
+            }),
+        }
+    }
+
+    /// Whether a trace counts as anomalous: a non-ok outcome, or — when a
+    /// p99 hint is available — an end-to-end latency beyond it.
+    pub fn is_anomalous(trace: &Trace, p99_hint_us: f64) -> bool {
+        trace.outcome != TraceOutcome::Ok
+            || (p99_hint_us > 0.0 && trace.total_us > p99_hint_us)
+    }
+
+    /// Commit a completed trace. `p99_hint_us` is the exact-histogram p99
+    /// at commit time (0 disables the outlier rule). Returns whether the
+    /// trace was classified anomalous.
+    pub fn commit(&self, trace: Trace, p99_hint_us: f64) -> bool {
+        let anomalous = Self::is_anomalous(&trace, p99_hint_us);
+        let trace = Arc::new(trace);
+        let mut g = self.inner.lock().unwrap();
+        g.committed += 1;
+        if g.recent.len() == self.recent_cap {
+            g.recent.pop_front();
+        }
+        g.recent.push_back(Arc::clone(&trace));
+        if anomalous {
+            g.anomalies += 1;
+            if g.anomalous.len() == self.anomaly_cap {
+                g.anomalous.pop_front();
+            }
+            g.anomalous.push_back(trace);
+        }
+        anomalous
+    }
+
+    /// Look up one trace by its canonical hex ID (most recent match wins;
+    /// both rings are searched).
+    pub fn find(&self, id: &str) -> Option<Arc<Trace>> {
+        let g = self.inner.lock().unwrap();
+        g.recent
+            .iter()
+            .rev()
+            .chain(g.anomalous.iter().rev())
+            .find(|t| t.id.to_string() == id)
+            .cloned()
+    }
+
+    /// The `GET /v1/traces` document: counters plus both rings (oldest
+    /// first). With `id`, only the matching trace (empty array on miss).
+    pub fn to_json(&self, id: Option<&str>) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", "pdq-traces-v1");
+        if let Some(id) = id {
+            let traces = match self.find(id) {
+                Some(t) => vec![t.to_json()],
+                None => Vec::new(),
+            };
+            j.set("traces", Json::Arr(traces));
+            return j;
+        }
+        let g = self.inner.lock().unwrap();
+        j.set("committed", g.committed)
+            .set("anomalies", g.anomalies)
+            .set("recent", Json::Arr(g.recent.iter().map(|t| t.to_json()).collect()))
+            .set("anomalous", Json::Arr(g.anomalous.iter().map(|t| t.to_json()).collect()));
+        j
+    }
+
+    /// (committed, anomalies) counters.
+    pub fn counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.committed, g.anomalies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Stage, TraceHandle, TraceId};
+    use std::time::Instant;
+
+    fn trace(id: u64, outcome: TraceOutcome, total_us: f64) -> Trace {
+        let t0 = Instant::now();
+        let h = TraceHandle::new(TraceId::from_u64(id).unwrap(), t0);
+        h.set_request("m|fp32", id);
+        h.set_outcome(outcome);
+        h.span(Stage::Parse, t0, t0);
+        let mut tr = h.finish(t0);
+        tr.total_us = total_us;
+        tr
+    }
+
+    #[test]
+    fn eviction_keeps_anomalous_traces() {
+        let rec = FlightRecorder::new(4, 4);
+        rec.commit(trace(0xBAD, TraceOutcome::Shed, 10.0), 0.0);
+        // Flood the recent ring far past capacity with healthy traces.
+        for i in 1..=32u64 {
+            rec.commit(trace(i, TraceOutcome::Ok, 10.0), 0.0);
+        }
+        let id = TraceId::from_u64(0xBAD).unwrap().to_string();
+        let found = rec.find(&id).expect("anomalous trace survives eviction");
+        assert_eq!(found.outcome, TraceOutcome::Shed);
+        let (committed, anomalies) = rec.counts();
+        assert_eq!(committed, 33);
+        assert_eq!(anomalies, 1);
+        // The recent ring holds only the newest 4.
+        let j = rec.to_json(None);
+        assert_eq!(j.get("recent").and_then(|r| r.as_arr()).map(|a| a.len()), Some(4));
+    }
+
+    #[test]
+    fn p99_outliers_are_anomalous() {
+        let rec = FlightRecorder::new(8, 8);
+        assert!(!rec.commit(trace(1, TraceOutcome::Ok, 100.0), 500.0));
+        assert!(rec.commit(trace(2, TraceOutcome::Ok, 900.0), 500.0));
+        assert!(rec.commit(trace(3, TraceOutcome::Degraded, 100.0), 500.0));
+        // Hint of 0 disables the outlier rule but not the outcome rule.
+        assert!(!rec.commit(trace(4, TraceOutcome::Ok, 1e9), 0.0));
+        assert!(rec.commit(trace(5, TraceOutcome::Timeout, 1.0), 0.0));
+    }
+
+    #[test]
+    fn id_filter_returns_only_the_match() {
+        let rec = FlightRecorder::new(8, 8);
+        rec.commit(trace(7, TraceOutcome::Ok, 10.0), 0.0);
+        rec.commit(trace(9, TraceOutcome::Ok, 10.0), 0.0);
+        let id = TraceId::from_u64(9).unwrap().to_string();
+        let j = rec.to_json(Some(&id));
+        let arr = j.get("traces").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("id").and_then(|v| v.as_str()), Some(id.as_str()));
+        assert!(rec.to_json(Some("ffffffffffffffff")).get("traces").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,556 @@
+//! Commit-to-commit perf reports over `BENCH_*.json` artifacts.
+//!
+//! `pdq perf-report` reads two or more bench artifacts (any mix of the
+//! repo's schemas — `pdq-bench-v1` from the micro-bench harness,
+//! `pdq-serving-v1`/`-v2` from `pdq loadgen`, `pdq-degrade-v1` from
+//! `pdq loadgen --sweep`), groups them by schema *family* (version
+//! suffixes are ignored so a v1 baseline diffs cleanly against a v2
+//! current), and within each family compares the first file (baseline)
+//! against the last (current): per-metric deltas, direction-aware
+//! verdicts, and a rendered `PERF_REPORT.md`.
+//!
+//! A metric regresses when it moves in its bad direction by more than the
+//! relative threshold **and** more than an absolute noise floor (wall
+//! clocks on shared CI runners jitter; a 3% delta on a 40 ns kernel is
+//! not a finding). Drop/failure counts are stricter: any increase from a
+//! zero baseline is a regression outright.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Which way a metric is supposed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (latencies, drop counts).
+    Lower,
+    /// Larger is better (throughput, agreement rates).
+    Higher,
+    /// Tracked but never judged (configuration echoes, load-dependent
+    /// rates).
+    Info,
+}
+
+/// One extracted metric.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    /// Dotted path inside the artifact (`aggregate.p99_us`).
+    pub name: String,
+    /// The value.
+    pub value: f64,
+    /// Judgment direction.
+    pub dir: Direction,
+}
+
+/// The verdict on one metric's baseline → current move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within threshold/noise floor.
+    Ok,
+    /// Moved the good way past the threshold.
+    Improved,
+    /// Moved the bad way past the threshold — fails the report.
+    Regressed,
+    /// Informational metric, or present on only one side.
+    Info,
+}
+
+impl Verdict {
+    /// Stable lowercase label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Improved => "improved",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Info => "info",
+        }
+    }
+}
+
+/// One row of the report: a metric's baseline → current comparison.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    /// Metric name.
+    pub name: String,
+    /// Baseline value (`None` when the metric is new).
+    pub base: Option<f64>,
+    /// Current value (`None` when the metric disappeared).
+    pub cur: Option<f64>,
+    /// Relative move in percent, when both sides exist and base ≠ 0.
+    pub delta_pct: Option<f64>,
+    /// The verdict.
+    pub verdict: Verdict,
+}
+
+/// Per-unit absolute noise floor: deltas smaller than this never regress
+/// (or improve), whatever the percentage says.
+fn noise_floor(name: &str) -> f64 {
+    if name.ends_with("_ns") {
+        50.0
+    } else if name.ends_with("_us") {
+        20.0
+    } else if name.contains("rps") {
+        1.0
+    } else if name.contains("rate") || name.contains("agreement") {
+        0.01
+    } else {
+        0.0
+    }
+}
+
+/// Compare one metric across the two sides.
+fn judge(name: &str, dir: Direction, base: f64, cur: f64, threshold: f64) -> (Option<f64>, Verdict) {
+    if dir == Direction::Info {
+        let pct = if base != 0.0 { Some((cur - base) / base * 100.0) } else { None };
+        return (pct, Verdict::Info);
+    }
+    // Count-like metrics with a clean zero baseline: any appearance is a
+    // regression (a run that starts dropping requests did get worse even
+    // if the percentage is undefined).
+    if base == 0.0 {
+        if cur == 0.0 {
+            return (None, Verdict::Ok);
+        }
+        return (None, if dir == Direction::Lower { Verdict::Regressed } else { Verdict::Improved });
+    }
+    let pct = (cur - base) / base * 100.0;
+    let worse = match dir {
+        Direction::Lower => cur > base,
+        Direction::Higher => cur < base,
+        Direction::Info => false,
+    };
+    let material = (cur - base).abs() > noise_floor(name) && pct.abs() > threshold * 100.0;
+    let verdict = match (worse, material) {
+        (_, false) => Verdict::Ok,
+        (true, true) => Verdict::Regressed,
+        (false, true) => Verdict::Improved,
+    };
+    (Some(pct), verdict)
+}
+
+/// Strip the `-vN` suffix: `pdq-serving-v2` → `pdq-serving`, so versioned
+/// artifacts of the same family compare against each other.
+pub fn schema_family(schema: &str) -> String {
+    match schema.rfind("-v") {
+        Some(i) if schema[i + 2..].chars().all(|c| c.is_ascii_digit()) && i + 2 < schema.len() => {
+            schema[..i].to_string()
+        }
+        _ => schema.to_string(),
+    }
+}
+
+fn direction_for_derived(key: &str) -> Direction {
+    let k = key.to_ascii_lowercase();
+    if k.contains("speedup") || k.contains("throughput") || k.contains("rps") || k.contains("per_sec")
+    {
+        Direction::Higher
+    } else if k.ends_with("_ns") || k.ends_with("_us") || k.contains("latency") {
+        Direction::Lower
+    } else {
+        Direction::Info
+    }
+}
+
+/// Pull the comparable metrics out of one parsed artifact. Returns the
+/// declared schema string plus the metric list; unknown schemas yield an
+/// error naming the schema.
+pub fn extract_metrics(doc: &Json) -> Result<(String, Vec<Metric>), String> {
+    let schema = doc
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| "artifact has no \"schema\" field".to_string())?
+        .to_string();
+    let mut out = Vec::new();
+    match schema_family(&schema).as_str() {
+        "pdq-bench" => {
+            if let Some(benches) = doc.get("benchmarks").and_then(|b| b.as_arr()) {
+                for b in benches {
+                    let Some(name) = b.get("name").and_then(|n| n.as_str()) else { continue };
+                    for field in ["mean_ns", "p95_ns"] {
+                        if let Some(v) = b.get(field).and_then(|v| v.as_f64()) {
+                            out.push(Metric {
+                                name: format!("{name}.{field}"),
+                                value: v,
+                                dir: Direction::Lower,
+                            });
+                        }
+                    }
+                }
+            }
+            if let Some(Json::Obj(derived)) = doc.get("derived") {
+                for (k, v) in derived {
+                    if let Some(v) = v.as_f64() {
+                        out.push(Metric {
+                            name: format!("derived.{k}"),
+                            value: v,
+                            dir: direction_for_derived(k),
+                        });
+                    }
+                }
+            }
+        }
+        "pdq-serving" => {
+            if let Some(v) = doc.get("achieved_rps").and_then(|v| v.as_f64()) {
+                out.push(Metric { name: "achieved_rps".into(), value: v, dir: Direction::Higher });
+            }
+            if let Some(agg) = doc.get("aggregate") {
+                for (field, dir) in [
+                    ("mean_us", Direction::Lower),
+                    ("p50_us", Direction::Lower),
+                    ("p95_us", Direction::Lower),
+                    ("p99_us", Direction::Lower),
+                    ("dropped", Direction::Lower),
+                    ("failed", Direction::Lower),
+                    ("reject_rate", Direction::Info),
+                ] {
+                    if let Some(v) = agg.get(field).and_then(|v| v.as_f64()) {
+                        out.push(Metric { name: format!("aggregate.{field}"), value: v, dir });
+                    }
+                }
+            }
+        }
+        "pdq-degrade" => {
+            if let Some(steps) = doc.get("steps").and_then(|s| s.as_arr()) {
+                for s in steps {
+                    let Some(mult) = s.get("multiplier").and_then(|m| m.as_f64()) else { continue };
+                    let tag = format!("step@{mult}x");
+                    if let Some(v) = s.get("achieved_rps").and_then(|v| v.as_f64()) {
+                        out.push(Metric {
+                            name: format!("{tag}.achieved_rps"),
+                            value: v,
+                            dir: Direction::Higher,
+                        });
+                    }
+                    if let Some(v) = s.get("shed_rate").and_then(|v| v.as_f64()) {
+                        out.push(Metric {
+                            name: format!("{tag}.shed_rate"),
+                            value: v,
+                            dir: Direction::Lower,
+                        });
+                    }
+                }
+            }
+            if let Some(rungs) = doc.get("rungs").and_then(|r| r.as_arr()) {
+                for r in rungs {
+                    let Some(bits) = r.get("bits").and_then(|b| b.as_f64()) else { continue };
+                    let tag = format!("rung{bits}");
+                    if let Some(v) = r.get("top1_agreement_fp32").and_then(|v| v.as_f64()) {
+                        out.push(Metric {
+                            name: format!("{tag}.top1_agreement_fp32"),
+                            value: v,
+                            dir: Direction::Higher,
+                        });
+                    }
+                    if let Some(v) = r.get("mean_server_us").and_then(|v| v.as_f64()) {
+                        out.push(Metric {
+                            name: format!("{tag}.mean_server_us"),
+                            value: v,
+                            dir: Direction::Lower,
+                        });
+                    }
+                }
+            }
+        }
+        other => return Err(format!("unknown bench schema {other:?} (declared {schema:?})")),
+    }
+    Ok((schema, out))
+}
+
+/// Compare a baseline metric set against a current one.
+pub fn compare(base: &[Metric], cur: &[Metric], threshold: f64) -> Vec<Delta> {
+    let mut out = Vec::new();
+    for b in base {
+        match cur.iter().find(|c| c.name == b.name) {
+            Some(c) => {
+                let (delta_pct, verdict) = judge(&b.name, b.dir, b.value, c.value, threshold);
+                out.push(Delta {
+                    name: b.name.clone(),
+                    base: Some(b.value),
+                    cur: Some(c.value),
+                    delta_pct,
+                    verdict,
+                });
+            }
+            None => out.push(Delta {
+                name: b.name.clone(),
+                base: Some(b.value),
+                cur: None,
+                delta_pct: None,
+                verdict: Verdict::Info,
+            }),
+        }
+    }
+    for c in cur {
+        if !base.iter().any(|b| b.name == c.name) {
+            out.push(Delta {
+                name: c.name.clone(),
+                base: None,
+                cur: Some(c.value),
+                delta_pct: None,
+                verdict: Verdict::Info,
+            });
+        }
+    }
+    out
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v}")
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// One compared artifact family.
+#[derive(Clone, Debug)]
+pub struct FamilyReport {
+    /// Schema family name (`pdq-serving`).
+    pub family: String,
+    /// Baseline file path.
+    pub base_path: String,
+    /// Current file path.
+    pub cur_path: String,
+    /// Per-metric rows.
+    pub deltas: Vec<Delta>,
+}
+
+/// The full report: every family plus the flattened regression list.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    /// Per-family comparisons (input order).
+    pub families: Vec<FamilyReport>,
+    /// Files that had no partner to compare against.
+    pub unpaired: Vec<String>,
+    /// `family/metric` names that regressed.
+    pub regressions: Vec<String>,
+    /// The relative threshold used.
+    pub threshold: f64,
+}
+
+impl PerfReport {
+    /// Render the `PERF_REPORT.md` document.
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::new();
+        let _ = writeln!(md, "# PDQ perf report\n");
+        let _ = writeln!(
+            md,
+            "Generated by `pdq perf-report`. Regression threshold: ±{:.1}% \
+             (plus per-unit noise floors).\n",
+            self.threshold * 100.0
+        );
+        if self.regressions.is_empty() {
+            let _ = writeln!(md, "**No regressions detected.**\n");
+        } else {
+            let _ = writeln!(md, "**{} regression(s) detected:**\n", self.regressions.len());
+            for r in &self.regressions {
+                let _ = writeln!(md, "- `{r}`");
+            }
+            let _ = writeln!(md);
+        }
+        for fam in &self.families {
+            let _ = writeln!(md, "## {}: `{}` → `{}`\n", fam.family, fam.base_path, fam.cur_path);
+            let _ = writeln!(md, "| metric | baseline | current | Δ | verdict |");
+            let _ = writeln!(md, "|---|---:|---:|---:|---|");
+            for d in &fam.deltas {
+                let base = d.base.map(fmt_num).unwrap_or_else(|| "—".into());
+                let cur = d.cur.map(fmt_num).unwrap_or_else(|| "—".into());
+                let pct = d
+                    .delta_pct
+                    .map(|p| format!("{}{:.1}%", if p >= 0.0 { "+" } else { "" }, p))
+                    .unwrap_or_else(|| "—".into());
+                let _ = writeln!(md, "| {} | {base} | {cur} | {pct} | {} |", d.name, d.verdict.as_str());
+            }
+            let _ = writeln!(md);
+        }
+        if !self.unpaired.is_empty() {
+            let _ = writeln!(md, "## Unpaired artifacts\n");
+            let _ = writeln!(md, "No baseline/current partner in this invocation:\n");
+            for p in &self.unpaired {
+                let _ = writeln!(md, "- `{p}`");
+            }
+            let _ = writeln!(md);
+        }
+        md
+    }
+
+    /// Whether anything regressed.
+    pub fn regressed(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+/// Build the report from `(path, parsed artifact)` pairs, in input order.
+/// Within each schema family the first file is the baseline, the last the
+/// current; middles are ignored (trajectory runs pass pairs).
+pub fn build_report(docs: &[(String, Json)], threshold: f64) -> Result<PerfReport, String> {
+    if docs.len() < 2 {
+        return Err(format!("need at least two artifacts, got {}", docs.len()));
+    }
+    // (family, path, metrics) in input order.
+    let mut parsed: Vec<(String, String, Vec<Metric>)> = Vec::new();
+    for (path, doc) in docs {
+        let (schema, metrics) =
+            extract_metrics(doc).map_err(|e| format!("{path}: {e}"))?;
+        parsed.push((schema_family(&schema), path.clone(), metrics));
+    }
+    let mut families: Vec<FamilyReport> = Vec::new();
+    let mut unpaired = Vec::new();
+    let mut regressions = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
+    for (family, _, _) in &parsed {
+        if seen.iter().any(|s| s == family) {
+            continue;
+        }
+        seen.push(family.clone());
+        let members: Vec<&(String, String, Vec<Metric>)> =
+            parsed.iter().filter(|(f, _, _)| f == family).collect();
+        if members.len() < 2 {
+            unpaired.push(members[0].1.clone());
+            continue;
+        }
+        let (_, base_path, base) = members[0];
+        let (_, cur_path, cur) = members[members.len() - 1];
+        let deltas = compare(base, cur, threshold);
+        for d in &deltas {
+            if d.verdict == Verdict::Regressed {
+                regressions.push(format!("{family}/{}", d.name));
+            }
+        }
+        families.push(FamilyReport {
+            family: family.clone(),
+            base_path: base_path.clone(),
+            cur_path: cur_path.clone(),
+            deltas,
+        });
+    }
+    Ok(PerfReport { families, unpaired, regressions, threshold })
+}
+
+/// Read, parse and compare artifact files — the `pdq perf-report` core.
+pub fn perf_report_files(paths: &[String], threshold: f64) -> Result<PerfReport, String> {
+    let mut docs = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("{p}: {e}"))?;
+        docs.push((p.clone(), doc));
+    }
+    build_report(&docs, threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serving_doc(p99: f64, dropped: f64, rps: f64) -> Json {
+        let mut agg = Json::obj();
+        agg.set("mean_us", p99 * 0.5)
+            .set("p50_us", p99 * 0.4)
+            .set("p95_us", p99 * 0.9)
+            .set("p99_us", p99)
+            .set("dropped", dropped)
+            .set("failed", 0.0)
+            .set("reject_rate", 0.01);
+        let mut o = Json::obj();
+        o.set("schema", "pdq-serving-v1").set("achieved_rps", rps).set("aggregate", agg);
+        o
+    }
+
+    #[test]
+    fn schema_family_strips_version() {
+        assert_eq!(schema_family("pdq-serving-v2"), "pdq-serving");
+        assert_eq!(schema_family("pdq-bench-v1"), "pdq-bench");
+        assert_eq!(schema_family("weird"), "weird");
+        assert_eq!(schema_family("pdq-v"), "pdq-v");
+    }
+
+    #[test]
+    fn clean_runs_produce_no_regressions() {
+        let docs = vec![
+            ("base.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("cur.json".to_string(), serving_doc(4100.0, 0.0, 810.0)),
+        ];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert!(!rep.regressed(), "{:?}", rep.regressions);
+        let md = rep.to_markdown();
+        assert!(md.contains("No regressions"));
+        assert!(md.contains("aggregate.p99_us"));
+    }
+
+    #[test]
+    fn injected_regression_is_detected() {
+        let docs = vec![
+            ("base.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("cur.json".to_string(), serving_doc(9000.0, 0.0, 790.0)),
+        ];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert!(rep.regressed());
+        assert!(rep.regressions.iter().any(|r| r == "pdq-serving/aggregate.p99_us"));
+        assert!(rep.to_markdown().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn drops_from_zero_regress_and_throughput_direction_holds() {
+        let docs = vec![
+            ("base.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("cur.json".to_string(), serving_doc(4000.0, 12.0, 400.0)),
+        ];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert!(rep.regressions.iter().any(|r| r == "pdq-serving/aggregate.dropped"));
+        assert!(rep.regressions.iter().any(|r| r == "pdq-serving/achieved_rps"));
+    }
+
+    #[test]
+    fn v1_baseline_compares_against_v2_current() {
+        let mut v2 = serving_doc(4000.0, 0.0, 800.0);
+        v2.set("schema", "pdq-serving-v2").set("stages", Json::obj());
+        let docs = vec![
+            ("base.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("cur.json".to_string(), v2),
+        ];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert_eq!(rep.families.len(), 1);
+        assert!(!rep.regressed());
+    }
+
+    #[test]
+    fn bench_schema_and_noise_floor() {
+        let mk = |mean: f64| {
+            let mut b = Json::obj();
+            b.set("name", "hotpath").set("mean_ns", mean).set("p95_ns", mean * 1.2);
+            let mut d = Json::obj();
+            d.set("speedup_vs_naive", 3.0);
+            let mut o = Json::obj();
+            o.set("schema", "pdq-bench-v1")
+                .set("benchmarks", Json::Arr(vec![b]))
+                .set("derived", d);
+            o
+        };
+        // +25% but only 10 ns: under the 50 ns floor → ok.
+        let docs =
+            vec![("a.json".to_string(), mk(40.0)), ("b.json".to_string(), mk(50.0))];
+        assert!(!build_report(&docs, 0.10).unwrap().regressed());
+        // +25% and 25 µs-scale: over the floor → regressed.
+        let docs =
+            vec![("a.json".to_string(), mk(100_000.0)), ("b.json".to_string(), mk(125_000.0))];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert!(rep.regressions.iter().any(|r| r.contains("hotpath.mean_ns")));
+    }
+
+    #[test]
+    fn unpaired_and_too_few_inputs() {
+        assert!(build_report(&[("x".into(), serving_doc(1.0, 0.0, 1.0))], 0.1).is_err());
+        let mut bench = Json::obj();
+        bench.set("schema", "pdq-bench-v1").set("benchmarks", Json::Arr(vec![]));
+        let docs = vec![
+            ("a.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("b.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("c.json".to_string(), bench),
+        ];
+        let rep = build_report(&docs, 0.10).unwrap();
+        assert_eq!(rep.unpaired, vec!["c.json".to_string()]);
+        assert!(rep.to_markdown().contains("Unpaired"));
+    }
+}

@@ -1,0 +1,434 @@
+//! Request tracing: trace IDs, stage spans, and the shared per-request
+//! trace handle threaded through the serving stack.
+//!
+//! A trace is born at the front door — the ID is either accepted from the
+//! client (`X-PDQ-Trace` header or the wire preamble's `trace` field) or
+//! minted fresh — and follows the request through the fixed stage
+//! pipeline:
+//!
+//! ```text
+//!  accept → parse → admit → queue → batch → execute → requantize → serialize
+//! ```
+//!
+//! Each stage records a [`Span`] with microsecond offsets relative to the
+//! trace epoch (the instant the request was fully read off the socket),
+//! so spans are orderable and non-overlapping by construction. The int8
+//! backend additionally contributes per-node kernel spans
+//! ([`crate::engine::KernelTrace`]) nested inside the execute stage.
+//!
+//! The handle is an `Arc<Mutex<...>>` cell: the connection handler and the
+//! worker thread both write into it, and the handler snapshots it into an
+//! immutable [`Trace`] for the flight recorder once the response is
+//! serialized. When tracing is disarmed the serving path carries
+//! `Option<TraceHandle> = None` — one pointer-sized field, no allocation,
+//! no clock reads beyond what the metrics already take.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::engine::KernelSpan;
+use crate::util::json::Json;
+
+/// The fixed stage pipeline a request moves through, in order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Reading the request off the socket (head + body).
+    Accept,
+    /// Decoding the wire body (preamble JSON + tensor payload).
+    Parse,
+    /// Admission: brownout ladder walk + depth-bounded permit acquire.
+    Admit,
+    /// Enqueued in the variant's channel, waiting for a worker.
+    Queue,
+    /// Batch close to this request's execution start (includes session
+    /// checkout and earlier items in the same batch).
+    Batch,
+    /// The kernels: the session's forward pass.
+    Execute,
+    /// Requantizing/dequantizing outputs back to f32 (int8 backends;
+    /// zero-length elsewhere).
+    Requantize,
+    /// Encoding the response preamble + tensor payload.
+    Serialize,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; 8] = [
+        Stage::Accept,
+        Stage::Parse,
+        Stage::Admit,
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Execute,
+        Stage::Requantize,
+        Stage::Serialize,
+    ];
+
+    /// Stable lowercase label (Prometheus `stage` label, JSON field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Execute => "execute",
+            Stage::Requantize => "requantize",
+            Stage::Serialize => "serialize",
+        }
+    }
+
+    /// Index into [`Stage::ALL`] (dense arrays in the metrics).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// A 64-bit trace identifier, rendered as 16 lowercase hex digits.
+///
+/// Zero is reserved as "absent" and never minted or parsed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TraceId(u64);
+
+/// splitmix64 — a cheap full-period mixer for ID minting.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl TraceId {
+    /// Mint a fresh process-unique ID: a wall-clock seed (taken once) mixed
+    /// with an atomic counter, so IDs are unique within a process and
+    /// overwhelmingly unlikely to collide across restarts.
+    pub fn mint() -> TraceId {
+        static SEED: OnceLock<u64> = OnceLock::new();
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let seed = *SEED.get_or_init(|| {
+            SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0x5EED_0BAD_C0FF_EE00)
+        });
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let id = splitmix64(seed ^ n.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        TraceId(if id == 0 { 1 } else { id })
+    }
+
+    /// Parse a client-supplied ID: 1–16 ASCII hex digits, any case,
+    /// nonzero. Anything else — empty, too long, stray characters,
+    /// all-zero — is rejected (the caller mints instead). Never panics:
+    /// this is the `X-PDQ-Trace` attack surface.
+    pub fn parse(s: &str) -> Option<TraceId> {
+        let s = s.trim();
+        if s.is_empty() || s.len() > 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        match u64::from_str_radix(s, 16) {
+            Ok(0) | Err(_) => None,
+            Ok(v) => Some(TraceId(v)),
+        }
+    }
+
+    /// The raw 64-bit value (wire preamble field).
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+
+    /// Wrap a raw nonzero value (wire preamble decode); `None` for 0.
+    pub fn from_u64(v: u64) -> Option<TraceId> {
+        if v == 0 {
+            None
+        } else {
+            Some(TraceId(v))
+        }
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// One stage's wall-clock window, in microseconds relative to the trace
+/// epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Which pipeline stage this span covers.
+    pub stage: Stage,
+    /// Start offset from the trace epoch, µs.
+    pub start_us: f64,
+    /// End offset from the trace epoch, µs (`>= start_us`).
+    pub end_us: f64,
+}
+
+impl Span {
+    /// The span's duration in microseconds.
+    pub fn us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// How the traced request ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Answered at the variant's native precision.
+    Ok,
+    /// Rejected by admission (429) or drain (503) before reaching a worker.
+    Shed,
+    /// Answered, but at a brownout-degraded precision rung.
+    Degraded,
+    /// The engine returned a typed error (or the request was malformed).
+    Error,
+    /// The response deadline expired before the worker answered (504).
+    Timeout,
+}
+
+impl TraceOutcome {
+    /// Stable lowercase label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceOutcome::Ok => "ok",
+            TraceOutcome::Shed => "shed",
+            TraceOutcome::Degraded => "degraded",
+            TraceOutcome::Error => "error",
+            TraceOutcome::Timeout => "timeout",
+        }
+    }
+}
+
+/// An immutable, completed trace — what the flight recorder stores and
+/// `GET /v1/traces` serves.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// The trace ID (echoed to the client).
+    pub id: TraceId,
+    /// Wire name of the variant that served (or would have served) it.
+    pub variant: String,
+    /// Client-supplied request ID from the wire preamble.
+    pub request_id: u64,
+    /// Precision rung the request was served at (0 = fp32 / not served).
+    pub bits: u32,
+    /// How the request ended.
+    pub outcome: TraceOutcome,
+    /// Stage spans in pipeline order (stages that never ran are absent).
+    pub spans: Vec<Span>,
+    /// Per-node kernel spans (int8 variants only), nested inside execute.
+    pub kernel: Vec<KernelSpan>,
+    /// End-to-end duration from trace epoch to serialize end, µs.
+    pub total_us: f64,
+}
+
+impl Trace {
+    /// JSON form served by `/v1/traces`.
+    pub fn to_json(&self) -> Json {
+        let mut spans = Vec::with_capacity(self.spans.len());
+        for s in &self.spans {
+            let mut o = Json::obj();
+            o.set("stage", s.stage.as_str())
+                .set("start_us", s.start_us)
+                .set("end_us", s.end_us)
+                .set("us", s.us());
+            spans.push(o);
+        }
+        let mut kernel = Vec::with_capacity(self.kernel.len());
+        for k in &self.kernel {
+            let mut o = Json::obj();
+            o.set("node", k.node).set("op", k.op).set("us", k.us);
+            kernel.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("id", self.id.to_string())
+            .set("variant", self.variant.as_str())
+            .set("request_id", self.request_id)
+            .set("bits", self.bits as u64)
+            .set("outcome", self.outcome.as_str())
+            .set("total_us", self.total_us)
+            .set("spans", Json::Arr(spans))
+            .set("kernel_spans", Json::Arr(kernel));
+        j
+    }
+}
+
+/// The mutable trace under construction, shared between the connection
+/// handler and the worker thread.
+#[derive(Debug)]
+struct TraceBody {
+    id: TraceId,
+    variant: String,
+    request_id: u64,
+    bits: u32,
+    outcome: TraceOutcome,
+    spans: Vec<Span>,
+    kernel: Vec<KernelSpan>,
+}
+
+/// A cloneable handle to one in-flight trace (cheap `Arc` clone; the
+/// request carries one copy to the worker, the handler keeps another).
+#[derive(Clone, Debug)]
+pub struct TraceHandle {
+    t0: Instant,
+    body: Arc<Mutex<TraceBody>>,
+}
+
+impl TraceHandle {
+    /// Open a trace with epoch `t0` (the instant the request was fully
+    /// read — every span offset is relative to it).
+    pub fn new(id: TraceId, t0: Instant) -> TraceHandle {
+        TraceHandle {
+            t0,
+            body: Arc::new(Mutex::new(TraceBody {
+                id,
+                variant: String::new(),
+                request_id: 0,
+                bits: 0,
+                outcome: TraceOutcome::Ok,
+                spans: Vec::with_capacity(Stage::ALL.len()),
+                kernel: Vec::new(),
+            })),
+        }
+    }
+
+    /// The trace's ID.
+    pub fn id(&self) -> TraceId {
+        self.body.lock().unwrap().id
+    }
+
+    /// The trace epoch every span offset is relative to.
+    pub fn epoch(&self) -> Instant {
+        self.t0
+    }
+
+    /// Attach the request identity once parsing has revealed it.
+    pub fn set_request(&self, variant: &str, request_id: u64) {
+        let mut b = self.body.lock().unwrap();
+        b.variant = variant.to_string();
+        b.request_id = request_id;
+    }
+
+    /// Record the served precision rung.
+    pub fn set_bits(&self, bits: u32) {
+        self.body.lock().unwrap().bits = bits;
+    }
+
+    /// Record how the request ended.
+    pub fn set_outcome(&self, outcome: TraceOutcome) {
+        self.body.lock().unwrap().outcome = outcome;
+    }
+
+    /// Record one stage's window. Instants earlier than the epoch clamp
+    /// to offset 0 (the accept span's read loop starts before the epoch
+    /// is pinned).
+    pub fn span(&self, stage: Stage, start: Instant, end: Instant) {
+        let s = start.saturating_duration_since(self.t0).as_secs_f64() * 1e6;
+        let e = end.saturating_duration_since(self.t0).as_secs_f64() * 1e6;
+        let mut b = self.body.lock().unwrap();
+        b.spans.push(Span { stage, start_us: s, end_us: e.max(s) });
+    }
+
+    /// Record a stage as an explicit `[start, start + us]` window.
+    pub fn span_us(&self, stage: Stage, start: Instant, us: f64) {
+        let s = start.saturating_duration_since(self.t0).as_secs_f64() * 1e6;
+        let mut b = self.body.lock().unwrap();
+        b.spans.push(Span { stage, start_us: s, end_us: s + us.max(0.0) });
+    }
+
+    /// Attach per-node kernel spans (the int8 execute stage's interior).
+    pub fn set_kernel_spans(&self, spans: &[KernelSpan]) {
+        let mut b = self.body.lock().unwrap();
+        b.kernel.clear();
+        b.kernel.extend_from_slice(spans);
+    }
+
+    /// Snapshot into an immutable [`Trace`], stamping the total duration
+    /// (epoch → `end`). Spans are sorted into pipeline order.
+    pub fn finish(&self, end: Instant) -> Trace {
+        let total_us = end.saturating_duration_since(self.t0).as_secs_f64() * 1e6;
+        let b = self.body.lock().unwrap();
+        let mut spans = b.spans.clone();
+        spans.sort_by(|a, c| {
+            a.stage.index().cmp(&c.stage.index()).then(
+                a.start_us.partial_cmp(&c.start_us).unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        Trace {
+            id: b.id,
+            variant: b.variant.clone(),
+            request_id: b.request_id,
+            bits: b.bits,
+            outcome: b.outcome,
+            spans,
+            kernel: b.kernel.clone(),
+            total_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn mint_is_unique_and_nonzero() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert_ne!(a, b);
+        assert_ne!(a.as_u64(), 0);
+    }
+
+    #[test]
+    fn parse_accepts_hex_and_roundtrips() {
+        let id = TraceId::parse("00DEADBEEF").unwrap();
+        assert_eq!(id.as_u64(), 0xDEAD_BEEF);
+        // Canonical rendering reparses to the same ID.
+        assert_eq!(TraceId::parse(&id.to_string()), Some(id));
+        assert_eq!(id.to_string().len(), 16);
+        // Short IDs are accepted.
+        assert_eq!(TraceId::parse("7").unwrap().as_u64(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_hostile_shapes() {
+        for bad in ["", "0", "00000000000000000", "xyz", "12 34", "0x12", "-1", "１２"] {
+            assert!(TraceId::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+        // 17 hex digits: too long even though each digit is valid.
+        assert!(TraceId::parse("11111111111111111").is_none());
+    }
+
+    #[test]
+    fn handle_records_ordered_spans_and_finishes() {
+        let t0 = Instant::now();
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        h.set_request("m|fp32", 42);
+        // Record out of pipeline order; finish() sorts.
+        h.span(Stage::Queue, t0 + Duration::from_micros(30), t0 + Duration::from_micros(50));
+        h.span(Stage::Parse, t0, t0 + Duration::from_micros(10));
+        h.set_bits(8);
+        let tr = h.finish(t0 + Duration::from_micros(100));
+        assert_eq!(tr.request_id, 42);
+        assert_eq!(tr.spans[0].stage, Stage::Parse);
+        assert_eq!(tr.spans[1].stage, Stage::Queue);
+        assert!(tr.total_us >= 99.0);
+        let j = tr.to_json();
+        assert_eq!(j.get("variant").and_then(|v| v.as_str()), Some("m|fp32"));
+        assert_eq!(j.get("spans").and_then(|s| s.as_arr()).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn pre_epoch_instants_clamp_to_zero() {
+        let early = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        let t0 = Instant::now();
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        h.span(Stage::Accept, early, t0);
+        let tr = h.finish(t0);
+        assert_eq!(tr.spans[0].start_us, 0.0);
+        assert_eq!(tr.spans[0].end_us, 0.0);
+    }
+}

@@ -11,7 +11,8 @@
 //!   penetrate far deeper than pure byte noise.
 //! - **Targets** — one per parser: [`target_http_request`],
 //!   [`target_wire_preamble`], [`target_variant_wire`], [`target_json`],
-//!   [`target_shape`]. A target panics on any violated invariant; merely
+//!   [`target_shape`], [`target_trace_header`]. A target panics on any
+//!   violated invariant; merely
 //!   returning an error is the *correct* response to hostile input.
 //!   Where possible the target is differential: the HTTP target parses
 //!   every input twice — one whole read vs. randomly stuttered reads
@@ -40,6 +41,7 @@ use crate::net::http::{ReadOutcome, RequestReader};
 use crate::net::wire;
 use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
 use crate::nn::{Graph, Int8Executor, QuantMode};
+use crate::obs::TraceId;
 use crate::quant::Granularity;
 use crate::tensor::{ConvGeom, Shape, Tensor};
 use crate::util::json::Json;
@@ -298,6 +300,52 @@ pub fn gen_shape_dims(rng: &mut Pcg32) -> Vec<u8> {
         out.extend_from_slice(&v.to_bits().to_le_bytes());
     }
     out
+}
+
+/// `X-PDQ-Trace` header values: well-formed hex IDs plus the hostile
+/// neighborhood — zero, overlong, padded, uppercase, non-hex, non-UTF-8
+/// (the mutation layer adds raw byte damage on top).
+pub fn gen_trace_header(rng: &mut Pcg32) -> Vec<u8> {
+    match rng.below(6) {
+        // A genuine minted ID, round-trip bait.
+        0 => format!("{:016x}", rng.next_u64() | 1).into_bytes(),
+        // Short / long hex runs straddling the 1..=16 length bound.
+        1 => "f".repeat(1 + rng.below(24) as usize).into_bytes(),
+        // All-zero (reserved, must be rejected) at assorted widths.
+        2 => "0".repeat(1 + rng.below(20) as usize).into_bytes(),
+        // Whitespace-padded and case-mixed.
+        3 => format!("  {:X}\t", rng.next_u64()).into_bytes(),
+        // Plausible-looking junk.
+        4 => (*rng.choice(&[
+            "deadbeef",
+            "0x1234",
+            "not-hex!",
+            "1234567890abcdef0",
+            "",
+            "-1",
+            "café",
+            "1e10",
+        ]))
+        .to_string()
+        .into_bytes(),
+        // Raw bytes, frequently invalid UTF-8.
+        _ => (0..rng.below(20)).map(|_| rng.next_u32() as u8).collect(),
+    }
+}
+
+/// `TraceId::parse` must never panic, must reject zero, and any value it
+/// accepts must survive a format → parse round trip unchanged — the
+/// invariant that keeps a client-supplied `X-PDQ-Trace` queryable via
+/// `GET /v1/traces?id=` exactly as echoed.
+pub fn target_trace_header(data: &[u8]) {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    if let Some(id) = TraceId::parse(s) {
+        assert_ne!(id.as_u64(), 0, "zero is reserved and must never parse");
+        let printed = id.to_string();
+        let back = TraceId::parse(&printed).expect("canonical form must reparse");
+        assert_eq!(back, id, "trace ID drifted through format -> parse");
+        assert_eq!(printed.len(), 16, "canonical form is fixed-width hex");
+    }
 }
 
 // ---- byte-level targets ----------------------------------------------------
@@ -635,6 +683,7 @@ mod tests {
         run_bytes(0xF022_0003, 150, gen_variant_wire, target_variant_wire);
         run_bytes(0xF022_0004, 150, gen_json, target_json);
         run_bytes(0xF022_0005, 150, gen_shape_dims, target_shape);
+        run_bytes(0xF022_0009, 150, gen_trace_header, target_trace_header);
     }
 
     #[test]

@@ -40,6 +40,11 @@ fn fuzz_boundary_shapes() {
 }
 
 #[test]
+fn fuzz_trace_header_parsing() {
+    fuzz::run_bytes(0x5EED_0008, ITERS, fuzz::gen_trace_header, fuzz::target_trace_header);
+}
+
+#[test]
 fn fuzz_int8_kernels_differential() {
     fuzz::diff_int8_kernels(0x5EED_0006, ITERS);
 }

@@ -1,0 +1,325 @@
+//! Flight-recorder end-to-end tests: request tracing over real sockets.
+//!
+//! What is proven here:
+//! 1. an armed front door echoes a client-supplied `X-PDQ-Trace` ID and
+//!    `GET /v1/traces?id=` returns the full stage breakdown — accept →
+//!    parse → admit → queue → batch → execute → serialize — with
+//!    per-node kernel spans on an int8 variant, spans in pipeline order,
+//!    and the stage sum bounded by the end-to-end total;
+//! 2. the trace ID also rides the binary wire preamble (the `"trace"`
+//!    field) both directions, for clients that can't set headers;
+//! 3. with tracing disarmed (the default), responses are bit-identical
+//!    to an armed server's, carry no trace field or header, and
+//!    `/v1/traces` is 404 — tracing is observably zero-cost when off;
+//! 4. a malformed body on an armed server still leaves an anomalous
+//!    trace behind (outcome `error`), so hostile traffic is on record.
+//!
+//! Ring-eviction behavior (anomalies survive wrap-around) is unit-tested
+//! in `pdq::obs::recorder`; `X-PDQ-Trace` parsing is fuzzed in
+//! `rust/tests/fuzz_smoke.rs`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pdq::coordinator::{Server, ServerConfig};
+use pdq::engine::{Engine, Int8Engine, QuantEngine, VariantKey, VariantSpec};
+use pdq::net::wire::{self, Client, InferOutcome};
+use pdq::net::{FrontDoor, FrontDoorConfig};
+use pdq::nn::int8_exec::Int8Executor;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{Graph, QuantMode};
+use pdq::obs::TraceId;
+use pdq::quant::Granularity;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::json::Json;
+use pdq::util::Pcg32;
+
+const HW: usize = 8;
+const CIN: usize = 2;
+
+/// conv(2→4, 3x3) → relu → gap, input 8×8×2; weights seeded, so two
+/// builds (armed server, disarmed server) are bit-identical engines.
+fn test_graph() -> Arc<Graph> {
+    let mut rng = Pcg32::new(0xF00D);
+    let mut g = Graph::new(Shape::hwc(HW, HW, CIN));
+    let x = g.input();
+    let w: Vec<f32> = (0..4 * 9 * CIN).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+    let c = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(4, 3, 3, CIN), w),
+        vec![0.05, -0.05, 0.0, 0.1],
+        ConvGeom::same(3, 1),
+    );
+    let r = g.relu(c);
+    let p = g.global_avg_pool(r);
+    g.mark_output(p);
+    Arc::new(g)
+}
+
+fn calib_images() -> Vec<Tensor<f32>> {
+    let mut rng = Pcg32::new(0xCA11);
+    (0..8)
+        .map(|_| {
+            let d: Vec<f32> = (0..HW * HW * CIN).map(|_| rng.uniform()).collect();
+            Tensor::from_vec(Shape::hwc(HW, HW, CIN), d)
+        })
+        .collect()
+}
+
+fn build_variant(spec: &VariantSpec) -> (VariantKey, Arc<dyn Engine>) {
+    let key = VariantKey::new("t", *spec);
+    let graph = test_graph();
+    let engine: Arc<dyn Engine> = match *spec {
+        VariantSpec::Fp32 => Arc::new(pdq::engine::FloatEngine::new(graph)),
+        VariantSpec::FakeQuant { mode, gran } => {
+            let mut ex = QuantExecutor::new(
+                graph,
+                QuantSettings { mode, granularity: gran, ..Default::default() },
+            );
+            ex.calibrate(&calib_images());
+            Arc::new(QuantEngine::new(Arc::new(ex)))
+        }
+        VariantSpec::Int8 { mode, weight_gran, bits: _ } => {
+            let mut ex = QuantExecutor::new(
+                graph,
+                QuantSettings { mode, granularity: Granularity::PerTensor, ..Default::default() },
+            );
+            ex.calibrate(&calib_images());
+            Arc::new(Int8Engine::new(Arc::new(
+                Int8Executor::lower(&ex, weight_gran).expect("lowering"),
+            )))
+        }
+    };
+    (key, engine)
+}
+
+fn int8_key() -> VariantKey {
+    VariantKey::new(
+        "t",
+        VariantSpec::Int8 {
+            mode: QuantMode::Probabilistic,
+            weight_gran: Granularity::PerTensor,
+            bits: 8,
+        },
+    )
+}
+
+fn start_front_door(trace: bool) -> (FrontDoor, String) {
+    let variants: Vec<(VariantKey, Arc<dyn Engine>)> =
+        [VariantSpec::Fp32, int8_key().spec].iter().map(build_variant).collect();
+    let server = Arc::new(Server::start(variants, ServerConfig::default()));
+    let fd = FrontDoor::start(server, FrontDoorConfig { trace, ..Default::default() })
+        .expect("bind ephemeral port");
+    let addr = fd.local_addr().to_string();
+    (fd, addr)
+}
+
+/// One raw HTTP/1.1 POST with an extra header — [`Client`] doesn't do
+/// custom headers, and the `X-PDQ-Trace` precedence path needs one.
+fn post_with_header(
+    addr: &str,
+    path: &str,
+    header: (&str, &str),
+    body: &[u8],
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\n{}: {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        header.0,
+        header.1,
+        wire::TENSOR_CONTENT_TYPE,
+        body.len(),
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("header terminator");
+    let head = std::str::from_utf8(&raw[..split]).expect("ascii head");
+    let mut lines = head.split("\r\n");
+    let status: u16 =
+        lines.next().unwrap().split_whitespace().nth(1).unwrap().parse().unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    (status, headers, raw[split + 4..].to_vec())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn bits(t: &Tensor<f32>) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance: client-supplied `X-PDQ-Trace` is echoed, and the recorder
+/// serves the full span breakdown — kernel spans included — for an int8
+/// request.
+#[test]
+fn traced_http_request_records_full_span_breakdown() {
+    let (fd, addr) = start_front_door(true);
+    let key = int8_key();
+    let img = calib_images().remove(0);
+    let id = "00000000deadbeef";
+
+    let body = wire::encode_infer_request(&key, 7, &img);
+    let (status, headers, resp_body) =
+        post_with_header(&addr, "/v1/infer", ("X-PDQ-Trace", id), &body);
+    assert_eq!(status, 200);
+    assert_eq!(header(&headers, "x-pdq-trace"), Some(id), "header ID echoed verbatim");
+    let resp = wire::decode_infer_response(&resp_body).expect("decode");
+    assert_eq!(resp.trace.map(|t| t.to_string()).as_deref(), Some(id), "preamble echo too");
+
+    let mut client = Client::new(&addr);
+    let parts = client.get(&format!("/v1/traces?id={id}")).unwrap();
+    assert_eq!(parts.status, 200);
+    let j = Json::parse(std::str::from_utf8(&parts.body).unwrap()).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-traces-v1"));
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1, "the queried trace is on record");
+    let t = &traces[0];
+    assert_eq!(t.get("id").unwrap().as_str(), Some(id));
+    assert_eq!(t.get("variant").unwrap().as_str(), Some(key.wire().as_str()));
+    assert_eq!(t.get("request_id").unwrap().as_usize(), Some(7));
+    assert_eq!(t.get("outcome").unwrap().as_str(), Some("ok"));
+    assert_eq!(t.get("bits").unwrap().as_usize(), Some(8));
+
+    let spans = t.get("spans").unwrap().as_arr().unwrap();
+    let stages: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("stage").and_then(|v| v.as_str())).collect();
+    for want in ["accept", "parse", "admit", "queue", "batch", "execute", "serialize"] {
+        assert!(stages.contains(&want), "stage {want} missing from {stages:?}");
+    }
+    // Pipeline order, windows well-formed, and the per-stage sum can't
+    // exceed the end-to-end total (stages tile the request, they don't
+    // overlap it).
+    let total_us = t.get("total_us").unwrap().as_f64().unwrap();
+    let mut sum = 0.0;
+    let mut prev_start = -1.0;
+    for s in spans {
+        let start = s.get("start_us").unwrap().as_f64().unwrap();
+        let end = s.get("end_us").unwrap().as_f64().unwrap();
+        assert!(end >= start, "span window is well-formed");
+        assert!(start >= prev_start, "spans sorted by pipeline position");
+        prev_start = start;
+        sum += end - start;
+    }
+    assert!(total_us > 0.0);
+    assert!(
+        sum <= total_us * 1.05 + 50.0,
+        "stage sum {sum:.1}µs exceeds total {total_us:.1}µs"
+    );
+
+    let kernel = t.get("kernel_spans").unwrap().as_arr().unwrap();
+    assert!(!kernel.is_empty(), "int8 execution records per-node kernel spans");
+    for k in kernel {
+        assert!(k.get("op").unwrap().as_str().is_some());
+        assert!(k.get("us").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    fd.shutdown();
+}
+
+/// The trace ID rides the binary preamble both directions — no HTTP
+/// headers involved — and lands in the recorder under that ID.
+#[test]
+fn wire_preamble_trace_round_trips_over_socket() {
+    let (fd, addr) = start_front_door(true);
+    let key = VariantKey::new("t", VariantSpec::Fp32);
+    let img = calib_images().remove(0);
+    let id = TraceId::parse("cafe").unwrap();
+
+    let body = wire::encode_infer_request_traced(&key, 11, &img, Some(id));
+    let mut client = Client::new(&addr);
+    let parts =
+        client.request("POST", "/v1/infer", wire::TENSOR_CONTENT_TYPE, &body).unwrap();
+    assert_eq!(parts.status, 200);
+    let resp = wire::decode_infer_response(&parts.body).expect("decode");
+    assert_eq!(resp.trace, Some(id), "preamble trace echoed");
+    assert_eq!(resp.id, 11);
+
+    let got = client.get(&format!("/v1/traces?id={id}")).unwrap();
+    let j = Json::parse(std::str::from_utf8(&got.body).unwrap()).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1);
+    assert_eq!(traces[0].get("request_id").unwrap().as_usize(), Some(11));
+
+    fd.shutdown();
+}
+
+/// Disarmed tracing (the default) is invisible on the wire and bit-exact:
+/// same outputs as an armed server, no trace field or header, /v1/traces
+/// is 404.
+#[test]
+fn disarmed_tracing_is_bit_identical_and_unqueryable() {
+    let (fd_on, addr_on) = start_front_door(true);
+    let (fd_off, addr_off) = start_front_door(false);
+    let key = int8_key();
+    let img = calib_images().remove(0);
+
+    let body = wire::encode_infer_request(&key, 3, &img);
+    let mut on = Client::new(&addr_on);
+    let mut off = Client::new(&addr_off);
+    let p_on = on.request("POST", "/v1/infer", wire::TENSOR_CONTENT_TYPE, &body).unwrap();
+    let p_off = off.request("POST", "/v1/infer", wire::TENSOR_CONTENT_TYPE, &body).unwrap();
+    assert_eq!(p_on.status, 200);
+    assert_eq!(p_off.status, 200);
+
+    let r_on = wire::decode_infer_response(&p_on.body).unwrap();
+    let r_off = wire::decode_infer_response(&p_off.body).unwrap();
+    assert!(r_on.trace.is_some(), "armed server mints and echoes an ID");
+    assert!(p_on.header("x-pdq-trace").is_some());
+    assert!(r_off.trace.is_none(), "disarmed response carries no trace field");
+    assert!(p_off.header("x-pdq-trace").is_none(), "nor the header");
+    assert_eq!(r_on.outputs.len(), r_off.outputs.len());
+    for (a, b) in r_on.outputs.iter().zip(&r_off.outputs) {
+        assert_eq!(bits(a), bits(b), "tracing must not perturb the numerics");
+    }
+
+    // Same deterministic request on the disarmed server again, through the
+    // typed client: outputs stay bit-stable run to run.
+    match off.post_infer(&key, 3, &img).unwrap() {
+        InferOutcome::Ok(r2) => assert_eq!(bits(&r2.outputs[0]), bits(&r_off.outputs[0])),
+        _ => panic!("unexpected non-OK outcome on an unloaded server"),
+    }
+
+    let missing = off.get("/v1/traces").unwrap();
+    assert_eq!(missing.status, 404, "recorder endpoint is dark when disarmed");
+    let armed = on.get("/v1/traces").unwrap();
+    assert_eq!(armed.status, 200);
+    let j = Json::parse(std::str::from_utf8(&armed.body).unwrap()).unwrap();
+    assert!(j.get("committed").unwrap().as_usize().unwrap() >= 1);
+
+    fd_on.shutdown();
+    fd_off.shutdown();
+}
+
+/// A malformed body on an armed server still leaves an anomalous trace
+/// behind — outcome `error`, found by the client-chosen ID.
+#[test]
+fn malformed_request_leaves_anomalous_trace() {
+    let (fd, addr) = start_front_door(true);
+    let id = "0000000000000bad";
+    let (status, _headers, _) =
+        post_with_header(&addr, "/v1/infer", ("X-PDQ-Trace", id), b"not a tensor frame");
+    // The 400 path commits the trace before the response is built; no echo
+    // header is promised there, but the trace must be queryable.
+    assert_eq!(status, 400);
+    let mut client = Client::new(&addr);
+    let parts = client.get(&format!("/v1/traces?id={id}")).unwrap();
+    let j = Json::parse(std::str::from_utf8(&parts.body).unwrap()).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1, "hostile traffic is on record");
+    assert_eq!(traces[0].get("outcome").unwrap().as_str(), Some("error"));
+    // Error outcomes are anomalous by definition: the anomaly ring holds it.
+    let all = client.get("/v1/traces").unwrap();
+    let j = Json::parse(std::str::from_utf8(&all.body).unwrap()).unwrap();
+    assert!(j.get("anomalies").unwrap().as_usize().unwrap() >= 1);
+
+    fd.shutdown();
+}

@@ -350,11 +350,15 @@ fn loadgen_closed_loop_zero_drops() {
     let path = std::env::temp_dir().join("pdq_bench_serving_test.json");
     report.save(path.to_str().unwrap()).unwrap();
     let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
-    assert_eq!(back.get("schema").unwrap().as_str(), Some("pdq-serving-v1"));
+    assert_eq!(back.get("schema").unwrap().as_str(), Some("pdq-serving-v2"));
     assert_eq!(
         back.get("aggregate").unwrap().get("dropped").unwrap().as_usize(),
         Some(0)
     );
+    // Tracing is disarmed on this server: v2 reports that honestly.
+    assert_eq!(back.get("aggregate").unwrap().get("traced").unwrap().as_usize(), Some(0));
+    // The post-run stage snapshot from /metrics rode along.
+    assert!(back.get("stages").is_some(), "stage attribution snapshot embedded");
     let _ = std::fs::remove_file(&path);
     let metrics = fd.shutdown();
     assert_eq!(metrics.responses() as u64, report.total.ok);
