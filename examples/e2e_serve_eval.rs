@@ -10,6 +10,11 @@
 //! 5. reports throughput/latency and the paper's accuracy metric per
 //!    variant.
 //!
+//! Without `make artifacts`, a packed `pdq-artifact-v1` on disk (e.g.
+//! `pdq pack --synthetic --out model.pdqa`) is preferred over rebuilding
+//! the synthetic demo in-process — the serve/eval loop then runs on the
+//! artifact's compiled tables, exercising the load path end to end.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serve_eval
 //! ```
@@ -27,8 +32,28 @@ use pdq::harness::eval_runner::score;
 use pdq::nn::{float_exec, QuantMode};
 use pdq::quant::Granularity;
 use pdq::runtime::Runtime;
+use pdq::artifact::ArtifactEngine;
 use pdq::util::cli::Args;
 use pdq::util::table::{fmt4, Table};
+
+/// The artifacts-free fallback prefers a packed artifact on disk over an
+/// in-process rebuild. A present-but-corrupt file is reported and skipped.
+fn packed_fallback(model_name: &str) -> Option<ArtifactEngine> {
+    let named = format!("{model_name}.pdqa");
+    for path in [named.as_str(), "model.pdqa", "demo.pdqa"] {
+        if !std::path::Path::new(path).exists() {
+            continue;
+        }
+        match ArtifactEngine::load(std::path::Path::new(path)) {
+            Ok(art) => {
+                eprintln!("artifacts/ not found — serving packed artifact {path}");
+                return Some(art);
+            }
+            Err(e) => eprintln!("ignoring packed artifact {path}: {e}"),
+        }
+    }
+    None
+}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,8 +62,17 @@ fn main() -> anyhow::Result<()> {
     let model_name = args.opt_or("model", "micro_resnet").to_string();
     let artifacts = std::path::Path::new("artifacts");
 
-    // --- (1) load the zoo (synthetic fallback without `make artifacts`) ----
-    let model = pdq::coordinator::calibrate::load_or_demo(artifacts, &model_name);
+    // --- (1) load the zoo (artifacts-free fallback: a packed artifact on
+    // disk first, then the synthetic demo model) ---------------------------
+    let packed = if artifacts.exists() { None } else { packed_fallback(&model_name) };
+    let built;
+    let model = match &packed {
+        Some(art) => art.model(),
+        None => {
+            built = pdq::coordinator::calibrate::load_or_demo(artifacts, &model_name);
+            &built
+        }
+    };
     println!("[1] loaded {} ({} params, task {})", model.name, model.graph.param_count(), model.task.name());
 
     // --- (2) PJRT cross-check (only when an HLO artifact exists) -----------
@@ -57,19 +91,52 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- (3) calibrate the three strategies --------------------------------
-    let calib = calibration_images(model.task, CALIB_SIZE);
-    let mut variants: Vec<(VariantKey, Arc<dyn Engine>)> =
-        vec![EngineBuilder::new(&model).calibration_images(&calib).build_variant()?];
+    // On the packed path the calibration already happened at pack time and
+    // rides in the artifact's tables; pull the same four cells from its
+    // menu instead of rebuilding them.
+    let mut wanted = vec![VariantSpec::Fp32];
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
-        variants.push(
-            EngineBuilder::new(&model)
-                .spec(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor })
-                .calibration_images(&calib)
-                .build_variant()?,
-        );
+        wanted.push(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor });
     }
+    let variants: Vec<(VariantKey, Arc<dyn Engine>)> = match &packed {
+        Some(art) => wanted
+            .iter()
+            .map(|spec| {
+                art.menu()
+                    .iter()
+                    .find(|(k, _)| &k.spec == spec)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("artifact lacks variant {}", spec.label()))
+            })
+            .collect::<Result<_, _>>()?,
+        None => {
+            let calib = calibration_images(model.task, CALIB_SIZE);
+            wanted
+                .iter()
+                .map(|spec| {
+                    EngineBuilder::new(model)
+                        .spec(*spec)
+                        .calibration_images(&calib)
+                        .build_variant()
+                        .map_err(anyhow::Error::from)
+                })
+                .collect::<Result<_, _>>()?
+        }
+    };
     let keys: Vec<VariantKey> = variants.iter().map(|(k, _)| k.clone()).collect();
-    println!("[3] calibrated {} variants on {} shared images", keys.len() - 1, CALIB_SIZE);
+    match &packed {
+        Some(art) => println!(
+            "[3] {} variants from packed tables ({} calib images at pack time, epoch {})",
+            keys.len() - 1,
+            art.manifest().calib_images,
+            art.manifest().epoch,
+        ),
+        None => println!(
+            "[3] calibrated {} variants on {} shared images",
+            keys.len() - 1,
+            CALIB_SIZE
+        ),
+    }
 
     // --- (4) serve a mixed stream -------------------------------------------
     let server = Server::start(variants, ServerConfig::default());

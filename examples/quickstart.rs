@@ -5,22 +5,60 @@
 //! under FP32 / static / dynamic / PDQ quantization — all through the same
 //! `Engine` trait.
 //!
+//! Without `make artifacts` the example still runs: it first looks for a
+//! packed `pdq-artifact-v1` on disk (what `pdq pack --synthetic` writes)
+//! and serves straight from its compiled tables, and only then falls back
+//! to building the synthetic demo model in-process.
+//!
 //! ```bash
 //! cargo run --release --example quickstart            # synthetic fallback
+//! pdq pack --synthetic --out model.pdqa && \
+//!   cargo run --release --example quickstart          # packed-artifact path
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use std::sync::Arc;
+
+use pdq::artifact::ArtifactEngine;
 use pdq::coordinator::calibrate::load_or_demo;
 use pdq::data::shapes::{self, Split};
-use pdq::engine::{EngineBuilder, VariantSpec};
+use pdq::engine::{Engine, EngineBuilder, Session, VariantSpec};
 use pdq::models::heads;
 use pdq::nn::QuantMode;
 use pdq::quant::Granularity;
 
+/// The artifacts-free fallback prefers a packed artifact on disk over an
+/// in-process rebuild, so the quickstart exercises the load path too. A
+/// present-but-corrupt file is reported and skipped, never a panic.
+fn packed_fallback() -> Option<ArtifactEngine> {
+    for path in ["micro_resnet.pdqa", "model.pdqa", "demo.pdqa"] {
+        if !std::path::Path::new(path).exists() {
+            continue;
+        }
+        match ArtifactEngine::load(std::path::Path::new(path)) {
+            Ok(art) => {
+                eprintln!("artifacts/ not found — serving packed artifact {path}");
+                return Some(art);
+            }
+            Err(e) => eprintln!("ignoring packed artifact {path}: {e}"),
+        }
+    }
+    None
+}
+
 fn main() -> anyhow::Result<()> {
-    // No `make artifacts`? load_or_demo falls back to the seeded synthetic
-    // demo model so the example (and CI) always runs.
-    let model = load_or_demo(std::path::Path::new("artifacts"), "micro_resnet");
+    // No `make artifacts`? Prefer a packed artifact (`pdq pack`'s output),
+    // then the seeded synthetic demo model, so the example always runs.
+    let aot = std::path::Path::new("artifacts");
+    let packed = if aot.exists() { None } else { packed_fallback() };
+    let built;
+    let model = match &packed {
+        Some(art) => art.model(),
+        None => {
+            built = load_or_demo(aot, "micro_resnet");
+            &built
+        }
+    };
     println!("loaded {} ({} params)", model.name, model.graph.param_count());
 
     // A test image.
@@ -29,13 +67,20 @@ fn main() -> anyhow::Result<()> {
     println!("test image: class {}", sample.class_id);
 
     // FP32 and the three requantization strategies of Fig. 1, all through
-    // the same Engine/Session abstraction: build → compile → run.
+    // the same Engine/Session abstraction: build → compile → run. On the
+    // packed path the engines come out of the artifact's menu instead of
+    // being rebuilt (its tables were calibrated at pack time).
     let mut specs = vec![VariantSpec::Fp32];
     for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
         specs.push(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor });
     }
     for spec in specs {
-        let engine = EngineBuilder::new(&model).spec(spec).build()?;
+        let engine: Arc<dyn Engine> = match &packed {
+            Some(art) => art
+                .engine(&spec)
+                .ok_or_else(|| anyhow::anyhow!("artifact lacks variant {}", spec.label()))?,
+            None => EngineBuilder::new(model).spec(spec).build()?,
+        };
         let mut session = engine.compile()?;
         let out = session.run(&img)?;
         let pred = heads::decode_cls(out[0].data());

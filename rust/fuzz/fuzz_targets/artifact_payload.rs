@@ -1,0 +1,13 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_artifact_payload_loading`:
+//! `ArtifactEngine::from_bytes` must never panic on arbitrary bytes, and
+//! anything that loads must also pass `inspect_bytes` and carry a menu
+//! whose keys agree with the engines behind them. Seed the corpus with a
+//! packed artifact (`pdq pack --synthetic --out corpus/seed.pdqa`) so the
+//! fuzzer starts past the magic/CRC outer wall.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_artifact_payload(data);
+});

@@ -1,0 +1,11 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_artifact_manifest_json`:
+//! `Manifest::parse` must never panic on arbitrary text, any manifest it
+//! accepts must `validate()` without panicking against arbitrary payload
+//! lengths, and serialization must be a fixed point under reparsing.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_manifest_json(data);
+});

@@ -1,0 +1,56 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the checksum
+//! used for the manifest and every payload section. Table is built at
+//! compile time; no dependencies.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (IEEE, reflected, init/xorout `!0`). Matches zlib's
+/// `crc32()`: `crc32(b"123456789") == 0xCBF4_3926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::crc32;
+
+    #[test]
+    fn check_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_and_sensitivity() {
+        assert_eq!(crc32(b""), 0);
+        let a = crc32(b"pdq-artifact-v1");
+        let b = crc32(b"pdq-artifact-v2");
+        assert_ne!(a, b);
+        // Single bit flip anywhere must change the sum.
+        let base = crc32(&[0u8; 64]);
+        for byte in 0..64 {
+            let mut buf = [0u8; 64];
+            buf[byte] = 1;
+            assert_ne!(crc32(&buf), base, "bit flip at byte {byte} undetected");
+        }
+    }
+}

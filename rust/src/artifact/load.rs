@@ -1,0 +1,580 @@
+//! Loading: `pdq-artifact-v1` bytes → a verified, ready-to-serve menu.
+//!
+//! Verification is layered so hostile bytes die as early and as cheaply
+//! as possible: header structure (magic / length / manifest CRC), then
+//! manifest parse + full structural validation ([`Manifest::validate`]),
+//! then per-section payload CRCs, then *semantic* cross-checks — folded
+//! biases, Q31 requant specs and FC row sums are recomputed from the
+//! decoded tensors and compared bit-for-bit against the stored sections,
+//! and the static output-grid chain is replayed node by node. A file that
+//! passes all four layers builds the exact engines the in-process
+//! [`crate::engine::standard_menu`] would have built. Every failure is a
+//! typed [`ArtifactError`]; nothing here panics on file content.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::crc32::crc32;
+use super::manifest::{Manifest, NodeSpec};
+use super::mmapfile::Backing;
+use super::payload::{decode_f32, decode_i32, decode_i8};
+use super::{ArtifactError, ALIGN, HEADER_LEN, MAGIC, MAX_MANIFEST_BYTES};
+use crate::cmsis::pdq_wrappers::QOut;
+use crate::cmsis::Requant;
+use crate::engine::{Engine, FloatEngine, Int8Engine, QuantEngine, VariantKey, VariantSpec};
+use crate::models::Model;
+use crate::nn::graph::{Graph, NodeId};
+use crate::nn::int8_exec::{
+    add_grid, build_requant, fold_bias, Int8Executor, Int8Layer, Int8Node, Int8Op,
+};
+use crate::nn::quant_exec::QuantSettings;
+use crate::nn::{QuantExecutor, QuantMode};
+use crate::quant::{Granularity, QParams};
+use crate::tensor::{ConvGeom, Shape, Tensor};
+
+const MODES: [QuantMode; 3] = [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic];
+
+fn bad_variant(why: impl Into<String>) -> ArtifactError {
+    ArtifactError::BadVariant(why.into())
+}
+
+/// Split raw file bytes into a parsed manifest and the payload slice,
+/// verifying the fixed header and the manifest CRC on the way. This is
+/// the only place header structure is interpreted; `pack` reuses it to
+/// self-verify and `inspect` to report.
+pub(crate) fn split_artifact(bytes: &[u8]) -> Result<(Manifest, &[u8]), ArtifactError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(ArtifactError::Truncated { need: HEADER_LEN, have: bytes.len() });
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    let mlen = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
+    let mcrc = u32::from_le_bytes([bytes[10], bytes[11], bytes[12], bytes[13]]);
+    if mlen > MAX_MANIFEST_BYTES {
+        return Err(ArtifactError::ManifestTooLarge { len: mlen, max: MAX_MANIFEST_BYTES });
+    }
+    // No overflow: mlen ≤ 16 MiB.
+    let need = HEADER_LEN + mlen;
+    if bytes.len() < need {
+        return Err(ArtifactError::Truncated { need, have: bytes.len() });
+    }
+    let mbytes = &bytes[HEADER_LEN..need];
+    if crc32(mbytes) != mcrc {
+        return Err(ArtifactError::ChecksumMismatch { section: "manifest".into() });
+    }
+    let text = std::str::from_utf8(mbytes)
+        .map_err(|_| ArtifactError::BadManifest("manifest is not UTF-8".into()))?;
+    let manifest = Manifest::parse(text)?;
+    let payload_start = need + (ALIGN - need % ALIGN) % ALIGN;
+    if bytes.len() < payload_start {
+        return Err(ArtifactError::Truncated { need: payload_start, have: bytes.len() });
+    }
+    if bytes[need..payload_start].iter().any(|&b| b != 0) {
+        return Err(ArtifactError::BadManifest("nonzero header padding".into()));
+    }
+    Ok((manifest, &bytes[payload_start..]))
+}
+
+/// Decoded payload pieces of one quantizable node, verified against
+/// recomputation before any engine is built from them.
+struct Pieces {
+    kernel: Arc<Tensor<i8>>,
+    bias_f: Vec<f32>,
+    bias_q: Vec<i32>,
+    w_row_sums: Vec<i32>,
+    requant: Requant,
+}
+
+/// Decode the float weight/bias sections of node `idx` (finite-checked).
+fn decode_params(
+    manifest: &Manifest,
+    payload: &[u8],
+    idx: usize,
+    wshape: &[usize],
+) -> Result<(Tensor<f32>, Vec<f32>), ArtifactError> {
+    let w = decode_f32(manifest.section_bytes(payload, &format!("w{idx}"))?);
+    let b = decode_f32(manifest.section_bytes(payload, &format!("b{idx}"))?);
+    if w.iter().chain(&b).any(|v| !v.is_finite()) {
+        return Err(bad_variant(format!("node {idx}: non-finite float weight/bias")));
+    }
+    Ok((Tensor::from_vec(Shape::new(wshape), w), b))
+}
+
+/// Rebuild the f32 [`Graph`] from the validated manifest + payload. Every
+/// builder assertion (rank, bias arity, geometry, topology) is implied by
+/// [`Manifest::validate`], which ran first — this can only panic on a
+/// loader bug, not on file content.
+fn rebuild_graph(manifest: &Manifest, payload: &[u8]) -> Result<Graph, ArtifactError> {
+    let mut g = Graph::new(manifest.input_shape.clone());
+    for (idx, spec) in manifest.nodes.iter().enumerate() {
+        match spec {
+            NodeSpec::Input => {
+                g.input();
+            }
+            NodeSpec::Conv { input, wshape, stride, pad } => {
+                let (w, b) = decode_params(manifest, payload, idx, wshape)?;
+                g.conv(NodeId(*input), w, b, ConvGeom::new(wshape[1], wshape[2], *stride, *pad));
+            }
+            NodeSpec::DwConv { input, wshape, stride, pad } => {
+                let (w, b) = decode_params(manifest, payload, idx, wshape)?;
+                g.dwconv(NodeId(*input), w, b, ConvGeom::new(wshape[1], wshape[2], *stride, *pad));
+            }
+            NodeSpec::Linear { input, wshape } => {
+                let (w, b) = decode_params(manifest, payload, idx, wshape)?;
+                g.linear(NodeId(*input), w, b);
+            }
+            NodeSpec::Relu { input } => {
+                g.relu(NodeId(*input));
+            }
+            NodeSpec::Relu6 { input } => {
+                g.relu6(NodeId(*input));
+            }
+            NodeSpec::MaxPool { input, k, stride } => {
+                g.maxpool(NodeId(*input), *k, *stride);
+            }
+            NodeSpec::Gap { input } => {
+                g.global_avg_pool(NodeId(*input));
+            }
+            NodeSpec::Flatten { input } => {
+                g.flatten(NodeId(*input));
+            }
+            NodeSpec::Add { a, b } => {
+                g.add(NodeId(*a), NodeId(*b));
+            }
+        }
+    }
+    for &o in &manifest.outputs {
+        g.mark_output(NodeId(o));
+    }
+    Ok(g)
+}
+
+/// Replay the static-mode output-grid chain over the whole graph and
+/// check each quantizable node's grid against the stored `static` spec
+/// bit-for-bit. Returns one grid per node.
+fn replay_static_grids(manifest: &Manifest, input_q: QOut) -> Result<Vec<QOut>, ArtifactError> {
+    let qids = manifest.quantizable();
+    let mut qslot = vec![None; manifest.nodes.len()];
+    for (j, &idx) in qids.iter().enumerate() {
+        qslot[idx] = Some(j);
+    }
+    let mut grids: Vec<QOut> = Vec::with_capacity(manifest.nodes.len());
+    for (i, spec) in manifest.nodes.iter().enumerate() {
+        let q = match spec {
+            NodeSpec::Input => input_q,
+            NodeSpec::Conv { .. } | NodeSpec::DwConv { .. } | NodeSpec::Linear { .. } => {
+                let j = qslot[i].ok_or_else(|| bad_variant(format!("node {i}: no calib slot")))?;
+                let (lo, hi) = manifest.calib[j]
+                    .ranges
+                    .first()
+                    .copied()
+                    .ok_or_else(|| bad_variant(format!("node {i}: empty range table")))?;
+                let qp = QParams::from_range(lo, hi, 8);
+                let q = QOut { scale: qp.scale, zero: qp.zero_point };
+                let ss = &manifest.int8_layers[j].static_spec;
+                if q.scale.to_bits() != ss.out_scale.to_bits() || q.zero != ss.out_zero {
+                    return Err(bad_variant(format!(
+                        "node {i}: stored static grid disagrees with frozen ranges"
+                    )));
+                }
+                q
+            }
+            NodeSpec::Relu { input }
+            | NodeSpec::Relu6 { input }
+            | NodeSpec::MaxPool { input, .. }
+            | NodeSpec::Gap { input }
+            | NodeSpec::Flatten { input } => grids[*input],
+            NodeSpec::Add { a, b } => add_grid(grids[*a], grids[*b]),
+        };
+        grids.push(q);
+    }
+    Ok(grids)
+}
+
+/// Decode + semantically verify the int8 pieces of every quantizable
+/// node: the stored `bq{i}` / `rq{i}` / `rs{i}` sections must equal what
+/// [`fold_bias`] / [`build_requant`] / FC row-summing recompute from the
+/// decoded kernel, bias and grid chain — bit for bit.
+fn decode_pieces(
+    manifest: &Manifest,
+    payload: &[u8],
+    grids: &[QOut],
+) -> Result<Vec<Pieces>, ArtifactError> {
+    let qids = manifest.quantizable();
+    let mut pieces = Vec::with_capacity(qids.len());
+    for (j, &idx) in qids.iter().enumerate() {
+        let spec = &manifest.int8_layers[j];
+        let node = &manifest.nodes[idx];
+        let wshape = node
+            .wshape()
+            .ok_or_else(|| bad_variant(format!("node {idx}: not quantizable")))?;
+        let is_linear = matches!(node, NodeSpec::Linear { .. });
+        let kernel = decode_i8(manifest.section_bytes(payload, &format!("k{idx}"))?);
+        let kernel = Arc::new(Tensor::from_vec(Shape::new(wshape), kernel));
+        let bias_f = decode_f32(manifest.section_bytes(payload, &format!("b{idx}"))?);
+        let in_id = node
+            .inputs()
+            .first()
+            .copied()
+            .ok_or_else(|| bad_variant(format!("node {idx}: no input")))?;
+        let in_q = grids[in_id];
+
+        let bias_q = decode_i32(manifest.section_bytes(payload, &format!("bq{idx}"))?);
+        let mut bq_check = Vec::new();
+        fold_bias(&bias_f, in_q.scale, &spec.s_w, &mut bq_check);
+        if bq_check != bias_q {
+            return Err(bad_variant(format!("node {idx}: folded bias drift (bq section)")));
+        }
+
+        let requant = build_requant(in_q.scale, &spec.s_w, grids[idx]);
+        let rq_stored = decode_i32(manifest.section_bytes(payload, &format!("rq{idx}"))?);
+        let rq_check: Vec<i32> =
+            requant.multipliers.iter().flat_map(|m| [m.multiplier, m.shift]).collect();
+        if rq_check != rq_stored
+            || requant.output_offset != spec.static_spec.offset
+            || requant.act_min != spec.static_spec.act_min
+            || requant.act_max != spec.static_spec.act_max
+        {
+            return Err(bad_variant(format!("node {idx}: requant drift (rq section)")));
+        }
+
+        let w_row_sums = if is_linear {
+            let stored = decode_i32(manifest.section_bytes(payload, &format!("rs{idx}"))?);
+            let check = crate::cmsis::fast::weight_row_sums(&kernel);
+            if check != stored {
+                return Err(bad_variant(format!("node {idx}: row-sum drift (rs section)")));
+            }
+            stored
+        } else {
+            Vec::new()
+        };
+
+        pieces.push(Pieces { kernel, bias_f, bias_q, w_row_sums, requant });
+    }
+    Ok(pieces)
+}
+
+/// Build one mode's lowered node program. All three modes share the same
+/// `Arc`'d kernel tensors; only static mode carries the frozen grid,
+/// folded bias and requant spec.
+fn int8_nodes(
+    manifest: &Manifest,
+    pieces: &[Pieces],
+    grids: &[QOut],
+    mode: QuantMode,
+) -> Result<Vec<Int8Node>, ArtifactError> {
+    let is_static = mode == QuantMode::Static;
+    let qids = manifest.quantizable();
+    let mut qslot = vec![None; manifest.nodes.len()];
+    for (j, &idx) in qids.iter().enumerate() {
+        qslot[idx] = Some(j);
+    }
+    let mut nodes = Vec::with_capacity(manifest.nodes.len());
+    for (i, spec) in manifest.nodes.iter().enumerate() {
+        let op = match spec {
+            NodeSpec::Input => Int8Op::Input,
+            NodeSpec::Conv { .. } | NodeSpec::DwConv { .. } | NodeSpec::Linear { .. } => {
+                let j = qslot[i].ok_or_else(|| bad_variant(format!("node {i}: no layer slot")))?;
+                let p = &pieces[j];
+                let ls = &manifest.int8_layers[j];
+                let l = Int8Layer {
+                    kernel: Arc::clone(&p.kernel),
+                    s_w: ls.s_w.clone(),
+                    bias_f: p.bias_f.clone(),
+                    bias_q: if is_static { p.bias_q.clone() } else { Vec::new() },
+                    w_row_sums: p.w_row_sums.clone(),
+                    mu_w: ls.mu_w,
+                    var_w: ls.var_w,
+                    bias_mu: ls.bias_mu,
+                    bias_var: ls.bias_var,
+                    interval: ls.interval,
+                    static_out: if is_static { Some(grids[i]) } else { None },
+                    static_requant: if is_static { Some(p.requant.clone()) } else { None },
+                };
+                match spec {
+                    NodeSpec::Conv { wshape, stride, pad, .. }
+                    | NodeSpec::DwConv { wshape, stride, pad, .. } => {
+                        let geom = ConvGeom::new(wshape[1], wshape[2], *stride, *pad);
+                        if matches!(spec, NodeSpec::Conv { .. }) {
+                            Int8Op::Conv { l, geom }
+                        } else {
+                            Int8Op::DwConv { l, geom }
+                        }
+                    }
+                    _ => Int8Op::Linear { l },
+                }
+            }
+            NodeSpec::Relu { .. } => Int8Op::Relu,
+            NodeSpec::Relu6 { .. } => Int8Op::Relu6,
+            NodeSpec::MaxPool { k, stride, .. } => Int8Op::MaxPool { k: *k, stride: *stride },
+            NodeSpec::Gap { .. } => Int8Op::GlobalAvgPool,
+            NodeSpec::Flatten { .. } => Int8Op::Flatten,
+            NodeSpec::Add { .. } => Int8Op::Add,
+        };
+        nodes.push(Int8Node { op, inputs: spec.inputs().iter().map(|&x| NodeId(x)).collect() });
+    }
+    Ok(nodes)
+}
+
+/// A loaded artifact: the reconstructed model plus its full 13-cell
+/// serving menu, every cell verified and bit-exact with the in-process
+/// build the artifact was packed from.
+pub struct ArtifactEngine {
+    manifest: Manifest,
+    model: Model,
+    menu: Vec<(VariantKey, Arc<dyn Engine>)>,
+    mapped: bool,
+}
+
+impl ArtifactEngine {
+    /// Load + fully verify an artifact file, `mmap(2)`-backed where the
+    /// platform allows (falling back to a plain read).
+    pub fn load(path: &Path) -> Result<ArtifactEngine, ArtifactError> {
+        let backing = Backing::open(path)?;
+        let mapped = backing.is_mapped();
+        Self::build(backing.bytes(), mapped)
+    }
+
+    /// Load + fully verify an artifact from in-memory bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ArtifactEngine, ArtifactError> {
+        Self::build(bytes, false)
+    }
+
+    fn build(bytes: &[u8], mapped: bool) -> Result<ArtifactEngine, ArtifactError> {
+        let (manifest, payload) = split_artifact(bytes)?;
+        manifest.validate(payload.len())?;
+        manifest.verify_sections(payload)?;
+
+        // v1 pins the input grid to the canonical [0, 1] int8 grid the
+        // executors assume; a file declaring anything else is not ours.
+        let canon = QParams::from_range(0.0, 1.0, 8);
+        if manifest.input_scale.to_bits() != canon.scale.to_bits()
+            || manifest.input_zero != canon.zero_point
+        {
+            return Err(bad_variant("input grid is not the canonical [0, 1] int8 grid"));
+        }
+        let input_q = QOut { scale: manifest.input_scale, zero: manifest.input_zero };
+
+        let graph = Arc::new(rebuild_graph(&manifest, payload)?);
+        let grids = replay_static_grids(&manifest, input_q)?;
+        let pieces = decode_pieces(&manifest, payload, &grids)?;
+
+        let key = |spec: VariantSpec| VariantKey { model: manifest.model.clone(), spec };
+        let mut menu: Vec<(VariantKey, Arc<dyn Engine>)> = Vec::with_capacity(13);
+        menu.push((key(VariantSpec::Fp32), Arc::new(FloatEngine::new(Arc::clone(&graph)))));
+
+        // Fake-quant emulation cells: fresh executors with the frozen
+        // calibration tables restored (bit-exact with `calibrate()` —
+        // the restore path recomputes the same deterministic q-sets).
+        for mode in MODES {
+            let settings = QuantSettings {
+                mode,
+                granularity: Granularity::PerTensor,
+                bits: 8,
+                gamma: manifest.gamma,
+                coverage: manifest.coverage,
+            };
+            let mut ex = QuantExecutor::new(Arc::clone(&graph), settings);
+            for c in &manifest.calib {
+                if !ex.restore_calibration(c.node, c.ranges.clone(), c.interval) {
+                    return Err(bad_variant(format!(
+                        "node {}: calibration restore refused",
+                        c.node
+                    )));
+                }
+            }
+            if !ex.is_calibrated() {
+                return Err(bad_variant("calibration table does not cover every layer"));
+            }
+            let spec = VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor };
+            menu.push((key(spec), Arc::new(QuantEngine::new(Arc::new(ex)))));
+        }
+
+        // True int8 cells: one base 8-bit program per mode (kernel
+        // tensors shared by `Arc` across all three), rungs derived.
+        for mode in MODES {
+            let nodes = int8_nodes(&manifest, &pieces, &grids, mode)?;
+            let base = Arc::new(Int8Executor::from_parts(
+                &graph,
+                nodes,
+                mode,
+                manifest.gamma,
+                manifest.weight_gran,
+                input_q,
+            ));
+            for bits in [8u32, 4, 2] {
+                let ex = if bits == 8 {
+                    Arc::clone(&base)
+                } else {
+                    Arc::new(base.rung(bits).map_err(bad_variant)?)
+                };
+                let spec =
+                    VariantSpec::Int8 { mode, weight_gran: manifest.weight_gran, bits };
+                menu.push((key(spec), Arc::new(Int8Engine::new(ex))));
+            }
+        }
+
+        // The menu must line up with the manifest's declared wire list
+        // (validate() already pinned that list to the canonical one).
+        for ((k, _), want) in menu.iter().zip(&manifest.variants) {
+            if &k.spec.wire() != want {
+                return Err(bad_variant(format!(
+                    "menu drift: built {:?}, declared {want:?}",
+                    k.spec.wire()
+                )));
+            }
+        }
+
+        let model = Model {
+            name: manifest.model.clone(),
+            task: manifest.task,
+            graph,
+            num_outputs: manifest.outputs.len(),
+            golden: None,
+            hlo_path: None,
+        };
+        Ok(ArtifactEngine { manifest, model, menu, mapped })
+    }
+
+    /// The verified manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The reconstructed model (graph + identity; no golden fixture).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The full serving menu, in canonical wire order.
+    pub fn menu(&self) -> &[(VariantKey, Arc<dyn Engine>)] {
+        &self.menu
+    }
+
+    /// Consume the loaded artifact, yielding the menu for registration.
+    pub fn into_menu(self) -> Vec<(VariantKey, Arc<dyn Engine>)> {
+        self.menu
+    }
+
+    /// Look up one engine by spec.
+    pub fn engine(&self, spec: &VariantSpec) -> Option<Arc<dyn Engine>> {
+        self.menu.iter().find(|(k, _)| &k.spec == spec).map(|(_, e)| Arc::clone(e))
+    }
+
+    /// Whether the file bytes came through `mmap(2)` (false: plain read
+    /// or [`ArtifactEngine::from_bytes`]).
+    pub fn was_mapped(&self) -> bool {
+        self.mapped
+    }
+}
+
+impl std::fmt::Debug for ArtifactEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactEngine")
+            .field("model", &self.manifest.model)
+            .field("epoch", &self.manifest.epoch)
+            .field("menu", &self.menu.len())
+            .field("mapped", &self.mapped)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::pack::{pack_model, PackOptions};
+    use crate::coordinator::calibrate::demo_model;
+
+    fn packed_demo() -> Vec<u8> {
+        pack_model(&demo_model("demo"), PackOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_loads_full_menu() {
+        let bytes = packed_demo();
+        let eng = ArtifactEngine::from_bytes(&bytes).unwrap();
+        assert_eq!(eng.menu().len(), 13);
+        assert!(!eng.was_mapped());
+        let wires: Vec<String> = eng.menu().iter().map(|(k, _)| k.spec.wire()).collect();
+        assert_eq!(wires, eng.manifest().variants);
+        assert_eq!(eng.model().name, "demo");
+        // Every cell is buildable through the trait object.
+        for (_, e) in eng.menu() {
+            assert_eq!(e.input_shape(), eng.model().graph.input_shape());
+        }
+    }
+
+    #[test]
+    fn load_maps_on_unix() {
+        let bytes = packed_demo();
+        let path = std::env::temp_dir().join("pdq_artifact_load_roundtrip.pdqa");
+        std::fs::write(&path, &bytes).unwrap();
+        let eng = ArtifactEngine::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(eng.menu().len(), 13);
+        assert_eq!(eng.was_mapped(), cfg!(unix));
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_typed() {
+        let bytes = packed_demo();
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&[]).unwrap_err(),
+            ArtifactError::Truncated { .. }
+        ));
+        let mut evil = bytes.clone();
+        evil[0] = b'X';
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&evil).unwrap_err(),
+            ArtifactError::BadMagic
+        ));
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&bytes[..bytes.len() - 1]).unwrap_err(),
+            ArtifactError::Truncated { .. }
+        ));
+    }
+
+    #[test]
+    fn payload_bitflip_fails_section_crc() {
+        let mut bytes = packed_demo();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&bytes).unwrap_err(),
+            ArtifactError::ChecksumMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn manifest_bitflip_fails_manifest_crc() {
+        let mut bytes = packed_demo();
+        bytes[HEADER_LEN + 2] ^= 0x01;
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&bytes).unwrap_err(),
+            ArtifactError::ChecksumMismatch { section } if section == "manifest"
+        ));
+    }
+
+    #[test]
+    fn crc_consistent_tamper_dies_on_semantic_cross_check() {
+        // Flip a folded-bias value AND fix up the section + manifest CRCs:
+        // the checksum layers pass, the fold_bias recomputation must not.
+        let bytes = packed_demo();
+        let (mut manifest, payload) = split_artifact(&bytes).unwrap();
+        let mut payload = payload.to_vec();
+        let pos = manifest.sections.iter().position(|e| e.name.starts_with("bq")).unwrap();
+        let (off, len) = (manifest.sections[pos].off, manifest.sections[pos].len);
+        let mut vals = decode_i32(&payload[off..off + len]);
+        vals[0] = vals[0].wrapping_add(1);
+        for (i, v) in vals.iter().enumerate() {
+            payload[off + i * 4..off + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        manifest.sections[pos].crc = crc32(&payload[off..off + len]);
+        let rebuilt = crate::artifact::pack::assemble(&manifest, &payload).unwrap();
+        assert!(matches!(
+            ArtifactEngine::from_bytes(&rebuilt).unwrap_err(),
+            ArtifactError::BadVariant(why) if why.contains("bq")
+        ));
+    }
+}

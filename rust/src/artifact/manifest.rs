@@ -1,0 +1,1166 @@
+//! The typed manifest of a `pdq-artifact-v1` file.
+//!
+//! Everything the payload does not carry lives here: schema + identity,
+//! the graph spec (weights live in the payload, referenced by convention
+//! as `w{i}`/`b{i}`/`k{i}`/`rs{i}`/`bq{i}`/`rq{i}` sections), the frozen
+//! calibration tables, the per-mode int8 lowering metadata, the canonical
+//! variant list, and the section checksum table. Every `f32` is stored as
+//! its exact `to_bits()` pattern (a `u32` integer — JSON numbers below
+//! `1e15` round-trip exactly through the repo serializer), so a manifest
+//! round-trip is bit-lossless.
+//!
+//! Parsing ([`Manifest::parse`]) is strict — `Json::as_usize` truncates
+//! and saturates, so every numeric field goes through integer-checked,
+//! range-capped helpers instead — and [`Manifest::validate`] re-derives
+//! the whole structure (checked shape inference mirroring
+//! [`crate::nn::memory::infer_shapes`], canonical section layout, variant
+//! list) before a loader touches any payload byte. Hostile manifests get
+//! typed [`ArtifactError`]s, never panics.
+
+use super::crc32::crc32;
+use super::{
+    ArtifactError, ALIGN, MAX_DIM, MAX_GAMMA, MAX_GEOM, MAX_NODES, MAX_SECTIONS,
+    MAX_TENSOR_ELEMS, SCHEMA,
+};
+use crate::data::Task;
+use crate::engine::{VariantKey, VariantSpec};
+use crate::estimator::IntervalSpec;
+use crate::nn::QuantMode;
+use crate::quant::Granularity;
+use crate::tensor::Shape;
+use crate::util::json::Json;
+
+/// Cap on free-form manifest strings (calibration source, section names).
+const MAX_STR: usize = 256;
+
+/// Cap on |zero point| / |requant offset| integers. Real grids sit within
+/// a few hundred of zero; the cap keeps hostile values from overflowing
+/// debug-checked `i32` adds inside the executors.
+const MAX_ZP: i64 = 1 << 20;
+
+/// Element type of a payload section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionDtype {
+    /// Raw int8 (kernel tensors).
+    I8,
+    /// Little-endian `i32` (row sums, folded biases, requant pairs).
+    I32,
+    /// Little-endian `f32` (float weights and biases).
+    F32,
+}
+
+impl SectionDtype {
+    /// Wire spelling used in the manifest (`"i8" | "i32" | "f32"`).
+    pub fn wire(self) -> &'static str {
+        match self {
+            SectionDtype::I8 => "i8",
+            SectionDtype::I32 => "i32",
+            SectionDtype::F32 => "f32",
+        }
+    }
+
+    /// Inverse of [`SectionDtype::wire`].
+    pub fn parse(s: &str) -> Option<SectionDtype> {
+        match s {
+            "i8" => Some(SectionDtype::I8),
+            "i32" => Some(SectionDtype::I32),
+            "f32" => Some(SectionDtype::F32),
+            _ => None,
+        }
+    }
+
+    /// Bytes per element.
+    pub fn elem_size(self) -> usize {
+        match self {
+            SectionDtype::I8 => 1,
+            SectionDtype::I32 | SectionDtype::F32 => 4,
+        }
+    }
+}
+
+/// One row of the payload checksum table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SectionEntry {
+    /// Section name (`w{i}`, `b{i}`, `k{i}`, `rs{i}`, `bq{i}`, `rq{i}`).
+    pub name: String,
+    /// Payload-relative byte offset (always a multiple of [`ALIGN`]).
+    pub off: usize,
+    /// Byte length (unpadded).
+    pub len: usize,
+    /// CRC-32 of exactly `payload[off..off + len]`.
+    pub crc: u32,
+    /// Element type.
+    pub dtype: SectionDtype,
+}
+
+/// A graph node as declared by the manifest. Weight *shapes* live here;
+/// weight *values* live in the payload sections named after the node
+/// index. Conv kernels are OHWI `[C_out, kh, kw, C_in]`, depthwise
+/// `[C, kh, kw]`, linear `[h, d]` — `kh`/`kw` are read off the shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeSpec {
+    /// The (single) graph input; must be node 0.
+    Input,
+    /// 2-D convolution with bias.
+    Conv {
+        /// Producing node of the activation input.
+        input: usize,
+        /// OHWI kernel shape.
+        wshape: Vec<usize>,
+        /// Spatial stride.
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+    },
+    /// Depthwise convolution with bias.
+    DwConv {
+        /// Producing node of the activation input.
+        input: usize,
+        /// `[C, kh, kw]` kernel shape.
+        wshape: Vec<usize>,
+        /// Spatial stride.
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+    },
+    /// Fully connected layer with bias.
+    Linear {
+        /// Producing node of the activation input.
+        input: usize,
+        /// `[h, d]` weight shape.
+        wshape: Vec<usize>,
+    },
+    /// `max(0, x)`.
+    Relu {
+        /// Producing node.
+        input: usize,
+    },
+    /// `min(max(0, x), 6)`.
+    Relu6 {
+        /// Producing node.
+        input: usize,
+    },
+    /// Square-window max pooling (no padding).
+    MaxPool {
+        /// Producing node.
+        input: usize,
+        /// Window size.
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Global average pool, HWC → C.
+    Gap {
+        /// Producing node.
+        input: usize,
+    },
+    /// HWC → flat vector.
+    Flatten {
+        /// Producing node.
+        input: usize,
+    },
+    /// Elementwise residual add.
+    Add {
+        /// First operand node.
+        a: usize,
+        /// Second operand node.
+        b: usize,
+    },
+}
+
+impl NodeSpec {
+    /// The op's wire name (matches [`crate::nn::Op::name`]).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            NodeSpec::Input => "input",
+            NodeSpec::Conv { .. } => "conv",
+            NodeSpec::DwConv { .. } => "dwconv",
+            NodeSpec::Linear { .. } => "linear",
+            NodeSpec::Relu { .. } => "relu",
+            NodeSpec::Relu6 { .. } => "relu6",
+            NodeSpec::MaxPool { .. } => "maxpool",
+            NodeSpec::Gap { .. } => "gap",
+            NodeSpec::Flatten { .. } => "flatten",
+            NodeSpec::Add { .. } => "add",
+        }
+    }
+
+    /// Conv/dwconv/linear — the nodes with payload sections.
+    pub fn is_quantizable(&self) -> bool {
+        matches!(self, NodeSpec::Conv { .. } | NodeSpec::DwConv { .. } | NodeSpec::Linear { .. })
+    }
+
+    /// Declared weight shape, when quantizable.
+    pub fn wshape(&self) -> Option<&[usize]> {
+        match self {
+            NodeSpec::Conv { wshape, .. }
+            | NodeSpec::DwConv { wshape, .. }
+            | NodeSpec::Linear { wshape, .. } => Some(wshape),
+            _ => None,
+        }
+    }
+
+    /// Input node ids in operand order (empty for `Input`).
+    pub fn inputs(&self) -> Vec<usize> {
+        match self {
+            NodeSpec::Input => vec![],
+            NodeSpec::Conv { input, .. }
+            | NodeSpec::DwConv { input, .. }
+            | NodeSpec::Linear { input, .. }
+            | NodeSpec::Relu { input }
+            | NodeSpec::Relu6 { input }
+            | NodeSpec::MaxPool { input, .. }
+            | NodeSpec::Gap { input }
+            | NodeSpec::Flatten { input } => vec![*input],
+            NodeSpec::Add { a, b } => vec![*a, *b],
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", self.op_name());
+        match self {
+            NodeSpec::Input => {}
+            NodeSpec::Conv { input, wshape, stride, pad }
+            | NodeSpec::DwConv { input, wshape, stride, pad } => {
+                j.set("in", vec![*input])
+                    .set("wshape", wshape.clone())
+                    .set("stride", *stride)
+                    .set("pad", *pad);
+            }
+            NodeSpec::Linear { input, wshape } => {
+                j.set("in", vec![*input]).set("wshape", wshape.clone());
+            }
+            NodeSpec::Relu { input }
+            | NodeSpec::Relu6 { input }
+            | NodeSpec::Gap { input }
+            | NodeSpec::Flatten { input } => {
+                j.set("in", vec![*input]);
+            }
+            NodeSpec::MaxPool { input, k, stride } => {
+                j.set("in", vec![*input]).set("k", *k).set("stride", *stride);
+            }
+            NodeSpec::Add { a, b } => {
+                j.set("in", vec![*a, *b]);
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json, idx: usize) -> Result<NodeSpec, ArtifactError> {
+        let ctx = format!("graph.nodes[{idx}]");
+        let op = str_field(j, "op", &ctx)?;
+        let one_in = |j: &Json| -> Result<usize, ArtifactError> {
+            let arr = arr_field(j, "in", &ctx)?;
+            if arr.len() != 1 {
+                return Err(bad(&ctx, "expected exactly one input"));
+            }
+            usize_in(&arr[0], 0, MAX_NODES as i64, &ctx)
+        };
+        match op {
+            "input" => Ok(NodeSpec::Input),
+            "conv" | "dwconv" => {
+                let input = one_in(j)?;
+                let wshape = usize_arr(field(j, "wshape", &ctx)?, 8, MAX_DIM, &ctx)?;
+                let stride = usize_in(field(j, "stride", &ctx)?, 1, MAX_GEOM as i64, &ctx)?;
+                let pad = usize_in(field(j, "pad", &ctx)?, 0, MAX_GEOM as i64, &ctx)?;
+                Ok(if op == "conv" {
+                    NodeSpec::Conv { input, wshape, stride, pad }
+                } else {
+                    NodeSpec::DwConv { input, wshape, stride, pad }
+                })
+            }
+            "linear" => {
+                let input = one_in(j)?;
+                let wshape = usize_arr(field(j, "wshape", &ctx)?, 8, MAX_DIM, &ctx)?;
+                Ok(NodeSpec::Linear { input, wshape })
+            }
+            "relu" => Ok(NodeSpec::Relu { input: one_in(j)? }),
+            "relu6" => Ok(NodeSpec::Relu6 { input: one_in(j)? }),
+            "gap" => Ok(NodeSpec::Gap { input: one_in(j)? }),
+            "flatten" => Ok(NodeSpec::Flatten { input: one_in(j)? }),
+            "maxpool" => {
+                let input = one_in(j)?;
+                let k = usize_in(field(j, "k", &ctx)?, 1, MAX_GEOM as i64, &ctx)?;
+                let stride = usize_in(field(j, "stride", &ctx)?, 1, MAX_GEOM as i64, &ctx)?;
+                Ok(NodeSpec::MaxPool { input, k, stride })
+            }
+            "add" => {
+                let arr = arr_field(j, "in", &ctx)?;
+                if arr.len() != 2 {
+                    return Err(bad(&ctx, "add expects exactly two inputs"));
+                }
+                let a = usize_in(&arr[0], 0, MAX_NODES as i64, &ctx)?;
+                let b = usize_in(&arr[1], 0, MAX_NODES as i64, &ctx)?;
+                Ok(NodeSpec::Add { a, b })
+            }
+            other => Err(bad(&ctx, &format!("unknown op {other:?}"))),
+        }
+    }
+}
+
+/// Frozen calibration table of one quantizable node — enough to restore
+/// any of the three requantization modes without re-running calibration.
+#[derive(Clone, Debug)]
+pub struct CalibSpec {
+    /// Node id this table belongs to.
+    pub node: usize,
+    /// PDQ interval multipliers `(α, β)` fitted at calibration.
+    pub interval: IntervalSpec,
+    /// Frozen activation ranges (per-tensor in v1: exactly one pair).
+    pub ranges: Vec<(f32, f32)>,
+}
+
+/// Static-mode extras of one lowered int8 layer: the frozen output grid
+/// and the identity of the payload `bq{i}`/`rq{i}` sections.
+#[derive(Clone, Debug)]
+pub struct StaticSpec {
+    /// Frozen output scale.
+    pub out_scale: f32,
+    /// Frozen output zero point.
+    pub out_zero: i32,
+    /// Requant output offset (equals `out_zero` in v1).
+    pub offset: i32,
+    /// Post-requant clamp floor.
+    pub act_min: i32,
+    /// Post-requant clamp ceiling.
+    pub act_max: i32,
+}
+
+/// Mode-shared int8 lowering metadata of one quantizable node. The kernel
+/// itself is the payload `k{i}` section; this is everything scalar.
+#[derive(Clone, Debug)]
+pub struct Int8LayerSpec {
+    /// Node id this layer belongs to.
+    pub node: usize,
+    /// Weight scales (1 entry per-tensor, `C_out` entries per-channel).
+    pub s_w: Vec<f32>,
+    /// Mean of the dequantized weights (PDQ surrogate).
+    pub mu_w: f32,
+    /// Variance of the dequantized weights (PDQ surrogate).
+    pub var_w: f32,
+    /// Mean of the float bias (PDQ surrogate).
+    pub bias_mu: f32,
+    /// Variance of the float bias (PDQ surrogate).
+    pub bias_var: f32,
+    /// PDQ interval multipliers (copied from the calibration table).
+    pub interval: IntervalSpec,
+    /// Static-mode frozen grid + requant identity.
+    pub static_spec: StaticSpec,
+}
+
+/// The parsed, typed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Served model name (wire-name charset, ≤ 64 bytes).
+    pub model: String,
+    /// Artifact epoch (bumped by `pdq repack`; ≥ 1).
+    pub epoch: u64,
+    /// The model's task (drives calibration data for repack).
+    pub task: Task,
+    /// Pack wall-clock, seconds since the Unix epoch.
+    pub created_unix: u64,
+    /// Nominal input shape.
+    pub input_shape: Shape,
+    /// Declared output shapes (validated against shape inference).
+    pub output_shapes: Vec<Shape>,
+    /// PDQ sampling stride γ.
+    pub gamma: usize,
+    /// Calibration coverage quantile.
+    pub coverage: f32,
+    /// Input grid scale (the executors' fixed `[0, 1]` input grid).
+    pub input_scale: f32,
+    /// Input grid zero point.
+    pub input_zero: i32,
+    /// Number of calibration images used.
+    pub calib_images: usize,
+    /// Calibration provenance (`"task-calib"`, `"repack"`, caller-set).
+    pub calib_source: String,
+    /// Graph nodes, topological (node 0 is the input).
+    pub nodes: Vec<NodeSpec>,
+    /// Output node ids (explicit and non-empty in v1).
+    pub outputs: Vec<usize>,
+    /// Calibration tables, one per quantizable node, in node order.
+    pub calib: Vec<CalibSpec>,
+    /// Weight-scale granularity of the int8 lowering.
+    pub weight_gran: Granularity,
+    /// Int8 lowering metadata, one per quantizable node, in node order.
+    pub int8_layers: Vec<Int8LayerSpec>,
+    /// Canonical variant wire names this artifact serves (the 13 cells).
+    pub variants: Vec<String>,
+    /// Payload section checksum table, in payload order.
+    pub sections: Vec<SectionEntry>,
+}
+
+fn bad(ctx: &str, why: &str) -> ArtifactError {
+    ArtifactError::BadManifest(format!("{ctx}: {why}"))
+}
+
+fn bad_graph(ctx: &str, why: &str) -> ArtifactError {
+    ArtifactError::BadGraph(format!("{ctx}: {why}"))
+}
+
+fn field<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, ArtifactError> {
+    obj.get(key).ok_or_else(|| bad(ctx, &format!("missing field {key:?}")))
+}
+
+fn str_field<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a str, ArtifactError> {
+    let s = field(obj, key, ctx)?
+        .as_str()
+        .ok_or_else(|| bad(ctx, &format!("field {key:?} must be a string")))?;
+    if s.len() > MAX_STR {
+        return Err(bad(ctx, &format!("field {key:?} longer than {MAX_STR} bytes")));
+    }
+    Ok(s)
+}
+
+fn arr_field<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a [Json], ArtifactError> {
+    field(obj, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| bad(ctx, &format!("field {key:?} must be an array")))
+}
+
+/// Strict integer read: the value must be a finite, integral JSON number
+/// inside `[lo, hi]`. (`Json::as_usize` truncates fractions and saturates
+/// negatives — unusable on untrusted bytes.)
+fn int_in(j: &Json, lo: i64, hi: i64, ctx: &str) -> Result<i64, ArtifactError> {
+    let n = j.as_f64().ok_or_else(|| bad(ctx, "expected a number"))?;
+    if !n.is_finite() || n != n.trunc() || n < lo as f64 || n > hi as f64 {
+        return Err(bad(ctx, &format!("expected an integer in [{lo}, {hi}], got {n}")));
+    }
+    Ok(n as i64)
+}
+
+fn usize_in(j: &Json, lo: i64, hi: i64, ctx: &str) -> Result<usize, ArtifactError> {
+    Ok(int_in(j, lo, hi, ctx)? as usize)
+}
+
+fn u64_field(obj: &Json, key: &str, ctx: &str) -> Result<u64, ArtifactError> {
+    Ok(int_in(field(obj, key, ctx)?, 0, i64::MAX, ctx)? as u64)
+}
+
+fn usize_arr(j: &Json, max_len: usize, max_val: usize, ctx: &str) -> Result<Vec<usize>, ArtifactError> {
+    let arr = j.as_arr().ok_or_else(|| bad(ctx, "expected an array"))?;
+    if arr.len() > max_len {
+        return Err(bad(ctx, &format!("array longer than {max_len}")));
+    }
+    arr.iter().map(|v| usize_in(v, 0, max_val as i64, ctx)).collect()
+}
+
+/// An `f32` stored as its exact bit pattern (`u32` integer).
+fn f32_bits(j: &Json, ctx: &str) -> Result<f32, ArtifactError> {
+    Ok(f32::from_bits(int_in(j, 0, u32::MAX as i64, ctx)? as u32))
+}
+
+fn jf32(v: f32) -> Json {
+    Json::Num(v.to_bits() as f64)
+}
+
+fn align_up(x: usize, ctx: &str) -> Result<usize, ArtifactError> {
+    x.checked_add(ALIGN - 1)
+        .map(|v| v / ALIGN * ALIGN)
+        .ok_or_else(|| bad(ctx, "section offset overflow"))
+}
+
+/// Per-dim + element-count caps; returns the checked element count.
+fn check_dims(dims: &[usize], ctx: &str) -> Result<u64, ArtifactError> {
+    if dims.is_empty() {
+        return Err(bad_graph(ctx, "rank-0 shape"));
+    }
+    let mut numel = 1u64;
+    for &d in dims {
+        if d == 0 || d > MAX_DIM {
+            return Err(bad_graph(ctx, &format!("dimension {d} outside 1..={MAX_DIM}")));
+        }
+        numel = numel
+            .checked_mul(d as u64)
+            .filter(|&n| n <= MAX_TENSOR_ELEMS as u64)
+            .ok_or_else(|| bad_graph(ctx, &format!("element count exceeds {MAX_TENSOR_ELEMS}")))?;
+    }
+    Ok(numel)
+}
+
+/// The canonical 13-cell serving menu of every v1 artifact, in
+/// [`crate::engine::standard_menu`] order: fp32, the three fake-quant
+/// modes (per-tensor activations), then int8 `{static, dynamic, ours}`
+/// at rungs 8/4/2 sharing one weight copy at the given granularity.
+pub fn menu_specs(weight_gran: Granularity) -> Vec<VariantSpec> {
+    let mut out = vec![VariantSpec::Fp32];
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        out.push(VariantSpec::FakeQuant { mode, gran: Granularity::PerTensor });
+    }
+    for mode in [QuantMode::Static, QuantMode::Dynamic, QuantMode::Probabilistic] {
+        for bits in [8u32, 4, 2] {
+            out.push(VariantSpec::Int8 { mode, weight_gran, bits });
+        }
+    }
+    out
+}
+
+impl Manifest {
+    /// Ids of quantizable nodes, in order (the payload-backed layers).
+    pub fn quantizable(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.is_quantizable())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The wire names this manifest must declare, in canonical order.
+    pub fn expected_wires(&self) -> Vec<String> {
+        menu_specs(self.weight_gran).iter().map(|s| s.wire()).collect()
+    }
+
+    /// Checked shape inference over the declared graph. Mirrors
+    /// [`crate::nn::memory::infer_shapes`] exactly, but with `u64`
+    /// arithmetic and caps so a hostile manifest cannot overflow,
+    /// underflow, or amplify memory. Also enforces topology: node 0 is
+    /// the single input, operands reference earlier nodes only.
+    pub fn infer_shapes(&self) -> Result<Vec<Shape>, ArtifactError> {
+        if self.nodes.is_empty() {
+            return Err(bad_graph("graph", "no nodes"));
+        }
+        if self.nodes.len() > MAX_NODES {
+            return Err(bad_graph("graph", &format!("more than {MAX_NODES} nodes")));
+        }
+        check_dims(self.input_shape.dims(), "input_shape")?;
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let ctx = format!("graph.nodes[{i}]");
+            if (i == 0) != matches!(node, NodeSpec::Input) {
+                return Err(bad_graph(&ctx, "node 0 must be the single input"));
+            }
+            for &inp in &node.inputs() {
+                if inp >= i {
+                    return Err(bad_graph(&ctx, &format!("input {inp} is not an earlier node")));
+                }
+            }
+            let dims = match node {
+                NodeSpec::Input => self.input_shape.dims().to_vec(),
+                NodeSpec::Conv { input, wshape, stride, pad }
+                | NodeSpec::DwConv { input, wshape, stride, pad } => {
+                    let s = &shapes[*input];
+                    if s.len() != 3 {
+                        return Err(bad_graph(&ctx, "conv input must be rank-3 HWC"));
+                    }
+                    check_dims(wshape, &ctx)?;
+                    let dw = matches!(node, NodeSpec::DwConv { .. });
+                    let (kh, kw, in_ch, out_ch) = if dw {
+                        if wshape.len() != 3 {
+                            return Err(bad_graph(&ctx, "dwconv weight must be [C, kh, kw]"));
+                        }
+                        (wshape[1], wshape[2], wshape[0], wshape[0])
+                    } else {
+                        if wshape.len() != 4 {
+                            return Err(bad_graph(&ctx, "conv weight must be OHWI"));
+                        }
+                        (wshape[1], wshape[2], wshape[3], wshape[0])
+                    };
+                    if in_ch != s[2] {
+                        return Err(bad_graph(&ctx, "kernel input channels != activation channels"));
+                    }
+                    if kh > MAX_GEOM || kw > MAX_GEOM || *stride > MAX_GEOM || *pad > MAX_GEOM {
+                        return Err(bad_graph(&ctx, &format!("geometry exceeds {MAX_GEOM}")));
+                    }
+                    // h, w ≤ MAX_DIM and pad ≤ MAX_GEOM: no usize overflow.
+                    let (padded_h, padded_w) = (s[0] + 2 * pad, s[1] + 2 * pad);
+                    if kh > padded_h || kw > padded_w {
+                        return Err(bad_graph(&ctx, "kernel larger than padded input"));
+                    }
+                    vec![(padded_h - kh) / stride + 1, (padded_w - kw) / stride + 1, out_ch]
+                }
+                NodeSpec::Linear { input, wshape } => {
+                    let numel = check_dims(&shapes[*input], &ctx)?;
+                    check_dims(wshape, &ctx)?;
+                    if wshape.len() != 2 {
+                        return Err(bad_graph(&ctx, "linear weight must be [h, d]"));
+                    }
+                    if wshape[1] as u64 != numel {
+                        return Err(bad_graph(&ctx, "linear width != input element count"));
+                    }
+                    vec![wshape[0]]
+                }
+                NodeSpec::Relu { input } | NodeSpec::Relu6 { input } => shapes[*input].clone(),
+                NodeSpec::MaxPool { input, k, stride } => {
+                    let s = &shapes[*input];
+                    if s.len() != 3 {
+                        return Err(bad_graph(&ctx, "maxpool input must be rank-3 HWC"));
+                    }
+                    if *k > s[0] || *k > s[1] {
+                        return Err(bad_graph(&ctx, "pool window larger than input"));
+                    }
+                    vec![(s[0] - k) / stride + 1, (s[1] - k) / stride + 1, s[2]]
+                }
+                NodeSpec::Gap { input } => vec![*shapes[*input].last().unwrap()],
+                NodeSpec::Flatten { input } => {
+                    vec![check_dims(&shapes[*input], &ctx)? as usize]
+                }
+                NodeSpec::Add { a, b } => {
+                    if shapes[*a] != shapes[*b] {
+                        return Err(bad_graph(&ctx, "add operands have different shapes"));
+                    }
+                    shapes[*a].clone()
+                }
+            };
+            check_dims(&dims, &ctx)?;
+            shapes.push(dims);
+        }
+        Ok(shapes.into_iter().map(|d| Shape::new(&d)).collect())
+    }
+
+    /// The canonical payload layout implied by the graph: per quantizable
+    /// node `i`, sections `w{i}` `b{i}` `k{i}` (`rs{i}` linear-only)
+    /// `bq{i}` `rq{i}`, each [`ALIGN`]-aligned, in node order. Returned
+    /// entries carry `crc: 0` — the declared table must match everything
+    /// *except* the CRC, which only the payload bytes can witness.
+    pub fn expected_layout(&self) -> Result<Vec<SectionEntry>, ArtifactError> {
+        let mut out: Vec<SectionEntry> = Vec::new();
+        let mut off = 0usize;
+        let ctx = "sections";
+        let mut push = |name: String, dtype: SectionDtype, len: usize| -> Result<(), ArtifactError> {
+            out.push(SectionEntry { name, off, len, crc: 0, dtype });
+            let end = off.checked_add(len).ok_or_else(|| bad(ctx, "section length overflow"))?;
+            off = align_up(end, ctx)?;
+            Ok(())
+        };
+        for (i, node) in self.nodes.iter().enumerate() {
+            let Some(wshape) = node.wshape() else { continue };
+            let wnumel = check_dims(wshape, ctx)? as usize;
+            let channels = wshape[0];
+            let n_mult = match self.weight_gran {
+                Granularity::PerTensor => 1,
+                Granularity::PerChannel => channels,
+            };
+            push(format!("w{i}"), SectionDtype::F32, wnumel * 4)?;
+            push(format!("b{i}"), SectionDtype::F32, channels * 4)?;
+            push(format!("k{i}"), SectionDtype::I8, wnumel)?;
+            if matches!(node, NodeSpec::Linear { .. }) {
+                push(format!("rs{i}"), SectionDtype::I32, channels * 4)?;
+            }
+            push(format!("bq{i}"), SectionDtype::I32, channels * 4)?;
+            push(format!("rq{i}"), SectionDtype::I32, n_mult * 2 * 4)?;
+        }
+        if out.len() > MAX_SECTIONS {
+            return Err(bad(ctx, &format!("more than {MAX_SECTIONS} sections")));
+        }
+        Ok(out)
+    }
+
+    /// Exact payload byte length the canonical layout requires.
+    pub fn expected_payload_len(&self) -> Result<usize, ArtifactError> {
+        Ok(self.expected_layout()?.last().map(|e| e.off + e.len).unwrap_or(0))
+    }
+
+    /// Full structural validation: identity and knobs, graph topology +
+    /// checked shape inference, declared output shapes, calibration and
+    /// int8 tables (counts, finiteness, grid sanity), the canonical
+    /// variant list, and the section table against the canonical layout
+    /// and `payload_len`. Returns the inferred per-node shapes.
+    ///
+    /// After this passes, the *only* remaining trust gap is payload byte
+    /// content — covered by [`Manifest::verify_sections`] (CRC) and the
+    /// loader's semantic cross-checks.
+    pub fn validate(&self, payload_len: usize) -> Result<Vec<Shape>, ArtifactError> {
+        VariantKey::parse_wire(&format!("{}|fp32", self.model))
+            .map_err(|e| bad("model", &e))?;
+        if self.epoch == 0 {
+            return Err(bad("epoch", "must be >= 1"));
+        }
+        if self.gamma == 0 || self.gamma > MAX_GAMMA {
+            return Err(bad("knobs.gamma", &format!("outside 1..={MAX_GAMMA}")));
+        }
+        if !self.coverage.is_finite() || self.coverage <= 0.0 || self.coverage >= 1.0 {
+            return Err(bad("knobs.coverage", "must be finite in (0, 1)"));
+        }
+        if !(self.input_scale.is_finite() && self.input_scale > 0.0) {
+            return Err(bad("input_q.scale", "must be finite and positive"));
+        }
+        if (self.input_zero as i64).abs() > MAX_ZP {
+            return Err(bad("input_q.zero", &format!("|zero| exceeds {MAX_ZP}")));
+        }
+        if self.calib_images == 0 || self.calib_images > 1 << 20 {
+            return Err(bad("calibration.images", "outside 1..=1048576"));
+        }
+        let shapes = self.infer_shapes()?;
+
+        if self.outputs.is_empty() {
+            return Err(bad_graph("graph.outputs", "empty"));
+        }
+        if self.outputs.len() != self.output_shapes.len() {
+            return Err(bad_graph("output_shapes", "count != graph.outputs count"));
+        }
+        for (i, &o) in self.outputs.iter().enumerate() {
+            if o >= self.nodes.len() {
+                return Err(bad_graph("graph.outputs", &format!("output {o} out of range")));
+            }
+            if self.output_shapes[i] != shapes[o] {
+                return Err(bad_graph(
+                    "output_shapes",
+                    &format!("declared {:?} != inferred {:?}", self.output_shapes[i], shapes[o]),
+                ));
+            }
+        }
+
+        let q = self.quantizable();
+        if self.calib.len() != q.len() || self.int8_layers.len() != q.len() {
+            return Err(ArtifactError::BadVariant(format!(
+                "calib/int8 tables cover {}/{} layers, graph has {} quantizable",
+                self.calib.len(),
+                self.int8_layers.len(),
+                q.len()
+            )));
+        }
+        for (ci, (&idx, c)) in q.iter().zip(&self.calib).enumerate() {
+            let ctx = format!("calib[{ci}]");
+            if c.node != idx {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: node {} != {idx}", c.node)));
+            }
+            if c.ranges.len() != 1 {
+                return Err(ArtifactError::BadVariant(format!(
+                    "{ctx}: v1 activations are per-tensor (one range), got {}",
+                    c.ranges.len()
+                )));
+            }
+            for &(lo, hi) in &c.ranges {
+                if !(lo.is_finite() && hi.is_finite() && lo <= hi) {
+                    return Err(ArtifactError::BadVariant(format!("{ctx}: bad range [{lo}, {hi}]")));
+                }
+            }
+            if !(c.interval.alpha.is_finite() && c.interval.beta.is_finite()) {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: non-finite interval")));
+            }
+        }
+        for (li, (&idx, l)) in q.iter().zip(&self.int8_layers).enumerate() {
+            let ctx = format!("int8.layers[{li}]");
+            if l.node != idx {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: node {} != {idx}", l.node)));
+            }
+            let channels = self.nodes[idx].wshape().map(|w| w[0]).unwrap_or(0);
+            let want_sw = match self.weight_gran {
+                Granularity::PerTensor => 1,
+                Granularity::PerChannel => channels,
+            };
+            if l.s_w.len() != want_sw {
+                return Err(ArtifactError::BadVariant(format!(
+                    "{ctx}: {} weight scales, want {want_sw}",
+                    l.s_w.len()
+                )));
+            }
+            if !l.s_w.iter().all(|s| s.is_finite() && *s > 0.0) {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: weight scales must be finite > 0")));
+            }
+            let finite = [l.mu_w, l.bias_mu, l.interval.alpha, l.interval.beta];
+            if !finite.iter().all(|v| v.is_finite()) {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: non-finite surrogate stats")));
+            }
+            if !(l.var_w.is_finite() && l.var_w >= 0.0 && l.bias_var.is_finite() && l.bias_var >= 0.0)
+            {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: variances must be finite >= 0")));
+            }
+            let s = &l.static_spec;
+            if !(s.out_scale.is_finite() && s.out_scale > 0.0) {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: static out_scale must be finite > 0")));
+            }
+            if (s.out_zero as i64).abs() > MAX_ZP || s.offset != s.out_zero {
+                return Err(ArtifactError::BadVariant(format!(
+                    "{ctx}: static zero/offset out of range or inconsistent"
+                )));
+            }
+            if !(-128..=127).contains(&s.act_min)
+                || !(-128..=127).contains(&s.act_max)
+                || s.act_min > s.act_max
+            {
+                return Err(ArtifactError::BadVariant(format!("{ctx}: bad activation clamp window")));
+            }
+        }
+
+        let wires = self.expected_wires();
+        if self.variants != wires {
+            return Err(ArtifactError::BadVariant(format!(
+                "variant list drift: declared {:?}, canonical {:?}",
+                self.variants, wires
+            )));
+        }
+
+        let layout = self.expected_layout()?;
+        if self.sections.len() != layout.len() {
+            return Err(bad(
+                "sections",
+                &format!("{} entries, canonical layout has {}", self.sections.len(), layout.len()),
+            ));
+        }
+        for (got, want) in self.sections.iter().zip(&layout) {
+            if got.name != want.name
+                || got.off != want.off
+                || got.len != want.len
+                || got.dtype != want.dtype
+            {
+                return Err(bad(
+                    "sections",
+                    &format!(
+                        "entry {:?} (off {}, len {}, {:?}) != canonical {:?} (off {}, len {}, {:?})",
+                        got.name, got.off, got.len, got.dtype, want.name, want.off, want.len,
+                        want.dtype
+                    ),
+                ));
+            }
+        }
+        let want_len = layout.last().map(|e| e.off + e.len).unwrap_or(0);
+        if payload_len != want_len {
+            return Err(ArtifactError::Truncated { need: want_len, have: payload_len });
+        }
+        Ok(shapes)
+    }
+
+    /// Verify every section CRC against the payload bytes.
+    pub fn verify_sections(&self, payload: &[u8]) -> Result<(), ArtifactError> {
+        for e in &self.sections {
+            let end = e
+                .off
+                .checked_add(e.len)
+                .ok_or(ArtifactError::Truncated { need: usize::MAX, have: payload.len() })?;
+            if end > payload.len() {
+                return Err(ArtifactError::Truncated { need: end, have: payload.len() });
+            }
+            if crc32(&payload[e.off..end]) != e.crc {
+                return Err(ArtifactError::ChecksumMismatch { section: e.name.clone() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a section entry by name.
+    pub fn section(&self, name: &str) -> Option<&SectionEntry> {
+        self.sections.iter().find(|e| e.name == name)
+    }
+
+    /// Bounds-checked byte view of a named section.
+    pub fn section_bytes<'a>(
+        &self,
+        payload: &'a [u8],
+        name: &str,
+    ) -> Result<&'a [u8], ArtifactError> {
+        let e = self
+            .section(name)
+            .ok_or_else(|| bad("sections", &format!("missing section {name:?}")))?;
+        let end = e
+            .off
+            .checked_add(e.len)
+            .filter(|&end| end <= payload.len())
+            .ok_or(ArtifactError::Truncated { need: e.off.saturating_add(e.len), have: payload.len() })?;
+        Ok(&payload[e.off..end])
+    }
+
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", SCHEMA)
+            .set("model", self.model.as_str())
+            .set("epoch", self.epoch)
+            .set("task", self.task.name())
+            .set("created_unix", self.created_unix)
+            .set("input_shape", self.input_shape.dims().to_vec());
+        j.set(
+            "output_shapes",
+            Json::Arr(self.output_shapes.iter().map(|s| Json::from(s.dims().to_vec())).collect()),
+        );
+        let mut knobs = Json::obj();
+        knobs.set("gamma", self.gamma).set("coverage", jf32(self.coverage));
+        j.set("knobs", knobs);
+        let mut input_q = Json::obj();
+        input_q.set("scale", jf32(self.input_scale)).set("zero", self.input_zero as i64);
+        j.set("input_q", input_q);
+        let mut calibration = Json::obj();
+        calibration.set("images", self.calib_images).set("source", self.calib_source.as_str());
+        j.set("calibration", calibration);
+        let mut graph = Json::obj();
+        graph.set("nodes", Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()));
+        graph.set("outputs", self.outputs.clone());
+        j.set("graph", graph);
+        j.set(
+            "calib",
+            Json::Arr(
+                self.calib
+                    .iter()
+                    .map(|c| {
+                        let mut cj = Json::obj();
+                        cj.set("node", c.node)
+                            .set(
+                                "interval",
+                                Json::Arr(vec![jf32(c.interval.alpha), jf32(c.interval.beta)]),
+                            )
+                            .set(
+                                "ranges",
+                                Json::Arr(
+                                    c.ranges
+                                        .iter()
+                                        .map(|&(lo, hi)| Json::Arr(vec![jf32(lo), jf32(hi)]))
+                                        .collect(),
+                                ),
+                            );
+                        cj
+                    })
+                    .collect(),
+            ),
+        );
+        let mut int8 = Json::obj();
+        int8.set(
+            "weight_gran",
+            match self.weight_gran {
+                Granularity::PerTensor => "t",
+                Granularity::PerChannel => "c",
+            },
+        );
+        int8.set(
+            "layers",
+            Json::Arr(
+                self.int8_layers
+                    .iter()
+                    .map(|l| {
+                        let mut lj = Json::obj();
+                        lj.set("node", l.node)
+                            .set("s_w", Json::Arr(l.s_w.iter().map(|&s| jf32(s)).collect()))
+                            .set("mu_w", jf32(l.mu_w))
+                            .set("var_w", jf32(l.var_w))
+                            .set("bias_mu", jf32(l.bias_mu))
+                            .set("bias_var", jf32(l.bias_var))
+                            .set(
+                                "interval",
+                                Json::Arr(vec![jf32(l.interval.alpha), jf32(l.interval.beta)]),
+                            );
+                        let s = &l.static_spec;
+                        let mut sj = Json::obj();
+                        sj.set("out_scale", jf32(s.out_scale))
+                            .set("out_zero", s.out_zero as i64)
+                            .set("offset", s.offset as i64)
+                            .set("act_min", s.act_min as i64)
+                            .set("act_max", s.act_max as i64);
+                        lj.set("static", sj);
+                        lj
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("int8", int8);
+        j.set("variants", self.variants.clone());
+        j.set(
+            "sections",
+            Json::Arr(
+                self.sections
+                    .iter()
+                    .map(|e| {
+                        let mut ej = Json::obj();
+                        ej.set("name", e.name.as_str())
+                            .set("off", e.off)
+                            .set("len", e.len)
+                            .set("crc", e.crc as u64)
+                            .set("dtype", e.dtype.wire());
+                        ej
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Pretty-printed manifest text (what goes in the file).
+    pub fn to_json_text(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse a manifest document from text.
+    pub fn parse(text: &str) -> Result<Manifest, ArtifactError> {
+        let json = Json::parse(text).map_err(ArtifactError::BadManifest)?;
+        Manifest::from_json(&json)
+    }
+
+    /// Build from a parsed JSON value. Strict: missing/mistyped/out-of-
+    /// range fields are typed errors. Structural consistency is
+    /// [`Manifest::validate`]'s job; this only guarantees well-formed,
+    /// capped fields.
+    pub fn from_json(json: &Json) -> Result<Manifest, ArtifactError> {
+        let ctx = "manifest";
+        let schema = str_field(json, "schema", ctx)?;
+        if schema != SCHEMA {
+            return Err(ArtifactError::SchemaMismatch { found: schema.to_string() });
+        }
+        let model = str_field(json, "model", ctx)?.to_string();
+        let epoch = u64_field(json, "epoch", ctx)?;
+        let task: Task =
+            str_field(json, "task", ctx)?.parse().map_err(|e: String| bad("task", &e))?;
+        let created_unix = u64_field(json, "created_unix", ctx)?;
+        let input_shape =
+            Shape::new(&usize_arr(field(json, "input_shape", ctx)?, 8, MAX_DIM, "input_shape")?);
+        let output_shapes = field(json, "output_shapes", ctx)?
+            .as_arr()
+            .ok_or_else(|| bad(ctx, "output_shapes must be an array"))?
+            .iter()
+            .map(|s| Ok(Shape::new(&usize_arr(s, 8, MAX_DIM, "output_shapes")?)))
+            .collect::<Result<Vec<_>, ArtifactError>>()?;
+        if output_shapes.len() > 64 {
+            return Err(bad(ctx, "more than 64 output shapes"));
+        }
+
+        let knobs = field(json, "knobs", ctx)?;
+        let gamma = usize_in(field(knobs, "gamma", "knobs")?, 0, MAX_GAMMA as i64, "knobs.gamma")?;
+        let coverage = f32_bits(field(knobs, "coverage", "knobs")?, "knobs.coverage")?;
+        let input_q = field(json, "input_q", ctx)?;
+        let input_scale = f32_bits(field(input_q, "scale", "input_q")?, "input_q.scale")?;
+        let input_zero =
+            int_in(field(input_q, "zero", "input_q")?, -MAX_ZP, MAX_ZP, "input_q.zero")? as i32;
+        let calibration = field(json, "calibration", ctx)?;
+        let calib_images =
+            usize_in(field(calibration, "images", "calibration")?, 0, 1 << 20, "calibration.images")?;
+        let calib_source = str_field(calibration, "source", "calibration")?.to_string();
+
+        let graph = field(json, "graph", ctx)?;
+        let node_arr = arr_field(graph, "nodes", "graph")?;
+        if node_arr.len() > MAX_NODES {
+            return Err(bad("graph.nodes", &format!("more than {MAX_NODES} nodes")));
+        }
+        let nodes = node_arr
+            .iter()
+            .enumerate()
+            .map(|(i, n)| NodeSpec::from_json(n, i))
+            .collect::<Result<Vec<_>, _>>()?;
+        let outputs = usize_arr(field(graph, "outputs", "graph")?, 64, MAX_NODES, "graph.outputs")?;
+
+        let calib = arr_field(json, "calib", ctx)?
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let cctx = format!("calib[{i}]");
+                let node = usize_in(field(c, "node", &cctx)?, 0, MAX_NODES as i64, &cctx)?;
+                let interval = interval_from_json(field(c, "interval", &cctx)?, &cctx)?;
+                let ranges = arr_field(c, "ranges", &cctx)?
+                    .iter()
+                    .map(|r| {
+                        let arr = r.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                            bad(&cctx, "each range must be a [lo, hi] pair")
+                        })?;
+                        Ok((f32_bits(&arr[0], &cctx)?, f32_bits(&arr[1], &cctx)?))
+                    })
+                    .collect::<Result<Vec<_>, ArtifactError>>()?;
+                if ranges.len() > MAX_DIM {
+                    return Err(bad(&cctx, "too many ranges"));
+                }
+                Ok(CalibSpec { node, interval, ranges })
+            })
+            .collect::<Result<Vec<_>, ArtifactError>>()?;
+        if calib.len() > MAX_NODES {
+            return Err(bad("calib", &format!("more than {MAX_NODES} entries")));
+        }
+
+        let int8 = field(json, "int8", ctx)?;
+        let weight_gran = match str_field(int8, "weight_gran", "int8")? {
+            "t" => Granularity::PerTensor,
+            "c" => Granularity::PerChannel,
+            other => return Err(bad("int8.weight_gran", &format!("unknown granularity {other:?}"))),
+        };
+        let layer_arr = arr_field(int8, "layers", "int8")?;
+        if layer_arr.len() > MAX_NODES {
+            return Err(bad("int8.layers", &format!("more than {MAX_NODES} entries")));
+        }
+        let int8_layers = layer_arr
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let lctx = format!("int8.layers[{i}]");
+                let node = usize_in(field(l, "node", &lctx)?, 0, MAX_NODES as i64, &lctx)?;
+                let sw_arr = arr_field(l, "s_w", &lctx)?;
+                if sw_arr.len() > MAX_DIM {
+                    return Err(bad(&lctx, "too many weight scales"));
+                }
+                let s_w = sw_arr
+                    .iter()
+                    .map(|s| f32_bits(s, &lctx))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let st = field(l, "static", &lctx)?;
+                Ok(Int8LayerSpec {
+                    node,
+                    s_w,
+                    mu_w: f32_bits(field(l, "mu_w", &lctx)?, &lctx)?,
+                    var_w: f32_bits(field(l, "var_w", &lctx)?, &lctx)?,
+                    bias_mu: f32_bits(field(l, "bias_mu", &lctx)?, &lctx)?,
+                    bias_var: f32_bits(field(l, "bias_var", &lctx)?, &lctx)?,
+                    interval: interval_from_json(field(l, "interval", &lctx)?, &lctx)?,
+                    static_spec: StaticSpec {
+                        out_scale: f32_bits(field(st, "out_scale", &lctx)?, &lctx)?,
+                        out_zero: int_in(field(st, "out_zero", &lctx)?, -MAX_ZP, MAX_ZP, &lctx)?
+                            as i32,
+                        offset: int_in(field(st, "offset", &lctx)?, -MAX_ZP, MAX_ZP, &lctx)? as i32,
+                        act_min: int_in(field(st, "act_min", &lctx)?, -128, 127, &lctx)? as i32,
+                        act_max: int_in(field(st, "act_max", &lctx)?, -128, 127, &lctx)? as i32,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>, ArtifactError>>()?;
+
+        let variant_arr = arr_field(json, "variants", ctx)?;
+        if variant_arr.len() > 64 {
+            return Err(bad("variants", "more than 64 variants"));
+        }
+        let variants = variant_arr
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .filter(|s| s.len() <= MAX_STR)
+                    .map(str::to_string)
+                    .ok_or_else(|| bad("variants", "each variant must be a short string"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let section_arr = arr_field(json, "sections", ctx)?;
+        if section_arr.len() > MAX_SECTIONS {
+            return Err(bad("sections", &format!("more than {MAX_SECTIONS} sections")));
+        }
+        let sections = section_arr
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let sctx = format!("sections[{i}]");
+                let dtype_s = str_field(e, "dtype", &sctx)?;
+                Ok(SectionEntry {
+                    name: str_field(e, "name", &sctx)?.to_string(),
+                    off: usize_in(field(e, "off", &sctx)?, 0, 1 << 40, &sctx)?,
+                    len: usize_in(field(e, "len", &sctx)?, 0, 1 << 40, &sctx)?,
+                    crc: int_in(field(e, "crc", &sctx)?, 0, u32::MAX as i64, &sctx)? as u32,
+                    dtype: SectionDtype::parse(dtype_s)
+                        .ok_or_else(|| bad(&sctx, &format!("unknown dtype {dtype_s:?}")))?,
+                })
+            })
+            .collect::<Result<Vec<_>, ArtifactError>>()?;
+
+        Ok(Manifest {
+            model,
+            epoch,
+            task,
+            created_unix,
+            input_shape,
+            output_shapes,
+            gamma,
+            coverage,
+            input_scale,
+            input_zero,
+            calib_images,
+            calib_source,
+            nodes,
+            outputs,
+            calib,
+            weight_gran,
+            int8_layers,
+            variants,
+            sections,
+        })
+    }
+}
+
+fn interval_from_json(j: &Json, ctx: &str) -> Result<IntervalSpec, ArtifactError> {
+    let arr = j
+        .as_arr()
+        .filter(|a| a.len() == 2)
+        .ok_or_else(|| bad(ctx, "interval must be an [alpha, beta] pair"))?;
+    Ok(IntervalSpec { alpha: f32_bits(&arr[0], ctx)?, beta: f32_bits(&arr[1], ctx)? })
+}

@@ -1,0 +1,186 @@
+//! Read-only file backing: `mmap(2)` when available, plain read fallback.
+//!
+//! A mapped artifact lets N serve processes verify and load the same file
+//! while sharing one copy of its pages in the page cache. The wrapper is
+//! std-only: on Unix it calls `mmap`/`munmap` directly through their C ABI
+//! (libc is already linked by std), everywhere else — and whenever the map
+//! fails — it falls back to `fs::read`. Callers only ever see `&[u8]`.
+
+use std::fs::File;
+use std::ops::Deref;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// Owned or mapped read-only bytes of an artifact file.
+pub enum Backing {
+    /// Heap copy (non-Unix, map failure, empty file, or in-memory bytes).
+    Owned(Vec<u8>),
+    /// A live `MAP_PRIVATE` read-only mapping; unmapped on drop.
+    #[cfg(unix)]
+    Mapped {
+        /// Base address returned by `mmap`.
+        ptr: *mut u8,
+        /// Mapping length in bytes (the file length at open).
+        len: usize,
+    },
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE and we never hand out a
+// mutable view, so shared access across threads is plain shared-immutable
+// memory. (A concurrent writer truncating the file could still SIGBUS any
+// mmap user — inherent to mmap, documented on `open`.)
+#[cfg(unix)]
+unsafe impl Send for Backing {}
+#[cfg(unix)]
+unsafe impl Sync for Backing {}
+
+impl Backing {
+    /// Open `path` read-only, preferring a shared page-cache mapping.
+    ///
+    /// Falls back to a heap read if mapping is unsupported or fails.
+    /// Note the usual mmap caveat: truncating the file while it is mapped
+    /// can fault readers; artifacts are immutable by convention (repack
+    /// writes a new file).
+    pub fn open(path: &Path) -> std::io::Result<Backing> {
+        let file = File::open(path)?;
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let len = file.metadata()?.len();
+            if len > 0 && len <= usize::MAX as u64 {
+                let len = len as usize;
+                // SAFETY: fd is a valid open file descriptor for `len`
+                // bytes; we request a fresh read-only private mapping at a
+                // kernel-chosen address and check for MAP_FAILED.
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Backing::Mapped { ptr: ptr as *mut u8, len });
+                }
+            }
+        }
+        drop(file);
+        Ok(Backing::Owned(std::fs::read(path)?))
+    }
+
+    /// Read `path` into an owned heap buffer (never maps).
+    pub fn read(path: &Path) -> std::io::Result<Backing> {
+        Ok(Backing::Owned(std::fs::read(path)?))
+    }
+
+    /// The file contents.
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            Backing::Owned(v) => v,
+            #[cfg(unix)]
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // `self`; the slice cannot outlive it.
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+        }
+    }
+
+    /// True when backed by a live `mmap` (page-cache shared) rather than a
+    /// private heap copy.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Backing::Owned(_) => false,
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+        }
+    }
+}
+
+impl Deref for Backing {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self {
+            // SAFETY: ptr/len came from a successful mmap and are unmapped
+            // exactly once, here. Failure is ignorable (address space leak
+            // at worst, and only on kernel misbehaviour).
+            unsafe {
+                let _ = sys::munmap(*ptr as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Backing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backing::Owned(v) => write!(f, "Backing::Owned({} bytes)", v.len()),
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => write!(f, "Backing::Mapped({len} bytes)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Backing;
+
+    #[test]
+    fn mmap_and_read_agree() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pdq_backing_test_{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7 + 3) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let mapped = Backing::open(&path).unwrap();
+        let read = Backing::read(&path).unwrap();
+        assert_eq!(&*mapped, &data[..]);
+        assert_eq!(&*read, &data[..]);
+        assert!(!read.is_mapped());
+        #[cfg(unix)]
+        assert!(mapped.is_mapped());
+        drop(mapped);
+        drop(read);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_owned() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pdq_backing_empty_{}.bin", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        let b = Backing::open(&path).unwrap();
+        assert!(!b.is_mapped());
+        assert!(b.is_empty());
+        drop(b);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,181 @@
+//! # `pdq::artifact` — compiled model artifacts (`pdq-artifact-v1`).
+//!
+//! A versioned on-disk format for **lowered, calibrated** serving programs,
+//! so calibration and serving can run on different machines and an adapted
+//! grid survives restart. One artifact carries a model's *entire* 13-cell
+//! serving menu — fp32, the three fake-quant emulation modes, and the three
+//! int8 modes at every truncation rung — from **one weight copy**: the
+//! int8 kernel tensors are stored once and shared (`Arc`) across all three
+//! int8 modes and all rungs at load, exactly like the in-process build.
+//!
+//! ## File layout
+//!
+//! ```text
+//! ┌──────────────────────────────────────────────────────────────┐
+//! │ magic "PDQA1\n" (6 B) │ manifest_len u32 LE │ manifest_crc u32 LE │
+//! ├──────────────────────────────────────────────────────────────┤
+//! │ manifest.json (UTF-8, pretty-printed, ≤ 16 MiB)              │
+//! ├──────── zero pad to the next 64-byte file offset ────────────┤
+//! │ payload: fixed-offset sections, each 64-byte aligned         │
+//! │   w{i}/b{i}  f32 LE   float weights + biases (graph rebuild) │
+//! │   k{i}       i8       symmetric int8 kernel (shared tensor)  │
+//! │   rs{i}      i32 LE   FC weight row sums (linear only)       │
+//! │   bq{i}      i32 LE   folded bias, static mode               │
+//! │   rq{i}      i32 LE   Q31 requant (multiplier, shift) pairs  │
+//! └──────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The manifest carries schema version, model id, artifact epoch, the graph
+//! spec, per-variant wire names, input/output shapes, weight granularity,
+//! the γ/bits/coverage knobs, calibration provenance (image count +
+//! source), the PDQ estimator tables (per-layer frozen ranges and `(α, β)`
+//! intervals, all f32 values as exact `to_bits` patterns), and a
+//! per-section `{offset, length, crc32, dtype}` table. Fixed offsets mean
+//! the payload can be mapped read-only — [`Backing`] wraps `mmap(2)` behind
+//! a std-only `unsafe` shim with a plain-read fallback — so N serve
+//! processes share the page cache for verification and load. (The executor
+//! tensors themselves are `Vec`-backed today, so kernel bytes are copied
+//! out of the map at load; fully zero-copy serving needs a tensor-storage
+//! refactor and is tracked in ROADMAP.)
+//!
+//! Loading ([`ArtifactEngine`]) verifies magic, schema, manifest CRC,
+//! per-section CRCs, and every structural/shape invariant **before**
+//! constructing anything, and returns a typed [`ArtifactError`] — never a
+//! panic — on hostile bytes (fuzzed in `testing::fuzz::target_manifest_json`
+//! / `target_artifact_payload`). A loaded menu is bit-exact with the
+//! in-process [`crate::engine::standard_menu`] build of the same model.
+
+mod crc32;
+mod inspect;
+mod load;
+mod manifest;
+mod mmapfile;
+mod pack;
+mod payload;
+
+pub use crc32::crc32;
+pub use inspect::{inspect_bytes, inspect_path, InspectReport};
+pub use load::ArtifactEngine;
+pub use manifest::{
+    menu_specs, CalibSpec, Int8LayerSpec, Manifest, NodeSpec, SectionDtype, SectionEntry,
+    StaticSpec,
+};
+pub use mmapfile::Backing;
+pub use pack::{pack_model, pack_to_file, repack, PackOptions};
+
+/// Leading file magic: format family + container version + a newline so
+/// accidental text-mode mangling breaks the magic, not the payload.
+pub const MAGIC: [u8; 6] = *b"PDQA1\n";
+
+/// Manifest schema identifier (the `"schema"` field).
+pub const SCHEMA: &str = "pdq-artifact-v1";
+
+/// Fixed header size: magic + manifest length (u32 LE) + manifest CRC32.
+pub const HEADER_LEN: usize = MAGIC.len() + 4 + 4;
+
+/// Alignment of the payload start (in-file) and of every section offset
+/// (payload-relative). 64 B keeps any future SIMD load on a mapped payload
+/// naturally aligned (mmap bases are page-aligned).
+pub const ALIGN: usize = 64;
+
+/// Manifest size cap: a hostile length prefix must not make the loader
+/// allocate or parse unbounded bytes.
+pub const MAX_MANIFEST_BYTES: usize = 16 << 20;
+
+/// Graph node-count cap (hostile manifests; real models are ≪ this).
+pub const MAX_NODES: usize = 512;
+
+/// Section-count cap for the checksum table.
+pub const MAX_SECTIONS: usize = 4096;
+
+/// Per-dimension cap on any declared shape.
+pub const MAX_DIM: usize = 1 << 20;
+
+/// Per-tensor element-count cap (weights and inferred activations).
+pub const MAX_TENSOR_ELEMS: usize = 1 << 26;
+
+/// Cap on conv/pool geometry fields (kernel, stride, pad).
+pub const MAX_GEOM: usize = 1 << 12;
+
+/// Cap on the PDQ sampling stride γ.
+pub const MAX_GAMMA: usize = 1 << 16;
+
+/// Why an artifact could not be packed, verified, or loaded. Every failure
+/// a hostile or truncated file can provoke is a variant here — the loader
+/// never panics on request/file data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactError {
+    /// Filesystem-level failure (open/read/write/map).
+    Io(String),
+    /// The leading bytes are not the `pdq-artifact-v1` magic.
+    BadMagic,
+    /// The file ends before a structurally required byte range.
+    Truncated {
+        /// Bytes the structure requires.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// The declared manifest length exceeds [`MAX_MANIFEST_BYTES`].
+    ManifestTooLarge {
+        /// Declared manifest length.
+        len: usize,
+        /// The cap it exceeded.
+        max: usize,
+    },
+    /// The manifest is not valid UTF-8/JSON, or a field is missing, of the
+    /// wrong type, out of range, or inconsistent.
+    BadManifest(String),
+    /// The manifest parses but declares a different schema version.
+    SchemaMismatch {
+        /// The schema string the manifest declares.
+        found: String,
+    },
+    /// A CRC32 does not match its recorded value (`"manifest"` or a
+    /// payload section name).
+    ChecksumMismatch {
+        /// Which checksummed region failed.
+        section: String,
+    },
+    /// The declared graph is structurally invalid (bad topology, shape
+    /// inference failure, arity/geometry violation).
+    BadGraph(String),
+    /// The per-variant data is invalid (estimator tables, requant specs,
+    /// variant list drift).
+    BadVariant(String),
+    /// Packing failed (uncalibrated source, cross-mode drift, bad knobs).
+    Pack(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact io error: {e}"),
+            ArtifactError::BadMagic => write!(f, "not a pdq artifact (bad magic)"),
+            ArtifactError::Truncated { need, have } => {
+                write!(f, "artifact truncated: need {need} bytes, have {have}")
+            }
+            ArtifactError::ManifestTooLarge { len, max } => {
+                write!(f, "manifest length {len} exceeds cap {max}")
+            }
+            ArtifactError::BadManifest(why) => write!(f, "bad manifest: {why}"),
+            ArtifactError::SchemaMismatch { found } => {
+                write!(f, "schema mismatch: found {found:?}, want {SCHEMA:?}")
+            }
+            ArtifactError::ChecksumMismatch { section } => {
+                write!(f, "checksum mismatch in section {section:?}")
+            }
+            ArtifactError::BadGraph(why) => write!(f, "bad graph spec: {why}"),
+            ArtifactError::BadVariant(why) => write!(f, "bad variant data: {why}"),
+            ArtifactError::Pack(why) => write!(f, "pack failed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e.to_string())
+    }
+}

@@ -1,0 +1,380 @@
+//! Packing: calibrated build → `pdq-artifact-v1` bytes.
+//!
+//! One pack calibrates a single static-mode [`QuantExecutor`] (the
+//! calibration products are mode-independent), *restores* that frozen
+//! state into fresh dynamic/PDQ executors through the same
+//! [`QuantExecutor::restore_calibration`] path the loader uses, lowers
+//! all three to int8, and cross-checks every mode-shared lowered field
+//! bitwise before serializing — so an artifact can only ever encode a
+//! state all three modes agree on, and the single stored copy is provably
+//! sufficient. The finished bytes are split + validated + CRC-verified
+//! before being returned.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::crc32::crc32;
+use super::load::{split_artifact, ArtifactEngine};
+use super::manifest::{menu_specs, CalibSpec, Int8LayerSpec, Manifest, NodeSpec, StaticSpec};
+use super::payload::PayloadWriter;
+use super::{ArtifactError, ALIGN, HEADER_LEN, MAGIC, MAX_GAMMA, MAX_MANIFEST_BYTES};
+use crate::engine::{calibration_images, CALIB_SIZE};
+use crate::models::Model;
+use crate::nn::graph::{Node, Op};
+use crate::nn::int8_exec::{Int8Executor, Int8Layer, Int8Node, Int8Op};
+use crate::nn::quant_exec::QuantSettings;
+use crate::nn::{QuantExecutor, QuantMode};
+use crate::quant::{Granularity, QParams};
+use crate::tensor::Tensor;
+
+/// Knobs of one pack run.
+#[derive(Clone, Debug)]
+pub struct PackOptions {
+    /// Artifact epoch to stamp (≥ 1; `repack` bumps it).
+    pub epoch: u64,
+    /// Calibration provenance string for the manifest.
+    pub calib_source: String,
+    /// PDQ sampling stride γ.
+    pub gamma: usize,
+    /// Coverage quantile for interval calibration.
+    pub coverage: f32,
+    /// Weight-scale granularity of the int8 lowering.
+    pub weight_gran: Granularity,
+    /// Explicit calibration set; `None` draws `calib_size` task images.
+    pub calib: Option<Vec<Tensor<f32>>>,
+    /// Size of the drawn calibration set when `calib` is `None`.
+    pub calib_size: usize,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        Self {
+            epoch: 1,
+            calib_source: "task-calib".into(),
+            gamma: 1,
+            coverage: 0.9995,
+            weight_gran: Granularity::PerTensor,
+            calib: None,
+            calib_size: CALIB_SIZE,
+        }
+    }
+}
+
+fn pack_err(why: impl Into<String>) -> ArtifactError {
+    ArtifactError::Pack(why.into())
+}
+
+/// The lowered layer of a quantizable node, if any.
+fn layer_of(node: &Int8Node) -> Option<&Int8Layer> {
+    match &node.op {
+        Int8Op::Conv { l, .. } | Int8Op::DwConv { l, .. } | Int8Op::Linear { l } => Some(l),
+        _ => None,
+    }
+}
+
+fn same_bits(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn same_f32s(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| same_bits(*x, *y))
+}
+
+/// Bitwise equality of every mode-shared field of two lowerings. The
+/// artifact stores these once; any drift would silently corrupt two of
+/// the three modes at load, so packing refuses it outright.
+fn cross_check(label: &str, a: &Int8Executor, b: &Int8Executor) -> Result<(), ArtifactError> {
+    if a.nodes().len() != b.nodes().len() {
+        return Err(pack_err(format!("{label}: lowered node counts differ")));
+    }
+    for (i, (na, nb)) in a.nodes().iter().zip(b.nodes()).enumerate() {
+        let (la, lb) = match (layer_of(na), layer_of(nb)) {
+            (None, None) => continue,
+            (Some(la), Some(lb)) => (la, lb),
+            _ => return Err(pack_err(format!("{label}: node {i} topology drift"))),
+        };
+        let shared_ok = la.kernel.shape() == lb.kernel.shape()
+            && la.kernel.data() == lb.kernel.data()
+            && same_f32s(&la.s_w, &lb.s_w)
+            && same_f32s(&la.bias_f, &lb.bias_f)
+            && la.w_row_sums == lb.w_row_sums
+            && same_bits(la.mu_w, lb.mu_w)
+            && same_bits(la.var_w, lb.var_w)
+            && same_bits(la.bias_mu, lb.bias_mu)
+            && same_bits(la.bias_var, lb.bias_var)
+            && same_bits(la.interval.alpha, lb.interval.alpha)
+            && same_bits(la.interval.beta, lb.interval.beta);
+        if !shared_ok {
+            return Err(pack_err(format!("{label}: node {i} cross-mode lowering drift")));
+        }
+    }
+    Ok(())
+}
+
+/// Manifest node spec of a graph node.
+fn node_spec(node: &Node) -> NodeSpec {
+    let input = |i: usize| node.inputs[i].0;
+    match &node.op {
+        Op::Input => NodeSpec::Input,
+        Op::Conv { w, geom, .. } => NodeSpec::Conv {
+            input: input(0),
+            wshape: w.shape().dims().to_vec(),
+            stride: geom.stride,
+            pad: geom.pad,
+        },
+        Op::DwConv { w, geom, .. } => NodeSpec::DwConv {
+            input: input(0),
+            wshape: w.shape().dims().to_vec(),
+            stride: geom.stride,
+            pad: geom.pad,
+        },
+        Op::Linear { w, .. } => {
+            NodeSpec::Linear { input: input(0), wshape: w.shape().dims().to_vec() }
+        }
+        Op::Relu => NodeSpec::Relu { input: input(0) },
+        Op::Relu6 => NodeSpec::Relu6 { input: input(0) },
+        Op::MaxPool { k, stride } => {
+            NodeSpec::MaxPool { input: input(0), k: *k, stride: *stride }
+        }
+        Op::GlobalAvgPool => NodeSpec::Gap { input: input(0) },
+        Op::Flatten => NodeSpec::Flatten { input: input(0) },
+        Op::Add => NodeSpec::Add { a: input(0), b: input(1) },
+    }
+}
+
+/// Header + manifest + pad + payload → final file bytes. (`pub(crate)`:
+/// loader tests reassemble tampered-but-CRC-consistent files with it.)
+pub(crate) fn assemble(manifest: &Manifest, payload: &[u8]) -> Result<Vec<u8>, ArtifactError> {
+    let text = manifest.to_json_text();
+    if text.len() > MAX_MANIFEST_BYTES {
+        return Err(pack_err(format!("manifest is {} bytes (cap {MAX_MANIFEST_BYTES})", text.len())));
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + text.len() + ALIGN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(text.as_bytes()).to_le_bytes());
+    out.extend_from_slice(text.as_bytes());
+    while out.len() % ALIGN != 0 {
+        out.push(0);
+    }
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Pack a model into `pdq-artifact-v1` bytes: calibrate once, restore
+/// into the other two modes, lower all three, cross-check, serialize,
+/// and self-verify the finished bytes (split + validate + CRC) so a
+/// packing bug can never produce a file the loader would trust.
+pub fn pack_model(model: &Model, opts: PackOptions) -> Result<Vec<u8>, ArtifactError> {
+    if opts.epoch == 0 {
+        return Err(pack_err("epoch must be >= 1"));
+    }
+    if opts.gamma == 0 || opts.gamma > MAX_GAMMA {
+        return Err(pack_err(format!("gamma outside 1..={MAX_GAMMA}")));
+    }
+    if !(opts.coverage.is_finite() && opts.coverage > 0.0 && opts.coverage < 1.0) {
+        return Err(pack_err("coverage must be finite in (0, 1)"));
+    }
+    let images = match &opts.calib {
+        Some(v) if v.is_empty() => return Err(pack_err("explicit calibration set is empty")),
+        Some(v) => v.clone(),
+        None => calibration_images(model.task, opts.calib_size.max(1)),
+    };
+    let graph = Arc::clone(&model.graph);
+    let settings = |mode: QuantMode| QuantSettings {
+        mode,
+        granularity: Granularity::PerTensor,
+        bits: 8,
+        gamma: opts.gamma,
+        coverage: opts.coverage,
+    };
+
+    // Calibrate once (static mode — the products are mode-independent).
+    let mut calibrated = QuantExecutor::new(Arc::clone(&graph), settings(QuantMode::Static));
+    calibrated.calibrate(&images);
+    if !calibrated.is_calibrated() {
+        return Err(pack_err("calibration left layers without frozen ranges"));
+    }
+    let qids: Vec<usize> = graph.quantizable_ids().iter().map(|id| id.0).collect();
+    let mut calib_specs = Vec::with_capacity(qids.len());
+    for &idx in &qids {
+        let st = calibrated
+            .layer_state(idx)
+            .ok_or_else(|| pack_err(format!("node {idx}: missing layer state")))?;
+        let ranges = st
+            .static_ranges
+            .clone()
+            .ok_or_else(|| pack_err(format!("node {idx}: missing frozen ranges")))?;
+        calib_specs.push(CalibSpec { node: idx, interval: st.interval, ranges });
+    }
+
+    // Restore into the other two modes through the loader's own path.
+    let mut dynamic = QuantExecutor::new(Arc::clone(&graph), settings(QuantMode::Dynamic));
+    let mut ours = QuantExecutor::new(Arc::clone(&graph), settings(QuantMode::Probabilistic));
+    for c in &calib_specs {
+        for ex in [&mut dynamic, &mut ours] {
+            if !ex.restore_calibration(c.node, c.ranges.clone(), c.interval) {
+                return Err(pack_err(format!("node {}: calibration restore refused", c.node)));
+            }
+        }
+    }
+
+    let low_s = Int8Executor::lower(&calibrated, opts.weight_gran).map_err(pack_err)?;
+    let low_d = Int8Executor::lower(&dynamic, opts.weight_gran).map_err(pack_err)?;
+    let low_p = Int8Executor::lower(&ours, opts.weight_gran).map_err(pack_err)?;
+    cross_check("static vs dynamic", &low_s, &low_d)?;
+    cross_check("static vs pdq", &low_s, &low_p)?;
+
+    // Serialize from the static lowering (it carries the frozen extras).
+    let mut int8_specs = Vec::with_capacity(qids.len());
+    let mut writer = PayloadWriter::new();
+    for &idx in &qids {
+        let node = &graph.nodes()[idx];
+        let (wt, bias) = match &node.op {
+            Op::Conv { w, b, .. } | Op::DwConv { w, b, .. } | Op::Linear { w, b } => (w, b),
+            _ => return Err(pack_err(format!("node {idx}: not quantizable"))),
+        };
+        let l = layer_of(&low_s.nodes()[idx])
+            .ok_or_else(|| pack_err(format!("node {idx}: lowering lost the layer")))?;
+        let out = l
+            .static_out
+            .ok_or_else(|| pack_err(format!("node {idx}: static lowering has no frozen grid")))?;
+        let rq = l
+            .static_requant
+            .as_ref()
+            .ok_or_else(|| pack_err(format!("node {idx}: static lowering has no requant spec")))?;
+        int8_specs.push(Int8LayerSpec {
+            node: idx,
+            s_w: l.s_w.clone(),
+            mu_w: l.mu_w,
+            var_w: l.var_w,
+            bias_mu: l.bias_mu,
+            bias_var: l.bias_var,
+            interval: l.interval,
+            static_spec: StaticSpec {
+                out_scale: out.scale,
+                out_zero: out.zero,
+                offset: rq.output_offset,
+                act_min: rq.act_min,
+                act_max: rq.act_max,
+            },
+        });
+        writer.f32s(&format!("w{idx}"), wt.data());
+        writer.f32s(&format!("b{idx}"), bias);
+        writer.i8s(&format!("k{idx}"), l.kernel.data());
+        if matches!(node.op, Op::Linear { .. }) {
+            writer.i32s(&format!("rs{idx}"), &l.w_row_sums);
+        }
+        writer.i32s(&format!("bq{idx}"), &l.bias_q);
+        let pairs: Vec<i32> = rq.multipliers.iter().flat_map(|m| [m.multiplier, m.shift]).collect();
+        writer.i32s(&format!("rq{idx}"), &pairs);
+    }
+    let (payload, sections) = writer.finish();
+
+    let (ilo, ihi) = calibrated.input_range();
+    let input_qp = QParams::from_range(ilo, ihi, 8);
+    let shapes = crate::nn::memory::infer_shapes(&graph);
+    let outputs: Vec<usize> = graph.output_ids().iter().map(|id| id.0).collect();
+    let output_shapes = outputs.iter().map(|&o| shapes[o].clone()).collect();
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+
+    let manifest = Manifest {
+        model: model.name.clone(),
+        epoch: opts.epoch,
+        task: model.task,
+        created_unix,
+        input_shape: graph.input_shape().clone(),
+        output_shapes,
+        gamma: opts.gamma,
+        coverage: opts.coverage,
+        input_scale: input_qp.scale,
+        input_zero: input_qp.zero_point,
+        calib_images: images.len(),
+        calib_source: opts.calib_source.clone(),
+        nodes: graph.nodes().iter().map(node_spec).collect(),
+        outputs,
+        calib: calib_specs,
+        weight_gran: opts.weight_gran,
+        int8_layers: int8_specs,
+        variants: menu_specs(opts.weight_gran).iter().map(|s| s.wire()).collect(),
+        sections,
+    };
+
+    let bytes = assemble(&manifest, &payload)?;
+    // Self-verify before handing the bytes out: a packing bug must fail
+    // here, not at some future load.
+    let (m2, pl) = split_artifact(&bytes)?;
+    m2.validate(pl.len())?;
+    m2.verify_sections(pl)?;
+    Ok(bytes)
+}
+
+/// [`pack_model`] straight to a file.
+pub fn pack_to_file(model: &Model, opts: PackOptions, path: &Path) -> Result<(), ArtifactError> {
+    let bytes = pack_model(model, opts)?;
+    std::fs::write(path, &bytes)?;
+    Ok(())
+}
+
+/// Re-pack an artifact with a fresh calibration epoch: load (full
+/// verification), re-calibrate the reconstructed model on fresh task
+/// images, and emit epoch + 1 — how an adapted grid survives restart.
+pub fn repack(bytes: &[u8]) -> Result<Vec<u8>, ArtifactError> {
+    let eng = ArtifactEngine::from_bytes(bytes)?;
+    let m = eng.manifest();
+    let opts = PackOptions {
+        epoch: m.epoch.saturating_add(1),
+        calib_source: "repack".into(),
+        gamma: m.gamma,
+        coverage: m.coverage,
+        weight_gran: m.weight_gran,
+        calib: None,
+        calib_size: m.calib_images,
+    };
+    pack_model(eng.model(), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calibrate::demo_model;
+
+    #[test]
+    fn pack_is_self_consistent_and_deterministic_sans_timestamp() {
+        let model = demo_model("demo");
+        let bytes = pack_model(&model, PackOptions::default()).unwrap();
+        let (manifest, payload) = split_artifact(&bytes).unwrap();
+        assert_eq!(manifest.model, model.name);
+        assert_eq!(manifest.epoch, 1);
+        assert_eq!(manifest.variants.len(), 13);
+        manifest.validate(payload.len()).unwrap();
+        manifest.verify_sections(payload).unwrap();
+        // Manifest text round-trips losslessly.
+        let text = manifest.to_json_text();
+        assert_eq!(Manifest::parse(&text).unwrap().to_json_text(), text);
+    }
+
+    #[test]
+    fn repack_bumps_epoch() {
+        let model = demo_model("demo");
+        let bytes = pack_model(&model, PackOptions::default()).unwrap();
+        let again = repack(&bytes).unwrap();
+        let (m2, _) = split_artifact(&again).unwrap();
+        assert_eq!(m2.epoch, 2);
+        assert_eq!(m2.calib_source, "repack");
+    }
+
+    #[test]
+    fn bad_knobs_are_refused() {
+        let model = demo_model("demo");
+        let r = pack_model(&model, PackOptions { gamma: 0, ..PackOptions::default() });
+        assert!(matches!(r, Err(ArtifactError::Pack(_))));
+        let r = pack_model(&model, PackOptions { coverage: 1.5, ..PackOptions::default() });
+        assert!(matches!(r, Err(ArtifactError::Pack(_))));
+        let r = pack_model(&model, PackOptions { calib: Some(vec![]), ..PackOptions::default() });
+        assert!(matches!(r, Err(ArtifactError::Pack(_))));
+    }
+}

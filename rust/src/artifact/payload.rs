@@ -1,0 +1,132 @@
+//! Payload assembly and decoding: [`ALIGN`]-aligned little-endian
+//! sections with per-section CRC32, matching the canonical layout
+//! declared by [`super::manifest::Manifest::expected_layout`].
+
+use super::crc32::crc32;
+use super::manifest::{SectionDtype, SectionEntry};
+use super::ALIGN;
+
+/// Appends sections to a growing payload buffer, recording the checksum
+/// table as it goes. Offsets come out identical to the manifest's
+/// canonical layout because both pad the same way in the same order.
+pub(crate) struct PayloadWriter {
+    buf: Vec<u8>,
+    sections: Vec<SectionEntry>,
+}
+
+impl PayloadWriter {
+    pub(crate) fn new() -> Self {
+        Self { buf: Vec::new(), sections: Vec::new() }
+    }
+
+    fn begin(&mut self) -> usize {
+        while self.buf.len() % ALIGN != 0 {
+            self.buf.push(0);
+        }
+        self.buf.len()
+    }
+
+    fn commit(&mut self, name: &str, off: usize, dtype: SectionDtype) {
+        let bytes = &self.buf[off..];
+        self.sections.push(SectionEntry {
+            name: name.to_string(),
+            off,
+            len: bytes.len(),
+            crc: crc32(bytes),
+            dtype,
+        });
+    }
+
+    /// Append an `f32` section (exact little-endian bit patterns).
+    pub(crate) fn f32s(&mut self, name: &str, data: &[f32]) {
+        let off = self.begin();
+        for v in data {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        self.commit(name, off, SectionDtype::F32);
+    }
+
+    /// Append an `i32` section (little-endian).
+    pub(crate) fn i32s(&mut self, name: &str, data: &[i32]) {
+        let off = self.begin();
+        for v in data {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.commit(name, off, SectionDtype::I32);
+    }
+
+    /// Append a raw int8 section.
+    pub(crate) fn i8s(&mut self, name: &str, data: &[i8]) {
+        let off = self.begin();
+        self.buf.extend(data.iter().map(|&v| v as u8));
+        self.commit(name, off, SectionDtype::I8);
+    }
+
+    /// Final payload bytes + checksum table, in write order.
+    pub(crate) fn finish(self) -> (Vec<u8>, Vec<SectionEntry>) {
+        (self.buf, self.sections)
+    }
+}
+
+/// Decode an `f32` section (byte length is validated to be a multiple of
+/// 4 by the canonical-layout check before this is called).
+pub(crate) fn decode_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+        .collect()
+}
+
+/// Decode an `i32` section.
+pub(crate) fn decode_i32(bytes: &[u8]) -> Vec<i32> {
+    bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Decode an int8 section.
+pub(crate) fn decode_i8(bytes: &[u8]) -> Vec<i8> {
+    bytes.iter().map(|&b| b as i8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_are_aligned_and_roundtrip() {
+        let mut w = PayloadWriter::new();
+        w.f32s("w1", &[1.5, -2.25, f32::MIN_POSITIVE]);
+        w.i8s("k1", &[-128, -1, 0, 1, 127]);
+        w.i32s("bq1", &[i32::MIN, -7, i32::MAX]);
+        let (buf, sections) = w.finish();
+        assert_eq!(sections.len(), 3);
+        for e in &sections {
+            assert_eq!(e.off % ALIGN, 0, "section {} misaligned", e.name);
+            assert_eq!(crc32(&buf[e.off..e.off + e.len]), e.crc);
+        }
+        assert_eq!(decode_f32(&buf[sections[0].off..sections[0].off + sections[0].len]), vec![
+            1.5,
+            -2.25,
+            f32::MIN_POSITIVE
+        ]);
+        assert_eq!(
+            decode_i8(&buf[sections[1].off..sections[1].off + sections[1].len]),
+            vec![-128, -1, 0, 1, 127]
+        );
+        assert_eq!(
+            decode_i32(&buf[sections[2].off..sections[2].off + sections[2].len]),
+            vec![i32::MIN, -7, i32::MAX]
+        );
+        // Payload ends at the last section's end — no trailing pad.
+        assert_eq!(buf.len(), sections[2].off + sections[2].len);
+    }
+
+    #[test]
+    fn nan_bit_patterns_survive() {
+        let weird = f32::from_bits(0x7FC0_1234); // a specific NaN payload
+        let mut w = PayloadWriter::new();
+        w.f32s("w1", &[weird]);
+        let (buf, sections) = w.finish();
+        let back = decode_f32(&buf[..sections[0].len]);
+        assert_eq!(back[0].to_bits(), 0x7FC0_1234);
+    }
+}

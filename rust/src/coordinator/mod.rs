@@ -34,6 +34,12 @@
 //! [`crate::adapt::AdaptManager`], whose engine swaps the per-variant
 //! [`crate::engine::SessionPool`]s honor at checkout (drain stops it
 //! first, so no grid swap can land mid-shutdown).
+//!
+//! The server doubles as a **model zoo**: [`server::Server::hot_load`] /
+//! [`server::Server::unload_model`] add and remove whole model menus
+//! (typically from `pdq-artifact-v1` files, see [`crate::artifact`]) at
+//! runtime, with LRU eviction past `--max-models` and pinned startup
+//! models. In-flight requests always finish before a model's workers exit.
 
 pub mod batcher;
 pub mod brownout;
@@ -44,4 +50,4 @@ pub mod server;
 pub mod worker;
 
 pub use brownout::{BrownoutConfig, BrownoutController, BrownoutState};
-pub use server::{Request, Response, Server, ServerConfig, SubmitError};
+pub use server::{ModelInfo, Request, Response, Server, ServerConfig, SubmitError, ZooError};

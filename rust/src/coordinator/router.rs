@@ -40,6 +40,12 @@ impl<T> Router<T> {
         }
     }
 
+    /// Drop one variant's route (its workers drain the queue and exit
+    /// once the sender is gone). Returns whether the key was registered.
+    pub fn unregister(&mut self, key: &VariantKey) -> bool {
+        self.routes.remove(key).is_some()
+    }
+
     pub fn variants(&self) -> Vec<VariantKey> {
         self.routes.keys().cloned().collect()
     }
@@ -86,6 +92,22 @@ mod tests {
         let mut r: Router<i32> = Router::default();
         let _a = r.register(key("m"));
         let _b = r.register(key("m"));
+    }
+
+    #[test]
+    fn unregister_drops_the_route_and_lets_reuse() {
+        let mut r: Router<i32> = Router::default();
+        let rx = r.register(key("m"));
+        assert!(r.unregister(&key("m")));
+        assert!(!r.unregister(&key("m")), "second unregister is a no-op");
+        // The sender is gone: the worker's receiver now reports disconnect
+        // (after draining anything already queued).
+        assert!(rx.recv().is_err());
+        assert_eq!(r.route(&key("m"), 1), Err(1));
+        // The key can be registered again (hot re-load after unload).
+        let rx2 = r.register(key("m"));
+        r.route(&key("m"), 9).unwrap();
+        assert_eq!(rx2.recv().unwrap(), 9);
     }
 
     #[test]

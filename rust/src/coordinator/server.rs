@@ -15,7 +15,17 @@
 //! submissions), let every worker pull its queue dry — each already-queued
 //! request is executed and its response sent — then join the workers. Every
 //! accepted request gets a response before the fleet exits.
+//!
+//! The server is also a **model zoo**: beyond the startup set (pinned),
+//! whole model menus can be hot-loaded ([`Server::hot_load`]) and unloaded
+//! ([`Server::unload_model`]) at runtime without touching in-flight
+//! traffic. Unloading unregisters the model's routes first — its workers
+//! drain everything already queued and answer it before they exit — then
+//! joins them, so "in-flight sessions finish on the old epoch" holds by
+//! construction. Past [`ServerConfig::max_models`] the least-recently-used
+//! unpinned model is evicted the same way.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
@@ -72,6 +82,10 @@ pub struct ServerConfig {
     /// brownout entirely — [`Server::try_submit_graceful`] then behaves
     /// exactly like [`Server::try_submit`].
     pub brownout: Option<BrownoutConfig>,
+    /// Model-zoo capacity for [`Server::hot_load`]; 0 = unbounded. Loading
+    /// past the cap evicts the least-recently-used unpinned model (startup
+    /// models are pinned and never evicted).
+    pub max_models: usize,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +95,7 @@ impl Default for ServerConfig {
             policy: BatchPolicy::default(),
             max_queue_depth: 0,
             brownout: None,
+            max_models: 0,
         }
     }
 }
@@ -109,15 +124,92 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// Why a zoo operation ([`Server::hot_load`] / [`Server::unload_model`])
+/// was refused. These are client-triggerable (the front door maps them to
+/// 4xx), so they are typed, not panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ZooError {
+    /// A model with this name is already serving; unload it first.
+    AlreadyLoaded(String),
+    /// No model with this name is loaded.
+    UnknownModel(String),
+    /// The model is pinned (part of the startup set) and cannot be unloaded.
+    Pinned(String),
+    /// The zoo is at `max_models` and every resident model is pinned.
+    Full { max: usize },
+    /// The server is draining; no membership changes are accepted.
+    Draining,
+    /// The menu itself is malformed (empty, mixed model names, duplicate
+    /// keys, or a key whose engine serves a different spec).
+    Invalid(String),
+}
+
+impl std::fmt::Display for ZooError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ZooError::AlreadyLoaded(m) => write!(f, "model {m:?} is already loaded"),
+            ZooError::UnknownModel(m) => write!(f, "no model {m:?} is loaded"),
+            ZooError::Pinned(m) => write!(f, "model {m:?} is pinned and cannot be unloaded"),
+            ZooError::Full { max } => {
+                write!(f, "zoo is full ({max} models, all pinned)")
+            }
+            ZooError::Draining => write!(f, "server is draining"),
+            ZooError::Invalid(why) => write!(f, "invalid model menu: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ZooError {}
+
+/// One loaded model's zoo bookkeeping: its variant keys, its worker
+/// threads, and the LRU stamp eviction decides by.
+struct ModelEntry {
+    pinned: bool,
+    epoch: u64,
+    last_used: u64,
+    keys: Vec<VariantKey>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The zoo: every loaded model plus the logical clock behind LRU.
+struct ZooState {
+    models: BTreeMap<String, ModelEntry>,
+    clock: u64,
+}
+
+/// One row of the `GET /v1/models` catalog.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Artifact epoch the model was loaded at (1 for startup builds).
+    pub epoch: u64,
+    /// Pinned models (the startup set) are never unloaded or evicted.
+    pub pinned: bool,
+    /// Number of serving variants this model registered.
+    pub variants: usize,
+    /// Logical LRU stamp (0 = never addressed since load).
+    pub last_used: u64,
+}
+
 /// The running server.
 pub struct Server {
     router: RwLock<Router<Job>>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
     admission: Admission<VariantKey>,
     /// (variant, input shape) for every registered variant — the
     /// `/v1/variants` catalog (executors themselves move into the workers).
-    catalog: Vec<(VariantKey, Shape)>,
+    /// Behind a lock because the zoo adds and removes rows at runtime.
+    catalog: RwLock<Vec<(VariantKey, Shape)>>,
+    /// The model zoo: per-model worker handles + LRU state. Lock ordering:
+    /// `zoo` may be taken before `router`/`catalog` write locks (hot load /
+    /// unload); never take `zoo` *while holding* a router or catalog guard.
+    zoo: Mutex<ZooState>,
+    /// Zoo capacity ([`ServerConfig::max_models`]); 0 = unbounded.
+    max_models: usize,
+    /// Batch policy, kept so hot-loaded models spawn identical workers.
+    policy: BatchPolicy,
+    /// Set by [`Server::drain`]; refuses new zoo membership changes.
+    draining: AtomicBool,
     /// Online-adaptation state, when started via [`Server::start_adaptive`].
     adapt: Option<Arc<AdaptManager>>,
     adapt_stop: Arc<AtomicBool>,
@@ -161,8 +253,8 @@ impl Server {
     ) -> Self {
         let metrics = Arc::new(Metrics::default());
         let mut router = Router::default();
-        let mut handles = Vec::new();
         let mut catalog = Vec::with_capacity(variants.len());
+        let mut models: BTreeMap<String, ModelEntry> = BTreeMap::new();
         for (key, cell) in variants {
             // The key is what clients address; the engine is what runs. A
             // disagreement would silently serve a different backend than
@@ -179,7 +271,7 @@ impl Server {
             metrics.register_variant(&key.wire());
             catalog.push((key.clone(), engine.input_shape().clone()));
             let rx = router.register(key.clone());
-            handles.extend(spawn_workers(
+            let handles = spawn_workers(
                 key.label(),
                 key.wire(),
                 rx,
@@ -187,7 +279,19 @@ impl Server {
                 config.policy,
                 Arc::clone(&metrics),
                 config.workers_per_variant,
-            ));
+            );
+            // Startup models are pinned: they can never be unloaded or
+            // LRU-evicted, so the serving set `pdq serve` was launched
+            // with is a floor, not a suggestion.
+            let entry = models.entry(key.model.clone()).or_insert_with(|| ModelEntry {
+                pinned: true,
+                epoch: 1,
+                last_used: 0,
+                keys: Vec::new(),
+                handles: Vec::new(),
+            });
+            entry.keys.push(key);
+            entry.handles.extend(handles);
         }
         let admission =
             Admission::new(config.max_queue_depth, catalog.iter().map(|(k, _)| k.clone()));
@@ -222,16 +326,194 @@ impl Server {
         });
         Self {
             router: RwLock::new(router),
-            handles: Mutex::new(handles),
             metrics,
             admission,
-            catalog,
+            catalog: RwLock::new(catalog),
+            zoo: Mutex::new(ZooState { models, clock: 0 }),
+            max_models: config.max_models,
+            policy: config.policy,
+            draining: AtomicBool::new(false),
             adapt,
             adapt_stop,
             adapt_handle: Mutex::new(adapt_handle),
             brownout: config.brownout.map(BrownoutController::new),
             workers_per_variant: config.workers_per_variant.max(1),
         }
+    }
+
+    /// Stamp a model as just-used (the LRU signal). One short mutex hold
+    /// per request — same cost class as the metrics counters.
+    fn touch(&self, model: &str) {
+        let mut zoo = self.zoo.lock().unwrap();
+        zoo.clock += 1;
+        let now = zoo.clock;
+        if let Some(e) = zoo.models.get_mut(model) {
+            e.last_used = now;
+        }
+    }
+
+    /// Remove a set of variants from the serving plane: routes first (the
+    /// workers drain what is already queued, answer it, and exit), then
+    /// the catalog rows and admission slots. Outstanding [`Permit`]s keep
+    /// their counters alive, so nothing leaks.
+    fn deregister_keys(&self, keys: &[VariantKey]) {
+        {
+            let mut router = self.router.write().unwrap();
+            for k in keys {
+                router.unregister(k);
+            }
+        }
+        self.catalog.write().unwrap().retain(|(k, _)| !keys.contains(k));
+        for k in keys {
+            self.admission.remove(k);
+        }
+    }
+
+    /// Hot-load a model's menu (all its serving variants at once), stamped
+    /// with the artifact `epoch` it came from. Returns the names of any
+    /// models LRU-evicted to make room. Fails with a typed [`ZooError`]
+    /// for duplicate names, malformed menus, a pinned-full zoo, or a
+    /// draining server — never panics on client-driven input.
+    ///
+    /// Hot-loaded models serve through private (non-adaptive) engine
+    /// cells; online adaptation stays scoped to the startup set.
+    pub fn hot_load(
+        &self,
+        menu: Vec<(VariantKey, Arc<dyn Engine>)>,
+        epoch: u64,
+    ) -> Result<Vec<String>, ZooError> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(ZooError::Draining);
+        }
+        let Some(name) = menu.first().map(|(k, _)| k.model.clone()) else {
+            return Err(ZooError::Invalid("empty menu".into()));
+        };
+        for (i, (key, engine)) in menu.iter().enumerate() {
+            if key.model != name {
+                return Err(ZooError::Invalid(format!(
+                    "mixed model names: {:?} and {:?}",
+                    name, key.model
+                )));
+            }
+            if key.spec != engine.spec() {
+                return Err(ZooError::Invalid(format!(
+                    "variant {} carries an engine for spec {:?}",
+                    key.wire(),
+                    engine.spec()
+                )));
+            }
+            if menu[..i].iter().any(|(k, _)| k == key) {
+                return Err(ZooError::Invalid(format!("duplicate variant {}", key.wire())));
+            }
+        }
+        let mut evicted_entries: Vec<(String, ModelEntry)> = Vec::new();
+        {
+            let mut zoo = self.zoo.lock().unwrap();
+            if zoo.models.contains_key(&name) {
+                return Err(ZooError::AlreadyLoaded(name));
+            }
+            // Make room: evict least-recently-used unpinned models until
+            // the newcomer fits. Refuse outright if only pinned remain.
+            while self.max_models > 0 && zoo.models.len() >= self.max_models {
+                let victim = zoo
+                    .models
+                    .iter()
+                    .filter(|(_, e)| !e.pinned)
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(n, _)| n.clone());
+                let Some(victim) = victim else {
+                    return Err(ZooError::Full { max: self.max_models });
+                };
+                let entry = zoo.models.remove(&victim).expect("victim resident");
+                self.deregister_keys(&entry.keys);
+                evicted_entries.push((victim, entry));
+            }
+            zoo.clock += 1;
+            let now = zoo.clock;
+            let mut entry = ModelEntry {
+                pinned: false,
+                epoch,
+                last_used: now,
+                keys: Vec::new(),
+                handles: Vec::new(),
+            };
+            for (key, engine) in menu {
+                self.metrics.register_variant(&key.wire());
+                self.catalog
+                    .write()
+                    .unwrap()
+                    .push((key.clone(), engine.input_shape().clone()));
+                self.admission.insert(key.clone());
+                // The name is free in the zoo and keys are model-scoped,
+                // so this cannot collide with a live registration.
+                let rx = self.router.write().unwrap().register(key.clone());
+                entry.handles.extend(spawn_workers(
+                    key.label(),
+                    key.wire(),
+                    rx,
+                    Arc::new(SessionPool::over(Arc::new(EngineCell::new(engine)))),
+                    self.policy,
+                    self.metrics_arc(),
+                    self.workers_per_variant,
+                ));
+                entry.keys.push(key);
+            }
+            zoo.models.insert(name, entry);
+        }
+        // Join evicted workers outside the zoo lock: they finish whatever
+        // was queued (every accepted request is answered) without stalling
+        // unrelated submissions.
+        let mut evicted = Vec::with_capacity(evicted_entries.len());
+        for (victim, entry) in evicted_entries {
+            for h in entry.handles {
+                let _ = h.join();
+            }
+            evicted.push(victim);
+        }
+        Ok(evicted)
+    }
+
+    /// Unload a hot-loaded model: unregister its routes (in-flight and
+    /// already-queued requests are still executed and answered), free its
+    /// catalog rows and admission slots, and join its workers. Pinned
+    /// (startup) models refuse with [`ZooError::Pinned`].
+    pub fn unload_model(&self, name: &str) -> Result<(), ZooError> {
+        let entry = {
+            let mut zoo = self.zoo.lock().unwrap();
+            match zoo.models.get(name) {
+                None => return Err(ZooError::UnknownModel(name.into())),
+                Some(e) if e.pinned => return Err(ZooError::Pinned(name.into())),
+                Some(_) => {}
+            }
+            let entry = zoo.models.remove(name).expect("checked resident");
+            self.deregister_keys(&entry.keys);
+            entry
+        };
+        for h in entry.handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// The model catalog (`GET /v1/models`): every loaded model with its
+    /// epoch, pin state, variant count, and LRU stamp.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let zoo = self.zoo.lock().unwrap();
+        zoo.models
+            .iter()
+            .map(|(name, e)| ModelInfo {
+                name: name.clone(),
+                epoch: e.epoch,
+                pinned: e.pinned,
+                variants: e.keys.len(),
+                last_used: e.last_used,
+            })
+            .collect()
+    }
+
+    /// The zoo capacity (0 = unbounded).
+    pub fn max_models(&self) -> usize {
+        self.max_models
     }
 
     /// The adaptation manager, when this server was started adaptively
@@ -249,6 +531,7 @@ impl Server {
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Response>, String> {
         self.metrics.on_request_for(&variant.wire());
+        self.touch(&variant.model);
         let (tx, rx) = mpsc::channel();
         let job = Job {
             request: Request { id, variant: variant.clone(), image, reply: tx, trace: None },
@@ -258,7 +541,7 @@ impl Server {
             Ok(()) => Ok(rx),
             // Same drain-vs-unknown split as `try_submit`: a registered
             // variant whose route is gone means the router was closed.
-            Err(_) if self.catalog.iter().any(|(k, _)| *k == variant) => {
+            Err(_) if self.catalog.read().unwrap().iter().any(|(k, _)| *k == variant) => {
                 self.metrics.on_reject_draining();
                 Err("server is draining".to_string())
             }
@@ -289,6 +572,7 @@ impl Server {
         trace: Option<TraceHandle>,
     ) -> Result<(mpsc::Receiver<Response>, Permit), SubmitError> {
         self.metrics.on_request_for(&variant.wire());
+        self.touch(&variant.model);
         let permit = match self.admission.try_acquire(&variant) {
             Ok(p) => p,
             Err(AdmissionError::UnknownKey) => {
@@ -353,11 +637,12 @@ impl Server {
             let bits = variant.spec.precision_bits();
             return self.try_submit_inner(variant, id, image, trace).map(|(rx, p)| (rx, p, bits));
         };
-        if !self.catalog.iter().any(|(k, _)| *k == variant) {
+        if !self.catalog.read().unwrap().iter().any(|(k, _)| *k == variant) {
             self.metrics.on_request_for(&variant.wire());
             self.metrics.on_reject();
             return Err(SubmitError::UnknownVariant(variant.wire()));
         }
+        self.touch(&variant.model);
         let depth = self.admission.depth(&variant);
         // The load signal's p99 term comes from the exact log-bucketed
         // histogram ([`Metrics::latency_quantile_hint_us`]), never the
@@ -399,7 +684,7 @@ impl Server {
                     variant.model.clone(),
                     variant.spec.at_bits(bits).expect("int8 spec has rungs"),
                 );
-                if self.catalog.iter().any(|(k, _)| *k == key) {
+                if self.catalog.read().unwrap().iter().any(|(k, _)| *k == key) {
                     candidates.push(key);
                 }
             }
@@ -459,12 +744,13 @@ impl Server {
     }
 
     pub fn variants(&self) -> Vec<VariantKey> {
-        self.catalog.iter().map(|(k, _)| k.clone()).collect()
+        self.catalog.read().unwrap().iter().map(|(k, _)| k.clone()).collect()
     }
 
-    /// Registered (variant, input shape) pairs.
-    pub fn catalog(&self) -> &[(VariantKey, Shape)] {
-        &self.catalog
+    /// Registered (variant, input shape) pairs — a snapshot, since the
+    /// zoo mutates the catalog at runtime.
+    pub fn catalog(&self) -> Vec<(VariantKey, Shape)> {
+        self.catalog.read().unwrap().clone()
     }
 
     /// Per-variant in-flight depth snapshot (admitted, not yet answered).
@@ -482,12 +768,16 @@ impl Server {
     /// Idempotent; shared-reference so the network front door can drain
     /// through its `Arc<Server>`.
     pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
         self.adapt_stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.adapt_handle.lock().unwrap().take() {
             let _ = h.join();
         }
         self.router.write().unwrap().close();
-        let handles: Vec<JoinHandle<()>> = self.handles.lock().unwrap().drain(..).collect();
+        let handles: Vec<JoinHandle<()>> = {
+            let mut zoo = self.zoo.lock().unwrap();
+            zoo.models.values_mut().flat_map(|e| e.handles.drain(..)).collect()
+        };
         for h in handles {
             let _ = h.join();
         }
@@ -607,6 +897,7 @@ mod tests {
                 policy: BatchPolicy { max_batch: 1, deadline: Duration::from_millis(1) },
                 max_queue_depth: 0,
                 brownout: None,
+                max_models: 0,
             },
         );
         let key = fp32_key("m");
@@ -795,6 +1086,114 @@ mod tests {
             Err(SubmitError::UnknownVariant(_)) => {}
             other => panic!("want UnknownVariant, got {other:?}", other = other.err()),
         }
+        server.drain();
+    }
+
+    #[test]
+    fn hot_load_serves_and_unload_answers_in_flight() {
+        let server = Server::start(vec![float_variant("m")], ServerConfig::default());
+        assert_eq!(server.models().len(), 1);
+        let evicted = server.hot_load(vec![float_variant("z")], 7).unwrap();
+        assert!(evicted.is_empty());
+        let infos = server.models();
+        assert_eq!(infos.len(), 2);
+        let z = infos.iter().find(|i| i.name == "z").unwrap();
+        assert!(!z.pinned);
+        assert_eq!(z.epoch, 7);
+        assert_eq!(z.variants, 1);
+        assert!(infos.iter().find(|i| i.name == "m").unwrap().pinned);
+        assert_eq!(server.variants().len(), 2);
+        // Queue work on the hot-loaded model, then unload *before* reading
+        // the responses: unload must let the workers drain and answer.
+        let key = fp32_key("z");
+        let rxs: Vec<_> = (0..8u64)
+            .map(|id| {
+                server.submit(key.clone(), id, Tensor::full(Shape::hwc(2, 2, 1), 1.0)).unwrap()
+            })
+            .collect();
+        server.unload_model("z").unwrap();
+        for (id, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|_| panic!("request {id} lost in unload"));
+            assert_eq!(resp.id, id as u64);
+        }
+        // Fully deregistered: unknown to submit, gone from the catalog.
+        assert!(server.submit(key, 99, Tensor::full(Shape::hwc(2, 2, 1), 0.0)).is_err());
+        assert_eq!(server.variants().len(), 1);
+        assert_eq!(server.models().len(), 1);
+        // No leaked admission slots anywhere.
+        assert!(server.admission_depths().iter().all(|(_, d)| *d == 0));
+        // Pinned and unknown models refuse with typed errors.
+        assert_eq!(server.unload_model("m"), Err(ZooError::Pinned("m".into())));
+        assert_eq!(server.unload_model("z"), Err(ZooError::UnknownModel("z".into())));
+        server.drain();
+    }
+
+    #[test]
+    fn hot_load_refuses_malformed_menus_and_duplicates() {
+        let server = Server::start(vec![float_variant("m")], ServerConfig::default());
+        assert_eq!(server.hot_load(vec![], 1), Err(ZooError::Invalid("empty menu".into())));
+        match server.hot_load(vec![float_variant("a"), float_variant("b")], 1) {
+            Err(ZooError::Invalid(why)) => assert!(why.contains("mixed")),
+            other => panic!("want Invalid(mixed), got {other:?}"),
+        }
+        match server.hot_load(vec![float_variant("a"), float_variant("a")], 1) {
+            Err(ZooError::Invalid(why)) => assert!(why.contains("duplicate")),
+            other => panic!("want Invalid(duplicate), got {other:?}"),
+        }
+        let (_, engine) = float_variant("a");
+        let lying = VariantKey::new(
+            "a",
+            VariantSpec::FakeQuant {
+                mode: crate::nn::QuantMode::Probabilistic,
+                gran: crate::quant::Granularity::PerTensor,
+            },
+        );
+        match server.hot_load(vec![(lying, engine)], 1) {
+            Err(ZooError::Invalid(why)) => assert!(why.contains("spec")),
+            other => panic!("want Invalid(spec), got {other:?}"),
+        }
+        assert_eq!(
+            server.hot_load(vec![float_variant("m")], 1),
+            Err(ZooError::AlreadyLoaded("m".into()))
+        );
+        server.drain();
+        assert_eq!(server.hot_load(vec![float_variant("late")], 1), Err(ZooError::Draining));
+    }
+
+    #[test]
+    fn zoo_evicts_least_recently_used_unpinned_model() {
+        let server = Server::start(
+            vec![float_variant("a")],
+            ServerConfig { max_models: 3, ..Default::default() },
+        );
+        assert_eq!(server.max_models(), 3);
+        server.hot_load(vec![float_variant("b")], 1).unwrap();
+        server.hot_load(vec![float_variant("c")], 1).unwrap();
+        // Address b so c becomes the least recently used unpinned model.
+        let rx = server
+            .submit(fp32_key("b"), 1, Tensor::full(Shape::hwc(2, 2, 1), 1.0))
+            .unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let evicted = server.hot_load(vec![float_variant("d")], 1).unwrap();
+        assert_eq!(evicted, vec!["c".to_string()]);
+        let names: Vec<String> = server.models().into_iter().map(|i| i.name).collect();
+        assert_eq!(names, vec!["a", "b", "d"]);
+        assert_eq!(server.variants().len(), 3);
+        server.drain();
+    }
+
+    #[test]
+    fn zoo_full_of_pinned_models_refuses_load() {
+        let server = Server::start(
+            vec![float_variant("a"), float_variant("b")],
+            ServerConfig { max_models: 2, ..Default::default() },
+        );
+        assert_eq!(
+            server.hot_load(vec![float_variant("c")], 1),
+            Err(ZooError::Full { max: 2 })
+        );
         server.drain();
     }
 

@@ -181,6 +181,28 @@ impl<'m> EngineBuilder<'m> {
         let key = self.key();
         Ok((key, self.build()?))
     }
+
+    /// Pack this builder's model + knobs into `pdq-artifact-v1` bytes.
+    ///
+    /// An artifact always carries the model's *entire* 13-cell menu, so
+    /// the builder's `spec` only contributes its weight granularity (when
+    /// it is an int8 spec; per-tensor otherwise). Calibration images, γ
+    /// and coverage are the builder's. The serve-side counterpart is
+    /// [`crate::artifact::ArtifactEngine`].
+    pub fn pack(mut self) -> Result<Vec<u8>, crate::artifact::ArtifactError> {
+        let weight_gran = match self.spec {
+            VariantSpec::Int8 { weight_gran, .. } => weight_gran,
+            _ => Granularity::PerTensor,
+        };
+        let opts = crate::artifact::PackOptions {
+            gamma: self.gamma,
+            coverage: self.coverage,
+            weight_gran,
+            calib: Some(self.take_calib()),
+            ..crate::artifact::PackOptions::default()
+        };
+        crate::artifact::pack_model(self.model, opts)
+    }
 }
 
 /// The standard serving menu for one model: fp32 plus the paper's three

@@ -42,6 +42,10 @@
 //! - [`adapt`] — online adaptation: sampled per-node drift observation on
 //!   live traffic, background shadow recalibration, and atomic epoch swaps
 //!   of serving grids (zero-downtime).
+//! - [`artifact`] — compiled model artifacts (`pdq-artifact-v1`): packed,
+//!   checksummed, mmap-loadable serving programs carrying the full 13-cell
+//!   menu from one weight copy, so calibration and serving can run on
+//!   different machines (`pdq pack` / `pdq inspect` / `pdq repack`).
 //! - [`coordinator`] — threaded serving stack: router → dynamic batcher →
 //!   worker pool, calibration orchestration, metrics.
 //! - [`net`] — the network front door: std-only HTTP/1.1 ingress over the
@@ -57,6 +61,7 @@
 //!   in-tree fuzz smoke tests and the out-of-tree `fuzz/` cargo-fuzz tree.
 
 pub mod adapt;
+pub mod artifact;
 pub mod cmsis;
 pub mod coordinator;
 pub mod data;

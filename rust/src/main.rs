@@ -11,10 +11,22 @@
 //! pdq eval    --model M --mode ...  # single evaluation run (EngineBuilder)
 //!             [--gran T|C] [--gamma N] [--n N] [--ood] [--int8]
 //! pdq experiment <table1|table2|fig3|fig4|fig5|ablate-sigma|ablate-interval|memory|all>
+//! pdq pack    --out M.pdqa          # compile a model into a pdq-artifact-v1
+//!             [--model M | --synthetic] [--epoch N] [--gamma N]
+//!                                   # (int8 weights, folded biases, requant
+//!                                   # specs, PDQ tables; per-section CRCs)
+//! pdq inspect M.pdqa [--json]       # verify + describe an artifact;
+//!                                   # exits nonzero on any corruption
+//! pdq repack  M.pdqa --out M2.pdqa  # recalibrate + bump the artifact epoch
 //! pdq serve   --requests N          # in-process serving coordinator demo
 //! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
 //!             [--synthetic] [--workers N] [--max-batch N] [--deadline-us N]
 //!             [--max-queue N] [--http-threads N] [--max-conns N]
+//!             [--artifact A.pdqa[,B.pdqa]]  # serve packed artifacts (the
+//!                                   # zoo's pinned startup set) instead of
+//!                                   # building engines in-process
+//!             [--max-models N]      # LRU-evict unpinned hot-loaded models
+//!                                   # past N (POST/DELETE /v1/models)
 //!             [--adapt] [--drift-threshold X] [--recal-cooldown-s N]
 //!             [--sample-every N]    # online adaptation: drift monitor +
 //!                                   # shadow recalibration; adds
@@ -30,7 +42,10 @@
 //!             [--log-json]          # structured JSON log events on stderr
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
-//!             [--variants a|b,c|d] [--out PATH] [--expect-zero-drops]
+//!             [--variants a|b,c|d] [--models a,b,c]  # drive named variants,
+//!                                   # or every variant of the named models
+//!                                   # (round-robin across the zoo)
+//!             [--out PATH] [--expect-zero-drops]
 //!             [--expect-zero-failed]
 //!             [--shift corruption:severity@t]  # mid-run distribution shift
 //!             [--sweep] [--base-rps N] [--multipliers 1,2,4,...]
@@ -80,6 +95,13 @@ const COMMANDS: &[Command] = &[
     Command { name: "info", about: "artifact + model inventory", usage: "" },
     Command { name: "eval", about: "evaluate one model/mode/granularity", usage: "" },
     Command { name: "experiment", about: "regenerate a paper table/figure", usage: "" },
+    Command { name: "pack", about: "compile a model into a pdq-artifact-v1 file", usage: "" },
+    Command {
+        name: "inspect",
+        about: "verify + describe an artifact (nonzero exit on corruption)",
+        usage: "",
+    },
+    Command { name: "repack", about: "recalibrate an artifact, bumping its epoch", usage: "" },
     Command { name: "serve", about: "serving demo, or HTTP front door with --listen", usage: "" },
     Command { name: "loadgen", about: "drive a front door over sockets", usage: "" },
     Command { name: "chaos-proxy", about: "fault-injecting TCP proxy for chaos tests", usage: "" },
@@ -103,6 +125,9 @@ fn main() {
         "info" => cmd_info(&artifacts),
         "eval" => cmd_eval(&artifacts, &args),
         "experiment" => cmd_experiment(&artifacts, &args),
+        "pack" => cmd_pack(&artifacts, &args),
+        "inspect" => cmd_inspect(&args),
+        "repack" => cmd_repack(&args),
         "serve" => cmd_serve(&artifacts, &args),
         "loadgen" => cmd_loadgen(&args),
         "chaos-proxy" => cmd_chaos_proxy(&args),
@@ -241,14 +266,6 @@ fn cmd_mcu() {
 fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     let n_requests = args.opt_usize("requests", 64);
     let name = args.opt_or("model", "micro_resnet").to_string();
-    // --synthetic: a small seeded-random model, no `make artifacts` needed
-    // (what CI's serving smoke and quick local runs use).
-    let model = if args.flag("synthetic") {
-        demo_model(&name)
-    } else {
-        let manifest = zoo::load_manifest(artifacts)?;
-        zoo::load_model(artifacts, &manifest, &name)?
-    };
     // --brownout: precision degradation under overload (int8 variants walk
     // their 8/4/2-bit rung ladder before any request is shed).
     let brownout = args.flag("brownout").then(|| BrownoutConfig {
@@ -263,6 +280,53 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         },
         max_queue_depth: args.opt_usize("max-queue", 32),
         brownout,
+        max_models: args.opt_usize("max-models", 0),
+    };
+    // --artifact: serve packed pdq-artifact-v1 files — the zoo's pinned
+    // startup set — instead of building engines in-process. Front-door
+    // only: the in-process demo needs the task's dataset, which an
+    // artifact deliberately does not carry.
+    if let Some(list) = args.opt("artifact") {
+        if args.flag("adapt") {
+            anyhow::bail!(
+                "--artifact and --adapt don't compose; use `pdq repack` + \
+                 POST /v1/models for recalibration epochs"
+            );
+        }
+        let Some(addr) = args.opt("listen") else {
+            anyhow::bail!("--artifact requires --listen HOST:PORT");
+        };
+        let mut menu = Vec::new();
+        let mut loaded = Vec::new();
+        for path in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let art = pdq::artifact::ArtifactEngine::load(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            loaded.push(format!(
+                "{} epoch {} ({} variants, {})",
+                art.manifest().model,
+                art.manifest().epoch,
+                art.menu().len(),
+                path,
+            ));
+            menu.extend(art.into_menu());
+        }
+        if menu.is_empty() {
+            anyhow::bail!("--artifact: no artifact paths given");
+        }
+        let keys: Vec<VariantKey> = menu.iter().map(|(k, _)| k.clone()).collect();
+        let server = Server::start(menu, config);
+        for d in &loaded {
+            println!("pdq-serve: artifact {d}");
+        }
+        return run_front_door(server, &keys, "packed artifacts", &config, addr, args);
+    }
+    // --synthetic: a small seeded-random model, no `make artifacts` needed
+    // (what CI's serving smoke and quick local runs use).
+    let model = if args.flag("synthetic") {
+        demo_model(&name)
+    } else {
+        let manifest = zoo::load_manifest(artifacts)?;
+        zoo::load_model(artifacts, &manifest, &name)?
     };
     let task = model.task;
     // The standard menu: fp32 + the three quant-emulation variants + the
@@ -304,43 +368,7 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 
     // --listen: boot the network front door and serve until SIGTERM/SIGINT.
     if let Some(addr) = args.opt("listen") {
-        signal::install_term_handler();
-        // --log-json flips the structured event stream (brownout
-        // transitions, recalibrations, ...) from text to JSON lines.
-        pdq::obs::log::init(args.flag("log-json"), pdq::obs::log::Level::Info);
-        let trace = args.flag("trace");
-        let fd_cfg = FrontDoorConfig {
-            addr: addr.to_string(),
-            conn_threads: args.opt_usize("http-threads", 16),
-            max_connections: args.opt_usize("max-conns", 256),
-            trace,
-            ..Default::default()
-        };
-        let front = FrontDoor::start(Arc::new(server), fd_cfg)
-            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
-        println!("pdq-serve: listening on {}", front.url());
-        if trace {
-            println!("pdq-serve: flight recorder armed (GET /v1/traces, X-PDQ-Trace echo)");
-        }
-        println!(
-            "pdq-serve: {} variants of {name}, {} workers/variant, max queue depth {}",
-            keys.len(),
-            config.workers_per_variant,
-            config.max_queue_depth,
-        );
-        if let Some(b) = &config.brownout {
-            println!(
-                "pdq-serve: precision brownout on (p99 SLO {:.0} ms, enter {:?})",
-                b.slo_p99_us / 1000.0,
-                b.enter,
-            );
-        }
-        for k in &keys {
-            println!("pdq-serve:   variant {}", k.wire());
-        }
-        let m = front.wait(); // blocks until SIGTERM/SIGINT, then drains
-        println!("pdq-serve: drained. metrics: {}", m.to_json().to_string_compact());
-        return Ok(());
+        return run_front_door(server, &keys, &name, &config, addr, args);
     }
 
     // In-process demo: a mixed request stream through `submit`.
@@ -369,6 +397,128 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Boot the HTTP front door over a started coordinator and block until
+/// SIGTERM/SIGINT drains it (the shared tail of `pdq serve --listen`,
+/// whether the menu came from an in-process build or packed artifacts).
+fn run_front_door(
+    server: Server,
+    keys: &[VariantKey],
+    name: &str,
+    config: &ServerConfig,
+    addr: &str,
+    args: &Args,
+) -> anyhow::Result<()> {
+    signal::install_term_handler();
+    // --log-json flips the structured event stream (brownout
+    // transitions, recalibrations, ...) from text to JSON lines.
+    pdq::obs::log::init(args.flag("log-json"), pdq::obs::log::Level::Info);
+    let trace = args.flag("trace");
+    let fd_cfg = FrontDoorConfig {
+        addr: addr.to_string(),
+        conn_threads: args.opt_usize("http-threads", 16),
+        max_connections: args.opt_usize("max-conns", 256),
+        trace,
+        ..Default::default()
+    };
+    let front = FrontDoor::start(Arc::new(server), fd_cfg)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    println!("pdq-serve: listening on {}", front.url());
+    if trace {
+        println!("pdq-serve: flight recorder armed (GET /v1/traces, X-PDQ-Trace echo)");
+    }
+    println!(
+        "pdq-serve: {} variants of {name}, {} workers/variant, max queue depth {}",
+        keys.len(),
+        config.workers_per_variant,
+        config.max_queue_depth,
+    );
+    if config.max_models > 0 {
+        println!(
+            "pdq-serve: model zoo capped at {} models (LRU eviction of unpinned models)",
+            config.max_models,
+        );
+    }
+    if let Some(b) = &config.brownout {
+        println!(
+            "pdq-serve: precision brownout on (p99 SLO {:.0} ms, enter {:?})",
+            b.slo_p99_us / 1000.0,
+            b.enter,
+        );
+    }
+    for k in keys {
+        println!("pdq-serve:   variant {}", k.wire());
+    }
+    let m = front.wait(); // blocks until SIGTERM/SIGINT, then drains
+    println!("pdq-serve: drained. metrics: {}", m.to_json().to_string_compact());
+    Ok(())
+}
+
+/// `pdq pack` — compile one model into a `pdq-artifact-v1` file: int8
+/// weights, folded biases, Q31 requant specs and PDQ estimator tables,
+/// every payload section 64-byte aligned and individually CRC'd.
+fn cmd_pack(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    use pdq::artifact::{pack_to_file, PackOptions};
+    let out = args.opt_or("out", "model.pdqa").to_string();
+    let name = args.opt_or("model", "micro_resnet").to_string();
+    let model = if args.flag("synthetic") {
+        demo_model(&name)
+    } else {
+        let manifest = zoo::load_manifest(artifacts)?;
+        zoo::load_model(artifacts, &manifest, &name)?
+    };
+    let opts = PackOptions {
+        epoch: args.opt_u64("epoch", 1).max(1),
+        gamma: args.opt_usize("gamma", 1),
+        calib_source: if args.flag("synthetic") {
+            "synthetic-calib".into()
+        } else {
+            "task-calib".into()
+        },
+        ..Default::default()
+    };
+    pack_to_file(&model, opts, std::path::Path::new(&out))?;
+    let len = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("packed {name} -> {out} ({len} bytes)");
+    Ok(())
+}
+
+/// `pdq inspect` — verify an artifact end to end (magic, manifest schema,
+/// every payload section's checksum) and describe it. Any corruption is a
+/// nonzero exit: this is CI's tamper gate.
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let [path] = args.positional() else {
+        anyhow::bail!("usage: pdq inspect <artifact.pdqa> [--json]");
+    };
+    let report = pdq::artifact::inspect_path(std::path::Path::new(path))
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if args.flag("json") {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(())
+}
+
+/// `pdq repack` — recalibrate an artifact and write it back out with the
+/// epoch bumped (the recalibration-rollout loop: pack, serve, repack,
+/// `POST /v1/models` the new epoch).
+fn cmd_repack(args: &Args) -> anyhow::Result<()> {
+    let [input] = args.positional() else {
+        anyhow::bail!("usage: pdq repack <artifact.pdqa> --out NEW.pdqa");
+    };
+    let out = args.opt_or("out", "repacked.pdqa").to_string();
+    let bytes = std::fs::read(input).map_err(|e| anyhow::anyhow!("{input}: {e}"))?;
+    let repacked = pdq::artifact::repack(&bytes).map_err(|e| anyhow::anyhow!("{input}: {e}"))?;
+    std::fs::write(&out, &repacked)?;
+    let report =
+        pdq::artifact::inspect_bytes(&repacked).map_err(|e| anyhow::anyhow!("{out}: {e}"))?;
+    println!(
+        "repacked {input} -> {out} (model {}, epoch {})",
+        report.manifest.model, report.manifest.epoch
+    );
+    Ok(())
+}
+
 fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let target = args
         .opt("target")
@@ -384,6 +534,12 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         .opt("variants")
         .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
         .unwrap_or_default();
+    // --models a,b,c: drive every advertised variant of the named models,
+    // round-robin — the multi-model zoo drive (unions with --variants).
+    let models: Vec<String> = args
+        .opt("models")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+        .unwrap_or_default();
     let shift = match args.opt("shift") {
         Some(s) => Some(ShiftSpec::parse(s).map_err(anyhow::Error::msg)?),
         None => None,
@@ -394,6 +550,7 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         concurrency: args.opt_usize("concurrency", 4),
         duration: Duration::from_secs_f64(args.opt_f64("duration-s", 5.0)),
         variants,
+        models,
         seed: args.opt_u64("seed", 0x10AD),
         backoff_cap: Duration::from_millis(args.opt_u64("backoff-ms", 50)),
         shift,

@@ -8,12 +8,17 @@
 //! queueing. A [`Permit`] is RAII: dropping it — after the response was
 //! delivered, or on any early-exit path — frees the slot.
 //!
-//! The key set is fixed at construction (one slot counter per registered
-//! variant), so steady-state acquisition is a lock-free CAS on an atomic.
+//! The key map sits behind a `RwLock` so the model zoo can add and remove
+//! variants at runtime (hot load/unload), but the lock is only ever write-
+//! held for those rare membership changes: steady-state acquisition takes
+//! a shared read lock just long enough to clone the slot's `Arc`, then
+//! does a lock-free CAS on the atomic. A [`Permit`] holds its own `Arc`
+//! to the counter, so permits issued before a key was removed still
+//! release correctly afterwards — no leaked depth across an unload.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Why admission was denied.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -39,26 +44,46 @@ impl Drop for Permit {
 /// `/metrics` can report it).
 pub struct Admission<K: Ord> {
     limit: usize,
-    slots: BTreeMap<K, Arc<AtomicUsize>>,
+    slots: RwLock<BTreeMap<K, Arc<AtomicUsize>>>,
 }
 
 impl<K: Ord + Clone> Admission<K> {
     pub fn new(limit: usize, keys: impl IntoIterator<Item = K>) -> Self {
         let slots =
             keys.into_iter().map(|k| (k, Arc::new(AtomicUsize::new(0)))).collect();
-        Self { limit, slots }
+        Self { limit, slots: RwLock::new(slots) }
     }
 
     pub fn limit(&self) -> usize {
         self.limit
     }
 
+    /// Add a key (hot load). Idempotent: an existing counter is kept, so
+    /// in-flight depth survives a racing re-add.
+    pub fn insert(&self, key: K) {
+        self.slots
+            .write()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(AtomicUsize::new(0)));
+    }
+
+    /// Remove a key (hot unload). New acquisitions fail with
+    /// [`AdmissionError::UnknownKey`]; already-issued permits keep their
+    /// `Arc` to the counter and release normally.
+    pub fn remove(&self, key: &K) -> bool {
+        self.slots.write().unwrap().remove(key).is_some()
+    }
+
     /// Try to admit one request for `key`.
     pub fn try_acquire(&self, key: &K) -> Result<Permit, AdmissionError> {
-        let slot = self.slots.get(key).ok_or(AdmissionError::UnknownKey)?;
+        let slot = {
+            let slots = self.slots.read().unwrap();
+            Arc::clone(slots.get(key).ok_or(AdmissionError::UnknownKey)?)
+        };
         if self.limit == 0 {
             slot.fetch_add(1, Ordering::AcqRel);
-            return Ok(Permit { slot: Arc::clone(slot) });
+            return Ok(Permit { slot });
         }
         let mut cur = slot.load(Ordering::Acquire);
         loop {
@@ -66,7 +91,7 @@ impl<K: Ord + Clone> Admission<K> {
                 return Err(AdmissionError::Full { depth: self.limit });
             }
             match slot.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
-                Ok(_) => return Ok(Permit { slot: Arc::clone(slot) }),
+                Ok(_) => return Ok(Permit { slot }),
                 Err(seen) => cur = seen,
             }
         }
@@ -74,12 +99,22 @@ impl<K: Ord + Clone> Admission<K> {
 
     /// Current in-flight depth for `key` (0 for unknown keys).
     pub fn depth(&self, key: &K) -> usize {
-        self.slots.get(key).map(|s| s.load(Ordering::Acquire)).unwrap_or(0)
+        self.slots
+            .read()
+            .unwrap()
+            .get(key)
+            .map(|s| s.load(Ordering::Acquire))
+            .unwrap_or(0)
     }
 
     /// Snapshot of every (key, depth) pair — the `/metrics` gauge source.
     pub fn depths(&self) -> Vec<(K, usize)> {
-        self.slots.iter().map(|(k, s)| (k.clone(), s.load(Ordering::Acquire))).collect()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.load(Ordering::Acquire)))
+            .collect()
     }
 }
 
@@ -119,6 +154,31 @@ mod tests {
         assert_eq!(a.depth(&7), 100);
         drop(permits);
         assert_eq!(a.depth(&7), 0);
+    }
+
+    #[test]
+    fn dynamic_keys_and_permits_survive_removal() {
+        let a: Admission<String> = Admission::new(2, ["a".to_string()]);
+        assert_eq!(a.try_acquire(&"b".to_string()).unwrap_err(), AdmissionError::UnknownKey);
+        a.insert("b".to_string());
+        let pb = a.try_acquire(&"b".to_string()).unwrap();
+        assert_eq!(a.depth(&"b".to_string()), 1);
+        // Unload while a request is in flight: the key disappears for new
+        // admissions, but the outstanding permit still releases cleanly.
+        assert!(a.remove(&"b".to_string()));
+        assert!(!a.remove(&"b".to_string()));
+        assert_eq!(a.try_acquire(&"b".to_string()).unwrap_err(), AdmissionError::UnknownKey);
+        assert_eq!(a.depth(&"b".to_string()), 0, "removed key reads as empty");
+        drop(pb); // must not panic or underflow
+        // Re-add after removal starts from a fresh counter.
+        a.insert("b".to_string());
+        assert_eq!(a.depth(&"b".to_string()), 0);
+        let _p1 = a.try_acquire(&"b".to_string()).unwrap();
+        let _p2 = a.try_acquire(&"b".to_string()).unwrap();
+        assert_eq!(
+            a.try_acquire(&"b".to_string()).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
     }
 
     #[test]

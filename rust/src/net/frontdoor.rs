@@ -11,6 +11,12 @@
 //!   in-flight limit) is the request shed with `429` + a load-proportional
 //!   `Retry-After` (queue depth ÷ drain rate).
 //! - `GET /v1/variants` — the served (variant, input shape) catalog.
+//! - `GET /v1/models` / `POST /v1/models` / `DELETE /v1/models/{model}` —
+//!   the model zoo. POST hot-loads a `pdq-artifact-v1` menu (body is
+//!   either JSON `{"path": "…"}` or the raw artifact bytes); DELETE
+//!   unloads one model after its in-flight requests finish (pinned
+//!   startup models refuse with `403`). Loading past `--max-models`
+//!   evicts the least-recently-used unpinned model.
 //! - `GET /v1/drift` — per-variant drift/epoch/recalibration status
 //!   (404 unless the server was started with adaptation, `--adapt`).
 //! - `POST /v1/recalibrate[?variant=<wire>]` — manual shadow
@@ -27,6 +33,10 @@
 //!   (`accept → … → serialize`) and, on int8 variants, per-node kernel
 //!   spans. Disarmed (the default), responses are byte-identical to
 //!   pre-tracing builds and the hot path allocates nothing for tracing.
+//!   `?format=otlp` renders the same rings as one OTLP/JSON
+//!   `resourceSpans` document ([`crate::obs::otlp`]), including the
+//!   zoo's `zoo.load:…`/`zoo.unload:…` and the adaptation loop's
+//!   `adapt.epoch_swap:…` lifecycle spans.
 //!
 //! Graceful drain (SIGTERM via [`crate::net::signal`], or
 //! [`FrontDoor::shutdown`]): (1) the shutdown flag stops the accept loop
@@ -56,7 +66,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::server::{Server, SubmitError};
+use crate::coordinator::server::{Server, SubmitError, ZooError};
 use crate::engine::EngineError;
 use crate::net::http::{
     HttpError, HttpRequest, HttpResponse, ReadOutcome, RequestReader, Stage,
@@ -358,6 +368,9 @@ fn route_request(
         ("GET", "/healthz") => healthz(ctx),
         ("GET", "/metrics") => metrics(req, ctx),
         ("GET", "/v1/variants") => variants(ctx),
+        ("GET", "/v1/models") => models_get(ctx),
+        ("POST", "/v1/models") => models_post(req, ctx),
+        ("DELETE", p) if p.starts_with("/v1/models/") => models_delete(req, ctx),
         ("GET", "/v1/drift") => drift(ctx),
         ("GET", "/v1/traces") => traces(req, ctx),
         ("POST", "/v1/recalibrate") => recalibrate(req, ctx),
@@ -423,9 +436,14 @@ fn recalibrate(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
             Err(e) => return HttpResponse::error(400, &e),
         },
     };
+    let t0 = Instant::now();
     let outcomes = manager.recalibrate_now(filter.as_ref());
     if filter.is_some() && outcomes.is_empty() {
         return HttpResponse::error(404, "variant not registered for adaptation");
+    }
+    if outcomes.iter().any(|o| o.fired) {
+        let scope = filter.as_ref().map(|k| k.wire()).unwrap_or_else(|| "all".into());
+        commit_lifecycle(ctx, &format!("adapt.epoch_swap:{scope}"), t0);
     }
     let list: Vec<Json> = outcomes
         .iter()
@@ -447,7 +465,129 @@ fn traces(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
     if !ctx.trace {
         return HttpResponse::error(404, "tracing disabled (start the server with --trace)");
     }
+    if req.query_param("format") == Some("otlp") {
+        let doc = crate::obs::otlp::traces_to_otlp(&ctx.recorder.snapshot(), "pdq");
+        return HttpResponse::json(200, &doc);
+    }
     HttpResponse::json(200, &ctx.recorder.to_json(req.query_param("id")))
+}
+
+/// Commit a lifecycle trace (`zoo.load:…`, `zoo.unload:…`,
+/// `adapt.epoch_swap:…`) covering `[start, now]` to the flight recorder.
+/// No-op when tracing is disarmed. Lifecycle traces carry the dotted
+/// operation label in the variant slot; the OTLP exporter renders them as
+/// `INTERNAL` spans.
+fn commit_lifecycle(ctx: &Ctx, op: &str, start: Instant) {
+    if !ctx.trace {
+        return;
+    }
+    let h = TraceHandle::new(TraceId::mint(), start);
+    h.set_request(op, 0);
+    ctx.recorder.commit(h.finish(Instant::now()), 0.0);
+}
+
+/// Map a zoo refusal onto HTTP. Name clashes and a full pinned zoo are
+/// conflicts; unknown models don't exist; pinned models may not be
+/// unloaded remotely; drain refuses new models like it refuses new work.
+fn zoo_error(e: &ZooError) -> HttpResponse {
+    let status = match e {
+        ZooError::AlreadyLoaded(_) | ZooError::Full { .. } => 409,
+        ZooError::UnknownModel(_) => 404,
+        ZooError::Pinned(_) => 403,
+        ZooError::Draining => 503,
+        ZooError::Invalid(_) => 400,
+    };
+    HttpResponse::error(status, &e.to_string())
+}
+
+fn models_get(ctx: &Ctx) -> HttpResponse {
+    let list: Vec<Json> = ctx
+        .server
+        .models()
+        .iter()
+        .map(|m| {
+            let mut v = Json::obj();
+            v.set("model", m.name.as_str())
+                .set("epoch", m.epoch)
+                .set("pinned", m.pinned)
+                .set("variants", m.variants)
+                .set("last_used", m.last_used);
+            v
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("models", Json::Arr(list)).set("max_models", ctx.server.max_models());
+    HttpResponse::json(200, &o)
+}
+
+fn models_post(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    use crate::artifact::ArtifactEngine;
+    let t0 = Instant::now();
+    // Raw artifact bytes are self-identifying by magic; anything else must
+    // be a JSON body naming a server-local path.
+    let loaded = if req.body.starts_with(b"PDQA1") {
+        ArtifactEngine::from_bytes(&req.body)
+    } else {
+        let Ok(text) = std::str::from_utf8(&req.body) else {
+            return HttpResponse::error(
+                400,
+                "body is neither a pdq-artifact-v1 image nor JSON",
+            );
+        };
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return HttpResponse::error(400, &format!("bad JSON body: {e}")),
+        };
+        let Some(path) = j.get("path").and_then(|p| p.as_str()) else {
+            return HttpResponse::error(
+                400,
+                "JSON body must carry {\"path\": \"...\"} (or POST the raw artifact bytes)",
+            );
+        };
+        ArtifactEngine::load(std::path::Path::new(path))
+    };
+    let art = match loaded {
+        Ok(a) => a,
+        // Every artifact defect — bad magic, truncation, checksum, schema —
+        // is the caller's fault: typed, never a panic.
+        Err(e) => return HttpResponse::error(400, &format!("artifact rejected: {e}")),
+    };
+    let name = art.manifest().model.clone();
+    let epoch = art.manifest().epoch;
+    let menu = art.into_menu();
+    let variants = menu.len();
+    match ctx.server.hot_load(menu, epoch) {
+        Ok(evicted) => {
+            commit_lifecycle(ctx, &format!("zoo.load:{name}"), t0);
+            let mut o = Json::obj();
+            o.set("loaded", name.as_str())
+                .set("epoch", epoch)
+                .set("variants", variants)
+                .set(
+                    "evicted",
+                    Json::Arr(evicted.iter().map(|n| Json::from(n.as_str())).collect()),
+                );
+            HttpResponse::json(200, &o)
+        }
+        Err(e) => zoo_error(&e),
+    }
+}
+
+fn models_delete(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    let t0 = Instant::now();
+    let name = req.path.trim_start_matches("/v1/models/");
+    if name.is_empty() || name.contains('/') {
+        return HttpResponse::error(400, "expected DELETE /v1/models/{model}");
+    }
+    match ctx.server.unload_model(name) {
+        Ok(()) => {
+            commit_lifecycle(ctx, &format!("zoo.unload:{name}"), t0);
+            let mut o = Json::obj();
+            o.set("unloaded", name);
+            HttpResponse::json(200, &o)
+        }
+        Err(e) => zoo_error(&e),
+    }
 }
 
 fn healthz(ctx: &Ctx) -> HttpResponse {
@@ -598,9 +738,8 @@ fn infer(req: &HttpRequest, ctx: &Ctx, accepted: (Instant, Instant)) -> HttpResp
     // before it costs a queue slot. (Defense in depth only: if this check
     // is bypassed, the engine returns a typed ShapeMismatch below rather
     // than panicking a worker.)
-    if let Some((_, want)) =
-        ctx.server.catalog().iter().find(|(k, _)| *k == wire_req.variant)
-    {
+    let catalog = ctx.server.catalog();
+    if let Some((_, want)) = catalog.iter().find(|(k, _)| *k == wire_req.variant) {
         if wire_req.image.shape() != want {
             let resp = HttpResponse::error(
                 400,
@@ -797,6 +936,98 @@ mod tests {
         assert_eq!(retry_after_ms(1, 100.0, 4), 1);
         assert_eq!(retry_after_ms(10_000, 100_000.0, 1), 5000);
         assert_eq!(retry_after_ms(4, 10_000.0, 0), 40);
+    }
+
+    #[test]
+    fn zoo_endpoints_hot_load_and_unload_over_http() {
+        let cfg = FrontDoorConfig { trace: true, ..FrontDoorConfig::default() };
+        let fd = FrontDoor::start(tiny_server(), cfg).unwrap();
+        let addr = fd.local_addr().to_string();
+        let mut client = wire::Client::new(&addr);
+        let parse = |body: &[u8]| Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+
+        // The catalog starts with just the pinned startup model.
+        let r = client.get("/v1/models").unwrap();
+        assert_eq!(r.status, 200);
+        let j = parse(&r.body);
+        let models = j.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(models[0].get("pinned").unwrap().as_bool(), Some(true));
+
+        // Hot-load a freshly packed artifact by POSTing its raw bytes.
+        let model = crate::coordinator::calibrate::demo_model("zoo");
+        let opts = crate::artifact::PackOptions {
+            epoch: 3,
+            calib_size: 4,
+            ..crate::artifact::PackOptions::default()
+        };
+        let bytes = crate::artifact::pack_model(&model, opts).unwrap();
+        let r = client
+            .request("POST", "/v1/models", "application/octet-stream", &bytes)
+            .unwrap();
+        assert_eq!(r.status, 200, "load failed: {}", String::from_utf8_lossy(&r.body));
+        let j = parse(&r.body);
+        assert_eq!(j.get("loaded").unwrap().as_str(), Some("zoo"));
+        assert_eq!(j.get("epoch").unwrap().as_f64(), Some(3.0));
+        assert!(j.get("variants").unwrap().as_f64().unwrap() >= 1.0);
+
+        // Loading the same name again is a conflict, not a panic.
+        let r = client
+            .request("POST", "/v1/models", "application/octet-stream", &bytes)
+            .unwrap();
+        assert_eq!(r.status, 409);
+
+        // The new model's variants join the serving catalog.
+        let r = client.get("/v1/variants").unwrap();
+        let j = parse(&r.body);
+        assert!(j
+            .get("variants")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|v| v.get("variant").unwrap().as_str().unwrap().starts_with("zoo|")));
+
+        // Hostile loads are refused with typed 400s.
+        let r = client
+            .request("POST", "/v1/models", "application/octet-stream", b"PDQA1\n garbage")
+            .unwrap();
+        assert_eq!(r.status, 400);
+        let r = client
+            .request("POST", "/v1/models", "application/json", b"{\"nope\": 1}")
+            .unwrap();
+        assert_eq!(r.status, 400);
+
+        // Pinned startup models refuse remote unload; the hot-loaded one
+        // unloads cleanly, exactly once.
+        let r = client.request("DELETE", "/v1/models/m", "", &[]).unwrap();
+        assert_eq!(r.status, 403);
+        let r = client.request("DELETE", "/v1/models/zoo", "", &[]).unwrap();
+        assert_eq!(r.status, 200);
+        let r = client.request("DELETE", "/v1/models/zoo", "", &[]).unwrap();
+        assert_eq!(r.status, 404);
+
+        // The lifecycle left OTLP spans behind: one load, one unload.
+        let r = client.get("/v1/traces?format=otlp").unwrap();
+        assert_eq!(r.status, 200);
+        let doc = parse(&r.body);
+        let spans = doc.get("resourceSpans").unwrap().as_arr().unwrap()[0]
+            .get("scopeSpans")
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+            .get("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .to_vec();
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"zoo.load:zoo"), "got spans: {names:?}");
+        assert!(names.contains(&"zoo.unload:zoo"), "got spans: {names:?}");
+
+        fd.shutdown();
     }
 
     #[test]

@@ -106,6 +106,10 @@ pub struct LoadgenConfig {
     pub duration: Duration,
     /// Variant wire names to drive; empty = every advertised variant.
     pub variants: Vec<String>,
+    /// Model names to drive (every advertised variant of each, so traffic
+    /// round-robins across the zoo). Unions with `variants`; both empty =
+    /// everything.
+    pub models: Vec<String>,
     pub seed: u64,
     /// Closed loop only: cap on honoring the server's 429 retry hint
     /// (zero = hammer without backing off).
@@ -122,6 +126,7 @@ impl Default for LoadgenConfig {
             concurrency: 4,
             duration: Duration::from_secs(5),
             variants: Vec::new(),
+            models: Vec::new(),
             seed: 0x10AD,
             backoff_cap: Duration::from_millis(50),
             shift: None,
@@ -265,7 +270,12 @@ fn discover(cfg: &LoadgenConfig) -> Result<Vec<TargetVariant>, String> {
         .enumerate()
     {
         let wire = v.get("variant").and_then(|s| s.as_str()).ok_or("entry missing name")?;
-        if !cfg.variants.is_empty() && !cfg.variants.iter().any(|w| w == wire) {
+        let model = wire.split('|').next().unwrap_or("");
+        let unfiltered = cfg.variants.is_empty() && cfg.models.is_empty();
+        if !unfiltered
+            && !cfg.variants.iter().any(|w| w == wire)
+            && !cfg.models.iter().any(|m| m == model)
+        {
             continue;
         }
         let dims: Vec<usize> = v
@@ -295,9 +305,13 @@ fn discover(cfg: &LoadgenConfig) -> Result<Vec<TargetVariant>, String> {
         });
     }
     if out.is_empty() {
-        return Err(match cfg.variants.is_empty() {
-            true => "server advertises no variants".into(),
-            false => format!("none of {:?} advertised by the server", cfg.variants),
+        return Err(if cfg.variants.is_empty() && cfg.models.is_empty() {
+            "server advertises no variants".into()
+        } else {
+            format!(
+                "none of variants={:?} models={:?} advertised by the server",
+                cfg.variants, cfg.models
+            )
         });
     }
     // Keep requested order deterministic for the round-robin mix.
@@ -633,7 +647,7 @@ fn top1(outputs: &[Tensor<f32>]) -> usize {
 /// variant filter — the rung rows are only meaningful against the full
 /// catalog.
 fn rung_accuracy(cfg: &LoadgenConfig, images: usize) -> Result<Vec<RungReport>, String> {
-    let all = LoadgenConfig { variants: Vec::new(), ..cfg.clone() };
+    let all = LoadgenConfig { variants: Vec::new(), models: Vec::new(), ..cfg.clone() };
     let targets = discover(&all)?;
     let mut client = Client::new(&cfg.target);
     let mut preds: Vec<(Vec<usize>, f32)> = Vec::with_capacity(targets.len());

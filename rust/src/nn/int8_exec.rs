@@ -247,6 +247,35 @@ impl Int8Executor {
         })
     }
 
+    /// Assemble an 8-bit program from already-lowered nodes — the artifact
+    /// load path, where every [`Int8Layer`] was deserialized rather than
+    /// derived from a live [`QuantExecutor`]. The caller (the artifact
+    /// loader) is responsible for `nodes` mirroring `graph`'s topology;
+    /// rungs then derive from this program exactly as from a lowered one.
+    pub(crate) fn from_parts(
+        graph: &Graph,
+        nodes: Vec<Int8Node>,
+        mode: QuantMode,
+        gamma: usize,
+        weight_gran: Granularity,
+        input_q: QOut,
+    ) -> Self {
+        let plan = Arc::new(MemoryPlan::packed(graph));
+        let arena = Mutex::new(Int8Arena::new(Arc::clone(&plan)));
+        Self {
+            nodes,
+            input_shape: graph.input_shape().clone(),
+            output_ids: graph.output_ids(),
+            mode,
+            bits: 8,
+            gamma: gamma.max(1),
+            weight_gran,
+            input_q,
+            plan,
+            arena,
+        }
+    }
+
     /// Derive a nested lower-precision rung (`bits` ∈ {8, 4, 2}) from this
     /// 8-bit program. The int8 weight tensors are shared (`Arc` clones — no
     /// second weight copy); rung `b` truncates them by `8 − b` bits inline
@@ -1276,7 +1305,9 @@ fn rung_layer(l: &Int8Layer, shift: u32, is_linear: bool, mode: QuantMode, in_q:
 }
 
 /// Fold a float bias onto the `s_in·s_w` i32 accumulator grid.
-fn fold_bias(bias_f: &[f32], s_in: f32, s_w: &[f32], buf: &mut Vec<i32>) {
+/// (`pub(crate)`: the artifact loader re-derives folded biases to verify
+/// a payload's `bq{i}` sections bit-exactly.)
+pub(crate) fn fold_bias(bias_f: &[f32], s_in: f32, s_w: &[f32], buf: &mut Vec<i32>) {
     buf.clear();
     buf.extend(bias_f.iter().enumerate().map(|(v, &b)| {
         let sw = s_w[if s_w.len() == 1 { 0 } else { v }];
@@ -1287,7 +1318,9 @@ fn fold_bias(bias_f: &[f32], s_in: f32, s_w: &[f32], buf: &mut Vec<i32>) {
 }
 
 /// Requant spec for effective scales `s_in·s_w / s_out` onto `q_out`.
-fn build_requant(s_in: f32, s_w: &[f32], q_out: QOut) -> Requant {
+/// (`pub(crate)`: the artifact loader re-derives requant specs to verify
+/// a payload's `rq{i}` sections bit-exactly.)
+pub(crate) fn build_requant(s_in: f32, s_w: &[f32], q_out: QOut) -> Requant {
     if s_w.len() == 1 {
         Requant::per_tensor(s_in as f64 * s_w[0] as f64 / q_out.scale as f64, q_out.zero)
     } else {
@@ -1463,7 +1496,9 @@ fn add_s8_into(a: &[i8], qa: QOut, b: &[i8], qb: QOut, out: &mut [i8]) -> QOut {
 }
 
 /// Output grid of a residual add: the representable ranges summed.
-fn add_grid(qa: QOut, qb: QOut) -> QOut {
+/// (`pub(crate)`: the artifact loader replays the static grid chain to
+/// verify stored requant specs bit-exactly.)
+pub(crate) fn add_grid(qa: QOut, qb: QOut) -> QOut {
     let lo = qa.scale * (-128 - qa.zero) as f32 + qb.scale * (-128 - qb.zero) as f32;
     let hi = qa.scale * (127 - qa.zero) as f32 + qb.scale * (127 - qb.zero) as f32;
     qout(&QParams::from_range(lo, hi, 8))

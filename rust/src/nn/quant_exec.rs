@@ -254,6 +254,34 @@ impl QuantExecutor {
         self.layers.values().all(|s| s.static_ranges.is_some())
     }
 
+    /// Restore one layer's frozen calibration instead of re-running
+    /// [`QuantExecutor::calibrate`] — the artifact load path. Installs the
+    /// exact ranges/interval a prior calibration produced (the frozen
+    /// parameter set is re-derived from the ranges, which is bit-exact:
+    /// `ranges_to_set` is deterministic). Returns `false` when `idx` is
+    /// not a quantizable node of this graph, or when `ranges` is empty
+    /// (`ranges_to_set` needs at least one pair).
+    pub fn restore_calibration(
+        &mut self,
+        idx: usize,
+        ranges: Vec<(f32, f32)>,
+        interval: IntervalSpec,
+    ) -> bool {
+        if ranges.is_empty() {
+            return false;
+        }
+        let (gran, bits) = (self.settings.granularity, self.settings.bits);
+        match self.layers.get_mut(&idx) {
+            Some(st) => {
+                st.static_set = Some(ranges_to_set(&ranges, gran, bits));
+                st.static_ranges = Some(ranges);
+                st.interval = interval;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Calibrated state of the quantizable node `idx` (int8 lowering).
     pub(crate) fn layer_state(&self, idx: usize) -> Option<&LayerState> {
         self.layers.get(&idx)

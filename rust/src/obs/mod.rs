@@ -15,6 +15,10 @@
 //! - [`recorder`] — the lock-cheap ring-buffer [`FlightRecorder`]: the
 //!   last N traces plus every anomalous one (shed, degraded rung, engine
 //!   error, timeout, p99 outlier), served at `GET /v1/traces[?id=]`.
+//! - [`otlp`] — OTLP/JSON-shaped export of the recorder's traces
+//!   (`GET /v1/traces?format=otlp`): one `resourceSpans` document whose
+//!   spans any OpenTelemetry-compatible viewer ingests, including the
+//!   zoo's hot-load/unload and the adaptation epoch-swap lifecycle spans.
 //! - [`log`] — leveled, rate-limited structured events (brownout
 //!   transitions, recalibration decisions); human text or `--log-json`.
 //! - [`report`] — `pdq perf-report`: per-metric deltas across
@@ -24,6 +28,7 @@
 //! Everything is std-only, like the rest of the crate.
 
 pub mod log;
+pub mod otlp;
 pub mod recorder;
 pub mod report;
 pub mod trace;

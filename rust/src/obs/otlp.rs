@@ -1,0 +1,271 @@
+//! OTLP/JSON export of flight-recorder traces.
+//!
+//! `GET /v1/traces?format=otlp` renders the recorder's retained traces as
+//! one OTLP `ExportTraceServiceRequest`-shaped JSON document
+//! (`resourceSpans → scopeSpans → spans`), so any OpenTelemetry-compatible
+//! viewer can ingest PDQ traces without a collector sidecar. Shape rules
+//! honored here (the conformance test pins them):
+//!
+//! - `traceId` is 32 lowercase hex chars, `spanId`/`parentSpanId` 16.
+//! - `startTimeUnixNano`/`endTimeUnixNano` are decimal **strings** (the
+//!   OTLP/JSON encoding for 64-bit integers; they exceed f64's exact
+//!   integer range).
+//! - Integer attribute values ride in `intValue` as strings for the same
+//!   reason.
+//!
+//! Each [`Trace`] becomes a root span (kind `SERVER` for inference
+//! requests, `INTERNAL` for lifecycle operations — the zoo's
+//! `zoo.load:…`/`zoo.unload:…` and the adaptation loop's
+//! `adapt.epoch_swap:…` traces) plus one child span per recorded pipeline
+//! stage. Per-node kernel spans stay in the native `/v1/traces` document;
+//! they carry no absolute timestamps, which OTLP spans require.
+
+use std::sync::Arc;
+
+use super::trace::{Trace, TraceOutcome};
+use crate::util::json::Json;
+
+/// splitmix64 (local copy): derives deterministic, collision-resistant
+/// child span IDs from the trace ID and the span's index.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Our 64-bit trace IDs, zero-extended to OTLP's 128-bit hex form.
+fn trace_id_hex(id: u64) -> String {
+    format!("0000000000000000{id:016x}")
+}
+
+fn span_id_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// `{"key": k, "value": {"stringValue": v}}`
+fn attr_str(key: &str, val: &str) -> Json {
+    let mut v = Json::obj();
+    v.set("stringValue", val);
+    let mut a = Json::obj();
+    a.set("key", key).set("value", v);
+    a
+}
+
+/// `{"key": k, "value": {"intValue": "<v>"}}` — stringified per OTLP/JSON.
+fn attr_int(key: &str, val: u64) -> Json {
+    let mut v = Json::obj();
+    v.set("intValue", val.to_string());
+    let mut a = Json::obj();
+    a.set("key", key).set("value", v);
+    a
+}
+
+/// Lifecycle traces (zoo membership changes, epoch swaps) are committed
+/// with a dotted operation label in the `variant` slot; everything else is
+/// an inference request.
+fn is_lifecycle(variant: &str) -> bool {
+    variant.starts_with("zoo.") || variant.starts_with("adapt.")
+}
+
+/// Offset a trace's wall-clock epoch by a span-relative µs offset.
+fn nanos_at(epoch_unix_nanos: u64, offset_us: f64) -> u64 {
+    epoch_unix_nanos.saturating_add((offset_us.max(0.0) * 1000.0) as u64)
+}
+
+fn span_json(trace: &Trace) -> Vec<Json> {
+    let id = trace.id.as_u64();
+    let root_span_id = span_id_hex(id);
+    let lifecycle = is_lifecycle(&trace.variant);
+    let mut out = Vec::with_capacity(1 + trace.spans.len());
+    let mut root = Json::obj();
+    let mut status = Json::obj();
+    status.set(
+        "code",
+        match trace.outcome {
+            TraceOutcome::Ok | TraceOutcome::Degraded => 1u64, // STATUS_CODE_OK
+            _ => 2u64,                                         // STATUS_CODE_ERROR
+        },
+    );
+    root.set("traceId", trace_id_hex(id))
+        .set("spanId", root_span_id.clone())
+        .set(
+            "name",
+            if lifecycle {
+                trace.variant.clone()
+            } else {
+                format!("infer {}", trace.variant)
+            },
+        )
+        // SPAN_KIND_INTERNAL = 1, SPAN_KIND_SERVER = 2.
+        .set("kind", if lifecycle { 1u64 } else { 2u64 })
+        .set("startTimeUnixNano", nanos_at(trace.epoch_unix_nanos, 0.0).to_string())
+        .set(
+            "endTimeUnixNano",
+            nanos_at(trace.epoch_unix_nanos, trace.total_us).to_string(),
+        )
+        .set(
+            "attributes",
+            Json::Arr(vec![
+                attr_str("pdq.variant", &trace.variant),
+                attr_int("pdq.request_id", trace.request_id),
+                attr_int("pdq.bits", trace.bits as u64),
+                attr_str("pdq.outcome", trace.outcome.as_str()),
+            ]),
+        )
+        .set("status", status);
+    out.push(root);
+    for (i, s) in trace.spans.iter().enumerate() {
+        let mut child = Json::obj();
+        child
+            .set("traceId", trace_id_hex(id))
+            .set("spanId", span_id_hex(splitmix64(id ^ (i as u64 + 1))))
+            .set("parentSpanId", root_span_id.clone())
+            .set("name", format!("stage.{}", s.stage.as_str()))
+            .set("kind", 1u64)
+            .set(
+                "startTimeUnixNano",
+                nanos_at(trace.epoch_unix_nanos, s.start_us).to_string(),
+            )
+            .set(
+                "endTimeUnixNano",
+                nanos_at(trace.epoch_unix_nanos, s.end_us).to_string(),
+            )
+            .set(
+                "attributes",
+                Json::Arr(vec![attr_str("pdq.stage", s.stage.as_str())]),
+            );
+        out.push(child);
+    }
+    out
+}
+
+/// Render traces as one OTLP/JSON `resourceSpans` document for
+/// `service.name = service`.
+pub fn traces_to_otlp(traces: &[Arc<Trace>], service: &str) -> Json {
+    let spans: Vec<Json> = traces.iter().flat_map(|t| span_json(t)).collect();
+    let mut scope = Json::obj();
+    scope.set("name", "pdq.flightrecorder").set("version", "1");
+    let mut scope_spans = Json::obj();
+    scope_spans.set("scope", scope).set("spans", Json::Arr(spans));
+    let mut resource = Json::obj();
+    resource.set("attributes", Json::Arr(vec![attr_str("service.name", service)]));
+    let mut resource_spans = Json::obj();
+    resource_spans
+        .set("resource", resource)
+        .set("scopeSpans", Json::Arr(vec![scope_spans]));
+    let mut doc = Json::obj();
+    doc.set("resourceSpans", Json::Arr(vec![resource_spans]));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Stage, TraceHandle, TraceId};
+    use std::time::{Duration, Instant};
+
+    fn hexish(s: &str, len: usize) -> bool {
+        s.len() == len && s.bytes().all(|b| b.is_ascii_hexdigit())
+    }
+
+    #[test]
+    fn otlp_document_shape_conforms() {
+        let t0 = Instant::now();
+        let h = TraceHandle::new(TraceId::from_u64(0xABCD).unwrap(), t0);
+        h.set_request("m|int8-ours-t", 42);
+        h.set_bits(8);
+        h.span(Stage::Parse, t0, t0 + Duration::from_micros(10));
+        h.span(Stage::Execute, t0 + Duration::from_micros(20), t0 + Duration::from_micros(90));
+        let trace = Arc::new(h.finish(t0 + Duration::from_micros(100)));
+
+        let doc = traces_to_otlp(&[trace], "pdq");
+        let rs = doc.get("resourceSpans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rs.len(), 1);
+        let service = rs[0]
+            .get("resource")
+            .and_then(|r| r.get("attributes"))
+            .and_then(|a| a.as_arr())
+            .unwrap();
+        assert_eq!(service[0].get("key").and_then(|k| k.as_str()), Some("service.name"));
+        assert_eq!(
+            service[0]
+                .get("value")
+                .and_then(|v| v.get("stringValue"))
+                .and_then(|v| v.as_str()),
+            Some("pdq")
+        );
+        let ss = rs[0].get("scopeSpans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(ss.len(), 1);
+        let spans = ss[0].get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(spans.len(), 3, "root + 2 stage spans");
+
+        let root = &spans[0];
+        let root_span_id = root.get("spanId").and_then(|v| v.as_str()).unwrap();
+        assert!(hexish(root.get("traceId").and_then(|v| v.as_str()).unwrap(), 32));
+        assert!(hexish(root_span_id, 16));
+        assert!(root.get("parentSpanId").is_none(), "root has no parent");
+        assert_eq!(root.get("name").and_then(|v| v.as_str()), Some("infer m|int8-ours-t"));
+        assert_eq!(root.get("kind").and_then(|v| v.as_f64()), Some(2.0), "SERVER");
+        assert_eq!(
+            root.get("status").and_then(|s| s.get("code")).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+
+        // Timestamps are decimal strings with start <= end, anchored on
+        // the trace's wall-clock epoch.
+        for span in spans {
+            let start: u64 = span
+                .get("startTimeUnixNano")
+                .and_then(|v| v.as_str())
+                .unwrap()
+                .parse()
+                .unwrap();
+            let end: u64 =
+                span.get("endTimeUnixNano").and_then(|v| v.as_str()).unwrap().parse().unwrap();
+            assert!(start <= end);
+            assert!(start > 1_000_000_000_000_000_000, "absolute unix nanos, not offsets");
+        }
+
+        // Stage spans parent onto the root and carry distinct span IDs.
+        let mut seen = std::collections::BTreeSet::new();
+        seen.insert(root_span_id.to_string());
+        for child in &spans[1..] {
+            assert_eq!(
+                child.get("parentSpanId").and_then(|v| v.as_str()),
+                Some(root_span_id)
+            );
+            let sid = child.get("spanId").and_then(|v| v.as_str()).unwrap();
+            assert!(hexish(sid, 16));
+            assert!(seen.insert(sid.to_string()), "span IDs must be unique");
+            assert!(child
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap()
+                .starts_with("stage."));
+        }
+
+        // The whole document survives a JSON round-trip.
+        let text = doc.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn lifecycle_traces_export_as_internal_spans() {
+        let t0 = Instant::now();
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        h.set_request("zoo.load:resnet", 0);
+        let trace = Arc::new(h.finish(t0 + Duration::from_micros(500)));
+        let doc = traces_to_otlp(&[trace], "pdq");
+        let span = doc.get("resourceSpans").and_then(|v| v.as_arr()).unwrap()[0]
+            .get("scopeSpans")
+            .and_then(|v| v.as_arr())
+            .unwrap()[0]
+            .get("spans")
+            .and_then(|v| v.as_arr())
+            .unwrap()[0]
+            .clone();
+        assert_eq!(span.get("name").and_then(|v| v.as_str()), Some("zoo.load:resnet"));
+        assert_eq!(span.get("kind").and_then(|v| v.as_f64()), Some(1.0), "INTERNAL");
+    }
+}

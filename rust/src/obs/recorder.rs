@@ -127,6 +127,20 @@ impl FlightRecorder {
         let g = self.inner.lock().unwrap();
         (g.committed, g.anomalies)
     }
+
+    /// Every retained trace, oldest first, with anomalous traces that also
+    /// sit in the recent ring deduplicated (they share one `Arc`). The
+    /// OTLP exporter's source.
+    pub fn snapshot(&self) -> Vec<Arc<Trace>> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Arc<Trace>> = g.recent.iter().cloned().collect();
+        for t in &g.anomalous {
+            if !out.iter().any(|r| Arc::ptr_eq(r, t)) {
+                out.push(Arc::clone(t));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]

@@ -221,6 +221,10 @@ pub struct Trace {
     pub kernel: Vec<KernelSpan>,
     /// End-to-end duration from trace epoch to serialize end, µs.
     pub total_us: f64,
+    /// Wall-clock trace epoch, nanoseconds since the Unix epoch (stamped
+    /// once at handle creation). Span offsets add onto this for exporters
+    /// needing absolute time (OTLP); 0 when the clock was unavailable.
+    pub epoch_unix_nanos: u64,
 }
 
 impl Trace {
@@ -272,6 +276,7 @@ struct TraceBody {
 #[derive(Clone, Debug)]
 pub struct TraceHandle {
     t0: Instant,
+    unix0: u64,
     body: Arc<Mutex<TraceBody>>,
 }
 
@@ -281,6 +286,10 @@ impl TraceHandle {
     pub fn new(id: TraceId, t0: Instant) -> TraceHandle {
         TraceHandle {
             t0,
+            unix0: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0),
             body: Arc::new(Mutex::new(TraceBody {
                 id,
                 variant: String::new(),
@@ -364,6 +373,7 @@ impl TraceHandle {
             spans,
             kernel: b.kernel.clone(),
             total_us,
+            epoch_unix_nanos: self.unix0,
         }
     }
 }

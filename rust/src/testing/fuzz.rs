@@ -11,8 +11,10 @@
 //!   penetrate far deeper than pure byte noise.
 //! - **Targets** — one per parser: [`target_http_request`],
 //!   [`target_wire_preamble`], [`target_variant_wire`], [`target_json`],
-//!   [`target_shape`], [`target_trace_header`]. A target panics on any
-//!   violated invariant; merely
+//!   [`target_shape`], [`target_trace_header`], plus the artifact-format
+//!   pair [`target_manifest_json`] and [`target_artifact_payload`]
+//!   (corrupting a once-packed genuine `pdq-artifact-v1` blob). A target
+//!   panics on any violated invariant; merely
 //!   returning an error is the *correct* response to hostile input.
 //!   Where possible the target is differential: the HTTP target parses
 //!   every input twice — one whole read vs. randomly stuttered reads
@@ -33,10 +35,13 @@
 
 use std::io::Read;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::artifact::{
+    inspect_bytes, pack_model, ArtifactEngine, Manifest, PackOptions, HEADER_LEN, MAGIC,
+};
 use crate::cmsis::{convolve_s8, dwconv_s8, fast, fully_connected_s8, Requant};
-use crate::engine::{VariantKey, VariantSpec};
+use crate::engine::{Engine, VariantKey, VariantSpec};
 use crate::net::http::{ReadOutcome, RequestReader};
 use crate::net::wire;
 use crate::nn::quant_exec::{QuantExecutor, QuantSettings};
@@ -471,6 +476,152 @@ pub fn target_shape(data: &[u8]) {
     let _ = wire::decode_infer_request(&body);
 }
 
+// ---- artifact format targets -----------------------------------------------
+
+/// One genuine `pdq-artifact-v1` blob (the tiny synthetic demo model),
+/// packed once per process and shared by the artifact generators:
+/// corruption that starts from a valid baseline penetrates far past the
+/// magic/CRC outer wall, where pure byte noise dies immediately.
+fn baseline_artifact() -> &'static [u8] {
+    static BLOB: OnceLock<Vec<u8>> = OnceLock::new();
+    BLOB.get_or_init(|| {
+        let model = crate::coordinator::calibrate::demo_model("fuzz_artifact");
+        pack_model(&model, PackOptions { calib_size: 4, ..PackOptions::default() })
+            .expect("baseline artifact packs")
+    })
+}
+
+/// The baseline artifact's manifest JSON text (header framing stripped).
+fn baseline_manifest_text() -> &'static str {
+    let art = baseline_artifact();
+    let mlen = u32::from_le_bytes([art[6], art[7], art[8], art[9]]) as usize;
+    std::str::from_utf8(&art[HEADER_LEN..HEADER_LEN + mlen]).expect("manifest is UTF-8")
+}
+
+/// Manifest JSON documents: mostly the genuine baseline manifest with one
+/// structured field tampered (wrong schema, zero epoch, hostile model
+/// names, emptied graph/section/variant lists, a dropped top-level key),
+/// sometimes arbitrary JSON — the mutation layer adds byte damage on top.
+pub fn gen_manifest_json(rng: &mut Pcg32) -> Vec<u8> {
+    if rng.below(6) == 0 {
+        return gen_json(rng);
+    }
+    let mut doc = Json::parse(baseline_manifest_text()).expect("baseline manifest parses");
+    match rng.below(10) {
+        // Genuine — must parse and survive the round trip untouched.
+        0 | 1 => {}
+        2 => {
+            doc.set("schema", *rng.choice(&["pdq-artifact-v2", "", "PDQ-ARTIFACT-V1"]));
+        }
+        3 => {
+            doc.set("epoch", 0u64);
+        }
+        4 => {
+            doc.set("model", *rng.choice(&["", "café", "a b", "m|fp32", "m\"q"]));
+        }
+        5 => {
+            doc.set("epoch", f64::from_bits(rng.next_u64()));
+        }
+        6 => {
+            let mut g = Json::obj();
+            g.set("nodes", Json::Arr(Vec::new())).set("outputs", Json::Arr(Vec::new()));
+            doc.set("graph", g);
+        }
+        7 => {
+            doc.set("sections", Json::Arr(Vec::new()));
+        }
+        8 => {
+            doc.set("variants", Json::Arr(vec![Json::from("m|fp32")]));
+        }
+        // Drop one random top-level key: every field is required.
+        _ => {
+            if let Json::Obj(map) = &mut doc {
+                let keys: Vec<String> = map.keys().cloned().collect();
+                if !keys.is_empty() {
+                    let k = rng.choice(&keys).clone();
+                    map.remove(&k);
+                }
+            }
+        }
+    }
+    doc.to_string_compact().into_bytes()
+}
+
+/// `Manifest::parse` must never panic on arbitrary text; any manifest it
+/// accepts must `validate()` without panicking against arbitrary payload
+/// lengths (typed errors are the correct response) and must re-serialize
+/// to a stable fixed point — floats ride as exact bit patterns
+/// (`to_bits` integers), so the round trip is bit-exact by construction.
+pub fn target_manifest_json(data: &[u8]) {
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    if let Ok(m) = Manifest::parse(s) {
+        let _ = m.validate(0);
+        let _ = m.validate(usize::MAX);
+        let s1 = m.to_json().to_string_compact();
+        let m2 = Manifest::parse(&s1).expect("re-serialized manifest must reparse");
+        assert_eq!(s1, m2.to_json().to_string_compact(), "manifest JSON is not a fixed point");
+    }
+}
+
+/// Whole-artifact byte blobs: the valid baseline, header-targeted
+/// scribbles (magic, manifest length, manifest CRC), payload bit flips,
+/// truncations, tail garbage, and magic-prefixed noise — the mutation
+/// layer compounds them.
+pub fn gen_artifact_payload(rng: &mut Pcg32) -> Vec<u8> {
+    let mut bytes = baseline_artifact().to_vec();
+    match rng.below(8) {
+        // Pristine (the mutation layer may still damage it).
+        0 => {}
+        // Header scribble: magic, manifest length or manifest CRC.
+        1 => {
+            let i = rng.below(HEADER_LEN as u32) as usize;
+            bytes[i] = rng.next_u32() as u8;
+        }
+        // Manifest-length field replaced with an arbitrary u32.
+        2 => bytes[6..10].copy_from_slice(&rng.next_u32().to_le_bytes()),
+        // One flipped bit somewhere in the file.
+        3 | 4 => {
+            let i = rng.below(bytes.len() as u32) as usize;
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        // Truncation, including mid-header and mid-manifest.
+        5 => {
+            let keep = rng.below(bytes.len() as u32 + 1) as usize;
+            bytes.truncate(keep);
+        }
+        // Garbage appended past the declared payload.
+        6 => bytes.extend((0..rng.below(64)).map(|_| rng.next_u32() as u8)),
+        // Pure noise behind a valid magic, probing the header parser.
+        _ => {
+            bytes = MAGIC.to_vec();
+            bytes.extend((0..rng.below(256)).map(|_| rng.next_u32() as u8));
+        }
+    }
+    bytes
+}
+
+/// `ArtifactEngine::from_bytes` must never panic on arbitrary bytes —
+/// rejecting with a typed error is the correct response to corruption.
+/// Differential: anything that *does* load must also pass
+/// [`inspect_bytes`] (the loader's verification is a strict superset of
+/// the inspector's) and must carry a non-empty menu whose keys agree with
+/// the engines behind them.
+pub fn target_artifact_payload(data: &[u8]) {
+    match ArtifactEngine::from_bytes(data) {
+        Ok(engine) => {
+            let report = inspect_bytes(data).expect("loadable artifact must pass inspection");
+            assert_eq!(report.manifest.model, engine.manifest().model);
+            assert_eq!(report.manifest.epoch, engine.manifest().epoch);
+            assert!(!engine.menu().is_empty(), "loaded artifact with an empty menu");
+            for (key, eng) in engine.menu() {
+                assert_eq!(key.spec, eng.spec(), "menu key disagrees with its engine");
+            }
+        }
+        // Typed rejection is the expected outcome for hostile bytes.
+        Err(_) => {}
+    }
+}
+
 // ---- structure-aware int8 differential targets -----------------------------
 
 fn rand_i8(rng: &mut Pcg32, n: usize, lo: i64, hi: i64) -> Vec<i8> {
@@ -684,6 +835,8 @@ mod tests {
         run_bytes(0xF022_0004, 150, gen_json, target_json);
         run_bytes(0xF022_0005, 150, gen_shape_dims, target_shape);
         run_bytes(0xF022_0009, 150, gen_trace_header, target_trace_header);
+        run_bytes(0xF022_000A, 150, gen_manifest_json, target_manifest_json);
+        run_bytes(0xF022_000B, 150, gen_artifact_payload, target_artifact_payload);
     }
 
     #[test]

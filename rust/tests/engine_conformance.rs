@@ -306,6 +306,46 @@ fn builder_is_bit_identical_to_manual_construction() {
     }
 }
 
+/// Round trip through the compiled artifact format: pack the demo model,
+/// load the bytes back, and compare every one of the 13 menu cells
+/// bit-for-bit against the in-process `standard_menu` build of the same
+/// model. This is the artifact contract — a `.pdqa` file serves exactly
+/// what the process it was packed from would have served, across fp32,
+/// all three fake-quant modes and all nine int8 mode×rung cells.
+#[test]
+fn artifact_roundtrip_is_bit_exact_with_standard_menu() {
+    use pdq::artifact::{pack_model, ArtifactEngine, PackOptions};
+    use pdq::coordinator::calibrate::demo_model;
+    use pdq::engine::standard_menu;
+
+    let model = demo_model("conf_artifact");
+    let bytes = pack_model(&model, PackOptions::default()).expect("pack");
+    let loaded = ArtifactEngine::from_bytes(&bytes).expect("load");
+    let reference = standard_menu(&model).expect("in-process menu");
+    assert_eq!(loaded.menu().len(), reference.len(), "menu sizes");
+
+    let mut rng = Pcg32::new(0xA27F);
+    let imgs: Vec<Tensor<f32>> = (0..3)
+        .map(|_| {
+            let d: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.uniform()).collect();
+            Tensor::from_vec(Shape::hwc(32, 32, 3), d)
+        })
+        .collect();
+    for ((ka, ea), (kr, er)) in loaded.menu().iter().zip(&reference) {
+        assert_eq!(ka, kr, "menu cells must line up in canonical order");
+        let mut sa = ea.compile().expect("artifact session");
+        let mut sr = er.compile().expect("reference session");
+        for img in &imgs {
+            assert_eq!(
+                bits(&sa.run(img).expect("artifact run")),
+                bits(&sr.run(img).expect("reference run")),
+                "{}: artifact engine diverged from the in-process build",
+                ka.wire()
+            );
+        }
+    }
+}
+
 /// The worker-facing pool serves every engine deterministically and
 /// actually reuses sessions.
 #[test]

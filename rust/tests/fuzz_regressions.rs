@@ -10,6 +10,8 @@
 
 use std::io::Cursor;
 
+use pdq::artifact::{self, ArtifactEngine, ArtifactError, PackOptions};
+use pdq::coordinator::calibrate::demo_model;
 use pdq::engine::VariantKey;
 use pdq::net::http::{HttpError, ReadOutcome, RequestReader};
 use pdq::net::wire;
@@ -166,4 +168,119 @@ fn wire_preamble_huge_number() {
     assert!(wire::decode_infer_response(&body).is_err());
     // A preamble length claiming more bytes than the body holds.
     assert!(wire::decode_infer_request(&[0xFF, 0xFF, 0xFF, 0x7F, b'{']).is_err());
+}
+
+// ---- artifact/ -------------------------------------------------------------
+
+/// A packed baseline the corruption cases below start from.
+fn packed() -> Vec<u8> {
+    artifact::pack_model(
+        &demo_model("regress"),
+        PackOptions { calib_size: 4, ..PackOptions::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn artifact_header_shorter_than_fixed_frame() {
+    // The loader indexes bytes[6..14] for the manifest length and CRC; a
+    // file shorter than the fixed header must be a typed Truncated error
+    // before any of those reads, for every prefix length including zero.
+    let art = packed();
+    for take in [0usize, 1, 5, 6, 9, 13] {
+        let err = ArtifactEngine::from_bytes(&art[..take])
+            .map(|_| ())
+            .expect_err("a header prefix must never load");
+        assert!(
+            matches!(err, ArtifactError::Truncated { .. }),
+            "{take}-byte prefix must be Truncated, got {err:?}"
+        );
+    }
+    // Wrong magic with plausible framing behind it dies on BadMagic, not
+    // on whatever the rest of the bytes happen to decode as.
+    let mut bad = art.clone();
+    bad[0] ^= 0x20;
+    assert!(matches!(
+        ArtifactEngine::from_bytes(&bad),
+        Err(ArtifactError::BadMagic)
+    ));
+}
+
+#[test]
+fn artifact_manifest_len_claims_4gib() {
+    // The u32 manifest-length field is attacker-controlled; a value near
+    // u32::MAX must be rejected by the MAX_MANIFEST_BYTES cap before any
+    // slice or allocation is sized from it.
+    let mut art = packed();
+    art[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        ArtifactEngine::from_bytes(&art),
+        Err(ArtifactError::ManifestTooLarge { .. })
+    ));
+    // Just over the real manifest but under the cap: Truncated, computed
+    // with overflow-safe arithmetic.
+    let mut art = packed();
+    let claim = (art.len() as u32).saturating_add(1);
+    art[6..10].copy_from_slice(&claim.to_le_bytes());
+    assert!(matches!(
+        ArtifactEngine::from_bytes(&art),
+        Err(ArtifactError::Truncated { .. })
+    ));
+}
+
+#[test]
+fn artifact_payload_bit_flip_is_checksum_mismatch() {
+    // One flipped bit in the last payload section must surface as that
+    // section's ChecksumMismatch — the CRC wall, not a downstream decode
+    // error from poisoned tensor bytes.
+    let mut art = packed();
+    let last = art.len() - 1;
+    art[last] ^= 0x01;
+    assert!(matches!(
+        ArtifactEngine::from_bytes(&art),
+        Err(ArtifactError::ChecksumMismatch { .. })
+    ));
+    // The inspector (`pdq inspect`'s engine) agrees — same wall, typed
+    // error, nonzero exit.
+    assert!(artifact::inspect_bytes(&art).is_err());
+}
+
+#[test]
+fn artifact_manifest_validate_extreme_payload_lengths() {
+    // validate() compares the declared section layout against the actual
+    // payload length; both extremes (empty and usize::MAX) must return
+    // typed errors without overflow or panic.
+    let art = packed();
+    let report = artifact::inspect_bytes(&art).unwrap();
+    assert!(matches!(
+        report.manifest.validate(0),
+        Err(ArtifactError::Truncated { .. })
+    ));
+    assert!(matches!(
+        report.manifest.validate(usize::MAX),
+        Err(ArtifactError::Truncated { .. })
+    ));
+    // The true length still validates.
+    assert!(report.manifest.validate(report.payload_len).is_ok());
+}
+
+#[test]
+fn artifact_nonzero_header_padding_rejected() {
+    // The alignment pad between manifest and payload must be all zeros;
+    // a byte smuggled into it changes file identity without touching any
+    // CRC-covered region, so the loader pins it explicitly.
+    let mut art = packed();
+    let report = artifact::inspect_bytes(&art).unwrap();
+    let pad_start = 14 + report.manifest_len;
+    let payload_start = art.len() - report.payload_len;
+    if pad_start < payload_start {
+        art[pad_start] = 0xAA;
+        let err = ArtifactEngine::from_bytes(&art)
+            .map(|_| ())
+            .expect_err("dirty padding must never load");
+        match err {
+            ArtifactError::BadManifest(why) => assert!(why.contains("padding")),
+            other => panic!("dirty padding must be BadManifest, got {other:?}"),
+        }
+    }
 }

@@ -45,6 +45,16 @@ fn fuzz_trace_header_parsing() {
 }
 
 #[test]
+fn fuzz_artifact_manifest_json() {
+    fuzz::run_bytes(0x5EED_0009, ITERS, fuzz::gen_manifest_json, fuzz::target_manifest_json);
+}
+
+#[test]
+fn fuzz_artifact_payload_loading() {
+    fuzz::run_bytes(0x5EED_000A, ITERS, fuzz::gen_artifact_payload, fuzz::target_artifact_payload);
+}
+
+#[test]
 fn fuzz_int8_kernels_differential() {
     fuzz::diff_int8_kernels(0x5EED_0006, ITERS);
 }

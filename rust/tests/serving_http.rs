@@ -364,6 +364,124 @@ fn loadgen_closed_loop_zero_drops() {
     assert_eq!(metrics.responses() as u64, report.total.ok);
 }
 
+/// Hot-load a packed artifact into the serving zoo mid-run, drive it,
+/// and unload it — all while closed-loop traffic hammers the pinned
+/// model. Acceptance: zero drops across the load and unload, model-id
+/// labels visible in both metrics formats, no leaked admission permits
+/// (every in-flight gauge drains to zero), and the pinned model still
+/// serves after the churn.
+#[test]
+fn hot_load_and_unload_under_sustained_traffic() {
+    // Pack the second model up front: packing is the slow step, and doing
+    // it first keeps the load/unload inside the loadgen window.
+    let art = pdq::artifact::pack_model(
+        &pdq::coordinator::calibrate::demo_model("zoo2"),
+        pdq::artifact::PackOptions { calib_size: 4, ..Default::default() },
+    )
+    .expect("pack");
+
+    let (fd, addr) = start_front_door(ServerConfig::default());
+    let lg_addr = addr.clone();
+    let lg = std::thread::spawn(move || {
+        loadgen::run(&LoadgenConfig {
+            target: lg_addr,
+            mode: LoadMode::Closed,
+            concurrency: 2,
+            duration: Duration::from_millis(1500),
+            models: vec!["t".into()],
+            ..Default::default()
+        })
+        .expect("loadgen run")
+    });
+
+    let mut client = Client::new(&addr);
+    let resp = client
+        .request("POST", "/v1/models", "application/octet-stream", &art)
+        .expect("hot-load transport");
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(j.get("loaded").unwrap().as_str(), Some("zoo2"));
+
+    // The zoo endpoint lists both models, the new one unpinned.
+    let models = client.get("/v1/models").unwrap();
+    let j = Json::parse(std::str::from_utf8(&models.body).unwrap()).unwrap();
+    let list = j.get("models").unwrap().as_arr().unwrap();
+    let pinned_of = |name: &str| {
+        list.iter()
+            .find(|m| m.get("model").and_then(|v| v.as_str()) == Some(name))
+            .and_then(|m| m.get("pinned"))
+            .and_then(|v| v.as_bool())
+    };
+    assert_eq!(pinned_of("t"), Some(true));
+    assert_eq!(pinned_of("zoo2"), Some(false));
+
+    // Drive the hot-loaded model while the background traffic runs.
+    let zkey = VariantKey::new("zoo2", VariantSpec::Fp32);
+    let zimg = Tensor::full(Shape::hwc(32, 32, 3), 0.5);
+    for id in 0..4u64 {
+        match client.post_infer(&zkey, id, &zimg).expect("transport") {
+            InferOutcome::Ok(resp) => assert_eq!(resp.id, id),
+            InferOutcome::Rejected { .. } => panic!("zoo2 shed while loaded"),
+            InferOutcome::Failed { status, error } => {
+                panic!("zoo2 must serve while loaded, got {status}: {error}")
+            }
+        }
+    }
+
+    // Model-id labels ride in both metrics formats.
+    let m = client.get("/metrics").unwrap();
+    let j = Json::parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+    assert!(j.get("in_flight").unwrap().get("zoo2|fp32").is_some());
+    assert!(j.get("in_flight").unwrap().get("t|fp32").is_some());
+    let prom = client.get("/metrics?format=prometheus").unwrap();
+    let text = String::from_utf8(prom.body).unwrap();
+    assert!(text.contains("pdq_inflight{variant=\"zoo2|fp32\"}"), "{text}");
+    assert!(text.contains("pdq_inflight{variant=\"t|fp32\"}"), "{text}");
+
+    // Unload: zoo2 traffic 404s afterwards, the pinned model is untouched.
+    let del = client.request("DELETE", "/v1/models/zoo2", "application/json", b"").unwrap();
+    assert_eq!(del.status, 200, "{}", String::from_utf8_lossy(&del.body));
+    let body = pdq::net::wire::encode_infer_request(&zkey, 9, &zimg);
+    let gone = client
+        .request("POST", "/v1/infer", pdq::net::wire::TENSOR_CONTENT_TYPE, &body)
+        .unwrap();
+    assert_eq!(gone.status, 404, "unloaded model must be gone from the catalog");
+
+    let report = lg.join().unwrap();
+    assert!(report.total.sent > 0, "background traffic ran");
+    assert_eq!(report.total.dropped, 0, "zero drops across hot-load and unload");
+    assert_eq!(report.total.failed, 0);
+    assert!(
+        report.per_variant.iter().all(|v| v.wire.starts_with("t|")),
+        "--models filter pinned traffic to model t"
+    );
+
+    // No leaked admission permits: every in-flight gauge drains to zero.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let m = client.get("/metrics").unwrap();
+        let j = Json::parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        let drained = match j.get("in_flight").unwrap() {
+            Json::Obj(map) => map.values().all(|v| v.as_usize() == Some(0)),
+            _ => false,
+        };
+        if drained {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "admission permits leaked: {}",
+            j.to_string_compact()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // The pinned model still serves after the zoo churn.
+    let tkey = VariantKey::new("t", VariantSpec::Fp32);
+    let timg = calib_images().remove(0);
+    assert!(matches!(client.post_infer(&tkey, 777, &timg).unwrap(), InferOutcome::Ok(_)));
+    fd.shutdown();
+}
+
 /// Open-loop discipline fires on schedule even when responses lag, and the
 /// report's offered-vs-achieved bookkeeping holds together.
 #[test]
