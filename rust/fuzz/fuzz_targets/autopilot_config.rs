@@ -1,0 +1,12 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_autopilot_config_grammar`:
+//! `AutopilotConfig::parse` must never panic (first 8 bytes are the
+//! little-endian budget, the rest the spec), every accepted config must
+//! satisfy the control law's preconditions, and the canonical `render`
+//! must reparse to the identical config.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_autopilot_config(data);
+});

@@ -1,0 +1,11 @@
+//! Coverage-guided mirror of `fuzz_smoke::fuzz_slo_query_parsing`:
+//! `SloQuery::parse` must never panic, every accepted query must respect
+//! the documented bounds, and the canonical `render` must reparse to the
+//! identical query.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    pdq::testing::fuzz::target_slo_query(data);
+});

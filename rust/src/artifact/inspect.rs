@@ -11,15 +11,39 @@ use std::path::Path;
 use super::load::split_artifact;
 use super::manifest::Manifest;
 use super::mmapfile::Backing;
+use super::sign::{split_trailer, verify_artifact};
 use super::{ArtifactError, HEADER_LEN};
 use crate::util::json::Json;
+
+/// What the keyed-hash trailer told us about this artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignatureStatus {
+    /// No signature trailer on the file.
+    Unsigned,
+    /// A trailer is present but no verification key was supplied, so it
+    /// was stripped, not checked.
+    Present,
+    /// A trailer is present and matched the supplied key.
+    Verified,
+}
+
+impl SignatureStatus {
+    /// Wire/report spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SignatureStatus::Unsigned => "unsigned",
+            SignatureStatus::Present => "signed (unverified: no key)",
+            SignatureStatus::Verified => "signed (verified)",
+        }
+    }
+}
 
 /// Everything `pdq inspect` reports about a verified artifact.
 #[derive(Clone, Debug)]
 pub struct InspectReport {
     /// The parsed, validated manifest.
     pub manifest: Manifest,
-    /// Total file length in bytes.
+    /// Total file length in bytes (including any signature trailer).
     pub file_len: usize,
     /// Manifest JSON length in bytes (from the header).
     pub manifest_len: usize,
@@ -27,29 +51,64 @@ pub struct InspectReport {
     pub payload_len: usize,
     /// Whether the file bytes came through `mmap(2)`.
     pub mapped: bool,
+    /// Signature trailer status (keyed-hash, `PDQSIG1`).
+    pub signature: SignatureStatus,
 }
 
 /// Verify artifact bytes end to end and build the report. Fails with the
 /// loader's typed error on any corruption.
 pub fn inspect_bytes(bytes: &[u8]) -> Result<InspectReport, ArtifactError> {
-    let (manifest, payload) = split_artifact(bytes)?;
+    inspect_bytes_with_key(bytes, None)
+}
+
+/// [`inspect_bytes`], additionally verifying the keyed-hash signature
+/// trailer when `key` is supplied. With a key, an unsigned file is
+/// [`ArtifactError::SignatureMissing`] and a non-matching trailer is
+/// [`ArtifactError::SignatureMismatch`]; without one, a trailer is
+/// stripped and reported as present-but-unverified.
+pub fn inspect_bytes_with_key(
+    bytes: &[u8],
+    key: Option<&[u8]>,
+) -> Result<InspectReport, ArtifactError> {
+    let (body, signature) = match key {
+        Some(key) => (verify_artifact(bytes, key)?, SignatureStatus::Verified),
+        None => {
+            let (body, tag) = split_trailer(bytes);
+            let status = if tag.is_some() {
+                SignatureStatus::Present
+            } else {
+                SignatureStatus::Unsigned
+            };
+            (body, status)
+        }
+    };
+    let (manifest, payload) = split_artifact(body)?;
     manifest.validate(payload.len())?;
     manifest.verify_sections(payload)?;
     let manifest_len =
-        u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
+        u32::from_le_bytes([body[6], body[7], body[8], body[9]]) as usize;
     Ok(InspectReport {
         manifest,
         file_len: bytes.len(),
         manifest_len,
         payload_len: payload.len(),
         mapped: false,
+        signature,
     })
 }
 
 /// [`inspect_bytes`] on a file, `mmap(2)`-backed where possible.
 pub fn inspect_path(path: &Path) -> Result<InspectReport, ArtifactError> {
+    inspect_path_with_key(path, None)
+}
+
+/// [`inspect_bytes_with_key`] on a file, `mmap(2)`-backed where possible.
+pub fn inspect_path_with_key(
+    path: &Path,
+    key: Option<&[u8]>,
+) -> Result<InspectReport, ArtifactError> {
     let backing = Backing::open(path)?;
-    let mut report = inspect_bytes(backing.bytes())?;
+    let mut report = inspect_bytes_with_key(backing.bytes(), key)?;
     report.mapped = backing.is_mapped();
     Ok(report)
 }
@@ -105,6 +164,7 @@ impl InspectReport {
             "  calibration: {} images ({})\n",
             m.calib_images, m.calib_source
         ));
+        s.push_str(&format!("  signature: {}\n", self.signature.as_str()));
         s.push_str(&format!("  variants ({}):\n", m.variants.len()));
         for v in &m.variants {
             s.push_str(&format!("    {v}\n"));
@@ -131,6 +191,7 @@ impl InspectReport {
             .set("payload_len", self.payload_len)
             .set("mapped", self.mapped)
             .set("verified", true)
+            .set("signature", self.signature.as_str())
             .set("manifest", self.manifest.to_json());
         j.to_string_pretty()
     }
@@ -167,6 +228,42 @@ mod tests {
         assert!(matches!(
             inspect_bytes(&bytes).unwrap_err(),
             ArtifactError::ChecksumMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn inspect_reports_signature_status() {
+        let bytes = pack_model(&demo_model("demo"), PackOptions::default()).unwrap();
+        // Unsigned, no key: fine, reported as unsigned.
+        let rep = inspect_bytes(&bytes).unwrap();
+        assert_eq!(rep.signature, SignatureStatus::Unsigned);
+        assert!(rep.render_text().contains("signature: unsigned"));
+
+        // Signed, no key: verification is skipped but presence reported.
+        let mut signed = bytes.clone();
+        crate::artifact::sign_artifact(&mut signed, b"release-key");
+        let rep = inspect_bytes(&signed).unwrap();
+        assert_eq!(rep.signature, SignatureStatus::Present);
+        assert_eq!(rep.file_len, signed.len());
+
+        // Signed, right key: verified (and the report line says so).
+        let rep = inspect_bytes_with_key(&signed, Some(b"release-key")).unwrap();
+        assert_eq!(rep.signature, SignatureStatus::Verified);
+        assert!(rep.render_text().contains("signed (verified)"));
+        let json = Json::parse(&rep.render_json()).unwrap();
+        assert_eq!(
+            json.get("signature").and_then(|v| v.as_str()),
+            Some("signed (verified)")
+        );
+
+        // Signed, wrong key / unsigned-with-key: typed failures.
+        assert!(matches!(
+            inspect_bytes_with_key(&signed, Some(b"other-key")).unwrap_err(),
+            ArtifactError::SignatureMismatch
+        ));
+        assert!(matches!(
+            inspect_bytes_with_key(&bytes, Some(b"release-key")).unwrap_err(),
+            ArtifactError::SignatureMissing
         ));
     }
 }

@@ -18,6 +18,7 @@ use super::crc32::crc32;
 use super::manifest::{Manifest, NodeSpec};
 use super::mmapfile::Backing;
 use super::payload::{decode_f32, decode_i32, decode_i8};
+use super::sign::{split_trailer, verify_artifact};
 use super::{ArtifactError, ALIGN, HEADER_LEN, MAGIC, MAX_MANIFEST_BYTES};
 use crate::cmsis::pdq_wrappers::QOut;
 use crate::cmsis::Requant;
@@ -331,17 +332,50 @@ impl ArtifactEngine {
     /// Load + fully verify an artifact file, `mmap(2)`-backed where the
     /// platform allows (falling back to a plain read).
     pub fn load(path: &Path) -> Result<ArtifactEngine, ArtifactError> {
+        Self::load_with_key(path, None)
+    }
+
+    /// [`ArtifactEngine::load`], additionally verifying the keyed-hash
+    /// signature trailer when `key` is supplied: an unsigned file is
+    /// [`ArtifactError::SignatureMissing`], a non-matching trailer
+    /// [`ArtifactError::SignatureMismatch`]. Without a key, a trailer is
+    /// stripped unverified.
+    pub fn load_with_key(
+        path: &Path,
+        key: Option<&[u8]>,
+    ) -> Result<ArtifactEngine, ArtifactError> {
         let backing = Backing::open(path)?;
         let mapped = backing.is_mapped();
-        Self::build(backing.bytes(), mapped)
+        Self::build(backing.bytes(), mapped, key)
     }
 
     /// Load + fully verify an artifact from in-memory bytes.
     pub fn from_bytes(bytes: &[u8]) -> Result<ArtifactEngine, ArtifactError> {
-        Self::build(bytes, false)
+        Self::build(bytes, false, None)
     }
 
-    fn build(bytes: &[u8], mapped: bool) -> Result<ArtifactEngine, ArtifactError> {
+    /// [`ArtifactEngine::from_bytes`] with signature verification (see
+    /// [`ArtifactEngine::load_with_key`]).
+    pub fn from_bytes_with_key(
+        bytes: &[u8],
+        key: Option<&[u8]>,
+    ) -> Result<ArtifactEngine, ArtifactError> {
+        Self::build(bytes, false, key)
+    }
+
+    fn build(
+        bytes: &[u8],
+        mapped: bool,
+        key: Option<&[u8]>,
+    ) -> Result<ArtifactEngine, ArtifactError> {
+        // The signature trailer sits *outside* the pdq-artifact-v1
+        // structure: strip (and with a key, verify) it before any header
+        // interpretation, so `Manifest::validate`'s exact-payload-length
+        // check keeps rejecting genuinely trailing garbage.
+        let bytes = match key {
+            Some(key) => verify_artifact(bytes, key)?,
+            None => split_trailer(bytes).0,
+        };
         let (manifest, payload) = split_artifact(bytes)?;
         manifest.validate(payload.len())?;
         manifest.verify_sections(payload)?;
@@ -553,6 +587,36 @@ mod tests {
         assert!(matches!(
             ArtifactEngine::from_bytes(&bytes).unwrap_err(),
             ArtifactError::ChecksumMismatch { section } if section == "manifest"
+        ));
+    }
+
+    #[test]
+    fn signed_artifact_loads_and_tamper_is_caught() {
+        let mut signed = packed_demo();
+        crate::artifact::sign_artifact(&mut signed, b"release-key");
+
+        // Without a key the trailer is stripped and the menu loads.
+        assert_eq!(ArtifactEngine::from_bytes(&signed).unwrap().menu().len(), 13);
+        // With the right key it verifies then loads.
+        let eng = ArtifactEngine::from_bytes_with_key(&signed, Some(b"release-key")).unwrap();
+        assert_eq!(eng.menu().len(), 13);
+        // Wrong key / unsigned-with-key are typed failures.
+        assert!(matches!(
+            ArtifactEngine::from_bytes_with_key(&signed, Some(b"wrong")).unwrap_err(),
+            ArtifactError::SignatureMismatch
+        ));
+        assert!(matches!(
+            ArtifactEngine::from_bytes_with_key(&packed_demo(), Some(b"release-key"))
+                .unwrap_err(),
+            ArtifactError::SignatureMissing
+        ));
+        // A body bitflip under an intact-looking trailer dies on the
+        // signature, before any CRC layer runs.
+        let mut evil = signed.clone();
+        evil[HEADER_LEN + 1] ^= 0x04;
+        assert!(matches!(
+            ArtifactEngine::from_bytes_with_key(&evil, Some(b"release-key")).unwrap_err(),
+            ArtifactError::SignatureMismatch
         ));
     }
 

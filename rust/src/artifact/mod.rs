@@ -52,9 +52,10 @@ mod manifest;
 mod mmapfile;
 mod pack;
 mod payload;
+mod sign;
 
 pub use crc32::crc32;
-pub use inspect::{inspect_bytes, inspect_path, InspectReport};
+pub use inspect::{inspect_bytes, inspect_bytes_with_key, inspect_path, inspect_path_with_key, InspectReport, SignatureStatus};
 pub use load::ArtifactEngine;
 pub use manifest::{
     menu_specs, CalibSpec, Int8LayerSpec, Manifest, NodeSpec, SectionDtype, SectionEntry,
@@ -62,6 +63,7 @@ pub use manifest::{
 };
 pub use mmapfile::Backing;
 pub use pack::{pack_model, pack_to_file, repack, PackOptions};
+pub use sign::{hmac_sha256, sha256, sign_artifact, split_trailer, verify_artifact, SIG_MAGIC, TRAILER_LEN};
 
 /// Leading file magic: format family + container version + a newline so
 /// accidental text-mode mangling breaks the magic, not the payload.
@@ -145,6 +147,14 @@ pub enum ArtifactError {
     BadVariant(String),
     /// Packing failed (uncalibrated source, cross-mode drift, bad knobs).
     Pack(String),
+    /// A verification key was supplied but the artifact carries no
+    /// signature trailer — an unsigned artifact in a signed deployment is
+    /// a policy violation, not a soft downgrade.
+    SignatureMissing,
+    /// The keyed-hash trailer does not match the artifact bytes: the file
+    /// was modified after signing, or signed with a different key. The
+    /// CRC wall detects corruption; this detects tampering.
+    SignatureMismatch,
 }
 
 impl std::fmt::Display for ArtifactError {
@@ -168,6 +178,12 @@ impl std::fmt::Display for ArtifactError {
             ArtifactError::BadGraph(why) => write!(f, "bad graph spec: {why}"),
             ArtifactError::BadVariant(why) => write!(f, "bad variant data: {why}"),
             ArtifactError::Pack(why) => write!(f, "pack failed: {why}"),
+            ArtifactError::SignatureMissing => {
+                write!(f, "verification key given but artifact is unsigned")
+            }
+            ArtifactError::SignatureMismatch => {
+                write!(f, "artifact signature does not match (tampered or wrong key)")
+            }
         }
     }
 }

@@ -1,0 +1,640 @@
+//! SLO autopilot: the observe→decide→act controller over serving knobs.
+//!
+//! The brownout controller (PR 7) degrades *precision* when load spikes;
+//! this controller retunes the *scheduling knobs* — admission queue depth
+//! and the batcher deadline — from the SLO budget ledger's stage
+//! decomposition ([`crate::obs::slo`]). The paper's loop (observe the
+//! input distribution, pick the cheapest grid that holds accuracy) is the
+//! same shape applied to quantization; here the observed distribution is
+//! stage latency and the grid is the knob setting.
+//!
+//! Control law, on the brownout hysteresis pattern:
+//!
+//! - **Over budget** (`burn ≥ 1`) for `dwell_ticks` consecutive ticks:
+//!   act on the dominant stage. Queue-dominated burn means requests spend
+//!   their budget waiting — shrink admission depth one bounded step so
+//!   excess load sheds at the door instead of queueing past the SLO.
+//!   Execute-dominated burn means the batch window is holding requests —
+//!   shrink the batcher deadline one bounded step.
+//! - **Recovered** (`burn ≤ exit_ratio`) for `dwell_ticks` ticks: grow
+//!   the most-recently-shrunk class of knob back toward its configured
+//!   ceiling, one bounded step at a time.
+//! - Between the two thresholds: hold (the hysteresis band that prevents
+//!   flapping), and every action is followed by a `cooldown` observe-only
+//!   window so one decision's effect is measured before the next.
+//!
+//! Every action is recorded with its evidence — before/after knob values
+//! plus the ledger snapshot that justified it — in a bounded in-memory
+//! ring (the e2e tests' witness), as a structured `autopilot.retune`
+//! decision event through `obs/log.rs`, and as an `autopilot.*` lifecycle
+//! span in the flight recorder / OTLP export (wired in `server.rs`).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Decision records kept for `/v1/slo` and the e2e witness.
+const DECISION_RING: usize = 64;
+
+/// Bounds and cadence for the controller. `Copy` so it can ride inside
+/// `ServerConfig`; the grammar below keeps it expressible as one flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutopilotConfig {
+    /// p99 latency budget, µs (the ledger's denominator).
+    pub budget_us: u64,
+    /// Admission-depth retune floor/ceiling.
+    pub min_depth: usize,
+    pub max_depth: usize,
+    /// Batch-deadline retune floor/ceiling, µs.
+    pub min_deadline_us: u64,
+    pub max_deadline_us: u64,
+    /// Bounded multiplicative step per action, in (0, 0.5].
+    pub step: f64,
+    /// Recovery hysteresis: grow-back requires `burn ≤ exit_ratio`.
+    pub exit_ratio: f64,
+    /// Consecutive ticks a condition must hold before acting.
+    pub dwell_ticks: u32,
+    /// Observe-only window after every action.
+    pub cooldown: Duration,
+    /// Controller tick period.
+    pub tick: Duration,
+}
+
+impl AutopilotConfig {
+    pub fn with_budget_us(budget_us: u64) -> Self {
+        Self {
+            budget_us: budget_us.max(1),
+            min_depth: 2,
+            max_depth: 1024,
+            min_deadline_us: 100,
+            max_deadline_us: 50_000,
+            step: 0.25,
+            exit_ratio: 0.5,
+            dwell_ticks: 2,
+            cooldown: Duration::from_millis(1000),
+            tick: Duration::from_millis(200),
+        }
+    }
+
+    /// Parse the `--autopilot` spec grammar: a comma-separated list of
+    /// `key=value` pairs over the defaults, e.g.
+    /// `depth=4..256,deadline_us=200..20000,step=0.25,dwell=2,cooldown_ms=1000`.
+    /// Strict on principle (this is a fuzz target): unknown keys,
+    /// duplicate keys, inverted ranges, and out-of-band numbers are all
+    /// errors, not warnings. An empty spec means "all defaults".
+    pub fn parse(spec: &str, budget_us: u64) -> Result<Self, String> {
+        if budget_us == 0 || budget_us > crate::obs::slo::MAX_BUDGET_US {
+            return Err(format!("slo budget out of range: {budget_us}µs"));
+        }
+        if spec.len() > 256 {
+            return Err("autopilot spec too long".into());
+        }
+        let mut cfg = Self::with_budget_us(budget_us);
+        let mut seen: Vec<&str> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(format!("bare key without value: {part:?}"));
+            };
+            if seen.contains(&key) {
+                return Err(format!("duplicate key: {key:?}"));
+            }
+            seen.push(key);
+            match key {
+                "depth" => {
+                    let (lo, hi) = parse_range(val)?;
+                    if lo < 1 || hi > 1_000_000 {
+                        return Err(format!("depth range out of bounds: {val:?}"));
+                    }
+                    cfg.min_depth = lo as usize;
+                    cfg.max_depth = hi as usize;
+                }
+                "deadline_us" => {
+                    let (lo, hi) = parse_range(val)?;
+                    if lo < 50 || hi > 10_000_000 {
+                        return Err(format!("deadline range out of bounds: {val:?}"));
+                    }
+                    cfg.min_deadline_us = lo;
+                    cfg.max_deadline_us = hi;
+                }
+                "step" => {
+                    let v = parse_f64_strict(val)?;
+                    if !(v > 0.0 && v <= 0.5) {
+                        return Err(format!("step out of (0, 0.5]: {val:?}"));
+                    }
+                    cfg.step = v;
+                }
+                "exit" => {
+                    let v = parse_f64_strict(val)?;
+                    if !(v > 0.0 && v <= 0.95) {
+                        return Err(format!("exit ratio out of (0, 0.95]: {val:?}"));
+                    }
+                    cfg.exit_ratio = v;
+                }
+                "dwell" => {
+                    let v = parse_u64_strict(val)?;
+                    if !(1..=100).contains(&v) {
+                        return Err(format!("dwell out of 1..=100: {val:?}"));
+                    }
+                    cfg.dwell_ticks = v as u32;
+                }
+                "cooldown_ms" => {
+                    let v = parse_u64_strict(val)?;
+                    if v > 600_000 {
+                        return Err(format!("cooldown over 10min: {val:?}"));
+                    }
+                    cfg.cooldown = Duration::from_millis(v);
+                }
+                "tick_ms" => {
+                    let v = parse_u64_strict(val)?;
+                    if !(10..=60_000).contains(&v) {
+                        return Err(format!("tick out of 10..=60000 ms: {val:?}"));
+                    }
+                    cfg.tick = Duration::from_millis(v);
+                }
+                other => return Err(format!("unknown autopilot key: {other:?}")),
+            }
+        }
+        if cfg.min_depth > cfg.max_depth {
+            return Err("depth range inverted".into());
+        }
+        if cfg.min_deadline_us > cfg.max_deadline_us {
+            return Err("deadline range inverted".into());
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical spec re-rendering (fuzz round-trip oracle:
+    /// `parse(render(c), c.budget_us)` must equal `c`).
+    pub fn render(&self) -> String {
+        format!(
+            "depth={}..{},deadline_us={}..{},step={},exit={},dwell={},cooldown_ms={},tick_ms={}",
+            self.min_depth,
+            self.max_depth,
+            self.min_deadline_us,
+            self.max_deadline_us,
+            self.step,
+            self.exit_ratio,
+            self.dwell_ticks,
+            self.cooldown.as_millis(),
+            self.tick.as_millis(),
+        )
+    }
+}
+
+fn parse_u64_strict(s: &str) -> Result<u64, String> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(format!("not a non-negative integer: {s:?}"));
+    }
+    s.parse::<u64>().map_err(|_| format!("integer out of range: {s:?}"))
+}
+
+fn parse_f64_strict(s: &str) -> Result<f64, String> {
+    // Digits and at most one dot: no signs, exponents, inf, or NaN — a
+    // control gain spelled `NaN` must die in config, not in the control
+    // law's comparisons.
+    let ok = !s.is_empty()
+        && s.bytes().all(|b| b.is_ascii_digit() || b == b'.')
+        && s.bytes().filter(|&b| b == b'.').count() <= 1
+        && s != ".";
+    if !ok {
+        return Err(format!("not a plain decimal: {s:?}"));
+    }
+    let v: f64 = s.parse().map_err(|_| format!("bad decimal: {s:?}"))?;
+    if !v.is_finite() {
+        return Err(format!("non-finite decimal: {s:?}"));
+    }
+    Ok(v)
+}
+
+fn parse_range(s: &str) -> Result<(u64, u64), String> {
+    let Some((lo, hi)) = s.split_once("..") else {
+        return Err(format!("range must be lo..hi: {s:?}"));
+    };
+    let (lo, hi) = (parse_u64_strict(lo)?, parse_u64_strict(hi)?);
+    if lo > hi {
+        return Err(format!("inverted range: {s:?}"));
+    }
+    Ok((lo, hi))
+}
+
+/// Which knob an action moved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Knob {
+    /// Admission in-flight depth (`--max-queue`).
+    Depth,
+    /// Batcher deadline, µs (`--deadline-us`).
+    Deadline,
+}
+
+impl Knob {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Knob::Depth => "max_queue_depth",
+            Knob::Deadline => "batch_deadline_us",
+        }
+    }
+}
+
+/// One concrete retune the caller must apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Retune {
+    pub knob: Knob,
+    pub from: u64,
+    pub to: u64,
+    /// Why this knob: the evidence headline.
+    pub reason: &'static str,
+}
+
+/// A tick's outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Hold(&'static str),
+    Retune(Retune),
+}
+
+/// What the controller observes each tick: the worst-burning variant's
+/// ledger line plus the current knob positions.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    /// End-to-end `p99 / budget` for the worst variant.
+    pub burn: f64,
+    /// Its dominant tracked stage (`queue` / `execute` / `serialize`).
+    pub dominant: &'static str,
+    /// Current admission limit (0 = unbounded).
+    pub depth: usize,
+    /// Current batch deadline, µs.
+    pub deadline_us: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    over_ticks: u32,
+    under_ticks: u32,
+    last_action: Option<Instant>,
+    actions: u64,
+    /// Evidence ring: one JSON record per action (bounded).
+    decisions: VecDeque<Json>,
+}
+
+/// The controller. Pure decision logic with an injected clock — the tick
+/// thread in `server.rs` owns applying decisions and logging evidence.
+#[derive(Debug)]
+pub struct AutopilotController {
+    cfg: AutopilotConfig,
+    inner: Mutex<Inner>,
+}
+
+impl AutopilotController {
+    pub fn new(cfg: AutopilotConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(Inner {
+                over_ticks: 0,
+                under_ticks: 0,
+                last_action: None,
+                actions: 0,
+                decisions: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> AutopilotConfig {
+        self.cfg
+    }
+
+    /// One control tick. `now` is injected so tests drive time
+    /// deterministically (same discipline as the brownout controller).
+    pub fn observe(&self, obs: &Observation, now: Instant) -> Decision {
+        let cfg = &self.cfg;
+        let mut st = self.inner.lock().unwrap();
+        if let Some(t) = st.last_action {
+            if now.saturating_duration_since(t) < cfg.cooldown {
+                return Decision::Hold("cooldown");
+            }
+        }
+        if obs.burn >= 1.0 {
+            st.under_ticks = 0;
+            st.over_ticks += 1;
+            if st.over_ticks < cfg.dwell_ticks {
+                return Decision::Hold("dwell");
+            }
+            let retune = match obs.dominant {
+                "queue" => {
+                    // Unbounded depth (0) starts the ladder at the ceiling.
+                    let from =
+                        if obs.depth == 0 { cfg.max_depth } else { obs.depth };
+                    let to = (((from as f64) * (1.0 - cfg.step)).floor() as usize)
+                        .clamp(cfg.min_depth, cfg.max_depth);
+                    if to >= from {
+                        return Decision::Hold("depth at floor");
+                    }
+                    Retune {
+                        knob: Knob::Depth,
+                        from: from as u64,
+                        to: to as u64,
+                        reason: "queue-share-dominated budget burn",
+                    }
+                }
+                "execute" => {
+                    let from = obs.deadline_us;
+                    let to = (((from as f64) * (1.0 - cfg.step)).floor() as u64)
+                        .clamp(cfg.min_deadline_us, cfg.max_deadline_us);
+                    if to >= from {
+                        return Decision::Hold("deadline at floor");
+                    }
+                    Retune {
+                        knob: Knob::Deadline,
+                        from,
+                        to,
+                        reason: "execute-share-dominated budget burn",
+                    }
+                }
+                _ => return Decision::Hold("no actionable dominant stage"),
+            };
+            st.over_ticks = 0;
+            st.last_action = Some(now);
+            st.actions += 1;
+            return Decision::Retune(retune);
+        }
+        if obs.burn <= cfg.exit_ratio {
+            st.over_ticks = 0;
+            st.under_ticks += 1;
+            if st.under_ticks < cfg.dwell_ticks {
+                return Decision::Hold("dwell");
+            }
+            // Recovery: grow whichever knob sits below its ceiling, depth
+            // first (shedding is the costlier degradation).
+            let retune = if obs.depth != 0 && obs.depth < cfg.max_depth {
+                let from = obs.depth;
+                let to = (((from as f64) * (1.0 + cfg.step)).ceil() as usize)
+                    .clamp(cfg.min_depth, cfg.max_depth);
+                Retune {
+                    knob: Knob::Depth,
+                    from: from as u64,
+                    to: to as u64,
+                    reason: "sustained burn under exit ratio; growing depth back",
+                }
+            } else if obs.deadline_us < cfg.max_deadline_us {
+                let from = obs.deadline_us;
+                let to = (((from as f64) * (1.0 + cfg.step)).ceil() as u64)
+                    .clamp(cfg.min_deadline_us, cfg.max_deadline_us);
+                Retune {
+                    knob: Knob::Deadline,
+                    from,
+                    to,
+                    reason: "sustained burn under exit ratio; growing deadline back",
+                }
+            } else {
+                return Decision::Hold("fully recovered");
+            };
+            st.under_ticks = 0;
+            st.last_action = Some(now);
+            st.actions += 1;
+            return Decision::Retune(retune);
+        }
+        // Hysteresis band between exit_ratio and 1.0: hold and reset both
+        // streaks so a burn oscillating inside the band never acts.
+        st.over_ticks = 0;
+        st.under_ticks = 0;
+        Decision::Hold("in hysteresis band")
+    }
+
+    /// Record an applied action's evidence (before/after knob values plus
+    /// the ledger snapshot that justified it). The ring is bounded; old
+    /// evidence falls off the back.
+    pub fn record(&self, evidence: Json) {
+        let mut st = self.inner.lock().unwrap();
+        if st.decisions.len() >= DECISION_RING {
+            st.decisions.pop_front();
+        }
+        st.decisions.push_back(evidence);
+    }
+
+    /// Actions applied so far.
+    pub fn actions(&self) -> u64 {
+        self.inner.lock().unwrap().actions
+    }
+
+    /// The evidence ring, oldest first (`/v1/slo`'s `decisions` field and
+    /// the e2e witness).
+    pub fn decisions_json(&self) -> Vec<Json> {
+        self.inner.lock().unwrap().decisions.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutopilotConfig {
+        AutopilotConfig {
+            dwell_ticks: 2,
+            cooldown: Duration::from_millis(500),
+            ..AutopilotConfig::with_budget_us(5_000)
+        }
+    }
+
+    fn obs(burn: f64, dominant: &'static str, depth: usize, deadline_us: u64) -> Observation {
+        Observation { burn, dominant, depth, deadline_us }
+    }
+
+    #[test]
+    fn queue_dominated_burn_shrinks_depth_after_dwell() {
+        let c = AutopilotController::new(cfg());
+        let t0 = Instant::now();
+        // First over-budget tick: dwell, no action yet.
+        assert_eq!(c.observe(&obs(2.0, "queue", 512, 2000), t0), Decision::Hold("dwell"));
+        // Second tick: act. 512 × 0.75 = 384.
+        match c.observe(&obs(2.0, "queue", 512, 2000), t0 + Duration::from_millis(200)) {
+            Decision::Retune(r) => {
+                assert_eq!(r.knob, Knob::Depth);
+                assert_eq!(r.from, 512);
+                assert_eq!(r.to, 384);
+            }
+            d => panic!("expected depth retune, got {d:?}"),
+        }
+        assert_eq!(c.actions(), 1);
+        // Cooldown: the very next tick holds even though burn persists.
+        assert_eq!(
+            c.observe(&obs(2.0, "queue", 384, 2000), t0 + Duration::from_millis(400)),
+            Decision::Hold("cooldown")
+        );
+        // After cooldown + dwell, the next bounded step fires.
+        let t1 = t0 + Duration::from_millis(900);
+        assert_eq!(c.observe(&obs(2.0, "queue", 384, 2000), t1), Decision::Hold("dwell"));
+        match c.observe(&obs(2.0, "queue", 384, 2000), t1 + Duration::from_millis(200)) {
+            Decision::Retune(r) => assert_eq!(r.to, 288),
+            d => panic!("expected second step, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn execute_dominated_burn_shrinks_deadline_and_floors() {
+        let c = AutopilotController::new(cfg());
+        let t0 = Instant::now();
+        c.observe(&obs(1.5, "execute", 64, 2000), t0);
+        match c.observe(&obs(1.5, "execute", 64, 2000), t0 + Duration::from_millis(200)) {
+            Decision::Retune(r) => {
+                assert_eq!(r.knob, Knob::Deadline);
+                assert_eq!(r.from, 2000);
+                assert_eq!(r.to, 1500);
+            }
+            d => panic!("expected deadline retune, got {d:?}"),
+        }
+        // At the floor the controller holds instead of oscillating.
+        let c = AutopilotController::new(cfg());
+        let t1 = Instant::now();
+        c.observe(&obs(1.5, "execute", 64, 100), t1);
+        assert_eq!(
+            c.observe(&obs(1.5, "execute", 64, 100), t1 + Duration::from_millis(200)),
+            Decision::Hold("deadline at floor")
+        );
+    }
+
+    #[test]
+    fn unbounded_depth_starts_from_the_ceiling() {
+        let c = AutopilotController::new(cfg());
+        let t0 = Instant::now();
+        c.observe(&obs(3.0, "queue", 0, 2000), t0);
+        match c.observe(&obs(3.0, "queue", 0, 2000), t0 + Duration::from_millis(200)) {
+            Decision::Retune(r) => {
+                assert_eq!(r.from, 1024, "unbounded starts at max_depth");
+                assert_eq!(r.to, 768);
+            }
+            d => panic!("expected depth retune, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_band_never_acts() {
+        let c = AutopilotController::new(cfg());
+        let mut t = Instant::now();
+        // Burn oscillating between 0.6 and 0.99 (above exit 0.5, below
+        // enter 1.0) for many ticks: zero actions, no flapping.
+        for i in 0..50 {
+            let burn = if i % 2 == 0 { 0.6 } else { 0.99 };
+            assert_eq!(
+                c.observe(&obs(burn, "queue", 256, 2000), t),
+                Decision::Hold("in hysteresis band")
+            );
+            t += Duration::from_millis(200);
+        }
+        assert_eq!(c.actions(), 0);
+    }
+
+    #[test]
+    fn recovery_grows_depth_back_with_dwell() {
+        let c = AutopilotController::new(cfg());
+        let mut t = Instant::now();
+        assert_eq!(c.observe(&obs(0.2, "queue", 96, 2000), t), Decision::Hold("dwell"));
+        t += Duration::from_millis(200);
+        match c.observe(&obs(0.2, "queue", 96, 2000), t) {
+            Decision::Retune(r) => {
+                assert_eq!(r.knob, Knob::Depth);
+                assert_eq!(r.from, 96);
+                assert_eq!(r.to, 120, "96 × 1.25");
+            }
+            d => panic!("expected grow-back, got {d:?}"),
+        }
+        // At both ceilings recovery reports done instead of acting.
+        let c = AutopilotController::new(cfg());
+        let t0 = Instant::now();
+        c.observe(&obs(0.2, "queue", 1024, 50_000), t0);
+        assert_eq!(
+            c.observe(&obs(0.2, "queue", 1024, 50_000), t0 + Duration::from_millis(200)),
+            Decision::Hold("fully recovered")
+        );
+    }
+
+    #[test]
+    fn serialize_dominated_burn_is_not_actionable() {
+        let c = AutopilotController::new(cfg());
+        let t0 = Instant::now();
+        c.observe(&obs(2.0, "serialize", 64, 2000), t0);
+        assert_eq!(
+            c.observe(&obs(2.0, "serialize", 64, 2000), t0 + Duration::from_millis(200)),
+            Decision::Hold("no actionable dominant stage")
+        );
+        assert_eq!(c.actions(), 0);
+    }
+
+    #[test]
+    fn evidence_ring_is_bounded() {
+        let c = AutopilotController::new(cfg());
+        for i in 0..(DECISION_RING + 10) {
+            let mut e = Json::obj();
+            e.set("i", i as u64);
+            c.record(e);
+        }
+        let ds = c.decisions_json();
+        assert_eq!(ds.len(), DECISION_RING);
+        assert_eq!(
+            ds[0].get("i").unwrap().as_usize(),
+            Some(10),
+            "oldest evidence fell off the back"
+        );
+    }
+
+    #[test]
+    fn config_grammar_round_trips() {
+        let cfg = AutopilotConfig::parse("", 5_000).unwrap();
+        assert_eq!(cfg, AutopilotConfig::with_budget_us(5_000));
+        let cfg = AutopilotConfig::parse(
+            "depth=4..256,deadline_us=200..20000,step=0.5,exit=0.4,dwell=3,cooldown_ms=1500,tick_ms=100",
+            5_000,
+        )
+        .unwrap();
+        assert_eq!(cfg.min_depth, 4);
+        assert_eq!(cfg.max_depth, 256);
+        assert_eq!(cfg.min_deadline_us, 200);
+        assert_eq!(cfg.max_deadline_us, 20_000);
+        assert_eq!(cfg.step, 0.5);
+        assert_eq!(cfg.exit_ratio, 0.4);
+        assert_eq!(cfg.dwell_ticks, 3);
+        assert_eq!(cfg.cooldown, Duration::from_millis(1500));
+        assert_eq!(cfg.tick, Duration::from_millis(100));
+        // Canonical render parses back to the same config.
+        assert_eq!(AutopilotConfig::parse(&cfg.render(), 5_000).unwrap(), cfg);
+    }
+
+    #[test]
+    fn config_grammar_rejects_hostile_spellings() {
+        for bad in [
+            "depth=0..64",         // zero floor
+            "depth=64..4",         // inverted
+            "depth=4..2000000",    // over ceiling
+            "depth=4",             // not a range
+            "deadline_us=10..500", // under floor
+            "step=0",
+            "step=0.6",
+            "step=NaN",
+            "step=-0.2",
+            "step=1e-3",           // exponent spelling
+            "step=..",
+            "exit=0.99",
+            "dwell=0",
+            "dwell=101",
+            "tick_ms=5",
+            "tick_ms=99999999",
+            "cooldown_ms=99999999",
+            "bogus=1",
+            "depth",
+            "depth=4..8,depth=4..8", // duplicate
+        ] {
+            assert!(
+                AutopilotConfig::parse(bad, 5_000).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // Budget bounds are checked even with an empty spec.
+        assert!(AutopilotConfig::parse("", 0).is_err());
+        assert!(AutopilotConfig::parse("", u64::MAX).is_err());
+        assert!(AutopilotConfig::parse(&"a".repeat(300), 5_000).is_err());
+    }
+}

@@ -1,6 +1,8 @@
 //! Dynamic batching: close a batch on size or deadline, whichever first.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -14,6 +16,54 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         Self { max_batch: 8, deadline: Duration::from_millis(2) }
+    }
+}
+
+/// A [`BatchPolicy`] whose knobs can be retuned while workers are running.
+///
+/// `BatchPolicy` is `Copy` and is captured by every worker thread at spawn,
+/// so a config change used to require a restart. The SLO autopilot instead
+/// hands workers one shared `LivePolicy`; each [`next_batch`] call
+/// materializes the current values, so a deadline retune takes effect on
+/// the very next batch of every worker, hot-loaded models included.
+#[derive(Debug)]
+pub struct LivePolicy {
+    max_batch: AtomicUsize,
+    deadline_us: AtomicU64,
+}
+
+impl LivePolicy {
+    pub fn new(policy: BatchPolicy) -> Arc<Self> {
+        Arc::new(Self {
+            max_batch: AtomicUsize::new(policy.max_batch.max(1)),
+            deadline_us: AtomicU64::new(policy.deadline.as_micros() as u64),
+        })
+    }
+
+    /// The current policy snapshot (what the next batch will use).
+    pub fn get(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch.load(Ordering::Acquire).max(1),
+            deadline: Duration::from_micros(self.deadline_us.load(Ordering::Acquire)),
+        }
+    }
+
+    pub fn deadline_us(&self) -> u64 {
+        self.deadline_us.load(Ordering::Acquire)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Acquire).max(1)
+    }
+
+    /// Retune the batch deadline live (autopilot's execute-share knob).
+    pub fn set_deadline_us(&self, us: u64) {
+        self.deadline_us.store(us, Ordering::Release);
+    }
+
+    /// Retune the batch size cap live (clamped to ≥ 1).
+    pub fn set_max_batch(&self, n: usize) {
+        self.max_batch.store(n.max(1), Ordering::Release);
     }
 }
 
@@ -107,6 +157,30 @@ mod tests {
         );
         drop(tx);
         assert!(next_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
+    fn live_policy_retune_applies_to_the_next_batch() {
+        let (tx, rx) = mpsc::channel();
+        let live = LivePolicy::new(BatchPolicy {
+            max_batch: 4,
+            deadline: Duration::from_millis(50),
+        });
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(&rx, &live.get()).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        // Retune between batches: the very next call sees the new knobs.
+        live.set_max_batch(2);
+        live.set_deadline_us(500);
+        assert_eq!(live.max_batch(), 2);
+        assert_eq!(live.deadline_us(), 500);
+        let b = next_batch(&rx, &live.get()).unwrap();
+        assert_eq!(b, vec![4, 5]);
+        // A zero max_batch clamps to 1 instead of wedging the loop.
+        live.set_max_batch(0);
+        assert_eq!(live.get().max_batch, 1);
     }
 
     #[test]

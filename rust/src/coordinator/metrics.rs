@@ -33,7 +33,7 @@ pub const LATENCY_BUCKETS_US: [f32; 14] = [
 const N_STAGES: usize = 8;
 
 /// One histogram slot per bucket plus the implicit +Inf overflow.
-type Hist = [u64; LATENCY_BUCKETS_US.len() + 1];
+pub type Hist = [u64; LATENCY_BUCKETS_US.len() + 1];
 
 /// Bucket index for a microsecond observation.
 fn bucket_idx(us: f32) -> usize {
@@ -43,8 +43,9 @@ fn bucket_idx(us: f32) -> usize {
 /// O(buckets) quantile walk over an exact histogram: the upper bound of
 /// the bucket holding the rank-`q` observation; 0 with no data. The same
 /// deterministic estimate [`Metrics::latency_quantile_hint_us`] feeds the
-/// brownout controller with.
-fn hist_quantile(hist: &Hist, count: u64, q: f64) -> f32 {
+/// brownout controller with; `pub` so the SLO ledger can walk the
+/// per-variant snapshots it takes via [`Metrics::slo_snapshot`].
+pub fn hist_quantile(hist: &Hist, count: u64, q: f64) -> f32 {
     if count == 0 {
         return 0.0;
     }
@@ -88,6 +89,15 @@ impl Reservoir {
     }
 }
 
+/// The SLO-relevant stages the per-variant histograms track: queue wait,
+/// execute, and serialize — the three shares the budget ledger decomposes
+/// a variant's p99 into (index into [`VariantCounters::slo_hist`]).
+pub const SLO_STAGES: [Stage; 3] = [Stage::Queue, Stage::Execute, Stage::Serialize];
+
+fn slo_stage_idx(stage: Stage) -> Option<usize> {
+    SLO_STAGES.iter().position(|&s| s == stage)
+}
+
 /// Per-variant request/response/latency breakdown (keyed by the variant's
 /// stable wire name) — the prerequisite for attributing drift and error
 /// bursts to a specific served variant.
@@ -98,6 +108,14 @@ struct VariantCounters {
     engine_errors: u64,
     latency_sum_us: f64,
     latencies_us: Reservoir,
+    /// Exact end-to-end latency histogram — the per-variant p99 the SLO
+    /// ledger decomposes (the reservoir above stays report-only).
+    lat_hist: Hist,
+    /// Per-variant stage histograms for [`SLO_STAGES`] (queue/execute/
+    /// serialize), the ledger's share inputs.
+    slo_hist: [Hist; SLO_STAGES.len()],
+    slo_sum_us: [f64; SLO_STAGES.len()],
+    slo_count: [u64; SLO_STAGES.len()],
 }
 
 impl VariantCounters {
@@ -112,8 +130,50 @@ impl VariantCounters {
             engine_errors: 0,
             latency_sum_us: 0.0,
             latencies_us: Reservoir::new(VARIANT_RESERVOIR, seed),
+            lat_hist: [0; LATENCY_BUCKETS_US.len() + 1],
+            slo_hist: [[0; LATENCY_BUCKETS_US.len() + 1]; SLO_STAGES.len()],
+            slo_sum_us: [0.0; SLO_STAGES.len()],
+            slo_count: [0; SLO_STAGES.len()],
         }
     }
+
+    fn on_slo_stage(&mut self, idx: usize, us: f64) {
+        self.slo_hist[idx][bucket_idx(us as f32)] += 1;
+        self.slo_sum_us[idx] += us;
+        self.slo_count[idx] += 1;
+    }
+}
+
+/// One exact histogram plus its running count/sum, copied out of the lock —
+/// what [`Metrics::slo_snapshot`] hands the budget ledger.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub hist: Hist,
+    pub count: u64,
+    pub sum_us: f64,
+}
+
+impl HistSnapshot {
+    /// Exact-histogram quantile (bucket upper bound; 0 with no data).
+    pub fn quantile_us(&self, q: f64) -> f32 {
+        hist_quantile(&self.hist, self.count, q)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_us / self.count as f64 }
+    }
+}
+
+/// Per-variant SLO inputs: the exact end-to-end latency histogram and the
+/// queue/execute/serialize stage histograms, snapshotted under one lock so
+/// the ledger's shares are internally consistent.
+#[derive(Clone, Debug)]
+pub struct VariantSloSnapshot {
+    pub wire: String,
+    pub responses: u64,
+    pub latency: HistSnapshot,
+    /// Indexed like [`SLO_STAGES`]: queue, execute, serialize.
+    pub stages: [HistSnapshot; SLO_STAGES.len()],
 }
 
 #[derive(Debug)]
@@ -292,7 +352,83 @@ impl Metrics {
             v.responses += 1;
             v.latencies_us.push(us);
             v.latency_sum_us += us as f64;
+            v.lat_hist[idx] += 1;
         }
+    }
+
+    /// [`Metrics::on_queue_execute`] plus the variant's own queue/execute
+    /// histograms — the worker hot path feeds both attributions under one
+    /// lock so the SLO ledger's shares line up with the global split.
+    pub fn on_queue_execute_for(&self, wire: &str, queue: Duration, execute: Duration) {
+        let (q_us, e_us) = (queue.as_micros() as f64, execute.as_micros() as f64);
+        let mut m = self.inner.lock().unwrap();
+        for (stage, us) in [(Stage::Queue, q_us), (Stage::Execute, e_us)] {
+            let i = stage.index();
+            m.stage_hist[i][bucket_idx(us as f32)] += 1;
+            m.stage_sum_us[i] += us;
+            m.stage_count[i] += 1;
+        }
+        if let Some(v) = m.variants.get_mut(wire) {
+            v.on_slo_stage(0, q_us); // SLO_STAGES[0] = Queue
+            v.on_slo_stage(1, e_us); // SLO_STAGES[1] = Execute
+        }
+    }
+
+    /// [`Metrics::on_stage_us`]`(Serialize, ..)` plus the variant's own
+    /// serialize histogram (the front door stamps this around response
+    /// encoding, where the wire name is in scope).
+    pub fn on_serialize_for(&self, wire: &str, d: Duration) {
+        let us = d.as_micros() as f64;
+        let mut m = self.inner.lock().unwrap();
+        let i = Stage::Serialize.index();
+        m.stage_hist[i][bucket_idx(us as f32)] += 1;
+        m.stage_sum_us[i] += us;
+        m.stage_count[i] += 1;
+        if let Some(v) = m.variants.get_mut(wire) {
+            v.on_slo_stage(2, us); // SLO_STAGES[2] = Serialize
+        }
+    }
+
+    /// A variant's exact-histogram latency quantile (same contract as
+    /// [`Metrics::latency_quantile_hint_us`], scoped to one wire).
+    pub fn variant_latency_quantile_hint_us(&self, wire: &str, q: f64) -> f32 {
+        let m = self.inner.lock().unwrap();
+        m.variants
+            .get(wire)
+            .map_or(0.0, |v| hist_quantile(&v.lat_hist, v.responses, q))
+    }
+
+    /// A variant's exact-histogram stage quantile for one of
+    /// [`SLO_STAGES`]; 0 for other stages or unregistered wires.
+    pub fn variant_stage_quantile_hint_us(&self, wire: &str, stage: Stage, q: f64) -> f32 {
+        let Some(i) = slo_stage_idx(stage) else { return 0.0 };
+        let m = self.inner.lock().unwrap();
+        m.variants
+            .get(wire)
+            .map_or(0.0, |v| hist_quantile(&v.slo_hist[i], v.slo_count[i], q))
+    }
+
+    /// Consistent per-variant snapshot of every SLO input histogram, taken
+    /// under one lock — the budget ledger computes shares from this.
+    pub fn slo_snapshot(&self) -> Vec<VariantSloSnapshot> {
+        let m = self.inner.lock().unwrap();
+        m.variants
+            .iter()
+            .map(|(wire, v)| VariantSloSnapshot {
+                wire: wire.clone(),
+                responses: v.responses,
+                latency: HistSnapshot {
+                    hist: v.lat_hist,
+                    count: v.responses,
+                    sum_us: v.latency_sum_us,
+                },
+                stages: [0, 1, 2].map(|i| HistSnapshot {
+                    hist: v.slo_hist[i],
+                    count: v.slo_count[i],
+                    sum_us: v.slo_sum_us[i],
+                }),
+            })
+            .collect()
     }
 
     /// [`Metrics::on_engine_error`] plus the variant's own counter.
@@ -955,6 +1091,75 @@ mod tests {
         assert!(!prom.contains("stage=\"serialize\""), "silent stages stay out of /metrics");
         // No stage data at all ⇒ the family is absent entirely.
         assert!(!Metrics::default().to_prometheus().contains("pdq_stage_latency_us"));
+    }
+
+    /// Pin `latency_quantile_hint_us` bucket-boundary behavior: an
+    /// observation exactly on a bucket's upper bound belongs to that bucket
+    /// (`us <= ub`), one microsecond past it rolls into the next, and
+    /// beyond-the-last-bucket observations report the final finite bound
+    /// rather than a fictional +Inf number. The autopilot's evidence quotes
+    /// these hints, so their rounding contract must never drift.
+    #[test]
+    fn quantile_hint_bucket_boundaries_pinned() {
+        // Exactly on the le=100 bound: stays in that bucket.
+        let m = Metrics::default();
+        m.on_response(Duration::from_micros(100));
+        assert_eq!(m.latency_quantile_hint_us(1.0), 100.0);
+        // One past the bound: next bucket's upper bound (200).
+        let m = Metrics::default();
+        m.on_response(Duration::from_micros(101));
+        assert_eq!(m.latency_quantile_hint_us(1.0), 200.0);
+        // First bucket's lower edge: anything <= 50 reports 50.
+        let m = Metrics::default();
+        m.on_response(Duration::from_micros(1));
+        assert_eq!(m.latency_quantile_hint_us(0.5), 50.0);
+        // Exactly the last finite bound (1s) stays finite…
+        let m = Metrics::default();
+        m.on_response(Duration::from_micros(1_000_000));
+        assert_eq!(m.latency_quantile_hint_us(0.99), 1e6);
+        // …and past it (the +Inf overflow bucket) saturates at the last
+        // finite bound instead of inventing a number.
+        let m = Metrics::default();
+        m.on_response(Duration::from_micros(5_000_000));
+        assert_eq!(m.latency_quantile_hint_us(0.99), 1e6);
+        // q is clamped; rank never drops below 1 even at q=0.
+        assert_eq!(m.latency_quantile_hint_us(0.0), 1e6);
+        assert_eq!(m.latency_quantile_hint_us(2.0), 1e6);
+    }
+
+    #[test]
+    fn per_variant_slo_histograms_feed_the_snapshot() {
+        let m = Metrics::default();
+        m.register_variant("m|fp32");
+        m.on_response_for("m|fp32", Duration::from_micros(900));
+        m.on_queue_execute_for(
+            "m|fp32",
+            Duration::from_micros(600),
+            Duration::from_micros(250),
+        );
+        m.on_serialize_for("m|fp32", Duration::from_micros(40));
+        // Global stage hists got fed too (superset property).
+        assert_eq!(m.stage_count(Stage::Queue), 1);
+        assert_eq!(m.stage_count(Stage::Serialize), 1);
+        // Per-variant exact-histogram hints.
+        assert_eq!(m.variant_latency_quantile_hint_us("m|fp32", 0.99), 1000.0);
+        assert_eq!(m.variant_stage_quantile_hint_us("m|fp32", Stage::Queue, 0.99), 1000.0);
+        assert_eq!(m.variant_stage_quantile_hint_us("m|fp32", Stage::Execute, 0.99), 500.0);
+        assert_eq!(m.variant_stage_quantile_hint_us("m|fp32", Stage::Serialize, 0.99), 50.0);
+        // Non-SLO stages and unknown wires read 0, never panic.
+        assert_eq!(m.variant_stage_quantile_hint_us("m|fp32", Stage::Parse, 0.99), 0.0);
+        assert_eq!(m.variant_stage_quantile_hint_us("ghost", Stage::Queue, 0.99), 0.0);
+        // The ledger snapshot carries consistent hist/count/sum triples.
+        let snap = m.slo_snapshot();
+        assert_eq!(snap.len(), 1);
+        let v = &snap[0];
+        assert_eq!(v.wire, "m|fp32");
+        assert_eq!(v.responses, 1);
+        assert_eq!(v.latency.quantile_us(0.99), 1000.0);
+        assert_eq!(v.stages[0].count, 1);
+        assert_eq!(v.stages[0].mean_us(), 600.0);
+        assert_eq!(v.stages[1].mean_us(), 250.0);
+        assert_eq!(v.stages[2].mean_us(), 40.0);
     }
 
     /// The brownout controller's p99 comes from the exact log-bucketed

@@ -28,6 +28,11 @@
 //!   [`server::Server::try_submit_graceful`] walks each int8 variant's
 //!   nested 8/4/2-bit rung ladder (degrade precision, keep answering)
 //!   and only sheds once the ladder is exhausted.
+//! - [`autopilot`] — the SLO autopilot: a hysteresis controller that
+//!   reads the per-variant budget ledger ([`crate::obs::slo`]) each tick
+//!   and retunes admission depth and the batch deadline live, in bounded
+//!   steps with dwell and cooldown, logging every action with its
+//!   histogram evidence.
 //!
 //! With [`server::Server::start_adaptive`] the coordinator also owns the
 //! online-adaptation recal worker: a background thread ticking
@@ -41,6 +46,7 @@
 //! runtime, with LRU eviction past `--max-models` and pinned startup
 //! models. In-flight requests always finish before a model's workers exit.
 
+pub mod autopilot;
 pub mod batcher;
 pub mod brownout;
 pub mod calibrate;
@@ -49,5 +55,6 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
+pub use autopilot::{AutopilotConfig, AutopilotController};
 pub use brownout::{BrownoutConfig, BrownoutController, BrownoutState};
 pub use server::{ModelInfo, Request, Response, Server, ServerConfig, SubmitError, ZooError};

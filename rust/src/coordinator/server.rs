@@ -32,7 +32,8 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::BatchPolicy;
+use super::autopilot::{AutopilotConfig, AutopilotController, Decision, Knob, Observation};
+use super::batcher::{BatchPolicy, LivePolicy};
 use super::brownout::{BrownoutConfig, BrownoutController, BrownoutState};
 use super::metrics::Metrics;
 use super::router::{Router, VariantKey};
@@ -41,7 +42,8 @@ use crate::adapt::AdaptManager;
 use crate::engine::{Engine, EngineCell, EngineError, SessionPool};
 use crate::net::admission::{Admission, AdmissionError, Permit};
 use crate::obs::log as olog;
-use crate::obs::TraceHandle;
+use crate::obs::slo;
+use crate::obs::{FlightRecorder, TraceHandle, TraceId};
 use crate::tensor::{Shape, Tensor};
 use crate::util::json::Json;
 
@@ -86,6 +88,10 @@ pub struct ServerConfig {
     /// past the cap evicts the least-recently-used unpinned model (startup
     /// models are pinned and never evicted).
     pub max_models: usize,
+    /// SLO autopilot knobs; `None` (the default) disables the controller —
+    /// `--max-queue` and the batch deadline then stay exactly where the
+    /// flags put them.
+    pub autopilot: Option<AutopilotConfig>,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +102,7 @@ impl Default for ServerConfig {
             max_queue_depth: 0,
             brownout: None,
             max_models: 0,
+            autopilot: None,
         }
     }
 }
@@ -206,8 +213,9 @@ pub struct Server {
     zoo: Mutex<ZooState>,
     /// Zoo capacity ([`ServerConfig::max_models`]); 0 = unbounded.
     max_models: usize,
-    /// Batch policy, kept so hot-loaded models spawn identical workers.
-    policy: BatchPolicy,
+    /// Live batch policy shared by every worker (startup and hot-loaded):
+    /// the autopilot's deadline retunes land on the next batch pull.
+    live_policy: Arc<LivePolicy>,
     /// Set by [`Server::drain`]; refuses new zoo membership changes.
     draining: AtomicBool,
     /// Online-adaptation state, when started via [`Server::start_adaptive`].
@@ -216,6 +224,11 @@ pub struct Server {
     adapt_handle: Mutex<Option<JoinHandle<()>>>,
     /// Precision-brownout state machine ([`ServerConfig::brownout`]).
     brownout: Option<BrownoutController>,
+    /// SLO-autopilot controller ([`ServerConfig::autopilot`]); the tick
+    /// thread is armed by [`Server::spawn_autopilot`].
+    autopilot: Option<Arc<AutopilotController>>,
+    autopilot_stop: Arc<AtomicBool>,
+    autopilot_handle: Mutex<Option<JoinHandle<()>>>,
     /// Worker threads per variant (the front door's drain-rate estimate).
     workers_per_variant: usize,
 }
@@ -252,6 +265,7 @@ impl Server {
         adapt: Option<Arc<AdaptManager>>,
     ) -> Self {
         let metrics = Arc::new(Metrics::default());
+        let live_policy = LivePolicy::new(config.policy);
         let mut router = Router::default();
         let mut catalog = Vec::with_capacity(variants.len());
         let mut models: BTreeMap<String, ModelEntry> = BTreeMap::new();
@@ -276,7 +290,7 @@ impl Server {
                 key.wire(),
                 rx,
                 Arc::new(SessionPool::over(cell)),
-                config.policy,
+                Arc::clone(&live_policy),
                 Arc::clone(&metrics),
                 config.workers_per_variant,
             );
@@ -331,12 +345,15 @@ impl Server {
             catalog: RwLock::new(catalog),
             zoo: Mutex::new(ZooState { models, clock: 0 }),
             max_models: config.max_models,
-            policy: config.policy,
+            live_policy,
             draining: AtomicBool::new(false),
             adapt,
             adapt_stop,
             adapt_handle: Mutex::new(adapt_handle),
             brownout: config.brownout.map(BrownoutController::new),
+            autopilot: config.autopilot.map(|c| Arc::new(AutopilotController::new(c))),
+            autopilot_stop: Arc::new(AtomicBool::new(false)),
+            autopilot_handle: Mutex::new(None),
             workers_per_variant: config.workers_per_variant.max(1),
         }
     }
@@ -452,7 +469,7 @@ impl Server {
                     key.wire(),
                     rx,
                     Arc::new(SessionPool::over(Arc::new(EngineCell::new(engine)))),
-                    self.policy,
+                    Arc::clone(&self.live_policy),
                     self.metrics_arc(),
                     self.workers_per_variant,
                 ));
@@ -520,6 +537,98 @@ impl Server {
     /// (the front door's `/v1/drift` + `/v1/recalibrate` source).
     pub fn adapt(&self) -> Option<&Arc<AdaptManager>> {
         self.adapt.as_ref()
+    }
+
+    /// The autopilot controller, when [`ServerConfig::autopilot`] enabled
+    /// it (the `/v1/slo` response's `autopilot` block).
+    pub fn autopilot(&self) -> Option<&Arc<AutopilotController>> {
+        self.autopilot.as_ref()
+    }
+
+    /// The shared live batch policy (autopilot writes, workers read).
+    pub fn live_policy(&self) -> &Arc<LivePolicy> {
+        &self.live_policy
+    }
+
+    /// Arm the autopilot tick thread (no-op without
+    /// [`ServerConfig::autopilot`]). The front door calls this once at
+    /// startup with its flight recorder, so retunes land as
+    /// `autopilot.retune:*` lifecycle traces next to the zoo's and the
+    /// adaptation loop's. Idempotent per server; [`Server::drain`] stops
+    /// and joins the thread before closing the router.
+    pub fn spawn_autopilot(self: &Arc<Self>, recorder: Arc<FlightRecorder>) {
+        let Some(ctl) = self.autopilot.as_ref().map(Arc::clone) else { return };
+        let mut slot = self.autopilot_handle.lock().unwrap();
+        if slot.is_some() || self.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        let server = Arc::clone(self);
+        let stop = Arc::clone(&self.autopilot_stop);
+        let handle = std::thread::Builder::new()
+            .name("pdq-autopilot".into())
+            .spawn(move || {
+                let tick = ctl.config().tick.max(Duration::from_millis(10));
+                while !stop.load(Ordering::SeqCst) {
+                    server.autopilot_tick(&ctl, &recorder);
+                    // Sleep in short slices so drain is prompt.
+                    let mut slept = Duration::ZERO;
+                    while slept < tick && !stop.load(Ordering::SeqCst) {
+                        let chunk = (tick - slept).min(Duration::from_millis(50));
+                        std::thread::sleep(chunk);
+                        slept += chunk;
+                    }
+                }
+            })
+            .expect("spawn autopilot worker");
+        *slot = Some(handle);
+    }
+
+    /// One autopilot control step: build the SLO ledger from the exact
+    /// per-variant stage histograms, hand the worst-burning variant's line
+    /// to the controller, and apply + log any retune it orders. Private,
+    /// but deterministic enough that unit tests drive it directly.
+    fn autopilot_tick(&self, ctl: &AutopilotController, recorder: &FlightRecorder) {
+        let cfg = ctl.config();
+        let ledger = slo::ledger(&self.metrics.slo_snapshot(), cfg.budget_us, 0.99);
+        // The worst burner sets the policy for the shared knobs: a fleet
+        // where any variant is out of budget is out of budget.
+        let Some(worst) = ledger
+            .variants
+            .iter()
+            .max_by(|a, b| a.burn.partial_cmp(&b.burn).unwrap_or(std::cmp::Ordering::Equal))
+        else {
+            return; // no traffic yet: nothing to observe
+        };
+        let obs = Observation {
+            burn: worst.burn,
+            dominant: worst.dominant,
+            depth: self.admission.limit(),
+            deadline_us: self.live_policy.deadline_us(),
+        };
+        let t0 = Instant::now();
+        let Decision::Retune(r) = ctl.observe(&obs, t0) else { return };
+        match r.knob {
+            Knob::Depth => self.admission.set_limit(r.to as usize),
+            Knob::Deadline => self.live_policy.set_deadline_us(r.to),
+        }
+        // Evidence: the knob move plus the exact ledger decomposition it
+        // was decided on — an operator can replay the reasoning from the
+        // decision log alone.
+        let mut f = Json::obj();
+        f.set("knob", r.knob.as_str())
+            .set("from", r.from)
+            .set("to", r.to)
+            .set("reason", r.reason)
+            .set("variant", worst.variant.clone())
+            .set("burn", worst.burn)
+            .set("dominant", worst.dominant)
+            .set("ledger", ledger.to_json());
+        olog::event(olog::Level::Warn, "autopilot.retune", f.clone());
+        ctl.record(f);
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        h.set_request(&format!("autopilot.retune:{}", r.knob.as_str()), ctl.actions());
+        recorder
+            .commit(h.finish(Instant::now()), self.metrics.latency_quantile_hint_us(0.99) as f64);
     }
 
     /// Submit a request; returns a receiver for the response, or an error
@@ -770,7 +879,13 @@ impl Server {
     pub fn drain(&self) {
         self.draining.store(true, Ordering::SeqCst);
         self.adapt_stop.store(true, Ordering::SeqCst);
+        self.autopilot_stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.adapt_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // The autopilot joins before the router closes: no knob can move
+        // mid-drain, and the decision ring is final when drain returns.
+        if let Some(h) = self.autopilot_handle.lock().unwrap().take() {
             let _ = h.join();
         }
         self.router.write().unwrap().close();
@@ -898,6 +1013,7 @@ mod tests {
                 max_queue_depth: 0,
                 brownout: None,
                 max_models: 0,
+                autopilot: None,
             },
         );
         let key = fp32_key("m");
@@ -1194,6 +1310,52 @@ mod tests {
             server.hot_load(vec![float_variant("c")], 1),
             Err(ZooError::Full { max: 2 })
         );
+        server.drain();
+    }
+
+    /// One driven autopilot tick on queue-dominated over-budget traffic:
+    /// the admission limit shrinks by exactly one bounded step, the
+    /// evidence ring records the decision, and a lifecycle trace lands in
+    /// the recorder. (The closed-loop e2e lives in `tests/autopilot.rs`;
+    /// this pins the tick mechanics deterministically.)
+    #[test]
+    fn autopilot_tick_shrinks_depth_on_queue_burn() {
+        let cfg = AutopilotConfig {
+            cooldown: Duration::ZERO,
+            dwell_ticks: 1,
+            ..AutopilotConfig::with_budget_us(1_000)
+        };
+        let server = Arc::new(Server::start(
+            vec![float_variant("m")],
+            ServerConfig { max_queue_depth: 512, autopilot: Some(cfg), ..Default::default() },
+        ));
+        let ctl = Arc::clone(server.autopilot().unwrap());
+        let recorder = FlightRecorder::new(16, 16);
+        // Queue-dominated traffic 20× over the 1 ms budget.
+        for _ in 0..100 {
+            server.metrics().on_response_for("m|fp32", Duration::from_micros(20_000));
+            server.metrics().on_queue_execute_for(
+                "m|fp32",
+                Duration::from_micros(18_000),
+                Duration::from_micros(2_000),
+            );
+        }
+        server.autopilot_tick(&ctl, &recorder);
+        assert_eq!(server.max_queue_depth(), 384, "512 shrank by one 25% step");
+        assert_eq!(ctl.actions(), 1);
+        let decisions = ctl.decisions_json();
+        assert_eq!(decisions.len(), 1);
+        assert_eq!(
+            decisions[0].get("knob").and_then(|v| v.as_str()),
+            Some("max_queue_depth")
+        );
+        assert!(decisions[0].get("ledger").is_some(), "evidence carries the ledger");
+        let (recent, _) = recorder.counts();
+        assert!(recent > 0, "retune committed a lifecycle trace");
+        assert!(recorder
+            .snapshot()
+            .iter()
+            .any(|t| t.variant.starts_with("autopilot.retune:")));
         server.drain();
     }
 

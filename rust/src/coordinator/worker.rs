@@ -6,7 +6,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{next_batch, BatchPolicy};
+use super::batcher::{next_batch, LivePolicy};
 use super::metrics::Metrics;
 use super::server::{Request, Response};
 use crate::engine::{KernelTrace, SessionPool};
@@ -24,12 +24,16 @@ pub struct Job {
 /// session out per batch, so the pool never holds more sessions than the
 /// variant's peak concurrency, and each session's arena is reused warm
 /// across every batch it serves.
+///
+/// The batch policy arrives as a shared [`LivePolicy`]: workers rematerialize
+/// it before every batch pull, so an autopilot retune of the deadline lands
+/// on the very next batch without restarting anything.
 pub fn spawn_workers(
     name: String,
     wire: String,
     rx: mpsc::Receiver<Job>,
     pool: Arc<SessionPool>,
-    policy: BatchPolicy,
+    policy: Arc<LivePolicy>,
     metrics: Arc<Metrics>,
     n_threads: usize,
 ) -> Vec<JoinHandle<()>> {
@@ -39,6 +43,7 @@ pub fn spawn_workers(
             let rx = Arc::clone(&rx);
             let pool = Arc::clone(&pool);
             let metrics = Arc::clone(&metrics);
+            let policy = Arc::clone(&policy);
             let wire = wire.clone();
             let name = format!("{name}#{i}");
             std::thread::Builder::new()
@@ -50,7 +55,7 @@ pub fn spawn_workers(
                         // this one executes.
                         let batch = {
                             let guard = rx.lock().unwrap();
-                            next_batch(&guard, &policy)
+                            next_batch(&guard, &policy.get())
                         };
                         let Some(batch) = batch else { return };
                         // The instant this batch closed: the boundary
@@ -100,8 +105,11 @@ pub fn spawn_workers(
                             metrics.on_response_for(&wire, latency);
                             // The split the combined latency hides: time
                             // waiting for a worker vs. time on the kernels
-                            // (batch wait folds into the execute side).
-                            metrics.on_queue_execute(
+                            // (batch wait folds into the execute side). The
+                            // per-variant form also feeds the SLO ledger's
+                            // stage histograms.
+                            metrics.on_queue_execute_for(
+                                &wire,
                                 batch_ready.saturating_duration_since(job.enqueued),
                                 done.saturating_duration_since(run_start),
                             );
@@ -162,6 +170,7 @@ pub fn spawn_workers(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
     use crate::engine::{FloatEngine, VariantKey, VariantSpec};
     use crate::nn::Graph;
     use crate::tensor::{Shape, Tensor};
@@ -187,7 +196,7 @@ mod tests {
             "m|fp32".into(),
             rx,
             Arc::clone(&pool),
-            BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) },
+            LivePolicy::new(BatchPolicy { max_batch: 4, deadline: Duration::from_millis(1) }),
             Arc::clone(&metrics),
             2,
         );
@@ -243,7 +252,7 @@ mod tests {
             "m|fp32".into(),
             rx,
             passthrough_pool(),
-            BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) },
+            LivePolicy::new(BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) }),
             Arc::clone(&metrics),
             1,
         );
@@ -315,7 +324,7 @@ mod tests {
             "m|fp32".into(),
             rx,
             pool,
-            BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) },
+            LivePolicy::new(BatchPolicy { max_batch: 2, deadline: Duration::from_millis(1) }),
             Arc::clone(&metrics),
             1,
         );

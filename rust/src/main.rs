@@ -15,8 +15,12 @@
 //!             [--model M | --synthetic] [--epoch N] [--gamma N]
 //!                                   # (int8 weights, folded biases, requant
 //!                                   # specs, PDQ tables; per-section CRCs)
+//!             [--sign-key KEY]      # append a keyed-hash (HMAC-SHA-256)
+//!                                   # signature trailer over the whole file
 //! pdq inspect M.pdqa [--json]       # verify + describe an artifact;
 //!                                   # exits nonzero on any corruption
+//!             [--verify-key KEY]    # additionally require a valid
+//!                                   # signature trailer under KEY
 //! pdq repack  M.pdqa --out M2.pdqa  # recalibrate + bump the artifact epoch
 //! pdq serve   --requests N          # in-process serving coordinator demo
 //! pdq serve   --listen HOST:PORT    # HTTP/1.1 front door (SIGTERM drains)
@@ -39,6 +43,18 @@
 //!             [--trace]             # flight recorder: per-request stage
 //!                                   # tracing, X-PDQ-Trace echo, and
 //!                                   # GET /v1/traces
+//!             [--slo-budget-ms N]   # per-variant latency budget for the
+//!                                   # SLO ledger (GET /v1/slo, Prometheus
+//!                                   # pdq_slo_budget_burn gauges)
+//!             [--autopilot[=spec]]  # close the loop: retune --max-queue
+//!                                   # depth and the batch deadline live
+//!                                   # from the ledger's dominant stage
+//!                                   # (spec: depth=lo..hi,deadline_us=...,
+//!                                   # step,exit,dwell,cooldown_ms,tick_ms)
+//!             [--profile-every N]   # continuous profiling: deterministic
+//!                                   # 1-in-N trace sampling with kernel
+//!                                   # spans, no --trace needed (autopilot
+//!                                   # defaults this to 32)
 //!             [--log-json]          # structured JSON log events on stderr
 //! pdq loadgen --target HOST:PORT    # socket load generator -> BENCH_serving.json
 //!             [--mode open|closed] [--rps N] [--concurrency N] [--duration-s N]
@@ -47,6 +63,8 @@
 //!                                   # (round-robin across the zoo)
 //!             [--out PATH] [--expect-zero-drops]
 //!             [--expect-zero-failed]
+//!             [--assert-p99-le-us N]  # exit nonzero if aggregate p99
+//!                                   # exceeds N µs (CI recovery gate)
 //!             [--shift corruption:severity@t]  # mid-run distribution shift
 //!             [--sweep] [--base-rps N] [--multipliers 1,2,4,...]
 //!             [--step-secs N] [--accuracy-n N]  # overload sweep: step the
@@ -64,6 +82,11 @@
 //!                                   # schema family, writes a markdown
 //!                                   # delta table, exits nonzero on
 //!                                   # regression (CI gate)
+//!             [--trajectory]        # also fit per-metric drift over the
+//!                                   # whole history (≥3 files, oldest
+//!                                   # first), append a §Trajectory
+//!                                   # section, and exit nonzero on slow
+//!                                   # regressions pairwise diffs miss
 //! ```
 
 use std::path::PathBuf;
@@ -74,6 +97,7 @@ use pdq::adapt::{
     adaptive_standard_menu, AdaptConfig, AdaptManager, DriftConfig, ObserverConfig, PolicyConfig,
     RecalPolicy,
 };
+use pdq::coordinator::autopilot::AutopilotConfig;
 use pdq::coordinator::batcher::BatchPolicy;
 use pdq::coordinator::calibrate::demo_model;
 use pdq::coordinator::{BrownoutConfig, Server, ServerConfig};
@@ -272,6 +296,16 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         slo_p99_us: args.opt_f64("slo-p99-ms", 50.0) as f32 * 1000.0,
         ..Default::default()
     });
+    // --autopilot[=spec]: close the SLO loop — the controller retunes the
+    // admission depth and batch deadline live from the /v1/slo ledger.
+    // Budget comes from --slo-budget-ms (shared with the ledger endpoint).
+    let slo_budget_us = (args.opt_f64("slo-budget-ms", 50.0).max(0.001) * 1000.0) as u64;
+    let autopilot = if args.flag("autopilot") || args.opt("autopilot").is_some() {
+        let spec = args.opt("autopilot").unwrap_or("");
+        Some(AutopilotConfig::parse(spec, slo_budget_us).map_err(anyhow::Error::msg)?)
+    } else {
+        None
+    };
     let config = ServerConfig {
         workers_per_variant: args.opt_usize("workers", 2),
         policy: BatchPolicy {
@@ -281,6 +315,7 @@ fn cmd_serve(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         max_queue_depth: args.opt_usize("max-queue", 32),
         brownout,
         max_models: args.opt_usize("max-models", 0),
+        autopilot,
     };
     // --artifact: serve packed pdq-artifact-v1 files — the zoo's pinned
     // startup set — instead of building engines in-process. Front-door
@@ -413,11 +448,22 @@ fn run_front_door(
     // transitions, recalibrations, ...) from text to JSON lines.
     pdq::obs::log::init(args.flag("log-json"), pdq::obs::log::Level::Info);
     let trace = args.flag("trace");
+    // Continuous profiling: --autopilot implies 1-in-32 sampling unless
+    // --profile-every overrides it (0 disables sampling explicitly).
+    let profile_every =
+        args.opt_usize("profile-every", if config.autopilot.is_some() { 32 } else { 0 });
+    let slo_budget_us = config
+        .autopilot
+        .map(|a| a.budget_us)
+        .unwrap_or_else(|| (args.opt_f64("slo-budget-ms", 50.0).max(0.001) * 1000.0) as u64);
     let fd_cfg = FrontDoorConfig {
         addr: addr.to_string(),
         conn_threads: args.opt_usize("http-threads", 16),
         max_connections: args.opt_usize("max-conns", 256),
         trace,
+        profile_every,
+        profile_seed: args.opt_u64("profile-seed", 0),
+        slo_budget_us,
         ..Default::default()
     };
     let front = FrontDoor::start(Arc::new(server), fd_cfg)
@@ -425,6 +471,28 @@ fn run_front_door(
     println!("pdq-serve: listening on {}", front.url());
     if trace {
         println!("pdq-serve: flight recorder armed (GET /v1/traces, X-PDQ-Trace echo)");
+    }
+    if profile_every > 0 {
+        println!(
+            "pdq-serve: continuous profiling on (sampling 1-in-{profile_every} requests \
+             into the flight recorder)",
+        );
+    }
+    println!(
+        "pdq-serve: SLO budget {:.1} ms per request (GET /v1/slo)",
+        slo_budget_us as f64 / 1000.0,
+    );
+    if let Some(a) = &config.autopilot {
+        println!(
+            "pdq-serve: autopilot on (depth {}..{}, deadline {}..{} us, step {:.0}%, \
+             cooldown {} ms)",
+            a.min_depth,
+            a.max_depth,
+            a.min_deadline_us,
+            a.max_deadline_us,
+            a.step * 100.0,
+            a.cooldown.as_millis(),
+        );
     }
     println!(
         "pdq-serve: {} variants of {name}, {} workers/variant, max queue depth {}",
@@ -477,8 +545,17 @@ fn cmd_pack(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     pack_to_file(&model, opts, std::path::Path::new(&out))?;
+    // --sign-key: append the HMAC-SHA-256 trailer over the finished file.
+    // The trailer sits outside the pdq-artifact-v1 body, so unsigned
+    // readers still load the artifact; keyed readers verify end to end.
+    if let Some(key) = args.opt("sign-key") {
+        let mut bytes = std::fs::read(&out)?;
+        pdq::artifact::sign_artifact(&mut bytes, key.as_bytes());
+        std::fs::write(&out, &bytes)?;
+    }
     let len = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
-    println!("packed {name} -> {out} ({len} bytes)");
+    let signed = if args.opt("sign-key").is_some() { ", signed" } else { "" };
+    println!("packed {name} -> {out} ({len} bytes{signed})");
     Ok(())
 }
 
@@ -487,9 +564,12 @@ fn cmd_pack(artifacts: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 /// nonzero exit: this is CI's tamper gate.
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let [path] = args.positional() else {
-        anyhow::bail!("usage: pdq inspect <artifact.pdqa> [--json]");
+        anyhow::bail!("usage: pdq inspect <artifact.pdqa> [--json] [--verify-key KEY]");
     };
-    let report = pdq::artifact::inspect_path(std::path::Path::new(path))
+    // --verify-key: a missing or mismatching signature trailer is
+    // corruption (nonzero exit), same as a bad section CRC.
+    let key = args.opt("verify-key").map(str::as_bytes);
+    let report = pdq::artifact::inspect_path_with_key(std::path::Path::new(path), key)
         .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     if args.flag("json") {
         println!("{}", report.render_json());
@@ -667,6 +747,16 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     if args.flag("expect-zero-failed") && report.total.failed > 0 {
         anyhow::bail!("{} requests failed at the transport/protocol level", report.total.failed);
     }
+    // --assert-p99-le-us: CI's SLO recovery gate — fail the run when the
+    // aggregate tail missed the bound (e.g. autopilot smoke after retune).
+    let p99_bound = args.opt_f64("assert-p99-le-us", 0.0);
+    if p99_bound > 0.0 && report.total.p99_us > p99_bound {
+        anyhow::bail!(
+            "aggregate p99 {:.0} us exceeds the asserted bound {:.0} us",
+            report.total.p99_us,
+            p99_bound,
+        );
+    }
     Ok(())
 }
 
@@ -684,17 +774,40 @@ fn cmd_perf_report(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--threshold must be in 0..=10, got {threshold}");
     }
     let rep = report::perf_report_files(files, threshold).map_err(anyhow::Error::msg)?;
-    let md = rep.to_markdown();
+    let mut md = rep.to_markdown();
+    // --trajectory: fit per-metric drift over the whole history (≥3 files,
+    // oldest first) and append the §Trajectory section — the slow-drift
+    // gate pairwise first-vs-last diffs can't see.
+    let traj = if args.flag("trajectory") {
+        Some(report::perf_trajectory_files(files, threshold).map_err(anyhow::Error::msg)?)
+    } else {
+        None
+    };
+    if let Some(t) = &traj {
+        md.push_str(&t.to_markdown());
+    }
     print!("{md}");
     let out = args.opt_or("out", "PERF_REPORT.md");
     std::fs::write(out, &md)?;
     println!("perf report written to {out}");
-    if rep.regressed() && !args.flag("no-fail") {
-        anyhow::bail!(
-            "{} metric(s) regressed past the {:.0}% threshold",
-            rep.regressions.len(),
-            threshold * 100.0,
-        );
+    if !args.flag("no-fail") {
+        if rep.regressed() {
+            anyhow::bail!(
+                "{} metric(s) regressed past the {:.0}% threshold",
+                rep.regressions.len(),
+                threshold * 100.0,
+            );
+        }
+        if let Some(t) = &traj {
+            if t.drifted() {
+                anyhow::bail!(
+                    "{} metric(s) drifting past the {:.0}% threshold over {} artifacts",
+                    t.flagged.len(),
+                    threshold * 100.0,
+                    files.len(),
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -41,9 +41,10 @@ impl Drop for Permit {
 }
 
 /// The gate. `limit == 0` means unbounded (depth is still tracked, so
-/// `/metrics` can report it).
+/// `/metrics` can report it). The limit itself is atomic so the SLO
+/// autopilot can retune queue depth live without pausing admissions.
 pub struct Admission<K: Ord> {
-    limit: usize,
+    limit: AtomicUsize,
     slots: RwLock<BTreeMap<K, Arc<AtomicUsize>>>,
 }
 
@@ -51,11 +52,18 @@ impl<K: Ord + Clone> Admission<K> {
     pub fn new(limit: usize, keys: impl IntoIterator<Item = K>) -> Self {
         let slots =
             keys.into_iter().map(|k| (k, Arc::new(AtomicUsize::new(0)))).collect();
-        Self { limit, slots: RwLock::new(slots) }
+        Self { limit: AtomicUsize::new(limit), slots: RwLock::new(slots) }
     }
 
     pub fn limit(&self) -> usize {
-        self.limit
+        self.limit.load(Ordering::Acquire)
+    }
+
+    /// Retune the in-flight limit live (0 = unbounded). Already-admitted
+    /// requests keep their permits; a shrink only gates *new* admissions,
+    /// so depth drains down to the new limit rather than dropping work.
+    pub fn set_limit(&self, limit: usize) {
+        self.limit.store(limit, Ordering::Release);
     }
 
     /// Add a key (hot load). Idempotent: an existing counter is kept, so
@@ -81,14 +89,15 @@ impl<K: Ord + Clone> Admission<K> {
             let slots = self.slots.read().unwrap();
             Arc::clone(slots.get(key).ok_or(AdmissionError::UnknownKey)?)
         };
-        if self.limit == 0 {
+        let limit = self.limit.load(Ordering::Acquire);
+        if limit == 0 {
             slot.fetch_add(1, Ordering::AcqRel);
             return Ok(Permit { slot });
         }
         let mut cur = slot.load(Ordering::Acquire);
         loop {
-            if cur >= self.limit {
-                return Err(AdmissionError::Full { depth: self.limit });
+            if cur >= limit {
+                return Err(AdmissionError::Full { depth: limit });
             }
             match slot.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
                 Ok(_) => return Ok(Permit { slot }),
@@ -179,6 +188,32 @@ mod tests {
             a.try_acquire(&"b".to_string()).unwrap_err(),
             AdmissionError::Full { depth: 2 }
         );
+    }
+
+    #[test]
+    fn live_limit_retune_gates_new_admissions_only() {
+        let a: Admission<String> = Admission::new(4, ["v".to_string()]);
+        let held: Vec<Permit> = (0..4).map(|_| a.try_acquire(&"v".to_string()).unwrap()).collect();
+        // Shrink below the in-flight depth: nothing is dropped, but new
+        // admissions see the new limit immediately.
+        a.set_limit(2);
+        assert_eq!(a.limit(), 2);
+        assert_eq!(a.depth(&"v".to_string()), 4, "held permits survive a shrink");
+        assert_eq!(
+            a.try_acquire(&"v".to_string()).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
+        drop(held);
+        // Depth drained below the new limit: admissions flow again.
+        let _p = a.try_acquire(&"v".to_string()).unwrap();
+        let _q = a.try_acquire(&"v".to_string()).unwrap();
+        assert_eq!(
+            a.try_acquire(&"v".to_string()).unwrap_err(),
+            AdmissionError::Full { depth: 2 }
+        );
+        // Growing back (and to unbounded) also takes effect live.
+        a.set_limit(0);
+        assert!(a.try_acquire(&"v".to_string()).is_ok());
     }
 
     #[test]

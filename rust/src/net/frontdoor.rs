@@ -19,6 +19,13 @@
 //!   evicts the least-recently-used unpinned model.
 //! - `GET /v1/drift` — per-variant drift/epoch/recalibration status
 //!   (404 unless the server was started with adaptation, `--adapt`).
+//! - `GET /v1/slo[?budget_us=&q=&variant=]` — the per-variant SLO budget
+//!   ledger (schema `pdq-slo-v1`): each variant's p99 against the
+//!   configured budget, decomposed into queue/execute/serialize stage
+//!   shares from the exact stage histograms, plus the autopilot's live
+//!   knob positions and bounded decision ring when `--autopilot` armed
+//!   the controller. The same ledger rides `GET /metrics?format=prometheus`
+//!   as `pdq_slo_budget_burn{variant,stage}` gauges.
 //! - `POST /v1/recalibrate[?variant=<wire>]` — manual shadow
 //!   recalibration trigger (404 without adaptation).
 //! - `GET /healthz` — liveness (+ `"draining"` once shutdown began).
@@ -60,7 +67,7 @@
 //! metrics reject-reason breakdown, and the connection closed.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -99,6 +106,18 @@ pub struct FrontDoorConfig {
     /// default — disarmed serving is byte-identical on the wire and
     /// allocation-free on the hot path.
     pub trace: bool,
+    /// Continuous profiling: trace 1 in N `/v1/infer` requests (full
+    /// per-stage + kernel spans into the recorder) *without* `--trace`.
+    /// 0 disables. Non-sampled requests take the exact disarmed hot path —
+    /// bit-identical responses, no trace allocation.
+    pub profile_every: usize,
+    /// Deterministic phase for the 1-in-N sampler: request counter values
+    /// congruent to `profile_seed % profile_every` are sampled, so a
+    /// seeded workload replays the same sampled set.
+    pub profile_seed: u64,
+    /// Default p99 budget for the `/v1/slo` ledger, µs (`--slo-budget-ms`;
+    /// a `?budget_us=` query overrides per request).
+    pub slo_budget_us: u64,
 }
 
 impl Default for FrontDoorConfig {
@@ -110,6 +129,9 @@ impl Default for FrontDoorConfig {
             response_timeout: Duration::from_secs(30),
             max_connections: 256,
             trace: false,
+            profile_every: 0,
+            profile_seed: 0,
+            slo_budget_us: crate::obs::slo::DEFAULT_BUDGET_US,
         }
     }
 }
@@ -138,6 +160,13 @@ struct Ctx {
     max_conns: usize,
     /// Flight-recorder arming ([`FrontDoorConfig::trace`]).
     trace: bool,
+    /// Continuous-profiling stride ([`FrontDoorConfig::profile_every`]).
+    profile_every: usize,
+    profile_seed: u64,
+    /// Monotone `/v1/infer` counter driving the 1-in-N sampler.
+    infer_seq: AtomicU64,
+    /// Default `/v1/slo` budget, µs.
+    slo_budget_us: u64,
     recorder: Arc<FlightRecorder>,
 }
 
@@ -164,6 +193,10 @@ impl FrontDoor {
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
+        let recorder = Arc::new(FlightRecorder::default());
+        // Arm the SLO autopilot (no-op unless the server was configured
+        // with it): its retunes land in this recorder as lifecycle traces.
+        server.spawn_autopilot(Arc::clone(&recorder));
         let ctx = Arc::new(Ctx {
             server,
             shutdown: AtomicBool::new(false),
@@ -173,7 +206,11 @@ impl FrontDoor {
             conns: AtomicUsize::new(0),
             max_conns: cfg.max_connections,
             trace: cfg.trace,
-            recorder: Arc::new(FlightRecorder::default()),
+            profile_every: cfg.profile_every,
+            profile_seed: cfg.profile_seed,
+            infer_seq: AtomicU64::new(0),
+            slo_budget_us: cfg.slo_budget_us.max(1),
+            recorder,
         });
         let pool = ThreadPool::new("pdq-http", cfg.conn_threads);
         let accept_ctx = Arc::clone(&ctx);
@@ -372,6 +409,7 @@ fn route_request(
         ("POST", "/v1/models") => models_post(req, ctx),
         ("DELETE", p) if p.starts_with("/v1/models/") => models_delete(req, ctx),
         ("GET", "/v1/drift") => drift(ctx),
+        ("GET", "/v1/slo") => slo(req, ctx),
         ("GET", "/v1/traces") => traces(req, ctx),
         ("POST", "/v1/recalibrate") => recalibrate(req, ctx),
         ("POST", "/v1/infer") => infer(req, ctx, accepted),
@@ -461,8 +499,46 @@ fn recalibrate(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
     HttpResponse::json(200, &o)
 }
 
+/// `GET /v1/slo` — the per-variant SLO budget ledger (`pdq-slo-v1`):
+/// each variant's p99 against the budget, decomposed into
+/// queue/execute/serialize stage shares from the exact stage histograms,
+/// plus the autopilot's live knob positions and decision ring when the
+/// controller is armed. Query: `budget_us=`, `q=`, `variant=` (strictly
+/// parsed; hostile spellings are 400s, see [`crate::obs::slo::SloQuery`]).
+fn slo(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
+    let query = match crate::obs::slo::SloQuery::parse(req.query.as_deref().unwrap_or("")) {
+        Ok(q) => q,
+        Err(e) => return HttpResponse::error(400, &format!("bad /v1/slo query: {e}")),
+    };
+    let budget = query.budget_us.unwrap_or(ctx.slo_budget_us);
+    let q = query.q.unwrap_or(0.99);
+    let mut ledger =
+        crate::obs::slo::ledger(&ctx.server.metrics().slo_snapshot(), budget, q);
+    if let Some(want) = &query.variant {
+        ledger.variants.retain(|v| &v.variant == want);
+    }
+    let mut o = ledger.to_json();
+    let mut ap = Json::obj();
+    match ctx.server.autopilot() {
+        Some(ctl) => {
+            ap.set("enabled", true)
+                .set("actions", ctl.actions())
+                .set("depth", ctx.server.max_queue_depth())
+                .set("deadline_us", ctx.server.live_policy().deadline_us())
+                .set("decisions", Json::Arr(ctl.decisions_json()));
+        }
+        None => {
+            ap.set("enabled", false);
+        }
+    }
+    o.set("autopilot", ap);
+    HttpResponse::json(200, &o)
+}
+
 fn traces(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
-    if !ctx.trace {
+    // Armed by `--trace` or by continuous profiling (`--profile-every` /
+    // `--autopilot`): sampled traces are only useful if readable.
+    if !ctx.trace && ctx.profile_every == 0 {
         return HttpResponse::error(404, "tracing disabled (start the server with --trace)");
     }
     if req.query_param("format") == Some("otlp") {
@@ -478,7 +554,7 @@ fn traces(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
 /// operation label in the variant slot; the OTLP exporter renders them as
 /// `INTERNAL` spans.
 fn commit_lifecycle(ctx: &Ctx, op: &str, start: Instant) {
-    if !ctx.trace {
+    if !ctx.trace && ctx.profile_every == 0 {
         return;
     }
     let h = TraceHandle::new(TraceId::mint(), start);
@@ -607,6 +683,14 @@ fn metrics(req: &HttpRequest, ctx: &Ctx) -> HttpResponse {
         for (key, depth) in ctx.server.admission_depths() {
             body.push_str(&format!("pdq_inflight{{variant=\"{}\"}} {depth}\n", key.wire()));
         }
+        // The SLO ledger rides along as burn gauges: per variant, one
+        // series per tracked stage plus the end-to-end total.
+        let ledger = crate::obs::slo::ledger(
+            &ctx.server.metrics().slo_snapshot(),
+            ctx.slo_budget_us,
+            0.99,
+        );
+        body.push_str(&ledger.to_prometheus_gauges());
         if let Some(manager) = ctx.server.adapt() {
             let status = manager.status();
             body.push_str("# HELP pdq_drift_score Aggregate drift vs the calibration reference.\n");
@@ -707,13 +791,23 @@ fn infer(req: &HttpRequest, ctx: &Ctx, accepted: (Instant, Instant)) -> HttpResp
     let mx = ctx.server.metrics();
     let us = |a: Instant, b: Instant| b.saturating_duration_since(a).as_secs_f64() * 1e6;
     mx.on_stage_us(TraceStage::Accept, us(accepted.0, accepted.1));
+    // Continuous profiling: a deterministic 1-in-N of requests is traced
+    // end to end (kernel spans included) with no `--trace` flag. The
+    // counter ticks on every infer request so a seeded workload samples
+    // the same set on every run; non-sampled requests take the exact
+    // disarmed path below (no handle, no header, no allocation).
+    let sampled = ctx.profile_every > 0 && {
+        let n = ctx.profile_every as u64;
+        ctx.infer_seq.fetch_add(1, Ordering::Relaxed) % n == ctx.profile_seed % n
+    };
+    let armed = ctx.trace || sampled;
     let t_parse0 = accepted.1;
     let wire_req = match wire::decode_infer_request(&req.body) {
         Ok(r) => r,
         Err(e) => {
             // Malformed bodies still leave an anomalous trace when armed —
             // hostile traffic is exactly what an operator wants on record.
-            if ctx.trace {
+            if armed {
                 let h = TraceHandle::new(trace_id_for(req, None), accepted.0);
                 h.span(TraceStage::Accept, accepted.0, accepted.1);
                 h.set_outcome(TraceOutcome::Error);
@@ -724,11 +818,12 @@ fn infer(req: &HttpRequest, ctx: &Ctx, accepted: (Instant, Instant)) -> HttpResp
     };
     let t_parse1 = Instant::now();
     mx.on_stage_us(TraceStage::Parse, us(t_parse0, t_parse1));
-    let handle = if ctx.trace {
+    let wire_name = wire_req.variant.wire();
+    let handle = if armed {
         let h = TraceHandle::new(trace_id_for(req, wire_req.trace), accepted.0);
         h.span(TraceStage::Accept, accepted.0, accepted.1);
         h.span(TraceStage::Parse, t_parse0, t_parse1);
-        h.set_request(&wire_req.variant.wire(), wire_req.id);
+        h.set_request(&wire_name, wire_req.id);
         Some(h)
     } else {
         None
@@ -774,7 +869,12 @@ fn infer(req: &HttpRequest, ctx: &Ctx, accepted: (Instant, Instant)) -> HttpResp
                             &outputs,
                         );
                         let t_ser1 = Instant::now();
-                        mx.on_stage_us(TraceStage::Serialize, us(t_ser0, t_ser1));
+                        // Per-variant form: serialize feeds the variant's
+                        // SLO stage histogram as well as the global one.
+                        mx.on_serialize_for(
+                            &wire_name,
+                            t_ser1.saturating_duration_since(t_ser0),
+                        );
                         if let Some(h) = &handle {
                             h.span(TraceStage::Serialize, t_ser0, t_ser1);
                             h.set_bits(bits);
@@ -1027,6 +1127,67 @@ mod tests {
         assert!(names.contains(&"zoo.load:zoo"), "got spans: {names:?}");
         assert!(names.contains(&"zoo.unload:zoo"), "got spans: {names:?}");
 
+        fd.shutdown();
+    }
+
+    /// `/v1/slo` serves the ledger over HTTP, strictly rejects hostile
+    /// queries, and continuous profiling (1-in-N, no `--trace`) both arms
+    /// `/v1/traces` and lands sampled traces in the recorder.
+    #[test]
+    fn slo_endpoint_and_continuous_profiling() {
+        let cfg = FrontDoorConfig {
+            profile_every: 2,
+            profile_seed: 0,
+            ..FrontDoorConfig::default()
+        };
+        let fd = FrontDoor::start(tiny_server(), cfg).unwrap();
+        let addr = fd.local_addr().to_string();
+        let mut client = wire::Client::new(&addr);
+        let parse = |body: &[u8]| Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+
+        let key = VariantKey::new("m", VariantSpec::Fp32);
+        let img = Tensor::from_vec(Shape::hwc(2, 2, 1), vec![1.0, -2.0, 3.0, -4.0]);
+        for id in 0..6u64 {
+            match client.post_infer(&key, id, &img).unwrap() {
+                wire::InferOutcome::Ok(_) => {}
+                other => panic!("infer {id} failed: {other:?}"),
+            }
+        }
+
+        let r = client.get("/v1/slo").unwrap();
+        assert_eq!(r.status, 200);
+        let j = parse(&r.body);
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-slo-v1"));
+        let vars = j.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vars.len(), 1);
+        assert_eq!(vars[0].get("variant").unwrap().as_str(), Some("m|fp32"));
+        assert_eq!(vars[0].get("stages").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("autopilot").unwrap().get("enabled").unwrap().as_bool(),
+            Some(false)
+        );
+        // Budget override changes the burn denominator; hostile spellings
+        // are strict 400s, never 500s or silent defaults.
+        let r = client.get("/v1/slo?budget_us=1").unwrap();
+        assert_eq!(r.status, 200);
+        let j = parse(&r.body);
+        assert!(j.get("variants").unwrap().as_arr().unwrap()[0]
+            .get("burn")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            >= 1.0);
+        for bad in ["bogus=1", "budget_us=0", "q=nan", "budget_us=1&budget_us=2"] {
+            let r = client.get(&format!("/v1/slo?{bad}")).unwrap();
+            assert_eq!(r.status, 400, "query {bad:?} must be rejected");
+        }
+
+        // Profiling armed /v1/traces without --trace, and sampled half the
+        // requests (seed 0, stride 2 → counters 0, 2, 4).
+        let r = client.get("/v1/traces").unwrap();
+        assert_eq!(r.status, 200);
+        let (recent, _) = fd.recorder().counts();
+        assert_eq!(recent, 3, "1-in-2 sampling over 6 requests");
         fd.shutdown();
     }
 

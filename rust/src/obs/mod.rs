@@ -21,9 +21,17 @@
 //!   zoo's hot-load/unload and the adaptation epoch-swap lifecycle spans.
 //! - [`log`] — leveled, rate-limited structured events (brownout
 //!   transitions, recalibration decisions); human text or `--log-json`.
+//! - [`slo`] — the per-variant SLO budget ledger: each variant's p99
+//!   decomposed against a configured budget into queue/execute/serialize
+//!   stage shares read from the exact stage histograms, served at
+//!   `GET /v1/slo` (schema `pdq-slo-v1`) and exported as
+//!   `pdq_slo_budget_burn{variant,stage}` gauges — the observation the
+//!   autopilot ([`crate::coordinator::autopilot`]) acts on.
 //! - [`report`] — `pdq perf-report`: per-metric deltas across
 //!   `BENCH_*.json` artifacts with regression thresholds, rendered to
-//!   `PERF_REPORT.md`, nonzero exit on regression.
+//!   `PERF_REPORT.md`, nonzero exit on regression; `--trajectory` fits
+//!   direction-aware drift across the whole `baselines/` history to catch
+//!   slow regressions no pairwise diff sees.
 //!
 //! Everything is std-only, like the rest of the crate.
 
@@ -31,6 +39,7 @@ pub mod log;
 pub mod otlp;
 pub mod recorder;
 pub mod report;
+pub mod slo;
 pub mod trace;
 
 pub use recorder::FlightRecorder;

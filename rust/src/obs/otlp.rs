@@ -15,8 +15,9 @@
 //!
 //! Each [`Trace`] becomes a root span (kind `SERVER` for inference
 //! requests, `INTERNAL` for lifecycle operations — the zoo's
-//! `zoo.load:…`/`zoo.unload:…` and the adaptation loop's
-//! `adapt.epoch_swap:…` traces) plus one child span per recorded pipeline
+//! `zoo.load:…`/`zoo.unload:…`, the adaptation loop's
+//! `adapt.epoch_swap:…` and the SLO autopilot's `autopilot.…` traces)
+//! plus one child span per recorded pipeline
 //! stage. Per-node kernel spans stay in the native `/v1/traces` document;
 //! they carry no absolute timestamps, which OTLP spans require.
 
@@ -65,7 +66,7 @@ fn attr_int(key: &str, val: u64) -> Json {
 /// with a dotted operation label in the `variant` slot; everything else is
 /// an inference request.
 fn is_lifecycle(variant: &str) -> bool {
-    variant.starts_with("zoo.") || variant.starts_with("adapt.")
+    variant.starts_with("zoo.") || variant.starts_with("adapt.") || variant.starts_with("autopilot.")
 }
 
 /// Offset a trace's wall-clock epoch by a span-relative µs offset.

@@ -440,6 +440,229 @@ pub fn perf_report_files(paths: &[String], threshold: f64) -> Result<PerfReport,
     build_report(&docs, threshold)
 }
 
+// ---------------------------------------------------------------------------
+// Trajectory mode: drift over the whole baselines/ history.
+// ---------------------------------------------------------------------------
+
+/// One metric's fitted drift across ≥3 history points.
+///
+/// Pairwise first-vs-last comparison misses two failure shapes that a
+/// least-squares fit over the whole history catches: slow monotone drift
+/// where every adjacent step is under threshold but the line is clearly
+/// climbing, and a noisy endpoint that happens to dip below threshold on
+/// the exact commit the report ran.
+#[derive(Clone, Debug)]
+pub struct Trend {
+    /// Metric name.
+    pub name: String,
+    /// Values in history order (oldest first).
+    pub values: Vec<f64>,
+    /// Least-squares slope per history step.
+    pub slope_per_step: f64,
+    /// Fitted total move across the window: `slope * (n - 1)`.
+    pub drift_total: f64,
+    /// `drift_total / first * 100` when the first value is nonzero.
+    pub drift_pct: Option<f64>,
+    /// Judgment direction.
+    pub dir: Direction,
+    /// Whether the drift moves the bad way past threshold + noise floor.
+    pub flagged: bool,
+}
+
+/// One schema family's trajectory.
+#[derive(Clone, Debug)]
+pub struct FamilyTrajectory {
+    /// Schema family name.
+    pub family: String,
+    /// Member file paths, oldest first.
+    pub paths: Vec<String>,
+    /// Per-metric fitted trends (metrics present in every member).
+    pub trends: Vec<Trend>,
+}
+
+/// The `pdq perf-report --trajectory` result.
+#[derive(Clone, Debug)]
+pub struct TrajectoryReport {
+    /// Families with ≥3 history points.
+    pub families: Vec<FamilyTrajectory>,
+    /// Files in families with fewer than 3 points (fit refused).
+    pub skipped: Vec<String>,
+    /// `family/metric` names whose drift was flagged.
+    pub flagged: Vec<String>,
+    /// The relative threshold used (applied to the fitted total drift).
+    pub threshold: f64,
+}
+
+/// Least-squares slope of `ys` over x = 0, 1, …, n-1.
+fn ls_slope(ys: &[f64]) -> f64 {
+    let n = ys.len() as f64;
+    let xbar = (n - 1.0) / 2.0;
+    let ybar = ys.iter().sum::<f64>() / n;
+    let (mut num, mut den) = (0.0, 0.0);
+    for (i, y) in ys.iter().enumerate() {
+        let dx = i as f64 - xbar;
+        num += dx * (y - ybar);
+        den += dx * dx;
+    }
+    if den == 0.0 { 0.0 } else { num / den }
+}
+
+fn fit_trend(name: &str, dir: Direction, values: Vec<f64>, threshold: f64) -> Trend {
+    let slope = ls_slope(&values);
+    let drift_total = slope * (values.len() as f64 - 1.0);
+    let first = values[0];
+    let drift_pct = if first != 0.0 { Some(drift_total / first * 100.0) } else { None };
+    let bad = match dir {
+        Direction::Lower => drift_total > 0.0,
+        Direction::Higher => drift_total < 0.0,
+        Direction::Info => false,
+    };
+    let flagged = bad
+        && match drift_pct {
+            Some(pct) => {
+                drift_total.abs() > noise_floor(name) && pct.abs() > threshold * 100.0
+            }
+            // Zero baseline (count-like metric): any fitted appearance of a
+            // lower-is-better count is drift, same rule as `judge`.
+            None => dir == Direction::Lower && *values.last().unwrap() > 0.0,
+        };
+    Trend { name: name.to_string(), values, slope_per_step: slope, drift_total, drift_pct, dir, flagged }
+}
+
+/// Fit per-metric drift over the whole history, grouped by schema family.
+/// Input order is history order (oldest first); a family needs at least 3
+/// points for a fit — fewer land in `skipped`, never in a verdict.
+pub fn build_trajectory(docs: &[(String, Json)], threshold: f64) -> Result<TrajectoryReport, String> {
+    if docs.len() < 3 {
+        return Err(format!("trajectory needs at least three artifacts, got {}", docs.len()));
+    }
+    let mut parsed: Vec<(String, String, Vec<Metric>)> = Vec::new();
+    for (path, doc) in docs {
+        let (schema, metrics) = extract_metrics(doc).map_err(|e| format!("{path}: {e}"))?;
+        parsed.push((schema_family(&schema), path.clone(), metrics));
+    }
+    let mut families = Vec::new();
+    let mut skipped = Vec::new();
+    let mut flagged = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
+    for (family, _, _) in &parsed {
+        if seen.iter().any(|s| s == family) {
+            continue;
+        }
+        seen.push(family.clone());
+        let members: Vec<&(String, String, Vec<Metric>)> =
+            parsed.iter().filter(|(f, _, _)| f == family).collect();
+        if members.len() < 3 {
+            skipped.extend(members.iter().map(|(_, p, _)| p.clone()));
+            continue;
+        }
+        // Only metrics present at every history point get a fit; a metric
+        // that appears or vanishes mid-history has no one line to fit.
+        let mut trends = Vec::new();
+        for m in &members[0].2 {
+            let series: Vec<f64> = members
+                .iter()
+                .filter_map(|(_, _, ms)| ms.iter().find(|c| c.name == m.name).map(|c| c.value))
+                .collect();
+            if series.len() != members.len() {
+                continue;
+            }
+            let t = fit_trend(&m.name, m.dir, series, threshold);
+            if t.flagged {
+                flagged.push(format!("{family}/{}", t.name));
+            }
+            trends.push(t);
+        }
+        families.push(FamilyTrajectory {
+            family: family.clone(),
+            paths: members.iter().map(|(_, p, _)| p.clone()).collect(),
+            trends,
+        });
+    }
+    Ok(TrajectoryReport { families, skipped, flagged, threshold })
+}
+
+impl TrajectoryReport {
+    /// Render the `## Trajectory` section appended to `PERF_REPORT.md`.
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::new();
+        let _ = writeln!(md, "## Trajectory\n");
+        let _ = writeln!(
+            md,
+            "Least-squares drift over the full history (oldest → newest). A \
+             metric is flagged when its fitted move across the window exceeds \
+             ±{:.1}% in its bad direction (plus per-unit noise floors) — this \
+             catches slow regressions whose individual steps stay under \
+             threshold.\n",
+            self.threshold * 100.0
+        );
+        if self.flagged.is_empty() {
+            let _ = writeln!(md, "**No drift flagged.**\n");
+        } else {
+            let _ = writeln!(md, "**{} metric(s) drifting:**\n", self.flagged.len());
+            for f in &self.flagged {
+                let _ = writeln!(md, "- `{f}`");
+            }
+            let _ = writeln!(md);
+        }
+        for fam in &self.families {
+            let _ = writeln!(md, "### {} ({} points)\n", fam.family, fam.paths.len());
+            for p in &fam.paths {
+                let _ = writeln!(md, "- `{p}`");
+            }
+            let _ = writeln!(md);
+            let _ = writeln!(md, "| metric | first | last | fitted drift | per step | verdict |");
+            let _ = writeln!(md, "|---|---:|---:|---:|---:|---|");
+            for t in &fam.trends {
+                let pct = t
+                    .drift_pct
+                    .map(|p| format!("{}{:.1}%", if p >= 0.0 { "+" } else { "" }, p))
+                    .unwrap_or_else(|| fmt_num(t.drift_total));
+                let verdict = if t.flagged {
+                    "DRIFTING"
+                } else if t.dir == Direction::Info {
+                    "info"
+                } else {
+                    "ok"
+                };
+                let _ = writeln!(
+                    md,
+                    "| {} | {} | {} | {pct} | {} | {verdict} |",
+                    t.name,
+                    fmt_num(t.values[0]),
+                    fmt_num(*t.values.last().unwrap()),
+                    fmt_num(t.slope_per_step),
+                );
+            }
+            let _ = writeln!(md);
+        }
+        if !self.skipped.is_empty() {
+            let _ = writeln!(md, "### Too little history\n");
+            for p in &self.skipped {
+                let _ = writeln!(md, "- `{p}` (family has < 3 points)");
+            }
+            let _ = writeln!(md);
+        }
+        md
+    }
+
+    /// Whether any metric's drift was flagged.
+    pub fn drifted(&self) -> bool {
+        !self.flagged.is_empty()
+    }
+}
+
+/// Read, parse and fit artifact files — `pdq perf-report --trajectory`.
+pub fn perf_trajectory_files(paths: &[String], threshold: f64) -> Result<TrajectoryReport, String> {
+    let mut docs = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("{p}: {e}"))?;
+        docs.push((p.clone(), doc));
+    }
+    build_trajectory(&docs, threshold)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -537,6 +760,72 @@ mod tests {
             vec![("a.json".to_string(), mk(100_000.0)), ("b.json".to_string(), mk(125_000.0))];
         let rep = build_report(&docs, 0.10).unwrap();
         assert!(rep.regressions.iter().any(|r| r.contains("hotpath.mean_ns")));
+    }
+
+    #[test]
+    fn trajectory_needs_three_points() {
+        let docs = vec![
+            ("a.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("b.json".to_string(), serving_doc(4100.0, 0.0, 800.0)),
+        ];
+        assert!(build_trajectory(&docs, 0.10).is_err());
+        // Three total but only two in one family: the thin family is
+        // skipped, not judged.
+        let mut bench = Json::obj();
+        bench.set("schema", "pdq-bench-v1").set("benchmarks", Json::Arr(vec![]));
+        let docs = vec![
+            ("a.json".to_string(), serving_doc(4000.0, 0.0, 800.0)),
+            ("b.json".to_string(), serving_doc(4100.0, 0.0, 800.0)),
+            ("c.json".to_string(), bench),
+        ];
+        let rep = build_trajectory(&docs, 0.10).unwrap();
+        assert!(rep.families.is_empty());
+        assert_eq!(rep.skipped.len(), 3);
+        assert!(!rep.drifted());
+    }
+
+    /// The case pairwise comparison misses: a noisy endpoint keeps
+    /// first-vs-last under threshold, but the fitted line is climbing past
+    /// it. 6000 → 6550 is +9.2% (under 10%); the least-squares fit over
+    /// all four points drifts +10.75%.
+    #[test]
+    fn slow_drift_under_pairwise_threshold_is_flagged() {
+        let docs: Vec<(String, Json)> = [6000.0, 6600.0, 7100.0, 6550.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &p99)| (format!("{i}.json"), serving_doc(p99, 0.0, 800.0)))
+            .collect();
+        let pairwise = build_report(&docs, 0.10).unwrap();
+        assert!(!pairwise.regressed(), "pairwise must miss this on purpose");
+        let traj = build_trajectory(&docs, 0.10).unwrap();
+        assert!(traj.flagged.iter().any(|f| f == "pdq-serving/aggregate.p99_us"), "{:?}", traj.flagged);
+        let p99 = traj.families[0].trends.iter().find(|t| t.name == "aggregate.p99_us").unwrap();
+        assert!(p99.slope_per_step > 200.0 && p99.slope_per_step < 230.0);
+        assert!(traj.to_markdown().contains("DRIFTING"));
+    }
+
+    #[test]
+    fn improving_and_flat_trends_are_not_flagged() {
+        // p99 falling, rps rising: both move the good way.
+        let docs: Vec<(String, Json)> = [(7000.0, 700.0), (6500.0, 760.0), (6000.0, 820.0)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(p99, rps))| (format!("{i}.json"), serving_doc(p99, 0.0, rps)))
+            .collect();
+        let traj = build_trajectory(&docs, 0.10).unwrap();
+        assert!(!traj.drifted(), "{:?}", traj.flagged);
+        assert!(traj.to_markdown().contains("No drift flagged"));
+    }
+
+    #[test]
+    fn drops_appearing_over_history_are_flagged() {
+        let docs: Vec<(String, Json)> = [0.0, 0.0, 5.0, 12.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (format!("{i}.json"), serving_doc(4000.0, d, 800.0)))
+            .collect();
+        let traj = build_trajectory(&docs, 0.10).unwrap();
+        assert!(traj.flagged.iter().any(|f| f == "pdq-serving/aggregate.dropped"));
     }
 
     #[test]

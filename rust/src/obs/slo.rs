@@ -1,0 +1,513 @@
+//! Per-variant SLO budget ledger.
+//!
+//! PR 8's flight recorder attributes every microsecond of a request to a
+//! pipeline stage; this module turns that attribution into an accounting
+//! the autopilot can act on. For each served variant the ledger reads the
+//! exact log-bucketed histograms ([`Metrics::slo_snapshot`]) and
+//! decomposes the variant's p99 against a configured latency budget:
+//! how much of the budget is burned (`p99 / budget`), and which stage —
+//! queue wait, execute, or serialize — owns the largest share of the
+//! measured time. Queue-dominated burn means the admission depth is too
+//! deep for the current service rate; execute-dominated burn means the
+//! batch window is mis-tuned. The decomposition is served at
+//! `GET /v1/slo` (schema `pdq-slo-v1`), exported as
+//! `pdq_slo_budget_burn{variant,stage}` Prometheus gauges, and quoted
+//! verbatim as the evidence in every autopilot decision event.
+
+use crate::coordinator::metrics::{HistSnapshot, VariantSloSnapshot, SLO_STAGES};
+use crate::obs::trace::Trace;
+use crate::util::json::Json;
+
+/// Default p99 budget when `--slo-budget-ms` is not given: 50 ms.
+pub const DEFAULT_BUDGET_US: u64 = 50_000;
+
+/// Budgets outside (0, 1h] are configuration errors, not aspirations.
+pub const MAX_BUDGET_US: u64 = 3_600_000_000;
+
+/// One stage's slice of a variant's ledger entry.
+#[derive(Clone, Debug)]
+pub struct StageShare {
+    /// Stable stage label (`queue` / `execute` / `serialize`).
+    pub stage: &'static str,
+    /// Exact-histogram stage p99, µs.
+    pub p99_us: f32,
+    /// Mean stage latency, µs.
+    pub mean_us: f64,
+    /// This stage's fraction of total measured request time (sum-based, so
+    /// the shares plus the `other` residual sum to 1).
+    pub share: f64,
+    /// Fraction of the SLO budget this stage's p99 burns on its own.
+    pub burn: f64,
+}
+
+/// One variant's budget ledger entry.
+#[derive(Clone, Debug)]
+pub struct VariantSlo {
+    pub variant: String,
+    pub responses: u64,
+    pub budget_us: u64,
+    /// Exact-histogram end-to-end p99, µs.
+    pub p99_us: f32,
+    /// `p99 / budget`: 1.0 means exactly at budget.
+    pub burn: f64,
+    /// Queue / execute / serialize slices, in [`SLO_STAGES`] order.
+    pub stages: Vec<StageShare>,
+    /// Share of end-to-end time the three tracked stages do not explain
+    /// (accept/parse/admit/batch/requantize + scheduling slack).
+    pub other_share: f64,
+    /// The tracked stage with the largest share — the autopilot's signal.
+    pub dominant: &'static str,
+}
+
+/// The full ledger: every registered variant's entry under one budget.
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    pub budget_us: u64,
+    pub q: f64,
+    pub variants: Vec<VariantSlo>,
+}
+
+fn share_of(stage: &HistSnapshot, total_sum_us: f64) -> f64 {
+    if total_sum_us <= 0.0 {
+        0.0
+    } else {
+        (stage.sum_us / total_sum_us).clamp(0.0, 1.0)
+    }
+}
+
+/// Build the ledger from a metrics snapshot. `q` is the tail quantile the
+/// budget is judged at (0.99 unless a `/v1/slo?q=` override asks
+/// otherwise); variants that never responded are skipped — no data, no
+/// ledger line.
+pub fn ledger(snaps: &[VariantSloSnapshot], budget_us: u64, q: f64) -> Ledger {
+    let budget_us = budget_us.max(1);
+    let q = if q.is_finite() { q.clamp(0.01, 1.0) } else { 0.99 };
+    let mut variants = Vec::with_capacity(snaps.len());
+    for snap in snaps {
+        if snap.responses == 0 {
+            continue;
+        }
+        let p99_us = snap.latency.quantile_us(q);
+        let total_sum = snap.latency.sum_us;
+        let mut stages = Vec::with_capacity(SLO_STAGES.len());
+        let mut tracked_share = 0.0f64;
+        for (i, stage) in SLO_STAGES.iter().enumerate() {
+            let h = &snap.stages[i];
+            let share = share_of(h, total_sum);
+            tracked_share += share;
+            stages.push(StageShare {
+                stage: stage.as_str(),
+                p99_us: h.quantile_us(q),
+                mean_us: h.mean_us(),
+                share,
+                burn: h.quantile_us(q) as f64 / budget_us as f64,
+            });
+        }
+        let dominant = stages
+            .iter()
+            .max_by(|a, b| a.share.total_cmp(&b.share))
+            .map(|s| s.stage)
+            .unwrap_or("queue");
+        variants.push(VariantSlo {
+            variant: snap.wire.clone(),
+            responses: snap.responses,
+            budget_us,
+            p99_us,
+            burn: p99_us as f64 / budget_us as f64,
+            stages,
+            other_share: (1.0 - tracked_share).max(0.0),
+            dominant,
+        });
+    }
+    Ledger { budget_us, q, variants }
+}
+
+impl Ledger {
+    /// The `GET /v1/slo` body (schema `pdq-slo-v1`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", "pdq-slo-v1")
+            .set("budget_us", self.budget_us)
+            .set("q", self.q);
+        let mut vars = Vec::with_capacity(self.variants.len());
+        for v in &self.variants {
+            let mut vo = Json::obj();
+            vo.set("variant", v.variant.as_str())
+                .set("responses", v.responses)
+                .set("p99_us", v.p99_us)
+                .set("burn", v.burn)
+                .set("dominant", v.dominant)
+                .set("other_share", v.other_share);
+            let mut stages = Vec::with_capacity(v.stages.len());
+            for s in &v.stages {
+                let mut so = Json::obj();
+                so.set("stage", s.stage)
+                    .set("p99_us", s.p99_us)
+                    .set("mean_us", s.mean_us)
+                    .set("share", s.share)
+                    .set("burn", s.burn);
+                stages.push(so);
+            }
+            vo.set("stages", stages);
+            vars.push(vo);
+        }
+        o.set("variants", vars);
+        o
+    }
+
+    /// The ledger entry for one wire, if it has data.
+    pub fn variant(&self, wire: &str) -> Option<&VariantSlo> {
+        self.variants.iter().find(|v| v.variant == wire)
+    }
+
+    /// `pdq_slo_budget_burn{variant,stage}` gauge block, appended to the
+    /// Prometheus exposition by the front door. `stage="total"` carries the
+    /// end-to-end burn; the per-stage series carry each stage's own burn.
+    pub fn to_prometheus_gauges(&self) -> String {
+        if self.variants.is_empty() {
+            return String::new();
+        }
+        let mut s = String::with_capacity(256);
+        s.push_str(
+            "# HELP pdq_slo_budget_burn Fraction of the p99 SLO budget burned (1 = at budget).\n",
+        );
+        s.push_str("# TYPE pdq_slo_budget_burn gauge\n");
+        for v in &self.variants {
+            s.push_str(&format!(
+                "pdq_slo_budget_burn{{variant=\"{}\",stage=\"total\"}} {}\n",
+                v.variant, v.burn
+            ));
+            for st in &v.stages {
+                s.push_str(&format!(
+                    "pdq_slo_budget_burn{{variant=\"{}\",stage=\"{}\"}} {}\n",
+                    v.variant, st.stage, st.burn
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Per-stage shares of one recorded trace's end-to-end time — the
+/// trace-level counterpart of the histogram ledger, used by tests to prove
+/// the span accounting covers ≈ 1.0 of `total_us` (nothing double-counted,
+/// nothing unexplained beyond scheduling slack).
+pub fn shares_from_trace(trace: &Trace) -> Vec<(&'static str, f64)> {
+    if trace.total_us <= 0.0 {
+        return Vec::new();
+    }
+    trace
+        .spans
+        .iter()
+        .map(|s| (s.stage.as_str(), (s.us() / trace.total_us).max(0.0)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// /v1/slo query grammar
+// ---------------------------------------------------------------------------
+
+/// Parsed `GET /v1/slo?...` query. The grammar is deliberately tiny and
+/// strict — every key is known, duplicates are rejected (two sources of
+/// truth for a budget is how dashboards lie), and numbers are bounded
+/// before anything divides by them. This parser is a fuzz target
+/// ([`crate::testing::fuzz::target_slo_query`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloQuery {
+    /// Budget override, µs (None = the server's configured budget).
+    pub budget_us: Option<u64>,
+    /// Tail quantile in (0, 1]; None = 0.99.
+    pub q: Option<f64>,
+    /// Restrict the ledger to one wire name.
+    pub variant: Option<String>,
+}
+
+impl Default for SloQuery {
+    fn default() -> Self {
+        Self { budget_us: None, q: None, variant: None }
+    }
+}
+
+/// Longest accepted decoded variant filter (matches the wire-grammar cap
+/// on model names plus spec and `@bits` suffix headroom).
+const MAX_VARIANT_FILTER: usize = 96;
+
+/// Decode `%XX` escapes; rejects truncated or non-hex escapes and any
+/// resulting byte outside printable ASCII (variant wires are ASCII by
+/// construction; control bytes in a filter are an attack, not a typo).
+fn percent_decode(s: &str) -> Result<String, String> {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'%' {
+            let (Some(&h), Some(&l)) = (b.get(i + 1), b.get(i + 2)) else {
+                return Err("truncated percent escape".into());
+            };
+            let hex = |c: u8| -> Option<u8> {
+                match c {
+                    b'0'..=b'9' => Some(c - b'0'),
+                    b'a'..=b'f' => Some(c - b'a' + 10),
+                    b'A'..=b'F' => Some(c - b'A' + 10),
+                    _ => None,
+                }
+            };
+            let (Some(hi), Some(lo)) = (hex(h), hex(l)) else {
+                return Err("bad percent escape".into());
+            };
+            out.push(hi * 16 + lo);
+            i += 3;
+        } else {
+            out.push(b[i]);
+            i += 1;
+        }
+    }
+    for &c in &out {
+        if !(0x20..0x7f).contains(&c) {
+            return Err("non-printable byte in value".into());
+        }
+    }
+    String::from_utf8(out).map_err(|_| "invalid utf-8 in value".into())
+}
+
+/// Digits-only u64 parse (no `+`, no whitespace, no hex — the
+/// Content-Length lesson applied to every numeric knob).
+fn parse_u64_strict(s: &str) -> Result<u64, String> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(format!("not a non-negative integer: {s:?}"));
+    }
+    s.parse::<u64>().map_err(|_| format!("integer out of range: {s:?}"))
+}
+
+impl SloQuery {
+    /// Parse the raw query string (the part after `?`, possibly empty).
+    pub fn parse(raw: &str) -> Result<SloQuery, String> {
+        if raw.len() > 512 {
+            return Err("query too long".into());
+        }
+        let mut out = SloQuery::default();
+        for seg in raw.split('&') {
+            if seg.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = seg.split_once('=') else {
+                return Err(format!("bare key without value: {seg:?}"));
+            };
+            match key {
+                "budget_us" => {
+                    if out.budget_us.is_some() {
+                        return Err("duplicate budget_us".into());
+                    }
+                    let v = parse_u64_strict(val)?;
+                    if v == 0 || v > MAX_BUDGET_US {
+                        return Err(format!("budget_us out of range: {v}"));
+                    }
+                    out.budget_us = Some(v);
+                }
+                "q" => {
+                    if out.q.is_some() {
+                        return Err("duplicate q".into());
+                    }
+                    if val.starts_with('+') || val.starts_with('.') {
+                        return Err(format!("bad quantile spelling: {val:?}"));
+                    }
+                    let v: f64 =
+                        val.parse().map_err(|_| format!("bad quantile: {val:?}"))?;
+                    if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                        return Err(format!("quantile out of (0, 1]: {val:?}"));
+                    }
+                    out.q = Some(v);
+                }
+                "variant" => {
+                    if out.variant.is_some() {
+                        return Err("duplicate variant".into());
+                    }
+                    let decoded = percent_decode(val)?;
+                    if decoded.is_empty() || decoded.len() > MAX_VARIANT_FILTER {
+                        return Err("variant filter length out of range".into());
+                    }
+                    out.variant = Some(decoded);
+                }
+                other => return Err(format!("unknown query key: {other:?}")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical re-rendering (fuzz round-trip oracle: `parse(render(q))`
+    /// must equal `q` for every accepted query).
+    pub fn render(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(b) = self.budget_us {
+            parts.push(format!("budget_us={b}"));
+        }
+        if let Some(q) = self.q {
+            parts.push(format!("q={q}"));
+        }
+        if let Some(v) = &self.variant {
+            let mut enc = String::with_capacity(v.len());
+            for b in v.bytes() {
+                match b {
+                    b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                        enc.push(b as char)
+                    }
+                    _ => enc.push_str(&format!("%{b:02X}")),
+                }
+            }
+            parts.push(format!("variant={enc}"));
+        }
+        parts.join("&")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use std::time::Duration;
+
+    fn fed_metrics() -> Metrics {
+        let m = Metrics::default();
+        m.register_variant("m|fp32");
+        for _ in 0..90 {
+            m.on_response_for("m|fp32", Duration::from_micros(900));
+            m.on_queue_execute_for(
+                "m|fp32",
+                Duration::from_micros(600),
+                Duration::from_micros(250),
+            );
+            m.on_serialize_for("m|fp32", Duration::from_micros(40));
+        }
+        for _ in 0..10 {
+            m.on_response_for("m|fp32", Duration::from_micros(4500));
+            m.on_queue_execute_for(
+                "m|fp32",
+                Duration::from_micros(4000),
+                Duration::from_micros(400),
+            );
+            m.on_serialize_for("m|fp32", Duration::from_micros(50));
+        }
+        m
+    }
+
+    #[test]
+    fn ledger_decomposes_p99_against_budget() {
+        let m = fed_metrics();
+        let led = ledger(&m.slo_snapshot(), 2_000, 0.99);
+        assert_eq!(led.variants.len(), 1);
+        let v = led.variant("m|fp32").unwrap();
+        assert_eq!(v.responses, 100);
+        // p99 rank 99 lands in the le=5000 bucket (10 slow responses).
+        assert_eq!(v.p99_us, 5_000.0);
+        assert!((v.burn - 2.5).abs() < 1e-9, "5000/2000 budget burn");
+        // Queue owns most of the measured time: it must be dominant.
+        assert_eq!(v.dominant, "queue");
+        let shares: f64 = v.stages.iter().map(|s| s.share).sum();
+        assert!(shares > 0.9 && shares <= 1.0, "tracked shares {shares}");
+        assert!(v.other_share < 0.1);
+        // Every stage burn is p99-derived and positive here.
+        for s in &v.stages {
+            assert!(s.burn > 0.0, "{} burn", s.stage);
+        }
+    }
+
+    #[test]
+    fn ledger_skips_silent_variants_and_guards_zero_budget() {
+        let m = Metrics::default();
+        m.register_variant("quiet|fp32");
+        let led = ledger(&m.slo_snapshot(), 0, f64::NAN);
+        assert!(led.variants.is_empty(), "no responses, no ledger line");
+        assert_eq!(led.budget_us, 1, "zero budget clamps instead of dividing by zero");
+        assert_eq!(led.q, 0.99, "NaN quantile falls back to p99");
+    }
+
+    #[test]
+    fn ledger_json_schema_and_gauges() {
+        let m = fed_metrics();
+        let led = ledger(&m.slo_snapshot(), 2_000, 0.99);
+        let j = led.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pdq-slo-v1"));
+        assert_eq!(j.get("budget_us").unwrap().as_usize(), Some(2_000));
+        let v = j.get("variants").unwrap().idx(0).unwrap();
+        assert_eq!(v.get("variant").unwrap().as_str(), Some("m|fp32"));
+        assert_eq!(v.get("dominant").unwrap().as_str(), Some("queue"));
+        let stages = v.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[0].get("stage").unwrap().as_str(), Some("queue"));
+        // Round-trips through the JSON parser.
+        assert!(crate::util::json::Json::parse(&j.to_string_compact()).is_ok());
+        let prom = led.to_prometheus_gauges();
+        assert!(prom.contains("pdq_slo_budget_burn{variant=\"m|fp32\",stage=\"total\"}"));
+        assert!(prom.contains("pdq_slo_budget_burn{variant=\"m|fp32\",stage=\"queue\"}"));
+        assert!(prom.contains("pdq_slo_budget_burn{variant=\"m|fp32\",stage=\"serialize\"}"));
+        // Empty ledger exports nothing (no HELP header spam).
+        assert_eq!(
+            ledger(&[], 1000, 0.99).to_prometheus_gauges(),
+            "",
+        );
+    }
+
+    #[test]
+    fn slo_query_happy_paths() {
+        assert_eq!(SloQuery::parse("").unwrap(), SloQuery::default());
+        assert_eq!(SloQuery::parse("&&").unwrap(), SloQuery::default());
+        let q = SloQuery::parse("budget_us=5000&q=0.95&variant=m%7Cfp32").unwrap();
+        assert_eq!(q.budget_us, Some(5000));
+        assert_eq!(q.q, Some(0.95));
+        assert_eq!(q.variant.as_deref(), Some("m|fp32"));
+        // Canonical render round-trips.
+        assert_eq!(SloQuery::parse(&q.render()).unwrap(), q);
+    }
+
+    #[test]
+    fn slo_query_rejects_hostile_spellings() {
+        for bad in [
+            "budget_us=0",             // division-by-zero guard
+            "budget_us=+5",            // signed integer spelling
+            "budget_us=0x10",          // hex spelling
+            "budget_us=99999999999999999999", // overflow
+            "budget_us=5&budget_us=6", // duplicate keys: two truths
+            "q=NaN",
+            "q=inf",
+            "q=0",
+            "q=1.5",
+            "q=+0.5",
+            "q=.5",
+            "variant=",
+            "variant=%ZZ",
+            "variant=%7",
+            "variant=a%00b", // control byte
+            "bogus=1",
+            "budget_us",     // bare key
+        ] {
+            assert!(SloQuery::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // Length caps.
+        assert!(SloQuery::parse(&format!("variant={}", "a".repeat(97))).is_err());
+        assert!(SloQuery::parse(&"a".repeat(600)).is_err());
+    }
+
+    #[test]
+    fn trace_shares_cover_total() {
+        use crate::obs::trace::{Stage, TraceHandle, TraceId, TraceOutcome};
+        use std::time::Instant;
+        let t0 = Instant::now();
+        let at = |us: u64| t0 + Duration::from_micros(us);
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        h.set_request("m|fp32", 1);
+        // Contiguous spans covering the whole window end to end.
+        h.span(Stage::Accept, at(0), at(10));
+        h.span(Stage::Parse, at(10), at(20));
+        h.span(Stage::Queue, at(20), at(70));
+        h.span(Stage::Execute, at(70), at(95));
+        h.span(Stage::Serialize, at(95), at(100));
+        h.set_outcome(TraceOutcome::Ok);
+        let trace = h.finish(at(100));
+        let shares = shares_from_trace(&trace);
+        let sum: f64 = shares.iter().map(|(_, s)| s).sum();
+        assert!((sum - 1.0).abs() < 1e-6, "shares sum to {sum}, want 1.0");
+        // An empty-window trace yields no shares rather than dividing by 0.
+        let h = TraceHandle::new(TraceId::mint(), t0);
+        assert!(shares_from_trace(&h.finish(t0)).is_empty());
+    }
+}

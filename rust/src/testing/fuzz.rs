@@ -11,9 +11,12 @@
 //!   penetrate far deeper than pure byte noise.
 //! - **Targets** — one per parser: [`target_http_request`],
 //!   [`target_wire_preamble`], [`target_variant_wire`], [`target_json`],
-//!   [`target_shape`], [`target_trace_header`], plus the artifact-format
+//!   [`target_shape`], [`target_trace_header`], the artifact-format
 //!   pair [`target_manifest_json`] and [`target_artifact_payload`]
-//!   (corrupting a once-packed genuine `pdq-artifact-v1` blob). A target
+//!   (corrupting a once-packed genuine `pdq-artifact-v1` blob), plus the
+//!   SLO grammar pair [`target_slo_query`] and
+//!   [`target_autopilot_config`] (render → parse round-trip oracles over
+//!   the `/v1/slo` query and `--autopilot` spec parsers). A target
 //!   panics on any violated invariant; merely
 //!   returning an error is the *correct* response to hostile input.
 //!   Where possible the target is differential: the HTTP target parses
@@ -622,6 +625,129 @@ pub fn target_artifact_payload(data: &[u8]) {
     }
 }
 
+// ---- SLO query + autopilot config grammars ---------------------------------
+
+/// `/v1/slo` query strings: plausible key=value chains over the real
+/// grammar's keys plus hostile spellings (case drift, duplicate keys,
+/// percent-escape games, numeric extremes). The mutation layer adds raw
+/// byte damage on top.
+pub fn gen_slo_query(rng: &mut Pcg32) -> Vec<u8> {
+    let mut parts = Vec::new();
+    for _ in 0..1 + rng.below(4) {
+        let key = *rng.choice(&[
+            "budget_us",
+            "q",
+            "variant",
+            "Budget_us",
+            "budget_us ",
+            "b%75dget_us",
+            "",
+        ]);
+        let val = match rng.below(8) {
+            0 => format!("{}", 1 + rng.next_u64() % 100_000),
+            1 => "0".to_string(),
+            2 => format!("{}", u64::MAX),
+            3 => format!("0.{:03}", rng.below(1000)),
+            4 => (*rng.choice(&["nan", "inf", "-1", "1e3", "+5", ".5", "1.0", "0.99", "1"]))
+                .to_string(),
+            5 => "m%7Cfp32".to_string(),
+            6 => "m|int8-ours-t".to_string(),
+            _ => "x".repeat(rng.below(140) as usize),
+        };
+        parts.push(format!("{key}={val}"));
+    }
+    parts.join("&").into_bytes()
+}
+
+/// `SloQuery::parse` must never panic; every accepted query must respect
+/// the documented bounds and survive the canonical `render` → `parse`
+/// round trip unchanged (the oracle that keeps `/v1/slo`'s strict grammar
+/// honest without a reference parser).
+pub fn target_slo_query(data: &[u8]) {
+    use crate::obs::slo::{SloQuery, MAX_BUDGET_US};
+    let Ok(s) = std::str::from_utf8(data) else { return };
+    if let Ok(q) = SloQuery::parse(s) {
+        if let Some(b) = q.budget_us {
+            assert!((1..=MAX_BUDGET_US).contains(&b), "accepted out-of-range budget {b}");
+        }
+        if let Some(v) = q.q {
+            assert!(v.is_finite() && v > 0.0 && v <= 1.0, "accepted bad quantile {v}");
+        }
+        if let Some(v) = &q.variant {
+            assert!(!v.is_empty() && v.bytes().all(|b| (0x20..0x7f).contains(&b)));
+        }
+        let back = SloQuery::parse(&q.render()).expect("canonical render must reparse");
+        assert_eq!(back, q, "query drifted through render -> parse");
+    }
+}
+
+/// `--autopilot` specs with an 8-byte little-endian budget prefix, so the
+/// budget bounds check fuzzes alongside the spec grammar.
+pub fn gen_autopilot_spec(rng: &mut Pcg32) -> Vec<u8> {
+    let budget: u64 = match rng.below(4) {
+        0 => 50_000,
+        1 => 0,
+        2 => rng.next_u64(),
+        _ => 1 + rng.next_u64() % 1_000_000,
+    };
+    let mut parts = Vec::new();
+    for _ in 0..rng.below(5) {
+        let key = *rng.choice(&[
+            "depth",
+            "deadline_us",
+            "step",
+            "exit",
+            "dwell",
+            "cooldown_ms",
+            "tick_ms",
+            "bogus",
+            "",
+        ]);
+        let val = match rng.below(7) {
+            0 => format!("{}..{}", rng.below(2000), rng.below(200_000)),
+            1 => format!("{}", rng.below(1000)),
+            2 => format!("0.{:02}", rng.below(100)),
+            3 => (*rng.choice(&["NaN", "inf", "-1", "1e-3", "..", "4..", "..8", "0..0", "."]))
+                .to_string(),
+            4 => format!("{}..{}", rng.next_u64(), rng.next_u64()),
+            5 => String::new(),
+            _ => "9".repeat(1 + rng.below(30) as usize),
+        };
+        parts.push(format!("{key}={val}"));
+    }
+    let mut out = budget.to_le_bytes().to_vec();
+    out.extend_from_slice(parts.join(",").as_bytes());
+    out
+}
+
+/// `AutopilotConfig::parse` must never panic, every accepted config must
+/// satisfy the control law's preconditions (ordered ranges, step/exit in
+/// band — the invariants `observe` divides and clamps by), and the
+/// canonical `render` must reparse to the identical config.
+pub fn target_autopilot_config(data: &[u8]) {
+    use crate::coordinator::autopilot::AutopilotConfig;
+    let (budget, spec) = if data.len() >= 8 {
+        (u64::from_le_bytes(data[..8].try_into().unwrap()), &data[8..])
+    } else {
+        (50_000, data)
+    };
+    let Ok(spec) = std::str::from_utf8(spec) else { return };
+    if let Ok(cfg) = AutopilotConfig::parse(spec, budget) {
+        assert!(cfg.budget_us >= 1, "zero budget must never be accepted");
+        assert!(cfg.min_depth >= 1 && cfg.min_depth <= cfg.max_depth, "depth range broken");
+        assert!(
+            cfg.min_deadline_us >= 50 && cfg.min_deadline_us <= cfg.max_deadline_us,
+            "deadline range broken"
+        );
+        assert!(cfg.step > 0.0 && cfg.step <= 0.5, "step out of band");
+        assert!(cfg.exit_ratio > 0.0 && cfg.exit_ratio <= 0.95, "exit ratio out of band");
+        assert!(cfg.dwell_ticks >= 1, "zero dwell would act on a single noisy tick");
+        let back = AutopilotConfig::parse(&cfg.render(), cfg.budget_us)
+            .expect("canonical render must reparse");
+        assert_eq!(back, cfg, "config drifted through render -> parse");
+    }
+}
+
 // ---- structure-aware int8 differential targets -----------------------------
 
 fn rand_i8(rng: &mut Pcg32, n: usize, lo: i64, hi: i64) -> Vec<i8> {
@@ -837,6 +963,8 @@ mod tests {
         run_bytes(0xF022_0009, 150, gen_trace_header, target_trace_header);
         run_bytes(0xF022_000A, 150, gen_manifest_json, target_manifest_json);
         run_bytes(0xF022_000B, 150, gen_artifact_payload, target_artifact_payload);
+        run_bytes(0xF022_000C, 150, gen_slo_query, target_slo_query);
+        run_bytes(0xF022_000D, 150, gen_autopilot_spec, target_autopilot_config);
     }
 
     #[test]

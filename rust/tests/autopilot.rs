@@ -1,0 +1,403 @@
+//! SLO-autopilot end-to-end: the acceptance loop from the autopilot issue.
+//!
+//! 1. Under closed-loop overload with an oversized `--max-queue`, the
+//!    autopilot must shrink the queue depth within its cooldown cadence,
+//!    attribute every retune in the decision log with histogram evidence
+//!    (a ledger snapshot alongside before/after knob values), commit
+//!    `autopilot.retune:*` spans into the flight recorder, and deliver a
+//!    better client-observed p99 than the same seeded workload served
+//!    with the autopilot off.
+//! 2. Sharing a server with the precision-brownout controller must not
+//!    make brownout flap: the autopilot absorbs queue pressure by
+//!    retuning knobs while brownout stays in `Normal`.
+//! 3. Continuous 1-in-N profiling must be invisible in the arithmetic:
+//!    sampled requests carry a trace id and kernel spans, non-sampled
+//!    requests are bit-identical to an unprofiled server's responses.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pdq::coordinator::batcher::BatchPolicy;
+use pdq::coordinator::{
+    AutopilotConfig, BrownoutConfig, BrownoutState, Server, ServerConfig,
+};
+use pdq::engine::{
+    Engine, EngineError, FloatEngine, Int8Engine, KernelTrace, RunTap, Session, VariantKey,
+    VariantSpec,
+};
+use pdq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use pdq::net::wire::{self, TENSOR_CONTENT_TYPE};
+use pdq::net::{FrontDoor, FrontDoorConfig};
+use pdq::nn::int8_exec::Int8Executor;
+use pdq::nn::quant_exec::{QuantExecutor, QuantSettings};
+use pdq::nn::{Graph, QuantMode};
+use pdq::quant::Granularity;
+use pdq::tensor::{ConvGeom, Shape, Tensor};
+use pdq::util::json::Json;
+use pdq::util::Pcg32;
+
+const HW: usize = 4;
+const CIN: usize = 2;
+
+/// conv(2→3, 3x3) → relu → gap, input 4×4×2; weights seeded.
+fn tiny_graph() -> Arc<Graph> {
+    let mut rng = Pcg32::new(0xA070_0717);
+    let mut g = Graph::new(Shape::hwc(HW, HW, CIN));
+    let x = g.input();
+    let w: Vec<f32> = (0..3 * 9 * CIN).map(|_| rng.normal_ms(0.0, 0.4)).collect();
+    let c = g.conv(
+        x,
+        Tensor::from_vec(Shape::ohwi(3, 3, 3, CIN), w),
+        vec![0.02, -0.03, 0.05],
+        ConvGeom::same(3, 1),
+    );
+    let r = g.relu(c);
+    let p = g.global_avg_pool(r);
+    g.mark_output(p);
+    Arc::new(g)
+}
+
+fn test_image(seed: u64) -> Tensor<f32> {
+    let mut rng = Pcg32::new(seed);
+    let d: Vec<f32> = (0..HW * HW * CIN).map(|_| rng.uniform()).collect();
+    Tensor::from_vec(Shape::hwc(HW, HW, CIN), d)
+}
+
+// ---- a deliberately slow fp32 engine ----
+//
+// The tiny graph executes in microseconds — far too fast for queueing to
+// dominate. `SlowEngine` wraps the float engine and sleeps a fixed 2 ms
+// per run, so 8 closed-loop clients against 1 worker build a real queue
+// and the SLO ledger's dominant stage is unambiguously `queue`.
+
+struct SlowEngine {
+    inner: FloatEngine,
+    delay: Duration,
+}
+
+struct SlowSession {
+    inner: Box<dyn Session>,
+    delay: Duration,
+}
+
+impl Engine for SlowEngine {
+    fn spec(&self) -> VariantSpec {
+        self.inner.spec()
+    }
+    fn input_shape(&self) -> &Shape {
+        self.inner.input_shape()
+    }
+    fn compile(&self) -> Result<Box<dyn Session>, EngineError> {
+        Ok(Box::new(SlowSession { inner: self.inner.compile()?, delay: self.delay }))
+    }
+}
+
+impl Session for SlowSession {
+    fn run(&mut self, input: &Tensor<f32>) -> Result<Vec<Tensor<f32>>, EngineError> {
+        std::thread::sleep(self.delay);
+        self.inner.run(input)
+    }
+    fn run_tapped(
+        &mut self,
+        input: &Tensor<f32>,
+        tap: &mut RunTap,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        std::thread::sleep(self.delay);
+        self.inner.run_tapped(input, tap)
+    }
+    fn run_traced(
+        &mut self,
+        input: &Tensor<f32>,
+        ktrace: &mut KernelTrace,
+    ) -> Result<Vec<Tensor<f32>>, EngineError> {
+        std::thread::sleep(self.delay);
+        self.inner.run_traced(input, ktrace)
+    }
+    fn input_shape(&self) -> &Shape {
+        self.inner.input_shape()
+    }
+}
+
+fn slow_variants(delay: Duration) -> Vec<(VariantKey, Arc<dyn Engine>)> {
+    vec![(
+        VariantKey::new("t", VariantSpec::Fp32),
+        Arc::new(SlowEngine { inner: FloatEngine::new(tiny_graph()), delay }),
+    )]
+}
+
+/// 4 ms budget, aggressive cadence so the loop converges inside a short
+/// test: dwell 1 tick, 50 ms cooldown, 15 ms tick, max step (50%).
+fn test_autopilot() -> AutopilotConfig {
+    AutopilotConfig::parse("depth=2..64,step=0.5,exit=0.5,dwell=1,cooldown_ms=50,tick_ms=15", 4_000)
+        .expect("valid autopilot spec")
+}
+
+struct RunOutcome {
+    measured_p99_us: f64,
+    final_depth: usize,
+}
+
+/// Serve the seeded overload workload (8 closed-loop clients vs 1 worker
+/// behind an oversized depth-64 queue) and measure steady-state p99 in a
+/// second phase so convergence transients don't pollute the comparison.
+fn overload_run(autopilot: bool) -> RunOutcome {
+    let server = Arc::new(Server::start(
+        slow_variants(Duration::from_millis(2)),
+        ServerConfig {
+            workers_per_variant: 1,
+            max_queue_depth: 64, // oversized: 8× the client count
+            policy: BatchPolicy { max_batch: 1, deadline: Duration::from_micros(100) },
+            autopilot: autopilot.then(test_autopilot),
+            ..Default::default()
+        },
+    ));
+    let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
+    let addr = fd.local_addr().to_string();
+
+    // Phase A: converge. The same seed on both sides of the comparison.
+    let converge = loadgen::run(&LoadgenConfig {
+        target: addr.clone(),
+        mode: LoadMode::Closed,
+        concurrency: 8,
+        duration: Duration::from_secs(2),
+        variants: vec!["t|fp32".into()],
+        seed: 0xA070_0001,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert!(converge.total.ok > 0, "converge phase served nothing: {:?}", converge.total);
+    assert_eq!(converge.total.failed, 0, "converge failures: {:?}", converge.total);
+    assert_eq!(converge.total.dropped, 0, "converge drops: {:?}", converge.total);
+
+    // Phase B: measure steady state under a fresh seed (same on both
+    // sides), after the autopilot — when enabled — has had 2 s and ~25
+    // cooldown windows to act.
+    let measure = loadgen::run(&LoadgenConfig {
+        target: addr.clone(),
+        mode: LoadMode::Closed,
+        concurrency: 8,
+        duration: Duration::from_secs(2),
+        variants: vec!["t|fp32".into()],
+        seed: 0xA070_0002,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert!(measure.total.ok > 0, "measure phase served nothing: {:?}", measure.total);
+    assert_eq!(measure.total.failed, 0, "measure failures: {:?}", measure.total);
+    assert_eq!(measure.total.dropped, 0, "measure drops: {:?}", measure.total);
+
+    let final_depth = server.max_queue_depth();
+
+    if autopilot {
+        // The controller acted, repeatedly, and always on the queue knob:
+        // this workload is queue-dominated by construction.
+        let ctl = Arc::clone(server.autopilot().expect("autopilot enabled"));
+        assert!(ctl.actions() >= 3, "expected ≥3 retunes, got {}", ctl.actions());
+        let decisions = ctl.decisions_json();
+        assert!(!decisions.is_empty(), "retunes must leave decision evidence");
+        for d in &decisions {
+            assert_eq!(
+                d.get("knob").and_then(|k| k.as_str()),
+                Some("max_queue_depth"),
+                "queue-dominated overload must retune depth, got {d:?}"
+            );
+            let from = d.get("from").and_then(|v| v.as_f64()).unwrap();
+            let to = d.get("to").and_then(|v| v.as_f64()).unwrap();
+            assert!(to < from, "overload retunes must shrink: {from} -> {to}");
+            assert!(
+                d.get("ledger").is_some(),
+                "every retune carries its histogram evidence: {d:?}"
+            );
+        }
+
+        // The same evidence is visible to operators over HTTP …
+        let mut client = wire::Client::new(&addr);
+        let r = client.get("/v1/slo").unwrap();
+        assert_eq!(r.status, 200);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let ap = j.get("autopilot").expect("autopilot block in /v1/slo");
+        assert_eq!(ap.get("enabled").unwrap().as_bool(), Some(true));
+        assert!(
+            !ap.get("decisions").unwrap().as_arr().unwrap().is_empty(),
+            "/v1/slo must expose the decision ring"
+        );
+        drop(client);
+
+        // … and as committed spans in the flight recorder.
+        let retune_traces = fd
+            .recorder()
+            .snapshot()
+            .iter()
+            .filter(|t| t.variant.starts_with("autopilot.retune:"))
+            .count();
+        assert!(retune_traces > 0, "retunes must commit flight-recorder spans");
+    } else {
+        assert_eq!(final_depth, 64, "without the autopilot the knob must not move");
+    }
+
+    fd.shutdown();
+    for (key, depth) in server.admission_depths() {
+        assert_eq!(depth, 0, "leaked admission permit on {}", key.wire());
+    }
+    RunOutcome { measured_p99_us: measure.total.p99_us, final_depth }
+}
+
+/// Overload + oversized `--max-queue`: the autopilot shrinks the depth,
+/// leaves attributed evidence everywhere it should, and the steady-state
+/// client p99 beats the autopilot-off baseline on the same seeds.
+#[test]
+fn autopilot_shrinks_oversized_depth_and_improves_p99() {
+    let with = overload_run(true);
+    let without = overload_run(false);
+
+    assert!(
+        with.final_depth <= 8,
+        "depth must converge well below the oversized 64 (got {})",
+        with.final_depth
+    );
+    assert!(
+        with.measured_p99_us < 0.9 * without.measured_p99_us,
+        "autopilot must improve steady-state p99: {:.0} us (on) vs {:.0} us (off)",
+        with.measured_p99_us,
+        without.measured_p99_us
+    );
+}
+
+/// Brownout and autopilot on the same server: the autopilot retunes
+/// knobs for its tight 4 ms budget while brownout — whose own SLO is a
+/// lenient 500 ms — never leaves `Normal`. No cross-controller flapping.
+#[test]
+fn autopilot_and_brownout_do_not_flap_each_other() {
+    let server = Arc::new(Server::start(
+        slow_variants(Duration::from_millis(2)),
+        ServerConfig {
+            workers_per_variant: 1,
+            max_queue_depth: 64,
+            policy: BatchPolicy { max_batch: 1, deadline: Duration::from_micros(100) },
+            brownout: Some(BrownoutConfig { slo_p99_us: 500_000.0, ..Default::default() }),
+            autopilot: Some(test_autopilot()),
+            ..Default::default()
+        },
+    ));
+    let fd = FrontDoor::start(Arc::clone(&server), FrontDoorConfig::default()).unwrap();
+
+    let report = loadgen::run(&LoadgenConfig {
+        target: fd.local_addr().to_string(),
+        mode: LoadMode::Closed,
+        concurrency: 8,
+        duration: Duration::from_millis(1500),
+        variants: vec!["t|fp32".into()],
+        seed: 0xA070_0003,
+        ..LoadgenConfig::default()
+    })
+    .unwrap();
+    assert!(report.total.ok > 0);
+    assert_eq!(report.total.failed, 0, "failures under overload: {:?}", report.total);
+
+    let ctl = server.autopilot().expect("autopilot enabled");
+    assert!(ctl.actions() >= 1, "the 4 ms budget must trigger retunes");
+    assert_eq!(
+        server.brownout().expect("brownout enabled").state(),
+        BrownoutState::Normal,
+        "brownout's 500 ms SLO is never threatened; the autopilot must not flap it"
+    );
+    fd.shutdown();
+}
+
+/// Continuous profiling, 1-in-3 deterministic sampling: sampled requests
+/// carry a trace id on the wire and kernel spans in the recorder; every
+/// response's tensors are bit-identical to an unprofiled server's.
+#[test]
+fn continuous_profiling_sampling_is_bit_identical() {
+    fn int8_variant() -> Vec<(VariantKey, Arc<dyn Engine>)> {
+        let graph = tiny_graph();
+        let mut rng = Pcg32::new(0xA070_CA11);
+        let calib: Vec<Tensor<f32>> = (0..8)
+            .map(|_| {
+                let d: Vec<f32> = (0..HW * HW * CIN).map(|_| rng.uniform()).collect();
+                Tensor::from_vec(Shape::hwc(HW, HW, CIN), d)
+            })
+            .collect();
+        let mode = QuantMode::Probabilistic;
+        let gran = Granularity::PerTensor;
+        let mut ex = QuantExecutor::new(
+            Arc::clone(&graph),
+            QuantSettings { mode, granularity: gran, ..Default::default() },
+        );
+        ex.calibrate(&calib);
+        let base = Int8Executor::lower(&ex, gran).expect("lowering");
+        let rung = base.rung(8).expect("8-bit rung");
+        vec![(
+            VariantKey::new("t", VariantSpec::Int8 { mode, weight_gran: gran, bits: 8 }),
+            Arc::new(Int8Engine::new(Arc::new(rung))),
+        )]
+    }
+
+    let serve = |profile_every: usize| {
+        let server = Arc::new(Server::start(int8_variant(), ServerConfig::default()));
+        FrontDoor::start(
+            server,
+            FrontDoorConfig { profile_every, profile_seed: 0, ..FrontDoorConfig::default() },
+        )
+        .unwrap()
+    };
+    let fd_plain = serve(0);
+    let fd_sampled = serve(3);
+
+    let key = VariantKey::parse_wire("t|int8-ours-t").unwrap();
+    let img = test_image(0xA070_0D1E);
+    let run_all = |fd: &FrontDoor| -> Vec<(Option<String>, Vec<u32>)> {
+        let mut client = wire::Client::new(&fd.local_addr().to_string());
+        (0..9u64)
+            .map(|id| {
+                let body = wire::encode_infer_request(&key, id, &img);
+                let parts =
+                    client.request("POST", "/v1/infer", TENSOR_CONTENT_TYPE, &body).unwrap();
+                assert_eq!(parts.status, 200, "infer {id} failed");
+                let resp = wire::decode_infer_response(&parts.body).unwrap();
+                assert_eq!(resp.id, id);
+                let bits: Vec<u32> =
+                    resp.outputs.iter().flat_map(|t| t.data().iter().map(|v| v.to_bits())).collect();
+                (parts.header("x-pdq-trace").map(str::to_string), bits)
+            })
+            .collect()
+    };
+
+    let plain = run_all(&fd_plain);
+    let sampled = run_all(&fd_sampled);
+
+    for (i, ((h_plain, bits_plain), (h_sampled, bits_sampled))) in
+        plain.iter().zip(sampled.iter()).enumerate()
+    {
+        assert!(h_plain.is_none(), "unprofiled server leaked a trace id on request {i}");
+        assert_eq!(
+            h_sampled.is_some(),
+            i % 3 == 0,
+            "1-in-3 seed-0 sampling must tag exactly requests 0,3,6 (request {i})"
+        );
+        assert_eq!(
+            bits_plain, bits_sampled,
+            "sampling must never perturb the arithmetic (request {i})"
+        );
+    }
+    // All nine responses on each server are the same input, so their
+    // outputs must be identical bit patterns — sampled or not.
+    for (i, (_, bits)) in sampled.iter().enumerate() {
+        assert_eq!(*bits, sampled[0].1, "request {i} diverged from request 0");
+    }
+
+    let (recent_plain, _) = fd_plain.recorder().counts();
+    let (recent_sampled, _) = fd_sampled.recorder().counts();
+    assert_eq!(recent_plain, 0, "profile_every=0 must record nothing");
+    assert_eq!(recent_sampled, 3, "1-in-3 over 9 requests records exactly 3");
+    let with_kernels = fd_sampled
+        .recorder()
+        .snapshot()
+        .iter()
+        .filter(|t| !t.kernel.is_empty())
+        .count();
+    assert_eq!(with_kernels, 3, "sampled int8 requests must carry kernel spans");
+
+    fd_plain.shutdown();
+    fd_sampled.shutdown();
+}

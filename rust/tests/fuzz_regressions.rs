@@ -264,6 +264,66 @@ fn artifact_manifest_validate_extreme_payload_lengths() {
     assert!(report.manifest.validate(report.payload_len).is_ok());
 }
 
+// ---- obs/slo.rs + coordinator/autopilot.rs ---------------------------------
+
+#[test]
+fn slo_query_plus_and_dot_prefixed_quantiles() {
+    // Original failure class (the Content-Length lesson resurfacing):
+    // `"+0.5".parse::<f64>()` and `".5".parse::<f64>()` both succeed in
+    // Rust, so `q=+0.5` and `q=.5` parsed to values their own canonical
+    // render spells differently — a render → parse round-trip drift the
+    // fuzz oracle caught. Both spellings are now rejected up front.
+    use pdq::obs::slo::SloQuery;
+    assert!(SloQuery::parse("q=+0.5").is_err());
+    assert!(SloQuery::parse("q=.5").is_err());
+    // NaN/inf parse as f64 too; they must die before reaching the
+    // quantile comparisons, which NaN would silently fall through.
+    assert!(SloQuery::parse("q=nan").is_err());
+    assert!(SloQuery::parse("q=inf").is_err());
+    // The plain spelling still works and round-trips.
+    let q = SloQuery::parse("q=0.5").unwrap();
+    assert_eq!(SloQuery::parse(&q.render()).unwrap(), q);
+}
+
+#[test]
+fn slo_query_zero_budget_and_truncated_escape() {
+    use pdq::obs::slo::SloQuery;
+    // budget_us=0 would make every burn computation divide by zero; it
+    // must be a parse error, not a ledger full of inf.
+    assert!(SloQuery::parse("budget_us=0").is_err());
+    // A truncated percent escape at end-of-value indexed past the buffer
+    // in the pre-hardening decoder. Typed error now, at every cut point.
+    assert!(SloQuery::parse("variant=m%7").is_err());
+    assert!(SloQuery::parse("variant=m%").is_err());
+    // Control bytes smuggled through valid escapes (%0A = newline) would
+    // corrupt the Prometheus exposition format's label values.
+    assert!(SloQuery::parse("variant=m%0Afake_metric%201").is_err());
+    // Duplicate budgets: two sources of truth for the denominator.
+    assert!(SloQuery::parse("budget_us=1000&budget_us=2000").is_err());
+}
+
+#[test]
+fn autopilot_spec_nan_step_and_overflowing_range() {
+    use pdq::coordinator::autopilot::AutopilotConfig;
+    // `"NaN".parse::<f64>()` succeeds; a NaN step survives every clamp
+    // (NaN comparisons are all false) and turns the bounded retune ladder
+    // into `depth × NaN → 0`. The digits-and-dot-only grammar kills it.
+    assert!(AutopilotConfig::parse("step=NaN", 50_000).is_err());
+    assert!(AutopilotConfig::parse("step=-0.25", 50_000).is_err());
+    // An 18446744073709551616-shaped range bound overflows u64::from_str;
+    // the strict parser reports it instead of wrapping.
+    assert!(AutopilotConfig::parse("depth=1..18446744073709551616", 50_000).is_err());
+    // Zero budget must be rejected even with an empty spec — the budget
+    // arrives from a different flag than the spec and was once unchecked.
+    assert!(AutopilotConfig::parse("", 0).is_err());
+    // Duplicate keys: last-wins would make flag order change the control
+    // law silently.
+    assert!(AutopilotConfig::parse("dwell=2,dwell=3", 50_000).is_err());
+    // The canonical render of the defaults still round-trips.
+    let cfg = AutopilotConfig::parse("", 50_000).unwrap();
+    assert_eq!(AutopilotConfig::parse(&cfg.render(), 50_000).unwrap(), cfg);
+}
+
 #[test]
 fn artifact_nonzero_header_padding_rejected() {
     // The alignment pad between manifest and payload must be all zeros;

@@ -55,6 +55,16 @@ fn fuzz_artifact_payload_loading() {
 }
 
 #[test]
+fn fuzz_slo_query_parsing() {
+    fuzz::run_bytes(0x5EED_000B, ITERS, fuzz::gen_slo_query, fuzz::target_slo_query);
+}
+
+#[test]
+fn fuzz_autopilot_config_grammar() {
+    fuzz::run_bytes(0x5EED_000C, ITERS, fuzz::gen_autopilot_spec, fuzz::target_autopilot_config);
+}
+
+#[test]
 fn fuzz_int8_kernels_differential() {
     fuzz::diff_int8_kernels(0x5EED_0006, ITERS);
 }
